@@ -1,0 +1,76 @@
+//! Fig. 6 reproduction (paper §5.2 "Hybrid Integration Using FLARE's
+//! Experiment Tracking"): three Flower clients run inside FLARE with the
+//! `SummaryWriter` (Listing 3) streaming `train_loss` per local step and
+//! `test_accuracy` per round to the FLARE server; the collected series
+//! are rendered per client (the TensorBoard view of Fig. 6).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example experiment_tracking
+//! ```
+
+use flarelink::flare::tracking::render_ascii;
+use flarelink::harness::{require_artifacts, run_fl_bridged, BridgedRunOpts};
+use flarelink::train::FlJobConfig;
+
+fn main() -> anyhow::Result<()> {
+    flarelink::telemetry::init_logging();
+    let compute = require_artifacts();
+
+    let cfg = FlJobConfig {
+        model: "cnn".into(),
+        strategy: "fedavg".into(),
+        rounds: 4,
+        clients: 3, // the paper's Fig. 6 shows three clients
+        lr: 0.05,
+        local_steps: 4,
+        n_train_per_client: 256,
+        n_test_per_client: 256,
+        seed: 7,
+        track: true, // hybrid mode: Listing 3's SummaryWriter is active
+        ..Default::default()
+    };
+
+    println!("== Fig. 6: Flower ClientApps with FLARE experiment tracking ==");
+    let opts = BridgedRunOpts {
+        job_id: "tracked-job".into(),
+        ..Default::default()
+    };
+    let result = run_fl_bridged(&cfg, compute, &opts)?;
+
+    // The FLARE server's metric store now holds per-client series.
+    println!("\nstreamed series (job 'tracked-job'):");
+    for ((site, tag), series) in &result.metric_series {
+        println!("  {site}/{tag}: {} points", series.len());
+    }
+
+    println!("\n-- test_accuracy per client (paper Fig. 6) --");
+    for ((site, tag), series) in &result.metric_series {
+        if tag == "test_accuracy" {
+            print!("{}", render_ascii(&format!("{site} test_accuracy"), series, 40, 6));
+        }
+    }
+    println!("\n-- train_loss per client (paper Listing 3 stream) --");
+    for ((site, tag), series) in &result.metric_series {
+        if tag == "train_loss" {
+            print!("{}", render_ascii(&format!("{site} train_loss"), series, 40, 6));
+        }
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig6_metrics.tsv", &result.metrics_tsv)?;
+    println!("TSV export written to results/fig6_metrics.tsv");
+
+    // Sanity: every client streamed both tags.
+    for i in 1..=cfg.clients {
+        let site = format!("site-{i}");
+        for tag in ["test_accuracy", "train_loss"] {
+            let found = result
+                .metric_series
+                .iter()
+                .any(|((s, t), v)| *s == site && t == tag && !v.is_empty());
+            anyhow::ensure!(found, "missing {site}/{tag} series");
+        }
+    }
+    println!("\nFig. 6 reproduced: per-client metrics streamed to the FLARE server.");
+    Ok(())
+}

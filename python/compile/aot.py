@@ -1,0 +1,201 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+This is the ONLY place Python runs — at build time (`make artifacts`).
+The Rust coordinator loads `artifacts/*.hlo.txt` via the `xla` crate's
+PJRT CPU client and never imports Python.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every function is lowered with ``return_tuple=True`` so the Rust side
+uniformly unwraps a tuple. Scalars (lr, seed) are passed as shape-[1]
+arrays (the `xla` crate's Literal API is vector-first).
+
+Emits ``artifacts/manifest.json`` describing every artifact's input and
+output signature plus per-model metadata; the Rust runtime is entirely
+manifest-driven.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import registry
+from compile.kernels.fedavg import fedavg_aggregate
+
+# Client counts we pre-specialize the FedAvg aggregation kernel for.
+# (AOT artifacts are shape-specialized; the Rust side falls back to its
+# own vector math for other K.)
+AGG_CLIENT_COUNTS = (2, 3, 4, 8)
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(dtype: str, shape: Sequence[int]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+class Entry:
+    """One artifact: a jitted fn + its input/output signature."""
+
+    def __init__(self, name: str, fn, inputs: List[Tuple[str, str, tuple]],
+                 outputs: List[Tuple[str, str, tuple]]):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs
+        self.outputs = outputs
+
+    def lower_text(self) -> str:
+        in_specs = [spec(d, s) for (_, d, s) in self.inputs]
+        return to_hlo_text(jax.jit(self.fn).lower(*in_specs))
+
+    def manifest(self) -> dict:
+        return {
+            "name": self.name,
+            "file": f"{self.name}.hlo.txt",
+            "inputs": [
+                {"name": n, "dtype": d, "shape": list(s)}
+                for (n, d, s) in self.inputs
+            ],
+            "outputs": [
+                {"name": n, "dtype": d, "shape": list(s)}
+                for (n, d, s) in self.outputs
+            ],
+        }
+
+
+def build_entries() -> List[Entry]:
+    entries: List[Entry] = []
+    models = registry()
+    for m in models.values():
+        n = m.param_count
+
+        def init_fn(seed, _m=m):
+            return _m.init_fn(seed[0])
+
+        entries.append(
+            Entry(
+                f"{m.name}_init",
+                init_fn,
+                [("seed", "i32", (1,))],
+                [("params", "f32", (n,))],
+            )
+        )
+
+        def train_fn(params, *rest, _m=m):
+            *data, lr = rest
+            return _m.train_fn(params, *data, lr[0])
+
+        entries.append(
+            Entry(
+                f"{m.name}_train_step",
+                train_fn,
+                [("params", "f32", (n,))]
+                + [(nm, d, s) for (nm, d, s) in m.train_inputs]
+                + [("lr", "f32", (1,))],
+                [
+                    ("params", "f32", (n,)),
+                    ("loss", "f32", ()),
+                    ("acc", "f32", ()),
+                ],
+            )
+        )
+
+        def eval_fn(params, *data, _m=m):
+            return _m.eval_fn(params, *data)
+
+        entries.append(
+            Entry(
+                f"{m.name}_eval_batch",
+                eval_fn,
+                [("params", "f32", (n,))]
+                + [(nm, d, s) for (nm, d, s) in m.eval_inputs],
+                [("loss_sum", "f32", ()), ("correct_sum", "f32", ())],
+            )
+        )
+
+        for k in AGG_CLIENT_COUNTS:
+            entries.append(
+                Entry(
+                    f"fedavg_{m.name}_k{k}",
+                    lambda stacked, weights: fedavg_aggregate(stacked, weights),
+                    [("stacked", "f32", (k, n)), ("weights", "f32", (k,))],
+                    [("mean", "f32", (n,))],
+                )
+            )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    entries = build_entries()
+    if args.list:
+        for e in entries:
+            print(e.name)
+        return
+
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"artifacts": [], "models": {}}
+    for name, m in registry().items():
+        manifest["models"][name] = {
+            "param_count": m.param_count,
+            "train_batch": m.train_batch,
+            "eval_batch": m.eval_batch,
+            "train_inputs": [
+                {"name": n, "dtype": d, "shape": list(s)}
+                for (n, d, s) in m.train_inputs
+            ],
+            "eval_inputs": [
+                {"name": n, "dtype": d, "shape": list(s)}
+                for (n, d, s) in m.eval_inputs
+            ],
+            "agg_client_counts": list(AGG_CLIENT_COUNTS),
+            **m.extra,
+        }
+
+    for e in entries:
+        manifest["artifacts"].append(e.manifest())
+        path = os.path.join(args.out_dir, f"{e.name}.hlo.txt")
+        if only is not None and e.name not in only:
+            if os.path.exists(path):
+                print(f"[aot] keep   {e.name}")
+                continue
+        print(f"[aot] lower  {e.name} ...", flush=True)
+        text = e.lower_text()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote  {path} ({len(text)} chars)", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote  {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""L1 Pallas kernel: tiled matmul + bias + activation.
+
+This is the compute hot-spot of both models (conv-as-im2col contractions,
+MLP / attention projection / unembedding matmuls). The kernel is the TPU
+re-think of the paper's client-local GPU training loop (see DESIGN.md
+SS5 Hardware adaptation):
+
+  * CUDA threadblock tiling        ->  Pallas ``BlockSpec`` HBM->VMEM tiles
+  * tensor-core WMMA               ->  MXU-aligned (128x128) f32/bf16 blocks
+  * shared-memory accumulator      ->  VMEM output block accumulated across
+                                       the K grid dimension
+
+Grid is ``(M/bm, N/bn, K/bk)`` with the K axis innermost; the output block
+acts as the accumulator (zeroed at k==0, bias+activation applied at the
+last K step).  ``interpret=True`` everywhere: the CPU PJRT client cannot
+execute Mosaic custom-calls, so the kernel lowers to plain HLO — numerics
+are identical, and the *structure* (tiling, fusion) is what we optimize.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-shape defaults. Two regimes (see DESIGN.md / EXPERIMENTS.md §Perf):
+#
+# * Real TPU: 128x128x128 tiles are the canonical MXU shape (64 KiB per
+#   tile, triple-bufferable in ~16 MiB VMEM). That regime is documented,
+#   not measured, on this CPU testbed.
+# * interpret=True on CPU-PJRT (this build): the pallas grid lowers to a
+#   sequential XLA while-loop, so per-iteration overhead dominates tiny
+#   tiles. Larger 512-wide tiles cut the grid size ~64x and took
+#   cnn_eval_batch from 22.5 s to ~1 s per call (§Perf log). 512^2 f32
+#   tiles are 1 MiB — still VMEM-plausible (3 MiB working set), so the
+#   same BlockSpec structure remains TPU-valid, just not TPU-optimal.
+DEFAULT_BM = 512
+DEFAULT_BN = 512
+DEFAULT_BK = 512
+
+_ACTIVATIONS = ("none", "relu", "gelu")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j].
+
+    At k == 0 the output tile is zero-initialized; at k == nk-1 the bias is
+    added and the activation applied, fusing epilogue into the final
+    accumulation step (no extra HBM round-trip for the epilogue).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "gelu":
+            acc = jax.nn.gelu(acc)
+        o_ref[...] = acc
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "interpret")
+)
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    activation: str = "none",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """``act(x @ w + b)`` via the tiled Pallas kernel.
+
+    ``x``: f32[M, K], ``w``: f32[K, N], ``b``: f32[N] (zeros if None).
+    Arbitrary M/N/K — inputs are zero-padded up to block multiples and the
+    result sliced back (zero padding is exact for matmul; bias columns are
+    padded with zeros so the epilogue is exact too).
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError("matmul_bias_act expects 2-D x and w")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x{x.shape} w{w.shape}")
+    if b is None:
+        b = jnp.zeros((n,), dtype=x.dtype)
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    # Auto-tall blocks (interpret-mode §Perf): when one axis is huge
+    # (conv-as-im2col M, or the dw cotangent's contraction K), grow that
+    # axis's block so its grid stays <= ~32 steps; explicit non-default
+    # overrides are respected. Tile edges cap at 8192 (<= a few MiB per
+    # tile — still a valid, if CPU-leaning, BlockSpec).
+    bm = _auto_block(bm, DEFAULT_BM, m)
+    bn = _auto_block(bn, DEFAULT_BN, n)
+    bk = _auto_block(bk, DEFAULT_BK, k)
+
+    # Clamp blocks to the (padded) problem so tiny layers don't over-pad.
+    bm_ = min(bm, _ceil_mult(m, 8))
+    bn_ = min(bn, _ceil_mult(n, 8))
+    bk_ = min(bk, _ceil_mult(k, 8))
+
+    xp = _pad_to(x, 0, bm_)
+    xp = _pad_to(xp, 1, bk_)
+    wp = _pad_to(w, 0, bk_)
+    wp = _pad_to(wp, 1, bn_)
+    bp = _pad_to(b.reshape(1, n), 1, bn_)
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk_
+    grid = (mp // bm_, np_ // bn_, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _auto_block(requested: int, default: int, dim: int) -> int:
+    if requested != default:
+        return requested  # caller knows best
+    steps_target = 32
+    need = -(-dim // steps_target)
+    return min(max(default, _ceil_mult(need, 8)), 8192)

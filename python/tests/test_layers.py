@@ -1,0 +1,130 @@
+# pytest: L2 layers (conv-as-im2col, pooling, attention, layernorm) vs
+# straightforward jax/lax references, and gradient flow through the
+# custom-vjp Pallas dense layer.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def test_im2col_matches_conv_patches():
+    """conv2d_relu == lax.conv_general_dilated (+bias, relu)."""
+    r = _rng(0)
+    x = jnp.asarray(r.standard_normal((2, 12, 12, 3)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((5, 5, 3, 4)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((4,)), jnp.float32)
+    got = L.conv2d_relu(x, w, b)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    want = jnp.maximum(want + b, 0.0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_im2col_shape_and_order():
+    x = jnp.arange(1 * 3 * 3 * 2, dtype=jnp.float32).reshape(1, 3, 3, 2)
+    patches = L.im2col(x, 2, 2)
+    assert patches.shape == (1, 2, 2, 8)
+    # patch at (0,0) = pixels (0,0),(0,1),(1,0),(1,1), channel-minor
+    np.testing.assert_array_equal(
+        patches[0, 0, 0], jnp.array([0, 1, 2, 3, 6, 7, 8, 9], jnp.float32)
+    )
+
+
+def test_maxpool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    got = L.maxpool2(x)
+    np.testing.assert_array_equal(
+        got[0, :, :, 0], jnp.array([[5.0, 7.0], [13.0, 15.0]])
+    )
+
+
+def test_layernorm_zero_mean_unit_var():
+    r = _rng(1)
+    x = jnp.asarray(r.standard_normal((4, 8, 16)), jnp.float32)
+    g = jnp.ones((16,))
+    b = jnp.zeros((16,))
+    y = L.layernorm(x, g, b)
+    np.testing.assert_allclose(jnp.mean(y, -1), jnp.zeros((4, 8)), atol=1e-5)
+    np.testing.assert_allclose(jnp.var(y, -1), jnp.ones((4, 8)), rtol=1e-3)
+
+
+def test_dense_grad_matches_jnp_grad():
+    """custom-vjp (Pallas bwd) gradients == autodiff through plain jnp."""
+    r = _rng(2)
+    x = jnp.asarray(r.standard_normal((9, 11)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((11, 5)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((5,)), jnp.float32)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(L.dense(x, w, b, "relu") ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.maximum(x @ w + b, 0.0) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(gp, gr):
+        np.testing.assert_allclose(a, bb, rtol=2e-5, atol=2e-4)
+
+
+def test_dense_grad_none_activation():
+    r = _rng(3)
+    x = jnp.asarray(r.standard_normal((6, 4)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((4, 3)), jnp.float32)
+    b = jnp.zeros((3,))
+    gp = jax.grad(lambda w: jnp.sum(L.dense(x, w, b, "none")))(w)
+    gr = jax.grad(lambda w: jnp.sum(x @ w + b))(w)
+    np.testing.assert_allclose(gp, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_causal_attention_is_causal():
+    """Changing future tokens must not change past outputs."""
+    r = _rng(4)
+    d, h, t = 16, 2, 6
+    x1 = jnp.asarray(r.standard_normal((1, t, d)), jnp.float32)
+    x2 = x1.at[0, -1].set(jnp.asarray(r.standard_normal((d,)), jnp.float32))
+    wqkv = jnp.asarray(r.standard_normal((d, 3 * d)) * 0.1, jnp.float32)
+    bqkv = jnp.zeros((3 * d,))
+    wproj = jnp.asarray(r.standard_normal((d, d)) * 0.1, jnp.float32)
+    bproj = jnp.zeros((d,))
+    y1 = L.causal_attention(x1, wqkv, bqkv, wproj, bproj, h)
+    y2 = L.causal_attention(x2, wqkv, bqkv, wproj, bproj, h)
+    np.testing.assert_allclose(y1[0, : t - 1], y2[0, : t - 1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(y1[0, -1], y2[0, -1])
+
+
+def test_attention_matches_manual_single_head():
+    """1-head attention vs a hand-written softmax attention."""
+    r = _rng(5)
+    d, t = 8, 5
+    x = jnp.asarray(r.standard_normal((1, t, d)), jnp.float32)
+    wqkv = jnp.asarray(r.standard_normal((d, 3 * d)) * 0.2, jnp.float32)
+    bqkv = jnp.zeros((3 * d,))
+    wproj = jnp.eye(d, dtype=jnp.float32)
+    bproj = jnp.zeros((d,))
+    got = L.causal_attention(x, wqkv, bqkv, wproj, bproj, 1)
+
+    qkv = x[0] @ wqkv
+    q, k, v = qkv[:, :d], qkv[:, d : 2 * d], qkv[:, 2 * d :]
+    scores = q @ k.T / np.sqrt(d)
+    mask = np.tril(np.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    want = jax.nn.softmax(scores, -1) @ v
+    np.testing.assert_allclose(got[0], want, rtol=2e-5, atol=2e-4)
+
+
+def test_softmax_cross_entropy():
+    logits = jnp.array([[10.0, 0.0, 0.0], [0.0, 10.0, 0.0]])
+    labels = jnp.array([0, 0], jnp.int32)
+    loss, correct = L.softmax_cross_entropy(logits, labels)
+    assert loss[0] < 1e-3 and loss[1] > 9.0
+    np.testing.assert_array_equal(correct, jnp.array([1.0, 0.0]))

@@ -1,0 +1,162 @@
+# pytest: L2 model-level checks — shapes, determinism, learning signal,
+# flat-param plumbing.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import params as P
+from compile.model import (
+    CNN_SPECS,
+    TransformerCfg,
+    cnn_eval_batch,
+    cnn_init,
+    cnn_logits,
+    cnn_train_step,
+    make_tfm_fns,
+    registry,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# flat-param plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_param_count_matches_paper_quickstart():
+    # LeNet-style quickstart CNN: 62,006 parameters.
+    assert P.param_count(CNN_SPECS) == 62006
+
+
+def test_flatten_unflatten_roundtrip():
+    flat = cnn_init(0)
+    params = P.unflatten(flat, CNN_SPECS)
+    back = P.flatten(params, CNN_SPECS)
+    np.testing.assert_array_equal(flat, back)
+
+
+def test_unflatten_shapes():
+    flat = cnn_init(1)
+    params = P.unflatten(flat, CNN_SPECS)
+    for name, shape in CNN_SPECS:
+        assert params[name].shape == shape
+
+
+def test_unflatten_rejects_wrong_size():
+    with pytest.raises(ValueError):
+        P.unflatten(jnp.zeros(100), CNN_SPECS)
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a = cnn_init(7)
+    b = cnn_init(7)
+    c = cnn_init(8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.allclose(a, c)
+
+
+def test_init_biases_zero_gains_one():
+    cfg = TransformerCfg(d_model=32, n_layers=1, n_heads=2)
+    init, _, _ = make_tfm_fns(cfg)
+    params = P.unflatten(init(0), cfg.specs())
+    np.testing.assert_array_equal(params["l0_bqkv"], jnp.zeros(3 * 32))
+    np.testing.assert_array_equal(params["l0_ln1_g"], jnp.ones(32))
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+
+def _cnn_batch(seed, n=32):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((n, 32, 32, 3)), jnp.float32)
+    y = jnp.asarray(r.integers(0, 10, n), jnp.int32)
+    return x, y
+
+
+def test_cnn_logits_shape():
+    x, _ = _cnn_batch(0, 4)
+    assert cnn_logits(cnn_init(0), x).shape == (4, 10)
+
+
+def test_cnn_train_step_deterministic():
+    flat = cnn_init(3)
+    x, y = _cnn_batch(3)
+    a = cnn_train_step(flat, x, y, jnp.float32(0.05))
+    b = cnn_train_step(flat, x, y, jnp.float32(0.05))
+    np.testing.assert_array_equal(a[0], b[0])
+    assert float(a[1]) == float(b[1])
+
+
+def test_cnn_learns_on_fixed_batch():
+    flat = cnn_init(4)
+    x, y = _cnn_batch(4)
+    first = None
+    for _ in range(8):
+        flat, loss, acc = cnn_train_step(flat, x, y, jnp.float32(0.05))
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.8
+
+
+def test_cnn_eval_sums():
+    flat = cnn_init(5)
+    x, y = _cnn_batch(5, 64)
+    ls, cs = cnn_eval_batch(flat, x, y)
+    assert 0.0 <= float(cs) <= 64.0
+    # untrained model ~ uniform: mean CE near ln(10)
+    assert 1.0 < float(ls) / 64.0 < 4.0
+
+
+def test_cnn_zero_lr_keeps_params():
+    flat = cnn_init(6)
+    x, y = _cnn_batch(6)
+    new, _, _ = cnn_train_step(flat, x, y, jnp.float32(0.0))
+    np.testing.assert_array_equal(new, flat)
+
+
+# ---------------------------------------------------------------------------
+# transformer
+# ---------------------------------------------------------------------------
+
+
+def test_tfm_param_count_matches_registry():
+    cfg = TransformerCfg()
+    assert P.param_count(cfg.specs()) == registry()["transformer"].param_count
+
+
+def test_tfm_learns_copy_structure():
+    cfg = TransformerCfg(vocab=32, seq_len=16, d_model=32, n_layers=1, n_heads=2)
+    init, train, _ = make_tfm_fns(cfg)
+    flat = init(0)
+    r = np.random.default_rng(0)
+    # constant-token sequences are maximally predictable
+    toks = jnp.asarray(
+        np.repeat(r.integers(0, 32, (8, 1)), 16, axis=1), jnp.int32
+    )
+    first = None
+    for _ in range(10):
+        flat, loss, acc = train(flat, toks, jnp.float32(0.5))
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.5
+
+
+def test_tfm_eval_shapes_and_determinism():
+    m = registry()["transformer"]
+    flat = m.init_fn(1)
+    r = np.random.default_rng(1)
+    toks = jnp.asarray(r.integers(0, 256, (16, 64)), jnp.int32)
+    a = m.eval_fn(flat, toks)
+    b = m.eval_fn(flat, toks)
+    assert float(a[0]) == float(b[0]) and float(a[1]) == float(b[1])
+
+
+def test_registry_signatures():
+    reg = registry()
+    assert set(reg) == {"cnn", "transformer"}
+    for m in reg.values():
+        assert m.param_count > 0
+        assert m.train_inputs[0][2][0] == m.train_batch
+        assert m.eval_inputs[0][2][0] == m.eval_batch

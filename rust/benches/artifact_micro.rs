@@ -1,0 +1,84 @@
+//! Micro-bench: compile + execute cost of every AOT artifact through the
+//! PJRT runtime — the L1/L2 §Perf baseline (DESIGN.md §7). Run with
+//! `cargo bench --bench artifact_micro`.
+
+use std::time::Instant;
+
+use flarelink::runtime::{ComputeService, TensorData};
+use flarelink::util::bench::{bench, fmt_dur, Table};
+
+fn main() -> anyhow::Result<()> {
+    flarelink::telemetry::init_logging();
+    if !flarelink::runtime::artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return Ok(());
+    }
+    let svc = ComputeService::start(flarelink::runtime::default_artifacts_dir(), 1)?;
+    let h = svc.handle();
+
+    let iters: usize = std::env::var("ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let mut t = Table::new(&[
+        "artifact", "compile", "p50", "p95", "mean", "iters", "GFLOP/s", "GB/s(min)",
+    ]);
+
+    let manifest = h.manifest().clone();
+    for name in manifest.artifact_names() {
+        let meta = manifest.artifact(name).unwrap();
+        let inputs: Vec<TensorData> = meta
+            .inputs
+            .iter()
+            .map(|m| {
+                let n = m.elems();
+                match m.dtype.as_str() {
+                    "i32" => {
+                        // tokens/labels in range; seeds small.
+                        TensorData::I32(
+                            (0..n).map(|i| (i % 10) as i32).collect(),
+                            m.shape.clone(),
+                        )
+                    }
+                    _ => TensorData::F32(vec![0.01; n], m.shape.clone()),
+                }
+            })
+            .collect();
+
+        // First call = compile + execute.
+        let t0 = Instant::now();
+        h.execute(name, inputs.clone())?;
+        let compile = t0.elapsed();
+
+        let stats = bench(0, iters, || h.execute(name, inputs.clone()).unwrap());
+
+        // Roofline columns from the analytic cost model (§Perf).
+        use flarelink::runtime::cost;
+        let (gflops, gbs) = cost::parse_artifact_name(name)
+            .and_then(|(model, kind)| {
+                let meta = manifest.model(&model)?;
+                let secs = stats.p50.as_secs_f64();
+                let f = cost::artifact_flops(meta, &kind)
+                    .map(|f| format!("{:.2}", f / secs / 1e9))
+                    .unwrap_or_else(|| "-".into());
+                let b = cost::artifact_bytes(meta, &kind)
+                    .map(|b| format!("{:.2}", b / secs / 1e9))
+                    .unwrap_or_else(|| "-".into());
+                Some((f, b))
+            })
+            .unwrap_or(("-".into(), "-".into()));
+
+        let mut cells = vec![name.to_string(), fmt_dur(compile)];
+        cells.extend([
+            fmt_dur(stats.p50),
+            fmt_dur(stats.p95),
+            fmt_dur(stats.mean),
+            stats.iters.to_string(),
+            gflops,
+            gbs,
+        ]);
+        t.row(cells);
+    }
+    println!("{}", t.render());
+    println!("GFLOP/s = analytic model FLOPs / measured p50 (runtime::cost);");
+    println!("GB/s(min) = lower-bound bytes moved / p50. interpret-mode CPU figures;");
+    println!("see DESIGN.md §Hardware-Adaptation for the real-TPU translation.");
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Bench: regenerates the paper's Fig. 6 (per-client metrics streamed to
+//! the FLARE server during a hybrid Flower run) and measures the metric
+//! streaming fabric itself (events/sec through the Event path).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flarelink::flare::fabric::{CcpFabric, Fabric, ScpFabric};
+use flarelink::flare::reliable::Messenger;
+use flarelink::flare::tracking::{MetricEvent, MetricStore, render_ascii};
+use flarelink::harness::{run_fl_bridged, BridgedRunOpts};
+use flarelink::proto::address;
+use flarelink::train::FlJobConfig;
+use flarelink::transport::inproc;
+use flarelink::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    flarelink::telemetry::init_logging();
+
+    // ---------------- part 1: the figure itself ----------------
+    if flarelink::runtime::artifacts_available() {
+        let compute = flarelink::runtime::global_compute(
+            flarelink::harness::compute_threads_from_env(),
+        )?;
+        let cfg = FlJobConfig {
+            model: "cnn".into(),
+            strategy: "fedavg".into(),
+            rounds: 4,
+            clients: 3,
+            lr: 0.05,
+            local_steps: 3,
+            n_train_per_client: 128,
+            n_test_per_client: 128,
+            seed: 7,
+            track: true,
+            ..Default::default()
+        };
+        println!("=== Fig. 6: per-client test_accuracy via FLARE tracking ===\n");
+        let result = run_fl_bridged(
+            &cfg,
+            compute,
+            &BridgedRunOpts {
+                job_id: "fig6".into(),
+                ..Default::default()
+            },
+        )?;
+        let mut t = Table::new(&["site", "tag", "points", "first", "last"]);
+        for ((site, tag), series) in &result.metric_series {
+            if series.is_empty() {
+                continue;
+            }
+            t.row(vec![
+                site.clone(),
+                tag.clone(),
+                series.len().to_string(),
+                format!("{:.4}", series.first().unwrap().1),
+                format!("{:.4}", series.last().unwrap().1),
+            ]);
+        }
+        println!("{}", t.render());
+        for ((site, tag), series) in &result.metric_series {
+            if tag == "test_accuracy" {
+                print!("{}", render_ascii(&format!("{site} {tag}"), series, 40, 6));
+            }
+        }
+    } else {
+        println!("SKIP figure regeneration: artifacts not built");
+    }
+
+    // ---------------- part 2: streaming fabric throughput ----------------
+    println!("\n=== metric streaming fabric throughput ===\n");
+    let scp = Arc::new(ScpFabric::new());
+    let store = MetricStore::new();
+    let control = Messenger::spawn(scp.clone() as Arc<dyn Fabric>, address::SERVER)?;
+    let s2 = store.clone();
+    control.set_event_handler(Arc::new(move |env| {
+        if let Ok(ev) = MetricEvent::decode(&env.payload) {
+            s2.record(ev);
+        }
+    }));
+    let (server_end, client_end) = inproc::pair(address::SERVER, "site-1");
+    scp.add_site_link("site-1", Arc::new(server_end));
+    let ccp = CcpFabric::new("site-1", Arc::new(client_end));
+    let client = Messenger::spawn(ccp.clone() as Arc<dyn Fabric>, "site-1:bench")?;
+
+    let mut t = Table::new(&["events", "wall", "events_per_sec"]);
+    let mut expected = 0u64; // store accumulates across sizes
+    for n in [1_000u64, 10_000, 50_000] {
+        let t0 = Instant::now();
+        for i in 0..n {
+            let ev = MetricEvent {
+                job_id: "bench".into(),
+                site: "site-1".into(),
+                tag: "train_loss".into(),
+                step: i,
+                value: i as f64 * 0.001,
+                wall_ms: 0,
+            };
+            client.fire_event(address::SERVER, "metrics", ev.encode());
+        }
+        expected += n;
+        // Wait until all events landed.
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        while (store.series("bench", "site-1", "train_loss").len() as u64) < expected {
+            if Instant::now() > deadline {
+                anyhow::bail!("streaming stalled");
+            }
+            std::thread::yield_now();
+        }
+        let wall = t0.elapsed();
+        t.row(vec![
+            n.to_string(),
+            flarelink::util::bench::fmt_dur(wall),
+            format!("{:.0}", n as f64 / wall.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+    scp.shutdown();
+    ccp.shutdown();
+    Ok(())
+}

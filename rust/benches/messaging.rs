@@ -1,0 +1,199 @@
+//! Bench: the messaging fabric claims of §2/§4.
+//!
+//! E3 — ReliableMessage under loss (§4.1): completion rate + latency as
+//!      the drop probability sweeps 0 → 0.9 (paper claim: requests keep
+//!      retrying/querying until delivered or deadline).
+//! E5 — bridge overhead: round-trip time native-direct vs relayed
+//!      through the SCP vs direct P2P link, across payload sizes up to
+//!      64 MiB (the §6 "very large messages" direction, scaled), plus
+//!      chunked streaming throughput.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flarelink::flare::fabric::{CcpFabric, Fabric, ScpFabric};
+use flarelink::flare::reliable::{Messenger, RetryPolicy};
+use flarelink::flare::streaming::{send_streamed, StreamCollector};
+use flarelink::proto::address;
+use flarelink::transport::fault::{FaultConfig, FaultEndpoint};
+use flarelink::transport::inproc;
+use flarelink::transport::Endpoint;
+use flarelink::util::bench::{bench_for, fmt_dur, Table};
+
+fn fed_pair(drop: f64, seed: u64) -> (Arc<ScpFabric>, Arc<CcpFabric>, Arc<CcpFabric>) {
+    let scp = Arc::new(ScpFabric::new());
+    let mut ccps = Vec::new();
+    for (i, site) in ["site-1", "site-2"].iter().enumerate() {
+        let (se, ce) = inproc::pair(address::SERVER, site);
+        let se: Arc<dyn flarelink::transport::Endpoint> = if drop > 0.0 {
+            Arc::new(FaultEndpoint::new(
+                se,
+                FaultConfig {
+                    drop_prob: drop,
+                    seed: seed + i as u64,
+                    ..Default::default()
+                },
+            ))
+        } else {
+            Arc::new(se)
+        };
+        scp.add_site_link(site, se);
+        ccps.push(CcpFabric::new(site, Arc::new(ce)));
+    }
+    let ccp2 = ccps.pop().unwrap();
+    let ccp1 = ccps.pop().unwrap();
+    (scp, ccp1, ccp2)
+}
+
+fn main() -> anyhow::Result<()> {
+    flarelink::telemetry::init_logging();
+
+    // ------------------------------------------------------------------
+    // E3: reliable messaging under loss
+    // ------------------------------------------------------------------
+    println!("=== E3: ReliableMessage vs drop probability (paper §4.1) ===\n");
+    let mut t = Table::new(&[
+        "drop_prob", "requests", "completed", "p50", "p95", "send_attempts", "queries",
+    ]);
+    for drop in [0.0, 0.1, 0.3, 0.5, 0.7, 0.9] {
+        flarelink::telemetry::reset_counters();
+        let (scp, ccp1, _ccp2) = fed_pair(drop, 42);
+        let server = Messenger::spawn(scp.clone() as Arc<dyn Fabric>, "server:j")?;
+        server.set_handler(Arc::new(|env| Ok(env.payload.clone())));
+        let client = Messenger::spawn(ccp1.clone() as Arc<dyn Fabric>, "site-1:j")?;
+        let policy = RetryPolicy {
+            per_try: Duration::from_millis(5),
+            query_interval: Duration::from_millis(5),
+            deadline: Duration::from_secs(20),
+        };
+        let n = 50;
+        let mut latencies = Vec::new();
+        let mut completed = 0;
+        for i in 0..n {
+            let t0 = Instant::now();
+            if client
+                .request("server:j", "echo", vec![i as u8], policy)
+                .is_ok()
+            {
+                completed += 1;
+                latencies.push(t0.elapsed());
+            }
+        }
+        latencies.sort_unstable();
+        let pct = |p: f64| {
+            latencies
+                .get(((latencies.len() as f64 - 1.0) * p) as usize)
+                .copied()
+                .unwrap_or_default()
+        };
+        let snap: std::collections::BTreeMap<String, i64> =
+            flarelink::telemetry::snapshot().into_iter().collect();
+        t.row(vec![
+            format!("{drop:.1}"),
+            n.to_string(),
+            completed.to_string(),
+            fmt_dur(pct(0.5)),
+            fmt_dur(pct(0.95)),
+            snap.get("reliable.send_attempts").copied().unwrap_or(0).to_string(),
+            snap.get("reliable.queries").copied().unwrap_or(0).to_string(),
+        ]);
+        scp.shutdown();
+    }
+    println!("{}", t.render());
+    println!("expected shape: completion stays 100% while latency and retry");
+    println!("counts grow with loss — reliability is paid in retries, not failures.\n");
+
+    // ------------------------------------------------------------------
+    // E5: routing-path RTT vs payload size
+    // ------------------------------------------------------------------
+    println!("=== E5: RTT by routing path and payload (bridge overhead) ===\n");
+    let (scp, ccp1, ccp2) = fed_pair(0.0, 1);
+    // Direct P2P link between the sites.
+    let (e1, e2) = inproc::pair("site-1", "site-2");
+    ccp1.add_direct("site-2", Arc::new(e1));
+    ccp2.add_direct("site-1", Arc::new(e2));
+
+    // Peers: server cell (relay target), site-2 job cell (relay or direct).
+    let server = Messenger::spawn(scp.clone() as Arc<dyn Fabric>, "server:j")?;
+    server.set_handler(Arc::new(|env| Ok(env.payload.clone())));
+    let site2 = Messenger::spawn(ccp2.clone() as Arc<dyn Fabric>, "site-2:j")?;
+    site2.set_handler(Arc::new(|env| Ok(env.payload.clone())));
+    let client = Messenger::spawn(ccp1.clone() as Arc<dyn Fabric>, "site-1:j")?;
+
+    // Native baseline: raw endpoint pair, no FLARE at all.
+    let (raw_a, raw_b) = inproc::pair("a", "b");
+    std::thread::spawn(move || {
+        while let Ok(f) = raw_b.recv_timeout(Duration::from_secs(5)) {
+            if raw_b.send(f).is_err() {
+                return;
+            }
+        }
+    });
+
+    let policy = RetryPolicy {
+        per_try: Duration::from_millis(500),
+        query_interval: Duration::from_millis(500),
+        deadline: Duration::from_secs(60),
+    };
+    let mut t = Table::new(&["payload", "path", "p50", "p95", "mean", "iters"]);
+    for size in [1usize << 10, 1 << 16, 1 << 20, 16 << 20, 64 << 20] {
+        let payload = vec![0xABu8; size];
+        let label = if size < (1 << 20) {
+            format!("{}KiB", size >> 10)
+        } else {
+            format!("{}MiB", size >> 20)
+        };
+        let min_time = Duration::from_millis(300);
+
+        let p = payload.clone();
+        let s = bench_for(2, min_time, || {
+            raw_a.send(p.clone()).unwrap();
+            raw_a.recv_timeout(Duration::from_secs(10)).unwrap()
+        });
+        t.stat_row(&label, &["native-direct".into()], &s);
+
+        let p = payload.clone();
+        let s = bench_for(2, min_time, || {
+            client.request("server:j", "echo", p.clone(), policy).unwrap()
+        });
+        t.stat_row(&label, &["bridged-to-server".into()], &s);
+
+        let p = payload.clone();
+        let s = bench_for(2, min_time, || {
+            client.request("site-2:j", "echo", p.clone(), policy).unwrap()
+        });
+        t.stat_row(&label, &["site-to-site-P2P".into()], &s);
+    }
+    println!("{}", t.render());
+
+    // ------------------------------------------------------------------
+    // E5b: chunked large-message streaming (§6 future work, scaled)
+    // ------------------------------------------------------------------
+    println!("=== E5b: chunked streaming throughput (§6 'very large messages') ===\n");
+    let collector = StreamCollector::new(|_, _| {});
+    let c2 = collector.clone();
+    server.set_handler(Arc::new(move |env| c2.handle(env)));
+    let mut t = Table::new(&["payload", "chunk", "wall", "throughput"]);
+    for (size, chunk) in [
+        (16usize << 20, 1usize << 20),
+        (64 << 20, 1 << 20),
+        (64 << 20, 4 << 20),
+        (256 << 20, 8 << 20),
+    ] {
+        let payload: Vec<u8> = vec![0x5A; size];
+        let t0 = Instant::now();
+        send_streamed(&client, "server:j", "blob", &payload, chunk, policy)?;
+        let wall = t0.elapsed();
+        t.row(vec![
+            format!("{}MiB", size >> 20),
+            format!("{}MiB", chunk >> 20),
+            fmt_dur(wall),
+            format!("{:.0} MiB/s", (size >> 20) as f64 / wall.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+    scp.shutdown();
+    ccp1.shutdown();
+    ccp2.shutdown();
+    Ok(())
+}

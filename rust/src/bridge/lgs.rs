@@ -1,0 +1,180 @@
+//! Local GRPC Server (LGS) — paper §4.2: "there is a Local GRPC server
+//! (LGS) for each site that serves as the server endpoint for the Flower
+//! SuperNode on the site."
+//!
+//! The LGS owns one side of an in-process endpoint pair; the SuperNode
+//! dials the other side exactly as it would dial a real SuperLink. Every
+//! frame the LGS receives is forwarded to the FLARE server job cell as a
+//! ReliableMessage (hop 2 of Fig. 4); the Reply payload is written back
+//! to the SuperNode (hop 6).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::flare::reliable::{Messenger, RetryPolicy};
+use crate::transport::{inproc, Endpoint, TransportError};
+
+pub struct LocalGrpcServer {
+    client_end: Arc<dyn Endpoint>,
+    stop: Arc<AtomicBool>,
+}
+
+impl LocalGrpcServer {
+    /// Start the LGS pump thread. `server_cell` is the FLARE server job
+    /// cell hosting the LGC (e.g. `server:<job_id>`).
+    pub fn start(
+        messenger: Arc<Messenger>,
+        server_cell: &str,
+        policy: RetryPolicy,
+        abort: Arc<AtomicBool>,
+    ) -> LocalGrpcServer {
+        let (node_side, lgs_side) = inproc::pair("supernode", "lgs");
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server_cell = server_cell.to_string();
+        std::thread::Builder::new()
+            .name("lgs".into())
+            .spawn(move || {
+                loop {
+                    if stop2.load(Ordering::Acquire) || abort.load(Ordering::Acquire) {
+                        return;
+                    }
+                    let frame = match lgs_side.recv_timeout(Duration::from_millis(50)) {
+                        Ok(f) => f,
+                        Err(TransportError::Timeout) => continue,
+                        Err(_) => return,
+                    };
+                    crate::telemetry::bump("lgs.frames_forwarded", 1);
+                    // Hop 2: the reliable FLARE message (retry + query).
+                    match messenger.request(
+                        &server_cell,
+                        super::FLOWER_TOPIC,
+                        frame,
+                        policy,
+                    ) {
+                        Ok(reply) => {
+                            // Hop 6: response back to the SuperNode.
+                            if lgs_side.send(reply.payload).is_err() {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            log::error!("lgs: reliable request failed: {e}");
+                            // Surface as a Flower error frame so the
+                            // SuperNode fails its RPC instead of hanging.
+                            let err = crate::flower::message::FlowerMsg::Error {
+                                message: format!("flare bridge: {e}"),
+                            };
+                            let _ = lgs_side.send(err.encode());
+                        }
+                    }
+                }
+            })
+            .expect("spawn lgs");
+        LocalGrpcServer {
+            client_end: Arc::new(node_side),
+            stop,
+        }
+    }
+
+    /// The endpoint the SuperNode should dial (its "server endpoint").
+    pub fn client_endpoint(&self) -> Arc<dyn Endpoint> {
+        self.client_end.clone()
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.client_end.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flare::fabric::{CcpFabric, Fabric, ScpFabric};
+    use crate::flower::message::FlowerMsg;
+    use crate::flower::superlink::SuperLink;
+    use crate::proto::address;
+
+    /// Full hop-1..6 path at the transport level: SuperNode frames go
+    /// LGS -> reliable msg -> SCP -> LGC -> SuperLink and back.
+    #[test]
+    fn six_hop_frame_roundtrip() {
+        let scp = Arc::new(ScpFabric::new());
+        let (server_end, client_end) = crate::transport::inproc::pair(address::SERVER, "site-1");
+        scp.add_site_link("site-1", Arc::new(server_end));
+        let ccp = CcpFabric::new("site-1", Arc::new(client_end));
+
+        // Server job cell with the LGC handler.
+        let link = SuperLink::new();
+        let server_msgr = Messenger::spawn(scp.clone() as Arc<dyn Fabric>, "server:j1").unwrap();
+        let link2 = link.clone();
+        server_msgr.set_handler(Arc::new(move |env| Ok(link2.handle_frame(&env.payload))));
+
+        // Client job cell + LGS.
+        let client_msgr = Messenger::spawn(ccp.clone() as Arc<dyn Fabric>, "site-1:j1").unwrap();
+        let lgs = LocalGrpcServer::start(
+            client_msgr,
+            "server:j1",
+            RetryPolicy::fast(),
+            Arc::new(AtomicBool::new(false)),
+        );
+
+        // Speak the Flower protocol over the LGS endpoint, as a
+        // SuperNode would.
+        let ep = lgs.client_endpoint();
+        ep.send(FlowerMsg::CreateNode { requested: 0 }.encode()).unwrap();
+        let reply = ep.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(
+            FlowerMsg::decode(&reply).unwrap(),
+            FlowerMsg::NodeCreated { node_id: 1 }
+        );
+
+        ep.send(FlowerMsg::PullTaskIns { node_id: 1 }.encode()).unwrap();
+        let reply = ep.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(
+            FlowerMsg::decode(&reply).unwrap(),
+            FlowerMsg::TaskInsList {
+                tasks: vec![],
+                active: true
+            }
+        );
+
+        lgs.stop();
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn lgs_reports_bridge_failure_as_flower_error() {
+        // No server cell exists: the reliable request deadlines and the
+        // SuperNode receives a decodable Error frame.
+        let scp = Arc::new(ScpFabric::new());
+        let (server_end, client_end) = crate::transport::inproc::pair(address::SERVER, "site-1");
+        scp.add_site_link("site-1", Arc::new(server_end));
+        let ccp = CcpFabric::new("site-1", Arc::new(client_end));
+        let client_msgr = Messenger::spawn(ccp.clone() as Arc<dyn Fabric>, "site-1:j1").unwrap();
+        let policy = RetryPolicy {
+            per_try: Duration::from_millis(10),
+            query_interval: Duration::from_millis(10),
+            deadline: Duration::from_millis(80),
+        };
+        let lgs = LocalGrpcServer::start(
+            client_msgr,
+            "server:ghost",
+            policy,
+            Arc::new(AtomicBool::new(false)),
+        );
+        let ep = lgs.client_endpoint();
+        ep.send(FlowerMsg::CreateNode { requested: 0 }.encode()).unwrap();
+        let reply = ep.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(matches!(
+            FlowerMsg::decode(&reply).unwrap(),
+            FlowerMsg::Error { .. }
+        ));
+        lgs.stop();
+        scp.shutdown();
+        ccp.shutdown();
+    }
+}

@@ -1,0 +1,130 @@
+//! Federation-level configuration (the provisioning project file): site
+//! names, transport choice, fault injection, compute threads. Parsed
+//! from JSON by the CLI (`flarelink server/client/simulate`).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct FederationConfig {
+    pub project: String,
+    pub sites: Vec<String>,
+    /// TCP listen/dial address for provisioned deployments.
+    pub server_addr: String,
+    pub drop_prob: f64,
+    pub latency_ms: u64,
+    pub compute_threads: usize,
+    /// Site pairs allowed to talk directly (P2P).
+    pub direct_pairs: Vec<(String, String)>,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self {
+            project: "flarelink".into(),
+            sites: vec!["site-1".into(), "site-2".into()],
+            server_addr: "127.0.0.1:18411".into(),
+            drop_prob: 0.0,
+            latency_ms: 0,
+            compute_threads: 1,
+            direct_pairs: Vec::new(),
+        }
+    }
+}
+
+impl FederationConfig {
+    pub fn from_json(j: &Json) -> FederationConfig {
+        let d = FederationConfig::default();
+        let sites = j
+            .get("sites")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|s| s.as_str().map(|s| s.to_string()))
+                    .collect::<Vec<_>>()
+            })
+            .filter(|v: &Vec<String>| !v.is_empty())
+            .unwrap_or(d.sites.clone());
+        let direct_pairs = j
+            .get("direct_pairs")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|p| {
+                        let pair = p.as_arr()?;
+                        Some((
+                            pair.first()?.as_str()?.to_string(),
+                            pair.get(1)?.as_str()?.to_string(),
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        FederationConfig {
+            project: j.get("project").as_str().unwrap_or(&d.project).to_string(),
+            sites,
+            server_addr: j
+                .get("server_addr")
+                .as_str()
+                .unwrap_or(&d.server_addr)
+                .to_string(),
+            drop_prob: j.get("drop_prob").as_f64().unwrap_or(d.drop_prob),
+            latency_ms: j.get("latency_ms").as_u64().unwrap_or(d.latency_ms),
+            compute_threads: j
+                .get("compute_threads")
+                .as_usize()
+                .unwrap_or(d.compute_threads),
+            direct_pairs,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("project", Json::str(self.project.clone())),
+            (
+                "sites",
+                Json::Arr(self.sites.iter().map(|s| Json::str(s.clone())).collect()),
+            ),
+            ("server_addr", Json::str(self.server_addr.clone())),
+            ("drop_prob", Json::num(self.drop_prob)),
+            ("latency_ms", Json::num(self.latency_ms as f64)),
+            ("compute_threads", Json::num(self.compute_threads as f64)),
+            (
+                "direct_pairs",
+                Json::Arr(
+                    self.direct_pairs
+                        .iter()
+                        .map(|(a, b)| {
+                            Json::Arr(vec![Json::str(a.clone()), Json::str(b.clone())])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<FederationConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::from_json(&Json::parse(&text)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut cfg = FederationConfig::default();
+        cfg.sites = vec!["a".into(), "b".into(), "c".into()];
+        cfg.direct_pairs = vec![("a".into(), "b".into())];
+        cfg.drop_prob = 0.25;
+        let back = FederationConfig::from_json(&cfg.to_json());
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn defaults_for_empty_json() {
+        let cfg = FederationConfig::from_json(&Json::parse("{}").unwrap());
+        assert_eq!(cfg, FederationConfig::default());
+    }
+}

@@ -1,0 +1,202 @@
+//! Authentication + authorization (paper §2: "User authentication and
+//! authorization mechanisms enhance security and access control").
+//!
+//! Authentication: verify startup-kit tokens via the [`Provisioner`].
+//! Authorization: a per-role action policy table, configurable, checked
+//! by the SCP on every admin/control operation.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::flare::provision::{Provisioner, Role};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Action {
+    RegisterSite,
+    SubmitJob,
+    AbortJob,
+    ListJobs,
+    StreamMetrics,
+    /// Ship custom app code with a job (paper: "deployment of custom code").
+    DeployCustomCode,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum AuthError {
+    #[error("auth: invalid token for '{0}'")]
+    BadToken(String),
+    #[error("auth: role {role:?} not permitted to {action:?}")]
+    Denied { role: Role, action: Action },
+    #[error("auth: unknown principal '{0}'")]
+    Unknown(String),
+}
+
+/// Default policy mirroring FLARE's stock authorization:
+/// admins run jobs, sites participate and stream, nobody else does anything.
+fn default_policy() -> HashMap<(Role, Action), bool> {
+    use Action::*;
+    use Role::*;
+    let mut p = HashMap::new();
+    for (role, action, allow) in [
+        (Site, RegisterSite, true),
+        (Site, StreamMetrics, true),
+        (Site, SubmitJob, false),
+        (Site, AbortJob, false),
+        (Site, ListJobs, false),
+        (Site, DeployCustomCode, false),
+        (Admin, RegisterSite, false),
+        (Admin, SubmitJob, true),
+        (Admin, AbortJob, true),
+        (Admin, ListJobs, true),
+        (Admin, DeployCustomCode, true),
+        (Admin, StreamMetrics, false),
+        (Server, RegisterSite, false),
+        (Server, SubmitJob, true), // server-local CLI acts as admin
+        (Server, AbortJob, true),
+        (Server, ListJobs, true),
+        (Server, StreamMetrics, true),
+        (Server, DeployCustomCode, true),
+    ] {
+        p.insert((role, action), allow);
+    }
+    p
+}
+
+/// A verified identity.
+#[derive(Clone, Debug)]
+pub struct Principal {
+    pub name: String,
+    pub role: Role,
+}
+
+pub struct Authorizer {
+    provisioner: Provisioner,
+    policy: HashMap<(Role, Action), bool>,
+    /// Authenticated principals (site registrations).
+    sessions: Mutex<HashMap<String, Principal>>,
+}
+
+impl Authorizer {
+    pub fn new(provisioner: Provisioner) -> Self {
+        Self {
+            provisioner,
+            policy: default_policy(),
+            sessions: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Override one policy entry (config-driven deployments).
+    pub fn set_policy(&mut self, role: Role, action: Action, allow: bool) {
+        self.policy.insert((role, action), allow);
+    }
+
+    /// Authenticate a presented token; on success the principal is
+    /// session-cached so later calls can use [`check`].
+    pub fn authenticate(&self, name: &str, role: Role, token: &str) -> Result<Principal, AuthError> {
+        if !self.provisioner.verify(name, role, token) {
+            return Err(AuthError::BadToken(name.to_string()));
+        }
+        let p = Principal {
+            name: name.to_string(),
+            role,
+        };
+        self.sessions
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), p.clone());
+        Ok(p)
+    }
+
+    /// Authorize an action for an authenticated principal by name.
+    pub fn check(&self, name: &str, action: Action) -> Result<(), AuthError> {
+        let sessions = self.sessions.lock().unwrap();
+        let p = sessions
+            .get(name)
+            .ok_or_else(|| AuthError::Unknown(name.to_string()))?;
+        self.check_role(p.role, action)
+    }
+
+    pub fn check_role(&self, role: Role, action: Action) -> Result<(), AuthError> {
+        if *self.policy.get(&(role, action)).unwrap_or(&false) {
+            Ok(())
+        } else {
+            Err(AuthError::Denied { role, action })
+        }
+    }
+
+    pub fn is_authenticated(&self, name: &str) -> bool {
+        self.sessions.lock().unwrap().contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn authz() -> Authorizer {
+        Authorizer::new(Provisioner::new("proj", b"secret"))
+    }
+
+    #[test]
+    fn authenticate_then_authorize() {
+        let a = authz();
+        let p = Provisioner::new("proj", b"secret");
+        let kit = p.provision("site-1", Role::Site, "");
+        a.authenticate("site-1", Role::Site, &kit.token).unwrap();
+        assert!(a.is_authenticated("site-1"));
+        a.check("site-1", Action::RegisterSite).unwrap();
+        a.check("site-1", Action::StreamMetrics).unwrap();
+        assert!(matches!(
+            a.check("site-1", Action::SubmitJob),
+            Err(AuthError::Denied { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_token_rejected() {
+        let a = authz();
+        assert!(matches!(
+            a.authenticate("site-1", Role::Site, "ff00"),
+            Err(AuthError::BadToken(_))
+        ));
+        assert!(!a.is_authenticated("site-1"));
+    }
+
+    #[test]
+    fn unknown_principal_rejected() {
+        let a = authz();
+        assert!(matches!(
+            a.check("ghost", Action::ListJobs),
+            Err(AuthError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn admin_can_manage_jobs() {
+        let a = authz();
+        let p = Provisioner::new("proj", b"secret");
+        let kit = p.provision("ops", Role::Admin, "");
+        a.authenticate("ops", Role::Admin, &kit.token).unwrap();
+        a.check("ops", Action::SubmitJob).unwrap();
+        a.check("ops", Action::AbortJob).unwrap();
+        a.check("ops", Action::ListJobs).unwrap();
+        a.check("ops", Action::DeployCustomCode).unwrap();
+    }
+
+    #[test]
+    fn policy_override() {
+        let mut a = authz();
+        a.set_policy(Role::Site, Action::SubmitJob, true);
+        a.check_role(Role::Site, Action::SubmitJob).unwrap();
+    }
+
+    #[test]
+    fn role_cannot_be_escalated_by_token_swap() {
+        // A site kit presented with role=Admin must fail (role is inside
+        // the MAC).
+        let a = authz();
+        let p = Provisioner::new("proj", b"secret");
+        let kit = p.provision("site-1", Role::Site, "");
+        assert!(a.authenticate("site-1", Role::Admin, &kit.token).is_err());
+    }
+}

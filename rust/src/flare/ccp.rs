@@ -1,0 +1,214 @@
+//! Client Control Process (paper §3.1 / Fig. 2): one per site. Registers
+//! with the SCP using its startup-kit token, heartbeats, receives job
+//! deploy/stop commands, and runs per-job client app workers (the site's
+//! members of each "Job Network").
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::flare::fabric::{CcpFabric, Fabric};
+use crate::flare::job::{AppFactory, JobCtx, JobId, JobSpec};
+use crate::flare::provision::StartupKit;
+use crate::flare::reliable::{Messenger, RetryPolicy};
+use crate::flare::scp::topics;
+use crate::flare::tracking::SummaryWriter;
+use crate::proto::{address, Envelope};
+use crate::util::bytes::{Reader, Writer};
+
+#[derive(Clone, Debug)]
+pub struct CcpConfig {
+    /// Resource slots this site offers (0 = accept server default).
+    pub slots: u32,
+    pub heartbeat_interval: Duration,
+    pub policy: RetryPolicy,
+}
+
+impl Default for CcpConfig {
+    fn default() -> Self {
+        Self {
+            slots: 0,
+            heartbeat_interval: Duration::from_millis(500),
+            policy: RetryPolicy::default(),
+        }
+    }
+}
+
+struct ClientJob {
+    abort: Arc<AtomicBool>,
+    messenger: Arc<Messenger>,
+}
+
+pub struct Ccp {
+    site: String,
+    pub fabric: Arc<CcpFabric>,
+    control: Arc<Messenger>,
+    app_factory: Arc<dyn AppFactory>,
+    compute: Option<crate::runtime::ComputeHandle>,
+    cfg: CcpConfig,
+    jobs: Mutex<HashMap<JobId, ClientJob>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Ccp {
+    /// Start the CCP: register with the SCP (authenticating with the
+    /// startup kit) and begin serving deploy/stop commands.
+    pub fn start(
+        fabric: Arc<CcpFabric>,
+        kit: &StartupKit,
+        app_factory: Arc<dyn AppFactory>,
+        compute: Option<crate::runtime::ComputeHandle>,
+        cfg: CcpConfig,
+    ) -> anyhow::Result<Arc<Ccp>> {
+        let site = kit.name.clone();
+        let control = Messenger::spawn(fabric.clone() as Arc<dyn Fabric>, &site)?;
+        let ccp = Arc::new(Ccp {
+            site: site.clone(),
+            fabric,
+            control: control.clone(),
+            app_factory,
+            compute,
+            cfg: cfg.clone(),
+            jobs: Mutex::new(HashMap::new()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        });
+
+        let me = ccp.clone();
+        control.set_handler(Arc::new(move |env| me.handle_control(env)));
+
+        // Register (reliable; SCP may still be coming up).
+        let mut w = Writer::new();
+        w.str(&site);
+        w.str(&kit.token);
+        w.u32(cfg.slots);
+        let rep = control.request(address::SERVER, topics::REGISTER, w.into_bytes(), cfg.policy)?;
+        if rep.payload != b"ok" {
+            anyhow::bail!("registration refused: {:?}", rep.payload);
+        }
+        log::info!("{site}: registered with SCP");
+
+        // Heartbeat loop.
+        let me = ccp.clone();
+        std::thread::Builder::new()
+            .name(format!("ccp-hb-{site}"))
+            .spawn(move || {
+                while !me.shutdown.load(Ordering::Acquire) {
+                    me.control
+                        .fire_event(address::SERVER, topics::HEARTBEAT, Vec::new());
+                    std::thread::sleep(me.cfg.heartbeat_interval);
+                }
+            })?;
+        Ok(ccp)
+    }
+
+    pub fn site(&self) -> &str {
+        &self.site
+    }
+
+    pub fn running_jobs(&self) -> Vec<JobId> {
+        let mut v: Vec<JobId> = self.jobs.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        for (_, job) in self.jobs.lock().unwrap().iter() {
+            job.abort.store(true, Ordering::Release);
+            job.messenger.shutdown();
+        }
+        self.control.shutdown();
+        self.fabric.shutdown();
+    }
+
+    fn handle_control(self: &Arc<Self>, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        match env.topic.as_str() {
+            topics::DEPLOY => self.on_deploy(env),
+            topics::STOP => self.on_stop(env),
+            other => anyhow::bail!("ccp {}: unknown control topic '{other}'", self.site),
+        }
+    }
+
+    fn on_deploy(self: &Arc<Self>, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        let mut r = Reader::new(&env.payload);
+        let spec = JobSpec::decode(r.bytes()?)?;
+        let mut pr = Reader::new(r.bytes()?);
+        let n = pr.u32()? as usize;
+        let mut participants = Vec::with_capacity(n);
+        for _ in 0..n {
+            participants.push(pr.str()?.to_string());
+        }
+
+        let job_id = spec.id.clone();
+        {
+            let jobs = self.jobs.lock().unwrap();
+            if jobs.contains_key(&job_id) {
+                return Ok(b"already-deployed".to_vec()); // dedup across retries
+            }
+        }
+        let cell = address::job_cell(&self.site, &job_id);
+        let messenger = Messenger::spawn(self.fabric.clone() as Arc<dyn Fabric>, &cell)?;
+        let abort = Arc::new(AtomicBool::new(false));
+        self.jobs.lock().unwrap().insert(
+            job_id.clone(),
+            ClientJob {
+                abort: abort.clone(),
+                messenger: messenger.clone(),
+            },
+        );
+
+        let ctx = JobCtx {
+            job_id: job_id.clone(),
+            site: self.site.clone(),
+            participants,
+            messenger: messenger.clone(),
+            config: spec.config.clone(),
+            tracker: SummaryWriter::new(messenger.clone(), &job_id, &self.site),
+            compute: self.compute.clone(),
+            abort,
+        };
+        let me = self.clone();
+        std::thread::Builder::new()
+            .name(format!("job-{}-{}", self.site, job_id))
+            .spawn(move || {
+                let result = me.app_factory.run_client(ctx);
+                // Report completion to the SCP (best-effort).
+                let mut w = Writer::new();
+                w.str(&job_id);
+                w.str(&me.site);
+                match &result {
+                    Ok(()) => {
+                        w.u8(1);
+                        w.str("");
+                    }
+                    Err(e) => {
+                        w.u8(0);
+                        w.str(&e.to_string());
+                        log::error!("{}: job {job_id} client failed: {e}", me.site);
+                    }
+                }
+                let _ = me.control.request(
+                    address::SERVER,
+                    topics::SITE_DONE,
+                    w.into_bytes(),
+                    RetryPolicy {
+                        deadline: Duration::from_secs(2),
+                        ..me.cfg.policy
+                    },
+                );
+                if let Some(job) = me.jobs.lock().unwrap().remove(&job_id) {
+                    job.messenger.shutdown();
+                }
+            })?;
+        Ok(b"ok".to_vec())
+    }
+
+    fn on_stop(&self, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        let job_id = std::str::from_utf8(&env.payload)?;
+        if let Some(job) = self.jobs.lock().unwrap().get(job_id) {
+            job.abort.store(true, Ordering::Release);
+        }
+        Ok(b"ok".to_vec())
+    }
+}

@@ -1,0 +1,184 @@
+//! Provisioned (TCP) deployment wiring — the paper's Option 2
+//! (`nvflare job submit` against a real federation): the SCP listens on
+//! one TCP port; every site dials in with its startup kit. Multiple jobs
+//! share that single connection ("without requiring multiple ports to be
+//! open on the server host", §2).
+//!
+//! Connection handshake: the first frame a site sends is `HELLO <site>`;
+//! the SCP then installs the link and all further frames are envelopes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::flare::fabric::{CcpFabric, ScpFabric};
+use crate::transport::tcp::{connect_retry, TcpTransportListener};
+use crate::transport::Endpoint;
+
+const HELLO_PREFIX: &[u8] = b"FLARELINK-HELLO:";
+
+/// Accept-loop handle for the SCP's TCP listener.
+pub struct TcpServer {
+    stop: Arc<AtomicBool>,
+    pub addr: String,
+}
+
+impl TcpServer {
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+}
+
+/// Start accepting site connections for `fabric` on `addr`
+/// (e.g. "127.0.0.1:0"). Returns the bound address.
+pub fn serve_scp_tcp(fabric: Arc<ScpFabric>, addr: &str) -> anyhow::Result<TcpServer> {
+    let listener = TcpTransportListener::bind(addr)?;
+    let bound = listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    std::thread::Builder::new()
+        .name("scp-tcp-accept".into())
+        .spawn(move || loop {
+            if stop2.load(Ordering::Acquire) {
+                return;
+            }
+            // accept blocks; a stopped server exits on next connection
+            // or when the process ends (acceptable for a CLI daemon).
+            let Ok(ep) = listener.accept() else { return };
+            // Handshake: first frame names the site.
+            match ep.recv_timeout(Duration::from_secs(10)) {
+                Ok(frame) if frame.starts_with(HELLO_PREFIX) => {
+                    let site = String::from_utf8_lossy(&frame[HELLO_PREFIX.len()..]).to_string();
+                    log::info!("tcp: site '{site}' connected");
+                    fabric.add_site_link(&site, Arc::new(ep));
+                }
+                other => {
+                    log::warn!("tcp: connection without HELLO ({other:?}); dropping");
+                    ep.close();
+                }
+            }
+        })?;
+    Ok(TcpServer { stop, addr: bound })
+}
+
+/// Dial the SCP from a site and build its client fabric.
+pub fn connect_ccp_tcp(
+    site: &str,
+    server_addr: &str,
+    deadline: Duration,
+) -> anyhow::Result<Arc<CcpFabric>> {
+    let ep = connect_retry(server_addr, deadline)?;
+    let mut hello = HELLO_PREFIX.to_vec();
+    hello.extend_from_slice(site.as_bytes());
+    ep.send(hello)?;
+    Ok(CcpFabric::new(site, Arc::new(ep)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flare::auth::Authorizer;
+    use crate::flare::ccp::{Ccp, CcpConfig};
+    use crate::flare::job::{JobCtx, JobSpec};
+    use crate::flare::provision::{Provisioner, Role};
+    use crate::flare::reliable::RetryPolicy;
+    use crate::flare::scp::{Scp, ScpConfig};
+    use crate::flare::{AppFactory, JobStatus};
+
+    struct EchoApp;
+
+    impl AppFactory for EchoApp {
+        fn supports(&self, _: &str) -> bool {
+            true
+        }
+        fn run_client(&self, ctx: JobCtx) -> anyhow::Result<()> {
+            ctx.messenger
+                .set_handler(Arc::new(|env| Ok(env.payload.clone())));
+            while !ctx.aborted() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Ok(())
+        }
+        fn run_server(&self, ctx: JobCtx) -> anyhow::Result<()> {
+            for site in &ctx.participants {
+                let cell = crate::proto::address::job_cell(site, &ctx.job_id);
+                let rep = ctx
+                    .messenger
+                    .request(&cell, "echo", vec![9, 9], RetryPolicy::fast())?;
+                anyhow::ensure!(rep.payload == vec![9, 9]);
+            }
+            Ok(())
+        }
+    }
+
+    /// Full federation over real TCP sockets: provision, register, run a
+    /// job, finish.
+    #[test]
+    fn tcp_federation_end_to_end() {
+        let provisioner = Provisioner::new("tcp-proj", b"s3cret");
+        let authorizer = Arc::new(Authorizer::new(Provisioner::new("tcp-proj", b"s3cret")));
+        let fabric = Arc::new(ScpFabric::new());
+        let mut scp_cfg = ScpConfig::default();
+        scp_cfg.policy = RetryPolicy::fast();
+        let scp = Scp::start(fabric.clone(), authorizer, Arc::new(EchoApp), None, scp_cfg)
+            .unwrap();
+        let server = serve_scp_tcp(fabric, "127.0.0.1:0").unwrap();
+
+        let mut ccps = Vec::new();
+        for site in ["site-1", "site-2"] {
+            let kit = provisioner.provision(site, Role::Site, &server.addr);
+            let ccp_fabric =
+                connect_ccp_tcp(site, &server.addr, Duration::from_secs(5)).unwrap();
+            let mut cfg = CcpConfig::default();
+            cfg.policy = RetryPolicy::fast();
+            ccps.push(Ccp::start(ccp_fabric, &kit, Arc::new(EchoApp), None, cfg).unwrap());
+        }
+        assert_eq!(scp.registered_sites(), vec!["site-1", "site-2"]);
+
+        scp.submit(JobSpec::new("tcp-job", "echo")).unwrap();
+        let status = scp.wait("tcp-job", Duration::from_secs(30)).unwrap();
+        assert_eq!(status, JobStatus::Finished, "err={:?}", scp.job_error("tcp-job"));
+
+        for c in ccps {
+            c.shutdown();
+        }
+        server.stop();
+        scp.shutdown();
+    }
+
+    #[test]
+    fn bad_hello_is_dropped() {
+        let fabric = Arc::new(ScpFabric::new());
+        let server = serve_scp_tcp(fabric.clone(), "127.0.0.1:0").unwrap();
+        let ep = crate::transport::tcp::connect(&server.addr).unwrap();
+        ep.send(b"GARBAGE".to_vec()).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(fabric.connected_sites().is_empty());
+        server.stop();
+    }
+
+    #[test]
+    fn registration_with_wrong_token_rejected_over_tcp() {
+        let authorizer = Arc::new(Authorizer::new(Provisioner::new("p", b"real")));
+        let fabric = Arc::new(ScpFabric::new());
+        let mut scp_cfg = ScpConfig::default();
+        scp_cfg.policy = RetryPolicy::fast();
+        let scp =
+            Scp::start(fabric.clone(), authorizer, Arc::new(EchoApp), None, scp_cfg).unwrap();
+        let server = serve_scp_tcp(fabric, "127.0.0.1:0").unwrap();
+
+        // Kit minted by the WRONG provisioner.
+        let forged = Provisioner::new("p", b"fake").provision("site-1", Role::Site, "");
+        let ccp_fabric = connect_ccp_tcp("site-1", &server.addr, Duration::from_secs(5)).unwrap();
+        let mut cfg = CcpConfig::default();
+        cfg.policy = RetryPolicy {
+            deadline: Duration::from_secs(2),
+            ..RetryPolicy::fast()
+        };
+        let result = Ccp::start(ccp_fabric, &forged, Arc::new(EchoApp), None, cfg);
+        assert!(result.is_err(), "forged kit must be rejected");
+        assert!(scp.registered_sites().is_empty());
+        server.stop();
+        scp.shutdown();
+    }
+}

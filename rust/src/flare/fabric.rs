@@ -1,0 +1,458 @@
+//! Message fabric: delivers [`Envelope`]s between *cells* (addressable
+//! mailboxes) across transports.
+//!
+//! Topology per the paper's §3.1: every site holds ONE link to the SCP;
+//! all inter-cell traffic relays through the SCP by default. When network
+//! policy permits, a *direct* site↔site link can be installed on the
+//! client fabric and traffic between those sites bypasses the server
+//! ([`CcpFabric::add_direct`]) — the paper's P2P mode.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::proto::{address, Envelope};
+use crate::telemetry;
+use crate::transport::{Endpoint, TransportError};
+
+#[derive(Debug, thiserror::Error)]
+pub enum FabricError {
+    #[error("fabric: no route to site '{0}'")]
+    NoRoute(String),
+    #[error("fabric: cell '{0}' already registered")]
+    DuplicateCell(String),
+    #[error("fabric: transport: {0}")]
+    Transport(#[from] TransportError),
+    #[error("fabric: shut down")]
+    Shutdown,
+}
+
+/// Receiving side of a registered cell.
+pub struct Mailbox {
+    pub address: String,
+    rx: Receiver<Envelope>,
+}
+
+impl Mailbox {
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Envelope> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    pub fn try_recv(&self) -> Option<Envelope> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Next process-wide unique message id.
+static NEXT_MSG_ID: AtomicU64 = AtomicU64::new(1);
+
+pub fn next_msg_id() -> u64 {
+    NEXT_MSG_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+pub trait Fabric: Send + Sync {
+    /// Route `env` toward its destination cell.
+    fn send(&self, env: Envelope) -> Result<(), FabricError>;
+    /// Register a local cell and obtain its mailbox.
+    fn register(&self, address: &str) -> Result<Mailbox, FabricError>;
+    fn unregister(&self, address: &str);
+    /// The site this fabric belongs to ("server" for the SCP).
+    fn local_site(&self) -> &str;
+}
+
+/// Cells registered in this process + helper to deliver locally.
+#[derive(Default)]
+struct CellTable {
+    cells: Mutex<HashMap<String, Sender<Envelope>>>,
+}
+
+impl CellTable {
+    fn register(&self, address: &str) -> Result<Mailbox, FabricError> {
+        let mut cells = self.cells.lock().unwrap();
+        if cells.contains_key(address) {
+            return Err(FabricError::DuplicateCell(address.to_string()));
+        }
+        let (tx, rx) = channel();
+        cells.insert(address.to_string(), tx);
+        Ok(Mailbox {
+            address: address.to_string(),
+            rx,
+        })
+    }
+
+    fn unregister(&self, address: &str) {
+        self.cells.lock().unwrap().remove(address);
+    }
+
+    /// Deliver to a local cell; silently drops for unknown cells (the
+    /// reliable layer's retries handle races around cell creation).
+    fn deliver(&self, env: Envelope) {
+        let cells = self.cells.lock().unwrap();
+        if let Some(tx) = cells.get(&env.destination) {
+            let _ = tx.send(env);
+        } else {
+            telemetry::bump("fabric.dropped_no_cell", 1);
+            log::debug!("no local cell {}, dropping {:?}", env.destination, env.kind);
+        }
+    }
+}
+
+fn spawn_router(
+    name: String,
+    ep: Arc<dyn Endpoint>,
+    shutdown: Arc<AtomicBool>,
+    route: impl Fn(Envelope) + Send + 'static,
+) {
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || loop {
+            if shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            match ep.recv_timeout(Duration::from_millis(50)) {
+                Ok(frame) => match Envelope::decode(&frame) {
+                    Ok(env) => route(env),
+                    Err(e) => {
+                        telemetry::bump("fabric.bad_frame", 1);
+                        log::warn!("undecodable frame: {e}");
+                    }
+                },
+                Err(TransportError::Timeout) => continue,
+                Err(_) => return, // closed
+            }
+        })
+        .expect("spawn router");
+}
+
+// ---------------------------------------------------------------------------
+// SCP fabric (server side)
+// ---------------------------------------------------------------------------
+
+pub struct ScpFabric {
+    cells: Arc<CellTable>,
+    links: Arc<Mutex<HashMap<String, Arc<dyn Endpoint>>>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Default for ScpFabric {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScpFabric {
+    pub fn new() -> Self {
+        Self {
+            cells: Arc::new(CellTable::default()),
+            links: Arc::new(Mutex::new(HashMap::new())),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Attach a site's uplink endpoint and start routing its frames.
+    pub fn add_site_link(&self, site: &str, ep: Arc<dyn Endpoint>) {
+        self.links.lock().unwrap().insert(site.to_string(), ep.clone());
+        let cells = self.cells.clone();
+        let links = self.links.clone();
+        let shutdown = self.shutdown.clone();
+        spawn_router(
+            format!("scp-router-{site}"),
+            ep,
+            self.shutdown.clone(),
+            move |env| route_on_server(&cells, &links, &shutdown, env),
+        );
+    }
+
+    pub fn remove_site_link(&self, site: &str) {
+        if let Some(ep) = self.links.lock().unwrap().remove(site) {
+            ep.close();
+        }
+    }
+
+    pub fn connected_sites(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.links.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        for (_, ep) in self.links.lock().unwrap().iter() {
+            ep.close();
+        }
+    }
+}
+
+fn route_on_server(
+    cells: &CellTable,
+    links: &Mutex<HashMap<String, Arc<dyn Endpoint>>>,
+    shutdown: &AtomicBool,
+    env: Envelope,
+) {
+    if shutdown.load(Ordering::Acquire) {
+        return;
+    }
+    let dest_site = address::site_of(&env.destination).to_string();
+    if dest_site == address::SERVER {
+        cells.deliver(env);
+        return;
+    }
+    // Relay toward the destination site (the paper's default path: all
+    // job-process traffic flows through the SCP).
+    let ep = links.lock().unwrap().get(&dest_site).cloned();
+    match ep {
+        Some(ep) => {
+            telemetry::bump("fabric.scp_relayed", 1);
+            telemetry::bump("fabric.scp_relayed_bytes", env.payload.len() as i64);
+            if let Err(e) = ep.send(env.encode()) {
+                telemetry::bump("fabric.relay_failed", 1);
+                log::warn!("relay to {dest_site} failed: {e}");
+            }
+        }
+        None => {
+            telemetry::bump("fabric.no_route", 1);
+            log::debug!("no route to site {dest_site}");
+        }
+    }
+}
+
+impl Fabric for ScpFabric {
+    fn send(&self, env: Envelope) -> Result<(), FabricError> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(FabricError::Shutdown);
+        }
+        let dest_site = address::site_of(&env.destination).to_string();
+        if dest_site == address::SERVER {
+            self.cells.deliver(env);
+            return Ok(());
+        }
+        let ep = self.links.lock().unwrap().get(&dest_site).cloned();
+        match ep {
+            Some(ep) => {
+                ep.send(env.encode())?;
+                Ok(())
+            }
+            None => Err(FabricError::NoRoute(dest_site)),
+        }
+    }
+
+    fn register(&self, address: &str) -> Result<Mailbox, FabricError> {
+        self.cells.register(address)
+    }
+
+    fn unregister(&self, address: &str) {
+        self.cells.unregister(address);
+    }
+
+    fn local_site(&self) -> &str {
+        address::SERVER
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CCP fabric (client site)
+// ---------------------------------------------------------------------------
+
+pub struct CcpFabric {
+    site: String,
+    cells: Arc<CellTable>,
+    uplink: Arc<dyn Endpoint>,
+    /// site -> direct P2P link (bypasses the SCP when present).
+    directs: Arc<Mutex<HashMap<String, Arc<dyn Endpoint>>>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl CcpFabric {
+    pub fn new(site: &str, uplink: Arc<dyn Endpoint>) -> Arc<Self> {
+        let fabric = Arc::new(Self {
+            site: site.to_string(),
+            cells: Arc::new(CellTable::default()),
+            uplink: uplink.clone(),
+            directs: Arc::new(Mutex::new(HashMap::new())),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        });
+        let cells = fabric.cells.clone();
+        spawn_router(
+            format!("ccp-router-{site}"),
+            uplink,
+            fabric.shutdown.clone(),
+            move |env| cells.deliver(env),
+        );
+        fabric
+    }
+
+    /// Install a direct link to a peer site (paper's P2P mode). Frames
+    /// arriving on it are delivered locally like uplink frames.
+    pub fn add_direct(&self, peer_site: &str, ep: Arc<dyn Endpoint>) {
+        self.directs
+            .lock()
+            .unwrap()
+            .insert(peer_site.to_string(), ep.clone());
+        let cells = self.cells.clone();
+        spawn_router(
+            format!("ccp-direct-{}-{}", self.site, peer_site),
+            ep,
+            self.shutdown.clone(),
+            move |env| cells.deliver(env),
+        );
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.uplink.close();
+        for (_, ep) in self.directs.lock().unwrap().iter() {
+            ep.close();
+        }
+    }
+}
+
+impl Fabric for CcpFabric {
+    fn send(&self, env: Envelope) -> Result<(), FabricError> {
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(FabricError::Shutdown);
+        }
+        let dest_site = address::site_of(&env.destination).to_string();
+        if dest_site == self.site {
+            self.cells.deliver(env);
+            return Ok(());
+        }
+        if let Some(direct) = self.directs.lock().unwrap().get(&dest_site) {
+            telemetry::bump("fabric.direct_sent", 1);
+            direct.send(env.encode())?;
+            return Ok(());
+        }
+        // Default: everything goes to the SCP, which relays if needed.
+        self.uplink.send(env.encode())?;
+        Ok(())
+    }
+
+    fn register(&self, address: &str) -> Result<Mailbox, FabricError> {
+        self.cells.register(address)
+    }
+
+    fn unregister(&self, address: &str) {
+        self.cells.unregister(address);
+    }
+
+    fn local_site(&self) -> &str {
+        &self.site
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::MsgKind;
+    use crate::transport::inproc;
+
+    fn wire_site(scp: &ScpFabric, site: &str) -> Arc<CcpFabric> {
+        let (server_end, client_end) = inproc::pair(address::SERVER, site);
+        scp.add_site_link(site, Arc::new(server_end));
+        CcpFabric::new(site, Arc::new(client_end))
+    }
+
+    fn env(src: &str, dst: &str) -> Envelope {
+        let mut e = Envelope::new(MsgKind::Event, src, dst, "t");
+        e.id = next_msg_id();
+        e
+    }
+
+    #[test]
+    fn client_to_server_cell() {
+        let scp = ScpFabric::new();
+        let mb = scp.register("server").unwrap();
+        let ccp = wire_site(&scp, "site-1");
+        ccp.send(env("site-1", "server")).unwrap();
+        let got = mb.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.source, "site-1");
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn server_to_client_cell() {
+        let scp = ScpFabric::new();
+        let ccp = wire_site(&scp, "site-1");
+        let mb = ccp.register("site-1:j1").unwrap();
+        scp.send(env("server:j1", "site-1:j1")).unwrap();
+        let got = mb.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.destination, "site-1:j1");
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn site_to_site_relays_through_scp() {
+        let scp = ScpFabric::new();
+        let ccp1 = wire_site(&scp, "site-1");
+        let ccp2 = wire_site(&scp, "site-2");
+        let mb = ccp2.register("site-2:j1").unwrap();
+        telemetry::reset_counters();
+        ccp1.send(env("site-1:j1", "site-2:j1")).unwrap();
+        let got = mb.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.source, "site-1:j1");
+        assert!(telemetry::counter("fabric.scp_relayed").load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        scp.shutdown();
+        ccp1.shutdown();
+        ccp2.shutdown();
+    }
+
+    #[test]
+    fn direct_link_bypasses_scp() {
+        let scp = ScpFabric::new();
+        let ccp1 = wire_site(&scp, "site-1");
+        let ccp2 = wire_site(&scp, "site-2");
+        let (e1, e2) = inproc::pair("site-1", "site-2");
+        ccp1.add_direct("site-2", Arc::new(e1));
+        ccp2.add_direct("site-1", Arc::new(e2));
+        let mb = ccp2.register("site-2:j1").unwrap();
+        telemetry::reset_counters();
+        ccp1.send(env("site-1:j1", "site-2:j1")).unwrap();
+        let got = mb.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.source, "site-1:j1");
+        assert_eq!(
+            telemetry::counter("fabric.scp_relayed").load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "must not relay through SCP"
+        );
+        scp.shutdown();
+        ccp1.shutdown();
+        ccp2.shutdown();
+    }
+
+    #[test]
+    fn no_route_errors() {
+        let scp = ScpFabric::new();
+        assert!(matches!(
+            scp.send(env("server", "site-9:j")),
+            Err(FabricError::NoRoute(_))
+        ));
+    }
+
+    #[test]
+    fn duplicate_cell_rejected() {
+        let scp = ScpFabric::new();
+        let _mb = scp.register("server:x").unwrap();
+        assert!(matches!(
+            scp.register("server:x"),
+            Err(FabricError::DuplicateCell(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_local_cell_drops_not_panics() {
+        let scp = ScpFabric::new();
+        scp.send(env("server", "server:ghost")).unwrap();
+    }
+
+    #[test]
+    fn unregister_frees_address() {
+        let scp = ScpFabric::new();
+        let mb = scp.register("server:y").unwrap();
+        drop(mb);
+        scp.unregister("server:y");
+        assert!(scp.register("server:y").is_ok());
+    }
+}

@@ -1,0 +1,179 @@
+//! Job model: specs submitted to the SCP, runtime status, and the context
+//! handed to app runners on both server and client sides (§3.1 "Job
+//! Network" — one ephemeral network of `<site>:<job_id>` cells per job).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::flare::reliable::Messenger;
+use crate::flare::tracking::SummaryWriter;
+use crate::util::json::Json;
+
+pub type JobId = String;
+
+/// What the submitter hands the SCP (FLARE's `nvflare job submit`).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: JobId,
+    /// App type key resolved by the [`AppFactory`] on each site
+    /// (e.g. "echo", "flower_bridge").
+    pub app: String,
+    /// Arbitrary app config (forwarded verbatim to every runner).
+    pub config: Json,
+    /// Sites the job must run on; empty = all registered sites.
+    pub sites: Vec<String>,
+    /// Resource slots consumed on each participating site while running.
+    pub resources_per_site: u32,
+}
+
+impl JobSpec {
+    pub fn new(id: &str, app: &str) -> Self {
+        Self {
+            id: id.to_string(),
+            app: app.to_string(),
+            config: Json::Obj(BTreeMap::new()),
+            sites: Vec::new(),
+            resources_per_site: 1,
+        }
+    }
+
+    pub fn with_config(mut self, config: Json) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn with_sites(mut self, sites: &[&str]) -> Self {
+        self.sites = sites.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = crate::util::bytes::Writer::new();
+        w.str(&self.id);
+        w.str(&self.app);
+        w.str(&self.config.to_string());
+        w.u32(self.sites.len() as u32);
+        for s in &self.sites {
+            w.str(s);
+        }
+        w.u32(self.resources_per_site);
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<JobSpec> {
+        let mut r = crate::util::bytes::Reader::new(buf);
+        let id = r.str()?.to_string();
+        let app = r.str()?.to_string();
+        let config = Json::parse(r.str()?)?;
+        let n = r.u32()? as usize;
+        let mut sites = Vec::with_capacity(n);
+        for _ in 0..n {
+            sites.push(r.str()?.to_string());
+        }
+        let resources_per_site = r.u32()?;
+        Ok(JobSpec {
+            id,
+            app,
+            config,
+            sites,
+            resources_per_site,
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Accepted, waiting for resources.
+    Queued,
+    /// Deploy requests sent, job network forming.
+    Deploying,
+    Running,
+    Finished,
+    Failed,
+    Aborted,
+}
+
+impl JobStatus {
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            JobStatus::Finished | JobStatus::Failed | JobStatus::Aborted
+        )
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Deploying => "deploying",
+            JobStatus::Running => "running",
+            JobStatus::Finished => "finished",
+            JobStatus::Failed => "failed",
+            JobStatus::Aborted => "aborted",
+        }
+    }
+}
+
+/// Everything an app runner can touch. One per (job, site) — and one on
+/// the server with `site == "server"`.
+pub struct JobCtx {
+    pub job_id: JobId,
+    /// This runner's site name ("server" for the server-side runner).
+    pub site: String,
+    /// Sites participating in this job (sorted; excludes "server").
+    pub participants: Vec<String>,
+    /// The job cell's reliable messenger (address `<site>:<job_id>`).
+    pub messenger: Arc<Messenger>,
+    pub config: Json,
+    /// FLARE experiment-tracking writer (§5.2) — streams to the SCP.
+    pub tracker: SummaryWriter,
+    /// Compute service handle for PJRT execution (None in pure-routing
+    /// jobs/tests).
+    pub compute: Option<crate::runtime::ComputeHandle>,
+    /// Cooperative abort flag: set when the SCP aborts the job; runners
+    /// should poll it at round boundaries.
+    pub abort: std::sync::Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl JobCtx {
+    pub fn aborted(&self) -> bool {
+        self.abort.load(std::sync::atomic::Ordering::Acquire)
+    }
+}
+
+/// Per-site factory resolving a [`JobSpec::app`] key to runnable code.
+/// Returning `Err` fails the deployment (surfaces at the SCP).
+pub trait AppFactory: Send + Sync {
+    /// Run the client-side app for this job; blocks until done.
+    fn run_client(&self, ctx: JobCtx) -> anyhow::Result<()>;
+    /// Run the server-side app; its return resolves the whole job.
+    fn run_server(&self, ctx: JobCtx) -> anyhow::Result<()>;
+    /// App keys this factory can run.
+    fn supports(&self, app: &str) -> bool;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip() {
+        let spec = JobSpec::new("job-1", "flower_bridge")
+            .with_config(Json::obj(vec![("rounds", Json::num(3))]))
+            .with_sites(&["site-1", "site-2"]);
+        let back = JobSpec::decode(&spec.encode()).unwrap();
+        assert_eq!(back.id, "job-1");
+        assert_eq!(back.app, "flower_bridge");
+        assert_eq!(back.config.get("rounds").as_u64(), Some(3));
+        assert_eq!(back.sites, vec!["site-1", "site-2"]);
+        assert_eq!(back.resources_per_site, 1);
+    }
+
+    #[test]
+    fn status_terminality() {
+        assert!(!JobStatus::Queued.is_terminal());
+        assert!(!JobStatus::Running.is_terminal());
+        assert!(JobStatus::Finished.is_terminal());
+        assert!(JobStatus::Aborted.is_terminal());
+        assert!(JobStatus::Failed.is_terminal());
+    }
+}

@@ -1,0 +1,21 @@
+//! FLARE-analogue runtime (paper §3.1, §4.1): multi-job control plane
+//! (SCP/CCP), reliable messaging, provisioning + authz, metric streaming,
+//! chunked large-message streaming, and federation assembly.
+
+pub mod auth;
+pub mod ccp;
+pub mod deploy;
+pub mod fabric;
+pub mod job;
+pub mod provision;
+pub mod reliable;
+pub mod scheduler;
+pub mod scp;
+pub mod sim;
+pub mod streaming;
+pub mod tracking;
+
+pub use fabric::{CcpFabric, Fabric, ScpFabric};
+pub use job::{AppFactory, JobCtx, JobSpec, JobStatus};
+pub use reliable::{Messenger, ReliableError, RetryPolicy};
+pub use sim::{Federation, FederationBuilder};

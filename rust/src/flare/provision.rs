@@ -1,0 +1,165 @@
+//! Provisioning: federation spec → per-site *startup kits* (paper §2:
+//! "facilitates the provisioning of startup kits, including
+//! certificates"). Real FLARE issues X.509 certs; offline we issue
+//! HMAC-SHA256 identity tokens over (project, site, role) signed with the
+//! project root secret — same trust model (only the provisioner can mint,
+//! the server can verify), zero external PKI.
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+type HmacSha256 = Hmac<Sha256>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    Admin,
+    Site,
+    Server,
+}
+
+impl Role {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Role::Admin => "admin",
+            Role::Site => "site",
+            Role::Server => "server",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Role> {
+        match s {
+            "admin" => Some(Role::Admin),
+            "site" => Some(Role::Site),
+            "server" => Some(Role::Server),
+            _ => None,
+        }
+    }
+}
+
+/// What a participant receives from the provisioner (FLARE's startup-kit
+/// zip: identity + server address + cert).
+#[derive(Clone, Debug)]
+pub struct StartupKit {
+    pub project: String,
+    pub name: String,
+    pub role: Role,
+    /// Hex HMAC token proving (project, name, role) was minted by the
+    /// project provisioner.
+    pub token: String,
+    /// Server endpoint to dial (TCP deployments; empty in simulator).
+    pub server_addr: String,
+}
+
+/// Project provisioner holding the root secret.
+pub struct Provisioner {
+    project: String,
+    secret: Vec<u8>,
+}
+
+impl Provisioner {
+    pub fn new(project: &str, secret: &[u8]) -> Self {
+        Self {
+            project: project.to_string(),
+            secret: secret.to_vec(),
+        }
+    }
+
+    fn sign(&self, name: &str, role: Role) -> String {
+        let mut mac = HmacSha256::new_from_slice(&self.secret).expect("hmac key");
+        mac.update(self.project.as_bytes());
+        mac.update(b"\x00");
+        mac.update(name.as_bytes());
+        mac.update(b"\x00");
+        mac.update(role.as_str().as_bytes());
+        hex(&mac.finalize().into_bytes())
+    }
+
+    /// Mint a startup kit for one participant.
+    pub fn provision(&self, name: &str, role: Role, server_addr: &str) -> StartupKit {
+        StartupKit {
+            project: self.project.clone(),
+            name: name.to_string(),
+            role,
+            token: self.sign(name, role),
+            server_addr: server_addr.to_string(),
+        }
+    }
+
+    /// Verify a presented token (constant-time via the hmac crate).
+    pub fn verify(&self, name: &str, role: Role, token: &str) -> bool {
+        let mut mac = HmacSha256::new_from_slice(&self.secret).expect("hmac key");
+        mac.update(self.project.as_bytes());
+        mac.update(b"\x00");
+        mac.update(name.as_bytes());
+        mac.update(b"\x00");
+        mac.update(role.as_str().as_bytes());
+        match unhex(token) {
+            Some(bytes) => mac.verify_slice(&bytes).is_ok(),
+            None => false,
+        }
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{:02x}", b));
+    }
+    s
+}
+
+fn unhex(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).ok())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minted_kit_verifies() {
+        let p = Provisioner::new("proj", b"root-secret");
+        let kit = p.provision("site-1", Role::Site, "127.0.0.1:9");
+        assert!(p.verify("site-1", Role::Site, &kit.token));
+    }
+
+    #[test]
+    fn wrong_name_role_or_token_rejected() {
+        let p = Provisioner::new("proj", b"root-secret");
+        let kit = p.provision("site-1", Role::Site, "");
+        assert!(!p.verify("site-2", Role::Site, &kit.token));
+        assert!(!p.verify("site-1", Role::Admin, &kit.token));
+        assert!(!p.verify("site-1", Role::Site, "deadbeef"));
+        assert!(!p.verify("site-1", Role::Site, "not-hex!"));
+    }
+
+    #[test]
+    fn different_project_secret_rejected() {
+        let p1 = Provisioner::new("proj", b"secret-a");
+        let p2 = Provisioner::new("proj", b"secret-b");
+        let kit = p1.provision("site-1", Role::Site, "");
+        assert!(!p2.verify("site-1", Role::Site, &kit.token));
+    }
+
+    #[test]
+    fn tokens_differ_per_site_and_role() {
+        let p = Provisioner::new("proj", b"s");
+        let a = p.provision("site-1", Role::Site, "").token;
+        let b = p.provision("site-2", Role::Site, "").token;
+        let c = p.provision("site-1", Role::Admin, "").token;
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        assert_eq!(unhex(&hex(&[0, 255, 16])).unwrap(), vec![0, 255, 16]);
+        assert!(unhex("abc").is_none());
+    }
+}

@@ -1,0 +1,588 @@
+//! ReliableMessage (paper §4.1), implemented exactly as described:
+//!
+//! 1. The requester sends the request; if the send fails (or is lost —
+//!    the transport may drop silently), it retries until the peer
+//!    acknowledges or the total deadline passes (job aborts).
+//! 2. Once acknowledged, the requester waits for the response. The peer
+//!    pushes the result when processing finishes; *concurrently* the
+//!    requester polls with Query messages. The result is accepted from
+//!    whichever path delivers first — push (Reply to the request) or
+//!    pull (Reply to a Query).
+//!
+//! The receiving side deduplicates retried requests (at-most-once handler
+//! execution) and caches results so Queries and duplicate requests can be
+//! answered without re-execution.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::flare::fabric::{next_msg_id, Fabric, Mailbox};
+use crate::proto::{Envelope, MsgKind};
+use crate::telemetry;
+
+/// Retry/poll/deadline knobs (paper: "a moment later", "maximum amount of
+/// time has passed").
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Wait for an Ack/Reply after each send attempt before re-sending.
+    pub per_try: Duration,
+    /// Interval between Query polls while waiting for the result.
+    pub query_interval: Duration,
+    /// Total time budget; exceeding it returns `ReliableError::Deadline`
+    /// (which aborts the job at the layer above, as in the paper).
+    pub deadline: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            per_try: Duration::from_millis(100),
+            query_interval: Duration::from_millis(100),
+            deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Fast policy for tests/benches on lossy in-proc transports.
+    pub fn fast() -> Self {
+        Self {
+            per_try: Duration::from_millis(10),
+            query_interval: Duration::from_millis(10),
+            deadline: Duration::from_secs(5),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ReliableError {
+    #[error("reliable: deadline exceeded waiting for {peer} ({phase})")]
+    Deadline { peer: String, phase: &'static str },
+    #[error("reliable: messenger shut down")]
+    Shutdown,
+    #[error("reliable: fabric: {0}")]
+    Fabric(#[from] crate::flare::fabric::FabricError),
+    #[error("reliable: remote handler error: {0}")]
+    Remote(String),
+}
+
+/// Handler for incoming requests: payload-in, payload-out.
+pub type Handler = Arc<dyn Fn(&Envelope) -> anyhow::Result<Vec<u8>> + Send + Sync>;
+/// Handler for fire-and-forget events.
+pub type EventHandler = Arc<dyn Fn(&Envelope) + Send + Sync>;
+
+enum WaiterMsg {
+    Acked,
+    Reply(Envelope),
+}
+
+/// Result cache bounded by entry count; evicts oldest.
+struct ResultCache {
+    map: HashMap<(String, u64), Envelope>,
+    order: VecDeque<(String, u64)>,
+    cap: usize,
+}
+
+impl ResultCache {
+    fn new(cap: usize) -> Self {
+        Self {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            cap,
+        }
+    }
+
+    fn insert(&mut self, key: (String, u64), value: Envelope) {
+        if self.map.insert(key.clone(), value).is_none() {
+            self.order.push_back(key);
+            while self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn get(&self, key: &(String, u64)) -> Option<&Envelope> {
+        self.map.get(key)
+    }
+}
+
+/// A cell with reliable request/response semantics on top of a [`Fabric`].
+pub struct Messenger {
+    address: String,
+    fabric: Arc<dyn Fabric>,
+    waiters: Mutex<HashMap<u64, Sender<WaiterMsg>>>,
+    results: Mutex<ResultCache>,
+    inflight: Mutex<HashSet<(String, u64)>>,
+    handler: RwLock<Option<Handler>>,
+    event_handler: RwLock<Option<EventHandler>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Messenger {
+    /// Register cell `address` on `fabric` and start its service loop.
+    pub fn spawn(fabric: Arc<dyn Fabric>, address: &str) -> anyhow::Result<Arc<Messenger>> {
+        let mailbox = fabric.register(address)?;
+        let m = Arc::new(Messenger {
+            address: address.to_string(),
+            fabric,
+            waiters: Mutex::new(HashMap::new()),
+            results: Mutex::new(ResultCache::new(4096)),
+            inflight: Mutex::new(HashSet::new()),
+            handler: RwLock::new(None),
+            event_handler: RwLock::new(None),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        });
+        let svc = m.clone();
+        std::thread::Builder::new()
+            .name(format!("msgr-{address}"))
+            .spawn(move || svc.service_loop(mailbox))?;
+        Ok(m)
+    }
+
+    pub fn address(&self) -> &str {
+        &self.address
+    }
+
+    /// Install the request handler (must be set before peers call in).
+    pub fn set_handler(&self, h: Handler) {
+        *self.handler.write().unwrap() = Some(h);
+    }
+
+    pub fn set_event_handler(&self, h: EventHandler) {
+        *self.event_handler.write().unwrap() = Some(h);
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.fabric.unregister(&self.address);
+    }
+
+    // ---------------- requester side ----------------
+
+    /// Reliable request/response per §4.1. Returns the reply envelope.
+    pub fn request(
+        &self,
+        destination: &str,
+        topic: &str,
+        payload: Vec<u8>,
+        policy: RetryPolicy,
+    ) -> Result<Envelope, ReliableError> {
+        self.request_with_headers(destination, topic, payload, Vec::new(), policy)
+    }
+
+    /// [`request`] with string headers attached (e.g. admin credentials).
+    pub fn request_with_headers(
+        &self,
+        destination: &str,
+        topic: &str,
+        payload: Vec<u8>,
+        headers: Vec<(String, String)>,
+        policy: RetryPolicy,
+    ) -> Result<Envelope, ReliableError> {
+        let id = next_msg_id();
+        let mut env = Envelope::new(MsgKind::Request, &self.address, destination, topic);
+        env.id = id;
+        env.payload = payload;
+        env.headers = headers;
+
+        let (tx, rx) = channel::<WaiterMsg>();
+        self.waiters.lock().unwrap().insert(id, tx);
+        let _cleanup = WaiterGuard { m: self, id };
+
+        let deadline = Instant::now() + policy.deadline;
+
+        // Phase 1: send until acked (or replied — replies also prove receipt).
+        let mut acked = false;
+        while !acked {
+            if self.shutdown.load(Ordering::Acquire) {
+                return Err(ReliableError::Shutdown);
+            }
+            if Instant::now() >= deadline {
+                telemetry::bump("reliable.deadline", 1);
+                return Err(ReliableError::Deadline {
+                    peer: destination.to_string(),
+                    phase: "send",
+                });
+            }
+            telemetry::bump("reliable.send_attempts", 1);
+            // A failed fabric send (no route yet, link down) is treated
+            // like a lost frame: retry after per_try.
+            let _ = self.fabric.send(env.clone());
+            match rx.recv_timeout(policy.per_try) {
+                Ok(WaiterMsg::Acked) => acked = true,
+                Ok(WaiterMsg::Reply(rep)) => return finish(rep),
+                Err(_) => {} // retry
+            }
+        }
+
+        // Phase 2: wait for push; poll with Query in parallel.
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                return Err(ReliableError::Shutdown);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                telemetry::bump("reliable.deadline", 1);
+                return Err(ReliableError::Deadline {
+                    peer: destination.to_string(),
+                    phase: "result",
+                });
+            }
+            let wait = policy.query_interval.min(deadline - now);
+            match rx.recv_timeout(wait) {
+                Ok(WaiterMsg::Reply(rep)) => return finish(rep),
+                Ok(WaiterMsg::Acked) => continue,
+                Err(_) => {
+                    // Poll: "is the result ready?"
+                    telemetry::bump("reliable.queries", 1);
+                    let mut q =
+                        Envelope::new(MsgKind::Query, &self.address, destination, topic);
+                    q.id = next_msg_id();
+                    q.correlation_id = id;
+                    let _ = self.fabric.send(q);
+                }
+            }
+        }
+    }
+
+    /// Fire-and-forget event (metric streaming, heartbeats).
+    pub fn fire_event(&self, destination: &str, topic: &str, payload: Vec<u8>) {
+        let mut env = Envelope::new(MsgKind::Event, &self.address, destination, topic);
+        env.id = next_msg_id();
+        env.payload = payload;
+        let _ = self.fabric.send(env);
+    }
+
+    // ---------------- service loop ----------------
+
+    fn service_loop(self: Arc<Self>, mailbox: Mailbox) {
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let Some(env) = mailbox.recv_timeout(Duration::from_millis(50)) else {
+                continue;
+            };
+            match env.kind {
+                MsgKind::Request => self.on_request(env),
+                MsgKind::Query => self.on_query(env),
+                MsgKind::Ack => self.on_ack(env),
+                MsgKind::Reply => self.on_reply(env),
+                MsgKind::Event => {
+                    if let Some(h) = self.event_handler.read().unwrap().clone() {
+                        h(&env);
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_request(self: &Arc<Self>, env: Envelope) {
+        // Always ack receipt first (cheap; lost acks are covered by the
+        // requester's retry + our dedup).
+        let mut ack = Envelope::new(MsgKind::Ack, &self.address, &env.source, &env.topic);
+        ack.id = next_msg_id();
+        ack.correlation_id = env.id;
+        let _ = self.fabric.send(ack);
+
+        let key = (env.source.clone(), env.id);
+        // Duplicate of a finished request? Re-send the cached reply.
+        if let Some(rep) = self.results.lock().unwrap().get(&key) {
+            telemetry::bump("reliable.dup_replayed", 1);
+            let _ = self.fabric.send(rep.clone());
+            return;
+        }
+        // Duplicate of an in-flight request? The ack is enough.
+        {
+            let mut inflight = self.inflight.lock().unwrap();
+            if !inflight.insert(key.clone()) {
+                telemetry::bump("reliable.dup_inflight", 1);
+                return;
+            }
+        }
+        let Some(handler) = self.handler.read().unwrap().clone() else {
+            self.inflight.lock().unwrap().remove(&key);
+            log::warn!("{}: request on {} but no handler", self.address, env.topic);
+            return;
+        };
+        // Process on a worker thread: handlers may run for a whole
+        // training round; the service loop must keep acking/answering.
+        let me = self.clone();
+        std::thread::Builder::new()
+            .name(format!("handler-{}", self.address))
+            .spawn(move || {
+                let reply = match handler(&env) {
+                    Ok(payload) => {
+                        let mut r = env.reply_to(payload);
+                        r.id = next_msg_id();
+                        r
+                    }
+                    Err(e) => {
+                        let mut r = env.reply_to(Vec::new());
+                        r.id = next_msg_id();
+                        r.headers.push(("error".into(), e.to_string()));
+                        r
+                    }
+                };
+                me.results.lock().unwrap().insert(key.clone(), reply.clone());
+                me.inflight.lock().unwrap().remove(&key);
+                let _ = me.fabric.send(reply);
+            })
+            .expect("spawn handler");
+    }
+
+    fn on_query(&self, env: Envelope) {
+        let key = (env.source.clone(), env.correlation_id);
+        if let Some(rep) = self.results.lock().unwrap().get(&key) {
+            telemetry::bump("reliable.query_hits", 1);
+            let _ = self.fabric.send(rep.clone());
+        } else {
+            // Not ready: ack the query so the requester knows we're alive.
+            let mut ack = Envelope::new(MsgKind::Ack, &self.address, &env.source, &env.topic);
+            ack.id = next_msg_id();
+            ack.correlation_id = env.correlation_id;
+            let _ = self.fabric.send(ack);
+        }
+    }
+
+    fn on_ack(&self, env: Envelope) {
+        if let Some(tx) = self.waiters.lock().unwrap().get(&env.correlation_id) {
+            let _ = tx.send(WaiterMsg::Acked);
+        }
+    }
+
+    fn on_reply(&self, env: Envelope) {
+        if let Some(tx) = self.waiters.lock().unwrap().get(&env.correlation_id) {
+            let _ = tx.send(WaiterMsg::Reply(env));
+        } else {
+            telemetry::bump("reliable.orphan_reply", 1);
+        }
+    }
+}
+
+/// Remove the waiter entry when `request` returns (any path).
+struct WaiterGuard<'a> {
+    m: &'a Messenger,
+    id: u64,
+}
+
+impl Drop for WaiterGuard<'_> {
+    fn drop(&mut self) {
+        self.m.waiters.lock().unwrap().remove(&self.id);
+    }
+}
+
+fn finish(rep: Envelope) -> Result<Envelope, ReliableError> {
+    if let Some(err) = rep.header("error") {
+        return Err(ReliableError::Remote(err.to_string()));
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flare::fabric::{CcpFabric, ScpFabric};
+    use crate::proto::address;
+    use crate::transport::fault::{FaultConfig, FaultEndpoint};
+    use crate::transport::inproc;
+
+    /// One SCP + one site, optionally lossy in both directions.
+    fn federation(drop_prob: f64, seed: u64) -> (Arc<ScpFabric>, Arc<CcpFabric>) {
+        let scp = Arc::new(ScpFabric::new());
+        let (server_end, client_end) = inproc::pair(address::SERVER, "site-1");
+        let server_end: Arc<dyn crate::transport::Endpoint> = if drop_prob > 0.0 {
+            Arc::new(FaultEndpoint::new(
+                server_end,
+                FaultConfig {
+                    drop_prob,
+                    seed,
+                    ..Default::default()
+                },
+            ))
+        } else {
+            Arc::new(server_end)
+        };
+        let client_end: Arc<dyn crate::transport::Endpoint> = if drop_prob > 0.0 {
+            Arc::new(FaultEndpoint::new(
+                client_end,
+                FaultConfig {
+                    drop_prob,
+                    seed: seed + 1,
+                    ..Default::default()
+                },
+            ))
+        } else {
+            Arc::new(client_end)
+        };
+        scp.add_site_link("site-1", server_end);
+        let ccp = CcpFabric::new("site-1", client_end);
+        (scp, ccp)
+    }
+
+    fn echo_handler() -> Handler {
+        Arc::new(|env: &Envelope| {
+            let mut out = env.payload.clone();
+            out.reverse();
+            Ok(out)
+        })
+    }
+
+    #[test]
+    fn request_reply_clean_network() {
+        let (scp, ccp) = federation(0.0, 0);
+        let server = Messenger::spawn(scp.clone(), "server:j1").unwrap();
+        server.set_handler(echo_handler());
+        let client = Messenger::spawn(ccp.clone(), "site-1:j1").unwrap();
+        let rep = client
+            .request("server:j1", "test", vec![1, 2, 3], RetryPolicy::fast())
+            .unwrap();
+        assert_eq!(rep.payload, vec![3, 2, 1]);
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn survives_heavy_loss() {
+        // 40% loss each way; retries + queries must still complete.
+        let (scp, ccp) = federation(0.4, 42);
+        let server = Messenger::spawn(scp.clone(), "server:j1").unwrap();
+        server.set_handler(echo_handler());
+        let client = Messenger::spawn(ccp.clone(), "site-1:j1").unwrap();
+        for i in 0..10u8 {
+            let rep = client
+                .request("server:j1", "test", vec![i], RetryPolicy::fast())
+                .unwrap();
+            assert_eq!(rep.payload, vec![i]);
+        }
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn deadline_aborts_when_peer_missing() {
+        let (scp, ccp) = federation(0.0, 0);
+        let client = Messenger::spawn(ccp.clone(), "site-1:j1").unwrap();
+        let policy = RetryPolicy {
+            per_try: Duration::from_millis(10),
+            query_interval: Duration::from_millis(10),
+            deadline: Duration::from_millis(100),
+        };
+        let err = client
+            .request("server:ghost", "test", vec![], policy)
+            .unwrap_err();
+        assert!(matches!(err, ReliableError::Deadline { .. }), "{err}");
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn handler_executes_once_despite_retries() {
+        // Slow handler + tiny per_try forces duplicate request sends;
+        // the dedup table must ensure exactly one execution.
+        let (scp, ccp) = federation(0.0, 0);
+        let server = Messenger::spawn(scp.clone(), "server:j1").unwrap();
+        let count = Arc::new(std::sync::atomic::AtomicU32::new(0));
+        let c2 = count.clone();
+        server.set_handler(Arc::new(move |env| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(80));
+            Ok(env.payload.clone())
+        }));
+        let client = Messenger::spawn(ccp.clone(), "site-1:j1").unwrap();
+        let policy = RetryPolicy {
+            per_try: Duration::from_millis(5),
+            query_interval: Duration::from_millis(5),
+            deadline: Duration::from_secs(5),
+        };
+        let rep = client.request("server:j1", "t", vec![7], policy).unwrap();
+        assert_eq!(rep.payload, vec![7]);
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn result_retrieved_via_query_path() {
+        // Drop every push Reply by dropping 60% server->client; query
+        // path must eventually deliver. (Drops affect acks too, which is
+        // fine — retries cover it.)
+        let (scp, ccp) = federation(0.6, 7);
+        let server = Messenger::spawn(scp.clone(), "server:j1").unwrap();
+        server.set_handler(echo_handler());
+        let client = Messenger::spawn(ccp.clone(), "site-1:j1").unwrap();
+        let rep = client
+            .request("server:j1", "t", vec![9, 8], RetryPolicy::fast())
+            .unwrap();
+        assert_eq!(rep.payload, vec![8, 9]);
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn remote_handler_error_propagates() {
+        let (scp, ccp) = federation(0.0, 0);
+        let server = Messenger::spawn(scp.clone(), "server:j1").unwrap();
+        server.set_handler(Arc::new(|_| anyhow::bail!("boom")));
+        let client = Messenger::spawn(ccp.clone(), "site-1:j1").unwrap();
+        let err = client
+            .request("server:j1", "t", vec![], RetryPolicy::fast())
+            .unwrap_err();
+        assert!(matches!(err, ReliableError::Remote(ref m) if m == "boom"), "{err}");
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn events_reach_event_handler() {
+        let (scp, ccp) = federation(0.0, 0);
+        let server = Messenger::spawn(scp.clone(), "server:j1").unwrap();
+        let (tx, rx) = channel();
+        server.set_event_handler(Arc::new(move |env| {
+            let _ = tx.send(env.payload.clone());
+        }));
+        let client = Messenger::spawn(ccp.clone(), "site-1:j1").unwrap();
+        client.fire_event("server:j1", "metrics", vec![5, 5]);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), vec![5, 5]);
+        scp.shutdown();
+        ccp.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_from_many_clients() {
+        let scp = Arc::new(ScpFabric::new());
+        let server = Messenger::spawn(scp.clone(), "server:j1").unwrap();
+        server.set_handler(echo_handler());
+        let mut handles = Vec::new();
+        let mut ccps = Vec::new();
+        for i in 0..4 {
+            let site = format!("site-{i}");
+            let (server_end, client_end) = inproc::pair(address::SERVER, &site);
+            scp.add_site_link(&site, Arc::new(server_end));
+            let ccp = CcpFabric::new(&site, Arc::new(client_end));
+            ccps.push(ccp.clone());
+            let cell = format!("{site}:j1");
+            handles.push(std::thread::spawn(move || {
+                let client = Messenger::spawn(ccp, &cell).unwrap();
+                for k in 0..5u8 {
+                    let rep = client
+                        .request("server:j1", "t", vec![i as u8, k], RetryPolicy::fast())
+                        .unwrap();
+                    assert_eq!(rep.payload, vec![k, i as u8]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        scp.shutdown();
+        for c in ccps {
+            c.shutdown();
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Multi-job scheduler (paper §3.1): several FL experiments share one
+//! federation; the SCP deploys a queued job when every participating site
+//! has free resource slots. FIFO with backfill — a blocked job does not
+//! stall smaller jobs behind it (FLARE's resource-based scheduling).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::flare::job::JobSpec;
+
+#[derive(Debug)]
+pub struct Scheduler {
+    /// Total slots per site.
+    capacity: HashMap<String, u32>,
+    /// Slots currently in use per site.
+    in_use: HashMap<String, u32>,
+    /// FIFO of queued jobs.
+    queue: VecDeque<JobSpec>,
+    /// Cap on simultaneously running jobs (0 = unlimited).
+    max_concurrent: usize,
+    running: usize,
+}
+
+impl Scheduler {
+    pub fn new(max_concurrent: usize) -> Self {
+        Self {
+            capacity: HashMap::new(),
+            in_use: HashMap::new(),
+            queue: VecDeque::new(),
+            max_concurrent,
+            running: 0,
+        }
+    }
+
+    /// Register/refresh a site's slot capacity.
+    pub fn set_site_capacity(&mut self, site: &str, slots: u32) {
+        self.capacity.insert(site.to_string(), slots);
+        self.in_use.entry(site.to_string()).or_insert(0);
+    }
+
+    pub fn remove_site(&mut self, site: &str) {
+        self.capacity.remove(site);
+        self.in_use.remove(site);
+    }
+
+    pub fn enqueue(&mut self, spec: JobSpec) {
+        self.queue.push_back(spec);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running
+    }
+
+    pub fn free_slots(&self, site: &str) -> u32 {
+        let cap = self.capacity.get(site).copied().unwrap_or(0);
+        let used = self.in_use.get(site).copied().unwrap_or(0);
+        cap.saturating_sub(used)
+    }
+
+    /// Effective participant list: explicit sites, or all known sites.
+    pub fn participants(&self, spec: &JobSpec) -> Vec<String> {
+        let mut sites = if spec.sites.is_empty() {
+            self.capacity.keys().cloned().collect::<Vec<_>>()
+        } else {
+            spec.sites.clone()
+        };
+        sites.sort();
+        sites
+    }
+
+    fn fits(&self, spec: &JobSpec) -> bool {
+        let sites = self.participants(spec);
+        if sites.is_empty() {
+            return false; // nothing to run on yet
+        }
+        sites.iter().all(|s| {
+            self.capacity.contains_key(s) && self.free_slots(s) >= spec.resources_per_site
+        })
+    }
+
+    /// Pop every queued job that can start now (first-fit backfill),
+    /// reserving its slots. Caller deploys the returned specs.
+    pub fn schedule(&mut self) -> Vec<JobSpec> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.max_concurrent > 0 && self.running + out.len() >= self.max_concurrent {
+                break;
+            }
+            if self.fits(&self.queue[i]) {
+                let spec = self.queue.remove(i).unwrap();
+                for site in self.participants(&spec) {
+                    *self.in_use.get_mut(&site).unwrap() += spec.resources_per_site;
+                }
+                out.push(spec);
+            } else {
+                i += 1;
+            }
+        }
+        self.running += out.len();
+        out
+    }
+
+    /// Release a finished/aborted job's slots.
+    pub fn release(&mut self, spec: &JobSpec) {
+        for site in self.participants(spec) {
+            if let Some(used) = self.in_use.get_mut(&site) {
+                *used = used.saturating_sub(spec.resources_per_site);
+            }
+        }
+        self.running = self.running.saturating_sub(1);
+    }
+
+    /// Drop a queued job by id; true if found.
+    pub fn dequeue(&mut self, job_id: &str) -> bool {
+        if let Some(pos) = self.queue.iter().position(|s| s.id == job_id) {
+            self.queue.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{gen_u64, gen_vec, prop_check, Gen};
+    use crate::util::rng::Rng;
+
+    fn sched(sites: &[(&str, u32)]) -> Scheduler {
+        let mut s = Scheduler::new(0);
+        for (name, cap) in sites {
+            s.set_site_capacity(name, *cap);
+        }
+        s
+    }
+
+    fn job(id: &str, sites: &[&str], res: u32) -> JobSpec {
+        let mut j = JobSpec::new(id, "echo").with_sites(sites);
+        j.resources_per_site = res;
+        j
+    }
+
+    #[test]
+    fn schedules_when_capacity_available() {
+        let mut s = sched(&[("a", 1), ("b", 1)]);
+        s.enqueue(job("j1", &[], 1));
+        let out = s.schedule();
+        assert_eq!(out.len(), 1);
+        assert_eq!(s.free_slots("a"), 0);
+        assert_eq!(s.free_slots("b"), 0);
+    }
+
+    #[test]
+    fn second_job_waits_then_runs_after_release() {
+        let mut s = sched(&[("a", 1)]);
+        s.enqueue(job("j1", &["a"], 1));
+        s.enqueue(job("j2", &["a"], 1));
+        let first = s.schedule();
+        assert_eq!(first.len(), 1);
+        assert!(s.schedule().is_empty());
+        s.release(&first[0]);
+        let second = s.schedule();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].id, "j2");
+    }
+
+    #[test]
+    fn concurrent_jobs_share_multi_slot_sites() {
+        // The paper's Fig. 2: J1, J2, J3 run simultaneously on shared sites.
+        let mut s = sched(&[("a", 3), ("b", 3)]);
+        for i in 0..3 {
+            s.enqueue(job(&format!("j{i}"), &[], 1));
+        }
+        assert_eq!(s.schedule().len(), 3);
+        assert_eq!(s.running(), 3);
+    }
+
+    #[test]
+    fn backfill_skips_blocked_head() {
+        let mut s = sched(&[("a", 2), ("b", 1)]);
+        s.enqueue(job("big", &["a", "b"], 1));
+        assert_eq!(s.schedule().len(), 1); // big takes b's only slot
+        s.enqueue(job("blocked", &["b"], 1)); // needs b: blocked
+        s.enqueue(job("small", &["a"], 1)); // fits on a
+        let out = s.schedule();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, "small");
+    }
+
+    #[test]
+    fn max_concurrent_respected() {
+        let mut s = Scheduler::new(2);
+        s.set_site_capacity("a", 10);
+        for i in 0..5 {
+            s.enqueue(job(&format!("j{i}"), &["a"], 1));
+        }
+        assert_eq!(s.schedule().len(), 2);
+        assert!(s.schedule().is_empty());
+    }
+
+    #[test]
+    fn unknown_site_blocks_job() {
+        let mut s = sched(&[("a", 1)]);
+        s.enqueue(job("j", &["ghost"], 1));
+        assert!(s.schedule().is_empty());
+    }
+
+    #[test]
+    fn dequeue_removes_queued() {
+        let mut s = sched(&[("a", 0)]);
+        s.enqueue(job("j", &["a"], 1));
+        assert!(s.dequeue("j"));
+        assert!(!s.dequeue("j"));
+        assert_eq!(s.queued(), 0);
+    }
+
+    // ------------------------------------------------------------------
+    // Property tests: scheduler invariants under random workloads
+    // ------------------------------------------------------------------
+
+    /// Random (n_sites, per-site capacity, jobs as (n_sites_used, res)).
+    struct WorkloadGen;
+
+    #[derive(Clone, Debug)]
+    struct Workload {
+        caps: Vec<u32>,
+        jobs: Vec<(usize, u32)>, // (how many sites it uses, resources)
+    }
+
+    impl Gen for WorkloadGen {
+        type Value = Workload;
+        fn generate(&self, rng: &mut Rng) -> Workload {
+            let n_sites = rng.range_u64(1, 4) as usize;
+            let caps = (0..n_sites).map(|_| rng.range_u64(1, 4) as u32).collect();
+            let n_jobs = rng.range_u64(1, 12) as usize;
+            let jobs = (0..n_jobs)
+                .map(|_| {
+                    (
+                        rng.range_u64(1, n_sites as u64) as usize,
+                        rng.range_u64(1, 3) as u32,
+                    )
+                })
+                .collect();
+            Workload { caps, jobs }
+        }
+        fn shrink(&self, v: &Workload) -> Vec<Workload> {
+            let mut out = Vec::new();
+            if v.jobs.len() > 1 {
+                let mut c = v.clone();
+                c.jobs.pop();
+                out.push(c);
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn prop_capacity_never_exceeded_and_all_jobs_complete() {
+        prop_check("scheduler invariants", 200, WorkloadGen, |w| {
+            let mut s = Scheduler::new(0);
+            let site_names: Vec<String> =
+                (0..w.caps.len()).map(|i| format!("s{i}")).collect();
+            for (i, cap) in w.caps.iter().enumerate() {
+                s.set_site_capacity(&site_names[i], *cap);
+            }
+            let mut specs = Vec::new();
+            for (i, (k, res)) in w.jobs.iter().enumerate() {
+                let sites: Vec<&str> = site_names[..*k].iter().map(|s| s.as_str()).collect();
+                let mut j = JobSpec::new(&format!("j{i}"), "echo").with_sites(&sites);
+                // Clamp resources to what the smallest used site can ever
+                // hold, else the job legitimately never runs.
+                j.resources_per_site =
+                    (*res).min(*w.caps[..*k].iter().min().unwrap());
+                specs.push(j);
+            }
+            for spec in specs {
+                s.enqueue(spec);
+            }
+            let mut completed = 0;
+            let total = w.jobs.len();
+            let mut running: Vec<JobSpec> = Vec::new();
+            // Drive to quiescence; finish one running job per step.
+            for _ in 0..total * 4 + 4 {
+                let newly = s.schedule();
+                // Invariant: in_use <= capacity at all times.
+                for name in &site_names {
+                    if s.free_slots(name) > *s.capacity.get(name).unwrap() {
+                        return false;
+                    }
+                }
+                running.extend(newly);
+                if let Some(done) = running.pop() {
+                    s.release(&done);
+                    completed += 1;
+                }
+            }
+            completed == total && s.queued() == 0
+        });
+    }
+
+    #[test]
+    fn prop_release_restores_capacity() {
+        prop_check(
+            "release restores",
+            100,
+            gen_vec(gen_u64(1, 3), 1, 6),
+            |resources| {
+                let mut s = Scheduler::new(0);
+                s.set_site_capacity("a", 10);
+                let before = s.free_slots("a");
+                let mut specs = Vec::new();
+                for (i, r) in resources.iter().enumerate() {
+                    let mut j = JobSpec::new(&format!("j{i}"), "e").with_sites(&["a"]);
+                    j.resources_per_site = *r as u32;
+                    specs.push(j);
+                }
+                for sp in &specs {
+                    s.enqueue(sp.clone());
+                }
+                let started = s.schedule();
+                for sp in &started {
+                    s.release(sp);
+                }
+                s.free_slots("a") == before
+            },
+        );
+    }
+}

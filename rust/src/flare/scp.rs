@@ -1,0 +1,528 @@
+//! Server Control Process (paper §3.1 / Fig. 2): owns the site registry,
+//! the multi-job scheduler, job deployment/monitoring/abort, the metric
+//! store, and the server-side job runners. One SCP per federation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::flare::auth::{Action, Authorizer};
+use crate::flare::fabric::{Fabric, ScpFabric};
+use crate::flare::job::{AppFactory, JobCtx, JobId, JobSpec, JobStatus};
+use crate::flare::provision::Role;
+use crate::flare::reliable::{Messenger, RetryPolicy};
+use crate::flare::scheduler::Scheduler;
+use crate::flare::tracking::{MetricEvent, MetricStore, SummaryWriter, METRICS_TOPIC};
+use crate::proto::{address, Envelope};
+use crate::util::bytes::{Reader, Writer};
+use crate::util::json::Json;
+
+/// Control topics understood by the SCP's `"server"` cell.
+pub mod topics {
+    pub const REGISTER: &str = "ccp.register";
+    pub const HEARTBEAT: &str = "ccp.heartbeat";
+    pub const SITE_DONE: &str = "job.site_done";
+    pub const SUBMIT: &str = "admin.submit";
+    pub const ABORT: &str = "admin.abort";
+    pub const LIST: &str = "admin.list";
+    pub const DEPLOY: &str = "job.deploy";
+    pub const STOP: &str = "job.stop";
+}
+
+#[derive(Clone, Debug)]
+pub struct ScpConfig {
+    /// Max simultaneously running jobs (0 = unlimited).
+    pub max_concurrent_jobs: usize,
+    /// Slot capacity granted to each registering site.
+    pub default_site_slots: u32,
+    /// Sites silent for longer than this are considered dead.
+    pub heartbeat_timeout: Duration,
+    /// Reliable-messaging policy for control traffic.
+    pub policy: RetryPolicy,
+    /// Scheduler poll interval.
+    pub tick: Duration,
+}
+
+impl Default for ScpConfig {
+    fn default() -> Self {
+        Self {
+            max_concurrent_jobs: 0,
+            default_site_slots: 4,
+            heartbeat_timeout: Duration::from_secs(10),
+            policy: RetryPolicy::default(),
+            tick: Duration::from_millis(20),
+        }
+    }
+}
+
+struct SiteInfo {
+    #[allow(dead_code)]
+    name: String,
+    last_seen: Instant,
+}
+
+struct JobState {
+    spec: JobSpec,
+    status: JobStatus,
+    participants: Vec<String>,
+    abort: Arc<AtomicBool>,
+    error: Option<String>,
+    /// Per-site completion reports.
+    site_done: HashMap<String, bool>,
+}
+
+pub struct Scp {
+    pub fabric: Arc<ScpFabric>,
+    control: Arc<Messenger>,
+    authorizer: Arc<Authorizer>,
+    pub metrics: Arc<MetricStore>,
+    cfg: ScpConfig,
+    scheduler: Mutex<Scheduler>,
+    jobs: Mutex<HashMap<JobId, JobState>>,
+    sites: Mutex<HashMap<String, SiteInfo>>,
+    app_factory: Arc<dyn AppFactory>,
+    compute: Option<crate::runtime::ComputeHandle>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Scp {
+    pub fn start(
+        fabric: Arc<ScpFabric>,
+        authorizer: Arc<Authorizer>,
+        app_factory: Arc<dyn AppFactory>,
+        compute: Option<crate::runtime::ComputeHandle>,
+        cfg: ScpConfig,
+    ) -> anyhow::Result<Arc<Scp>> {
+        let control = Messenger::spawn(fabric.clone() as Arc<dyn Fabric>, address::SERVER)?;
+        let scp = Arc::new(Scp {
+            fabric,
+            control: control.clone(),
+            authorizer,
+            metrics: MetricStore::new(),
+            scheduler: Mutex::new(Scheduler::new(cfg.max_concurrent_jobs)),
+            cfg,
+            jobs: Mutex::new(HashMap::new()),
+            sites: Mutex::new(HashMap::new()),
+            app_factory,
+            compute,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        });
+
+        // Control-plane request handler.
+        let me = scp.clone();
+        control.set_handler(Arc::new(move |env| me.handle_control(env)));
+        // Metric events + heartbeats.
+        let me = scp.clone();
+        control.set_event_handler(Arc::new(move |env| me.handle_event(env)));
+
+        // Scheduler loop.
+        let me = scp.clone();
+        std::thread::Builder::new()
+            .name("scp-scheduler".into())
+            .spawn(move || me.scheduler_loop())?;
+        Ok(scp)
+    }
+
+    // ------------------------------------------------------------------
+    // Admin API (local calls; remote admin goes through handle_control)
+    // ------------------------------------------------------------------
+
+    /// Submit a job (FLARE's `nvflare job submit`).
+    pub fn submit(&self, spec: JobSpec) -> anyhow::Result<JobId> {
+        let id = spec.id.clone();
+        {
+            let jobs = self.jobs.lock().unwrap();
+            if jobs.contains_key(&id) {
+                anyhow::bail!("job id '{id}' already exists");
+            }
+        }
+        let participants = self.scheduler.lock().unwrap().participants(&spec);
+        self.jobs.lock().unwrap().insert(
+            id.clone(),
+            JobState {
+                spec: spec.clone(),
+                status: JobStatus::Queued,
+                participants,
+                abort: Arc::new(AtomicBool::new(false)),
+                error: None,
+                site_done: HashMap::new(),
+            },
+        );
+        self.scheduler.lock().unwrap().enqueue(spec);
+        log::info!("job submitted: {id}");
+        Ok(id)
+    }
+
+    pub fn status(&self, job_id: &str) -> Option<JobStatus> {
+        self.jobs.lock().unwrap().get(job_id).map(|j| j.status)
+    }
+
+    pub fn job_error(&self, job_id: &str) -> Option<String> {
+        self.jobs.lock().unwrap().get(job_id).and_then(|j| j.error.clone())
+    }
+
+    pub fn list(&self) -> Vec<(JobId, JobStatus)> {
+        let mut v: Vec<(JobId, JobStatus)> = self
+            .jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, st)| (id.clone(), st.status))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn abort(&self, job_id: &str) -> anyhow::Result<()> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let st = jobs
+            .get_mut(job_id)
+            .ok_or_else(|| anyhow::anyhow!("no such job {job_id}"))?;
+        match st.status {
+            JobStatus::Queued => {
+                self.scheduler.lock().unwrap().dequeue(job_id);
+                st.status = JobStatus::Aborted;
+            }
+            JobStatus::Deploying | JobStatus::Running => {
+                st.abort.store(true, Ordering::Release);
+                st.status = JobStatus::Aborted;
+                let participants = st.participants.clone();
+                drop(jobs);
+                self.notify_sites_stop(job_id, &participants);
+                let mut jobs = self.jobs.lock().unwrap();
+                if let Some(st) = jobs.get_mut(job_id) {
+                    let spec = st.spec.clone();
+                    drop(jobs);
+                    self.scheduler.lock().unwrap().release(&spec);
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Block until the job reaches a terminal state (or timeout).
+    pub fn wait(&self, job_id: &str, timeout: Duration) -> Option<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.status(job_id) {
+                Some(s) if s.is_terminal() => return Some(s),
+                None => return None,
+                _ => {}
+            }
+            if Instant::now() >= deadline {
+                return self.status(job_id);
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    pub fn registered_sites(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.sites.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.control.shutdown();
+        self.fabric.shutdown();
+    }
+
+    // ------------------------------------------------------------------
+    // Control-plane handling
+    // ------------------------------------------------------------------
+
+    fn handle_control(&self, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        match env.topic.as_str() {
+            topics::REGISTER => self.on_register(env),
+            topics::SITE_DONE => self.on_site_done(env),
+            topics::SUBMIT => self.on_remote_submit(env),
+            topics::ABORT => self.on_remote_abort(env),
+            topics::LIST => self.on_remote_list(env),
+            other => anyhow::bail!("scp: unknown control topic '{other}'"),
+        }
+    }
+
+    fn on_register(&self, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        let mut r = Reader::new(&env.payload);
+        let name = r.str()?.to_string();
+        let token = r.str()?.to_string();
+        let slots = r.u32()?;
+        self.authorizer
+            .authenticate(&name, Role::Site, &token)
+            .map_err(|e| anyhow::anyhow!("registration rejected: {e}"))?;
+        self.authorizer.check(&name, Action::RegisterSite)?;
+        let slots = if slots == 0 {
+            self.cfg.default_site_slots
+        } else {
+            slots
+        };
+        self.sites.lock().unwrap().insert(
+            name.clone(),
+            SiteInfo {
+                name: name.clone(),
+                last_seen: Instant::now(),
+            },
+        );
+        self.scheduler.lock().unwrap().set_site_capacity(&name, slots);
+        log::info!("site registered: {name} ({slots} slots)");
+        Ok(b"ok".to_vec())
+    }
+
+    fn on_site_done(&self, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        let mut r = Reader::new(&env.payload);
+        let job_id = r.str()?.to_string();
+        let site = r.str()?.to_string();
+        let ok = r.u8()? == 1;
+        let err = r.str()?.to_string();
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(st) = jobs.get_mut(&job_id) {
+            st.site_done.insert(site.clone(), ok);
+            if !ok && st.error.is_none() {
+                st.error = Some(format!("site {site}: {err}"));
+            }
+        }
+        Ok(b"ok".to_vec())
+    }
+
+    fn authorize_remote(&self, env: &Envelope, action: Action) -> anyhow::Result<()> {
+        let name = env
+            .header("principal")
+            .ok_or_else(|| anyhow::anyhow!("missing principal header"))?;
+        let role = env
+            .header("role")
+            .and_then(Role::parse)
+            .ok_or_else(|| anyhow::anyhow!("missing/bad role header"))?;
+        let token = env
+            .header("token")
+            .ok_or_else(|| anyhow::anyhow!("missing token header"))?;
+        self.authorizer.authenticate(name, role, token)?;
+        self.authorizer.check(name, action)?;
+        Ok(())
+    }
+
+    fn on_remote_submit(&self, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        self.authorize_remote(env, Action::SubmitJob)?;
+        let spec = JobSpec::decode(&env.payload)?;
+        let id = self.submit(spec)?;
+        Ok(id.into_bytes())
+    }
+
+    fn on_remote_abort(&self, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        self.authorize_remote(env, Action::AbortJob)?;
+        let job_id = std::str::from_utf8(&env.payload)?;
+        self.abort(job_id)?;
+        Ok(b"ok".to_vec())
+    }
+
+    fn on_remote_list(&self, env: &Envelope) -> anyhow::Result<Vec<u8>> {
+        self.authorize_remote(env, Action::ListJobs)?;
+        let arr = self
+            .list()
+            .into_iter()
+            .map(|(id, st)| {
+                Json::obj(vec![
+                    ("id", Json::str(id)),
+                    ("status", Json::str(st.as_str())),
+                ])
+            })
+            .collect();
+        Ok(Json::Arr(arr).to_string().into_bytes())
+    }
+
+    fn handle_event(&self, env: &Envelope) {
+        match env.topic.as_str() {
+            METRICS_TOPIC => {
+                if let Ok(ev) = MetricEvent::decode(&env.payload) {
+                    self.metrics.record(ev);
+                }
+            }
+            topics::HEARTBEAT => {
+                let site = env.source.clone();
+                if let Some(info) = self.sites.lock().unwrap().get_mut(&site) {
+                    info.last_seen = Instant::now();
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduling + deployment
+    // ------------------------------------------------------------------
+
+    fn scheduler_loop(self: Arc<Self>) {
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            self.check_heartbeats();
+            let to_deploy = self.scheduler.lock().unwrap().schedule();
+            for spec in to_deploy {
+                let me = self.clone();
+                std::thread::Builder::new()
+                    .name(format!("scp-deploy-{}", spec.id))
+                    .spawn(move || me.deploy_job(spec))
+                    .expect("spawn deploy");
+            }
+            std::thread::sleep(self.cfg.tick);
+        }
+    }
+
+    fn check_heartbeats(&self) {
+        let timeout = self.cfg.heartbeat_timeout;
+        let mut dead = Vec::new();
+        {
+            let sites = self.sites.lock().unwrap();
+            for (name, info) in sites.iter() {
+                if info.last_seen.elapsed() > timeout {
+                    dead.push(name.clone());
+                }
+            }
+        }
+        for site in dead {
+            log::warn!("site {site} missed heartbeats; deregistering");
+            self.sites.lock().unwrap().remove(&site);
+            self.scheduler.lock().unwrap().remove_site(&site);
+            self.fabric.remove_site_link(&site);
+            // Abort running jobs that include this site.
+            let affected: Vec<JobId> = self
+                .jobs
+                .lock()
+                .unwrap()
+                .iter()
+                .filter(|(_, st)| {
+                    !st.status.is_terminal() && st.participants.contains(&site)
+                })
+                .map(|(id, _)| id.clone())
+                .collect();
+            for id in affected {
+                let _ = self.abort(&id);
+                if let Some(st) = self.jobs.lock().unwrap().get_mut(&id) {
+                    st.status = JobStatus::Failed;
+                    st.error = Some(format!("site {site} lost"));
+                }
+            }
+        }
+    }
+
+    fn deploy_job(self: Arc<Self>, spec: JobSpec) {
+        let job_id = spec.id.clone();
+        let participants = self.scheduler.lock().unwrap().participants(&spec);
+        {
+            let mut jobs = self.jobs.lock().unwrap();
+            let Some(st) = jobs.get_mut(&job_id) else { return };
+            if st.status != JobStatus::Queued {
+                return; // aborted while queued
+            }
+            st.status = JobStatus::Deploying;
+            st.participants = participants.clone();
+        }
+        log::info!("deploying job {job_id} to {participants:?}");
+
+        // Send deploy to every participant CCP (reliable).
+        let mut deploy_payload = Writer::new();
+        deploy_payload.bytes(&spec.encode());
+        let mut participants_w = Writer::new();
+        participants_w.u32(participants.len() as u32);
+        for p in &participants {
+            participants_w.str(p);
+        }
+        deploy_payload.bytes(&participants_w.into_bytes());
+        let deploy_payload = deploy_payload.into_bytes();
+
+        for site in &participants {
+            match self.control.request(
+                site,
+                topics::DEPLOY,
+                deploy_payload.clone(),
+                self.cfg.policy,
+            ) {
+                Ok(_) => {}
+                Err(e) => {
+                    log::error!("deploy of {job_id} to {site} failed: {e}");
+                    self.fail_job(&job_id, &format!("deploy to {site}: {e}"));
+                    return;
+                }
+            }
+        }
+
+        // Run the server-side app in this thread; its return ends the job.
+        let (abort, config) = {
+            let mut jobs = self.jobs.lock().unwrap();
+            let Some(st) = jobs.get_mut(&job_id) else { return };
+            st.status = JobStatus::Running;
+            (st.abort.clone(), st.spec.config.clone())
+        };
+        let cell = address::job_cell(address::SERVER, &job_id);
+        let messenger =
+            match Messenger::spawn(self.fabric.clone() as Arc<dyn Fabric>, &cell) {
+                Ok(m) => m,
+                Err(e) => {
+                    self.fail_job(&job_id, &format!("server cell: {e}"));
+                    return;
+                }
+            };
+        let ctx = JobCtx {
+            job_id: job_id.clone(),
+            site: address::SERVER.to_string(),
+            participants: participants.clone(),
+            messenger: messenger.clone(),
+            config,
+            tracker: SummaryWriter::new(messenger.clone(), &job_id, address::SERVER),
+            compute: self.compute.clone(),
+            abort: abort.clone(),
+        };
+        let result = self.app_factory.run_server(ctx);
+        messenger.shutdown();
+
+        // Tell sites to tear down their job processes.
+        self.notify_sites_stop(&job_id, &participants);
+
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(st) = jobs.get_mut(&job_id) {
+            if !st.status.is_terminal() {
+                match result {
+                    Ok(()) => st.status = JobStatus::Finished,
+                    Err(e) => {
+                        st.status = JobStatus::Failed;
+                        st.error = Some(e.to_string());
+                    }
+                }
+                let spec = st.spec.clone();
+                drop(jobs);
+                self.scheduler.lock().unwrap().release(&spec);
+            }
+        }
+        log::info!("job {job_id} done");
+    }
+
+    fn fail_job(&self, job_id: &str, error: &str) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(st) = jobs.get_mut(job_id) {
+            if !st.status.is_terminal() {
+                st.status = JobStatus::Failed;
+                st.error = Some(error.to_string());
+                let spec = st.spec.clone();
+                drop(jobs);
+                self.scheduler.lock().unwrap().release(&spec);
+            }
+        }
+    }
+
+    fn notify_sites_stop(&self, job_id: &str, participants: &[String]) {
+        for site in participants {
+            let _ = self.control.request(
+                site,
+                topics::STOP,
+                job_id.as_bytes().to_vec(),
+                RetryPolicy {
+                    deadline: Duration::from_secs(2),
+                    ..self.cfg.policy
+                },
+            );
+        }
+    }
+}

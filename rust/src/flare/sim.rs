@@ -1,0 +1,474 @@
+//! Federation assembly: the `nvflare simulator` analogue (paper §5,
+//! deploy Option 1) plus TCP wiring helpers for provisioned deployments
+//! (Option 2). Builds an SCP + N CCPs, connected over in-proc endpoints
+//! (optionally fault-injected) or TCP, with provisioning and
+//! authentication performed exactly as in a real deployment.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::flare::auth::Authorizer;
+use crate::flare::ccp::{Ccp, CcpConfig};
+use crate::flare::fabric::{CcpFabric, ScpFabric};
+use crate::flare::job::AppFactory;
+use crate::flare::provision::{Provisioner, Role, StartupKit};
+use crate::flare::reliable::RetryPolicy;
+use crate::flare::scp::{Scp, ScpConfig};
+use crate::proto::address;
+use crate::transport::fault::{FaultConfig, FaultEndpoint};
+use crate::transport::inproc;
+use crate::transport::Endpoint;
+
+pub struct FederationBuilder {
+    project: String,
+    secret: Vec<u8>,
+    sites: Vec<String>,
+    drop_prob: f64,
+    latency: Duration,
+    fault_seed: u64,
+    direct_pairs: Vec<(String, String)>,
+    scp_cfg: ScpConfig,
+    ccp_cfg: CcpConfig,
+    compute: Option<crate::runtime::ComputeHandle>,
+}
+
+impl FederationBuilder {
+    pub fn new(project: &str) -> Self {
+        Self {
+            project: project.to_string(),
+            secret: b"flarelink-project-secret".to_vec(),
+            sites: Vec::new(),
+            drop_prob: 0.0,
+            latency: Duration::ZERO,
+            fault_seed: 0,
+            direct_pairs: Vec::new(),
+            scp_cfg: ScpConfig::default(),
+            ccp_cfg: CcpConfig::default(),
+            compute: None,
+        }
+    }
+
+    pub fn sites(mut self, n: usize) -> Self {
+        self.sites = (1..=n).map(|i| format!("site-{i}")).collect();
+        self
+    }
+
+    pub fn named_sites(mut self, names: &[&str]) -> Self {
+        self.sites = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Inject loss/latency on every SCP<->site link (E3/E5 benches).
+    pub fn faults(mut self, drop_prob: f64, latency: Duration, seed: u64) -> Self {
+        self.drop_prob = drop_prob;
+        self.latency = latency;
+        self.fault_seed = seed;
+        self
+    }
+
+    /// Permit a direct P2P link between two sites (paper §3.1: "direct
+    /// connections could be established ... if network policy permits").
+    pub fn allow_direct(mut self, a: &str, b: &str) -> Self {
+        self.direct_pairs.push((a.to_string(), b.to_string()));
+        self
+    }
+
+    pub fn scp_config(mut self, cfg: ScpConfig) -> Self {
+        self.scp_cfg = cfg;
+        self
+    }
+
+    pub fn ccp_config(mut self, cfg: CcpConfig) -> Self {
+        self.ccp_cfg = cfg;
+        self
+    }
+
+    pub fn retry_policy(mut self, policy: RetryPolicy) -> Self {
+        self.scp_cfg.policy = policy;
+        self.ccp_cfg.policy = policy;
+        self
+    }
+
+    pub fn compute(mut self, handle: crate::runtime::ComputeHandle) -> Self {
+        self.compute = Some(handle);
+        self
+    }
+
+    fn wrap(&self, ep: inproc::InprocEndpoint, seed_offset: u64) -> Arc<dyn Endpoint> {
+        if self.drop_prob > 0.0 || !self.latency.is_zero() {
+            Arc::new(FaultEndpoint::new(
+                ep,
+                FaultConfig {
+                    drop_prob: self.drop_prob,
+                    latency: self.latency,
+                    seed: self.fault_seed + seed_offset,
+                },
+            ))
+        } else {
+            Arc::new(ep)
+        }
+    }
+
+    /// Build the in-process federation and wait until all sites are
+    /// registered.
+    pub fn build(self, app_factory: Arc<dyn AppFactory>) -> anyhow::Result<Federation> {
+        let provisioner = Provisioner::new(&self.project, &self.secret);
+        let admin_kit = provisioner.provision("admin", Role::Admin, "");
+        let authorizer = Arc::new(Authorizer::new(Provisioner::new(
+            &self.project,
+            &self.secret,
+        )));
+
+        let fabric = Arc::new(ScpFabric::new());
+        let scp = Scp::start(
+            fabric.clone(),
+            authorizer,
+            app_factory.clone(),
+            self.compute.clone(),
+            self.scp_cfg.clone(),
+        )?;
+
+        let mut ccps = Vec::new();
+        for (i, site) in self.sites.iter().enumerate() {
+            let kit = provisioner.provision(site, Role::Site, "");
+            let (server_end, client_end) = inproc::pair(address::SERVER, site);
+            fabric.add_site_link(site, self.wrap(server_end, i as u64 * 2));
+            let ccp_fabric = CcpFabric::new(site, self.wrap(client_end, i as u64 * 2 + 1));
+            let ccp = Ccp::start(
+                ccp_fabric,
+                &kit,
+                app_factory.clone(),
+                self.compute.clone(),
+                self.ccp_cfg.clone(),
+            )?;
+            ccps.push(ccp);
+        }
+
+        // Direct P2P links (never fault-wrapped: they model same-DC links).
+        for (a, b) in &self.direct_pairs {
+            let ia = self.sites.iter().position(|s| s == a);
+            let ib = self.sites.iter().position(|s| s == b);
+            if let (Some(ia), Some(ib)) = (ia, ib) {
+                let (ea, eb) = inproc::pair(a, b);
+                ccps[ia].fabric.add_direct(b, Arc::new(ea));
+                ccps[ib].fabric.add_direct(a, Arc::new(eb));
+            }
+        }
+
+        // Registration is synchronous inside Ccp::start, so all sites are
+        // known; double-check for clarity.
+        let t0 = std::time::Instant::now();
+        while scp.registered_sites().len() < self.sites.len() {
+            if t0.elapsed() > Duration::from_secs(10) {
+                anyhow::bail!("sites failed to register");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        Ok(Federation {
+            scp,
+            ccps,
+            admin_kit,
+        })
+    }
+}
+
+/// A running federation (simulator mode).
+pub struct Federation {
+    pub scp: Arc<Scp>,
+    pub ccps: Vec<Arc<Ccp>>,
+    pub admin_kit: StartupKit,
+}
+
+impl Federation {
+    pub fn shutdown(&self) {
+        for ccp in &self.ccps {
+            ccp.shutdown();
+        }
+        self.scp.shutdown();
+    }
+}
+
+impl Drop for Federation {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flare::job::{JobCtx, JobSpec};
+    use crate::flare::scp::topics;
+    use crate::proto::Envelope;
+    use crate::util::json::Json;
+
+    /// Test app: server asks each client to double a number; clients
+    /// serve until stopped.
+    struct DoubleApp;
+
+    impl AppFactory for DoubleApp {
+        fn supports(&self, app: &str) -> bool {
+            app == "double"
+        }
+
+        fn run_client(&self, ctx: JobCtx) -> anyhow::Result<()> {
+            ctx.messenger.set_handler(Arc::new(|env: &Envelope| {
+                let x = env.payload[0];
+                Ok(vec![x * 2])
+            }));
+            while !ctx.aborted() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Ok(())
+        }
+
+        fn run_server(&self, ctx: JobCtx) -> anyhow::Result<()> {
+            let rounds = ctx.config.get("rounds").as_u64().unwrap_or(1);
+            for round in 0..rounds {
+                for site in &ctx.participants {
+                    let cell = crate::proto::address::job_cell(site, &ctx.job_id);
+                    let rep = ctx.messenger.request(
+                        &cell,
+                        "double",
+                        vec![round as u8 + 1],
+                        RetryPolicy::fast(),
+                    )?;
+                    anyhow::ensure!(rep.payload == vec![(round as u8 + 1) * 2]);
+                    ctx.tracker
+                        .add_scalar("doubled", rep.payload[0] as f64, round);
+                }
+            }
+            Ok(())
+        }
+    }
+
+    /// App whose server fails immediately.
+    struct FailApp;
+
+    impl AppFactory for FailApp {
+        fn supports(&self, _: &str) -> bool {
+            true
+        }
+        fn run_client(&self, _: JobCtx) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn run_server(&self, _: JobCtx) -> anyhow::Result<()> {
+            anyhow::bail!("server app exploded")
+        }
+    }
+
+    /// App that runs forever until aborted.
+    struct SpinApp;
+
+    impl AppFactory for SpinApp {
+        fn supports(&self, _: &str) -> bool {
+            true
+        }
+        fn run_client(&self, ctx: JobCtx) -> anyhow::Result<()> {
+            while !ctx.aborted() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Ok(())
+        }
+        fn run_server(&self, ctx: JobCtx) -> anyhow::Result<()> {
+            while !ctx.aborted() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Ok(())
+        }
+    }
+
+    fn fast_cfgs(b: FederationBuilder) -> FederationBuilder {
+        b.retry_policy(RetryPolicy::fast())
+    }
+
+    #[test]
+    fn end_to_end_job_lifecycle() {
+        use crate::flare::job::JobStatus;
+        let fed = fast_cfgs(FederationBuilder::new("t").sites(2))
+            .build(Arc::new(DoubleApp))
+            .unwrap();
+        let spec = JobSpec::new("job-1", "double")
+            .with_config(Json::obj(vec![("rounds", Json::num(3))]));
+        fed.scp.submit(spec).unwrap();
+        let status = fed.scp.wait("job-1", Duration::from_secs(20)).unwrap();
+        assert_eq!(status, JobStatus::Finished, "err={:?}", fed.scp.job_error("job-1"));
+        // Server-side tracker streamed metrics through the fabric.
+        let pts = fed.scp.metrics.series("job-1", "server", "doubled");
+        assert_eq!(pts.len(), 3 * 2); // rounds x sites, same step per site pair
+        fed.shutdown();
+    }
+
+    #[test]
+    fn job_survives_lossy_links() {
+        use crate::flare::job::JobStatus;
+        let fed = fast_cfgs(
+            FederationBuilder::new("t")
+                .sites(2)
+                .faults(0.3, Duration::ZERO, 99),
+        )
+        .build(Arc::new(DoubleApp))
+        .unwrap();
+        let spec = JobSpec::new("lossy", "double")
+            .with_config(Json::obj(vec![("rounds", Json::num(2))]));
+        fed.scp.submit(spec).unwrap();
+        let status = fed.scp.wait("lossy", Duration::from_secs(30)).unwrap();
+        assert_eq!(status, JobStatus::Finished, "err={:?}", fed.scp.job_error("lossy"));
+        fed.shutdown();
+    }
+
+    #[test]
+    fn failed_server_app_fails_job() {
+        use crate::flare::job::JobStatus;
+        let fed = fast_cfgs(FederationBuilder::new("t").sites(1))
+            .build(Arc::new(FailApp))
+            .unwrap();
+        fed.scp.submit(JobSpec::new("bad", "x")).unwrap();
+        let status = fed.scp.wait("bad", Duration::from_secs(20)).unwrap();
+        assert_eq!(status, JobStatus::Failed);
+        assert!(fed.scp.job_error("bad").unwrap().contains("exploded"));
+        fed.shutdown();
+    }
+
+    #[test]
+    fn abort_running_job() {
+        use crate::flare::job::JobStatus;
+        let fed = fast_cfgs(FederationBuilder::new("t").sites(1))
+            .build(Arc::new(SpinApp))
+            .unwrap();
+        fed.scp.submit(JobSpec::new("spin", "x")).unwrap();
+        // wait until running
+        let t0 = std::time::Instant::now();
+        while fed.scp.status("spin") != Some(JobStatus::Running) {
+            assert!(t0.elapsed() < Duration::from_secs(10));
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        fed.scp.abort("spin").unwrap();
+        let status = fed.scp.wait("spin", Duration::from_secs(10)).unwrap();
+        assert_eq!(status, JobStatus::Aborted);
+        fed.shutdown();
+    }
+
+    #[test]
+    fn concurrent_jobs_on_shared_sites() {
+        use crate::flare::job::JobStatus;
+        let fed = fast_cfgs(FederationBuilder::new("t").sites(2))
+            .build(Arc::new(DoubleApp))
+            .unwrap();
+        for i in 0..3 {
+            let spec = JobSpec::new(&format!("j{i}"), "double")
+                .with_config(Json::obj(vec![("rounds", Json::num(2))]));
+            fed.scp.submit(spec).unwrap();
+        }
+        for i in 0..3 {
+            let status = fed
+                .scp
+                .wait(&format!("j{i}"), Duration::from_secs(30))
+                .unwrap();
+            assert_eq!(status, JobStatus::Finished);
+        }
+        fed.shutdown();
+    }
+
+    #[test]
+    fn duplicate_job_id_rejected() {
+        let fed = fast_cfgs(FederationBuilder::new("t").sites(1))
+            .build(Arc::new(SpinApp))
+            .unwrap();
+        fed.scp.submit(JobSpec::new("dup", "x")).unwrap();
+        assert!(fed.scp.submit(JobSpec::new("dup", "x")).is_err());
+        fed.scp.abort("dup").unwrap();
+        fed.shutdown();
+    }
+
+    #[test]
+    fn remote_admin_submit_requires_auth() {
+        let fed = fast_cfgs(FederationBuilder::new("t").sites(1))
+            .build(Arc::new(DoubleApp))
+            .unwrap();
+        // A rogue messenger on a site's fabric submitting without admin
+        // credentials must be denied by the SCP's authorizer.
+        let msgr = crate::flare::reliable::Messenger::spawn(
+            fed.ccps[0].fabric.clone() as Arc<dyn crate::flare::fabric::Fabric>,
+            "site-1:rogue",
+        )
+        .unwrap();
+        let res = msgr.request(
+            address::SERVER,
+            topics::SUBMIT,
+            JobSpec::new("sneak", "double").encode(),
+            RetryPolicy::fast(),
+        );
+        assert!(res.is_err(), "unauthenticated submit must fail");
+
+        // A *site* kit is authenticated but not authorized to submit.
+        let site_headers = vec![
+            ("principal".to_string(), "site-1".to_string()),
+            ("role".to_string(), "site".to_string()),
+            (
+                "token".to_string(),
+                Provisioner::new("t", b"flarelink-project-secret")
+                    .provision("site-1", Role::Site, "")
+                    .token,
+            ),
+        ];
+        let res = msgr.request_with_headers(
+            address::SERVER,
+            topics::SUBMIT,
+            JobSpec::new("sneak2", "double").encode(),
+            site_headers,
+            RetryPolicy::fast(),
+        );
+        assert!(res.is_err(), "site role must not submit jobs");
+        fed.shutdown();
+    }
+
+    #[test]
+    fn remote_admin_submit_with_kit_works() {
+        use crate::flare::job::JobStatus;
+        let fed = fast_cfgs(FederationBuilder::new("t").sites(1))
+            .build(Arc::new(DoubleApp))
+            .unwrap();
+        // An admin console attached to a site's fabric submits remotely
+        // with its startup-kit credentials.
+        let msgr = crate::flare::reliable::Messenger::spawn(
+            fed.ccps[0].fabric.clone() as Arc<dyn crate::flare::fabric::Fabric>,
+            "site-1:admin-console",
+        )
+        .unwrap();
+        let spec = JobSpec::new("remote", "double")
+            .with_config(Json::obj(vec![("rounds", Json::num(1))]));
+        let headers = vec![
+            ("principal".to_string(), fed.admin_kit.name.clone()),
+            ("role".to_string(), "admin".to_string()),
+            ("token".to_string(), fed.admin_kit.token.clone()),
+        ];
+        let rep = msgr
+            .request_with_headers(
+                address::SERVER,
+                topics::SUBMIT,
+                spec.encode(),
+                headers.clone(),
+                RetryPolicy::fast(),
+            )
+            .unwrap();
+        assert_eq!(rep.payload, b"remote");
+        let status = fed.scp.wait("remote", Duration::from_secs(20)).unwrap();
+        assert_eq!(status, JobStatus::Finished);
+
+        // Remote list with the same credentials.
+        let rep = msgr
+            .request_with_headers(
+                address::SERVER,
+                topics::LIST,
+                Vec::new(),
+                headers,
+                RetryPolicy::fast(),
+            )
+            .unwrap();
+        let listed = Json::parse(std::str::from_utf8(&rep.payload).unwrap()).unwrap();
+        assert_eq!(listed.as_arr().unwrap().len(), 1);
+        fed.shutdown();
+    }
+}

@@ -1,0 +1,311 @@
+//! Experiment tracking / metric streaming (paper §4 "metric streaming for
+//! experiment tracking" and §5.2/Fig. 6): clients call a `SummaryWriter`
+//! analogue inside app code; scalars stream to the SCP as fire-and-forget
+//! events; the server-side [`MetricStore`] collects per-(job, site, tag)
+//! series and exports TSV/JSON (the TensorBoard substitute).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::flare::reliable::Messenger;
+use crate::proto::address;
+use crate::util::bytes::{Reader, Writer};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricEvent {
+    pub job_id: String,
+    pub site: String,
+    pub tag: String,
+    pub step: u64,
+    pub value: f64,
+    /// Wall-clock at emission (telemetry only).
+    pub wall_ms: u64,
+}
+
+impl MetricEvent {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.str(&self.job_id);
+        w.str(&self.site);
+        w.str(&self.tag);
+        w.u64(self.step);
+        w.f64(self.value);
+        w.u64(self.wall_ms);
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<MetricEvent> {
+        let mut r = Reader::new(buf);
+        Ok(MetricEvent {
+            job_id: r.str()?.to_string(),
+            site: r.str()?.to_string(),
+            tag: r.str()?.to_string(),
+            step: r.u64()?,
+            value: r.f64()?,
+            wall_ms: r.u64()?,
+        })
+    }
+}
+
+pub const METRICS_TOPIC: &str = "metrics";
+
+/// Client-side writer, FLARE's `from nvflare.client.tracking import
+/// SummaryWriter` analogue (paper Listing 3). Cloneable; cheap.
+#[derive(Clone)]
+pub struct SummaryWriter {
+    messenger: Option<Arc<Messenger>>,
+    job_id: String,
+    site: String,
+}
+
+impl SummaryWriter {
+    pub fn new(messenger: Arc<Messenger>, job_id: &str, site: &str) -> Self {
+        Self {
+            messenger: Some(messenger),
+            job_id: job_id.to_string(),
+            site: site.to_string(),
+        }
+    }
+
+    /// A writer that discards everything (apps that don't track).
+    pub fn disabled() -> Self {
+        Self {
+            messenger: None,
+            job_id: String::new(),
+            site: String::new(),
+        }
+    }
+
+    /// Stream one scalar to the FLARE server (fire-and-forget, like the
+    /// paper's `writer.add_scalar("train_loss", v, step)`).
+    pub fn add_scalar(&self, tag: &str, value: f64, step: u64) {
+        if let Some(m) = &self.messenger {
+            let ev = MetricEvent {
+                job_id: self.job_id.clone(),
+                site: self.site.clone(),
+                tag: tag.to_string(),
+                step,
+                value,
+                wall_ms: crate::util::unix_millis(),
+            };
+            m.fire_event(address::SERVER, METRICS_TOPIC, ev.encode());
+        }
+    }
+}
+
+type SeriesKey = (String, String, String); // (job, site, tag)
+
+/// Server-side collector.
+#[derive(Default)]
+pub struct MetricStore {
+    series: Mutex<BTreeMap<SeriesKey, Vec<(u64, f64, u64)>>>,
+}
+
+impl MetricStore {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn record(&self, ev: MetricEvent) {
+        self.series
+            .lock()
+            .unwrap()
+            .entry((ev.job_id, ev.site, ev.tag))
+            .or_default()
+            .push((ev.step, ev.value, ev.wall_ms));
+    }
+
+    /// (step, value) points of one series, sorted by step.
+    pub fn series(&self, job: &str, site: &str, tag: &str) -> Vec<(u64, f64)> {
+        let key = (job.to_string(), site.to_string(), tag.to_string());
+        let mut pts: Vec<(u64, f64)> = self
+            .series
+            .lock()
+            .unwrap()
+            .get(&key)
+            .map(|v| v.iter().map(|(s, val, _)| (*s, *val)).collect())
+            .unwrap_or_default();
+        pts.sort_by_key(|(s, _)| *s);
+        pts
+    }
+
+    /// All (site, tag) pairs seen for a job.
+    pub fn keys(&self, job: &str) -> Vec<(String, String)> {
+        self.series
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|(j, _, _)| j == job)
+            .map(|(_, s, t)| (s.clone(), t.clone()))
+            .collect()
+    }
+
+    /// TSV export: job \t site \t tag \t step \t value \t wall_ms.
+    pub fn export_tsv(&self, job: &str) -> String {
+        let mut out = String::from("job\tsite\ttag\tstep\tvalue\twall_ms\n");
+        for ((j, s, t), pts) in self.series.lock().unwrap().iter() {
+            if j != job {
+                continue;
+            }
+            for (step, value, wall) in pts {
+                out.push_str(&format!("{j}\t{s}\t{t}\t{step}\t{value}\t{wall}\n"));
+            }
+        }
+        out
+    }
+
+    /// JSON export (per-series arrays), for downstream plotting.
+    pub fn export_json(&self, job: &str) -> Json {
+        let mut obj = BTreeMap::new();
+        for ((j, s, t), pts) in self.series.lock().unwrap().iter() {
+            if j != job {
+                continue;
+            }
+            let arr = pts
+                .iter()
+                .map(|(step, v, _)| {
+                    Json::Arr(vec![Json::num(*step as f64), Json::num(*v)])
+                })
+                .collect();
+            obj.insert(format!("{s}/{t}"), Json::Arr(arr));
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// ASCII sparkline/curve rendering for examples & EXPERIMENTS.md (the
+/// TensorBoard-screenshot substitute for Fig. 6).
+pub fn render_ascii(title: &str, series: &[(u64, f64)], width: usize, height: usize) -> String {
+    if series.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(_, v) in series {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    let n = series.len();
+    for (i, &(_, v)) in series.iter().enumerate() {
+        let x = if n == 1 { 0 } else { i * (width - 1) / (n - 1) };
+        let y = ((v - lo) / (hi - lo) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - y.min(height - 1);
+        grid[row][x] = b'*';
+    }
+    let mut out = format!("{title}  [min {lo:.4}, max {hi:.4}]\n");
+    for row in grid {
+        out.push_str("  |");
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("  +{}\n", "-".repeat(width)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_roundtrip() {
+        let ev = MetricEvent {
+            job_id: "j1".into(),
+            site: "site-1".into(),
+            tag: "train_loss".into(),
+            step: 17,
+            value: 0.125,
+            wall_ms: 99,
+        };
+        assert_eq!(MetricEvent::decode(&ev.encode()).unwrap(), ev);
+    }
+
+    #[test]
+    fn store_collects_and_sorts() {
+        let store = MetricStore::new();
+        for (step, v) in [(2u64, 0.2), (0, 0.4), (1, 0.3)] {
+            store.record(MetricEvent {
+                job_id: "j".into(),
+                site: "s1".into(),
+                tag: "loss".into(),
+                step,
+                value: v,
+                wall_ms: 0,
+            });
+        }
+        let pts = store.series("j", "s1", "loss");
+        assert_eq!(pts, vec![(0, 0.4), (1, 0.3), (2, 0.2)]);
+    }
+
+    #[test]
+    fn store_separates_sites_and_jobs() {
+        let store = MetricStore::new();
+        for site in ["s1", "s2"] {
+            store.record(MetricEvent {
+                job_id: "j".into(),
+                site: site.into(),
+                tag: "acc".into(),
+                step: 0,
+                value: 1.0,
+                wall_ms: 0,
+            });
+        }
+        store.record(MetricEvent {
+            job_id: "other".into(),
+            site: "s1".into(),
+            tag: "acc".into(),
+            step: 0,
+            value: 9.0,
+            wall_ms: 0,
+        });
+        assert_eq!(store.keys("j").len(), 2);
+        assert_eq!(store.series("j", "s1", "acc"), vec![(0, 1.0)]);
+        assert!(store.series("j", "s3", "acc").is_empty());
+    }
+
+    #[test]
+    fn tsv_export_shape() {
+        let store = MetricStore::new();
+        store.record(MetricEvent {
+            job_id: "j".into(),
+            site: "s1".into(),
+            tag: "loss".into(),
+            step: 3,
+            value: 0.5,
+            wall_ms: 1,
+        });
+        let tsv = store.export_tsv("j");
+        let lines: Vec<&str> = tsv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].starts_with("j\ts1\tloss\t3\t0.5"));
+    }
+
+    #[test]
+    fn json_export_keys() {
+        let store = MetricStore::new();
+        store.record(MetricEvent {
+            job_id: "j".into(),
+            site: "s1".into(),
+            tag: "acc".into(),
+            step: 0,
+            value: 0.1,
+            wall_ms: 0,
+        });
+        let j = store.export_json("j");
+        assert!(!j.get("s1/acc").is_null());
+    }
+
+    #[test]
+    fn ascii_render_contains_points() {
+        let series: Vec<(u64, f64)> = (0..10).map(|i| (i, i as f64)).collect();
+        let art = render_ascii("t", &series, 20, 5);
+        assert!(art.contains('*'));
+        assert!(art.lines().count() >= 6);
+        // Handles empty + constant series without panicking.
+        assert!(render_ascii("e", &[], 10, 3).contains("no data"));
+        let _ = render_ascii("c", &[(0, 1.0), (1, 1.0)], 10, 3);
+    }
+}

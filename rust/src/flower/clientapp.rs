@@ -1,0 +1,71 @@
+//! Flower ClientApp: user code run by a SuperNode (paper Listing 2's
+//! `NumPyClient` analogue). Implementations receive the global flat
+//! parameter vector plus a config record and return updated parameters /
+//! evaluation results.
+
+use crate::flower::message::{ConfigRecord, MetricRecord};
+
+/// Result of a local `fit` (train) call.
+#[derive(Clone, Debug)]
+pub struct FitOutput {
+    pub parameters: Vec<f32>,
+    pub num_examples: u64,
+    pub metrics: MetricRecord,
+}
+
+/// Result of a local `evaluate` call.
+#[derive(Clone, Debug)]
+pub struct EvalOutput {
+    pub loss: f64,
+    pub num_examples: u64,
+    pub metrics: MetricRecord,
+}
+
+/// The NumPyClient-style interface (paper Listing 2: `fit`/`evaluate`).
+pub trait ClientApp: Send + Sync {
+    fn fit(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<FitOutput>;
+    fn evaluate(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<EvalOutput>;
+}
+
+/// Deterministic toy client used across tests: `fit` adds `delta` to
+/// every parameter and reports `n` examples; `evaluate` returns the mean
+/// of the parameters as "loss".
+pub struct ArithmeticClient {
+    pub delta: f32,
+    pub n: u64,
+}
+
+impl ClientApp for ArithmeticClient {
+    fn fit(&self, parameters: &[f32], _config: &ConfigRecord) -> anyhow::Result<FitOutput> {
+        Ok(FitOutput {
+            parameters: parameters.iter().map(|p| p + self.delta).collect(),
+            num_examples: self.n,
+            metrics: vec![("train_loss".into(), self.delta as f64)],
+        })
+    }
+
+    fn evaluate(&self, parameters: &[f32], _config: &ConfigRecord) -> anyhow::Result<EvalOutput> {
+        let mean =
+            parameters.iter().map(|p| *p as f64).sum::<f64>() / parameters.len().max(1) as f64;
+        Ok(EvalOutput {
+            loss: mean,
+            num_examples: self.n,
+            metrics: vec![("accuracy".into(), 1.0 - mean.abs().min(1.0))],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_client_behaviour() {
+        let c = ArithmeticClient { delta: 0.5, n: 8 };
+        let fit = c.fit(&[1.0, 2.0], &vec![]).unwrap();
+        assert_eq!(fit.parameters, vec![1.5, 2.5]);
+        assert_eq!(fit.num_examples, 8);
+        let ev = c.evaluate(&[1.0, 3.0], &vec![]).unwrap();
+        assert!((ev.loss - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,218 @@
+//! Client-side differential privacy (the paper's §1 names "rich built-in
+//! differential privacy" as a Flower capability FLARE users gain): the
+//! classic DP-FedAvg client recipe — clip the model delta's L2 norm to
+//! `clip`, add Gaussian noise `N(0, (noise_multiplier * clip)^2)` per
+//! coordinate — packaged as a [`ClientMod`] so any app becomes
+//! differentially private without modification.
+//!
+//! Noise is seeded from (dp_seed, node_id, round) — deterministic per
+//! task, so the Fig. 5 transport-independence property still holds for
+//! DP runs (the same noise is drawn on both paths).
+
+use crate::flower::clientapp::FitOutput;
+use crate::flower::message::{config_get_f64, config_get_i64, ConfigRecord};
+use crate::flower::mods::{ClientMod, FitNext};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct DpConfig {
+    /// L2 clipping bound for the per-round client delta.
+    pub clip: f64,
+    /// Noise stddev as a multiple of the clip bound (sigma = z * clip).
+    pub noise_multiplier: f64,
+    /// Base seed for the per-(node, round) noise stream.
+    pub seed: u64,
+    /// Target delta for the epsilon report.
+    pub delta: f64,
+}
+
+impl Default for DpConfig {
+    fn default() -> Self {
+        Self {
+            clip: 1.0,
+            noise_multiplier: 1.0,
+            seed: 0xD9,
+            delta: 1e-5,
+        }
+    }
+}
+
+impl DpConfig {
+    /// Per-round epsilon of the Gaussian mechanism (classic bound,
+    /// valid for z >= ~0.5; rounds compose additively here — a moments
+    /// accountant would be tighter).
+    pub fn epsilon_per_round(&self) -> f64 {
+        (2.0 * (1.25 / self.delta).ln()).sqrt() / self.noise_multiplier
+    }
+}
+
+pub struct DpMod {
+    pub cfg: DpConfig,
+}
+
+impl DpMod {
+    pub fn new(cfg: DpConfig) -> Self {
+        Self { cfg }
+    }
+}
+
+impl ClientMod for DpMod {
+    fn name(&self) -> &'static str {
+        "dp"
+    }
+
+    fn on_fit(
+        &self,
+        parameters: &[f32],
+        config: &ConfigRecord,
+        next: FitNext,
+    ) -> anyhow::Result<FitOutput> {
+        let mut out = next(parameters, config)?;
+        anyhow::ensure!(
+            out.parameters.len() == parameters.len(),
+            "dp: inner app changed parameter length"
+        );
+        let round = config_get_f64(config, "round").unwrap_or(0.0) as u64;
+        let node = config_get_i64(config, "node_id").unwrap_or(0) as u64;
+
+        // Delta, clip.
+        let mut delta: Vec<f64> = out
+            .parameters
+            .iter()
+            .zip(parameters.iter())
+            .map(|(a, b)| *a as f64 - *b as f64)
+            .collect();
+        let l2: f64 = delta.iter().map(|d| d * d).sum::<f64>().sqrt();
+        let scale = if l2 > self.cfg.clip {
+            self.cfg.clip / l2
+        } else {
+            1.0
+        };
+        if scale < 1.0 {
+            for d in delta.iter_mut() {
+                *d *= scale;
+            }
+            crate::telemetry::bump("dp.clipped", 1);
+        }
+
+        // Noise (deterministic per node+round).
+        let mut rng = Rng::new(self.cfg.seed)
+            .split(node)
+            .split(round.wrapping_add(1));
+        let sigma = self.cfg.noise_multiplier * self.cfg.clip;
+        for (p, (d, base)) in out
+            .parameters
+            .iter_mut()
+            .zip(delta.iter().zip(parameters.iter()))
+        {
+            *p = (*base as f64 + d + sigma * rng.normal()) as f32;
+        }
+
+        out.metrics
+            .push(("dp_epsilon_round".into(), self.cfg.epsilon_per_round()));
+        out.metrics.push(("dp_clip_scale".into(), scale));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::clientapp::{ArithmeticClient, ClientApp};
+    use crate::flower::message::ConfigValue;
+    use crate::flower::mods::ModStack;
+    use std::sync::Arc;
+
+    fn cfg_round(round: i64, node: i64) -> ConfigRecord {
+        vec![
+            ("round".into(), ConfigValue::I64(round)),
+            ("node_id".into(), ConfigValue::I64(node)),
+        ]
+    }
+
+    fn dp_app(clip: f64, z: f64) -> ModStack {
+        ModStack::new(
+            Arc::new(ArithmeticClient { delta: 1.0, n: 4 }),
+            vec![Arc::new(DpMod::new(DpConfig {
+                clip,
+                noise_multiplier: z,
+                ..Default::default()
+            }))],
+        )
+    }
+
+    #[test]
+    fn zero_noise_large_clip_is_transparent() {
+        let app = dp_app(1e9, 0.0);
+        let out = app.fit(&[1.0, 2.0], &cfg_round(1, 1)).unwrap();
+        // sigma = 0, no clip: exact inner result.
+        assert_eq!(out.parameters, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn clipping_bounds_delta_norm() {
+        // Inner delta = (1,1,1,1), l2 = 2; clip to 1.0 -> delta 0.5 each.
+        let app = dp_app(1.0, 0.0);
+        let out = app.fit(&[0.0; 4], &cfg_round(1, 1)).unwrap();
+        let l2: f64 = out
+            .parameters
+            .iter()
+            .map(|p| (*p as f64) * (*p as f64))
+            .sum::<f64>()
+            .sqrt();
+        assert!((l2 - 1.0).abs() < 1e-6, "clipped l2 = {l2}");
+        let scale = out
+            .metrics
+            .iter()
+            .find(|(k, _)| k == "dp_clip_scale")
+            .unwrap()
+            .1;
+        assert!((scale - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_is_deterministic_per_node_round() {
+        let app = dp_app(1.0, 1.0);
+        let a = app.fit(&[0.0; 8], &cfg_round(3, 2)).unwrap();
+        let b = app.fit(&[0.0; 8], &cfg_round(3, 2)).unwrap();
+        assert_eq!(a.parameters, b.parameters);
+        let c = app.fit(&[0.0; 8], &cfg_round(4, 2)).unwrap();
+        assert_ne!(a.parameters, c.parameters, "round must vary noise");
+        let d = app.fit(&[0.0; 8], &cfg_round(3, 3)).unwrap();
+        assert_ne!(a.parameters, d.parameters, "node must vary noise");
+    }
+
+    #[test]
+    fn noise_scale_matches_sigma() {
+        let app = dp_app(1.0, 2.0); // sigma = 2
+        let n = 4000;
+        let out = app.fit(&vec![0.0; n], &cfg_round(1, 1)).unwrap();
+        // delta per coord = 1/sqrt(n)*... inner delta (1,...) clipped to
+        // l2=1 -> per-coord 1/sqrt(n) ~ 0.016, negligible vs noise.
+        let mean: f64 = out.parameters.iter().map(|p| *p as f64).sum::<f64>() / n as f64;
+        let var: f64 = out
+            .parameters
+            .iter()
+            .map(|p| (*p as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!((var.sqrt() - 2.0).abs() < 0.15, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn epsilon_reporting() {
+        let cfg = DpConfig {
+            noise_multiplier: 1.0,
+            delta: 1e-5,
+            ..Default::default()
+        };
+        let eps = cfg.epsilon_per_round();
+        assert!((eps - (2.0f64 * (1.25e5f64).ln()).sqrt()).abs() < 1e-9);
+        // Stronger noise, smaller epsilon.
+        let strong = DpConfig {
+            noise_multiplier: 4.0,
+            ..cfg
+        };
+        assert!(strong.epsilon_per_round() < eps);
+    }
+}

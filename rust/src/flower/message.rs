@@ -1,0 +1,386 @@
+//! Flower wire protocol: the frames exchanged between a SuperNode and
+//! the SuperLink (paper §3.2). Mirrors Flower's TaskIns/TaskRes model:
+//! clients *pull* task instructions and *push* task results.
+//!
+//! These bytes are what the FLARE bridge forwards opaquely (§4.2) — the
+//! Fig. 5 bit-exactness claim rests on this codec being used identically
+//! on the native and bridged paths.
+
+use crate::util::bytes::{Reader, WireError, Writer};
+
+/// Values carried in a task's config record (Flower's `Config` dict).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigValue {
+    F64(f64),
+    I64(i64),
+    Str(String),
+    Bool(bool),
+}
+
+pub type ConfigRecord = Vec<(String, ConfigValue)>;
+
+pub fn config_get_f64(c: &ConfigRecord, key: &str) -> Option<f64> {
+    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+        ConfigValue::F64(x) => Some(*x),
+        ConfigValue::I64(x) => Some(*x as f64),
+        _ => None,
+    })
+}
+
+pub fn config_get_i64(c: &ConfigRecord, key: &str) -> Option<i64> {
+    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+        ConfigValue::I64(x) => Some(*x),
+        _ => None,
+    })
+}
+
+pub fn config_get_str<'a>(c: &'a ConfigRecord, key: &str) -> Option<&'a str> {
+    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+        ConfigValue::Str(s) => Some(s.as_str()),
+        _ => None,
+    })
+}
+
+fn write_config(w: &mut Writer, c: &ConfigRecord) {
+    w.u32(c.len() as u32);
+    for (k, v) in c {
+        w.str(k);
+        match v {
+            ConfigValue::F64(x) => {
+                w.u8(0);
+                w.f64(*x);
+            }
+            ConfigValue::I64(x) => {
+                w.u8(1);
+                w.u64(*x as u64);
+            }
+            ConfigValue::Str(s) => {
+                w.u8(2);
+                w.str(s);
+            }
+            ConfigValue::Bool(b) => {
+                w.u8(3);
+                w.u8(*b as u8);
+            }
+        }
+    }
+}
+
+fn read_config(r: &mut Reader) -> Result<ConfigRecord, WireError> {
+    let n = r.u32()? as usize;
+    if n > 4096 {
+        return Err(WireError::TooLong { len: n, limit: 4096 });
+    }
+    let mut c = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = r.str()?.to_string();
+        let v = match r.u8()? {
+            0 => ConfigValue::F64(r.f64()?),
+            1 => ConfigValue::I64(r.u64()? as i64),
+            2 => ConfigValue::Str(r.str()?.to_string()),
+            3 => ConfigValue::Bool(r.u8()? != 0),
+            t => return Err(WireError::BadTag(t)),
+        };
+        c.push((k, v));
+    }
+    Ok(c)
+}
+
+/// Metric records are (name, f64) pairs (Flower's `Metrics`).
+pub type MetricRecord = Vec<(String, f64)>;
+
+fn write_metrics(w: &mut Writer, m: &MetricRecord) {
+    w.u32(m.len() as u32);
+    for (k, v) in m {
+        w.str(k);
+        w.f64(*v);
+    }
+}
+
+fn read_metrics(r: &mut Reader) -> Result<MetricRecord, WireError> {
+    let n = r.u32()? as usize;
+    if n > 4096 {
+        return Err(WireError::TooLong { len: n, limit: 4096 });
+    }
+    let mut m = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = r.str()?.to_string();
+        m.push((k, r.f64()?));
+    }
+    Ok(m)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TaskType {
+    Fit = 0,
+    Evaluate = 1,
+}
+
+/// Server -> client task instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskIns {
+    pub task_id: u64,
+    pub run_id: u64,
+    /// Round number (Flower's group_id).
+    pub round: u64,
+    pub task_type: TaskType,
+    /// Global model parameters (flat f32).
+    pub parameters: Vec<f32>,
+    pub config: ConfigRecord,
+}
+
+/// Client -> server task result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskRes {
+    pub task_id: u64,
+    pub run_id: u64,
+    pub node_id: u64,
+    /// Empty string = success; else the client-side error.
+    pub error: String,
+    /// Updated parameters (fit) or empty (evaluate).
+    pub parameters: Vec<f32>,
+    pub num_examples: u64,
+    /// loss for evaluate tasks; 0 for fit unless reported in metrics.
+    pub loss: f64,
+    pub metrics: MetricRecord,
+}
+
+/// All SuperNode<->SuperLink frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FlowerMsg {
+    // client -> server
+    /// Register a node. `requested` pins a stable node id (partition
+    /// index) so the client<->node binding is deterministic across runs
+    /// and transports (the Fig. 5 requirement); 0 = server-assigned.
+    CreateNode { requested: u64 },
+    /// Pull pending instructions for this node.
+    PullTaskIns { node_id: u64 },
+    PushTaskRes { res: TaskRes },
+    DeleteNode { node_id: u64 },
+    // server -> client
+    NodeCreated { node_id: u64 },
+    /// Zero or more instructions + whether any run is still active.
+    TaskInsList { tasks: Vec<TaskIns>, active: bool },
+    PushAccepted,
+    NodeDeleted,
+    /// Server-side error string.
+    Error { message: String },
+}
+
+impl FlowerMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            FlowerMsg::CreateNode { requested } => {
+                w.u8(0);
+                w.u64(*requested);
+            }
+            FlowerMsg::PullTaskIns { node_id } => {
+                w.u8(1);
+                w.u64(*node_id);
+            }
+            FlowerMsg::PushTaskRes { res } => {
+                w.u8(2);
+                w.u64(res.task_id);
+                w.u64(res.run_id);
+                w.u64(res.node_id);
+                w.str(&res.error);
+                w.f32s(&res.parameters);
+                w.u64(res.num_examples);
+                w.f64(res.loss);
+                write_metrics(&mut w, &res.metrics);
+            }
+            FlowerMsg::DeleteNode { node_id } => {
+                w.u8(3);
+                w.u64(*node_id);
+            }
+            FlowerMsg::NodeCreated { node_id } => {
+                w.u8(16);
+                w.u64(*node_id);
+            }
+            FlowerMsg::TaskInsList { tasks, active } => {
+                w.u8(17);
+                w.u8(*active as u8);
+                w.u32(tasks.len() as u32);
+                for t in tasks {
+                    w.u64(t.task_id);
+                    w.u64(t.run_id);
+                    w.u64(t.round);
+                    w.u8(t.task_type as u8);
+                    w.f32s(&t.parameters);
+                    write_config(&mut w, &t.config);
+                }
+            }
+            FlowerMsg::PushAccepted => w.u8(18),
+            FlowerMsg::NodeDeleted => w.u8(19),
+            FlowerMsg::Error { message } => {
+                w.u8(20);
+                w.str(message);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<FlowerMsg, WireError> {
+        let mut r = Reader::new(buf);
+        let tag = r.u8()?;
+        let msg = match tag {
+            0 => FlowerMsg::CreateNode { requested: r.u64()? },
+            1 => FlowerMsg::PullTaskIns { node_id: r.u64()? },
+            2 => FlowerMsg::PushTaskRes {
+                res: TaskRes {
+                    task_id: r.u64()?,
+                    run_id: r.u64()?,
+                    node_id: r.u64()?,
+                    error: r.str()?.to_string(),
+                    parameters: r.f32s()?,
+                    num_examples: r.u64()?,
+                    loss: r.f64()?,
+                    metrics: read_metrics(&mut r)?,
+                },
+            },
+            3 => FlowerMsg::DeleteNode { node_id: r.u64()? },
+            16 => FlowerMsg::NodeCreated { node_id: r.u64()? },
+            17 => {
+                let active = r.u8()? != 0;
+                let n = r.u32()? as usize;
+                if n > 65536 {
+                    return Err(WireError::TooLong { len: n, limit: 65536 });
+                }
+                let mut tasks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let task_id = r.u64()?;
+                    let run_id = r.u64()?;
+                    let round = r.u64()?;
+                    let task_type = match r.u8()? {
+                        0 => TaskType::Fit,
+                        1 => TaskType::Evaluate,
+                        t => return Err(WireError::BadTag(t)),
+                    };
+                    let parameters = r.f32s()?;
+                    let config = read_config(&mut r)?;
+                    tasks.push(TaskIns {
+                        task_id,
+                        run_id,
+                        round,
+                        task_type,
+                        parameters,
+                        config,
+                    });
+                }
+                FlowerMsg::TaskInsList { tasks, active }
+            }
+            18 => FlowerMsg::PushAccepted,
+            19 => FlowerMsg::NodeDeleted,
+            20 => FlowerMsg::Error {
+                message: r.str()?.to_string(),
+            },
+            t => return Err(WireError::BadTag(t)),
+        };
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_ins() -> TaskIns {
+        TaskIns {
+            task_id: 9,
+            run_id: 1,
+            round: 3,
+            task_type: TaskType::Fit,
+            parameters: vec![1.5, -2.0, 0.0],
+            config: vec![
+                ("lr".into(), ConfigValue::F64(0.05)),
+                ("epochs".into(), ConfigValue::I64(2)),
+                ("mode".into(), ConfigValue::Str("iid".into())),
+                ("prox".into(), ConfigValue::Bool(true)),
+            ],
+        }
+    }
+
+    fn sample_res() -> TaskRes {
+        TaskRes {
+            task_id: 9,
+            run_id: 1,
+            node_id: 4,
+            error: String::new(),
+            parameters: vec![0.25; 10],
+            num_examples: 128,
+            loss: 0.75,
+            metrics: vec![("accuracy".into(), 0.9)],
+        }
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        let msgs = vec![
+            FlowerMsg::CreateNode { requested: 0 },
+            FlowerMsg::CreateNode { requested: 3 },
+            FlowerMsg::PullTaskIns { node_id: 7 },
+            FlowerMsg::PushTaskRes { res: sample_res() },
+            FlowerMsg::DeleteNode { node_id: 7 },
+            FlowerMsg::NodeCreated { node_id: 7 },
+            FlowerMsg::TaskInsList {
+                tasks: vec![sample_ins()],
+                active: true,
+            },
+            FlowerMsg::TaskInsList {
+                tasks: vec![],
+                active: false,
+            },
+            FlowerMsg::PushAccepted,
+            FlowerMsg::NodeDeleted,
+            FlowerMsg::Error {
+                message: "no".into(),
+            },
+        ];
+        for m in msgs {
+            let buf = m.encode();
+            assert_eq!(FlowerMsg::decode(&buf).unwrap(), m, "roundtrip {m:?}");
+        }
+    }
+
+    #[test]
+    fn parameters_bitexact() {
+        let mut ins = sample_ins();
+        ins.parameters = vec![f32::NAN, -0.0, 1e-40, f32::MAX];
+        let m = FlowerMsg::TaskInsList {
+            tasks: vec![ins.clone()],
+            active: true,
+        };
+        match FlowerMsg::decode(&m.encode()).unwrap() {
+            FlowerMsg::TaskInsList { tasks, .. } => {
+                for (a, b) in ins.parameters.iter().zip(tasks[0].parameters.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        assert!(FlowerMsg::decode(&[99]).is_err());
+        assert!(FlowerMsg::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn config_accessors() {
+        let c = sample_ins().config;
+        assert_eq!(config_get_f64(&c, "lr"), Some(0.05));
+        assert_eq!(config_get_f64(&c, "epochs"), Some(2.0));
+        assert_eq!(config_get_i64(&c, "epochs"), Some(2));
+        assert_eq!(config_get_str(&c, "mode"), Some("iid"));
+        assert_eq!(config_get_f64(&c, "missing"), None);
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let buf = FlowerMsg::PushTaskRes { res: sample_res() }.encode();
+        assert!(FlowerMsg::decode(&buf[..buf.len() - 3]).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! Flower-analogue FL framework (paper §3.2): SuperLink/SuperNode
+//! long-running processes, ServerApp strategies, ClientApps, and the
+//! wire protocol whose frames the FLARE bridge forwards unmodified.
+
+pub mod clientapp;
+pub mod dp;
+pub mod message;
+pub mod mods;
+pub mod secagg;
+pub mod run;
+pub mod serverapp;
+pub mod strategy;
+pub mod superlink;
+pub mod supernode;
+
+pub use clientapp::{ClientApp, EvalOutput, FitOutput};
+pub use dp::{DpConfig, DpMod};
+pub use mods::{ClientMod, ModStack};
+pub use secagg::{SecAggFedAvg, SecAggMod};
+pub use message::{ConfigRecord, ConfigValue, FlowerMsg, MetricRecord, TaskIns, TaskRes, TaskType};
+pub use run::run_native;
+pub use serverapp::{History, RoundRecord, ServerApp, ServerConfig};
+pub use superlink::SuperLink;
+pub use supernode::{FlowerConnector, NativeConnector, SuperNode, SuperNodeConfig};

@@ -1,0 +1,177 @@
+//! Flower *Mods*: composable ClientApp middleware (the paper's footnote 2
+//! — "All new features (like Flower Mods) will be built on top of
+//! [Flower Next]"). A [`ClientMod`] wraps fit/evaluate calls; a
+//! [`ModStack`] chains mods around any inner [`ClientApp`] without the
+//! app changing — which is how the differential-privacy and secure-
+//! aggregation features the paper advertises ("rich built-in differential
+//! privacy and secure aggregation support") attach to unmodified apps.
+
+use std::sync::Arc;
+
+use crate::flower::clientapp::{ClientApp, EvalOutput, FitOutput};
+use crate::flower::message::ConfigRecord;
+
+/// The inner continuation a mod calls to proceed down the chain.
+pub type FitNext<'a> = &'a dyn Fn(&[f32], &ConfigRecord) -> anyhow::Result<FitOutput>;
+pub type EvalNext<'a> = &'a dyn Fn(&[f32], &ConfigRecord) -> anyhow::Result<EvalOutput>;
+
+pub trait ClientMod: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn on_fit(
+        &self,
+        parameters: &[f32],
+        config: &ConfigRecord,
+        next: FitNext,
+    ) -> anyhow::Result<FitOutput> {
+        next(parameters, config)
+    }
+
+    fn on_evaluate(
+        &self,
+        parameters: &[f32],
+        config: &ConfigRecord,
+        next: EvalNext,
+    ) -> anyhow::Result<EvalOutput> {
+        next(parameters, config)
+    }
+}
+
+/// An app wrapped in an ordered mod chain (first mod is outermost).
+pub struct ModStack {
+    app: Arc<dyn ClientApp>,
+    mods: Vec<Arc<dyn ClientMod>>,
+}
+
+impl ModStack {
+    pub fn new(app: Arc<dyn ClientApp>, mods: Vec<Arc<dyn ClientMod>>) -> Self {
+        Self { app, mods }
+    }
+
+    fn run_fit(
+        &self,
+        idx: usize,
+        parameters: &[f32],
+        config: &ConfigRecord,
+    ) -> anyhow::Result<FitOutput> {
+        if idx == self.mods.len() {
+            return self.app.fit(parameters, config);
+        }
+        let next = |p: &[f32], c: &ConfigRecord| self.run_fit(idx + 1, p, c);
+        self.mods[idx].on_fit(parameters, config, &next)
+    }
+
+    fn run_eval(
+        &self,
+        idx: usize,
+        parameters: &[f32],
+        config: &ConfigRecord,
+    ) -> anyhow::Result<EvalOutput> {
+        if idx == self.mods.len() {
+            return self.app.evaluate(parameters, config);
+        }
+        let next = |p: &[f32], c: &ConfigRecord| self.run_eval(idx + 1, p, c);
+        self.mods[idx].on_evaluate(parameters, config, &next)
+    }
+}
+
+impl ClientApp for ModStack {
+    fn fit(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<FitOutput> {
+        self.run_fit(0, parameters, config)
+    }
+
+    fn evaluate(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<EvalOutput> {
+        self.run_eval(0, parameters, config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::clientapp::ArithmeticClient;
+
+    /// Mod that scales returned parameters by a factor.
+    struct ScaleMod(f32);
+
+    impl ClientMod for ScaleMod {
+        fn name(&self) -> &'static str {
+            "scale"
+        }
+        fn on_fit(
+            &self,
+            p: &[f32],
+            c: &ConfigRecord,
+            next: FitNext,
+        ) -> anyhow::Result<FitOutput> {
+            let mut out = next(p, c)?;
+            for x in &mut out.parameters {
+                *x *= self.0;
+            }
+            Ok(out)
+        }
+    }
+
+    /// Mod that counts calls.
+    struct TagMod;
+
+    impl ClientMod for TagMod {
+        fn name(&self) -> &'static str {
+            "tag"
+        }
+        fn on_fit(
+            &self,
+            p: &[f32],
+            c: &ConfigRecord,
+            next: FitNext,
+        ) -> anyhow::Result<FitOutput> {
+            let mut out = next(p, c)?;
+            out.metrics.push(("tagged".into(), 1.0));
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn empty_stack_is_transparent() {
+        let app = ModStack::new(Arc::new(ArithmeticClient { delta: 1.0, n: 2 }), vec![]);
+        let out = app.fit(&[1.0], &vec![]).unwrap();
+        assert_eq!(out.parameters, vec![2.0]);
+        let ev = app.evaluate(&[4.0], &vec![]).unwrap();
+        assert_eq!(ev.loss, 4.0);
+    }
+
+    #[test]
+    fn mods_apply_outermost_first() {
+        // scale(2) wraps tag: inner fit gives 2.0, tag adds metric,
+        // scale doubles -> 4.0.
+        let app = ModStack::new(
+            Arc::new(ArithmeticClient { delta: 1.0, n: 2 }),
+            vec![Arc::new(ScaleMod(2.0)), Arc::new(TagMod)],
+        );
+        let out = app.fit(&[1.0], &vec![]).unwrap();
+        assert_eq!(out.parameters, vec![4.0]);
+        assert!(out.metrics.iter().any(|(k, _)| k == "tagged"));
+    }
+
+    #[test]
+    fn mod_errors_propagate() {
+        struct FailMod;
+        impl ClientMod for FailMod {
+            fn name(&self) -> &'static str {
+                "fail"
+            }
+            fn on_fit(
+                &self,
+                _: &[f32],
+                _: &ConfigRecord,
+                _: FitNext,
+            ) -> anyhow::Result<FitOutput> {
+                anyhow::bail!("mod refused")
+            }
+        }
+        let app = ModStack::new(
+            Arc::new(ArithmeticClient { delta: 1.0, n: 2 }),
+            vec![Arc::new(FailMod)],
+        );
+        assert!(app.fit(&[1.0], &vec![]).is_err());
+    }
+}

@@ -1,0 +1,407 @@
+//! Flower ServerApp (paper Listing 1): drives FL rounds against the
+//! SuperLink using a [`Strategy`]. Produces a [`History`] — the loss /
+//! accuracy curves compared in Fig. 5 — and optionally streams round
+//! metrics through FLARE experiment tracking (§5.2 hybrid mode).
+//!
+//! Determinism: client sampling uses a seeded PRNG keyed by (seed,
+//! round); task results are sorted by node id before aggregation; every
+//! float reduction has a fixed order. Two runs with the same seed —
+//! regardless of transport (native or bridged) — produce bit-identical
+//! histories, which is exactly the paper's reproducibility experiment.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::flare::tracking::SummaryWriter;
+use crate::flower::message::{
+    ConfigValue, MetricRecord, TaskIns, TaskType,
+};
+use crate::flower::strategy::{EvalRes, FitRes, Strategy};
+use crate::flower::superlink::SuperLink;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub num_rounds: u64,
+    /// Fraction of connected nodes sampled for fit each round (1.0 = all).
+    pub fraction_fit: f64,
+    /// Fraction sampled for evaluate (0.0 disables federated evaluation).
+    pub fraction_evaluate: f64,
+    /// Wait for at least this many nodes before round 1.
+    pub min_nodes: usize,
+    pub round_timeout: Duration,
+    /// Sampling seed — the "same random seeds" of the paper's Fig. 5.
+    pub seed: u64,
+    /// Fail the round if any sampled client errors (kept strict for
+    /// reproducibility; Flower tolerates stragglers by default).
+    pub accept_failures: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            num_rounds: 3,
+            fraction_fit: 1.0,
+            fraction_evaluate: 1.0,
+            min_nodes: 2,
+            round_timeout: Duration::from_secs(600),
+            seed: 17,
+            accept_failures: false,
+        }
+    }
+}
+
+/// One round's record in the history.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// Example-weighted mean of client-reported fit metrics.
+    pub fit_metrics: MetricRecord,
+    /// Example-weighted federated evaluation loss (None if disabled).
+    pub eval_loss: Option<f64>,
+    pub eval_metrics: MetricRecord,
+    /// Per-client evaluation (node_id, loss, metrics) — Fig. 6 series.
+    pub per_client_eval: Vec<(u64, f64, MetricRecord)>,
+}
+
+/// The training curves of Fig. 5; `PartialEq` gives the bit-exact
+/// overlay check.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct History {
+    pub rounds: Vec<RoundRecord>,
+    /// Final global parameters.
+    pub parameters: Vec<f32>,
+}
+
+impl History {
+    /// CSV of the aggregated curves (round, fit metrics..., eval loss/metrics).
+    pub fn to_csv(&self) -> String {
+        let mut keys: Vec<String> = Vec::new();
+        for r in &self.rounds {
+            for (k, _) in r.fit_metrics.iter() {
+                if !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+            for (k, _) in r.eval_metrics.iter() {
+                let k = format!("eval_{k}");
+                if !keys.contains(&k) {
+                    keys.push(k);
+                }
+            }
+        }
+        let mut out = String::from("round,eval_loss");
+        for k in &keys {
+            out.push(',');
+            out.push_str(k);
+        }
+        out.push('\n');
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{}",
+                r.round,
+                r.eval_loss.map(|l| l.to_string()).unwrap_or_default()
+            ));
+            for k in &keys {
+                out.push(',');
+                let v = if let Some(stripped) = k.strip_prefix("eval_") {
+                    r.eval_metrics
+                        .iter()
+                        .find(|(mk, _)| mk == stripped)
+                        .map(|(_, v)| *v)
+                } else {
+                    r.fit_metrics.iter().find(|(mk, _)| mk == k).map(|(_, v)| *v)
+                };
+                if let Some(v) = v {
+                    out.push_str(&v.to_string());
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Bitwise equality of the final parameters (stronger than PartialEq
+    /// for NaN handling).
+    pub fn params_bits_equal(&self, other: &History) -> bool {
+        self.parameters.len() == other.parameters.len()
+            && self
+                .parameters
+                .iter()
+                .zip(other.parameters.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+/// The ServerApp: strategy + config + initial parameters (paper
+/// Listing 1: `ServerApp(config=ServerConfig(num_rounds=3), strategy=...)`).
+pub struct ServerApp {
+    pub strategy: Box<dyn Strategy>,
+    pub config: ServerConfig,
+    pub initial_parameters: Vec<f32>,
+}
+
+impl ServerApp {
+    pub fn new(
+        strategy: Box<dyn Strategy>,
+        config: ServerConfig,
+        initial_parameters: Vec<f32>,
+    ) -> Self {
+        Self {
+            strategy,
+            config,
+            initial_parameters,
+        }
+    }
+
+    /// Deterministic sample of `k` nodes for a round.
+    fn sample(&self, nodes: &[u64], fraction: f64, round: u64) -> Vec<u64> {
+        let k = ((nodes.len() as f64 * fraction).ceil() as usize)
+            .clamp(1, nodes.len());
+        let mut rng = Rng::new(self.config.seed).split(round);
+        let mut idx = rng.sample_indices(nodes.len(), k);
+        idx.sort_unstable(); // canonical order
+        idx.into_iter().map(|i| nodes[i]).collect()
+    }
+
+    /// Run all rounds against the SuperLink. `tracker` streams round
+    /// metrics via FLARE experiment tracking when present (§5.2).
+    pub fn run(
+        &mut self,
+        link: &Arc<SuperLink>,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+    ) -> anyhow::Result<History> {
+        let cfg = self.config.clone();
+        link.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
+        let mut params = self.initial_parameters.clone();
+        let mut history = History::default();
+
+        for round in 1..=cfg.num_rounds {
+            let nodes = link.nodes();
+            anyhow::ensure!(
+                nodes.len() >= cfg.min_nodes,
+                "round {round}: only {} nodes connected",
+                nodes.len()
+            );
+
+            // ---- fit phase ----
+            let fit_nodes = self.sample(&nodes, cfg.fraction_fit, round);
+            let mut fit_cfg = self.strategy.configure_fit(round);
+            fit_cfg.push(("round".to_string(), ConfigValue::I64(round as i64)));
+            // Cohort + per-target node id: lets client-side mods (e.g.
+            // secure aggregation) coordinate pairwise state.
+            let cohort = fit_nodes
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            fit_cfg.push(("cohort".to_string(), ConfigValue::Str(cohort)));
+            let task_ids: Vec<u64> = fit_nodes
+                .iter()
+                .map(|&node| {
+                    let mut config = fit_cfg.clone();
+                    config.push(("node_id".to_string(), ConfigValue::I64(node as i64)));
+                    link.push_task(
+                        node,
+                        TaskIns {
+                            task_id: 0,
+                            run_id,
+                            round,
+                            task_type: TaskType::Fit,
+                            parameters: params.clone(),
+                            config,
+                        },
+                    )
+                })
+                .collect();
+            let mut results = link.await_results(&task_ids, cfg.round_timeout)?;
+            results.sort_by_key(|r| r.node_id);
+            let mut fit_results = Vec::with_capacity(results.len());
+            for r in results {
+                if !r.error.is_empty() {
+                    if cfg.accept_failures {
+                        log::warn!("round {round}: node {} failed: {}", r.node_id, r.error);
+                        continue;
+                    }
+                    anyhow::bail!("round {round}: node {} failed: {}", r.node_id, r.error);
+                }
+                fit_results.push(FitRes {
+                    node_id: r.node_id,
+                    parameters: r.parameters,
+                    num_examples: r.num_examples,
+                    metrics: r.metrics,
+                });
+            }
+            anyhow::ensure!(
+                !fit_results.is_empty(),
+                "round {round}: no successful fit results"
+            );
+            params = self.strategy.aggregate_fit(round, &params, &fit_results)?;
+
+            // Weighted fit metrics.
+            let fit_metrics = super::strategy::weighted_eval(
+                &fit_results
+                    .iter()
+                    .map(|f| EvalRes {
+                        node_id: f.node_id,
+                        loss: 0.0,
+                        num_examples: f.num_examples,
+                        metrics: f.metrics.clone(),
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .1;
+
+            // ---- evaluate phase ----
+            let (eval_loss, eval_metrics, per_client_eval) = if cfg.fraction_evaluate > 0.0 {
+                let eval_nodes = self.sample(&nodes, cfg.fraction_evaluate, round + (1 << 32));
+                let eval_cfg = self.strategy.configure_evaluate(round);
+                let task_ids: Vec<u64> = eval_nodes
+                    .iter()
+                    .map(|&node| {
+                        link.push_task(
+                            node,
+                            TaskIns {
+                                task_id: 0,
+                                run_id,
+                                round,
+                                task_type: TaskType::Evaluate,
+                                parameters: params.clone(),
+                                config: eval_cfg.clone(),
+                            },
+                        )
+                    })
+                    .collect();
+                let mut results = link.await_results(&task_ids, cfg.round_timeout)?;
+                results.sort_by_key(|r| r.node_id);
+                let mut eval_results = Vec::new();
+                let mut per_client = Vec::new();
+                for r in results {
+                    if !r.error.is_empty() {
+                        if cfg.accept_failures {
+                            continue;
+                        }
+                        anyhow::bail!(
+                            "round {round}: eval on node {} failed: {}",
+                            r.node_id,
+                            r.error
+                        );
+                    }
+                    per_client.push((r.node_id, r.loss, r.metrics.clone()));
+                    eval_results.push(EvalRes {
+                        node_id: r.node_id,
+                        loss: r.loss,
+                        num_examples: r.num_examples,
+                        metrics: r.metrics,
+                    });
+                }
+                let (loss, metrics) = self.strategy.aggregate_evaluate(round, &eval_results);
+                (Some(loss), metrics, per_client)
+            } else {
+                (None, Vec::new(), Vec::new())
+            };
+
+            // ---- tracking (hybrid mode, §5.2) ----
+            if let Some(t) = tracker {
+                for (k, v) in &fit_metrics {
+                    t.add_scalar(k, *v, round);
+                }
+                if let Some(l) = eval_loss {
+                    t.add_scalar("eval_loss", l, round);
+                }
+                for (k, v) in &eval_metrics {
+                    t.add_scalar(&format!("eval_{k}"), *v, round);
+                }
+            }
+
+            log::info!(
+                "round {round}: strategy={} eval_loss={eval_loss:?}",
+                self.strategy.name()
+            );
+            history.rounds.push(RoundRecord {
+                round,
+                fit_metrics,
+                eval_loss,
+                eval_metrics,
+                per_client_eval,
+            });
+        }
+        history.parameters = params;
+        Ok(history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::strategy::{Aggregator, FedAvg};
+
+    fn mk_app(rounds: u64, seed: u64) -> ServerApp {
+        ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            ServerConfig {
+                num_rounds: rounds,
+                min_nodes: 2,
+                seed,
+                ..Default::default()
+            },
+            vec![0.0; 4],
+        )
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_sorted() {
+        let app = mk_app(1, 7);
+        let nodes: Vec<u64> = (1..=10).collect();
+        let a = app.sample(&nodes, 0.5, 3);
+        let b = app.sample(&nodes, 0.5, 3);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(a.len(), 5);
+        let c = app.sample(&nodes, 0.5, 4);
+        assert_ne!(a, c, "different rounds sample differently");
+    }
+
+    #[test]
+    fn sampling_fraction_bounds() {
+        let app = mk_app(1, 7);
+        let nodes: Vec<u64> = (1..=4).collect();
+        assert_eq!(app.sample(&nodes, 1.0, 1).len(), 4);
+        assert_eq!(app.sample(&nodes, 0.01, 1).len(), 1);
+    }
+
+    #[test]
+    fn history_csv_shape() {
+        let h = History {
+            rounds: vec![RoundRecord {
+                round: 1,
+                fit_metrics: vec![("train_loss".into(), 0.5)],
+                eval_loss: Some(0.4),
+                eval_metrics: vec![("accuracy".into(), 0.8)],
+                per_client_eval: vec![],
+            }],
+            parameters: vec![1.0],
+        };
+        let csv = h.to_csv();
+        assert!(csv.starts_with("round,eval_loss,train_loss,eval_accuracy\n"));
+        assert!(csv.contains("1,0.4,0.5,0.8"));
+    }
+
+    #[test]
+    fn params_bits_equal_handles_nan() {
+        let a = History {
+            rounds: vec![],
+            parameters: vec![f32::NAN],
+        };
+        let b = History {
+            rounds: vec![],
+            parameters: vec![f32::NAN],
+        };
+        assert!(a.params_bits_equal(&b));
+        assert!(!a.params_bits_equal(&History {
+            rounds: vec![],
+            parameters: vec![0.0],
+        }));
+    }
+}

@@ -1,0 +1,118 @@
+//! FedAvg (McMahan et al., 2017) and FedAvgM (server momentum).
+
+use super::{Aggregator, FitRes, Strategy};
+
+/// Plain federated averaging: example-weighted mean of client updates.
+pub struct FedAvg {
+    agg: Aggregator,
+}
+
+impl FedAvg {
+    pub fn new(agg: Aggregator) -> Self {
+        Self { agg }
+    }
+}
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        _current: &[f32],
+        results: &[FitRes],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.agg.weighted_mean(results)
+    }
+}
+
+/// FedAvg with server momentum (Hsu et al., 2019): the server applies a
+/// momentum-accelerated pseudo-gradient instead of jumping to the mean.
+pub struct FedAvgM {
+    agg: Aggregator,
+    momentum: f64,
+    server_lr: f64,
+    velocity: Vec<f64>,
+}
+
+impl FedAvgM {
+    pub fn new(agg: Aggregator, momentum: f64, server_lr: f64) -> Self {
+        Self {
+            agg,
+            momentum,
+            server_lr,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Strategy for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        current: &[f32],
+        results: &[FitRes],
+    ) -> anyhow::Result<Vec<f32>> {
+        let mean = self.agg.weighted_mean(results)?;
+        if self.velocity.len() != current.len() {
+            self.velocity = vec![0.0; current.len()];
+        }
+        let mut out = Vec::with_capacity(current.len());
+        for i in 0..current.len() {
+            // Pseudo-gradient: current - mean (descent direction).
+            let g = current[i] as f64 - mean[i] as f64;
+            self.velocity[i] = self.momentum * self.velocity[i] + g;
+            out.push((current[i] as f64 - self.server_lr * self.velocity[i]) as f32);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fit;
+    use super::*;
+
+    #[test]
+    fn fedavg_is_weighted_mean() {
+        let mut s = FedAvg::new(Aggregator::host());
+        let out = s
+            .aggregate_fit(
+                1,
+                &[0.0, 0.0],
+                &[fit(1, vec![0.0, 2.0], 1), fit(2, vec![4.0, 6.0], 3)],
+            )
+            .unwrap();
+        assert_eq!(out, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn fedavgm_zero_momentum_unit_lr_equals_fedavg() {
+        let mut m = FedAvgM::new(Aggregator::host(), 0.0, 1.0);
+        let results = [fit(1, vec![1.0], 1), fit(2, vec![3.0], 1)];
+        let out = m.aggregate_fit(1, &[0.0], &results).unwrap();
+        assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedavgm_momentum_accumulates() {
+        let mut m = FedAvgM::new(Aggregator::host(), 0.9, 1.0);
+        // Clients keep reporting the same point; velocity should build
+        // toward it and overshoot without damping.
+        let mut x = vec![0.0f32];
+        for round in 1..=3 {
+            let results = [fit(1, vec![1.0], 1)];
+            x = m.aggregate_fit(round, &x, &results).unwrap();
+        }
+        // Round 1: g=-1, v=-1,    x=1.
+        // Round 2: g=0,  v=-0.9,  x=1.9.
+        // Round 3: g=0.9, v=0.09, x=1.81 (overshoot, then pull back).
+        assert!((x[0] - 1.81).abs() < 1e-4, "{x:?}");
+    }
+}

@@ -1,0 +1,205 @@
+//! The FedOpt family (Reddi et al., 2021): FedAdam, FedAdagrad, FedYogi.
+//! The server treats `mean(client updates) - current` as a pseudo-
+//! gradient and applies an adaptive optimizer step. Paper Listing 1
+//! builds its ServerApp with `FedAdam(...)`.
+
+use super::{Aggregator, FitRes, Strategy};
+
+#[derive(Clone, Copy, Debug)]
+pub struct FedOptConfig {
+    pub server_lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    /// Adaptivity floor (Reddi et al.'s tau).
+    pub tau: f64,
+}
+
+impl Default for FedOptConfig {
+    fn default() -> Self {
+        // Reddi et al. use eta=1e-1..1e-2 and tau=1e-3 on their tasks;
+        // with our small models and few clients a tau that low makes the
+        // early update ~sign-SGD with step=server_lr on every coordinate,
+        // which diverges the quickstart CNN. tau=1e-2 keeps the update
+        // proportional to the pseudo-gradient at small magnitudes.
+        Self {
+            server_lr: 0.05,
+            beta1: 0.9,
+            beta2: 0.99,
+            tau: 1e-2,
+        }
+    }
+}
+
+enum Variant {
+    Adam,
+    Adagrad,
+    Yogi,
+}
+
+struct FedOpt {
+    agg: Aggregator,
+    cfg: FedOptConfig,
+    variant: Variant,
+    m: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl FedOpt {
+    fn step(&mut self, current: &[f32], results: &[FitRes]) -> anyhow::Result<Vec<f32>> {
+        let mean = self.agg.weighted_mean(results)?;
+        let n = current.len();
+        if self.m.len() != n {
+            self.m = vec![0.0; n];
+            self.v = vec![self.cfg.tau * self.cfg.tau; n];
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            // Ascent pseudo-gradient toward the client mean.
+            let d = mean[i] as f64 - current[i] as f64;
+            self.m[i] = self.cfg.beta1 * self.m[i] + (1.0 - self.cfg.beta1) * d;
+            let d2 = d * d;
+            self.v[i] = match self.variant {
+                Variant::Adam => self.cfg.beta2 * self.v[i] + (1.0 - self.cfg.beta2) * d2,
+                Variant::Adagrad => self.v[i] + d2,
+                Variant::Yogi => {
+                    self.v[i]
+                        - (1.0 - self.cfg.beta2) * d2 * (self.v[i] - d2).signum()
+                }
+            };
+            let step = self.cfg.server_lr * self.m[i] / (self.v[i].sqrt() + self.cfg.tau);
+            out.push((current[i] as f64 + step) as f32);
+        }
+        Ok(out)
+    }
+}
+
+macro_rules! fedopt_strategy {
+    ($name:ident, $variant:expr, $label:literal) => {
+        pub struct $name(FedOpt);
+
+        impl $name {
+            pub fn new(agg: Aggregator, cfg: FedOptConfig) -> Self {
+                Self(FedOpt {
+                    agg,
+                    cfg,
+                    variant: $variant,
+                    m: Vec::new(),
+                    v: Vec::new(),
+                })
+            }
+        }
+
+        impl Strategy for $name {
+            fn name(&self) -> &'static str {
+                $label
+            }
+
+            fn aggregate_fit(
+                &mut self,
+                _round: u64,
+                current: &[f32],
+                results: &[FitRes],
+            ) -> anyhow::Result<Vec<f32>> {
+                self.0.step(current, results)
+            }
+        }
+    };
+}
+
+fedopt_strategy!(FedAdam, Variant::Adam, "fedadam");
+fedopt_strategy!(FedAdagrad, Variant::Adagrad, "fedadagrad");
+fedopt_strategy!(FedYogi, Variant::Yogi, "fedyogi");
+
+#[cfg(test)]
+mod tests {
+    use super::super::fit;
+    use super::*;
+
+    fn step_once<S: Strategy>(s: &mut S, x: &[f32], target: f32) -> Vec<f32> {
+        s.aggregate_fit(1, x, &[fit(1, vec![target; x.len()], 1)])
+            .unwrap()
+    }
+
+    #[test]
+    fn fedadam_moves_toward_client_mean() {
+        let mut s = FedAdam::new(Aggregator::host(), FedOptConfig::default());
+        let x0 = vec![0.0f32, 0.0];
+        let x1 = step_once(&mut s, &x0, 1.0);
+        assert!(x1.iter().all(|&x| x > 0.0 && x <= 1.0), "{x1:?}");
+    }
+
+    #[test]
+    fn fedadam_converges_on_fixed_target() {
+        let mut s = FedAdam::new(
+            Aggregator::host(),
+            FedOptConfig {
+                server_lr: 0.3,
+                ..Default::default()
+            },
+        );
+        let mut x = vec![0.0f32];
+        for round in 1..=60 {
+            x = s.aggregate_fit(round, &x, &[fit(1, vec![2.0], 4)]).unwrap();
+        }
+        assert!((x[0] - 2.0).abs() < 0.2, "{x:?}");
+    }
+
+    #[test]
+    fn fedadagrad_steps_shrink() {
+        // beta1=0 isolates the accumulating-denominator behaviour from
+        // first-moment warmup.
+        let mut s = FedAdagrad::new(
+            Aggregator::host(),
+            FedOptConfig {
+                beta1: 0.0,
+                ..Default::default()
+            },
+        );
+        let mut x = vec![0.0f32];
+        let x1 = s.aggregate_fit(1, &x, &[fit(1, vec![1.0], 1)]).unwrap();
+        let step1 = x1[0] - x[0];
+        x = x1;
+        let x2 = s.aggregate_fit(2, &x, &[fit(1, vec![1.0], 1)]).unwrap();
+        let step2 = x2[0] - x[0];
+        assert!(step2.abs() < step1.abs(), "{step1} then {step2}");
+    }
+
+    #[test]
+    fn fedyogi_bounded_update() {
+        let mut s = FedYogi::new(Aggregator::host(), FedOptConfig::default());
+        let x = vec![0.0f32; 3];
+        let x1 = step_once(&mut s, &x, 10.0);
+        // Adaptive normalization keeps the first step ~server_lr-scale.
+        assert!(x1.iter().all(|&v| v.abs() < 1.0), "{x1:?}");
+    }
+
+    #[test]
+    fn all_variants_are_deterministic() {
+        for mk in 0..3 {
+            let make = |agg| -> Box<dyn Strategy> {
+                match mk {
+                    0 => Box::new(FedAdam::new(agg, FedOptConfig::default())),
+                    1 => Box::new(FedAdagrad::new(agg, FedOptConfig::default())),
+                    _ => Box::new(FedYogi::new(agg, FedOptConfig::default())),
+                }
+            };
+            let run = || {
+                let mut s = make(Aggregator::host());
+                let mut x = vec![0.5f32, -0.5];
+                for round in 1..=5 {
+                    x = s
+                        .aggregate_fit(
+                            round,
+                            &x,
+                            &[fit(1, vec![1.0, -1.0], 2), fit(2, vec![0.0, 0.0], 1)],
+                        )
+                        .unwrap();
+                }
+                x
+            };
+            let a: Vec<u32> = run().iter().map(|f| f.to_bits()).collect();
+            let b: Vec<u32> = run().iter().map(|f| f.to_bits()).collect();
+            assert_eq!(a, b);
+        }
+    }
+}

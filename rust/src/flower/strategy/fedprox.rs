@@ -1,0 +1,56 @@
+//! FedProx (Li et al., 2020): FedAvg aggregation + a proximal term μ on
+//! the client objective. The server's role is to push μ in the fit
+//! config; proximal correction happens client-side (see
+//! `train::trainer`, which composes the correction exactly around the
+//! AOT SGD step).
+
+use super::{Aggregator, FitRes, Strategy};
+use crate::flower::message::{ConfigRecord, ConfigValue};
+
+pub struct FedProx {
+    agg: Aggregator,
+    mu: f64,
+}
+
+impl FedProx {
+    pub fn new(agg: Aggregator, mu: f64) -> Self {
+        Self { agg, mu }
+    }
+}
+
+impl Strategy for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+
+    fn configure_fit(&mut self, _round: u64) -> ConfigRecord {
+        vec![("proximal_mu".to_string(), ConfigValue::F64(self.mu))]
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        _current: &[f32],
+        results: &[FitRes],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.agg.weighted_mean(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fit;
+    use super::*;
+    use crate::flower::message::config_get_f64;
+
+    #[test]
+    fn pushes_mu_and_averages() {
+        let mut s = FedProx::new(Aggregator::host(), 0.01);
+        let cfg = s.configure_fit(1);
+        assert_eq!(config_get_f64(&cfg, "proximal_mu"), Some(0.01));
+        let out = s
+            .aggregate_fit(1, &[0.0], &[fit(1, vec![2.0], 1), fit(2, vec![4.0], 1)])
+            .unwrap();
+        assert_eq!(out, vec![3.0]);
+    }
+}

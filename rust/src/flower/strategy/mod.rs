@@ -1,0 +1,238 @@
+//! Server-side FL strategies (Flower's `Strategy` API; paper Listing 1
+//! uses `FedAdam`). All aggregation is deterministic: results are
+//! canonicalized by node id before any floating-point reduction, which
+//! is what makes the Fig. 5 native-vs-bridged curves bit-identical.
+
+mod fedavg;
+mod fedopt;
+mod fedprox;
+mod robust;
+
+pub use fedavg::{FedAvg, FedAvgM};
+pub use fedopt::{FedAdagrad, FedAdam, FedOptConfig, FedYogi};
+pub use fedprox::FedProx;
+pub use robust::{FedMedian, Krum, TrimmedMean};
+
+use crate::flower::message::{ConfigRecord, MetricRecord};
+use crate::runtime::{ComputeHandle, TensorData};
+
+/// A fit result as seen by the strategy (already success-filtered and
+/// sorted by node id).
+#[derive(Clone, Debug)]
+pub struct FitRes {
+    pub node_id: u64,
+    pub parameters: Vec<f32>,
+    pub num_examples: u64,
+    pub metrics: MetricRecord,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalRes {
+    pub node_id: u64,
+    pub loss: f64,
+    pub num_examples: u64,
+    pub metrics: MetricRecord,
+}
+
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Extra config pushed to clients with each fit instruction.
+    fn configure_fit(&mut self, _round: u64) -> ConfigRecord {
+        Vec::new()
+    }
+
+    fn configure_evaluate(&mut self, _round: u64) -> ConfigRecord {
+        Vec::new()
+    }
+
+    /// Combine client updates into the next global parameter vector.
+    /// `current` is the global vector the round started from.
+    fn aggregate_fit(
+        &mut self,
+        round: u64,
+        current: &[f32],
+        results: &[FitRes],
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// Weighted-average loss/metrics (Flower's default behaviour).
+    fn aggregate_evaluate(&mut self, _round: u64, results: &[EvalRes]) -> (f64, MetricRecord) {
+        weighted_eval(results)
+    }
+}
+
+/// Weighted mean of losses + each metric key, weights = num_examples.
+pub fn weighted_eval(results: &[EvalRes]) -> (f64, MetricRecord) {
+    let total: f64 = results.iter().map(|r| r.num_examples as f64).sum();
+    if total == 0.0 {
+        return (0.0, Vec::new());
+    }
+    let loss = results
+        .iter()
+        .map(|r| r.loss * r.num_examples as f64)
+        .sum::<f64>()
+        / total;
+    let mut keys: Vec<&String> = results
+        .iter()
+        .flat_map(|r| r.metrics.iter().map(|(k, _)| k))
+        .collect();
+    keys.sort();
+    keys.dedup();
+    let metrics = keys
+        .into_iter()
+        .map(|k| {
+            let v = results
+                .iter()
+                .filter_map(|r| {
+                    r.metrics
+                        .iter()
+                        .find(|(mk, _)| mk == k)
+                        .map(|(_, mv)| mv * r.num_examples as f64)
+                })
+                .sum::<f64>()
+                / total;
+            (k.clone(), v)
+        })
+        .collect();
+    (loss, metrics)
+}
+
+/// Example-weighted parameter mean — the FedAvg reduction. Runs on the
+/// L1 Pallas `fedavg_<model>_k<K>` artifact via PJRT when one matches
+/// the (model, K, N) shape; otherwise falls back to the (identically
+/// associated) Rust loop. Both paths reduce client-major, so results are
+/// bit-comparable across runs of the same path.
+#[derive(Clone, Default)]
+pub struct Aggregator {
+    compute: Option<(ComputeHandle, String)>,
+}
+
+impl Aggregator {
+    /// Pure-Rust aggregator.
+    pub fn host() -> Self {
+        Self { compute: None }
+    }
+
+    /// PJRT-backed aggregator for `model` (falls back per-call when no
+    /// artifact matches the client count).
+    pub fn pjrt(handle: ComputeHandle, model: &str) -> Self {
+        Self {
+            compute: Some((handle, model.to_string())),
+        }
+    }
+
+    pub fn weighted_mean(&self, results: &[FitRes]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(!results.is_empty(), "no fit results to aggregate");
+        let n = results[0].parameters.len();
+        for r in results {
+            anyhow::ensure!(
+                r.parameters.len() == n,
+                "parameter length mismatch: {} vs {n}",
+                r.parameters.len()
+            );
+        }
+        if let Some((handle, model)) = &self.compute {
+            let artifact = format!("fedavg_{}_k{}", model, results.len());
+            if handle.has_artifact(&artifact) {
+                let meta = handle.manifest().artifact(&artifact).unwrap();
+                if meta.inputs[0].shape == vec![results.len(), n] {
+                    let mut stacked = Vec::with_capacity(results.len() * n);
+                    for r in results {
+                        stacked.extend_from_slice(&r.parameters);
+                    }
+                    let weights: Vec<f32> =
+                        results.iter().map(|r| r.num_examples as f32).collect();
+                    let out = handle.execute(
+                        &artifact,
+                        vec![
+                            TensorData::F32(stacked, vec![results.len(), n]),
+                            TensorData::F32(weights, vec![results.len()]),
+                        ],
+                    )?;
+                    crate::telemetry::bump("strategy.pjrt_aggregations", 1);
+                    return Ok(match out.into_iter().next() {
+                        Some(TensorData::F32(v, _)) => v,
+                        other => anyhow::bail!("unexpected fedavg output {other:?}"),
+                    });
+                }
+            }
+        }
+        crate::telemetry::bump("strategy.host_aggregations", 1);
+        Ok(host_weighted_mean(results))
+    }
+}
+
+/// Reference Rust reduction (shared by tests).
+pub fn host_weighted_mean(results: &[FitRes]) -> Vec<f32> {
+    let n = results[0].parameters.len();
+    let total: f64 = results.iter().map(|r| r.num_examples as f64).sum();
+    let mut out = vec![0f64; n];
+    for r in results {
+        let w = r.num_examples as f64 / total;
+        for (o, p) in out.iter_mut().zip(r.parameters.iter()) {
+            *o += w * *p as f64;
+        }
+    }
+    out.into_iter().map(|x| x as f32).collect()
+}
+
+#[cfg(test)]
+pub(crate) fn fit(node_id: u64, parameters: Vec<f32>, num_examples: u64) -> FitRes {
+    FitRes {
+        node_id,
+        parameters,
+        num_examples,
+        metrics: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_weighted_mean_math() {
+        let results = vec![fit(1, vec![0.0, 2.0], 1), fit(2, vec![4.0, 6.0], 3)];
+        let out = host_weighted_mean(&results);
+        assert_eq!(out, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn aggregator_host_fallback() {
+        let agg = Aggregator::host();
+        let out = agg
+            .weighted_mean(&[fit(1, vec![1.0], 1), fit(2, vec![3.0], 1)])
+            .unwrap();
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn aggregator_rejects_mismatched_lengths() {
+        let agg = Aggregator::host();
+        assert!(agg
+            .weighted_mean(&[fit(1, vec![1.0], 1), fit(2, vec![1.0, 2.0], 1)])
+            .is_err());
+        assert!(agg.weighted_mean(&[]).is_err());
+    }
+
+    #[test]
+    fn weighted_eval_math() {
+        let results = vec![
+            EvalRes {
+                node_id: 1,
+                loss: 1.0,
+                num_examples: 1,
+                metrics: vec![("accuracy".into(), 0.0)],
+            },
+            EvalRes {
+                node_id: 2,
+                loss: 2.0,
+                num_examples: 3,
+                metrics: vec![("accuracy".into(), 1.0)],
+            },
+        ];
+        let (loss, metrics) = weighted_eval(&results);
+        assert!((loss - 1.75).abs() < 1e-12);
+        assert!((metrics[0].1 - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,250 @@
+//! Byzantine-robust aggregation: coordinate-wise median and trimmed
+//! mean (Yin et al., 2018) — part of Flower's strategy zoo that FLARE
+//! users gain access to through the integration (paper §6 "direct
+//! utilization of FL algorithms ... from Flower").
+
+use super::{FitRes, Strategy};
+
+/// Coordinate-wise median (unweighted — robustness over efficiency).
+pub struct FedMedian;
+
+impl Strategy for FedMedian {
+    fn name(&self) -> &'static str {
+        "fedmedian"
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        _current: &[f32],
+        results: &[FitRes],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(!results.is_empty(), "no results");
+        let n = results[0].parameters.len();
+        let mut out = Vec::with_capacity(n);
+        let mut col = Vec::with_capacity(results.len());
+        for i in 0..n {
+            col.clear();
+            for r in results {
+                anyhow::ensure!(r.parameters.len() == n, "length mismatch");
+                col.push(r.parameters[i]);
+            }
+            col.sort_by(f32::total_cmp);
+            let k = col.len();
+            out.push(if k % 2 == 1 {
+                col[k / 2]
+            } else {
+                (col[k / 2 - 1] + col[k / 2]) / 2.0
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Coordinate-wise trimmed mean: drop the `trim` largest and smallest
+/// values per coordinate, average the rest.
+pub struct TrimmedMean {
+    pub trim: usize,
+}
+
+impl Strategy for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed_mean"
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        _current: &[f32],
+        results: &[FitRes],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            results.len() > 2 * self.trim,
+            "need more than {} clients to trim {} each side",
+            2 * self.trim,
+            self.trim
+        );
+        let n = results[0].parameters.len();
+        let mut out = Vec::with_capacity(n);
+        let mut col = Vec::with_capacity(results.len());
+        for i in 0..n {
+            col.clear();
+            for r in results {
+                anyhow::ensure!(r.parameters.len() == n, "length mismatch");
+                col.push(r.parameters[i]);
+            }
+            col.sort_by(f32::total_cmp);
+            let kept = &col[self.trim..col.len() - self.trim];
+            out.push(kept.iter().map(|x| *x as f64).sum::<f64>() as f32 / kept.len() as f32);
+        }
+        Ok(out)
+    }
+}
+
+/// Krum (Blanchard et al., 2017): pick the single client update whose
+/// summed squared distance to its n-f-2 nearest neighbours is smallest
+/// (tolerates up to `f` Byzantine clients).
+pub struct Krum {
+    /// Assumed maximum number of Byzantine clients.
+    pub f: usize,
+}
+
+impl Strategy for Krum {
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        _current: &[f32],
+        results: &[FitRes],
+    ) -> anyhow::Result<Vec<f32>> {
+        let n = results.len();
+        anyhow::ensure!(
+            n > 2 * self.f + 2,
+            "krum needs n > 2f+2 (n={n}, f={})",
+            self.f
+        );
+        let dim = results[0].parameters.len();
+        for r in results {
+            anyhow::ensure!(r.parameters.len() == dim, "length mismatch");
+        }
+        // Pairwise squared distances.
+        let mut d2 = vec![vec![0f64; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dist: f64 = results[i]
+                    .parameters
+                    .iter()
+                    .zip(results[j].parameters.iter())
+                    .map(|(a, b)| {
+                        let d = *a as f64 - *b as f64;
+                        d * d
+                    })
+                    .sum();
+                d2[i][j] = dist;
+                d2[j][i] = dist;
+            }
+        }
+        // Score = sum of the n-f-2 smallest distances to others.
+        let keep = n - self.f - 2;
+        let mut best = (f64::INFINITY, 0usize);
+        for i in 0..n {
+            let mut ds: Vec<f64> = (0..n).filter(|&j| j != i).map(|j| d2[i][j]).collect();
+            ds.sort_by(f64::total_cmp);
+            let score: f64 = ds.iter().take(keep).sum();
+            if score < best.0 {
+                best = (score, i);
+            }
+        }
+        Ok(results[best.1].parameters.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fit;
+    use super::*;
+
+    #[test]
+    fn median_ignores_outlier() {
+        let mut s = FedMedian;
+        let out = s
+            .aggregate_fit(
+                1,
+                &[0.0],
+                &[
+                    fit(1, vec![1.0], 1),
+                    fit(2, vec![2.0], 1),
+                    fit(3, vec![1000.0], 1), // byzantine
+                ],
+            )
+            .unwrap();
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn median_even_count_averages_middle() {
+        let mut s = FedMedian;
+        let out = s
+            .aggregate_fit(
+                1,
+                &[0.0],
+                &[
+                    fit(1, vec![1.0], 1),
+                    fit(2, vec![2.0], 1),
+                    fit(3, vec![3.0], 1),
+                    fit(4, vec![4.0], 1),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out, vec![2.5]);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let mut s = TrimmedMean { trim: 1 };
+        let out = s
+            .aggregate_fit(
+                1,
+                &[0.0],
+                &[
+                    fit(1, vec![-100.0], 1),
+                    fit(2, vec![1.0], 1),
+                    fit(3, vec![3.0], 1),
+                    fit(4, vec![100.0], 1),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn trimmed_mean_needs_enough_clients() {
+        let mut s = TrimmedMean { trim: 1 };
+        assert!(s
+            .aggregate_fit(1, &[0.0], &[fit(1, vec![1.0], 1), fit(2, vec![2.0], 1)])
+            .is_err());
+    }
+
+    #[test]
+    fn krum_picks_a_clustered_honest_update() {
+        let mut s = Krum { f: 1 };
+        // 4 honest updates near (1,1); 1 Byzantine at (100, -100).
+        let results = vec![
+            fit(1, vec![1.0, 1.0], 1),
+            fit(2, vec![1.1, 0.9], 1),
+            fit(3, vec![0.9, 1.1], 1),
+            fit(4, vec![1.05, 1.0], 1),
+            fit(5, vec![100.0, -100.0], 1),
+        ];
+        let out = s.aggregate_fit(1, &[0.0, 0.0], &results).unwrap();
+        assert!(out[0] < 2.0 && out[1] > 0.0, "picked byzantine: {out:?}");
+    }
+
+    #[test]
+    fn krum_requires_enough_clients() {
+        let mut s = Krum { f: 1 };
+        let results = vec![
+            fit(1, vec![1.0], 1),
+            fit(2, vec![1.0], 1),
+            fit(3, vec![1.0], 1),
+            fit(4, vec![1.0], 1),
+        ];
+        // n=4 is NOT > 2f+2=4.
+        assert!(s.aggregate_fit(1, &[0.0], &results).is_err());
+    }
+
+    #[test]
+    fn krum_output_is_one_of_the_inputs() {
+        let mut s = Krum { f: 0 };
+        let results = vec![
+            fit(1, vec![1.0, 2.0], 1),
+            fit(2, vec![3.0, 4.0], 1),
+            fit(3, vec![1.2, 2.2], 1),
+        ];
+        let out = s.aggregate_fit(1, &[0.0, 0.0], &results).unwrap();
+        assert!(results.iter().any(|r| r.parameters == out));
+    }
+}

@@ -1,0 +1,357 @@
+//! Flower SuperLink (paper §3.2 / Fig. 3): the long-running server-side
+//! process. Decouples the communication layer from ServerApps: it owns
+//! node registration, per-node task queues, and result collection; a
+//! [`crate::flower::serverapp::ServerApp`] drives rounds against this
+//! state (Flower's Driver API, in-process).
+//!
+//! Transport-facing surface is a single pure function
+//! [`SuperLink::handle_frame`]: bytes in, bytes out — which is exactly
+//! what the FLARE LGC feeds it in bridged mode (§4.2) and what the native
+//! serve loop feeds it from a raw endpoint.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::flower::message::{FlowerMsg, TaskIns, TaskRes};
+use crate::transport::Endpoint;
+
+#[derive(Default)]
+struct LinkState {
+    nodes: Mutex<Vec<u64>>,
+    /// node_id -> queued instructions.
+    pending: Mutex<HashMap<u64, VecDeque<TaskIns>>>,
+    /// task_id -> result.
+    results: Mutex<HashMap<u64, TaskRes>>,
+}
+
+pub struct SuperLink {
+    next_node: AtomicU64,
+    next_task: AtomicU64,
+    state: LinkState,
+    /// Any run still active? (SuperNodes exit when false.)
+    active: AtomicBool,
+    /// Signaled when new results arrive (ServerApp waits on this).
+    notify: (Mutex<u64>, Condvar),
+}
+
+impl SuperLink {
+    pub fn new() -> Arc<SuperLink> {
+        Arc::new(SuperLink {
+            next_node: AtomicU64::new(1),
+            next_task: AtomicU64::new(1),
+            state: LinkState::default(),
+            active: AtomicBool::new(true),
+            notify: (Mutex::new(0), Condvar::new()),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Transport surface
+    // ------------------------------------------------------------------
+
+    /// Handle one client frame, produce the reply frame. Deterministic
+    /// given state; used verbatim by both native and bridged paths.
+    pub fn handle_frame(&self, frame: &[u8]) -> Vec<u8> {
+        let msg = match FlowerMsg::decode(frame) {
+            Ok(m) => m,
+            Err(e) => {
+                return FlowerMsg::Error {
+                    message: format!("bad frame: {e}"),
+                }
+                .encode()
+            }
+        };
+        let reply = match msg {
+            FlowerMsg::CreateNode { requested } => {
+                let mut nodes = self.state.nodes.lock().unwrap();
+                let id = if requested != 0 && !nodes.contains(&requested) {
+                    // Keep the auto counter ahead of pinned ids.
+                    self.next_node.fetch_max(requested + 1, Ordering::Relaxed);
+                    requested
+                } else {
+                    loop {
+                        let id = self.next_node.fetch_add(1, Ordering::Relaxed);
+                        if !nodes.contains(&id) {
+                            break id;
+                        }
+                    }
+                };
+                nodes.push(id);
+                drop(nodes);
+                self.state.pending.lock().unwrap().insert(id, VecDeque::new());
+                log::info!("superlink: node {id} created");
+                FlowerMsg::NodeCreated { node_id: id }
+            }
+            FlowerMsg::PullTaskIns { node_id } => {
+                let mut pending = self.state.pending.lock().unwrap();
+                let tasks = match pending.get_mut(&node_id) {
+                    Some(q) => q.drain(..).collect(),
+                    None => Vec::new(),
+                };
+                FlowerMsg::TaskInsList {
+                    tasks,
+                    active: self.active.load(Ordering::Acquire),
+                }
+            }
+            FlowerMsg::PushTaskRes { res } => {
+                self.state.results.lock().unwrap().insert(res.task_id, res);
+                let (lock, cv) = &self.notify;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+                FlowerMsg::PushAccepted
+            }
+            FlowerMsg::DeleteNode { node_id } => {
+                self.state.nodes.lock().unwrap().retain(|n| *n != node_id);
+                self.state.pending.lock().unwrap().remove(&node_id);
+                FlowerMsg::NodeDeleted
+            }
+            other => FlowerMsg::Error {
+                message: format!("unexpected client frame: {other:?}"),
+            },
+        };
+        reply.encode()
+    }
+
+    /// Serve a connected endpoint until it closes (native deployments:
+    /// one thread per SuperNode connection).
+    pub fn serve_endpoint(self: &Arc<Self>, ep: Arc<dyn Endpoint>) {
+        let me = self.clone();
+        std::thread::Builder::new()
+            .name("superlink-conn".into())
+            .spawn(move || loop {
+                match ep.recv_timeout(Duration::from_millis(100)) {
+                    Ok(frame) => {
+                        let reply = me.handle_frame(&frame);
+                        if ep.send(reply).is_err() {
+                            return;
+                        }
+                    }
+                    Err(crate::transport::TransportError::Timeout) => continue,
+                    Err(_) => return,
+                }
+            })
+            .expect("spawn superlink conn");
+    }
+
+    // ------------------------------------------------------------------
+    // Driver surface (used by ServerApp, in-process)
+    // ------------------------------------------------------------------
+
+    /// Registered node ids, sorted (deterministic sampling basis).
+    pub fn nodes(&self) -> Vec<u64> {
+        let mut v = self.state.nodes.lock().unwrap().clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// Block until at least `n` nodes are registered.
+    pub fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let nodes = self.nodes();
+            if nodes.len() >= n {
+                return Ok(nodes);
+            }
+            if Instant::now() >= deadline {
+                anyhow::bail!("only {} of {n} nodes joined", nodes.len());
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Queue an instruction for a node; returns the task id.
+    pub fn push_task(&self, node_id: u64, mut ins: TaskIns) -> u64 {
+        let task_id = self.next_task.fetch_add(1, Ordering::Relaxed);
+        ins.task_id = task_id;
+        self.state
+            .pending
+            .lock()
+            .unwrap()
+            .entry(node_id)
+            .or_default()
+            .push_back(ins);
+        task_id
+    }
+
+    /// Await results for all `task_ids` (any order), with deadline.
+    pub fn await_results(
+        &self,
+        task_ids: &[u64],
+        timeout: Duration,
+    ) -> anyhow::Result<Vec<TaskRes>> {
+        let deadline = Instant::now() + timeout;
+        let (lock, cv) = &self.notify;
+        loop {
+            {
+                let results = self.state.results.lock().unwrap();
+                if task_ids.iter().all(|id| results.contains_key(id)) {
+                    break;
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let results = self.state.results.lock().unwrap();
+                let missing: Vec<u64> = task_ids
+                    .iter()
+                    .filter(|id| !results.contains_key(id))
+                    .copied()
+                    .collect();
+                anyhow::bail!("timed out waiting for task results {missing:?}");
+            }
+            let guard = lock.lock().unwrap();
+            let _ = cv
+                .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
+                .unwrap();
+        }
+        let mut results = self.state.results.lock().unwrap();
+        Ok(task_ids
+            .iter()
+            .map(|id| results.remove(id).unwrap())
+            .collect())
+    }
+
+    /// Mark all runs finished; SuperNodes drain and exit.
+    pub fn finish(&self) {
+        self.active.store(false, Ordering::Release);
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::message::TaskType;
+
+    fn ins(round: u64) -> TaskIns {
+        TaskIns {
+            task_id: 0,
+            run_id: 1,
+            round,
+            task_type: TaskType::Fit,
+            parameters: vec![1.0],
+            config: vec![],
+        }
+    }
+
+    fn res(task_id: u64, node_id: u64) -> TaskRes {
+        TaskRes {
+            task_id,
+            run_id: 1,
+            node_id,
+            error: String::new(),
+            parameters: vec![2.0],
+            num_examples: 10,
+            loss: 0.0,
+            metrics: vec![],
+        }
+    }
+
+    #[test]
+    fn create_node_via_frames() {
+        let link = SuperLink::new();
+        let create = |req: u64| {
+            FlowerMsg::decode(&link.handle_frame(&FlowerMsg::CreateNode { requested: req }.encode()))
+                .unwrap()
+        };
+        assert_eq!(create(0), FlowerMsg::NodeCreated { node_id: 1 });
+        assert_eq!(create(0), FlowerMsg::NodeCreated { node_id: 2 });
+        // Pinned id honoured; duplicate pin falls back to auto.
+        assert_eq!(create(7), FlowerMsg::NodeCreated { node_id: 7 });
+        assert_eq!(create(7), FlowerMsg::NodeCreated { node_id: 8 });
+        assert_eq!(link.nodes(), vec![1, 2, 7, 8]);
+    }
+
+    #[test]
+    fn push_pull_roundtrip() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let tid = link.push_task(1, ins(1));
+        let rep = FlowerMsg::decode(
+            &link.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode()),
+        )
+        .unwrap();
+        match rep {
+            FlowerMsg::TaskInsList { tasks, active } => {
+                assert!(active);
+                assert_eq!(tasks.len(), 1);
+                assert_eq!(tasks[0].task_id, tid);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Queue drained.
+        let rep = FlowerMsg::decode(
+            &link.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode()),
+        )
+        .unwrap();
+        assert_eq!(
+            rep,
+            FlowerMsg::TaskInsList {
+                tasks: vec![],
+                active: true
+            }
+        );
+    }
+
+    #[test]
+    fn await_results_blocks_until_pushed() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let tid = link.push_task(1, ins(1));
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            l2.handle_frame(&FlowerMsg::PushTaskRes { res: res(tid, 1) }.encode());
+        });
+        let out = link.await_results(&[tid], Duration::from_secs(2)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].node_id, 1);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn await_results_times_out() {
+        let link = SuperLink::new();
+        let err = link
+            .await_results(&[42], Duration::from_millis(50))
+            .unwrap_err();
+        assert!(err.to_string().contains("42"));
+    }
+
+    #[test]
+    fn finish_flag_propagates() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.finish();
+        let rep = FlowerMsg::decode(
+            &link.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode()),
+        )
+        .unwrap();
+        assert_eq!(
+            rep,
+            FlowerMsg::TaskInsList {
+                tasks: vec![],
+                active: false
+            }
+        );
+    }
+
+    #[test]
+    fn delete_node() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.handle_frame(&FlowerMsg::DeleteNode { node_id: 1 }.encode());
+        assert!(link.nodes().is_empty());
+    }
+
+    #[test]
+    fn bad_frame_yields_error_reply() {
+        let link = SuperLink::new();
+        let rep = FlowerMsg::decode(&link.handle_frame(&[250])).unwrap();
+        assert!(matches!(rep, FlowerMsg::Error { .. }));
+    }
+}

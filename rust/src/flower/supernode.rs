@@ -1,0 +1,309 @@
+//! Flower SuperNode (paper §3.2 / Fig. 3): the long-running client-side
+//! process. Connects to the SuperLink through a [`FlowerConnector`]
+//! (unary request/response — the gRPC stand-in), registers a node, then
+//! loops: pull TaskIns → run the ClientApp → push TaskRes, until the
+//! server reports no active run.
+//!
+//! The connector is the ONLY thing that differs between the paper's two
+//! deployment modes: native (direct endpoint to the SuperLink) vs bridged
+//! (endpoint to the FLARE client's LGS). The SuperNode code — like the
+//! Flower app in the paper — is identical in both.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::flower::clientapp::ClientApp;
+use crate::flower::message::{FlowerMsg, TaskRes, TaskType};
+use crate::transport::Endpoint;
+
+/// Unary request/response channel to the SuperLink.
+pub trait FlowerConnector: Send + Sync {
+    fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>>;
+}
+
+/// Native connector: a raw endpoint straight to the SuperLink (Fig. 5a).
+pub struct NativeConnector {
+    ep: Arc<dyn Endpoint>,
+    timeout: Duration,
+}
+
+impl NativeConnector {
+    pub fn new(ep: Arc<dyn Endpoint>, timeout: Duration) -> Self {
+        Self { ep, timeout }
+    }
+}
+
+impl FlowerConnector for NativeConnector {
+    fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+        // Strictly alternating request/response per connection.
+        self.ep.send(frame)?;
+        Ok(self.ep.recv_timeout(self.timeout)?)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SuperNodeConfig {
+    /// Poll interval while no task is pending.
+    pub poll: Duration,
+    /// Give up if the server is unreachable this long.
+    pub connect_deadline: Duration,
+    /// Pin this node id at registration (partition index + 1); 0 = let
+    /// the SuperLink assign one. Pinning makes the client<->node binding
+    /// deterministic across transports — required for Fig. 5 overlays.
+    pub requested_node_id: u64,
+}
+
+impl Default for SuperNodeConfig {
+    fn default() -> Self {
+        Self {
+            poll: Duration::from_millis(5),
+            connect_deadline: Duration::from_secs(30),
+            requested_node_id: 0,
+        }
+    }
+}
+
+pub struct SuperNode {
+    connector: Box<dyn FlowerConnector>,
+    app: Arc<dyn ClientApp>,
+    cfg: SuperNodeConfig,
+    node_id: Option<u64>,
+}
+
+impl SuperNode {
+    pub fn new(
+        connector: Box<dyn FlowerConnector>,
+        app: Arc<dyn ClientApp>,
+        cfg: SuperNodeConfig,
+    ) -> Self {
+        Self {
+            connector,
+            app,
+            cfg,
+            node_id: None,
+        }
+    }
+
+    fn rpc(&self, msg: &FlowerMsg) -> anyhow::Result<FlowerMsg> {
+        let reply = self.connector.request(msg.encode())?;
+        let decoded = FlowerMsg::decode(&reply)?;
+        if let FlowerMsg::Error { message } = &decoded {
+            anyhow::bail!("superlink error: {message}");
+        }
+        Ok(decoded)
+    }
+
+    /// Register this node with the SuperLink.
+    pub fn connect(&mut self) -> anyhow::Result<u64> {
+        let deadline = std::time::Instant::now() + self.cfg.connect_deadline;
+        loop {
+            match self.rpc(&FlowerMsg::CreateNode {
+                requested: self.cfg.requested_node_id,
+            }) {
+                Ok(FlowerMsg::NodeCreated { node_id }) => {
+                    self.node_id = Some(node_id);
+                    return Ok(node_id);
+                }
+                Ok(other) => anyhow::bail!("unexpected reply to CreateNode: {other:?}"),
+                Err(e) => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(e.context("connect to superlink"));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    /// Main loop: serve tasks until no run is active. Returns the number
+    /// of tasks executed.
+    pub fn run(&mut self) -> anyhow::Result<u64> {
+        let node_id = match self.node_id {
+            Some(id) => id,
+            None => self.connect()?,
+        };
+        let mut executed = 0u64;
+        loop {
+            let reply = self.rpc(&FlowerMsg::PullTaskIns { node_id })?;
+            let (tasks, active) = match reply {
+                FlowerMsg::TaskInsList { tasks, active } => (tasks, active),
+                other => anyhow::bail!("unexpected reply to Pull: {other:?}"),
+            };
+            let got_tasks = !tasks.is_empty();
+            for ins in tasks {
+                let res = self.execute(node_id, &ins);
+                match self.rpc(&FlowerMsg::PushTaskRes { res })? {
+                    FlowerMsg::PushAccepted => {}
+                    other => anyhow::bail!("unexpected reply to Push: {other:?}"),
+                }
+                executed += 1;
+            }
+            if !active {
+                let _ = self.rpc(&FlowerMsg::DeleteNode { node_id });
+                return Ok(executed);
+            }
+            if !got_tasks {
+                std::thread::sleep(self.cfg.poll);
+            }
+        }
+    }
+
+    fn execute(&self, node_id: u64, ins: &crate::flower::message::TaskIns) -> TaskRes {
+        let base = TaskRes {
+            task_id: ins.task_id,
+            run_id: ins.run_id,
+            node_id,
+            error: String::new(),
+            parameters: Vec::new(),
+            num_examples: 0,
+            loss: 0.0,
+            metrics: Vec::new(),
+        };
+        match ins.task_type {
+            TaskType::Fit => match self.app.fit(&ins.parameters, &ins.config) {
+                Ok(out) => TaskRes {
+                    parameters: out.parameters,
+                    num_examples: out.num_examples,
+                    metrics: out.metrics,
+                    ..base
+                },
+                Err(e) => TaskRes {
+                    error: e.to_string(),
+                    ..base
+                },
+            },
+            TaskType::Evaluate => match self.app.evaluate(&ins.parameters, &ins.config) {
+                Ok(out) => TaskRes {
+                    loss: out.loss,
+                    num_examples: out.num_examples,
+                    metrics: out.metrics,
+                    ..base
+                },
+                Err(e) => TaskRes {
+                    error: e.to_string(),
+                    ..base
+                },
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::clientapp::ArithmeticClient;
+    use crate::flower::message::TaskIns;
+    use crate::flower::superlink::SuperLink;
+    use crate::transport::inproc;
+
+    /// Connector that short-circuits straight into a SuperLink (no
+    /// transport) — for unit tests of the SuperNode loop itself.
+    struct DirectConnector(Arc<SuperLink>);
+
+    impl FlowerConnector for DirectConnector {
+        fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+            Ok(self.0.handle_frame(&frame))
+        }
+    }
+
+    #[test]
+    fn supernode_runs_tasks_until_finish() {
+        let link = SuperLink::new();
+        let mut node = SuperNode::new(
+            Box::new(DirectConnector(link.clone())),
+            Arc::new(ArithmeticClient { delta: 1.0, n: 4 }),
+            SuperNodeConfig::default(),
+        );
+        let node_id = node.connect().unwrap();
+
+        let tid = link.push_task(
+            node_id,
+            TaskIns {
+                task_id: 0,
+                run_id: 1,
+                round: 1,
+                task_type: TaskType::Fit,
+                parameters: vec![1.0, 2.0],
+                config: vec![],
+            },
+        );
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || {
+            let res = l2.await_results(&[tid], Duration::from_secs(5)).unwrap();
+            l2.finish();
+            res
+        });
+        let executed = node.run().unwrap();
+        let results = h.join().unwrap();
+        assert_eq!(executed, 1);
+        assert_eq!(results[0].parameters, vec![2.0, 3.0]);
+        assert_eq!(results[0].num_examples, 4);
+    }
+
+    #[test]
+    fn supernode_over_native_endpoint() {
+        let link = SuperLink::new();
+        let (client_end, server_end) = inproc::pair("supernode", "superlink");
+        link.serve_endpoint(Arc::new(server_end));
+        let mut node = SuperNode::new(
+            Box::new(NativeConnector::new(
+                Arc::new(client_end),
+                Duration::from_secs(2),
+            )),
+            Arc::new(ArithmeticClient { delta: 2.0, n: 1 }),
+            SuperNodeConfig::default(),
+        );
+        let node_id = node.connect().unwrap();
+        assert_eq!(node_id, 1);
+        link.finish();
+        assert_eq!(node.run().unwrap(), 0);
+    }
+
+    #[test]
+    fn client_error_becomes_task_error() {
+        struct FailingApp;
+        impl ClientApp for FailingApp {
+            fn fit(
+                &self,
+                _: &[f32],
+                _: &crate::flower::message::ConfigRecord,
+            ) -> anyhow::Result<crate::flower::clientapp::FitOutput> {
+                anyhow::bail!("cuda OOM")
+            }
+            fn evaluate(
+                &self,
+                _: &[f32],
+                _: &crate::flower::message::ConfigRecord,
+            ) -> anyhow::Result<crate::flower::clientapp::EvalOutput> {
+                anyhow::bail!("no data")
+            }
+        }
+        let link = SuperLink::new();
+        let mut node = SuperNode::new(
+            Box::new(DirectConnector(link.clone())),
+            Arc::new(FailingApp),
+            SuperNodeConfig::default(),
+        );
+        let node_id = node.connect().unwrap();
+        let tid = link.push_task(
+            node_id,
+            TaskIns {
+                task_id: 0,
+                run_id: 1,
+                round: 1,
+                task_type: TaskType::Fit,
+                parameters: vec![],
+                config: vec![],
+            },
+        );
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || {
+            let res = l2.await_results(&[tid], Duration::from_secs(5)).unwrap();
+            l2.finish();
+            res
+        });
+        node.run().unwrap();
+        let results = h.join().unwrap();
+        assert_eq!(results[0].error, "cuda OOM");
+    }
+}

@@ -1,0 +1,132 @@
+//! Experiment harness shared by examples, benches, and integration
+//! tests: one-call wrappers that run a full FL job natively (Fig. 5a) or
+//! inside a FLARE federation (Fig. 5b) and hand back the history +
+//! streamed metrics.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::bridge::FlowerBridgeApp;
+use crate::flare::reliable::RetryPolicy;
+use crate::flare::sim::FederationBuilder;
+use crate::flare::{JobSpec, JobStatus};
+use crate::flower::serverapp::History;
+use crate::runtime::ComputeHandle;
+use crate::train::{run_native_fl, FlJobConfig, TrainedFlowerApp};
+
+/// Options for a bridged run.
+#[derive(Clone, Debug)]
+pub struct BridgedRunOpts {
+    pub drop_prob: f64,
+    pub latency: Duration,
+    pub fault_seed: u64,
+    pub policy: RetryPolicy,
+    pub job_id: String,
+    pub timeout: Duration,
+}
+
+impl Default for BridgedRunOpts {
+    fn default() -> Self {
+        Self {
+            drop_prob: 0.0,
+            latency: Duration::ZERO,
+            fault_seed: 7,
+            policy: RetryPolicy::fast(),
+            job_id: "flower-job".into(),
+            timeout: Duration::from_secs(1800),
+        }
+    }
+}
+
+/// Result of a bridged run: the Flower history plus the FLARE-side
+/// metric export (Fig. 6 data when `cfg.track`).
+pub struct BridgedRunResult {
+    pub history: History,
+    pub metrics_tsv: String,
+    /// (site, tag) -> series from the SCP metric store.
+    pub metric_series: Vec<((String, String), Vec<(u64, f64)>)>,
+}
+
+/// Run the FL job natively (no FLARE) — the Fig. 5(a) path.
+pub fn run_fl_native(cfg: &FlJobConfig, compute: ComputeHandle) -> anyhow::Result<History> {
+    run_native_fl(cfg, compute)
+}
+
+/// Run the FL job inside a FLARE federation — the Fig. 5(b) path
+/// (`nvflare job submit` equivalent).
+pub fn run_fl_bridged(
+    cfg: &FlJobConfig,
+    compute: ComputeHandle,
+    opts: &BridgedRunOpts,
+) -> anyhow::Result<BridgedRunResult> {
+    let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+    let c2 = captured.clone();
+    let app = FlowerBridgeApp::new(Arc::new(TrainedFlowerApp {
+        compute: compute.clone(),
+    }))
+    .with_policy(opts.policy)
+    .with_history_sink(Arc::new(move |_, h| {
+        *c2.lock().unwrap() = Some(h.clone());
+    }));
+
+    let fed = FederationBuilder::new("harness")
+        .sites(cfg.clients)
+        .faults(opts.drop_prob, opts.latency, opts.fault_seed)
+        .retry_policy(opts.policy)
+        .compute(compute)
+        .build(Arc::new(app))?;
+
+    let spec = JobSpec::new(&opts.job_id, "flower_bridge").with_config(cfg.to_json());
+    fed.scp.submit(spec)?;
+    let status = fed
+        .scp
+        .wait(&opts.job_id, opts.timeout)
+        .ok_or_else(|| anyhow::anyhow!("job vanished"))?;
+    anyhow::ensure!(
+        status == JobStatus::Finished,
+        "job {}: {} ({:?})",
+        opts.job_id,
+        status.as_str(),
+        fed.scp.job_error(&opts.job_id)
+    );
+
+    let metrics_tsv = fed.scp.metrics.export_tsv(&opts.job_id);
+    let metric_series = fed
+        .scp
+        .metrics
+        .keys(&opts.job_id)
+        .into_iter()
+        .map(|(site, tag)| {
+            let series = fed.scp.metrics.series(&opts.job_id, &site, &tag);
+            ((site, tag), series)
+        })
+        .collect();
+    fed.shutdown();
+
+    let history = captured
+        .lock()
+        .unwrap()
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("history sink never fired"))?;
+    Ok(BridgedRunResult {
+        history,
+        metrics_tsv,
+        metric_series,
+    })
+}
+
+/// Ensure artifacts exist or exit with a friendly message (examples).
+pub fn require_artifacts() -> ComputeHandle {
+    if !crate::runtime::artifacts_available() {
+        eprintln!("artifacts/ not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    crate::runtime::global_compute(compute_threads_from_env()).expect("compute service")
+}
+
+pub fn compute_threads_from_env() -> usize {
+    std::env::var("FLARELINK_COMPUTE_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2)
+}

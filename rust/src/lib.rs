@@ -1,0 +1,32 @@
+//! # FlareLink
+//!
+//! Reproduction of *"Supercharging Federated Learning with Flower and
+//! NVIDIA FLARE"* (CS.DC 2024) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * [`flare`] — the FLARE-analogue runtime: multi-job SCP/CCP control
+//!   plane, reliable messaging, provisioning, authz, metric streaming;
+//! * [`flower`] — the Flower-analogue FL framework: SuperLink/SuperNode,
+//!   ServerApp strategies, ClientApps;
+//! * [`bridge`] — the paper's contribution: LGS/LGC routing of Flower
+//!   traffic through FLARE, unmodified apps on both ends;
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); Python never runs at request time;
+//! * [`train`] — synthetic federated datasets + the local trainer that
+//!   drives the artifacts;
+//! * [`transport`], [`proto`], [`util`], [`telemetry`], [`config`] —
+//!   substrates built from scratch for the offline environment.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod bridge;
+pub mod config;
+pub mod flare;
+pub mod harness;
+pub mod flower;
+pub mod proto;
+pub mod runtime;
+pub mod telemetry;
+pub mod train;
+pub mod transport;
+pub mod util;

@@ -1,0 +1,427 @@
+//! `flarelink` CLI — the launcher (FLARE's `nvflare` analogue).
+//!
+//! ```text
+//! flarelink provision --project <name> --sites <n> --out <dir> [--addr a]
+//! flarelink simulate  [--config fed.json] --job <job.json>
+//! flarelink server    --config <fed.json> [--secret s]
+//! flarelink client    --kit <site-kit.json>
+//! flarelink submit    --addr <host:port> --kit <admin-kit.json> --job <job.json>
+//! flarelink artifacts [--dir artifacts/]
+//! ```
+//!
+//! `simulate` is the paper's deploy Option 1 (`nvflare simulator`);
+//! `server`/`client`/`submit` are Option 2 (provisioned TCP federation).
+//! Argument parsing is hand-rolled (clap is unavailable offline).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flarelink::bridge::FlowerBridgeApp;
+use flarelink::config::FederationConfig;
+use flarelink::flare::deploy::{connect_ccp_tcp, serve_scp_tcp};
+use flarelink::flare::provision::{Provisioner, Role, StartupKit};
+use flarelink::flare::scp::topics;
+use flarelink::flare::{FederationBuilder, JobSpec, Messenger, RetryPolicy};
+use flarelink::train::{FlJobConfig, TrainedFlowerApp};
+use flarelink::util::json::Json;
+
+fn main() {
+    flarelink::telemetry::init_logging();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (positional, flags)
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let (pos, flags) = parse_flags(args);
+    match pos.first().map(|s| s.as_str()) {
+        Some("provision") => cmd_provision(&flags),
+        Some("simulate") => cmd_simulate(&flags),
+        Some("server") => cmd_server(&flags),
+        Some("client") => cmd_client(&flags),
+        Some("submit") => cmd_submit(&flags),
+        Some("artifacts") => cmd_artifacts(&flags),
+        _ => {
+            eprintln!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "flarelink — Flower-on-FLARE federated runtime (paper reproduction)
+
+USAGE:
+  flarelink provision --project <name> --sites <n> --out <dir> [--addr host:port] [--secret s]
+  flarelink simulate  [--config fed.json] --job <job.json> [--export-metrics out.tsv]
+  flarelink server    --config <fed.json> [--secret s]
+  flarelink client    --kit <site-kit.json>
+  flarelink submit    --addr <host:port> --kit <admin-kit.json> --job <job.json>
+  flarelink artifacts [--dir artifacts/]";
+
+fn kit_to_json(kit: &StartupKit) -> Json {
+    Json::obj(vec![
+        ("project", Json::str(kit.project.clone())),
+        ("name", Json::str(kit.name.clone())),
+        ("role", Json::str(kit.role.as_str())),
+        ("token", Json::str(kit.token.clone())),
+        ("server_addr", Json::str(kit.server_addr.clone())),
+    ])
+}
+
+fn kit_from_file(path: &str) -> anyhow::Result<StartupKit> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    Ok(StartupKit {
+        project: j.get("project").as_str().unwrap_or_default().to_string(),
+        name: j.get("name").as_str().unwrap_or_default().to_string(),
+        role: Role::parse(j.get("role").as_str().unwrap_or("site"))
+            .ok_or_else(|| anyhow::anyhow!("bad role in kit"))?,
+        token: j.get("token").as_str().unwrap_or_default().to_string(),
+        server_addr: j
+            .get("server_addr")
+            .as_str()
+            .unwrap_or_default()
+            .to_string(),
+    })
+}
+
+fn cmd_provision(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let project = flags.get("project").cloned().unwrap_or("flarelink".into());
+    let n: usize = flags.get("sites").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let out = flags.get("out").cloned().unwrap_or("startup_kits".into());
+    let addr = flags.get("addr").cloned().unwrap_or("127.0.0.1:18411".into());
+    let secret = flags
+        .get("secret")
+        .cloned()
+        .unwrap_or("flarelink-project-secret".into());
+
+    let provisioner = Provisioner::new(&project, secret.as_bytes());
+    std::fs::create_dir_all(&out)?;
+    let mut kits = vec![
+        (
+            "server".to_string(),
+            provisioner.provision("server", Role::Server, &addr),
+        ),
+        (
+            "admin".to_string(),
+            provisioner.provision("admin", Role::Admin, &addr),
+        ),
+    ];
+    for i in 1..=n {
+        let site = format!("site-{i}");
+        kits.push((site.clone(), provisioner.provision(&site, Role::Site, &addr)));
+    }
+    for (name, kit) in &kits {
+        let path = format!("{out}/{name}-kit.json");
+        std::fs::write(&path, kit_to_json(kit).to_string())?;
+        println!("wrote {path}");
+    }
+    // Federation config alongside the kits.
+    let fed = FederationConfig {
+        project,
+        sites: (1..=n).map(|i| format!("site-{i}")).collect(),
+        server_addr: addr,
+        ..Default::default()
+    };
+    std::fs::write(format!("{out}/federation.json"), fed.to_json().to_string())?;
+    println!("wrote {out}/federation.json");
+    Ok(())
+}
+
+fn job_spec_from_file(path: &str) -> anyhow::Result<(JobSpec, FlJobConfig)> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    let cfg = FlJobConfig::from_json(&j);
+    let id = j
+        .get("id")
+        .as_str()
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("job-{}", flarelink::util::unix_millis()));
+    let spec = JobSpec::new(&id, "flower_bridge").with_config(cfg.to_json());
+    Ok((spec, cfg))
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let fed_cfg = match flags.get("config") {
+        Some(p) => FederationConfig::load(std::path::Path::new(p))?,
+        None => FederationConfig::default(),
+    };
+    let job_path = flags
+        .get("job")
+        .ok_or_else(|| anyhow::anyhow!("--job <job.json> required"))?;
+    let (spec, job_cfg) = job_spec_from_file(job_path)?;
+
+    anyhow::ensure!(
+        flarelink::runtime::artifacts_available(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let compute = flarelink::runtime::global_compute(fed_cfg.compute_threads)?;
+    let app = FlowerBridgeApp::new(Arc::new(TrainedFlowerApp {
+        compute: compute.clone(),
+    }))
+    .with_history_sink(Arc::new(|job, h| {
+        println!("--- history for {job} ---");
+        print!("{}", h.to_csv());
+    }));
+
+    let site_names: Vec<&str> = fed_cfg.sites.iter().map(|s| s.as_str()).collect();
+    let mut builder = FederationBuilder::new(&fed_cfg.project)
+        .named_sites(&site_names)
+        .compute(compute)
+        .faults(
+            fed_cfg.drop_prob,
+            Duration::from_millis(fed_cfg.latency_ms),
+            7,
+        );
+    for (a, b) in &fed_cfg.direct_pairs {
+        builder = builder.allow_direct(a, b);
+    }
+    let fed = builder.build(Arc::new(app))?;
+
+    println!(
+        "simulator: {} sites, job '{}' (model={}, strategy={}, rounds={})",
+        fed_cfg.sites.len(),
+        spec.id,
+        job_cfg.model,
+        job_cfg.strategy,
+        job_cfg.rounds
+    );
+    let id = spec.id.clone();
+    fed.scp.submit(spec)?;
+    let status = fed
+        .scp
+        .wait(&id, Duration::from_secs(3600))
+        .ok_or_else(|| anyhow::anyhow!("job vanished"))?;
+    println!("job {id}: {}", status.as_str());
+    if let Some(err) = fed.scp.job_error(&id) {
+        println!("error: {err}");
+    }
+    if let Some(path) = flags.get("export-metrics") {
+        std::fs::write(path, fed.scp.metrics.export_tsv(&id))?;
+        println!("metrics written to {path}");
+    }
+    fed.shutdown();
+    Ok(())
+}
+
+fn cmd_server(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg_path = flags
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("--config <fed.json> required"))?;
+    let fed_cfg = FederationConfig::load(std::path::Path::new(cfg_path))?;
+    let secret = flags
+        .get("secret")
+        .cloned()
+        .unwrap_or("flarelink-project-secret".into());
+
+    anyhow::ensure!(
+        flarelink::runtime::artifacts_available(),
+        "server requires artifacts (run `make artifacts`)"
+    );
+    let compute = flarelink::runtime::global_compute(fed_cfg.compute_threads)?;
+    let authorizer = Arc::new(flarelink::flare::auth::Authorizer::new(Provisioner::new(
+        &fed_cfg.project,
+        secret.as_bytes(),
+    )));
+    let fabric = Arc::new(flarelink::flare::ScpFabric::new());
+    let app = Arc::new(FlowerBridgeApp::new(Arc::new(TrainedFlowerApp {
+        compute: compute.clone(),
+    })));
+    let scp = flarelink::flare::scp::Scp::start(
+        fabric.clone(),
+        authorizer,
+        app,
+        Some(compute),
+        Default::default(),
+    )?;
+    let server = serve_scp_tcp(fabric, &fed_cfg.server_addr)?;
+    println!("FLARE server listening on {}", server.addr);
+    println!(
+        "(submit jobs with `flarelink submit --addr {} ...`)",
+        server.addr
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(5));
+        let jobs = scp.list();
+        if !jobs.is_empty() {
+            let summary: Vec<String> = jobs
+                .iter()
+                .map(|(id, st)| format!("{id}:{}", st.as_str()))
+                .collect();
+            log::info!("jobs: {}", summary.join(" "));
+        }
+    }
+}
+
+fn cmd_client(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let kit_path = flags
+        .get("kit")
+        .ok_or_else(|| anyhow::anyhow!("--kit <site-kit.json> required"))?;
+    let kit = kit_from_file(kit_path)?;
+    anyhow::ensure!(
+        flarelink::runtime::artifacts_available(),
+        "artifacts/ missing — run `make artifacts`"
+    );
+    let compute = flarelink::runtime::global_compute(1)?;
+    let ccp_fabric = connect_ccp_tcp(&kit.name, &kit.server_addr, Duration::from_secs(60))?;
+    let app = Arc::new(FlowerBridgeApp::new(Arc::new(TrainedFlowerApp {
+        compute: compute.clone(),
+    })));
+    let _ccp = flarelink::flare::ccp::Ccp::start(
+        ccp_fabric,
+        &kit,
+        app,
+        Some(compute),
+        Default::default(),
+    )?;
+    println!("site '{}' connected to {}", kit.name, kit.server_addr);
+    loop {
+        std::thread::sleep(Duration::from_secs(60));
+    }
+}
+
+fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flags
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("--addr <host:port> required"))?;
+    let kit = kit_from_file(
+        flags
+            .get("kit")
+            .ok_or_else(|| anyhow::anyhow!("--kit <admin-kit.json> required"))?,
+    )?;
+    let (spec, _) = job_spec_from_file(
+        flags
+            .get("job")
+            .ok_or_else(|| anyhow::anyhow!("--job <job.json> required"))?,
+    )?;
+
+    // Attach as a pseudo-site carrying only the admin console cell.
+    let console_site = format!("admin-console-{}", std::process::id());
+    let fabric = connect_ccp_tcp(&console_site, addr, Duration::from_secs(10))?;
+    let msgr = Messenger::spawn(
+        fabric.clone() as Arc<dyn flarelink::flare::Fabric>,
+        &format!("{console_site}:console"),
+    )?;
+    let headers = vec![
+        ("principal".to_string(), kit.name.clone()),
+        ("role".to_string(), kit.role.as_str().to_string()),
+        ("token".to_string(), kit.token.clone()),
+    ];
+    let rep = msgr.request_with_headers(
+        flarelink::proto::address::SERVER,
+        topics::SUBMIT,
+        spec.encode(),
+        headers,
+        RetryPolicy::default(),
+    )?;
+    println!("submitted: {}", String::from_utf8_lossy(&rep.payload));
+    fabric.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = flags.get("dir").cloned().unwrap_or_else(|| {
+        flarelink::runtime::default_artifacts_dir()
+            .display()
+            .to_string()
+    });
+    let manifest = flarelink::runtime::Manifest::load(
+        &std::path::Path::new(&dir).join("manifest.json"),
+    )?;
+    println!("artifacts in {dir}:");
+    for name in manifest.artifact_names() {
+        let a = manifest.artifact(name).unwrap();
+        let ins: Vec<String> = a
+            .inputs
+            .iter()
+            .map(|t| format!("{}:{}{:?}", t.name, t.dtype, t.shape))
+            .collect();
+        println!("  {name:<28} ({})", ins.join(", "));
+    }
+    for model in manifest.model_names() {
+        let m = manifest.model(model).unwrap();
+        println!(
+            "model {model}: {} params, train_batch={}, eval_batch={}",
+            m.param_count, m.train_batch, m.eval_batch
+        );
+    }
+    // Smoke-execute each model's init artifact.
+    let svc = flarelink::runtime::ComputeService::start(&dir, 1)?;
+    let h = svc.handle();
+    for model in manifest.model_names() {
+        let out = h.execute(
+            &format!("{model}_init"),
+            vec![flarelink::runtime::TensorData::I32(vec![0], vec![1])],
+        )?;
+        println!("smoke {model}_init -> {} params OK", out[0].len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_flags;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_positional_and_flags() {
+        let (pos, flags) = parse_flags(&s(&[
+            "simulate", "--job", "j.json", "--export-metrics", "out.tsv",
+        ]));
+        assert_eq!(pos, vec!["simulate"]);
+        assert_eq!(flags.get("job").map(String::as_str), Some("j.json"));
+        assert_eq!(
+            flags.get("export-metrics").map(String::as_str),
+            Some("out.tsv")
+        );
+    }
+
+    #[test]
+    fn boolean_flags_without_values() {
+        let (pos, flags) = parse_flags(&s(&["provision", "--force", "--sites", "3"]));
+        assert_eq!(pos, vec!["provision"]);
+        assert_eq!(flags.get("force").map(String::as_str), Some("true"));
+        assert_eq!(flags.get("sites").map(String::as_str), Some("3"));
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let (_, flags) = parse_flags(&s(&["x", "--verbose"]));
+        assert_eq!(flags.get("verbose").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn empty_args_ok() {
+        let (pos, flags) = parse_flags(&[]);
+        assert!(pos.is_empty() && flags.is_empty());
+    }
+}

@@ -1,0 +1,262 @@
+//! The FLARE message envelope: every frame on every transport is one
+//! encoded [`Envelope`]. Addressing follows the paper's cell model —
+//! control processes are `"server"` / `"<site>"`, job processes are
+//! `"<site>:<job_id>"` ("Job Network" cells, §3.1).
+
+use crate::util::bytes::{Reader, WireError, Writer};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgKind {
+    /// A request expecting a reply (reliable-messaging managed).
+    Request = 0,
+    /// Reply to a request (correlation_id = request id).
+    Reply = 1,
+    /// Transport-level acknowledgement that a request was received.
+    Ack = 2,
+    /// "Is the result for request <correlation_id> ready?" (§4.1 polling).
+    Query = 3,
+    /// Fire-and-forget event (metrics streaming, heartbeats).
+    Event = 4,
+}
+
+impl MsgKind {
+    fn from_u8(v: u8) -> Result<Self, WireError> {
+        Ok(match v {
+            0 => MsgKind::Request,
+            1 => MsgKind::Reply,
+            2 => MsgKind::Ack,
+            3 => MsgKind::Query,
+            4 => MsgKind::Event,
+            other => return Err(WireError::BadTag(other)),
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    /// Unique message id (per sender).
+    pub id: u64,
+    /// For Reply/Ack/Query: the id of the originating request; else 0.
+    pub correlation_id: u64,
+    pub kind: MsgKind,
+    /// Source cell, e.g. "site-1:job-abc" or "server".
+    pub source: String,
+    /// Destination cell.
+    pub destination: String,
+    /// Application channel, e.g. "flower.frame", "job.deploy", "metrics".
+    pub topic: String,
+    /// Small string headers (auth token, run id, ...).
+    pub headers: Vec<(String, String)>,
+    /// Opaque application payload.
+    pub payload: Vec<u8>,
+}
+
+impl Envelope {
+    pub fn new(kind: MsgKind, source: &str, destination: &str, topic: &str) -> Self {
+        Self {
+            id: 0,
+            correlation_id: 0,
+            kind,
+            source: source.to_string(),
+            destination: destination.to_string(),
+            topic: topic.to_string(),
+            headers: Vec::new(),
+            payload: Vec::new(),
+        }
+    }
+
+    pub fn with_payload(mut self, payload: Vec<u8>) -> Self {
+        self.payload = payload;
+        self
+    }
+
+    pub fn with_header(mut self, k: &str, v: &str) -> Self {
+        self.headers.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn header(&self, k: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(hk, _)| hk == k)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Build the reply envelope for this request.
+    pub fn reply_to(&self, payload: Vec<u8>) -> Envelope {
+        Envelope {
+            id: 0,
+            correlation_id: self.id,
+            kind: MsgKind::Reply,
+            source: self.destination.clone(),
+            destination: self.source.clone(),
+            topic: self.topic.clone(),
+            headers: Vec::new(),
+            payload,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(64 + self.payload.len());
+        w.u64(self.id);
+        w.u64(self.correlation_id);
+        w.u8(self.kind as u8);
+        w.str(&self.source);
+        w.str(&self.destination);
+        w.str(&self.topic);
+        w.u32(self.headers.len() as u32);
+        for (k, v) in &self.headers {
+            w.str(k);
+            w.str(v);
+        }
+        w.bytes(&self.payload);
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Envelope, WireError> {
+        let mut r = Reader::new(buf);
+        let id = r.u64()?;
+        let correlation_id = r.u64()?;
+        let kind = MsgKind::from_u8(r.u8()?)?;
+        let source = r.str()?.to_string();
+        let destination = r.str()?.to_string();
+        let topic = r.str()?.to_string();
+        let n_headers = r.u32()? as usize;
+        if n_headers > 1024 {
+            return Err(WireError::TooLong {
+                len: n_headers,
+                limit: 1024,
+            });
+        }
+        let mut headers = Vec::with_capacity(n_headers);
+        for _ in 0..n_headers {
+            let k = r.str()?.to_string();
+            let v = r.str()?.to_string();
+            headers.push((k, v));
+        }
+        let payload = r.bytes()?.to_vec();
+        Ok(Envelope {
+            id,
+            correlation_id,
+            kind,
+            source,
+            destination,
+            topic,
+            headers,
+            payload,
+        })
+    }
+}
+
+/// Cell address helpers.
+pub mod address {
+    /// The server control process cell.
+    pub const SERVER: &str = "server";
+
+    /// Job cell on a site: `"<site>:<job_id>"`.
+    pub fn job_cell(site: &str, job_id: &str) -> String {
+        format!("{site}:{job_id}")
+    }
+
+    /// Split a cell address into (site, job). `"server"` → ("server", None).
+    pub fn parse(cell: &str) -> (&str, Option<&str>) {
+        match cell.split_once(':') {
+            Some((site, job)) => (site, Some(job)),
+            None => (cell, None),
+        }
+    }
+
+    /// The site (routing key) of a cell address.
+    pub fn site_of(cell: &str) -> &str {
+        parse(cell).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Envelope {
+        Envelope {
+            id: 42,
+            correlation_id: 7,
+            kind: MsgKind::Request,
+            source: "site-1:job-x".into(),
+            destination: "server".into(),
+            topic: "flower.frame".into(),
+            headers: vec![("auth".into(), "tok".into()), ("run".into(), "1".into())],
+            payload: vec![1, 2, 3, 255],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let e = sample();
+        let buf = e.encode();
+        assert_eq!(Envelope::decode(&buf).unwrap(), e);
+    }
+
+    #[test]
+    fn roundtrip_empty_fields() {
+        let e = Envelope::new(MsgKind::Event, "", "", "");
+        assert_eq!(Envelope::decode(&e.encode()).unwrap(), e);
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        for kind in [
+            MsgKind::Request,
+            MsgKind::Reply,
+            MsgKind::Ack,
+            MsgKind::Query,
+            MsgKind::Event,
+        ] {
+            let mut e = sample();
+            e.kind = kind;
+            assert_eq!(Envelope::decode(&e.encode()).unwrap().kind, kind);
+        }
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let mut buf = sample().encode();
+        buf[16] = 99; // kind byte follows two u64s
+        assert!(Envelope::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let buf = sample().encode();
+        for cut in [0, 5, 17, buf.len() - 1] {
+            assert!(Envelope::decode(&buf[..cut]).is_err(), "cut {}", cut);
+        }
+    }
+
+    #[test]
+    fn reply_to_swaps_addresses() {
+        let mut req = sample();
+        req.id = 1234;
+        let rep = req.reply_to(vec![9]);
+        assert_eq!(rep.kind, MsgKind::Reply);
+        assert_eq!(rep.correlation_id, 1234);
+        assert_eq!(rep.source, "server");
+        assert_eq!(rep.destination, "site-1:job-x");
+        assert_eq!(rep.payload, vec![9]);
+    }
+
+    #[test]
+    fn header_lookup() {
+        let e = sample();
+        assert_eq!(e.header("auth"), Some("tok"));
+        assert_eq!(e.header("missing"), None);
+    }
+
+    #[test]
+    fn address_helpers() {
+        assert_eq!(address::job_cell("site-1", "j9"), "site-1:j9");
+        assert_eq!(address::parse("site-1:j9"), ("site-1", Some("j9")));
+        assert_eq!(address::parse("server"), ("server", None));
+        assert_eq!(address::site_of("site-2:abc"), "site-2");
+    }
+}

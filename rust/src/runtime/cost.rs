@@ -1,0 +1,188 @@
+//! Analytic FLOP/byte cost model for the AOT artifacts — the roofline
+//! side of the §Perf story (DESIGN.md §7). interpret-mode wallclock is
+//! not a TPU proxy, so efficiency is reported as *achieved FLOP/s from
+//! first principles*: the artifact's arithmetic is derived from the
+//! model architecture (exactly known — we authored it), and measured
+//! time comes from `cargo bench --bench artifact_micro`.
+
+use crate::runtime::ModelMeta;
+
+/// FLOPs for one `act(x@w+b)` dense layer (fwd only): 2*M*K*N + epilogue.
+fn dense_flops(m: f64, k: f64, n: f64) -> f64 {
+    2.0 * m * k * n + 2.0 * m * n
+}
+
+/// CNN forward FLOPs for batch `b` (the quickstart LeNet shapes).
+fn cnn_fwd_flops(b: f64) -> f64 {
+    // conv1 as im2col matmul: M = b*28*28, K = 5*5*3, N = 6
+    let conv1 = dense_flops(b * 784.0, 75.0, 6.0);
+    // conv2: M = b*10*10, K = 5*5*6, N = 16
+    let conv2 = dense_flops(b * 100.0, 150.0, 16.0);
+    let fc = dense_flops(b, 400.0, 120.0)
+        + dense_flops(b, 120.0, 84.0)
+        + dense_flops(b, 84.0, 10.0);
+    conv1 + conv2 + fc
+}
+
+/// Transformer forward FLOPs for batch `b` of `t` tokens — the standard
+/// decomposition (projections + attention + MLP + unembed).
+fn tfm_fwd_flops(b: f64, t: f64, d: f64, layers: f64, vocab: f64) -> f64 {
+    let per_layer = dense_flops(b * t, d, 3.0 * d)      // qkv
+        + 2.0 * 2.0 * b * t * t * d                      // scores + ctx
+        + dense_flops(b * t, d, d)                       // proj
+        + dense_flops(b * t, d, 4.0 * d)                 // mlp up
+        + dense_flops(b * t, 4.0 * d, d);                // mlp down
+    layers * per_layer + dense_flops(b * t, d, vocab)    // unembed
+}
+
+/// Estimated FLOPs for one execution of `artifact`.
+/// Training steps cost ~3x forward (fwd + dx + dw cotangents).
+pub fn artifact_flops(model: &ModelMeta, artifact_kind: &str) -> Option<f64> {
+    let fwd = match model.name.as_str() {
+        "cnn" => {
+            let b = match artifact_kind {
+                "train_step" => model.train_batch as f64,
+                "eval_batch" => model.eval_batch as f64,
+                _ => return flops_other(model, artifact_kind),
+            };
+            cnn_fwd_flops(b)
+        }
+        "transformer" => {
+            let b = match artifact_kind {
+                "train_step" => model.train_batch as f64,
+                "eval_batch" => model.eval_batch as f64,
+                _ => return flops_other(model, artifact_kind),
+            };
+            let t = model.extra.get("seq_len").copied().unwrap_or(64.0);
+            let d = model.extra.get("d_model").copied().unwrap_or(128.0);
+            let l = model.extra.get("n_layers").copied().unwrap_or(2.0);
+            let v = model.extra.get("vocab").copied().unwrap_or(256.0);
+            tfm_fwd_flops(b, t, d, l, v)
+        }
+        _ => return None,
+    };
+    Some(match artifact_kind {
+        "train_step" => 3.0 * fwd + 2.0 * model.param_count as f64, // + sgd update
+        "eval_batch" => fwd,
+        _ => return None,
+    })
+}
+
+fn flops_other(model: &ModelMeta, kind: &str) -> Option<f64> {
+    if let Some(k) = kind.strip_prefix("fedavg_k") {
+        let k: f64 = k.parse().ok()?;
+        // K multiplies + adds per output element + normalization.
+        return Some((2.0 * k + 1.0) * model.param_count as f64);
+    }
+    None
+}
+
+/// Bytes moved HBM<->compute per execution (lower bound: inputs read
+/// once + outputs written once, f32).
+pub fn artifact_bytes(model: &ModelMeta, artifact_kind: &str) -> Option<f64> {
+    let p = model.param_count as f64 * 4.0;
+    Some(match artifact_kind {
+        // params in + grads streamed + params out (plus activations,
+        // ignored: lower bound).
+        "train_step" => 3.0 * p,
+        "eval_batch" => {
+            let data: f64 = model
+                .eval_inputs
+                .iter()
+                .map(|t| t.elems() as f64 * 4.0)
+                .sum();
+            p + data
+        }
+        kind => {
+            let k: f64 = kind.strip_prefix("fedavg_k")?.parse().ok()?;
+            (k + 1.0) * p
+        }
+    })
+}
+
+/// Map an artifact name like `cnn_train_step` / `fedavg_cnn_k4` to
+/// (model name, kind).
+pub fn parse_artifact_name(name: &str) -> Option<(String, String)> {
+    if let Some(rest) = name.strip_prefix("fedavg_") {
+        let (model, k) = rest.rsplit_once("_k")?;
+        return Some((model.to_string(), format!("fedavg_k{k}")));
+    }
+    for kind in ["train_step", "eval_batch", "init"] {
+        if let Some(model) = name.strip_suffix(&format!("_{kind}")) {
+            return Some((model.to_string(), kind.to_string()));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let path = crate::runtime::default_artifacts_dir().join("manifest.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Manifest::load(&path).unwrap())
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            parse_artifact_name("cnn_train_step"),
+            Some(("cnn".into(), "train_step".into()))
+        );
+        assert_eq!(
+            parse_artifact_name("fedavg_transformer_k4"),
+            Some(("transformer".into(), "fedavg_k4".into()))
+        );
+        assert_eq!(
+            parse_artifact_name("transformer_eval_batch"),
+            Some(("transformer".into(), "eval_batch".into()))
+        );
+        assert_eq!(parse_artifact_name("garbage"), None);
+    }
+
+    #[test]
+    fn cnn_flops_scale_with_batch() {
+        // Doubling the batch doubles forward FLOPs.
+        assert!((cnn_fwd_flops(64.0) / cnn_fwd_flops(32.0) - 2.0).abs() < 1e-9);
+        // B=32 LeNet fwd is ~O(10^8): conv1 dominates at ~23 MFLOP.
+        let f = cnn_fwd_flops(32.0);
+        assert!(f > 2e7 && f < 2e8, "{f}");
+    }
+
+    #[test]
+    fn transformer_flops_roughly_6nd() {
+        // For d>>t the classic ~2*params*tokens fwd approximation holds
+        // within 2x (embedding lookups excluded).
+        let (b, t, d, l, v) = (8.0, 64.0, 128.0, 2.0, 256.0);
+        let params = v * d + t * d + l * (12.0 * d * d) + d * v;
+        let fwd = tfm_fwd_flops(b, t, d, l, v);
+        let approx = 2.0 * params * b * t;
+        let ratio = fwd / approx;
+        assert!(ratio > 0.5 && ratio < 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn per_artifact_costs_exist_for_real_manifest() {
+        let Some(m) = manifest() else { return };
+        for name in m.artifact_names() {
+            let (model, kind) = parse_artifact_name(name).unwrap();
+            let meta = m.model(&model).unwrap();
+            if kind == "init" {
+                continue;
+            }
+            let f = artifact_flops(meta, &kind).unwrap();
+            let b = artifact_bytes(meta, &kind).unwrap();
+            assert!(f > 0.0 && b > 0.0, "{name}");
+            // Aggregations are bandwidth-bound: intensity < 1 FLOP/byte.
+            if kind.starts_with("fedavg") {
+                assert!(f / b < 1.0, "{name} intensity {}", f / b);
+            }
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! `artifacts/manifest.json` parsing — the contract between the Python
+//! AOT pipeline (`python/compile/aot.py`) and the Rust runtime. The Rust
+//! side is entirely manifest-driven: artifact names, input/output
+//! signatures, and per-model metadata all come from here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorMeta> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tensor meta missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        Ok(TensorMeta {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("tensor meta missing name"))?
+                .to_string(),
+            dtype: j
+                .get("dtype")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("tensor meta missing dtype"))?
+                .to_string(),
+            shape,
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// Per-model metadata (batch sizes, param counts, data signature).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub param_count: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub train_inputs: Vec<TensorMeta>,
+    pub eval_inputs: Vec<TensorMeta>,
+    /// FedAvg aggregation artifacts exist for these client counts.
+    pub agg_client_counts: Vec<usize>,
+    /// Model-specific extras (classes, vocab, seq_len, ...).
+    pub extra: BTreeMap<String, f64>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactMeta>,
+    models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    file: a
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("artifact missing file"))?
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.get("models").as_obj() {
+            for (name, m) in obj {
+                let tensor_list = |key: &str| -> anyhow::Result<Vec<TensorMeta>> {
+                    m.get(key)
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorMeta::from_json)
+                        .collect()
+                };
+                let mut extra = BTreeMap::new();
+                if let Some(mo) = m.as_obj() {
+                    for (k, v) in mo {
+                        if let Some(n) = v.as_f64() {
+                            if ![
+                                "param_count",
+                                "train_batch",
+                                "eval_batch",
+                            ]
+                            .contains(&k.as_str())
+                            {
+                                extra.insert(k.clone(), n);
+                            }
+                        }
+                    }
+                }
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name: name.clone(),
+                        param_count: m
+                            .get("param_count")
+                            .as_usize()
+                            .ok_or_else(|| anyhow::anyhow!("model missing param_count"))?,
+                        train_batch: m
+                            .get("train_batch")
+                            .as_usize()
+                            .ok_or_else(|| anyhow::anyhow!("model missing train_batch"))?,
+                        eval_batch: m
+                            .get("eval_batch")
+                            .as_usize()
+                            .ok_or_else(|| anyhow::anyhow!("model missing eval_batch"))?,
+                        train_inputs: tensor_list("train_inputs")?,
+                        eval_inputs: tensor_list("eval_inputs")?,
+                        agg_client_counts: m
+                            .get("agg_client_counts")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|x| x.as_usize())
+                            .collect(),
+                        extra,
+                    },
+                );
+            }
+        }
+        Ok(Manifest { artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.get(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "m_init", "file": "m_init.hlo.txt",
+         "inputs": [{"name":"seed","dtype":"i32","shape":[1]}],
+         "outputs": [{"name":"params","dtype":"f32","shape":[10]}]},
+        {"name": "m_train_step", "file": "m_train_step.hlo.txt",
+         "inputs": [{"name":"params","dtype":"f32","shape":[10]},
+                    {"name":"x","dtype":"f32","shape":[4,2]},
+                    {"name":"lr","dtype":"f32","shape":[1]}],
+         "outputs": [{"name":"params","dtype":"f32","shape":[10]},
+                     {"name":"loss","dtype":"f32","shape":[]}]}
+      ],
+      "models": {
+        "m": {"param_count": 10, "train_batch": 4, "eval_batch": 8,
+              "train_inputs": [{"name":"x","dtype":"f32","shape":[4,2]}],
+              "eval_inputs": [{"name":"x","dtype":"f32","shape":[8,2]}],
+              "agg_client_counts": [2, 4],
+              "classes": 10}
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifact_names(), vec!["m_init", "m_train_step"]);
+        let ts = m.artifact("m_train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 3);
+        assert_eq!(ts.inputs[1].shape, vec![4, 2]);
+        assert_eq!(ts.inputs[1].elems(), 8);
+        assert_eq!(ts.outputs[1].elems(), 1); // scalar
+        let model = m.model("m").unwrap();
+        assert_eq!(model.param_count, 10);
+        assert_eq!(model.agg_client_counts, vec![2, 4]);
+        assert_eq!(model.extra["classes"], 10.0);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("[]").is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"file":"f"}]}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let path = crate::runtime::default_artifacts_dir().join("manifest.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        for name in ["cnn", "transformer"] {
+            let model = m.model(name).unwrap();
+            assert!(model.param_count > 0);
+            for suffix in ["init", "train_step", "eval_batch"] {
+                assert!(
+                    m.artifact(&format!("{name}_{suffix}")).is_some(),
+                    "missing {name}_{suffix}"
+                );
+            }
+            for k in &model.agg_client_counts {
+                assert!(m.artifact(&format!("fedavg_{name}_k{k}")).is_some());
+            }
+        }
+    }
+}

@@ -1,0 +1,428 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, described by `artifacts/manifest.json`) and
+//! executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so all
+//! compute runs on dedicated *compute service* threads that own a client
+//! and an executable cache; the rest of the system talks to them through
+//! a cloneable, thread-safe [`ComputeHandle`] (request channel). This
+//! also mirrors the deployment reality the paper assumes: each site owns
+//! its accelerator, and concurrent jobs on a site share it through a
+//! queue.
+//!
+//! Python is never on this path: artifacts are produced once by
+//! `make artifacts` (see `python/compile/aot.py`).
+
+pub mod cost;
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+pub use manifest::{ArtifactMeta, Manifest, ModelMeta, TensorMeta};
+
+/// A host-side tensor crossing the compute boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl TensorData {
+    pub fn scalar_f32(v: f32) -> TensorData {
+        TensorData::F32(vec![v], vec![1])
+    }
+
+    pub fn scalar_i32(v: i32) -> TensorData {
+        TensorData::I32(vec![v], vec![1])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorData::F32(_, s) | TensorData::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v, _) => v.len(),
+            TensorData::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            TensorData::I32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like loss).
+    pub fn first(&self) -> Option<f64> {
+        match self {
+            TensorData::F32(v, _) => v.first().map(|x| *x as f64),
+            TensorData::I32(v, _) => v.first().map(|x| *x as f64),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ComputeError {
+    #[error("compute: unknown artifact '{0}'")]
+    UnknownArtifact(String),
+    #[error("compute: artifact '{artifact}' input {index}: expected {expected}, got {got}")]
+    BadInput {
+        artifact: String,
+        index: usize,
+        expected: String,
+        got: String,
+    },
+    #[error("compute: xla: {0}")]
+    Xla(String),
+    #[error("compute: service stopped")]
+    Stopped,
+}
+
+struct ExecuteReq {
+    artifact: String,
+    inputs: Vec<TensorData>,
+    resp: Sender<Result<Vec<TensorData>, ComputeError>>,
+}
+
+/// Cloneable, thread-safe handle to the compute service. Requests are
+/// round-robined across the service's worker threads.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    workers: Arc<Vec<Sender<ExecuteReq>>>,
+    next: Arc<AtomicUsize>,
+    manifest: Arc<Manifest>,
+}
+
+impl ComputeHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact synchronously; inputs are validated against
+    /// the manifest before dispatch.
+    pub fn execute(
+        &self,
+        artifact: &str,
+        inputs: Vec<TensorData>,
+    ) -> Result<Vec<TensorData>, ComputeError> {
+        let meta = self
+            .manifest
+            .artifact(artifact)
+            .ok_or_else(|| ComputeError::UnknownArtifact(artifact.to_string()))?;
+        validate_inputs(meta, &inputs)?;
+        let (tx, rx) = channel();
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        self.workers[idx]
+            .send(ExecuteReq {
+                artifact: artifact.to_string(),
+                inputs,
+                resp: tx,
+            })
+            .map_err(|_| ComputeError::Stopped)?;
+        rx.recv().map_err(|_| ComputeError::Stopped)?
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.manifest.artifact(name).is_some()
+    }
+}
+
+fn validate_inputs(meta: &ArtifactMeta, inputs: &[TensorData]) -> Result<(), ComputeError> {
+    if inputs.len() != meta.inputs.len() {
+        return Err(ComputeError::BadInput {
+            artifact: meta.name.clone(),
+            index: inputs.len(),
+            expected: format!("{} inputs", meta.inputs.len()),
+            got: format!("{} inputs", inputs.len()),
+        });
+    }
+    for (i, (got, want)) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
+        let dtype_ok = matches!(
+            (got, want.dtype.as_str()),
+            (TensorData::F32(..), "f32") | (TensorData::I32(..), "i32")
+        );
+        // Scalars are passed as shape-[1] (see aot.py).
+        let want_elems: usize = want.shape.iter().product::<usize>().max(1);
+        if !dtype_ok || got.len() != want_elems {
+            return Err(ComputeError::BadInput {
+                artifact: meta.name.clone(),
+                index: i,
+                expected: format!("{}{:?}", want.dtype, want.shape),
+                got: format!("{:?} len {}", got.shape(), got.len()),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// The compute service: `n_threads` workers, each owning a PJRT CPU
+/// client and lazily-compiled executable cache.
+pub struct ComputeService {
+    handle: ComputeHandle,
+}
+
+impl ComputeService {
+    /// Start the service for the artifact directory (must contain
+    /// `manifest.json`).
+    pub fn start(artifacts_dir: impl AsRef<Path>, n_threads: usize) -> anyhow::Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Arc::new(Manifest::load(&dir.join("manifest.json"))?);
+        let n = n_threads.max(1);
+        let mut senders = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<ExecuteReq>();
+            senders.push(tx);
+            let manifest = manifest.clone();
+            let dir = dir.clone();
+            std::thread::Builder::new()
+                .name(format!("compute-{i}"))
+                .spawn(move || worker_loop(dir, manifest, rx))?;
+        }
+        Ok(Self {
+            handle: ComputeHandle {
+                workers: Arc::new(senders),
+                next: Arc::new(AtomicUsize::new(0)),
+                manifest,
+            },
+        })
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+}
+
+fn worker_loop(dir: PathBuf, manifest: Arc<Manifest>, rx: Receiver<ExecuteReq>) {
+    // The PJRT client and executables live (and die) on this thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            log::error!("PJRT CPU client failed: {e}");
+            // Drain requests with errors.
+            while let Ok(req) = rx.recv() {
+                let _ = req
+                    .resp
+                    .send(Err(ComputeError::Xla(format!("client init failed: {e}"))));
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        let result = execute_one(&dir, &manifest, &client, &mut cache, &req);
+        let _ = req.resp.send(result);
+    }
+}
+
+fn execute_one(
+    dir: &Path,
+    manifest: &Manifest,
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &ExecuteReq,
+) -> Result<Vec<TensorData>, ComputeError> {
+    let meta = manifest
+        .artifact(&req.artifact)
+        .ok_or_else(|| ComputeError::UnknownArtifact(req.artifact.clone()))?;
+
+    if !cache.contains_key(&req.artifact) {
+        let t0 = std::time::Instant::now();
+        let path = dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| ComputeError::Xla(format!("load {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| ComputeError::Xla(format!("compile {}: {e}", req.artifact)))?;
+        log::info!("compiled artifact {} in {:?}", req.artifact, t0.elapsed());
+        crate::telemetry::bump("compute.compiles", 1);
+        cache.insert(req.artifact.clone(), exe);
+    }
+    let exe = cache.get(&req.artifact).unwrap();
+
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for t in &req.inputs {
+        literals.push(to_literal(t)?);
+    }
+    let t0 = std::time::Instant::now();
+    let buffers = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| ComputeError::Xla(format!("execute {}: {e}", req.artifact)))?;
+    let tuple = buffers[0][0]
+        .to_literal_sync()
+        .map_err(|e| ComputeError::Xla(e.to_string()))?;
+    crate::telemetry::bump("compute.executions", 1);
+    crate::telemetry::bump("compute.exec_micros", t0.elapsed().as_micros() as i64);
+
+    // aot.py lowers with return_tuple=True: always a tuple literal.
+    let parts = tuple
+        .to_tuple()
+        .map_err(|e| ComputeError::Xla(format!("untuple: {e}")))?;
+    let mut out = Vec::with_capacity(parts.len());
+    for lit in parts {
+        out.push(from_literal(&lit)?);
+    }
+    Ok(out)
+}
+
+fn to_literal(t: &TensorData) -> Result<xla::Literal, ComputeError> {
+    let (lit, shape): (xla::Literal, Vec<i64>) = match t {
+        TensorData::F32(v, s) => (
+            xla::Literal::vec1(v),
+            s.iter().map(|d| *d as i64).collect(),
+        ),
+        TensorData::I32(v, s) => (
+            xla::Literal::vec1(v),
+            s.iter().map(|d| *d as i64).collect(),
+        ),
+    };
+    lit.reshape(&shape)
+        .map_err(|e| ComputeError::Xla(format!("reshape input: {e}")))
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<TensorData, ComputeError> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| ComputeError::Xla(e.to_string()))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| ComputeError::Xla(e.to_string()))?;
+            Ok(TensorData::F32(v, dims))
+        }
+        xla::ElementType::S32 => {
+            let v = lit
+                .to_vec::<i32>()
+                .map_err(|e| ComputeError::Xla(e.to_string()))?;
+            Ok(TensorData::I32(v, dims))
+        }
+        other => Err(ComputeError::Xla(format!(
+            "unsupported output element type {other:?}"
+        ))),
+    }
+}
+
+/// Locate the repo's artifacts directory: `$FLARELINK_ARTIFACTS`, else
+/// `artifacts/` relative to the crate root (works for tests/benches),
+/// else relative to the current dir.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FLARELINK_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let from_crate = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if from_crate.exists() {
+        return from_crate;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Shared process-wide compute service (one client pool reused by all
+/// federations in this process).
+static GLOBAL: Mutex<Option<ComputeHandle>> = Mutex::new(None);
+
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+pub fn global_compute(n_threads: usize) -> anyhow::Result<ComputeHandle> {
+    let mut g = GLOBAL.lock().unwrap();
+    if let Some(h) = g.as_ref() {
+        return Ok(h.clone());
+    }
+    let svc = ComputeService::start(default_artifacts_dir(), n_threads)?;
+    let h = svc.handle();
+    *g = Some(h.clone());
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_data_accessors() {
+        let t = TensorData::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(t.as_i32().is_none());
+        assert_eq!(t.first(), Some(1.0));
+        let s = TensorData::scalar_i32(7);
+        assert_eq!(s.first(), Some(7.0));
+    }
+
+    fn toy_meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "toy".into(),
+            file: "toy.hlo.txt".into(),
+            inputs: vec![
+                TensorMeta {
+                    name: "a".into(),
+                    dtype: "f32".into(),
+                    shape: vec![2, 3],
+                },
+                TensorMeta {
+                    name: "s".into(),
+                    dtype: "i32".into(),
+                    shape: vec![1],
+                },
+            ],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        let meta = toy_meta();
+        validate_inputs(
+            &meta,
+            &[
+                TensorData::F32(vec![0.0; 6], vec![2, 3]),
+                TensorData::scalar_i32(1),
+            ],
+        )
+        .unwrap();
+        // wrong arity
+        assert!(validate_inputs(&meta, &[TensorData::scalar_i32(1)]).is_err());
+        // wrong dtype
+        assert!(validate_inputs(
+            &meta,
+            &[
+                TensorData::I32(vec![0; 6], vec![2, 3]),
+                TensorData::scalar_i32(1)
+            ],
+        )
+        .is_err());
+        // wrong element count
+        assert!(validate_inputs(
+            &meta,
+            &[
+                TensorData::F32(vec![0.0; 5], vec![5]),
+                TensorData::scalar_i32(1)
+            ],
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! Telemetry substrate: leveled logging (the `log` crate facade with our
+//! own sink) and a process-wide counter registry used by the SCP/CCP and
+//! the bench harness to report routing/retry/byte counts.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+// ---------------------------------------------------------------------------
+// Logging
+// ---------------------------------------------------------------------------
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &log::Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:<5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; level from `FLARELINK_LOG` (error|warn|info|
+/// debug|trace), default `warn` so tests/benches stay quiet.
+pub fn init_logging() {
+    static ONCE: Lazy<()> = Lazy::new(|| {
+        let level = match std::env::var("FLARELINK_LOG").as_deref() {
+            Ok("error") => log::LevelFilter::Error,
+            Ok("info") => log::LevelFilter::Info,
+            Ok("debug") => log::LevelFilter::Debug,
+            Ok("trace") => log::LevelFilter::Trace,
+            Ok("off") => log::LevelFilter::Off,
+            _ => log::LevelFilter::Warn,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+    Lazy::force(&ONCE);
+}
+
+// ---------------------------------------------------------------------------
+// Counters
+// ---------------------------------------------------------------------------
+
+static COUNTERS: Lazy<Mutex<BTreeMap<String, &'static AtomicI64>>> =
+    Lazy::new(|| Mutex::new(BTreeMap::new()));
+
+/// Fetch-or-create a named process-wide counter. The returned reference is
+/// 'static (counters are never dropped), so hot paths can cache it.
+pub fn counter(name: &str) -> &'static AtomicI64 {
+    let mut map = COUNTERS.lock().unwrap();
+    if let Some(c) = map.get(name) {
+        return c;
+    }
+    let c: &'static AtomicI64 = Box::leak(Box::new(AtomicI64::new(0)));
+    map.insert(name.to_string(), c);
+    c
+}
+
+pub fn bump(name: &str, delta: i64) {
+    counter(name).fetch_add(delta, Ordering::Relaxed);
+}
+
+/// Snapshot of all counters (sorted by name).
+pub fn snapshot() -> Vec<(String, i64)> {
+    COUNTERS
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// Reset all counters to zero (bench harness runs).
+pub fn reset_counters() {
+    for (_, v) in COUNTERS.lock().unwrap().iter() {
+        v.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        bump("test.a", 2);
+        bump("test.a", 3);
+        bump("test.b", 1);
+        let snap: BTreeMap<String, i64> = snapshot().into_iter().collect();
+        assert!(snap["test.a"] >= 5);
+        assert!(snap["test.b"] >= 1);
+    }
+
+    #[test]
+    fn counter_identity_is_stable() {
+        let a = counter("test.identity") as *const _;
+        let b = counter("test.identity") as *const _;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        bump("test.reset", 7);
+        reset_counters();
+        assert_eq!(counter("test.reset").load(Ordering::Relaxed), 0);
+    }
+}

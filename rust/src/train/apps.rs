@@ -1,0 +1,371 @@
+//! FL job configuration + factories wiring real models (CNN /
+//! transformer artifacts) into Flower apps — both the native path and
+//! the FLARE-bridged path build their ClientApps/ServerApp through the
+//! SAME functions here, which is what makes the Fig. 5 comparison a
+//! pure transport experiment.
+
+use std::sync::Arc;
+
+use crate::bridge::FlowerAppBuilder;
+use crate::flare::job::JobCtx;
+use crate::flower::clientapp::ClientApp;
+use crate::flower::serverapp::{ServerApp, ServerConfig};
+use crate::flower::dp::{DpConfig, DpMod};
+use crate::flower::mods::{ClientMod, ModStack};
+use crate::flower::secagg::{SecAggFedAvg, SecAggMod};
+use crate::flower::strategy::{
+    Aggregator, FedAdagrad, FedAdam, FedAvg, FedAvgM, FedMedian, FedOptConfig, FedProx,
+    FedYogi, Krum, Strategy, TrimmedMean,
+};
+use crate::runtime::{ComputeHandle, TensorData};
+use crate::train::data::{ImageShard, ImageSpec, TokenShard};
+use crate::train::trainer::{LocalData, TrainerClientApp};
+use crate::util::json::Json;
+
+/// Everything an FL job needs, JSON-serializable (the FLARE job config).
+#[derive(Clone, Debug)]
+pub struct FlJobConfig {
+    pub model: String, // "cnn" | "transformer"
+    pub strategy: String,
+    pub rounds: u64,
+    pub clients: usize,
+    pub lr: f32,
+    pub local_steps: u64,
+    pub n_train_per_client: usize,
+    pub n_test_per_client: usize,
+    pub seed: u64,
+    /// Label-skew for image shards (0 = IID).
+    pub skew: f64,
+    /// FedProx mu (used when strategy == "fedprox").
+    pub proximal_mu: f64,
+    /// Hybrid experiment tracking (§5.2 / Fig. 6).
+    pub track: bool,
+    /// Client-side DP (Gaussian mechanism): 0.0 disables; otherwise the
+    /// noise multiplier z (sigma = z * dp_clip).
+    pub dp_noise: f64,
+    /// L2 clip bound for DP deltas.
+    pub dp_clip: f64,
+    /// Use the Pallas PJRT aggregation artifact when shapes allow.
+    pub pjrt_aggregation: bool,
+}
+
+impl Default for FlJobConfig {
+    fn default() -> Self {
+        Self {
+            model: "cnn".into(),
+            strategy: "fedavg".into(),
+            rounds: 3,
+            clients: 2,
+            lr: 0.05,
+            local_steps: 4,
+            n_train_per_client: 256,
+            n_test_per_client: 256,
+            seed: 42,
+            skew: 0.0,
+            proximal_mu: 0.0,
+            track: false,
+            dp_noise: 0.0,
+            dp_clip: 1.0,
+            pjrt_aggregation: true,
+        }
+    }
+}
+
+impl FlJobConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("clients", Json::num(self.clients as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("local_steps", Json::num(self.local_steps as f64)),
+            ("n_train_per_client", Json::num(self.n_train_per_client as f64)),
+            ("n_test_per_client", Json::num(self.n_test_per_client as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("skew", Json::num(self.skew)),
+            ("proximal_mu", Json::num(self.proximal_mu)),
+            ("track", Json::Bool(self.track)),
+            ("dp_noise", Json::num(self.dp_noise)),
+            ("dp_clip", Json::num(self.dp_clip)),
+            ("pjrt_aggregation", Json::Bool(self.pjrt_aggregation)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> FlJobConfig {
+        let d = FlJobConfig::default();
+        FlJobConfig {
+            model: j.get("model").as_str().unwrap_or(&d.model).to_string(),
+            strategy: j.get("strategy").as_str().unwrap_or(&d.strategy).to_string(),
+            rounds: j.get("rounds").as_u64().unwrap_or(d.rounds),
+            clients: j.get("clients").as_usize().unwrap_or(d.clients),
+            lr: j.get("lr").as_f64().unwrap_or(d.lr as f64) as f32,
+            local_steps: j.get("local_steps").as_u64().unwrap_or(d.local_steps),
+            n_train_per_client: j
+                .get("n_train_per_client")
+                .as_usize()
+                .unwrap_or(d.n_train_per_client),
+            n_test_per_client: j
+                .get("n_test_per_client")
+                .as_usize()
+                .unwrap_or(d.n_test_per_client),
+            seed: j.get("seed").as_u64().unwrap_or(d.seed),
+            skew: j.get("skew").as_f64().unwrap_or(d.skew),
+            proximal_mu: j.get("proximal_mu").as_f64().unwrap_or(d.proximal_mu),
+            track: j.get("track").as_bool().unwrap_or(d.track),
+            dp_noise: j.get("dp_noise").as_f64().unwrap_or(d.dp_noise),
+            dp_clip: j.get("dp_clip").as_f64().unwrap_or(d.dp_clip),
+            pjrt_aggregation: j
+                .get("pjrt_aggregation")
+                .as_bool()
+                .unwrap_or(d.pjrt_aggregation),
+        }
+    }
+}
+
+/// Instantiate a strategy by name.
+pub fn make_strategy(
+    cfg: &FlJobConfig,
+    compute: Option<ComputeHandle>,
+) -> anyhow::Result<Box<dyn Strategy>> {
+    let agg = match (cfg.pjrt_aggregation, compute) {
+        (true, Some(h)) => Aggregator::pjrt(h, &cfg.model),
+        _ => Aggregator::host(),
+    };
+    Ok(match cfg.strategy.as_str() {
+        "fedavg" => Box::new(FedAvg::new(agg)),
+        "fedavgm" => Box::new(FedAvgM::new(agg, 0.9, 1.0)),
+        "fedadam" => Box::new(FedAdam::new(agg, FedOptConfig::default())),
+        "fedadagrad" => Box::new(FedAdagrad::new(agg, FedOptConfig::default())),
+        "fedyogi" => Box::new(FedYogi::new(agg, FedOptConfig::default())),
+        "fedprox" => Box::new(FedProx::new(agg, cfg.proximal_mu)),
+        "fedmedian" => Box::new(FedMedian),
+        "trimmed_mean" => Box::new(TrimmedMean { trim: 1 }),
+        "krum" => Box::new(Krum { f: 1 }),
+        "secagg_fedavg" => Box::new(SecAggFedAvg::new(cfg.seed)),
+        other => anyhow::bail!("unknown strategy '{other}'"),
+    })
+}
+
+/// Generate site `idx`'s local data for the job config.
+pub fn make_data(cfg: &FlJobConfig, idx: usize, compute: &ComputeHandle) -> LocalData {
+    match cfg.model.as_str() {
+        "transformer" => {
+            let m = compute.manifest().model("transformer");
+            let (vocab, seq_len) = m
+                .map(|m| {
+                    (
+                        m.extra.get("vocab").copied().unwrap_or(256.0) as usize,
+                        m.extra.get("seq_len").copied().unwrap_or(64.0) as usize,
+                    )
+                })
+                .unwrap_or((256, 64));
+            LocalData::Tokens(Arc::new(TokenShard::generate(
+                cfg.seed,
+                idx,
+                vocab,
+                seq_len,
+                cfg.n_train_per_client,
+                cfg.n_test_per_client,
+            )))
+        }
+        _ => {
+            let spec = ImageSpec {
+                skew: cfg.skew,
+                sites: cfg.clients,
+                ..Default::default()
+            };
+            LocalData::Images(Arc::new(ImageShard::generate(
+                cfg.seed,
+                idx,
+                &spec,
+                cfg.n_train_per_client,
+                cfg.n_test_per_client,
+            )))
+        }
+    }
+}
+
+/// Build site `idx`'s ClientApp (shared by native and bridged paths):
+/// the PJRT trainer, wrapped in the mod chain the config requests
+/// (DP and/or secure-aggregation masking).
+pub fn make_client(
+    cfg: &FlJobConfig,
+    idx: usize,
+    compute: ComputeHandle,
+    tracker: Option<crate::flare::tracking::SummaryWriter>,
+) -> Arc<dyn ClientApp> {
+    let inner = Arc::new(TrainerClientApp {
+        data: make_data(cfg, idx, &compute),
+        compute,
+        model: cfg.model.clone(),
+        lr: cfg.lr,
+        local_steps: cfg.local_steps,
+        tracker,
+    });
+    let mut mods: Vec<Arc<dyn ClientMod>> = Vec::new();
+    // SecAgg must be OUTERMOST (it transforms the wire representation).
+    if cfg.strategy == "secagg_fedavg" {
+        mods.push(Arc::new(SecAggMod));
+    }
+    if cfg.dp_noise > 0.0 {
+        mods.push(Arc::new(DpMod::new(DpConfig {
+            clip: cfg.dp_clip,
+            noise_multiplier: cfg.dp_noise,
+            seed: cfg.seed ^ 0xD9,
+            ..Default::default()
+        })));
+    }
+    if mods.is_empty() {
+        inner
+    } else {
+        Arc::new(ModStack::new(inner, mods))
+    }
+}
+
+/// Initial global parameters via the `<model>_init` artifact.
+pub fn initial_parameters(
+    cfg: &FlJobConfig,
+    compute: &ComputeHandle,
+) -> anyhow::Result<Vec<f32>> {
+    let out = compute.execute(
+        &format!("{}_init", cfg.model),
+        vec![TensorData::I32(vec![cfg.seed as i32], vec![1])],
+    )?;
+    match out.into_iter().next() {
+        Some(TensorData::F32(v, _)) => Ok(v),
+        other => anyhow::bail!("init returned {other:?}"),
+    }
+}
+
+/// Build the ServerApp (shared by native and bridged paths).
+pub fn make_server_app(
+    cfg: &FlJobConfig,
+    compute: ComputeHandle,
+) -> anyhow::Result<ServerApp> {
+    let initial = initial_parameters(cfg, &compute)?;
+    let strategy = make_strategy(cfg, Some(compute))?;
+    Ok(ServerApp::new(
+        strategy,
+        ServerConfig {
+            num_rounds: cfg.rounds,
+            min_nodes: cfg.clients,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+        initial,
+    ))
+}
+
+/// Run the whole FL job NATIVELY (Fig. 5a: no FLARE anywhere).
+pub fn run_native_fl(
+    cfg: &FlJobConfig,
+    compute: ComputeHandle,
+) -> anyhow::Result<crate::flower::serverapp::History> {
+    let mut server = make_server_app(cfg, compute.clone())?;
+    let clients: Vec<Arc<dyn ClientApp>> = (0..cfg.clients)
+        .map(|i| make_client(cfg, i, compute.clone(), None))
+        .collect();
+    crate::flower::run::run_native(&mut server, clients, 1)
+}
+
+/// [`FlowerAppBuilder`] reading the job config from the FLARE JobCtx —
+/// this is what `nvflare job submit` deploys (Fig. 5b path).
+pub struct TrainedFlowerApp {
+    pub compute: ComputeHandle,
+}
+
+impl FlowerAppBuilder for TrainedFlowerApp {
+    fn build_client(&self, ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>> {
+        let cfg = FlJobConfig::from_json(&ctx.config);
+        let idx = ctx
+            .participants
+            .iter()
+            .position(|s| s == &ctx.site)
+            .ok_or_else(|| anyhow::anyhow!("site {} not in participants", ctx.site))?;
+        let tracker = if cfg.track {
+            Some(ctx.tracker.clone())
+        } else {
+            None
+        };
+        Ok(make_client(&cfg, idx, self.compute.clone(), tracker))
+    }
+
+    fn build_server(&self, ctx: &JobCtx) -> anyhow::Result<ServerApp> {
+        let mut cfg = FlJobConfig::from_json(&ctx.config);
+        // The job's participant count overrides the config's default.
+        cfg.clients = ctx.participants.len();
+        make_server_app(&cfg, self.compute.clone())
+    }
+
+    fn track(&self) -> bool {
+        false // server-side tracking is opt-in via config; clients track themselves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = FlJobConfig {
+            model: "transformer".into(),
+            strategy: "fedadam".into(),
+            rounds: 7,
+            clients: 4,
+            lr: 0.1,
+            local_steps: 2,
+            n_train_per_client: 100,
+            n_test_per_client: 50,
+            seed: 9,
+            skew: 0.5,
+            proximal_mu: 0.01,
+            track: true,
+            pjrt_aggregation: false,
+            dp_noise: 0.5,
+            dp_clip: 2.0,
+        };
+        let back = FlJobConfig::from_json(&cfg.to_json());
+        assert_eq!(back.model, "transformer");
+        assert_eq!(back.strategy, "fedadam");
+        assert_eq!(back.rounds, 7);
+        assert_eq!(back.clients, 4);
+        assert_eq!(back.seed, 9);
+        assert!(back.track);
+        assert!(!back.pjrt_aggregation);
+        assert!((back.skew - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_json_fills_defaults() {
+        let cfg = FlJobConfig::from_json(&Json::parse(r#"{"rounds": 5}"#).unwrap());
+        assert_eq!(cfg.rounds, 5);
+        assert_eq!(cfg.model, "cnn");
+        assert_eq!(cfg.clients, 2);
+    }
+
+    #[test]
+    fn make_strategy_all_names() {
+        let cfg = FlJobConfig::default();
+        for name in [
+            "fedavg",
+            "fedavgm",
+            "fedadam",
+            "fedadagrad",
+            "fedyogi",
+            "fedprox",
+            "fedmedian",
+            "trimmed_mean",
+            "krum",
+            "secagg_fedavg",
+        ] {
+            let mut c = cfg.clone();
+            c.strategy = name.into();
+            assert!(make_strategy(&c, None).is_ok(), "{name}");
+        }
+        let mut c = cfg;
+        c.strategy = "alien".into();
+        assert!(make_strategy(&c, None).is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! Synthetic federated datasets (DESIGN.md §Substitutions: the paper's
+//! CIFAR-10 is replaced by deterministic PRNG-generated data with real
+//! class structure so learning curves are meaningful, and no downloads
+//! are needed offline).
+//!
+//! * [`ImageShard`] — CIFAR-like: K class prototypes in R^(32*32*3);
+//!   sample = prototype + noise. A CNN can separate these, so loss falls
+//!   and accuracy rises across FL rounds (what Fig. 5/6 plot).
+//! * [`TokenShard`] — language-modeling-like: sequences generated from a
+//!   global bigram table with small per-position noise; a causal LM
+//!   learns the table and its loss drops well below ln(V).
+//!
+//! Everything derives from a single u64 seed + site index, so every
+//! client regenerates identical data in every process on every run —
+//! the foundation of the Fig. 5 bit-exactness experiment.
+
+use crate::util::rng::Rng;
+
+/// One site's image-classification shard.
+#[derive(Clone, Debug)]
+pub struct ImageShard {
+    /// Flattened NHWC train images, length n_train * elems.
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+    /// Elements per image (e.g. 32*32*3).
+    pub elems: usize,
+    pub classes: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ImageSpec {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub classes: usize,
+    /// Noise stddev around the class prototype (higher = harder task).
+    pub noise: f32,
+    /// Label-skew knob: 0.0 = IID; 1.0 = each site sees mostly
+    /// (classes/sites) of the classes (non-IID federations).
+    pub skew: f64,
+    pub sites: usize,
+}
+
+impl Default for ImageSpec {
+    fn default() -> Self {
+        Self {
+            height: 32,
+            width: 32,
+            channels: 3,
+            classes: 10,
+            noise: 0.6,
+            skew: 0.0,
+            sites: 2,
+        }
+    }
+}
+
+impl ImageSpec {
+    pub fn elems(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+}
+
+/// Class prototypes are derived from `seed` ONLY (shared by all sites —
+/// this is "the dataset"); per-site sampling uses (seed, site).
+fn prototypes(seed: u64, spec: &ImageSpec) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed).split(0xD417A);
+    (0..spec.classes)
+        .map(|_| {
+            (0..spec.elems())
+                .map(|_| rng.normal_f32())
+                .collect::<Vec<f32>>()
+        })
+        .collect()
+}
+
+impl ImageShard {
+    /// Generate site `site_idx`'s shard.
+    pub fn generate(
+        seed: u64,
+        site_idx: usize,
+        spec: &ImageSpec,
+        n_train: usize,
+        n_test: usize,
+    ) -> ImageShard {
+        let protos = prototypes(seed, spec);
+        let elems = spec.elems();
+        let mut rng = Rng::new(seed).split(1000 + site_idx as u64);
+
+        // Label distribution: IID uniform, or skewed toward the classes
+        // "owned" by this site.
+        let own_lo = site_idx * spec.classes / spec.sites.max(1);
+        let own_hi = ((site_idx + 1) * spec.classes / spec.sites.max(1)).max(own_lo + 1);
+        let draw_label = |rng: &mut Rng| -> usize {
+            if rng.next_f64() < spec.skew {
+                rng.range_u64(own_lo as u64, own_hi as u64 - 1) as usize
+            } else {
+                rng.below(spec.classes as u64) as usize
+            }
+        };
+
+        let gen = |n: usize, rng: &mut Rng| {
+            let mut xs = Vec::with_capacity(n * elems);
+            let mut ys = Vec::with_capacity(n);
+            for _ in 0..n {
+                let label = draw_label(rng);
+                let proto = &protos[label];
+                for e in proto.iter().take(elems) {
+                    xs.push(e + spec.noise * rng.normal_f32());
+                }
+                ys.push(label as i32);
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = gen(n_train, &mut rng);
+        let (test_x, test_y) = gen(n_test, &mut rng);
+        ImageShard {
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            elems,
+            classes: spec.classes,
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+}
+
+/// One site's token-sequence shard (for the transformer driver).
+#[derive(Clone, Debug)]
+pub struct TokenShard {
+    /// Row-major [n, seq_len] token ids.
+    pub train: Vec<i32>,
+    pub test: Vec<i32>,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl TokenShard {
+    /// Sequences follow a global bigram table: from token t, the next
+    /// token is one of 4 fixed successors (chosen per step), so the
+    /// optimal cross-entropy is ~ln(4) « ln(vocab).
+    pub fn generate(
+        seed: u64,
+        site_idx: usize,
+        vocab: usize,
+        seq_len: usize,
+        n_train: usize,
+        n_test: usize,
+    ) -> TokenShard {
+        // Global bigram successor table from the dataset seed.
+        let mut trng = Rng::new(seed).split(0xB16);
+        let succ: Vec<[i32; 4]> = (0..vocab)
+            .map(|_| {
+                [
+                    trng.below(vocab as u64) as i32,
+                    trng.below(vocab as u64) as i32,
+                    trng.below(vocab as u64) as i32,
+                    trng.below(vocab as u64) as i32,
+                ]
+            })
+            .collect();
+
+        let mut rng = Rng::new(seed).split(2000 + site_idx as u64);
+        let gen = |n: usize, rng: &mut Rng| {
+            let mut out = Vec::with_capacity(n * seq_len);
+            for _ in 0..n {
+                let mut tok = rng.below(vocab as u64) as i32;
+                out.push(tok);
+                for _ in 1..seq_len {
+                    tok = succ[tok as usize][rng.below(4) as usize];
+                    out.push(tok);
+                }
+            }
+            out
+        };
+        let train = gen(n_train, &mut rng);
+        let test = gen(n_test, &mut rng);
+        TokenShard {
+            train,
+            test,
+            seq_len,
+            vocab,
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train.len() / self.seq_len
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test.len() / self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_shard_shapes() {
+        let spec = ImageSpec::default();
+        let s = ImageShard::generate(1, 0, &spec, 64, 32);
+        assert_eq!(s.train_x.len(), 64 * 32 * 32 * 3);
+        assert_eq!(s.train_y.len(), 64);
+        assert_eq!(s.test_y.len(), 32);
+        assert!(s.train_y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn image_shard_deterministic_per_site() {
+        let spec = ImageSpec::default();
+        let a = ImageShard::generate(7, 1, &spec, 16, 8);
+        let b = ImageShard::generate(7, 1, &spec, 16, 8);
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.train_y, b.train_y);
+        let c = ImageShard::generate(7, 2, &spec, 16, 8);
+        assert_ne!(a.train_x, c.train_x, "different sites differ");
+        let d = ImageShard::generate(8, 1, &spec, 16, 8);
+        assert_ne!(a.train_x, d.train_x, "different seeds differ");
+    }
+
+    #[test]
+    fn image_classes_are_separable() {
+        // Nearest-prototype classification on noiseless prototypes must
+        // be perfect; with noise it should still beat chance easily.
+        let spec = ImageSpec {
+            noise: 0.3,
+            ..Default::default()
+        };
+        let protos = prototypes(3, &spec);
+        let s = ImageShard::generate(3, 0, &spec, 100, 0);
+        let mut correct = 0;
+        for i in 0..100 {
+            let x = &s.train_x[i * s.elems..(i + 1) * s.elems];
+            let mut best = (f32::INFINITY, 0usize);
+            for (c, p) in protos.iter().enumerate() {
+                let d: f32 = x.iter().zip(p.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 as i32 == s.train_y[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 90, "nearest-prototype acc {correct}/100");
+    }
+
+    #[test]
+    fn skew_concentrates_labels() {
+        let spec = ImageSpec {
+            skew: 1.0,
+            sites: 2,
+            ..Default::default()
+        };
+        let s = ImageShard::generate(5, 0, &spec, 200, 0);
+        // Site 0 of 2 owns classes 0..5.
+        assert!(s.train_y.iter().all(|&y| y < 5), "skewed labels leak");
+        let s1 = ImageShard::generate(5, 1, &spec, 200, 0);
+        assert!(s1.train_y.iter().all(|&y| y >= 5));
+    }
+
+    #[test]
+    fn token_shard_follows_bigram_table() {
+        let s = TokenShard::generate(11, 0, 64, 16, 50, 10);
+        assert_eq!(s.train.len(), 50 * 16);
+        assert!(s.train.iter().all(|&t| (0..64).contains(&t)));
+        // Successor sets: each token's successor drawn from <=4 values.
+        use std::collections::{HashMap, HashSet};
+        let mut succ: HashMap<i32, HashSet<i32>> = HashMap::new();
+        for row in s.train.chunks(16) {
+            for w in row.windows(2) {
+                succ.entry(w[0]).or_default().insert(w[1]);
+            }
+        }
+        for (tok, set) in succ {
+            assert!(set.len() <= 4, "token {tok} has {} successors", set.len());
+        }
+    }
+
+    #[test]
+    fn token_shard_deterministic() {
+        let a = TokenShard::generate(2, 3, 32, 8, 10, 2);
+        let b = TokenShard::generate(2, 3, 32, 8, 10, 2);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+    }
+}

@@ -1,0 +1,14 @@
+//! Training stack: synthetic federated datasets, the PJRT-backed
+//! TrainerClientApp, and factories composing them into Flower apps for
+//! both deployment paths (native and FLARE-bridged).
+
+pub mod apps;
+pub mod data;
+pub mod trainer;
+
+pub use apps::{
+    initial_parameters, make_client, make_data, make_server_app, make_strategy,
+    run_native_fl, FlJobConfig, TrainedFlowerApp,
+};
+pub use data::{ImageShard, ImageSpec, TokenShard};
+pub use trainer::{LocalData, TrainerClientApp};

@@ -1,0 +1,220 @@
+//! Fault-injecting endpoint decorator for the ReliableMessage experiments
+//! (DESIGN.md E3): drops frames with probability `drop_prob` on send and
+//! adds fixed `latency` before delivery on receive. Deterministic given
+//! the seed, so reliability sweeps are reproducible.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::{Endpoint, Frame, TransportError};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Probability a sent frame silently disappears.
+    pub drop_prob: f64,
+    /// One-way delivery latency added on the receive side.
+    pub latency: Duration,
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            drop_prob: 0.0,
+            latency: Duration::ZERO,
+            seed: 0,
+        }
+    }
+}
+
+pub struct FaultEndpoint<E: Endpoint> {
+    inner: E,
+    cfg: FaultConfig,
+    rng: Mutex<Rng>,
+    /// Frames received from inner but not yet "delivered" (latency).
+    pending: Mutex<VecDeque<(Instant, Frame)>>,
+}
+
+impl<E: Endpoint> FaultEndpoint<E> {
+    pub fn new(inner: E, cfg: FaultConfig) -> Self {
+        let rng = Mutex::new(Rng::new(cfg.seed));
+        Self {
+            inner,
+            cfg,
+            rng,
+            pending: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Pull everything currently available from the inner endpoint into
+    /// the latency queue.
+    fn pump(&self) -> Result<(), TransportError> {
+        let mut pending = self.pending.lock().unwrap();
+        while let Some(f) = self.inner.try_recv()? {
+            pending.push_back((Instant::now() + self.cfg.latency, f));
+        }
+        Ok(())
+    }
+
+    fn pop_due(&self) -> Option<Frame> {
+        let mut pending = self.pending.lock().unwrap();
+        if let Some((at, _)) = pending.front() {
+            if *at <= Instant::now() {
+                return pending.pop_front().map(|(_, f)| f);
+            }
+        }
+        None
+    }
+}
+
+impl<E: Endpoint> Endpoint for FaultEndpoint<E> {
+    fn send(&self, frame: Frame) -> Result<(), TransportError> {
+        let dropped = {
+            let mut rng = self.rng.lock().unwrap();
+            rng.chance(self.cfg.drop_prob)
+        };
+        if dropped {
+            crate::telemetry::bump("fault.dropped", 1);
+            return Ok(()); // silently lost — sender believes it went out
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Frame, TransportError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.pump()?;
+            if let Some(f) = self.pop_due() {
+                return Ok(f);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            // Sleep until the earlier of: next pending frame due, a short
+            // poll tick (new inner frames), or the caller deadline.
+            let next_due = self
+                .pending
+                .lock()
+                .unwrap()
+                .front()
+                .map(|(at, _)| *at)
+                .unwrap_or(now + Duration::from_millis(1));
+            let wake = next_due.min(deadline).min(now + Duration::from_millis(1));
+            std::thread::sleep(wake.saturating_duration_since(now));
+        }
+    }
+
+    fn try_recv(&self) -> Result<Option<Frame>, TransportError> {
+        self.pump()?;
+        Ok(self.pop_due())
+    }
+
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+
+    fn close(&self) {
+        self.inner.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::inproc;
+
+    #[test]
+    fn no_faults_is_transparent() {
+        let (a, b) = inproc::pair("a", "b");
+        let fa = FaultEndpoint::new(a, FaultConfig::default());
+        fa.send(vec![1, 2]).unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_secs(1)).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn drop_prob_one_loses_everything() {
+        let (a, b) = inproc::pair("a", "b");
+        let fa = FaultEndpoint::new(
+            a,
+            FaultConfig {
+                drop_prob: 1.0,
+                ..Default::default()
+            },
+        );
+        for _ in 0..10 {
+            fa.send(vec![0]).unwrap(); // "succeeds" but vanishes
+        }
+        assert!(matches!(
+            b.recv_timeout(Duration::from_millis(30)),
+            Err(TransportError::Timeout)
+        ));
+    }
+
+    #[test]
+    fn drop_rate_close_to_configured() {
+        let (a, b) = inproc::pair("a", "b");
+        let fa = FaultEndpoint::new(
+            a,
+            FaultConfig {
+                drop_prob: 0.3,
+                seed: 7,
+                ..Default::default()
+            },
+        );
+        let n = 2000;
+        for i in 0..n {
+            fa.send(vec![(i % 251) as u8]).unwrap();
+        }
+        let mut got = 0;
+        while b.try_recv().unwrap().is_some() {
+            got += 1;
+        }
+        let rate = 1.0 - got as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.05, "drop rate {}", rate);
+    }
+
+    #[test]
+    fn latency_delays_delivery() {
+        let (a, b) = inproc::pair("a", "b");
+        let fb = FaultEndpoint::new(
+            b,
+            FaultConfig {
+                latency: Duration::from_millis(50),
+                ..Default::default()
+            },
+        );
+        a.send(vec![5]).unwrap();
+        let t0 = Instant::now();
+        let f = fb.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(f, vec![5]);
+        assert!(t0.elapsed() >= Duration::from_millis(45), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let (a, b) = inproc::pair("a", "b");
+            let fa = FaultEndpoint::new(
+                a,
+                FaultConfig {
+                    drop_prob: 0.5,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            for i in 0..100u8 {
+                fa.send(vec![i]).unwrap();
+            }
+            let mut got = Vec::new();
+            while let Some(f) = b.try_recv().unwrap() {
+                got.push(f[0]);
+            }
+            got
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+}

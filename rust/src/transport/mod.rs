@@ -1,0 +1,106 @@
+//! Transport substrate — the "multiple communication schemes" of the
+//! paper's §2 (gRPC, HTTP, TCP, ...) realized as pluggable byte-frame
+//! endpoints with identical unary semantics:
+//!
+//! * [`inproc`] — in-process channel pairs (FLARE simulator mode, and the
+//!   default for tests/benches);
+//! * [`tcp`] — length-prefixed frames over TCP (provisioned deployments;
+//!   the stand-in for gRPC, which is unavailable offline — see DESIGN.md
+//!   §Substitutions);
+//! * [`fault`] — a decorator injecting drops/latency for the §4.1
+//!   ReliableMessage experiments (E3).
+//!
+//! Every endpoint moves opaque `Frame`s (byte vectors); all typing lives
+//! in [`crate::proto`].
+
+pub mod fault;
+pub mod inproc;
+pub mod tcp;
+
+use std::time::Duration;
+
+pub type Frame = Vec<u8>;
+
+/// Maximum frame size accepted on the wire (guards allocation). Large
+/// payloads beyond this must go through the chunked streaming path
+/// (see `flare::streaming`).
+pub const MAX_FRAME: usize = 1 << 30;
+
+#[derive(Debug, thiserror::Error)]
+pub enum TransportError {
+    #[error("transport: connection closed")]
+    Closed,
+    #[error("transport: receive timed out")]
+    Timeout,
+    #[error("transport: frame of {0} bytes exceeds MAX_FRAME")]
+    FrameTooLarge(usize),
+    #[error("transport: io: {0}")]
+    Io(String),
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e.to_string())
+    }
+}
+
+/// A bidirectional, ordered, non-reliable-by-contract frame pipe.
+/// (TCP *is* reliable, inproc is too; the contract stays weak so that the
+/// ReliableMessage layer above never assumes it — exactly the paper's
+/// stance, where FLARE re-implements reliability end-to-end.)
+pub trait Endpoint: Send + Sync {
+    fn send(&self, frame: Frame) -> Result<(), TransportError>;
+    fn recv_timeout(&self, timeout: Duration) -> Result<Frame, TransportError>;
+    /// Non-blocking poll.
+    fn try_recv(&self) -> Result<Option<Frame>, TransportError>;
+    /// Human-readable peer label for logs.
+    fn peer(&self) -> String;
+    /// Close the endpoint; subsequent ops fail with `Closed`.
+    fn close(&self);
+}
+
+pub type BoxedEndpoint = Box<dyn Endpoint>;
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    /// Exercise the Endpoint contract shared by all implementations.
+    pub fn exercise_endpoint_pair(a: &dyn Endpoint, b: &dyn Endpoint) {
+        // basic send/recv both directions
+        a.send(vec![1, 2, 3]).unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_secs(1)).unwrap(), vec![1, 2, 3]);
+        b.send(vec![9]).unwrap();
+        assert_eq!(a.recv_timeout(Duration::from_secs(1)).unwrap(), vec![9]);
+
+        // ordering
+        for i in 0..10u8 {
+            a.send(vec![i]).unwrap();
+        }
+        for i in 0..10u8 {
+            assert_eq!(b.recv_timeout(Duration::from_secs(1)).unwrap(), vec![i]);
+        }
+
+        // try_recv empty then full
+        assert!(b.try_recv().unwrap().is_none());
+        a.send(vec![42]).unwrap();
+        // allow for async delivery (tcp)
+        let t0 = std::time::Instant::now();
+        loop {
+            if let Some(f) = b.try_recv().unwrap() {
+                assert_eq!(f, vec![42]);
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(1), "try_recv never saw frame");
+            std::thread::yield_now();
+        }
+
+        // timeout
+        let err = b.recv_timeout(Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout), "{err:?}");
+
+        // empty frame is legal
+        a.send(Vec::new()).unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_secs(1)).unwrap(), Vec::<u8>::new());
+    }
+}

