@@ -112,8 +112,9 @@ fn main() -> anyhow::Result<()> {
     let max_diff = sa
         .history
         .parameters
+        .to_flat()
         .iter()
-        .zip(plain.history.parameters.iter())
+        .zip(plain.history.parameters.to_flat().iter())
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
     println!("\nmax |secagg - plain| final-param difference: {max_diff:.2e}");

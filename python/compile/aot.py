@@ -175,6 +175,10 @@ def main() -> None:
                 {"name": n, "dtype": d, "shape": list(s)}
                 for (n, d, s) in m.eval_inputs
             ],
+            "layers": [
+                {"name": n, "dtype": "f32", "shape": list(s)}
+                for (n, s) in m.specs
+            ],
             "agg_client_counts": list(AGG_CLIENT_COUNTS),
             **m.extra,
         }

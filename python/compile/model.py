@@ -207,6 +207,10 @@ class ModelDef:
     #   [(arg_name, dtype, shape), ...]
     train_inputs: tuple
     eval_inputs: tuple
+    # ordered (name, shape) layer specs of the flat parameter vector --
+    # mirrored into the manifest so the Rust record API can expose the
+    # model as named layer tensors instead of one flat blob
+    specs: tuple
     init_fn: Callable
     train_fn: Callable
     eval_fn: Callable
@@ -229,6 +233,7 @@ def registry() -> Dict[str, ModelDef]:
             ("x", "f32", (be, *CNN_IMG)),
             ("y", "i32", (be,)),
         ),
+        specs=tuple(CNN_SPECS),
         init_fn=cnn_init,
         train_fn=cnn_train_step,
         eval_fn=cnn_eval_batch,
@@ -245,6 +250,7 @@ def registry() -> Dict[str, ModelDef]:
         eval_batch=tbe,
         train_inputs=(("tokens", "i32", (tbt, cfg.seq_len)),),
         eval_inputs=(("tokens", "i32", (tbe, cfg.seq_len)),),
+        specs=tuple(cfg.specs()),
         init_fn=t_init,
         train_fn=t_train,
         eval_fn=t_eval,

@@ -4,6 +4,7 @@
 //! Expected shape: host wins at tiny N (dispatch overhead dominates);
 //! PJRT wins as K*N grows (single fused streaming pass).
 
+use flarelink::flower::records::ArrayRecord;
 use flarelink::flower::strategy::{host_weighted_mean, Aggregator, FitRes};
 use flarelink::util::bench::{bench, Table};
 use flarelink::util::rng::Rng;
@@ -13,7 +14,9 @@ fn results(k: usize, n: usize, seed: u64) -> Vec<FitRes> {
     (0..k)
         .map(|i| FitRes {
             node_id: i as u64 + 1,
-            parameters: (0..n).map(|_| rng.normal_f32()).collect(),
+            parameters: ArrayRecord::from_flat(
+                &(0..n).map(|_| rng.normal_f32()).collect::<Vec<f32>>(),
+            ),
             num_examples: 100 + i as u64,
             metrics: vec![],
         })
@@ -56,8 +59,8 @@ fn main() -> anyhow::Result<()> {
             );
 
             // Correctness cross-check while we're here.
-            let a = host_weighted_mean(&rs);
-            let b = agg.weighted_mean(&rs)?;
+            let a = host_weighted_mean(&rs).to_flat();
+            let b = agg.weighted_mean(&rs)?.to_flat();
             let max_diff = a
                 .iter()
                 .zip(b.iter())

@@ -13,6 +13,7 @@ use flarelink::flare::job::JobCtx;
 use flarelink::flare::sim::FederationBuilder;
 use flarelink::flare::{JobSpec, JobStatus, RetryPolicy};
 use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
+use flarelink::flower::records::ArrayRecord;
 use flarelink::flower::serverapp::{ServerApp, ServerConfig};
 use flarelink::flower::strategy::{Aggregator, FedAvg};
 use flarelink::util::bench::Table;
@@ -33,7 +34,7 @@ struct SlowClient {
 impl ClientApp for SlowClient {
     fn fit(
         &self,
-        p: &[f32],
+        p: &ArrayRecord,
         c: &flarelink::flower::message::ConfigRecord,
     ) -> anyhow::Result<flarelink::flower::clientapp::FitOutput> {
         std::thread::sleep(self.cost);
@@ -41,7 +42,7 @@ impl ClientApp for SlowClient {
     }
     fn evaluate(
         &self,
-        p: &[f32],
+        p: &ArrayRecord,
         c: &flarelink::flower::message::ConfigRecord,
     ) -> anyhow::Result<flarelink::flower::clientapp::EvalOutput> {
         self.inner.evaluate(p, c)
@@ -74,7 +75,7 @@ impl FlowerAppBuilder for SyntheticBuilder {
                 seed: 1,
                 ..Default::default()
             },
-            vec![0.0; 1024],
+            ArrayRecord::from_flat(&[0.0; 1024]),
         ))
     }
 }

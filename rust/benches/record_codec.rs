@@ -1,0 +1,182 @@
+//! Bench: the record codec on a multi-MB, multi-tensor, mixed-dtype
+//! model — encode/decode throughput plus *bytes copied per hop*, making
+//! the zero-copy decode win of the record redesign visible in the bench
+//! trajectory.
+//!
+//! The send path necessarily copies each tensor's payload once into the
+//! frame buffer (serialization). The receive path copies NOTHING:
+//! decoded tensors borrow the frame's allocation, verified both by the
+//! telemetry byte-copy counters and by pointer identity
+//! (`Bytes::shares_allocation`).
+
+use flarelink::flower::message::{FlowerMsg, TaskRes};
+use flarelink::flower::records::{ArrayRecord, Tensor};
+use flarelink::util::bench::{bench_for, fmt_dur, Table};
+use flarelink::util::bytes::Bytes;
+use flarelink::util::rng::Rng;
+use std::time::Duration;
+
+/// A CNN-ish model: a few big conv/dense layers plus small mixed-dtype
+/// side tensors, ~8 MiB total.
+fn model_record(seed: u64) -> ArrayRecord {
+    let mut rng = Rng::new(seed);
+    let mut f32s = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal_f32()).collect() };
+    let conv1 = f32s(64 * 3 * 3 * 3);
+    let conv2 = f32s(128 * 64 * 3 * 3);
+    let dense = f32s(1024 * 1024);
+    let head = f32s(1024 * 10);
+    let mut rng2 = Rng::new(seed ^ 0xBEEF);
+    let bias: Vec<f64> = (0..1024).map(|_| rng2.normal()).collect();
+    let steps: Vec<i64> = (0..256).map(|_| rng2.next_u64() as i64).collect();
+    let mask: Vec<u8> = (0..4096).map(|_| rng2.next_u64() as u8).collect();
+    ArrayRecord::from_tensors(vec![
+        Tensor::from_f32("conv1.weight", vec![64, 3, 3, 3], &conv1),
+        Tensor::from_f32("conv2.weight", vec![128, 64, 3, 3], &conv2),
+        Tensor::from_f32("dense.weight", vec![1024, 1024], &dense),
+        Tensor::from_f32("head.weight", vec![1024, 10], &head),
+        Tensor::from_f64("head.bias", vec![1024], &bias),
+        Tensor::from_i64("opt.steps", vec![256], &steps),
+        Tensor::from_u8("route.mask", vec![4096], &mask),
+    ])
+    .unwrap()
+}
+
+fn counter(name: &str) -> i64 {
+    flarelink::telemetry::snapshot()
+        .into_iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v)
+        .unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    flarelink::telemetry::init_logging();
+
+    let record = model_record(7);
+    let payload_mb = record.total_bytes() as f64 / (1024.0 * 1024.0);
+    println!(
+        "=== record codec: {} tensors, {} elems, {:.1} MiB payload ===\n",
+        record.len(),
+        record.total_elems(),
+        payload_mb
+    );
+
+    let msg = FlowerMsg::PushTaskRes {
+        res: TaskRes {
+            task_id: 1,
+            run_id: 1,
+            node_id: 1,
+            error: String::new(),
+            parameters: record.clone(),
+            num_examples: 128,
+            loss: 0.5,
+            metrics: vec![("accuracy".into(), 0.9)],
+        },
+    };
+    let frame_bytes = msg.encode();
+    let frame_mb = frame_bytes.len() as f64 / (1024.0 * 1024.0);
+
+    // ---- bytes copied per hop (one encode, one decode) ----
+    flarelink::telemetry::reset_counters();
+    let one_frame = msg.encode();
+    let encode_copied = counter("records.encode_bytes_copied");
+    flarelink::telemetry::reset_counters();
+    let shared = Bytes::from_vec(one_frame);
+    let decoded = FlowerMsg::decode_shared(shared.clone())?;
+    let decode_copied = counter("records.encode_bytes_copied")
+        + counter("records.pack_bytes")
+        + counter("bytes.copied");
+    let FlowerMsg::PushTaskRes { res } = &decoded else {
+        anyhow::bail!("wrong decode");
+    };
+    let zero_copy_verified = res
+        .parameters
+        .tensors()
+        .iter()
+        .all(|t| shared.shares_allocation(t.data()));
+
+    println!("bytes copied per hop (tensor payloads):");
+    let mut t = Table::new(&["hop", "payload_bytes", "bytes_copied", "zero_copy"]);
+    t.row(vec![
+        "encode (serialize)".into(),
+        record.total_bytes().to_string(),
+        encode_copied.to_string(),
+        "n/a (send-side copy is the serialization)".into(),
+    ]);
+    t.row(vec![
+        "decode (receive)".into(),
+        record.total_bytes().to_string(),
+        decode_copied.to_string(),
+        zero_copy_verified.to_string(),
+    ]);
+    println!("{}", t.render());
+    anyhow::ensure!(
+        decode_copied == 0,
+        "decode copied {decode_copied} tensor-payload bytes — the zero-copy invariant broke"
+    );
+    anyhow::ensure!(zero_copy_verified, "decoded tensors do not alias the frame");
+
+    // ---- throughput ----
+    let mut t = Table::new(&["op", "MiB", "p50", "p95", "mean", "iters", "GiB/s(p50)"]);
+    let enc = bench_for(2, Duration::from_secs(2), || msg.encode());
+    let gibs = |d: std::time::Duration| frame_mb / 1024.0 / d.as_secs_f64();
+    t.row(vec![
+        "encode".into(),
+        format!("{frame_mb:.1}"),
+        fmt_dur(enc.p50),
+        fmt_dur(enc.p95),
+        fmt_dur(enc.mean),
+        enc.iters.to_string(),
+        format!("{:.2}", gibs(enc.p50)),
+    ]);
+    // The frame buffer is immutable and shared — iterations reuse the
+    // same allocation through O(1) `Bytes` clones, exactly like the
+    // transport handing the link an owned frame.
+    let owned_frame = Bytes::from_vec(frame_bytes.clone());
+    let dec_shared = bench_for(2, Duration::from_secs(2), || {
+        FlowerMsg::decode_shared(owned_frame.clone()).unwrap()
+    });
+    t.row(vec![
+        "decode (zero-copy)".into(),
+        format!("{frame_mb:.1}"),
+        fmt_dur(dec_shared.p50),
+        fmt_dur(dec_shared.p95),
+        fmt_dur(dec_shared.mean),
+        dec_shared.iters.to_string(),
+        format!("{:.2}", gibs(dec_shared.p50)),
+    ]);
+    // Legacy-style copying decode for contrast: decode from a borrowed
+    // slice (forces one full frame copy to obtain shared ownership).
+    let dec_copy = bench_for(2, Duration::from_secs(2), || {
+        FlowerMsg::decode(&frame_bytes).unwrap()
+    });
+    t.row(vec![
+        "decode (copying)".into(),
+        format!("{frame_mb:.1}"),
+        fmt_dur(dec_copy.p50),
+        fmt_dur(dec_copy.p95),
+        fmt_dur(dec_copy.mean),
+        dec_copy.iters.to_string(),
+        format!("{:.2}", gibs(dec_copy.p50)),
+    ]);
+    println!("{}", t.render());
+
+    // ---- fan-out cost: pushing one round's model to N clients ----
+    // Records share tensor buffers, so N TaskIns clones are reference
+    // bumps, not payload copies.
+    let mut t = Table::new(&["clients", "clone_all p50", "per-clone"]);
+    for n in [2usize, 8, 32] {
+        let s = bench_for(1, Duration::from_millis(500), || {
+            (0..n).map(|_| record.clone()).collect::<Vec<_>>()
+        });
+        t.row(vec![
+            n.to_string(),
+            fmt_dur(s.p50),
+            fmt_dur(s.p50 / n as u32),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("note: cloning a {payload_mb:.1} MiB record per client costs nanoseconds —");
+    println!("the flat Vec<f32> representation copied the full payload on every hop.");
+    Ok(())
+}

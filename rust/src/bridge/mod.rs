@@ -20,10 +20,16 @@
 //! differs (the LGS instead of the SuperLink), mirroring the paper's
 //! "change the server endpoint of each Flower client to a local gRPC
 //! server (LGS) within the FLARE client".
+//!
+//! Frames relayed by the bridge are opaque bytes on every hop — the
+//! bridge never reassembles records; only the two endpoints (SuperNode
+//! and SuperLink) decode, and both decode zero-copy out of the frame
+//! buffers they own.
 
 pub mod lgs;
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::flare::job::{AppFactory, JobCtx};
 use crate::flare::reliable::RetryPolicy;
@@ -37,6 +43,13 @@ pub use lgs::LocalGrpcServer;
 
 /// Topic carrying opaque Flower frames over FLARE messaging.
 pub const FLOWER_TOPIC: &str = "flower.frame";
+
+/// How long the server job cell waits, after the last round, for every
+/// SuperNode to acknowledge the finish flag by deregistering. The drain
+/// normally completes in a few poll intervals; the deadline only bounds
+/// pathological cases (a SuperNode that crashed without deregistering),
+/// so the job cell never hangs on a dead client.
+pub const SHUTDOWN_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Builds the client-side (ClientApp) and server-side (ServerApp) halves
 /// of a Flower job from its FLARE job context. Examples and the train
@@ -151,9 +164,17 @@ impl AppFactory for FlowerBridgeApp {
         };
         let result = server_app.run(&link, tracker, 1);
         link.finish();
-        // Give supernodes a moment to observe the finish flag and exit
-        // before the job cell disappears.
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        // Deterministic drain: every SuperNode acknowledges the finish
+        // flag by deregistering (DeleteNode) before the job cell tears
+        // down — no timing-based sleep. The deadline only bounds the
+        // pathological crashed-client case.
+        if !link.wait_drained(SHUTDOWN_DRAIN_TIMEOUT) {
+            log::warn!(
+                "job {}: {} supernode(s) never acknowledged shutdown",
+                ctx.job_id,
+                link.nodes().len()
+            );
+        }
         let history = result?;
         if let Some(sink) = &self.history_sink {
             sink(&ctx.job_id, &history);
@@ -169,6 +190,7 @@ mod tests {
     use crate::flare::sim::FederationBuilder;
     use crate::flare::JobStatus;
     use crate::flower::clientapp::ArithmeticClient;
+    use crate::flower::records::ArrayRecord;
     use crate::flower::serverapp::ServerConfig;
     use crate::flower::strategy::{Aggregator, FedAvg};
     use crate::util::json::Json;
@@ -201,7 +223,7 @@ mod tests {
                     seed: 5,
                     ..Default::default()
                 },
-                vec![0.0; 6],
+                ArrayRecord::from_flat(&[0.0; 6]),
             ))
         }
     }
@@ -241,7 +263,7 @@ mod tests {
         assert_eq!(h.rounds.len(), 2);
         // delta mean = (1*10 + 2*20)/30 = 5/3 per round.
         let expect = 2.0 * 5.0 / 3.0;
-        for p in &h.parameters {
+        for p in &h.parameters.to_flat() {
             assert!((p - expect).abs() < 1e-4, "{p} vs {expect}");
         }
     }
@@ -261,7 +283,7 @@ mod tests {
                 seed: 5,
                 ..Default::default()
             },
-            vec![0.0; 6],
+            ArrayRecord::from_flat(&[0.0; 6]),
         );
         let native = crate::flower::run::run_native(
             &mut server,

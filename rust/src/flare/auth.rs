@@ -21,15 +21,26 @@ pub enum Action {
     DeployCustomCode,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AuthError {
-    #[error("auth: invalid token for '{0}'")]
     BadToken(String),
-    #[error("auth: role {role:?} not permitted to {action:?}")]
     Denied { role: Role, action: Action },
-    #[error("auth: unknown principal '{0}'")]
     Unknown(String),
 }
+
+impl std::fmt::Display for AuthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AuthError::BadToken(who) => write!(f, "auth: invalid token for '{who}'"),
+            AuthError::Denied { role, action } => {
+                write!(f, "auth: role {role:?} not permitted to {action:?}")
+            }
+            AuthError::Unknown(who) => write!(f, "auth: unknown principal '{who}'"),
+        }
+    }
+}
+
+impl std::error::Error for AuthError {}
 
 /// Default policy mirroring FLARE's stock authorization:
 /// admins run jobs, sites participate and stream, nobody else does anything.

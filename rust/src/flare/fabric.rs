@@ -17,16 +17,33 @@ use crate::proto::{address, Envelope};
 use crate::telemetry;
 use crate::transport::{Endpoint, TransportError};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FabricError {
-    #[error("fabric: no route to site '{0}'")]
     NoRoute(String),
-    #[error("fabric: cell '{0}' already registered")]
     DuplicateCell(String),
-    #[error("fabric: transport: {0}")]
-    Transport(#[from] TransportError),
-    #[error("fabric: shut down")]
+    Transport(TransportError),
     Shutdown,
+}
+
+impl std::fmt::Display for FabricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FabricError::NoRoute(site) => write!(f, "fabric: no route to site '{site}'"),
+            FabricError::DuplicateCell(cell) => {
+                write!(f, "fabric: cell '{cell}' already registered")
+            }
+            FabricError::Transport(e) => write!(f, "fabric: transport: {e}"),
+            FabricError::Shutdown => write!(f, "fabric: shut down"),
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+impl From<TransportError> for FabricError {
+    fn from(e: TransportError) -> Self {
+        FabricError::Transport(e)
+    }
 }
 
 /// Receiving side of a registered cell.

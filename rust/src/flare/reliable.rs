@@ -57,16 +57,33 @@ impl RetryPolicy {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ReliableError {
-    #[error("reliable: deadline exceeded waiting for {peer} ({phase})")]
     Deadline { peer: String, phase: &'static str },
-    #[error("reliable: messenger shut down")]
     Shutdown,
-    #[error("reliable: fabric: {0}")]
-    Fabric(#[from] crate::flare::fabric::FabricError),
-    #[error("reliable: remote handler error: {0}")]
+    Fabric(crate::flare::fabric::FabricError),
     Remote(String),
+}
+
+impl std::fmt::Display for ReliableError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReliableError::Deadline { peer, phase } => {
+                write!(f, "reliable: deadline exceeded waiting for {peer} ({phase})")
+            }
+            ReliableError::Shutdown => write!(f, "reliable: messenger shut down"),
+            ReliableError::Fabric(e) => write!(f, "reliable: fabric: {e}"),
+            ReliableError::Remote(msg) => write!(f, "reliable: remote handler error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ReliableError {}
+
+impl From<crate::flare::fabric::FabricError> for ReliableError {
+    fn from(e: crate::flare::fabric::FabricError) -> Self {
+        ReliableError::Fabric(e)
+    }
 }
 
 /// Handler for incoming requests: payload-in, payload-out.

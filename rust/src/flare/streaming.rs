@@ -17,14 +17,29 @@ use crate::util::bytes::{Reader, Writer};
 pub const STREAM_TOPIC: &str = "flare.stream";
 pub const DEFAULT_CHUNK: usize = 1 << 20; // 1 MiB
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum StreamError {
-    #[error("stream: {0}")]
-    Reliable(#[from] ReliableError),
-    #[error("stream: checksum mismatch")]
+    Reliable(ReliableError),
     Checksum,
-    #[error("stream: malformed chunk: {0}")]
     Malformed(String),
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::Reliable(e) => write!(f, "stream: {e}"),
+            StreamError::Checksum => write!(f, "stream: checksum mismatch"),
+            StreamError::Malformed(what) => write!(f, "stream: malformed chunk: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+impl From<ReliableError> for StreamError {
+    fn from(e: ReliableError) -> Self {
+        StreamError::Reliable(e)
+    }
 }
 
 /// Send `payload` to `destination` in chunks; blocks until the receiver

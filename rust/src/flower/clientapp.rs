@@ -1,14 +1,15 @@
 //! Flower ClientApp: user code run by a SuperNode (paper Listing 2's
-//! `NumPyClient` analogue). Implementations receive the global flat
-//! parameter vector plus a config record and return updated parameters /
-//! evaluation results.
+//! `NumPyClient` analogue). Implementations receive the global model as
+//! an [`ArrayRecord`] of named, dtyped tensors plus a config record and
+//! return updated parameters / evaluation results.
 
 use crate::flower::message::{ConfigRecord, MetricRecord};
+use crate::flower::records::ArrayRecord;
 
 /// Result of a local `fit` (train) call.
 #[derive(Clone, Debug)]
 pub struct FitOutput {
-    pub parameters: Vec<f32>,
+    pub parameters: ArrayRecord,
     pub num_examples: u64,
     pub metrics: MetricRecord,
 }
@@ -23,30 +24,46 @@ pub struct EvalOutput {
 
 /// The NumPyClient-style interface (paper Listing 2: `fit`/`evaluate`).
 pub trait ClientApp: Send + Sync {
-    fn fit(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<FitOutput>;
-    fn evaluate(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<EvalOutput>;
+    fn fit(&self, parameters: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<FitOutput>;
+    fn evaluate(
+        &self,
+        parameters: &ArrayRecord,
+        config: &ConfigRecord,
+    ) -> anyhow::Result<EvalOutput>;
 }
 
 /// Deterministic toy client used across tests: `fit` adds `delta` to
-/// every parameter and reports `n` examples; `evaluate` returns the mean
-/// of the parameters as "loss".
+/// every element of every tensor (per-tensor, preserving names, shapes,
+/// and dtypes) and reports `n` examples; `evaluate` returns the mean of
+/// all elements as "loss".
 pub struct ArithmeticClient {
     pub delta: f32,
     pub n: u64,
 }
 
 impl ClientApp for ArithmeticClient {
-    fn fit(&self, parameters: &[f32], _config: &ConfigRecord) -> anyhow::Result<FitOutput> {
+    fn fit(&self, parameters: &ArrayRecord, _config: &ConfigRecord) -> anyhow::Result<FitOutput> {
+        let delta = self.delta as f64;
         Ok(FitOutput {
-            parameters: parameters.iter().map(|p| p + self.delta).collect(),
+            parameters: parameters.map_f64(|_, _, v| v + delta),
             num_examples: self.n,
             metrics: vec![("train_loss".into(), self.delta as f64)],
         })
     }
 
-    fn evaluate(&self, parameters: &[f32], _config: &ConfigRecord) -> anyhow::Result<EvalOutput> {
-        let mean =
-            parameters.iter().map(|p| *p as f64).sum::<f64>() / parameters.len().max(1) as f64;
+    fn evaluate(
+        &self,
+        parameters: &ArrayRecord,
+        _config: &ConfigRecord,
+    ) -> anyhow::Result<EvalOutput> {
+        let n = parameters.total_elems();
+        let mut sum = 0.0f64;
+        for t in parameters.tensors() {
+            for i in 0..t.elems() {
+                sum += t.get_f64(i);
+            }
+        }
+        let mean = sum / n.max(1) as f64;
         Ok(EvalOutput {
             loss: mean,
             num_examples: self.n,
@@ -58,14 +75,31 @@ impl ClientApp for ArithmeticClient {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::flower::records::Tensor;
 
     #[test]
     fn arithmetic_client_behaviour() {
         let c = ArithmeticClient { delta: 0.5, n: 8 };
-        let fit = c.fit(&[1.0, 2.0], &vec![]).unwrap();
-        assert_eq!(fit.parameters, vec![1.5, 2.5]);
+        let fit = c.fit(&ArrayRecord::from_flat(&[1.0, 2.0]), &vec![]).unwrap();
+        assert_eq!(fit.parameters.to_flat(), vec![1.5, 2.5]);
         assert_eq!(fit.num_examples, 8);
-        let ev = c.evaluate(&[1.0, 3.0], &vec![]).unwrap();
+        let ev = c
+            .evaluate(&ArrayRecord::from_flat(&[1.0, 3.0]), &vec![])
+            .unwrap();
         assert!((ev.loss - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arithmetic_client_preserves_multi_tensor_structure() {
+        let rec = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("w", vec![2], &[1.0, 2.0]),
+            Tensor::from_i64("steps", vec![2], &[10, 20]),
+        ])
+        .unwrap();
+        let c = ArithmeticClient { delta: 1.0, n: 1 };
+        let out = c.fit(&rec, &vec![]).unwrap();
+        assert!(out.parameters.dims_match(&rec));
+        assert_eq!(out.parameters.get("w").unwrap().get_f64(0), 2.0);
+        assert_eq!(out.parameters.get("steps").unwrap().get_f64(1), 21.0);
     }
 }

@@ -5,6 +5,13 @@
 //! coordinate — packaged as a [`ClientMod`] so any app becomes
 //! differentially private without modification.
 //!
+//! The delta, clip, and noise are computed **per tensor in record
+//! order** over the update's [`ArrayRecord`]; the L2 norm is the global
+//! norm across all tensors (the classic recipe), so the result is
+//! bit-identical to clipping the flat concatenation. Only float tensors
+//! can carry noise — non-float dtypes are rejected loudly rather than
+//! silently leaking.
+//!
 //! Noise is seeded from (dp_seed, node_id, round) — deterministic per
 //! task, so the Fig. 5 transport-independence property still holds for
 //! DP runs (the same noise is drawn on both paths).
@@ -12,6 +19,7 @@
 use crate::flower::clientapp::FitOutput;
 use crate::flower::message::{config_get_f64, config_get_i64, ConfigRecord};
 use crate::flower::mods::{ClientMod, FitNext};
+use crate::flower::records::{ArrayRecord, DType, Tensor};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -63,50 +71,65 @@ impl ClientMod for DpMod {
 
     fn on_fit(
         &self,
-        parameters: &[f32],
+        parameters: &ArrayRecord,
         config: &ConfigRecord,
         next: FitNext,
     ) -> anyhow::Result<FitOutput> {
         let mut out = next(parameters, config)?;
         anyhow::ensure!(
-            out.parameters.len() == parameters.len(),
-            "dp: inner app changed parameter length"
+            out.parameters.dims_match(parameters),
+            "dp: inner app changed the record structure"
         );
+        for t in parameters.tensors() {
+            anyhow::ensure!(
+                matches!(t.dtype(), DType::F32 | DType::F64),
+                "dp: tensor '{}' is {}, only float tensors can carry noise",
+                t.name(),
+                t.dtype().name()
+            );
+        }
         let round = config_get_f64(config, "round").unwrap_or(0.0) as u64;
         let node = config_get_i64(config, "node_id").unwrap_or(0) as u64;
 
-        // Delta, clip.
-        let mut delta: Vec<f64> = out
-            .parameters
-            .iter()
-            .zip(parameters.iter())
-            .map(|(a, b)| *a as f64 - *b as f64)
-            .collect();
-        let l2: f64 = delta.iter().map(|d| d * d).sum::<f64>().sqrt();
+        // Per-tensor deltas; global L2 across the whole record.
+        let mut deltas: Vec<Vec<f64>> = Vec::with_capacity(parameters.len());
+        let mut l2_sq = 0f64;
+        for (base, upd) in parameters.tensors().iter().zip(out.parameters.tensors()) {
+            let d: Vec<f64> = (0..base.elems())
+                .map(|i| upd.get_f64(i) - base.get_f64(i))
+                .collect();
+            l2_sq += d.iter().map(|x| x * x).sum::<f64>();
+            deltas.push(d);
+        }
+        let l2 = l2_sq.sqrt();
         let scale = if l2 > self.cfg.clip {
             self.cfg.clip / l2
         } else {
             1.0
         };
         if scale < 1.0 {
-            for d in delta.iter_mut() {
-                *d *= scale;
-            }
             crate::telemetry::bump("dp.clipped", 1);
         }
 
-        // Noise (deterministic per node+round).
+        // Noise (deterministic per node+round), one stream across
+        // tensors in record order.
         let mut rng = Rng::new(self.cfg.seed)
             .split(node)
             .split(round.wrapping_add(1));
         let sigma = self.cfg.noise_multiplier * self.cfg.clip;
-        for (p, (d, base)) in out
-            .parameters
-            .iter_mut()
-            .zip(delta.iter().zip(parameters.iter()))
-        {
-            *p = (*base as f64 + d + sigma * rng.normal()) as f32;
+        let mut tensors = Vec::with_capacity(parameters.len());
+        for (base, d) in parameters.tensors().iter().zip(deltas) {
+            tensors.push(Tensor::from_f64_values(
+                base.name(),
+                base.dtype(),
+                base.shape().to_vec(),
+                (0..base.elems())
+                    .map(|i| base.get_f64(i) + d[i] * scale + sigma * rng.normal())
+                    .collect::<Vec<f64>>()
+                    .into_iter(),
+            ));
         }
+        out.parameters = ArrayRecord::from_tensors(tensors)?;
 
         out.metrics
             .push(("dp_epsilon_round".into(), self.cfg.epsilon_per_round()));
@@ -141,21 +164,26 @@ mod tests {
         )
     }
 
+    fn flat(v: &[f32]) -> ArrayRecord {
+        ArrayRecord::from_flat(v)
+    }
+
     #[test]
     fn zero_noise_large_clip_is_transparent() {
         let app = dp_app(1e9, 0.0);
-        let out = app.fit(&[1.0, 2.0], &cfg_round(1, 1)).unwrap();
+        let out = app.fit(&flat(&[1.0, 2.0]), &cfg_round(1, 1)).unwrap();
         // sigma = 0, no clip: exact inner result.
-        assert_eq!(out.parameters, vec![2.0, 3.0]);
+        assert_eq!(out.parameters.to_flat(), vec![2.0, 3.0]);
     }
 
     #[test]
     fn clipping_bounds_delta_norm() {
         // Inner delta = (1,1,1,1), l2 = 2; clip to 1.0 -> delta 0.5 each.
         let app = dp_app(1.0, 0.0);
-        let out = app.fit(&[0.0; 4], &cfg_round(1, 1)).unwrap();
+        let out = app.fit(&flat(&[0.0; 4]), &cfg_round(1, 1)).unwrap();
         let l2: f64 = out
             .parameters
+            .to_flat()
             .iter()
             .map(|p| (*p as f64) * (*p as f64))
             .sum::<f64>()
@@ -171,27 +199,58 @@ mod tests {
     }
 
     #[test]
+    fn clipping_uses_global_norm_across_tensors() {
+        // Two tensors, combined delta (1,1,1,1) -> same global clip as
+        // the flat case; per-tensor structure preserved.
+        let rec = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("a", vec![2], &[0.0, 0.0]),
+            Tensor::from_f32("b", vec![2], &[0.0, 0.0]),
+        ])
+        .unwrap();
+        let app = dp_app(1.0, 0.0);
+        let out = app.fit(&rec, &cfg_round(1, 1)).unwrap();
+        assert!(out.parameters.dims_match(&rec));
+        let l2: f64 = out
+            .parameters
+            .to_flat()
+            .iter()
+            .map(|p| (*p as f64) * (*p as f64))
+            .sum::<f64>()
+            .sqrt();
+        assert!((l2 - 1.0).abs() < 1e-6, "global l2 = {l2}");
+    }
+
+    #[test]
+    fn non_float_tensors_rejected() {
+        let rec = ArrayRecord::from_tensors(vec![Tensor::from_i64("steps", vec![1], &[3])])
+            .unwrap();
+        let app = dp_app(1.0, 1.0);
+        let err = app.fit(&rec, &cfg_round(1, 1)).unwrap_err();
+        assert!(err.to_string().contains("float"), "{err}");
+    }
+
+    #[test]
     fn noise_is_deterministic_per_node_round() {
         let app = dp_app(1.0, 1.0);
-        let a = app.fit(&[0.0; 8], &cfg_round(3, 2)).unwrap();
-        let b = app.fit(&[0.0; 8], &cfg_round(3, 2)).unwrap();
-        assert_eq!(a.parameters, b.parameters);
-        let c = app.fit(&[0.0; 8], &cfg_round(4, 2)).unwrap();
-        assert_ne!(a.parameters, c.parameters, "round must vary noise");
-        let d = app.fit(&[0.0; 8], &cfg_round(3, 3)).unwrap();
-        assert_ne!(a.parameters, d.parameters, "node must vary noise");
+        let a = app.fit(&flat(&[0.0; 8]), &cfg_round(3, 2)).unwrap();
+        let b = app.fit(&flat(&[0.0; 8]), &cfg_round(3, 2)).unwrap();
+        assert!(a.parameters.bits_equal(&b.parameters));
+        let c = app.fit(&flat(&[0.0; 8]), &cfg_round(4, 2)).unwrap();
+        assert!(!a.parameters.bits_equal(&c.parameters), "round must vary noise");
+        let d = app.fit(&flat(&[0.0; 8]), &cfg_round(3, 3)).unwrap();
+        assert!(!a.parameters.bits_equal(&d.parameters), "node must vary noise");
     }
 
     #[test]
     fn noise_scale_matches_sigma() {
         let app = dp_app(1.0, 2.0); // sigma = 2
         let n = 4000;
-        let out = app.fit(&vec![0.0; n], &cfg_round(1, 1)).unwrap();
+        let out = app.fit(&flat(&vec![0.0; n]), &cfg_round(1, 1)).unwrap();
         // delta per coord = 1/sqrt(n)*... inner delta (1,...) clipped to
         // l2=1 -> per-coord 1/sqrt(n) ~ 0.016, negligible vs noise.
-        let mean: f64 = out.parameters.iter().map(|p| *p as f64).sum::<f64>() / n as f64;
-        let var: f64 = out
-            .parameters
+        let params = out.parameters.to_flat();
+        let mean: f64 = params.iter().map(|p| *p as f64).sum::<f64>() / n as f64;
+        let var: f64 = params
             .iter()
             .map(|p| (*p as f64 - mean).powi(2))
             .sum::<f64>()

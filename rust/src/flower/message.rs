@@ -5,41 +5,52 @@
 //! These bytes are what the FLARE bridge forwards opaquely (§4.2) — the
 //! Fig. 5 bit-exactness claim rests on this codec being used identically
 //! on the native and bridged paths.
+//!
+//! ## Frame versions
+//!
+//! * **v2 (current)** — first byte is [`FRAME_MAGIC_V2`]; parameters are
+//!   an [`ArrayRecord`] encoded as length-prefixed tensor segments
+//!   (name, dtype, shape, payload bytes). Decoding is **zero-copy**:
+//!   [`FlowerMsg::decode_shared`] hands each tensor a [`Bytes`] view of
+//!   the received frame buffer — no payload bytes are copied.
+//! * **v1 (legacy)** — first byte is the message tag; parameters are a
+//!   flat `f32` vector. [`FlowerMsg::decode`] transparently accepts v1
+//!   frames (wrapping the flat vector via [`ArrayRecord::from_flat`]),
+//!   and [`FlowerMsg::encode_v1`] emits them for old peers (lossy for
+//!   records that are not a single flat f32 tensor).
+//!
+//! All decode limits are named constants below; oversized or
+//! structurally invalid frames return [`WireError`] — never panic, never
+//! allocate unbounded memory.
 
-use crate::util::bytes::{Reader, WireError, Writer};
+use crate::flower::records::{ArrayRecord, DType, RecordDict, Tensor};
+use crate::util::bytes::{Bytes, FrameReader, Reader, WireError, Writer};
 
-/// Values carried in a task's config record (Flower's `Config` dict).
-#[derive(Clone, Debug, PartialEq)]
-pub enum ConfigValue {
-    F64(f64),
-    I64(i64),
-    Str(String),
-    Bool(bool),
-}
+pub use crate::flower::records::{
+    config_get_f64, config_get_i64, config_get_str, ConfigRecord, ConfigValue, MetricRecord,
+};
 
-pub type ConfigRecord = Vec<(String, ConfigValue)>;
+// ---------------------------------------------------------------------------
+// Codec limits (hoisted, named, tested)
+// ---------------------------------------------------------------------------
 
-pub fn config_get_f64(c: &ConfigRecord, key: &str) -> Option<f64> {
-    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
-        ConfigValue::F64(x) => Some(*x),
-        ConfigValue::I64(x) => Some(*x as f64),
-        _ => None,
-    })
-}
+/// First byte of every v2 frame. Legacy v1 frames start with a message
+/// tag, which is never this value — that is the version discriminator.
+pub const FRAME_MAGIC_V2: u8 = 0xF2;
 
-pub fn config_get_i64(c: &ConfigRecord, key: &str) -> Option<i64> {
-    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
-        ConfigValue::I64(x) => Some(*x),
-        _ => None,
-    })
-}
-
-pub fn config_get_str<'a>(c: &'a ConfigRecord, key: &str) -> Option<&'a str> {
-    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
-        ConfigValue::Str(s) => Some(s.as_str()),
-        _ => None,
-    })
-}
+/// Maximum entries in one config record.
+pub const MAX_CONFIG_ENTRIES: usize = 4096;
+/// Maximum entries in one metric record.
+pub const MAX_METRIC_ENTRIES: usize = 4096;
+/// Maximum task instructions in one `TaskInsList`.
+pub const MAX_TASKS_PER_LIST: usize = 65536;
+/// Maximum tensors in one array record.
+pub const MAX_TENSORS_PER_RECORD: usize = 4096;
+/// Maximum payload bytes of a single tensor (1 GiB, matching
+/// `util::bytes::MAX_FIELD`).
+pub const MAX_TENSOR_BYTES: usize = 1 << 30;
+/// Maximum dimensions in a tensor shape.
+pub const MAX_SHAPE_DIMS: usize = 16;
 
 fn write_config(w: &mut Writer, c: &ConfigRecord) {
     w.u32(c.len() as u32);
@@ -66,18 +77,21 @@ fn write_config(w: &mut Writer, c: &ConfigRecord) {
     }
 }
 
-fn read_config(r: &mut Reader) -> Result<ConfigRecord, WireError> {
+fn read_config(r: &mut FrameReader) -> Result<ConfigRecord, WireError> {
     let n = r.u32()? as usize;
-    if n > 4096 {
-        return Err(WireError::TooLong { len: n, limit: 4096 });
+    if n > MAX_CONFIG_ENTRIES {
+        return Err(WireError::TooLong {
+            len: n,
+            limit: MAX_CONFIG_ENTRIES,
+        });
     }
     let mut c = Vec::with_capacity(n);
     for _ in 0..n {
-        let k = r.str()?.to_string();
+        let k = r.str()?;
         let v = match r.u8()? {
             0 => ConfigValue::F64(r.f64()?),
             1 => ConfigValue::I64(r.u64()? as i64),
-            2 => ConfigValue::Str(r.str()?.to_string()),
+            2 => ConfigValue::Str(r.str()?),
             3 => ConfigValue::Bool(r.u8()? != 0),
             t => return Err(WireError::BadTag(t)),
         };
@@ -85,9 +99,6 @@ fn read_config(r: &mut Reader) -> Result<ConfigRecord, WireError> {
     }
     Ok(c)
 }
-
-/// Metric records are (name, f64) pairs (Flower's `Metrics`).
-pub type MetricRecord = Vec<(String, f64)>;
 
 fn write_metrics(w: &mut Writer, m: &MetricRecord) {
     w.u32(m.len() as u32);
@@ -97,17 +108,115 @@ fn write_metrics(w: &mut Writer, m: &MetricRecord) {
     }
 }
 
-fn read_metrics(r: &mut Reader) -> Result<MetricRecord, WireError> {
+fn read_metrics(r: &mut FrameReader) -> Result<MetricRecord, WireError> {
     let n = r.u32()? as usize;
-    if n > 4096 {
-        return Err(WireError::TooLong { len: n, limit: 4096 });
+    if n > MAX_METRIC_ENTRIES {
+        return Err(WireError::TooLong {
+            len: n,
+            limit: MAX_METRIC_ENTRIES,
+        });
     }
     let mut m = Vec::with_capacity(n);
     for _ in 0..n {
-        let k = r.str()?.to_string();
+        let k = r.str()?;
         m.push((k, r.f64()?));
     }
     Ok(m)
+}
+
+// ---------------------------------------------------------------------------
+// ArrayRecord segments
+// ---------------------------------------------------------------------------
+
+/// Encode a record as length-prefixed tensor segments. The payload copy
+/// here (record buffer -> frame buffer) is the single unavoidable
+/// serialization copy of the send path.
+///
+/// Asserts the same limits the decoder enforces, so an oversized record
+/// fails loudly at the sender (like the old `Writer::f32s` size assert)
+/// instead of as a confusing remote `WireError` at the peer.
+fn write_record(w: &mut Writer, rec: &ArrayRecord) {
+    assert!(
+        rec.len() <= MAX_TENSORS_PER_RECORD,
+        "record has {} tensors, wire limit is {MAX_TENSORS_PER_RECORD}",
+        rec.len()
+    );
+    w.u32(rec.len() as u32);
+    for t in rec.tensors() {
+        assert!(
+            t.shape().len() <= MAX_SHAPE_DIMS,
+            "tensor '{}' has {} dims, wire limit is {MAX_SHAPE_DIMS}",
+            t.name(),
+            t.shape().len()
+        );
+        assert!(
+            t.byte_len() <= MAX_TENSOR_BYTES,
+            "tensor '{}' is {} bytes, wire limit is {MAX_TENSOR_BYTES}",
+            t.name(),
+            t.byte_len()
+        );
+        w.str(t.name());
+        w.u8(t.dtype().wire_tag());
+        w.u32(t.shape().len() as u32);
+        for d in t.shape() {
+            assert!(
+                *d <= u32::MAX as usize,
+                "tensor '{}' dim {d} exceeds the u32 wire format",
+                t.name()
+            );
+            w.u32(*d as u32);
+        }
+        w.u64(t.byte_len() as u64);
+        crate::telemetry::bump("records.encode_bytes_copied", t.byte_len() as i64);
+        w.raw(t.data().as_slice());
+    }
+}
+
+/// Decode a record zero-copy: every tensor's payload is a shared view
+/// into the frame buffer the reader wraps.
+fn read_record(r: &mut FrameReader) -> Result<ArrayRecord, WireError> {
+    let n = r.u32()? as usize;
+    if n > MAX_TENSORS_PER_RECORD {
+        return Err(WireError::TooLong {
+            len: n,
+            limit: MAX_TENSORS_PER_RECORD,
+        });
+    }
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.str()?;
+        let dtype = DType::from_wire_tag(r.u8()?)?;
+        let ndim = r.u32()? as usize;
+        if ndim > MAX_SHAPE_DIMS {
+            return Err(WireError::TooLong {
+                len: ndim,
+                limit: MAX_SHAPE_DIMS,
+            });
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut elems: u64 = 1;
+        for _ in 0..ndim {
+            let d = r.u32()? as usize;
+            elems = elems.saturating_mul(d as u64);
+            shape.push(d);
+        }
+        let byte_len = r.u64()?;
+        if byte_len > MAX_TENSOR_BYTES as u64 {
+            return Err(WireError::TooLong {
+                len: byte_len as usize,
+                limit: MAX_TENSOR_BYTES,
+            });
+        }
+        let want = elems.saturating_mul(dtype.size_of() as u64);
+        if want != byte_len {
+            return Err(WireError::Malformed("tensor byte length != dtype * shape"));
+        }
+        let data = r.take_shared(byte_len as usize)?;
+        let tensor = Tensor::new(name, dtype, shape, data)
+            .map_err(|_| WireError::Malformed("invalid tensor segment"))?;
+        tensors.push(tensor);
+    }
+    ArrayRecord::from_tensors(tensors).map_err(|_| WireError::Malformed("duplicate tensor name"))
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -125,9 +234,20 @@ pub struct TaskIns {
     /// Round number (Flower's group_id).
     pub round: u64,
     pub task_type: TaskType,
-    /// Global model parameters (flat f32).
-    pub parameters: Vec<f32>,
+    /// Global model parameters (named, dtyped tensors).
+    pub parameters: ArrayRecord,
     pub config: ConfigRecord,
+}
+
+impl TaskIns {
+    /// The instruction's payload as a full record bundle.
+    pub fn record(&self) -> RecordDict {
+        RecordDict {
+            arrays: self.parameters.clone(),
+            metrics: Vec::new(),
+            configs: self.config.clone(),
+        }
+    }
 }
 
 /// Client -> server task result.
@@ -139,11 +259,22 @@ pub struct TaskRes {
     /// Empty string = success; else the client-side error.
     pub error: String,
     /// Updated parameters (fit) or empty (evaluate).
-    pub parameters: Vec<f32>,
+    pub parameters: ArrayRecord,
     pub num_examples: u64,
     /// loss for evaluate tasks; 0 for fit unless reported in metrics.
     pub loss: f64,
     pub metrics: MetricRecord,
+}
+
+impl TaskRes {
+    /// The result's payload as a full record bundle.
+    pub fn record(&self) -> RecordDict {
+        RecordDict {
+            arrays: self.parameters.clone(),
+            metrics: self.metrics.clone(),
+            configs: Vec::new(),
+        }
+    }
 }
 
 /// All SuperNode<->SuperLink frames.
@@ -169,8 +300,10 @@ pub enum FlowerMsg {
 }
 
 impl FlowerMsg {
+    /// Encode as a v2 record frame.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
         match self {
             FlowerMsg::CreateNode { requested } => {
                 w.u8(0);
@@ -186,7 +319,7 @@ impl FlowerMsg {
                 w.u64(res.run_id);
                 w.u64(res.node_id);
                 w.str(&res.error);
-                w.f32s(&res.parameters);
+                write_record(&mut w, &res.parameters);
                 w.u64(res.num_examples);
                 w.f64(res.loss);
                 write_metrics(&mut w, &res.metrics);
@@ -208,7 +341,7 @@ impl FlowerMsg {
                     w.u64(t.run_id);
                     w.u64(t.round);
                     w.u8(t.task_type as u8);
-                    w.f32s(&t.parameters);
+                    write_record(&mut w, &t.parameters);
                     write_config(&mut w, &t.config);
                 }
             }
@@ -222,8 +355,84 @@ impl FlowerMsg {
         w.into_bytes()
     }
 
+    /// Encode as a legacy v1 frame (flat f32 parameters). Lossy for
+    /// records that are not a single flat f32 tensor — interop path for
+    /// peers that predate the record codec, and the test vector for the
+    /// legacy decode path.
+    pub fn encode_v1(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            FlowerMsg::CreateNode { requested } => {
+                w.u8(0);
+                w.u64(*requested);
+            }
+            FlowerMsg::PullTaskIns { node_id } => {
+                w.u8(1);
+                w.u64(*node_id);
+            }
+            FlowerMsg::PushTaskRes { res } => {
+                w.u8(2);
+                w.u64(res.task_id);
+                w.u64(res.run_id);
+                w.u64(res.node_id);
+                w.str(&res.error);
+                w.f32s(&res.parameters.to_flat());
+                w.u64(res.num_examples);
+                w.f64(res.loss);
+                write_metrics(&mut w, &res.metrics);
+            }
+            FlowerMsg::DeleteNode { node_id } => {
+                w.u8(3);
+                w.u64(*node_id);
+            }
+            FlowerMsg::NodeCreated { node_id } => {
+                w.u8(16);
+                w.u64(*node_id);
+            }
+            FlowerMsg::TaskInsList { tasks, active } => {
+                w.u8(17);
+                w.u8(*active as u8);
+                w.u32(tasks.len() as u32);
+                for t in tasks {
+                    w.u64(t.task_id);
+                    w.u64(t.run_id);
+                    w.u64(t.round);
+                    w.u8(t.task_type as u8);
+                    w.f32s(&t.parameters.to_flat());
+                    write_config(&mut w, &t.config);
+                }
+            }
+            FlowerMsg::PushAccepted => w.u8(18),
+            FlowerMsg::NodeDeleted => w.u8(19),
+            FlowerMsg::Error { message } => {
+                w.u8(20);
+                w.str(message);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Decode from a borrowed buffer. Copies the buffer once to obtain
+    /// shared ownership; zero-copy callers that own the frame should use
+    /// [`FlowerMsg::decode_shared`] instead.
     pub fn decode(buf: &[u8]) -> Result<FlowerMsg, WireError> {
-        let mut r = Reader::new(buf);
+        Self::decode_shared(Bytes::copy_from_slice(buf))
+    }
+
+    /// Decode an owned frame. For v2 frames every tensor payload in the
+    /// result is a zero-copy view into `frame`'s allocation.
+    pub fn decode_shared(frame: Bytes) -> Result<FlowerMsg, WireError> {
+        match frame.as_slice().first() {
+            None => Err(WireError::Truncated { at: 0, needed: 1 }),
+            Some(&FRAME_MAGIC_V2) => Self::decode_v2(frame),
+            Some(_) => Self::decode_v1(frame.as_slice()),
+        }
+    }
+
+    fn decode_v2(frame: Bytes) -> Result<FlowerMsg, WireError> {
+        let mut r = FrameReader::new(frame);
+        let magic = r.u8()?;
+        debug_assert_eq!(magic, FRAME_MAGIC_V2);
         let tag = r.u8()?;
         let msg = match tag {
             0 => FlowerMsg::CreateNode { requested: r.u64()? },
@@ -233,8 +442,8 @@ impl FlowerMsg {
                     task_id: r.u64()?,
                     run_id: r.u64()?,
                     node_id: r.u64()?,
-                    error: r.str()?.to_string(),
-                    parameters: r.f32s()?,
+                    error: r.str()?,
+                    parameters: read_record(&mut r)?,
                     num_examples: r.u64()?,
                     loss: r.f64()?,
                     metrics: read_metrics(&mut r)?,
@@ -245,8 +454,11 @@ impl FlowerMsg {
             17 => {
                 let active = r.u8()? != 0;
                 let n = r.u32()? as usize;
-                if n > 65536 {
-                    return Err(WireError::TooLong { len: n, limit: 65536 });
+                if n > MAX_TASKS_PER_LIST {
+                    return Err(WireError::TooLong {
+                        len: n,
+                        limit: MAX_TASKS_PER_LIST,
+                    });
                 }
                 let mut tasks = Vec::with_capacity(n);
                 for _ in 0..n {
@@ -258,8 +470,70 @@ impl FlowerMsg {
                         1 => TaskType::Evaluate,
                         t => return Err(WireError::BadTag(t)),
                     };
-                    let parameters = r.f32s()?;
+                    let parameters = read_record(&mut r)?;
                     let config = read_config(&mut r)?;
+                    tasks.push(TaskIns {
+                        task_id,
+                        run_id,
+                        round,
+                        task_type,
+                        parameters,
+                        config,
+                    });
+                }
+                FlowerMsg::TaskInsList { tasks, active }
+            }
+            18 => FlowerMsg::PushAccepted,
+            19 => FlowerMsg::NodeDeleted,
+            20 => FlowerMsg::Error { message: r.str()? },
+            t => return Err(WireError::BadTag(t)),
+        };
+        Ok(msg)
+    }
+
+    /// Legacy v1 decode path: flat f32 parameter vectors become
+    /// single-tensor records via [`ArrayRecord::from_flat`].
+    fn decode_v1(buf: &[u8]) -> Result<FlowerMsg, WireError> {
+        let mut r = Reader::new(buf);
+        let tag = r.u8()?;
+        let msg = match tag {
+            0 => FlowerMsg::CreateNode { requested: r.u64()? },
+            1 => FlowerMsg::PullTaskIns { node_id: r.u64()? },
+            2 => FlowerMsg::PushTaskRes {
+                res: TaskRes {
+                    task_id: r.u64()?,
+                    run_id: r.u64()?,
+                    node_id: r.u64()?,
+                    error: r.str()?.to_string(),
+                    parameters: ArrayRecord::from_flat(&r.f32s()?),
+                    num_examples: r.u64()?,
+                    loss: r.f64()?,
+                    metrics: read_metrics_v1(&mut r)?,
+                },
+            },
+            3 => FlowerMsg::DeleteNode { node_id: r.u64()? },
+            16 => FlowerMsg::NodeCreated { node_id: r.u64()? },
+            17 => {
+                let active = r.u8()? != 0;
+                let n = r.u32()? as usize;
+                if n > MAX_TASKS_PER_LIST {
+                    return Err(WireError::TooLong {
+                        len: n,
+                        limit: MAX_TASKS_PER_LIST,
+                    });
+                }
+                let mut tasks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let task_id = r.u64()?;
+                    let run_id = r.u64()?;
+                    let round = r.u64()?;
+                    let task_type = match r.u8()? {
+                        0 => TaskType::Fit,
+                        1 => TaskType::Evaluate,
+                        t => return Err(WireError::BadTag(t)),
+                    };
+                    let parameters = ArrayRecord::from_flat(&r.f32s()?);
+                    let config = read_config_v1(&mut r)?;
                     tasks.push(TaskIns {
                         task_id,
                         run_id,
@@ -282,9 +556,59 @@ impl FlowerMsg {
     }
 }
 
+fn read_config_v1(r: &mut Reader) -> Result<ConfigRecord, WireError> {
+    let n = r.u32()? as usize;
+    if n > MAX_CONFIG_ENTRIES {
+        return Err(WireError::TooLong {
+            len: n,
+            limit: MAX_CONFIG_ENTRIES,
+        });
+    }
+    let mut c = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = r.str()?.to_string();
+        let v = match r.u8()? {
+            0 => ConfigValue::F64(r.f64()?),
+            1 => ConfigValue::I64(r.u64()? as i64),
+            2 => ConfigValue::Str(r.str()?.to_string()),
+            3 => ConfigValue::Bool(r.u8()? != 0),
+            t => return Err(WireError::BadTag(t)),
+        };
+        c.push((k, v));
+    }
+    Ok(c)
+}
+
+fn read_metrics_v1(r: &mut Reader) -> Result<MetricRecord, WireError> {
+    let n = r.u32()? as usize;
+    if n > MAX_METRIC_ENTRIES {
+        return Err(WireError::TooLong {
+            len: n,
+            limit: MAX_METRIC_ENTRIES,
+        });
+    }
+    let mut m = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = r.str()?.to_string();
+        m.push((k, r.f64()?));
+    }
+    Ok(m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::flower::records::Tensor;
+
+    fn mixed_record() -> ArrayRecord {
+        ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("conv1.w", vec![2, 3], &[1.5, -2.0, 0.0, f32::NAN, -0.0, 1e-40]),
+            Tensor::from_f64("head.bias", vec![2], &[0.25, -1e300]),
+            Tensor::from_i64("steps", vec![1], &[-42]),
+            Tensor::from_u8("quantized", vec![5], &[0, 1, 128, 254, 255]),
+        ])
+        .unwrap()
+    }
 
     fn sample_ins() -> TaskIns {
         TaskIns {
@@ -292,7 +616,7 @@ mod tests {
             run_id: 1,
             round: 3,
             task_type: TaskType::Fit,
-            parameters: vec![1.5, -2.0, 0.0],
+            parameters: mixed_record(),
             config: vec![
                 ("lr".into(), ConfigValue::F64(0.05)),
                 ("epochs".into(), ConfigValue::I64(2)),
@@ -308,7 +632,7 @@ mod tests {
             run_id: 1,
             node_id: 4,
             error: String::new(),
-            parameters: vec![0.25; 10],
+            parameters: ArrayRecord::from_flat(&[0.25; 10]),
             num_examples: 128,
             loss: 0.75,
             metrics: vec![("accuracy".into(), 0.9)],
@@ -345,20 +669,85 @@ mod tests {
     }
 
     #[test]
+    fn mixed_dtype_record_roundtrips_bitexact() {
+        let m = FlowerMsg::TaskInsList {
+            tasks: vec![sample_ins()],
+            active: true,
+        };
+        match FlowerMsg::decode(&m.encode()).unwrap() {
+            FlowerMsg::TaskInsList { tasks, .. } => {
+                assert!(tasks[0].parameters.bits_equal(&mixed_record()));
+                let t = tasks[0].parameters.get("conv1.w").unwrap();
+                assert_eq!(t.dtype(), DType::F32);
+                assert_eq!(t.shape(), &[2, 3]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_shared_is_zero_copy() {
+        let m = FlowerMsg::PushTaskRes { res: sample_res() };
+        let frame = Bytes::from_vec(m.encode());
+        match FlowerMsg::decode_shared(frame.clone()).unwrap() {
+            FlowerMsg::PushTaskRes { res } => {
+                for t in res.parameters.tensors() {
+                    assert!(
+                        frame.shares_allocation(t.data()),
+                        "tensor '{}' was copied out of the frame",
+                        t.name()
+                    );
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn parameters_bitexact() {
         let mut ins = sample_ins();
-        ins.parameters = vec![f32::NAN, -0.0, 1e-40, f32::MAX];
+        ins.parameters = ArrayRecord::from_flat(&[f32::NAN, -0.0, 1e-40, f32::MAX]);
         let m = FlowerMsg::TaskInsList {
             tasks: vec![ins.clone()],
             active: true,
         };
         match FlowerMsg::decode(&m.encode()).unwrap() {
             FlowerMsg::TaskInsList { tasks, .. } => {
-                for (a, b) in ins.parameters.iter().zip(tasks[0].parameters.iter()) {
-                    assert_eq!(a.to_bits(), b.to_bits());
-                }
+                assert!(tasks[0].parameters.bits_equal(&ins.parameters));
             }
             _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn legacy_v1_frames_still_decode() {
+        // Flat-parameter messages written by the old codec decode into
+        // single-tensor records with identical f32 bits.
+        let flat = [f32::NAN, -0.0, 3.5, 1e-40];
+        let res = TaskRes {
+            parameters: ArrayRecord::from_flat(&flat),
+            ..sample_res()
+        };
+        let msgs = vec![
+            FlowerMsg::CreateNode { requested: 2 },
+            FlowerMsg::PushTaskRes { res },
+            FlowerMsg::TaskInsList {
+                tasks: vec![TaskIns {
+                    parameters: ArrayRecord::from_flat(&flat),
+                    ..sample_ins()
+                }],
+                active: true,
+            },
+            FlowerMsg::Error {
+                message: "legacy".into(),
+            },
+        ];
+        for m in msgs {
+            let v1 = m.encode_v1();
+            assert_ne!(v1[0], FRAME_MAGIC_V2, "v1 frames must not carry the v2 magic");
+            let back = FlowerMsg::decode(&v1).unwrap();
+            // Compare via v2 re-encoding (NaN-safe byte comparison).
+            assert_eq!(back.encode(), m.encode(), "legacy decode of {m:?}");
         }
     }
 
@@ -366,6 +755,8 @@ mod tests {
     fn bad_tag_rejected() {
         assert!(FlowerMsg::decode(&[99]).is_err());
         assert!(FlowerMsg::decode(&[]).is_err());
+        assert!(FlowerMsg::decode(&[FRAME_MAGIC_V2]).is_err());
+        assert!(FlowerMsg::decode(&[FRAME_MAGIC_V2, 99]).is_err());
     }
 
     #[test]
@@ -382,5 +773,94 @@ mod tests {
     fn truncated_rejected() {
         let buf = FlowerMsg::PushTaskRes { res: sample_res() }.encode();
         assert!(FlowerMsg::decode(&buf[..buf.len() - 3]).is_err());
+        let ins = FlowerMsg::TaskInsList {
+            tasks: vec![sample_ins()],
+            active: true,
+        }
+        .encode();
+        // Cut inside a tensor payload.
+        assert!(FlowerMsg::decode(&ins[..ins.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn oversized_tensor_count_rejected() {
+        // Hand-craft a PushTaskRes whose record claims too many tensors.
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(2); // PushTaskRes
+        w.u64(1);
+        w.u64(1);
+        w.u64(1);
+        w.str(""); // error
+        w.u32((MAX_TENSORS_PER_RECORD + 1) as u32);
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::TooLong { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn oversized_tensor_bytes_rejected() {
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(2); // PushTaskRes
+        w.u64(1);
+        w.u64(1);
+        w.u64(1);
+        w.str("");
+        w.u32(1); // one tensor
+        w.str("t");
+        w.u8(DType::U8.wire_tag());
+        w.u32(1); // ndim
+        w.u32(u32::MAX); // dim
+        w.u64(MAX_TENSOR_BYTES as u64 + 1);
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::TooLong { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn inconsistent_tensor_length_rejected() {
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(2); // PushTaskRes
+        w.u64(1);
+        w.u64(1);
+        w.u64(1);
+        w.str("");
+        w.u32(1);
+        w.str("t");
+        w.u8(DType::F32.wire_tag());
+        w.u32(1);
+        w.u32(3); // 3 f32 elements -> needs 12 bytes
+        w.u64(8); // but claims 8
+        w.raw(&[0u8; 8]);
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+    }
+
+    #[test]
+    fn oversized_config_rejected() {
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(17); // TaskInsList
+        w.u8(1); // active
+        w.u32(1); // one task
+        w.u64(1);
+        w.u64(1);
+        w.u64(1);
+        w.u8(0); // Fit
+        w.u32(0); // empty record
+        w.u32((MAX_CONFIG_ENTRIES + 1) as u32);
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::TooLong { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn oversized_task_list_rejected() {
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(17);
+        w.u8(1);
+        w.u32((MAX_TASKS_PER_LIST + 1) as u32);
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::TooLong { .. }), "{err:?}");
     }
 }

@@ -1,11 +1,13 @@
 //! Flower-analogue FL framework (paper §3.2): SuperLink/SuperNode
-//! long-running processes, ServerApp strategies, ClientApps, and the
-//! wire protocol whose frames the FLARE bridge forwards unmodified.
+//! long-running processes, ServerApp strategies, ClientApps, the record
+//! model (Flower's RecordDict Message API), and the wire protocol whose
+//! frames the FLARE bridge forwards unmodified.
 
 pub mod clientapp;
 pub mod dp;
 pub mod message;
 pub mod mods;
+pub mod records;
 pub mod secagg;
 pub mod run;
 pub mod serverapp;
@@ -15,10 +17,11 @@ pub mod supernode;
 
 pub use clientapp::{ClientApp, EvalOutput, FitOutput};
 pub use dp::{DpConfig, DpMod};
-pub use mods::{ClientMod, ModStack};
-pub use secagg::{SecAggFedAvg, SecAggMod};
 pub use message::{ConfigRecord, ConfigValue, FlowerMsg, MetricRecord, TaskIns, TaskRes, TaskType};
+pub use mods::{ClientMod, ModStack};
+pub use records::{ArrayRecord, DType, RecordDict, Tensor};
 pub use run::run_native;
+pub use secagg::{SecAggFedAvg, SecAggMod};
 pub use serverapp::{History, RoundRecord, ServerApp, ServerConfig};
 pub use superlink::SuperLink;
 pub use supernode::{FlowerConnector, NativeConnector, SuperNode, SuperNodeConfig};

@@ -10,17 +10,18 @@ use std::sync::Arc;
 
 use crate::flower::clientapp::{ClientApp, EvalOutput, FitOutput};
 use crate::flower::message::ConfigRecord;
+use crate::flower::records::ArrayRecord;
 
 /// The inner continuation a mod calls to proceed down the chain.
-pub type FitNext<'a> = &'a dyn Fn(&[f32], &ConfigRecord) -> anyhow::Result<FitOutput>;
-pub type EvalNext<'a> = &'a dyn Fn(&[f32], &ConfigRecord) -> anyhow::Result<EvalOutput>;
+pub type FitNext<'a> = &'a dyn Fn(&ArrayRecord, &ConfigRecord) -> anyhow::Result<FitOutput>;
+pub type EvalNext<'a> = &'a dyn Fn(&ArrayRecord, &ConfigRecord) -> anyhow::Result<EvalOutput>;
 
 pub trait ClientMod: Send + Sync {
     fn name(&self) -> &'static str;
 
     fn on_fit(
         &self,
-        parameters: &[f32],
+        parameters: &ArrayRecord,
         config: &ConfigRecord,
         next: FitNext,
     ) -> anyhow::Result<FitOutput> {
@@ -29,7 +30,7 @@ pub trait ClientMod: Send + Sync {
 
     fn on_evaluate(
         &self,
-        parameters: &[f32],
+        parameters: &ArrayRecord,
         config: &ConfigRecord,
         next: EvalNext,
     ) -> anyhow::Result<EvalOutput> {
@@ -51,36 +52,40 @@ impl ModStack {
     fn run_fit(
         &self,
         idx: usize,
-        parameters: &[f32],
+        parameters: &ArrayRecord,
         config: &ConfigRecord,
     ) -> anyhow::Result<FitOutput> {
         if idx == self.mods.len() {
             return self.app.fit(parameters, config);
         }
-        let next = |p: &[f32], c: &ConfigRecord| self.run_fit(idx + 1, p, c);
+        let next = |p: &ArrayRecord, c: &ConfigRecord| self.run_fit(idx + 1, p, c);
         self.mods[idx].on_fit(parameters, config, &next)
     }
 
     fn run_eval(
         &self,
         idx: usize,
-        parameters: &[f32],
+        parameters: &ArrayRecord,
         config: &ConfigRecord,
     ) -> anyhow::Result<EvalOutput> {
         if idx == self.mods.len() {
             return self.app.evaluate(parameters, config);
         }
-        let next = |p: &[f32], c: &ConfigRecord| self.run_eval(idx + 1, p, c);
+        let next = |p: &ArrayRecord, c: &ConfigRecord| self.run_eval(idx + 1, p, c);
         self.mods[idx].on_evaluate(parameters, config, &next)
     }
 }
 
 impl ClientApp for ModStack {
-    fn fit(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<FitOutput> {
+    fn fit(&self, parameters: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<FitOutput> {
         self.run_fit(0, parameters, config)
     }
 
-    fn evaluate(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<EvalOutput> {
+    fn evaluate(
+        &self,
+        parameters: &ArrayRecord,
+        config: &ConfigRecord,
+    ) -> anyhow::Result<EvalOutput> {
         self.run_eval(0, parameters, config)
     }
 }
@@ -99,14 +104,13 @@ mod tests {
         }
         fn on_fit(
             &self,
-            p: &[f32],
+            p: &ArrayRecord,
             c: &ConfigRecord,
             next: FitNext,
         ) -> anyhow::Result<FitOutput> {
             let mut out = next(p, c)?;
-            for x in &mut out.parameters {
-                *x *= self.0;
-            }
+            let k = self.0 as f64;
+            out.parameters = out.parameters.map_f64(|_, _, v| v * k);
             Ok(out)
         }
     }
@@ -120,7 +124,7 @@ mod tests {
         }
         fn on_fit(
             &self,
-            p: &[f32],
+            p: &ArrayRecord,
             c: &ConfigRecord,
             next: FitNext,
         ) -> anyhow::Result<FitOutput> {
@@ -133,9 +137,11 @@ mod tests {
     #[test]
     fn empty_stack_is_transparent() {
         let app = ModStack::new(Arc::new(ArithmeticClient { delta: 1.0, n: 2 }), vec![]);
-        let out = app.fit(&[1.0], &vec![]).unwrap();
-        assert_eq!(out.parameters, vec![2.0]);
-        let ev = app.evaluate(&[4.0], &vec![]).unwrap();
+        let out = app.fit(&ArrayRecord::from_flat(&[1.0]), &vec![]).unwrap();
+        assert_eq!(out.parameters.to_flat(), vec![2.0]);
+        let ev = app
+            .evaluate(&ArrayRecord::from_flat(&[4.0]), &vec![])
+            .unwrap();
         assert_eq!(ev.loss, 4.0);
     }
 
@@ -147,8 +153,8 @@ mod tests {
             Arc::new(ArithmeticClient { delta: 1.0, n: 2 }),
             vec![Arc::new(ScaleMod(2.0)), Arc::new(TagMod)],
         );
-        let out = app.fit(&[1.0], &vec![]).unwrap();
-        assert_eq!(out.parameters, vec![4.0]);
+        let out = app.fit(&ArrayRecord::from_flat(&[1.0]), &vec![]).unwrap();
+        assert_eq!(out.parameters.to_flat(), vec![4.0]);
         assert!(out.metrics.iter().any(|(k, _)| k == "tagged"));
     }
 
@@ -161,7 +167,7 @@ mod tests {
             }
             fn on_fit(
                 &self,
-                _: &[f32],
+                _: &ArrayRecord,
                 _: &ConfigRecord,
                 _: FitNext,
             ) -> anyhow::Result<FitOutput> {
@@ -172,6 +178,6 @@ mod tests {
             Arc::new(ArithmeticClient { delta: 1.0, n: 2 }),
             vec![Arc::new(FailMod)],
         );
-        assert!(app.fit(&[1.0], &vec![]).is_err());
+        assert!(app.fit(&ArrayRecord::from_flat(&[1.0]), &vec![]).is_err());
     }
 }

@@ -1,0 +1,699 @@
+//! The record model — Flower's `RecordDict` Message API, offline:
+//! named, shaped, dtyped [`Tensor`]s bundled into an [`ArrayRecord`],
+//! plus metric and config records, bundled into a [`RecordDict`].
+//!
+//! This replaces the seed's single flat `Vec<f32>` parameter
+//! representation everywhere: real models are multi-tensor and
+//! multi-dtype, and a flat vector forces full copies on every hop of
+//! the six-hop bridge path and makes per-layer strategies, quantized
+//! payloads, and partial updates unrepresentable.
+//!
+//! Tensor payloads are stored as little-endian packed bytes in a shared
+//! [`Bytes`] buffer. Decoding a received frame into an `ArrayRecord`
+//! performs **zero payload copies**: each tensor borrows the frame's
+//! allocation (see `flower::message` and the `record_codec` bench).
+//! Element access decodes scalars on the fly — aggregation reads
+//! through [`Tensor::get_f64`] and materializes fresh buffers only for
+//! its outputs, which is the compute boundary, not the wire.
+//!
+//! Bit-exactness (the paper's Fig. 5 claim) is byte-exactness here:
+//! [`ArrayRecord::bits_equal`] and the derived `PartialEq` compare raw
+//! payload bytes, so NaN payloads and signed zeros are preserved
+//! end-to-end.
+
+use crate::util::bytes::{Bytes, WireError};
+
+// ---------------------------------------------------------------------------
+// Config / metric records (moved here from `message.rs`; re-exported
+// there for compatibility)
+// ---------------------------------------------------------------------------
+
+/// Values carried in a task's config record (Flower's `ConfigRecord`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigValue {
+    F64(f64),
+    I64(i64),
+    Str(String),
+    Bool(bool),
+}
+
+pub type ConfigRecord = Vec<(String, ConfigValue)>;
+
+/// Metric records are (name, f64) pairs (Flower's `MetricRecord`).
+pub type MetricRecord = Vec<(String, f64)>;
+
+pub fn config_get_f64(c: &ConfigRecord, key: &str) -> Option<f64> {
+    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+        ConfigValue::F64(x) => Some(*x),
+        ConfigValue::I64(x) => Some(*x as f64),
+        _ => None,
+    })
+}
+
+pub fn config_get_i64(c: &ConfigRecord, key: &str) -> Option<i64> {
+    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+        ConfigValue::I64(x) => Some(*x),
+        _ => None,
+    })
+}
+
+pub fn config_get_str<'a>(c: &'a ConfigRecord, key: &str) -> Option<&'a str> {
+    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
+        ConfigValue::Str(s) => Some(s.as_str()),
+        _ => None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// DType
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I64,
+    U8,
+}
+
+impl DType {
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+            DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn wire_tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::I64 => 2,
+            DType::U8 => 3,
+        }
+    }
+
+    pub fn from_wire_tag(tag: u8) -> Result<DType, WireError> {
+        Ok(match tag {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I64,
+            3 => DType::U8,
+            t => return Err(WireError::BadTag(t)),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I64 => "i64",
+            DType::U8 => "u8",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor
+// ---------------------------------------------------------------------------
+
+/// A named, shaped, dtyped tensor whose payload is a little-endian
+/// packed byte view into a shared buffer. Cloning is O(1).
+#[derive(Clone)]
+pub struct Tensor {
+    name: String,
+    dtype: DType,
+    shape: Vec<usize>,
+    data: Bytes,
+}
+
+fn elems_of(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>()
+}
+
+impl Tensor {
+    /// Wrap an existing byte view. Validates the payload length against
+    /// dtype × shape.
+    pub fn new(
+        name: impl Into<String>,
+        dtype: DType,
+        shape: Vec<usize>,
+        data: Bytes,
+    ) -> anyhow::Result<Tensor> {
+        let name = name.into();
+        let want = elems_of(&shape) * dtype.size_of();
+        anyhow::ensure!(
+            data.len() == want,
+            "tensor '{name}': payload {} bytes, {} {:?} needs {want}",
+            data.len(),
+            dtype.name(),
+            shape
+        );
+        Ok(Tensor {
+            name,
+            dtype,
+            shape,
+            data,
+        })
+    }
+
+    pub fn from_f32(name: impl Into<String>, shape: Vec<usize>, vals: &[f32]) -> Tensor {
+        assert_eq!(elems_of(&shape), vals.len(), "shape/element mismatch");
+        let mut buf = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        crate::telemetry::bump("records.pack_bytes", buf.len() as i64);
+        Tensor {
+            name: name.into(),
+            dtype: DType::F32,
+            shape,
+            data: Bytes::from_vec(buf),
+        }
+    }
+
+    pub fn from_f64(name: impl Into<String>, shape: Vec<usize>, vals: &[f64]) -> Tensor {
+        assert_eq!(elems_of(&shape), vals.len(), "shape/element mismatch");
+        let mut buf = Vec::with_capacity(vals.len() * 8);
+        for v in vals {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        crate::telemetry::bump("records.pack_bytes", buf.len() as i64);
+        Tensor {
+            name: name.into(),
+            dtype: DType::F64,
+            shape,
+            data: Bytes::from_vec(buf),
+        }
+    }
+
+    pub fn from_i64(name: impl Into<String>, shape: Vec<usize>, vals: &[i64]) -> Tensor {
+        assert_eq!(elems_of(&shape), vals.len(), "shape/element mismatch");
+        let mut buf = Vec::with_capacity(vals.len() * 8);
+        for v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        crate::telemetry::bump("records.pack_bytes", buf.len() as i64);
+        Tensor {
+            name: name.into(),
+            dtype: DType::I64,
+            shape,
+            data: Bytes::from_vec(buf),
+        }
+    }
+
+    pub fn from_u8(name: impl Into<String>, shape: Vec<usize>, vals: &[u8]) -> Tensor {
+        assert_eq!(elems_of(&shape), vals.len(), "shape/element mismatch");
+        crate::telemetry::bump("records.pack_bytes", vals.len() as i64);
+        Tensor {
+            name: name.into(),
+            dtype: DType::U8,
+            shape,
+            data: Bytes::copy_from_slice(vals),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn elems(&self) -> usize {
+        elems_of(&self.shape)
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// The raw little-endian payload view (shared, zero-copy).
+    pub fn data(&self) -> &Bytes {
+        &self.data
+    }
+
+    /// Element `i` as f64 (lossless for F32/F64; exact for I64/U8 within
+    /// f64's 53-bit integer range).
+    #[inline]
+    pub fn get_f64(&self, i: usize) -> f64 {
+        let s = self.data.as_slice();
+        match self.dtype {
+            DType::F32 => {
+                let o = i * 4;
+                f32::from_bits(u32::from_le_bytes([s[o], s[o + 1], s[o + 2], s[o + 3]])) as f64
+            }
+            DType::F64 => {
+                let o = i * 8;
+                f64::from_bits(u64::from_le_bytes([
+                    s[o],
+                    s[o + 1],
+                    s[o + 2],
+                    s[o + 3],
+                    s[o + 4],
+                    s[o + 5],
+                    s[o + 6],
+                    s[o + 7],
+                ]))
+            }
+            DType::I64 => self.get_bits_u64(i) as i64 as f64,
+            DType::U8 => s[i] as f64,
+        }
+    }
+
+    /// Raw 64-bit lane for I64 tensors (used by secure aggregation's
+    /// exact wrapping arithmetic). Panics for other dtypes.
+    #[inline]
+    pub fn get_bits_u64(&self, i: usize) -> u64 {
+        assert_eq!(self.dtype, DType::I64, "get_bits_u64 on {:?}", self.dtype);
+        let s = self.data.as_slice();
+        let o = i * 8;
+        u64::from_le_bytes([
+            s[o],
+            s[o + 1],
+            s[o + 2],
+            s[o + 3],
+            s[o + 4],
+            s[o + 5],
+            s[o + 6],
+            s[o + 7],
+        ])
+    }
+
+    /// Contiguous iterator over an F32 tensor's elements — the hot
+    /// aggregation loops use this instead of per-index [`Tensor::get_f64`]
+    /// so the reduction stays a vectorizable linear scan. Panics for
+    /// other dtypes.
+    pub fn f32_iter(&self) -> impl Iterator<Item = f32> + '_ {
+        assert_eq!(self.dtype, DType::F32, "f32_iter on {:?}", self.dtype);
+        self.data
+            .as_slice()
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+    }
+
+    /// Decode as f32, casting non-f32 dtypes (the canonical flat view).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        let n = self.elems();
+        let s = self.data.as_slice();
+        match self.dtype {
+            DType::F32 => s
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+                .collect(),
+            _ => (0..n).map(|i| self.get_f64(i) as f32).collect(),
+        }
+    }
+
+    /// Build a tensor of `dtype` from f64 values, casting per dtype
+    /// (floats cast; I64 rounds; U8 rounds and saturates).
+    pub fn from_f64_values(
+        name: impl Into<String>,
+        dtype: DType,
+        shape: Vec<usize>,
+        vals: impl Iterator<Item = f64>,
+    ) -> Tensor {
+        let name = name.into();
+        match dtype {
+            DType::F32 => {
+                let v: Vec<f32> = vals.map(|x| x as f32).collect();
+                Tensor::from_f32(name, shape, &v)
+            }
+            DType::F64 => {
+                let v: Vec<f64> = vals.collect();
+                Tensor::from_f64(name, shape, &v)
+            }
+            DType::I64 => {
+                let v: Vec<i64> = vals.map(|x| x.round() as i64).collect();
+                Tensor::from_i64(name, shape, &v)
+            }
+            DType::U8 => {
+                let v: Vec<u8> = vals.map(|x| x.round().clamp(0.0, 255.0) as u8).collect();
+                Tensor::from_u8(name, shape, &v)
+            }
+        }
+    }
+
+    /// Same name, dtype, and shape (payload not compared).
+    pub fn dims_match(&self, other: &Tensor) -> bool {
+        self.name == other.name && self.dtype == other.dtype && self.shape == other.shape
+    }
+
+    /// Byte-exact equality (name, dtype, shape, payload bits).
+    pub fn bits_equal(&self, other: &Tensor) -> bool {
+        self.dims_match(other) && self.data == other.data
+    }
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.bits_equal(other)
+    }
+}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Tensor({} {} {:?}, {} bytes)",
+            self.name,
+            self.dtype.name(),
+            self.shape,
+            self.data.len()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ArrayRecord
+// ---------------------------------------------------------------------------
+
+/// Name used by the flat-compat shim for the single tensor wrapping a
+/// legacy `Vec<f32>` parameter vector.
+pub const FLAT_TENSOR: &str = "parameters";
+
+/// Ordered collection of uniquely-named tensors — Flower's
+/// `ArrayRecord`. Order is part of the canonical form: aggregation,
+/// masking, and the flat view all iterate in record order, which is why
+/// native and bridged runs stay bit-identical.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArrayRecord {
+    tensors: Vec<Tensor>,
+}
+
+impl ArrayRecord {
+    pub fn new() -> ArrayRecord {
+        ArrayRecord::default()
+    }
+
+    pub fn from_tensors(tensors: Vec<Tensor>) -> anyhow::Result<ArrayRecord> {
+        // O(n) duplicate detection — this sits on the frame-decode path,
+        // where a hostile frame can claim thousands of tensors.
+        {
+            let mut seen = std::collections::HashSet::with_capacity(tensors.len());
+            for t in &tensors {
+                anyhow::ensure!(seen.insert(t.name()), "duplicate tensor name '{}'", t.name());
+            }
+        }
+        Ok(ArrayRecord { tensors })
+    }
+
+    pub fn push(&mut self, tensor: Tensor) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.get(tensor.name()).is_none(),
+            "duplicate tensor name '{}'",
+            tensor.name()
+        );
+        self.tensors.push(tensor);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name() == name)
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total element count across tensors.
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.elems()).sum()
+    }
+
+    /// Total payload bytes across tensors.
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.byte_len()).sum()
+    }
+
+    /// Same tensor names/dtypes/shapes in the same order.
+    pub fn dims_match(&self, other: &ArrayRecord) -> bool {
+        self.tensors.len() == other.tensors.len()
+            && self
+                .tensors
+                .iter()
+                .zip(other.tensors.iter())
+                .all(|(a, b)| a.dims_match(b))
+    }
+
+    /// Byte-exact equality across all tensors (NaN-safe — stronger than
+    /// float `==`).
+    pub fn bits_equal(&self, other: &ArrayRecord) -> bool {
+        self.tensors.len() == other.tensors.len()
+            && self
+                .tensors
+                .iter()
+                .zip(other.tensors.iter())
+                .all(|(a, b)| a.bits_equal(b))
+    }
+
+    // ---------------- flat-compat shim ----------------
+
+    /// Wrap a legacy flat f32 vector as a single-tensor record (the
+    /// mechanical migration path for examples/benches).
+    pub fn from_flat(vals: &[f32]) -> ArrayRecord {
+        ArrayRecord {
+            tensors: vec![Tensor::from_f32(FLAT_TENSOR, vec![vals.len()], vals)],
+        }
+    }
+
+    /// Canonical flattened f32 view: tensors concatenated in record
+    /// order, non-f32 dtypes cast. Exact for all-F32 records.
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total_elems());
+        for t in &self.tensors {
+            out.extend(t.to_f32_vec());
+        }
+        out
+    }
+
+    /// Rebuild a record with THIS record's structure (names, shapes)
+    /// from a flat f32 vector — the exact inverse of [`to_flat`], used
+    /// by the train stack to round-trip layer-named tensors through the
+    /// flat AOT artifacts.
+    ///
+    /// Only valid for all-F32 records: a flat f32 intermediate cannot
+    /// represent i64/f64 payloads exactly, so rather than silently
+    /// corrupting them this errors (the bit-exactness contract).
+    ///
+    /// [`to_flat`]: ArrayRecord::to_flat
+    pub fn from_flat_like(&self, flat: &[f32]) -> anyhow::Result<ArrayRecord> {
+        anyhow::ensure!(
+            flat.len() == self.total_elems(),
+            "flat vector has {} elems, record structure needs {}",
+            flat.len(),
+            self.total_elems()
+        );
+        let mut tensors = Vec::with_capacity(self.tensors.len());
+        let mut off = 0;
+        for t in &self.tensors {
+            anyhow::ensure!(
+                t.dtype() == DType::F32,
+                "from_flat_like: tensor '{}' is {} — a flat f32 view cannot \
+                 rebuild non-f32 payloads losslessly",
+                t.name(),
+                t.dtype().name()
+            );
+            let n = t.elems();
+            tensors.push(Tensor::from_f32(t.name(), t.shape().to_vec(), &flat[off..off + n]));
+            off += n;
+        }
+        Ok(ArrayRecord { tensors })
+    }
+
+    /// Element-wise transform preserving structure: `f(tensor_name,
+    /// element_index, value)` over every tensor in record order, output
+    /// cast back to each tensor's dtype.
+    pub fn map_f64(&self, f: impl Fn(&str, usize, f64) -> f64) -> ArrayRecord {
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|t| {
+                Tensor::from_f64_values(
+                    t.name(),
+                    t.dtype(),
+                    t.shape().to_vec(),
+                    (0..t.elems()).map(|i| f(t.name(), i, t.get_f64(i))),
+                )
+            })
+            .collect();
+        ArrayRecord { tensors }
+    }
+}
+
+/// Flat-compat helpers (the migration shim named by the redesign):
+/// `compat::from_flat` / `compat::to_flat` are free-function aliases of
+/// the [`ArrayRecord`] inherent methods.
+pub mod compat {
+    use super::ArrayRecord;
+
+    pub fn from_flat(vals: &[f32]) -> ArrayRecord {
+        ArrayRecord::from_flat(vals)
+    }
+
+    pub fn to_flat(rec: &ArrayRecord) -> Vec<f32> {
+        rec.to_flat()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RecordDict
+// ---------------------------------------------------------------------------
+
+/// The full record bundle a message carries: arrays + metrics + configs
+/// (Flower's `RecordDict`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecordDict {
+    pub arrays: ArrayRecord,
+    pub metrics: MetricRecord,
+    pub configs: ConfigRecord,
+}
+
+impl RecordDict {
+    pub fn from_arrays(arrays: ArrayRecord) -> RecordDict {
+        RecordDict {
+            arrays,
+            metrics: Vec::new(),
+            configs: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixed_record() -> ArrayRecord {
+        ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("w", vec![2, 2], &[1.0, -2.0, 3.5, 0.25]),
+            Tensor::from_f64("bias", vec![3], &[1e-12, -4.0, 2.5]),
+            Tensor::from_i64("steps", vec![2], &[-7, 1 << 40]),
+            Tensor::from_u8("mask", vec![4], &[0, 1, 254, 255]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn dtype_sizes_and_tags_roundtrip() {
+        for d in [DType::F32, DType::F64, DType::I64, DType::U8] {
+            assert_eq!(DType::from_wire_tag(d.wire_tag()).unwrap(), d);
+            assert!(d.size_of() > 0);
+        }
+        assert!(DType::from_wire_tag(9).is_err());
+    }
+
+    #[test]
+    fn tensor_element_access() {
+        let r = mixed_record();
+        assert_eq!(r.get("w").unwrap().get_f64(2), 3.5);
+        assert_eq!(r.get("bias").unwrap().get_f64(1), -4.0);
+        assert_eq!(r.get("steps").unwrap().get_f64(0), -7.0);
+        assert_eq!(r.get("steps").unwrap().get_f64(1), (1u64 << 40) as f64);
+        assert_eq!(r.get("mask").unwrap().get_f64(3), 255.0);
+        assert_eq!(r.total_elems(), 4 + 3 + 2 + 4);
+        assert_eq!(r.total_bytes(), 16 + 24 + 16 + 4);
+    }
+
+    #[test]
+    fn tensor_new_validates_length() {
+        let data = Bytes::from_vec(vec![0u8; 12]);
+        assert!(Tensor::new("x", DType::F32, vec![3], data.clone()).is_ok());
+        assert!(Tensor::new("x", DType::F32, vec![4], data.clone()).is_err());
+        assert!(Tensor::new("x", DType::F64, vec![3], data).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut r = ArrayRecord::from_flat(&[1.0]);
+        assert!(r.push(Tensor::from_f32(FLAT_TENSOR, vec![1], &[2.0])).is_err());
+        assert!(r.push(Tensor::from_f32("other", vec![1], &[2.0])).is_ok());
+    }
+
+    #[test]
+    fn flat_roundtrip_exact_for_f32() {
+        let vals = [0.0f32, -0.0, f32::NAN, 1e-40, f32::MAX];
+        let rec = ArrayRecord::from_flat(&vals);
+        let back = rec.to_flat();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Structure-preserving rebuild.
+        let rebuilt = rec.from_flat_like(&back).unwrap();
+        assert!(rebuilt.bits_equal(&rec));
+    }
+
+    #[test]
+    fn from_flat_like_validates_length_and_dtype() {
+        let rec = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("w", vec![2, 2], &[1.0; 4]),
+            Tensor::from_f32("b", vec![3], &[2.0; 3]),
+        ])
+        .unwrap();
+        assert!(rec.from_flat_like(&[0.0; 3]).is_err(), "length mismatch");
+        let ok = rec.from_flat_like(&[9.0; 7]).unwrap();
+        assert!(ok.dims_match(&rec));
+        assert_eq!(ok.get("b").unwrap().get_f64(0), 9.0);
+        // Non-f32 structures refuse the lossy flat round-trip.
+        assert!(mixed_record()
+            .from_flat_like(&vec![1.0; mixed_record().total_elems()])
+            .is_err());
+    }
+
+    #[test]
+    fn map_preserves_structure_and_dtypes() {
+        let rec = mixed_record();
+        let doubled = rec.map_f64(|_, _, v| v * 2.0);
+        assert!(doubled.dims_match(&rec));
+        assert_eq!(doubled.get("w").unwrap().get_f64(0), 2.0);
+        assert_eq!(doubled.get("steps").unwrap().get_f64(0), -14.0);
+        // U8 saturates.
+        assert_eq!(doubled.get("mask").unwrap().get_f64(3), 255.0);
+    }
+
+    #[test]
+    fn bits_equal_nan_safe() {
+        let a = ArrayRecord::from_flat(&[f32::NAN, -0.0]);
+        let b = ArrayRecord::from_flat(&[f32::NAN, -0.0]);
+        let c = ArrayRecord::from_flat(&[f32::NAN, 0.0]);
+        assert!(a.bits_equal(&b));
+        assert_eq!(a, b);
+        assert!(!a.bits_equal(&c), "-0.0 and 0.0 differ bitwise");
+    }
+
+    #[test]
+    fn dims_match_ignores_payload() {
+        let a = ArrayRecord::from_flat(&[1.0, 2.0]);
+        let b = ArrayRecord::from_flat(&[3.0, 4.0]);
+        assert!(a.dims_match(&b));
+        assert!(!a.bits_equal(&b));
+        let c = ArrayRecord::from_flat(&[1.0]);
+        assert!(!a.dims_match(&c));
+    }
+
+    #[test]
+    fn compat_shim_is_mechanical() {
+        let flat = vec![1.0f32, 2.0, 3.0];
+        let rec = compat::from_flat(&flat);
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec.tensors()[0].name(), FLAT_TENSOR);
+        assert_eq!(compat::to_flat(&rec), flat);
+    }
+}

@@ -57,6 +57,7 @@ pub fn run_native(
 mod tests {
     use super::*;
     use crate::flower::clientapp::ArithmeticClient;
+    use crate::flower::records::{ArrayRecord, DType, Tensor};
     use crate::flower::serverapp::ServerConfig;
     use crate::flower::strategy::{Aggregator, FedAvg, FedMedian};
 
@@ -76,12 +77,12 @@ mod tests {
                 min_nodes: 2,
                 ..Default::default()
             },
-            vec![0.0; 4],
+            ArrayRecord::from_flat(&[0.0; 4]),
         );
         let history = run_native(&mut app, apps(&[(1.0, 10), (3.0, 30)]), 1).unwrap();
         assert_eq!(history.rounds.len(), 3);
         // Weighted mean delta per round = (1*10 + 3*30)/40 = 2.5.
-        for (i, p) in history.parameters.iter().enumerate() {
+        for (i, p) in history.parameters.to_flat().iter().enumerate() {
             assert!((p - 7.5).abs() < 1e-4, "param {i} = {p}");
         }
         // Eval loss recorded each round.
@@ -102,7 +103,7 @@ mod tests {
                     seed: 42,
                     ..Default::default()
                 },
-                vec![0.5; 8],
+                ArrayRecord::from_flat(&[0.5; 8]),
             );
             run_native(&mut app, apps(&[(0.5, 5), (1.5, 7), (2.5, 11)]), 1).unwrap()
         };
@@ -110,6 +111,43 @@ mod tests {
         let b = run();
         assert_eq!(a, b);
         assert!(a.params_bits_equal(&b));
+    }
+
+    #[test]
+    fn native_multi_tensor_mixed_dtype_model() {
+        // A genuinely multi-tensor, mixed-dtype model end to end: the
+        // record structure (layer names, shapes, dtypes) must survive
+        // the full native path, and the run must be bit-reproducible.
+        let initial = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("conv.w", vec![2, 2], &[0.1, -0.2, 0.3, 0.0]),
+            Tensor::from_f64("head.bias", vec![3], &[0.0, 0.5, -0.5]),
+            Tensor::from_i64("vocab.count", vec![2], &[100, 200]),
+            Tensor::from_u8("route.mask", vec![4], &[1, 0, 1, 0]),
+        ])
+        .unwrap();
+        let run = || {
+            let mut app = ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 2,
+                    min_nodes: 2,
+                    ..Default::default()
+                },
+                initial.clone(),
+            );
+            run_native(&mut app, apps(&[(1.0, 10), (2.0, 30)]), 1).unwrap()
+        };
+        let h = run();
+        assert!(h.parameters.dims_match(&initial), "structure preserved");
+        assert_eq!(h.parameters.get("conv.w").unwrap().dtype(), DType::F32);
+        assert_eq!(h.parameters.get("head.bias").unwrap().dtype(), DType::F64);
+        assert_eq!(h.parameters.get("vocab.count").unwrap().dtype(), DType::I64);
+        assert_eq!(h.parameters.get("route.mask").unwrap().dtype(), DType::U8);
+        // Weighted mean delta per round = (1*10 + 2*30)/40 = 1.75.
+        let w = h.parameters.get("conv.w").unwrap();
+        assert!((w.get_f64(0) - (0.1f32 as f64 + 2.0 * 1.75)).abs() < 1e-3);
+        let h2 = run();
+        assert!(h.params_bits_equal(&h2));
     }
 
     #[test]
@@ -121,11 +159,11 @@ mod tests {
                 min_nodes: 3,
                 ..Default::default()
             },
-            vec![0.0; 2],
+            ArrayRecord::from_flat(&[0.0; 2]),
         );
         let history = run_native(&mut app, apps(&[(1.0, 1), (2.0, 1), (50.0, 1)]), 1).unwrap();
         // Median of per-round cumulative deltas stays with the honest pair.
-        assert!(history.parameters[0] <= 4.0 + 1e-6);
+        assert!(history.parameters.to_flat()[0] <= 4.0 + 1e-6);
     }
 
     #[test]
@@ -138,7 +176,7 @@ mod tests {
                 round_timeout: Duration::from_millis(200),
                 ..Default::default()
             },
-            vec![0.0],
+            ArrayRecord::from_flat(&[0.0]),
         );
         assert!(run_native(&mut app, apps(&[(1.0, 1)]), 1).is_err());
     }

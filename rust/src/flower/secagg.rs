@@ -20,16 +20,18 @@
 //! the tests exercise. Dropout recovery (secret-shared seeds) is future
 //! work, matching the paper's initial-integration scope.
 //!
-//! Wire format: each u64 rides as two bit-cast f32s in the existing
-//! `parameters` field (the codec is bit-exact for arbitrary f32 bits, so
-//! this is lossless).
-
-
+//! Wire format: masking is **per tensor**. Each f32 tensor of the
+//! update becomes an I64 tensor of the same name and shape whose lanes
+//! are the masked fixed-point values — the record codec carries them
+//! bit-exactly, and per-layer structure survives masking. One PRG
+//! stream per cohort pair runs across tensors in record order, so the
+//! masked record is exactly the masked flat vector re-segmented.
 
 use crate::flower::clientapp::FitOutput;
 use crate::flower::message::{config_get_i64, config_get_str, ConfigRecord};
 use crate::flower::mods::{ClientMod, FitNext};
-use crate::flower::strategy::{FitRes, Strategy};
+use crate::flower::records::{ArrayRecord, DType, Tensor};
+use crate::flower::strategy::{check_same_structure, FitRes, Strategy};
 use crate::util::rng::SplitMix64;
 
 /// Fixed-point scale: 24 fractional bits.
@@ -52,24 +54,6 @@ fn dequantize_sum(sum: u64, divisor: f64) -> f32 {
     ((sum as i64) as f64 / SCALE / divisor) as f32
 }
 
-/// Encode u64 lanes as two bit-cast f32s each.
-fn encode_u64s(xs: &[u64]) -> Vec<f32> {
-    let mut out = Vec::with_capacity(xs.len() * 2);
-    for x in xs {
-        out.push(f32::from_bits(*x as u32));
-        out.push(f32::from_bits((*x >> 32) as u32));
-    }
-    out
-}
-
-fn decode_u64s(fs: &[f32]) -> anyhow::Result<Vec<u64>> {
-    anyhow::ensure!(fs.len() % 2 == 0, "secagg payload has odd length");
-    Ok(fs
-        .chunks_exact(2)
-        .map(|c| (c[0].to_bits() as u64) | ((c[1].to_bits() as u64) << 32))
-        .collect())
-}
-
 pub const SECAGG_SEED_KEY: &str = "secagg_round_seed";
 
 /// Client-side mod: masks the weighted update before it leaves the site.
@@ -82,7 +66,7 @@ impl ClientMod for SecAggMod {
 
     fn on_fit(
         &self,
-        parameters: &[f32],
+        parameters: &ArrayRecord,
         config: &ConfigRecord,
         next: FitNext,
     ) -> anyhow::Result<FitOutput> {
@@ -101,27 +85,46 @@ impl ClientMod for SecAggMod {
             .ok_or_else(|| anyhow::anyhow!("secagg: missing round seed"))?
             as u64;
 
-        // Quantize weighted update, then mask.
+        // Quantize the weighted update, per tensor, in record order.
         let w = out.num_examples as f32;
-        let mut lanes: Vec<u64> = out.parameters.iter().map(|p| quantize(p * w)).collect();
+        let mut lanes_per_tensor: Vec<Vec<u64>> = Vec::with_capacity(out.parameters.len());
+        for t in out.parameters.tensors() {
+            anyhow::ensure!(
+                t.dtype() == DType::F32,
+                "secagg: tensor '{}' is {}, only f32 updates can be masked",
+                t.name(),
+                t.dtype().name()
+            );
+            lanes_per_tensor
+                .push((0..t.elems()).map(|i| quantize(t.get_f64(i) as f32 * w)).collect());
+        }
+        // Mask: one PRG stream per peer, running across tensors in
+        // record order (identical to masking the flat concatenation).
         for &peer in &cohort {
             if peer == me {
                 continue;
             }
             let mut prg = SplitMix64::new(pair_seed(round_seed, me, peer));
-            if me < peer {
+            let add = me < peer;
+            for lanes in lanes_per_tensor.iter_mut() {
                 for lane in lanes.iter_mut() {
-                    *lane = lane.wrapping_add(prg.next_u64());
-                }
-            } else {
-                for lane in lanes.iter_mut() {
-                    *lane = lane.wrapping_sub(prg.next_u64());
+                    let m = prg.next_u64();
+                    *lane = if add {
+                        lane.wrapping_add(m)
+                    } else {
+                        lane.wrapping_sub(m)
+                    };
                 }
             }
         }
+        let mut masked = ArrayRecord::new();
+        for (t, lanes) in out.parameters.tensors().iter().zip(lanes_per_tensor) {
+            let as_i64: Vec<i64> = lanes.into_iter().map(|l| l as i64).collect();
+            masked.push(Tensor::from_i64(t.name(), t.shape().to_vec(), &as_i64))?;
+        }
         crate::telemetry::bump("secagg.masked_updates", 1);
         Ok(FitOutput {
-            parameters: encode_u64s(&lanes),
+            parameters: masked,
             num_examples: out.num_examples,
             metrics: out.metrics,
         })
@@ -129,7 +132,7 @@ impl ClientMod for SecAggMod {
 }
 
 /// Server-side strategy: unmasks by summation (FedAvg semantics — the
-/// masked sum IS the weighted sum).
+/// masked sum IS the weighted sum), per tensor.
 pub struct SecAggFedAvg {
     /// Per-round public seed basis (in production: per-round key
     /// agreement output).
@@ -167,42 +170,50 @@ impl Strategy for SecAggFedAvg {
     fn aggregate_fit(
         &mut self,
         _round: u64,
-        _current: &[f32],
+        _current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(!results.is_empty(), "secagg: no results");
-        let lanes0 = decode_u64s(&results[0].parameters)?;
-        let n = lanes0.len();
-        let mut sum = lanes0;
-        for r in &results[1..] {
-            let lanes = decode_u64s(&r.parameters)?;
-            anyhow::ensure!(lanes.len() == n, "secagg: length mismatch");
-            for (s, l) in sum.iter_mut().zip(lanes.iter()) {
-                *s = s.wrapping_add(*l);
-            }
-        }
+    ) -> anyhow::Result<ArrayRecord> {
+        let structure = check_same_structure(results)?;
         let total_w: f64 = results.iter().map(|r| r.num_examples as f64).sum();
         anyhow::ensure!(total_w > 0.0, "secagg: zero total weight");
-        let out: Vec<f32> = sum.iter().map(|s| dequantize_sum(*s, total_w)).collect();
-        // Residual-mask detection: if any client was missing, masks don't
-        // cancel and values are uniform over the u64 range -> astronomically
-        // large after dequantization.
-        if out.iter().any(|v| !v.is_finite() || v.abs() > 1e9) {
-            anyhow::bail!("secagg: mask residue detected (cohort incomplete?)");
+        let mut tensors = Vec::with_capacity(structure.len());
+        for (ti, t) in structure.tensors().iter().enumerate() {
+            anyhow::ensure!(
+                t.dtype() == DType::I64,
+                "secagg: tensor '{}' is {}, expected masked i64 lanes",
+                t.name(),
+                t.dtype().name()
+            );
+            let n = t.elems();
+            let mut sum: Vec<u64> = (0..n).map(|i| t.get_bits_u64(i)).collect();
+            for r in &results[1..] {
+                let rt = &r.parameters.tensors()[ti];
+                for (s, i) in sum.iter_mut().zip(0..n) {
+                    *s = s.wrapping_add(rt.get_bits_u64(i));
+                }
+            }
+            let vals: Vec<f32> = sum.iter().map(|s| dequantize_sum(*s, total_w)).collect();
+            // Residual-mask detection: if any client was missing, masks
+            // don't cancel and values are uniform over the u64 range ->
+            // astronomically large after dequantization.
+            if vals.iter().any(|v| !v.is_finite() || v.abs() > 1e9) {
+                anyhow::bail!("secagg: mask residue detected (cohort incomplete?)");
+            }
+            tensors.push(Tensor::from_f32(t.name(), t.shape().to_vec(), &vals));
         }
         crate::telemetry::bump("secagg.unmasked_aggregations", 1);
-        Ok(out)
+        Ok(ArrayRecord::from_tensors(tensors)?)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use std::sync::Arc;
     use super::*;
     use crate::flower::clientapp::{ArithmeticClient, ClientApp};
     use crate::flower::message::ConfigValue;
     use crate::flower::mods::ModStack;
     use crate::flower::strategy::host_weighted_mean;
+    use std::sync::Arc;
 
     fn fit_config(me: u64, cohort: &str, seed: i64) -> ConfigRecord {
         vec![
@@ -218,7 +229,7 @@ mod tests {
         me: u64,
         cohort: &str,
         seed: i64,
-        params: &[f32],
+        params: &ArrayRecord,
     ) -> FitRes {
         let app = ModStack::new(
             Arc::new(ArithmeticClient { delta, n }),
@@ -243,14 +254,8 @@ mod tests {
     }
 
     #[test]
-    fn u64_lane_encoding_roundtrip() {
-        let xs = vec![0u64, 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D];
-        assert_eq!(decode_u64s(&encode_u64s(&xs)).unwrap(), xs);
-    }
-
-    #[test]
     fn masks_cancel_to_weighted_mean() {
-        let params = vec![1.0f32, -2.0, 0.5, 8.25];
+        let params = ArrayRecord::from_flat(&[1.0f32, -2.0, 0.5, 8.25]);
         let seed = 777;
         let results = vec![
             masked_update(1.0, 10, 1, "1,2,3", seed, &params),
@@ -263,17 +268,64 @@ mod tests {
         let got = strat.aggregate_fit(1, &params, &results).unwrap();
 
         // Expected: plain weighted mean of the unmasked client outputs.
-        let plain: Vec<FitRes> = [(1.0f32, 10u64, 1u64), (2.0, 20, 2), (3.0, 30, 3)]
+        let plain: Vec<FitRes> = [(1.0f64, 10u64, 1u64), (2.0, 20, 2), (3.0, 30, 3)]
             .iter()
             .map(|&(d, n, id)| FitRes {
                 node_id: id,
-                parameters: params.iter().map(|p| p + d).collect(),
+                parameters: params.map_f64(|_, _, p| p + d),
                 num_examples: n,
                 metrics: vec![],
             })
             .collect();
         let want = host_weighted_mean(&plain);
-        for (g, w) in got.iter().zip(want.iter()) {
+        for (g, w) in got.to_flat().iter().zip(want.to_flat().iter()) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn per_tensor_masking_preserves_structure() {
+        // A multi-tensor update keeps its layer names and shapes through
+        // the mask: each f32 layer becomes an i64 layer of equal shape.
+        let params = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("conv.w", vec![2, 2], &[0.5, -0.5, 1.0, 2.0]),
+            Tensor::from_f32("head.b", vec![3], &[0.0, 0.25, -0.25]),
+        ])
+        .unwrap();
+        let r = masked_update(1.0, 10, 1, "1,2", 42, &params);
+        assert_eq!(r.parameters.len(), 2);
+        let t = r.parameters.get("conv.w").unwrap();
+        assert_eq!(t.dtype(), DType::I64);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(
+            r.parameters.get("head.b").unwrap().shape(),
+            &[3],
+            "shape preserved"
+        );
+    }
+
+    #[test]
+    fn multi_tensor_masks_cancel() {
+        let params = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("a", vec![2], &[1.0, -2.0]),
+            Tensor::from_f32("b", vec![1], &[0.5]),
+        ])
+        .unwrap();
+        let seed = 99;
+        let results = vec![
+            masked_update(1.0, 10, 1, "1,2", seed, &params),
+            masked_update(2.0, 30, 2, "1,2", seed, &params),
+        ];
+        let mut strat = SecAggFedAvg::new(0);
+        let got = strat.aggregate_fit(1, &params, &results).unwrap();
+        assert!(got.dims_match(&ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("a", vec![2], &[0.0, 0.0]),
+            Tensor::from_f32("b", vec![1], &[0.0]),
+        ])
+        .unwrap()));
+        // Weighted mean delta = (1*10 + 2*30)/40 = 1.75.
+        let want = params.map_f64(|_, _, p| p + 1.75);
+        for (g, w) in got.to_flat().iter().zip(want.to_flat().iter()) {
             assert!((g - w).abs() < 1e-4, "{g} vs {w}");
         }
     }
@@ -281,9 +333,10 @@ mod tests {
     #[test]
     fn individual_update_is_hidden() {
         // A single masked update must look nothing like the real one.
-        let params = vec![0.5f32; 16];
+        let params = ArrayRecord::from_flat(&[0.5f32; 16]);
         let r = masked_update(1.0, 10, 1, "1,2", 42, &params);
-        let lanes = decode_u64s(&r.parameters).unwrap();
+        let t = r.parameters.get(crate::flower::records::FLAT_TENSOR).unwrap();
+        let lanes: Vec<u64> = (0..t.elems()).map(|i| t.get_bits_u64(i)).collect();
         // Real quantized values are ~15 * 2^24 ~ 2^28; masked lanes are
         // uniform u64 — overwhelmingly above 2^40.
         let big = lanes.iter().filter(|&&l| l > 1 << 40).count();
@@ -292,7 +345,7 @@ mod tests {
 
     #[test]
     fn incomplete_cohort_detected() {
-        let params = vec![1.0f32; 8];
+        let params = ArrayRecord::from_flat(&[1.0f32; 8]);
         let results = vec![
             masked_update(1.0, 10, 1, "1,2,3", 9, &params),
             masked_update(2.0, 20, 2, "1,2,3", 9, &params),
@@ -305,7 +358,7 @@ mod tests {
 
     #[test]
     fn wrong_seed_fails_loudly() {
-        let params = vec![1.0f32; 8];
+        let params = ArrayRecord::from_flat(&[1.0f32; 8]);
         let results = vec![
             masked_update(1.0, 10, 1, "1,2", 1, &params),
             masked_update(2.0, 20, 2, "1,2", 2, &params), // different seed!

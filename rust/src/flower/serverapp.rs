@@ -8,14 +8,17 @@
 //! float reduction has a fixed order. Two runs with the same seed —
 //! regardless of transport (native or bridged) — produce bit-identical
 //! histories, which is exactly the paper's reproducibility experiment.
+//!
+//! Parameters are [`ArrayRecord`]s end to end: pushing a round's model
+//! to N clients clones the record N times, which is N cheap reference
+//! bumps on the shared tensor buffers — not N payload copies.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::flare::tracking::SummaryWriter;
-use crate::flower::message::{
-    ConfigValue, MetricRecord, TaskIns, TaskType,
-};
+use crate::flower::message::{ConfigValue, MetricRecord, TaskIns, TaskType};
+use crate::flower::records::ArrayRecord;
 use crate::flower::strategy::{EvalRes, FitRes, Strategy};
 use crate::flower::superlink::SuperLink;
 use crate::util::rng::Rng;
@@ -64,13 +67,14 @@ pub struct RoundRecord {
     pub per_client_eval: Vec<(u64, f64, MetricRecord)>,
 }
 
-/// The training curves of Fig. 5; `PartialEq` gives the bit-exact
-/// overlay check.
+/// The training curves of Fig. 5. `PartialEq` compares final parameters
+/// byte-exactly (record equality is payload-bit equality), which IS the
+/// bit-exact overlay check.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct History {
     pub rounds: Vec<RoundRecord>,
     /// Final global parameters.
-    pub parameters: Vec<f32>,
+    pub parameters: ArrayRecord,
 }
 
 impl History {
@@ -121,15 +125,10 @@ impl History {
         out
     }
 
-    /// Bitwise equality of the final parameters (stronger than PartialEq
-    /// for NaN handling).
+    /// Bitwise equality of the final parameters (NaN-safe; kept for API
+    /// clarity even though record `PartialEq` is already byte-exact).
     pub fn params_bits_equal(&self, other: &History) -> bool {
-        self.parameters.len() == other.parameters.len()
-            && self
-                .parameters
-                .iter()
-                .zip(other.parameters.iter())
-                .all(|(a, b)| a.to_bits() == b.to_bits())
+        self.parameters.bits_equal(&other.parameters)
     }
 }
 
@@ -138,14 +137,14 @@ impl History {
 pub struct ServerApp {
     pub strategy: Box<dyn Strategy>,
     pub config: ServerConfig,
-    pub initial_parameters: Vec<f32>,
+    pub initial_parameters: ArrayRecord,
 }
 
 impl ServerApp {
     pub fn new(
         strategy: Box<dyn Strategy>,
         config: ServerConfig,
-        initial_parameters: Vec<f32>,
+        initial_parameters: ArrayRecord,
     ) -> Self {
         Self {
             strategy,
@@ -209,6 +208,7 @@ impl ServerApp {
                             run_id,
                             round,
                             task_type: TaskType::Fit,
+                            // O(1) per node: records share tensor buffers.
                             parameters: params.clone(),
                             config,
                         },
@@ -346,7 +346,7 @@ mod tests {
                 seed,
                 ..Default::default()
             },
-            vec![0.0; 4],
+            ArrayRecord::from_flat(&[0.0; 4]),
         )
     }
 
@@ -381,7 +381,7 @@ mod tests {
                 eval_metrics: vec![("accuracy".into(), 0.8)],
                 per_client_eval: vec![],
             }],
-            parameters: vec![1.0],
+            parameters: ArrayRecord::from_flat(&[1.0]),
         };
         let csv = h.to_csv();
         assert!(csv.starts_with("round,eval_loss,train_loss,eval_accuracy\n"));
@@ -392,16 +392,17 @@ mod tests {
     fn params_bits_equal_handles_nan() {
         let a = History {
             rounds: vec![],
-            parameters: vec![f32::NAN],
+            parameters: ArrayRecord::from_flat(&[f32::NAN]),
         };
         let b = History {
             rounds: vec![],
-            parameters: vec![f32::NAN],
+            parameters: ArrayRecord::from_flat(&[f32::NAN]),
         };
         assert!(a.params_bits_equal(&b));
+        assert_eq!(a, b, "record equality is byte equality — NaN-safe");
         assert!(!a.params_bits_equal(&History {
             rounds: vec![],
-            parameters: vec![0.0],
+            parameters: ArrayRecord::from_flat(&[0.0]),
         }));
     }
 }

@@ -1,6 +1,10 @@
-//! FedAvg (McMahan et al., 2017) and FedAvgM (server momentum).
+//! FedAvg (McMahan et al., 2017) and FedAvgM (server momentum), over
+//! per-tensor records.
+
+use std::collections::HashMap;
 
 use super::{Aggregator, FitRes, Strategy};
+use crate::flower::records::{ArrayRecord, Tensor};
 
 /// Plain federated averaging: example-weighted mean of client updates.
 pub struct FedAvg {
@@ -21,20 +25,22 @@ impl Strategy for FedAvg {
     fn aggregate_fit(
         &mut self,
         _round: u64,
-        _current: &[f32],
+        _current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<ArrayRecord> {
         self.agg.weighted_mean(results)
     }
 }
 
 /// FedAvg with server momentum (Hsu et al., 2019): the server applies a
 /// momentum-accelerated pseudo-gradient instead of jumping to the mean.
+/// Velocity state is kept per tensor name, so per-layer records carry
+/// independent momenta.
 pub struct FedAvgM {
     agg: Aggregator,
     momentum: f64,
     server_lr: f64,
-    velocity: Vec<f64>,
+    velocity: HashMap<String, Vec<f64>>,
 }
 
 impl FedAvgM {
@@ -43,7 +49,7 @@ impl FedAvgM {
             agg,
             momentum,
             server_lr,
-            velocity: Vec::new(),
+            velocity: HashMap::new(),
         }
     }
 }
@@ -56,21 +62,36 @@ impl Strategy for FedAvgM {
     fn aggregate_fit(
         &mut self,
         _round: u64,
-        current: &[f32],
+        current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<ArrayRecord> {
         let mean = self.agg.weighted_mean(results)?;
-        if self.velocity.len() != current.len() {
-            self.velocity = vec![0.0; current.len()];
+        anyhow::ensure!(
+            mean.dims_match(current),
+            "aggregated record structure differs from current"
+        );
+        let mut tensors = Vec::with_capacity(current.len());
+        for (cur, avg) in current.tensors().iter().zip(mean.tensors().iter()) {
+            let n = cur.elems();
+            let v = self.velocity.entry(cur.name().to_string()).or_default();
+            if v.len() != n {
+                *v = vec![0.0; n];
+            }
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                // Pseudo-gradient: current - mean (descent direction).
+                let g = cur.get_f64(i) - avg.get_f64(i);
+                v[i] = self.momentum * v[i] + g;
+                out.push(cur.get_f64(i) - self.server_lr * v[i]);
+            }
+            tensors.push(Tensor::from_f64_values(
+                cur.name(),
+                cur.dtype(),
+                cur.shape().to_vec(),
+                out.into_iter(),
+            ));
         }
-        let mut out = Vec::with_capacity(current.len());
-        for i in 0..current.len() {
-            // Pseudo-gradient: current - mean (descent direction).
-            let g = current[i] as f64 - mean[i] as f64;
-            self.velocity[i] = self.momentum * self.velocity[i] + g;
-            out.push((current[i] as f64 - self.server_lr * self.velocity[i]) as f32);
-        }
-        Ok(out)
+        Ok(ArrayRecord::from_tensors(tensors)?)
     }
 }
 
@@ -85,19 +106,21 @@ mod tests {
         let out = s
             .aggregate_fit(
                 1,
-                &[0.0, 0.0],
+                &ArrayRecord::from_flat(&[0.0, 0.0]),
                 &[fit(1, vec![0.0, 2.0], 1), fit(2, vec![4.0, 6.0], 3)],
             )
             .unwrap();
-        assert_eq!(out, vec![3.0, 5.0]);
+        assert_eq!(out.to_flat(), vec![3.0, 5.0]);
     }
 
     #[test]
     fn fedavgm_zero_momentum_unit_lr_equals_fedavg() {
         let mut m = FedAvgM::new(Aggregator::host(), 0.0, 1.0);
         let results = [fit(1, vec![1.0], 1), fit(2, vec![3.0], 1)];
-        let out = m.aggregate_fit(1, &[0.0], &results).unwrap();
-        assert!((out[0] - 2.0).abs() < 1e-6);
+        let out = m
+            .aggregate_fit(1, &ArrayRecord::from_flat(&[0.0]), &results)
+            .unwrap();
+        assert!((out.to_flat()[0] - 2.0).abs() < 1e-6);
     }
 
     #[test]
@@ -105,7 +128,7 @@ mod tests {
         let mut m = FedAvgM::new(Aggregator::host(), 0.9, 1.0);
         // Clients keep reporting the same point; velocity should build
         // toward it and overshoot without damping.
-        let mut x = vec![0.0f32];
+        let mut x = ArrayRecord::from_flat(&[0.0f32]);
         for round in 1..=3 {
             let results = [fit(1, vec![1.0], 1)];
             x = m.aggregate_fit(round, &x, &results).unwrap();
@@ -113,6 +136,7 @@ mod tests {
         // Round 1: g=-1, v=-1,    x=1.
         // Round 2: g=0,  v=-0.9,  x=1.9.
         // Round 3: g=0.9, v=0.09, x=1.81 (overshoot, then pull back).
-        assert!((x[0] - 1.81).abs() < 1e-4, "{x:?}");
+        let flat = x.to_flat();
+        assert!((flat[0] - 1.81).abs() < 1e-4, "{flat:?}");
     }
 }

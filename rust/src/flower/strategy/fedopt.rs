@@ -1,9 +1,13 @@
 //! The FedOpt family (Reddi et al., 2021): FedAdam, FedAdagrad, FedYogi.
 //! The server treats `mean(client updates) - current` as a pseudo-
-//! gradient and applies an adaptive optimizer step. Paper Listing 1
-//! builds its ServerApp with `FedAdam(...)`.
+//! gradient and applies an adaptive optimizer step, per tensor —
+//! optimizer state (first/second moments) is kept per tensor name.
+//! Paper Listing 1 builds its ServerApp with `FedAdam(...)`.
+
+use std::collections::HashMap;
 
 use super::{Aggregator, FitRes, Strategy};
+use crate::flower::records::{ArrayRecord, Tensor};
 
 #[derive(Clone, Copy, Debug)]
 pub struct FedOptConfig {
@@ -36,40 +40,68 @@ enum Variant {
     Yogi,
 }
 
-struct FedOpt {
-    agg: Aggregator,
-    cfg: FedOptConfig,
-    variant: Variant,
+/// Per-tensor optimizer state.
+struct Moments {
     m: Vec<f64>,
     v: Vec<f64>,
 }
 
+struct FedOpt {
+    agg: Aggregator,
+    cfg: FedOptConfig,
+    variant: Variant,
+    state: HashMap<String, Moments>,
+}
+
 impl FedOpt {
-    fn step(&mut self, current: &[f32], results: &[FitRes]) -> anyhow::Result<Vec<f32>> {
+    fn step(
+        &mut self,
+        current: &ArrayRecord,
+        results: &[FitRes],
+    ) -> anyhow::Result<ArrayRecord> {
         let mean = self.agg.weighted_mean(results)?;
-        let n = current.len();
-        if self.m.len() != n {
-            self.m = vec![0.0; n];
-            self.v = vec![self.cfg.tau * self.cfg.tau; n];
+        anyhow::ensure!(
+            mean.dims_match(current),
+            "aggregated record structure differs from current"
+        );
+        let mut tensors = Vec::with_capacity(current.len());
+        for (cur, avg) in current.tensors().iter().zip(mean.tensors().iter()) {
+            let n = cur.elems();
+            let st = self
+                .state
+                .entry(cur.name().to_string())
+                .or_insert_with(|| Moments {
+                    m: Vec::new(),
+                    v: Vec::new(),
+                });
+            if st.m.len() != n {
+                st.m = vec![0.0; n];
+                st.v = vec![self.cfg.tau * self.cfg.tau; n];
+            }
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                // Ascent pseudo-gradient toward the client mean.
+                let d = avg.get_f64(i) - cur.get_f64(i);
+                st.m[i] = self.cfg.beta1 * st.m[i] + (1.0 - self.cfg.beta1) * d;
+                let d2 = d * d;
+                st.v[i] = match self.variant {
+                    Variant::Adam => self.cfg.beta2 * st.v[i] + (1.0 - self.cfg.beta2) * d2,
+                    Variant::Adagrad => st.v[i] + d2,
+                    Variant::Yogi => {
+                        st.v[i] - (1.0 - self.cfg.beta2) * d2 * (st.v[i] - d2).signum()
+                    }
+                };
+                let step = self.cfg.server_lr * st.m[i] / (st.v[i].sqrt() + self.cfg.tau);
+                out.push(cur.get_f64(i) + step);
+            }
+            tensors.push(Tensor::from_f64_values(
+                cur.name(),
+                cur.dtype(),
+                cur.shape().to_vec(),
+                out.into_iter(),
+            ));
         }
-        let mut out = Vec::with_capacity(n);
-        for i in 0..n {
-            // Ascent pseudo-gradient toward the client mean.
-            let d = mean[i] as f64 - current[i] as f64;
-            self.m[i] = self.cfg.beta1 * self.m[i] + (1.0 - self.cfg.beta1) * d;
-            let d2 = d * d;
-            self.v[i] = match self.variant {
-                Variant::Adam => self.cfg.beta2 * self.v[i] + (1.0 - self.cfg.beta2) * d2,
-                Variant::Adagrad => self.v[i] + d2,
-                Variant::Yogi => {
-                    self.v[i]
-                        - (1.0 - self.cfg.beta2) * d2 * (self.v[i] - d2).signum()
-                }
-            };
-            let step = self.cfg.server_lr * self.m[i] / (self.v[i].sqrt() + self.cfg.tau);
-            out.push((current[i] as f64 + step) as f32);
-        }
-        Ok(out)
+        Ok(ArrayRecord::from_tensors(tensors)?)
     }
 }
 
@@ -83,8 +115,7 @@ macro_rules! fedopt_strategy {
                     agg,
                     cfg,
                     variant: $variant,
-                    m: Vec::new(),
-                    v: Vec::new(),
+                    state: HashMap::new(),
                 })
             }
         }
@@ -97,9 +128,9 @@ macro_rules! fedopt_strategy {
             fn aggregate_fit(
                 &mut self,
                 _round: u64,
-                current: &[f32],
+                current: &ArrayRecord,
                 results: &[FitRes],
-            ) -> anyhow::Result<Vec<f32>> {
+            ) -> anyhow::Result<ArrayRecord> {
                 self.0.step(current, results)
             }
         }
@@ -115,15 +146,16 @@ mod tests {
     use super::super::fit;
     use super::*;
 
-    fn step_once<S: Strategy>(s: &mut S, x: &[f32], target: f32) -> Vec<f32> {
-        s.aggregate_fit(1, x, &[fit(1, vec![target; x.len()], 1)])
+    fn step_once<S: Strategy>(s: &mut S, x: &ArrayRecord, target: f32) -> Vec<f32> {
+        s.aggregate_fit(1, x, &[fit(1, vec![target; x.total_elems()], 1)])
             .unwrap()
+            .to_flat()
     }
 
     #[test]
     fn fedadam_moves_toward_client_mean() {
         let mut s = FedAdam::new(Aggregator::host(), FedOptConfig::default());
-        let x0 = vec![0.0f32, 0.0];
+        let x0 = ArrayRecord::from_flat(&[0.0, 0.0]);
         let x1 = step_once(&mut s, &x0, 1.0);
         assert!(x1.iter().all(|&x| x > 0.0 && x <= 1.0), "{x1:?}");
     }
@@ -137,11 +169,12 @@ mod tests {
                 ..Default::default()
             },
         );
-        let mut x = vec![0.0f32];
+        let mut x = ArrayRecord::from_flat(&[0.0]);
         for round in 1..=60 {
             x = s.aggregate_fit(round, &x, &[fit(1, vec![2.0], 4)]).unwrap();
         }
-        assert!((x[0] - 2.0).abs() < 0.2, "{x:?}");
+        let flat = x.to_flat();
+        assert!((flat[0] - 2.0).abs() < 0.2, "{flat:?}");
     }
 
     #[test]
@@ -155,22 +188,50 @@ mod tests {
                 ..Default::default()
             },
         );
-        let mut x = vec![0.0f32];
-        let x1 = s.aggregate_fit(1, &x, &[fit(1, vec![1.0], 1)]).unwrap();
-        let step1 = x1[0] - x[0];
-        x = x1;
-        let x2 = s.aggregate_fit(2, &x, &[fit(1, vec![1.0], 1)]).unwrap();
-        let step2 = x2[0] - x[0];
+        let x0 = ArrayRecord::from_flat(&[0.0]);
+        let x1 = s.aggregate_fit(1, &x0, &[fit(1, vec![1.0], 1)]).unwrap();
+        let step1 = x1.to_flat()[0] - x0.to_flat()[0];
+        let x2 = s.aggregate_fit(2, &x1, &[fit(1, vec![1.0], 1)]).unwrap();
+        let step2 = x2.to_flat()[0] - x1.to_flat()[0];
         assert!(step2.abs() < step1.abs(), "{step1} then {step2}");
     }
 
     #[test]
     fn fedyogi_bounded_update() {
         let mut s = FedYogi::new(Aggregator::host(), FedOptConfig::default());
-        let x = vec![0.0f32; 3];
+        let x = ArrayRecord::from_flat(&[0.0; 3]);
         let x1 = step_once(&mut s, &x, 10.0);
         // Adaptive normalization keeps the first step ~server_lr-scale.
         assert!(x1.iter().all(|&v| v.abs() < 1.0), "{x1:?}");
+    }
+
+    #[test]
+    fn per_tensor_state_is_independent() {
+        use crate::flower::records::Tensor;
+        // Two tensors with very different pseudo-gradients must keep
+        // separate moment estimates (state keyed by tensor name).
+        let current = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("a", vec![1], &[0.0]),
+            Tensor::from_f32("b", vec![1], &[0.0]),
+        ])
+        .unwrap();
+        let update = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("a", vec![1], &[1.0]),
+            Tensor::from_f32("b", vec![1], &[-1.0]),
+        ])
+        .unwrap();
+        let mut s = FedAdam::new(Aggregator::host(), FedOptConfig::default());
+        let res = [super::super::FitRes {
+            node_id: 1,
+            parameters: update,
+            num_examples: 1,
+            metrics: vec![],
+        }];
+        let out = s.aggregate_fit(1, &current, &res).unwrap();
+        let a = out.get("a").unwrap().get_f64(0);
+        let b = out.get("b").unwrap().get_f64(0);
+        assert!(a > 0.0 && b < 0.0, "a={a} b={b}");
+        assert!((a + b).abs() < 1e-12, "symmetric gradients, symmetric steps");
     }
 
     #[test]
@@ -185,7 +246,7 @@ mod tests {
             };
             let run = || {
                 let mut s = make(Aggregator::host());
-                let mut x = vec![0.5f32, -0.5];
+                let mut x = ArrayRecord::from_flat(&[0.5f32, -0.5]);
                 for round in 1..=5 {
                     x = s
                         .aggregate_fit(
@@ -197,8 +258,8 @@ mod tests {
                 }
                 x
             };
-            let a: Vec<u32> = run().iter().map(|f| f.to_bits()).collect();
-            let b: Vec<u32> = run().iter().map(|f| f.to_bits()).collect();
+            let a: Vec<u32> = run().to_flat().iter().map(|f| f.to_bits()).collect();
+            let b: Vec<u32> = run().to_flat().iter().map(|f| f.to_bits()).collect();
             assert_eq!(a, b);
         }
     }

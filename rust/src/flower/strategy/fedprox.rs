@@ -6,6 +6,7 @@
 
 use super::{Aggregator, FitRes, Strategy};
 use crate::flower::message::{ConfigRecord, ConfigValue};
+use crate::flower::records::ArrayRecord;
 
 pub struct FedProx {
     agg: Aggregator,
@@ -30,9 +31,9 @@ impl Strategy for FedProx {
     fn aggregate_fit(
         &mut self,
         _round: u64,
-        _current: &[f32],
+        _current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<ArrayRecord> {
         self.agg.weighted_mean(results)
     }
 }
@@ -49,8 +50,12 @@ mod tests {
         let cfg = s.configure_fit(1);
         assert_eq!(config_get_f64(&cfg, "proximal_mu"), Some(0.01));
         let out = s
-            .aggregate_fit(1, &[0.0], &[fit(1, vec![2.0], 1), fit(2, vec![4.0], 1)])
+            .aggregate_fit(
+                1,
+                &ArrayRecord::from_flat(&[0.0]),
+                &[fit(1, vec![2.0], 1), fit(2, vec![4.0], 1)],
+            )
             .unwrap();
-        assert_eq!(out, vec![3.0]);
+        assert_eq!(out.to_flat(), vec![3.0]);
     }
 }

@@ -1,7 +1,9 @@
 //! Server-side FL strategies (Flower's `Strategy` API; paper Listing 1
-//! uses `FedAdam`). All aggregation is deterministic: results are
-//! canonicalized by node id before any floating-point reduction, which
-//! is what makes the Fig. 5 native-vs-bridged curves bit-identical.
+//! uses `FedAdam`). All aggregation is per-tensor over [`ArrayRecord`]s
+//! and deterministic: results are canonicalized by node id before any
+//! floating-point reduction, and every reduction iterates tensors in
+//! record order — which is what makes the Fig. 5 native-vs-bridged
+//! curves bit-identical.
 
 mod fedavg;
 mod fedopt;
@@ -14,6 +16,7 @@ pub use fedprox::FedProx;
 pub use robust::{FedMedian, Krum, TrimmedMean};
 
 use crate::flower::message::{ConfigRecord, MetricRecord};
+use crate::flower::records::{ArrayRecord, DType, Tensor};
 use crate::runtime::{ComputeHandle, TensorData};
 
 /// A fit result as seen by the strategy (already success-filtered and
@@ -21,7 +24,7 @@ use crate::runtime::{ComputeHandle, TensorData};
 #[derive(Clone, Debug)]
 pub struct FitRes {
     pub node_id: u64,
-    pub parameters: Vec<f32>,
+    pub parameters: ArrayRecord,
     pub num_examples: u64,
     pub metrics: MetricRecord,
 }
@@ -46,14 +49,14 @@ pub trait Strategy: Send {
         Vec::new()
     }
 
-    /// Combine client updates into the next global parameter vector.
-    /// `current` is the global vector the round started from.
+    /// Combine client updates into the next global parameter record.
+    /// `current` is the record the round started from.
     fn aggregate_fit(
         &mut self,
         round: u64,
-        current: &[f32],
+        current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<Vec<f32>>;
+    ) -> anyhow::Result<ArrayRecord>;
 
     /// Weighted-average loss/metrics (Flower's default behaviour).
     fn aggregate_evaluate(&mut self, _round: u64, results: &[EvalRes]) -> (f64, MetricRecord) {
@@ -97,11 +100,28 @@ pub fn weighted_eval(results: &[EvalRes]) -> (f64, MetricRecord) {
     (loss, metrics)
 }
 
-/// Example-weighted parameter mean — the FedAvg reduction. Runs on the
-/// L1 Pallas `fedavg_<model>_k<K>` artifact via PJRT when one matches
-/// the (model, K, N) shape; otherwise falls back to the (identically
-/// associated) Rust loop. Both paths reduce client-major, so results are
-/// bit-comparable across runs of the same path.
+/// Validate that every result carries the same record structure; returns
+/// the reference structure (the first result's).
+pub fn check_same_structure(results: &[FitRes]) -> anyhow::Result<&ArrayRecord> {
+    anyhow::ensure!(!results.is_empty(), "no fit results to aggregate");
+    let first = &results[0].parameters;
+    for r in &results[1..] {
+        anyhow::ensure!(
+            r.parameters.dims_match(first),
+            "record structure mismatch: node {} differs from node {}",
+            r.node_id,
+            results[0].node_id
+        );
+    }
+    Ok(first)
+}
+
+/// Example-weighted parameter mean — the FedAvg reduction, per tensor.
+/// Runs on the L1 Pallas `fedavg_<model>_k<K>` artifact via PJRT when
+/// one matches the (model, K, N) shape and the record is all-f32;
+/// otherwise falls back to the (identically associated) Rust loop. Both
+/// paths reduce client-major, so results are bit-comparable across runs
+/// of the same path.
 #[derive(Clone, Default)]
 pub struct Aggregator {
     compute: Option<(ComputeHandle, String)>,
@@ -121,39 +141,37 @@ impl Aggregator {
         }
     }
 
-    pub fn weighted_mean(&self, results: &[FitRes]) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(!results.is_empty(), "no fit results to aggregate");
-        let n = results[0].parameters.len();
-        for r in results {
-            anyhow::ensure!(
-                r.parameters.len() == n,
-                "parameter length mismatch: {} vs {n}",
-                r.parameters.len()
-            );
-        }
-        if let Some((handle, model)) = &self.compute {
-            let artifact = format!("fedavg_{}_k{}", model, results.len());
-            if handle.has_artifact(&artifact) {
-                let meta = handle.manifest().artifact(&artifact).unwrap();
-                if meta.inputs[0].shape == vec![results.len(), n] {
-                    let mut stacked = Vec::with_capacity(results.len() * n);
-                    for r in results {
-                        stacked.extend_from_slice(&r.parameters);
+    pub fn weighted_mean(&self, results: &[FitRes]) -> anyhow::Result<ArrayRecord> {
+        let structure = check_same_structure(results)?;
+        let all_f32 = structure.tensors().iter().all(|t| t.dtype() == DType::F32);
+        if all_f32 {
+            if let Some((handle, model)) = &self.compute {
+                let n = structure.total_elems();
+                let artifact = format!("fedavg_{}_k{}", model, results.len());
+                if handle.has_artifact(&artifact) {
+                    let meta = handle.manifest().artifact(&artifact).unwrap();
+                    if meta.inputs[0].shape == vec![results.len(), n] {
+                        let mut stacked = Vec::with_capacity(results.len() * n);
+                        for r in results {
+                            stacked.extend_from_slice(&r.parameters.to_flat());
+                        }
+                        let weights: Vec<f32> =
+                            results.iter().map(|r| r.num_examples as f32).collect();
+                        let out = handle.execute(
+                            &artifact,
+                            vec![
+                                TensorData::F32(stacked, vec![results.len(), n]),
+                                TensorData::F32(weights, vec![results.len()]),
+                            ],
+                        )?;
+                        crate::telemetry::bump("strategy.pjrt_aggregations", 1);
+                        let flat = match out.into_iter().next() {
+                            Some(TensorData::F32(v, _)) => v,
+                            other => anyhow::bail!("unexpected fedavg output {other:?}"),
+                        };
+                        // Re-wrap in the record's (layer-named) structure.
+                        return structure.from_flat_like(&flat);
                     }
-                    let weights: Vec<f32> =
-                        results.iter().map(|r| r.num_examples as f32).collect();
-                    let out = handle.execute(
-                        &artifact,
-                        vec![
-                            TensorData::F32(stacked, vec![results.len(), n]),
-                            TensorData::F32(weights, vec![results.len()]),
-                        ],
-                    )?;
-                    crate::telemetry::bump("strategy.pjrt_aggregations", 1);
-                    return Ok(match out.into_iter().next() {
-                        Some(TensorData::F32(v, _)) => v,
-                        other => anyhow::bail!("unexpected fedavg output {other:?}"),
-                    });
                 }
             }
         }
@@ -162,25 +180,48 @@ impl Aggregator {
     }
 }
 
-/// Reference Rust reduction (shared by tests).
-pub fn host_weighted_mean(results: &[FitRes]) -> Vec<f32> {
-    let n = results[0].parameters.len();
+/// Reference Rust reduction (shared by tests): per-tensor example-
+/// weighted mean in f64, cast back to each tensor's dtype.
+///
+/// Panics if `results` is empty or structures mismatch — call
+/// [`check_same_structure`] first on untrusted input.
+pub fn host_weighted_mean(results: &[FitRes]) -> ArrayRecord {
     let total: f64 = results.iter().map(|r| r.num_examples as f64).sum();
-    let mut out = vec![0f64; n];
-    for r in results {
-        let w = r.num_examples as f64 / total;
-        for (o, p) in out.iter_mut().zip(r.parameters.iter()) {
-            *o += w * *p as f64;
+    let structure = &results[0].parameters;
+    let mut tensors = Vec::with_capacity(structure.len());
+    for (ti, t) in structure.tensors().iter().enumerate() {
+        let n = t.elems();
+        let mut acc = vec![0f64; n];
+        for r in results {
+            let rt = &r.parameters.tensors()[ti];
+            assert_eq!(rt.elems(), n, "tensor '{}' length mismatch", t.name());
+            let w = r.num_examples as f64 / total;
+            if rt.dtype() == DType::F32 {
+                // Hot path: linear scan over the packed payload.
+                for (o, v) in acc.iter_mut().zip(rt.f32_iter()) {
+                    *o += w * v as f64;
+                }
+            } else {
+                for (o, i) in acc.iter_mut().zip(0..n) {
+                    *o += w * rt.get_f64(i);
+                }
+            }
         }
+        tensors.push(Tensor::from_f64_values(
+            t.name(),
+            t.dtype(),
+            t.shape().to_vec(),
+            acc.into_iter(),
+        ));
     }
-    out.into_iter().map(|x| x as f32).collect()
+    ArrayRecord::from_tensors(tensors).expect("structure preserved")
 }
 
 #[cfg(test)]
 pub(crate) fn fit(node_id: u64, parameters: Vec<f32>, num_examples: u64) -> FitRes {
     FitRes {
         node_id,
-        parameters,
+        parameters: ArrayRecord::from_flat(&parameters),
         num_examples,
         metrics: Vec::new(),
     }
@@ -194,7 +235,28 @@ mod tests {
     fn host_weighted_mean_math() {
         let results = vec![fit(1, vec![0.0, 2.0], 1), fit(2, vec![4.0, 6.0], 3)];
         let out = host_weighted_mean(&results);
-        assert_eq!(out, vec![3.0, 5.0]);
+        assert_eq!(out.to_flat(), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn host_weighted_mean_per_tensor_mixed_dtype() {
+        let mk = |w: &[f32], steps: &[i64], n: u64, id: u64| FitRes {
+            node_id: id,
+            parameters: ArrayRecord::from_tensors(vec![
+                Tensor::from_f32("w", vec![2], w),
+                Tensor::from_i64("steps", vec![1], steps),
+            ])
+            .unwrap(),
+            num_examples: n,
+            metrics: vec![],
+        };
+        let results = vec![mk(&[0.0, 2.0], &[10], 1, 1), mk(&[4.0, 6.0], &[20], 3, 2)];
+        let out = Aggregator::host().weighted_mean(&results).unwrap();
+        assert_eq!(out.get("w").unwrap().get_f64(0), 3.0);
+        assert_eq!(out.get("w").unwrap().get_f64(1), 5.0);
+        // I64 mean rounds: (10*0.25 + 20*0.75) = 17.5 -> 18.
+        assert_eq!(out.get("steps").unwrap().dtype(), DType::I64);
+        assert_eq!(out.get("steps").unwrap().get_f64(0), 18.0);
     }
 
     #[test]
@@ -203,11 +265,11 @@ mod tests {
         let out = agg
             .weighted_mean(&[fit(1, vec![1.0], 1), fit(2, vec![3.0], 1)])
             .unwrap();
-        assert_eq!(out, vec![2.0]);
+        assert_eq!(out.to_flat(), vec![2.0]);
     }
 
     #[test]
-    fn aggregator_rejects_mismatched_lengths() {
+    fn aggregator_rejects_mismatched_structures() {
         let agg = Aggregator::host();
         assert!(agg
             .weighted_mean(&[fit(1, vec![1.0], 1), fit(2, vec![1.0, 2.0], 1)])

@@ -1,9 +1,41 @@
 //! Byzantine-robust aggregation: coordinate-wise median and trimmed
-//! mean (Yin et al., 2018) — part of Flower's strategy zoo that FLARE
-//! users gain access to through the integration (paper §6 "direct
-//! utilization of FL algorithms ... from Flower").
+//! mean (Yin et al., 2018) and Krum (Blanchard et al., 2017) — part of
+//! Flower's strategy zoo that FLARE users gain access to through the
+//! integration (paper §6 "direct utilization of FL algorithms ... from
+//! Flower"). All three reduce per tensor over the record structure.
 
-use super::{FitRes, Strategy};
+use super::{check_same_structure, FitRes, Strategy};
+use crate::flower::records::{ArrayRecord, Tensor};
+
+/// Coordinate-wise, per-tensor reduction helper: for every tensor in
+/// the (validated, shared) record structure, `reduce` maps the sorted-
+/// by-nothing column of client values at each coordinate to one value.
+fn per_tensor_coordinate_reduce(
+    results: &[FitRes],
+    mut reduce: impl FnMut(&mut Vec<f64>) -> f64,
+) -> ArrayRecord {
+    let structure = &results[0].parameters;
+    let mut tensors = Vec::with_capacity(structure.len());
+    let mut col: Vec<f64> = Vec::with_capacity(results.len());
+    for (ti, t) in structure.tensors().iter().enumerate() {
+        let n = t.elems();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            col.clear();
+            for r in results {
+                col.push(r.parameters.tensors()[ti].get_f64(i));
+            }
+            out.push(reduce(&mut col));
+        }
+        tensors.push(Tensor::from_f64_values(
+            t.name(),
+            t.dtype(),
+            t.shape().to_vec(),
+            out.into_iter(),
+        ));
+    }
+    ArrayRecord::from_tensors(tensors).expect("structure preserved")
+}
 
 /// Coordinate-wise median (unweighted — robustness over efficiency).
 pub struct FedMedian;
@@ -16,28 +48,19 @@ impl Strategy for FedMedian {
     fn aggregate_fit(
         &mut self,
         _round: u64,
-        _current: &[f32],
+        _current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(!results.is_empty(), "no results");
-        let n = results[0].parameters.len();
-        let mut out = Vec::with_capacity(n);
-        let mut col = Vec::with_capacity(results.len());
-        for i in 0..n {
-            col.clear();
-            for r in results {
-                anyhow::ensure!(r.parameters.len() == n, "length mismatch");
-                col.push(r.parameters[i]);
-            }
-            col.sort_by(f32::total_cmp);
+    ) -> anyhow::Result<ArrayRecord> {
+        check_same_structure(results)?;
+        Ok(per_tensor_coordinate_reduce(results, |col| {
+            col.sort_by(f64::total_cmp);
             let k = col.len();
-            out.push(if k % 2 == 1 {
+            if k % 2 == 1 {
                 col[k / 2]
             } else {
                 (col[k / 2 - 1] + col[k / 2]) / 2.0
-            });
-        }
-        Ok(out)
+            }
+        }))
     }
 }
 
@@ -55,35 +78,29 @@ impl Strategy for TrimmedMean {
     fn aggregate_fit(
         &mut self,
         _round: u64,
-        _current: &[f32],
+        _current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<ArrayRecord> {
         anyhow::ensure!(
             results.len() > 2 * self.trim,
             "need more than {} clients to trim {} each side",
             2 * self.trim,
             self.trim
         );
-        let n = results[0].parameters.len();
-        let mut out = Vec::with_capacity(n);
-        let mut col = Vec::with_capacity(results.len());
-        for i in 0..n {
-            col.clear();
-            for r in results {
-                anyhow::ensure!(r.parameters.len() == n, "length mismatch");
-                col.push(r.parameters[i]);
-            }
-            col.sort_by(f32::total_cmp);
-            let kept = &col[self.trim..col.len() - self.trim];
-            out.push(kept.iter().map(|x| *x as f64).sum::<f64>() as f32 / kept.len() as f32);
-        }
-        Ok(out)
+        check_same_structure(results)?;
+        let trim = self.trim;
+        Ok(per_tensor_coordinate_reduce(results, |col| {
+            col.sort_by(f64::total_cmp);
+            let kept = &col[trim..col.len() - trim];
+            kept.iter().sum::<f64>() / kept.len() as f64
+        }))
     }
 }
 
 /// Krum (Blanchard et al., 2017): pick the single client update whose
 /// summed squared distance to its n-f-2 nearest neighbours is smallest
-/// (tolerates up to `f` Byzantine clients).
+/// (tolerates up to `f` Byzantine clients). Distances sum over every
+/// tensor in the record.
 pub struct Krum {
     /// Assumed maximum number of Byzantine clients.
     pub f: usize,
@@ -97,32 +114,30 @@ impl Strategy for Krum {
     fn aggregate_fit(
         &mut self,
         _round: u64,
-        _current: &[f32],
+        _current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<ArrayRecord> {
         let n = results.len();
         anyhow::ensure!(
             n > 2 * self.f + 2,
             "krum needs n > 2f+2 (n={n}, f={})",
             self.f
         );
-        let dim = results[0].parameters.len();
-        for r in results {
-            anyhow::ensure!(r.parameters.len() == dim, "length mismatch");
-        }
-        // Pairwise squared distances.
+        let structure = check_same_structure(results)?;
+        let n_tensors = structure.len();
+        // Pairwise squared distances across all tensors.
         let mut d2 = vec![vec![0f64; n]; n];
         for i in 0..n {
             for j in (i + 1)..n {
-                let dist: f64 = results[i]
-                    .parameters
-                    .iter()
-                    .zip(results[j].parameters.iter())
-                    .map(|(a, b)| {
-                        let d = *a as f64 - *b as f64;
-                        d * d
-                    })
-                    .sum();
+                let mut dist = 0f64;
+                for ti in 0..n_tensors {
+                    let a = &results[i].parameters.tensors()[ti];
+                    let b = &results[j].parameters.tensors()[ti];
+                    for e in 0..a.elems() {
+                        let d = a.get_f64(e) - b.get_f64(e);
+                        dist += d * d;
+                    }
+                }
                 d2[i][j] = dist;
                 d2[j][i] = dist;
             }
@@ -147,13 +162,17 @@ mod tests {
     use super::super::fit;
     use super::*;
 
+    fn flat(v: &[f32]) -> ArrayRecord {
+        ArrayRecord::from_flat(v)
+    }
+
     #[test]
     fn median_ignores_outlier() {
         let mut s = FedMedian;
         let out = s
             .aggregate_fit(
                 1,
-                &[0.0],
+                &flat(&[0.0]),
                 &[
                     fit(1, vec![1.0], 1),
                     fit(2, vec![2.0], 1),
@@ -161,7 +180,7 @@ mod tests {
                 ],
             )
             .unwrap();
-        assert_eq!(out, vec![2.0]);
+        assert_eq!(out.to_flat(), vec![2.0]);
     }
 
     #[test]
@@ -170,7 +189,7 @@ mod tests {
         let out = s
             .aggregate_fit(
                 1,
-                &[0.0],
+                &flat(&[0.0]),
                 &[
                     fit(1, vec![1.0], 1),
                     fit(2, vec![2.0], 1),
@@ -179,7 +198,7 @@ mod tests {
                 ],
             )
             .unwrap();
-        assert_eq!(out, vec![2.5]);
+        assert_eq!(out.to_flat(), vec![2.5]);
     }
 
     #[test]
@@ -188,7 +207,7 @@ mod tests {
         let out = s
             .aggregate_fit(
                 1,
-                &[0.0],
+                &flat(&[0.0]),
                 &[
                     fit(1, vec![-100.0], 1),
                     fit(2, vec![1.0], 1),
@@ -197,14 +216,18 @@ mod tests {
                 ],
             )
             .unwrap();
-        assert_eq!(out, vec![2.0]);
+        assert_eq!(out.to_flat(), vec![2.0]);
     }
 
     #[test]
     fn trimmed_mean_needs_enough_clients() {
         let mut s = TrimmedMean { trim: 1 };
         assert!(s
-            .aggregate_fit(1, &[0.0], &[fit(1, vec![1.0], 1), fit(2, vec![2.0], 1)])
+            .aggregate_fit(
+                1,
+                &flat(&[0.0]),
+                &[fit(1, vec![1.0], 1), fit(2, vec![2.0], 1)]
+            )
             .is_err());
     }
 
@@ -219,7 +242,10 @@ mod tests {
             fit(4, vec![1.05, 1.0], 1),
             fit(5, vec![100.0, -100.0], 1),
         ];
-        let out = s.aggregate_fit(1, &[0.0, 0.0], &results).unwrap();
+        let out = s
+            .aggregate_fit(1, &flat(&[0.0, 0.0]), &results)
+            .unwrap()
+            .to_flat();
         assert!(out[0] < 2.0 && out[1] > 0.0, "picked byzantine: {out:?}");
     }
 
@@ -233,7 +259,7 @@ mod tests {
             fit(4, vec![1.0], 1),
         ];
         // n=4 is NOT > 2f+2=4.
-        assert!(s.aggregate_fit(1, &[0.0], &results).is_err());
+        assert!(s.aggregate_fit(1, &flat(&[0.0]), &results).is_err());
     }
 
     #[test]
@@ -244,7 +270,32 @@ mod tests {
             fit(2, vec![3.0, 4.0], 1),
             fit(3, vec![1.2, 2.2], 1),
         ];
-        let out = s.aggregate_fit(1, &[0.0, 0.0], &results).unwrap();
-        assert!(results.iter().any(|r| r.parameters == out));
+        let out = s.aggregate_fit(1, &flat(&[0.0, 0.0]), &results).unwrap();
+        assert!(results.iter().any(|r| r.parameters.bits_equal(&out)));
+    }
+
+    #[test]
+    fn median_multi_tensor_reduces_each_tensor() {
+        use crate::flower::records::Tensor;
+        let mk = |a: f32, b: i64, id: u64| FitRes {
+            node_id: id,
+            parameters: ArrayRecord::from_tensors(vec![
+                Tensor::from_f32("w", vec![1], &[a]),
+                Tensor::from_i64("s", vec![1], &[b]),
+            ])
+            .unwrap(),
+            num_examples: 1,
+            metrics: vec![],
+        };
+        let mut s = FedMedian;
+        let out = s
+            .aggregate_fit(
+                1,
+                &mk(0.0, 0, 0).parameters,
+                &[mk(1.0, 5, 1), mk(2.0, 6, 2), mk(99.0, 1000, 3)],
+            )
+            .unwrap();
+        assert_eq!(out.get("w").unwrap().get_f64(0), 2.0);
+        assert_eq!(out.get("s").unwrap().get_f64(0), 6.0);
     }
 }

@@ -5,9 +5,11 @@
 //! state (Flower's Driver API, in-process).
 //!
 //! Transport-facing surface is a single pure function
-//! [`SuperLink::handle_frame`]: bytes in, bytes out — which is exactly
-//! what the FLARE LGC feeds it in bridged mode (§4.2) and what the native
-//! serve loop feeds it from a raw endpoint.
+//! [`SuperLink::handle_frame_shared`]: bytes in, bytes out — which is
+//! exactly what the FLARE LGC feeds it in bridged mode (§4.2) and what
+//! the native serve loop feeds it from a raw endpoint. Incoming frames
+//! decode zero-copy: queued task results keep borrowing the received
+//! frame buffers until the ServerApp consumes them.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -16,6 +18,7 @@ use std::time::{Duration, Instant};
 
 use crate::flower::message::{FlowerMsg, TaskIns, TaskRes};
 use crate::transport::Endpoint;
+use crate::util::bytes::Bytes;
 
 #[derive(Default)]
 struct LinkState {
@@ -32,7 +35,8 @@ pub struct SuperLink {
     state: LinkState,
     /// Any run still active? (SuperNodes exit when false.)
     active: AtomicBool,
-    /// Signaled when new results arrive (ServerApp waits on this).
+    /// Signaled when new results arrive (ServerApp waits on this) and
+    /// when nodes deregister (drain waits on this).
     notify: (Mutex<u64>, Condvar),
 }
 
@@ -47,14 +51,28 @@ impl SuperLink {
         })
     }
 
+    fn notify_all(&self) {
+        let (lock, cv) = &self.notify;
+        *lock.lock().unwrap() += 1;
+        cv.notify_all();
+    }
+
     // ------------------------------------------------------------------
     // Transport surface
     // ------------------------------------------------------------------
 
     /// Handle one client frame, produce the reply frame. Deterministic
     /// given state; used verbatim by both native and bridged paths.
+    /// Borrowed-buffer convenience wrapper around
+    /// [`SuperLink::handle_frame_shared`] (copies the frame once).
     pub fn handle_frame(&self, frame: &[u8]) -> Vec<u8> {
-        let msg = match FlowerMsg::decode(frame) {
+        self.handle_frame_shared(Bytes::copy_from_slice(frame))
+    }
+
+    /// Handle one client frame with shared ownership: tensor payloads in
+    /// decoded messages borrow `frame`'s allocation (zero copies).
+    pub fn handle_frame_shared(&self, frame: Bytes) -> Vec<u8> {
+        let msg = match FlowerMsg::decode_shared(frame) {
             Ok(m) => m,
             Err(e) => {
                 return FlowerMsg::Error {
@@ -97,14 +115,15 @@ impl SuperLink {
             }
             FlowerMsg::PushTaskRes { res } => {
                 self.state.results.lock().unwrap().insert(res.task_id, res);
-                let (lock, cv) = &self.notify;
-                *lock.lock().unwrap() += 1;
-                cv.notify_all();
+                self.notify_all();
                 FlowerMsg::PushAccepted
             }
             FlowerMsg::DeleteNode { node_id } => {
                 self.state.nodes.lock().unwrap().retain(|n| *n != node_id);
                 self.state.pending.lock().unwrap().remove(&node_id);
+                // Wake any drain waiter: this is the SuperNode's
+                // acknowledgment of the finish flag.
+                self.notify_all();
                 FlowerMsg::NodeDeleted
             }
             other => FlowerMsg::Error {
@@ -115,7 +134,8 @@ impl SuperLink {
     }
 
     /// Serve a connected endpoint until it closes (native deployments:
-    /// one thread per SuperNode connection).
+    /// one thread per SuperNode connection). Received frames are handed
+    /// to the link with shared ownership — no decode copies.
     pub fn serve_endpoint(self: &Arc<Self>, ep: Arc<dyn Endpoint>) {
         let me = self.clone();
         std::thread::Builder::new()
@@ -123,7 +143,7 @@ impl SuperLink {
             .spawn(move || loop {
                 match ep.recv_timeout(Duration::from_millis(100)) {
                     Ok(frame) => {
-                        let reply = me.handle_frame(&frame);
+                        let reply = me.handle_frame_shared(Bytes::from_vec(frame));
                         if ep.send(reply).is_err() {
                             return;
                         }
@@ -220,12 +240,36 @@ impl SuperLink {
     pub fn is_active(&self) -> bool {
         self.active.load(Ordering::Acquire)
     }
+
+    /// Deterministic shutdown drain: block until every registered
+    /// SuperNode has acknowledged the finish flag by deregistering
+    /// (`DeleteNode`), or the deadline passes. Returns `true` when all
+    /// nodes drained — the job cell can then tear down without racing
+    /// in-flight frames. Call after [`SuperLink::finish`].
+    pub fn wait_drained(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let (lock, cv) = &self.notify;
+        loop {
+            if self.state.nodes.lock().unwrap().is_empty() {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let guard = lock.lock().unwrap();
+            let _ = cv
+                .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
+                .unwrap();
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::flower::message::TaskType;
+    use crate::flower::records::ArrayRecord;
 
     fn ins(round: u64) -> TaskIns {
         TaskIns {
@@ -233,7 +277,7 @@ mod tests {
             run_id: 1,
             round,
             task_type: TaskType::Fit,
-            parameters: vec![1.0],
+            parameters: ArrayRecord::from_flat(&[1.0]),
             config: vec![],
         }
     }
@@ -244,7 +288,7 @@ mod tests {
             run_id: 1,
             node_id,
             error: String::new(),
-            parameters: vec![2.0],
+            parameters: ArrayRecord::from_flat(&[2.0]),
             num_examples: 10,
             loss: 0.0,
             metrics: vec![],
@@ -353,5 +397,31 @@ mod tests {
         let link = SuperLink::new();
         let rep = FlowerMsg::decode(&link.handle_frame(&[250])).unwrap();
         assert!(matches!(rep, FlowerMsg::Error { .. }));
+    }
+
+    #[test]
+    fn wait_drained_completes_when_nodes_deregister() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.finish();
+        // Nodes still registered: drain must report false on deadline.
+        assert!(!link.wait_drained(Duration::from_millis(30)));
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            l2.handle_frame(&FlowerMsg::DeleteNode { node_id: 1 }.encode());
+            std::thread::sleep(Duration::from_millis(20));
+            l2.handle_frame(&FlowerMsg::DeleteNode { node_id: 2 }.encode());
+        });
+        assert!(link.wait_drained(Duration::from_secs(2)));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wait_drained_immediate_when_no_nodes() {
+        let link = SuperLink::new();
+        link.finish();
+        assert!(link.wait_drained(Duration::from_millis(1)));
     }
 }

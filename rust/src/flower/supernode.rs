@@ -8,13 +8,18 @@
 //! deployment modes: native (direct endpoint to the SuperLink) vs bridged
 //! (endpoint to the FLARE client's LGS). The SuperNode code — like the
 //! Flower app in the paper — is identical in both.
+//!
+//! Replies are decoded with [`FlowerMsg::decode_shared`]: the tensors of
+//! every received TaskIns borrow the reply frame's buffer (zero copies).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::flower::clientapp::ClientApp;
 use crate::flower::message::{FlowerMsg, TaskRes, TaskType};
+use crate::flower::records::ArrayRecord;
 use crate::transport::Endpoint;
+use crate::util::bytes::Bytes;
 
 /// Unary request/response channel to the SuperLink.
 pub trait FlowerConnector: Send + Sync {
@@ -86,7 +91,8 @@ impl SuperNode {
 
     fn rpc(&self, msg: &FlowerMsg) -> anyhow::Result<FlowerMsg> {
         let reply = self.connector.request(msg.encode())?;
-        let decoded = FlowerMsg::decode(&reply)?;
+        // Zero-copy decode: tensor payloads borrow the reply buffer.
+        let decoded = FlowerMsg::decode_shared(Bytes::from_vec(reply))?;
         if let FlowerMsg::Error { message } = &decoded {
             anyhow::bail!("superlink error: {message}");
         }
@@ -116,7 +122,8 @@ impl SuperNode {
     }
 
     /// Main loop: serve tasks until no run is active. Returns the number
-    /// of tasks executed.
+    /// of tasks executed. On exit the node deregisters via `DeleteNode` —
+    /// the deterministic drain ack the bridge's job teardown waits on.
     pub fn run(&mut self) -> anyhow::Result<u64> {
         let node_id = match self.node_id {
             Some(id) => id,
@@ -154,7 +161,7 @@ impl SuperNode {
             run_id: ins.run_id,
             node_id,
             error: String::new(),
-            parameters: Vec::new(),
+            parameters: ArrayRecord::new(),
             num_examples: 0,
             loss: 0.0,
             metrics: Vec::new(),
@@ -202,7 +209,7 @@ mod tests {
 
     impl FlowerConnector for DirectConnector {
         fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
-            Ok(self.0.handle_frame(&frame))
+            Ok(self.0.handle_frame_shared(Bytes::from_vec(frame)))
         }
     }
 
@@ -223,7 +230,7 @@ mod tests {
                 run_id: 1,
                 round: 1,
                 task_type: TaskType::Fit,
-                parameters: vec![1.0, 2.0],
+                parameters: ArrayRecord::from_flat(&[1.0, 2.0]),
                 config: vec![],
             },
         );
@@ -236,7 +243,7 @@ mod tests {
         let executed = node.run().unwrap();
         let results = h.join().unwrap();
         assert_eq!(executed, 1);
-        assert_eq!(results[0].parameters, vec![2.0, 3.0]);
+        assert_eq!(results[0].parameters.to_flat(), vec![2.0, 3.0]);
         assert_eq!(results[0].num_examples, 4);
     }
 
@@ -262,17 +269,17 @@ mod tests {
     #[test]
     fn client_error_becomes_task_error() {
         struct FailingApp;
-        impl ClientApp for FailingApp {
+        impl crate::flower::clientapp::ClientApp for FailingApp {
             fn fit(
                 &self,
-                _: &[f32],
+                _: &ArrayRecord,
                 _: &crate::flower::message::ConfigRecord,
             ) -> anyhow::Result<crate::flower::clientapp::FitOutput> {
                 anyhow::bail!("cuda OOM")
             }
             fn evaluate(
                 &self,
-                _: &[f32],
+                _: &ArrayRecord,
                 _: &crate::flower::message::ConfigRecord,
             ) -> anyhow::Result<crate::flower::clientapp::EvalOutput> {
                 anyhow::bail!("no data")
@@ -292,7 +299,7 @@ mod tests {
                 run_id: 1,
                 round: 1,
                 task_type: TaskType::Fit,
-                parameters: vec![],
+                parameters: ArrayRecord::new(),
                 config: vec![],
             },
         );

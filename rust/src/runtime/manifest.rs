@@ -61,6 +61,11 @@ pub struct ModelMeta {
     pub eval_batch: usize,
     pub train_inputs: Vec<TensorMeta>,
     pub eval_inputs: Vec<TensorMeta>,
+    /// Ordered per-layer tensor specs of the flat parameter vector
+    /// (name, dtype, shape). When present, the train stack exposes the
+    /// model as layer-named record tensors instead of one flat blob;
+    /// empty for manifests that predate the record model.
+    pub layers: Vec<TensorMeta>,
     /// FedAvg aggregation artifacts exist for these client counts.
     pub agg_client_counts: Vec<usize>,
     /// Model-specific extras (classes, vocab, seq_len, ...).
@@ -167,6 +172,7 @@ impl Manifest {
                             .ok_or_else(|| anyhow::anyhow!("model missing eval_batch"))?,
                         train_inputs: tensor_list("train_inputs")?,
                         eval_inputs: tensor_list("eval_inputs")?,
+                        layers: tensor_list("layers")?,
                         agg_client_counts: m
                             .get("agg_client_counts")
                             .as_arr()
@@ -219,6 +225,8 @@ mod tests {
         "m": {"param_count": 10, "train_batch": 4, "eval_batch": 8,
               "train_inputs": [{"name":"x","dtype":"f32","shape":[4,2]}],
               "eval_inputs": [{"name":"x","dtype":"f32","shape":[8,2]}],
+              "layers": [{"name":"w","dtype":"f32","shape":[2,4]},
+                         {"name":"b","dtype":"f32","shape":[2]}],
               "agg_client_counts": [2, 4],
               "classes": 10}
       }
@@ -236,6 +244,13 @@ mod tests {
         let model = m.model("m").unwrap();
         assert_eq!(model.param_count, 10);
         assert_eq!(model.agg_client_counts, vec![2, 4]);
+        assert_eq!(model.layers.len(), 2);
+        assert_eq!(model.layers[0].name, "w");
+        assert_eq!(model.layers[0].elems(), 8);
+        assert_eq!(
+            model.layers.iter().map(|l| l.elems()).sum::<usize>(),
+            model.param_count
+        );
         assert_eq!(model.extra["classes"], 10.0);
         assert!(m.artifact("nope").is_none());
     }

@@ -15,6 +15,11 @@
 
 pub mod cost;
 pub mod manifest;
+pub mod pjrt_stub;
+
+// The real `xla` binding crate is unavailable offline; the stub exposes
+// the same API with a cleanly-failing client init (see pjrt_stub docs).
+use self::pjrt_stub as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -80,22 +85,41 @@ impl TensorData {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ComputeError {
-    #[error("compute: unknown artifact '{0}'")]
     UnknownArtifact(String),
-    #[error("compute: artifact '{artifact}' input {index}: expected {expected}, got {got}")]
     BadInput {
         artifact: String,
         index: usize,
         expected: String,
         got: String,
     },
-    #[error("compute: xla: {0}")]
     Xla(String),
-    #[error("compute: service stopped")]
     Stopped,
 }
+
+impl std::fmt::Display for ComputeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ComputeError::UnknownArtifact(name) => {
+                write!(f, "compute: unknown artifact '{name}'")
+            }
+            ComputeError::BadInput {
+                artifact,
+                index,
+                expected,
+                got,
+            } => write!(
+                f,
+                "compute: artifact '{artifact}' input {index}: expected {expected}, got {got}"
+            ),
+            ComputeError::Xla(msg) => write!(f, "compute: xla: {msg}"),
+            ComputeError::Stopped => write!(f, "compute: service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ComputeError {}
 
 struct ExecuteReq {
     artifact: String,

@@ -4,9 +4,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+use std::sync::{Mutex, Once};
 
 // ---------------------------------------------------------------------------
 // Logging
@@ -38,7 +36,8 @@ impl log::Log for StderrLogger {
 /// Install the logger once; level from `FLARELINK_LOG` (error|warn|info|
 /// debug|trace), default `warn` so tests/benches stay quiet.
 pub fn init_logging() {
-    static ONCE: Lazy<()> = Lazy::new(|| {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
         let level = match std::env::var("FLARELINK_LOG").as_deref() {
             Ok("error") => log::LevelFilter::Error,
             Ok("info") => log::LevelFilter::Info,
@@ -50,15 +49,13 @@ pub fn init_logging() {
         let _ = log::set_logger(&LOGGER);
         log::set_max_level(level);
     });
-    Lazy::force(&ONCE);
 }
 
 // ---------------------------------------------------------------------------
 // Counters
 // ---------------------------------------------------------------------------
 
-static COUNTERS: Lazy<Mutex<BTreeMap<String, &'static AtomicI64>>> =
-    Lazy::new(|| Mutex::new(BTreeMap::new()));
+static COUNTERS: Mutex<BTreeMap<String, &'static AtomicI64>> = Mutex::new(BTreeMap::new());
 
 /// Fetch-or-create a named process-wide counter. The returned reference is
 /// 'static (counters are never dropped), so hot paths can cache it.

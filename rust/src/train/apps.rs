@@ -12,6 +12,7 @@ use crate::flower::clientapp::ClientApp;
 use crate::flower::serverapp::{ServerApp, ServerConfig};
 use crate::flower::dp::{DpConfig, DpMod};
 use crate::flower::mods::{ClientMod, ModStack};
+use crate::flower::records::{ArrayRecord, Tensor};
 use crate::flower::secagg::{SecAggFedAvg, SecAggMod};
 use crate::flower::strategy::{
     Aggregator, FedAdagrad, FedAdam, FedAvg, FedAvgM, FedMedian, FedOptConfig, FedProx,
@@ -223,19 +224,54 @@ pub fn make_client(
     }
 }
 
-/// Initial global parameters via the `<model>_init` artifact.
+/// Initial global parameters via the `<model>_init` artifact, exposed
+/// as layer-named record tensors when the manifest declares the model's
+/// layer specs (falling back to a single flat tensor otherwise). Every
+/// later hop — wire, strategies, masking — then speaks real layers.
 pub fn initial_parameters(
     cfg: &FlJobConfig,
     compute: &ComputeHandle,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<ArrayRecord> {
     let out = compute.execute(
         &format!("{}_init", cfg.model),
         vec![TensorData::I32(vec![cfg.seed as i32], vec![1])],
     )?;
-    match out.into_iter().next() {
-        Some(TensorData::F32(v, _)) => Ok(v),
+    let flat = match out.into_iter().next() {
+        Some(TensorData::F32(v, _)) => v,
         other => anyhow::bail!("init returned {other:?}"),
+    };
+    layered_record(compute, &cfg.model, &flat)
+}
+
+/// Split a flat f32 parameter vector into the model's layer-named
+/// tensors per the manifest's `layers` specs; single flat tensor when
+/// the manifest has none (or they don't cover the vector).
+pub fn layered_record(
+    compute: &ComputeHandle,
+    model: &str,
+    flat: &[f32],
+) -> anyhow::Result<ArrayRecord> {
+    let layers = compute
+        .manifest()
+        .model(model)
+        .map(|m| m.layers.clone())
+        .unwrap_or_default();
+    let covered: usize = layers.iter().map(|l| l.elems()).sum();
+    if layers.is_empty() || covered != flat.len() {
+        return Ok(ArrayRecord::from_flat(flat));
     }
+    let mut tensors = Vec::with_capacity(layers.len());
+    let mut off = 0;
+    for l in &layers {
+        let n = l.elems();
+        tensors.push(Tensor::from_f32(
+            l.name.clone(),
+            l.shape.clone(),
+            &flat[off..off + n],
+        ));
+        off += n;
+    }
+    Ok(ArrayRecord::from_tensors(tensors)?)
 }
 
 /// Build the ServerApp (shared by native and bridged paths).

@@ -13,6 +13,7 @@ use std::sync::Arc;
 use crate::flare::tracking::SummaryWriter;
 use crate::flower::clientapp::{ClientApp, EvalOutput, FitOutput};
 use crate::flower::message::{config_get_f64, ConfigRecord};
+use crate::flower::records::ArrayRecord;
 use crate::runtime::{ComputeHandle, TensorData};
 use crate::train::data::{ImageShard, TokenShard};
 
@@ -148,14 +149,18 @@ impl TrainerClientApp {
 }
 
 impl ClientApp for TrainerClientApp {
-    fn fit(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<FitOutput> {
+    fn fit(&self, record: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<FitOutput> {
         let round = config_get_f64(config, "round").unwrap_or(0.0) as u64;
         let mu = config_get_f64(config, "proximal_mu").unwrap_or(0.0) as f32;
         let batch = self.train_batch_size();
         let artifact = format!("{}_train_step", self.model);
-        let w0 = parameters; // global params (FedProx anchor)
+        // The AOT artifacts consume the flat f32 view; the record's
+        // layer structure is restored on the way out so layer-named
+        // tensors ride the wire end to end.
+        let flat = record.to_flat();
+        let w0 = &flat[..]; // global params (FedProx anchor)
 
-        let mut params = parameters.to_vec();
+        let mut params = flat.clone();
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         for step in 0..self.local_steps {
@@ -187,7 +192,7 @@ impl ClientApp for TrainerClientApp {
         }
         let steps = self.local_steps.max(1) as f64;
         Ok(FitOutput {
-            parameters: params,
+            parameters: record.from_flat_like(&params)?,
             num_examples: self.local_steps * batch as u64,
             metrics: vec![
                 ("train_loss".into(), loss_sum / steps),
@@ -196,17 +201,18 @@ impl ClientApp for TrainerClientApp {
         })
     }
 
-    fn evaluate(&self, parameters: &[f32], config: &ConfigRecord) -> anyhow::Result<EvalOutput> {
+    fn evaluate(&self, record: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<EvalOutput> {
         let round = config_get_f64(config, "round").unwrap_or(0.0) as u64;
         let batch = self.eval_batch_size();
         let artifact = format!("{}_eval_batch", self.model);
         let units_per_item = self.data.eval_units_per_item();
+        let parameters = record.to_flat();
 
         let mut loss_sum = 0.0f64;
         let mut correct_sum = 0.0f64;
         let mut units = 0usize;
         for (inputs, effective) in self.data.eval_batches(batch) {
-            let mut full = vec![TensorData::F32(parameters.to_vec(), vec![parameters.len()])];
+            let mut full = vec![TensorData::F32(parameters.clone(), vec![parameters.len()])];
             full.extend(inputs);
             let out = self.compute.execute(&artifact, full)?;
             anyhow::ensure!(out.len() >= 2, "eval_batch returned {} outputs", out.len());
@@ -256,13 +262,13 @@ mod tests {
         }
     }
 
-    fn init_params(model: &str, seed: i32) -> Vec<f32> {
+    fn init_params(model: &str, seed: i32) -> ArrayRecord {
         let compute = crate::runtime::global_compute(1).unwrap();
         let out = compute
             .execute(&format!("{model}_init"), vec![TensorData::I32(vec![seed], vec![1])])
             .unwrap();
         match &out[0] {
-            TensorData::F32(v, _) => v.clone(),
+            TensorData::F32(v, _) => ArrayRecord::from_flat(v),
             _ => panic!(),
         }
     }
@@ -278,8 +284,8 @@ mod tests {
         let out = client
             .fit(&params, &vec![("round".into(), crate::flower::message::ConfigValue::I64(1))])
             .unwrap();
-        assert_eq!(out.parameters.len(), params.len());
-        assert_ne!(out.parameters, params);
+        assert!(out.parameters.dims_match(&params));
+        assert!(!out.parameters.bits_equal(&params));
         assert_eq!(out.num_examples, 2 * 32);
         let loss = out.metrics.iter().find(|(k, _)| k == "train_loss").unwrap().1;
         assert!(loss.is_finite() && loss > 0.0);
@@ -296,10 +302,7 @@ mod tests {
         let cfg = vec![("round".into(), crate::flower::message::ConfigValue::I64(3))];
         let a = client.fit(&params, &cfg).unwrap();
         let b = client.fit(&params, &cfg).unwrap();
-        assert_eq!(
-            a.parameters.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
-            b.parameters.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
-        );
+        assert!(a.parameters.bits_equal(&b.parameters));
     }
 
     #[test]
@@ -340,6 +343,6 @@ mod tests {
                 ],
             )
             .unwrap();
-        assert_ne!(plain.parameters, prox.parameters);
+        assert!(!plain.parameters.bits_equal(&prox.parameters));
     }
 }

@@ -26,17 +26,28 @@ pub type Frame = Vec<u8>;
 /// (see `flare::streaming`).
 pub const MAX_FRAME: usize = 1 << 30;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TransportError {
-    #[error("transport: connection closed")]
     Closed,
-    #[error("transport: receive timed out")]
     Timeout,
-    #[error("transport: frame of {0} bytes exceeds MAX_FRAME")]
     FrameTooLarge(usize),
-    #[error("transport: io: {0}")]
     Io(String),
 }
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Closed => write!(f, "transport: connection closed"),
+            TransportError::Timeout => write!(f, "transport: receive timed out"),
+            TransportError::FrameTooLarge(n) => {
+                write!(f, "transport: frame of {n} bytes exceeds MAX_FRAME")
+            }
+            TransportError::Io(e) => write!(f, "transport: io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 impl From<std::io::Error> for TransportError {
     fn from(e: std::io::Error) -> Self {

@@ -13,8 +13,6 @@ use std::sync::{
 };
 use std::time::Duration;
 
-use byteorder::{ByteOrder, LittleEndian};
-
 use super::{Endpoint, Frame, TransportError, MAX_FRAME};
 
 pub struct TcpEndpoint {
@@ -37,7 +35,7 @@ fn spawn_reader(mut stream: TcpStream, tx: Sender<Frame>, closed: Arc<AtomicBool
                     closed.store(true, Ordering::Release);
                     return;
                 }
-                let len = LittleEndian::read_u32(&len_buf) as usize;
+                let len = u32::from_le_bytes(len_buf) as usize;
                 if len > MAX_FRAME {
                     closed.store(true, Ordering::Release);
                     return;
@@ -79,8 +77,7 @@ impl Endpoint for TcpEndpoint {
         if self.closed.load(Ordering::Acquire) {
             return Err(TransportError::Closed);
         }
-        let mut len_buf = [0u8; 4];
-        LittleEndian::write_u32(&mut len_buf, frame.len() as u32);
+        let len_buf = (frame.len() as u32).to_le_bytes();
         let mut w = self.writer.lock().unwrap();
         w.write_all(&len_buf)?;
         w.write_all(&frame)?;

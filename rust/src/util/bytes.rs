@@ -1,26 +1,146 @@
 //! Wire-format primitives: a little-endian writer/reader pair used by the
 //! transport frames, the FLARE envelope codec, and the Flower message
-//! protocol. All multi-byte integers are little-endian; byte strings and
-//! vectors are u32-length-prefixed.
+//! protocol, plus [`Bytes`] — a cheaply-cloneable shared view into an
+//! immutable byte buffer that gives the record codec its zero-copy
+//! decode path (tensors in a decoded frame are slices of the frame's
+//! allocation, not copies). All multi-byte integers are little-endian;
+//! byte strings and vectors are u32-length-prefixed.
 
-use byteorder::{ByteOrder, LittleEndian};
+use std::sync::Arc;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("wire: truncated input (needed {needed} more bytes at {at})")]
     Truncated { at: usize, needed: usize },
-    #[error("wire: invalid utf-8 string")]
     BadUtf8,
-    #[error("wire: length {len} exceeds limit {limit}")]
     TooLong { len: usize, limit: usize },
-    #[error("wire: invalid tag {0}")]
     BadTag(u8),
+    /// Structurally invalid frame (inconsistent lengths, duplicate
+    /// tensor names, ...).
+    Malformed(&'static str),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { at, needed } => {
+                write!(f, "wire: truncated input (needed {needed} more bytes at {at})")
+            }
+            WireError::BadUtf8 => write!(f, "wire: invalid utf-8 string"),
+            WireError::TooLong { len, limit } => {
+                write!(f, "wire: length {len} exceeds limit {limit}")
+            }
+            WireError::BadTag(t) => write!(f, "wire: invalid tag {t}"),
+            WireError::Malformed(what) => write!(f, "wire: malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// Hard cap on any single length-prefixed field (guards against corrupt
 /// frames allocating unbounded memory). 1 GiB accommodates the "large
 /// message" experiments of DESIGN.md E5.
 pub const MAX_FIELD: usize = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// Shared immutable byte buffer
+// ---------------------------------------------------------------------------
+
+/// A view into a reference-counted immutable byte buffer. Cloning and
+/// slicing are O(1) and share the underlying allocation — the substrate
+/// for zero-copy frame decoding: `Bytes::from_vec(frame)` takes
+/// ownership without copying, and every tensor segment decoded out of it
+/// is a [`Bytes::slice`] of the same allocation.
+#[derive(Clone)]
+pub struct Bytes {
+    owner: Arc<Vec<u8>>,
+    start: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// Take ownership of `v` without copying.
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes {
+            owner: Arc::new(v),
+            start: 0,
+            len,
+        }
+    }
+
+    /// Copy `s` into a fresh allocation (records this as a copy in the
+    /// telemetry byte-copy counter).
+    pub fn copy_from_slice(s: &[u8]) -> Bytes {
+        crate::telemetry::bump("bytes.copied", s.len() as i64);
+        Bytes::from_vec(s.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.owner[self.start..self.start + self.len]
+    }
+
+    /// Zero-copy sub-view sharing this buffer's allocation.
+    ///
+    /// Panics if `start + len` exceeds this view.
+    pub fn slice(&self, start: usize, len: usize) -> Bytes {
+        assert!(
+            start.checked_add(len).is_some_and(|end| end <= self.len),
+            "Bytes::slice out of range: {start}+{len} > {}",
+            self.len
+        );
+        Bytes {
+            owner: self.owner.clone(),
+            start: self.start + start,
+            len,
+        }
+    }
+
+    /// True when `other` is a view into the same allocation as `self`
+    /// (used by tests/benches to prove the decode path copied nothing).
+    pub fn shares_allocation(&self, other: &Bytes) -> bool {
+        Arc::ptr_eq(&self.owner, &other.owner)
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({} bytes)", self.len)
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::from_vec(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
 
 #[derive(Default)]
 pub struct Writer {
@@ -55,15 +175,11 @@ impl Writer {
     }
 
     pub fn u32(&mut self, v: u32) {
-        let mut b = [0u8; 4];
-        LittleEndian::write_u32(&mut b, v);
-        self.buf.extend_from_slice(&b);
+        self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
     pub fn u64(&mut self, v: u64) {
-        let mut b = [0u8; 8];
-        LittleEndian::write_u64(&mut b, v);
-        self.buf.extend_from_slice(&b);
+        self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
     pub fn f32(&mut self, v: f32) {
@@ -80,27 +196,38 @@ impl Writer {
         self.buf.extend_from_slice(v);
     }
 
+    /// Raw bytes with NO length prefix (caller wrote the framing).
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
     pub fn str(&mut self, v: &str) {
         self.bytes(v.as_bytes());
     }
 
-    /// f32 vector as raw little-endian bytes (4-byte aligned copy).
+    /// f32 vector as raw little-endian bytes.
     pub fn f32s(&mut self, v: &[f32]) {
         assert!(v.len() * 4 <= MAX_FIELD);
         self.u32(v.len() as u32);
-        let start = self.buf.len();
-        self.buf.resize(start + v.len() * 4, 0);
-        LittleEndian::write_f32_into(v, &mut self.buf[start..]);
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
     }
 
     pub fn i32s(&mut self, v: &[i32]) {
         assert!(v.len() * 4 <= MAX_FIELD);
         self.u32(v.len() as u32);
-        let start = self.buf.len();
-        self.buf.resize(start + v.len() * 4, 0);
-        LittleEndian::write_i32_into(v, &mut self.buf[start..]);
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Borrowed reader
+// ---------------------------------------------------------------------------
 
 pub struct Reader<'a> {
     buf: &'a [u8],
@@ -137,11 +264,15 @@ impl<'a> Reader<'a> {
     }
 
     pub fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(LittleEndian::read_u32(self.take(4)?))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(LittleEndian::read_u64(self.take(8)?))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
     }
 
     pub fn f32(&mut self) -> Result<f32, WireError> {
@@ -174,17 +305,154 @@ impl<'a> Reader<'a> {
 
     pub fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
         let n = self.len_prefix()?;
+        if n.checked_mul(4).is_none() {
+            return Err(WireError::TooLong {
+                len: n,
+                limit: MAX_FIELD,
+            });
+        }
         let raw = self.take(n * 4)?;
-        let mut out = vec![0f32; n];
-        LittleEndian::read_f32_into(raw, &mut out);
-        Ok(out)
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
     }
 
     pub fn i32s(&mut self) -> Result<Vec<i32>, WireError> {
         let n = self.len_prefix()?;
+        if n.checked_mul(4).is_none() {
+            return Err(WireError::TooLong {
+                len: n,
+                limit: MAX_FIELD,
+            });
+        }
         let raw = self.take(n * 4)?;
-        let mut out = vec![0i32; n];
-        LittleEndian::read_i32_into(raw, &mut out);
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared (zero-copy) reader
+// ---------------------------------------------------------------------------
+
+/// Reader over a shared [`Bytes`] buffer. Scalar reads behave like
+/// [`Reader`]; [`FrameReader::take_shared`] / [`FrameReader::bytes_shared`]
+/// return sub-views that alias the underlying allocation instead of
+/// copying — the decode path of the record codec.
+pub struct FrameReader {
+    buf: Bytes,
+    pos: usize,
+}
+
+impl FrameReader {
+    pub fn new(buf: Bytes) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn view(&self, n: usize) -> Result<&[u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated {
+                at: self.pos,
+                needed: n - self.remaining(),
+            });
+        }
+        Ok(&self.buf.as_slice()[self.pos..self.pos + n])
+    }
+
+    /// Zero-copy: the returned [`Bytes`] shares the frame's allocation.
+    pub fn take_shared(&mut self, n: usize) -> Result<Bytes, WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated {
+                at: self.pos,
+                needed: n - self.remaining(),
+            });
+        }
+        let out = self.buf.slice(self.pos, n);
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        let v = self.view(1)?[0];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.view(4)?;
+        let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        self.pos += 4;
+        Ok(v)
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.view(8)?;
+        let v = u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+        self.pos += 8;
+        Ok(v)
+    }
+
+    pub fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn len_prefix(&mut self) -> Result<usize, WireError> {
+        let len = self.u32()? as usize;
+        if len > MAX_FIELD {
+            return Err(WireError::TooLong {
+                len,
+                limit: MAX_FIELD,
+            });
+        }
+        Ok(len)
+    }
+
+    /// Length-prefixed bytes as a zero-copy sub-view.
+    pub fn bytes_shared(&mut self) -> Result<Bytes, WireError> {
+        let len = self.len_prefix()?;
+        self.take_shared(len)
+    }
+
+    /// Length-prefixed UTF-8 string (strings are small; this copies).
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let len = self.len_prefix()?;
+        let view = self.view(len)?;
+        let s = std::str::from_utf8(view)
+            .map_err(|_| WireError::BadUtf8)?
+            .to_string();
+        self.pos += len;
+        Ok(s)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.len_prefix()?;
+        if n.checked_mul(4).is_none() {
+            return Err(WireError::TooLong {
+                len: n,
+                limit: MAX_FIELD,
+            });
+        }
+        let raw = self.view(n * 4)?;
+        let out = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect();
+        self.pos += n * 4;
         Ok(out)
     }
 }
@@ -259,5 +527,56 @@ mod tests {
         for (a, b) in vals.iter().zip(got.iter()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn bytes_slicing_shares_allocation() {
+        let b = Bytes::from_vec((0u8..64).collect());
+        let s = b.slice(10, 20);
+        assert_eq!(s.len(), 20);
+        assert_eq!(s.as_slice()[0], 10);
+        assert!(b.shares_allocation(&s));
+        let s2 = s.slice(5, 5);
+        assert_eq!(s2.as_slice(), &[15, 16, 17, 18, 19]);
+        assert!(b.shares_allocation(&s2));
+        let other = Bytes::from_vec(vec![1, 2, 3]);
+        assert!(!b.shares_allocation(&other));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bytes_slice_out_of_range_panics() {
+        Bytes::from_vec(vec![0; 4]).slice(2, 3);
+    }
+
+    #[test]
+    fn frame_reader_zero_copy_and_scalars() {
+        let mut w = Writer::new();
+        w.u8(9);
+        w.u64(77);
+        w.str("name");
+        w.bytes(&[4, 5, 6, 7]);
+        let frame = Bytes::from_vec(w.into_bytes());
+        let mut fr = FrameReader::new(frame.clone());
+        assert_eq!(fr.u8().unwrap(), 9);
+        assert_eq!(fr.u64().unwrap(), 77);
+        assert_eq!(fr.str().unwrap(), "name");
+        let payload = fr.bytes_shared().unwrap();
+        assert_eq!(payload.as_slice(), &[4, 5, 6, 7]);
+        assert!(frame.shares_allocation(&payload), "decode must not copy");
+        assert!(fr.is_done());
+    }
+
+    #[test]
+    fn frame_reader_truncation_detected() {
+        let mut w = Writer::new();
+        w.bytes(&[1, 2, 3, 4, 5]);
+        let mut buf = w.into_bytes();
+        buf.truncate(buf.len() - 2);
+        let mut fr = FrameReader::new(Bytes::from_vec(buf));
+        assert!(matches!(
+            fr.bytes_shared(),
+            Err(WireError::Truncated { .. })
+        ));
     }
 }

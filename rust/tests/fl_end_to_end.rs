@@ -154,7 +154,7 @@ fn pjrt_and_host_aggregation_agree() {
     let b = run_fl_native(&cfg, compute).unwrap();
     assert_eq!(a.rounds.len(), b.rounds.len());
     // Same inputs, two reduction implementations: allow float-assoc noise.
-    for (pa, pb) in a.parameters.iter().zip(b.parameters.iter()) {
+    for (pa, pb) in a.parameters.to_flat().iter().zip(b.parameters.to_flat().iter()) {
         assert!((pa - pb).abs() <= 1e-4 * pa.abs().max(1.0), "{pa} vs {pb}");
     }
     let (la, lb) = (

@@ -1,14 +1,18 @@
 //! Property-based tests (hand-rolled `util::check`, proptest is
 //! unavailable offline) over the system's codec and coordinator
-//! invariants: random envelopes/messages/JSON always roundtrip, random
-//! scheduler workloads never violate capacity, random aggregation inputs
-//! obey convexity bounds, and the reliable layer's dedup keys are stable.
+//! invariants: random envelopes/messages/records/JSON always roundtrip,
+//! truncated or corrupted frames return errors (never panic), the
+//! legacy v1 decode path accepts v1 frames, random scheduler workloads
+//! never violate capacity, random aggregation inputs obey convexity
+//! bounds, and the reliable layer's dedup keys are stable.
 
 use flarelink::flare::job::JobSpec;
 use flarelink::flare::scheduler::Scheduler;
 use flarelink::flower::message::{ConfigValue, FlowerMsg, TaskIns, TaskRes, TaskType};
+use flarelink::flower::records::{ArrayRecord, DType, Tensor};
 use flarelink::flower::strategy::{host_weighted_mean, FitRes};
 use flarelink::proto::{Envelope, MsgKind};
+use flarelink::util::bytes::Bytes;
 use flarelink::util::check::{gen_u64, gen_vec, prop_check, Gen};
 use flarelink::util::json::Json;
 use flarelink::util::rng::Rng;
@@ -77,7 +81,49 @@ impl Gen for EnvelopeGen {
     }
 }
 
-struct FlowerMsgGen;
+/// Random record: 0..4 tensors, random dtypes, random small shapes,
+/// random payload bits (including NaN / signed-zero f32 patterns).
+fn gen_record(rng: &mut Rng) -> ArrayRecord {
+    let n = rng.below(4) as usize;
+    let mut tensors = Vec::new();
+    for i in 0..n {
+        let dtype = match rng.below(4) {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I64,
+            _ => DType::U8,
+        };
+        let ndim = rng.below(3) as usize;
+        let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(4) as usize).collect();
+        let elems: usize = shape.iter().product();
+        let bytes: Vec<u8> = (0..elems * dtype.size_of())
+            .map(|_| rng.next_u64() as u8)
+            .collect();
+        tensors.push(
+            Tensor::new(format!("t{i}"), dtype, shape, Bytes::from_vec(bytes)).unwrap(),
+        );
+    }
+    ArrayRecord::from_tensors(tensors).unwrap()
+}
+
+struct FlowerMsgGen {
+    /// Restrict parameters to single flat f32 tensors (so the message
+    /// is representable by the legacy v1 codec).
+    flat_only: bool,
+}
+
+impl FlowerMsgGen {
+    fn gen_params(&self, rng: &mut Rng) -> ArrayRecord {
+        if self.flat_only {
+            let flat: Vec<f32> = (0..rng.below(32))
+                .map(|_| f32::from_bits(rng.next_u32()))
+                .collect();
+            ArrayRecord::from_flat(&flat)
+        } else {
+            gen_record(rng)
+        }
+    }
+}
 
 impl Gen for FlowerMsgGen {
     type Value = FlowerMsg;
@@ -96,7 +142,7 @@ impl Gen for FlowerMsgGen {
                     run_id: rng.next_u64(),
                     node_id: rng.next_u64(),
                     error: sg.generate(rng),
-                    parameters: (0..rng.below(32)).map(|_| f32::from_bits(rng.next_u32())).collect(),
+                    parameters: self.gen_params(rng),
                     num_examples: rng.next_u64(),
                     loss: rng.next_f64(),
                     metrics: vec![(sg.generate(rng), rng.next_f64())],
@@ -117,9 +163,7 @@ impl Gen for FlowerMsgGen {
                         } else {
                             TaskType::Evaluate
                         },
-                        parameters: (0..rng.below(16))
-                            .map(|_| f32::from_bits(rng.next_u32()))
-                            .collect(),
+                        parameters: self.gen_params(rng),
                         config: vec![
                             (sg.generate(rng), ConfigValue::F64(rng.next_f64())),
                             (sg.generate(rng), ConfigValue::I64(rng.next_u64() as i64)),
@@ -138,7 +182,9 @@ impl Gen for FlowerMsgGen {
 }
 
 fn bits_equal(a: &FlowerMsg, b: &FlowerMsg) -> bool {
-    // PartialEq on f32 fails for NaN payloads; compare encodings instead.
+    // PartialEq on records is already byte-exact, but comparing
+    // encodings also covers every non-record field against float
+    // quirks.
     a.encode() == b.encode()
 }
 
@@ -169,12 +215,118 @@ fn prop_envelope_truncation_never_panics() {
 
 #[test]
 fn prop_flower_msg_roundtrip() {
-    prop_check("flower msg roundtrip", 300, FlowerMsgGen, |m| {
-        match FlowerMsg::decode(&m.encode()) {
+    prop_check(
+        "flower msg roundtrip",
+        300,
+        FlowerMsgGen { flat_only: false },
+        |m| match FlowerMsg::decode(&m.encode()) {
             Ok(back) => bits_equal(m, &back),
             Err(_) => false,
-        }
-    });
+        },
+    );
+}
+
+#[test]
+fn prop_flower_msg_decode_is_zero_copy() {
+    prop_check(
+        "flower msg zero-copy decode",
+        150,
+        FlowerMsgGen { flat_only: false },
+        |m| {
+            let frame = Bytes::from_vec(m.encode());
+            let Ok(back) = FlowerMsg::decode_shared(frame.clone()) else {
+                return false;
+            };
+            let records: Vec<&ArrayRecord> = match &back {
+                FlowerMsg::PushTaskRes { res } => vec![&res.parameters],
+                FlowerMsg::TaskInsList { tasks, .. } =>
+                    tasks.iter().map(|t| &t.parameters).collect(),
+                _ => vec![],
+            };
+            records.iter().all(|rec| {
+                rec.tensors()
+                    .iter()
+                    .all(|t| frame.shares_allocation(t.data()))
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_flower_msg_truncation_never_panics() {
+    prop_check(
+        "flower msg truncation safe",
+        150,
+        FlowerMsgGen { flat_only: false },
+        |m| {
+            let buf = m.encode();
+            for cut in 0..buf.len() {
+                // Strict prefixes must error (never panic, never parse).
+                if FlowerMsg::decode(&buf[..cut]).is_ok() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_flower_msg_corruption_never_panics() {
+    // Flipping any single byte must yield Ok-or-Err — never a panic or
+    // an unbounded allocation. (Some flips still decode fine: payload
+    // bits are arbitrary.)
+    prop_check(
+        "flower msg corruption safe",
+        100,
+        FlowerMsgGen { flat_only: false },
+        |m| {
+            let buf = m.encode();
+            let stride = (buf.len() / 24).max(1);
+            for i in (0..buf.len()).step_by(stride) {
+                let mut corrupt = buf.clone();
+                corrupt[i] ^= 0xA5;
+                let _ = FlowerMsg::decode(&corrupt);
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_legacy_v1_frames_decode_equivalently() {
+    // Any flat-parameter message encoded by the legacy v1 codec decodes
+    // into the same message the v2 codec would produce.
+    prop_check(
+        "legacy v1 decode",
+        200,
+        FlowerMsgGen { flat_only: true },
+        |m| {
+            let v1 = m.encode_v1();
+            match FlowerMsg::decode(&v1) {
+                Ok(back) => bits_equal(m, &back),
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_legacy_v1_truncation_never_panics() {
+    prop_check(
+        "legacy v1 truncation safe",
+        150,
+        FlowerMsgGen { flat_only: true },
+        |m| {
+            let buf = m.encode_v1();
+            for cut in 0..buf.len() {
+                if FlowerMsg::decode(&buf[..cut]).is_ok() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
 }
 
 #[test]
@@ -333,21 +485,21 @@ fn prop_weighted_mean_is_convex_combination() {
             .enumerate()
             .map(|(i, (p, w))| FitRes {
                 node_id: i as u64,
-                parameters: p.clone(),
+                parameters: ArrayRecord::from_flat(p),
                 num_examples: *w,
                 metrics: vec![],
             })
             .collect();
-        let mean = host_weighted_mean(&results);
-        let n = results[0].parameters.len();
+        let mean = host_weighted_mean(&results).to_flat();
+        let n = clients[0].0.len();
         for i in 0..n {
-            let lo = results
+            let lo = clients
                 .iter()
-                .map(|r| r.parameters[i])
+                .map(|(p, _)| p[i])
                 .fold(f32::INFINITY, f32::min);
-            let hi = results
+            let hi = clients
                 .iter()
-                .map(|r| r.parameters[i])
+                .map(|(p, _)| p[i])
                 .fold(f32::NEG_INFINITY, f32::max);
             // small epsilon for f32/f64 mixing
             if mean[i] < lo - 1e-3 || mean[i] > hi + 1e-3 {
@@ -372,7 +524,7 @@ fn prop_history_csv_has_one_line_per_round() {
                     per_client_eval: vec![],
                 })
                 .collect(),
-            parameters: vec![],
+            parameters: ArrayRecord::new(),
         };
         h.to_csv().lines().count() as u64 == rounds + 1
     });

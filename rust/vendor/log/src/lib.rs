@@ -1,0 +1,255 @@
+//! Minimal, offline, API-compatible subset of the `log` facade crate:
+//! `error!`/`warn!`/`info!`/`debug!`/`trace!` macros, the [`Log`] trait,
+//! [`set_logger`] / [`set_max_level`], and the [`Record`]/[`Metadata`]
+//! types consumed by logger implementations.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+#[derive(Clone, Copy)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        false
+    }
+    fn log(&self, _: &Record) {}
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger was already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+pub fn logger() -> &'static dyn Log {
+    match LOGGER.get() {
+        Some(l) => *l,
+        None => &NOP,
+    }
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing — public so the expansion can call it, not public API.
+#[doc(hidden)]
+pub fn __private_log(args: fmt::Arguments, level: Level, target: &str) {
+    if (level as usize) > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    let record = Record {
+        metadata: Metadata { level, target },
+        args,
+    };
+    let l = logger();
+    if l.enabled(&record.metadata) {
+        l.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    (target: $target:expr, $lvl:expr, $($arg:tt)+) => {
+        $crate::__private_log(format_args!($($arg)+), $lvl, $target)
+    };
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::log!(target: module_path!(), $lvl, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Error, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Error, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Warn, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Warn, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Info, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Info, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Debug, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Debug, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    (target: $target:expr, $($arg:tt)+) => {
+        $crate::log!(target: $target, $crate::Level::Trace, $($arg)+)
+    };
+    ($($arg:tt)+) => {
+        $crate::log!($crate::Level::Trace, $($arg)+)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    struct Capture(Mutex<Vec<String>>);
+
+    impl Log for Capture {
+        fn enabled(&self, _: &Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &Record) {
+            self.0
+                .lock()
+                .unwrap()
+                .push(format!("{} {} {}", record.level(), record.target(), record.args()));
+        }
+        fn flush(&self) {}
+    }
+
+    static CAP: Capture = Capture(Mutex::new(Vec::new()));
+
+    #[test]
+    fn capture_and_filter() {
+        let _ = set_logger(&CAP);
+        set_max_level(LevelFilter::Info);
+        crate::info!("hello {}", 1);
+        crate::debug!("dropped {}", 2);
+        let got = CAP.0.lock().unwrap().clone();
+        assert!(got.iter().any(|l| l.contains("hello 1")));
+        assert!(!got.iter().any(|l| l.contains("dropped")));
+        assert_eq!(max_level(), LevelFilter::Info);
+    }
+}
