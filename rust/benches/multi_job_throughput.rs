@@ -1,9 +1,22 @@
 //! Bench E4: the multi-job system (§2/§3.1). J concurrent FL jobs share
-//! one federation; we measure makespan and per-job wall-clock as J grows
+//! one federation; we measure makespan and per-run wall-clock as J grows
 //! and verify isolation (every job finishes, histories are per-job).
+//!
+//! Two modes:
+//!
+//! * **per-job SuperLink** — J independent `flower_bridge` jobs; every
+//!   job cell builds its own link (the pre-multi-run baseline).
+//! * **shared SuperLink** — ONE job whose server side drives J
+//!   concurrent runs against a single link and a single SuperNode fleet
+//!   (`concurrent_runs = J`), measuring concurrent-run makespan plus
+//!   per-run completion times.
+//!
 //! Expected shape: makespan grows sublinearly in J until site resource
 //! slots (or the shared compute service) saturate — the paper's
-//! "maximize the utilization of compute resources".
+//! "maximize the utilization of compute resources" — and the shared-link
+//! mode amortizes the per-job deploy/teardown besides.
+//!
+//! `--smoke` shrinks the sweep for CI.
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -80,64 +93,162 @@ impl FlowerAppBuilder for SyntheticBuilder {
     }
 }
 
+struct ModeResult {
+    makespan: Duration,
+    per_run: Vec<Duration>,
+    finished: usize,
+}
+
+fn fmt_dur(d: Duration) -> String {
+    flarelink::util::bench::fmt_dur(d)
+}
+
+/// Mode 1: J independent jobs, each with its own SuperLink.
+fn per_job_links(jobs: usize, rounds: u64, fit_cost: Duration) -> anyhow::Result<ModeResult> {
+    let t0_cell: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+    let per_run: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::new()));
+    let (t0c, prc) = (t0_cell.clone(), per_run.clone());
+    let app = FlowerBridgeApp::new(Arc::new(SyntheticBuilder { fit_cost }))
+        .with_policy(RetryPolicy::fast())
+        .with_history_sink(Arc::new(move |_, _| {
+            if let Some(t0) = *t0c.lock().unwrap() {
+                prc.lock().unwrap().push(t0.elapsed());
+            }
+        }));
+    let fed = FederationBuilder::new("e4")
+        .sites(4)
+        .retry_policy(RetryPolicy::fast())
+        .build(Arc::new(app))?;
+
+    let t0 = Instant::now();
+    *t0_cell.lock().unwrap() = Some(t0);
+    for j in 0..jobs {
+        fed.scp.submit(
+            JobSpec::new(&format!("job-{j}"), "flower_bridge")
+                .with_config(Json::obj(vec![("rounds", Json::num(rounds as f64))])),
+        )?;
+    }
+    let mut finished = 0;
+    for j in 0..jobs {
+        let status = fed
+            .scp
+            .wait(&format!("job-{j}"), Duration::from_secs(120))
+            .unwrap_or(JobStatus::Failed);
+        if status == JobStatus::Finished {
+            finished += 1;
+        }
+    }
+    let makespan = t0.elapsed();
+    fed.shutdown();
+    let per_run = per_run.lock().unwrap().clone();
+    Ok(ModeResult {
+        makespan,
+        per_run,
+        finished,
+    })
+}
+
+/// Mode 2: ONE job, J concurrent runs sharing one SuperLink + fleet.
+fn shared_link(jobs: usize, rounds: u64, fit_cost: Duration) -> anyhow::Result<ModeResult> {
+    let t0_cell: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+    let per_run: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::new()));
+    let (t0c, prc) = (t0_cell.clone(), per_run.clone());
+    let app = FlowerBridgeApp::new(Arc::new(SyntheticBuilder { fit_cost }))
+        .with_policy(RetryPolicy::fast())
+        .with_history_sink(Arc::new(move |_, _| {
+            if let Some(t0) = *t0c.lock().unwrap() {
+                prc.lock().unwrap().push(t0.elapsed());
+            }
+        }));
+    let fed = FederationBuilder::new("e4-shared")
+        .sites(4)
+        .retry_policy(RetryPolicy::fast())
+        .build(Arc::new(app))?;
+
+    let t0 = Instant::now();
+    *t0_cell.lock().unwrap() = Some(t0);
+    fed.scp.submit(JobSpec::new("shared", "flower_bridge").with_config(Json::obj(vec![
+        ("rounds", Json::num(rounds as f64)),
+        ("concurrent_runs", Json::num(jobs as f64)),
+    ])))?;
+    let status = fed
+        .scp
+        .wait("shared", Duration::from_secs(120))
+        .unwrap_or(JobStatus::Failed);
+    let makespan = t0.elapsed();
+    fed.shutdown();
+    let per_run = per_run.lock().unwrap().clone();
+    let finished = if status == JobStatus::Finished {
+        per_run.len()
+    } else {
+        0
+    };
+    Ok(ModeResult {
+        makespan,
+        per_run,
+        finished,
+    })
+}
+
+fn report(mode: &str, jobs: usize, rounds: u64, fit_cost: Duration, r: &ModeResult, t: &mut Table) {
+    let serial = jobs as f64 * rounds as f64 * fit_cost.as_secs_f64();
+    let run_mean = if r.per_run.is_empty() {
+        Duration::ZERO
+    } else {
+        r.per_run.iter().sum::<Duration>() / r.per_run.len() as u32
+    };
+    let run_max = r.per_run.iter().max().copied().unwrap_or(Duration::ZERO);
+    t.row(vec![
+        mode.into(),
+        jobs.to_string(),
+        fmt_dur(r.makespan),
+        format!("{:.2}x", r.makespan.as_secs_f64() / serial),
+        fmt_dur(run_mean),
+        fmt_dur(run_max),
+        format!("{:.2}", jobs as f64 / r.makespan.as_secs_f64()),
+        (r.finished == jobs).to_string(),
+    ]);
+}
+
 fn main() -> anyhow::Result<()> {
     flarelink::telemetry::init_logging();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let job_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let rounds: u64 = if smoke { 2 } else { 3 };
+    let fit_cost = Duration::from_millis(if smoke { 5 } else { 30 });
+
     println!("=== E4: concurrent jobs on one federation (paper §3.1 / Fig. 2) ===\n");
-    println!("workload: each job = 3 rounds x 4 sites, 30ms simulated fit cost\n");
+    println!(
+        "workload: each job/run = {rounds} rounds x 4 sites, {}ms simulated fit cost{}\n",
+        fit_cost.as_millis(),
+        if smoke { " (smoke mode)" } else { "" }
+    );
 
-    let rounds = 3u64;
-    let fit_cost = Duration::from_millis(30);
     let mut t = Table::new(&[
-        "jobs", "sites", "makespan", "vs_serial", "jobs_per_sec", "all_finished",
+        "mode",
+        "jobs",
+        "makespan",
+        "vs_serial",
+        "run_mean",
+        "run_max",
+        "jobs_per_sec",
+        "all_finished",
     ]);
+    let mut all_ok = true;
+    for &jobs in job_counts {
+        let r = per_job_links(jobs, rounds, fit_cost)?;
+        all_ok &= r.finished == jobs;
+        report("per-job links", jobs, rounds, fit_cost, &r, &mut t);
 
-    for jobs in [1usize, 2, 4, 8] {
-        let finished = Arc::new(Mutex::new(0usize));
-        let f2 = finished.clone();
-        let app = FlowerBridgeApp::new(Arc::new(SyntheticBuilder { fit_cost }))
-            .with_policy(RetryPolicy::fast())
-            .with_history_sink(Arc::new(move |_, _| {
-                *f2.lock().unwrap() += 1;
-            }));
-        let fed = FederationBuilder::new("e4")
-            .sites(4)
-            .retry_policy(RetryPolicy::fast())
-            .build(Arc::new(app))?;
-
-        let t0 = Instant::now();
-        for j in 0..jobs {
-            fed.scp.submit(
-                JobSpec::new(&format!("job-{j}"), "flower_bridge")
-                    .with_config(Json::obj(vec![("rounds", Json::num(rounds as f64))])),
-            )?;
-        }
-        let mut ok = true;
-        for j in 0..jobs {
-            let status = fed
-                .scp
-                .wait(&format!("job-{j}"), Duration::from_secs(120))
-                .unwrap_or(JobStatus::Failed);
-            ok &= status == JobStatus::Finished;
-        }
-        let makespan = t0.elapsed();
-        // Serial estimate: one job's critical path = rounds * fit_cost
-        // (clients run in parallel within a round) + overhead measured
-        // at J=1; approximate serial = J * makespan(1). We report the
-        // ratio vs J * single-job time using the first row as baseline.
-        t.row(vec![
-            jobs.to_string(),
-            "4".into(),
-            flarelink::util::bench::fmt_dur(makespan),
-            format!("{:.2}x", makespan.as_secs_f64() / (jobs as f64 * rounds as f64 * fit_cost.as_secs_f64())),
-            format!("{:.2}", jobs as f64 / makespan.as_secs_f64()),
-            ok.to_string(),
-        ]);
-        fed.shutdown();
-        assert_eq!(*finished.lock().unwrap(), jobs);
+        let r = shared_link(jobs, rounds, fit_cost)?;
+        all_ok &= r.finished == jobs;
+        report("shared link", jobs, rounds, fit_cost, &r, &mut t);
     }
     println!("{}", t.render());
-    println!("'vs_serial' < 1.0x means jobs overlapped (multi-job wins); the");
-    println!("paper's Fig. 2 topology gives each job its own Job Network on");
-    println!("shared sites, so makespan should grow far slower than J.");
+    println!("'vs_serial' < 1.0x means runs overlapped (multi-job wins). 'shared");
+    println!("link' submits ONE job whose server drives J concurrent runs over a");
+    println!("single SuperLink and SuperNode fleet — per-run makespan (run_mean /");
+    println!("run_max) shows how runs share the fleet vs owning a link each.");
+    anyhow::ensure!(all_ok, "some jobs/runs did not finish");
     Ok(())
 }

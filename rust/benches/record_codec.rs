@@ -11,6 +11,7 @@
 
 use flarelink::flower::message::{FlowerMsg, TaskRes};
 use flarelink::flower::records::{ArrayRecord, Tensor};
+use flarelink::flower::superlink::SuperLink;
 use flarelink::util::bench::{bench_for, fmt_dur, Table};
 use flarelink::util::bytes::Bytes;
 use flarelink::util::rng::Rng;
@@ -115,6 +116,50 @@ fn main() -> anyhow::Result<()> {
         "decode copied {decode_copied} tensor-payload bytes — the zero-copy invariant broke"
     );
     anyhow::ensure!(zero_copy_verified, "decoded tensors do not alias the frame");
+
+    // ---- bridged path: the LGC hop (FLARE envelope -> SuperLink) ----
+    // The bridge's LGC moves the OWNED envelope payload into
+    // `handle_frame_shared`, so the bridged hop copies zero payload
+    // bytes, exactly like the native path. For contrast we also measure
+    // the old borrowed-slice hop (`handle_frame`), which re-copied the
+    // whole frame to obtain shared ownership.
+    let link = SuperLink::new();
+    link.handle_frame(&FlowerMsg::CreateNode { requested: 1 }.encode());
+    link.register_run(1); // results route into live run state, as in production
+    let frame = msg.encode();
+
+    flarelink::telemetry::reset_counters();
+    let _ = link.handle_frame(&frame); // legacy hop: borrow + copy
+    let borrowed_copied = counter("bytes.copied");
+
+    flarelink::telemetry::reset_counters();
+    let owned_payload = frame.clone(); // the envelope's owned payload
+    let _ = link.handle_frame_shared(Bytes::from_vec(owned_payload)); // LGC hop
+    let lgc_copied = counter("bytes.copied")
+        + counter("records.encode_bytes_copied")
+        + counter("records.pack_bytes");
+
+    println!("bridged LGC hop (frame -> SuperLink ingest):");
+    let mut t = Table::new(&["hop", "frame_bytes", "bytes_copied"]);
+    t.row(vec![
+        "handle_frame (borrowed, legacy)".into(),
+        frame.len().to_string(),
+        borrowed_copied.to_string(),
+    ]);
+    t.row(vec![
+        "handle_frame_shared (owned payload)".into(),
+        frame.len().to_string(),
+        lgc_copied.to_string(),
+    ]);
+    println!("{}", t.render());
+    anyhow::ensure!(
+        lgc_copied == 0,
+        "bridged LGC hop copied {lgc_copied} bytes — the zero-copy bridge hop broke"
+    );
+    anyhow::ensure!(
+        borrowed_copied >= frame.len() as i64,
+        "legacy hop should have copied the whole frame (sanity check)"
+    );
 
     // ---- throughput ----
     let mut t = Table::new(&["op", "MiB", "p50", "p95", "mean", "iters", "GiB/s(p50)"]);

@@ -110,7 +110,11 @@ mod tests {
         let link = SuperLink::new();
         let server_msgr = Messenger::spawn(scp.clone() as Arc<dyn Fabric>, "server:j1").unwrap();
         let link2 = link.clone();
-        server_msgr.set_handler(Arc::new(move |env| Ok(link2.handle_frame(&env.payload))));
+        // Zero-copy LGC hop: move the owned payload into the link.
+        server_msgr.set_handler(Arc::new(move |env| {
+            let frame = std::mem::take(&mut env.payload);
+            Ok(link2.handle_frame_shared(crate::util::bytes::Bytes::from_vec(frame)))
+        }));
 
         // Client job cell + LGS.
         let client_msgr = Messenger::spawn(ccp.clone() as Arc<dyn Fabric>, "site-1:j1").unwrap();

@@ -38,17 +38,18 @@ use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::superlink::SuperLink;
 use crate::flower::supernode::{NativeConnector, SuperNode, SuperNodeConfig};
 use crate::proto::address;
+use crate::util::bytes::Bytes;
 
 pub use lgs::LocalGrpcServer;
 
 /// Topic carrying opaque Flower frames over FLARE messaging.
 pub const FLOWER_TOPIC: &str = "flower.frame";
 
-/// How long the server job cell waits, after the last round, for every
-/// SuperNode to acknowledge the finish flag by deregistering. The drain
-/// normally completes in a few poll intervals; the deadline only bounds
-/// pathological cases (a SuperNode that crashed without deregistering),
-/// so the job cell never hangs on a dead client.
+/// How long the server job cell waits, after every run has finished and
+/// the link retired, for each SuperNode to acknowledge retirement by
+/// deregistering. The drain normally completes in a few poll intervals;
+/// the deadline only bounds pathological cases (a SuperNode that crashed
+/// without deregistering), so the job cell never hangs on a dead client.
 pub const SHUTDOWN_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Builds the client-side (ClientApp) and server-side (ServerApp) halves
@@ -57,6 +58,12 @@ pub const SHUTDOWN_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 pub trait FlowerAppBuilder: Send + Sync {
     fn build_client(&self, ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>>;
     fn build_server(&self, ctx: &JobCtx) -> anyhow::Result<ServerApp>;
+    /// Build the server side for one run of a shared-SuperLink multi-run
+    /// job (config key `concurrent_runs` > 1). Defaults to
+    /// [`FlowerAppBuilder::build_server`]; override to vary per run.
+    fn build_server_run(&self, ctx: &JobCtx, _run_id: u64) -> anyhow::Result<ServerApp> {
+        self.build_server(ctx)
+    }
     /// Hybrid mode (§5.2): pass the FLARE tracker into the ServerApp.
     fn track(&self) -> bool {
         false
@@ -140,12 +147,17 @@ impl AppFactory for FlowerBridgeApp {
     }
 
     /// FLARE server side: LGC = the job cell's request handler feeding
-    /// the SuperLink, plus the ServerApp driver.
+    /// the SuperLink, plus one ServerApp driver per run. With
+    /// `concurrent_runs` > 1 in the job config, N ServerApps multiplex
+    /// ONE SuperLink — and therefore one SuperNode fleet — each driving
+    /// its own run id (the paper's §2/§3.1 multi-run utilization).
     fn run_server(&self, ctx: JobCtx) -> anyhow::Result<()> {
         let link = SuperLink::new();
 
         // LGC: Flower frames arriving over FLARE go straight into the
         // SuperLink; its reply rides back as the FLARE Reply (hops 3–5).
+        // The owned payload is moved out of the envelope, so the frame's
+        // tensor bytes reach the link's zero-copy decode uncopied.
         let link2 = link.clone();
         ctx.messenger.set_handler(Arc::new(move |env| {
             if env.topic != FLOWER_TOPIC {
@@ -153,32 +165,67 @@ impl AppFactory for FlowerBridgeApp {
             }
             crate::telemetry::bump("bridge.frames_relayed", 1);
             crate::telemetry::bump("bridge.frame_bytes", env.payload.len() as i64);
-            Ok(link2.handle_frame(&env.payload))
+            let frame = std::mem::take(&mut env.payload);
+            Ok(link2.handle_frame_shared(Bytes::from_vec(frame)))
         }));
 
-        let mut server_app = self.builder.build_server(&ctx)?;
-        let tracker = if self.builder.track() {
-            Some(&ctx.tracker)
+        // The history sink fires at each run's TRUE completion (before
+        // the shutdown drain) in both modes, so per-run timings are
+        // comparable between single-run and concurrent-run jobs.
+        let runs = ctx.config.get("concurrent_runs").as_u64().unwrap_or(1).max(1);
+        let result: anyhow::Result<Vec<(u64, History)>> = if runs == 1 {
+            self.builder.build_server(&ctx).and_then(|mut server_app| {
+                let tracker = if self.builder.track() {
+                    Some(&ctx.tracker)
+                } else {
+                    None
+                };
+                server_app.run(&link, tracker, 1).map(|h| {
+                    if let Some(sink) = &self.history_sink {
+                        sink(&ctx.job_id, &h);
+                    }
+                    vec![(1, h)]
+                })
+            })
         } else {
-            None
+            if self.builder.track() {
+                // Per-run metric streams would collide on the shared
+                // (metric, round) keys; tracking needs per-run naming.
+                log::warn!(
+                    "job {}: experiment tracking is not streamed in concurrent_runs mode",
+                    ctx.job_id
+                );
+            }
+            let apps: anyhow::Result<Vec<(u64, ServerApp)>> = (1..=runs)
+                .map(|run_id| Ok((run_id, self.builder.build_server_run(&ctx, run_id)?)))
+                .collect();
+            let sink = self.history_sink.clone();
+            let job_id = ctx.job_id.clone();
+            apps.and_then(|apps| {
+                // The sink fires from each run's OWN thread the moment
+                // that run completes — per-run makespan is observable
+                // while other runs are still going.
+                crate::flower::run::drive_runs_with(&link, apps, move |run_id, h| {
+                    if let Some(sink) = &sink {
+                        sink(&format!("{job_id}#run{run_id}"), h);
+                    }
+                })
+            })
         };
-        let result = server_app.run(&link, tracker, 1);
-        link.finish();
-        // Deterministic drain: every SuperNode acknowledges the finish
-        // flag by deregistering (DeleteNode) before the job cell tears
-        // down — no timing-based sleep. The deadline only bounds the
+        // Retire the link: SuperNodes observe it on their next pull and
+        // deterministically drain by deregistering (DeleteNode) before
+        // the job cell tears down — no timing-based sleep, on success
+        // AND failure paths alike. The deadline only bounds the
         // pathological crashed-client case.
-        if !link.wait_drained(SHUTDOWN_DRAIN_TIMEOUT) {
+        link.retire();
+        if !link.wait_all_drained(SHUTDOWN_DRAIN_TIMEOUT) {
             log::warn!(
                 "job {}: {} supernode(s) never acknowledged shutdown",
                 ctx.job_id,
                 link.nodes().len()
             );
         }
-        let history = result?;
-        if let Some(sink) = &self.history_sink {
-            sink(&ctx.job_id, &history);
-        }
+        result?;
         Ok(())
     }
 }
@@ -306,5 +353,44 @@ mod tests {
         let lossy = bridged_history(0.3, 2);
         let clean = bridged_history(0.0, 2);
         assert_eq!(lossy, clean);
+    }
+
+    /// Shared-SuperLink multi-run (§2/§3.1): one job, N concurrent
+    /// ServerApps on ONE link and ONE SuperNode fleet — each run's
+    /// history bit-identical to the single-run job's.
+    #[test]
+    fn concurrent_runs_share_one_superlink() {
+        let captured: Arc<Mutex<Vec<(String, History)>>> = Arc::new(Mutex::new(Vec::new()));
+        let c2 = captured.clone();
+        let app = FlowerBridgeApp::new(Arc::new(TestBuilder))
+            .with_policy(RetryPolicy::fast())
+            .with_history_sink(Arc::new(move |id, h| {
+                c2.lock().unwrap().push((id.to_string(), h.clone()));
+            }));
+        let fed = FederationBuilder::new("multi-run")
+            .sites(2)
+            .retry_policy(RetryPolicy::fast())
+            .build(Arc::new(app))
+            .unwrap();
+        let spec = JobSpec::new("mr", "flower_bridge").with_config(Json::obj(vec![
+            ("rounds", Json::num(2)),
+            ("concurrent_runs", Json::num(3)),
+        ]));
+        fed.scp.submit(spec).unwrap();
+        let status = fed.scp.wait("mr", Duration::from_secs(120)).unwrap();
+        assert_eq!(status, JobStatus::Finished, "err={:?}", fed.scp.job_error("mr"));
+        fed.shutdown();
+
+        let mut got = captured.lock().unwrap().clone();
+        got.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(got.len(), 3, "one history per run");
+        assert_eq!(got[0].0, "mr#run1");
+        // Identical per-run config -> every run's history equals the
+        // single-run bridged job, bit for bit.
+        let single = bridged_history(0.0, 2);
+        for (_, h) in &got {
+            assert_eq!(h, &single);
+            assert!(h.params_bits_equal(&single));
+        }
     }
 }

@@ -86,8 +86,10 @@ impl From<crate::flare::fabric::FabricError> for ReliableError {
     }
 }
 
-/// Handler for incoming requests: payload-in, payload-out.
-pub type Handler = Arc<dyn Fn(&Envelope) -> anyhow::Result<Vec<u8>> + Send + Sync>;
+/// Handler for incoming requests: payload-in, payload-out. The envelope
+/// is handed over mutably so handlers can `std::mem::take` the owned
+/// payload instead of copying it (the bridge's zero-copy LGC hop).
+pub type Handler = Arc<dyn Fn(&mut Envelope) -> anyhow::Result<Vec<u8>> + Send + Sync>;
 /// Handler for fire-and-forget events.
 pub type EventHandler = Arc<dyn Fn(&Envelope) + Send + Sync>;
 
@@ -333,7 +335,8 @@ impl Messenger {
         std::thread::Builder::new()
             .name(format!("handler-{}", self.address))
             .spawn(move || {
-                let reply = match handler(&env) {
+                let mut env = env;
+                let reply = match handler(&mut env) {
                     Ok(payload) => {
                         let mut r = env.reply_to(payload);
                         r.id = next_msg_id();
@@ -443,7 +446,7 @@ mod tests {
     }
 
     fn echo_handler() -> Handler {
-        Arc::new(|env: &Envelope| {
+        Arc::new(|env: &mut Envelope| {
             let mut out = env.payload.clone();
             out.reverse();
             Ok(out)

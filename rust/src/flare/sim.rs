@@ -213,7 +213,7 @@ mod tests {
         }
 
         fn run_client(&self, ctx: JobCtx) -> anyhow::Result<()> {
-            ctx.messenger.set_handler(Arc::new(|env: &Envelope| {
+            ctx.messenger.set_handler(Arc::new(|env: &mut Envelope| {
                 let x = env.payload[0];
                 Ok(vec![x * 2])
             }));

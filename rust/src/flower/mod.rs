@@ -20,7 +20,7 @@ pub use dp::{DpConfig, DpMod};
 pub use message::{ConfigRecord, ConfigValue, FlowerMsg, MetricRecord, TaskIns, TaskRes, TaskType};
 pub use mods::{ClientMod, ModStack};
 pub use records::{ArrayRecord, DType, RecordDict, Tensor};
-pub use run::run_native;
+pub use run::{drive_runs, run_native, run_shared, NativeFleet};
 pub use secagg::{SecAggFedAvg, SecAggMod};
 pub use serverapp::{History, RoundRecord, ServerApp, ServerConfig};
 pub use superlink::SuperLink;

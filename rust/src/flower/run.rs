@@ -1,6 +1,11 @@
 //! Native Flower execution (paper Fig. 5a): SuperLink + N SuperNodes
 //! wired directly over endpoints, no FLARE anywhere. This is the
 //! baseline the bridged run must match bit-for-bit.
+//!
+//! [`NativeFleet`] is the long-running half: one SuperLink plus its
+//! SuperNode fleet, serving any number of concurrent runs
+//! ([`run_shared`]) before being retired — the paper's §2/§3.1
+//! multi-run SuperLink in miniature.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -11,6 +16,62 @@ use crate::flower::superlink::SuperLink;
 use crate::flower::supernode::{NativeConnector, SuperNode, SuperNodeConfig};
 use crate::transport::inproc;
 
+/// A shared SuperLink + SuperNode fleet. Multiple ServerApps (with
+/// distinct run ids) can drive rounds against [`NativeFleet::link`]
+/// concurrently; [`NativeFleet::shutdown`] retires the link and joins
+/// the fleet (the deterministic `DeleteNode` drain).
+pub struct NativeFleet {
+    link: Arc<SuperLink>,
+    handles: Vec<std::thread::JoinHandle<anyhow::Result<u64>>>,
+}
+
+impl NativeFleet {
+    /// Spawn one SuperNode per client app, each over its own endpoint
+    /// pair, with node ids pinned to the client order (deterministic
+    /// client<->node binding, matching the bridged path).
+    pub fn start(client_apps: Vec<Arc<dyn ClientApp>>) -> anyhow::Result<NativeFleet> {
+        let link = SuperLink::new();
+        let mut handles = Vec::new();
+        for (i, app) in client_apps.into_iter().enumerate() {
+            let (client_end, server_end) = inproc::pair(&format!("supernode-{i}"), "superlink");
+            link.serve_endpoint(Arc::new(server_end));
+            let mut node = SuperNode::new(
+                Box::new(NativeConnector::new(
+                    Arc::new(client_end),
+                    Duration::from_secs(60),
+                )),
+                app,
+                SuperNodeConfig {
+                    requested_node_id: i as u64 + 1,
+                    ..Default::default()
+                },
+            );
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("supernode-{i}"))
+                    .spawn(move || -> anyhow::Result<u64> { node.run() })?,
+            );
+        }
+        Ok(NativeFleet { link, handles })
+    }
+
+    pub fn link(&self) -> &Arc<SuperLink> {
+        &self.link
+    }
+
+    /// Retire the link and join every SuperNode.
+    pub fn shutdown(self) {
+        self.link.retire();
+        for h in self.handles {
+            match h.join() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => log::warn!("supernode exited with error: {e}"),
+                Err(_) => log::warn!("supernode panicked"),
+            }
+        }
+    }
+}
+
 /// Run a ServerApp + ClientApps natively (direct SuperNode->SuperLink
 /// endpoints). Returns the training history.
 pub fn run_native(
@@ -18,38 +79,81 @@ pub fn run_native(
     client_apps: Vec<Arc<dyn ClientApp>>,
     run_id: u64,
 ) -> anyhow::Result<History> {
-    let link = SuperLink::new();
-    let mut handles = Vec::new();
-    for (i, app) in client_apps.into_iter().enumerate() {
-        let (client_end, server_end) = inproc::pair(&format!("supernode-{i}"), "superlink");
-        link.serve_endpoint(Arc::new(server_end));
-        let mut node = SuperNode::new(
-            Box::new(NativeConnector::new(
-                Arc::new(client_end),
-                Duration::from_secs(60),
-            )),
-            app,
-            SuperNodeConfig {
-                // Pin node ids to the client order so the client<->node
-                // binding is deterministic (matches the bridged path).
-                requested_node_id: i as u64 + 1,
-                ..Default::default()
-            },
-        );
-        handles.push(std::thread::Builder::new().name(format!("supernode-{i}")).spawn(
-            move || -> anyhow::Result<u64> { node.run() },
-        )?);
-    }
+    let fleet = NativeFleet::start(client_apps)?;
+    let result = server_app.run(fleet.link(), None, run_id);
+    fleet.shutdown();
+    result
+}
 
-    let result = server_app.run(&link, None, run_id);
-    link.finish();
-    for h in handles {
-        match h.join() {
-            Ok(Ok(_)) => {}
-            Ok(Err(e)) => log::warn!("supernode exited with error: {e}"),
-            Err(_) => log::warn!("supernode panicked"),
+/// Drive several ServerApps CONCURRENTLY against one existing link, one
+/// thread per run. Returns each run's history, sorted by run id; the
+/// first error (in join order) wins. The link is NOT retired — the
+/// caller owns its lifecycle.
+pub fn drive_runs(
+    link: &Arc<SuperLink>,
+    server_apps: Vec<(u64, ServerApp)>,
+) -> anyhow::Result<Vec<(u64, History)>> {
+    drive_runs_with(link, server_apps, |_: u64, _: &History| {})
+}
+
+/// [`drive_runs`] with a per-run completion callback, invoked from the
+/// run's own thread the moment its history is ready — BEFORE the other
+/// runs finish. This is what gives per-run makespan its meaning: the
+/// callback observes each run's true completion, not the barrier at the
+/// end.
+pub fn drive_runs_with(
+    link: &Arc<SuperLink>,
+    server_apps: Vec<(u64, ServerApp)>,
+    on_done: impl Fn(u64, &History) + Send + Sync,
+) -> anyhow::Result<Vec<(u64, History)>> {
+    let on_done = &on_done;
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for (run_id, mut app) in server_apps {
+            let link = link.clone();
+            joins.push(s.spawn(move || -> anyhow::Result<(u64, History)> {
+                let history = app.run(&link, None, run_id)?;
+                on_done(run_id, &history);
+                Ok((run_id, history))
+            }));
         }
-    }
+        let mut out = Vec::new();
+        let mut err = None;
+        for j in joins {
+            match j.join() {
+                Ok(Ok(pair)) => out.push(pair),
+                Ok(Err(e)) => {
+                    if err.is_none() {
+                        err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if err.is_none() {
+                        err = Some(anyhow::anyhow!("server run panicked"));
+                    }
+                }
+            }
+        }
+        match err {
+            Some(e) => Err(e),
+            None => {
+                out.sort_by_key(|(run_id, _)| *run_id);
+                Ok(out)
+            }
+        }
+    })
+}
+
+/// Run several ServerApps concurrently against ONE shared SuperLink and
+/// SuperNode fleet (the multi-run SuperLink). Returns each run's
+/// history keyed by run id.
+pub fn run_shared(
+    server_apps: Vec<(u64, ServerApp)>,
+    client_apps: Vec<Arc<dyn ClientApp>>,
+) -> anyhow::Result<Vec<(u64, History)>> {
+    let fleet = NativeFleet::start(client_apps)?;
+    let result = drive_runs(fleet.link(), server_apps);
+    fleet.shutdown();
     result
 }
 
@@ -164,6 +268,62 @@ mod tests {
         let history = run_native(&mut app, apps(&[(1.0, 1), (2.0, 1), (50.0, 1)]), 1).unwrap();
         // Median of per-round cumulative deltas stays with the honest pair.
         assert!(history.parameters.to_flat()[0] <= 4.0 + 1e-6);
+    }
+
+    #[test]
+    fn shared_fleet_runs_match_solo_runs() {
+        let mk_app = |rounds: u64, seed: u64| {
+            ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: rounds,
+                    min_nodes: 2,
+                    seed,
+                    ..Default::default()
+                },
+                ArrayRecord::from_flat(&[0.0; 4]),
+            )
+        };
+        let deltas: &[(f32, u64)] = &[(1.0, 10), (3.0, 30)];
+        // Two concurrent runs multiplex ONE link + ONE fleet.
+        let histories =
+            run_shared(vec![(1, mk_app(3, 17)), (2, mk_app(2, 99))], apps(deltas)).unwrap();
+        assert_eq!(histories.len(), 2);
+        // Each equals its solo-run history, bit for bit.
+        let solo1 = run_native(&mut mk_app(3, 17), apps(deltas), 1).unwrap();
+        let solo2 = run_native(&mut mk_app(2, 99), apps(deltas), 2).unwrap();
+        assert_eq!(histories[0].1, solo1);
+        assert_eq!(histories[1].1, solo2);
+        assert!(histories[0].1.params_bits_equal(&solo1));
+        assert!(histories[1].1.params_bits_equal(&solo2));
+    }
+
+    #[test]
+    fn finishing_one_run_keeps_fleet_serving_the_next() {
+        let fleet = NativeFleet::start(apps(&[(1.0, 10), (3.0, 30)])).unwrap();
+        let mk_app = |seed: u64| {
+            ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 1,
+                    min_nodes: 2,
+                    seed,
+                    ..Default::default()
+                },
+                ArrayRecord::from_flat(&[0.0; 2]),
+            )
+        };
+        // Run 1 completes and drains — without taking the fleet down.
+        mk_app(5).run(fleet.link(), None, 1).unwrap();
+        assert!(fleet.link().wait_drained(1, Duration::from_secs(5)));
+        assert_eq!(fleet.link().nodes().len(), 2, "nodes must survive run 1");
+        // Run 2 still gets full service from the same fleet.
+        let h = mk_app(6).run(fleet.link(), None, 2).unwrap();
+        assert_eq!(h.rounds.len(), 1);
+        // Reusing a finished run id fails fast with a clear error.
+        let err = mk_app(7).run(fleet.link(), None, 1).unwrap_err();
+        assert!(err.to_string().contains("unique per link"), "{err}");
+        fleet.shutdown();
     }
 
     #[test]

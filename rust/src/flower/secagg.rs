@@ -31,7 +31,7 @@ use crate::flower::clientapp::FitOutput;
 use crate::flower::message::{config_get_i64, config_get_str, ConfigRecord};
 use crate::flower::mods::{ClientMod, FitNext};
 use crate::flower::records::{ArrayRecord, DType, Tensor};
-use crate::flower::strategy::{check_same_structure, FitRes, Strategy};
+use crate::flower::strategy::{FitAgg, FitRes, Strategy};
 use crate::util::rng::SplitMix64;
 
 /// Fixed-point scale: 24 fractional bits.
@@ -167,39 +167,94 @@ impl Strategy for SecAggFedAvg {
         ]
     }
 
-    fn aggregate_fit(
-        &mut self,
-        _round: u64,
-        _current: &ArrayRecord,
-        results: &[FitRes],
-    ) -> anyhow::Result<ArrayRecord> {
-        let structure = check_same_structure(results)?;
-        let total_w: f64 = results.iter().map(|r| r.num_examples as f64).sum();
-        anyhow::ensure!(total_w > 0.0, "secagg: zero total weight");
-        let mut tensors = Vec::with_capacity(structure.len());
-        for (ti, t) in structure.tensors().iter().enumerate() {
+    fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
+        Box::new(SecAggAgg {
+            sums: None,
+            total_examples: 0,
+            count: 0,
+        })
+    }
+}
+
+/// Truly-streaming secure-aggregation accumulator. Wrapping fixed-point
+/// addition is exact and commutative, so each masked update folds into a
+/// single running lane-sum set on arrival — O(1) peak memory in the
+/// cohort size, and bit-identical in ANY arrival order (no buffering, no
+/// sort). The exact u128 weight total keeps the divisor order-independent
+/// too.
+struct SecAggAgg {
+    /// Per-tensor (name, shape, running lane sums), established by the
+    /// first result.
+    sums: Option<Vec<(String, Vec<usize>, Vec<u64>)>>,
+    /// Exact total weight (wrapping-free; converted to f64 once).
+    total_examples: u128,
+    count: usize,
+}
+
+impl FitAgg for SecAggAgg {
+    fn accumulate(&mut self, res: FitRes) -> anyhow::Result<()> {
+        for t in res.parameters.tensors() {
             anyhow::ensure!(
                 t.dtype() == DType::I64,
                 "secagg: tensor '{}' is {}, expected masked i64 lanes",
                 t.name(),
                 t.dtype().name()
             );
-            let n = t.elems();
-            let mut sum: Vec<u64> = (0..n).map(|i| t.get_bits_u64(i)).collect();
-            for r in &results[1..] {
-                let rt = &r.parameters.tensors()[ti];
-                for (s, i) in sum.iter_mut().zip(0..n) {
-                    *s = s.wrapping_add(rt.get_bits_u64(i));
+        }
+        match &mut self.sums {
+            None => {
+                let mut sums = Vec::with_capacity(res.parameters.len());
+                for t in res.parameters.tensors() {
+                    let lanes: Vec<u64> = (0..t.elems()).map(|i| t.get_bits_u64(i)).collect();
+                    sums.push((t.name().to_string(), t.shape().to_vec(), lanes));
+                }
+                self.sums = Some(sums);
+            }
+            Some(sums) => {
+                anyhow::ensure!(
+                    res.parameters.len() == sums.len(),
+                    "secagg: record structure mismatch from node {}",
+                    res.node_id
+                );
+                for ((name, shape, lanes), t) in sums.iter_mut().zip(res.parameters.tensors()) {
+                    anyhow::ensure!(
+                        t.name() == name.as_str() && t.shape() == &shape[..],
+                        "secagg: tensor mismatch from node {} ('{}' vs '{}')",
+                        res.node_id,
+                        t.name(),
+                        name
+                    );
+                    for (lane, i) in lanes.iter_mut().zip(0..t.elems()) {
+                        *lane = lane.wrapping_add(t.get_bits_u64(i));
+                    }
                 }
             }
-            let vals: Vec<f32> = sum.iter().map(|s| dequantize_sum(*s, total_w)).collect();
+        }
+        self.total_examples += res.num_examples as u128;
+        self.count += 1;
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn finalize(self: Box<Self>) -> anyhow::Result<ArrayRecord> {
+        let sums = self
+            .sums
+            .ok_or_else(|| anyhow::anyhow!("secagg: no fit results to aggregate"))?;
+        let total_w = self.total_examples as f64;
+        anyhow::ensure!(total_w > 0.0, "secagg: zero total weight");
+        let mut tensors = Vec::with_capacity(sums.len());
+        for (name, shape, lanes) in sums {
+            let vals: Vec<f32> = lanes.iter().map(|s| dequantize_sum(*s, total_w)).collect();
             // Residual-mask detection: if any client was missing, masks
             // don't cancel and values are uniform over the u64 range ->
             // astronomically large after dequantization.
             if vals.iter().any(|v| !v.is_finite() || v.abs() > 1e9) {
                 anyhow::bail!("secagg: mask residue detected (cohort incomplete?)");
             }
-            tensors.push(Tensor::from_f32(t.name(), t.shape().to_vec(), &vals));
+            tensors.push(Tensor::from_f32(name, shape, &vals));
         }
         crate::telemetry::bump("secagg.unmasked_aggregations", 1);
         Ok(ArrayRecord::from_tensors(tensors)?)

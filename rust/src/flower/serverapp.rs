@@ -3,11 +3,20 @@
 //! accuracy curves compared in Fig. 5 — and optionally streams round
 //! metrics through FLARE experiment tracking (§5.2 hybrid mode).
 //!
+//! Fit results are **streamed**: each `TaskRes` is handed to the
+//! strategy's incremental accumulator as it arrives
+//! ([`SuperLink::for_each_result`]), so aggregation work overlaps
+//! stragglers and the driver never buffers the whole cohort itself.
+//! Each ServerApp drives ONE run (its `run_id`) and may share the
+//! SuperLink — and its SuperNode fleet — with any number of concurrent
+//! ServerApps; finishing this run leaves the others untouched.
+//!
 //! Determinism: client sampling uses a seeded PRNG keyed by (seed,
-//! round); task results are sorted by node id before aggregation; every
-//! float reduction has a fixed order. Two runs with the same seed —
-//! regardless of transport (native or bridged) — produce bit-identical
-//! histories, which is exactly the paper's reproducibility experiment.
+//! round); accumulators canonicalize by node id before any
+//! order-sensitive float reduction. Two runs with the same seed —
+//! regardless of transport (native or bridged) or result arrival order —
+//! produce bit-identical histories, which is exactly the paper's
+//! reproducibility experiment.
 //!
 //! Parameters are [`ArrayRecord`]s end to end: pushing a round's model
 //! to N clients clones the record N times, which is N cheap reference
@@ -165,7 +174,31 @@ impl ServerApp {
 
     /// Run all rounds against the SuperLink. `tracker` streams round
     /// metrics via FLARE experiment tracking when present (§5.2).
+    ///
+    /// Opens run `run_id` on the link and finishes it on every exit
+    /// path — the link (and its node fleet) outlives the run and keeps
+    /// serving other ServerApps. Run ids must be unique per link.
     pub fn run(
+        &mut self,
+        link: &Arc<SuperLink>,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+    ) -> anyhow::Result<History> {
+        link.register_run(run_id);
+        // Fail fast on id reuse: a finished run's id stays finished, so
+        // proceeding would only time out waiting for refused tasks.
+        anyhow::ensure!(
+            link.run_active(run_id),
+            "run id {run_id} already finished on this link — run ids must be unique per link"
+        );
+        let result = self.run_rounds(link, tracker, run_id);
+        // Scope the shutdown to THIS run: concurrent runs sharing the
+        // link are untouched.
+        link.finish(run_id);
+        result
+    }
+
+    fn run_rounds(
         &mut self,
         link: &Arc<SuperLink>,
         tracker: Option<&SummaryWriter>,
@@ -215,39 +248,46 @@ impl ServerApp {
                     )
                 })
                 .collect();
-            let mut results = link.await_results(&task_ids, cfg.round_timeout)?;
-            results.sort_by_key(|r| r.node_id);
-            let mut fit_results = Vec::with_capacity(results.len());
-            for r in results {
+            // Stream results into the strategy's accumulator AS THEY
+            // ARRIVE: aggregation overlaps stragglers, and the link's
+            // result map drains incrementally instead of buffering the
+            // cohort twice.
+            let mut agg = self.strategy.begin_fit(round, &params);
+            let mut fit_meta: Vec<(u64, u64, MetricRecord)> = Vec::with_capacity(task_ids.len());
+            let accept_failures = cfg.accept_failures;
+            link.for_each_result(run_id, &task_ids, cfg.round_timeout, |r| {
                 if !r.error.is_empty() {
-                    if cfg.accept_failures {
+                    if accept_failures {
                         log::warn!("round {round}: node {} failed: {}", r.node_id, r.error);
-                        continue;
+                        return Ok(());
                     }
                     anyhow::bail!("round {round}: node {} failed: {}", r.node_id, r.error);
                 }
-                fit_results.push(FitRes {
+                fit_meta.push((r.node_id, r.num_examples, r.metrics.clone()));
+                agg.accumulate(FitRes {
                     node_id: r.node_id,
                     parameters: r.parameters,
                     num_examples: r.num_examples,
                     metrics: r.metrics,
-                });
-            }
+                })
+            })?;
             anyhow::ensure!(
-                !fit_results.is_empty(),
+                agg.count() > 0,
                 "round {round}: no successful fit results"
             );
-            params = self.strategy.aggregate_fit(round, &params, &fit_results)?;
+            params = agg.finalize()?;
 
-            // Weighted fit metrics.
+            // Weighted fit metrics, in canonical (node-sorted) order —
+            // identical to the batch path regardless of arrival order.
+            fit_meta.sort_by_key(|(node_id, _, _)| *node_id);
             let fit_metrics = super::strategy::weighted_eval(
-                &fit_results
+                &fit_meta
                     .iter()
-                    .map(|f| EvalRes {
-                        node_id: f.node_id,
+                    .map(|(node_id, num_examples, metrics)| EvalRes {
+                        node_id: *node_id,
                         loss: 0.0,
-                        num_examples: f.num_examples,
-                        metrics: f.metrics.clone(),
+                        num_examples: *num_examples,
+                        metrics: metrics.clone(),
                     })
                     .collect::<Vec<_>>(),
             )
@@ -273,7 +313,7 @@ impl ServerApp {
                         )
                     })
                     .collect();
-                let mut results = link.await_results(&task_ids, cfg.round_timeout)?;
+                let mut results = link.await_results(run_id, &task_ids, cfg.round_timeout)?;
                 results.sort_by_key(|r| r.node_id);
                 let mut eval_results = Vec::new();
                 let mut per_client = Vec::new();

@@ -3,7 +3,7 @@
 
 use std::collections::HashMap;
 
-use super::{Aggregator, FitRes, Strategy};
+use super::{Aggregator, FitAgg, FitRes, SortedBuffer, Strategy};
 use crate::flower::records::{ArrayRecord, Tensor};
 
 /// Plain federated averaging: example-weighted mean of client updates.
@@ -22,13 +22,11 @@ impl Strategy for FedAvg {
         "fedavg"
     }
 
-    fn aggregate_fit(
-        &mut self,
-        _round: u64,
-        _current: &ArrayRecord,
-        results: &[FitRes],
-    ) -> anyhow::Result<ArrayRecord> {
-        self.agg.weighted_mean(results)
+    fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
+        let agg = self.agg.clone();
+        Box::new(SortedBuffer::new(move |results: &[FitRes]| {
+            agg.weighted_mean(results)
+        }))
     }
 }
 
@@ -52,19 +50,8 @@ impl FedAvgM {
             velocity: HashMap::new(),
         }
     }
-}
 
-impl Strategy for FedAvgM {
-    fn name(&self) -> &'static str {
-        "fedavgm"
-    }
-
-    fn aggregate_fit(
-        &mut self,
-        _round: u64,
-        current: &ArrayRecord,
-        results: &[FitRes],
-    ) -> anyhow::Result<ArrayRecord> {
+    fn step(&mut self, current: &ArrayRecord, results: &[FitRes]) -> anyhow::Result<ArrayRecord> {
         let mean = self.agg.weighted_mean(results)?;
         anyhow::ensure!(
             mean.dims_match(current),
@@ -95,6 +82,19 @@ impl Strategy for FedAvgM {
     }
 }
 
+impl Strategy for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    fn begin_fit(&mut self, _round: u64, current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
+        let current = current.clone();
+        Box::new(SortedBuffer::new(move |results: &[FitRes]| {
+            self.step(&current, results)
+        }))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::fit;
@@ -110,6 +110,18 @@ mod tests {
                 &[fit(1, vec![0.0, 2.0], 1), fit(2, vec![4.0, 6.0], 3)],
             )
             .unwrap();
+        assert_eq!(out.to_flat(), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn fedavg_streams_incrementally() {
+        let mut s = FedAvg::new(Aggregator::host());
+        let mut agg = s.begin_fit(1, &ArrayRecord::from_flat(&[0.0, 0.0]));
+        // Reverse arrival order: finalize canonicalizes by node id.
+        agg.accumulate(fit(2, vec![4.0, 6.0], 3)).unwrap();
+        agg.accumulate(fit(1, vec![0.0, 2.0], 1)).unwrap();
+        assert_eq!(agg.count(), 2);
+        let out = agg.finalize().unwrap();
         assert_eq!(out.to_flat(), vec![3.0, 5.0]);
     }
 

@@ -6,7 +6,7 @@
 
 use std::collections::HashMap;
 
-use super::{Aggregator, FitRes, Strategy};
+use super::{Aggregator, FitAgg, FitRes, SortedBuffer, Strategy};
 use crate::flower::records::{ArrayRecord, Tensor};
 
 #[derive(Clone, Copy, Debug)]
@@ -125,13 +125,11 @@ macro_rules! fedopt_strategy {
                 $label
             }
 
-            fn aggregate_fit(
-                &mut self,
-                _round: u64,
-                current: &ArrayRecord,
-                results: &[FitRes],
-            ) -> anyhow::Result<ArrayRecord> {
-                self.0.step(current, results)
+            fn begin_fit(&mut self, _round: u64, current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
+                let current = current.clone();
+                Box::new(SortedBuffer::new(move |results: &[FitRes]| {
+                    self.0.step(&current, results)
+                }))
             }
         }
     };

@@ -4,7 +4,7 @@
 //! `train::trainer`, which composes the correction exactly around the
 //! AOT SGD step).
 
-use super::{Aggregator, FitRes, Strategy};
+use super::{Aggregator, FitAgg, FitRes, SortedBuffer, Strategy};
 use crate::flower::message::{ConfigRecord, ConfigValue};
 use crate::flower::records::ArrayRecord;
 
@@ -28,13 +28,11 @@ impl Strategy for FedProx {
         vec![("proximal_mu".to_string(), ConfigValue::F64(self.mu))]
     }
 
-    fn aggregate_fit(
-        &mut self,
-        _round: u64,
-        _current: &ArrayRecord,
-        results: &[FitRes],
-    ) -> anyhow::Result<ArrayRecord> {
-        self.agg.weighted_mean(results)
+    fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
+        let agg = self.agg.clone();
+        Box::new(SortedBuffer::new(move |results: &[FitRes]| {
+            agg.weighted_mean(results)
+        }))
     }
 }
 

@@ -4,6 +4,16 @@
 //! floating-point reduction, and every reduction iterates tensors in
 //! record order — which is what makes the Fig. 5 native-vs-bridged
 //! curves bit-identical.
+//!
+//! Aggregation is **incremental**: [`Strategy::begin_fit`] opens a
+//! round's accumulator, results are [`FitAgg::accumulate`]d as they
+//! arrive from the SuperLink (overlapping stragglers), and
+//! [`FitAgg::finalize`] produces the next global record. The contract is
+//! arrival-order independence: finalizing after any arrival order is
+//! bit-identical to the batch reduction over the node-id-sorted set.
+//! [`SortedBuffer`] gets this by canonicalizing before reducing;
+//! accumulators whose arithmetic is exact and commutative (secure
+//! aggregation's wrapping fixed-point sums) stream in O(1) memory.
 
 mod fedavg;
 mod fedopt;
@@ -37,6 +47,66 @@ pub struct EvalRes {
     pub metrics: MetricRecord,
 }
 
+/// One round's incremental fit aggregation, created by
+/// [`Strategy::begin_fit`]. Accumulators absorb results in arrival
+/// order; `finalize` must be bit-identical to the batch reduction over
+/// the node-id-sorted result set regardless of that order (the Fig. 5
+/// reproducibility invariant).
+pub trait FitAgg {
+    /// Absorb one successful fit result.
+    fn accumulate(&mut self, res: FitRes) -> anyhow::Result<()>;
+
+    /// Results absorbed so far.
+    fn count(&self) -> usize;
+
+    /// Reduce to the next global parameter record.
+    fn finalize(self: Box<Self>) -> anyhow::Result<ArrayRecord>;
+}
+
+/// Canonicalizing accumulator: buffers results (cheap — each is a
+/// zero-copy view of its arrival frame), sorts by node id at finalize,
+/// then applies a batch reduction. The default shape for strategies
+/// whose floating-point reduction is order-sensitive; reductions that
+/// are exact and commutative should stream instead (see
+/// `secagg::SecAggFedAvg`).
+pub struct SortedBuffer<F> {
+    buf: Vec<FitRes>,
+    reduce: F,
+}
+
+impl<F> SortedBuffer<F>
+where
+    F: FnOnce(&[FitRes]) -> anyhow::Result<ArrayRecord>,
+{
+    pub fn new(reduce: F) -> Self {
+        Self {
+            buf: Vec::new(),
+            reduce,
+        }
+    }
+}
+
+impl<F> FitAgg for SortedBuffer<F>
+where
+    F: FnOnce(&[FitRes]) -> anyhow::Result<ArrayRecord>,
+{
+    fn accumulate(&mut self, res: FitRes) -> anyhow::Result<()> {
+        self.buf.push(res);
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn finalize(self: Box<Self>) -> anyhow::Result<ArrayRecord> {
+        let mut this = *self;
+        // Canonical reduction order, independent of arrival order.
+        this.buf.sort_by_key(|r| r.node_id);
+        (this.reduce)(&this.buf)
+    }
+}
+
 pub trait Strategy: Send {
     fn name(&self) -> &'static str;
 
@@ -49,14 +119,25 @@ pub trait Strategy: Send {
         Vec::new()
     }
 
-    /// Combine client updates into the next global parameter record.
-    /// `current` is the record the round started from.
+    /// Begin incremental aggregation for `round`. `current` is the
+    /// record the round started from.
+    fn begin_fit(&mut self, round: u64, current: &ArrayRecord) -> Box<dyn FitAgg + '_>;
+
+    /// Batch convenience: stream `results` (any order) through a fresh
+    /// accumulator. Bit-identical to driving [`Strategy::begin_fit`] by
+    /// hand — for tests and call sites that already hold the full set.
     fn aggregate_fit(
         &mut self,
         round: u64,
         current: &ArrayRecord,
         results: &[FitRes],
-    ) -> anyhow::Result<ArrayRecord>;
+    ) -> anyhow::Result<ArrayRecord> {
+        let mut agg = self.begin_fit(round, current);
+        for r in results {
+            agg.accumulate(r.clone())?;
+        }
+        agg.finalize()
+    }
 
     /// Weighted-average loss/metrics (Flower's default behaviour).
     fn aggregate_evaluate(&mut self, _round: u64, results: &[EvalRes]) -> (f64, MetricRecord) {

@@ -4,7 +4,7 @@
 //! integration (paper §6 "direct utilization of FL algorithms ... from
 //! Flower"). All three reduce per tensor over the record structure.
 
-use super::{check_same_structure, FitRes, Strategy};
+use super::{check_same_structure, FitAgg, FitRes, SortedBuffer, Strategy};
 use crate::flower::records::{ArrayRecord, Tensor};
 
 /// Coordinate-wise, per-tensor reduction helper: for every tensor in
@@ -45,21 +45,18 @@ impl Strategy for FedMedian {
         "fedmedian"
     }
 
-    fn aggregate_fit(
-        &mut self,
-        _round: u64,
-        _current: &ArrayRecord,
-        results: &[FitRes],
-    ) -> anyhow::Result<ArrayRecord> {
-        check_same_structure(results)?;
-        Ok(per_tensor_coordinate_reduce(results, |col| {
-            col.sort_by(f64::total_cmp);
-            let k = col.len();
-            if k % 2 == 1 {
-                col[k / 2]
-            } else {
-                (col[k / 2 - 1] + col[k / 2]) / 2.0
-            }
+    fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
+        Box::new(SortedBuffer::new(|results: &[FitRes]| {
+            check_same_structure(results)?;
+            Ok(per_tensor_coordinate_reduce(results, |col| {
+                col.sort_by(f64::total_cmp);
+                let k = col.len();
+                if k % 2 == 1 {
+                    col[k / 2]
+                } else {
+                    (col[k / 2 - 1] + col[k / 2]) / 2.0
+                }
+            }))
         }))
     }
 }
@@ -75,24 +72,21 @@ impl Strategy for TrimmedMean {
         "trimmed_mean"
     }
 
-    fn aggregate_fit(
-        &mut self,
-        _round: u64,
-        _current: &ArrayRecord,
-        results: &[FitRes],
-    ) -> anyhow::Result<ArrayRecord> {
-        anyhow::ensure!(
-            results.len() > 2 * self.trim,
-            "need more than {} clients to trim {} each side",
-            2 * self.trim,
-            self.trim
-        );
-        check_same_structure(results)?;
+    fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
         let trim = self.trim;
-        Ok(per_tensor_coordinate_reduce(results, |col| {
-            col.sort_by(f64::total_cmp);
-            let kept = &col[trim..col.len() - trim];
-            kept.iter().sum::<f64>() / kept.len() as f64
+        Box::new(SortedBuffer::new(move |results: &[FitRes]| {
+            anyhow::ensure!(
+                results.len() > 2 * trim,
+                "need more than {} clients to trim {} each side",
+                2 * trim,
+                trim
+            );
+            check_same_structure(results)?;
+            Ok(per_tensor_coordinate_reduce(results, |col| {
+                col.sort_by(f64::total_cmp);
+                let kept = &col[trim..col.len() - trim];
+                kept.iter().sum::<f64>() / kept.len() as f64
+            }))
         }))
     }
 }
@@ -111,50 +105,49 @@ impl Strategy for Krum {
         "krum"
     }
 
-    fn aggregate_fit(
-        &mut self,
-        _round: u64,
-        _current: &ArrayRecord,
-        results: &[FitRes],
-    ) -> anyhow::Result<ArrayRecord> {
-        let n = results.len();
-        anyhow::ensure!(
-            n > 2 * self.f + 2,
-            "krum needs n > 2f+2 (n={n}, f={})",
-            self.f
-        );
-        let structure = check_same_structure(results)?;
-        let n_tensors = structure.len();
-        // Pairwise squared distances across all tensors.
-        let mut d2 = vec![vec![0f64; n]; n];
-        for i in 0..n {
-            for j in (i + 1)..n {
-                let mut dist = 0f64;
-                for ti in 0..n_tensors {
-                    let a = &results[i].parameters.tensors()[ti];
-                    let b = &results[j].parameters.tensors()[ti];
-                    for e in 0..a.elems() {
-                        let d = a.get_f64(e) - b.get_f64(e);
-                        dist += d * d;
-                    }
-                }
-                d2[i][j] = dist;
-                d2[j][i] = dist;
-            }
-        }
-        // Score = sum of the n-f-2 smallest distances to others.
-        let keep = n - self.f - 2;
-        let mut best = (f64::INFINITY, 0usize);
-        for i in 0..n {
-            let mut ds: Vec<f64> = (0..n).filter(|&j| j != i).map(|j| d2[i][j]).collect();
-            ds.sort_by(f64::total_cmp);
-            let score: f64 = ds.iter().take(keep).sum();
-            if score < best.0 {
-                best = (score, i);
-            }
-        }
-        Ok(results[best.1].parameters.clone())
+    fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
+        let f = self.f;
+        Box::new(SortedBuffer::new(move |results: &[FitRes]| {
+            krum_select(f, results)
+        }))
     }
+}
+
+/// The Krum reduction over node-id-sorted results.
+fn krum_select(f: usize, results: &[FitRes]) -> anyhow::Result<ArrayRecord> {
+    let n = results.len();
+    anyhow::ensure!(n > 2 * f + 2, "krum needs n > 2f+2 (n={n}, f={f})");
+    let structure = check_same_structure(results)?;
+    let n_tensors = structure.len();
+    // Pairwise squared distances across all tensors.
+    let mut d2 = vec![vec![0f64; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut dist = 0f64;
+            for ti in 0..n_tensors {
+                let a = &results[i].parameters.tensors()[ti];
+                let b = &results[j].parameters.tensors()[ti];
+                for e in 0..a.elems() {
+                    let d = a.get_f64(e) - b.get_f64(e);
+                    dist += d * d;
+                }
+            }
+            d2[i][j] = dist;
+            d2[j][i] = dist;
+        }
+    }
+    // Score = sum of the n-f-2 smallest distances to others.
+    let keep = n - f - 2;
+    let mut best = (f64::INFINITY, 0usize);
+    for i in 0..n {
+        let mut ds: Vec<f64> = (0..n).filter(|&j| j != i).map(|j| d2[i][j]).collect();
+        ds.sort_by(f64::total_cmp);
+        let score: f64 = ds.iter().take(keep).sum();
+        if score < best.0 {
+            best = (score, i);
+        }
+    }
+    Ok(results[best.1].parameters.clone())
 }
 
 #[cfg(test)]

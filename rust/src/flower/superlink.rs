@@ -4,6 +4,15 @@
 //! [`crate::flower::serverapp::ServerApp`] drives rounds against this
 //! state (Flower's Driver API, in-process).
 //!
+//! **Multi-run:** all coordination state is scoped per `run_id` (the id
+//! already carried by every `TaskIns`/`TaskRes` wire message). One link
+//! and one SuperNode fleet serve any number of concurrent ServerApps —
+//! the paper's §2/§3.1 picture of many FL experiments multiplexing one
+//! federation. The node pool is shared; pending queues, results, and
+//! drain accounting are per run, so [`SuperLink::finish`]ing one run
+//! never disturbs another. The link itself only stops serving when
+//! [`SuperLink::retire`] is called.
+//!
 //! Transport-facing surface is a single pure function
 //! [`SuperLink::handle_frame_shared`]: bytes in, bytes out — which is
 //! exactly what the FLARE LGC feeds it in bridged mode (§4.2) and what
@@ -11,7 +20,7 @@
 //! decode zero-copy: queued task results keep borrowing the received
 //! frame buffers until the ServerApp consumes them.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -20,23 +29,50 @@ use crate::flower::message::{FlowerMsg, TaskIns, TaskRes};
 use crate::transport::Endpoint;
 use crate::util::bytes::Bytes;
 
-#[derive(Default)]
-struct LinkState {
-    nodes: Mutex<Vec<u64>>,
-    /// node_id -> queued instructions.
-    pending: Mutex<HashMap<u64, VecDeque<TaskIns>>>,
-    /// task_id -> result.
-    results: Mutex<HashMap<u64, TaskRes>>,
+/// Coordination state for ONE run. Created on first use (register or
+/// first task push) and marked inactive by [`SuperLink::finish`], which
+/// also reclaims queued tasks and unconsumed results — a finished run
+/// leaves only a tiny tombstone (the ack set), so a long-running link
+/// serving many runs does not accumulate model payloads. The tombstone
+/// is what keeps finished run ids finished: stale pushes are refused
+/// and straggler results dropped.
+struct RunState {
+    /// node_id -> queued instructions for this run.
+    pending: HashMap<u64, VecDeque<TaskIns>>,
+    /// task_id -> result (drained incrementally by the ServerApp).
+    results: HashMap<u64, TaskRes>,
+    /// Still accepting/serving tasks?
+    active: bool,
+    /// Nodes that observed this run's finish: they pulled after the run
+    /// went inactive (their queue is empty by then — `finish` clears
+    /// undelivered tasks), so no frame of this run is in flight to them.
+    acked: HashSet<u64>,
+}
+
+impl RunState {
+    fn new() -> RunState {
+        RunState {
+            pending: HashMap::new(),
+            results: HashMap::new(),
+            active: true,
+            acked: HashSet::new(),
+        }
+    }
 }
 
 pub struct SuperLink {
     next_node: AtomicU64,
     next_task: AtomicU64,
-    state: LinkState,
-    /// Any run still active? (SuperNodes exit when false.)
-    active: AtomicBool,
-    /// Signaled when new results arrive (ServerApp waits on this) and
-    /// when nodes deregister (drain waits on this).
+    /// Shared node pool — every run samples from the same fleet.
+    nodes: Mutex<Vec<u64>>,
+    /// run_id -> run-scoped coordination state.
+    runs: Mutex<HashMap<u64, RunState>>,
+    /// Link-level shutdown: set by [`SuperLink::retire`]; SuperNodes
+    /// exit (and deregister) when they see it on their next pull.
+    retired: AtomicBool,
+    /// Signaled on node registration/deregistration, new results, and
+    /// run finish — every waiter (`wait_for_nodes`, `for_each_result`,
+    /// `wait_drained`, `wait_all_drained`) blocks on this condvar.
     notify: (Mutex<u64>, Condvar),
 }
 
@@ -45,8 +81,9 @@ impl SuperLink {
         Arc::new(SuperLink {
             next_node: AtomicU64::new(1),
             next_task: AtomicU64::new(1),
-            state: LinkState::default(),
-            active: AtomicBool::new(true),
+            nodes: Mutex::new(Vec::new()),
+            runs: Mutex::new(HashMap::new()),
+            retired: AtomicBool::new(false),
             notify: (Mutex::new(0), Condvar::new()),
         })
     }
@@ -55,6 +92,20 @@ impl SuperLink {
         let (lock, cv) = &self.notify;
         *lock.lock().unwrap() += 1;
         cv.notify_all();
+    }
+
+    /// Block on the notify condvar until roughly `deadline` (capped
+    /// waits keep us robust against missed wakeups).
+    fn wait_notified(&self, deadline: Instant) {
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        let (lock, cv) = &self.notify;
+        let guard = lock.lock().unwrap();
+        let _ = cv
+            .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
+            .unwrap();
     }
 
     // ------------------------------------------------------------------
@@ -83,7 +134,7 @@ impl SuperLink {
         };
         let reply = match msg {
             FlowerMsg::CreateNode { requested } => {
-                let mut nodes = self.state.nodes.lock().unwrap();
+                let mut nodes = self.nodes.lock().unwrap();
                 let id = if requested != 0 && !nodes.contains(&requested) {
                     // Keep the auto counter ahead of pinned ids.
                     self.next_node.fetch_max(requested + 1, Ordering::Relaxed);
@@ -98,31 +149,73 @@ impl SuperLink {
                 };
                 nodes.push(id);
                 drop(nodes);
-                self.state.pending.lock().unwrap().insert(id, VecDeque::new());
                 log::info!("superlink: node {id} created");
+                // Wake `wait_for_nodes` waiters.
+                self.notify_all();
                 FlowerMsg::NodeCreated { node_id: id }
             }
             FlowerMsg::PullTaskIns { node_id } => {
-                let mut pending = self.state.pending.lock().unwrap();
-                let tasks = match pending.get_mut(&node_id) {
-                    Some(q) => q.drain(..).collect(),
-                    None => Vec::new(),
-                };
+                let known = self.nodes.lock().unwrap().contains(&node_id);
+                let mut tasks = Vec::new();
+                let mut acked = false;
+                {
+                    let mut runs = self.runs.lock().unwrap();
+                    // Deterministic delivery order across runs.
+                    let mut run_ids: Vec<u64> = runs.keys().copied().collect();
+                    run_ids.sort_unstable();
+                    for rid in run_ids {
+                        let run = runs.get_mut(&rid).unwrap();
+                        if let Some(q) = run.pending.get_mut(&node_id) {
+                            tasks.extend(q.drain(..));
+                        }
+                        // Pulling after a run finished is this node's
+                        // acknowledgment that no frame of that run is
+                        // still in flight to it (per-run drain).
+                        if known && !run.active && run.acked.insert(node_id) {
+                            acked = true;
+                        }
+                    }
+                }
+                if acked {
+                    self.notify_all();
+                }
                 FlowerMsg::TaskInsList {
                     tasks,
-                    active: self.active.load(Ordering::Acquire),
+                    active: !self.retired.load(Ordering::Acquire),
                 }
             }
             FlowerMsg::PushTaskRes { res } => {
-                self.state.results.lock().unwrap().insert(res.task_id, res);
-                self.notify_all();
+                let stored = {
+                    let mut runs = self.runs.lock().unwrap();
+                    match runs.get_mut(&res.run_id) {
+                        Some(run) if run.active => {
+                            run.results.insert(res.task_id, res);
+                            true
+                        }
+                        _ => false,
+                    }
+                };
+                if stored {
+                    self.notify_all();
+                } else {
+                    // Straggler past its run's finish (or an unknown
+                    // run): nothing will ever consume it — drop the
+                    // payload instead of leaking it in the run map.
+                    crate::telemetry::bump("superlink.stale_results_dropped", 1);
+                }
                 FlowerMsg::PushAccepted
             }
             FlowerMsg::DeleteNode { node_id } => {
-                self.state.nodes.lock().unwrap().retain(|n| *n != node_id);
-                self.state.pending.lock().unwrap().remove(&node_id);
-                // Wake any drain waiter: this is the SuperNode's
-                // acknowledgment of the finish flag.
+                self.nodes.lock().unwrap().retain(|n| *n != node_id);
+                self.runs
+                    .lock()
+                    .unwrap()
+                    .values_mut()
+                    .for_each(|run| {
+                        run.pending.remove(&node_id);
+                    });
+                // Wake drain waiters: this is the SuperNode's
+                // acknowledgment of retirement.
                 self.notify_all();
                 FlowerMsg::NodeDeleted
             }
@@ -156,17 +249,18 @@ impl SuperLink {
     }
 
     // ------------------------------------------------------------------
-    // Driver surface (used by ServerApp, in-process)
+    // Driver surface (used by ServerApps, in-process)
     // ------------------------------------------------------------------
 
     /// Registered node ids, sorted (deterministic sampling basis).
     pub fn nodes(&self) -> Vec<u64> {
-        let mut v = self.state.nodes.lock().unwrap().clone();
+        let mut v = self.nodes.lock().unwrap().clone();
         v.sort_unstable();
         v
     }
 
-    /// Block until at least `n` nodes are registered.
+    /// Block until at least `n` nodes are registered. Waits on the
+    /// notify condvar (signaled by `CreateNode`) — no busy polling.
     pub fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>> {
         let deadline = Instant::now() + timeout;
         loop {
@@ -177,90 +271,206 @@ impl SuperLink {
             if Instant::now() >= deadline {
                 anyhow::bail!("only {} of {n} nodes joined", nodes.len());
             }
-            std::thread::sleep(Duration::from_millis(5));
+            self.wait_notified(deadline);
         }
     }
 
-    /// Queue an instruction for a node; returns the task id.
+    /// Open coordination state for `run_id` (idempotent while the run is
+    /// active). Run ids must be unique over a link's lifetime: finished
+    /// ids stay finished.
+    pub fn register_run(&self, run_id: u64) {
+        self.runs
+            .lock()
+            .unwrap()
+            .entry(run_id)
+            .or_insert_with(RunState::new);
+    }
+
+    /// Is this run still accepting/serving tasks? (Unknown runs count as
+    /// finished.)
+    pub fn run_active(&self, run_id: u64) -> bool {
+        self.runs
+            .lock()
+            .unwrap()
+            .get(&run_id)
+            .map(|r| r.active)
+            .unwrap_or(false)
+    }
+
+    /// Queue an instruction for a node; routed to the run named by
+    /// `ins.run_id` (created on first use). Returns the task id. Pushes
+    /// to a FINISHED run are refused — the task is dropped (awaiting it
+    /// times out), so no frame of a drained run ever goes back in
+    /// flight.
     pub fn push_task(&self, node_id: u64, mut ins: TaskIns) -> u64 {
         let task_id = self.next_task.fetch_add(1, Ordering::Relaxed);
         ins.task_id = task_id;
-        self.state
-            .pending
-            .lock()
-            .unwrap()
-            .entry(node_id)
-            .or_default()
-            .push_back(ins);
+        let run_id = ins.run_id;
+        let mut runs = self.runs.lock().unwrap();
+        let run = runs.entry(run_id).or_insert_with(RunState::new);
+        if !run.active {
+            drop(runs);
+            crate::telemetry::bump("superlink.stale_tasks_refused", 1);
+            log::warn!("superlink: refused task push to finished run {run_id}");
+            return task_id;
+        }
+        run.pending.entry(node_id).or_default().push_back(ins);
         task_id
     }
 
-    /// Await results for all `task_ids` (any order), with deadline.
+    /// Stream results for `task_ids` of one run to `f` AS THEY ARRIVE
+    /// (arrival order, not task order): aggregation work overlaps
+    /// stragglers and the result map drains incrementally instead of
+    /// buffering the whole cohort. Returns once every task id has been
+    /// handed to `f`; an error from `f` aborts the wait.
+    pub fn for_each_result(
+        &self,
+        run_id: u64,
+        task_ids: &[u64],
+        timeout: Duration,
+        mut f: impl FnMut(TaskRes) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut remaining: HashSet<u64> = task_ids.iter().copied().collect();
+        while !remaining.is_empty() {
+            let ready: Vec<TaskRes> = {
+                let mut runs = self.runs.lock().unwrap();
+                match runs.get_mut(&run_id) {
+                    Some(run) => {
+                        let mut ids: Vec<u64> = remaining
+                            .iter()
+                            .filter(|id| run.results.contains_key(*id))
+                            .copied()
+                            .collect();
+                        // Deterministic tie-break when several results
+                        // are pending at once.
+                        ids.sort_unstable();
+                        ids.iter().map(|id| run.results.remove(id).unwrap()).collect()
+                    }
+                    None => Vec::new(),
+                }
+            };
+            // Hand over outside the lock: `f` may aggregate a full model.
+            for res in ready {
+                remaining.remove(&res.task_id);
+                f(res)?;
+            }
+            if remaining.is_empty() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                let mut missing: Vec<u64> = remaining.into_iter().collect();
+                missing.sort_unstable();
+                anyhow::bail!("run {run_id}: timed out waiting for task results {missing:?}");
+            }
+            self.wait_notified(deadline);
+        }
+        Ok(())
+    }
+
+    /// Await results for all `task_ids` of one run; returned in
+    /// `task_ids` order. (Batch convenience over
+    /// [`SuperLink::for_each_result`].)
     pub fn await_results(
         &self,
+        run_id: u64,
         task_ids: &[u64],
         timeout: Duration,
     ) -> anyhow::Result<Vec<TaskRes>> {
-        let deadline = Instant::now() + timeout;
-        let (lock, cv) = &self.notify;
-        loop {
-            {
-                let results = self.state.results.lock().unwrap();
-                if task_ids.iter().all(|id| results.contains_key(id)) {
-                    break;
-                }
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                let results = self.state.results.lock().unwrap();
-                let missing: Vec<u64> = task_ids
-                    .iter()
-                    .filter(|id| !results.contains_key(id))
-                    .copied()
-                    .collect();
-                anyhow::bail!("timed out waiting for task results {missing:?}");
-            }
-            let guard = lock.lock().unwrap();
-            let _ = cv
-                .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
-                .unwrap();
-        }
-        let mut results = self.state.results.lock().unwrap();
+        let mut got: HashMap<u64, TaskRes> = HashMap::with_capacity(task_ids.len());
+        self.for_each_result(run_id, task_ids, timeout, |res| {
+            got.insert(res.task_id, res);
+            Ok(())
+        })?;
         Ok(task_ids
             .iter()
-            .map(|id| results.remove(id).unwrap())
+            .map(|id| got.remove(id).expect("for_each_result delivered all ids"))
             .collect())
     }
 
-    /// Mark all runs finished; SuperNodes drain and exit.
-    pub fn finish(&self) {
-        self.active.store(false, Ordering::Release);
+    /// Mark ONE run finished: undelivered tasks and unconsumed results
+    /// are dropped (reclaiming their model payloads — a long-running
+    /// link keeps only a tiny tombstone per finished run), and nodes
+    /// acknowledge on their next pull (see [`SuperLink::wait_drained`]).
+    /// Other runs — and the SuperNode fleet — are untouched.
+    pub fn finish(&self, run_id: u64) {
+        {
+            let mut runs = self.runs.lock().unwrap();
+            let run = runs.entry(run_id).or_insert_with(RunState::new);
+            run.active = false;
+            let dropped: usize = run.pending.values().map(|q| q.len()).sum();
+            if dropped > 0 {
+                crate::telemetry::bump("superlink.finish_dropped_tasks", dropped as i64);
+                log::warn!("superlink: run {run_id} finished with {dropped} undelivered task(s)");
+            }
+            run.pending.clear();
+            if !run.results.is_empty() {
+                crate::telemetry::bump(
+                    "superlink.finish_dropped_results",
+                    run.results.len() as i64,
+                );
+            }
+            run.results.clear();
+        }
+        self.notify_all();
     }
 
-    pub fn is_active(&self) -> bool {
-        self.active.load(Ordering::Acquire)
-    }
-
-    /// Deterministic shutdown drain: block until every registered
-    /// SuperNode has acknowledged the finish flag by deregistering
-    /// (`DeleteNode`), or the deadline passes. Returns `true` when all
-    /// nodes drained — the job cell can then tear down without racing
-    /// in-flight frames. Call after [`SuperLink::finish`].
-    pub fn wait_drained(&self, timeout: Duration) -> bool {
+    /// Per-run drain: block until every registered node has acknowledged
+    /// this run's finish (pulled after [`SuperLink::finish`], or
+    /// deregistered), or the deadline passes. Returns `true` when the
+    /// run drained — its driver can then tear down without racing
+    /// in-flight frames, while other runs keep the fleet busy.
+    pub fn wait_drained(&self, run_id: u64, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
-        let (lock, cv) = &self.notify;
         loop {
-            if self.state.nodes.lock().unwrap().is_empty() {
+            let nodes = self.nodes();
+            let drained = {
+                let runs = self.runs.lock().unwrap();
+                match runs.get(&run_id) {
+                    Some(run) => !run.active && nodes.iter().all(|n| run.acked.contains(n)),
+                    // Never-opened run: nothing in flight by definition.
+                    None => true,
+                }
+            };
+            if drained {
                 return true;
             }
-            let now = Instant::now();
-            if now >= deadline {
+            if Instant::now() >= deadline {
                 return false;
             }
-            let guard = lock.lock().unwrap();
-            let _ = cv
-                .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
-                .unwrap();
+            self.wait_notified(deadline);
+        }
+    }
+
+    /// Retire the whole link: SuperNodes observe `active = false` on
+    /// their next pull, drain, and deregister. Call once every run is
+    /// finished (a retired link still answers frames, but serves no new
+    /// work).
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::Release);
+        self.notify_all();
+    }
+
+    /// Is the link still serving (i.e. not retired)?
+    pub fn is_active(&self) -> bool {
+        !self.retired.load(Ordering::Acquire)
+    }
+
+    /// Link-level shutdown drain: block until every registered SuperNode
+    /// has acknowledged retirement by deregistering (`DeleteNode`), or
+    /// the deadline passes. Returns `true` when all nodes drained — the
+    /// job cell can then tear down without racing in-flight frames.
+    /// Call after [`SuperLink::retire`].
+    pub fn wait_all_drained(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.nodes.lock().unwrap().is_empty() {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            self.wait_notified(deadline);
         }
     }
 }
@@ -271,10 +481,10 @@ mod tests {
     use crate::flower::message::TaskType;
     use crate::flower::records::ArrayRecord;
 
-    fn ins(round: u64) -> TaskIns {
+    fn ins_for_run(run_id: u64, round: u64) -> TaskIns {
         TaskIns {
             task_id: 0,
-            run_id: 1,
+            run_id,
             round,
             task_type: TaskType::Fit,
             parameters: ArrayRecord::from_flat(&[1.0]),
@@ -282,16 +492,35 @@ mod tests {
         }
     }
 
-    fn res(task_id: u64, node_id: u64) -> TaskRes {
+    fn ins(round: u64) -> TaskIns {
+        ins_for_run(1, round)
+    }
+
+    fn res_for_run(run_id: u64, task_id: u64, node_id: u64) -> TaskRes {
         TaskRes {
             task_id,
-            run_id: 1,
+            run_id,
             node_id,
             error: String::new(),
             parameters: ArrayRecord::from_flat(&[2.0]),
             num_examples: 10,
             loss: 0.0,
             metrics: vec![],
+        }
+    }
+
+    fn res(task_id: u64, node_id: u64) -> TaskRes {
+        res_for_run(1, task_id, node_id)
+    }
+
+    fn pull(link: &SuperLink, node_id: u64) -> (Vec<TaskIns>, bool) {
+        let rep = FlowerMsg::decode(
+            &link.handle_frame(&FlowerMsg::PullTaskIns { node_id }.encode()),
+        )
+        .unwrap();
+        match rep {
+            FlowerMsg::TaskInsList { tasks, active } => (tasks, active),
+            other => panic!("{other:?}"),
         }
     }
 
@@ -315,30 +544,14 @@ mod tests {
         let link = SuperLink::new();
         link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
         let tid = link.push_task(1, ins(1));
-        let rep = FlowerMsg::decode(
-            &link.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode()),
-        )
-        .unwrap();
-        match rep {
-            FlowerMsg::TaskInsList { tasks, active } => {
-                assert!(active);
-                assert_eq!(tasks.len(), 1);
-                assert_eq!(tasks[0].task_id, tid);
-            }
-            other => panic!("{other:?}"),
-        }
+        let (tasks, active) = pull(&link, 1);
+        assert!(active);
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].task_id, tid);
         // Queue drained.
-        let rep = FlowerMsg::decode(
-            &link.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode()),
-        )
-        .unwrap();
-        assert_eq!(
-            rep,
-            FlowerMsg::TaskInsList {
-                tasks: vec![],
-                active: true
-            }
-        );
+        let (tasks, active) = pull(&link, 1);
+        assert!(active);
+        assert!(tasks.is_empty());
     }
 
     #[test]
@@ -351,7 +564,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(50));
             l2.handle_frame(&FlowerMsg::PushTaskRes { res: res(tid, 1) }.encode());
         });
-        let out = link.await_results(&[tid], Duration::from_secs(2)).unwrap();
+        let out = link.await_results(1, &[tid], Duration::from_secs(2)).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].node_id, 1);
         h.join().unwrap();
@@ -361,27 +574,66 @@ mod tests {
     fn await_results_times_out() {
         let link = SuperLink::new();
         let err = link
-            .await_results(&[42], Duration::from_millis(50))
+            .await_results(1, &[42], Duration::from_millis(50))
             .unwrap_err();
         assert!(err.to_string().contains("42"));
     }
 
     #[test]
-    fn finish_flag_propagates() {
+    fn for_each_result_streams_in_arrival_order() {
+        use std::sync::atomic::AtomicUsize;
         let link = SuperLink::new();
         link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
-        link.finish();
-        let rep = FlowerMsg::decode(
-            &link.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode()),
-        )
-        .unwrap();
-        assert_eq!(
-            rep,
-            FlowerMsg::TaskInsList {
-                tasks: vec![],
-                active: false
+        let t1 = link.push_task(1, ins(1));
+        let t2 = link.push_task(1, ins(1));
+        let t3 = link.push_task(1, ins(1));
+        // Lock-step pusher: pushes out of task order, waiting for each
+        // result to be CONSUMED before pushing the next — so consumption
+        // order deterministically equals arrival order.
+        let consumed = Arc::new(AtomicUsize::new(0));
+        let (l2, c2) = (link.clone(), consumed.clone());
+        let h = std::thread::spawn(move || {
+            for (i, tid) in [t3, t1, t2].into_iter().enumerate() {
+                l2.handle_frame(&FlowerMsg::PushTaskRes { res: res(tid, 1) }.encode());
+                while c2.load(Ordering::Acquire) <= i {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
             }
-        );
+        });
+        let mut seen = Vec::new();
+        link.for_each_result(1, &[t1, t2, t3], Duration::from_secs(5), |r| {
+            seen.push(r.task_id);
+            consumed.fetch_add(1, Ordering::Release);
+            Ok(())
+        })
+        .unwrap();
+        h.join().unwrap();
+        assert_eq!(seen, vec![t3, t1, t2], "results stream in arrival order");
+    }
+
+    #[test]
+    fn for_each_result_propagates_callback_error() {
+        let link = SuperLink::new();
+        let tid = link.push_task(1, ins(1));
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(tid, 1) }.encode());
+        let err = link
+            .for_each_result(1, &[tid], Duration::from_secs(1), |_| {
+                anyhow::bail!("aggregation exploded")
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("exploded"));
+    }
+
+    #[test]
+    fn retire_flag_propagates() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        assert!(link.is_active());
+        link.retire();
+        assert!(!link.is_active());
+        let (tasks, active) = pull(&link, 1);
+        assert!(tasks.is_empty());
+        assert!(!active);
     }
 
     #[test]
@@ -400,13 +652,108 @@ mod tests {
     }
 
     #[test]
-    fn wait_drained_completes_when_nodes_deregister() {
+    fn runs_are_isolated() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.register_run(1);
+        link.register_run(2);
+        let t1 = link.push_task(1, ins_for_run(1, 1));
+        let t2 = link.push_task(1, ins_for_run(2, 1));
+        // One pull delivers both runs' tasks, in run order.
+        let (tasks, _) = pull(&link, 1);
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[0].run_id, 1);
+        assert_eq!(tasks[1].run_id, 2);
+        // Results route to their own run's map.
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res_for_run(1, t1, 1) }.encode());
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res_for_run(2, t2, 1) }.encode());
+        let r1 = link.await_results(1, &[t1], Duration::from_secs(1)).unwrap();
+        assert_eq!(r1[0].run_id, 1);
+        // Run 2's result is untouched by run 1's await.
+        let r2 = link.await_results(2, &[t2], Duration::from_secs(1)).unwrap();
+        assert_eq!(r2[0].run_id, 2);
+        // A result cannot be awaited from the wrong run.
+        let t3 = link.push_task(1, ins_for_run(2, 2));
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res_for_run(2, t3, 1) }.encode());
+        assert!(link.await_results(1, &[t3], Duration::from_millis(40)).is_err());
+    }
+
+    #[test]
+    fn finishing_one_run_leaves_others_serving() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.register_run(1);
+        link.register_run(2);
+        let t2 = link.push_task(1, ins_for_run(2, 1));
+        link.finish(1);
+        assert!(!link.run_active(1));
+        assert!(link.run_active(2));
+        // The fleet is still serving (link not retired), and run 2's
+        // task is still delivered.
+        let (tasks, active) = pull(&link, 1);
+        assert!(active, "finishing run 1 must not stop the fleet");
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].task_id, t2);
+    }
+
+    #[test]
+    fn per_run_drain_acks_on_pull() {
         let link = SuperLink::new();
         link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
         link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
-        link.finish();
+        link.register_run(1);
+        link.finish(1);
+        // No node has pulled since the finish: not drained yet.
+        assert!(!link.wait_drained(1, Duration::from_millis(30)));
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            l2.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode());
+            std::thread::sleep(Duration::from_millis(20));
+            l2.handle_frame(&FlowerMsg::PullTaskIns { node_id: 2 }.encode());
+        });
+        assert!(link.wait_drained(1, Duration::from_secs(2)));
+        h.join().unwrap();
+        // Nodes are still registered — only the RUN drained.
+        assert_eq!(link.nodes(), vec![1, 2]);
+    }
+
+    #[test]
+    fn stale_pushes_and_results_are_dropped() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let t1 = link.push_task(1, ins(1));
+        link.finish(1);
+        // Straggler result for the finished run: accepted on the wire,
+        // dropped on the floor (never retained).
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(t1, 1) }.encode());
+        assert!(link.await_results(1, &[t1], Duration::from_millis(40)).is_err());
+        // Pushing NEW work to a finished run is refused: nothing is
+        // delivered, so no frame of a drained run goes back in flight.
+        let t2 = link.push_task(1, ins(2));
+        let (tasks, _) = pull(&link, 1);
+        assert!(tasks.is_empty(), "finished run must not deliver new work");
+        assert!(link.await_results(1, &[t2], Duration::from_millis(40)).is_err());
+    }
+
+    #[test]
+    fn finish_drops_undelivered_tasks() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.push_task(1, ins(1));
+        link.finish(1);
+        let (tasks, _) = pull(&link, 1);
+        assert!(tasks.is_empty(), "finished run must not deliver stale work");
+    }
+
+    #[test]
+    fn wait_all_drained_completes_when_nodes_deregister() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.retire();
         // Nodes still registered: drain must report false on deadline.
-        assert!(!link.wait_drained(Duration::from_millis(30)));
+        assert!(!link.wait_all_drained(Duration::from_millis(30)));
         let l2 = link.clone();
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(30));
@@ -414,14 +761,29 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
             l2.handle_frame(&FlowerMsg::DeleteNode { node_id: 2 }.encode());
         });
-        assert!(link.wait_drained(Duration::from_secs(2)));
+        assert!(link.wait_all_drained(Duration::from_secs(2)));
         h.join().unwrap();
     }
 
     #[test]
-    fn wait_drained_immediate_when_no_nodes() {
+    fn wait_all_drained_immediate_when_no_nodes() {
         let link = SuperLink::new();
-        link.finish();
-        assert!(link.wait_drained(Duration::from_millis(1)));
+        link.retire();
+        assert!(link.wait_all_drained(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn wait_for_nodes_wakes_on_create() {
+        let link = SuperLink::new();
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            l2.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        });
+        let t0 = Instant::now();
+        let nodes = link.wait_for_nodes(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(nodes, vec![1]);
+        assert!(t0.elapsed() < Duration::from_secs(4));
+        h.join().unwrap();
     }
 }

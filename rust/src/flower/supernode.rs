@@ -2,7 +2,9 @@
 //! process. Connects to the SuperLink through a [`FlowerConnector`]
 //! (unary request/response — the gRPC stand-in), registers a node, then
 //! loops: pull TaskIns → run the ClientApp → push TaskRes, until the
-//! server reports no active run.
+//! SuperLink reports it has retired. One SuperNode serves EVERY run
+//! multiplexed over the link — tasks carry their `run_id`, and the node
+//! outlives any individual run.
 //!
 //! The connector is the ONLY thing that differs between the paper's two
 //! deployment modes: native (direct endpoint to the SuperLink) vs bridged
@@ -236,8 +238,8 @@ mod tests {
         );
         let l2 = link.clone();
         let h = std::thread::spawn(move || {
-            let res = l2.await_results(&[tid], Duration::from_secs(5)).unwrap();
-            l2.finish();
+            let res = l2.await_results(1, &[tid], Duration::from_secs(5)).unwrap();
+            l2.retire();
             res
         });
         let executed = node.run().unwrap();
@@ -262,7 +264,7 @@ mod tests {
         );
         let node_id = node.connect().unwrap();
         assert_eq!(node_id, 1);
-        link.finish();
+        link.retire();
         assert_eq!(node.run().unwrap(), 0);
     }
 
@@ -305,8 +307,8 @@ mod tests {
         );
         let l2 = link.clone();
         let h = std::thread::spawn(move || {
-            let res = l2.await_results(&[tid], Duration::from_secs(5)).unwrap();
-            l2.finish();
+            let res = l2.await_results(1, &[tid], Duration::from_secs(5)).unwrap();
+            l2.retire();
             res
         });
         node.run().unwrap();

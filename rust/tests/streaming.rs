@@ -1,0 +1,281 @@
+//! Streaming-aggregation and multi-run SuperLink invariants:
+//!
+//! 1. **Streaming == batch, bit for bit.** For every strategy, feeding
+//!    fit results to the incremental accumulator in a RANDOMIZED arrival
+//!    order finalizes to exactly the bits of the batch path over the
+//!    node-sorted set (the Fig. 5 reproducibility invariant, extended to
+//!    arrival order).
+//! 2. **Multi-run isolation.** Concurrent ServerApps multiplexing one
+//!    SuperLink (and one SuperNode fleet) each produce the history of
+//!    their solo run, and finishing one run never drains another run's
+//!    nodes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
+use flarelink::flower::records::ArrayRecord;
+use flarelink::flower::run::{run_native, run_shared, NativeFleet};
+use flarelink::flower::serverapp::{ServerApp, ServerConfig};
+use flarelink::flower::strategy::{
+    Aggregator, FedAdagrad, FedAdam, FedAvg, FedAvgM, FedMedian, FedOptConfig, FedProx, FedYogi,
+    FitRes, Krum, Strategy, TrimmedMean,
+};
+use flarelink::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// 1. Streaming-vs-batch bit-exactness, randomized arrival order
+// ---------------------------------------------------------------------------
+
+fn mk_results(n_clients: usize, dim: usize, seed: u64) -> Vec<FitRes> {
+    let mut rng = Rng::new(seed);
+    (1..=n_clients)
+        .map(|id| {
+            let params: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            FitRes {
+                node_id: id as u64,
+                parameters: ArrayRecord::from_flat(&params),
+                num_examples: rng.range_u64(1, 50),
+                metrics: vec![],
+            }
+        })
+        .collect()
+}
+
+fn bits(rec: &ArrayRecord) -> Vec<u32> {
+    rec.to_flat().iter().map(|f| f.to_bits()).collect()
+}
+
+/// Drive 3 stateful rounds twice — once through the batch convenience
+/// (node-sorted input), once streaming in a shuffled arrival order — and
+/// demand bit-identical parameters after every round.
+fn assert_stream_equals_batch(mk: &dyn Fn() -> Box<dyn Strategy>, label: &str) {
+    for shuffle_seed in [1u64, 7, 23] {
+        let mut batch = mk();
+        let mut stream = mk();
+        let mut params_batch = ArrayRecord::from_flat(&[0.25f32; 6]);
+        let mut params_stream = params_batch.clone();
+        let mut rng = Rng::new(shuffle_seed);
+        for round in 1..=3u64 {
+            let results = mk_results(7, 6, round * 101);
+
+            params_batch = batch.aggregate_fit(round, &params_batch, &results).unwrap();
+
+            let mut order: Vec<usize> = (0..results.len()).collect();
+            rng.shuffle(&mut order);
+            let mut agg = stream.begin_fit(round, &params_stream);
+            for i in order {
+                agg.accumulate(results[i].clone()).unwrap();
+            }
+            params_stream = agg.finalize().unwrap();
+
+            assert_eq!(
+                bits(&params_batch),
+                bits(&params_stream),
+                "{label}: round {round} diverged (shuffle seed {shuffle_seed})"
+            );
+        }
+    }
+}
+
+#[test]
+fn fedavg_stream_bitexact() {
+    assert_stream_equals_batch(&|| Box::new(FedAvg::new(Aggregator::host())), "fedavg");
+}
+
+#[test]
+fn fedavgm_stream_bitexact() {
+    assert_stream_equals_batch(
+        &|| Box::new(FedAvgM::new(Aggregator::host(), 0.9, 0.5)),
+        "fedavgm",
+    );
+}
+
+#[test]
+fn fedadam_stream_bitexact() {
+    assert_stream_equals_batch(
+        &|| Box::new(FedAdam::new(Aggregator::host(), FedOptConfig::default())),
+        "fedadam",
+    );
+}
+
+#[test]
+fn fedadagrad_stream_bitexact() {
+    assert_stream_equals_batch(
+        &|| Box::new(FedAdagrad::new(Aggregator::host(), FedOptConfig::default())),
+        "fedadagrad",
+    );
+}
+
+#[test]
+fn fedyogi_stream_bitexact() {
+    assert_stream_equals_batch(
+        &|| Box::new(FedYogi::new(Aggregator::host(), FedOptConfig::default())),
+        "fedyogi",
+    );
+}
+
+#[test]
+fn fedprox_stream_bitexact() {
+    assert_stream_equals_batch(
+        &|| Box::new(FedProx::new(Aggregator::host(), 0.01)),
+        "fedprox",
+    );
+}
+
+#[test]
+fn fedmedian_stream_bitexact() {
+    assert_stream_equals_batch(&|| Box::new(FedMedian), "fedmedian");
+}
+
+#[test]
+fn trimmed_mean_stream_bitexact() {
+    assert_stream_equals_batch(&|| Box::new(TrimmedMean { trim: 2 }), "trimmed_mean");
+}
+
+#[test]
+fn krum_stream_bitexact() {
+    assert_stream_equals_batch(&|| Box::new(Krum { f: 1 }), "krum");
+}
+
+/// Secure aggregation streams in O(1) memory (wrapping fixed-point sums)
+/// — verify any arrival order still unmasks to the batch result's bits.
+#[test]
+fn secagg_stream_bitexact() {
+    use flarelink::flower::message::{ConfigRecord, ConfigValue};
+    use flarelink::flower::mods::ModStack;
+    use flarelink::flower::secagg::{SecAggFedAvg, SecAggMod, SECAGG_SEED_KEY};
+
+    let params = ArrayRecord::from_flat(&[1.0f32, -2.0, 0.5, 8.25]);
+    let cohort = "1,2,3";
+    let seed = 777i64;
+    let masked: Vec<FitRes> = [(1.0f32, 10u64, 1u64), (2.0, 20, 2), (3.0, 30, 3)]
+        .iter()
+        .map(|&(delta, n, me)| {
+            let app = ModStack::new(
+                Arc::new(ArithmeticClient { delta, n }),
+                vec![Arc::new(SecAggMod)],
+            );
+            let cfg: ConfigRecord = vec![
+                ("node_id".into(), ConfigValue::I64(me as i64)),
+                ("cohort".into(), ConfigValue::Str(cohort.into())),
+                (SECAGG_SEED_KEY.into(), ConfigValue::I64(seed)),
+            ];
+            let out = app.fit(&params, &cfg).unwrap();
+            FitRes {
+                node_id: me,
+                parameters: out.parameters,
+                num_examples: out.num_examples,
+                metrics: vec![],
+            }
+        })
+        .collect();
+
+    let mut batch = SecAggFedAvg::new(0);
+    let want = batch.aggregate_fit(1, &params, &masked).unwrap();
+    for order in [[2usize, 0, 1], [1, 2, 0], [0, 2, 1]] {
+        let mut s = SecAggFedAvg::new(0);
+        let mut agg = s.begin_fit(1, &params);
+        for i in order {
+            agg.accumulate(masked[i].clone()).unwrap();
+        }
+        let got = agg.finalize().unwrap();
+        assert!(got.bits_equal(&want), "secagg arrival order {order:?} diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Multi-run isolation on one shared SuperLink
+// ---------------------------------------------------------------------------
+
+fn apps(deltas: &[(f32, u64)]) -> Vec<Arc<dyn ClientApp>> {
+    deltas
+        .iter()
+        .map(|&(delta, n)| Arc::new(ArithmeticClient { delta, n }) as Arc<dyn ClientApp>)
+        .collect()
+}
+
+fn fedavg_app(rounds: u64, seed: u64, fraction_fit: f64) -> ServerApp {
+    ServerApp::new(
+        Box::new(FedAvg::new(Aggregator::host())),
+        ServerConfig {
+            num_rounds: rounds,
+            min_nodes: 3,
+            fraction_fit,
+            seed,
+            ..Default::default()
+        },
+        ArrayRecord::from_flat(&[0.0; 8]),
+    )
+}
+
+fn median_app(rounds: u64, seed: u64) -> ServerApp {
+    ServerApp::new(
+        Box::new(FedMedian),
+        ServerConfig {
+            num_rounds: rounds,
+            min_nodes: 3,
+            seed,
+            ..Default::default()
+        },
+        ArrayRecord::from_flat(&[0.0; 8]),
+    )
+}
+
+/// Three heterogeneous concurrent runs (different strategies, round
+/// counts, seeds, and sampling fractions) interleave their results over
+/// one link + one fleet; each history must equal its solo run's, bit
+/// for bit.
+#[test]
+fn concurrent_runs_match_solo_histories() {
+    let deltas: &[(f32, u64)] = &[(0.5, 5), (1.5, 7), (2.5, 11)];
+    let shared = run_shared(
+        vec![
+            (1, fedavg_app(4, 42, 0.67)),
+            (2, median_app(2, 9)),
+            (3, fedavg_app(3, 7, 1.0)),
+        ],
+        apps(deltas),
+    )
+    .unwrap();
+    assert_eq!(shared.len(), 3);
+
+    let solo1 = run_native(&mut fedavg_app(4, 42, 0.67), apps(deltas), 1).unwrap();
+    let solo2 = run_native(&mut median_app(2, 9), apps(deltas), 2).unwrap();
+    let solo3 = run_native(&mut fedavg_app(3, 7, 1.0), apps(deltas), 3).unwrap();
+
+    assert_eq!(shared[0].1, solo1);
+    assert_eq!(shared[1].1, solo2);
+    assert_eq!(shared[2].1, solo3);
+    assert!(shared[0].1.params_bits_equal(&solo1));
+    assert!(shared[1].1.params_bits_equal(&solo2));
+    assert!(shared[2].1.params_bits_equal(&solo3));
+}
+
+/// Finishing (and draining) run A must leave run B's nodes registered
+/// and serviceable.
+#[test]
+fn finishing_run_a_does_not_drain_run_b() {
+    let fleet = NativeFleet::start(apps(&[(1.0, 10), (2.0, 20), (3.0, 30)])).unwrap();
+
+    // Run B spans the whole test.
+    let mut app_b = fedavg_app(3, 11, 1.0);
+    // Run A: short, finishes (and per-run drains) first.
+    let mut app_a = fedavg_app(1, 4, 1.0);
+    let h_a = app_a.run(fleet.link(), None, 1).unwrap();
+    assert_eq!(h_a.rounds.len(), 1);
+    assert!(
+        fleet.link().wait_drained(1, Duration::from_secs(5)),
+        "run A must drain once every node pulled past its finish"
+    );
+    // Run A's drain is per-run: the fleet is intact...
+    assert_eq!(fleet.link().nodes().len(), 3);
+    assert!(fleet.link().is_active());
+    // ...and run B still completes against the same nodes.
+    let h_b = app_b.run(fleet.link(), None, 2).unwrap();
+    assert_eq!(h_b.rounds.len(), 3);
+    let deltas: &[(f32, u64)] = &[(1.0, 10), (2.0, 20), (3.0, 30)];
+    let solo_b = run_native(&mut fedavg_app(3, 11, 1.0), apps(deltas), 2).unwrap();
+    assert_eq!(h_b, solo_b);
+    fleet.shutdown();
+}
