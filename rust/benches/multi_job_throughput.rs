@@ -149,7 +149,15 @@ fn per_job_links(jobs: usize, rounds: u64, fit_cost: Duration) -> anyhow::Result
 }
 
 /// Mode 2: ONE job, J concurrent runs sharing one SuperLink + fleet.
-fn shared_link(jobs: usize, rounds: u64, fit_cost: Duration) -> anyhow::Result<ModeResult> {
+/// `drop_prob > 0` runs the same workload over a DEGRADED fleet (every
+/// SCP<->site link loses frames): reliable messaging + the resilient
+/// round runtime must still finish every run.
+fn shared_link(
+    jobs: usize,
+    rounds: u64,
+    fit_cost: Duration,
+    drop_prob: f64,
+) -> anyhow::Result<ModeResult> {
     let t0_cell: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
     let per_run: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::new()));
     let (t0c, prc) = (t0_cell.clone(), per_run.clone());
@@ -162,6 +170,7 @@ fn shared_link(jobs: usize, rounds: u64, fit_cost: Duration) -> anyhow::Result<M
         }));
     let fed = FederationBuilder::new("e4-shared")
         .sites(4)
+        .faults(drop_prob, Duration::ZERO, 23)
         .retry_policy(RetryPolicy::fast())
         .build(Arc::new(app))?;
 
@@ -240,15 +249,24 @@ fn main() -> anyhow::Result<()> {
         all_ok &= r.finished == jobs;
         report("per-job links", jobs, rounds, fit_cost, &r, &mut t);
 
-        let r = shared_link(jobs, rounds, fit_cost)?;
+        let r = shared_link(jobs, rounds, fit_cost, 0.0)?;
         all_ok &= r.finished == jobs;
         report("shared link", jobs, rounds, fit_cost, &r, &mut t);
+
+        // Degraded fleet: same shared-link workload with 15% frame loss
+        // on every site link — the resilience overhead in one row.
+        let r = shared_link(jobs, rounds, fit_cost, 0.15)?;
+        all_ok &= r.finished == jobs;
+        report("shared lossy15%", jobs, rounds, fit_cost, &r, &mut t);
     }
     println!("{}", t.render());
     println!("'vs_serial' < 1.0x means runs overlapped (multi-job wins). 'shared");
     println!("link' submits ONE job whose server drives J concurrent runs over a");
     println!("single SuperLink and SuperNode fleet — per-run makespan (run_mean /");
     println!("run_max) shows how runs share the fleet vs owning a link each.");
+    println!("'shared lossy15%' repeats the shared-link workload over links that");
+    println!("drop 15% of frames: ReliableMessage + liveness leases keep every");
+    println!("run finishing — the delta vs 'shared link' is the resilience tax.");
     anyhow::ensure!(all_ok, "some jobs/runs did not finish");
     Ok(())
 }

@@ -151,8 +151,26 @@ impl AppFactory for FlowerBridgeApp {
     /// `concurrent_runs` > 1 in the job config, N ServerApps multiplex
     /// ONE SuperLink — and therefore one SuperNode fleet — each driving
     /// its own run id (the paper's §2/§3.1 multi-run utilization).
+    ///
+    /// Resilience knobs ride the job config: `lease_ms` (node liveness
+    /// lease) and `max_redeliveries` — the bridged path gets the exact
+    /// same lease/redelivery/quorum semantics as the native one.
     fn run_server(&self, ctx: JobCtx) -> anyhow::Result<()> {
-        let link = SuperLink::new();
+        let defaults = crate::flower::superlink::LinkConfig::default();
+        let link = SuperLink::with_config(crate::flower::superlink::LinkConfig {
+            lease: ctx
+                .config
+                .get("lease_ms")
+                .as_u64()
+                .map(std::time::Duration::from_millis)
+                .unwrap_or(defaults.lease),
+            max_redeliveries: ctx
+                .config
+                .get("max_redeliveries")
+                .as_u64()
+                .map(|n| n as u32)
+                .unwrap_or(defaults.max_redeliveries),
+        });
 
         // LGC: Flower frames arriving over FLARE go straight into the
         // SuperLink; its reply rides back as the FLARE Reply (hops 3–5).

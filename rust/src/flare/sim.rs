@@ -15,7 +15,7 @@ use crate::flare::provision::{Provisioner, Role, StartupKit};
 use crate::flare::reliable::RetryPolicy;
 use crate::flare::scp::{Scp, ScpConfig};
 use crate::proto::address;
-use crate::transport::fault::{FaultConfig, FaultEndpoint};
+use crate::transport::fault::{FaultConfig, FaultEndpoint, FaultHandle};
 use crate::transport::inproc;
 use crate::transport::Endpoint;
 
@@ -26,6 +26,7 @@ pub struct FederationBuilder {
     drop_prob: f64,
     latency: Duration,
     fault_seed: u64,
+    chaos: bool,
     direct_pairs: Vec<(String, String)>,
     scp_cfg: ScpConfig,
     ccp_cfg: CcpConfig,
@@ -41,6 +42,7 @@ impl FederationBuilder {
             drop_prob: 0.0,
             latency: Duration::ZERO,
             fault_seed: 0,
+            chaos: false,
             direct_pairs: Vec::new(),
             scp_cfg: ScpConfig::default(),
             ccp_cfg: CcpConfig::default(),
@@ -63,6 +65,15 @@ impl FederationBuilder {
         self.drop_prob = drop_prob;
         self.latency = latency;
         self.fault_seed = seed;
+        self
+    }
+
+    /// Wrap every SCP<->site link in a (zero-loss) fault endpoint and
+    /// expose per-site [`FaultHandle`]s on the built [`Federation`], so
+    /// chaos tests can [`Federation::kill_site`] mid-round. Composes
+    /// with [`FederationBuilder::faults`].
+    pub fn chaos(mut self) -> Self {
+        self.chaos = true;
         self
     }
 
@@ -94,16 +105,23 @@ impl FederationBuilder {
         self
     }
 
-    fn wrap(&self, ep: inproc::InprocEndpoint, seed_offset: u64) -> Arc<dyn Endpoint> {
-        if self.drop_prob > 0.0 || !self.latency.is_zero() {
-            Arc::new(FaultEndpoint::new(
+    fn wrap(
+        &self,
+        ep: inproc::InprocEndpoint,
+        seed_offset: u64,
+        handles: &mut Vec<FaultHandle>,
+    ) -> Arc<dyn Endpoint> {
+        if self.chaos || self.drop_prob > 0.0 || !self.latency.is_zero() {
+            let fault = FaultEndpoint::new(
                 ep,
                 FaultConfig {
                     drop_prob: self.drop_prob,
                     latency: self.latency,
                     seed: self.fault_seed + seed_offset,
                 },
-            ))
+            );
+            handles.push(fault.handle());
+            Arc::new(fault)
         } else {
             Arc::new(ep)
         }
@@ -129,11 +147,15 @@ impl FederationBuilder {
         )?;
 
         let mut ccps = Vec::new();
+        let mut site_faults = Vec::new();
         for (i, site) in self.sites.iter().enumerate() {
             let kit = provisioner.provision(site, Role::Site, "");
             let (server_end, client_end) = inproc::pair(address::SERVER, site);
-            fabric.add_site_link(site, self.wrap(server_end, i as u64 * 2));
-            let ccp_fabric = CcpFabric::new(site, self.wrap(client_end, i as u64 * 2 + 1));
+            let mut handles = Vec::new();
+            fabric.add_site_link(site, self.wrap(server_end, i as u64 * 2, &mut handles));
+            let ccp_fabric =
+                CcpFabric::new(site, self.wrap(client_end, i as u64 * 2 + 1, &mut handles));
+            site_faults.push((site.clone(), handles));
             let ccp = Ccp::start(
                 ccp_fabric,
                 &kit,
@@ -169,6 +191,7 @@ impl FederationBuilder {
             scp,
             ccps,
             admin_kit,
+            site_faults,
         })
     }
 }
@@ -178,9 +201,38 @@ pub struct Federation {
     pub scp: Arc<Scp>,
     pub ccps: Vec<Arc<Ccp>>,
     pub admin_kit: StartupKit,
+    /// Per-site fault handles on the SCP<->site links (both directions),
+    /// present when the federation was built with
+    /// [`FederationBuilder::chaos`] or [`FederationBuilder::faults`].
+    pub site_faults: Vec<(String, Vec<FaultHandle>)>,
 }
 
 impl Federation {
+    fn each_site_fault(&self, site: &str, f: impl Fn(&FaultHandle)) -> bool {
+        let mut hit = false;
+        for (name, handles) in &self.site_faults {
+            if name == site {
+                for h in handles {
+                    f(h);
+                    hit = true;
+                }
+            }
+        }
+        hit
+    }
+
+    /// Take every fault-wrapped link of `site` dark (crash/partition the
+    /// site). Returns false when the site has no fault layer (build the
+    /// federation with [`FederationBuilder::chaos`]).
+    pub fn kill_site(&self, site: &str) -> bool {
+        self.each_site_fault(site, |h| h.kill())
+    }
+
+    /// Restore a killed site's links (frames lost while dark stay lost).
+    pub fn heal_site(&self, site: &str) -> bool {
+        self.each_site_fault(site, |h| h.heal())
+    }
+
     pub fn shutdown(&self) {
         for ccp in &self.ccps {
             ccp.shutdown();

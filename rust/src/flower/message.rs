@@ -51,6 +51,20 @@ pub const MAX_TENSORS_PER_RECORD: usize = 4096;
 pub const MAX_TENSOR_BYTES: usize = 1 << 30;
 /// Maximum dimensions in a tensor shape.
 pub const MAX_SHAPE_DIMS: usize = 16;
+/// Largest node id a client may pin via `CreateNode { requested }`.
+/// The SuperLink keeps its auto-assign counter ahead of pinned ids with
+/// `fetch_max(requested + 1)`; an unbounded pin of `u64::MAX` would wrap
+/// that counter to 0 and let the link hand out duplicate node ids, so
+/// out-of-range pins are rejected at decode (the peer sees a
+/// [`FlowerMsg::Error`] reply, never a wrapped counter).
+pub const MAX_PINNED_NODE_ID: u64 = (1 << 48) - 1;
+
+fn check_pinned_node_id(requested: u64) -> Result<u64, WireError> {
+    if requested > MAX_PINNED_NODE_ID {
+        return Err(WireError::Malformed("pinned node id out of range"));
+    }
+    Ok(requested)
+}
 
 fn write_config(w: &mut Writer, c: &ConfigRecord) {
     w.u32(c.len() as u32);
@@ -234,6 +248,17 @@ pub struct TaskIns {
     /// Round number (Flower's group_id).
     pub round: u64,
     pub task_type: TaskType,
+    /// Delivery attempt: 0 for the original assignment, incremented each
+    /// time the SuperLink redelivers the task to another node after its
+    /// assignee's liveness lease expired (bounded by the link's
+    /// `max_redeliveries`).
+    pub attempt: u32,
+    /// May the SuperLink reassign this task to a DIFFERENT node if its
+    /// assignee dies? FL fit/evaluate tasks are node-affine (each node
+    /// trains/evaluates on its own data) so the ServerApp sets `false` —
+    /// a substitute's result would pollute the cohort; node-agnostic
+    /// workloads opt in.
+    pub redeliver: bool,
     /// Global model parameters (named, dtyped tensors).
     pub parameters: ArrayRecord,
     pub config: ConfigRecord,
@@ -341,6 +366,8 @@ impl FlowerMsg {
                     w.u64(t.run_id);
                     w.u64(t.round);
                     w.u8(t.task_type as u8);
+                    w.u32(t.attempt);
+                    w.u8(t.redeliver as u8);
                     write_record(&mut w, &t.parameters);
                     write_config(&mut w, &t.config);
                 }
@@ -435,7 +462,9 @@ impl FlowerMsg {
         debug_assert_eq!(magic, FRAME_MAGIC_V2);
         let tag = r.u8()?;
         let msg = match tag {
-            0 => FlowerMsg::CreateNode { requested: r.u64()? },
+            0 => FlowerMsg::CreateNode {
+                requested: check_pinned_node_id(r.u64()?)?,
+            },
             1 => FlowerMsg::PullTaskIns { node_id: r.u64()? },
             2 => FlowerMsg::PushTaskRes {
                 res: TaskRes {
@@ -470,6 +499,8 @@ impl FlowerMsg {
                         1 => TaskType::Evaluate,
                         t => return Err(WireError::BadTag(t)),
                     };
+                    let attempt = r.u32()?;
+                    let redeliver = r.u8()? != 0;
                     let parameters = read_record(&mut r)?;
                     let config = read_config(&mut r)?;
                     tasks.push(TaskIns {
@@ -477,6 +508,8 @@ impl FlowerMsg {
                         run_id,
                         round,
                         task_type,
+                        attempt,
+                        redeliver,
                         parameters,
                         config,
                     });
@@ -497,7 +530,9 @@ impl FlowerMsg {
         let mut r = Reader::new(buf);
         let tag = r.u8()?;
         let msg = match tag {
-            0 => FlowerMsg::CreateNode { requested: r.u64()? },
+            0 => FlowerMsg::CreateNode {
+                requested: check_pinned_node_id(r.u64()?)?,
+            },
             1 => FlowerMsg::PullTaskIns { node_id: r.u64()? },
             2 => FlowerMsg::PushTaskRes {
                 res: TaskRes {
@@ -539,6 +574,9 @@ impl FlowerMsg {
                         run_id,
                         round,
                         task_type,
+                        // v1 predates redelivery: original, non-redeliverable.
+                        attempt: 0,
+                        redeliver: false,
                         parameters,
                         config,
                     });
@@ -616,6 +654,8 @@ mod tests {
             run_id: 1,
             round: 3,
             task_type: TaskType::Fit,
+            attempt: 0,
+            redeliver: false,
             parameters: mixed_record(),
             config: vec![
                 ("lr".into(), ConfigValue::F64(0.05)),
@@ -752,6 +792,47 @@ mod tests {
     }
 
     #[test]
+    fn attempt_count_roundtrips() {
+        let ins = TaskIns {
+            attempt: 3,
+            redeliver: true,
+            ..sample_ins()
+        };
+        let m = FlowerMsg::TaskInsList {
+            tasks: vec![ins],
+            active: true,
+        };
+        match FlowerMsg::decode(&m.encode()).unwrap() {
+            FlowerMsg::TaskInsList { tasks, .. } => {
+                assert_eq!(tasks[0].attempt, 3);
+                assert!(tasks[0].redeliver);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_range_pinned_node_id_rejected() {
+        for requested in [u64::MAX, MAX_PINNED_NODE_ID + 1] {
+            let v2 = FlowerMsg::CreateNode { requested }.encode();
+            assert!(
+                matches!(FlowerMsg::decode(&v2), Err(WireError::Malformed(_))),
+                "v2 pin {requested} must be rejected"
+            );
+            let v1 = FlowerMsg::CreateNode { requested }.encode_v1();
+            assert!(
+                matches!(FlowerMsg::decode(&v1), Err(WireError::Malformed(_))),
+                "v1 pin {requested} must be rejected"
+            );
+        }
+        // The boundary value still decodes.
+        let ok = FlowerMsg::CreateNode {
+            requested: MAX_PINNED_NODE_ID,
+        };
+        assert_eq!(FlowerMsg::decode(&ok.encode()).unwrap(), ok);
+    }
+
+    #[test]
     fn bad_tag_rejected() {
         assert!(FlowerMsg::decode(&[99]).is_err());
         assert!(FlowerMsg::decode(&[]).is_err());
@@ -847,6 +928,8 @@ mod tests {
         w.u64(1);
         w.u64(1);
         w.u8(0); // Fit
+        w.u32(0); // attempt
+        w.u8(0); // redeliver
         w.u32(0); // empty record
         w.u32((MAX_CONFIG_ENTRIES + 1) as u32);
         let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();

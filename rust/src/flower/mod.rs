@@ -20,8 +20,8 @@ pub use dp::{DpConfig, DpMod};
 pub use message::{ConfigRecord, ConfigValue, FlowerMsg, MetricRecord, TaskIns, TaskRes, TaskType};
 pub use mods::{ClientMod, ModStack};
 pub use records::{ArrayRecord, DType, RecordDict, Tensor};
-pub use run::{drive_runs, run_native, run_shared, NativeFleet};
+pub use run::{drive_runs, run_native, run_shared, FleetOptions, NativeFleet};
 pub use secagg::{SecAggFedAvg, SecAggMod};
-pub use serverapp::{History, RoundRecord, ServerApp, ServerConfig};
-pub use superlink::SuperLink;
+pub use serverapp::{History, Participation, RoundRecord, ServerApp, ServerConfig};
+pub use superlink::{CompletionPolicy, LinkConfig, ResultTimeout, RoundWait, SuperLink};
 pub use supernode::{FlowerConnector, NativeConnector, SuperNode, SuperNodeConfig};

@@ -12,9 +12,29 @@ use std::time::Duration;
 
 use crate::flower::clientapp::ClientApp;
 use crate::flower::serverapp::{History, ServerApp};
-use crate::flower::superlink::SuperLink;
+use crate::flower::superlink::{LinkConfig, SuperLink};
 use crate::flower::supernode::{NativeConnector, SuperNode, SuperNodeConfig};
 use crate::transport::inproc;
+use crate::transport::Endpoint;
+
+/// Knobs for [`NativeFleet::start_with`]: the link's resilience config
+/// plus the SuperNode connector timeout (chaos tests shorten it so a
+/// partitioned node's thread exits promptly).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetOptions {
+    pub link: LinkConfig,
+    /// SuperNode receive timeout per request.
+    pub connector_timeout: Duration,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        Self {
+            link: LinkConfig::default(),
+            connector_timeout: Duration::from_secs(60),
+        }
+    }
+}
 
 /// A shared SuperLink + SuperNode fleet. Multiple ServerApps (with
 /// distinct run ids) can drive rounds against [`NativeFleet::link`]
@@ -30,15 +50,27 @@ impl NativeFleet {
     /// pair, with node ids pinned to the client order (deterministic
     /// client<->node binding, matching the bridged path).
     pub fn start(client_apps: Vec<Arc<dyn ClientApp>>) -> anyhow::Result<NativeFleet> {
-        let link = SuperLink::new();
+        Self::start_with(client_apps, FleetOptions::default(), |_, ep| Arc::new(ep))
+    }
+
+    /// [`NativeFleet::start`] with explicit [`FleetOptions`] and a
+    /// client-side endpoint decorator: `wrap(i, endpoint)` may inject a
+    /// fault layer (e.g. [`crate::transport::fault::FaultEndpoint`]) on
+    /// SuperNode `i`'s link for chaos testing.
+    pub fn start_with(
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        opts: FleetOptions,
+        wrap: impl Fn(usize, inproc::InprocEndpoint) -> Arc<dyn Endpoint>,
+    ) -> anyhow::Result<NativeFleet> {
+        let link = SuperLink::with_config(opts.link);
         let mut handles = Vec::new();
         for (i, app) in client_apps.into_iter().enumerate() {
             let (client_end, server_end) = inproc::pair(&format!("supernode-{i}"), "superlink");
             link.serve_endpoint(Arc::new(server_end));
             let mut node = SuperNode::new(
                 Box::new(NativeConnector::new(
-                    Arc::new(client_end),
-                    Duration::from_secs(60),
+                    wrap(i, client_end),
+                    opts.connector_timeout,
                 )),
                 app,
                 SuperNodeConfig {

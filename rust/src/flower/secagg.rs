@@ -154,6 +154,15 @@ impl Strategy for SecAggFedAvg {
         "secagg_fedavg"
     }
 
+    /// Dropout story: pairwise masks cancel only over the FULL cohort.
+    /// A partial round would leave mask residue (detected at finalize),
+    /// so the quorum path is disabled — a dropped node fails the round.
+    /// Dropout *recovery* (secret-shared seeds, Bonawitz et al.) remains
+    /// future work, matching the paper's initial-integration scope.
+    fn supports_partial(&self) -> bool {
+        false
+    }
+
     fn configure_fit(&mut self, round: u64) -> ConfigRecord {
         vec![
             (

@@ -25,11 +25,13 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use std::collections::HashSet;
+
 use crate::flare::tracking::SummaryWriter;
 use crate::flower::message::{ConfigValue, MetricRecord, TaskIns, TaskType};
 use crate::flower::records::ArrayRecord;
 use crate::flower::strategy::{EvalRes, FitRes, Strategy};
-use crate::flower::superlink::SuperLink;
+use crate::flower::superlink::{CompletionPolicy, ResultTimeout, SuperLink};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -47,6 +49,17 @@ pub struct ServerConfig {
     /// Fail the round if any sampled client errors (kept strict for
     /// reproducibility; Flower tolerates stragglers by default).
     pub accept_failures: bool,
+    /// Partial participation quorum: the minimum number of DISTINCT
+    /// nodes whose fit results must reach the accumulator for a round to
+    /// finalize when sampled nodes die mid-round. 0 = strict mode (every
+    /// sampled node must report — the pre-resilience behaviour, and what
+    /// reproducibility experiments should use). Ignored (with a warning)
+    /// when the strategy cannot aggregate a partial cohort (secure
+    /// aggregation's pairwise masks only cancel over the full cohort).
+    pub min_available: usize,
+    /// Once the quorum is met, keep waiting for stragglers at most this
+    /// long before finalizing without them.
+    pub straggler_grace: Duration,
 }
 
 impl Default for ServerConfig {
@@ -59,12 +72,29 @@ impl Default for ServerConfig {
             round_timeout: Duration::from_secs(600),
             seed: 17,
             accept_failures: false,
+            min_available: 0,
+            straggler_grace: Duration::from_secs(2),
         }
     }
 }
 
+/// Per-round participation accounting: how much of the sampled fit
+/// cohort actually contributed. In a clean run `completed == sampled`;
+/// under churn the quorum path records exactly who was lost.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Participation {
+    /// Nodes sampled into the fit cohort.
+    pub sampled: usize,
+    /// Distinct nodes whose successful fit results reached the
+    /// accumulator.
+    pub completed: usize,
+    /// Sampled nodes that never contributed (dead, failed, or cut off
+    /// as stragglers after the quorum).
+    pub dropped: usize,
+}
+
 /// One round's record in the history.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RoundRecord {
     pub round: u64,
     /// Example-weighted mean of client-reported fit metrics.
@@ -74,6 +104,8 @@ pub struct RoundRecord {
     pub eval_metrics: MetricRecord,
     /// Per-client evaluation (node_id, loss, metrics) — Fig. 6 series.
     pub per_client_eval: Vec<(u64, f64, MetricRecord)>,
+    /// Fit-cohort participation for this round.
+    pub participation: Participation,
 }
 
 /// The training curves of Fig. 5. `PartialEq` compares final parameters
@@ -138,6 +170,18 @@ impl History {
     /// clarity even though record `PartialEq` is already byte-exact).
     pub fn params_bits_equal(&self, other: &History) -> bool {
         self.parameters.bits_equal(&other.parameters)
+    }
+}
+
+/// Completion policy for one phase: strict when no quorum is set,
+/// otherwise a quorum clamped to the cohort actually sampled this phase
+/// (a quorum larger than the cohort would be unreachable and burn the
+/// whole round timeout).
+fn phase_policy(quorum: usize, cohort: usize, grace: Duration) -> CompletionPolicy {
+    if quorum == 0 {
+        CompletionPolicy::all()
+    } else {
+        CompletionPolicy::quorum(quorum.min(cohort).max(1), grace)
     }
 }
 
@@ -209,10 +253,30 @@ impl ServerApp {
         let mut params = self.initial_parameters.clone();
         let mut history = History::default();
 
+        // Partial participation: only when a quorum is configured AND the
+        // strategy can aggregate a strict subset of the cohort.
+        let partial_ok = self.strategy.supports_partial();
+        if cfg.min_available > 0 && !partial_ok {
+            log::warn!(
+                "strategy {} cannot finalize a partial cohort (e.g. secagg masks \
+                 only cancel over the full cohort) — ignoring min_available={}",
+                self.strategy.name(),
+                cfg.min_available
+            );
+        }
+        let quorum = if partial_ok { cfg.min_available } else { 0 };
+        // With a quorum the fleet may legitimately shrink below
+        // `min_nodes` mid-run; the quorum is then the per-round floor.
+        let round_floor = if quorum > 0 { quorum } else { cfg.min_nodes };
+
         for round in 1..=cfg.num_rounds {
+            // Reap first so this round's cohort is sampled from nodes
+            // that are actually alive — a task pushed to an already-dead
+            // node would otherwise strand until the grace/timeout.
+            link.reap_expired();
             let nodes = link.nodes();
             anyhow::ensure!(
-                nodes.len() >= cfg.min_nodes,
+                nodes.len() >= round_floor,
                 "round {round}: only {} nodes connected",
                 nodes.len()
             );
@@ -241,6 +305,9 @@ impl ServerApp {
                             run_id,
                             round,
                             task_type: TaskType::Fit,
+                            attempt: 0,
+                            // Node-affine: each node trains on ITS data.
+                            redeliver: false,
                             // O(1) per node: records share tensor buffers.
                             parameters: params.clone(),
                             config,
@@ -251,30 +318,102 @@ impl ServerApp {
             // Stream results into the strategy's accumulator AS THEY
             // ARRIVE: aggregation overlaps stragglers, and the link's
             // result map drains incrementally instead of buffering the
-            // cohort twice.
+            // cohort twice. One result per NODE: if a dead node's task
+            // was redelivered to a node that already contributed, the
+            // duplicate contribution is skipped, so a partial round
+            // aggregates exactly the surviving cohort.
             let mut agg = self.strategy.begin_fit(round, &params);
             let mut fit_meta: Vec<(u64, u64, MetricRecord)> = Vec::with_capacity(task_ids.len());
+            let mut seen_nodes: HashSet<u64> = HashSet::with_capacity(task_ids.len());
             let accept_failures = cfg.accept_failures;
-            link.for_each_result(run_id, &task_ids, cfg.round_timeout, |r| {
-                if !r.error.is_empty() {
-                    if accept_failures {
-                        log::warn!("round {round}: node {} failed: {}", r.node_id, r.error);
+            let fit_quorum = quorum.min(task_ids.len());
+            if quorum > task_ids.len() {
+                // Don't silently under-enforce the operator's floor.
+                log::warn!(
+                    "round {round}: min_available {quorum} exceeds the sampled fit \
+                     cohort of {} (fraction_fit too small?) — enforcing {fit_quorum}",
+                    task_ids.len()
+                );
+            }
+            let fit_policy = phase_policy(quorum, task_ids.len(), cfg.straggler_grace);
+            let wait =
+                link.for_each_result_policy(run_id, &task_ids, cfg.round_timeout, fit_policy, |r| {
+                    if !r.error.is_empty() {
+                        if accept_failures {
+                            log::warn!("round {round}: node {} failed: {}", r.node_id, r.error);
+                            return Ok(());
+                        }
+                        anyhow::bail!("round {round}: node {} failed: {}", r.node_id, r.error);
+                    }
+                    if !seen_nodes.insert(r.node_id) {
+                        crate::telemetry::bump("serverapp.duplicate_node_results_skipped", 1);
+                        log::warn!(
+                            "round {round}: node {} delivered a second (redelivered) result — skipped",
+                            r.node_id
+                        );
                         return Ok(());
                     }
-                    anyhow::bail!("round {round}: node {} failed: {}", r.node_id, r.error);
+                    fit_meta.push((r.node_id, r.num_examples, r.metrics.clone()));
+                    agg.accumulate(FitRes {
+                        node_id: r.node_id,
+                        parameters: r.parameters,
+                        num_examples: r.num_examples,
+                        metrics: r.metrics,
+                    })
+                })?;
+            if quorum == 0 && !wait.is_complete() {
+                // Strict mode: preserve the pre-resilience contract —
+                // the typed error still carries the wait outcome.
+                return Err(ResultTimeout {
+                    run_id,
+                    missing: wait.missing,
+                    failed: wait.failed,
+                    partial: Vec::new(),
                 }
-                fit_meta.push((r.node_id, r.num_examples, r.metrics.clone()));
-                agg.accumulate(FitRes {
-                    node_id: r.node_id,
-                    parameters: r.parameters,
-                    num_examples: r.num_examples,
-                    metrics: r.metrics,
-                })
-            })?;
+                .into());
+            }
             anyhow::ensure!(
                 agg.count() > 0,
                 "round {round}: no successful fit results"
             );
+            anyhow::ensure!(
+                quorum == 0 || agg.count() >= fit_quorum,
+                "round {round}: only {} of {} fit results (quorum {fit_quorum}; {} failed, {} missing)",
+                agg.count(),
+                fit_nodes.len(),
+                wait.failed.len(),
+                wait.missing.len()
+            );
+            // Strict mode demands the FULL cohort, not just a fully
+            // resolved wait: a dead node's task "completing" through a
+            // redelivered substitute (whose duplicate contribution is
+            // skipped above) must not pass as a clean round.
+            if quorum == 0 && !accept_failures {
+                anyhow::ensure!(
+                    fit_meta.len() == task_ids.len(),
+                    "round {round}: only {} of {} sampled nodes contributed distinct \
+                     results (a dead node's task was redelivered) — strict mode \
+                     requires the full cohort",
+                    fit_meta.len(),
+                    task_ids.len()
+                );
+            }
+            let participation = Participation {
+                sampled: fit_nodes.len(),
+                completed: fit_meta.len(),
+                dropped: fit_nodes.len().saturating_sub(fit_meta.len()),
+            };
+            // Gate on quorum: in strict mode a shortfall is either an
+            // error above or an accept_failures-tolerated client error,
+            // not a quorum finalization.
+            if participation.dropped > 0 && quorum > 0 {
+                crate::telemetry::bump("serverapp.partial_rounds", 1);
+                log::warn!(
+                    "round {round}: finalizing at quorum — {} of {} sampled nodes contributed",
+                    participation.completed,
+                    participation.sampled
+                );
+            }
             params = agg.finalize()?;
 
             // Weighted fit metrics, in canonical (node-sorted) order —
@@ -294,8 +433,16 @@ impl ServerApp {
             .1;
 
             // ---- evaluate phase ----
-            let (eval_loss, eval_metrics, per_client_eval) = if cfg.fraction_evaluate > 0.0 {
-                let eval_nodes = self.sample(&nodes, cfg.fraction_evaluate, round + (1 << 32));
+            // Sample from the CURRENT pool: nodes that died during the
+            // fit phase were reaped by its wait loop, and a task pushed
+            // to a dead node would strand until the grace/timeout. In a
+            // clean run this equals the round-start list, so histories
+            // are unchanged.
+            let eval_basis = link.nodes();
+            let (eval_loss, eval_metrics, per_client_eval) = if cfg.fraction_evaluate > 0.0
+                && !eval_basis.is_empty()
+            {
+                let eval_nodes = self.sample(&eval_basis, cfg.fraction_evaluate, round + (1 << 32));
                 let eval_cfg = self.strategy.configure_evaluate(round);
                 let task_ids: Vec<u64> = eval_nodes
                     .iter()
@@ -307,16 +454,39 @@ impl ServerApp {
                                 run_id,
                                 round,
                                 task_type: TaskType::Evaluate,
+                                attempt: 0,
+                                redeliver: false,
                                 parameters: params.clone(),
                                 config: eval_cfg.clone(),
                             },
                         )
                     })
                     .collect();
-                let mut results = link.await_results(run_id, &task_ids, cfg.round_timeout)?;
+                // Same completion semantics as fit (quorum clamped to
+                // the eval cohort, which is often smaller): with a
+                // quorum, missing evaluations shrink the weighted mean
+                // instead of failing the round.
+                let eval_policy = phase_policy(quorum, task_ids.len(), cfg.straggler_grace);
+                let (mut results, eval_wait) =
+                    link.await_results_policy(run_id, &task_ids, cfg.round_timeout, eval_policy);
+                if quorum == 0 && !eval_wait.is_complete() {
+                    // Strict mode: fail — but carry the eval payloads
+                    // that DID arrive (never lose received results).
+                    return Err(ResultTimeout {
+                        run_id,
+                        missing: eval_wait.missing,
+                        failed: eval_wait.failed,
+                        partial: results,
+                    }
+                    .into());
+                }
                 results.sort_by_key(|r| r.node_id);
                 let mut eval_results = Vec::new();
                 let mut per_client = Vec::new();
+                // One evaluation per node, mirroring the fit path: a
+                // redelivered eval executed by a node that already
+                // evaluated must not double its weight in the mean.
+                let mut seen_eval: HashSet<u64> = HashSet::with_capacity(results.len());
                 for r in results {
                     if !r.error.is_empty() {
                         if cfg.accept_failures {
@@ -328,6 +498,10 @@ impl ServerApp {
                             r.error
                         );
                     }
+                    if !seen_eval.insert(r.node_id) {
+                        crate::telemetry::bump("serverapp.duplicate_node_results_skipped", 1);
+                        continue;
+                    }
                     per_client.push((r.node_id, r.loss, r.metrics.clone()));
                     eval_results.push(EvalRes {
                         node_id: r.node_id,
@@ -336,8 +510,25 @@ impl ServerApp {
                         metrics: r.metrics,
                     });
                 }
-                let (loss, metrics) = self.strategy.aggregate_evaluate(round, &eval_results);
-                (Some(loss), metrics, per_client)
+                if quorum == 0 && !cfg.accept_failures {
+                    anyhow::ensure!(
+                        eval_results.len() == task_ids.len(),
+                        "round {round}: only {} of {} sampled nodes evaluated \
+                         (a dead node's task was redelivered) — strict mode \
+                         requires the full cohort",
+                        eval_results.len(),
+                        task_ids.len()
+                    );
+                }
+                if eval_results.is_empty() {
+                    // Every sampled evaluator died or errored: record
+                    // "no evaluation" instead of a fabricated 0.0 loss.
+                    log::warn!("round {round}: no evaluation results — eval_loss omitted");
+                    (None, Vec::new(), per_client)
+                } else {
+                    let (loss, metrics) = self.strategy.aggregate_evaluate(round, &eval_results);
+                    (Some(loss), metrics, per_client)
+                }
             } else {
                 (None, Vec::new(), Vec::new())
             };
@@ -365,6 +556,7 @@ impl ServerApp {
                 eval_loss,
                 eval_metrics,
                 per_client_eval,
+                participation,
             });
         }
         history.parameters = params;
@@ -420,6 +612,7 @@ mod tests {
                 eval_loss: Some(0.4),
                 eval_metrics: vec![("accuracy".into(), 0.8)],
                 per_client_eval: vec![],
+                participation: Participation::default(),
             }],
             parameters: ArrayRecord::from_flat(&[1.0]),
         };

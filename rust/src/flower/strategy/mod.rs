@@ -110,6 +110,15 @@ where
 pub trait Strategy: Send {
     fn name(&self) -> &'static str;
 
+    /// Can a round finalize from a strict subset of the sampled cohort
+    /// (partial participation under node churn)? True for every plain
+    /// reduction; secure aggregation overrides to `false` — its pairwise
+    /// masks only cancel when the FULL cohort contributes, so a dropout
+    /// must fail the round instead of silently de-anonymizing sums.
+    fn supports_partial(&self) -> bool {
+        true
+    }
+
     /// Extra config pushed to clients with each fit instruction.
     fn configure_fit(&mut self, _round: u64) -> ConfigRecord {
         Vec::new()

@@ -13,6 +13,21 @@
 //! never disturbs another. The link itself only stops serving when
 //! [`SuperLink::retire`] is called.
 //!
+//! **Resilience** (the FLARE runtime claim the paper's integration rests
+//! on): every frame a node sends renews its **liveness lease**
+//! ([`LinkConfig::lease`]). A node silent past its lease is declared
+//! dead: it leaves the pool, its queued and in-flight tasks are either
+//! **redelivered** to a healthy node (bounded by
+//! [`LinkConfig::max_redeliveries`]; the attempt count rides in
+//! `TaskIns::attempt`) or marked **failed**, and every waiter is woken.
+//! Task resolution is deduplicated: once a task completes (or fails), a
+//! late original result and a redelivered result can never both reach a
+//! consumer. Waiters opt into **partial participation** with a
+//! [`CompletionPolicy`] — finalize from a quorum of K results plus a
+//! straggler cutoff instead of erroring on the first dead node — and a
+//! timed-out [`SuperLink::await_results`] returns everything that DID
+//! arrive inside the [`ResultTimeout`] error instead of dropping it.
+//!
 //! Transport-facing surface is a single pure function
 //! [`SuperLink::handle_frame_shared`]: bytes in, bytes out — which is
 //! exactly what the FLARE LGC feeds it in bridged mode (§4.2) and what
@@ -25,9 +40,161 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::flower::message::{FlowerMsg, TaskIns, TaskRes};
+use crate::flower::message::{FlowerMsg, TaskIns, TaskRes, MAX_PINNED_NODE_ID};
 use crate::transport::Endpoint;
 use crate::util::bytes::Bytes;
+
+/// Marker in the Error reply to a pull from an unregistered node (most
+/// often: its liveness lease expired while it was busy). The SuperNode
+/// recognizes it and re-registers instead of polling a pool it is no
+/// longer part of.
+pub const UNKNOWN_NODE_ERR: &str = "unknown node";
+
+/// Liveness / redelivery knobs of one SuperLink.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkConfig {
+    /// Node liveness lease: every frame a node sends renews it; a node
+    /// silent for longer is declared dead (pool removal + task
+    /// requeue/failure). A SuperNode is silent for the whole duration of
+    /// a local `fit`, so the lease must comfortably exceed the longest
+    /// fit a client performs between pulls — the default matches the
+    /// default round timeout (never stricter than the old behaviour);
+    /// churn-tolerant deployments tune it down alongside their fit
+    /// budget.
+    pub lease: Duration,
+    /// How many times a task may be requeued to another healthy node
+    /// after its assignee died. 0 disables redelivery: orphaned tasks
+    /// fail immediately (the right setting for node-affine FL fit
+    /// tasks finalized at quorum).
+    pub max_redeliveries: u32,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        Self {
+            lease: Duration::from_secs(600),
+            max_redeliveries: 1,
+        }
+    }
+}
+
+/// Completion policy for result waits: when may the waiter stop?
+#[derive(Clone, Copy, Debug)]
+pub struct CompletionPolicy {
+    /// Minimum number of DISTINCT nodes that must deliver a successful
+    /// (error-free) result before the wait may finalize early — a
+    /// redelivered duplicate from a node that already contributed, or
+    /// an error result, never counts toward the quorum.
+    /// 0 = every task must resolve (strict mode).
+    pub min_results: usize,
+    /// Once the quorum is met, keep accepting stragglers for at most
+    /// this long before finalizing without them.
+    pub straggler_grace: Duration,
+}
+
+impl CompletionPolicy {
+    /// Strict policy: every task must resolve (the pre-resilience
+    /// behaviour).
+    pub fn all() -> Self {
+        Self {
+            min_results: 0,
+            straggler_grace: Duration::ZERO,
+        }
+    }
+
+    /// Quorum policy: finalize once `min_results` results arrived and
+    /// `straggler_grace` has elapsed since the quorum was met (or
+    /// everything else resolved first).
+    pub fn quorum(min_results: usize, straggler_grace: Duration) -> Self {
+        Self {
+            min_results,
+            straggler_grace,
+        }
+    }
+
+    fn requires_all(&self) -> bool {
+        self.min_results == 0
+    }
+}
+
+/// Summary of one policy-driven result wait.
+#[derive(Clone, Debug, Default)]
+pub struct RoundWait {
+    /// Task ids handed to the consumer, in arrival order.
+    pub completed: Vec<u64>,
+    /// Tasks the link declared failed (dead node, retries exhausted),
+    /// with the failure reason.
+    pub failed: Vec<(u64, String)>,
+    /// Tasks still unresolved when the wait ended (straggler cutoff or
+    /// deadline).
+    pub missing: Vec<u64>,
+    /// The overall deadline passed before the policy was satisfied.
+    pub timed_out: bool,
+}
+
+impl RoundWait {
+    /// Every task resolved successfully.
+    pub fn is_complete(&self) -> bool {
+        self.failed.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// A result wait ended before every task resolved. Carries everything
+/// that DID arrive, so received payloads are never lost to a timeout:
+/// [`SuperLink::await_results`] returns this as its typed error (it
+/// converts into `anyhow::Error` via `?`, keeping the message).
+#[derive(Debug, Default)]
+pub struct ResultTimeout {
+    pub run_id: u64,
+    /// Unresolved task ids.
+    pub missing: Vec<u64>,
+    /// Failed task ids with reasons.
+    pub failed: Vec<(u64, String)>,
+    /// Results that arrived before the wait ended — populated by
+    /// [`SuperLink::await_results`]; empty on the streaming path, whose
+    /// callback already consumed them.
+    pub partial: Vec<TaskRes>,
+}
+
+impl std::fmt::Display for ResultTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Only claim a timeout when tasks actually went unanswered — a
+        // wait aborted by lease-expiry failures resolves in
+        // milliseconds and must not read as a deadline problem.
+        write!(f, "run {}: ", self.run_id)?;
+        if !self.missing.is_empty() {
+            write!(f, "timed out waiting for task results {:?}", self.missing)?;
+            if !self.failed.is_empty() {
+                write!(f, "; ")?;
+            }
+        }
+        if !self.failed.is_empty() {
+            let ids: Vec<u64> = self.failed.iter().map(|(id, _)| *id).collect();
+            write!(f, "task(s) {ids:?} failed ({})", self.failed[0].1)?;
+        }
+        if !self.partial.is_empty() {
+            write!(f, "; {} received result(s) retained", self.partial.len())?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for ResultTimeout {}
+
+/// Per-node liveness record (shared pool).
+struct NodeHealth {
+    last_seen: Instant,
+}
+
+/// A task that has not resolved yet. The instruction itself is retained
+/// only for redeliverable tasks (the clone is cheap — record buffers
+/// are refcounted — but the dominant node-affine path needs none).
+struct InflightTask {
+    node_id: u64,
+    attempt: u32,
+    /// `Some` iff the task opted into redelivery.
+    ins: Option<TaskIns>,
+}
 
 /// Coordination state for ONE run. Created on first use (register or
 /// first task push) and marked inactive by [`SuperLink::finish`], which
@@ -39,8 +206,18 @@ use crate::util::bytes::Bytes;
 struct RunState {
     /// node_id -> queued instructions for this run.
     pending: HashMap<u64, VecDeque<TaskIns>>,
+    /// task_id -> unresolved task (queued or delivered) with its current
+    /// assignee; basis for redelivery when a lease expires.
+    inflight: HashMap<u64, InflightTask>,
     /// task_id -> result (drained incrementally by the ServerApp).
     results: HashMap<u64, TaskRes>,
+    /// task_id -> reason, for tasks that will never complete (dead node,
+    /// redeliveries exhausted). Claimed by waiters.
+    failed: HashMap<u64, String>,
+    /// Resolved task ids (result stored/consumed, or failed): the dedup
+    /// set that keeps a late original and a redelivered result from both
+    /// reaching a consumer.
+    done: HashSet<u64>,
     /// Still accepting/serving tasks?
     active: bool,
     /// Nodes that observed this run's finish: they pulled after the run
@@ -53,7 +230,10 @@ impl RunState {
     fn new() -> RunState {
         RunState {
             pending: HashMap::new(),
+            inflight: HashMap::new(),
             results: HashMap::new(),
+            failed: HashMap::new(),
+            done: HashSet::new(),
             active: true,
             acked: HashSet::new(),
         }
@@ -61,31 +241,43 @@ impl RunState {
 }
 
 pub struct SuperLink {
+    cfg: LinkConfig,
     next_node: AtomicU64,
     next_task: AtomicU64,
-    /// Shared node pool — every run samples from the same fleet.
-    nodes: Mutex<Vec<u64>>,
+    /// Shared node pool — every run samples from the same fleet. The
+    /// health record carries each node's lease.
+    nodes: Mutex<HashMap<u64, NodeHealth>>,
     /// run_id -> run-scoped coordination state.
     runs: Mutex<HashMap<u64, RunState>>,
     /// Link-level shutdown: set by [`SuperLink::retire`]; SuperNodes
     /// exit (and deregister) when they see it on their next pull.
     retired: AtomicBool,
-    /// Signaled on node registration/deregistration, new results, and
-    /// run finish — every waiter (`wait_for_nodes`, `for_each_result`,
-    /// `wait_drained`, `wait_all_drained`) blocks on this condvar.
+    /// Signaled on node registration/deregistration, new results, lease
+    /// expiry, and run finish — every waiter (`wait_for_nodes`,
+    /// `for_each_result`, `wait_drained`, `wait_all_drained`) blocks on
+    /// this condvar.
     notify: (Mutex<u64>, Condvar),
 }
 
 impl SuperLink {
     pub fn new() -> Arc<SuperLink> {
+        Self::with_config(LinkConfig::default())
+    }
+
+    pub fn with_config(cfg: LinkConfig) -> Arc<SuperLink> {
         Arc::new(SuperLink {
+            cfg,
             next_node: AtomicU64::new(1),
             next_task: AtomicU64::new(1),
-            nodes: Mutex::new(Vec::new()),
+            nodes: Mutex::new(HashMap::new()),
             runs: Mutex::new(HashMap::new()),
             retired: AtomicBool::new(false),
             notify: (Mutex::new(0), Condvar::new()),
         })
+    }
+
+    pub fn config(&self) -> &LinkConfig {
+        &self.cfg
     }
 
     fn notify_all(&self) {
@@ -95,7 +287,8 @@ impl SuperLink {
     }
 
     /// Block on the notify condvar until roughly `deadline` (capped
-    /// waits keep us robust against missed wakeups).
+    /// waits keep us robust against missed wakeups, and give lease
+    /// reaping a bounded cadence while anyone waits).
     fn wait_notified(&self, deadline: Instant) {
         let now = Instant::now();
         if now >= deadline {
@@ -106,6 +299,109 @@ impl SuperLink {
         let _ = cv
             .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
             .unwrap();
+    }
+
+    /// Renew a registered node's liveness lease (no-op for unknown or
+    /// already-dead nodes: death is not undone by a late frame).
+    fn touch(&self, node_id: u64) {
+        if let Some(h) = self.nodes.lock().unwrap().get_mut(&node_id) {
+            h.last_seen = Instant::now();
+        }
+    }
+
+    /// Declare every node with an expired lease dead — remove it from
+    /// the pool — then settle every task assigned to a node that is NOT
+    /// in the pool (dead, or never registered): requeue it to a healthy
+    /// node if it opted into redelivery (bounded by `max_redeliveries`,
+    /// attempt count carried in the redelivered `TaskIns`) or mark it
+    /// failed, and wake all waiters. Sweeping by absence (not just by
+    /// the nodes reaped this call) means a task pushed to an
+    /// already-reaped node — e.g. racing another run's reap — is settled
+    /// promptly instead of stranding until the round timeout. Called
+    /// from every driver-side wait loop; safe to call at any time.
+    pub fn reap_expired(&self) {
+        let now = Instant::now();
+        let dead: Vec<u64> = {
+            let mut nodes = self.nodes.lock().unwrap();
+            let dead: Vec<u64> = nodes
+                .iter()
+                .filter(|(_, h)| now.duration_since(h.last_seen) > self.cfg.lease)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in &dead {
+                nodes.remove(id);
+            }
+            dead
+        };
+        for id in &dead {
+            crate::telemetry::bump("superlink.nodes_expired", 1);
+            log::warn!("superlink: node {id} lease expired — declared dead");
+        }
+        let alive = self.nodes();
+        let alive_set: HashSet<u64> = alive.iter().copied().collect();
+        let mut changed = !dead.is_empty();
+        {
+            let mut runs = self.runs.lock().unwrap();
+            for run in runs.values_mut() {
+                for d in &dead {
+                    run.pending.remove(d);
+                }
+                if !run.active {
+                    continue;
+                }
+                let orphaned: Vec<u64> = run
+                    .inflight
+                    .iter()
+                    .filter(|(_, t)| !alive_set.contains(&t.node_id))
+                    .map(|(id, _)| *id)
+                    .collect();
+                for tid in orphaned {
+                    changed = true;
+                    let mut task = run.inflight.remove(&tid).unwrap();
+                    // Reclaim any still-queued copy (absent assignee).
+                    if let Some(q) = run.pending.get_mut(&task.node_id) {
+                        q.retain(|t| t.task_id != tid);
+                    }
+                    // Node-affine tasks (FL fit/evaluate, `ins == None`)
+                    // opt out of redelivery: a substitute executing them
+                    // would pollute the cohort, so they fail instead.
+                    let redeliverable = task.ins.is_some()
+                        && task.attempt < self.cfg.max_redeliveries
+                        && !alive.is_empty();
+                    if redeliverable {
+                        let mut ins = task.ins.take().expect("checked is_some");
+                        ins.attempt += 1;
+                        let target = alive[tid as usize % alive.len()];
+                        let from = task.node_id;
+                        run.pending.entry(target).or_default().push_back(ins.clone());
+                        crate::telemetry::bump("superlink.tasks_redelivered", 1);
+                        log::warn!(
+                            "superlink: task {tid} redelivered {from} -> {target} (attempt {})",
+                            ins.attempt
+                        );
+                        run.inflight.insert(
+                            tid,
+                            InflightTask {
+                                node_id: target,
+                                attempt: ins.attempt,
+                                ins: Some(ins),
+                            },
+                        );
+                    } else {
+                        let reason = format!(
+                            "node {} unavailable (lease expired or never registered; attempt {})",
+                            task.node_id, task.attempt
+                        );
+                        run.failed.insert(tid, reason);
+                        run.done.insert(tid);
+                        crate::telemetry::bump("superlink.tasks_failed", 1);
+                    }
+                }
+            }
+        }
+        if changed {
+            self.notify_all();
+        }
     }
 
     // ------------------------------------------------------------------
@@ -135,19 +431,29 @@ impl SuperLink {
         let reply = match msg {
             FlowerMsg::CreateNode { requested } => {
                 let mut nodes = self.nodes.lock().unwrap();
-                let id = if requested != 0 && !nodes.contains(&requested) {
+                // Decode already rejects out-of-range pins; the clamp is
+                // defense in depth against in-process callers.
+                let id = if requested != 0
+                    && requested <= MAX_PINNED_NODE_ID
+                    && !nodes.contains_key(&requested)
+                {
                     // Keep the auto counter ahead of pinned ids.
                     self.next_node.fetch_max(requested + 1, Ordering::Relaxed);
                     requested
                 } else {
                     loop {
                         let id = self.next_node.fetch_add(1, Ordering::Relaxed);
-                        if !nodes.contains(&id) {
+                        if !nodes.contains_key(&id) {
                             break id;
                         }
                     }
                 };
-                nodes.push(id);
+                nodes.insert(
+                    id,
+                    NodeHealth {
+                        last_seen: Instant::now(),
+                    },
+                );
                 drop(nodes);
                 log::info!("superlink: node {id} created");
                 // Wake `wait_for_nodes` waiters.
@@ -155,7 +461,21 @@ impl SuperLink {
                 FlowerMsg::NodeCreated { node_id: id }
             }
             FlowerMsg::PullTaskIns { node_id } => {
-                let known = self.nodes.lock().unwrap().contains(&node_id);
+                self.touch(node_id);
+                let known = self.nodes.lock().unwrap().contains_key(&node_id);
+                if !known && !self.retired.load(Ordering::Acquire) {
+                    // A reaped (or never-registered) node is polling a
+                    // pool it is not part of: tell it so it can
+                    // re-register and rejoin — otherwise a transient
+                    // stall would shrink the fleet permanently. (Its old
+                    // tasks were already settled — failed or redelivered
+                    // — when the lease was reaped; rejoining starts
+                    // fresh.)
+                    return FlowerMsg::Error {
+                        message: format!("{UNKNOWN_NODE_ERR} {node_id}: re-register to rejoin"),
+                    }
+                    .encode();
+                }
                 let mut tasks = Vec::new();
                 let mut acked = false;
                 {
@@ -185,35 +505,47 @@ impl SuperLink {
                 }
             }
             FlowerMsg::PushTaskRes { res } => {
+                self.touch(res.node_id);
                 let stored = {
                     let mut runs = self.runs.lock().unwrap();
                     match runs.get_mut(&res.run_id) {
                         Some(run) if run.active => {
-                            run.results.insert(res.task_id, res);
-                            true
+                            if run.done.insert(res.task_id) {
+                                run.inflight.remove(&res.task_id);
+                                run.results.insert(res.task_id, res);
+                                true
+                            } else {
+                                // The task already resolved: a late
+                                // original racing its redelivery (or a
+                                // retried push). Exactly one result may
+                                // reach the consumer — drop this one.
+                                crate::telemetry::bump(
+                                    "superlink.duplicate_results_dropped",
+                                    1,
+                                );
+                                false
+                            }
                         }
-                        _ => false,
+                        _ => {
+                            // Straggler past its run's finish (or an
+                            // unknown run): nothing will ever consume it
+                            // — drop the payload instead of leaking it
+                            // in the run map.
+                            crate::telemetry::bump("superlink.stale_results_dropped", 1);
+                            false
+                        }
                     }
                 };
                 if stored {
                     self.notify_all();
-                } else {
-                    // Straggler past its run's finish (or an unknown
-                    // run): nothing will ever consume it — drop the
-                    // payload instead of leaking it in the run map.
-                    crate::telemetry::bump("superlink.stale_results_dropped", 1);
                 }
                 FlowerMsg::PushAccepted
             }
             FlowerMsg::DeleteNode { node_id } => {
-                self.nodes.lock().unwrap().retain(|n| *n != node_id);
-                self.runs
-                    .lock()
-                    .unwrap()
-                    .values_mut()
-                    .for_each(|run| {
-                        run.pending.remove(&node_id);
-                    });
+                self.nodes.lock().unwrap().remove(&node_id);
+                self.runs.lock().unwrap().values_mut().for_each(|run| {
+                    run.pending.remove(&node_id);
+                });
                 // Wake drain waiters: this is the SuperNode's
                 // acknowledgment of retirement.
                 self.notify_all();
@@ -252,9 +584,9 @@ impl SuperLink {
     // Driver surface (used by ServerApps, in-process)
     // ------------------------------------------------------------------
 
-    /// Registered node ids, sorted (deterministic sampling basis).
+    /// Registered (live) node ids, sorted (deterministic sampling basis).
     pub fn nodes(&self) -> Vec<u64> {
-        let mut v = self.nodes.lock().unwrap().clone();
+        let mut v: Vec<u64> = self.nodes.lock().unwrap().keys().copied().collect();
         v.sort_unstable();
         v
     }
@@ -264,6 +596,7 @@ impl SuperLink {
     pub fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>> {
         let deadline = Instant::now() + timeout;
         loop {
+            self.reap_expired();
             let nodes = self.nodes();
             if nodes.len() >= n {
                 return Ok(nodes);
@@ -314,6 +647,16 @@ impl SuperLink {
             log::warn!("superlink: refused task push to finished run {run_id}");
             return task_id;
         }
+        run.inflight.insert(
+            task_id,
+            InflightTask {
+                node_id,
+                attempt: ins.attempt,
+                // Retain the instruction only when redelivery may need
+                // it — the node-affine path stores just the assignment.
+                ins: ins.redeliver.then(|| ins.clone()),
+            },
+        );
         run.pending.entry(node_id).or_default().push_back(ins);
         task_id
     }
@@ -322,18 +665,60 @@ impl SuperLink {
     /// (arrival order, not task order): aggregation work overlaps
     /// stragglers and the result map drains incrementally instead of
     /// buffering the whole cohort. Returns once every task id has been
-    /// handed to `f`; an error from `f` aborts the wait.
+    /// handed to `f`; an error from `f` aborts the wait, and a wait that
+    /// cannot complete (timeout or dead-node task failure) reports the
+    /// unresolved ids via [`ResultTimeout`] — results already handed to
+    /// `f` are never lost.
     pub fn for_each_result(
         &self,
         run_id: u64,
         task_ids: &[u64],
         timeout: Duration,
-        mut f: impl FnMut(TaskRes) -> anyhow::Result<()>,
+        f: impl FnMut(TaskRes) -> anyhow::Result<()>,
     ) -> anyhow::Result<()> {
+        let wait =
+            self.for_each_result_policy(run_id, task_ids, timeout, CompletionPolicy::all(), f)?;
+        if wait.is_complete() {
+            Ok(())
+        } else {
+            Err(anyhow::Error::new(ResultTimeout {
+                run_id,
+                missing: wait.missing,
+                failed: wait.failed,
+                partial: Vec::new(),
+            }))
+        }
+    }
+
+    /// Policy-driven streaming wait: like [`SuperLink::for_each_result`]
+    /// but the [`CompletionPolicy`] decides when the wait may stop, and
+    /// the outcome is reported as data ([`RoundWait`]) instead of an
+    /// error — quorum callers inspect `completed`/`failed`/`missing` and
+    /// finalize from whatever arrived. Only a callback error aborts.
+    ///
+    /// Each loop iteration reaps expired node leases, so a dead node is
+    /// detected while the round waits on it — not after the deadline.
+    pub fn for_each_result_policy(
+        &self,
+        run_id: u64,
+        task_ids: &[u64],
+        timeout: Duration,
+        policy: CompletionPolicy,
+        mut f: impl FnMut(TaskRes) -> anyhow::Result<()>,
+    ) -> anyhow::Result<RoundWait> {
         let deadline = Instant::now() + timeout;
         let mut remaining: HashSet<u64> = task_ids.iter().copied().collect();
+        let mut wait = RoundWait::default();
+        let mut quorum_at: Option<Instant> = None;
+        // Quorum basis: distinct nodes with a successful result. A
+        // redelivered duplicate or an error result must not count, or
+        // the wait could finalize with fewer real contributions than
+        // the caller's quorum.
+        let mut quorum_nodes: HashSet<u64> = HashSet::new();
         while !remaining.is_empty() {
-            let ready: Vec<TaskRes> = {
+            self.reap_expired();
+            // Claim ready results and failure verdicts under one lock.
+            let (ready, newly_failed) = {
                 let mut runs = self.runs.lock().unwrap();
                 match runs.get_mut(&run_id) {
                     Some(run) => {
@@ -345,47 +730,127 @@ impl SuperLink {
                         // Deterministic tie-break when several results
                         // are pending at once.
                         ids.sort_unstable();
-                        ids.iter().map(|id| run.results.remove(id).unwrap()).collect()
+                        let ready: Vec<TaskRes> =
+                            ids.iter().map(|id| run.results.remove(id).unwrap()).collect();
+                        let mut failed: Vec<(u64, String)> = remaining
+                            .iter()
+                            .filter_map(|id| run.failed.get(id).map(|e| (*id, e.clone())))
+                            .collect();
+                        failed.sort_unstable_by_key(|(id, _)| *id);
+                        for (id, _) in &failed {
+                            run.failed.remove(id);
+                        }
+                        (ready, failed)
                     }
-                    None => Vec::new(),
+                    None => (Vec::new(), Vec::new()),
                 }
             };
+            for (id, reason) in newly_failed {
+                remaining.remove(&id);
+                wait.failed.push((id, reason));
+            }
             // Hand over outside the lock: `f` may aggregate a full model.
             for res in ready {
                 remaining.remove(&res.task_id);
+                wait.completed.push(res.task_id);
+                if res.error.is_empty() {
+                    quorum_nodes.insert(res.node_id);
+                }
                 f(res)?;
             }
             if remaining.is_empty() {
                 break;
             }
-            if Instant::now() >= deadline {
-                let mut missing: Vec<u64> = remaining.into_iter().collect();
-                missing.sort_unstable();
-                anyhow::bail!("run {run_id}: timed out waiting for task results {missing:?}");
+            let now = Instant::now();
+            let mut wake = deadline;
+            if !policy.requires_all() && quorum_nodes.len() >= policy.min_results {
+                // Quorum met: finalize after the straggler grace.
+                let at = *quorum_at.get_or_insert(now) + policy.straggler_grace;
+                if now >= at {
+                    break;
+                }
+                wake = wake.min(at);
+            } else if policy.requires_all() && !wait.failed.is_empty() {
+                // Completion is impossible — don't burn the deadline.
+                break;
             }
-            self.wait_notified(deadline);
+            if now >= deadline {
+                wait.timed_out = true;
+                break;
+            }
+            self.wait_notified(wake);
         }
-        Ok(())
+        wait.missing = remaining.into_iter().collect();
+        wait.missing.sort_unstable();
+        if !wait.missing.is_empty() {
+            // Abandon what the wait gave up on: mark the ids resolved
+            // (late results are dropped like post-finish stragglers,
+            // never stored), and reclaim their queued/in-flight task
+            // copies. Without this, every quorum cutoff would leak one
+            // unclaimed full-model result per straggler until run
+            // finish.
+            let abandoned: HashSet<u64> = wait.missing.iter().copied().collect();
+            let mut runs = self.runs.lock().unwrap();
+            if let Some(run) = runs.get_mut(&run_id) {
+                for id in &wait.missing {
+                    run.done.insert(*id);
+                    run.inflight.remove(id);
+                    run.failed.remove(id);
+                    run.results.remove(id);
+                }
+                for q in run.pending.values_mut() {
+                    q.retain(|t| !abandoned.contains(&t.task_id));
+                }
+            }
+        }
+        Ok(wait)
     }
 
     /// Await results for all `task_ids` of one run; returned in
-    /// `task_ids` order. (Batch convenience over
-    /// [`SuperLink::for_each_result`].)
+    /// `task_ids` order. On timeout the typed [`ResultTimeout`] error
+    /// CARRIES every result that did arrive — partial payloads are
+    /// never discarded. (Batch convenience over
+    /// [`SuperLink::for_each_result_policy`]; `?` converts the error
+    /// into `anyhow::Error` at mixed call sites.)
     pub fn await_results(
         &self,
         run_id: u64,
         task_ids: &[u64],
         timeout: Duration,
-    ) -> anyhow::Result<Vec<TaskRes>> {
+    ) -> Result<Vec<TaskRes>, ResultTimeout> {
+        let (results, wait) =
+            self.await_results_policy(run_id, task_ids, timeout, CompletionPolicy::all());
+        if wait.is_complete() {
+            Ok(results)
+        } else {
+            Err(ResultTimeout {
+                run_id,
+                missing: wait.missing,
+                failed: wait.failed,
+                partial: results,
+            })
+        }
+    }
+
+    /// Policy-aware batch wait: returns every result that arrived (in
+    /// `task_ids` order) plus the wait summary. Missing or failed tasks
+    /// are data, not errors — the quorum path inspects the summary.
+    pub fn await_results_policy(
+        &self,
+        run_id: u64,
+        task_ids: &[u64],
+        timeout: Duration,
+        policy: CompletionPolicy,
+    ) -> (Vec<TaskRes>, RoundWait) {
         let mut got: HashMap<u64, TaskRes> = HashMap::with_capacity(task_ids.len());
-        self.for_each_result(run_id, task_ids, timeout, |res| {
-            got.insert(res.task_id, res);
-            Ok(())
-        })?;
-        Ok(task_ids
-            .iter()
-            .map(|id| got.remove(id).expect("for_each_result delivered all ids"))
-            .collect())
+        let wait = self
+            .for_each_result_policy(run_id, task_ids, timeout, policy, |res| {
+                got.insert(res.task_id, res);
+                Ok(())
+            })
+            .expect("collector callback is infallible");
+        let results = task_ids.iter().filter_map(|id| got.remove(id)).collect();
+        (results, wait)
     }
 
     /// Mark ONE run finished: undelivered tasks and unconsumed results
@@ -404,6 +869,9 @@ impl SuperLink {
                 log::warn!("superlink: run {run_id} finished with {dropped} undelivered task(s)");
             }
             run.pending.clear();
+            run.inflight.clear();
+            run.failed.clear();
+            run.done.clear();
             if !run.results.is_empty() {
                 crate::telemetry::bump(
                     "superlink.finish_dropped_results",
@@ -415,14 +883,17 @@ impl SuperLink {
         self.notify_all();
     }
 
-    /// Per-run drain: block until every registered node has acknowledged
-    /// this run's finish (pulled after [`SuperLink::finish`], or
-    /// deregistered), or the deadline passes. Returns `true` when the
-    /// run drained — its driver can then tear down without racing
-    /// in-flight frames, while other runs keep the fleet busy.
+    /// Per-run drain: block until every live registered node has
+    /// acknowledged this run's finish (pulled after
+    /// [`SuperLink::finish`], or deregistered), or the deadline passes.
+    /// Dead nodes never block a drain — their leases are reaped while
+    /// waiting. Returns `true` when the run drained — its driver can
+    /// then tear down without racing in-flight frames, while other runs
+    /// keep the fleet busy.
     pub fn wait_drained(&self, run_id: u64, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
         loop {
+            self.reap_expired();
             let nodes = self.nodes();
             let drained = {
                 let runs = self.runs.lock().unwrap();
@@ -456,14 +927,16 @@ impl SuperLink {
         !self.retired.load(Ordering::Acquire)
     }
 
-    /// Link-level shutdown drain: block until every registered SuperNode
-    /// has acknowledged retirement by deregistering (`DeleteNode`), or
-    /// the deadline passes. Returns `true` when all nodes drained — the
-    /// job cell can then tear down without racing in-flight frames.
-    /// Call after [`SuperLink::retire`].
+    /// Link-level shutdown drain: block until every live registered
+    /// SuperNode has acknowledged retirement by deregistering
+    /// (`DeleteNode`), or the deadline passes. Crashed nodes are reaped
+    /// by their lease while waiting, so a dead client never holds the
+    /// teardown for the full deadline. Returns `true` when all nodes
+    /// drained. Call after [`SuperLink::retire`].
     pub fn wait_all_drained(&self, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
         loop {
+            self.reap_expired();
             if self.nodes.lock().unwrap().is_empty() {
                 return true;
             }
@@ -487,6 +960,9 @@ mod tests {
             run_id,
             round,
             task_type: TaskType::Fit,
+            attempt: 0,
+            // Link-level tests exercise the redelivery machinery.
+            redeliver: true,
             parameters: ArrayRecord::from_flat(&[1.0]),
             config: vec![],
         }
@@ -540,6 +1016,31 @@ mod tests {
     }
 
     #[test]
+    fn out_of_range_pin_is_refused_and_cannot_wrap_the_counter() {
+        let link = SuperLink::new();
+        // A u64::MAX pin arrives as a frame: decode rejects it and the
+        // link answers with an Error frame instead of wrapping
+        // `next_node` to 0.
+        let rep = FlowerMsg::decode(
+            &link.handle_frame(
+                &FlowerMsg::CreateNode {
+                    requested: u64::MAX,
+                }
+                .encode(),
+            ),
+        )
+        .unwrap();
+        assert!(matches!(rep, FlowerMsg::Error { .. }), "{rep:?}");
+        assert!(link.nodes().is_empty());
+        // Auto-assignment still starts at 1 — no duplicate ids possible.
+        let rep = FlowerMsg::decode(
+            &link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode()),
+        )
+        .unwrap();
+        assert_eq!(rep, FlowerMsg::NodeCreated { node_id: 1 });
+    }
+
+    #[test]
     fn push_pull_roundtrip() {
         let link = SuperLink::new();
         link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
@@ -577,6 +1078,182 @@ mod tests {
             .await_results(1, &[42], Duration::from_millis(50))
             .unwrap_err();
         assert!(err.to_string().contains("42"));
+    }
+
+    #[test]
+    fn await_results_timeout_returns_partial_set() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let t1 = link.push_task(1, ins(1));
+        let t2 = link.push_task(1, ins(1));
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(t1, 1) }.encode());
+        let timeout = link
+            .await_results(1, &[t1, t2], Duration::from_millis(60))
+            .unwrap_err();
+        // The timeout error CARRIES the result that did arrive.
+        assert_eq!(timeout.missing, vec![t2]);
+        assert_eq!(timeout.partial.len(), 1);
+        assert_eq!(timeout.partial[0].task_id, t1);
+        assert!(timeout.to_string().contains(&t2.to_string()));
+    }
+
+    #[test]
+    fn quorum_policy_finalizes_without_stragglers() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let t1 = link.push_task(1, ins(1));
+        let t2 = link.push_task(2, ins(1));
+        let t3 = link.push_task(1, ins(1));
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(t1, 1) }.encode());
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(t2, 2) }.encode());
+        let t0 = Instant::now();
+        let mut seen = Vec::new();
+        let wait = link
+            .for_each_result_policy(
+                1,
+                &[t1, t2, t3],
+                Duration::from_secs(30),
+                CompletionPolicy::quorum(2, Duration::from_millis(40)),
+                |r| {
+                    seen.push(r.task_id);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        // Finalized at quorum + grace, nowhere near the 30s deadline.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(seen, vec![t1, t2]);
+        assert_eq!(wait.completed, vec![t1, t2]);
+        assert_eq!(wait.missing, vec![t3]);
+        assert!(!wait.timed_out);
+        assert!(!wait.is_complete());
+    }
+
+    #[test]
+    fn quorum_counts_distinct_successful_nodes_only() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let t1 = link.push_task(1, ins(1));
+        let t2 = link.push_task(2, ins(1));
+        let t3 = link.push_task(1, ins(1));
+        // Node 1 delivers TWO task results (e.g. its own + a redelivered
+        // one): still only ONE distinct contributor — a quorum of 2 must
+        // NOT finalize at the straggler grace.
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(t1, 1) }.encode());
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(t3, 1) }.encode());
+        let wait = link
+            .for_each_result_policy(
+                1,
+                &[t1, t2, t3],
+                Duration::from_millis(250),
+                CompletionPolicy::quorum(2, Duration::from_millis(30)),
+                |_| Ok(()),
+            )
+            .unwrap();
+        assert_eq!(wait.completed.len(), 2);
+        assert!(
+            wait.timed_out,
+            "two results from one node must not satisfy a 2-node quorum"
+        );
+        assert_eq!(wait.missing, vec![t2]);
+    }
+
+    #[test]
+    fn expired_lease_fails_inflight_tasks_and_wakes_waiter() {
+        let link = SuperLink::with_config(LinkConfig {
+            lease: Duration::from_millis(120),
+            max_redeliveries: 0,
+        });
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let tid = link.push_task(1, ins(1));
+        let (tasks, _) = pull(&link, 1);
+        assert_eq!(tasks.len(), 1);
+        // The node now goes silent: the waiter must learn about the
+        // death via the lease — long before the 10s deadline.
+        let t0 = Instant::now();
+        let wait = link
+            .for_each_result_policy(
+                1,
+                &[tid],
+                Duration::from_secs(10),
+                CompletionPolicy::all(),
+                |_| Ok(()),
+            )
+            .unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "{:?}", t0.elapsed());
+        assert!(!wait.timed_out, "failure must be detected, not timed out");
+        assert_eq!(wait.failed.len(), 1);
+        assert_eq!(wait.failed[0].0, tid);
+        assert!(wait.failed[0].1.contains("lease expired"));
+        // The dead node left the pool.
+        assert!(link.nodes().is_empty());
+        // A task pushed to a node that is NOT in the pool settles on the
+        // next reap instead of stranding until the deadline — and the
+        // plain streaming API surfaces it as an error.
+        let t2 = link.push_task(9, ins(1));
+        let t0 = Instant::now();
+        let err = link
+            .for_each_result(1, &[t2], Duration::from_secs(10), |_| Ok(()))
+            .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "{:?}", t0.elapsed());
+        assert!(err.to_string().contains("failed"), "{err}");
+    }
+
+    #[test]
+    fn expired_lease_redelivers_to_healthy_node_with_attempt_count() {
+        let link = SuperLink::with_config(LinkConfig {
+            // Wide enough that node 2's 5ms poll loop cannot be reaped
+            // by CI scheduling noise; node 1's silence still expires
+            // well inside the await deadline.
+            lease: Duration::from_millis(500),
+            max_redeliveries: 1,
+        });
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let tid = link.push_task(1, ins(1));
+        let (tasks, _) = pull(&link, 1);
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].attempt, 0);
+        // Node 2 keeps its lease alive and picks up the redelivery;
+        // node 1 stays silent until its lease expires.
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || loop {
+            let reply = FlowerMsg::decode(
+                &l2.handle_frame(&FlowerMsg::PullTaskIns { node_id: 2 }.encode()),
+            )
+            .unwrap();
+            if let FlowerMsg::TaskInsList { tasks, .. } = reply {
+                if let Some(t) = tasks.into_iter().next() {
+                    l2.handle_frame(
+                        &FlowerMsg::PushTaskRes {
+                            res: res(t.task_id, 2),
+                        }
+                        .encode(),
+                    );
+                    return t;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        let out = link.await_results(1, &[tid], Duration::from_secs(10)).unwrap();
+        assert_eq!(out[0].node_id, 2, "result must come from the healthy node");
+        let redelivered = h.join().unwrap();
+        assert_eq!(redelivered.task_id, tid);
+        assert_eq!(redelivered.attempt, 1, "attempt count must ride the wire");
+
+        // The late original result from the dead node is deduplicated:
+        // it never reaches a consumer.
+        let before = crate::telemetry::counter("superlink.duplicate_results_dropped")
+            .load(std::sync::atomic::Ordering::Relaxed);
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(tid, 1) }.encode());
+        let after = crate::telemetry::counter("superlink.duplicate_results_dropped")
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(after, before + 1);
+        assert!(link
+            .await_results(1, &[tid], Duration::from_millis(40))
+            .is_err());
     }
 
     #[test]
@@ -763,6 +1440,22 @@ mod tests {
         });
         assert!(link.wait_all_drained(Duration::from_secs(2)));
         h.join().unwrap();
+    }
+
+    #[test]
+    fn wait_all_drained_reaps_crashed_nodes() {
+        // A SuperNode that crashed without deregistering must not hold
+        // the link-level drain for the full deadline: its lease expires
+        // while the drain waits.
+        let link = SuperLink::with_config(LinkConfig {
+            lease: Duration::from_millis(120),
+            max_redeliveries: 0,
+        });
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        link.retire();
+        let t0 = Instant::now();
+        assert!(link.wait_all_drained(Duration::from_secs(10)));
+        assert!(t0.elapsed() < Duration::from_secs(5), "{:?}", t0.elapsed());
     }
 
     #[test]

@@ -126,14 +126,31 @@ impl SuperNode {
     /// Main loop: serve tasks until no run is active. Returns the number
     /// of tasks executed. On exit the node deregisters via `DeleteNode` —
     /// the deterministic drain ack the bridge's job teardown waits on.
+    ///
+    /// If the SuperLink declares this node unknown (its liveness lease
+    /// expired while a long local fit kept it silent), the node
+    /// re-registers and rejoins the pool instead of polling forever.
     pub fn run(&mut self) -> anyhow::Result<u64> {
-        let node_id = match self.node_id {
+        let mut node_id = match self.node_id {
             Some(id) => id,
             None => self.connect()?,
         };
         let mut executed = 0u64;
         loop {
-            let reply = self.rpc(&FlowerMsg::PullTaskIns { node_id })?;
+            let reply = match self.rpc(&FlowerMsg::PullTaskIns { node_id }) {
+                Ok(reply) => reply,
+                Err(e)
+                    if e.to_string()
+                        .contains(crate::flower::superlink::UNKNOWN_NODE_ERR) =>
+                {
+                    log::warn!(
+                        "supernode {node_id}: lease expired on the superlink — re-registering"
+                    );
+                    node_id = self.connect()?;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
             let (tasks, active) = match reply {
                 FlowerMsg::TaskInsList { tasks, active } => (tasks, active),
                 other => anyhow::bail!("unexpected reply to Pull: {other:?}"),
@@ -232,6 +249,8 @@ mod tests {
                 run_id: 1,
                 round: 1,
                 task_type: TaskType::Fit,
+                attempt: 0,
+                redeliver: false,
                 parameters: ArrayRecord::from_flat(&[1.0, 2.0]),
                 config: vec![],
             },
@@ -301,6 +320,8 @@ mod tests {
                 run_id: 1,
                 round: 1,
                 task_type: TaskType::Fit,
+                attempt: 0,
+                redeliver: false,
                 parameters: ArrayRecord::new(),
                 config: vec![],
             },

@@ -2,9 +2,20 @@
 //! (DESIGN.md E3): drops frames with probability `drop_prob` on send and
 //! adds fixed `latency` before delivery on receive. Deterministic given
 //! the seed, so reliability sweeps are reproducible.
+//!
+//! A [`FaultHandle`] adds chaos-test control on top of the stochastic
+//! faults: [`FaultHandle::kill`] makes the link go dark (sends vanish,
+//! queued and future deliveries are discarded — a crashed or partitioned
+//! peer) until [`FaultHandle::heal`].
+//!
+//! Receive blocking delegates to the INNER endpoint's own blocking
+//! receive (its condvar), waking exactly at the next scheduled delivery
+//! or the caller deadline — an idle fault endpoint burns no CPU (no
+//! 1ms poll floor).
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::{Endpoint, Frame, TransportError};
@@ -29,12 +40,38 @@ impl Default for FaultConfig {
     }
 }
 
+/// Shared kill switch for one [`FaultEndpoint`]: cloneable, usable from
+/// any thread while the endpoint itself is in use elsewhere.
+#[derive(Clone)]
+pub struct FaultHandle {
+    killed: Arc<AtomicBool>,
+}
+
+impl FaultHandle {
+    /// Take the link dark: every subsequent send is silently dropped and
+    /// every queued or arriving frame is discarded — the peer looks
+    /// crashed/partitioned.
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::Release);
+    }
+
+    /// Restore the link (frames discarded while dark stay lost).
+    pub fn heal(&self) {
+        self.killed.store(false, Ordering::Release);
+    }
+
+    pub fn is_killed(&self) -> bool {
+        self.killed.load(Ordering::Acquire)
+    }
+}
+
 pub struct FaultEndpoint<E: Endpoint> {
     inner: E,
     cfg: FaultConfig,
     rng: Mutex<Rng>,
     /// Frames received from inner but not yet "delivered" (latency).
     pending: Mutex<VecDeque<(Instant, Frame)>>,
+    killed: Arc<AtomicBool>,
 }
 
 impl<E: Endpoint> FaultEndpoint<E> {
@@ -45,14 +82,31 @@ impl<E: Endpoint> FaultEndpoint<E> {
             cfg,
             rng,
             pending: Mutex::new(VecDeque::new()),
+            killed: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Chaos-test control for this endpoint's kill switch.
+    pub fn handle(&self) -> FaultHandle {
+        FaultHandle {
+            killed: self.killed.clone(),
         }
     }
 
     /// Pull everything currently available from the inner endpoint into
-    /// the latency queue.
+    /// the latency queue (or the void, while killed).
     fn pump(&self) -> Result<(), TransportError> {
+        let killed = self.killed.load(Ordering::Acquire);
         let mut pending = self.pending.lock().unwrap();
+        if killed && !pending.is_empty() {
+            crate::telemetry::bump("fault.killed_dropped", pending.len() as i64);
+            pending.clear();
+        }
         while let Some(f) = self.inner.try_recv()? {
+            if killed {
+                crate::telemetry::bump("fault.killed_dropped", 1);
+                continue;
+            }
             pending.push_back((Instant::now() + self.cfg.latency, f));
         }
         Ok(())
@@ -71,6 +125,10 @@ impl<E: Endpoint> FaultEndpoint<E> {
 
 impl<E: Endpoint> Endpoint for FaultEndpoint<E> {
     fn send(&self, frame: Frame) -> Result<(), TransportError> {
+        if self.killed.load(Ordering::Acquire) {
+            crate::telemetry::bump("fault.killed_dropped", 1);
+            return Ok(()); // link is dark — sender believes it went out
+        }
         let dropped = {
             let mut rng = self.rng.lock().unwrap();
             rng.chance(self.cfg.drop_prob)
@@ -93,17 +151,31 @@ impl<E: Endpoint> Endpoint for FaultEndpoint<E> {
             if now >= deadline {
                 return Err(TransportError::Timeout);
             }
-            // Sleep until the earlier of: next pending frame due, a short
-            // poll tick (new inner frames), or the caller deadline.
-            let next_due = self
-                .pending
-                .lock()
-                .unwrap()
-                .front()
-                .map(|(at, _)| *at)
-                .unwrap_or(now + Duration::from_millis(1));
-            let wake = next_due.min(deadline).min(now + Duration::from_millis(1));
-            std::thread::sleep(wake.saturating_duration_since(now));
+            // Nothing deliverable yet: block on the INNER endpoint (its
+            // own condvar) until the earlier of the next scheduled
+            // delivery or the caller deadline. A frame arriving on the
+            // inner endpoint wakes us immediately; an idle endpoint
+            // sleeps the whole window — no busy 1ms floor.
+            let next_due = self.pending.lock().unwrap().front().map(|(at, _)| *at);
+            let wake = next_due.map_or(deadline, |at| at.min(deadline));
+            let window = wake.saturating_duration_since(now);
+            if window.is_zero() {
+                continue; // a queued frame just came due
+            }
+            match self.inner.recv_timeout(window) {
+                Ok(f) => {
+                    if self.killed.load(Ordering::Acquire) {
+                        crate::telemetry::bump("fault.killed_dropped", 1);
+                    } else {
+                        self.pending
+                            .lock()
+                            .unwrap()
+                            .push_back((Instant::now() + self.cfg.latency, f));
+                    }
+                }
+                Err(TransportError::Timeout) => {}
+                Err(e) => return Err(e),
+            }
         }
     }
 
@@ -191,6 +263,55 @@ mod tests {
         let f = fb.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(f, vec![5]);
         assert!(t0.elapsed() >= Duration::from_millis(45), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn blocking_recv_wakes_on_late_send() {
+        // A frame sent while the receiver is already blocked must be
+        // delivered promptly (the inner endpoint's condvar wakes us) —
+        // and an idle wait must not spin.
+        let (a, b) = inproc::pair("a", "b");
+        let fb = FaultEndpoint::new(b, FaultConfig::default());
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            a.send(vec![9]).unwrap();
+            a
+        });
+        let t0 = Instant::now();
+        let f = fb.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(f, vec![9]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(50), "{waited:?}");
+        assert!(waited < Duration::from_secs(2), "{waited:?}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn kill_discards_both_directions_until_heal() {
+        let (a, b) = inproc::pair("a", "b");
+        let fa = FaultEndpoint::new(a, FaultConfig::default());
+        let handle = fa.handle();
+        assert!(!handle.is_killed());
+        handle.kill();
+        assert!(handle.is_killed());
+        // Outbound: vanishes.
+        fa.send(vec![1]).unwrap();
+        assert!(matches!(
+            b.recv_timeout(Duration::from_millis(30)),
+            Err(TransportError::Timeout)
+        ));
+        // Inbound: discarded, even frames sent before the kill is seen.
+        b.send(vec![2]).unwrap();
+        assert!(matches!(
+            fa.recv_timeout(Duration::from_millis(30)),
+            Err(TransportError::Timeout)
+        ));
+        // Heal: traffic flows again (dark-era frames stay lost).
+        handle.heal();
+        fa.send(vec![3]).unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_secs(1)).unwrap(), vec![3]);
+        b.send(vec![4]).unwrap();
+        assert_eq!(fa.recv_timeout(Duration::from_secs(1)).unwrap(), vec![4]);
     }
 
     #[test]

@@ -1,0 +1,551 @@
+//! Chaos tests for the resilient round runtime: N nodes, ⌈N/3⌉ killed
+//! mid-round, and the round must still finalize at quorum with an
+//! aggregate bit-identical to a clean run over the surviving cohort —
+//! on the native path AND through the FLARE bridge (killed via the
+//! `transport/fault.rs` fault layer).
+//!
+//! All seeds are fixed; no test sleeps longer than the liveness lease it
+//! configures (coordination is gate/condvar-based).
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use flarelink::flower::clientapp::{ArithmeticClient, ClientApp, EvalOutput, FitOutput};
+use flarelink::flower::message::ConfigRecord;
+use flarelink::flower::mods::ModStack;
+use flarelink::flower::records::ArrayRecord;
+use flarelink::flower::run::{FleetOptions, NativeFleet};
+use flarelink::flower::secagg::{SecAggFedAvg, SecAggMod};
+use flarelink::flower::serverapp::{ServerApp, ServerConfig};
+use flarelink::flower::strategy::{
+    Aggregator, FedAdagrad, FedAdam, FedAvg, FedAvgM, FedMedian, FedOptConfig, FedProx, FedYogi,
+    FitRes, Krum, Strategy, TrimmedMean,
+};
+use flarelink::flower::superlink::LinkConfig;
+
+// ---------------------------------------------------------------------------
+// Gate: deterministic mid-round crash coordination (no long sleeps)
+// ---------------------------------------------------------------------------
+
+/// Victims entering `fit` report in and then block until the test opens
+/// the gate — simulating a client that took a task and then died (its
+/// result, if any, arrives after the round moved on).
+struct Gate {
+    state: Mutex<(usize, bool)>, // (entered, open)
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate {
+            state: Mutex::new((0, false)),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn enter(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.0 += 1;
+        self.cv.notify_all();
+        while !s.1 {
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    fn wait_entered(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        while s.0 < n {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+        true
+    }
+
+    fn open(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+struct GatedClient {
+    inner: Arc<dyn ClientApp>,
+    gate: Arc<Gate>,
+}
+
+impl ClientApp for GatedClient {
+    fn fit(&self, parameters: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<FitOutput> {
+        self.gate.enter();
+        self.inner.fit(parameters, config)
+    }
+
+    fn evaluate(
+        &self,
+        parameters: &ArrayRecord,
+        config: &ConfigRecord,
+    ) -> anyhow::Result<EvalOutput> {
+        self.inner.evaluate(parameters, config)
+    }
+}
+
+/// Survivors hold their fit until every victim has taken (and is stuck
+/// on) its task — guarantees the crash happens MID-round, not before the
+/// victims were even scheduled.
+struct WaitClient {
+    inner: Arc<dyn ClientApp>,
+    gate: Arc<Gate>,
+    victims: usize,
+}
+
+impl ClientApp for WaitClient {
+    fn fit(&self, parameters: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<FitOutput> {
+        anyhow::ensure!(
+            self.gate.wait_entered(self.victims, Duration::from_secs(20)),
+            "victims never took their tasks"
+        );
+        self.inner.fit(parameters, config)
+    }
+
+    fn evaluate(
+        &self,
+        parameters: &ArrayRecord,
+        config: &ConfigRecord,
+    ) -> anyhow::Result<EvalOutput> {
+        self.inner.evaluate(parameters, config)
+    }
+}
+
+fn counter(name: &str) -> i64 {
+    flarelink::telemetry::counter(name).load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Native: every strategy finalizes at quorum, bit-identical to clean-K
+// ---------------------------------------------------------------------------
+
+const N: usize = 9;
+const KILLED: usize = 3; // ⌈N/3⌉
+const SURVIVORS: usize = N - KILLED; // quorum K = 6
+
+fn survivor_client(i: usize) -> ArithmeticClient {
+    ArithmeticClient {
+        delta: (i + 1) as f32,
+        n: 10 * (i as u64 + 1),
+    }
+}
+
+/// 9 clients: 6 survivors (gated on the victims having taken their
+/// tasks) + 3 victims (take a task, then go silent until released).
+fn chaos_fleet_apps(gate: &Arc<Gate>) -> Vec<Arc<dyn ClientApp>> {
+    let mut apps: Vec<Arc<dyn ClientApp>> = (0..SURVIVORS)
+        .map(|i| {
+            Arc::new(WaitClient {
+                inner: Arc::new(survivor_client(i)),
+                gate: gate.clone(),
+                victims: KILLED,
+            }) as Arc<dyn ClientApp>
+        })
+        .collect();
+    for i in SURVIVORS..N {
+        apps.push(Arc::new(GatedClient {
+            inner: Arc::new(survivor_client(i)),
+            gate: gate.clone(),
+        }));
+    }
+    apps
+}
+
+/// The "clean run over the same surviving K nodes": each survivor's
+/// deterministic fit result on the round's initial parameters.
+fn survivor_results(init: &ArrayRecord) -> Vec<FitRes> {
+    (0..SURVIVORS)
+        .map(|i| {
+            let out = survivor_client(i).fit(init, &vec![]).unwrap();
+            FitRes {
+                node_id: i as u64 + 1,
+                parameters: out.parameters,
+                num_examples: out.num_examples,
+                metrics: out.metrics,
+            }
+        })
+        .collect()
+}
+
+/// Run one 1-round ServerApp over a 9-node fleet whose last 3 nodes die
+/// mid-round (task taken, then silence). Returns the finalized history.
+fn partial_round(
+    strategy: Box<dyn Strategy>,
+    init: ArrayRecord,
+    gate: &Arc<Gate>,
+) -> flarelink::flower::serverapp::History {
+    let apps = chaos_fleet_apps(gate);
+    let fleet = NativeFleet::start_with(
+        apps,
+        FleetOptions {
+            link: LinkConfig {
+                // Generous lease: this scenario resolves via the
+                // straggler cutoff (quorum + grace), never the lease, so
+                // a loaded CI runner can't reap a merely-slow survivor.
+                lease: Duration::from_secs(10),
+                // FL fit tasks are node-affine: a substitute's result
+                // must not replace a dead node's, so the bit-exactness
+                // scenario runs without redelivery.
+                max_redeliveries: 0,
+            },
+            ..Default::default()
+        },
+        |_, ep| Arc::new(ep),
+    )
+    .unwrap();
+    let mut app = ServerApp::new(
+        strategy,
+        ServerConfig {
+            num_rounds: 1,
+            min_nodes: N,
+            min_available: SURVIVORS,
+            straggler_grace: Duration::from_millis(100),
+            fraction_evaluate: 0.0,
+            round_timeout: Duration::from_secs(30),
+            seed: 11,
+            ..Default::default()
+        },
+        init,
+    );
+    let history = app.run(fleet.link(), None, 1).unwrap();
+
+    // Regression (PR 2 tombstones): the victims' late results land in a
+    // FINISHED run and must be refused, never retained.
+    let stale_before = counter("superlink.stale_results_dropped");
+    gate.open();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while counter("superlink.stale_results_dropped") < stale_before + KILLED as i64 {
+        assert!(
+            Instant::now() < deadline,
+            "victims' stale results were never dropped"
+        );
+        std::thread::yield_now();
+    }
+    fleet.shutdown();
+    history
+}
+
+#[test]
+fn every_strategy_finalizes_at_quorum_bit_identical_to_surviving_cohort() {
+    let factories: Vec<(&str, Box<dyn Fn() -> Box<dyn Strategy>>)> = vec![
+        ("fedavg", Box::new(|| Box::new(FedAvg::new(Aggregator::host())))),
+        (
+            "fedavgm",
+            Box::new(|| Box::new(FedAvgM::new(Aggregator::host(), 0.9, 0.5))),
+        ),
+        (
+            "fedadam",
+            Box::new(|| Box::new(FedAdam::new(Aggregator::host(), FedOptConfig::default()))),
+        ),
+        (
+            "fedadagrad",
+            Box::new(|| Box::new(FedAdagrad::new(Aggregator::host(), FedOptConfig::default()))),
+        ),
+        (
+            "fedyogi",
+            Box::new(|| Box::new(FedYogi::new(Aggregator::host(), FedOptConfig::default()))),
+        ),
+        (
+            "fedprox",
+            Box::new(|| Box::new(FedProx::new(Aggregator::host(), 0.01))),
+        ),
+        ("fedmedian", Box::new(|| Box::new(FedMedian))),
+        (
+            "trimmed_mean",
+            Box::new(|| Box::new(TrimmedMean { trim: 2 })),
+        ),
+        ("krum", Box::new(|| Box::new(Krum { f: 1 }))),
+    ];
+    let init = ArrayRecord::from_flat(&[0.25f32; 6]);
+    for (label, mk) in factories {
+        let gate = Gate::new();
+        let history = partial_round(mk(), init.clone(), &gate);
+
+        // Participation recorded: K of N contributed.
+        assert_eq!(history.rounds.len(), 1, "{label}");
+        let p = history.rounds[0].participation;
+        assert_eq!((p.sampled, p.completed, p.dropped), (N, SURVIVORS, KILLED), "{label}");
+
+        // The aggregate equals the clean batch reduction over exactly
+        // the surviving K nodes — bit for bit (streamed == batch).
+        let want = mk().aggregate_fit(1, &init, &survivor_results(&init)).unwrap();
+        assert!(
+            history.parameters.bits_equal(&want),
+            "{label}: partial-round aggregate diverged from clean surviving-K run"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native: lease expiry fails the victims' tasks (no straggler cutoff)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lease_expiry_resolves_the_round_before_any_timeout() {
+    let gate = Gate::new();
+    let apps = chaos_fleet_apps(&gate);
+    let fleet = NativeFleet::start_with(
+        apps,
+        FleetOptions {
+            link: LinkConfig {
+                // Long enough that a loaded CI runner cannot reap a
+                // slow-but-alive survivor, short enough to keep the
+                // lease-resolution path well under the 60s timeout.
+                lease: Duration::from_secs(1),
+                max_redeliveries: 0,
+            },
+            ..Default::default()
+        },
+        |_, ep| Arc::new(ep),
+    )
+    .unwrap();
+    let failed_before = counter("superlink.tasks_failed");
+    let mut app = ServerApp::new(
+        Box::new(FedAvg::new(Aggregator::host())),
+        ServerConfig {
+            num_rounds: 1,
+            min_nodes: N,
+            min_available: SURVIVORS,
+            // Grace far beyond the lease: the round must resolve via
+            // lease expiry (every task settled), not the cutoff.
+            straggler_grace: Duration::from_secs(30),
+            fraction_evaluate: 0.0,
+            round_timeout: Duration::from_secs(60),
+            seed: 3,
+            ..Default::default()
+        },
+        ArrayRecord::from_flat(&[0.0f32; 4]),
+    );
+    let t0 = Instant::now();
+    let history = app.run(fleet.link(), None, 1).unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "round must resolve at the lease, not the 60s timeout: {:?}",
+        t0.elapsed()
+    );
+    let p = history.rounds[0].participation;
+    assert_eq!((p.sampled, p.completed, p.dropped), (N, SURVIVORS, KILLED));
+    assert!(
+        counter("superlink.tasks_failed") >= failed_before + KILLED as i64,
+        "victims' tasks must be declared failed by the lease"
+    );
+    // The dead nodes were reaped from the pool.
+    assert_eq!(fleet.link().nodes().len(), SURVIVORS);
+    gate.open();
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Secure aggregation's dropout story: no partial cohort, ever
+// ---------------------------------------------------------------------------
+
+#[test]
+fn secagg_refuses_partial_participation() {
+    let gate = Gate::new();
+    let mk_client = |i: usize| -> Arc<dyn ClientApp> {
+        Arc::new(ModStack::new(
+            Arc::new(survivor_client(i)),
+            vec![Arc::new(SecAggMod)],
+        ))
+    };
+    let apps: Vec<Arc<dyn ClientApp>> = vec![
+        mk_client(0),
+        mk_client(1),
+        Arc::new(GatedClient {
+            inner: mk_client(2),
+            gate: gate.clone(),
+        }),
+    ];
+    let fleet = NativeFleet::start_with(
+        apps,
+        FleetOptions {
+            link: LinkConfig {
+                lease: Duration::from_secs(1),
+                max_redeliveries: 0,
+            },
+            ..Default::default()
+        },
+        |_, ep| Arc::new(ep),
+    )
+    .unwrap();
+    let mut app = ServerApp::new(
+        Box::new(SecAggFedAvg::new(7)),
+        ServerConfig {
+            num_rounds: 1,
+            min_nodes: 3,
+            // A quorum is configured, but secagg's pairwise masks only
+            // cancel over the full cohort: the strategy refuses partial
+            // mode and the dropout fails the round instead of leaking a
+            // residue-masked aggregate.
+            min_available: 2,
+            straggler_grace: Duration::from_millis(50),
+            fraction_evaluate: 0.0,
+            round_timeout: Duration::from_secs(20),
+            seed: 9,
+            ..Default::default()
+        },
+        ArrayRecord::from_flat(&[0.5f32; 4]),
+    );
+    let t0 = Instant::now();
+    let err = app.run(fleet.link(), None, 1).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "failure must come from the lease, not the round timeout"
+    );
+    assert!(
+        err.to_string().contains("lease expired"),
+        "round must fail on the dropped node's lease: {err}"
+    );
+    gate.open();
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Bridged: kill ⌈N/3⌉ FLARE sites mid-round via transport/fault.rs
+// ---------------------------------------------------------------------------
+
+mod bridged {
+    use super::*;
+    use flarelink::bridge::{FlowerAppBuilder, FlowerBridgeApp};
+    use flarelink::flare::job::JobCtx;
+    use flarelink::flare::scp::ScpConfig;
+    use flarelink::flare::sim::FederationBuilder;
+    use flarelink::flare::{JobSpec, JobStatus, RetryPolicy};
+    use flarelink::flower::serverapp::History;
+    use flarelink::util::json::Json;
+
+    const SITES: usize = 5;
+    const VICTIMS: [&str; 2] = ["site-4", "site-5"]; // ⌈5/3⌉ = 2
+    const QUORUM: usize = SITES - VICTIMS.len();
+
+    struct ChaosBuilder {
+        gate: Arc<Gate>,
+    }
+
+    impl FlowerAppBuilder for ChaosBuilder {
+        fn build_client(&self, ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>> {
+            let idx = ctx
+                .participants
+                .iter()
+                .position(|s| s == &ctx.site)
+                .unwrap_or(0);
+            let inner = Arc::new(super::survivor_client(idx));
+            if VICTIMS.contains(&ctx.site.as_str()) {
+                Ok(Arc::new(GatedClient {
+                    inner,
+                    gate: self.gate.clone(),
+                }))
+            } else {
+                // Survivors hold round 1 until the victims are stuck
+                // mid-round (round 2 has no victims left to wait for —
+                // the gate stays satisfied).
+                Ok(Arc::new(WaitClient {
+                    inner,
+                    gate: self.gate.clone(),
+                    victims: VICTIMS.len(),
+                }))
+            }
+        }
+
+        fn build_server(&self, _ctx: &JobCtx) -> anyhow::Result<ServerApp> {
+            Ok(ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 2,
+                    min_nodes: SITES,
+                    min_available: QUORUM,
+                    straggler_grace: Duration::from_millis(150),
+                    fraction_evaluate: 0.0,
+                    round_timeout: Duration::from_secs(30),
+                    seed: 5,
+                    ..Default::default()
+                },
+                ArrayRecord::from_flat(&[0.0f32; 8]),
+            ))
+        }
+    }
+
+    /// The full bridged path under chaos: 5 FLARE sites serve a Flower
+    /// job; two sites are killed (fault-layer blackout) while their
+    /// clients hold round-1 tasks. Both rounds must finalize at quorum
+    /// and the job must FINISH — the lease/redelivery/quorum semantics
+    /// are identical to the native path.
+    #[test]
+    fn bridged_round_completes_at_quorum_when_sites_die() {
+        let gate = Gate::new();
+        let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+        let c2 = captured.clone();
+        let app = FlowerBridgeApp::new(Arc::new(ChaosBuilder { gate: gate.clone() }))
+            .with_policy(RetryPolicy::fast())
+            .with_history_sink(Arc::new(move |_, h| {
+                *c2.lock().unwrap() = Some(h.clone());
+            }));
+        let fed = FederationBuilder::new("chaos-bridge")
+            .sites(SITES)
+            .chaos()
+            .scp_config(ScpConfig {
+                // The SuperLink lease — not the site heartbeat — must be
+                // what resolves the round.
+                heartbeat_timeout: Duration::from_secs(120),
+                ..Default::default()
+            })
+            .retry_policy(RetryPolicy::fast())
+            .build(Arc::new(app))
+            .unwrap();
+
+        let spec = JobSpec::new("chaos", "flower_bridge").with_config(Json::obj(vec![
+            // Generous against CI scheduling noise on the bridged hop;
+            // the rounds resolve at the straggler cutoff, the lease only
+            // bounds the teardown reap of the killed sites.
+            ("lease_ms", Json::num(1500.0)),
+            ("max_redeliveries", Json::num(1.0)),
+        ]));
+        fed.scp.submit(spec).unwrap();
+
+        // Wait until both victims hold a round-1 task, then take their
+        // fabric links dark and release them into the void.
+        assert!(
+            gate.wait_entered(VICTIMS.len(), Duration::from_secs(30)),
+            "victims never entered fit"
+        );
+        for site in VICTIMS {
+            assert!(fed.kill_site(site), "no fault layer on {site}");
+        }
+        gate.open();
+
+        let status = fed.scp.wait("chaos", Duration::from_secs(60)).unwrap();
+        assert_eq!(
+            status,
+            JobStatus::Finished,
+            "err={:?}",
+            fed.scp.job_error("chaos")
+        );
+        fed.shutdown();
+
+        let history = captured.lock().unwrap().take().expect("history sink");
+        assert_eq!(history.rounds.len(), 2, "both rounds must finalize");
+        let p1 = history.rounds[0].participation;
+        assert_eq!(
+            (p1.sampled, p1.completed, p1.dropped),
+            (SITES, QUORUM, VICTIMS.len()),
+            "round 1 participation"
+        );
+        let p2 = history.rounds[1].participation;
+        assert_eq!(p2.completed, QUORUM, "round 2 must complete at quorum");
+        assert_eq!(
+            p2.dropped,
+            p2.sampled - p2.completed,
+            "round 2 accounting must balance"
+        );
+    }
+}

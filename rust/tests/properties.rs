@@ -131,7 +131,9 @@ impl Gen for FlowerMsgGen {
         let sg = StringGen { max_len: 10 };
         match rng.below(7) {
             0 => FlowerMsg::CreateNode {
-                requested: rng.next_u64(),
+                // Pins above MAX_PINNED_NODE_ID are rejected at decode
+                // (counter-wrap guard), so generate in-range ids.
+                requested: rng.next_u64() & flarelink::flower::message::MAX_PINNED_NODE_ID,
             },
             1 => FlowerMsg::PullTaskIns {
                 node_id: rng.next_u64(),
@@ -163,6 +165,14 @@ impl Gen for FlowerMsgGen {
                         } else {
                             TaskType::Evaluate
                         },
+                        // v1 frames cannot carry attempt/redeliver, so
+                        // the legacy-roundtrip property needs defaults.
+                        attempt: if self.flat_only {
+                            0
+                        } else {
+                            rng.below(4) as u32
+                        },
+                        redeliver: !self.flat_only && rng.chance(0.5),
                         parameters: self.gen_params(rng),
                         config: vec![
                             (sg.generate(rng), ConfigValue::F64(rng.next_f64())),
@@ -522,6 +532,7 @@ fn prop_history_csv_has_one_line_per_round() {
                     eval_loss: Some(1.0 / r as f64),
                     eval_metrics: vec![],
                     per_client_eval: vec![],
+                    participation: Default::default(),
                 })
                 .collect(),
             parameters: ArrayRecord::new(),
