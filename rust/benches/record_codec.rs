@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             num_examples: 128,
             loss: 0.5,
             metrics: vec![("accuracy".into(), 0.9)],
+            model_version: 0,
         },
     };
     let frame_bytes = msg.encode();

@@ -187,6 +187,25 @@ impl AppFactory for FlowerBridgeApp {
             Ok(link2.handle_frame_shared(Bytes::from_vec(frame)))
         }));
 
+        // Async execution rides the job config too: `async_buffer_size`
+        // (> 0 enables FedBuff-style buffered aggregation) and
+        // `max_staleness` map straight onto [`AsyncConfig`], so a
+        // FLARE-bridged job gets byte-for-byte the semantics of a
+        // native async run.
+        let async_cfg = match ctx.config.get("async_buffer_size").as_u64() {
+            Some(buffer) if buffer > 0 => Some(crate::flower::asyncfed::AsyncConfig {
+                buffer_size: buffer as usize,
+                // Absent key = the native default, so a bridged job and
+                // a native AsyncConfig::default() run behave alike.
+                max_staleness: ctx
+                    .config
+                    .get("max_staleness")
+                    .as_u64()
+                    .unwrap_or(crate::flower::asyncfed::AsyncConfig::default().max_staleness),
+            }),
+            _ => None,
+        };
+
         // The history sink fires at each run's TRUE completion (before
         // the shutdown drain) in both modes, so per-run timings are
         // comparable between single-run and concurrent-run jobs.
@@ -198,13 +217,27 @@ impl AppFactory for FlowerBridgeApp {
                 } else {
                     None
                 };
-                server_app.run(&link, tracker, 1).map(|h| {
+                let history = match async_cfg {
+                    Some(acfg) => server_app.run_async(&link, tracker, 1, acfg),
+                    None => server_app.run(&link, tracker, 1),
+                };
+                history.map(|h| {
                     if let Some(sink) = &self.history_sink {
                         sink(&ctx.job_id, &h);
                     }
                     vec![(1, h)]
                 })
             })
+        } else if async_cfg.is_some() {
+            // Refuse rather than silently fall back to the sync driver:
+            // an operator who asked for async semantics must not get a
+            // Finished job that actually ran the barrier path. (Flows
+            // through `result` so the link still retires and drains.)
+            Err(anyhow::anyhow!(
+                "job {}: async_buffer_size is not supported with concurrent_runs — \
+                 submit per-run async jobs instead",
+                ctx.job_id
+            ))
         } else {
             if self.builder.track() {
                 // Per-run metric streams would collide on the shared
@@ -371,6 +404,46 @@ mod tests {
         let lossy = bridged_history(0.3, 2);
         let clean = bridged_history(0.0, 2);
         assert_eq!(lossy, clean);
+    }
+
+    /// Async mode over the bridge: `async_buffer_size == sites` and
+    /// `max_staleness == 0` is the sync-equivalent configuration — the
+    /// bridged async job's final parameters must match the bridged sync
+    /// job's bit for bit (identical semantics via job-config keys).
+    #[test]
+    fn bridged_async_staleness0_equals_sync_bitexact() {
+        let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+        let c2 = captured.clone();
+        let app = FlowerBridgeApp::new(Arc::new(TestBuilder))
+            .with_policy(RetryPolicy::fast())
+            .with_history_sink(Arc::new(move |_, h| {
+                *c2.lock().unwrap() = Some(h.clone());
+            }));
+        let fed = FederationBuilder::new("bridge-async")
+            .sites(2)
+            .retry_policy(RetryPolicy::fast())
+            .build(Arc::new(app))
+            .unwrap();
+        let spec = JobSpec::new("af", "flower_bridge").with_config(Json::obj(vec![
+            ("rounds", Json::num(3.0)),
+            ("async_buffer_size", Json::num(2.0)),
+            ("max_staleness", Json::num(0.0)),
+        ]));
+        fed.scp.submit(spec).unwrap();
+        let status = fed.scp.wait("af", Duration::from_secs(60)).unwrap();
+        assert_eq!(status, JobStatus::Finished, "err={:?}", fed.scp.job_error("af"));
+        fed.shutdown();
+        let async_h = captured.lock().unwrap().take().unwrap();
+        assert_eq!(async_h.commits.len(), 3, "one commit per configured round");
+        assert!(
+            async_h.commits.iter().all(|c| c.max_staleness == 0),
+            "staleness-0 config must fold only fresh results"
+        );
+        let sync_h = bridged_history(0.0, 3);
+        assert!(
+            async_h.params_bits_equal(&sync_h),
+            "bridged async (buffer == cohort, staleness 0) must equal bridged sync"
+        );
     }
 
     /// Shared-SuperLink multi-run (§2/§3.1): one job, N concurrent

@@ -68,6 +68,17 @@ impl FederationBuilder {
         self
     }
 
+    /// Seed every stochastic piece of the simulated federation (today:
+    /// the per-site fault layers, whose per-link streams derive from
+    /// this base — and thereby frame-drop choices and delivery order).
+    /// Chaos tests log this seed so any failure reproduces from one
+    /// number; composes with [`FederationBuilder::faults`] (overrides
+    /// its seed) and [`FederationBuilder::chaos`].
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.fault_seed = seed;
+        self
+    }
+
     /// Wrap every SCP<->site link in a (zero-loss) fault endpoint and
     /// expose per-site [`FaultHandle`]s on the built [`Federation`], so
     /// chaos tests can [`Federation::kill_site`] mid-round. Composes
@@ -130,6 +141,16 @@ impl FederationBuilder {
     /// Build the in-process federation and wait until all sites are
     /// registered.
     pub fn build(self, app_factory: Arc<dyn AppFactory>) -> anyhow::Result<Federation> {
+        if self.chaos || self.drop_prob > 0.0 || !self.latency.is_zero() {
+            // One number reproduces every fault-layer decision.
+            log::info!(
+                "federation {}: fault seed {} (drop {}, latency {:?})",
+                self.project,
+                self.fault_seed,
+                self.drop_prob,
+                self.latency
+            );
+        }
         let provisioner = Provisioner::new(&self.project, &self.secret);
         let admin_kit = provisioner.provision("admin", Role::Admin, "");
         let authorizer = Arc::new(Authorizer::new(Provisioner::new(

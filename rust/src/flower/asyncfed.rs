@@ -1,0 +1,609 @@
+//! Asynchronous federation: FedBuff-style buffered, staleness-aware
+//! aggregation (Nguyen et al., 2022) on top of the multi-run SuperLink.
+//!
+//! The synchronous driver barriers every round on its whole cohort, so
+//! the fleet idles behind the slowest survivor. The async driver never
+//! barriers: it keeps every node busy with a fit task tagged with the
+//! global model **version** the task's parameters were cut from, folds
+//! results into the strategy's incremental [`FitAgg`] accumulator as
+//! they arrive, and **commits** a new global model every
+//! [`AsyncConfig::buffer_size`] folded results. A result that lags the
+//! current version by `delta` commits is weighted by
+//! [`Strategy::staleness_weight`]`(delta)` (polynomial
+//! `1/sqrt(1+delta)` by default, applied by scaling the result's
+//! example count) and **dropped** outright past
+//! [`AsyncConfig::max_staleness`].
+//!
+//! Dispatch discipline: each node executes at most ONE task per model
+//! version (a deterministic client re-fitting the same version would
+//! duplicate work and, with `buffer_size == cohort`, break the
+//! sync-equivalence below). After every commit the version bumps and
+//! the whole fleet becomes eligible again, so with `buffer_size <
+//! cohort` nodes are effectively always busy.
+//!
+//! **Sync equivalence** (the conformance anchor): with
+//! `buffer_size == cohort size` and `max_staleness == 0`, every commit
+//! folds exactly one fresh result per node at weight exactly 1.0 into
+//! the same canonicalizing accumulator the sync round path uses — the
+//! final parameters are bit-identical to the synchronous driver's.
+//!
+//! Gating: [`Strategy::supports_async`] must hold.
+//! `SecAggFedAvg` refuses (its pairwise masks are bound to one
+//! (round, cohort) pair and can never cancel across versions),
+//! mirroring `supports_partial`.
+//!
+//! [`Strategy::staleness_weight`]: crate::flower::strategy::Strategy::staleness_weight
+//! [`Strategy::supports_async`]: crate::flower::strategy::Strategy::supports_async
+//! [`FitAgg`]: crate::flower::strategy::FitAgg
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::flare::tracking::SummaryWriter;
+use crate::flower::message::{ConfigValue, TaskIns, TaskType};
+use crate::flower::serverapp::{History, ServerApp};
+use crate::flower::strategy::FitRes;
+use crate::flower::superlink::SuperLink;
+
+/// Upper bound on [`AsyncConfig::max_staleness`]: the driver
+/// pre-computes one weight per staleness value (the strategy is
+/// mutably borrowed by its accumulator while results fold), and a lag
+/// of thousands of commits means the result is noise anyway.
+pub const MAX_MAX_STALENESS: u64 = 4096;
+
+/// Knobs of one asynchronous run. From the sync
+/// [`crate::flower::serverapp::ServerConfig`] the driver honours
+/// `num_rounds` (one "round" = one commit), `min_nodes`,
+/// `accept_failures`, and `round_timeout` (the per-commit deadline).
+/// The round-shaped knobs do NOT apply and are ignored: there is no
+/// cohort sampling (`fraction_fit`, `seed` — every live node
+/// participates each version), no quorum (`min_available`,
+/// `straggler_grace` — the buffer is the completion rule), and no
+/// federated evaluation (`fraction_evaluate` — no round boundary to
+/// evaluate at).
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncConfig {
+    /// Commit a new global model every this many folded results. Must
+    /// not exceed the fleet size (each node folds at most once per
+    /// version, so a larger buffer could never fill).
+    pub buffer_size: usize,
+    /// Results lagging the current version by more than this many
+    /// commits are dropped instead of folded. 0 = only fresh results
+    /// fold (the sync-equivalent setting).
+    pub max_staleness: u64,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        Self {
+            buffer_size: 2,
+            max_staleness: 4,
+        }
+    }
+}
+
+/// One committed global model in an async run's [`History`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AsyncCommit {
+    /// Version of the model this commit produced (1-based; version 0 is
+    /// the initial model).
+    pub version: u64,
+    /// Results folded into this commit's buffer.
+    pub results_folded: usize,
+    /// Largest staleness among them.
+    pub max_staleness: u64,
+}
+
+/// Verdict of [`AsyncState::offer`] for one arriving result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Offer {
+    /// Fold it, weighted for this staleness (0 = fresh).
+    Fold { staleness: u64 },
+    /// Too stale — drop it (does not count as folded).
+    DropStale { staleness: u64 },
+    /// This task already resolved (redelivery race / duplicate push) —
+    /// a result folds at most once.
+    DropDuplicate,
+}
+
+/// The pure async-fold state machine: staleness gating, per-task
+/// dedup, and commit accounting — everything about buffered
+/// aggregation that is NOT moving bytes. [`ServerApp::run_async`]
+/// drives it against a live SuperLink; `tests/properties.rs` drives it
+/// directly with randomized arrival orders, duplicates, and gaps
+/// (dead-node tasks that never resolve) to check its invariants.
+pub struct AsyncState {
+    buffer_size: usize,
+    max_staleness: u64,
+    version: u64,
+    folded_in_window: usize,
+    window_max_staleness: u64,
+    total_folded: u64,
+    commits: u64,
+    /// Task ids that already folded (dedup basis).
+    done: HashSet<u64>,
+}
+
+impl AsyncState {
+    pub fn new(buffer_size: usize, max_staleness: u64) -> AsyncState {
+        assert!(buffer_size > 0, "async buffer_size must be at least 1");
+        AsyncState {
+            buffer_size,
+            max_staleness,
+            version: 0,
+            folded_in_window: 0,
+            window_max_staleness: 0,
+            total_folded: 0,
+            commits: 0,
+            done: HashSet::new(),
+        }
+    }
+
+    /// Current global model version (0 until the first commit).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Results folded into the open window so far.
+    pub fn folded_in_window(&self) -> usize {
+        self.folded_in_window
+    }
+
+    /// Results folded over the whole run.
+    pub fn total_folded(&self) -> u64 {
+        self.total_folded
+    }
+
+    /// Commits performed so far.
+    pub fn commits(&self) -> u64 {
+        self.commits
+    }
+
+    /// The open window holds `buffer_size` results: commit before
+    /// offering more.
+    pub fn window_full(&self) -> bool {
+        self.folded_in_window >= self.buffer_size
+    }
+
+    /// Offer one arrived result: `task_id` for dedup, `origin_version`
+    /// for staleness (the version the task's parameters were cut from,
+    /// stamped authoritatively by the SuperLink). Must not be called
+    /// while [`AsyncState::window_full`] — commit first.
+    pub fn offer(&mut self, task_id: u64, origin_version: u64) -> Offer {
+        assert!(!self.window_full(), "offer() on a full window — commit first");
+        if !self.done.insert(task_id) {
+            return Offer::DropDuplicate;
+        }
+        let staleness = self.version.saturating_sub(origin_version);
+        if staleness > self.max_staleness {
+            return Offer::DropStale { staleness };
+        }
+        self.folded_in_window += 1;
+        self.total_folded += 1;
+        self.window_max_staleness = self.window_max_staleness.max(staleness);
+        Offer::Fold { staleness }
+    }
+
+    /// Drop dedup entries for tasks the caller KNOWS can never be
+    /// offered again — the SuperLink stores and hands out each task's
+    /// result at most once (`run.done` rejects duplicate pushes), so
+    /// the driver prunes every id that already resolved, keeping a
+    /// long async run's memory proportional to its in-flight set
+    /// rather than its whole history. Callers without such a
+    /// transport-level guarantee (e.g. the property-test harness)
+    /// simply never prune and keep full dedup.
+    pub fn forget_resolved(&mut self, still_unresolved: &HashMap<u64, u64>) {
+        self.done.retain(|id| still_unresolved.contains_key(id));
+    }
+
+    /// Close the window: bump the global version and return the commit
+    /// record (the caller finalizes its accumulator alongside).
+    pub fn commit(&mut self) -> AsyncCommit {
+        self.version += 1;
+        self.commits += 1;
+        let rec = AsyncCommit {
+            version: self.version,
+            results_folded: self.folded_in_window,
+            max_staleness: self.window_max_staleness,
+        };
+        self.folded_in_window = 0;
+        self.window_max_staleness = 0;
+        rec
+    }
+}
+
+/// Apply a staleness weight to a result's example count (the weight
+/// channel every weighted reduction already honours). Exact identity at
+/// `w >= 1.0` — the staleness-0 hot path stays bit-identical to sync —
+/// and never rounds a NON-zero weight down to zero. A zero-example
+/// result stays zero: it carries no weight fresh, so staleness must
+/// not grant it any.
+pub fn scale_examples(num_examples: u64, w: f64) -> u64 {
+    if w >= 1.0 || num_examples == 0 {
+        return num_examples;
+    }
+    ((num_examples as f64) * w).round().max(1.0) as u64
+}
+
+impl ServerApp {
+    /// Drive an asynchronous (buffered, staleness-aware) run against
+    /// the SuperLink: `ServerConfig::num_rounds` commits, each folding
+    /// [`AsyncConfig::buffer_size`] results. Federated evaluation is
+    /// not scheduled in async mode (there is no round boundary to
+    /// evaluate at); `History::commits` carries the commit log and
+    /// `History::parameters` the final model.
+    ///
+    /// Opens run `run_id` on the link and finishes it on every exit
+    /// path, exactly like the synchronous [`ServerApp::run`].
+    pub fn run_async(
+        &mut self,
+        link: &Arc<SuperLink>,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+        acfg: AsyncConfig,
+    ) -> anyhow::Result<History> {
+        anyhow::ensure!(
+            self.strategy.supports_async(),
+            "strategy {} cannot aggregate asynchronously (e.g. secure aggregation \
+             masks are bound to one round cohort) — use the synchronous driver",
+            self.strategy.name()
+        );
+        anyhow::ensure!(acfg.buffer_size > 0, "async buffer_size must be at least 1");
+        anyhow::ensure!(
+            acfg.max_staleness <= MAX_MAX_STALENESS,
+            "max_staleness {} exceeds the supported bound {MAX_MAX_STALENESS}",
+            acfg.max_staleness
+        );
+        link.register_run(run_id);
+        anyhow::ensure!(
+            link.run_active(run_id),
+            "run id {run_id} already finished on this link — run ids must be unique per link"
+        );
+        let result = self.run_commits(link, tracker, run_id, &acfg);
+        link.finish(run_id);
+        result
+    }
+
+    fn run_commits(
+        &mut self,
+        link: &Arc<SuperLink>,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+        acfg: &AsyncConfig,
+    ) -> anyhow::Result<History> {
+        let cfg = self.config.clone();
+        let nodes = link.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
+        anyhow::ensure!(
+            acfg.buffer_size <= nodes.len(),
+            "async buffer_size {} exceeds the fleet of {} nodes — each node folds \
+             at most once per version, so the buffer could never fill",
+            acfg.buffer_size,
+            nodes.len()
+        );
+        // Weights are pre-computed per staleness value because the
+        // strategy is mutably borrowed by its accumulator while results
+        // fold (and staleness_weight is pure).
+        let weights: Vec<f64> = (0..=acfg.max_staleness)
+            .map(|d| self.strategy.staleness_weight(d))
+            .collect();
+        let accept_failures = cfg.accept_failures;
+        let mut params = self.initial_parameters.clone();
+        let mut history = History::default();
+        let mut state = AsyncState::new(acfg.buffer_size, acfg.max_staleness);
+        // task_id -> assigned node, for every unresolved dispatch.
+        let mut outstanding: HashMap<u64, u64> = HashMap::new();
+        // Nodes with an unresolved task (at most one each).
+        let mut busy: HashSet<u64> = HashSet::new();
+        // node -> last version dispatched to it (one task per version).
+        let mut last_version: HashMap<u64, u64> = HashMap::new();
+        // Claimed-but-unfolded results: poll_results can hand over more
+        // than the open window needs; the excess carries into the next
+        // window (its staleness re-evaluated against the new version).
+        let mut ready: VecDeque<crate::flower::message::TaskRes> = VecDeque::new();
+
+        for commit in 1..=cfg.num_rounds {
+            let deadline = Instant::now() + cfg.round_timeout;
+            // Per-version fit config, computed while no accumulator
+            // borrows the strategy.
+            let mut fit_cfg = self.strategy.configure_fit(commit);
+            fit_cfg.push(("round".to_string(), ConfigValue::I64(commit as i64)));
+            let mut agg = self.strategy.begin_fit(commit, &params);
+            loop {
+                link.reap_expired();
+                // Fold claimed results until the window fills.
+                while !state.window_full() {
+                    let Some(res) = ready.pop_front() else { break };
+                    if !res.error.is_empty() {
+                        crate::telemetry::bump("asyncfed.client_errors", 1);
+                        if accept_failures {
+                            log::warn!(
+                                "async commit {commit}: node {} failed: {}",
+                                res.node_id,
+                                res.error
+                            );
+                            continue;
+                        }
+                        anyhow::bail!(
+                            "async commit {commit}: node {} failed: {}",
+                            res.node_id,
+                            res.error
+                        );
+                    }
+                    match state.offer(res.task_id, res.model_version) {
+                        Offer::Fold { staleness } => {
+                            agg.accumulate(FitRes {
+                                node_id: res.node_id,
+                                parameters: res.parameters,
+                                num_examples: scale_examples(
+                                    res.num_examples,
+                                    weights[staleness as usize],
+                                ),
+                                metrics: res.metrics,
+                            })?;
+                        }
+                        Offer::DropStale { staleness } => {
+                            crate::telemetry::bump("asyncfed.stale_results_dropped", 1);
+                            log::warn!(
+                                "async commit {commit}: dropped result from node {} \
+                                 (staleness {staleness} > {})",
+                                res.node_id,
+                                acfg.max_staleness
+                            );
+                        }
+                        Offer::DropDuplicate => {
+                            crate::telemetry::bump("asyncfed.duplicate_results_dropped", 1);
+                        }
+                    }
+                }
+                if state.window_full() {
+                    break;
+                }
+                // Keep the fleet saturated: dispatch the CURRENT model
+                // to every idle node that has not yet trained this
+                // version.
+                for node in link.nodes() {
+                    if busy.contains(&node)
+                        || last_version.get(&node).copied() == Some(state.version())
+                    {
+                        continue;
+                    }
+                    let mut config = fit_cfg.clone();
+                    config.push(("node_id".to_string(), ConfigValue::I64(node as i64)));
+                    let task_id = link.push_task(
+                        node,
+                        TaskIns {
+                            task_id: 0,
+                            run_id,
+                            round: commit,
+                            task_type: TaskType::Fit,
+                            attempt: 0,
+                            // Node-affine, like every FL fit task.
+                            redeliver: false,
+                            model_version: state.version(),
+                            parameters: params.clone(),
+                            config,
+                        },
+                    );
+                    busy.insert(node);
+                    last_version.insert(node, state.version());
+                    outstanding.insert(task_id, node);
+                }
+                // Claim whatever resolved — never barrier on a cohort.
+                let ids: Vec<u64> = outstanding.keys().copied().collect();
+                let (got, failed) = link.poll_results(run_id, &ids);
+                let progressed = !got.is_empty();
+                for res in got {
+                    if let Some(node) = outstanding.remove(&res.task_id) {
+                        busy.remove(&node);
+                    }
+                    ready.push_back(res);
+                }
+                for (task_id, reason) in failed {
+                    if let Some(node) = outstanding.remove(&task_id) {
+                        busy.remove(&node);
+                    }
+                    crate::telemetry::bump("asyncfed.tasks_failed", 1);
+                    log::warn!("async commit {commit}: task {task_id} failed: {reason}");
+                }
+                if progressed {
+                    continue; // fold before sleeping
+                }
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "async commit {commit}: timed out with {}/{} results folded",
+                    state.folded_in_window(),
+                    acfg.buffer_size
+                );
+                anyhow::ensure!(
+                    !outstanding.is_empty() || !link.nodes().is_empty(),
+                    "async commit {commit}: no live nodes remain ({}/{} results folded)",
+                    state.folded_in_window(),
+                    acfg.buffer_size
+                );
+                // Unfillable window: nothing in flight, nothing queued,
+                // and every live node already contributed to the
+                // current version (its remaining supply was consumed by
+                // tolerated client errors or staleness drops). Waiting
+                // out the deadline cannot help — fail with the cause.
+                if outstanding.is_empty()
+                    && ready.is_empty()
+                    && link
+                        .nodes()
+                        .iter()
+                        .all(|n| last_version.get(n).copied() == Some(state.version()))
+                {
+                    anyhow::bail!(
+                        "async commit {commit}: stalled at {}/{} results — every live \
+                         node already trained version {} and no task is in flight \
+                         (client errors or stale drops consumed the version's supply)",
+                        state.folded_in_window(),
+                        acfg.buffer_size,
+                        state.version()
+                    );
+                }
+                link.wait_activity(Duration::from_millis(50));
+            }
+            params = agg.finalize()?;
+            let rec = state.commit();
+            // Commit-boundary housekeeping: dedup ids that already
+            // resolved can never arrive again (link-level dedup), and
+            // version bookkeeping for reaped nodes is dead weight — a
+            // rejoining node starts a fresh entry anyway.
+            state.forget_resolved(&outstanding);
+            let live: HashSet<u64> = link.nodes().into_iter().collect();
+            last_version.retain(|node, _| live.contains(node) || busy.contains(node));
+            if let Some(t) = tracker {
+                t.add_scalar("async_results_folded", rec.results_folded as f64, commit);
+                t.add_scalar("async_max_staleness", rec.max_staleness as f64, commit);
+            }
+            log::info!(
+                "async commit {}: version {} from {} results (max staleness {})",
+                commit,
+                rec.version,
+                rec.results_folded,
+                rec.max_staleness
+            );
+            history.commits.push(rec);
+        }
+        history.parameters = params;
+        Ok(history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::clientapp::{ArithmeticClient, ClientApp};
+    use crate::flower::records::ArrayRecord;
+    use crate::flower::run::NativeFleet;
+    use crate::flower::serverapp::ServerConfig;
+    use crate::flower::strategy::{Aggregator, FedAvg};
+
+    #[test]
+    fn state_commits_every_buffer_size_folds() {
+        let mut st = AsyncState::new(2, 3);
+        assert_eq!(st.version(), 0);
+        assert_eq!(st.offer(1, 0), Offer::Fold { staleness: 0 });
+        assert!(!st.window_full());
+        assert_eq!(st.offer(2, 0), Offer::Fold { staleness: 0 });
+        assert!(st.window_full());
+        let c = st.commit();
+        assert_eq!(
+            c,
+            AsyncCommit {
+                version: 1,
+                results_folded: 2,
+                max_staleness: 0
+            }
+        );
+        // Staleness is measured against the CURRENT version at fold
+        // time: a version-0 result now lags by 1.
+        assert_eq!(st.offer(3, 0), Offer::Fold { staleness: 1 });
+        assert_eq!(st.offer(4, 1), Offer::Fold { staleness: 0 });
+        let c = st.commit();
+        assert_eq!(c.version, 2);
+        assert_eq!(c.max_staleness, 1);
+        assert_eq!(st.total_folded(), 4);
+        assert_eq!(st.commits(), 2);
+    }
+
+    #[test]
+    fn state_drops_duplicates_and_stale_results() {
+        let mut st = AsyncState::new(8, 1);
+        assert_eq!(st.offer(1, 0), Offer::Fold { staleness: 0 });
+        // Redelivery race: the same task id never folds twice.
+        assert_eq!(st.offer(1, 0), Offer::DropDuplicate);
+        // Simulate two commits elapsing.
+        st.commit();
+        st.commit();
+        assert_eq!(st.version(), 2);
+        assert_eq!(st.offer(2, 0), Offer::DropStale { staleness: 2 });
+        assert_eq!(st.offer(3, 1), Offer::Fold { staleness: 1 });
+        // Dropped results count toward neither folds nor dedup-exempt:
+        // a duplicate of a DROPPED task is still a duplicate.
+        assert_eq!(st.offer(2, 2), Offer::DropDuplicate);
+        assert_eq!(st.total_folded(), 2);
+    }
+
+    #[test]
+    fn scale_examples_is_identity_at_unit_weight() {
+        assert_eq!(scale_examples(12345, 1.0), 12345);
+        assert_eq!(scale_examples(u64::MAX, 1.0), u64::MAX, "no f64 roundtrip at w=1");
+        assert_eq!(scale_examples(100, 0.5), 50);
+        // A folded result's non-zero weight never rounds down to zero.
+        assert_eq!(scale_examples(1, 0.01), 1);
+        // A zero-weight result must not GAIN weight by going stale.
+        assert_eq!(scale_examples(0, 0.5), 0);
+    }
+
+    fn apps(deltas: &[(f32, u64)]) -> Vec<Arc<dyn ClientApp>> {
+        deltas
+            .iter()
+            .map(|&(delta, n)| Arc::new(ArithmeticClient { delta, n }) as Arc<dyn ClientApp>)
+            .collect()
+    }
+
+    #[test]
+    fn async_run_commits_and_respects_staleness_bound() {
+        let fleet = NativeFleet::start(apps(&[(1.0, 10), (2.0, 20), (3.0, 30)])).unwrap();
+        let mut app = ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            ServerConfig {
+                num_rounds: 4, // = commits in async mode
+                min_nodes: 3,
+                seed: 21,
+                ..Default::default()
+            },
+            ArrayRecord::from_flat(&[0.0f32; 6]),
+        );
+        let h = app
+            .run_async(
+                fleet.link(),
+                None,
+                1,
+                AsyncConfig {
+                    buffer_size: 2,
+                    max_staleness: 4,
+                },
+            )
+            .unwrap();
+        fleet.shutdown();
+        assert_eq!(h.commits.len(), 4, "one commit per configured round");
+        for (i, c) in h.commits.iter().enumerate() {
+            assert_eq!(c.version, i as u64 + 1);
+            assert_eq!(c.results_folded, 2, "commit {i} fold count");
+            assert!(c.max_staleness <= 4, "commit {i} staleness bound");
+        }
+        assert!(h.rounds.is_empty(), "async mode records commits, not rounds");
+        // The model moved: 8 folded results, every delta positive.
+        assert!(h.parameters.to_flat().iter().all(|&p| p > 0.0));
+    }
+
+    #[test]
+    fn async_refuses_buffer_larger_than_fleet() {
+        let fleet = NativeFleet::start(apps(&[(1.0, 10), (2.0, 20)])).unwrap();
+        let mut app = ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            ServerConfig {
+                num_rounds: 1,
+                min_nodes: 2,
+                ..Default::default()
+            },
+            ArrayRecord::from_flat(&[0.0f32; 2]),
+        );
+        let err = app
+            .run_async(
+                fleet.link(),
+                None,
+                1,
+                AsyncConfig {
+                    buffer_size: 3,
+                    max_staleness: 0,
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("exceeds the fleet"), "{err}");
+        fleet.shutdown();
+    }
+}

@@ -259,6 +259,13 @@ pub struct TaskIns {
     /// a substitute's result would pollute the cohort; node-agnostic
     /// workloads opt in.
     pub redeliver: bool,
+    /// Global model version this task's parameters were cut from. The
+    /// synchronous round path leaves it 0; the asynchronous driver tags
+    /// every dispatch so result staleness (`current_version - this`) is
+    /// computable when the result finally lands. v1 frames cannot carry
+    /// it (decodes as 0) — the SuperLink records the version per task at
+    /// push time and stamps it back onto results authoritatively.
+    pub model_version: u64,
     /// Global model parameters (named, dtyped tensors).
     pub parameters: ArrayRecord,
     pub config: ConfigRecord,
@@ -289,6 +296,12 @@ pub struct TaskRes {
     /// loss for evaluate tasks; 0 for fit unless reported in metrics.
     pub loss: f64,
     pub metrics: MetricRecord,
+    /// Echo of the instruction's `model_version`: the global model
+    /// version this result was computed from (0 on the sync path and in
+    /// legacy v1 frames; the SuperLink overrides it with its own
+    /// per-task record, so a stale or legacy client cannot misreport
+    /// staleness).
+    pub model_version: u64,
 }
 
 impl TaskRes {
@@ -348,6 +361,7 @@ impl FlowerMsg {
                 w.u64(res.num_examples);
                 w.f64(res.loss);
                 write_metrics(&mut w, &res.metrics);
+                w.u64(res.model_version);
             }
             FlowerMsg::DeleteNode { node_id } => {
                 w.u8(3);
@@ -370,6 +384,7 @@ impl FlowerMsg {
                     w.u8(t.redeliver as u8);
                     write_record(&mut w, &t.parameters);
                     write_config(&mut w, &t.config);
+                    w.u64(t.model_version);
                 }
             }
             FlowerMsg::PushAccepted => w.u8(18),
@@ -476,6 +491,7 @@ impl FlowerMsg {
                     num_examples: r.u64()?,
                     loss: r.f64()?,
                     metrics: read_metrics(&mut r)?,
+                    model_version: r.u64()?,
                 },
             },
             3 => FlowerMsg::DeleteNode { node_id: r.u64()? },
@@ -503,6 +519,7 @@ impl FlowerMsg {
                     let redeliver = r.u8()? != 0;
                     let parameters = read_record(&mut r)?;
                     let config = read_config(&mut r)?;
+                    let model_version = r.u64()?;
                     tasks.push(TaskIns {
                         task_id,
                         run_id,
@@ -510,6 +527,7 @@ impl FlowerMsg {
                         task_type,
                         attempt,
                         redeliver,
+                        model_version,
                         parameters,
                         config,
                     });
@@ -544,6 +562,9 @@ impl FlowerMsg {
                     num_examples: r.u64()?,
                     loss: r.f64()?,
                     metrics: read_metrics_v1(&mut r)?,
+                    // v1 predates async mode: version unknown — the
+                    // SuperLink stamps its per-task record instead.
+                    model_version: 0,
                 },
             },
             3 => FlowerMsg::DeleteNode { node_id: r.u64()? },
@@ -577,6 +598,8 @@ impl FlowerMsg {
                         // v1 predates redelivery: original, non-redeliverable.
                         attempt: 0,
                         redeliver: false,
+                        // v1 predates async mode: version 0 (sync round).
+                        model_version: 0,
                         parameters,
                         config,
                     });
@@ -656,6 +679,8 @@ mod tests {
             task_type: TaskType::Fit,
             attempt: 0,
             redeliver: false,
+            // 0 so the same sample exercises the (lossy) v1 path too.
+            model_version: 0,
             parameters: mixed_record(),
             config: vec![
                 ("lr".into(), ConfigValue::F64(0.05)),
@@ -676,6 +701,7 @@ mod tests {
             num_examples: 128,
             loss: 0.75,
             metrics: vec![("accuracy".into(), 0.9)],
+            model_version: 0,
         }
     }
 
@@ -807,6 +833,46 @@ mod tests {
                 assert_eq!(tasks[0].attempt, 3);
                 assert!(tasks[0].redeliver);
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn model_version_roundtrips() {
+        // Async-mode tagging: the version rides both directions on v2.
+        let ins = TaskIns {
+            model_version: 42,
+            ..sample_ins()
+        };
+        let m = FlowerMsg::TaskInsList {
+            tasks: vec![ins],
+            active: true,
+        };
+        match FlowerMsg::decode(&m.encode()).unwrap() {
+            FlowerMsg::TaskInsList { tasks, .. } => assert_eq!(tasks[0].model_version, 42),
+            other => panic!("{other:?}"),
+        }
+        let res = TaskRes {
+            model_version: 17,
+            ..sample_res()
+        };
+        match FlowerMsg::decode(&FlowerMsg::PushTaskRes { res }.encode()).unwrap() {
+            FlowerMsg::PushTaskRes { res } => assert_eq!(res.model_version, 17),
+            other => panic!("{other:?}"),
+        }
+        // Legacy v1 frames cannot carry the version: it decodes as 0.
+        let ins_v1 = TaskIns {
+            model_version: 9,
+            parameters: ArrayRecord::from_flat(&[1.0]),
+            ..sample_ins()
+        };
+        let v1 = FlowerMsg::TaskInsList {
+            tasks: vec![ins_v1],
+            active: true,
+        }
+        .encode_v1();
+        match FlowerMsg::decode(&v1).unwrap() {
+            FlowerMsg::TaskInsList { tasks, .. } => assert_eq!(tasks[0].model_version, 0),
             other => panic!("{other:?}"),
         }
     }

@@ -3,6 +3,7 @@
 //! model (Flower's RecordDict Message API), and the wire protocol whose
 //! frames the FLARE bridge forwards unmodified.
 
+pub mod asyncfed;
 pub mod clientapp;
 pub mod dp;
 pub mod message;
@@ -15,6 +16,7 @@ pub mod strategy;
 pub mod superlink;
 pub mod supernode;
 
+pub use asyncfed::{AsyncCommit, AsyncConfig, AsyncState};
 pub use clientapp::{ClientApp, EvalOutput, FitOutput};
 pub use dp::{DpConfig, DpMod};
 pub use message::{ConfigRecord, ConfigValue, FlowerMsg, MetricRecord, TaskIns, TaskRes, TaskType};

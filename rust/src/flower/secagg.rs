@@ -163,6 +163,15 @@ impl Strategy for SecAggFedAvg {
         false
     }
 
+    /// Async story mirrors the partial one: every mask is bound to a
+    /// fixed (round, cohort) pair, so a FedBuff-style buffer mixing
+    /// results cut from different model versions can never cancel the
+    /// masks. The async driver refuses to start rather than finalize
+    /// residue-masked parameters.
+    fn supports_async(&self) -> bool {
+        false
+    }
+
     fn configure_fit(&mut self, round: u64) -> ConfigRecord {
         vec![
             (
@@ -429,6 +438,13 @@ mod tests {
         ];
         let mut strat = SecAggFedAvg::new(0);
         assert!(strat.aggregate_fit(1, &params, &results).is_err());
+    }
+
+    #[test]
+    fn secagg_refuses_partial_and_async() {
+        let strat = SecAggFedAvg::new(0);
+        assert!(!strat.supports_partial(), "masks need the full cohort");
+        assert!(!strat.supports_async(), "masks are bound to one version");
     }
 
     #[test]

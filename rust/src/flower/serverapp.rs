@@ -28,6 +28,7 @@ use std::time::Duration;
 use std::collections::HashSet;
 
 use crate::flare::tracking::SummaryWriter;
+use crate::flower::asyncfed::AsyncCommit;
 use crate::flower::message::{ConfigValue, MetricRecord, TaskIns, TaskType};
 use crate::flower::records::ArrayRecord;
 use crate::flower::strategy::{EvalRes, FitRes, Strategy};
@@ -114,6 +115,9 @@ pub struct RoundRecord {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct History {
     pub rounds: Vec<RoundRecord>,
+    /// Async-mode commit log (one entry per global model commit; empty
+    /// for synchronous runs). See [`crate::flower::asyncfed`].
+    pub commits: Vec<AsyncCommit>,
     /// Final global parameters.
     pub parameters: ArrayRecord,
 }
@@ -308,6 +312,9 @@ impl ServerApp {
                             attempt: 0,
                             // Node-affine: each node trains on ITS data.
                             redeliver: false,
+                            // Sync rounds are version-less (the async
+                            // driver is the only version author).
+                            model_version: 0,
                             // O(1) per node: records share tensor buffers.
                             parameters: params.clone(),
                             config,
@@ -456,6 +463,7 @@ impl ServerApp {
                                 task_type: TaskType::Evaluate,
                                 attempt: 0,
                                 redeliver: false,
+                                model_version: 0,
                                 parameters: params.clone(),
                                 config: eval_cfg.clone(),
                             },
@@ -465,68 +473,82 @@ impl ServerApp {
                 // Same completion semantics as fit (quorum clamped to
                 // the eval cohort, which is often smaller): with a
                 // quorum, missing evaluations shrink the weighted mean
-                // instead of failing the round.
+                // instead of failing the round. Results STREAM into the
+                // strategy's eval accumulator as they arrive — each
+                // TaskRes frame is reduced to a few floats on the spot,
+                // so a quorum eval wait no longer buffers the cohort's
+                // full frames (the fit-phase fix, applied to eval).
                 let eval_policy = phase_policy(quorum, task_ids.len(), cfg.straggler_grace);
-                let (mut results, eval_wait) =
-                    link.await_results_policy(run_id, &task_ids, cfg.round_timeout, eval_policy);
+                let mut eval_agg = self.strategy.begin_evaluate(round);
+                let mut per_client: Vec<(u64, f64, MetricRecord)> = Vec::new();
+                // One evaluation per node, mirroring the fit path: a
+                // redelivered eval executed by a node that already
+                // evaluated must not double its weight in the mean.
+                let mut seen_eval: HashSet<u64> = HashSet::with_capacity(task_ids.len());
+                let eval_wait = link.for_each_result_policy(
+                    run_id,
+                    &task_ids,
+                    cfg.round_timeout,
+                    eval_policy,
+                    |r| {
+                        if !r.error.is_empty() {
+                            if accept_failures {
+                                return Ok(());
+                            }
+                            anyhow::bail!(
+                                "round {round}: eval on node {} failed: {}",
+                                r.node_id,
+                                r.error
+                            );
+                        }
+                        if !seen_eval.insert(r.node_id) {
+                            crate::telemetry::bump(
+                                "serverapp.duplicate_node_results_skipped",
+                                1,
+                            );
+                            return Ok(());
+                        }
+                        per_client.push((r.node_id, r.loss, r.metrics.clone()));
+                        eval_agg.accumulate(EvalRes {
+                            node_id: r.node_id,
+                            loss: r.loss,
+                            num_examples: r.num_examples,
+                            metrics: r.metrics,
+                        });
+                        Ok(())
+                    },
+                )?;
                 if quorum == 0 && !eval_wait.is_complete() {
-                    // Strict mode: fail — but carry the eval payloads
-                    // that DID arrive (never lose received results).
+                    // Strict mode: fail — the typed error reports the
+                    // unresolved ids (payloads already streamed).
                     return Err(ResultTimeout {
                         run_id,
                         missing: eval_wait.missing,
                         failed: eval_wait.failed,
-                        partial: results,
+                        partial: Vec::new(),
                     }
                     .into());
                 }
-                results.sort_by_key(|r| r.node_id);
-                let mut eval_results = Vec::new();
-                let mut per_client = Vec::new();
-                // One evaluation per node, mirroring the fit path: a
-                // redelivered eval executed by a node that already
-                // evaluated must not double its weight in the mean.
-                let mut seen_eval: HashSet<u64> = HashSet::with_capacity(results.len());
-                for r in results {
-                    if !r.error.is_empty() {
-                        if cfg.accept_failures {
-                            continue;
-                        }
-                        anyhow::bail!(
-                            "round {round}: eval on node {} failed: {}",
-                            r.node_id,
-                            r.error
-                        );
-                    }
-                    if !seen_eval.insert(r.node_id) {
-                        crate::telemetry::bump("serverapp.duplicate_node_results_skipped", 1);
-                        continue;
-                    }
-                    per_client.push((r.node_id, r.loss, r.metrics.clone()));
-                    eval_results.push(EvalRes {
-                        node_id: r.node_id,
-                        loss: r.loss,
-                        num_examples: r.num_examples,
-                        metrics: r.metrics,
-                    });
-                }
                 if quorum == 0 && !cfg.accept_failures {
                     anyhow::ensure!(
-                        eval_results.len() == task_ids.len(),
+                        eval_agg.count() == task_ids.len(),
                         "round {round}: only {} of {} sampled nodes evaluated \
                          (a dead node's task was redelivered) — strict mode \
                          requires the full cohort",
-                        eval_results.len(),
+                        eval_agg.count(),
                         task_ids.len()
                     );
                 }
-                if eval_results.is_empty() {
+                // Canonical (node-sorted) per-client series, independent
+                // of arrival order — what the batch path recorded.
+                per_client.sort_by_key(|(node_id, _, _)| *node_id);
+                if eval_agg.count() == 0 {
                     // Every sampled evaluator died or errored: record
                     // "no evaluation" instead of a fabricated 0.0 loss.
                     log::warn!("round {round}: no evaluation results — eval_loss omitted");
                     (None, Vec::new(), per_client)
                 } else {
-                    let (loss, metrics) = self.strategy.aggregate_evaluate(round, &eval_results);
+                    let (loss, metrics) = eval_agg.finalize();
                     (Some(loss), metrics, per_client)
                 }
             } else {
@@ -614,6 +636,7 @@ mod tests {
                 per_client_eval: vec![],
                 participation: Participation::default(),
             }],
+            commits: vec![],
             parameters: ArrayRecord::from_flat(&[1.0]),
         };
         let csv = h.to_csv();
@@ -624,18 +647,18 @@ mod tests {
     #[test]
     fn params_bits_equal_handles_nan() {
         let a = History {
-            rounds: vec![],
             parameters: ArrayRecord::from_flat(&[f32::NAN]),
+            ..Default::default()
         };
         let b = History {
-            rounds: vec![],
             parameters: ArrayRecord::from_flat(&[f32::NAN]),
+            ..Default::default()
         };
         assert!(a.params_bits_equal(&b));
         assert_eq!(a, b, "record equality is byte equality — NaN-safe");
         assert!(!a.params_bits_equal(&History {
-            rounds: vec![],
             parameters: ArrayRecord::from_flat(&[0.0]),
+            ..Default::default()
         }));
     }
 }

@@ -119,6 +119,24 @@ pub trait Strategy: Send {
         true
     }
 
+    /// Can this strategy aggregate asynchronously (FedBuff-style: fold
+    /// results cut from OLDER model versions into the current buffer)?
+    /// True for every plain reduction; secure aggregation overrides to
+    /// `false` — its masks are bound to a fixed round cohort, and a
+    /// buffer mixing versions can never make them cancel.
+    fn supports_async(&self) -> bool {
+        true
+    }
+
+    /// Weight applied to a result whose model version lags the current
+    /// global version by `delta` commits (0 = fresh). Must be exactly
+    /// 1.0 at `delta == 0` so synchronous-equivalent async runs stay
+    /// bit-identical. Default: the FedBuff polynomial
+    /// `1 / sqrt(1 + delta)`.
+    fn staleness_weight(&self, delta: u64) -> f64 {
+        1.0 / (1.0 + delta as f64).sqrt()
+    }
+
     /// Extra config pushed to clients with each fit instruction.
     fn configure_fit(&mut self, _round: u64) -> ConfigRecord {
         Vec::new()
@@ -151,6 +169,73 @@ pub trait Strategy: Send {
     /// Weighted-average loss/metrics (Flower's default behaviour).
     fn aggregate_evaluate(&mut self, _round: u64, results: &[EvalRes]) -> (f64, MetricRecord) {
         weighted_eval(results)
+    }
+
+    /// Begin incremental EVALUATION aggregation for `round`: results
+    /// stream into a small accumulator as they arrive (an [`EvalRes`] is
+    /// a handful of floats — the driver no longer buffers the cohort's
+    /// full `TaskRes` frames through a quorum wait). The default
+    /// canonicalizes by node id at finalize and applies
+    /// [`Strategy::aggregate_evaluate`], so streaming is bit-identical
+    /// to the batch path in any arrival order.
+    fn begin_evaluate(&mut self, round: u64) -> Box<dyn EvalAgg + '_> {
+        Box::new(SortedEvalBuffer::new(move |results: &[EvalRes]| {
+            self.aggregate_evaluate(round, results)
+        }))
+    }
+}
+
+/// One round's incremental evaluate aggregation, created by
+/// [`Strategy::begin_evaluate`]. Mirrors [`FitAgg`] for the (much
+/// lighter) evaluation phase.
+pub trait EvalAgg {
+    /// Absorb one successful evaluation result.
+    fn accumulate(&mut self, res: EvalRes);
+
+    /// Results absorbed so far.
+    fn count(&self) -> usize;
+
+    /// Reduce to the aggregated (loss, metrics).
+    fn finalize(self: Box<Self>) -> (f64, MetricRecord);
+}
+
+/// Canonicalizing evaluate accumulator: buffers the (small) `EvalRes`
+/// structs, sorts by node id at finalize, then applies a batch
+/// reduction — the [`SortedBuffer`] pattern for the eval phase.
+pub struct SortedEvalBuffer<F> {
+    buf: Vec<EvalRes>,
+    reduce: F,
+}
+
+impl<F> SortedEvalBuffer<F>
+where
+    F: FnOnce(&[EvalRes]) -> (f64, MetricRecord),
+{
+    pub fn new(reduce: F) -> Self {
+        Self {
+            buf: Vec::new(),
+            reduce,
+        }
+    }
+}
+
+impl<F> EvalAgg for SortedEvalBuffer<F>
+where
+    F: FnOnce(&[EvalRes]) -> (f64, MetricRecord),
+{
+    fn accumulate(&mut self, res: EvalRes) {
+        self.buf.push(res);
+    }
+
+    fn count(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn finalize(self: Box<Self>) -> (f64, MetricRecord) {
+        let mut this = *self;
+        // Canonical reduction order, independent of arrival order.
+        this.buf.sort_by_key(|r| r.node_id);
+        (this.reduce)(&this.buf)
     }
 }
 
@@ -365,6 +450,55 @@ mod tests {
             .weighted_mean(&[fit(1, vec![1.0], 1), fit(2, vec![1.0, 2.0], 1)])
             .is_err());
         assert!(agg.weighted_mean(&[]).is_err());
+    }
+
+    #[test]
+    fn staleness_weight_default_is_polynomial_and_unit_at_zero() {
+        let s = FedAvg::new(Aggregator::host());
+        assert_eq!(s.staleness_weight(0), 1.0, "delta 0 must weigh exactly 1");
+        assert!((s.staleness_weight(3) - 0.5).abs() < 1e-12, "1/sqrt(4)");
+        let mut prev = 1.0;
+        for d in 1..10 {
+            let w = s.staleness_weight(d);
+            assert!(w < prev && w > 0.0, "monotone decreasing, positive");
+            prev = w;
+        }
+        assert!(s.supports_async(), "plain reductions support async");
+    }
+
+    #[test]
+    fn begin_evaluate_streams_bit_identical_to_batch() {
+        let results = vec![
+            EvalRes {
+                node_id: 2,
+                loss: 2.0,
+                num_examples: 3,
+                metrics: vec![("accuracy".into(), 1.0)],
+            },
+            EvalRes {
+                node_id: 1,
+                loss: 1.0,
+                num_examples: 1,
+                metrics: vec![("accuracy".into(), 0.0)],
+            },
+        ];
+        let mut sorted = results.clone();
+        sorted.sort_by_key(|r| r.node_id);
+        let mut s = FedAvg::new(Aggregator::host());
+        let want = s.aggregate_evaluate(1, &sorted);
+        // Stream in reverse-of-canonical order: finalize canonicalizes.
+        let mut agg = s.begin_evaluate(1);
+        for r in results {
+            agg.accumulate(r);
+        }
+        assert_eq!(agg.count(), 2);
+        let got = agg.finalize();
+        assert_eq!(got.0.to_bits(), want.0.to_bits());
+        assert_eq!(got.1.len(), want.1.len());
+        for ((ka, va), (kb, vb)) in got.1.iter().zip(want.1.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
     }
 
     #[test]

@@ -211,6 +211,14 @@ struct RunState {
     inflight: HashMap<u64, InflightTask>,
     /// task_id -> result (drained incrementally by the ServerApp).
     results: HashMap<u64, TaskRes>,
+    /// task_id -> global model version the task's parameters were cut
+    /// from (recorded at push time). The link is the AUTHORITY on
+    /// staleness: a result's echoed `model_version` is overwritten from
+    /// this map before storage, so legacy v1 clients (which cannot echo
+    /// the version) and buggy clients cannot misreport staleness.
+    /// Entries die with the task (result stored, failure, abandonment,
+    /// or run finish).
+    task_version: HashMap<u64, u64>,
     /// task_id -> reason, for tasks that will never complete (dead node,
     /// redeliveries exhausted). Claimed by waiters.
     failed: HashMap<u64, String>,
@@ -232,11 +240,43 @@ impl RunState {
             pending: HashMap::new(),
             inflight: HashMap::new(),
             results: HashMap::new(),
+            task_version: HashMap::new(),
             failed: HashMap::new(),
             done: HashSet::new(),
             active: true,
             acked: HashSet::new(),
         }
+    }
+
+    /// Claim everything resolved among `task_ids`: ready results and
+    /// failure verdicts, each in ascending task id and each handed out
+    /// exactly once (claimed entries leave the maps). Shared by the
+    /// blocking streaming wait and the async driver's non-blocking
+    /// poll, so claim semantics cannot diverge between them.
+    fn claim_resolved(
+        &mut self,
+        task_ids: impl Iterator<Item = u64>,
+    ) -> (Vec<TaskRes>, Vec<(u64, String)>) {
+        let mut ready_ids: Vec<u64> = Vec::new();
+        let mut failed: Vec<(u64, String)> = Vec::new();
+        for id in task_ids {
+            if self.results.contains_key(&id) {
+                ready_ids.push(id);
+            } else if let Some(e) = self.failed.get(&id) {
+                failed.push((id, e.clone()));
+            }
+        }
+        // Deterministic tie-break when several resolved at once.
+        ready_ids.sort_unstable();
+        let ready: Vec<TaskRes> = ready_ids
+            .iter()
+            .map(|id| self.results.remove(id).unwrap())
+            .collect();
+        failed.sort_unstable_by_key(|(id, _)| *id);
+        for (id, _) in &failed {
+            self.failed.remove(id);
+        }
+        (ready, failed)
     }
 }
 
@@ -394,6 +434,7 @@ impl SuperLink {
                         );
                         run.failed.insert(tid, reason);
                         run.done.insert(tid);
+                        run.task_version.remove(&tid);
                         crate::telemetry::bump("superlink.tasks_failed", 1);
                     }
                 }
@@ -505,6 +546,7 @@ impl SuperLink {
                 }
             }
             FlowerMsg::PushTaskRes { res } => {
+                let mut res = res;
                 self.touch(res.node_id);
                 let stored = {
                     let mut runs = self.runs.lock().unwrap();
@@ -512,6 +554,14 @@ impl SuperLink {
                         Some(run) if run.active => {
                             if run.done.insert(res.task_id) {
                                 run.inflight.remove(&res.task_id);
+                                // Authoritative staleness basis: stamp
+                                // the version recorded at push time (a
+                                // v1 client echoes nothing; nobody gets
+                                // to claim freshness the link didn't
+                                // hand out).
+                                if let Some(v) = run.task_version.remove(&res.task_id) {
+                                    res.model_version = v;
+                                }
                                 run.results.insert(res.task_id, res);
                                 true
                             } else {
@@ -657,8 +707,37 @@ impl SuperLink {
                 ins: ins.redeliver.then(|| ins.clone()),
             },
         );
+        run.task_version.insert(task_id, ins.model_version);
         run.pending.entry(node_id).or_default().push_back(ins);
         task_id
+    }
+
+    /// Non-blocking claim of whatever has resolved among `task_ids` of
+    /// one run: ready results (stamped with their authoritative model
+    /// version, ascending task id) plus newly failed tasks with reasons.
+    /// Claimed entries are removed from the run's maps — each result is
+    /// handed out exactly once. This is the async driver's poll: it
+    /// NEVER barriers on a cohort; pair it with
+    /// [`SuperLink::wait_activity`] to sleep until something changes.
+    pub fn poll_results(
+        &self,
+        run_id: u64,
+        task_ids: &[u64],
+    ) -> (Vec<TaskRes>, Vec<(u64, String)>) {
+        let mut runs = self.runs.lock().unwrap();
+        match runs.get_mut(&run_id) {
+            Some(run) => run.claim_resolved(task_ids.iter().copied()),
+            None => (Vec::new(), Vec::new()),
+        }
+    }
+
+    /// Block until the link's state changes (a result arrives, a node
+    /// joins or dies, a run finishes) or `timeout` passes — whichever
+    /// comes first (waits are internally capped, so a missed wakeup
+    /// costs at most ~50ms). The async driver's idle wait between
+    /// [`SuperLink::poll_results`] calls.
+    pub fn wait_activity(&self, timeout: Duration) {
+        self.wait_notified(Instant::now() + timeout);
     }
 
     /// Stream results for `task_ids` of one run to `f` AS THEY ARRIVE
@@ -721,27 +800,7 @@ impl SuperLink {
             let (ready, newly_failed) = {
                 let mut runs = self.runs.lock().unwrap();
                 match runs.get_mut(&run_id) {
-                    Some(run) => {
-                        let mut ids: Vec<u64> = remaining
-                            .iter()
-                            .filter(|id| run.results.contains_key(*id))
-                            .copied()
-                            .collect();
-                        // Deterministic tie-break when several results
-                        // are pending at once.
-                        ids.sort_unstable();
-                        let ready: Vec<TaskRes> =
-                            ids.iter().map(|id| run.results.remove(id).unwrap()).collect();
-                        let mut failed: Vec<(u64, String)> = remaining
-                            .iter()
-                            .filter_map(|id| run.failed.get(id).map(|e| (*id, e.clone())))
-                            .collect();
-                        failed.sort_unstable_by_key(|(id, _)| *id);
-                        for (id, _) in &failed {
-                            run.failed.remove(id);
-                        }
-                        (ready, failed)
-                    }
+                    Some(run) => run.claim_resolved(remaining.iter().copied()),
                     None => (Vec::new(), Vec::new()),
                 }
             };
@@ -797,6 +856,7 @@ impl SuperLink {
                     run.inflight.remove(id);
                     run.failed.remove(id);
                     run.results.remove(id);
+                    run.task_version.remove(id);
                 }
                 for q in run.pending.values_mut() {
                     q.retain(|t| !abandoned.contains(&t.task_id));
@@ -872,6 +932,7 @@ impl SuperLink {
             run.inflight.clear();
             run.failed.clear();
             run.done.clear();
+            run.task_version.clear();
             if !run.results.is_empty() {
                 crate::telemetry::bump(
                     "superlink.finish_dropped_results",
@@ -963,6 +1024,7 @@ mod tests {
             attempt: 0,
             // Link-level tests exercise the redelivery machinery.
             redeliver: true,
+            model_version: 0,
             parameters: ArrayRecord::from_flat(&[1.0]),
             config: vec![],
         }
@@ -982,6 +1044,7 @@ mod tests {
             num_examples: 10,
             loss: 0.0,
             metrics: vec![],
+            model_version: 0,
         }
     }
 
@@ -1254,6 +1317,82 @@ mod tests {
         assert!(link
             .await_results(1, &[tid], Duration::from_millis(40))
             .is_err());
+    }
+
+    #[test]
+    fn poll_results_is_nonblocking_and_claims_once() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let t1 = link.push_task(1, ins(1));
+        let t2 = link.push_task(1, ins(1));
+        // Nothing arrived yet: poll returns immediately with nothing.
+        let t0 = Instant::now();
+        let (ready, failed) = link.poll_results(1, &[t1, t2]);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        assert!(ready.is_empty() && failed.is_empty());
+        // One result lands: exactly one poll claims it.
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: res(t1, 1) }.encode());
+        let (ready, _) = link.poll_results(1, &[t1, t2]);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].task_id, t1);
+        let (ready, _) = link.poll_results(1, &[t1, t2]);
+        assert!(ready.is_empty(), "a claimed result is handed out once");
+        // Unknown runs poll empty.
+        let (ready, failed) = link.poll_results(99, &[t1]);
+        assert!(ready.is_empty() && failed.is_empty());
+    }
+
+    #[test]
+    fn poll_results_surfaces_dead_node_failures() {
+        let link = SuperLink::with_config(LinkConfig {
+            lease: Duration::from_millis(80),
+            max_redeliveries: 0,
+        });
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let tid = link.push_task(1, ins(1));
+        let (tasks, _) = pull(&link, 1);
+        assert_eq!(tasks.len(), 1);
+        // Node 1 goes silent past its lease.
+        std::thread::sleep(Duration::from_millis(120));
+        link.reap_expired();
+        let (ready, failed) = link.poll_results(1, &[tid]);
+        assert!(ready.is_empty());
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].0, tid);
+        assert!(failed[0].1.contains("lease expired"), "{}", failed[0].1);
+        // Failure verdicts are claimed once too.
+        let (_, failed) = link.poll_results(1, &[tid]);
+        assert!(failed.is_empty());
+    }
+
+    #[test]
+    fn link_stamps_authoritative_model_version_on_results() {
+        let link = SuperLink::new();
+        link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        let tid = link.push_task(
+            1,
+            TaskIns {
+                model_version: 7,
+                ..ins(1)
+            },
+        );
+        // The client echoes a WRONG version (or 0, like a legacy v1
+        // client): the link's push-time record wins.
+        link.handle_frame(
+            &FlowerMsg::PushTaskRes {
+                res: TaskRes {
+                    model_version: 0,
+                    ..res(tid, 1)
+                },
+            }
+            .encode(),
+        );
+        let (ready, _) = link.poll_results(1, &[tid]);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(
+            ready[0].model_version, 7,
+            "link must stamp the push-time version onto the result"
+        );
     }
 
     #[test]

@@ -184,6 +184,10 @@ impl SuperNode {
             num_examples: 0,
             loss: 0.0,
             metrics: Vec::new(),
+            // Echo the version this task's parameters were cut from so
+            // the async driver can compute staleness (the SuperLink
+            // re-stamps it authoritatively on arrival).
+            model_version: ins.model_version,
         };
         match ins.task_type {
             TaskType::Fit => match self.app.fit(&ins.parameters, &ins.config) {
@@ -251,6 +255,7 @@ mod tests {
                 task_type: TaskType::Fit,
                 attempt: 0,
                 redeliver: false,
+                model_version: 0,
                 parameters: ArrayRecord::from_flat(&[1.0, 2.0]),
                 config: vec![],
             },
@@ -322,6 +327,7 @@ mod tests {
                 task_type: TaskType::Fit,
                 attempt: 0,
                 redeliver: false,
+                model_version: 0,
                 parameters: ArrayRecord::new(),
                 config: vec![],
             },

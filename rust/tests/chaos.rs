@@ -24,6 +24,21 @@ use flarelink::flower::strategy::{
 };
 use flarelink::flower::superlink::LinkConfig;
 
+/// One seed drives every stochastic layer a chaos test touches (the
+/// federation's fault endpoints, and any sampling seeds derived from
+/// it). It is PRINTED at test start — `--nocapture` in the CI chaos job
+/// shows it on every run, and a failing test's captured output carries
+/// it — so a failure reproduces with `CHAOS_SEED=<n> cargo test --test
+/// chaos`.
+fn chaos_seed() -> u64 {
+    let seed = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    println!("chaos seed: {seed} (rerun with CHAOS_SEED={seed} to reproduce)");
+    seed
+}
+
 // ---------------------------------------------------------------------------
 // Gate: deterministic mid-round crash coordination (no long sleeps)
 // ---------------------------------------------------------------------------
@@ -183,6 +198,7 @@ fn partial_round(
     strategy: Box<dyn Strategy>,
     init: ArrayRecord,
     gate: &Arc<Gate>,
+    seed: u64,
 ) -> flarelink::flower::serverapp::History {
     let apps = chaos_fleet_apps(gate);
     let fleet = NativeFleet::start_with(
@@ -212,7 +228,7 @@ fn partial_round(
             straggler_grace: Duration::from_millis(100),
             fraction_evaluate: 0.0,
             round_timeout: Duration::from_secs(30),
-            seed: 11,
+            seed,
             ..Default::default()
         },
         init,
@@ -266,10 +282,11 @@ fn every_strategy_finalizes_at_quorum_bit_identical_to_surviving_cohort() {
         ),
         ("krum", Box::new(|| Box::new(Krum { f: 1 }))),
     ];
+    let seed = chaos_seed();
     let init = ArrayRecord::from_flat(&[0.25f32; 6]);
     for (label, mk) in factories {
         let gate = Gate::new();
-        let history = partial_round(mk(), init.clone(), &gate);
+        let history = partial_round(mk(), init.clone(), &gate, seed);
 
         // Participation recorded: K of N contributed.
         assert_eq!(history.rounds.len(), 1, "{label}");
@@ -292,6 +309,7 @@ fn every_strategy_finalizes_at_quorum_bit_identical_to_surviving_cohort() {
 
 #[test]
 fn lease_expiry_resolves_the_round_before_any_timeout() {
+    let seed = chaos_seed();
     let gate = Gate::new();
     let apps = chaos_fleet_apps(&gate);
     let fleet = NativeFleet::start_with(
@@ -321,7 +339,7 @@ fn lease_expiry_resolves_the_round_before_any_timeout() {
             straggler_grace: Duration::from_secs(30),
             fraction_evaluate: 0.0,
             round_timeout: Duration::from_secs(60),
-            seed: 3,
+            seed,
             ..Default::default()
         },
         ArrayRecord::from_flat(&[0.0f32; 4]),
@@ -351,6 +369,7 @@ fn lease_expiry_resolves_the_round_before_any_timeout() {
 
 #[test]
 fn secagg_refuses_partial_participation() {
+    let seed = chaos_seed();
     let gate = Gate::new();
     let mk_client = |i: usize| -> Arc<dyn ClientApp> {
         Arc::new(ModStack::new(
@@ -391,7 +410,7 @@ fn secagg_refuses_partial_participation() {
             straggler_grace: Duration::from_millis(50),
             fraction_evaluate: 0.0,
             round_timeout: Duration::from_secs(20),
-            seed: 9,
+            seed,
             ..Default::default()
         },
         ArrayRecord::from_flat(&[0.5f32; 4]),
@@ -482,6 +501,7 @@ mod bridged {
     /// are identical to the native path.
     #[test]
     fn bridged_round_completes_at_quorum_when_sites_die() {
+        let seed = super::chaos_seed();
         let gate = Gate::new();
         let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
         let c2 = captured.clone();
@@ -493,6 +513,7 @@ mod bridged {
         let fed = FederationBuilder::new("chaos-bridge")
             .sites(SITES)
             .chaos()
+            .seed(seed)
             .scp_config(ScpConfig {
                 // The SuperLink lease — not the site heartbeat — must be
                 // what resolves the round.

@@ -1,0 +1,247 @@
+//! Strategy conformance matrix: ONE macro-driven suite that runs every
+//! strategy through the runtime's equivalence invariants, so a new
+//! strategy gets the whole matrix by adding one line:
+//!
+//! 1. **streamed == batch** — randomized arrival order through the
+//!    incremental accumulator finalizes bit-identical to the batch
+//!    reduction (3 stateful rounds, 3 shuffle seeds).
+//! 2. **full == quorum-over-survivors** — aggregating the node-sorted
+//!    surviving subset in one batch equals streaming the same survivors
+//!    in any arrival order (what a quorum round actually does after
+//!    dead-node dedup).
+//! 3. **async(staleness 0, buffer == cohort) == sync** — the
+//!    asynchronous driver with its sync-equivalent configuration
+//!    produces bit-identical final parameters to the synchronous round
+//!    driver over a real SuperLink + SuperNode fleet.
+//! 4. **gates** — `supports_partial` / `supports_async` report the
+//!    expected capability.
+//!
+//! Secure aggregation sits outside the macro: both gates are CLOSED
+//! (masks are bound to one (round, cohort) pair), and the async driver
+//! must refuse to start.
+
+use std::sync::Arc;
+
+use flarelink::flower::asyncfed::AsyncConfig;
+use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
+use flarelink::flower::records::ArrayRecord;
+use flarelink::flower::run::{run_native, NativeFleet};
+use flarelink::flower::serverapp::{ServerApp, ServerConfig};
+use flarelink::flower::strategy::{
+    Aggregator, FedAdagrad, FedAdam, FedAvg, FedAvgM, FedMedian, FedOptConfig, FedProx, FedYogi,
+    FitRes, Krum, Strategy, TrimmedMean,
+};
+use flarelink::util::rng::Rng;
+
+const COHORT: usize = 5;
+
+fn mk_results(n_clients: usize, dim: usize, seed: u64) -> Vec<FitRes> {
+    let mut rng = Rng::new(seed);
+    (1..=n_clients)
+        .map(|id| {
+            let params: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            FitRes {
+                node_id: id as u64,
+                parameters: ArrayRecord::from_flat(&params),
+                num_examples: rng.range_u64(1, 50),
+                metrics: vec![],
+            }
+        })
+        .collect()
+}
+
+fn bits(rec: &ArrayRecord) -> Vec<u32> {
+    rec.to_flat().iter().map(|f| f.to_bits()).collect()
+}
+
+/// Check 1: randomized streaming == batch, bit for bit, across 3
+/// stateful rounds.
+fn check_stream_equals_batch(mk: &dyn Fn() -> Box<dyn Strategy>, label: &str) {
+    for shuffle_seed in [1u64, 7, 23] {
+        let mut batch = mk();
+        let mut stream = mk();
+        let mut params_batch = ArrayRecord::from_flat(&[0.25f32; 6]);
+        let mut params_stream = params_batch.clone();
+        let mut rng = Rng::new(shuffle_seed);
+        for round in 1..=3u64 {
+            let results = mk_results(7, 6, round * 211);
+            params_batch = batch.aggregate_fit(round, &params_batch, &results).unwrap();
+            let mut order: Vec<usize> = (0..results.len()).collect();
+            rng.shuffle(&mut order);
+            let mut agg = stream.begin_fit(round, &params_stream);
+            for i in order {
+                agg.accumulate(results[i].clone()).unwrap();
+            }
+            params_stream = agg.finalize().unwrap();
+            assert_eq!(
+                bits(&params_batch),
+                bits(&params_stream),
+                "{label}: streamed round {round} diverged from batch (shuffle {shuffle_seed})"
+            );
+        }
+    }
+}
+
+/// Check 2: a quorum round over the surviving subset (streamed, any
+/// arrival order, dead nodes simply absent) equals the clean batch
+/// reduction over exactly those survivors.
+fn check_quorum_equals_full_over_survivors(mk: &dyn Fn() -> Box<dyn Strategy>, label: &str) {
+    let init = ArrayRecord::from_flat(&[0.5f32; 6]);
+    let all = mk_results(7, 6, 97);
+    // Nodes 3 and 6 died mid-round: the quorum finalizes from the rest.
+    let survivors: Vec<FitRes> = all
+        .iter()
+        .filter(|r| r.node_id != 3 && r.node_id != 6)
+        .cloned()
+        .collect();
+    let want = mk().aggregate_fit(1, &init, &survivors).unwrap();
+    for order in [[4usize, 0, 2, 1, 3], [2, 3, 4, 1, 0], [0, 4, 1, 3, 2]] {
+        let mut s = mk();
+        let mut agg = s.begin_fit(1, &init);
+        for i in order {
+            agg.accumulate(survivors[i].clone()).unwrap();
+        }
+        let got = agg.finalize().unwrap();
+        assert_eq!(
+            bits(&got),
+            bits(&want),
+            "{label}: quorum-over-survivors (arrival {order:?}) diverged from the \
+             full batch over the same survivors"
+        );
+    }
+}
+
+fn fleet_apps() -> Vec<Arc<dyn ClientApp>> {
+    (0..COHORT)
+        .map(|i| {
+            Arc::new(ArithmeticClient {
+                delta: (i + 1) as f32 * 0.5,
+                n: 10 * (i as u64 + 1),
+            }) as Arc<dyn ClientApp>
+        })
+        .collect()
+}
+
+fn server_cfg(rounds: u64) -> ServerConfig {
+    ServerConfig {
+        num_rounds: rounds,
+        min_nodes: COHORT,
+        fraction_evaluate: 0.0,
+        seed: 13,
+        ..Default::default()
+    }
+}
+
+/// Check 3 (the tentpole's acceptance anchor): async with
+/// `buffer_size == cohort size` and `max_staleness == 0` produces
+/// bit-identical final parameters to the synchronous round path.
+fn check_async_staleness0_equals_sync(mk: &dyn Fn() -> Box<dyn Strategy>, label: &str) {
+    let rounds = 2u64;
+    let init = ArrayRecord::from_flat(&[0.25f32; 6]);
+    let mut sync_app = ServerApp::new(mk(), server_cfg(rounds), init.clone());
+    let sync_h = run_native(&mut sync_app, fleet_apps(), 1).unwrap();
+
+    let fleet = NativeFleet::start(fleet_apps()).unwrap();
+    let mut async_app = ServerApp::new(mk(), server_cfg(rounds), init);
+    let async_h = async_app
+        .run_async(
+            fleet.link(),
+            None,
+            1,
+            AsyncConfig {
+                buffer_size: COHORT,
+                max_staleness: 0,
+            },
+        )
+        .unwrap();
+    fleet.shutdown();
+
+    assert_eq!(async_h.commits.len(), rounds as usize, "{label}: commit count");
+    for c in &async_h.commits {
+        assert_eq!(c.results_folded, COHORT, "{label}: full buffer per commit");
+        assert_eq!(c.max_staleness, 0, "{label}: only fresh results fold");
+    }
+    assert!(
+        async_h.parameters.bits_equal(&sync_h.parameters),
+        "{label}: async (buffer == cohort, staleness 0) diverged from sync"
+    );
+}
+
+macro_rules! conformance_matrix {
+    ($($name:ident => $mk:expr;)*) => {$(
+        mod $name {
+            use super::*;
+
+            fn mk() -> Box<dyn Strategy> {
+                $mk
+            }
+
+            #[test]
+            fn streamed_equals_batch() {
+                check_stream_equals_batch(&mk, stringify!($name));
+            }
+
+            #[test]
+            fn quorum_equals_full_over_survivors() {
+                check_quorum_equals_full_over_survivors(&mk, stringify!($name));
+            }
+
+            #[test]
+            fn async_staleness0_equals_sync() {
+                check_async_staleness0_equals_sync(&mk, stringify!($name));
+            }
+
+            #[test]
+            fn gates_are_open() {
+                let s = mk();
+                assert!(s.supports_partial(), "plain reductions aggregate partial cohorts");
+                assert!(s.supports_async(), "plain reductions aggregate asynchronously");
+                assert_eq!(s.staleness_weight(0), 1.0, "fresh results must weigh exactly 1");
+            }
+        }
+    )*};
+}
+
+conformance_matrix! {
+    fedavg => Box::new(FedAvg::new(Aggregator::host()));
+    fedavgm => Box::new(FedAvgM::new(Aggregator::host(), 0.9, 0.5));
+    fedadam => Box::new(FedAdam::new(Aggregator::host(), FedOptConfig::default()));
+    fedadagrad => Box::new(FedAdagrad::new(Aggregator::host(), FedOptConfig::default()));
+    fedyogi => Box::new(FedYogi::new(Aggregator::host(), FedOptConfig::default()));
+    fedprox => Box::new(FedProx::new(Aggregator::host(), 0.01));
+    fedmedian => Box::new(FedMedian);
+    trimmed_mean => Box::new(TrimmedMean { trim: 1 });
+    krum => Box::new(Krum { f: 1 });
+}
+
+/// Secure aggregation's row of the matrix: both capability gates are
+/// CLOSED, and the async driver refuses before any task is dispatched.
+mod secagg {
+    use super::*;
+    use flarelink::flower::secagg::SecAggFedAvg;
+    use flarelink::flower::superlink::SuperLink;
+
+    #[test]
+    fn gates_are_closed() {
+        let s = SecAggFedAvg::new(7);
+        assert!(!s.supports_partial(), "masks only cancel over the full cohort");
+        assert!(!s.supports_async(), "masks are bound to one model version");
+    }
+
+    #[test]
+    fn async_driver_refuses() {
+        let link = SuperLink::new();
+        let mut app = ServerApp::new(
+            Box::new(SecAggFedAvg::new(7)),
+            server_cfg(1),
+            ArrayRecord::from_flat(&[0.0f32; 4]),
+        );
+        let err = app
+            .run_async(&link, None, 1, AsyncConfig::default())
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("cannot aggregate asynchronously"),
+            "refusal must name the capability: {err}"
+        );
+    }
+}

@@ -148,6 +148,9 @@ impl Gen for FlowerMsgGen {
                     num_examples: rng.next_u64(),
                     loss: rng.next_f64(),
                     metrics: vec![(sg.generate(rng), rng.next_f64())],
+                    // v1 frames cannot carry the version, so the
+                    // legacy-roundtrip property needs the default.
+                    model_version: if self.flat_only { 0 } else { rng.below(16) },
                 },
             },
             3 => FlowerMsg::NodeCreated {
@@ -173,6 +176,7 @@ impl Gen for FlowerMsgGen {
                             rng.below(4) as u32
                         },
                         redeliver: !self.flat_only && rng.chance(0.5),
+                        model_version: if self.flat_only { 0 } else { rng.below(16) },
                         parameters: self.gen_params(rng),
                         config: vec![
                             (sg.generate(rng), ConfigValue::F64(rng.next_f64())),
@@ -535,9 +539,101 @@ fn prop_history_csv_has_one_line_per_round() {
                     participation: Default::default(),
                 })
                 .collect(),
+            commits: vec![],
             parameters: ArrayRecord::new(),
         };
         h.to_csv().lines().count() as u64 == rounds + 1
+    });
+}
+
+// ---------------------------------------------------------------------------
+// async-fold invariants (tentpole: buffered staleness-aware aggregation)
+// ---------------------------------------------------------------------------
+
+/// Random async workload: tasks cut from random (lagging) versions,
+/// arriving in random order, with duplicate deliveries (redelivery
+/// races) and tasks that never arrive at all (node death). The driver
+/// contract modeled here is exactly `ServerApp::run_async`'s: offer
+/// results one at a time, commit whenever the window fills.
+#[test]
+fn prop_async_fold_invariants() {
+    use flarelink::flower::asyncfed::{AsyncState, Offer};
+    use std::collections::HashMap;
+
+    struct WorkloadGen;
+
+    struct Workload {
+        buffer_size: usize,
+        max_staleness: u64,
+        /// (task_id, version lag at dispatch time). Duplicated entries
+        /// model redelivery races; task ids that were "dispatched" but
+        /// never listed model nodes that died mid-fit.
+        arrivals: Vec<(u64, u64)>,
+    }
+
+    impl Gen for WorkloadGen {
+        type Value = Workload;
+        fn generate(&self, rng: &mut Rng) -> Workload {
+            let n = rng.range_u64(1, 60) as usize;
+            let mut arrivals = Vec::with_capacity(n);
+            for _ in 0..n {
+                let task_id = rng.below(40);
+                let lag = rng.below(6);
+                arrivals.push((task_id, lag));
+                if rng.chance(0.15) {
+                    // Redelivery race: the same task delivered again.
+                    arrivals.push((task_id, lag));
+                }
+            }
+            Workload {
+                buffer_size: rng.range_u64(1, 5) as usize,
+                max_staleness: rng.below(4),
+                arrivals,
+            }
+        }
+    }
+
+    prop_check("async fold invariants", 300, WorkloadGen, |w| {
+        let mut st = AsyncState::new(w.buffer_size, w.max_staleness);
+        let mut folds_per_task: HashMap<u64, u32> = HashMap::new();
+        for &(task_id, lag) in &w.arrivals {
+            // Driver contract: a full window commits before more offers.
+            if st.window_full() {
+                let c = st.commit();
+                if c.results_folded != w.buffer_size {
+                    return false; // commits close exactly-full windows
+                }
+                if c.max_staleness > w.max_staleness {
+                    return false;
+                }
+            }
+            let origin = st.version().saturating_sub(lag);
+            match st.offer(task_id, origin) {
+                Offer::Fold { staleness } => {
+                    // Invariant: every folded result is fresh enough.
+                    if staleness > w.max_staleness {
+                        return false;
+                    }
+                    *folds_per_task.entry(task_id).or_insert(0) += 1;
+                }
+                Offer::DropStale { staleness } => {
+                    if staleness <= w.max_staleness {
+                        return false; // only genuinely stale results drop
+                    }
+                }
+                Offer::DropDuplicate => {}
+            }
+        }
+        if st.window_full() {
+            st.commit();
+        }
+        // Invariant: no result is ever folded twice (redelivery dedup).
+        if folds_per_task.values().any(|&c| c > 1) {
+            return false;
+        }
+        // Invariant: commit count == floor(folded / buffer_size) —
+        // tasks that never arrived (dead nodes) stall nothing else.
+        st.commits() == st.total_folded() / w.buffer_size as u64
     });
 }
 
