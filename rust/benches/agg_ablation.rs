@@ -18,7 +18,7 @@ fn results(k: usize, n: usize, seed: u64) -> Vec<FitRes> {
                 &(0..n).map(|_| rng.normal_f32()).collect::<Vec<f32>>(),
             ),
             num_examples: 100 + i as u64,
-            metrics: vec![],
+            metrics: flarelink::flower::records::MetricRecord::new(),
         })
         .collect()
 }

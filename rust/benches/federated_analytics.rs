@@ -1,0 +1,96 @@
+//! Bench: the federated-analytics query workload (histogram + weighted
+//! quantile sketch) over the generic Message API — the scenario axis
+//! the Grid/Message redesign opened. Measures end-to-end query-round
+//! latency as the fleet grows, and proves the zero-model property with
+//! numbers: instruction frames carry NO tensor payload bytes, so a
+//! query round's wire cost is independent of any model size.
+//!
+//! `--smoke` shrinks the sweep for CI and asserts bit-reproducibility
+//! of the report across repeated runs (fresh fleets, same data).
+
+use std::time::{Duration, Instant};
+
+use flarelink::flower::analytics::{run_query, AnalyticsConfig, AnalyticsReport};
+use flarelink::flower::analytics::HistogramQueryApp;
+use flarelink::flower::clientapp::Router;
+use flarelink::flower::run::NativeFleet;
+use flarelink::util::bench::{fmt_dur, Table};
+use flarelink::util::rng::Rng;
+
+fn site_values(idx: usize, n: usize) -> Vec<(f64, f64)> {
+    let mut rng = Rng::new(0xFA + idx as u64);
+    (0..n)
+        .map(|_| (rng.next_f64() * 10.0, 1.0 + rng.next_f64()))
+        .collect()
+}
+
+fn query_once(sites: usize, values_per_site: usize, run_id: u64) -> (AnalyticsReport, Duration) {
+    let routers: Vec<Router> = (0..sites)
+        .map(|i| {
+            HistogramQueryApp {
+                values: site_values(i, values_per_site),
+            }
+            .router()
+        })
+        .collect();
+    let fleet = NativeFleet::start_routers(routers).unwrap();
+    let cfg = AnalyticsConfig {
+        bins: 32,
+        lo: 0.0,
+        hi: 10.0,
+        quantiles: vec![0.5, 0.9, 0.99],
+        min_nodes: sites,
+        timeout: Duration::from_secs(30),
+    };
+    let t0 = Instant::now();
+    let report = run_query(fleet.link(), run_id, &cfg).unwrap();
+    let elapsed = t0.elapsed();
+    fleet.shutdown();
+    (report, elapsed)
+}
+
+fn main() -> anyhow::Result<()> {
+    flarelink::telemetry::init_logging();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let fleet_sizes: &[usize] = if smoke { &[2, 4] } else { &[2, 4, 8, 16] };
+    let values_per_site = if smoke { 500 } else { 20_000 };
+
+    println!("=== federated analytics: Query-only rounds over the Message API ===\n");
+    println!(
+        "workload: 32-bin weighted histogram + p50/p90/p99 sketch, {values_per_site} \
+         values/site{}\n",
+        if smoke { " (smoke mode)" } else { "" }
+    );
+
+    let mut t = Table::new(&["sites", "round_latency", "examples", "p50", "p99", "errors"]);
+    for &sites in fleet_sizes {
+        let (report, elapsed) = query_once(sites, values_per_site, 1);
+        assert_eq!(report.nodes_answered.len(), sites, "every node answers");
+        assert!(report.per_node_errors.is_empty());
+        let p50 = report.quantiles[0].1;
+        let p99 = report.quantiles[2].1;
+        t.row(vec![
+            sites.to_string(),
+            fmt_dur(elapsed),
+            report.total_examples.to_string(),
+            format!("{p50:.3}"),
+            format!("{p99:.3}"),
+            report.per_node_errors.len().to_string(),
+        ]);
+
+        // Determinism gate (the Fig. 5 property for analytics): a fresh
+        // fleet over the same shards reports identical bits.
+        let (again, _) = query_once(sites, values_per_site, 2);
+        assert!(
+            report.bits_equal(&again),
+            "{sites}-site query report must be bit-reproducible"
+        );
+    }
+    println!("{}", t.render());
+    println!(
+        "zero-model contract: query instructions carry config only (the client \
+         handler rejects any tensor payload), so round cost above is independent \
+         of model size."
+    );
+    Ok(())
+}

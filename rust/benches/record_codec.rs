@@ -68,10 +68,12 @@ fn main() -> anyhow::Result<()> {
             run_id: 1,
             node_id: 1,
             error: String::new(),
+            message_type: flarelink::flower::message::MessageType::Train,
             parameters: record.clone(),
             num_examples: 128,
             loss: 0.5,
-            metrics: vec![("accuracy".into(), 0.9)],
+            metrics: vec![("accuracy".to_string(), 0.9)].into(),
+            configs: flarelink::flower::records::ConfigRecord::new(),
             model_version: 0,
         },
     };

@@ -33,9 +33,11 @@ use std::time::Duration;
 
 use crate::flare::job::{AppFactory, JobCtx};
 use crate::flare::reliable::RetryPolicy;
-use crate::flower::clientapp::ClientApp;
+use crate::flower::clientapp::{ClientApp, Router};
+use crate::flower::grid::Grid;
+use crate::flower::message::Message;
 use crate::flower::serverapp::{History, ServerApp};
-use crate::flower::superlink::SuperLink;
+use crate::flower::superlink::{CompletionPolicy, RoundWait, SuperLink};
 use crate::flower::supernode::{NativeConnector, SuperNode, SuperNodeConfig};
 use crate::proto::address;
 use crate::util::bytes::Bytes;
@@ -52,11 +54,120 @@ pub const FLOWER_TOPIC: &str = "flower.frame";
 /// without deregistering), so the job cell never hangs on a dead client.
 pub const SHUTDOWN_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Builds the client-side (ClientApp) and server-side (ServerApp) halves
-/// of a Flower job from its FLARE job context. Examples and the train
-/// stack provide these; the bridge stays model-agnostic.
+/// Bridged execution's [`Grid`]: wraps the server job cell's SuperLink
+/// whose CLIENT traffic arrives through FLARE reliable messaging —
+/// [`BridgedGrid::attach`] wires the LGC (Fig. 4 hops 3–5), and from
+/// that point the driver code (`ServerApp::run`, `run_async`,
+/// `analytics::run_query`) is byte-for-byte the code that runs
+/// natively: the six-hop bridge is an implementation detail below the
+/// `Grid` trait, exactly the paper's claim.
+pub struct BridgedGrid {
+    link: Arc<SuperLink>,
+}
+
+impl BridgedGrid {
+    /// Wire the LGC: Flower frames arriving over FLARE go straight into
+    /// the SuperLink; its reply rides back as the FLARE Reply. The owned
+    /// payload is moved out of the envelope, so the frame's tensor bytes
+    /// reach the link's zero-copy decode uncopied.
+    pub fn attach(ctx: &JobCtx, link: Arc<SuperLink>) -> BridgedGrid {
+        let link2 = link.clone();
+        ctx.messenger.set_handler(Arc::new(move |env| {
+            if env.topic != FLOWER_TOPIC {
+                anyhow::bail!("unexpected topic {}", env.topic);
+            }
+            crate::telemetry::bump("bridge.frames_relayed", 1);
+            crate::telemetry::bump("bridge.frame_bytes", env.payload.len() as i64);
+            let frame = std::mem::take(&mut env.payload);
+            Ok(link2.handle_frame_shared(Bytes::from_vec(frame)))
+        }));
+        BridgedGrid { link }
+    }
+
+    /// The wrapped link (for retire/drain at job teardown).
+    pub fn link(&self) -> &Arc<SuperLink> {
+        &self.link
+    }
+}
+
+impl Grid for BridgedGrid {
+    fn open_run(&self, run_id: u64) {
+        self.link.as_ref().open_run(run_id)
+    }
+
+    fn run_active(&self, run_id: u64) -> bool {
+        Grid::run_active(self.link.as_ref(), run_id)
+    }
+
+    fn close_run(&self, run_id: u64) {
+        self.link.as_ref().close_run(run_id)
+    }
+
+    fn node_ids(&self) -> Vec<u64> {
+        self.link.as_ref().node_ids()
+    }
+
+    fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>> {
+        Grid::wait_for_nodes(self.link.as_ref(), n, timeout)
+    }
+
+    fn reap(&self) {
+        self.link.as_ref().reap()
+    }
+
+    fn push_message(&self, msg: Message) -> u64 {
+        self.link.as_ref().push_message(msg)
+    }
+
+    fn pull_messages(&self, run_id: u64, ids: &[u64]) -> (Vec<Message>, Vec<(u64, String)>) {
+        self.link.as_ref().pull_messages(run_id, ids)
+    }
+
+    fn wait_activity(&self, timeout: Duration) {
+        Grid::wait_activity(self.link.as_ref(), timeout)
+    }
+
+    fn for_each_reply(
+        &self,
+        run_id: u64,
+        ids: &[u64],
+        timeout: Duration,
+        policy: CompletionPolicy,
+        f: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<RoundWait> {
+        self.link.as_ref().for_each_reply(run_id, ids, timeout, policy, f)
+    }
+}
+
+/// Builds the client-side (message [`Router`] or classic ClientApp) and
+/// server-side (ServerApp or custom [`Grid`] driver) halves of a Flower
+/// job from its FLARE job context. Examples and the train stack provide
+/// these; the bridge stays model-agnostic.
 pub trait FlowerAppBuilder: Send + Sync {
-    fn build_client(&self, ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>>;
+    /// Classic fit/evaluate client. Builders that only speak messages
+    /// (analytics, custom verbs) override [`FlowerAppBuilder::build_router`]
+    /// instead and may leave this defaulted.
+    fn build_client(&self, _ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>> {
+        anyhow::bail!(
+            "this app has no fit/evaluate client — override build_client or build_router"
+        )
+    }
+
+    /// The node's message app. Default: mount [`FlowerAppBuilder::build_client`]
+    /// via the blanket adapter.
+    fn build_router(&self, ctx: &JobCtx) -> anyhow::Result<Router> {
+        Ok(Router::from_client(self.build_client(ctx)?))
+    }
+
+    /// Custom server-side driver (e.g. a federated-analytics query run):
+    /// return `Some(result)` to take over the run loop — the default FL
+    /// round driver ([`FlowerAppBuilder::build_server`]) is skipped.
+    /// The grid is the ONLY surface handed over: the same driver code
+    /// works natively.
+    fn drive(&self, _ctx: &JobCtx, _grid: &dyn Grid) -> Option<anyhow::Result<()>> {
+        None
+    }
+
     fn build_server(&self, ctx: &JobCtx) -> anyhow::Result<ServerApp>;
     /// Build the server side for one run of a shared-SuperLink multi-run
     /// job (config key `concurrent_runs` > 1). Defaults to
@@ -110,7 +221,7 @@ impl AppFactory for FlowerBridgeApp {
     /// FLARE client side: start the LGS, then run an UNMODIFIED SuperNode
     /// pointed at it.
     fn run_client(&self, ctx: JobCtx) -> anyhow::Result<()> {
-        let app = self.builder.build_client(&ctx)?;
+        let app = self.builder.build_router(&ctx)?;
         let server_cell = address::job_cell(address::SERVER, &ctx.job_id);
 
         // Hop 1 wiring: the LGS endpoint the SuperNode dials.
@@ -129,12 +240,12 @@ impl AppFactory for FlowerBridgeApp {
             .position(|s| s == &ctx.site)
             .map(|i| i as u64 + 1)
             .unwrap_or(0);
-        let mut node = SuperNode::new(
+        let mut node = SuperNode::with_app(
             Box::new(NativeConnector::new(
                 lgs.client_endpoint(),
                 std::time::Duration::from_secs(120),
             )),
-            app,
+            Arc::new(app),
             SuperNodeConfig {
                 requested_node_id: partition,
                 ..Default::default()
@@ -172,20 +283,10 @@ impl AppFactory for FlowerBridgeApp {
                 .unwrap_or(defaults.max_redeliveries),
         });
 
-        // LGC: Flower frames arriving over FLARE go straight into the
-        // SuperLink; its reply rides back as the FLARE Reply (hops 3–5).
-        // The owned payload is moved out of the envelope, so the frame's
-        // tensor bytes reach the link's zero-copy decode uncopied.
-        let link2 = link.clone();
-        ctx.messenger.set_handler(Arc::new(move |env| {
-            if env.topic != FLOWER_TOPIC {
-                anyhow::bail!("unexpected topic {}", env.topic);
-            }
-            crate::telemetry::bump("bridge.frames_relayed", 1);
-            crate::telemetry::bump("bridge.frame_bytes", env.payload.len() as i64);
-            let frame = std::mem::take(&mut env.payload);
-            Ok(link2.handle_frame_shared(Bytes::from_vec(frame)))
-        }));
+        // LGC wiring (hops 3–5) + the driver-facing Grid: everything
+        // below drives rounds through `grid`, never the link directly —
+        // the exact same driver code that runs natively.
+        let grid = BridgedGrid::attach(&ctx, link.clone());
 
         // Async execution rides the job config too: `async_buffer_size`
         // (> 0 enables FedBuff-style buffered aggregation) and
@@ -210,7 +311,14 @@ impl AppFactory for FlowerBridgeApp {
         // the shutdown drain) in both modes, so per-run timings are
         // comparable between single-run and concurrent-run jobs.
         let runs = ctx.config.get("concurrent_runs").as_u64().unwrap_or(1).max(1);
-        let result: anyhow::Result<Vec<(u64, History)>> = if runs == 1 {
+        let result: anyhow::Result<Vec<(u64, History)>> = if let Some(custom) =
+            self.builder.drive(&ctx, &grid)
+        {
+            // Custom Grid driver (e.g. federated analytics): the builder
+            // owns the run loop; the bridge still owns LGC wiring and
+            // the retire/drain teardown below.
+            custom.map(|()| Vec::new())
+        } else if runs == 1 {
             self.builder.build_server(&ctx).and_then(|mut server_app| {
                 let tracker = if self.builder.track() {
                     Some(&ctx.tracker)
@@ -218,8 +326,8 @@ impl AppFactory for FlowerBridgeApp {
                     None
                 };
                 let history = match async_cfg {
-                    Some(acfg) => server_app.run_async(&link, tracker, 1, acfg),
-                    None => server_app.run(&link, tracker, 1),
+                    Some(acfg) => server_app.run_async(&grid, tracker, 1, acfg),
+                    None => server_app.run(&grid, tracker, 1),
                 };
                 history.map(|h| {
                     if let Some(sink) = &self.history_sink {
@@ -256,7 +364,7 @@ impl AppFactory for FlowerBridgeApp {
                 // The sink fires from each run's OWN thread the moment
                 // that run completes — per-run makespan is observable
                 // while other runs are still going.
-                crate::flower::run::drive_runs_with(&link, apps, move |run_id, h| {
+                crate::flower::run::drive_runs_with(&grid, apps, move |run_id, h| {
                     if let Some(sink) = &sink {
                         sink(&format!("{job_id}#run{run_id}"), h);
                     }

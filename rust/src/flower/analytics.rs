@@ -1,0 +1,493 @@
+//! Federated analytics: a workload built ONLY on [`MessageType::Query`]
+//! messages — no model, no strategy, no parameters anywhere. This is
+//! the scenario axis the generic Message API opens (Flower "is
+//! dedicated to implementing a cohesive approach to FL, **analytics**,
+//! and evaluation"): the same SuperLink/SuperNode/bridge layers that
+//! move fit traffic move these queries without a line of them changing.
+//!
+//! The workload: a **federated histogram + weighted quantile sketch**
+//! over the clients' local datasets. The driver broadcasts the sketch
+//! grid (`bins`, `lo`, `hi`) in a Query message; each client answers
+//! with its local per-bin counts (exact i64) and per-bin weight sums
+//! (f64, accumulated in local index order); the driver merges replies
+//! in **node-id order** and extracts quantiles from the merged weighted
+//! CDF. Counts merge exactly; weight sums are reduced in canonical
+//! order — so the report is **bit-identical** across transports
+//! (native vs bridged Grid) and arrival orders, the same determinism
+//! contract the FL path holds (Fig. 5, for analytics).
+//!
+//! Raw values never leave a client — only its bin totals do (the
+//! classic federated-analytics privacy posture).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::flower::clientapp::{Context, Router};
+use crate::flower::grid::Grid;
+use crate::flower::message::{ConfigRecord, ConfigValue, Message, MessageType};
+use crate::flower::records::{DType, RecordDict, Tensor};
+use crate::flower::superlink::CompletionPolicy;
+
+/// Tensor name for per-bin counts in a query reply.
+pub const HIST_COUNTS: &str = "hist_counts";
+/// Tensor name for per-bin weight sums in a query reply.
+pub const HIST_WEIGHTS: &str = "hist_weights";
+/// Largest sketch a node will compute. The bin count arrives from the
+/// wire, so — like every decode limit in `flower::message` — it must be
+/// bounded BEFORE allocation: a hostile `bins` of 2^40 would otherwise
+/// abort the node on an 8 TiB `vec![]` instead of yielding the typed
+/// error reply the handler contract guarantees.
+pub const MAX_QUERY_BINS: usize = 1 << 20;
+
+/// One analytics run's knobs: the sketch grid and the quantiles to
+/// extract from the merged CDF.
+#[derive(Clone, Debug)]
+pub struct AnalyticsConfig {
+    /// Number of histogram bins over `[lo, hi)`; out-of-range values
+    /// clamp into the edge bins.
+    pub bins: usize,
+    pub lo: f64,
+    pub hi: f64,
+    /// Quantile ranks to extract (e.g. 0.5 = weighted median).
+    pub quantiles: Vec<f64>,
+    /// Wait for at least this many nodes before querying.
+    pub min_nodes: usize,
+    pub timeout: Duration,
+}
+
+impl Default for AnalyticsConfig {
+    fn default() -> Self {
+        Self {
+            bins: 16,
+            lo: 0.0,
+            hi: 1.0,
+            quantiles: vec![0.25, 0.5, 0.75, 0.9],
+            min_nodes: 1,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl AnalyticsConfig {
+    /// The sketch grid as the Query message's config payload.
+    fn to_config(&self) -> ConfigRecord {
+        let mut c = ConfigRecord::new();
+        c.insert("bins", ConfigValue::I64(self.bins as i64));
+        c.insert("lo", ConfigValue::F64(self.lo));
+        c.insert("hi", ConfigValue::F64(self.hi));
+        c
+    }
+}
+
+/// The merged federation-wide answer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnalyticsReport {
+    pub bins: usize,
+    pub lo: f64,
+    pub hi: f64,
+    /// Exact merged per-bin counts.
+    pub histogram: Vec<i64>,
+    /// Merged per-bin weight sums (reduced in node-id order).
+    pub bin_weights: Vec<f64>,
+    /// (rank, value) per requested quantile, from the weighted CDF.
+    pub quantiles: Vec<(f64, f64)>,
+    /// Total examples across answering nodes.
+    pub total_examples: u64,
+    /// Nodes whose replies were merged, ascending.
+    pub nodes_answered: Vec<u64>,
+    /// Per-node failures the driver surfaced (node id, error) — e.g. a
+    /// node with no Query handler answers with a typed
+    /// [`crate::flower::clientapp::UNHANDLED_MESSAGE_ERR`] reply.
+    pub per_node_errors: Vec<(u64, String)>,
+}
+
+impl AnalyticsReport {
+    /// Bit-exact equality (f64 compared by bit pattern — the
+    /// native-vs-bridged overlay check).
+    pub fn bits_equal(&self, other: &AnalyticsReport) -> bool {
+        self.bins == other.bins
+            && self.histogram == other.histogram
+            && self.total_examples == other.total_examples
+            && self.nodes_answered == other.nodes_answered
+            && self.bin_weights.len() == other.bin_weights.len()
+            && self
+                .bin_weights
+                .iter()
+                .zip(other.bin_weights.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+            && self.quantiles.len() == other.quantiles.len()
+            && self
+                .quantiles
+                .iter()
+                .zip(other.quantiles.iter())
+                .all(|(a, b)| a.0.to_bits() == b.0.to_bits() && a.1.to_bits() == b.1.to_bits())
+    }
+}
+
+/// Client side: answers `Query` messages with the local histogram /
+/// weight sketch over `values` (each a `(value, weight)` pair). Mount
+/// with [`HistogramQueryApp::router`]; raw values never leave the node.
+pub struct HistogramQueryApp {
+    pub values: Vec<(f64, f64)>,
+}
+
+impl HistogramQueryApp {
+    /// A [`Router`] serving ONLY `Query` — pushing a Train message at
+    /// this app yields the typed unhandled-type error reply, proving
+    /// the workload really carries no model path.
+    pub fn router(self) -> Router {
+        let data = Arc::new(self.values);
+        Router::new().on_query(move |msg: &Message, ctx: &mut Context| {
+            local_sketch(&data, msg, ctx)
+        })
+    }
+}
+
+/// Compute one node's reply: exact local bin counts + local weight
+/// sums over the sketch grid the query carries.
+fn local_sketch(
+    values: &[(f64, f64)],
+    msg: &Message,
+    ctx: &mut Context,
+) -> anyhow::Result<Message> {
+    anyhow::ensure!(
+        msg.content.arrays.is_empty(),
+        "analytics query must carry no tensors (got {})",
+        msg.content.arrays.len()
+    );
+    let cfg = &msg.content.configs;
+    let bins = cfg.get_i64("bins").unwrap_or(0).max(0) as usize;
+    let lo = cfg.get_f64("lo").unwrap_or(0.0);
+    let hi = cfg.get_f64("hi").unwrap_or(1.0);
+    anyhow::ensure!(bins > 0, "query missing a positive 'bins'");
+    anyhow::ensure!(
+        bins <= MAX_QUERY_BINS,
+        "query asks for {bins} bins, limit is {MAX_QUERY_BINS}"
+    );
+    anyhow::ensure!(hi > lo, "query needs hi > lo (got {lo}..{hi})");
+    let width = (hi - lo) / bins as f64;
+    let mut counts = vec![0i64; bins];
+    let mut weights = vec![0f64; bins];
+    // Local index order: deterministic per node regardless of transport.
+    for &(v, w) in values {
+        let idx = (((v - lo) / width).floor() as i64).clamp(0, bins as i64 - 1) as usize;
+        counts[idx] += 1;
+        weights[idx] += w;
+    }
+    // Persistent per-run context: how many queries this node answered
+    // (round N's count is visible in round N+1).
+    let answered = ctx.state.bump("queries_answered", 1);
+    let content = RecordDict {
+        arrays: crate::flower::records::ArrayRecord::from_tensors(vec![
+            Tensor::from_i64(HIST_COUNTS, vec![bins], &counts),
+            Tensor::from_f64(HIST_WEIGHTS, vec![bins], &weights),
+        ])?,
+        metrics: vec![("queries_answered".to_string(), answered as f64)].into(),
+        configs: ConfigRecord::new(),
+    };
+    Ok(msg.reply(content).with_examples(values.len() as u64))
+}
+
+/// Drive one federated query round: broadcast the sketch grid to every
+/// live node, merge replies in node-id order, extract quantiles.
+/// Per-node failures (handler errors, dead nodes) are SURFACED in
+/// [`AnalyticsReport::per_node_errors`]; the run only errors out when
+/// no node answered at all.
+///
+/// Works against any [`Grid`] — pass `&link` natively or a
+/// [`crate::bridge::BridgedGrid`] inside FLARE; the report is
+/// bit-identical either way.
+pub fn run_query<G: Grid + ?Sized>(
+    grid: &G,
+    run_id: u64,
+    cfg: &AnalyticsConfig,
+) -> anyhow::Result<AnalyticsReport> {
+    grid.open_run(run_id);
+    anyhow::ensure!(
+        grid.run_active(run_id),
+        "run id {run_id} already finished on this grid — run ids must be unique"
+    );
+    let result = query_round(grid, run_id, cfg);
+    grid.close_run(run_id);
+    result
+}
+
+fn query_round<G: Grid + ?Sized>(
+    grid: &G,
+    run_id: u64,
+    cfg: &AnalyticsConfig,
+) -> anyhow::Result<AnalyticsReport> {
+    anyhow::ensure!(cfg.bins > 0, "analytics needs at least one bin");
+    anyhow::ensure!(
+        cfg.bins <= MAX_QUERY_BINS,
+        "analytics config asks for {} bins, limit is {MAX_QUERY_BINS}",
+        cfg.bins
+    );
+    anyhow::ensure!(cfg.hi > cfg.lo, "analytics needs hi > lo");
+    let nodes = grid.wait_for_nodes(cfg.min_nodes, cfg.timeout)?;
+    let query_cfg = cfg.to_config();
+    let msgs: Vec<Message> = nodes
+        .iter()
+        .map(|&node| {
+            let m = Message::query(node, query_cfg.clone()).for_round(run_id, 1);
+            // The zero-model contract, enforced at the source.
+            debug_assert!(m.content.arrays.is_empty());
+            debug_assert_eq!(m.message_type, MessageType::Query);
+            m
+        })
+        .collect();
+    let ids = grid.push_messages(msgs);
+    let id_to_node: HashMap<u64, u64> = ids.iter().copied().zip(nodes.iter().copied()).collect();
+
+    // Buffer replies, then merge in canonical (node-id) order so the
+    // f64 weight reduction is arrival-order- and transport-independent.
+    let mut replies: Vec<(u64, Vec<i64>, Vec<f64>, u64)> = Vec::new();
+    let mut per_node_errors: Vec<(u64, String)> = Vec::new();
+    let wait = grid.for_each_reply(
+        run_id,
+        &ids,
+        cfg.timeout,
+        // Every node must resolve (reply or fail) — failures become
+        // per-node data below, not round errors.
+        CompletionPolicy::quorum(1, cfg.timeout),
+        &mut |m: Message| {
+            let node = m.metadata.src_node_id;
+            if !m.error.is_empty() {
+                per_node_errors.push((node, m.error));
+                return Ok(());
+            }
+            // A malformed (but "successful") reply is a PER-NODE
+            // failure like any other — it must not abort the round and
+            // discard every healthy node's answer.
+            let (counts, weights) = match (
+                m.content.arrays.get(HIST_COUNTS),
+                m.content.arrays.get(HIST_WEIGHTS),
+            ) {
+                (Some(c), Some(w))
+                    if c.dtype() == DType::I64
+                        && w.dtype() == DType::F64
+                        && c.elems() == cfg.bins
+                        && w.elems() == cfg.bins =>
+                {
+                    (c, w)
+                }
+                _ => {
+                    per_node_errors.push((
+                        node,
+                        format!(
+                            "malformed sketch reply (need {HIST_COUNTS} i64[{bins}] + \
+                             {HIST_WEIGHTS} f64[{bins}])",
+                            bins = cfg.bins
+                        ),
+                    ));
+                    return Ok(());
+                }
+            };
+            let c: Vec<i64> = (0..cfg.bins)
+                .map(|i| counts.get_bits_u64(i) as i64)
+                .collect();
+            let w: Vec<f64> = (0..cfg.bins).map(|i| weights.get_f64(i)).collect();
+            replies.push((node, c, w, m.metadata.num_examples));
+            Ok(())
+        },
+    )?;
+    for (task_id, reason) in wait.failed {
+        per_node_errors.push((id_to_node.get(&task_id).copied().unwrap_or(0), reason));
+    }
+    for task_id in wait.missing {
+        per_node_errors.push((
+            id_to_node.get(&task_id).copied().unwrap_or(0),
+            "no reply before the deadline".to_string(),
+        ));
+    }
+    per_node_errors.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+    if replies.is_empty() {
+        let detail = per_node_errors
+            .iter()
+            .map(|(n, e)| format!("node {n}: {e}"))
+            .collect::<Vec<_>>()
+            .join("; ");
+        anyhow::bail!("query run {run_id}: no node answered ({detail})");
+    }
+
+    // Canonical merge order.
+    replies.sort_by_key(|(node, _, _, _)| *node);
+    let mut histogram = vec![0i64; cfg.bins];
+    let mut bin_weights = vec![0f64; cfg.bins];
+    let mut total_examples = 0u64;
+    let mut nodes_answered = Vec::with_capacity(replies.len());
+    for (node, counts, weights, examples) in &replies {
+        nodes_answered.push(*node);
+        total_examples += examples;
+        for (h, c) in histogram.iter_mut().zip(counts) {
+            *h += c;
+        }
+        for (bw, w) in bin_weights.iter_mut().zip(weights) {
+            *bw += w;
+        }
+    }
+    let quantiles = cfg
+        .quantiles
+        .iter()
+        .map(|&q| (q, weighted_quantile(&bin_weights, cfg.lo, cfg.hi, q)))
+        .collect();
+    Ok(AnalyticsReport {
+        bins: cfg.bins,
+        lo: cfg.lo,
+        hi: cfg.hi,
+        histogram,
+        bin_weights,
+        quantiles,
+        total_examples,
+        nodes_answered,
+        per_node_errors,
+    })
+}
+
+/// Extract quantile `q` from a per-bin weight CDF over `[lo, hi)`,
+/// interpolating linearly within the bin that crosses the target mass.
+fn weighted_quantile(bin_weights: &[f64], lo: f64, hi: f64, q: f64) -> f64 {
+    let total: f64 = bin_weights.iter().sum();
+    if total <= 0.0 {
+        return lo;
+    }
+    let width = (hi - lo) / bin_weights.len() as f64;
+    let target = q.clamp(0.0, 1.0) * total;
+    let mut cum = 0.0;
+    for (i, &w) in bin_weights.iter().enumerate() {
+        if cum + w >= target {
+            let frac = if w > 0.0 { (target - cum) / w } else { 0.0 };
+            return lo + width * (i as f64 + frac);
+        }
+        cum += w;
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::message::FlowerMsg;
+    use crate::flower::superlink::SuperLink;
+
+    #[test]
+    fn local_sketch_bins_and_clamps() {
+        let app = HistogramQueryApp {
+            values: vec![(0.05, 1.0), (0.05, 2.0), (0.95, 1.0), (-3.0, 5.0), (9.0, 1.0)],
+        };
+        let router = app.router();
+        let mut ctx = Context::new(1, 4);
+        let q = Message::query(
+            4,
+            AnalyticsConfig {
+                bins: 10,
+                ..Default::default()
+            }
+            .to_config(),
+        );
+        use crate::flower::clientapp::MessageApp;
+        let reply = router.handle(&q, &mut ctx).unwrap();
+        let counts = reply.content.arrays.get(HIST_COUNTS).unwrap();
+        let weights = reply.content.arrays.get(HIST_WEIGHTS).unwrap();
+        // Bin 0: the two 0.05s plus the clamped -3.0; bin 9: 0.95 plus
+        // the clamped 9.0.
+        assert_eq!(counts.get_bits_u64(0) as i64, 3);
+        assert_eq!(counts.get_bits_u64(9) as i64, 2);
+        assert_eq!(weights.get_f64(0), 8.0);
+        assert_eq!(weights.get_f64(9), 2.0);
+        assert_eq!(reply.metadata.num_examples, 5);
+        // Context counter persists.
+        let reply2 = router.handle(&q, &mut ctx).unwrap();
+        assert_eq!(reply2.content.metrics.get("queries_answered"), Some(2.0));
+    }
+
+    #[test]
+    fn sketch_refuses_model_payloads_and_bad_grids() {
+        let router = HistogramQueryApp { values: vec![] }.router();
+        let mut ctx = Context::new(1, 1);
+        use crate::flower::clientapp::MessageApp;
+        let mut with_tensor = Message::query(1, AnalyticsConfig::default().to_config());
+        with_tensor.content.arrays = crate::flower::records::ArrayRecord::from_flat(&[1.0]);
+        assert!(router.handle(&with_tensor, &mut ctx).is_err());
+        let no_bins = Message::query(1, ConfigRecord::new());
+        assert!(router.handle(&no_bins, &mut ctx).is_err());
+        // A hostile bin count is refused BEFORE allocation (typed error,
+        // not an aborted node).
+        let mut huge = ConfigRecord::new();
+        huge.insert("bins", ConfigValue::I64(1 << 40));
+        let err = router
+            .handle(&Message::query(1, huge), &mut ctx)
+            .unwrap_err();
+        assert!(err.to_string().contains("limit"), "{err}");
+    }
+
+    #[test]
+    fn weighted_quantile_interpolates() {
+        // Two equal-weight bins over [0, 1): median sits at the bin
+        // boundary, q=0.25 in the middle of bin 0.
+        let w = vec![1.0, 1.0];
+        assert_eq!(weighted_quantile(&w, 0.0, 1.0, 0.25), 0.25);
+        assert_eq!(weighted_quantile(&w, 0.0, 1.0, 0.5), 0.5);
+        assert_eq!(weighted_quantile(&w, 0.0, 1.0, 1.0), 1.0);
+        assert_eq!(weighted_quantile(&[0.0, 0.0], 0.0, 1.0, 0.5), 0.0);
+    }
+
+    /// Answer every queued query on the link by hand (no SuperNode):
+    /// lets the unit test drive `run_query` against a live link
+    /// synchronously. Returns how many queries were answered.
+    fn answer_queries(link: &SuperLink, node_id: u64, app_values: &[(f64, f64)]) -> usize {
+        let pull = link.handle_frame(&FlowerMsg::PullTaskIns { node_id }.encode());
+        let tasks = match FlowerMsg::decode(&pull).unwrap() {
+            FlowerMsg::TaskInsList { tasks, .. } => tasks,
+            other => panic!("{other:?}"),
+        };
+        let mut ctx = Context::new(0, node_id);
+        let n = tasks.len();
+        for ins in tasks {
+            let msg = Message::from_ins(ins, node_id);
+            let reply = local_sketch(app_values, &msg, &mut ctx).unwrap();
+            link.handle_frame(&FlowerMsg::PushTaskRes { res: reply.into_res() }.encode());
+        }
+        n
+    }
+
+    #[test]
+    fn run_query_merges_in_node_order_and_reports_errors() {
+        let link = SuperLink::new();
+        for _ in 0..2 {
+            link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        }
+        let cfg = AnalyticsConfig {
+            bins: 4,
+            lo: 0.0,
+            hi: 4.0,
+            quantiles: vec![0.5],
+            min_nodes: 2,
+            timeout: Duration::from_secs(5),
+        };
+        // Drive the round from a thread; answer from this one.
+        let l2 = link.clone();
+        let cfg2 = cfg.clone();
+        let h = std::thread::spawn(move || run_query(&l2, 1, &cfg2));
+        // Keep pulling until both nodes' queries arrived and were
+        // answered (the driver thread races this loop).
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut total = 0;
+        while total < 2 {
+            assert!(std::time::Instant::now() < deadline, "queries never arrived");
+            total += answer_queries(&link, 1, &[(0.5, 1.0), (1.5, 1.0)]);
+            total += answer_queries(&link, 2, &[(2.5, 2.0)]);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let report = h.join().unwrap().unwrap();
+        assert_eq!(report.histogram, vec![1, 1, 1, 0]);
+        assert_eq!(report.bin_weights, vec![1.0, 1.0, 2.0, 0.0]);
+        assert_eq!(report.total_examples, 3);
+        assert_eq!(report.nodes_answered, vec![1, 2]);
+        assert!(report.per_node_errors.is_empty());
+        // Median of weights [1,1,2] over [0,4): target 2.0 -> end of
+        // bin 1.
+        assert_eq!(report.quantiles, vec![(0.5, 2.0)]);
+    }
+}

@@ -37,14 +37,13 @@
 //! [`FitAgg`]: crate::flower::strategy::FitAgg
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::flare::tracking::SummaryWriter;
-use crate::flower::message::{ConfigValue, TaskIns, TaskType};
+use crate::flower::grid::Grid;
+use crate::flower::message::{ConfigValue, Message};
 use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::strategy::FitRes;
-use crate::flower::superlink::SuperLink;
 
 /// Upper bound on [`AsyncConfig::max_staleness`]: the driver
 /// pre-computes one weight per staleness value (the strategy is
@@ -228,17 +227,17 @@ pub fn scale_examples(num_examples: u64, w: f64) -> u64 {
 
 impl ServerApp {
     /// Drive an asynchronous (buffered, staleness-aware) run against
-    /// the SuperLink: `ServerConfig::num_rounds` commits, each folding
+    /// the grid: `ServerConfig::num_rounds` commits, each folding
     /// [`AsyncConfig::buffer_size`] results. Federated evaluation is
     /// not scheduled in async mode (there is no round boundary to
     /// evaluate at); `History::commits` carries the commit log and
     /// `History::parameters` the final model.
     ///
-    /// Opens run `run_id` on the link and finishes it on every exit
+    /// Opens run `run_id` on the grid and finishes it on every exit
     /// path, exactly like the synchronous [`ServerApp::run`].
-    pub fn run_async(
+    pub fn run_async<G: Grid + ?Sized>(
         &mut self,
-        link: &Arc<SuperLink>,
+        grid: &G,
         tracker: Option<&SummaryWriter>,
         run_id: u64,
         acfg: AsyncConfig,
@@ -255,25 +254,25 @@ impl ServerApp {
             "max_staleness {} exceeds the supported bound {MAX_MAX_STALENESS}",
             acfg.max_staleness
         );
-        link.register_run(run_id);
+        grid.open_run(run_id);
         anyhow::ensure!(
-            link.run_active(run_id),
+            grid.run_active(run_id),
             "run id {run_id} already finished on this link — run ids must be unique per link"
         );
-        let result = self.run_commits(link, tracker, run_id, &acfg);
-        link.finish(run_id);
+        let result = self.run_commits(grid, tracker, run_id, &acfg);
+        grid.close_run(run_id);
         result
     }
 
-    fn run_commits(
+    fn run_commits<G: Grid + ?Sized>(
         &mut self,
-        link: &Arc<SuperLink>,
+        grid: &G,
         tracker: Option<&SummaryWriter>,
         run_id: u64,
         acfg: &AsyncConfig,
     ) -> anyhow::Result<History> {
         let cfg = self.config.clone();
-        let nodes = link.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
+        let nodes = grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
         anyhow::ensure!(
             acfg.buffer_size <= nodes.len(),
             "async buffer_size {} exceeds the fleet of {} nodes — each node folds \
@@ -297,10 +296,10 @@ impl ServerApp {
         let mut busy: HashSet<u64> = HashSet::new();
         // node -> last version dispatched to it (one task per version).
         let mut last_version: HashMap<u64, u64> = HashMap::new();
-        // Claimed-but-unfolded results: poll_results can hand over more
+        // Claimed-but-unfolded replies: pull_messages can hand over more
         // than the open window needs; the excess carries into the next
         // window (its staleness re-evaluated against the new version).
-        let mut ready: VecDeque<crate::flower::message::TaskRes> = VecDeque::new();
+        let mut ready: VecDeque<Message> = VecDeque::new();
 
         for commit in 1..=cfg.num_rounds {
             let deadline = Instant::now() + cfg.round_timeout;
@@ -310,44 +309,42 @@ impl ServerApp {
             fit_cfg.push(("round".to_string(), ConfigValue::I64(commit as i64)));
             let mut agg = self.strategy.begin_fit(commit, &params);
             loop {
-                link.reap_expired();
+                grid.reap();
                 // Fold claimed results until the window fills.
                 while !state.window_full() {
                     let Some(res) = ready.pop_front() else { break };
+                    let node = res.metadata.src_node_id;
                     if !res.error.is_empty() {
                         crate::telemetry::bump("asyncfed.client_errors", 1);
                         if accept_failures {
                             log::warn!(
-                                "async commit {commit}: node {} failed: {}",
-                                res.node_id,
+                                "async commit {commit}: node {node} failed: {}",
                                 res.error
                             );
                             continue;
                         }
                         anyhow::bail!(
-                            "async commit {commit}: node {} failed: {}",
-                            res.node_id,
+                            "async commit {commit}: node {node} failed: {}",
                             res.error
                         );
                     }
-                    match state.offer(res.task_id, res.model_version) {
+                    match state.offer(res.metadata.message_id, res.metadata.model_version) {
                         Offer::Fold { staleness } => {
                             agg.accumulate(FitRes {
-                                node_id: res.node_id,
-                                parameters: res.parameters,
+                                node_id: node,
+                                parameters: res.content.arrays,
                                 num_examples: scale_examples(
-                                    res.num_examples,
+                                    res.metadata.num_examples,
                                     weights[staleness as usize],
                                 ),
-                                metrics: res.metrics,
+                                metrics: res.content.metrics,
                             })?;
                         }
                         Offer::DropStale { staleness } => {
                             crate::telemetry::bump("asyncfed.stale_results_dropped", 1);
                             log::warn!(
-                                "async commit {commit}: dropped result from node {} \
+                                "async commit {commit}: dropped result from node {node} \
                                  (staleness {staleness} > {})",
-                                res.node_id,
                                 acfg.max_staleness
                             );
                         }
@@ -362,7 +359,7 @@ impl ServerApp {
                 // Keep the fleet saturated: dispatch the CURRENT model
                 // to every idle node that has not yet trained this
                 // version.
-                for node in link.nodes() {
+                for node in grid.node_ids() {
                     if busy.contains(&node)
                         || last_version.get(&node).copied() == Some(state.version())
                     {
@@ -370,20 +367,12 @@ impl ServerApp {
                     }
                     let mut config = fit_cfg.clone();
                     config.push(("node_id".to_string(), ConfigValue::I64(node as i64)));
-                    let task_id = link.push_task(
-                        node,
-                        TaskIns {
-                            task_id: 0,
-                            run_id,
-                            round: commit,
-                            task_type: TaskType::Fit,
-                            attempt: 0,
-                            // Node-affine, like every FL fit task.
-                            redeliver: false,
-                            model_version: state.version(),
-                            parameters: params.clone(),
-                            config,
-                        },
+                    // Node-affine, like every FL fit task; tagged with
+                    // the model version the parameters were cut from.
+                    let task_id = grid.push_message(
+                        Message::train(node, params.clone(), config)
+                            .for_round(run_id, commit)
+                            .with_model_version(state.version()),
                     );
                     busy.insert(node);
                     last_version.insert(node, state.version());
@@ -391,10 +380,10 @@ impl ServerApp {
                 }
                 // Claim whatever resolved — never barrier on a cohort.
                 let ids: Vec<u64> = outstanding.keys().copied().collect();
-                let (got, failed) = link.poll_results(run_id, &ids);
+                let (got, failed) = grid.pull_messages(run_id, &ids);
                 let progressed = !got.is_empty();
                 for res in got {
-                    if let Some(node) = outstanding.remove(&res.task_id) {
+                    if let Some(node) = outstanding.remove(&res.metadata.message_id) {
                         busy.remove(&node);
                     }
                     ready.push_back(res);
@@ -416,7 +405,7 @@ impl ServerApp {
                     acfg.buffer_size
                 );
                 anyhow::ensure!(
-                    !outstanding.is_empty() || !link.nodes().is_empty(),
+                    !outstanding.is_empty() || !grid.node_ids().is_empty(),
                     "async commit {commit}: no live nodes remain ({}/{} results folded)",
                     state.folded_in_window(),
                     acfg.buffer_size
@@ -428,8 +417,8 @@ impl ServerApp {
                 // out the deadline cannot help — fail with the cause.
                 if outstanding.is_empty()
                     && ready.is_empty()
-                    && link
-                        .nodes()
+                    && grid
+                        .node_ids()
                         .iter()
                         .all(|n| last_version.get(n).copied() == Some(state.version()))
                 {
@@ -442,7 +431,7 @@ impl ServerApp {
                         state.version()
                     );
                 }
-                link.wait_activity(Duration::from_millis(50));
+                grid.wait_activity(Duration::from_millis(50));
             }
             params = agg.finalize()?;
             let rec = state.commit();
@@ -451,7 +440,7 @@ impl ServerApp {
             // version bookkeeping for reaped nodes is dead weight — a
             // rejoining node starts a fresh entry anyway.
             state.forget_resolved(&outstanding);
-            let live: HashSet<u64> = link.nodes().into_iter().collect();
+            let live: HashSet<u64> = grid.node_ids().into_iter().collect();
             last_version.retain(|node, _| live.contains(node) || busy.contains(node));
             if let Some(t) = tracker {
                 t.add_scalar("async_results_folded", rec.results_folded as f64, commit);
@@ -475,6 +464,7 @@ impl ServerApp {
 mod tests {
     use super::*;
     use crate::flower::clientapp::{ArithmeticClient, ClientApp};
+    use std::sync::Arc;
     use crate::flower::records::ArrayRecord;
     use crate::flower::run::NativeFleet;
     use crate::flower::serverapp::ServerConfig;

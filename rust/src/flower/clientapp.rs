@@ -1,10 +1,194 @@
-//! Flower ClientApp: user code run by a SuperNode (paper Listing 2's
-//! `NumPyClient` analogue). Implementations receive the global model as
-//! an [`ArrayRecord`] of named, dtyped tensors plus a config record and
-//! return updated parameters / evaluation results.
+//! The node-side app boundary: typed message handlers.
+//!
+//! A SuperNode executes [`Message`]s through a [`MessageApp`] — in
+//! practice a [`Router`]: a registry of per-[`MessageType`] handlers
+//! ([`Router::on_train`] / [`Router::on_evaluate`] / [`Router::on_query`]
+//! plus [`Router::on`] for custom verbs). Every handler receives the
+//! message AND a persistent per-run [`Context`] whose
+//! [`StateRecord`](crate::flower::records::StateRecord) survives across
+//! rounds on the SuperNode — stateful clients, personalization, and warm
+//! optimizer state without any wire traffic.
+//!
+//! The classic fit/evaluate [`ClientApp`] trait (paper Listing 2's
+//! `NumPyClient` analogue) is still the convenient way to write an FL
+//! client; [`Router::from_client`] is the blanket adapter that mounts it
+//! as `Train`/`Evaluate` handlers — byte-identical to the pre-registry
+//! dispatch, which is what keeps every strategy, mod, and conformance
+//! row unchanged.
 
-use crate::flower::message::{ConfigRecord, MetricRecord};
-use crate::flower::records::ArrayRecord;
+use std::sync::Arc;
+
+use crate::flower::message::{ConfigRecord, Message, MessageType, MetricRecord};
+use crate::flower::records::{ArrayRecord, RecordDict, StateRecord};
+
+/// Marker carried in the error reply when a node receives a message
+/// type it has no handler for (see [`Router`]). The driver surfaces the
+/// reply per node instead of the node panicking or silently dropping
+/// the task; [`is_unhandled`] recognizes it.
+pub const UNHANDLED_MESSAGE_ERR: &str = "unhandled message type";
+
+/// Does this (per-node) error string report a missing handler?
+pub fn is_unhandled(error: &str) -> bool {
+    error.contains(UNHANDLED_MESSAGE_ERR)
+}
+
+/// Per-run, per-node execution context. Created by the SuperNode the
+/// first time a run's message reaches the node and **kept across
+/// rounds**: whatever a handler writes into `state` in round N is there
+/// in round N+1. State is scoped per run id — two concurrent runs never
+/// see each other's state — and never leaves the node. Retained
+/// contexts are LRU-bounded by
+/// [`SuperNodeConfig::max_run_contexts`](crate::flower::supernode::SuperNodeConfig::max_run_contexts),
+/// so long-finished runs' state is eventually evicted.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Context {
+    pub run_id: u64,
+    pub node_id: u64,
+    /// Handler-owned persistent state (counters, personalization
+    /// tensors, warm optimizer moments, ...).
+    pub state: StateRecord,
+}
+
+impl Context {
+    pub fn new(run_id: u64, node_id: u64) -> Context {
+        Context {
+            run_id,
+            node_id,
+            state: StateRecord::new(),
+        }
+    }
+}
+
+/// One typed message handler: consume an instruction [`Message`], use /
+/// mutate the per-run [`Context`], return the reply. Implemented for
+/// any `Fn(&Message, &mut Context) -> anyhow::Result<Message>` closure.
+pub trait MessageHandler: Send + Sync {
+    fn handle(&self, msg: &Message, ctx: &mut Context) -> anyhow::Result<Message>;
+}
+
+impl<F> MessageHandler for F
+where
+    F: Fn(&Message, &mut Context) -> anyhow::Result<Message> + Send + Sync,
+{
+    fn handle(&self, msg: &Message, ctx: &mut Context) -> anyhow::Result<Message> {
+        self(msg, ctx)
+    }
+}
+
+/// What a SuperNode executes: the message-level app surface. [`Router`]
+/// is the registry implementation; [`crate::flower::mods::ModStack`]
+/// wraps any `MessageApp` in middleware.
+pub trait MessageApp: Send + Sync {
+    fn handle(&self, msg: &Message, ctx: &mut Context) -> anyhow::Result<Message>;
+
+    /// Is a handler registered for this type? (Used for fail-fast
+    /// checks; the authoritative answer is still `handle`'s error.)
+    fn handles(&self, message_type: &MessageType) -> bool;
+}
+
+/// The handler registry: one handler per [`MessageType`], consulted by
+/// the SuperNode for every received message. A message with no
+/// registered handler yields a **typed error reply** (marker
+/// [`UNHANDLED_MESSAGE_ERR`]) — never a panic, never a silent drop.
+///
+/// ```
+/// use flarelink::flower::clientapp::{Context, Router};
+/// use flarelink::flower::message::{ConfigRecord, Message, MessageType};
+/// use flarelink::flower::records::{ConfigValue, RecordDict};
+///
+/// let app = Router::new().on_query(
+///     |msg: &Message, ctx: &mut Context| -> anyhow::Result<Message> {
+///         let n = ctx.state.bump("queries_seen", 1); // survives across rounds
+///         let mut out = ConfigRecord::new();
+///         out.insert("queries_seen", ConfigValue::I64(n));
+///         Ok(msg.reply(RecordDict::from_configs(out)).with_examples(1))
+///     },
+/// );
+/// let mut ctx = Context::new(1, 7);
+/// let q = Message::query(7, ConfigRecord::new());
+/// use flarelink::flower::clientapp::MessageApp;
+/// let first = app.handle(&q, &mut ctx).unwrap();
+/// let second = app.handle(&q, &mut ctx).unwrap();
+/// assert_eq!(first.content.configs.get_i64("queries_seen"), Some(1));
+/// assert_eq!(second.content.configs.get_i64("queries_seen"), Some(2));
+/// assert!(!app.handles(&MessageType::Train));
+/// ```
+#[derive(Default)]
+pub struct Router {
+    handlers: Vec<(MessageType, Arc<dyn MessageHandler>)>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register (or replace) the handler for `message_type`.
+    pub fn on(
+        mut self,
+        message_type: MessageType,
+        handler: impl MessageHandler + 'static,
+    ) -> Router {
+        self.handlers.retain(|(t, _)| *t != message_type);
+        self.handlers.push((message_type, Arc::new(handler)));
+        self
+    }
+
+    pub fn on_train(self, handler: impl MessageHandler + 'static) -> Router {
+        self.on(MessageType::Train, handler)
+    }
+
+    pub fn on_evaluate(self, handler: impl MessageHandler + 'static) -> Router {
+        self.on(MessageType::Evaluate, handler)
+    }
+
+    pub fn on_query(self, handler: impl MessageHandler + 'static) -> Router {
+        self.on(MessageType::Query, handler)
+    }
+
+    /// The blanket adapter: mount a classic fit/evaluate [`ClientApp`]
+    /// as `Train`/`Evaluate` handlers. Dispatch, payloads, and error
+    /// strings are byte-identical to the pre-registry SuperNode, so
+    /// existing strategies/mods/tests run unchanged.
+    pub fn from_client(app: Arc<dyn ClientApp>) -> Router {
+        Router::new()
+            .on(MessageType::Train, FitAdapter(app.clone()))
+            .on(MessageType::Evaluate, EvalAdapter(app))
+    }
+
+    fn handler(&self, message_type: &MessageType) -> Option<&Arc<dyn MessageHandler>> {
+        self.handlers
+            .iter()
+            .find(|(t, _)| t == message_type)
+            .map(|(_, h)| h)
+    }
+}
+
+impl MessageApp for Router {
+    fn handle(&self, msg: &Message, ctx: &mut Context) -> anyhow::Result<Message> {
+        match self.handler(&msg.message_type) {
+            Some(h) => h.handle(msg, ctx),
+            None => anyhow::bail!(
+                "{UNHANDLED_MESSAGE_ERR} '{}' (node {} registered: [{}])",
+                msg.message_type.name(),
+                ctx.node_id,
+                self.handlers
+                    .iter()
+                    .map(|(t, _)| t.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        }
+    }
+
+    fn handles(&self, message_type: &MessageType) -> bool {
+        self.handler(message_type).is_some()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The classic fit/evaluate surface + its adapter
+// ---------------------------------------------------------------------------
 
 /// Result of a local `fit` (train) call.
 #[derive(Clone, Debug)]
@@ -12,6 +196,30 @@ pub struct FitOutput {
     pub parameters: ArrayRecord,
     pub num_examples: u64,
     pub metrics: MetricRecord,
+}
+
+impl FitOutput {
+    /// Package as the reply to instruction `ins` (what the Train
+    /// adapter sends back: parameters + metrics + example count).
+    pub fn into_reply(self, ins: &Message) -> Message {
+        ins.reply(RecordDict {
+            arrays: self.parameters,
+            metrics: self.metrics,
+            configs: ConfigRecord::new(),
+        })
+        .with_examples(self.num_examples)
+    }
+
+    /// Recover from a (successful) Train reply — the inverse of
+    /// [`FitOutput::into_reply`]; fails on error replies.
+    pub fn from_reply(reply: Message) -> anyhow::Result<FitOutput> {
+        anyhow::ensure!(reply.is_ok(), "{}", reply.error);
+        Ok(FitOutput {
+            parameters: reply.content.arrays,
+            num_examples: reply.metadata.num_examples,
+            metrics: reply.content.metrics,
+        })
+    }
 }
 
 /// Result of a local `evaluate` call.
@@ -22,7 +230,32 @@ pub struct EvalOutput {
     pub metrics: MetricRecord,
 }
 
+impl EvalOutput {
+    /// Package as the reply to instruction `ins` (no parameters —
+    /// evaluation returns loss + metrics only).
+    pub fn into_reply(self, ins: &Message) -> Message {
+        ins.reply(RecordDict {
+            arrays: ArrayRecord::new(),
+            metrics: self.metrics,
+            configs: ConfigRecord::new(),
+        })
+        .with_examples(self.num_examples)
+        .with_loss(self.loss)
+    }
+
+    /// Recover from a (successful) Evaluate reply.
+    pub fn from_reply(reply: Message) -> anyhow::Result<EvalOutput> {
+        anyhow::ensure!(reply.is_ok(), "{}", reply.error);
+        Ok(EvalOutput {
+            loss: reply.metadata.loss,
+            num_examples: reply.metadata.num_examples,
+            metrics: reply.content.metrics,
+        })
+    }
+}
+
 /// The NumPyClient-style interface (paper Listing 2: `fit`/`evaluate`).
+/// Mounted onto the message surface by [`Router::from_client`].
 pub trait ClientApp: Send + Sync {
     fn fit(&self, parameters: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<FitOutput>;
     fn evaluate(
@@ -30,6 +263,28 @@ pub trait ClientApp: Send + Sync {
         parameters: &ArrayRecord,
         config: &ConfigRecord,
     ) -> anyhow::Result<EvalOutput>;
+}
+
+struct FitAdapter(Arc<dyn ClientApp>);
+
+impl MessageHandler for FitAdapter {
+    fn handle(&self, msg: &Message, _ctx: &mut Context) -> anyhow::Result<Message> {
+        Ok(self
+            .0
+            .fit(&msg.content.arrays, &msg.content.configs)?
+            .into_reply(msg))
+    }
+}
+
+struct EvalAdapter(Arc<dyn ClientApp>);
+
+impl MessageHandler for EvalAdapter {
+    fn handle(&self, msg: &Message, _ctx: &mut Context) -> anyhow::Result<Message> {
+        Ok(self
+            .0
+            .evaluate(&msg.content.arrays, &msg.content.configs)?
+            .into_reply(msg))
+    }
 }
 
 /// Deterministic toy client used across tests: `fit` adds `delta` to
@@ -47,7 +302,7 @@ impl ClientApp for ArithmeticClient {
         Ok(FitOutput {
             parameters: parameters.map_f64(|_, _, v| v + delta),
             num_examples: self.n,
-            metrics: vec![("train_loss".into(), self.delta as f64)],
+            metrics: vec![("train_loss".to_string(), self.delta as f64)].into(),
         })
     }
 
@@ -67,7 +322,7 @@ impl ClientApp for ArithmeticClient {
         Ok(EvalOutput {
             loss: mean,
             num_examples: self.n,
-            metrics: vec![("accuracy".into(), 1.0 - mean.abs().min(1.0))],
+            metrics: vec![("accuracy".to_string(), 1.0 - mean.abs().min(1.0))].into(),
         })
     }
 }
@@ -75,16 +330,18 @@ impl ClientApp for ArithmeticClient {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::flower::records::Tensor;
+    use crate::flower::records::{ConfigValue, Tensor};
 
     #[test]
     fn arithmetic_client_behaviour() {
         let c = ArithmeticClient { delta: 0.5, n: 8 };
-        let fit = c.fit(&ArrayRecord::from_flat(&[1.0, 2.0]), &vec![]).unwrap();
+        let fit = c
+            .fit(&ArrayRecord::from_flat(&[1.0, 2.0]), &ConfigRecord::new())
+            .unwrap();
         assert_eq!(fit.parameters.to_flat(), vec![1.5, 2.5]);
         assert_eq!(fit.num_examples, 8);
         let ev = c
-            .evaluate(&ArrayRecord::from_flat(&[1.0, 3.0]), &vec![])
+            .evaluate(&ArrayRecord::from_flat(&[1.0, 3.0]), &ConfigRecord::new())
             .unwrap();
         assert!((ev.loss - 2.0).abs() < 1e-9);
     }
@@ -97,9 +354,74 @@ mod tests {
         ])
         .unwrap();
         let c = ArithmeticClient { delta: 1.0, n: 1 };
-        let out = c.fit(&rec, &vec![]).unwrap();
+        let out = c.fit(&rec, &ConfigRecord::new()).unwrap();
         assert!(out.parameters.dims_match(&rec));
         assert_eq!(out.parameters.get("w").unwrap().get_f64(0), 2.0);
         assert_eq!(out.parameters.get("steps").unwrap().get_f64(1), 21.0);
+    }
+
+    #[test]
+    fn router_adapter_matches_direct_calls_bitexact() {
+        // The blanket adapter path must be byte-identical to calling
+        // fit/evaluate directly — the conformance anchor.
+        let app: Arc<dyn ClientApp> = Arc::new(ArithmeticClient { delta: 1.5, n: 4 });
+        let router = Router::from_client(app.clone());
+        let params = ArrayRecord::from_flat(&[1.0, -2.0, f32::NAN]);
+        let cfg = ConfigRecord::from_pairs(vec![("round".to_string(), ConfigValue::I64(1))]);
+
+        let direct = app.fit(&params, &cfg).unwrap();
+        let mut ctx = Context::new(1, 3);
+        let ins = Message::train(3, params.clone(), cfg.clone()).for_round(1, 1);
+        let via_msg = FitOutput::from_reply(router.handle(&ins, &mut ctx).unwrap()).unwrap();
+        assert!(via_msg.parameters.bits_equal(&direct.parameters));
+        assert_eq!(via_msg.num_examples, direct.num_examples);
+        assert_eq!(via_msg.metrics, direct.metrics);
+
+        let direct_ev = app.evaluate(&params, &cfg).unwrap();
+        let ev_ins = Message::evaluate(3, params, cfg).for_round(1, 1);
+        let via_ev = EvalOutput::from_reply(router.handle(&ev_ins, &mut ctx).unwrap()).unwrap();
+        assert_eq!(via_ev.loss.to_bits(), direct_ev.loss.to_bits());
+        assert_eq!(via_ev.num_examples, direct_ev.num_examples);
+        assert_eq!(via_ev.metrics, direct_ev.metrics);
+    }
+
+    #[test]
+    fn unregistered_type_is_a_typed_error() {
+        let router = Router::from_client(Arc::new(ArithmeticClient { delta: 1.0, n: 1 }));
+        let mut ctx = Context::new(1, 5);
+        let q = Message::query(5, ConfigRecord::new());
+        let err = router.handle(&q, &mut ctx).unwrap_err().to_string();
+        assert!(is_unhandled(&err), "{err}");
+        assert!(err.contains("query"), "{err}");
+        assert!(err.contains("train"), "error lists registered types: {err}");
+        assert!(!router.handles(&MessageType::Query));
+        assert!(router.handles(&MessageType::Train));
+    }
+
+    #[test]
+    fn custom_handler_registration_and_context_state() {
+        let router = Router::new().on(
+            MessageType::custom("echo_count"),
+            |msg: &Message, ctx: &mut Context| -> anyhow::Result<Message> {
+                let n = ctx.state.bump("calls", 1);
+                let mut out = ConfigRecord::new();
+                out.insert("calls", ConfigValue::I64(n));
+                Ok(msg.reply(RecordDict::from_configs(out)))
+            },
+        );
+        let mut ctx = Context::new(9, 2);
+        let msg = Message::new(
+            MessageType::custom("echo_count"),
+            2,
+            RecordDict::default(),
+        );
+        for want in 1..=3 {
+            let reply = router.handle(&msg, &mut ctx).unwrap();
+            assert_eq!(reply.content.configs.get_i64("calls"), Some(want));
+        }
+        // A second context (another run) is isolated.
+        let mut other = Context::new(10, 2);
+        let reply = router.handle(&msg, &mut other).unwrap();
+        assert_eq!(reply.content.configs.get_i64("calls"), Some(1));
     }
 }

@@ -17,7 +17,7 @@
 //! DP runs (the same noise is drawn on both paths).
 
 use crate::flower::clientapp::FitOutput;
-use crate::flower::message::{config_get_f64, config_get_i64, ConfigRecord};
+use crate::flower::message::ConfigRecord;
 use crate::flower::mods::{ClientMod, FitNext};
 use crate::flower::records::{ArrayRecord, DType, Tensor};
 use crate::util::rng::Rng;
@@ -88,8 +88,8 @@ impl ClientMod for DpMod {
                 t.dtype().name()
             );
         }
-        let round = config_get_f64(config, "round").unwrap_or(0.0) as u64;
-        let node = config_get_i64(config, "node_id").unwrap_or(0) as u64;
+        let round = config.get_f64("round").unwrap_or(0.0) as u64;
+        let node = config.get_i64("node_id").unwrap_or(0) as u64;
 
         // Per-tensor deltas; global L2 across the whole record.
         let mut deltas: Vec<Vec<f64>> = Vec::with_capacity(parameters.len());
@@ -147,10 +147,10 @@ mod tests {
     use std::sync::Arc;
 
     fn cfg_round(round: i64, node: i64) -> ConfigRecord {
-        vec![
+        ConfigRecord::from_pairs(vec![
             ("round".into(), ConfigValue::I64(round)),
             ("node_id".into(), ConfigValue::I64(node)),
-        ]
+        ])
     }
 
     fn dp_app(clip: f64, z: f64) -> ModStack {

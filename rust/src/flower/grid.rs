@@ -1,0 +1,343 @@
+//! The **Grid**: the driver-facing federation abstraction (Flower's
+//! `Grid` API). A ServerApp — synchronous rounds, the async FedBuff
+//! driver, or a federated-analytics query run — pushes instruction
+//! [`Message`]s to nodes and pulls/streams their replies through this
+//! trait, and ONLY this trait: where the fleet actually lives is an
+//! implementation detail.
+//!
+//! Two implementations exist, mirroring the paper's Fig. 4:
+//!
+//! * **native** — [`SuperLink`] itself implements `Grid`: the driver
+//!   sits in the same process as the link and the SuperNode fleet dials
+//!   it directly (Fig. 5a).
+//! * **bridged** — [`crate::bridge::BridgedGrid`] wraps a SuperLink
+//!   whose client traffic arrives through FLARE reliable messaging (the
+//!   LGS→SCP→LGC hop chain of Fig. 4). Constructing it wires the LGC;
+//!   the driver code is unchanged — the six-hop bridge is invisible
+//!   above this trait.
+//!
+//! # Example
+//!
+//! Drive a query round against a native grid by hand (what
+//! [`crate::flower::analytics::run_query`] automates; a real deployment
+//! lets SuperNodes answer instead of crafting frames):
+//!
+//! ```
+//! use flarelink::flower::grid::Grid;
+//! use flarelink::flower::message::{ConfigRecord, FlowerMsg, Message};
+//! use flarelink::flower::records::RecordDict;
+//! use flarelink::flower::superlink::SuperLink;
+//!
+//! let link = SuperLink::new();
+//! // A node joins (normally a SuperNode does this over its connector).
+//! link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+//! link.open_run(1);
+//! let ids = link.push_messages(vec![
+//!     Message::query(1, ConfigRecord::new()).for_round(1, 1),
+//! ]);
+//! // The node pulls and answers (normally the Router's query handler).
+//! let pull = link.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode());
+//! let ins = match FlowerMsg::decode(&pull).unwrap() {
+//!     FlowerMsg::TaskInsList { tasks, .. } => tasks.into_iter().next().unwrap(),
+//!     other => panic!("{other:?}"),
+//! };
+//! let reply = Message::from_ins(ins, 1)
+//!     .reply(RecordDict::default())
+//!     .with_examples(3);
+//! link.handle_frame(&FlowerMsg::PushTaskRes { res: reply.into_res() }.encode());
+//! // The driver claims the reply.
+//! let (replies, failed) = link.pull_messages(1, &ids);
+//! assert!(failed.is_empty());
+//! assert_eq!(replies[0].metadata.num_examples, 3);
+//! assert_eq!(replies[0].metadata.src_node_id, 1);
+//! link.close_run(1);
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::flower::message::Message;
+use crate::flower::superlink::{CompletionPolicy, RoundWait, SuperLink};
+
+/// Driver-side federation surface: run lifecycle, node pool, message
+/// push/pull. Object-safe — drivers that don't need generics can take
+/// `&dyn Grid`.
+pub trait Grid: Send + Sync {
+    /// Open coordination state for `run_id` (idempotent while active).
+    /// Run ids must be unique over a grid's lifetime.
+    fn open_run(&self, run_id: u64);
+
+    /// Is this run still accepting/serving messages?
+    fn run_active(&self, run_id: u64) -> bool;
+
+    /// Finish `run_id`: undelivered instructions and unconsumed replies
+    /// are reclaimed; other runs are untouched.
+    fn close_run(&self, run_id: u64);
+
+    /// Live node ids, sorted (the deterministic sampling basis).
+    fn node_ids(&self) -> Vec<u64>;
+
+    /// Block until at least `n` nodes are connected.
+    fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>>;
+
+    /// Declare nodes with expired liveness leases dead and settle their
+    /// in-flight messages (redeliver or fail).
+    fn reap(&self);
+
+    /// Queue one instruction to `msg.metadata.dst_node_id` (run routed
+    /// by `msg.metadata.run_id`); returns the message id replies carry.
+    fn push_message(&self, msg: Message) -> u64;
+
+    /// Queue a batch of instructions; returns their ids in order.
+    fn push_messages(&self, msgs: Vec<Message>) -> Vec<u64> {
+        msgs.into_iter().map(|m| self.push_message(m)).collect()
+    }
+
+    /// Non-blocking claim of whatever has resolved among `ids`: reply
+    /// messages (ascending id) plus failed ids with reasons. Each reply
+    /// is handed out exactly once. Pair with [`Grid::wait_activity`] to
+    /// sleep between polls — the async driver's loop.
+    fn pull_messages(&self, run_id: u64, ids: &[u64]) -> (Vec<Message>, Vec<(u64, String)>);
+
+    /// Block until grid state changes (a reply arrives, a node joins or
+    /// dies, a run finishes) or `timeout` passes.
+    fn wait_activity(&self, timeout: Duration);
+
+    /// Stream replies for `ids` to `f` AS THEY ARRIVE (arrival order);
+    /// the [`CompletionPolicy`] decides when the wait may stop and the
+    /// outcome is reported as data. Only a callback error aborts.
+    fn for_each_reply(
+        &self,
+        run_id: u64,
+        ids: &[u64],
+        timeout: Duration,
+        policy: CompletionPolicy,
+        f: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<RoundWait>;
+}
+
+/// Native execution: the SuperLink IS the grid — driver calls go
+/// straight into the link's run/task state (Fig. 5a).
+impl Grid for SuperLink {
+    fn open_run(&self, run_id: u64) {
+        self.register_run(run_id);
+    }
+
+    fn run_active(&self, run_id: u64) -> bool {
+        SuperLink::run_active(self, run_id)
+    }
+
+    fn close_run(&self, run_id: u64) {
+        self.finish(run_id);
+    }
+
+    fn node_ids(&self) -> Vec<u64> {
+        self.nodes()
+    }
+
+    fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>> {
+        SuperLink::wait_for_nodes(self, n, timeout)
+    }
+
+    fn reap(&self) {
+        self.reap_expired();
+    }
+
+    fn push_message(&self, msg: Message) -> u64 {
+        let node = msg.metadata.dst_node_id;
+        self.push_task(node, msg.into_ins())
+    }
+
+    fn pull_messages(&self, run_id: u64, ids: &[u64]) -> (Vec<Message>, Vec<(u64, String)>) {
+        let (ready, failed) = self.poll_results(run_id, ids);
+        (ready.into_iter().map(Message::from_res).collect(), failed)
+    }
+
+    fn wait_activity(&self, timeout: Duration) {
+        SuperLink::wait_activity(self, timeout);
+    }
+
+    fn for_each_reply(
+        &self,
+        run_id: u64,
+        ids: &[u64],
+        timeout: Duration,
+        policy: CompletionPolicy,
+        f: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<RoundWait> {
+        self.for_each_result_policy(run_id, ids, timeout, policy, |res| {
+            f(Message::from_res(res))
+        })
+    }
+}
+
+/// Shared handles delegate: `&Arc<SuperLink>` (and any `Arc<impl Grid>`)
+/// drives rounds like the grid it wraps.
+impl<G: Grid + ?Sized> Grid for Arc<G> {
+    fn open_run(&self, run_id: u64) {
+        (**self).open_run(run_id)
+    }
+
+    fn run_active(&self, run_id: u64) -> bool {
+        (**self).run_active(run_id)
+    }
+
+    fn close_run(&self, run_id: u64) {
+        (**self).close_run(run_id)
+    }
+
+    fn node_ids(&self) -> Vec<u64> {
+        (**self).node_ids()
+    }
+
+    fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>> {
+        (**self).wait_for_nodes(n, timeout)
+    }
+
+    fn reap(&self) {
+        (**self).reap()
+    }
+
+    fn push_message(&self, msg: Message) -> u64 {
+        (**self).push_message(msg)
+    }
+
+    fn push_messages(&self, msgs: Vec<Message>) -> Vec<u64> {
+        (**self).push_messages(msgs)
+    }
+
+    fn pull_messages(&self, run_id: u64, ids: &[u64]) -> (Vec<Message>, Vec<(u64, String)>) {
+        (**self).pull_messages(run_id, ids)
+    }
+
+    fn wait_activity(&self, timeout: Duration) {
+        (**self).wait_activity(timeout)
+    }
+
+    fn for_each_reply(
+        &self,
+        run_id: u64,
+        ids: &[u64],
+        timeout: Duration,
+        policy: CompletionPolicy,
+        f: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<RoundWait> {
+        (**self).for_each_reply(run_id, ids, timeout, policy, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::message::{ConfigRecord, FlowerMsg, MessageType};
+    use crate::flower::records::{ArrayRecord, RecordDict};
+
+    fn join_node(link: &SuperLink) -> u64 {
+        let reply = link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
+        match FlowerMsg::decode(&reply).unwrap()
+        {
+            FlowerMsg::NodeCreated { node_id } => node_id,
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn answer_pull(link: &SuperLink, node_id: u64) -> Vec<crate::flower::message::TaskIns> {
+        match FlowerMsg::decode(
+            &link.handle_frame(&FlowerMsg::PullTaskIns { node_id }.encode()),
+        )
+        .unwrap()
+        {
+            FlowerMsg::TaskInsList { tasks, .. } => tasks,
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn superlink_grid_roundtrip_preserves_message_identity() {
+        let link = SuperLink::new();
+        let node = join_node(&link);
+        link.open_run(7);
+        assert!(Grid::run_active(&*link, 7));
+        let msg = Message::train(
+            node,
+            ArrayRecord::from_flat(&[1.0, f32::NAN]),
+            ConfigRecord::new(),
+        )
+        .for_round(7, 3)
+        .with_model_version(5);
+        let ids = link.push_messages(vec![msg]);
+        // The node sees the same instruction the grid pushed.
+        let tasks = answer_pull(&link, node);
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].task_id, ids[0]);
+        assert_eq!(tasks[0].round, 3);
+        assert_eq!(tasks[0].message_type, MessageType::Train);
+        assert_eq!(tasks[0].model_version, 5);
+        // It answers through the message surface.
+        let ins = tasks.into_iter().next().unwrap();
+        let reply = Message::from_ins(ins, node)
+            .reply(RecordDict::from_arrays(ArrayRecord::from_flat(&[2.0])))
+            .with_examples(10);
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: reply.into_res() }.encode());
+        // The driver claims it as a Message with full metadata.
+        let (replies, failed) = link.pull_messages(7, &ids);
+        assert!(failed.is_empty());
+        assert_eq!(replies.len(), 1);
+        assert_eq!(replies[0].metadata.src_node_id, node);
+        assert_eq!(replies[0].metadata.message_id, ids[0]);
+        assert_eq!(replies[0].metadata.num_examples, 10);
+        // The SuperLink stamps the authoritative model version back.
+        assert_eq!(replies[0].metadata.model_version, 5);
+        assert_eq!(replies[0].content.arrays.to_flat(), vec![2.0]);
+        link.close_run(7);
+        assert!(!Grid::run_active(&*link, 7));
+    }
+
+    #[test]
+    fn arc_blanket_impl_delegates() {
+        let link = SuperLink::new();
+        join_node(&link);
+        // `Arc<SuperLink>` is itself a Grid (what `ServerApp::run(&link)`
+        // relies on).
+        fn takes_grid<G: Grid + ?Sized>(g: &G) -> Vec<u64> {
+            g.open_run(1);
+            g.node_ids()
+        }
+        assert_eq!(takes_grid(&link), vec![1]);
+        let dyn_grid: &dyn Grid = &*link;
+        assert_eq!(dyn_grid.node_ids(), vec![1]);
+    }
+
+    #[test]
+    fn for_each_reply_streams_and_reports_policy_outcome() {
+        let link = SuperLink::new();
+        let node = join_node(&link);
+        link.open_run(1);
+        let ids = link.push_messages(vec![
+            Message::query(node, ConfigRecord::new()).for_round(1, 1),
+            Message::query(node, ConfigRecord::new()).for_round(1, 1),
+        ]);
+        // Answer only the first.
+        let tasks = answer_pull(&link, node);
+        let first = tasks.into_iter().next().unwrap();
+        let reply = Message::from_ins(first, node).reply(RecordDict::default());
+        link.handle_frame(&FlowerMsg::PushTaskRes { res: reply.into_res() }.encode());
+        let mut seen = Vec::new();
+        let wait = link
+            .for_each_reply(
+                1,
+                &ids,
+                Duration::from_millis(200),
+                CompletionPolicy::quorum(1, Duration::from_millis(20)),
+                &mut |m: Message| {
+                    seen.push(m.metadata.message_id);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert_eq!(seen, vec![ids[0]]);
+        assert_eq!(wait.completed, vec![ids[0]]);
+        assert_eq!(wait.missing, vec![ids[1]]);
+        link.close_run(1);
+    }
+}

@@ -26,9 +26,9 @@
 use crate::flower::records::{ArrayRecord, DType, RecordDict, Tensor};
 use crate::util::bytes::{Bytes, FrameReader, Reader, WireError, Writer};
 
-pub use crate::flower::records::{
-    config_get_f64, config_get_i64, config_get_str, ConfigRecord, ConfigValue, MetricRecord,
-};
+pub use crate::flower::records::{ConfigRecord, ConfigValue, MetricRecord};
+#[allow(deprecated)]
+pub use crate::flower::records::{config_get_f64, config_get_i64, config_get_str};
 
 // ---------------------------------------------------------------------------
 // Codec limits (hoisted, named, tested)
@@ -111,7 +111,9 @@ fn read_config(r: &mut FrameReader) -> Result<ConfigRecord, WireError> {
         };
         c.push((k, v));
     }
-    Ok(c)
+    // from_pairs preserves entries verbatim (duplicate keys included),
+    // so decode -> encode is byte-exact even for hostile frames.
+    Ok(ConfigRecord::from_pairs(c))
 }
 
 fn write_metrics(w: &mut Writer, m: &MetricRecord) {
@@ -133,9 +135,10 @@ fn read_metrics(r: &mut FrameReader) -> Result<MetricRecord, WireError> {
     let mut m = Vec::with_capacity(n);
     for _ in 0..n {
         let k = r.str()?;
-        m.push((k, r.f64()?));
+        let v = r.f64()?;
+        m.push((k, v));
     }
-    Ok(m)
+    Ok(MetricRecord::from_pairs(m))
 }
 
 // ---------------------------------------------------------------------------
@@ -233,11 +236,88 @@ fn read_record(r: &mut FrameReader) -> Result<ArrayRecord, WireError> {
     ArrayRecord::from_tensors(tensors).map_err(|_| WireError::Malformed("duplicate tensor name"))
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-#[repr(u8)]
-pub enum TaskType {
-    Fit = 0,
-    Evaluate = 1,
+/// The type of a [`Message`]: what the receiving node should DO with
+/// its content. `Train`/`Evaluate` are the classic FL verbs (the only
+/// two the pre-redesign stack could express); `Query` is the federated
+/// analytics verb (compute over local data, no model anywhere); and
+/// `Custom(name)` opens the scenario axis — any workload a registered
+/// handler understands, flowing through every layer (wire, SuperNode
+/// dispatch, mods, bridge) without those layers changing.
+///
+/// # Examples
+///
+/// ```
+/// use flarelink::flower::message::MessageType;
+///
+/// let t = MessageType::Custom("personalize".into());
+/// assert_eq!(t.name(), "personalize");
+/// assert_eq!(MessageType::Query.name(), "query");
+/// // v1 peers predate Query/Custom: only Train/Evaluate survive a
+/// // legacy round-trip.
+/// assert!(MessageType::Train.rides_v1());
+/// assert!(!t.rides_v1());
+/// ```
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub enum MessageType {
+    /// Local training over the carried parameters (legacy `Fit`).
+    #[default]
+    Train,
+    /// Local evaluation of the carried parameters.
+    Evaluate,
+    /// Federated analytics: answer from local data; no model involved.
+    Query,
+    /// App-defined verb, dispatched by name to a registered handler.
+    Custom(String),
+}
+
+impl MessageType {
+    /// Stable lower-case name (the `Custom` payload is the name itself).
+    pub fn name(&self) -> &str {
+        match self {
+            MessageType::Train => "train",
+            MessageType::Evaluate => "evaluate",
+            MessageType::Query => "query",
+            MessageType::Custom(name) => name,
+        }
+    }
+
+    /// Construct a custom type by name.
+    pub fn custom(name: impl Into<String>) -> MessageType {
+        MessageType::Custom(name.into())
+    }
+
+    /// Can a legacy v1 frame represent this type? (v1 predates the
+    /// generic Message API: its tag byte only distinguishes fit and
+    /// evaluate.)
+    pub fn rides_v1(&self) -> bool {
+        matches!(self, MessageType::Train | MessageType::Evaluate)
+    }
+
+    fn wire_tag(&self) -> u8 {
+        match self {
+            MessageType::Train => 0,
+            MessageType::Evaluate => 1,
+            MessageType::Query => 2,
+            MessageType::Custom(_) => 3,
+        }
+    }
+}
+
+fn write_message_type(w: &mut Writer, t: &MessageType) {
+    w.u8(t.wire_tag());
+    if let MessageType::Custom(name) = t {
+        w.str(name);
+    }
+}
+
+fn read_message_type(r: &mut FrameReader) -> Result<MessageType, WireError> {
+    Ok(match r.u8()? {
+        0 => MessageType::Train,
+        1 => MessageType::Evaluate,
+        2 => MessageType::Query,
+        3 => MessageType::Custom(r.str()?),
+        t => return Err(WireError::BadTag(t)),
+    })
 }
 
 /// Server -> client task instruction.
@@ -247,7 +327,10 @@ pub struct TaskIns {
     pub run_id: u64,
     /// Round number (Flower's group_id).
     pub round: u64,
-    pub task_type: TaskType,
+    /// What the receiving node should do with the content (new v2 wire
+    /// field; the slot that used to be the fit/evaluate tag byte — v1
+    /// frames decode to `Train`/`Evaluate` only).
+    pub message_type: MessageType,
     /// Delivery attempt: 0 for the original assignment, incremented each
     /// time the SuperLink redelivers the task to another node after its
     /// assignee's liveness lease expired (bounded by the link's
@@ -276,7 +359,7 @@ impl TaskIns {
     pub fn record(&self) -> RecordDict {
         RecordDict {
             arrays: self.parameters.clone(),
-            metrics: Vec::new(),
+            metrics: crate::flower::records::MetricRecord::new(),
             configs: self.config.clone(),
         }
     }
@@ -290,12 +373,22 @@ pub struct TaskRes {
     pub node_id: u64,
     /// Empty string = success; else the client-side error.
     pub error: String,
+    /// Echo of the instruction's message type (new v2 wire field; v1
+    /// replies cannot carry it and decode as `Train`, the legacy
+    /// default — legacy drivers never read it).
+    pub message_type: MessageType,
     /// Updated parameters (fit) or empty (evaluate).
     pub parameters: ArrayRecord,
     pub num_examples: u64,
     /// loss for evaluate tasks; 0 for fit unless reported in metrics.
     pub loss: f64,
     pub metrics: MetricRecord,
+    /// Reply-side config channel (new v2 wire field; v1 decodes empty):
+    /// a handler's `Message` reply carries its `content.configs` here,
+    /// so query/custom workloads can return structured non-tensor
+    /// answers. Fit/evaluate replies leave it empty (bit-identical to
+    /// the pre-redesign frames).
+    pub configs: ConfigRecord,
     /// Echo of the instruction's `model_version`: the global model
     /// version this result was computed from (0 on the sync path and in
     /// legacy v1 frames; the SuperLink overrides it with its own
@@ -310,7 +403,243 @@ impl TaskRes {
         RecordDict {
             arrays: self.parameters.clone(),
             metrics: self.metrics.clone(),
-            configs: Vec::new(),
+            configs: self.configs.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Message: the generic app-boundary view
+// ---------------------------------------------------------------------------
+
+/// Delivery/identity metadata of one [`Message`] (Flower's `Metadata`).
+/// Instructions flow server -> node with `dst_node_id` set; replies flow
+/// back with `src_node_id` set (and `num_examples`/`loss` carrying the
+/// reply's scalar stats — the weight channel every aggregation honours).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metadata {
+    pub run_id: u64,
+    /// The task id on the wire: assigned by the SuperLink at push time.
+    pub message_id: u64,
+    /// Node that produced this message (0 = the server/driver).
+    pub src_node_id: u64,
+    /// Node this message is addressed to (0 = the server/driver).
+    pub dst_node_id: u64,
+    /// Round / commit number (Flower's group_id).
+    pub round: u64,
+    /// Delivery attempt (see [`TaskIns::attempt`]).
+    pub attempt: u32,
+    /// May the SuperLink reassign to another node on lease expiry?
+    pub redeliver: bool,
+    /// Global model version the content was cut from (async mode).
+    pub model_version: u64,
+    /// Reply stat: examples behind this result (0 on instructions).
+    pub num_examples: u64,
+    /// Reply stat: evaluation loss (0.0 on instructions and fit replies).
+    pub loss: f64,
+}
+
+/// The generic message the app boundary speaks (Flower's `Message`):
+/// a [`MessageType`] verb, a [`RecordDict`] content bundle, and
+/// [`Metadata`]. Everything a SuperNode executes and everything a
+/// driver pushes or pulls is one of these — fit/evaluate, analytics
+/// queries, and custom workloads all ride the same shape, which is why
+/// new scenarios need no wire/dispatch changes.
+///
+/// On the wire a `Message` is carried by [`TaskIns`] (instruction
+/// direction) or [`TaskRes`] (reply direction); the conversions below
+/// are total and bit-preserving (content tensors are refcounted views —
+/// no payload copies).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Message {
+    pub message_type: MessageType,
+    pub content: RecordDict,
+    pub metadata: Metadata,
+    /// Client-side error (reply direction; empty = success).
+    pub error: String,
+}
+
+impl Message {
+    /// A fresh instruction of `message_type` addressed to `dst_node_id`.
+    pub fn new(message_type: MessageType, dst_node_id: u64, content: RecordDict) -> Message {
+        Message {
+            message_type,
+            content,
+            metadata: Metadata {
+                dst_node_id,
+                ..Metadata::default()
+            },
+            error: String::new(),
+        }
+    }
+
+    /// A `Train` instruction carrying parameters + config (the classic
+    /// fit push).
+    pub fn train(dst_node_id: u64, parameters: ArrayRecord, config: ConfigRecord) -> Message {
+        Message::new(
+            MessageType::Train,
+            dst_node_id,
+            RecordDict {
+                arrays: parameters,
+                metrics: MetricRecord::new(),
+                configs: config,
+            },
+        )
+    }
+
+    /// An `Evaluate` instruction carrying parameters + config.
+    pub fn evaluate(dst_node_id: u64, parameters: ArrayRecord, config: ConfigRecord) -> Message {
+        let mut m = Message::train(dst_node_id, parameters, config);
+        m.message_type = MessageType::Evaluate;
+        m
+    }
+
+    /// A `Query` instruction: config only — **no model parameters
+    /// anywhere** (the federated-analytics path).
+    pub fn query(dst_node_id: u64, config: ConfigRecord) -> Message {
+        Message::new(
+            MessageType::Query,
+            dst_node_id,
+            RecordDict::from_configs(config),
+        )
+    }
+
+    /// Builder: set run/round identity on an instruction.
+    pub fn for_round(mut self, run_id: u64, round: u64) -> Message {
+        self.metadata.run_id = run_id;
+        self.metadata.round = round;
+        self
+    }
+
+    /// Builder: tag the global model version (async driver).
+    pub fn with_model_version(mut self, version: u64) -> Message {
+        self.metadata.model_version = version;
+        self
+    }
+
+    /// Build the success reply to this instruction: same type and
+    /// identity, src/dst swapped.
+    pub fn reply(&self, content: RecordDict) -> Message {
+        Message {
+            message_type: self.message_type.clone(),
+            content,
+            metadata: Metadata {
+                src_node_id: self.metadata.dst_node_id,
+                dst_node_id: self.metadata.src_node_id,
+                num_examples: 0,
+                loss: 0.0,
+                ..self.metadata.clone()
+            },
+            error: String::new(),
+        }
+    }
+
+    /// Build the error reply to this instruction (empty content).
+    pub fn reply_err(&self, error: impl Into<String>) -> Message {
+        let mut m = self.reply(RecordDict::default());
+        m.error = error.into();
+        m
+    }
+
+    /// Builder: reply stat — examples behind this result.
+    pub fn with_examples(mut self, num_examples: u64) -> Message {
+        self.metadata.num_examples = num_examples;
+        self
+    }
+
+    /// Builder: reply stat — evaluation loss.
+    pub fn with_loss(mut self, loss: f64) -> Message {
+        self.metadata.loss = loss;
+        self
+    }
+
+    /// Did this (reply) message succeed?
+    pub fn is_ok(&self) -> bool {
+        self.error.is_empty()
+    }
+
+    /// Instruction view of a received [`TaskIns`] (node side). The
+    /// receiving node fills `metadata.dst_node_id` with its own id.
+    pub fn from_ins(ins: TaskIns, dst_node_id: u64) -> Message {
+        Message {
+            message_type: ins.message_type,
+            content: RecordDict {
+                arrays: ins.parameters,
+                metrics: MetricRecord::new(),
+                configs: ins.config,
+            },
+            metadata: Metadata {
+                run_id: ins.run_id,
+                message_id: ins.task_id,
+                src_node_id: 0,
+                dst_node_id,
+                round: ins.round,
+                attempt: ins.attempt,
+                redeliver: ins.redeliver,
+                model_version: ins.model_version,
+                num_examples: 0,
+                loss: 0.0,
+            },
+            error: String::new(),
+        }
+    }
+
+    /// Wire form of an instruction (driver side). Instruction metrics
+    /// have no wire slot (nothing consumes them — Flower's TaskIns
+    /// doesn't carry metrics either); they are dropped here.
+    pub fn into_ins(self) -> TaskIns {
+        TaskIns {
+            task_id: self.metadata.message_id,
+            run_id: self.metadata.run_id,
+            round: self.metadata.round,
+            message_type: self.message_type,
+            attempt: self.metadata.attempt,
+            redeliver: self.metadata.redeliver,
+            model_version: self.metadata.model_version,
+            parameters: self.content.arrays,
+            config: self.content.configs,
+        }
+    }
+
+    /// Reply view of a received [`TaskRes`] (driver side).
+    pub fn from_res(res: TaskRes) -> Message {
+        Message {
+            message_type: res.message_type,
+            content: RecordDict {
+                arrays: res.parameters,
+                metrics: res.metrics,
+                configs: res.configs,
+            },
+            metadata: Metadata {
+                run_id: res.run_id,
+                message_id: res.task_id,
+                src_node_id: res.node_id,
+                dst_node_id: 0,
+                round: 0,
+                attempt: 0,
+                redeliver: false,
+                model_version: res.model_version,
+                num_examples: res.num_examples,
+                loss: res.loss,
+            },
+            error: res.error,
+        }
+    }
+
+    /// Wire form of a reply (node side).
+    pub fn into_res(self) -> TaskRes {
+        TaskRes {
+            task_id: self.metadata.message_id,
+            run_id: self.metadata.run_id,
+            node_id: self.metadata.src_node_id,
+            error: self.error,
+            message_type: self.message_type,
+            parameters: self.content.arrays,
+            num_examples: self.metadata.num_examples,
+            loss: self.metadata.loss,
+            metrics: self.content.metrics,
+            configs: self.content.configs,
+            model_version: self.metadata.model_version,
         }
     }
 }
@@ -357,10 +686,12 @@ impl FlowerMsg {
                 w.u64(res.run_id);
                 w.u64(res.node_id);
                 w.str(&res.error);
+                write_message_type(&mut w, &res.message_type);
                 write_record(&mut w, &res.parameters);
                 w.u64(res.num_examples);
                 w.f64(res.loss);
                 write_metrics(&mut w, &res.metrics);
+                write_config(&mut w, &res.configs);
                 w.u64(res.model_version);
             }
             FlowerMsg::DeleteNode { node_id } => {
@@ -379,7 +710,7 @@ impl FlowerMsg {
                     w.u64(t.task_id);
                     w.u64(t.run_id);
                     w.u64(t.round);
-                    w.u8(t.task_type as u8);
+                    write_message_type(&mut w, &t.message_type);
                     w.u32(t.attempt);
                     w.u8(t.redeliver as u8);
                     write_record(&mut w, &t.parameters);
@@ -400,7 +731,11 @@ impl FlowerMsg {
     /// Encode as a legacy v1 frame (flat f32 parameters). Lossy for
     /// records that are not a single flat f32 tensor — interop path for
     /// peers that predate the record codec, and the test vector for the
-    /// legacy decode path.
+    /// legacy decode path. Also lossy for message types: v1's tag byte
+    /// only distinguishes fit and evaluate, so `Query`/`Custom`
+    /// instructions fall back to the `Train` tag (callers must not
+    /// route non-FL messages to v1 peers — check
+    /// [`MessageType::rides_v1`] first).
     pub fn encode_v1(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
@@ -439,7 +774,10 @@ impl FlowerMsg {
                     w.u64(t.task_id);
                     w.u64(t.run_id);
                     w.u64(t.round);
-                    w.u8(t.task_type as u8);
+                    // v1 tag byte: evaluate stays 1; everything else —
+                    // including Query/Custom, which v1 cannot express —
+                    // collapses to the fit tag 0.
+                    w.u8(matches!(t.message_type, MessageType::Evaluate) as u8);
                     w.f32s(&t.parameters.to_flat());
                     write_config(&mut w, &t.config);
                 }
@@ -487,10 +825,12 @@ impl FlowerMsg {
                     run_id: r.u64()?,
                     node_id: r.u64()?,
                     error: r.str()?,
+                    message_type: read_message_type(&mut r)?,
                     parameters: read_record(&mut r)?,
                     num_examples: r.u64()?,
                     loss: r.f64()?,
                     metrics: read_metrics(&mut r)?,
+                    configs: read_config(&mut r)?,
                     model_version: r.u64()?,
                 },
             },
@@ -510,11 +850,7 @@ impl FlowerMsg {
                     let task_id = r.u64()?;
                     let run_id = r.u64()?;
                     let round = r.u64()?;
-                    let task_type = match r.u8()? {
-                        0 => TaskType::Fit,
-                        1 => TaskType::Evaluate,
-                        t => return Err(WireError::BadTag(t)),
-                    };
+                    let message_type = read_message_type(&mut r)?;
                     let attempt = r.u32()?;
                     let redeliver = r.u8()? != 0;
                     let parameters = read_record(&mut r)?;
@@ -524,7 +860,7 @@ impl FlowerMsg {
                         task_id,
                         run_id,
                         round,
-                        task_type,
+                        message_type,
                         attempt,
                         redeliver,
                         model_version,
@@ -558,10 +894,14 @@ impl FlowerMsg {
                     run_id: r.u64()?,
                     node_id: r.u64()?,
                     error: r.str()?.to_string(),
+                    // v1 predates the generic Message API: no type, no
+                    // reply config channel on the wire.
+                    message_type: MessageType::Train,
                     parameters: ArrayRecord::from_flat(&r.f32s()?),
                     num_examples: r.u64()?,
                     loss: r.f64()?,
                     metrics: read_metrics_v1(&mut r)?,
+                    configs: ConfigRecord::new(),
                     // v1 predates async mode: version unknown — the
                     // SuperLink stamps its per-task record instead.
                     model_version: 0,
@@ -583,9 +923,10 @@ impl FlowerMsg {
                     let task_id = r.u64()?;
                     let run_id = r.u64()?;
                     let round = r.u64()?;
-                    let task_type = match r.u8()? {
-                        0 => TaskType::Fit,
-                        1 => TaskType::Evaluate,
+                    // v1 tag byte: only the two legacy FL verbs exist.
+                    let message_type = match r.u8()? {
+                        0 => MessageType::Train,
+                        1 => MessageType::Evaluate,
                         t => return Err(WireError::BadTag(t)),
                     };
                     let parameters = ArrayRecord::from_flat(&r.f32s()?);
@@ -594,7 +935,7 @@ impl FlowerMsg {
                         task_id,
                         run_id,
                         round,
-                        task_type,
+                        message_type,
                         // v1 predates redelivery: original, non-redeliverable.
                         attempt: 0,
                         redeliver: false,
@@ -637,7 +978,7 @@ fn read_config_v1(r: &mut Reader) -> Result<ConfigRecord, WireError> {
         };
         c.push((k, v));
     }
-    Ok(c)
+    Ok(ConfigRecord::from_pairs(c))
 }
 
 fn read_metrics_v1(r: &mut Reader) -> Result<MetricRecord, WireError> {
@@ -651,9 +992,10 @@ fn read_metrics_v1(r: &mut Reader) -> Result<MetricRecord, WireError> {
     let mut m = Vec::with_capacity(n);
     for _ in 0..n {
         let k = r.str()?.to_string();
-        m.push((k, r.f64()?));
+        let v = r.f64()?;
+        m.push((k, v));
     }
-    Ok(m)
+    Ok(MetricRecord::from_pairs(m))
 }
 
 #[cfg(test)]
@@ -676,18 +1018,18 @@ mod tests {
             task_id: 9,
             run_id: 1,
             round: 3,
-            task_type: TaskType::Fit,
+            message_type: MessageType::Train,
             attempt: 0,
             redeliver: false,
             // 0 so the same sample exercises the (lossy) v1 path too.
             model_version: 0,
             parameters: mixed_record(),
-            config: vec![
+            config: ConfigRecord::from_pairs(vec![
                 ("lr".into(), ConfigValue::F64(0.05)),
                 ("epochs".into(), ConfigValue::I64(2)),
                 ("mode".into(), ConfigValue::Str("iid".into())),
                 ("prox".into(), ConfigValue::Bool(true)),
-            ],
+            ]),
         }
     }
 
@@ -697,10 +1039,12 @@ mod tests {
             run_id: 1,
             node_id: 4,
             error: String::new(),
+            message_type: MessageType::Train,
             parameters: ArrayRecord::from_flat(&[0.25; 10]),
             num_examples: 128,
             loss: 0.75,
-            metrics: vec![("accuracy".into(), 0.9)],
+            metrics: vec![("accuracy".to_string(), 0.9)].into(),
+            configs: ConfigRecord::new(),
             model_version: 0,
         }
     }
@@ -909,11 +1253,146 @@ mod tests {
     #[test]
     fn config_accessors() {
         let c = sample_ins().config;
-        assert_eq!(config_get_f64(&c, "lr"), Some(0.05));
-        assert_eq!(config_get_f64(&c, "epochs"), Some(2.0));
-        assert_eq!(config_get_i64(&c, "epochs"), Some(2));
-        assert_eq!(config_get_str(&c, "mode"), Some("iid"));
-        assert_eq!(config_get_f64(&c, "missing"), None);
+        assert_eq!(c.get_f64("lr"), Some(0.05));
+        assert_eq!(c.get_f64("epochs"), Some(2.0));
+        assert_eq!(c.get_i64("epochs"), Some(2));
+        assert_eq!(c.get_str("mode"), Some("iid"));
+        assert_eq!(c.get_f64("missing"), None);
+    }
+
+    #[test]
+    fn query_and_custom_types_roundtrip_v2() {
+        // The new scenario axis rides the wire: Query and Custom(name)
+        // instructions (no parameters — zero model bytes) and replies
+        // with the new configs channel round-trip byte-exactly on v2.
+        for mt in [MessageType::Query, MessageType::custom("personalize")] {
+            let ins = TaskIns {
+                message_type: mt.clone(),
+                parameters: ArrayRecord::new(),
+                ..sample_ins()
+            };
+            let m = FlowerMsg::TaskInsList {
+                tasks: vec![ins.clone()],
+                active: true,
+            };
+            match FlowerMsg::decode(&m.encode()).unwrap() {
+                FlowerMsg::TaskInsList { tasks, .. } => {
+                    assert_eq!(tasks[0].message_type, mt);
+                    assert!(tasks[0].parameters.is_empty(), "no model on the wire");
+                }
+                other => panic!("{other:?}"),
+            }
+            let res = TaskRes {
+                message_type: mt.clone(),
+                parameters: ArrayRecord::new(),
+                configs: ConfigRecord::from_pairs(vec![(
+                    "sketch_bins".to_string(),
+                    ConfigValue::I64(32),
+                )]),
+                ..sample_res()
+            };
+            match FlowerMsg::decode(&FlowerMsg::PushTaskRes { res: res.clone() }.encode()).unwrap()
+            {
+                FlowerMsg::PushTaskRes { res: back } => {
+                    assert_eq!(back, res);
+                    assert_eq!(back.configs.get_i64("sketch_bins"), Some(32));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn v1_decodes_message_types_to_train_evaluate_only() {
+        // v1 frames predate the generic Message API: an Evaluate task
+        // survives the legacy encoding, a Query falls back to Train
+        // (the documented lossy mapping), and v1 replies decode with
+        // Train + empty configs.
+        assert!(!MessageType::Query.rides_v1());
+        assert!(!MessageType::custom("x").rides_v1());
+        let flat = ArrayRecord::from_flat(&[1.0]);
+        for (sent, want) in [
+            (MessageType::Train, MessageType::Train),
+            (MessageType::Evaluate, MessageType::Evaluate),
+            (MessageType::Query, MessageType::Train),
+            (MessageType::custom("agg"), MessageType::Train),
+        ] {
+            let v1 = FlowerMsg::TaskInsList {
+                tasks: vec![TaskIns {
+                    message_type: sent,
+                    parameters: flat.clone(),
+                    ..sample_ins()
+                }],
+                active: true,
+            }
+            .encode_v1();
+            match FlowerMsg::decode(&v1).unwrap() {
+                FlowerMsg::TaskInsList { tasks, .. } => {
+                    assert_eq!(tasks[0].message_type, want)
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        let res = TaskRes {
+            message_type: MessageType::Evaluate,
+            parameters: flat,
+            configs: ConfigRecord::from_pairs(vec![(
+                "lost".to_string(),
+                ConfigValue::Bool(true),
+            )]),
+            ..sample_res()
+        };
+        match FlowerMsg::decode(&FlowerMsg::PushTaskRes { res }.encode_v1()).unwrap() {
+            FlowerMsg::PushTaskRes { res: back } => {
+                assert_eq!(back.message_type, MessageType::Train, "v1 carries no type");
+                assert!(back.configs.is_empty(), "v1 carries no reply configs");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn message_conversions_are_lossless_on_v2_fields() {
+        // TaskIns -> Message -> TaskIns is identity.
+        let ins = TaskIns {
+            message_type: MessageType::Query,
+            attempt: 2,
+            redeliver: true,
+            model_version: 5,
+            parameters: ArrayRecord::new(),
+            ..sample_ins()
+        };
+        let msg = Message::from_ins(ins.clone(), 7);
+        assert_eq!(msg.metadata.dst_node_id, 7);
+        assert_eq!(msg.metadata.message_id, ins.task_id);
+        assert_eq!(msg.into_ins(), ins);
+        // Reply swaps src/dst and keeps identity; Message -> TaskRes ->
+        // Message preserves every field the wire carries.
+        let ins_msg = Message::from_ins(ins, 7);
+        let reply = ins_msg
+            .reply(RecordDict::from_configs(ConfigRecord::from_pairs(vec![(
+                "count".to_string(),
+                ConfigValue::I64(3),
+            )])))
+            .with_examples(40)
+            .with_loss(0.5);
+        assert_eq!(reply.metadata.src_node_id, 7);
+        assert_eq!(reply.metadata.dst_node_id, 0);
+        assert_eq!(reply.metadata.message_id, ins_msg.metadata.message_id);
+        assert!(reply.is_ok());
+        let res = reply.clone().into_res();
+        assert_eq!(res.node_id, 7);
+        assert_eq!(res.num_examples, 40);
+        assert_eq!(res.configs.get_i64("count"), Some(3));
+        let back = Message::from_res(res);
+        assert_eq!(back.message_type, MessageType::Query);
+        assert_eq!(back.metadata.num_examples, 40);
+        assert_eq!(back.metadata.loss, 0.5);
+        assert_eq!(back.content, reply.content);
+        // Error replies carry the error and empty content.
+        let err = ins_msg.reply_err("boom");
+        assert!(!err.is_ok());
+        assert_eq!(err.clone().into_res().error, "boom");
     }
 
     #[test]
@@ -939,6 +1418,7 @@ mod tests {
         w.u64(1);
         w.u64(1);
         w.str(""); // error
+        w.u8(0); // message type: Train
         w.u32((MAX_TENSORS_PER_RECORD + 1) as u32);
         let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
         assert!(matches!(err, WireError::TooLong { .. }), "{err:?}");
@@ -953,6 +1433,7 @@ mod tests {
         w.u64(1);
         w.u64(1);
         w.str("");
+        w.u8(0); // message type: Train
         w.u32(1); // one tensor
         w.str("t");
         w.u8(DType::U8.wire_tag());
@@ -972,6 +1453,7 @@ mod tests {
         w.u64(1);
         w.u64(1);
         w.str("");
+        w.u8(0); // message type: Train
         w.u32(1);
         w.str("t");
         w.u8(DType::F32.wire_tag());
@@ -993,7 +1475,7 @@ mod tests {
         w.u64(1);
         w.u64(1);
         w.u64(1);
-        w.u8(0); // Fit
+        w.u8(0); // message type: Train
         w.u32(0); // attempt
         w.u8(0); // redeliver
         w.u32(0); // empty record

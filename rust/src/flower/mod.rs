@@ -3,9 +3,11 @@
 //! model (Flower's RecordDict Message API), and the wire protocol whose
 //! frames the FLARE bridge forwards unmodified.
 
+pub mod analytics;
 pub mod asyncfed;
 pub mod clientapp;
 pub mod dp;
+pub mod grid;
 pub mod message;
 pub mod mods;
 pub mod records;
@@ -16,12 +18,20 @@ pub mod strategy;
 pub mod superlink;
 pub mod supernode;
 
+pub use analytics::{run_query, AnalyticsConfig, AnalyticsReport, HistogramQueryApp};
 pub use asyncfed::{AsyncCommit, AsyncConfig, AsyncState};
-pub use clientapp::{ClientApp, EvalOutput, FitOutput};
+pub use clientapp::{
+    is_unhandled, ClientApp, Context, EvalOutput, FitOutput, MessageApp, MessageHandler, Router,
+    UNHANDLED_MESSAGE_ERR,
+};
 pub use dp::{DpConfig, DpMod};
-pub use message::{ConfigRecord, ConfigValue, FlowerMsg, MetricRecord, TaskIns, TaskRes, TaskType};
+pub use grid::Grid;
+pub use message::{
+    ConfigRecord, ConfigValue, FlowerMsg, Message, MessageType, Metadata, MetricRecord, TaskIns,
+    TaskRes,
+};
 pub use mods::{ClientMod, ModStack};
-pub use records::{ArrayRecord, DType, RecordDict, Tensor};
+pub use records::{ArrayRecord, DType, RecordDict, StateRecord, Tensor};
 pub use run::{drive_runs, run_native, run_shared, FleetOptions, NativeFleet};
 pub use secagg::{SecAggFedAvg, SecAggMod};
 pub use serverapp::{History, Participation, RoundRecord, ServerApp, ServerConfig};

@@ -1,24 +1,107 @@
 //! Flower *Mods*: composable ClientApp middleware (the paper's footnote 2
 //! — "All new features (like Flower Mods) will be built on top of
-//! [Flower Next]"). A [`ClientMod`] wraps fit/evaluate calls; a
-//! [`ModStack`] chains mods around any inner [`ClientApp`] without the
-//! app changing — which is how the differential-privacy and secure-
-//! aggregation features the paper advertises ("rich built-in differential
-//! privacy and secure aggregation support") attach to unmodified apps.
+//! [Flower Next]").
+//!
+//! A [`ClientMod`] has ONE real hook: [`ClientMod::on_message`] — every
+//! message of every type flows through it, so a mod written against the
+//! message surface intercepts fit, evaluate, analytics queries, and
+//! custom verbs alike. The fit/evaluate-specific hooks
+//! ([`ClientMod::on_fit`] / [`ClientMod::on_evaluate`]) still exist for
+//! convenience — the default `on_message` adapts `Train`/`Evaluate`
+//! messages onto them and passes every other type straight through —
+//! which is how the differential-privacy and secure-aggregation mods
+//! attach to unmodified apps exactly as before.
+//!
+//! A [`ModStack`] chains mods around any inner [`MessageApp`] with a
+//! single message-level recursion (the per-hook trampoline-closure
+//! chains of the old design are gone).
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
-use crate::flower::clientapp::{ClientApp, EvalOutput, FitOutput};
-use crate::flower::message::ConfigRecord;
+use crate::flower::clientapp::{ClientApp, Context, EvalOutput, FitOutput, MessageApp, Router};
+use crate::flower::message::{ConfigRecord, Message, MessageType};
 use crate::flower::records::ArrayRecord;
 
 /// The inner continuation a mod calls to proceed down the chain.
+pub type MsgNext<'a> = &'a dyn Fn(&Message, &mut Context) -> anyhow::Result<Message>;
 pub type FitNext<'a> = &'a dyn Fn(&ArrayRecord, &ConfigRecord) -> anyhow::Result<FitOutput>;
 pub type EvalNext<'a> = &'a dyn Fn(&ArrayRecord, &ConfigRecord) -> anyhow::Result<EvalOutput>;
 
 pub trait ClientMod: Send + Sync {
     fn name(&self) -> &'static str;
 
+    /// THE hook: every message — any [`MessageType`] — flows through
+    /// here. The default adapts `Train`/`Evaluate` onto
+    /// [`ClientMod::on_fit`] / [`ClientMod::on_evaluate`] (so classic
+    /// mods keep working untouched) and forwards everything else down
+    /// the chain unchanged. Override to intercept queries and custom
+    /// messages, or to act on metadata/context.
+    fn on_message(
+        &self,
+        msg: &Message,
+        ctx: &mut Context,
+        next: MsgNext,
+    ) -> anyhow::Result<Message> {
+        match &msg.message_type {
+            MessageType::Train => {
+                let ctx_cell = RefCell::new(ctx);
+                // The FitOutput surface cannot express the reply-side
+                // configs / loss channels a message-native Train handler
+                // may use: stash them off the inner reply and graft them
+                // back onto the rebuilt one, so the fit-hook adaptation
+                // is lossless for every reply field the wire carries.
+                let extras: RefCell<Option<(ConfigRecord, f64)>> = RefCell::new(None);
+                let fit_next = |p: &ArrayRecord, c: &ConfigRecord| -> anyhow::Result<FitOutput> {
+                    let mut inner = msg.clone();
+                    inner.content.arrays = p.clone();
+                    inner.content.configs = c.clone();
+                    let mut ctx = ctx_cell.borrow_mut();
+                    let reply = next(&inner, &mut **ctx)?;
+                    *extras.borrow_mut() =
+                        Some((reply.content.configs.clone(), reply.metadata.loss));
+                    FitOutput::from_reply(reply)
+                };
+                let out = self.on_fit(&msg.content.arrays, &msg.content.configs, &fit_next)?;
+                let mut reply = out.into_reply(msg);
+                if let Some((configs, loss)) = extras.borrow_mut().take() {
+                    reply.content.configs = configs;
+                    reply.metadata.loss = loss;
+                }
+                Ok(reply)
+            }
+            MessageType::Evaluate => {
+                let ctx_cell = RefCell::new(ctx);
+                // Same grafting for Evaluate: the EvalOutput surface has
+                // no slot for reply arrays / configs.
+                let extras: RefCell<Option<(ArrayRecord, ConfigRecord)>> = RefCell::new(None);
+                let eval_next = |p: &ArrayRecord, c: &ConfigRecord| -> anyhow::Result<EvalOutput> {
+                    let mut inner = msg.clone();
+                    inner.content.arrays = p.clone();
+                    inner.content.configs = c.clone();
+                    let mut ctx = ctx_cell.borrow_mut();
+                    let reply = next(&inner, &mut **ctx)?;
+                    *extras.borrow_mut() =
+                        Some((reply.content.arrays.clone(), reply.content.configs.clone()));
+                    EvalOutput::from_reply(reply)
+                };
+                let out =
+                    self.on_evaluate(&msg.content.arrays, &msg.content.configs, &eval_next)?;
+                let mut reply = out.into_reply(msg);
+                if let Some((arrays, configs)) = extras.borrow_mut().take() {
+                    reply.content.arrays = arrays;
+                    reply.content.configs = configs;
+                }
+                Ok(reply)
+            }
+            // Query / Custom: mods that don't override on_message are
+            // transparent to non-FL traffic.
+            _ => next(msg, ctx),
+        }
+    }
+
+    /// Fit-shaped convenience hook (default impl over the message
+    /// surface — see [`ClientMod::on_message`]).
     fn on_fit(
         &self,
         parameters: &ArrayRecord,
@@ -28,6 +111,7 @@ pub trait ClientMod: Send + Sync {
         next(parameters, config)
     }
 
+    /// Evaluate-shaped convenience hook.
     fn on_evaluate(
         &self,
         parameters: &ArrayRecord,
@@ -39,46 +123,57 @@ pub trait ClientMod: Send + Sync {
 }
 
 /// An app wrapped in an ordered mod chain (first mod is outermost).
+/// The chain is a single message-level recursion: one
+/// [`ClientMod::on_message`] call per layer, whatever the message type.
 pub struct ModStack {
-    app: Arc<dyn ClientApp>,
+    inner: Arc<dyn MessageApp>,
     mods: Vec<Arc<dyn ClientMod>>,
 }
 
 impl ModStack {
+    /// Wrap a classic fit/evaluate [`ClientApp`] (mounted via
+    /// [`Router::from_client`]) in `mods`.
     pub fn new(app: Arc<dyn ClientApp>, mods: Vec<Arc<dyn ClientMod>>) -> Self {
-        Self { app, mods }
+        Self::over(Arc::new(Router::from_client(app)), mods)
     }
 
-    fn run_fit(
-        &self,
-        idx: usize,
-        parameters: &ArrayRecord,
-        config: &ConfigRecord,
-    ) -> anyhow::Result<FitOutput> {
-        if idx == self.mods.len() {
-            return self.app.fit(parameters, config);
-        }
-        let next = |p: &ArrayRecord, c: &ConfigRecord| self.run_fit(idx + 1, p, c);
-        self.mods[idx].on_fit(parameters, config, &next)
+    /// Wrap ANY message app — e.g. a [`Router`] with query/custom
+    /// handlers — in `mods`: this is how dp/secagg-style middleware
+    /// intercepts non-FL traffic too.
+    pub fn over(inner: Arc<dyn MessageApp>, mods: Vec<Arc<dyn ClientMod>>) -> Self {
+        Self { inner, mods }
     }
 
-    fn run_eval(
-        &self,
-        idx: usize,
-        parameters: &ArrayRecord,
-        config: &ConfigRecord,
-    ) -> anyhow::Result<EvalOutput> {
+    fn run(&self, idx: usize, msg: &Message, ctx: &mut Context) -> anyhow::Result<Message> {
         if idx == self.mods.len() {
-            return self.app.evaluate(parameters, config);
+            return self.inner.handle(msg, ctx);
         }
-        let next = |p: &ArrayRecord, c: &ConfigRecord| self.run_eval(idx + 1, p, c);
-        self.mods[idx].on_evaluate(parameters, config, &next)
+        let next = |m: &Message, c: &mut Context| self.run(idx + 1, m, c);
+        self.mods[idx].on_message(msg, ctx, &next)
     }
 }
 
+impl MessageApp for ModStack {
+    fn handle(&self, msg: &Message, ctx: &mut Context) -> anyhow::Result<Message> {
+        self.run(0, msg, ctx)
+    }
+
+    fn handles(&self, message_type: &MessageType) -> bool {
+        self.inner.handles(message_type)
+    }
+}
+
+/// Compat surface: a ModStack still works anywhere a fit/evaluate
+/// [`ClientApp`] is expected (the calls are synthesized as one-shot
+/// `Train`/`Evaluate` messages with a throwaway context — byte-identical
+/// results; apps that need the PERSISTENT context run behind the
+/// message surface instead).
 impl ClientApp for ModStack {
     fn fit(&self, parameters: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<FitOutput> {
-        self.run_fit(0, parameters, config)
+        let node = config.get_i64("node_id").unwrap_or(0) as u64;
+        let ins = Message::train(node, parameters.clone(), config.clone());
+        let mut ctx = Context::new(0, node);
+        FitOutput::from_reply(self.handle(&ins, &mut ctx)?)
     }
 
     fn evaluate(
@@ -86,7 +181,10 @@ impl ClientApp for ModStack {
         parameters: &ArrayRecord,
         config: &ConfigRecord,
     ) -> anyhow::Result<EvalOutput> {
-        self.run_eval(0, parameters, config)
+        let node = config.get_i64("node_id").unwrap_or(0) as u64;
+        let ins = Message::evaluate(node, parameters.clone(), config.clone());
+        let mut ctx = Context::new(0, node);
+        EvalOutput::from_reply(self.handle(&ins, &mut ctx)?)
     }
 }
 
@@ -94,6 +192,7 @@ impl ClientApp for ModStack {
 mod tests {
     use super::*;
     use crate::flower::clientapp::ArithmeticClient;
+    use crate::flower::records::{ConfigValue, RecordDict};
 
     /// Mod that scales returned parameters by a factor.
     struct ScaleMod(f32);
@@ -137,10 +236,12 @@ mod tests {
     #[test]
     fn empty_stack_is_transparent() {
         let app = ModStack::new(Arc::new(ArithmeticClient { delta: 1.0, n: 2 }), vec![]);
-        let out = app.fit(&ArrayRecord::from_flat(&[1.0]), &vec![]).unwrap();
+        let out = app
+            .fit(&ArrayRecord::from_flat(&[1.0]), &ConfigRecord::new())
+            .unwrap();
         assert_eq!(out.parameters.to_flat(), vec![2.0]);
         let ev = app
-            .evaluate(&ArrayRecord::from_flat(&[4.0]), &vec![])
+            .evaluate(&ArrayRecord::from_flat(&[4.0]), &ConfigRecord::new())
             .unwrap();
         assert_eq!(ev.loss, 4.0);
     }
@@ -153,7 +254,9 @@ mod tests {
             Arc::new(ArithmeticClient { delta: 1.0, n: 2 }),
             vec![Arc::new(ScaleMod(2.0)), Arc::new(TagMod)],
         );
-        let out = app.fit(&ArrayRecord::from_flat(&[1.0]), &vec![]).unwrap();
+        let out = app
+            .fit(&ArrayRecord::from_flat(&[1.0]), &ConfigRecord::new())
+            .unwrap();
         assert_eq!(out.parameters.to_flat(), vec![4.0]);
         assert!(out.metrics.iter().any(|(k, _)| k == "tagged"));
     }
@@ -178,6 +281,103 @@ mod tests {
             Arc::new(ArithmeticClient { delta: 1.0, n: 2 }),
             vec![Arc::new(FailMod)],
         );
-        assert!(app.fit(&ArrayRecord::from_flat(&[1.0]), &vec![]).is_err());
+        assert!(app
+            .fit(&ArrayRecord::from_flat(&[1.0]), &ConfigRecord::new())
+            .is_err());
+    }
+
+    /// A message-level mod: counts EVERY message type it sees (fit,
+    /// eval, query, custom) in the persistent context — the "mods
+    /// intercept Query and custom messages for free" property.
+    struct MeterMod;
+
+    impl ClientMod for MeterMod {
+        fn name(&self) -> &'static str {
+            "meter"
+        }
+        fn on_message(
+            &self,
+            msg: &Message,
+            ctx: &mut Context,
+            next: MsgNext,
+        ) -> anyhow::Result<Message> {
+            ctx.state
+                .bump(format!("seen_{}", msg.message_type.name()), 1);
+            next(msg, ctx)
+        }
+    }
+
+    #[test]
+    fn message_level_mod_sees_all_types() {
+        let router = Router::new().on_query(
+            |msg: &Message, _ctx: &mut Context| -> anyhow::Result<Message> {
+                Ok(msg.reply(RecordDict::default()).with_examples(1))
+            },
+        );
+        let app = ModStack::over(Arc::new(router), vec![Arc::new(MeterMod)]);
+        let mut ctx = Context::new(1, 3);
+        let q = Message::query(3, ConfigRecord::new());
+        app.handle(&q, &mut ctx).unwrap();
+        app.handle(&q, &mut ctx).unwrap();
+        assert_eq!(ctx.state.get_i64("seen_query"), Some(2));
+        // Unhandled custom type: the mod still saw it, the router's
+        // typed error propagates.
+        let c = Message::new(MessageType::custom("nope"), 3, RecordDict::default());
+        assert!(app.handle(&c, &mut ctx).is_err());
+        assert_eq!(ctx.state.get_i64("seen_nope"), Some(1));
+    }
+
+    #[test]
+    fn default_hook_preserves_reply_configs_and_loss_through_mods() {
+        // A message-native Train handler using the reply-side configs /
+        // loss channels, wrapped in a mod that only implements on_fit
+        // hooks (TagMod): the default Train adaptation must not strip
+        // those channels.
+        use crate::flower::records::ArrayRecord as AR;
+        let router = Router::new().on_train(
+            |msg: &Message, _ctx: &mut Context| -> anyhow::Result<Message> {
+                let mut out = ConfigRecord::new();
+                out.insert("schema", ConfigValue::Str("v2".into()));
+                let mut reply = msg.reply(crate::flower::records::RecordDict {
+                    arrays: msg.content.arrays.clone(),
+                    metrics: crate::flower::records::MetricRecord::new(),
+                    configs: out,
+                });
+                reply = reply.with_examples(3).with_loss(0.125);
+                Ok(reply)
+            },
+        );
+        let app = ModStack::over(Arc::new(router), vec![Arc::new(TagMod)]);
+        let mut ctx = Context::new(1, 2);
+        let ins = Message::train(2, AR::from_flat(&[1.0]), ConfigRecord::new());
+        let reply = app.handle(&ins, &mut ctx).unwrap();
+        assert_eq!(reply.content.configs.get_str("schema"), Some("v2"));
+        assert_eq!(reply.metadata.loss, 0.125);
+        assert_eq!(reply.metadata.num_examples, 3);
+        assert!(
+            reply.content.metrics.iter().any(|(k, _)| k == "tagged"),
+            "the on_fit hook still ran"
+        );
+    }
+
+    #[test]
+    fn fit_hooks_run_via_message_chain_with_context() {
+        // An on_fit mod (ScaleMod) composed with a message-level mod
+        // (MeterMod): both layers apply, in order, over one message
+        // recursion.
+        let app = ModStack::new(
+            Arc::new(ArithmeticClient { delta: 1.0, n: 2 }),
+            vec![Arc::new(MeterMod), Arc::new(ScaleMod(2.0))],
+        );
+        let mut ctx = Context::new(1, 4);
+        let ins = Message::train(
+            4,
+            ArrayRecord::from_flat(&[1.0]),
+            ConfigRecord::from_pairs(vec![("node_id".to_string(), ConfigValue::I64(4))]),
+        );
+        let reply = app.handle(&ins, &mut ctx).unwrap();
+        let out = FitOutput::from_reply(reply).unwrap();
+        assert_eq!(out.parameters.to_flat(), vec![4.0]);
+        assert_eq!(ctx.state.get_i64("seen_train"), Some(1));
     }
 }

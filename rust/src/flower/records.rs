@@ -21,6 +21,8 @@
 //! payload bytes, so NaN payloads and signed zeros are preserved
 //! end-to-end.
 
+use std::collections::HashMap;
+
 use crate::util::bytes::{Bytes, WireError};
 
 // ---------------------------------------------------------------------------
@@ -37,31 +39,221 @@ pub enum ConfigValue {
     Bool(bool),
 }
 
-pub type ConfigRecord = Vec<(String, ConfigValue)>;
+/// Ordered, key-indexed config entries (Flower's `ConfigRecord`).
+///
+/// Iteration order is **deterministic** — entries keep their insertion
+/// order, which is also the wire encoding order (so re-keying a record
+/// never reorders frames). Lookups go through an O(1) key index;
+/// [`ConfigRecord::insert`] replaces an existing key **in place**,
+/// preserving its position.
+///
+/// Derefs to the underlying `[(String, ConfigValue)]` slice, so
+/// `len()`, `iter()`, indexing, and `for (k, v) in &record` all behave
+/// like the `Vec<(String, ConfigValue)>` this type replaced.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigRecord {
+    entries: Vec<(String, ConfigValue)>,
+    /// key -> position of its FIRST occurrence (wire decode may carry
+    /// duplicate keys from hostile peers; lookups see the first, and
+    /// entries are preserved verbatim for byte-exact re-encoding).
+    index: HashMap<String, usize>,
+}
 
-/// Metric records are (name, f64) pairs (Flower's `MetricRecord`).
-pub type MetricRecord = Vec<(String, f64)>;
+impl ConfigRecord {
+    pub fn new() -> ConfigRecord {
+        ConfigRecord::default()
+    }
 
+    /// Build from pairs, preserving order (first occurrence wins the
+    /// index on duplicate keys).
+    pub fn from_pairs(pairs: impl IntoIterator<Item = (String, ConfigValue)>) -> ConfigRecord {
+        let mut rec = ConfigRecord::new();
+        for (k, v) in pairs {
+            if !rec.index.contains_key(&k) {
+                rec.index.insert(k.clone(), rec.entries.len());
+            }
+            rec.entries.push((k, v));
+        }
+        rec
+    }
+
+    /// Set `key` to `value`: replaces an existing entry in place
+    /// (keeping its position — deterministic iteration order), appends
+    /// otherwise.
+    pub fn insert(&mut self, key: impl Into<String>, value: ConfigValue) {
+        let key = key.into();
+        match self.index.get(&key) {
+            Some(&i) => self.entries[i].1 = value,
+            None => {
+                self.index.insert(key.clone(), self.entries.len());
+                self.entries.push((key, value));
+            }
+        }
+    }
+
+    /// Compat shim for the `Vec` API this type replaced. NOTE the
+    /// deliberate semantic upgrade on duplicate keys: where `Vec::push`
+    /// appended a shadowed second entry (lookups kept returning the
+    /// first), this replaces the existing value in place — the LAST
+    /// push wins, and no dead duplicate rides the wire.
+    pub fn push(&mut self, pair: (String, ConfigValue)) {
+        self.insert(pair.0, pair.1);
+    }
+
+    /// Indexed lookup (O(1), first occurrence on duplicate keys).
+    pub fn get(&self, key: &str) -> Option<&ConfigValue> {
+        self.index.get(key).map(|&i| &self.entries[i].1)
+    }
+
+    /// `key` as f64 (F64 direct; I64 cast).
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(ConfigValue::F64(x)) => Some(*x),
+            Some(ConfigValue::I64(x)) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        match self.get(key) {
+            Some(ConfigValue::I64(x)) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(ConfigValue::Str(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(ConfigValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl std::ops::Deref for ConfigRecord {
+    type Target = [(String, ConfigValue)];
+    fn deref(&self) -> &Self::Target {
+        &self.entries
+    }
+}
+
+impl From<Vec<(String, ConfigValue)>> for ConfigRecord {
+    fn from(pairs: Vec<(String, ConfigValue)>) -> ConfigRecord {
+        ConfigRecord::from_pairs(pairs)
+    }
+}
+
+impl FromIterator<(String, ConfigValue)> for ConfigRecord {
+    fn from_iter<I: IntoIterator<Item = (String, ConfigValue)>>(iter: I) -> ConfigRecord {
+        ConfigRecord::from_pairs(iter)
+    }
+}
+
+impl<'a> IntoIterator for &'a ConfigRecord {
+    type Item = &'a (String, ConfigValue);
+    type IntoIter = std::slice::Iter<'a, (String, ConfigValue)>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.entries.iter()
+    }
+}
+
+/// Ordered, key-indexed (name, f64) metrics (Flower's `MetricRecord`).
+/// Same shape and guarantees as [`ConfigRecord`]: deterministic
+/// (insertion) iteration order — the wire order — with an O(1) key
+/// index, dereferencing to the underlying `[(String, f64)]` slice.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricRecord {
+    entries: Vec<(String, f64)>,
+    index: HashMap<String, usize>,
+}
+
+impl MetricRecord {
+    pub fn new() -> MetricRecord {
+        MetricRecord::default()
+    }
+
+    pub fn from_pairs(pairs: impl IntoIterator<Item = (String, f64)>) -> MetricRecord {
+        let mut rec = MetricRecord::new();
+        for (k, v) in pairs {
+            if !rec.index.contains_key(&k) {
+                rec.index.insert(k.clone(), rec.entries.len());
+            }
+            rec.entries.push((k, v));
+        }
+        rec
+    }
+
+    /// Set `key` to `value` (replace in place, or append).
+    pub fn insert(&mut self, key: impl Into<String>, value: f64) {
+        let key = key.into();
+        match self.index.get(&key) {
+            Some(&i) => self.entries[i].1 = value,
+            None => {
+                self.index.insert(key.clone(), self.entries.len());
+                self.entries.push((key, value));
+            }
+        }
+    }
+
+    /// Compat shim for the `Vec` API this type replaced (duplicate
+    /// keys replace in place — last push wins, see
+    /// [`ConfigRecord::push`]).
+    pub fn push(&mut self, pair: (String, f64)) {
+        self.insert(pair.0, pair.1);
+    }
+
+    /// Indexed lookup (O(1)).
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.index.get(key).map(|&i| self.entries[i].1)
+    }
+}
+
+impl std::ops::Deref for MetricRecord {
+    type Target = [(String, f64)];
+    fn deref(&self) -> &Self::Target {
+        &self.entries
+    }
+}
+
+impl From<Vec<(String, f64)>> for MetricRecord {
+    fn from(pairs: Vec<(String, f64)>) -> MetricRecord {
+        MetricRecord::from_pairs(pairs)
+    }
+}
+
+impl FromIterator<(String, f64)> for MetricRecord {
+    fn from_iter<I: IntoIterator<Item = (String, f64)>>(iter: I) -> MetricRecord {
+        MetricRecord::from_pairs(iter)
+    }
+}
+
+impl<'a> IntoIterator for &'a MetricRecord {
+    type Item = &'a (String, f64);
+    type IntoIter = std::slice::Iter<'a, (String, f64)>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.entries.iter()
+    }
+}
+
+#[deprecated(note = "use ConfigRecord::get_f64")]
 pub fn config_get_f64(c: &ConfigRecord, key: &str) -> Option<f64> {
-    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
-        ConfigValue::F64(x) => Some(*x),
-        ConfigValue::I64(x) => Some(*x as f64),
-        _ => None,
-    })
+    c.get_f64(key)
 }
 
+#[deprecated(note = "use ConfigRecord::get_i64")]
 pub fn config_get_i64(c: &ConfigRecord, key: &str) -> Option<i64> {
-    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
-        ConfigValue::I64(x) => Some(*x),
-        _ => None,
-    })
+    c.get_i64(key)
 }
 
+#[deprecated(note = "use ConfigRecord::get_str")]
 pub fn config_get_str<'a>(c: &'a ConfigRecord, key: &str) -> Option<&'a str> {
-    c.iter().find(|(k, _)| k == key).and_then(|(_, v)| match v {
-        ConfigValue::Str(s) => Some(s.as_str()),
-        _ => None,
-    })
+    c.get_str(key)
 }
 
 // ---------------------------------------------------------------------------
@@ -570,9 +762,90 @@ impl RecordDict {
     pub fn from_arrays(arrays: ArrayRecord) -> RecordDict {
         RecordDict {
             arrays,
-            metrics: Vec::new(),
-            configs: Vec::new(),
+            metrics: MetricRecord::new(),
+            configs: ConfigRecord::new(),
         }
+    }
+
+    pub fn from_configs(configs: ConfigRecord) -> RecordDict {
+        RecordDict {
+            arrays: ArrayRecord::new(),
+            metrics: MetricRecord::new(),
+            configs,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StateRecord
+// ---------------------------------------------------------------------------
+
+/// Per-node mutable state that survives across rounds (Flower's
+/// `Context.state`). A SuperNode keeps one per run and hands it to every
+/// message handler — this is what makes stateful clients (counters,
+/// personalization layers, warm optimizer state) possible without any
+/// wire traffic: the state never leaves the node.
+///
+/// Scalar entries live in a [`ConfigRecord`]; tensor entries (e.g. a
+/// warm optimizer moment) are name-keyed with replace-on-set semantics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StateRecord {
+    configs: ConfigRecord,
+    tensors: Vec<Tensor>,
+}
+
+impl StateRecord {
+    pub fn new() -> StateRecord {
+        StateRecord::default()
+    }
+
+    /// Set a scalar entry (replace or append, like
+    /// [`ConfigRecord::insert`]).
+    pub fn set(&mut self, key: impl Into<String>, value: ConfigValue) {
+        self.configs.insert(key, value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ConfigValue> {
+        self.configs.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.configs.get_f64(key)
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.configs.get_i64(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.configs.get_str(key)
+    }
+
+    /// Increment the I64 counter at `key` by `by` (missing counts as 0)
+    /// and return the new value — the one-liner for "how many times has
+    /// this node seen X".
+    pub fn bump(&mut self, key: impl Into<String>, by: i64) -> i64 {
+        let key = key.into();
+        let next = self.configs.get_i64(&key).unwrap_or(0) + by;
+        self.configs.insert(key, ConfigValue::I64(next));
+        next
+    }
+
+    /// Store a tensor under its name (replacing any previous tensor of
+    /// that name — state is a map, not a log).
+    pub fn set_tensor(&mut self, tensor: Tensor) {
+        match self.tensors.iter_mut().find(|t| t.name() == tensor.name()) {
+            Some(slot) => *slot = tensor,
+            None => self.tensors.push(tensor),
+        }
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name() == name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty() && self.tensors.is_empty()
     }
 }
 
@@ -695,5 +968,76 @@ mod tests {
         assert_eq!(rec.len(), 1);
         assert_eq!(rec.tensors()[0].name(), FLAT_TENSOR);
         assert_eq!(compat::to_flat(&rec), flat);
+    }
+
+    #[test]
+    fn config_record_indexed_get_and_in_place_insert() {
+        let mut c = ConfigRecord::from_pairs(vec![
+            ("lr".to_string(), ConfigValue::F64(0.1)),
+            ("mode".to_string(), ConfigValue::Str("iid".into())),
+            ("epochs".to_string(), ConfigValue::I64(2)),
+        ]);
+        assert_eq!(c.get_f64("lr"), Some(0.1));
+        assert_eq!(c.get_f64("epochs"), Some(2.0), "I64 casts for get_f64");
+        assert_eq!(c.get_i64("epochs"), Some(2));
+        assert_eq!(c.get_str("mode"), Some("iid"));
+        assert_eq!(c.get("missing"), None);
+        // Replace keeps the key's position — iteration order is
+        // deterministic under re-keying.
+        c.insert("mode", ConfigValue::Str("skew".into()));
+        let keys: Vec<&str> = c.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["lr", "mode", "epochs"]);
+        assert_eq!(c.get_str("mode"), Some("skew"));
+        assert_eq!(c.len(), 3);
+        // Append lands at the end.
+        c.push(("new".to_string(), ConfigValue::Bool(true)));
+        assert_eq!(c.get_bool("new"), Some(true));
+        assert_eq!(c.last().unwrap().0, "new");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_config_shims_still_work() {
+        let c = ConfigRecord::from_pairs(vec![
+            ("lr".to_string(), ConfigValue::F64(0.5)),
+            ("mode".to_string(), ConfigValue::Str("iid".into())),
+        ]);
+        assert_eq!(config_get_f64(&c, "lr"), Some(0.5));
+        assert_eq!(config_get_i64(&c, "lr"), None);
+        assert_eq!(config_get_str(&c, "mode"), Some("iid"));
+    }
+
+    #[test]
+    fn metric_record_indexed_and_ordered() {
+        let mut m = MetricRecord::from_pairs(vec![
+            ("loss".to_string(), 0.5),
+            ("accuracy".to_string(), 0.9),
+        ]);
+        assert_eq!(m.get("accuracy"), Some(0.9));
+        m.insert("loss", 0.25);
+        assert_eq!(m.get("loss"), Some(0.25));
+        let keys: Vec<&str> = m.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["loss", "accuracy"], "replace keeps position");
+        // Slice view works like the old Vec.
+        assert_eq!(m[0].1, 0.25);
+        let collected: MetricRecord = vec![("a".to_string(), 1.0)].into_iter().collect();
+        assert_eq!(collected.get("a"), Some(1.0));
+    }
+
+    #[test]
+    fn state_record_counters_and_tensors() {
+        let mut s = StateRecord::new();
+        assert!(s.is_empty());
+        assert_eq!(s.bump("rounds_seen", 1), 1);
+        assert_eq!(s.bump("rounds_seen", 1), 2);
+        assert_eq!(s.get_i64("rounds_seen"), Some(2));
+        s.set("name", ConfigValue::Str("node-a".into()));
+        assert_eq!(s.get_str("name"), Some("node-a"));
+        // Tensor slots replace by name.
+        s.set_tensor(Tensor::from_f32("momentum", vec![2], &[1.0, 2.0]));
+        s.set_tensor(Tensor::from_f32("momentum", vec![2], &[3.0, 4.0]));
+        assert_eq!(s.tensor("momentum").unwrap().get_f64(1), 4.0);
+        assert!(s.tensor("absent").is_none());
+        assert!(!s.is_empty());
     }
 }

@@ -10,7 +10,8 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::flower::clientapp::ClientApp;
+use crate::flower::clientapp::{ClientApp, MessageApp, Router};
+use crate::flower::grid::Grid;
 use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::superlink::{LinkConfig, SuperLink};
 use crate::flower::supernode::{NativeConnector, SuperNode, SuperNodeConfig};
@@ -62,12 +63,36 @@ impl NativeFleet {
         opts: FleetOptions,
         wrap: impl Fn(usize, inproc::InprocEndpoint) -> Arc<dyn Endpoint>,
     ) -> anyhow::Result<NativeFleet> {
+        let apps = client_apps
+            .into_iter()
+            .map(|app| Arc::new(Router::from_client(app)) as Arc<dyn MessageApp>)
+            .collect();
+        Self::start_message_apps(apps, opts, wrap)
+    }
+
+    /// Spawn a fleet of message-native nodes: one SuperNode per
+    /// [`Router`] (query handlers, custom verbs, stateful apps — the
+    /// analytics path).
+    pub fn start_routers(routers: Vec<Router>) -> anyhow::Result<NativeFleet> {
+        let apps = routers
+            .into_iter()
+            .map(|r| Arc::new(r) as Arc<dyn MessageApp>)
+            .collect();
+        Self::start_message_apps(apps, FleetOptions::default(), |_, ep| Arc::new(ep))
+    }
+
+    /// The general form: one SuperNode per [`MessageApp`].
+    pub fn start_message_apps(
+        apps: Vec<Arc<dyn MessageApp>>,
+        opts: FleetOptions,
+        wrap: impl Fn(usize, inproc::InprocEndpoint) -> Arc<dyn Endpoint>,
+    ) -> anyhow::Result<NativeFleet> {
         let link = SuperLink::with_config(opts.link);
         let mut handles = Vec::new();
-        for (i, app) in client_apps.into_iter().enumerate() {
+        for (i, app) in apps.into_iter().enumerate() {
             let (client_end, server_end) = inproc::pair(&format!("supernode-{i}"), "superlink");
             link.serve_endpoint(Arc::new(server_end));
-            let mut node = SuperNode::new(
+            let mut node = SuperNode::with_app(
                 Box::new(NativeConnector::new(
                     wrap(i, client_end),
                     opts.connector_timeout,
@@ -117,15 +142,15 @@ pub fn run_native(
     result
 }
 
-/// Drive several ServerApps CONCURRENTLY against one existing link, one
+/// Drive several ServerApps CONCURRENTLY against one existing grid, one
 /// thread per run. Returns each run's history, sorted by run id; the
-/// first error (in join order) wins. The link is NOT retired — the
+/// first error (in join order) wins. The grid is NOT retired — the
 /// caller owns its lifecycle.
-pub fn drive_runs(
-    link: &Arc<SuperLink>,
+pub fn drive_runs<G: Grid + ?Sized>(
+    grid: &G,
     server_apps: Vec<(u64, ServerApp)>,
 ) -> anyhow::Result<Vec<(u64, History)>> {
-    drive_runs_with(link, server_apps, |_: u64, _: &History| {})
+    drive_runs_with(grid, server_apps, |_: u64, _: &History| {})
 }
 
 /// [`drive_runs`] with a per-run completion callback, invoked from the
@@ -133,8 +158,8 @@ pub fn drive_runs(
 /// runs finish. This is what gives per-run makespan its meaning: the
 /// callback observes each run's true completion, not the barrier at the
 /// end.
-pub fn drive_runs_with(
-    link: &Arc<SuperLink>,
+pub fn drive_runs_with<G: Grid + ?Sized>(
+    grid: &G,
     server_apps: Vec<(u64, ServerApp)>,
     on_done: impl Fn(u64, &History) + Send + Sync,
 ) -> anyhow::Result<Vec<(u64, History)>> {
@@ -142,9 +167,8 @@ pub fn drive_runs_with(
     std::thread::scope(|s| {
         let mut joins = Vec::new();
         for (run_id, mut app) in server_apps {
-            let link = link.clone();
             joins.push(s.spawn(move || -> anyhow::Result<(u64, History)> {
-                let history = app.run(&link, None, run_id)?;
+                let history = app.run(grid, None, run_id)?;
                 on_done(run_id, &history);
                 Ok((run_id, history))
             }));

@@ -28,7 +28,7 @@
 //! masked record is exactly the masked flat vector re-segmented.
 
 use crate::flower::clientapp::FitOutput;
-use crate::flower::message::{config_get_i64, config_get_str, ConfigRecord};
+use crate::flower::message::ConfigRecord;
 use crate::flower::mods::{ClientMod, FitNext};
 use crate::flower::records::{ArrayRecord, DType, Tensor};
 use crate::flower::strategy::{FitAgg, FitRes, Strategy};
@@ -71,17 +71,20 @@ impl ClientMod for SecAggMod {
         next: FitNext,
     ) -> anyhow::Result<FitOutput> {
         let out = next(parameters, config)?;
-        let me = config_get_i64(config, "node_id")
+        let me = config
+            .get_i64("node_id")
             .ok_or_else(|| anyhow::anyhow!("secagg: missing node_id in config"))?
             as u64;
-        let cohort: Vec<u64> = config_get_str(config, "cohort")
+        let cohort: Vec<u64> = config
+            .get_str("cohort")
             .ok_or_else(|| anyhow::anyhow!("secagg: missing cohort in config"))?
             .split(',')
             .filter(|s| !s.is_empty())
             .map(|s| s.parse::<u64>())
             .collect::<Result<_, _>>()?;
         anyhow::ensure!(cohort.contains(&me), "secagg: node {me} not in cohort");
-        let round_seed = config_get_i64(config, SECAGG_SEED_KEY)
+        let round_seed = config
+            .get_i64(SECAGG_SEED_KEY)
             .ok_or_else(|| anyhow::anyhow!("secagg: missing round seed"))?
             as u64;
 
@@ -173,7 +176,7 @@ impl Strategy for SecAggFedAvg {
     }
 
     fn configure_fit(&mut self, round: u64) -> ConfigRecord {
-        vec![
+        ConfigRecord::from_pairs(vec![
             (
                 SECAGG_SEED_KEY.to_string(),
                 crate::flower::message::ConfigValue::I64(self.round_seed(round) as i64),
@@ -182,7 +185,7 @@ impl Strategy for SecAggFedAvg {
                 "secagg".to_string(),
                 crate::flower::message::ConfigValue::Bool(true),
             ),
-        ]
+        ])
     }
 
     fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
@@ -289,11 +292,11 @@ mod tests {
     use std::sync::Arc;
 
     fn fit_config(me: u64, cohort: &str, seed: i64) -> ConfigRecord {
-        vec![
+        ConfigRecord::from_pairs(vec![
             ("node_id".into(), ConfigValue::I64(me as i64)),
             ("cohort".into(), ConfigValue::Str(cohort.into())),
             (SECAGG_SEED_KEY.into(), ConfigValue::I64(seed)),
-        ]
+        ])
     }
 
     fn masked_update(
@@ -313,7 +316,7 @@ mod tests {
             node_id: me,
             parameters: out.parameters,
             num_examples: out.num_examples,
-            metrics: vec![],
+            metrics: crate::flower::records::MetricRecord::new(),
         }
     }
 
@@ -347,7 +350,7 @@ mod tests {
                 node_id: id,
                 parameters: params.map_f64(|_, _, p| p + d),
                 num_examples: n,
-                metrics: vec![],
+                metrics: crate::flower::records::MetricRecord::new(),
             })
             .collect();
         let want = host_weighted_mean(&plain);

@@ -1,14 +1,20 @@
-//! Flower ServerApp (paper Listing 1): drives FL rounds against the
-//! SuperLink using a [`Strategy`]. Produces a [`History`] — the loss /
+//! Flower ServerApp (paper Listing 1): drives FL rounds against a
+//! [`Grid`] using a [`Strategy`]. Produces a [`History`] — the loss /
 //! accuracy curves compared in Fig. 5 — and optionally streams round
 //! metrics through FLARE experiment tracking (§5.2 hybrid mode).
 //!
-//! Fit results are **streamed**: each `TaskRes` is handed to the
+//! The ServerApp never touches the SuperLink directly: every push and
+//! every reply goes through the [`Grid`] trait, so the same driver code
+//! runs natively (the SuperLink IS the grid) and bridged
+//! ([`crate::bridge::BridgedGrid`] — the FLARE LGC hop chain is an
+//! implementation detail below this line, exactly the paper's Fig. 4).
+//!
+//! Fit results are **streamed**: each reply [`Message`] is handed to the
 //! strategy's incremental accumulator as it arrives
-//! ([`SuperLink::for_each_result`]), so aggregation work overlaps
-//! stragglers and the driver never buffers the whole cohort itself.
+//! ([`Grid::for_each_reply`]), so aggregation work overlaps stragglers
+//! and the driver never buffers the whole cohort itself.
 //! Each ServerApp drives ONE run (its `run_id`) and may share the
-//! SuperLink — and its SuperNode fleet — with any number of concurrent
+//! grid — and its SuperNode fleet — with any number of concurrent
 //! ServerApps; finishing this run leaves the others untouched.
 //!
 //! Determinism: client sampling uses a seeded PRNG keyed by (seed,
@@ -22,17 +28,16 @@
 //! to N clients clones the record N times, which is N cheap reference
 //! bumps on the shared tensor buffers — not N payload copies.
 
-use std::sync::Arc;
-use std::time::Duration;
-
 use std::collections::HashSet;
+use std::time::Duration;
 
 use crate::flare::tracking::SummaryWriter;
 use crate::flower::asyncfed::AsyncCommit;
-use crate::flower::message::{ConfigValue, MetricRecord, TaskIns, TaskType};
+use crate::flower::grid::Grid;
+use crate::flower::message::{ConfigValue, Message, MetricRecord};
 use crate::flower::records::ArrayRecord;
 use crate::flower::strategy::{EvalRes, FitRes, Strategy};
-use crate::flower::superlink::{CompletionPolicy, ResultTimeout, SuperLink};
+use crate::flower::superlink::{CompletionPolicy, ResultTimeout};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -220,40 +225,41 @@ impl ServerApp {
         idx.into_iter().map(|i| nodes[i]).collect()
     }
 
-    /// Run all rounds against the SuperLink. `tracker` streams round
+    /// Run all rounds against the grid (native: pass `&link`; bridged:
+    /// pass the [`crate::bridge::BridgedGrid`]). `tracker` streams round
     /// metrics via FLARE experiment tracking when present (§5.2).
     ///
-    /// Opens run `run_id` on the link and finishes it on every exit
-    /// path — the link (and its node fleet) outlives the run and keeps
-    /// serving other ServerApps. Run ids must be unique per link.
-    pub fn run(
+    /// Opens run `run_id` on the grid and finishes it on every exit
+    /// path — the grid (and its node fleet) outlives the run and keeps
+    /// serving other ServerApps. Run ids must be unique per grid.
+    pub fn run<G: Grid + ?Sized>(
         &mut self,
-        link: &Arc<SuperLink>,
+        grid: &G,
         tracker: Option<&SummaryWriter>,
         run_id: u64,
     ) -> anyhow::Result<History> {
-        link.register_run(run_id);
+        grid.open_run(run_id);
         // Fail fast on id reuse: a finished run's id stays finished, so
         // proceeding would only time out waiting for refused tasks.
         anyhow::ensure!(
-            link.run_active(run_id),
+            grid.run_active(run_id),
             "run id {run_id} already finished on this link — run ids must be unique per link"
         );
-        let result = self.run_rounds(link, tracker, run_id);
+        let result = self.run_rounds(grid, tracker, run_id);
         // Scope the shutdown to THIS run: concurrent runs sharing the
-        // link are untouched.
-        link.finish(run_id);
+        // grid are untouched.
+        grid.close_run(run_id);
         result
     }
 
-    fn run_rounds(
+    fn run_rounds<G: Grid + ?Sized>(
         &mut self,
-        link: &Arc<SuperLink>,
+        grid: &G,
         tracker: Option<&SummaryWriter>,
         run_id: u64,
     ) -> anyhow::Result<History> {
         let cfg = self.config.clone();
-        link.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
+        grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
         let mut params = self.initial_parameters.clone();
         let mut history = History::default();
 
@@ -277,8 +283,8 @@ impl ServerApp {
             // Reap first so this round's cohort is sampled from nodes
             // that are actually alive — a task pushed to an already-dead
             // node would otherwise strand until the grace/timeout.
-            link.reap_expired();
-            let nodes = link.nodes();
+            grid.reap();
+            let nodes = grid.node_ids();
             anyhow::ensure!(
                 nodes.len() >= round_floor,
                 "round {round}: only {} nodes connected",
@@ -302,23 +308,13 @@ impl ServerApp {
                 .map(|&node| {
                     let mut config = fit_cfg.clone();
                     config.push(("node_id".to_string(), ConfigValue::I64(node as i64)));
-                    link.push_task(
-                        node,
-                        TaskIns {
-                            task_id: 0,
-                            run_id,
-                            round,
-                            task_type: TaskType::Fit,
-                            attempt: 0,
-                            // Node-affine: each node trains on ITS data.
-                            redeliver: false,
-                            // Sync rounds are version-less (the async
-                            // driver is the only version author).
-                            model_version: 0,
-                            // O(1) per node: records share tensor buffers.
-                            parameters: params.clone(),
-                            config,
-                        },
+                    // Train message defaults: node-affine (no
+                    // redelivery — each node trains on ITS data) and
+                    // version-less (sync rounds; the async driver is
+                    // the only version author). Cloning `params` is
+                    // O(1) per node: records share tensor buffers.
+                    grid.push_message(
+                        Message::train(node, params.clone(), config).for_round(run_id, round),
                     )
                 })
                 .collect();
@@ -343,31 +339,38 @@ impl ServerApp {
                 );
             }
             let fit_policy = phase_policy(quorum, task_ids.len(), cfg.straggler_grace);
-            let wait =
-                link.for_each_result_policy(run_id, &task_ids, cfg.round_timeout, fit_policy, |r| {
+            let wait = grid.for_each_reply(
+                run_id,
+                &task_ids,
+                cfg.round_timeout,
+                fit_policy,
+                &mut |r: Message| {
+                    let node = r.metadata.src_node_id;
                     if !r.error.is_empty() {
                         if accept_failures {
-                            log::warn!("round {round}: node {} failed: {}", r.node_id, r.error);
+                            log::warn!("round {round}: node {node} failed: {}", r.error);
                             return Ok(());
                         }
-                        anyhow::bail!("round {round}: node {} failed: {}", r.node_id, r.error);
+                        anyhow::bail!("round {round}: node {node} failed: {}", r.error);
                     }
-                    if !seen_nodes.insert(r.node_id) {
+                    if !seen_nodes.insert(node) {
                         crate::telemetry::bump("serverapp.duplicate_node_results_skipped", 1);
                         log::warn!(
-                            "round {round}: node {} delivered a second (redelivered) result — skipped",
-                            r.node_id
+                            "round {round}: node {node} delivered a second \
+                             (redelivered) result — skipped"
                         );
                         return Ok(());
                     }
-                    fit_meta.push((r.node_id, r.num_examples, r.metrics.clone()));
+                    let num_examples = r.metadata.num_examples;
+                    fit_meta.push((node, num_examples, r.content.metrics.clone()));
                     agg.accumulate(FitRes {
-                        node_id: r.node_id,
-                        parameters: r.parameters,
-                        num_examples: r.num_examples,
-                        metrics: r.metrics,
+                        node_id: node,
+                        parameters: r.content.arrays,
+                        num_examples,
+                        metrics: r.content.metrics,
                     })
-                })?;
+                },
+            )?;
             if quorum == 0 && !wait.is_complete() {
                 // Strict mode: preserve the pre-resilience contract —
                 // the typed error still carries the wait outcome.
@@ -385,7 +388,8 @@ impl ServerApp {
             );
             anyhow::ensure!(
                 quorum == 0 || agg.count() >= fit_quorum,
-                "round {round}: only {} of {} fit results (quorum {fit_quorum}; {} failed, {} missing)",
+                "round {round}: only {} of {} fit results (quorum {fit_quorum}; \
+                 {} failed, {} missing)",
                 agg.count(),
                 fit_nodes.len(),
                 wait.failed.len(),
@@ -445,7 +449,7 @@ impl ServerApp {
             // to a dead node would strand until the grace/timeout. In a
             // clean run this equals the round-start list, so histories
             // are unchanged.
-            let eval_basis = link.nodes();
+            let eval_basis = grid.node_ids();
             let (eval_loss, eval_metrics, per_client_eval) = if cfg.fraction_evaluate > 0.0
                 && !eval_basis.is_empty()
             {
@@ -454,19 +458,9 @@ impl ServerApp {
                 let task_ids: Vec<u64> = eval_nodes
                     .iter()
                     .map(|&node| {
-                        link.push_task(
-                            node,
-                            TaskIns {
-                                task_id: 0,
-                                run_id,
-                                round,
-                                task_type: TaskType::Evaluate,
-                                attempt: 0,
-                                redeliver: false,
-                                model_version: 0,
-                                parameters: params.clone(),
-                                config: eval_cfg.clone(),
-                            },
+                        grid.push_message(
+                            Message::evaluate(node, params.clone(), eval_cfg.clone())
+                                .for_round(run_id, round),
                         )
                     })
                     .collect();
@@ -485,35 +479,36 @@ impl ServerApp {
                 // redelivered eval executed by a node that already
                 // evaluated must not double its weight in the mean.
                 let mut seen_eval: HashSet<u64> = HashSet::with_capacity(task_ids.len());
-                let eval_wait = link.for_each_result_policy(
+                let eval_wait = grid.for_each_reply(
                     run_id,
                     &task_ids,
                     cfg.round_timeout,
                     eval_policy,
-                    |r| {
+                    &mut |r: Message| {
+                        let node = r.metadata.src_node_id;
                         if !r.error.is_empty() {
                             if accept_failures {
                                 return Ok(());
                             }
                             anyhow::bail!(
-                                "round {round}: eval on node {} failed: {}",
-                                r.node_id,
+                                "round {round}: eval on node {node} failed: {}",
                                 r.error
                             );
                         }
-                        if !seen_eval.insert(r.node_id) {
+                        if !seen_eval.insert(node) {
                             crate::telemetry::bump(
                                 "serverapp.duplicate_node_results_skipped",
                                 1,
                             );
                             return Ok(());
                         }
-                        per_client.push((r.node_id, r.loss, r.metrics.clone()));
+                        let loss = r.metadata.loss;
+                        per_client.push((node, loss, r.content.metrics.clone()));
                         eval_agg.accumulate(EvalRes {
-                            node_id: r.node_id,
-                            loss: r.loss,
-                            num_examples: r.num_examples,
-                            metrics: r.metrics,
+                            node_id: node,
+                            loss,
+                            num_examples: r.metadata.num_examples,
+                            metrics: r.content.metrics,
                         });
                         Ok(())
                     },
@@ -630,9 +625,9 @@ mod tests {
         let h = History {
             rounds: vec![RoundRecord {
                 round: 1,
-                fit_metrics: vec![("train_loss".into(), 0.5)],
+                fit_metrics: vec![("train_loss".to_string(), 0.5)].into(),
                 eval_loss: Some(0.4),
-                eval_metrics: vec![("accuracy".into(), 0.8)],
+                eval_metrics: vec![("accuracy".to_string(), 0.8)].into(),
                 per_client_eval: vec![],
                 participation: Participation::default(),
             }],

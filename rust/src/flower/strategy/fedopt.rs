@@ -223,7 +223,7 @@ mod tests {
             node_id: 1,
             parameters: update,
             num_examples: 1,
-            metrics: vec![],
+            metrics: crate::flower::records::MetricRecord::new(),
         }];
         let out = s.aggregate_fit(1, &current, &res).unwrap();
         let a = out.get("a").unwrap().get_f64(0);

@@ -25,7 +25,10 @@ impl Strategy for FedProx {
     }
 
     fn configure_fit(&mut self, _round: u64) -> ConfigRecord {
-        vec![("proximal_mu".to_string(), ConfigValue::F64(self.mu))]
+        ConfigRecord::from_pairs(vec![(
+            "proximal_mu".to_string(),
+            ConfigValue::F64(self.mu),
+        )])
     }
 
     fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
@@ -40,13 +43,12 @@ impl Strategy for FedProx {
 mod tests {
     use super::super::fit;
     use super::*;
-    use crate::flower::message::config_get_f64;
 
     #[test]
     fn pushes_mu_and_averages() {
         let mut s = FedProx::new(Aggregator::host(), 0.01);
         let cfg = s.configure_fit(1);
-        assert_eq!(config_get_f64(&cfg, "proximal_mu"), Some(0.01));
+        assert_eq!(cfg.get_f64("proximal_mu"), Some(0.01));
         let out = s
             .aggregate_fit(
                 1,

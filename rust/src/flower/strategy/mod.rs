@@ -139,11 +139,11 @@ pub trait Strategy: Send {
 
     /// Extra config pushed to clients with each fit instruction.
     fn configure_fit(&mut self, _round: u64) -> ConfigRecord {
-        Vec::new()
+        ConfigRecord::new()
     }
 
     fn configure_evaluate(&mut self, _round: u64) -> ConfigRecord {
-        Vec::new()
+        ConfigRecord::new()
     }
 
     /// Begin incremental aggregation for `round`. `current` is the
@@ -243,7 +243,7 @@ where
 pub fn weighted_eval(results: &[EvalRes]) -> (f64, MetricRecord) {
     let total: f64 = results.iter().map(|r| r.num_examples as f64).sum();
     if total == 0.0 {
-        return (0.0, Vec::new());
+        return (0.0, MetricRecord::new());
     }
     let loss = results
         .iter()
@@ -398,7 +398,7 @@ pub(crate) fn fit(node_id: u64, parameters: Vec<f32>, num_examples: u64) -> FitR
         node_id,
         parameters: ArrayRecord::from_flat(&parameters),
         num_examples,
-        metrics: Vec::new(),
+        metrics: MetricRecord::new(),
     }
 }
 
@@ -423,7 +423,7 @@ mod tests {
             ])
             .unwrap(),
             num_examples: n,
-            metrics: vec![],
+            metrics: MetricRecord::new(),
         };
         let results = vec![mk(&[0.0, 2.0], &[10], 1, 1), mk(&[4.0, 6.0], &[20], 3, 2)];
         let out = Aggregator::host().weighted_mean(&results).unwrap();
@@ -473,13 +473,13 @@ mod tests {
                 node_id: 2,
                 loss: 2.0,
                 num_examples: 3,
-                metrics: vec![("accuracy".into(), 1.0)],
+                metrics: vec![("accuracy".to_string(), 1.0)].into(),
             },
             EvalRes {
                 node_id: 1,
                 loss: 1.0,
                 num_examples: 1,
-                metrics: vec![("accuracy".into(), 0.0)],
+                metrics: vec![("accuracy".to_string(), 0.0)].into(),
             },
         ];
         let mut sorted = results.clone();
@@ -508,13 +508,13 @@ mod tests {
                 node_id: 1,
                 loss: 1.0,
                 num_examples: 1,
-                metrics: vec![("accuracy".into(), 0.0)],
+                metrics: vec![("accuracy".to_string(), 0.0)].into(),
             },
             EvalRes {
                 node_id: 2,
                 loss: 2.0,
                 num_examples: 3,
-                metrics: vec![("accuracy".into(), 1.0)],
+                metrics: vec![("accuracy".to_string(), 1.0)].into(),
             },
         ];
         let (loss, metrics) = weighted_eval(&results);

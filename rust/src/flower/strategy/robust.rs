@@ -278,7 +278,7 @@ mod tests {
             ])
             .unwrap(),
             num_examples: 1,
-            metrics: vec![],
+            metrics: crate::flower::records::MetricRecord::new(),
         };
         let mut s = FedMedian;
         let out = s

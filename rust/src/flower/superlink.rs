@@ -1012,21 +1012,21 @@ impl SuperLink {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::flower::message::TaskType;
-    use crate::flower::records::ArrayRecord;
+    use crate::flower::message::MessageType;
+    use crate::flower::records::{ArrayRecord, ConfigRecord, MetricRecord};
 
     fn ins_for_run(run_id: u64, round: u64) -> TaskIns {
         TaskIns {
             task_id: 0,
             run_id,
             round,
-            task_type: TaskType::Fit,
+            message_type: MessageType::Train,
             attempt: 0,
             // Link-level tests exercise the redelivery machinery.
             redeliver: true,
             model_version: 0,
             parameters: ArrayRecord::from_flat(&[1.0]),
-            config: vec![],
+            config: ConfigRecord::new(),
         }
     }
 
@@ -1040,10 +1040,12 @@ mod tests {
             run_id,
             node_id,
             error: String::new(),
+            message_type: MessageType::Train,
             parameters: ArrayRecord::from_flat(&[2.0]),
             num_examples: 10,
             loss: 0.0,
-            metrics: vec![],
+            metrics: MetricRecord::new(),
+            configs: ConfigRecord::new(),
             model_version: 0,
         }
     }

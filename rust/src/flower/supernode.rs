@@ -1,10 +1,18 @@
 //! Flower SuperNode (paper §3.2 / Fig. 3): the long-running client-side
 //! process. Connects to the SuperLink through a [`FlowerConnector`]
 //! (unary request/response — the gRPC stand-in), registers a node, then
-//! loops: pull TaskIns → run the ClientApp → push TaskRes, until the
-//! SuperLink reports it has retired. One SuperNode serves EVERY run
-//! multiplexed over the link — tasks carry their `run_id`, and the node
-//! outlives any individual run.
+//! loops: pull TaskIns → execute the [`Message`] through the node's
+//! [`MessageApp`] → push TaskRes, until the SuperLink reports it has
+//! retired. One SuperNode serves EVERY run multiplexed over the link —
+//! tasks carry their `run_id`, and the node outlives any individual run.
+//!
+//! Execution is **typed**: each TaskIns becomes a [`Message`] dispatched
+//! by [`MessageType`](crate::flower::message::MessageType) to the
+//! registered handler ([`crate::flower::clientapp::Router`]), together with the node's
+//! persistent per-run [`Context`] — handler state written in round N is
+//! visible in round N+1, isolated per run. A message whose type has no
+//! handler produces a **typed error reply** (never a panic, never a
+//! silent drop) that the driver surfaces per node.
 //!
 //! The connector is the ONLY thing that differs between the paper's two
 //! deployment modes: native (direct endpoint to the SuperLink) vs bridged
@@ -14,12 +22,12 @@
 //! Replies are decoded with [`FlowerMsg::decode_shared`]: the tensors of
 //! every received TaskIns borrow the reply frame's buffer (zero copies).
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::flower::clientapp::ClientApp;
-use crate::flower::message::{FlowerMsg, TaskRes, TaskType};
-use crate::flower::records::ArrayRecord;
+use crate::flower::clientapp::{ClientApp, Context, MessageApp, Router};
+use crate::flower::message::{FlowerMsg, Message, TaskRes};
 use crate::transport::Endpoint;
 use crate::util::bytes::Bytes;
 
@@ -58,6 +66,17 @@ pub struct SuperNodeConfig {
     /// the SuperLink assign one. Pinning makes the client<->node binding
     /// deterministic across transports — required for Fig. 5 overlays.
     pub requested_node_id: u64,
+    /// Most per-run [`Context`]s retained at once. The SuperLink never
+    /// tells nodes when a run finishes, so without a bound a long-lived
+    /// node serving many sequential runs would accumulate state forever
+    /// (the per-run `StateRecord` can hold full tensors). When a NEW
+    /// run's first message arrives at the cap, the least-recently-used
+    /// run's context is dropped. Active runs keep refreshing theirs, so
+    /// normally only finished runs are evicted — but a fleet serving
+    /// MORE concurrently-active runs than this cap would lose live
+    /// state (each eviction is warn-logged): size it above the expected
+    /// concurrent-run count.
+    pub max_run_contexts: usize,
 }
 
 impl Default for SuperNodeConfig {
@@ -66,21 +85,42 @@ impl Default for SuperNodeConfig {
             poll: Duration::from_millis(5),
             connect_deadline: Duration::from_secs(30),
             requested_node_id: 0,
+            max_run_contexts: 64,
         }
     }
 }
 
 pub struct SuperNode {
     connector: Box<dyn FlowerConnector>,
-    app: Arc<dyn ClientApp>,
+    app: Arc<dyn MessageApp>,
     cfg: SuperNodeConfig,
     node_id: Option<u64>,
+    /// run_id -> (last-touched tick, persistent handler context).
+    /// Contexts survive across rounds (state written in round N is
+    /// visible in round N+1), isolated per run, and are LRU-bounded by
+    /// [`SuperNodeConfig::max_run_contexts`].
+    contexts: HashMap<u64, (u64, Context)>,
+    /// Monotonic touch counter backing the LRU order.
+    ctx_clock: u64,
 }
 
 impl SuperNode {
+    /// Classic constructor: a fit/evaluate [`ClientApp`], mounted via
+    /// the [`Router::from_client`] blanket adapter.
     pub fn new(
         connector: Box<dyn FlowerConnector>,
         app: Arc<dyn ClientApp>,
+        cfg: SuperNodeConfig,
+    ) -> Self {
+        Self::with_app(connector, Arc::new(Router::from_client(app)), cfg)
+    }
+
+    /// Message-native constructor: any [`MessageApp`] — a [`Router`]
+    /// with query/custom handlers, a
+    /// [`ModStack`](crate::flower::mods::ModStack), ...
+    pub fn with_app(
+        connector: Box<dyn FlowerConnector>,
+        app: Arc<dyn MessageApp>,
         cfg: SuperNodeConfig,
     ) -> Self {
         Self {
@@ -88,6 +128,8 @@ impl SuperNode {
             app,
             cfg,
             node_id: None,
+            contexts: HashMap::new(),
+            ctx_clock: 0,
         }
     }
 
@@ -157,7 +199,7 @@ impl SuperNode {
             };
             let got_tasks = !tasks.is_empty();
             for ins in tasks {
-                let res = self.execute(node_id, &ins);
+                let res = self.execute(node_id, ins);
                 match self.rpc(&FlowerMsg::PushTaskRes { res })? {
                     FlowerMsg::PushAccepted => {}
                     other => anyhow::bail!("unexpected reply to Push: {other:?}"),
@@ -174,55 +216,63 @@ impl SuperNode {
         }
     }
 
-    fn execute(&self, node_id: u64, ins: &crate::flower::message::TaskIns) -> TaskRes {
-        let base = TaskRes {
-            task_id: ins.task_id,
-            run_id: ins.run_id,
-            node_id,
-            error: String::new(),
-            parameters: ArrayRecord::new(),
-            num_examples: 0,
-            loss: 0.0,
-            metrics: Vec::new(),
-            // Echo the version this task's parameters were cut from so
-            // the async driver can compute staleness (the SuperLink
-            // re-stamps it authoritatively on arrival).
-            model_version: ins.model_version,
-        };
-        match ins.task_type {
-            TaskType::Fit => match self.app.fit(&ins.parameters, &ins.config) {
-                Ok(out) => TaskRes {
-                    parameters: out.parameters,
-                    num_examples: out.num_examples,
-                    metrics: out.metrics,
-                    ..base
-                },
-                Err(e) => TaskRes {
-                    error: e.to_string(),
-                    ..base
-                },
-            },
-            TaskType::Evaluate => match self.app.evaluate(&ins.parameters, &ins.config) {
-                Ok(out) => TaskRes {
-                    loss: out.loss,
-                    num_examples: out.num_examples,
-                    metrics: out.metrics,
-                    ..base
-                },
-                Err(e) => TaskRes {
-                    error: e.to_string(),
-                    ..base
-                },
-            },
+    /// Execute one instruction through the message app with the run's
+    /// persistent context. Handler errors — including the typed
+    /// "unhandled message type" refusal for unknown/custom types with no
+    /// registered handler — become error TaskRes replies; the node never
+    /// panics and never drops a task on the floor.
+    fn execute(&mut self, node_id: u64, ins: crate::flower::message::TaskIns) -> TaskRes {
+        // LRU-bound the per-run contexts: a NEW run arriving at the cap
+        // evicts the context untouched the longest (a long-finished
+        // run — active runs keep refreshing their tick).
+        if !self.contexts.contains_key(&ins.run_id)
+            && self.contexts.len() >= self.cfg.max_run_contexts.max(1)
+        {
+            let victim = self
+                .contexts
+                .iter()
+                .min_by_key(|(_, (tick, _))| *tick)
+                .map(|(run, _)| *run);
+            if let Some(victim) = victim {
+                crate::telemetry::bump("supernode.contexts_evicted", 1);
+                log::warn!(
+                    "supernode {node_id}: evicting run {victim}'s context at the \
+                     max_run_contexts cap ({}) — if that run is still active its \
+                     handler state restarts",
+                    self.cfg.max_run_contexts
+                );
+                self.contexts.remove(&victim);
+            }
         }
+        self.ctx_clock += 1;
+        let clock = self.ctx_clock;
+        let entry = self
+            .contexts
+            .entry(ins.run_id)
+            .or_insert_with(|| (clock, Context::new(ins.run_id, node_id)));
+        entry.0 = clock;
+        let ctx = &mut entry.1;
+        // Keep the context honest if the node re-registered under a new
+        // id since this run's context was created.
+        ctx.node_id = node_id;
+        let msg = Message::from_ins(ins, node_id);
+        let reply = match self.app.handle(&msg, ctx) {
+            Ok(reply) => reply,
+            Err(e) => {
+                crate::telemetry::bump("supernode.handler_errors", 1);
+                msg.reply_err(e.to_string())
+            }
+        };
+        reply.into_res()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::flower::clientapp::ArithmeticClient;
-    use crate::flower::message::TaskIns;
+    use crate::flower::clientapp::{is_unhandled, ArithmeticClient};
+    use crate::flower::message::{ConfigRecord, MessageType, TaskIns};
+    use crate::flower::records::{ArrayRecord, ConfigValue, RecordDict};
     use crate::flower::superlink::SuperLink;
     use crate::transport::inproc;
 
@@ -236,6 +286,20 @@ mod tests {
         }
     }
 
+    fn fit_ins(run_id: u64, params: &[f32]) -> TaskIns {
+        TaskIns {
+            task_id: 0,
+            run_id,
+            round: 1,
+            message_type: MessageType::Train,
+            attempt: 0,
+            redeliver: false,
+            model_version: 0,
+            parameters: ArrayRecord::from_flat(params),
+            config: ConfigRecord::new(),
+        }
+    }
+
     #[test]
     fn supernode_runs_tasks_until_finish() {
         let link = SuperLink::new();
@@ -246,20 +310,7 @@ mod tests {
         );
         let node_id = node.connect().unwrap();
 
-        let tid = link.push_task(
-            node_id,
-            TaskIns {
-                task_id: 0,
-                run_id: 1,
-                round: 1,
-                task_type: TaskType::Fit,
-                attempt: 0,
-                redeliver: false,
-                model_version: 0,
-                parameters: ArrayRecord::from_flat(&[1.0, 2.0]),
-                config: vec![],
-            },
-        );
+        let tid = link.push_task(node_id, fit_ins(1, &[1.0, 2.0]));
         let l2 = link.clone();
         let h = std::thread::spawn(move || {
             let res = l2.await_results(1, &[tid], Duration::from_secs(5)).unwrap();
@@ -271,6 +322,7 @@ mod tests {
         assert_eq!(executed, 1);
         assert_eq!(results[0].parameters.to_flat(), vec![2.0, 3.0]);
         assert_eq!(results[0].num_examples, 4);
+        assert_eq!(results[0].message_type, MessageType::Train);
     }
 
     #[test]
@@ -299,14 +351,14 @@ mod tests {
             fn fit(
                 &self,
                 _: &ArrayRecord,
-                _: &crate::flower::message::ConfigRecord,
+                _: &ConfigRecord,
             ) -> anyhow::Result<crate::flower::clientapp::FitOutput> {
                 anyhow::bail!("cuda OOM")
             }
             fn evaluate(
                 &self,
                 _: &ArrayRecord,
-                _: &crate::flower::message::ConfigRecord,
+                _: &ConfigRecord,
             ) -> anyhow::Result<crate::flower::clientapp::EvalOutput> {
                 anyhow::bail!("no data")
             }
@@ -318,20 +370,7 @@ mod tests {
             SuperNodeConfig::default(),
         );
         let node_id = node.connect().unwrap();
-        let tid = link.push_task(
-            node_id,
-            TaskIns {
-                task_id: 0,
-                run_id: 1,
-                round: 1,
-                task_type: TaskType::Fit,
-                attempt: 0,
-                redeliver: false,
-                model_version: 0,
-                parameters: ArrayRecord::new(),
-                config: vec![],
-            },
-        );
+        let tid = link.push_task(node_id, fit_ins(1, &[]));
         let l2 = link.clone();
         let h = std::thread::spawn(move || {
             let res = l2.await_results(1, &[tid], Duration::from_secs(5)).unwrap();
@@ -341,5 +380,139 @@ mod tests {
         node.run().unwrap();
         let results = h.join().unwrap();
         assert_eq!(results[0].error, "cuda OOM");
+    }
+
+    #[test]
+    fn unknown_message_type_yields_typed_error_reply() {
+        // Bugfix: a node with only fit/evaluate handlers receiving a
+        // Query (or custom) instruction must answer with a typed error
+        // TaskRes — not panic, not silently drop the task.
+        let link = SuperLink::new();
+        let mut node = SuperNode::new(
+            Box::new(DirectConnector(link.clone())),
+            Arc::new(ArithmeticClient { delta: 1.0, n: 1 }),
+            SuperNodeConfig::default(),
+        );
+        let node_id = node.connect().unwrap();
+        let q = TaskIns {
+            message_type: MessageType::Query,
+            ..fit_ins(1, &[])
+        };
+        let c = TaskIns {
+            message_type: MessageType::custom("compress"),
+            ..fit_ins(1, &[])
+        };
+        let t1 = link.push_task(node_id, q);
+        let t2 = link.push_task(node_id, c);
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || {
+            let res = l2
+                .await_results(1, &[t1, t2], Duration::from_secs(5))
+                .unwrap();
+            l2.retire();
+            res
+        });
+        assert_eq!(node.run().unwrap(), 2, "both tasks answered");
+        let results = h.join().unwrap();
+        assert!(is_unhandled(&results[0].error), "{}", results[0].error);
+        assert!(results[0].error.contains("query"), "{}", results[0].error);
+        assert!(is_unhandled(&results[1].error), "{}", results[1].error);
+        assert!(results[1].error.contains("compress"), "{}", results[1].error);
+        assert_eq!(results[1].message_type, MessageType::custom("compress"));
+    }
+
+    #[test]
+    fn contexts_are_lru_bounded_across_runs() {
+        // A node serving many sequential runs must not hoard one
+        // Context per run forever: at the cap, the least-recently-used
+        // run's context is evicted (its counter restarts if the run id
+        // ever comes back), while recently-active runs keep state.
+        let router = crate::flower::clientapp::Router::new().on_query(
+            |msg: &Message, ctx: &mut Context| -> anyhow::Result<Message> {
+                let n = ctx.state.bump("queries", 1);
+                Ok(msg.reply(RecordDict::default()).with_examples(n as u64))
+            },
+        );
+        let link = SuperLink::new();
+        let mut node = SuperNode::with_app(
+            Box::new(DirectConnector(link.clone())),
+            Arc::new(router),
+            SuperNodeConfig {
+                max_run_contexts: 2,
+                ..Default::default()
+            },
+        );
+        let node_id = node.connect().unwrap();
+        let mk = |run_id: u64| TaskIns {
+            message_type: MessageType::Query,
+            ..fit_ins(run_id, &[])
+        };
+        // The node runs in a thread; tasks are pushed ONE AT A TIME
+        // (awaiting each result before the next push) so execution
+        // order is exactly the plan order.
+        let h = std::thread::spawn(move || node.run());
+        // run 1, run 1, run 2, run 3 (evicts run 1), run 1 (fresh).
+        let plan = [1u64, 1, 2, 3, 1];
+        let mut counts = Vec::new();
+        for &run in &plan {
+            let tid = link.push_task(node_id, mk(run));
+            let res = link
+                .await_results(run, &[tid], Duration::from_secs(5))
+                .unwrap();
+            counts.push(res[0].num_examples);
+        }
+        link.retire();
+        h.join().unwrap().unwrap();
+        // Counters: run1=1, run1=2, run2=1, run3=1 (run1 evicted as
+        // LRU), run1 restarts at 1.
+        assert_eq!(counts, vec![1, 2, 1, 1, 1]);
+    }
+
+    #[test]
+    fn context_persists_across_tasks_and_is_isolated_per_run() {
+        let router = crate::flower::clientapp::Router::new().on_query(
+            |msg: &Message, ctx: &mut Context| -> anyhow::Result<Message> {
+                let n = ctx.state.bump("queries", 1);
+                let mut out = ConfigRecord::new();
+                out.insert("queries", ConfigValue::I64(n));
+                out.insert("run", ConfigValue::I64(ctx.run_id as i64));
+                Ok(msg.reply(RecordDict::from_configs(out)).with_examples(1))
+            },
+        );
+        let link = SuperLink::new();
+        let mut node = SuperNode::with_app(
+            Box::new(DirectConnector(link.clone())),
+            Arc::new(router),
+            SuperNodeConfig::default(),
+        );
+        let node_id = node.connect().unwrap();
+        let mk = |run_id: u64| TaskIns {
+            message_type: MessageType::Query,
+            ..fit_ins(run_id, &[])
+        };
+        // Rounds 1..3 of run 1 interleaved with run 2: run-1 state
+        // counts 1,2,3 while run 2 independently counts 1.
+        let ids_run1: Vec<u64> = (0..3).map(|_| link.push_task(node_id, mk(1))).collect();
+        let id_run2 = link.push_task(node_id, mk(2));
+        let l2 = link.clone();
+        let h = std::thread::spawn(move || {
+            let r1 = l2
+                .await_results(1, &ids_run1, Duration::from_secs(5))
+                .unwrap();
+            let r2 = l2
+                .await_results(2, &[id_run2], Duration::from_secs(5))
+                .unwrap();
+            l2.retire();
+            (r1, r2)
+        });
+        node.run().unwrap();
+        let (r1, r2) = h.join().unwrap();
+        let counts: Vec<i64> = r1
+            .iter()
+            .map(|r| r.configs.get_i64("queries").unwrap())
+            .collect();
+        assert_eq!(counts, vec![1, 2, 3], "state survives across rounds");
+        assert_eq!(r2[0].configs.get_i64("queries"), Some(1), "runs isolated");
+        assert_eq!(r2[0].configs.get_i64("run"), Some(2));
     }
 }

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use crate::flare::tracking::SummaryWriter;
 use crate::flower::clientapp::{ClientApp, EvalOutput, FitOutput};
-use crate::flower::message::{config_get_f64, ConfigRecord};
+use crate::flower::message::ConfigRecord;
 use crate::flower::records::ArrayRecord;
 use crate::runtime::{ComputeHandle, TensorData};
 use crate::train::data::{ImageShard, TokenShard};
@@ -150,8 +150,8 @@ impl TrainerClientApp {
 
 impl ClientApp for TrainerClientApp {
     fn fit(&self, record: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<FitOutput> {
-        let round = config_get_f64(config, "round").unwrap_or(0.0) as u64;
-        let mu = config_get_f64(config, "proximal_mu").unwrap_or(0.0) as f32;
+        let round = config.get_f64("round").unwrap_or(0.0) as u64;
+        let mu = config.get_f64("proximal_mu").unwrap_or(0.0) as f32;
         let batch = self.train_batch_size();
         let artifact = format!("{}_train_step", self.model);
         // The AOT artifacts consume the flat f32 view; the record's
@@ -195,14 +195,15 @@ impl ClientApp for TrainerClientApp {
             parameters: record.from_flat_like(&params)?,
             num_examples: self.local_steps * batch as u64,
             metrics: vec![
-                ("train_loss".into(), loss_sum / steps),
-                ("train_accuracy".into(), acc_sum / steps),
-            ],
+                ("train_loss".to_string(), loss_sum / steps),
+                ("train_accuracy".to_string(), acc_sum / steps),
+            ]
+            .into(),
         })
     }
 
     fn evaluate(&self, record: &ArrayRecord, config: &ConfigRecord) -> anyhow::Result<EvalOutput> {
-        let round = config_get_f64(config, "round").unwrap_or(0.0) as u64;
+        let round = config.get_f64("round").unwrap_or(0.0) as u64;
         let batch = self.eval_batch_size();
         let artifact = format!("{}_eval_batch", self.model);
         let units_per_item = self.data.eval_units_per_item();
@@ -235,7 +236,7 @@ impl ClientApp for TrainerClientApp {
         Ok(EvalOutput {
             loss,
             num_examples: units as u64,
-            metrics: vec![("accuracy".into(), accuracy)],
+            metrics: vec![("accuracy".to_string(), accuracy)].into(),
         })
     }
 }
@@ -282,7 +283,13 @@ mod tests {
         let client = cnn_client(0, 64, 0);
         let params = init_params("cnn", 1);
         let out = client
-            .fit(&params, &vec![("round".into(), crate::flower::message::ConfigValue::I64(1))])
+            .fit(
+                &params,
+                &ConfigRecord::from_pairs(vec![(
+                    "round".to_string(),
+                    crate::flower::message::ConfigValue::I64(1),
+                )]),
+            )
             .unwrap();
         assert!(out.parameters.dims_match(&params));
         assert!(!out.parameters.bits_equal(&params));
@@ -299,7 +306,10 @@ mod tests {
         }
         let client = cnn_client(0, 64, 0);
         let params = init_params("cnn", 2);
-        let cfg = vec![("round".into(), crate::flower::message::ConfigValue::I64(3))];
+        let cfg = ConfigRecord::from_pairs(vec![(
+            "round".to_string(),
+            crate::flower::message::ConfigValue::I64(3),
+        )]);
         let a = client.fit(&params, &cfg).unwrap();
         let b = client.fit(&params, &cfg).unwrap();
         assert!(a.parameters.bits_equal(&b.parameters));
@@ -313,7 +323,7 @@ mod tests {
         }
         let client = cnn_client(0, 32, 300); // covers padded tail (300 = 256 + 44)
         let params = init_params("cnn", 3);
-        let out = client.evaluate(&params, &vec![]).unwrap();
+        let out = client.evaluate(&params, &ConfigRecord::new()).unwrap();
         assert_eq!(out.num_examples, 300);
         assert!(out.loss > 1.0 && out.loss < 5.0, "untrained CE ~ ln10: {}", out.loss);
         let acc = out.metrics[0].1;
@@ -329,18 +339,24 @@ mod tests {
         let client = cnn_client(1, 64, 0);
         let params = init_params("cnn", 4);
         let plain = client
-            .fit(&params, &vec![("round".into(), crate::flower::message::ConfigValue::I64(1))])
+            .fit(
+                &params,
+                &ConfigRecord::from_pairs(vec![(
+                    "round".to_string(),
+                    crate::flower::message::ConfigValue::I64(1),
+                )]),
+            )
             .unwrap();
         let prox = client
             .fit(
                 &params,
-                &vec![
-                    ("round".into(), crate::flower::message::ConfigValue::I64(1)),
+                &ConfigRecord::from_pairs(vec![
+                    ("round".to_string(), crate::flower::message::ConfigValue::I64(1)),
                     (
-                        "proximal_mu".into(),
+                        "proximal_mu".to_string(),
                         crate::flower::message::ConfigValue::F64(0.5),
                     ),
-                ],
+                ]),
             )
             .unwrap();
         assert!(!plain.parameters.bits_equal(&prox.parameters));

@@ -181,7 +181,7 @@ fn chaos_fleet_apps(gate: &Arc<Gate>) -> Vec<Arc<dyn ClientApp>> {
 fn survivor_results(init: &ArrayRecord) -> Vec<FitRes> {
     (0..SURVIVORS)
         .map(|i| {
-            let out = survivor_client(i).fit(init, &vec![]).unwrap();
+            let out = survivor_client(i).fit(init, &ConfigRecord::new()).unwrap();
             FitRes {
                 node_id: i as u64 + 1,
                 parameters: out.parameters,

@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 use flarelink::flower::asyncfed::AsyncConfig;
 use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
-use flarelink::flower::records::ArrayRecord;
+use flarelink::flower::records::{ArrayRecord, MetricRecord};
 use flarelink::flower::run::{run_native, NativeFleet};
 use flarelink::flower::serverapp::{ServerApp, ServerConfig};
 use flarelink::flower::strategy::{
@@ -44,7 +44,7 @@ fn mk_results(n_clients: usize, dim: usize, seed: u64) -> Vec<FitRes> {
                 node_id: id as u64,
                 parameters: ArrayRecord::from_flat(&params),
                 num_examples: rng.range_u64(1, 50),
-                metrics: vec![],
+                metrics: MetricRecord::new(),
             }
         })
         .collect()
@@ -212,6 +212,96 @@ conformance_matrix! {
     fedmedian => Box::new(FedMedian);
     trimmed_mean => Box::new(TrimmedMean { trim: 1 });
     krum => Box::new(Krum { f: 1 });
+}
+
+/// The Message-API redesign's row of the matrix: the blanket
+/// fit/evaluate adapter ([`Router::from_client`]) is bit-identical to
+/// (a) explicit handler registration around the same client code and
+/// (b) the pre-redesign closed-form numbers for FedAvg over
+/// ArithmeticClients — dispatch through the typed registry changes
+/// NOTHING about what rides the wire or what aggregates.
+mod adapter_path {
+    use super::*;
+    use flarelink::flower::clientapp::{Context, Router};
+    use flarelink::flower::message::Message;
+
+    fn explicit_routers() -> Vec<Router> {
+        (0..COHORT)
+            .map(|i| {
+                let client = Arc::new(ArithmeticClient {
+                    delta: (i + 1) as f32 * 0.5,
+                    n: 10 * (i as u64 + 1),
+                });
+                let fit_client = client.clone();
+                let eval_client = client;
+                Router::new()
+                    .on_train(
+                        move |msg: &Message, _ctx: &mut Context| -> anyhow::Result<Message> {
+                            Ok(fit_client
+                                .fit(&msg.content.arrays, &msg.content.configs)?
+                                .into_reply(msg))
+                        },
+                    )
+                    .on_evaluate(
+                        move |msg: &Message, _ctx: &mut Context| -> anyhow::Result<Message> {
+                            Ok(eval_client
+                                .evaluate(&msg.content.arrays, &msg.content.configs)?
+                                .into_reply(msg))
+                        },
+                    )
+            })
+            .collect()
+    }
+
+    fn cfg() -> ServerConfig {
+        ServerConfig {
+            num_rounds: 3,
+            min_nodes: COHORT,
+            seed: 13,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn adapter_equals_explicit_handlers_bitexact() {
+        let init = ArrayRecord::from_flat(&[0.25f32; 6]);
+        // Path A: classic ClientApps mounted via the blanket adapter.
+        let mut app_a = ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            cfg(),
+            init.clone(),
+        );
+        let via_adapter = run_native(&mut app_a, fleet_apps(), 1).unwrap();
+
+        // Path B: the same client code behind explicitly registered
+        // Train/Evaluate handlers.
+        let fleet = NativeFleet::start_routers(explicit_routers()).unwrap();
+        let mut app_b = ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            cfg(),
+            init,
+        );
+        let via_handlers = app_b.run(fleet.link(), None, 1).unwrap();
+        fleet.shutdown();
+
+        // Whole-history equality: final parameters byte-exact AND every
+        // per-round metric / per-client eval series identical.
+        assert_eq!(via_adapter, via_handlers);
+        assert!(via_adapter.params_bits_equal(&via_handlers));
+
+        // Closed form (the pre-redesign expectation): weighted mean
+        // delta per round = sum(0.5(i+1) * 10(i+1)) / sum(10(i+1))
+        // = 275/150, three rounds on a 0.25 init.
+        let per_round = 275.0 / 150.0;
+        for p in via_adapter.parameters.to_flat() {
+            assert!(
+                (p as f64 - (0.25 + 3.0 * per_round)).abs() < 1e-4,
+                "unexpected final parameter {p}"
+            );
+        }
+        assert_eq!(via_adapter.rounds.len(), 3);
+        assert!(via_adapter.rounds.iter().all(|r| r.eval_loss.is_some()));
+    }
 }
 
 /// Secure aggregation's row of the matrix: both capability gates are

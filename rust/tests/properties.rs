@@ -8,8 +8,8 @@
 
 use flarelink::flare::job::JobSpec;
 use flarelink::flare::scheduler::Scheduler;
-use flarelink::flower::message::{ConfigValue, FlowerMsg, TaskIns, TaskRes, TaskType};
-use flarelink::flower::records::{ArrayRecord, DType, Tensor};
+use flarelink::flower::message::{ConfigValue, FlowerMsg, MessageType, TaskIns, TaskRes};
+use flarelink::flower::records::{ArrayRecord, ConfigRecord, DType, MetricRecord, Tensor};
 use flarelink::flower::strategy::{host_weighted_mean, FitRes};
 use flarelink::proto::{Envelope, MsgKind};
 use flarelink::util::bytes::Bytes;
@@ -49,6 +49,16 @@ impl Gen for StringGen {
         } else {
             vec![String::new(), v[..v.len() / 2].to_string()]
         }
+    }
+}
+
+/// Any of the four message-type shapes, custom names included.
+fn gen_message_type(rng: &mut Rng, sg: &StringGen) -> MessageType {
+    match rng.below(4) {
+        0 => MessageType::Train,
+        1 => MessageType::Evaluate,
+        2 => MessageType::Query,
+        _ => MessageType::custom(sg.generate(rng)),
     }
 }
 
@@ -144,10 +154,25 @@ impl Gen for FlowerMsgGen {
                     run_id: rng.next_u64(),
                     node_id: rng.next_u64(),
                     error: sg.generate(rng),
+                    // v1 replies carry no type and no config channel;
+                    // the legacy-roundtrip property needs the defaults.
+                    message_type: if self.flat_only {
+                        MessageType::Train
+                    } else {
+                        gen_message_type(rng, &sg)
+                    },
                     parameters: self.gen_params(rng),
                     num_examples: rng.next_u64(),
                     loss: rng.next_f64(),
-                    metrics: vec![(sg.generate(rng), rng.next_f64())],
+                    metrics: MetricRecord::from_pairs(vec![(sg.generate(rng), rng.next_f64())]),
+                    configs: if self.flat_only {
+                        ConfigRecord::new()
+                    } else {
+                        ConfigRecord::from_pairs(vec![(
+                            sg.generate(rng),
+                            ConfigValue::I64(rng.next_u64() as i64),
+                        )])
+                    },
                     // v1 frames cannot carry the version, so the
                     // legacy-roundtrip property needs the default.
                     model_version: if self.flat_only { 0 } else { rng.below(16) },
@@ -163,10 +188,15 @@ impl Gen for FlowerMsgGen {
                         task_id: rng.next_u64(),
                         run_id: rng.next_u64(),
                         round: rng.next_u64(),
-                        task_type: if rng.chance(0.5) {
-                            TaskType::Fit
+                        // v1 frames only express the two legacy verbs.
+                        message_type: if self.flat_only {
+                            if rng.chance(0.5) {
+                                MessageType::Train
+                            } else {
+                                MessageType::Evaluate
+                            }
                         } else {
-                            TaskType::Evaluate
+                            gen_message_type(rng, &sg)
                         },
                         // v1 frames cannot carry attempt/redeliver, so
                         // the legacy-roundtrip property needs defaults.
@@ -178,12 +208,12 @@ impl Gen for FlowerMsgGen {
                         redeliver: !self.flat_only && rng.chance(0.5),
                         model_version: if self.flat_only { 0 } else { rng.below(16) },
                         parameters: self.gen_params(rng),
-                        config: vec![
+                        config: ConfigRecord::from_pairs(vec![
                             (sg.generate(rng), ConfigValue::F64(rng.next_f64())),
                             (sg.generate(rng), ConfigValue::I64(rng.next_u64() as i64)),
                             (sg.generate(rng), ConfigValue::Str(sg.generate(rng))),
                             (sg.generate(rng), ConfigValue::Bool(rng.chance(0.5))),
-                        ],
+                        ]),
                     })
                     .collect(),
             },
@@ -501,7 +531,7 @@ fn prop_weighted_mean_is_convex_combination() {
                 node_id: i as u64,
                 parameters: ArrayRecord::from_flat(p),
                 num_examples: *w,
-                metrics: vec![],
+                metrics: MetricRecord::new(),
             })
             .collect();
         let mean = host_weighted_mean(&results).to_flat();
@@ -532,9 +562,9 @@ fn prop_history_csv_has_one_line_per_round() {
             rounds: (1..=*rounds)
                 .map(|r| RoundRecord {
                     round: r,
-                    fit_metrics: vec![("train_loss".into(), r as f64)],
+                    fit_metrics: vec![("train_loss".to_string(), r as f64)].into(),
                     eval_loss: Some(1.0 / r as f64),
-                    eval_metrics: vec![],
+                    eval_metrics: MetricRecord::new(),
                     per_client_eval: vec![],
                     participation: Default::default(),
                 })
@@ -653,5 +683,127 @@ fn prop_rng_below_uniformity_chi_square() {
         let chi2: f64 = counts.iter().map(|c| (c - expect).powi(2) / expect).sum();
         // 15 dof: P(chi2 > 45) ~ 1e-4; allow generous head-room.
         chi2 < 60.0
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Message API properties: unknown-type handling + Context persistence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_unknown_message_types_yield_typed_errors() {
+    // Any custom verb a node has no handler for is refused with the
+    // typed marker — never a panic, never a silent drop — whatever the
+    // name looks like (empty, unicode, separators, or shadowing a
+    // built-in name like "train": the TYPE key distinguishes, not the
+    // string).
+    use flarelink::flower::clientapp::{is_unhandled, ArithmeticClient, Context, MessageApp, Router};
+    use flarelink::flower::message::Message;
+    use flarelink::flower::records::RecordDict;
+    prop_check(
+        "unknown types refused",
+        150,
+        StringGen { max_len: 12 },
+        |name| {
+            let router =
+                Router::from_client(std::sync::Arc::new(ArithmeticClient { delta: 1.0, n: 1 }));
+            let msg = Message::new(MessageType::custom(name.clone()), 1, RecordDict::default());
+            let mut ctx = Context::new(1, 1);
+            match router.handle(&msg, &mut ctx) {
+                Err(e) => is_unhandled(&e.to_string()),
+                Ok(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_supernode_context_persists_per_run() {
+    // Random interleavings of query tasks across several runs on ONE
+    // SuperNode: each run's handler counter must read 1, 2, 3, ... in
+    // that run's task order (state written in round N is visible in
+    // round N+1) and never leak across run ids (isolation).
+    use flarelink::flower::clientapp::{Context, Router};
+    use flarelink::flower::message::Message;
+    use flarelink::flower::records::RecordDict;
+    use flarelink::flower::superlink::SuperLink;
+    use flarelink::flower::supernode::{FlowerConnector, SuperNode, SuperNodeConfig};
+
+    struct Direct(std::sync::Arc<SuperLink>);
+    impl FlowerConnector for Direct {
+        fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+            Ok(self.0.handle_frame_shared(Bytes::from_vec(frame)))
+        }
+    }
+
+    struct RunSeq;
+    impl Gen for RunSeq {
+        type Value = Vec<u64>;
+        fn generate(&self, rng: &mut Rng) -> Vec<u64> {
+            (0..rng.range_u64(1, 14))
+                .map(|_| rng.range_u64(1, 3))
+                .collect()
+        }
+        fn shrink(&self, v: &Vec<u64>) -> Vec<Vec<u64>> {
+            if v.len() <= 1 {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_vec()]
+            }
+        }
+    }
+
+    prop_check("supernode context per run", 25, RunSeq, |seq| {
+        let link = SuperLink::new();
+        let router = Router::new().on_query(
+            |msg: &Message, ctx: &mut Context| -> anyhow::Result<Message> {
+                let n = ctx.state.bump("count", 1);
+                // The per-run counter rides back in num_examples.
+                Ok(msg.reply(RecordDict::default()).with_examples(n as u64))
+            },
+        );
+        let mut node = SuperNode::with_app(
+            Box::new(Direct(link.clone())),
+            std::sync::Arc::new(router),
+            SuperNodeConfig::default(),
+        );
+        let node_id = node.connect().unwrap();
+        let tids: Vec<(u64, u64)> = seq
+            .iter()
+            .map(|&run| {
+                let tid = link.push_task(
+                    node_id,
+                    TaskIns {
+                        task_id: 0,
+                        run_id: run,
+                        round: 1,
+                        message_type: MessageType::Query,
+                        attempt: 0,
+                        redeliver: false,
+                        model_version: 0,
+                        parameters: ArrayRecord::new(),
+                        config: ConfigRecord::new(),
+                    },
+                );
+                (run, tid)
+            })
+            .collect();
+        let l2 = link.clone();
+        let handle = std::thread::spawn(move || node.run());
+        let mut expect: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+        let mut ok = true;
+        for (run, tid) in &tids {
+            let res = l2
+                .await_results(*run, &[*tid], std::time::Duration::from_secs(10))
+                .unwrap();
+            let e = expect.entry(*run).or_insert(0);
+            *e += 1;
+            if res[0].num_examples != *e {
+                ok = false;
+            }
+        }
+        link.retire();
+        handle.join().unwrap().unwrap();
+        ok
     });
 }

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
-use flarelink::flower::records::ArrayRecord;
+use flarelink::flower::records::{ArrayRecord, MetricRecord};
 use flarelink::flower::run::{run_native, run_shared, NativeFleet};
 use flarelink::flower::serverapp::{ServerApp, ServerConfig};
 use flarelink::flower::strategy::{
@@ -36,7 +36,7 @@ fn mk_results(n_clients: usize, dim: usize, seed: u64) -> Vec<FitRes> {
                 node_id: id as u64,
                 parameters: ArrayRecord::from_flat(&params),
                 num_examples: rng.range_u64(1, 50),
-                metrics: vec![],
+                metrics: MetricRecord::new(),
             }
         })
         .collect()
@@ -156,17 +156,17 @@ fn secagg_stream_bitexact() {
                 Arc::new(ArithmeticClient { delta, n }),
                 vec![Arc::new(SecAggMod)],
             );
-            let cfg: ConfigRecord = vec![
+            let cfg = ConfigRecord::from_pairs(vec![
                 ("node_id".into(), ConfigValue::I64(me as i64)),
                 ("cohort".into(), ConfigValue::Str(cohort.into())),
                 (SECAGG_SEED_KEY.into(), ConfigValue::I64(seed)),
-            ];
+            ]);
             let out = app.fit(&params, &cfg).unwrap();
             FitRes {
                 node_id: me,
                 parameters: out.parameters,
                 num_examples: out.num_examples,
-                metrics: vec![],
+                metrics: MetricRecord::new(),
             }
         })
         .collect();
