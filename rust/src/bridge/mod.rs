@@ -62,7 +62,10 @@ pub const SHUTDOWN_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 /// natively: the six-hop bridge is an implementation detail below the
 /// `Grid` trait, exactly the paper's claim.
 pub struct BridgedGrid {
-    link: Arc<SuperLink>,
+    /// Swappable so crash-recovery chaos can replace a killed link with
+    /// a [`SuperLink::recover`]ed one mid-run — the LGC handler and
+    /// every Grid call route to the CURRENT occupant.
+    link: Arc<std::sync::Mutex<Arc<SuperLink>>>,
 }
 
 impl BridgedGrid {
@@ -71,7 +74,8 @@ impl BridgedGrid {
     /// payload is moved out of the envelope, so the frame's tensor bytes
     /// reach the link's zero-copy decode uncopied.
     pub fn attach(ctx: &JobCtx, link: Arc<SuperLink>) -> BridgedGrid {
-        let link2 = link.clone();
+        let slot = Arc::new(std::sync::Mutex::new(link));
+        let slot2 = slot.clone();
         ctx.messenger.set_handler(Arc::new(move |env| {
             if env.topic != FLOWER_TOPIC {
                 anyhow::bail!("unexpected topic {}", env.topic);
@@ -79,52 +83,63 @@ impl BridgedGrid {
             crate::telemetry::bump("bridge.frames_relayed", 1);
             crate::telemetry::bump("bridge.frame_bytes", env.payload.len() as i64);
             let frame = std::mem::take(&mut env.payload);
-            Ok(link2.handle_frame_shared(Bytes::from_vec(frame)))
+            let link = slot2.lock().unwrap().clone();
+            Ok(link.handle_frame_shared(Bytes::from_vec(frame)))
         }));
-        BridgedGrid { link }
+        BridgedGrid { link: slot }
     }
 
-    /// The wrapped link (for retire/drain at job teardown).
-    pub fn link(&self) -> &Arc<SuperLink> {
-        &self.link
+    /// The CURRENT wrapped link (for retire/drain at job teardown).
+    pub fn link(&self) -> Arc<SuperLink> {
+        self.link.lock().unwrap().clone()
+    }
+
+    /// Replace the wrapped link (crash-recovery: the old one was killed
+    /// without retiring, the new one came from [`SuperLink::recover`]).
+    /// Returns the replaced link. SuperNode frames in flight during the
+    /// swap land on whichever side of it they raced to — exactly like
+    /// frames racing a real process restart — and the bridge's reliable
+    /// delivery retries any that got an error back.
+    pub fn swap_link(&self, link: Arc<SuperLink>) -> Arc<SuperLink> {
+        std::mem::replace(&mut self.link.lock().unwrap(), link)
     }
 }
 
 impl Grid for BridgedGrid {
     fn open_run(&self, run_id: u64) {
-        self.link.as_ref().open_run(run_id)
+        self.link().open_run(run_id)
     }
 
     fn run_active(&self, run_id: u64) -> bool {
-        Grid::run_active(self.link.as_ref(), run_id)
+        Grid::run_active(self.link().as_ref(), run_id)
     }
 
     fn close_run(&self, run_id: u64) {
-        self.link.as_ref().close_run(run_id)
+        self.link().close_run(run_id)
     }
 
     fn node_ids(&self) -> Vec<u64> {
-        self.link.as_ref().node_ids()
+        self.link().node_ids()
     }
 
     fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>> {
-        Grid::wait_for_nodes(self.link.as_ref(), n, timeout)
+        Grid::wait_for_nodes(self.link().as_ref(), n, timeout)
     }
 
     fn reap(&self) {
-        self.link.as_ref().reap()
+        self.link().reap()
     }
 
     fn push_message(&self, msg: Message) -> u64 {
-        self.link.as_ref().push_message(msg)
+        self.link().push_message(msg)
     }
 
     fn pull_messages(&self, run_id: u64, ids: &[u64]) -> (Vec<Message>, Vec<(u64, String)>) {
-        self.link.as_ref().pull_messages(run_id, ids)
+        self.link().pull_messages(run_id, ids)
     }
 
     fn wait_activity(&self, timeout: Duration) {
-        Grid::wait_activity(self.link.as_ref(), timeout)
+        Grid::wait_activity(self.link().as_ref(), timeout)
     }
 
     fn for_each_reply(
@@ -135,7 +150,35 @@ impl Grid for BridgedGrid {
         policy: CompletionPolicy,
         f: &mut dyn FnMut(Message) -> anyhow::Result<()>,
     ) -> anyhow::Result<RoundWait> {
-        self.link.as_ref().for_each_reply(run_id, ids, timeout, policy, f)
+        self.link().for_each_reply(run_id, ids, timeout, policy, f)
+    }
+
+    fn durable(&self) -> bool {
+        self.link().is_durable()
+    }
+
+    fn checkpoint_due(&self, _run_id: u64) -> bool {
+        SuperLink::checkpoint_due(self.link().as_ref())
+    }
+
+    fn checkpoint_run(&self, run_id: u64, blob: Vec<u8>) {
+        self.link().store_driver_checkpoint(run_id, blob)
+    }
+
+    fn driver_checkpoint(&self, run_id: u64) -> Option<Vec<u8>> {
+        SuperLink::driver_checkpoint(self.link().as_ref(), run_id)
+    }
+
+    fn journal_fold(&self, run_id: u64, task_id: u64) {
+        self.link().journal_async_fold(run_id, task_id)
+    }
+
+    fn journal_commit(&self, run_id: u64, version: u64) {
+        self.link().journal_async_commit(run_id, version)
+    }
+
+    fn open_tasks(&self, run_id: u64) -> Vec<(u64, u64, u64)> {
+        SuperLink::open_tasks(self.link().as_ref(), run_id)
     }
 }
 
@@ -166,6 +209,15 @@ pub trait FlowerAppBuilder: Send + Sync {
     /// works natively.
     fn drive(&self, _ctx: &JobCtx, _grid: &dyn Grid) -> Option<anyhow::Result<()>> {
         None
+    }
+
+    /// Like [`FlowerAppBuilder::drive`], but handed the concrete
+    /// [`BridgedGrid`] so crash-recovery harnesses can
+    /// [`BridgedGrid::swap_link`] mid-run. Defaults to
+    /// [`FlowerAppBuilder::drive`]; override only when the driver needs
+    /// the bridge itself rather than the Grid abstraction.
+    fn drive_bridged(&self, ctx: &JobCtx, grid: &BridgedGrid) -> Option<anyhow::Result<()>> {
+        self.drive(ctx, grid)
     }
 
     fn build_server(&self, ctx: &JobCtx) -> anyhow::Result<ServerApp>;
@@ -268,7 +320,7 @@ impl AppFactory for FlowerBridgeApp {
     /// same lease/redelivery/quorum semantics as the native one.
     fn run_server(&self, ctx: JobCtx) -> anyhow::Result<()> {
         let defaults = crate::flower::superlink::LinkConfig::default();
-        let link = SuperLink::with_config(crate::flower::superlink::LinkConfig {
+        let link_cfg = crate::flower::superlink::LinkConfig {
             lease: ctx
                 .config
                 .get("lease_ms")
@@ -281,7 +333,22 @@ impl AppFactory for FlowerBridgeApp {
                 .as_u64()
                 .map(|n| n as u32)
                 .unwrap_or(defaults.max_redeliveries),
-        });
+        };
+        // Durability rides the job config too: `durability_dir` turns on
+        // WAL + checkpoints (cadence `checkpoint_every` results, default
+        // 1) so the bridged SuperLink survives a crash exactly like the
+        // native one — same WAL format, same recovery.
+        let durable = ctx.config.get("durability_dir").as_str().map(|d| d.to_string());
+        let link = match &durable {
+            Some(dir) => SuperLink::with_durability(
+                link_cfg,
+                crate::flower::persist::Durability::Checkpointed {
+                    dir: std::path::PathBuf::from(dir),
+                    every_results: ctx.config.get("checkpoint_every").as_u64().unwrap_or(1),
+                },
+            )?,
+            None => SuperLink::with_config(link_cfg),
+        };
 
         // LGC wiring (hops 3–5) + the driver-facing Grid: everything
         // below drives rounds through `grid`, never the link directly —
@@ -312,7 +379,7 @@ impl AppFactory for FlowerBridgeApp {
         // comparable between single-run and concurrent-run jobs.
         let runs = ctx.config.get("concurrent_runs").as_u64().unwrap_or(1).max(1);
         let result: anyhow::Result<Vec<(u64, History)>> = if let Some(custom) =
-            self.builder.drive(&ctx, &grid)
+            self.builder.drive_bridged(&ctx, &grid)
         {
             // Custom Grid driver (e.g. federated analytics): the builder
             // owns the run loop; the bridge still owns LGC wiring and
@@ -325,9 +392,14 @@ impl AppFactory for FlowerBridgeApp {
                 } else {
                     None
                 };
-                let history = match async_cfg {
-                    Some(acfg) => server_app.run_async(&grid, tracker, 1, acfg),
-                    None => server_app.run(&grid, tracker, 1),
+                // On a durable link the run is left open on error so a
+                // recovered link can resume it; otherwise semantics are
+                // unchanged.
+                let history = match (async_cfg, durable.is_some()) {
+                    (Some(acfg), false) => server_app.run_async(&grid, tracker, 1, acfg),
+                    (Some(acfg), true) => server_app.run_async_durable(&grid, tracker, 1, acfg),
+                    (None, false) => server_app.run(&grid, tracker, 1),
+                    (None, true) => server_app.run_durable(&grid, tracker, 1),
                 };
                 history.map(|h| {
                     if let Some(sink) = &self.history_sink {
@@ -371,11 +443,13 @@ impl AppFactory for FlowerBridgeApp {
                 })
             })
         };
-        // Retire the link: SuperNodes observe it on their next pull and
-        // deterministically drain by deregistering (DeleteNode) before
-        // the job cell tears down — no timing-based sleep, on success
-        // AND failure paths alike. The deadline only bounds the
-        // pathological crashed-client case.
+        // Retire the link — the CURRENT one, in case a chaos driver
+        // swapped in a recovered replacement: SuperNodes observe it on
+        // their next pull and deterministically drain by deregistering
+        // (DeleteNode) before the job cell tears down — no timing-based
+        // sleep, on success AND failure paths alike. The deadline only
+        // bounds the pathological crashed-client case.
+        let link = grid.link();
         link.retire();
         if !link.wait_all_drained(SHUTDOWN_DRAIN_TIMEOUT) {
             log::warn!(

@@ -213,6 +213,7 @@ impl FederationBuilder {
             ccps,
             admin_kit,
             site_faults,
+            dumped: std::sync::atomic::AtomicBool::new(false),
         })
     }
 }
@@ -226,6 +227,9 @@ pub struct Federation {
     /// present when the federation was built with
     /// [`FederationBuilder::chaos`] or [`FederationBuilder::faults`].
     pub site_faults: Vec<(String, Vec<FaultHandle>)>,
+    /// Teardown counter dump fires once even though `shutdown` runs
+    /// both explicitly and from `Drop`.
+    dumped: std::sync::atomic::AtomicBool,
 }
 
 impl Federation {
@@ -259,6 +263,18 @@ impl Federation {
             ccp.shutdown();
         }
         self.scp.shutdown();
+        // Observability teardown: surface the process-wide counters
+        // (WAL appends/bytes, checkpoints, recovery replays, routing
+        // stats) once per federation, when INFO logging is on.
+        if !self
+            .dumped
+            .swap(true, std::sync::atomic::Ordering::SeqCst)
+        {
+            crate::telemetry::dump_counters(&format!(
+                "federation {} teardown",
+                self.admin_kit.project
+            ));
+        }
     }
 }
 

@@ -42,6 +42,7 @@ use std::time::{Duration, Instant};
 use crate::flare::tracking::SummaryWriter;
 use crate::flower::grid::Grid;
 use crate::flower::message::{ConfigValue, Message};
+use crate::flower::persist::checkpoint::{AsyncCkpt, DriverCkpt, DriverPhase};
 use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::strategy::FitRes;
 
@@ -135,6 +136,30 @@ impl AsyncState {
             window_max_staleness: 0,
             total_folded: 0,
             commits: 0,
+            done: HashSet::new(),
+        }
+    }
+
+    /// Rebuild the state machine at a commit boundary (what an
+    /// [`crate::flower::persist::checkpoint::AsyncCkpt`] records): the
+    /// window is empty, and the dedup set starts EMPTY — results folded
+    /// into the lost window are replayed by recovery as unclaimed and
+    /// must fold again, exactly once.
+    pub fn resume(
+        buffer_size: usize,
+        max_staleness: u64,
+        version: u64,
+        total_folded: u64,
+    ) -> AsyncState {
+        assert!(buffer_size > 0, "async buffer_size must be at least 1");
+        AsyncState {
+            buffer_size,
+            max_staleness,
+            version,
+            folded_in_window: 0,
+            window_max_staleness: 0,
+            total_folded,
+            commits: version,
             done: HashSet::new(),
         }
     }
@@ -259,17 +284,136 @@ impl ServerApp {
             grid.run_active(run_id),
             "run id {run_id} already finished on this link — run ids must be unique per link"
         );
-        let result = self.run_commits(grid, tracker, run_id, &acfg);
+        let state = AsyncState::new(acfg.buffer_size, acfg.max_staleness);
+        let result = self.run_commits_from(
+            grid,
+            tracker,
+            run_id,
+            &acfg,
+            1,
+            self.initial_parameters.clone(),
+            History::default(),
+            state,
+        );
         grid.close_run(run_id);
         result
     }
 
-    fn run_commits<G: Grid + ?Sized>(
+    /// [`ServerApp::run_async`] against a durable grid: on error the run
+    /// is left OPEN on the link so a restarted SuperLink can
+    /// [`ServerApp::resume_async`] it from the last committed version.
+    /// The run is closed only when all commits finish.
+    pub fn run_async_durable<G: Grid + ?Sized>(
+        &mut self,
+        grid: &G,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+        acfg: AsyncConfig,
+    ) -> anyhow::Result<History> {
+        anyhow::ensure!(
+            self.strategy.supports_async(),
+            "strategy {} cannot aggregate asynchronously (e.g. secure aggregation \
+             masks are bound to one round cohort) — use the synchronous driver",
+            self.strategy.name()
+        );
+        anyhow::ensure!(acfg.buffer_size > 0, "async buffer_size must be at least 1");
+        anyhow::ensure!(
+            acfg.max_staleness <= MAX_MAX_STALENESS,
+            "max_staleness {} exceeds the supported bound {MAX_MAX_STALENESS}",
+            acfg.max_staleness
+        );
+        grid.open_run(run_id);
+        anyhow::ensure!(
+            grid.run_active(run_id),
+            "run id {run_id} already finished on this link — run ids must be unique per link"
+        );
+        let state = AsyncState::new(acfg.buffer_size, acfg.max_staleness);
+        let result = self.run_commits_from(
+            grid,
+            tracker,
+            run_id,
+            &acfg,
+            1,
+            self.initial_parameters.clone(),
+            History::default(),
+            state,
+        );
+        if result.is_ok() {
+            grid.close_run(run_id);
+        }
+        result
+    }
+
+    /// Resume an interrupted async run from its last commit-boundary
+    /// driver checkpoint on a recovered link. The window restarts
+    /// empty with an EMPTY dedup set: results folded into the lost
+    /// window were journaled as accepted after the checkpoint cut, so
+    /// recovery replays them as open tasks and they fold again —
+    /// exactly once, into the same window they were lost from.
+    pub fn resume_async<G: Grid + ?Sized>(
+        &mut self,
+        grid: &G,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+    ) -> anyhow::Result<History> {
+        anyhow::ensure!(
+            grid.durable(),
+            "resume_async needs a durable grid (SuperLink built with checkpoints on)"
+        );
+        anyhow::ensure!(
+            grid.run_active(run_id),
+            "run {run_id} is not active on this link — nothing to resume"
+        );
+        let blob = grid.driver_checkpoint(run_id).ok_or_else(|| {
+            anyhow::anyhow!("run {run_id} has no driver checkpoint on this link")
+        })?;
+        let ck = DriverCkpt::decode(&blob)?;
+        let DriverPhase::AsyncCommit(a) = ck.phase else {
+            anyhow::bail!(
+                "run {run_id} was checkpointed by the synchronous driver — \
+                 resume it with ServerApp::resume"
+            );
+        };
+        if let Some(st) = &ck.strategy_state {
+            self.strategy.import_state(st)?;
+        }
+        let acfg = AsyncConfig {
+            buffer_size: a.buffer_size as usize,
+            max_staleness: a.max_staleness,
+        };
+        let state = AsyncState::resume(
+            a.buffer_size as usize,
+            a.max_staleness,
+            a.version,
+            a.total_folded,
+        );
+        let result = self.run_commits_from(
+            grid,
+            tracker,
+            run_id,
+            &acfg,
+            ck.round,
+            ck.parameters,
+            ck.history,
+            state,
+        );
+        if result.is_ok() {
+            grid.close_run(run_id);
+        }
+        result
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_commits_from<G: Grid + ?Sized>(
         &mut self,
         grid: &G,
         tracker: Option<&SummaryWriter>,
         run_id: u64,
         acfg: &AsyncConfig,
+        start_commit: u64,
+        mut params: crate::flower::records::ArrayRecord,
+        mut history: History,
+        mut state: AsyncState,
     ) -> anyhow::Result<History> {
         let cfg = self.config.clone();
         let nodes = grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
@@ -287,21 +431,47 @@ impl ServerApp {
             .map(|d| self.strategy.staleness_weight(d))
             .collect();
         let accept_failures = cfg.accept_failures;
-        let mut params = self.initial_parameters.clone();
-        let mut history = History::default();
-        let mut state = AsyncState::new(acfg.buffer_size, acfg.max_staleness);
+        let durable = grid.durable();
         // task_id -> assigned node, for every unresolved dispatch.
         let mut outstanding: HashMap<u64, u64> = HashMap::new();
         // Nodes with an unresolved task (at most one each).
         let mut busy: HashSet<u64> = HashSet::new();
         // node -> last version dispatched to it (one task per version).
         let mut last_version: HashMap<u64, u64> = HashMap::new();
+        // Reconcile with the link: after recovery every open task
+        // (re-queued, in flight, or accepted-but-unclaimed) is an
+        // outstanding dispatch from this driver's point of view, pinned
+        // to the model version it was cut from. Fresh runs have no open
+        // tasks, so this is a no-op for them.
+        for (task_id, node_id, version) in grid.open_tasks(run_id) {
+            outstanding.insert(task_id, node_id);
+            busy.insert(node_id);
+            last_version.insert(node_id, version);
+        }
         // Claimed-but-unfolded replies: pull_messages can hand over more
         // than the open window needs; the excess carries into the next
         // window (its staleness re-evaluated against the new version).
         let mut ready: VecDeque<Message> = VecDeque::new();
+        if durable {
+            // Cut the entry checkpoint so a crash inside the FIRST
+            // window after (re)start still has a commit boundary to
+            // resume from.
+            let ck = DriverCkpt {
+                round: start_commit,
+                parameters: params.clone(),
+                history: history.clone(),
+                strategy_state: self.strategy.export_state(),
+                phase: DriverPhase::AsyncCommit(AsyncCkpt {
+                    buffer_size: acfg.buffer_size as u64,
+                    max_staleness: acfg.max_staleness,
+                    version: state.version(),
+                    total_folded: state.total_folded(),
+                }),
+            };
+            grid.checkpoint_run(run_id, ck.encode());
+        }
 
-        for commit in 1..=cfg.num_rounds {
+        for commit in start_commit..=cfg.num_rounds {
             let deadline = Instant::now() + cfg.round_timeout;
             // Per-version fit config, computed while no accumulator
             // borrows the strategy.
@@ -330,6 +500,7 @@ impl ServerApp {
                     }
                     match state.offer(res.metadata.message_id, res.metadata.model_version) {
                         Offer::Fold { staleness } => {
+                            let task_id = res.metadata.message_id;
                             agg.accumulate(FitRes {
                                 node_id: node,
                                 parameters: res.content.arrays,
@@ -339,6 +510,9 @@ impl ServerApp {
                                 ),
                                 metrics: res.content.metrics,
                             })?;
+                            if durable {
+                                grid.journal_fold(run_id, task_id);
+                            }
                         }
                         Offer::DropStale { staleness } => {
                             crate::telemetry::bump("asyncfed.stale_results_dropped", 1);
@@ -435,6 +609,9 @@ impl ServerApp {
             }
             params = agg.finalize()?;
             let rec = state.commit();
+            if durable {
+                grid.journal_commit(run_id, rec.version);
+            }
             // Commit-boundary housekeeping: dedup ids that already
             // resolved can never arrive again (link-level dedup), and
             // version bookkeeping for reaped nodes is dead weight — a
@@ -454,6 +631,31 @@ impl ServerApp {
                 rec.max_staleness
             );
             history.commits.push(rec);
+            // Commit-boundary checkpoint — at EVERY commit, not on the
+            // link's result-count cadence: resume restores the
+            // checkpointed version, and any older boundary would leave
+            // replayed results with origins NEWER than the restored
+            // version. Only cut while `ready` is empty: a
+            // claimed-but-unfolded result is gone from the link's
+            // snapshot but not yet in any window, so a checkpoint here
+            // would lose it. (With the durable link's one-result claim
+            // limit the queue always drains before the window fills, so
+            // this never skips in practice.)
+            if durable && ready.is_empty() {
+                let ck = DriverCkpt {
+                    round: commit + 1,
+                    parameters: params.clone(),
+                    history: history.clone(),
+                    strategy_state: self.strategy.export_state(),
+                    phase: DriverPhase::AsyncCommit(AsyncCkpt {
+                        buffer_size: acfg.buffer_size as u64,
+                        max_staleness: acfg.max_staleness,
+                        version: state.version(),
+                        total_folded: state.total_folded(),
+                    }),
+                };
+                grid.checkpoint_run(run_id, ck.encode());
+            }
         }
         history.parameters = params;
         Ok(history)

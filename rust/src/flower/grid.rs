@@ -114,6 +114,44 @@ pub trait Grid: Send + Sync {
         policy: CompletionPolicy,
         f: &mut dyn FnMut(Message) -> anyhow::Result<()>,
     ) -> anyhow::Result<RoundWait>;
+
+    // ---- Durability hooks (default: the grid is not durable) --------
+
+    /// Does this grid journal state and accept driver checkpoints?
+    /// Drivers only persist round state when this is `true`.
+    fn durable(&self) -> bool {
+        false
+    }
+
+    /// Is a checkpoint due (enough journaled results accumulated since
+    /// the last one)? Always `false` on non-durable grids.
+    fn checkpoint_due(&self, _run_id: u64) -> bool {
+        false
+    }
+
+    /// Persist `blob` as the driver's round state for `run_id`,
+    /// atomically with a full grid checkpoint. No-op when not durable.
+    fn checkpoint_run(&self, _run_id: u64, _blob: Vec<u8>) {}
+
+    /// The driver blob last checkpointed (or recovered) for `run_id`.
+    fn driver_checkpoint(&self, _run_id: u64) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Journal that the driver folded message `id` into its running
+    /// aggregate (async drivers). No-op when not durable.
+    fn journal_fold(&self, _run_id: u64, _id: u64) {}
+
+    /// Journal that the driver committed global model `version` (async
+    /// drivers). No-op when not durable.
+    fn journal_commit(&self, _run_id: u64, _version: u64) {}
+
+    /// Messages of `run_id` still open (queued, delivered, or
+    /// resolved-but-unclaimed) as `(id, node_id, model_version)`,
+    /// sorted by id — the wait set a resumed driver reconciles with.
+    fn open_tasks(&self, _run_id: u64) -> Vec<(u64, u64, u64)> {
+        Vec::new()
+    }
 }
 
 /// Native execution: the SuperLink IS the grid — driver calls go
@@ -169,6 +207,34 @@ impl Grid for SuperLink {
             f(Message::from_res(res))
         })
     }
+
+    fn durable(&self) -> bool {
+        self.is_durable()
+    }
+
+    fn checkpoint_due(&self, _run_id: u64) -> bool {
+        SuperLink::checkpoint_due(self)
+    }
+
+    fn checkpoint_run(&self, run_id: u64, blob: Vec<u8>) {
+        self.store_driver_checkpoint(run_id, blob);
+    }
+
+    fn driver_checkpoint(&self, run_id: u64) -> Option<Vec<u8>> {
+        SuperLink::driver_checkpoint(self, run_id)
+    }
+
+    fn journal_fold(&self, run_id: u64, id: u64) {
+        self.journal_async_fold(run_id, id);
+    }
+
+    fn journal_commit(&self, run_id: u64, version: u64) {
+        self.journal_async_commit(run_id, version);
+    }
+
+    fn open_tasks(&self, run_id: u64) -> Vec<(u64, u64, u64)> {
+        SuperLink::open_tasks(self, run_id)
+    }
 }
 
 /// Shared handles delegate: `&Arc<SuperLink>` (and any `Arc<impl Grid>`)
@@ -223,6 +289,34 @@ impl<G: Grid + ?Sized> Grid for Arc<G> {
         f: &mut dyn FnMut(Message) -> anyhow::Result<()>,
     ) -> anyhow::Result<RoundWait> {
         (**self).for_each_reply(run_id, ids, timeout, policy, f)
+    }
+
+    fn durable(&self) -> bool {
+        (**self).durable()
+    }
+
+    fn checkpoint_due(&self, run_id: u64) -> bool {
+        (**self).checkpoint_due(run_id)
+    }
+
+    fn checkpoint_run(&self, run_id: u64, blob: Vec<u8>) {
+        (**self).checkpoint_run(run_id, blob)
+    }
+
+    fn driver_checkpoint(&self, run_id: u64) -> Option<Vec<u8>> {
+        (**self).driver_checkpoint(run_id)
+    }
+
+    fn journal_fold(&self, run_id: u64, id: u64) {
+        (**self).journal_fold(run_id, id)
+    }
+
+    fn journal_commit(&self, run_id: u64, version: u64) {
+        (**self).journal_commit(run_id, version)
+    }
+
+    fn open_tasks(&self, run_id: u64) -> Vec<(u64, u64, u64)> {
+        (**self).open_tasks(run_id)
     }
 }
 

@@ -66,7 +66,7 @@ fn check_pinned_node_id(requested: u64) -> Result<u64, WireError> {
     Ok(requested)
 }
 
-fn write_config(w: &mut Writer, c: &ConfigRecord) {
+pub(crate) fn write_config(w: &mut Writer, c: &ConfigRecord) {
     w.u32(c.len() as u32);
     for (k, v) in c {
         w.str(k);
@@ -91,7 +91,7 @@ fn write_config(w: &mut Writer, c: &ConfigRecord) {
     }
 }
 
-fn read_config(r: &mut FrameReader) -> Result<ConfigRecord, WireError> {
+pub(crate) fn read_config(r: &mut FrameReader) -> Result<ConfigRecord, WireError> {
     let n = r.u32()? as usize;
     if n > MAX_CONFIG_ENTRIES {
         return Err(WireError::TooLong {
@@ -116,7 +116,7 @@ fn read_config(r: &mut FrameReader) -> Result<ConfigRecord, WireError> {
     Ok(ConfigRecord::from_pairs(c))
 }
 
-fn write_metrics(w: &mut Writer, m: &MetricRecord) {
+pub(crate) fn write_metrics(w: &mut Writer, m: &MetricRecord) {
     w.u32(m.len() as u32);
     for (k, v) in m {
         w.str(k);
@@ -124,7 +124,7 @@ fn write_metrics(w: &mut Writer, m: &MetricRecord) {
     }
 }
 
-fn read_metrics(r: &mut FrameReader) -> Result<MetricRecord, WireError> {
+pub(crate) fn read_metrics(r: &mut FrameReader) -> Result<MetricRecord, WireError> {
     let n = r.u32()? as usize;
     if n > MAX_METRIC_ENTRIES {
         return Err(WireError::TooLong {
@@ -152,7 +152,7 @@ fn read_metrics(r: &mut FrameReader) -> Result<MetricRecord, WireError> {
 /// Asserts the same limits the decoder enforces, so an oversized record
 /// fails loudly at the sender (like the old `Writer::f32s` size assert)
 /// instead of as a confusing remote `WireError` at the peer.
-fn write_record(w: &mut Writer, rec: &ArrayRecord) {
+pub(crate) fn write_record(w: &mut Writer, rec: &ArrayRecord) {
     assert!(
         rec.len() <= MAX_TENSORS_PER_RECORD,
         "record has {} tensors, wire limit is {MAX_TENSORS_PER_RECORD}",
@@ -191,7 +191,7 @@ fn write_record(w: &mut Writer, rec: &ArrayRecord) {
 
 /// Decode a record zero-copy: every tensor's payload is a shared view
 /// into the frame buffer the reader wraps.
-fn read_record(r: &mut FrameReader) -> Result<ArrayRecord, WireError> {
+pub(crate) fn read_record(r: &mut FrameReader) -> Result<ArrayRecord, WireError> {
     let n = r.u32()? as usize;
     if n > MAX_TENSORS_PER_RECORD {
         return Err(WireError::TooLong {
@@ -303,14 +303,14 @@ impl MessageType {
     }
 }
 
-fn write_message_type(w: &mut Writer, t: &MessageType) {
+pub(crate) fn write_message_type(w: &mut Writer, t: &MessageType) {
     w.u8(t.wire_tag());
     if let MessageType::Custom(name) = t {
         w.str(name);
     }
 }
 
-fn read_message_type(r: &mut FrameReader) -> Result<MessageType, WireError> {
+pub(crate) fn read_message_type(r: &mut FrameReader) -> Result<MessageType, WireError> {
     Ok(match r.u8()? {
         0 => MessageType::Train,
         1 => MessageType::Evaluate,

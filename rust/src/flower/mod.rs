@@ -10,6 +10,7 @@ pub mod dp;
 pub mod grid;
 pub mod message;
 pub mod mods;
+pub mod persist;
 pub mod records;
 pub mod secagg;
 pub mod run;
@@ -31,8 +32,12 @@ pub use message::{
     TaskRes,
 };
 pub use mods::{ClientMod, ModStack};
+pub use persist::Durability;
 pub use records::{ArrayRecord, DType, RecordDict, StateRecord, Tensor};
-pub use run::{drive_runs, run_native, run_shared, FleetOptions, NativeFleet};
+pub use run::{
+    drive_runs, run_native, run_shared, FleetOptions, LinkSwitch, NativeFleet, SwitchConnector,
+    SwitchedFleet,
+};
 pub use secagg::{SecAggFedAvg, SecAggMod};
 pub use serverapp::{History, Participation, RoundRecord, ServerApp, ServerConfig};
 pub use superlink::{CompletionPolicy, LinkConfig, ResultTimeout, RoundWait, SuperLink};

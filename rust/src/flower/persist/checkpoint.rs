@@ -1,0 +1,695 @@
+//! Periodic checkpoints: a full snapshot of the SuperLink's run state
+//! (plus each run's opaque driver blob) in one CRC-framed file,
+//! replaced atomically via tmp + rename so a crash mid-checkpoint
+//! leaves the previous checkpoint intact.
+//!
+//! A checkpoint records the WAL offset it was cut at: recovery loads
+//! the snapshot and replays only the WAL tail past that offset, which
+//! is what bounds recovery time as runs get long.
+//!
+//! [`DriverCkpt`] is the ServerApp-side companion: the round/commit
+//! cursor, current parameters, history so far, exported strategy state,
+//! and — mid-fit — the accumulator snapshot. It rides inside
+//! [`Checkpoint::drivers`] as opaque bytes so the link stays agnostic
+//! of driver internals.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use super::wal::{crc32, read_task_ins, read_task_res, write_task_ins, write_task_res};
+use crate::flower::asyncfed::AsyncCommit;
+use crate::flower::message::{read_metrics, read_record, write_metrics, write_record};
+use crate::flower::message::{TaskIns, TaskRes};
+use crate::flower::records::{ArrayRecord, MetricRecord};
+use crate::flower::serverapp::{History, Participation, RoundRecord};
+use crate::flower::strategy::FitRes;
+use crate::util::bytes::{Bytes, FrameReader, WireError, Writer};
+
+// ---------------------------------------------------------------------------
+// Link-side snapshot types
+// ---------------------------------------------------------------------------
+
+/// A delivered-but-unresolved task at snapshot time. Durable links
+/// retain every in-flight instruction (not just redeliverable ones) so
+/// the checkpoint can re-queue it to the SAME node after recovery —
+/// deterministic re-execution is what keeps recovery bit-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InflightSnapshot {
+    pub task_id: u64,
+    pub node_id: u64,
+    pub attempt: u32,
+    pub ins: Option<TaskIns>,
+}
+
+/// One run's full [`crate::flower::superlink::RunState`], in sorted,
+/// deterministic order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunSnapshot {
+    pub run_id: u64,
+    pub active: bool,
+    /// Queued-undelivered instructions keyed by assigned node.
+    pub pending: Vec<(u64, Vec<TaskIns>)>,
+    /// Delivered-unresolved tasks.
+    pub inflight: Vec<InflightSnapshot>,
+    /// Accepted, unclaimed results (model versions already stamped).
+    pub results: Vec<TaskRes>,
+    pub failed: Vec<(u64, String)>,
+    pub done: Vec<u64>,
+    /// Per-task model version (stamped onto the result at acceptance).
+    pub task_version: Vec<(u64, u64)>,
+    /// Nodes that acknowledged this run's retirement.
+    pub acked: Vec<u64>,
+}
+
+/// The whole link, cut at `wal_offset`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    /// WAL byte offset this snapshot is consistent with: recovery
+    /// replays only records past it.
+    pub wal_offset: u64,
+    pub next_node: u64,
+    pub next_task: u64,
+    pub runs: Vec<RunSnapshot>,
+    /// Latest opaque driver blob per run id ([`DriverCkpt`] bytes).
+    pub drivers: Vec<(u64, Vec<u8>)>,
+}
+
+fn write_ins_list(w: &mut Writer, list: &[TaskIns]) {
+    w.u32(list.len() as u32);
+    for ins in list {
+        write_task_ins(w, ins);
+    }
+}
+
+fn read_ins_list(r: &mut FrameReader) -> Result<Vec<TaskIns>, WireError> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        out.push(read_task_ins(r)?);
+    }
+    Ok(out)
+}
+
+fn write_run(w: &mut Writer, run: &RunSnapshot) {
+    w.u64(run.run_id);
+    w.u8(run.active as u8);
+    w.u32(run.pending.len() as u32);
+    for (node, list) in &run.pending {
+        w.u64(*node);
+        write_ins_list(w, list);
+    }
+    w.u32(run.inflight.len() as u32);
+    for t in &run.inflight {
+        w.u64(t.task_id);
+        w.u64(t.node_id);
+        w.u32(t.attempt);
+        match &t.ins {
+            Some(ins) => {
+                w.u8(1);
+                write_task_ins(w, ins);
+            }
+            None => w.u8(0),
+        }
+    }
+    w.u32(run.results.len() as u32);
+    for res in &run.results {
+        write_task_res(w, res);
+    }
+    w.u32(run.failed.len() as u32);
+    for (tid, reason) in &run.failed {
+        w.u64(*tid);
+        w.str(reason);
+    }
+    w.u32(run.done.len() as u32);
+    for tid in &run.done {
+        w.u64(*tid);
+    }
+    w.u32(run.task_version.len() as u32);
+    for (tid, v) in &run.task_version {
+        w.u64(*tid);
+        w.u64(*v);
+    }
+    w.u32(run.acked.len() as u32);
+    for node in &run.acked {
+        w.u64(*node);
+    }
+}
+
+fn read_run(r: &mut FrameReader) -> Result<RunSnapshot, WireError> {
+    let run_id = r.u64()?;
+    let active = r.u8()? != 0;
+    let n = r.u32()? as usize;
+    let mut pending = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let node = r.u64()?;
+        pending.push((node, read_ins_list(r)?));
+    }
+    let n = r.u32()? as usize;
+    let mut inflight = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let task_id = r.u64()?;
+        let node_id = r.u64()?;
+        let attempt = r.u32()?;
+        let ins = match r.u8()? {
+            0 => None,
+            _ => Some(read_task_ins(r)?),
+        };
+        inflight.push(InflightSnapshot {
+            task_id,
+            node_id,
+            attempt,
+            ins,
+        });
+    }
+    let n = r.u32()? as usize;
+    let mut results = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        results.push(read_task_res(r)?);
+    }
+    let n = r.u32()? as usize;
+    let mut failed = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        failed.push((r.u64()?, r.str()?));
+    }
+    let n = r.u32()? as usize;
+    let mut done = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        done.push(r.u64()?);
+    }
+    let n = r.u32()? as usize;
+    let mut task_version = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        task_version.push((r.u64()?, r.u64()?));
+    }
+    let n = r.u32()? as usize;
+    let mut acked = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        acked.push(r.u64()?);
+    }
+    Ok(RunSnapshot {
+        run_id,
+        active,
+        pending,
+        inflight,
+        results,
+        failed,
+        done,
+        task_version,
+        acked,
+    })
+}
+
+impl Checkpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.wal_offset);
+        w.u64(self.next_node);
+        w.u64(self.next_task);
+        w.u32(self.runs.len() as u32);
+        for run in &self.runs {
+            write_run(&mut w, run);
+        }
+        w.u32(self.drivers.len() as u32);
+        for (run_id, blob) in &self.drivers {
+            w.u64(*run_id);
+            w.bytes(blob);
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(payload: Bytes) -> Result<Checkpoint, WireError> {
+        let mut r = FrameReader::new(payload);
+        let wal_offset = r.u64()?;
+        let next_node = r.u64()?;
+        let next_task = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut runs = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            runs.push(read_run(&mut r)?);
+        }
+        let n = r.u32()? as usize;
+        let mut drivers = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let run_id = r.u64()?;
+            let blob = r.bytes_shared()?;
+            drivers.push((run_id, blob.as_slice().to_vec()));
+        }
+        Ok(Checkpoint {
+            wal_offset,
+            next_node,
+            next_task,
+            runs,
+            drivers,
+        })
+    }
+
+    /// Atomically replace the checkpoint at `path` (write tmp, fsync,
+    /// rename): a crash mid-write leaves the previous checkpoint valid.
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        let payload = self.encode();
+        let mut buf = Vec::with_capacity(payload.len() + 8);
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        let tmp = path.with_extension("ckpt.tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_data()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        crate::telemetry::bump("checkpoint.count", 1);
+        crate::telemetry::bump("checkpoint.bytes", buf.len() as i64);
+        Ok(())
+    }
+
+    /// Load the checkpoint at `path`; `None` (with a warning) when the
+    /// file is missing, short, CRC-damaged, or undecodable — recovery
+    /// then replays the WAL from offset 0 instead of trusting garbage.
+    pub fn read(path: &Path) -> Option<Checkpoint> {
+        let data = match std::fs::read(path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(e) => {
+                log::warn!("checkpoint {}: unreadable: {e}", path.display());
+                return None;
+            }
+        };
+        if data.len() < 8 {
+            log::warn!("checkpoint {}: short file, ignoring", path.display());
+            return None;
+        }
+        let len = u32::from_le_bytes([data[0], data[1], data[2], data[3]]) as usize;
+        let want = u32::from_le_bytes([data[4], data[5], data[6], data[7]]);
+        if data.len() != len + 8 {
+            log::warn!("checkpoint {}: truncated, ignoring", path.display());
+            return None;
+        }
+        if crc32(&data[8..]) != want {
+            log::warn!("checkpoint {}: CRC mismatch, ignoring", path.display());
+            return None;
+        }
+        let shared = Bytes::from_vec(data);
+        match Checkpoint::decode(shared.slice(8, len)) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                log::warn!("checkpoint {}: undecodable: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver-side checkpoint blob
+// ---------------------------------------------------------------------------
+
+/// Mid-fit accumulator snapshot: the round's task ids, the results
+/// folded so far (via [`crate::flower::strategy::FitAgg::snapshot`]),
+/// and the per-node fit metadata the metric aggregation needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FitCkpt {
+    pub task_ids: Vec<u64>,
+    pub results: Vec<FitRes>,
+    pub fit_meta: Vec<(u64, u64, MetricRecord)>,
+}
+
+/// Async driver state at a commit boundary. Dispatch bookkeeping
+/// (which tasks are outstanding on which nodes) is NOT stored here:
+/// the recovered link knows it exactly (`open_tasks`), including the
+/// dispatches that happened after this checkpoint was cut.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncCkpt {
+    pub buffer_size: u64,
+    pub max_staleness: u64,
+    /// Committed model version at the checkpoint.
+    pub version: u64,
+    pub total_folded: u64,
+}
+
+/// Where the driver was when the blob was cut.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DriverPhase {
+    /// Sync driver, about to start round [`DriverCkpt::round`]; resume
+    /// re-runs the round from scratch (deterministic clients + the
+    /// link's done-set make the re-run fold identical results).
+    RoundStart,
+    /// Sync driver, mid-fit of round [`DriverCkpt::round`].
+    MidFit(FitCkpt),
+    /// Async driver at a commit boundary; [`DriverCkpt::round`] is the
+    /// next commit index.
+    AsyncCommit(AsyncCkpt),
+}
+
+/// The ServerApp's resume blob, stored via `Grid::checkpoint_run` and
+/// read back by `ServerApp::resume` after `SuperLink::recover`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriverCkpt {
+    /// Next round (RoundStart), current round (MidFit), or next commit
+    /// (AsyncCommit).
+    pub round: u64,
+    /// Parameters entering that round/commit.
+    pub parameters: ArrayRecord,
+    /// History completed so far.
+    pub history: History,
+    /// `Strategy::export_state()` at the cut (None for stateless).
+    pub strategy_state: Option<ArrayRecord>,
+    pub phase: DriverPhase,
+}
+
+fn write_fit_res(w: &mut Writer, res: &FitRes) {
+    w.u64(res.node_id);
+    write_record(w, &res.parameters);
+    w.u64(res.num_examples);
+    write_metrics(w, &res.metrics);
+}
+
+fn read_fit_res(r: &mut FrameReader) -> Result<FitRes, WireError> {
+    Ok(FitRes {
+        node_id: r.u64()?,
+        parameters: read_record(r)?,
+        num_examples: r.u64()?,
+        metrics: read_metrics(r)?,
+    })
+}
+
+fn write_history(w: &mut Writer, h: &History) {
+    w.u32(h.rounds.len() as u32);
+    for rec in &h.rounds {
+        w.u64(rec.round);
+        write_metrics(w, &rec.fit_metrics);
+        match rec.eval_loss {
+            Some(l) => {
+                w.u8(1);
+                w.f64(l);
+            }
+            None => w.u8(0),
+        }
+        write_metrics(w, &rec.eval_metrics);
+        w.u32(rec.per_client_eval.len() as u32);
+        for (node, loss, m) in &rec.per_client_eval {
+            w.u64(*node);
+            w.f64(*loss);
+            write_metrics(w, m);
+        }
+        w.u64(rec.participation.sampled as u64);
+        w.u64(rec.participation.completed as u64);
+        w.u64(rec.participation.dropped as u64);
+    }
+    w.u32(h.commits.len() as u32);
+    for c in &h.commits {
+        w.u64(c.version);
+        w.u64(c.results_folded as u64);
+        w.u64(c.max_staleness);
+    }
+    write_record(w, &h.parameters);
+}
+
+fn read_history(r: &mut FrameReader) -> Result<History, WireError> {
+    let n = r.u32()? as usize;
+    let mut rounds = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let round = r.u64()?;
+        let fit_metrics = read_metrics(r)?;
+        let eval_loss = match r.u8()? {
+            0 => None,
+            _ => Some(r.f64()?),
+        };
+        let eval_metrics = read_metrics(r)?;
+        let m = r.u32()? as usize;
+        let mut per_client_eval = Vec::with_capacity(m.min(1 << 16));
+        for _ in 0..m {
+            per_client_eval.push((r.u64()?, r.f64()?, read_metrics(r)?));
+        }
+        let participation = Participation {
+            sampled: r.u64()? as usize,
+            completed: r.u64()? as usize,
+            dropped: r.u64()? as usize,
+        };
+        rounds.push(RoundRecord {
+            round,
+            fit_metrics,
+            eval_loss,
+            eval_metrics,
+            per_client_eval,
+            participation,
+        });
+    }
+    let n = r.u32()? as usize;
+    let mut commits = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        commits.push(AsyncCommit {
+            version: r.u64()?,
+            results_folded: r.u64()? as usize,
+            max_staleness: r.u64()?,
+        });
+    }
+    let parameters = read_record(r)?;
+    Ok(History {
+        rounds,
+        commits,
+        parameters,
+    })
+}
+
+impl DriverCkpt {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.round);
+        write_record(&mut w, &self.parameters);
+        match &self.strategy_state {
+            Some(s) => {
+                w.u8(1);
+                write_record(&mut w, s);
+            }
+            None => w.u8(0),
+        }
+        write_history(&mut w, &self.history);
+        match &self.phase {
+            DriverPhase::RoundStart => w.u8(0),
+            DriverPhase::MidFit(fit) => {
+                w.u8(1);
+                w.u32(fit.task_ids.len() as u32);
+                for t in &fit.task_ids {
+                    w.u64(*t);
+                }
+                w.u32(fit.results.len() as u32);
+                for res in &fit.results {
+                    write_fit_res(&mut w, res);
+                }
+                w.u32(fit.fit_meta.len() as u32);
+                for (node, examples, m) in &fit.fit_meta {
+                    w.u64(*node);
+                    w.u64(*examples);
+                    write_metrics(&mut w, m);
+                }
+            }
+            DriverPhase::AsyncCommit(a) => {
+                w.u8(2);
+                w.u64(a.buffer_size);
+                w.u64(a.max_staleness);
+                w.u64(a.version);
+                w.u64(a.total_folded);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(blob: &[u8]) -> anyhow::Result<DriverCkpt> {
+        let mut r = FrameReader::new(Bytes::copy_from_slice(blob));
+        let round = r.u64()?;
+        let parameters = read_record(&mut r)?;
+        let strategy_state = match r.u8()? {
+            0 => None,
+            _ => Some(read_record(&mut r)?),
+        };
+        let history = read_history(&mut r)?;
+        let phase = match r.u8()? {
+            0 => DriverPhase::RoundStart,
+            1 => {
+                let n = r.u32()? as usize;
+                let mut task_ids = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    task_ids.push(r.u64()?);
+                }
+                let n = r.u32()? as usize;
+                let mut results = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    results.push(read_fit_res(&mut r)?);
+                }
+                let n = r.u32()? as usize;
+                let mut fit_meta = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    fit_meta.push((r.u64()?, r.u64()?, read_metrics(&mut r)?));
+                }
+                DriverPhase::MidFit(FitCkpt {
+                    task_ids,
+                    results,
+                    fit_meta,
+                })
+            }
+            2 => DriverPhase::AsyncCommit(AsyncCkpt {
+                buffer_size: r.u64()?,
+                max_staleness: r.u64()?,
+                version: r.u64()?,
+                total_folded: r.u64()?,
+            }),
+            t => anyhow::bail!("driver checkpoint: unknown phase tag {t}"),
+        };
+        Ok(DriverCkpt {
+            round,
+            parameters,
+            history,
+            strategy_state,
+            phase,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::message::MessageType;
+    use crate::flower::persist::test_dir;
+
+    fn sample_checkpoint() -> Checkpoint {
+        let ins = TaskIns {
+            task_id: 5,
+            run_id: 1,
+            round: 2,
+            message_type: MessageType::Train,
+            attempt: 0,
+            redeliver: false,
+            model_version: 1,
+            parameters: ArrayRecord::from_flat(&[0.25; 4]),
+            config: Default::default(),
+        };
+        let res = TaskRes {
+            task_id: 4,
+            run_id: 1,
+            node_id: 2,
+            error: String::new(),
+            message_type: MessageType::Train,
+            parameters: ArrayRecord::from_flat(&[1.5; 4]),
+            num_examples: 12,
+            loss: 0.0,
+            metrics: MetricRecord::from_pairs(vec![("acc".into(), 0.5)]),
+            configs: Default::default(),
+            model_version: 1,
+        };
+        Checkpoint {
+            wal_offset: 321,
+            next_node: 4,
+            next_task: 9,
+            runs: vec![RunSnapshot {
+                run_id: 1,
+                active: true,
+                pending: vec![(3, vec![ins.clone()])],
+                inflight: vec![
+                    InflightSnapshot {
+                        task_id: 6,
+                        node_id: 1,
+                        attempt: 1,
+                        ins: Some(ins),
+                    },
+                    InflightSnapshot {
+                        task_id: 7,
+                        node_id: 2,
+                        attempt: 0,
+                        ins: None,
+                    },
+                ],
+                results: vec![res],
+                failed: vec![(2, "node 9 unavailable".into())],
+                done: vec![2, 4],
+                task_version: vec![(5, 1), (6, 1), (7, 1)],
+                acked: vec![1],
+            }],
+            drivers: vec![(1, vec![9, 8, 7])],
+        }
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip() {
+        let dir = test_dir("ckpt-roundtrip");
+        let path = dir.join("superlink.ckpt");
+        let ckpt = sample_checkpoint();
+        ckpt.write(&path).unwrap();
+        let back = Checkpoint::read(&path).unwrap();
+        assert_eq!(back, ckpt);
+        // Overwrite is atomic-replace: a second write still reads back.
+        let mut ckpt2 = ckpt.clone();
+        ckpt2.wal_offset = 999;
+        ckpt2.write(&path).unwrap();
+        assert_eq!(Checkpoint::read(&path).unwrap().wal_offset, 999);
+    }
+
+    #[test]
+    fn corrupt_or_missing_checkpoint_is_none() {
+        let dir = test_dir("ckpt-corrupt");
+        let path = dir.join("superlink.ckpt");
+        assert!(Checkpoint::read(&path).is_none(), "missing file");
+        sample_checkpoint().write(&path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let at = data.len() / 2;
+        data[at] ^= 0x10;
+        std::fs::write(&path, &data).unwrap();
+        assert!(Checkpoint::read(&path).is_none(), "bit flip");
+        std::fs::write(&path, b"tiny").unwrap();
+        assert!(Checkpoint::read(&path).is_none(), "short file");
+    }
+
+    #[test]
+    fn driver_ckpt_roundtrip_all_phases() {
+        let history = History {
+            rounds: vec![RoundRecord {
+                round: 1,
+                fit_metrics: MetricRecord::from_pairs(vec![("loss".into(), 0.25)]),
+                eval_loss: Some(0.5),
+                eval_metrics: MetricRecord::default(),
+                per_client_eval: vec![(1, 0.5, MetricRecord::default())],
+                participation: Participation {
+                    sampled: 3,
+                    completed: 2,
+                    dropped: 1,
+                },
+            }],
+            commits: vec![AsyncCommit {
+                version: 1,
+                results_folded: 2,
+                max_staleness: 0,
+            }],
+            parameters: ArrayRecord::from_flat(&[2.0; 3]),
+        };
+        let phases = vec![
+            DriverPhase::RoundStart,
+            DriverPhase::MidFit(FitCkpt {
+                task_ids: vec![4, 5, 6],
+                results: vec![FitRes {
+                    node_id: 2,
+                    parameters: ArrayRecord::from_flat(&[1.0; 3]),
+                    num_examples: 7,
+                    metrics: MetricRecord::default(),
+                }],
+                fit_meta: vec![(2, 7, MetricRecord::default())],
+            }),
+            DriverPhase::AsyncCommit(AsyncCkpt {
+                buffer_size: 4,
+                max_staleness: 0,
+                version: 3,
+                total_folded: 12,
+            }),
+        ];
+        for phase in phases {
+            let ckpt = DriverCkpt {
+                round: 2,
+                parameters: ArrayRecord::from_flat(&[0.5; 3]),
+                history: history.clone(),
+                strategy_state: Some(ArrayRecord::from_flat(&[9.0])),
+                phase,
+            };
+            let back = DriverCkpt::decode(&ckpt.encode()).unwrap();
+            assert_eq!(back, ckpt);
+            assert!(back.parameters.bits_equal(&ckpt.parameters));
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Durability for the SuperLink: write-ahead log, checkpoints, and
+//! bit-identical crash recovery.
+//!
+//! Every state transition the link makes — run registered, task
+//! queued/delivered/redelivered/failed, result accepted, async fold
+//! and commit, run finished — is appended to a length-prefixed,
+//! CRC-framed WAL ([`wal`]). With [`Durability::Checkpointed`], a
+//! full [`checkpoint::Checkpoint`] of run state (plus each driver's
+//! opaque resume blob) is cut every `every_results` accepted results,
+//! bounding recovery to the WAL tail past the checkpoint.
+//!
+//! What is journaled: the link's task/result/done-set state, stamped
+//! model versions, async folds and commits. What is NOT journaled:
+//! node registrations (leases are ephemeral — survivors re-register
+//! with pinned ids after recovery) and result claims (a result handed
+//! to a driver that crashed before folding it replays back into the
+//! recovered link and is claimed again; the done-set makes folding
+//! exactly-once). Secret-aggregation caveat: `SecAggFedAvg` declines
+//! accumulator snapshots (masked pairwise sums must never be
+//! persisted partially), so its runs recover to the last round
+//! boundary rather than mid-fit.
+//!
+//! Recovering after a crash:
+//!
+//! ```no_run
+//! use flarelink::flower::persist::Durability;
+//! use flarelink::flower::superlink::{LinkConfig, SuperLink};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let dur = Durability::Checkpointed { dir: "/tmp/link".into(), every_results: 8 };
+//! // A fresh durable link journals as it goes ...
+//! let link = SuperLink::with_durability(LinkConfig::default(), dur.clone())?;
+//! // ... and after a crash, `recover` replays checkpoint + WAL tail,
+//! // re-queues in-flight tasks to their original nodes, and resumes.
+//! let link = SuperLink::recover(LinkConfig::default(), dur)?;
+//! # Ok(()) }
+//! ```
+
+pub mod checkpoint;
+pub mod recovery;
+pub mod wal;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use self::checkpoint::Checkpoint;
+use self::recovery::RecoveredState;
+use self::wal::{Wal, WalRecord};
+
+/// WAL file name inside a durability directory.
+pub const WAL_FILE: &str = "superlink.wal";
+/// Checkpoint file name inside a durability directory.
+pub const CKPT_FILE: &str = "superlink.ckpt";
+
+/// How (and whether) a SuperLink journals its state.
+#[derive(Clone, Debug, Default)]
+pub enum Durability {
+    /// No journaling (the pre-existing in-memory behavior).
+    #[default]
+    Off,
+    /// WAL only: every transition is journaled; recovery replays the
+    /// whole log. No driver-side checkpoints, so drivers resume at
+    /// run granularity.
+    Wal { dir: PathBuf },
+    /// WAL plus a full checkpoint every `every_results` accepted
+    /// results. Drivers store resume blobs, so recovery continues
+    /// mid-round / mid-commit-window.
+    Checkpointed { dir: PathBuf, every_results: u64 },
+}
+
+impl Durability {
+    pub fn dir(&self) -> Option<&Path> {
+        match self {
+            Durability::Off => None,
+            Durability::Wal { dir } | Durability::Checkpointed { dir, .. } => Some(dir),
+        }
+    }
+}
+
+/// The link's handle on its durability directory: the open WAL, the
+/// checkpoint cadence counter, and the drivers' latest resume blobs.
+///
+/// Lock order: callers (the SuperLink) always hold the runs lock
+/// before touching the WAL mutex — the WAL is a leaf lock, which also
+/// serializes appends against checkpoint offset capture.
+pub struct Persistor {
+    dir: PathBuf,
+    wal: Mutex<Wal>,
+    every_results: Option<u64>,
+    results_since: AtomicU64,
+    drivers: Mutex<BTreeMap<u64, Vec<u8>>>,
+}
+
+impl Persistor {
+    /// Start a fresh journal: truncates any prior WAL and removes any
+    /// prior checkpoint (a fresh link must not resurrect old state).
+    pub fn create(dir: &Path, every_results: Option<u64>) -> anyhow::Result<Persistor> {
+        std::fs::create_dir_all(dir)?;
+        let _ = std::fs::remove_file(dir.join(CKPT_FILE));
+        let wal = Wal::create(&dir.join(WAL_FILE))?;
+        Ok(Persistor {
+            dir: dir.to_path_buf(),
+            wal: Mutex::new(wal),
+            every_results,
+            results_since: AtomicU64::new(0),
+            drivers: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Re-open the journal after recovery, truncating any torn WAL
+    /// suffix and adopting the recovered drivers' blobs.
+    pub fn resume(
+        dir: &Path,
+        every_results: Option<u64>,
+        state: &RecoveredState,
+    ) -> anyhow::Result<Persistor> {
+        std::fs::create_dir_all(dir)?;
+        let wal = Wal::open_at(&dir.join(WAL_FILE), state.wal_valid_len)?;
+        Ok(Persistor {
+            dir: dir.to_path_buf(),
+            wal: Mutex::new(wal),
+            every_results,
+            results_since: AtomicU64::new(0),
+            drivers: Mutex::new(state.drivers.iter().cloned().collect()),
+        })
+    }
+
+    /// Append one record. Journal failures are logged and counted
+    /// (`wal.append_errors`), never panicked on: the link keeps
+    /// serving, degraded to in-memory durability.
+    pub fn append(&self, rec: &WalRecord) {
+        let mut wal = self.wal.lock().unwrap();
+        if let Err(e) = wal.append(rec) {
+            crate::telemetry::bump("wal.append_errors", 1);
+            log::error!("wal append failed ({}): {e}", self.dir.display());
+        }
+    }
+
+    /// Note an accepted result for checkpoint cadence.
+    pub fn note_result(&self) {
+        self.results_since.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// True when enough results accumulated since the last checkpoint.
+    pub fn checkpoint_due(&self) -> bool {
+        self.every_results
+            .is_some_and(|n| self.results_since.load(Ordering::Relaxed) >= n)
+    }
+
+    pub fn wants_checkpoints(&self) -> bool {
+        self.every_results.is_some()
+    }
+
+    pub fn set_driver(&self, run_id: u64, blob: Vec<u8>) {
+        self.drivers.lock().unwrap().insert(run_id, blob);
+    }
+
+    pub fn driver(&self, run_id: u64) -> Option<Vec<u8>> {
+        self.drivers.lock().unwrap().get(&run_id).cloned()
+    }
+
+    pub fn drivers_vec(&self) -> Vec<(u64, Vec<u8>)> {
+        self.drivers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (*k, v.clone()))
+            .collect()
+    }
+
+    /// Current WAL length. Callers capture this under the runs lock so
+    /// the checkpoint offset is consistent with the snapshot.
+    pub fn wal_offset(&self) -> u64 {
+        self.wal.lock().unwrap().offset()
+    }
+
+    /// Write `ckpt` atomically; resets the cadence counter on success.
+    /// Failures are logged and counted (`checkpoint.errors`).
+    pub fn write_checkpoint(&self, ckpt: &Checkpoint) {
+        match ckpt.write(&self.dir.join(CKPT_FILE)) {
+            Ok(()) => {
+                self.results_since.store(0, Ordering::Relaxed);
+            }
+            Err(e) => {
+                crate::telemetry::bump("checkpoint.errors", 1);
+                log::error!("checkpoint write failed ({}): {e}", self.dir.display());
+            }
+        }
+    }
+}
+
+/// Unique scratch directory for persistence tests.
+#[cfg(test)]
+pub(crate) fn test_dir(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "flarelink-persist-{}-{}-{}",
+        std::process::id(),
+        tag,
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}

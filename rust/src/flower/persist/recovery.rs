@@ -1,0 +1,432 @@
+//! Replay: fold the last checkpoint plus the WAL tail back into run
+//! state a fresh [`crate::flower::superlink::SuperLink`] can adopt.
+//!
+//! The algorithm is pure (files in, [`RecoveredState`] out): seed
+//! per-run working state from the checkpoint, apply every WAL record
+//! past the checkpoint's offset in order, then canonicalize. Tasks
+//! that were delivered but unresolved at the crash are re-queued as
+//! pending for their ORIGINAL node — with deterministic clients,
+//! re-executing on the same node reproduces the same result bits,
+//! which is what makes recovery exact rather than approximate.
+//!
+//! Claims are deliberately not journaled: a result handed to a driver
+//! that died before folding it is replayed back into the recovered
+//! link and simply claimed again. Together with the link's done-set
+//! (duplicate accepts are dropped) every result is folded exactly
+//! once across a crash.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use super::checkpoint::{Checkpoint, RunSnapshot};
+use super::wal::{self, WalRecord};
+use super::{CKPT_FILE, WAL_FILE};
+use crate::flower::message::{TaskIns, TaskRes};
+
+/// Everything `SuperLink::recover` needs to resume: canonical run
+/// snapshots (in-flight work re-queued as pending), id counters, the
+/// drivers' opaque resume blobs, and where the valid WAL ends.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecoveredState {
+    pub next_node: u64,
+    pub next_task: u64,
+    pub runs: Vec<RunSnapshot>,
+    pub drivers: Vec<(u64, Vec<u8>)>,
+    /// Byte length of the valid WAL prefix; the recovered link keeps
+    /// appending from here (a torn suffix is truncated away).
+    pub wal_valid_len: u64,
+    /// True when the WAL ended in a truncated or CRC-damaged record.
+    pub torn: bool,
+    /// Records replayed past the checkpoint.
+    pub replayed: u64,
+}
+
+/// Mutable per-run working state during replay.
+#[derive(Default)]
+struct Working {
+    active: bool,
+    /// Queued-or-delivered, unresolved tasks: task id -> (assigned
+    /// node, attempt, instruction if retained).
+    unresolved: BTreeMap<u64, (u64, u32, Option<TaskIns>)>,
+    results: BTreeMap<u64, TaskRes>,
+    failed: BTreeMap<u64, String>,
+    done: BTreeSet<u64>,
+    task_version: BTreeMap<u64, u64>,
+    acked: BTreeSet<u64>,
+}
+
+impl Working {
+    fn from_snapshot(snap: &RunSnapshot) -> Working {
+        let mut w = Working {
+            active: snap.active,
+            ..Default::default()
+        };
+        for (node, list) in &snap.pending {
+            for ins in list {
+                w.unresolved
+                    .insert(ins.task_id, (*node, ins.attempt, Some(ins.clone())));
+            }
+        }
+        for t in &snap.inflight {
+            w.unresolved
+                .insert(t.task_id, (t.node_id, t.attempt, t.ins.clone()));
+        }
+        for res in &snap.results {
+            w.results.insert(res.task_id, res.clone());
+        }
+        w.failed.extend(snap.failed.iter().cloned());
+        w.done.extend(snap.done.iter().copied());
+        w.task_version.extend(snap.task_version.iter().copied());
+        w.acked.extend(snap.acked.iter().copied());
+        w
+    }
+
+    fn resolve(&mut self, task_id: u64) {
+        self.unresolved.remove(&task_id);
+        self.task_version.remove(&task_id);
+    }
+
+    /// Canonical snapshot: unresolved work becomes pending for its
+    /// original node; instructions lost across recovery (journaled
+    /// without a retained payload) fail typed instead of hanging.
+    fn into_snapshot(mut self, run_id: u64) -> RunSnapshot {
+        let mut pending: BTreeMap<u64, Vec<TaskIns>> = BTreeMap::new();
+        for (task_id, (node, _attempt, ins)) in std::mem::take(&mut self.unresolved) {
+            match ins {
+                Some(ins) => pending.entry(node).or_default().push(ins),
+                None => {
+                    self.done.insert(task_id);
+                    self.failed
+                        .insert(task_id, "instruction lost across recovery".into());
+                    self.task_version.remove(&task_id);
+                }
+            }
+        }
+        RunSnapshot {
+            run_id,
+            active: self.active,
+            pending: pending.into_iter().collect(),
+            inflight: Vec::new(),
+            results: self.results.into_values().collect(),
+            failed: self.failed.into_iter().collect(),
+            done: self.done.into_iter().collect(),
+            task_version: self.task_version.into_iter().collect(),
+            acked: self.acked.into_iter().collect(),
+        }
+    }
+}
+
+/// Load `<dir>/superlink.ckpt` + `<dir>/superlink.wal` and replay.
+/// Never panics on damaged input: a corrupt checkpoint is ignored
+/// (full-WAL replay instead), a torn WAL tail is dropped.
+pub fn load(dir: &Path) -> RecoveredState {
+    let ckpt = Checkpoint::read(&dir.join(CKPT_FILE)).unwrap_or_default();
+    let wal_path = dir.join(WAL_FILE);
+    let scan = match wal::scan(&wal_path, ckpt.wal_offset) {
+        Ok(s) => s,
+        Err(e) => {
+            // Unreadable log, or a file shorter than the checkpoint's
+            // recorded offset (mismatched/rolled-back files). The
+            // checkpoint alone is still a consistent cut: recover from
+            // it and treat the whole tail as torn.
+            log::warn!("WAL scan failed ({e}); recovering from checkpoint alone");
+            let len = std::fs::metadata(&wal_path).map(|m| m.len()).unwrap_or(0);
+            wal::WalScan {
+                records: Vec::new(),
+                valid_len: len.min(ckpt.wal_offset),
+                torn: true,
+            }
+        }
+    };
+
+    let mut next_node = ckpt.next_node;
+    let mut next_task = ckpt.next_task;
+    let mut runs: BTreeMap<u64, Working> = ckpt
+        .runs
+        .iter()
+        .map(|snap| (snap.run_id, Working::from_snapshot(snap)))
+        .collect();
+
+    let replayed = scan.records.len() as u64;
+    for rec in scan.records {
+        match rec {
+            WalRecord::RunRegistered { run_id } => {
+                runs.entry(run_id).or_default().active = true;
+            }
+            WalRecord::TaskQueued { node_id, ins } => {
+                next_task = next_task.max(ins.task_id + 1);
+                next_node = next_node.max(node_id + 1);
+                let w = runs.entry(ins.run_id).or_default();
+                w.task_version.insert(ins.task_id, ins.model_version);
+                w.unresolved
+                    .insert(ins.task_id, (node_id, ins.attempt, Some(ins)));
+            }
+            WalRecord::TaskDelivered { .. } => {}
+            WalRecord::TaskRedelivered {
+                run_id,
+                task_id,
+                to,
+                attempt,
+                ..
+            } => {
+                next_node = next_node.max(to + 1);
+                if let Some(w) = runs.get_mut(&run_id) {
+                    if let Some(entry) = w.unresolved.get_mut(&task_id) {
+                        entry.0 = to;
+                        entry.1 = attempt;
+                        if let Some(ins) = entry.2.as_mut() {
+                            ins.attempt = attempt;
+                        }
+                    }
+                }
+            }
+            WalRecord::TaskFailed {
+                run_id,
+                task_id,
+                reason,
+            } => {
+                if let Some(w) = runs.get_mut(&run_id) {
+                    w.done.insert(task_id);
+                    w.failed.insert(task_id, reason);
+                    w.resolve(task_id);
+                }
+            }
+            WalRecord::ResultAccepted { res } => {
+                next_node = next_node.max(res.node_id + 1);
+                let w = runs.entry(res.run_id).or_default();
+                let task_id = res.task_id;
+                if w.done.insert(task_id) {
+                    w.results.insert(task_id, res);
+                }
+                w.resolve(task_id);
+            }
+            WalRecord::TasksAbandoned { run_id, task_ids } => {
+                if let Some(w) = runs.get_mut(&run_id) {
+                    for task_id in task_ids {
+                        w.done.insert(task_id);
+                        w.resolve(task_id);
+                    }
+                }
+            }
+            WalRecord::Folded { .. } | WalRecord::Committed { .. } => {}
+            WalRecord::RunFinished { run_id } => {
+                if let Some(w) = runs.get_mut(&run_id) {
+                    w.active = false;
+                    w.unresolved.clear();
+                    w.results.clear();
+                    w.failed.clear();
+                    w.done.clear();
+                    w.task_version.clear();
+                }
+            }
+        }
+    }
+
+    crate::telemetry::bump("recovery.replayed_records", replayed as i64);
+    RecoveredState {
+        next_node,
+        next_task,
+        runs: runs
+            .into_iter()
+            .map(|(run_id, w)| w.into_snapshot(run_id))
+            .collect(),
+        drivers: ckpt.drivers,
+        wal_valid_len: scan.valid_len,
+        torn: scan.torn,
+        replayed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::message::MessageType;
+    use crate::flower::persist::test_dir;
+    use crate::flower::persist::wal::Wal;
+    use crate::flower::records::ArrayRecord;
+
+    fn ins(run_id: u64, task_id: u64, version: u64) -> TaskIns {
+        TaskIns {
+            task_id,
+            run_id,
+            round: 1,
+            message_type: MessageType::Train,
+            attempt: 0,
+            redeliver: false,
+            model_version: version,
+            parameters: ArrayRecord::from_flat(&[0.5; 2]),
+            config: Default::default(),
+        }
+    }
+
+    fn res(run_id: u64, task_id: u64, node_id: u64) -> TaskRes {
+        TaskRes {
+            task_id,
+            run_id,
+            node_id,
+            error: String::new(),
+            message_type: MessageType::Train,
+            parameters: ArrayRecord::from_flat(&[1.0; 2]),
+            num_examples: 4,
+            loss: 0.0,
+            metrics: Default::default(),
+            configs: Default::default(),
+            model_version: 1,
+        }
+    }
+
+    #[test]
+    fn replay_without_checkpoint_rebuilds_run() {
+        let dir = test_dir("rec-no-ckpt");
+        let mut wal = Wal::create(&dir.join(WAL_FILE)).unwrap();
+        wal.append(&WalRecord::RunRegistered { run_id: 1 }).unwrap();
+        wal.append(&WalRecord::TaskQueued {
+            node_id: 1,
+            ins: ins(1, 10, 1),
+        })
+        .unwrap();
+        wal.append(&WalRecord::TaskQueued {
+            node_id: 2,
+            ins: ins(1, 11, 1),
+        })
+        .unwrap();
+        wal.append(&WalRecord::TaskDelivered {
+            run_id: 1,
+            task_id: 10,
+            node_id: 1,
+        })
+        .unwrap();
+        wal.append(&WalRecord::ResultAccepted { res: res(1, 10, 1) })
+            .unwrap();
+        wal.append(&WalRecord::TaskFailed {
+            run_id: 1,
+            task_id: 11,
+            reason: "lease expired".into(),
+        })
+        .unwrap();
+        drop(wal);
+
+        let state = load(&dir);
+        assert_eq!(state.replayed, 6);
+        assert!(!state.torn);
+        assert_eq!(state.next_task, 12);
+        assert_eq!(state.next_node, 3);
+        assert_eq!(state.runs.len(), 1);
+        let run = &state.runs[0];
+        assert!(run.active);
+        assert!(run.pending.is_empty(), "both tasks resolved");
+        assert!(run.inflight.is_empty());
+        assert_eq!(run.results.len(), 1);
+        assert_eq!(run.results[0].task_id, 10);
+        assert_eq!(run.failed, vec![(11, "lease expired".into())]);
+        assert_eq!(run.done, vec![10, 11]);
+        assert!(run.task_version.is_empty());
+    }
+
+    #[test]
+    fn unresolved_tasks_requeue_to_original_node() {
+        let dir = test_dir("rec-requeue");
+        let mut wal = Wal::create(&dir.join(WAL_FILE)).unwrap();
+        wal.append(&WalRecord::RunRegistered { run_id: 1 }).unwrap();
+        wal.append(&WalRecord::TaskQueued {
+            node_id: 2,
+            ins: ins(1, 5, 3),
+        })
+        .unwrap();
+        wal.append(&WalRecord::TaskDelivered {
+            run_id: 1,
+            task_id: 5,
+            node_id: 2,
+        })
+        .unwrap();
+        wal.append(&WalRecord::TaskRedelivered {
+            run_id: 1,
+            task_id: 5,
+            from: 2,
+            to: 4,
+            attempt: 1,
+        })
+        .unwrap();
+        drop(wal);
+
+        let run = &load(&dir).runs[0];
+        assert_eq!(run.pending.len(), 1);
+        let (node, list) = &run.pending[0];
+        assert_eq!(*node, 4, "re-queued to last assignee");
+        assert_eq!(list[0].task_id, 5);
+        assert_eq!(list[0].attempt, 1);
+        assert_eq!(run.task_version, vec![(5, 3)]);
+    }
+
+    #[test]
+    fn checkpoint_plus_tail_and_duplicate_accepts() {
+        let dir = test_dir("rec-ckpt-tail");
+        let mut wal = Wal::create(&dir.join(WAL_FILE)).unwrap();
+        wal.append(&WalRecord::RunRegistered { run_id: 1 }).unwrap();
+        wal.append(&WalRecord::TaskQueued {
+            node_id: 1,
+            ins: ins(1, 7, 2),
+        })
+        .unwrap();
+        let cut = wal.offset();
+        // Checkpoint cut here: the snapshot carries the queued task.
+        let mut snap = RunSnapshot {
+            run_id: 1,
+            active: true,
+            ..Default::default()
+        };
+        snap.pending.push((1, vec![ins(1, 7, 2)]));
+        snap.task_version.push((7, 2));
+        let ckpt = Checkpoint {
+            wal_offset: cut,
+            next_node: 2,
+            next_task: 8,
+            runs: vec![snap],
+            drivers: vec![(1, vec![1, 2, 3])],
+        };
+        ckpt.write(&dir.join(CKPT_FILE)).unwrap();
+        // Tail past the checkpoint: the result arrives twice (a
+        // redelivery raced the original); only the first is kept.
+        wal.append(&WalRecord::ResultAccepted { res: res(1, 7, 3) })
+            .unwrap();
+        let mut dup = res(1, 7, 9);
+        dup.num_examples = 99;
+        wal.append(&WalRecord::ResultAccepted { res: dup }).unwrap();
+        drop(wal);
+
+        let state = load(&dir);
+        assert_eq!(state.replayed, 2, "only the tail replays");
+        assert_eq!(state.drivers, vec![(1, vec![1, 2, 3])]);
+        let run = &state.runs[0];
+        assert_eq!(run.results.len(), 1);
+        assert_eq!(run.results[0].node_id, 3, "first accept wins");
+        assert!(run.pending.is_empty());
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_finished_runs_clear() {
+        let dir = test_dir("rec-torn");
+        let path = dir.join(WAL_FILE);
+        let mut wal = Wal::create(&path).unwrap();
+        wal.append(&WalRecord::RunRegistered { run_id: 1 }).unwrap();
+        wal.append(&WalRecord::RunFinished { run_id: 1 }).unwrap();
+        let good = wal.offset();
+        wal.append(&WalRecord::RunRegistered { run_id: 2 }).unwrap();
+        drop(wal);
+        // Tear the last record.
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(wal_len_minus(&path, 3)).unwrap();
+        drop(f);
+
+        let state = load(&dir);
+        assert!(state.torn);
+        assert_eq!(state.wal_valid_len, good);
+        assert_eq!(state.runs.len(), 1, "torn register never replayed");
+        assert!(!state.runs[0].active, "finished run is inactive");
+        assert!(state.runs[0].done.is_empty());
+    }
+
+    fn wal_len_minus(path: &std::path::Path, cut: u64) -> u64 {
+        std::fs::metadata(path).unwrap().len() - cut
+    }
+}

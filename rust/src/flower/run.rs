@@ -7,14 +7,14 @@
 //! ([`run_shared`]) before being retired — the paper's §2/§3.1
 //! multi-run SuperLink in miniature.
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::flower::clientapp::{ClientApp, MessageApp, Router};
 use crate::flower::grid::Grid;
 use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::superlink::{LinkConfig, SuperLink};
-use crate::flower::supernode::{NativeConnector, SuperNode, SuperNodeConfig};
+use crate::flower::supernode::{FlowerConnector, NativeConnector, SuperNode, SuperNodeConfig};
 use crate::transport::inproc;
 use crate::transport::Endpoint;
 
@@ -198,6 +198,137 @@ pub fn drive_runs_with<G: Grid + ?Sized>(
             }
         }
     })
+}
+
+/// A swappable SuperLink slot for crash/recovery chaos testing:
+/// SuperNodes reach the link through [`SwitchConnector`], so
+/// [`LinkSwitch::kill_link`] makes the link vanish mid-round exactly
+/// like a process crash (no retire, no drain — in-flight state is
+/// simply gone) and [`LinkSwitch::restart_link`] plugs in a recovered
+/// replacement that the same fleet keeps talking to.
+pub struct LinkSwitch {
+    inner: Mutex<Option<Arc<SuperLink>>>,
+}
+
+impl LinkSwitch {
+    pub fn new(link: Arc<SuperLink>) -> Arc<LinkSwitch> {
+        Arc::new(LinkSwitch {
+            inner: Mutex::new(Some(link)),
+        })
+    }
+
+    /// Simulate a crash: the link disappears WITHOUT retiring (a real
+    /// crash never drains). Returns the dead link, mostly so tests can
+    /// assert about it; its durability directory is what survives.
+    pub fn kill_link(&self) -> Option<Arc<SuperLink>> {
+        self.inner.lock().unwrap().take()
+    }
+
+    /// Plug in the restarted (typically [`SuperLink::recover`]ed) link.
+    pub fn restart_link(&self, link: Arc<SuperLink>) {
+        *self.inner.lock().unwrap() = Some(link);
+    }
+
+    pub fn current(&self) -> Option<Arc<SuperLink>> {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// [`FlowerConnector`] through a [`LinkSwitch`]: frames are handed to
+/// the CURRENT link in-process; while no link is up the node blocks
+/// (bounded by `max_downtime`) and retries — exactly how a real
+/// SuperNode rides out a SuperLink restart behind a reconnecting
+/// transport.
+pub struct SwitchConnector {
+    switch: Arc<LinkSwitch>,
+    max_downtime: Duration,
+}
+
+impl SwitchConnector {
+    pub fn new(switch: Arc<LinkSwitch>, max_downtime: Duration) -> Self {
+        Self {
+            switch,
+            max_downtime,
+        }
+    }
+}
+
+impl FlowerConnector for SwitchConnector {
+    fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+        let deadline = Instant::now() + self.max_downtime;
+        loop {
+            if let Some(link) = self.switch.current() {
+                return Ok(link.handle_frame(&frame));
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "superlink stayed down longer than {:?}",
+                self.max_downtime
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// A SuperNode fleet wired to a [`LinkSwitch`] instead of a fixed link:
+/// the crash-recovery counterpart of [`NativeFleet`]. Kill and restart
+/// the link mid-run via [`SwitchedFleet::switch`]; the fleet keeps its
+/// node ids (SuperNodes re-register their pinned ids on
+/// `UNKNOWN_NODE_ERR`) and resumes pulling from whatever link is
+/// plugged in.
+pub struct SwitchedFleet {
+    switch: Arc<LinkSwitch>,
+    handles: Vec<std::thread::JoinHandle<anyhow::Result<u64>>>,
+}
+
+impl SwitchedFleet {
+    /// One SuperNode per client app (ids pinned to client order), all
+    /// reaching `link` through a fresh [`LinkSwitch`]. `max_downtime`
+    /// bounds how long a node waits out a dead link before erroring.
+    pub fn start(
+        link: Arc<SuperLink>,
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        max_downtime: Duration,
+    ) -> anyhow::Result<SwitchedFleet> {
+        let switch = LinkSwitch::new(link);
+        let mut handles = Vec::new();
+        for (i, app) in client_apps.into_iter().enumerate() {
+            let app = Arc::new(Router::from_client(app)) as Arc<dyn MessageApp>;
+            let mut node = SuperNode::with_app(
+                Box::new(SwitchConnector::new(switch.clone(), max_downtime)),
+                app,
+                SuperNodeConfig {
+                    requested_node_id: i as u64 + 1,
+                    connect_deadline: max_downtime,
+                    ..Default::default()
+                },
+            );
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("supernode-{i}"))
+                    .spawn(move || -> anyhow::Result<u64> { node.run() })?,
+            );
+        }
+        Ok(SwitchedFleet { switch, handles })
+    }
+
+    pub fn switch(&self) -> &Arc<LinkSwitch> {
+        &self.switch
+    }
+
+    /// Retire the CURRENT link (if any) and join every SuperNode.
+    pub fn shutdown(self) {
+        if let Some(link) = self.switch.current() {
+            link.retire();
+        }
+        for h in self.handles {
+            match h.join() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => log::warn!("supernode exited with error: {e}"),
+                Err(_) => log::warn!("supernode panicked"),
+            }
+        }
+    }
 }
 
 /// Run several ServerApps concurrently against ONE shared SuperLink and

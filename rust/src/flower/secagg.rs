@@ -175,6 +175,17 @@ impl Strategy for SecAggFedAvg {
         false
     }
 
+    /// Snapshot story mirrors the partial one: a mid-round accumulator
+    /// holds PARTIALLY-cancelled masked sums — persisting one to disk
+    /// would leak exactly the per-client contributions the pairwise
+    /// masks exist to hide. Secagg runs recover at round granularity
+    /// only (the accumulator also returns `None` from `snapshot()` and
+    /// errors on `restore()` — the typed refusal the conformance
+    /// matrix checks).
+    fn supports_snapshot(&self) -> bool {
+        false
+    }
+
     fn configure_fit(&mut self, round: u64) -> ConfigRecord {
         ConfigRecord::from_pairs(vec![
             (
@@ -448,6 +459,25 @@ mod tests {
         let strat = SecAggFedAvg::new(0);
         assert!(!strat.supports_partial(), "masks need the full cohort");
         assert!(!strat.supports_async(), "masks are bound to one version");
+    }
+
+    #[test]
+    fn secagg_declines_snapshots_typed() {
+        let mut strat = SecAggFedAvg::new(0);
+        assert!(!strat.supports_snapshot(), "partial masked sums must not persist");
+        assert!(strat.export_state().is_none());
+        let params = ArrayRecord::from_flat(&[1.0f32; 4]);
+        let results = vec![
+            masked_update(1.0, 10, 1, "1,2", 7, &params),
+            masked_update(2.0, 20, 2, "1,2", 7, &params),
+        ];
+        let mut agg = strat.begin_fit(1, &params);
+        agg.accumulate(results[0].clone()).unwrap();
+        assert!(agg.snapshot().is_none(), "streaming masked sums decline");
+        let err = agg
+            .restore(crate::flower::strategy::AggSnapshot::Fit(vec![results[1].clone()]))
+            .unwrap_err();
+        assert!(err.to_string().contains("does not support"), "{err}");
     }
 
     #[test]

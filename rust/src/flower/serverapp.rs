@@ -35,8 +35,9 @@ use crate::flare::tracking::SummaryWriter;
 use crate::flower::asyncfed::AsyncCommit;
 use crate::flower::grid::Grid;
 use crate::flower::message::{ConfigValue, Message, MetricRecord};
+use crate::flower::persist::checkpoint::{DriverCkpt, DriverPhase, FitCkpt};
 use crate::flower::records::ArrayRecord;
-use crate::flower::strategy::{EvalRes, FitRes, Strategy};
+use crate::flower::strategy::{AggSnapshot, EvalRes, FitRes, Strategy};
 use crate::flower::superlink::{CompletionPolicy, ResultTimeout};
 use crate::util::rng::Rng;
 
@@ -252,16 +253,121 @@ impl ServerApp {
         result
     }
 
+    /// Like [`ServerApp::run`], but close the run ONLY on success: an
+    /// error (a crash, or a simulated one) leaves the run open on the
+    /// grid so [`ServerApp::resume`] can pick it up after recovery.
+    /// On a durable grid with a snapshot-capable strategy, round-entry
+    /// and mid-fit checkpoints are cut as the run progresses.
+    pub fn run_durable<G: Grid + ?Sized>(
+        &mut self,
+        grid: &G,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+    ) -> anyhow::Result<History> {
+        grid.open_run(run_id);
+        anyhow::ensure!(
+            grid.run_active(run_id),
+            "run id {run_id} already finished on this link — run ids must be unique per link"
+        );
+        if grid.durable() && !self.strategy.supports_snapshot() {
+            log::warn!(
+                "strategy {} declines accumulator snapshots — mid-round \
+                 checkpoints disabled for run {run_id}",
+                self.strategy.name()
+            );
+        }
+        let result = self.run_rounds(grid, tracker, run_id);
+        if result.is_ok() {
+            grid.close_run(run_id);
+        }
+        result
+    }
+
+    /// Resume a recovered run from its last driver checkpoint: import
+    /// the strategy's optimizer state, restore the in-flight fit
+    /// accumulator, reconcile the wait set against the grid's open
+    /// tasks, and drive the remaining rounds. A resumed run finalizes
+    /// bit-identical to one that was never interrupted.
+    pub fn resume<G: Grid + ?Sized>(
+        &mut self,
+        grid: &G,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+    ) -> anyhow::Result<History> {
+        anyhow::ensure!(grid.durable(), "resume requires a durable grid");
+        anyhow::ensure!(
+            grid.run_active(run_id),
+            "run {run_id} already finished — nothing to resume"
+        );
+        let blob = grid.driver_checkpoint(run_id).ok_or_else(|| {
+            anyhow::anyhow!("run {run_id}: no driver checkpoint to resume from")
+        })?;
+        let ck = DriverCkpt::decode(&blob)?;
+        if let Some(state) = &ck.strategy_state {
+            self.strategy.import_state(state)?;
+        }
+        let (start_round, resume_fit) = match ck.phase {
+            DriverPhase::RoundStart => (ck.round, None),
+            DriverPhase::MidFit(fit) => (ck.round, Some(fit)),
+            DriverPhase::AsyncCommit(_) => anyhow::bail!(
+                "run {run_id}: checkpoint belongs to the async driver — \
+                 resume it with the async entry point"
+            ),
+        };
+        log::info!(
+            "run {run_id}: resuming at round {start_round} ({})",
+            if resume_fit.is_some() {
+                "mid-fit"
+            } else {
+                "round start"
+            }
+        );
+        let result = self.run_rounds_from(
+            grid,
+            tracker,
+            run_id,
+            start_round,
+            ck.parameters,
+            ck.history,
+            resume_fit,
+        );
+        if result.is_ok() {
+            grid.close_run(run_id);
+        }
+        result
+    }
+
     fn run_rounds<G: Grid + ?Sized>(
         &mut self,
         grid: &G,
         tracker: Option<&SummaryWriter>,
         run_id: u64,
     ) -> anyhow::Result<History> {
+        let params = self.initial_parameters.clone();
+        self.run_rounds_from(grid, tracker, run_id, 1, params, History::default(), None)
+    }
+
+    /// Drive rounds `start_round..=num_rounds` from an explicit driver
+    /// state — the shared engine behind [`ServerApp::run`] (fresh
+    /// state) and [`ServerApp::resume`] (state decoded from the last
+    /// checkpoint; `resume_fit` re-enters a half-finished fit phase).
+    #[allow(clippy::too_many_arguments)]
+    fn run_rounds_from<G: Grid + ?Sized>(
+        &mut self,
+        grid: &G,
+        tracker: Option<&SummaryWriter>,
+        run_id: u64,
+        start_round: u64,
+        mut params: ArrayRecord,
+        mut history: History,
+        mut resume_fit: Option<FitCkpt>,
+    ) -> anyhow::Result<History> {
         let cfg = self.config.clone();
         grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
-        let mut params = self.initial_parameters.clone();
-        let mut history = History::default();
+        // Mid-round durability requires the strategy to snapshot its
+        // accumulator; a declining strategy still runs, just without
+        // driver checkpoints.
+        let durable = grid.durable() && self.strategy.supports_snapshot();
 
         // Partial participation: only when a quorum is configured AND the
         // strategy can aggregate a strict subset of the cohort.
@@ -279,7 +385,7 @@ impl ServerApp {
         // `min_nodes` mid-run; the quorum is then the per-round floor.
         let round_floor = if quorum > 0 { quorum } else { cfg.min_nodes };
 
-        for round in 1..=cfg.num_rounds {
+        for round in start_round..=cfg.num_rounds {
             // Reap first so this round's cohort is sampled from nodes
             // that are actually alive — a task pushed to an already-dead
             // node would otherwise strand until the grace/timeout.
@@ -292,32 +398,29 @@ impl ServerApp {
             );
 
             // ---- fit phase ----
-            let fit_nodes = self.sample(&nodes, cfg.fraction_fit, round);
-            let mut fit_cfg = self.strategy.configure_fit(round);
-            fit_cfg.push(("round".to_string(), ConfigValue::I64(round as i64)));
-            // Cohort + per-target node id: lets client-side mods (e.g.
-            // secure aggregation) coordinate pairwise state.
-            let cohort = fit_nodes
-                .iter()
-                .map(|n| n.to_string())
-                .collect::<Vec<_>>()
-                .join(",");
-            fit_cfg.push(("cohort".to_string(), ConfigValue::Str(cohort)));
-            let task_ids: Vec<u64> = fit_nodes
-                .iter()
-                .map(|&node| {
-                    let mut config = fit_cfg.clone();
-                    config.push(("node_id".to_string(), ConfigValue::I64(node as i64)));
-                    // Train message defaults: node-affine (no
-                    // redelivery — each node trains on ITS data) and
-                    // version-less (sync rounds; the async driver is
-                    // the only version author). Cloning `params` is
-                    // O(1) per node: records share tensor buffers.
-                    grid.push_message(
-                        Message::train(node, params.clone(), config).for_round(run_id, round),
-                    )
-                })
-                .collect();
+            let resumed_fit = resume_fit.take();
+            let resuming = resumed_fit.is_some();
+            // Strategy state is exported BEFORE the accumulator borrows
+            // the strategy mutably. It names the PRE-round state: a
+            // resumed run imports it and `finalize` then applies this
+            // round's optimizer step exactly once.
+            let strategy_state = if durable {
+                self.strategy.export_state()
+            } else {
+                None
+            };
+            if durable && !resuming {
+                // Round-entry checkpoint: a crash anywhere before the
+                // first mid-fit checkpoint resumes from here.
+                let ck = DriverCkpt {
+                    round,
+                    parameters: params.clone(),
+                    history: history.clone(),
+                    strategy_state: strategy_state.clone(),
+                    phase: DriverPhase::RoundStart,
+                };
+                grid.checkpoint_run(run_id, ck.encode());
+            }
             // Stream results into the strategy's accumulator AS THEY
             // ARRIVE: aggregation overlaps stragglers, and the link's
             // result map drains incrementally instead of buffering the
@@ -325,23 +428,95 @@ impl ServerApp {
             // was redelivered to a node that already contributed, the
             // duplicate contribution is skipped, so a partial round
             // aggregates exactly the surviving cohort.
-            let mut agg = self.strategy.begin_fit(round, &params);
-            let mut fit_meta: Vec<(u64, u64, MetricRecord)> = Vec::with_capacity(task_ids.len());
-            let mut seen_nodes: HashSet<u64> = HashSet::with_capacity(task_ids.len());
+            let (task_ids, mut agg, mut fit_meta, mut seen_nodes) = match resumed_fit {
+                Some(ck) => {
+                    // Re-enter the half-finished fit phase: same task
+                    // ids, accumulator restored to the checkpointed
+                    // fold state.
+                    let mut agg = self.strategy.begin_fit(round, &params);
+                    agg.restore(AggSnapshot::Fit(ck.results))?;
+                    let seen: HashSet<u64> =
+                        ck.fit_meta.iter().map(|(node, _, _)| *node).collect();
+                    (ck.task_ids, agg, ck.fit_meta, seen)
+                }
+                None => {
+                    let fit_nodes = self.sample(&nodes, cfg.fraction_fit, round);
+                    let mut fit_cfg = self.strategy.configure_fit(round);
+                    fit_cfg.push(("round".to_string(), ConfigValue::I64(round as i64)));
+                    // Cohort + per-target node id: lets client-side mods
+                    // (e.g. secure aggregation) coordinate pairwise
+                    // state.
+                    let cohort = fit_nodes
+                        .iter()
+                        .map(|n| n.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",");
+                    fit_cfg.push(("cohort".to_string(), ConfigValue::Str(cohort)));
+                    let task_ids: Vec<u64> = fit_nodes
+                        .iter()
+                        .map(|&node| {
+                            let mut config = fit_cfg.clone();
+                            config.push(("node_id".to_string(), ConfigValue::I64(node as i64)));
+                            // Train message defaults: node-affine (no
+                            // redelivery — each node trains on ITS data)
+                            // and version-less (sync rounds; the async
+                            // driver is the only version author).
+                            // Cloning `params` is O(1) per node: records
+                            // share tensor buffers.
+                            grid.push_message(
+                                Message::train(node, params.clone(), config)
+                                    .for_round(run_id, round),
+                            )
+                        })
+                        .collect();
+                    let cap = task_ids.len();
+                    let agg = self.strategy.begin_fit(round, &params);
+                    (
+                        task_ids,
+                        agg,
+                        Vec::with_capacity(cap),
+                        HashSet::with_capacity(cap),
+                    )
+                }
+            };
+            let sampled = task_ids.len();
             let accept_failures = cfg.accept_failures;
-            let fit_quorum = quorum.min(task_ids.len());
-            if quorum > task_ids.len() {
+            let fit_quorum = quorum.min(sampled);
+            if quorum > sampled {
                 // Don't silently under-enforce the operator's floor.
                 log::warn!(
                     "round {round}: min_available {quorum} exceeds the sampled fit \
-                     cohort of {} (fraction_fit too small?) — enforcing {fit_quorum}",
-                    task_ids.len()
+                     cohort of {sampled} (fraction_fit too small?) — enforcing {fit_quorum}"
                 );
             }
-            let fit_policy = phase_policy(quorum, task_ids.len(), cfg.straggler_grace);
+            let fit_policy = phase_policy(quorum, sampled, cfg.straggler_grace);
+            // A resumed wait covers only tasks still OPEN on the grid:
+            // results folded before the checkpoint are already done
+            // (waiting on them would hang forever), while accepted-but-
+            // unfolded results and re-queued tasks are open and flow
+            // back through the callback exactly once.
+            let wait_ids: Vec<u64> = if resuming {
+                let open: HashSet<u64> = grid
+                    .open_tasks(run_id)
+                    .into_iter()
+                    .map(|(id, _, _)| id)
+                    .collect();
+                task_ids
+                    .iter()
+                    .copied()
+                    .filter(|id| open.contains(id))
+                    .collect()
+            } else {
+                task_ids.clone()
+            };
+            // Mid-fit checkpoint capture basis (cheap clones: records
+            // share tensor buffers).
+            let ckpt_params = params.clone();
+            let ckpt_history = history.clone();
+            let all_task_ids = task_ids.clone();
             let wait = grid.for_each_reply(
                 run_id,
-                &task_ids,
+                &wait_ids,
                 cfg.round_timeout,
                 fit_policy,
                 &mut |r: Message| {
@@ -368,7 +543,27 @@ impl ServerApp {
                         parameters: r.content.arrays,
                         num_examples,
                         metrics: r.content.metrics,
-                    })
+                    })?;
+                    // Mid-fit checkpoint: the accumulator's fold state
+                    // rides in the driver blob, cut atomically with the
+                    // link's own snapshot (one consistent pair).
+                    if durable && grid.checkpoint_due(run_id) {
+                        if let Some(AggSnapshot::Fit(results)) = agg.snapshot() {
+                            let ck = DriverCkpt {
+                                round,
+                                parameters: ckpt_params.clone(),
+                                history: ckpt_history.clone(),
+                                strategy_state: strategy_state.clone(),
+                                phase: DriverPhase::MidFit(FitCkpt {
+                                    task_ids: all_task_ids.clone(),
+                                    results,
+                                    fit_meta: fit_meta.clone(),
+                                }),
+                            };
+                            grid.checkpoint_run(run_id, ck.encode());
+                        }
+                    }
+                    Ok(())
                 },
             )?;
             if quorum == 0 && !wait.is_complete() {
@@ -388,10 +583,9 @@ impl ServerApp {
             );
             anyhow::ensure!(
                 quorum == 0 || agg.count() >= fit_quorum,
-                "round {round}: only {} of {} fit results (quorum {fit_quorum}; \
+                "round {round}: only {} of {sampled} fit results (quorum {fit_quorum}; \
                  {} failed, {} missing)",
                 agg.count(),
-                fit_nodes.len(),
                 wait.failed.len(),
                 wait.missing.len()
             );
@@ -410,9 +604,9 @@ impl ServerApp {
                 );
             }
             let participation = Participation {
-                sampled: fit_nodes.len(),
+                sampled,
                 completed: fit_meta.len(),
-                dropped: fit_nodes.len().saturating_sub(fit_meta.len()),
+                dropped: sampled.saturating_sub(fit_meta.len()),
             };
             // Gate on quorum: in strict mode a shortfall is either an
             // error above or an accept_failures-tolerated client error,

@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use super::{Aggregator, FitAgg, FitRes, SortedBuffer, Strategy};
-use crate::flower::records::{ArrayRecord, Tensor};
+use crate::flower::records::{ArrayRecord, DType, Tensor};
 
 /// Plain federated averaging: example-weighted mean of client updates.
 pub struct FedAvg {
@@ -92,6 +92,30 @@ impl Strategy for FedAvgM {
         Box::new(SortedBuffer::new(move |results: &[FitRes]| {
             self.step(&current, results)
         }))
+    }
+
+    /// Velocity per tensor name, as F64 tensors in sorted-name order
+    /// (f64 payloads, so export -> import is bit-exact).
+    fn export_state(&self) -> Option<ArrayRecord> {
+        let mut names: Vec<&String> = self.velocity.keys().collect();
+        names.sort();
+        let tensors = names
+            .into_iter()
+            .map(|name| {
+                let v = &self.velocity[name];
+                Tensor::from_f64_values(name, DType::F64, vec![v.len()], v.iter().copied())
+            })
+            .collect();
+        ArrayRecord::from_tensors(tensors).ok()
+    }
+
+    fn import_state(&mut self, state: &ArrayRecord) -> anyhow::Result<()> {
+        self.velocity.clear();
+        for t in state.tensors() {
+            let vals = (0..t.elems()).map(|i| t.get_f64(i)).collect();
+            self.velocity.insert(t.name().to_string(), vals);
+        }
+        Ok(())
     }
 }
 

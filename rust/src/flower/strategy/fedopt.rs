@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 
 use super::{Aggregator, FitAgg, FitRes, SortedBuffer, Strategy};
-use crate::flower::records::{ArrayRecord, Tensor};
+use crate::flower::records::{ArrayRecord, DType, Tensor};
 
 #[derive(Clone, Copy, Debug)]
 pub struct FedOptConfig {
@@ -103,6 +103,55 @@ impl FedOpt {
         }
         Ok(ArrayRecord::from_tensors(tensors)?)
     }
+
+    /// Moments per tensor name as `m:{name}` / `v:{name}` F64 tensors
+    /// in sorted-name order (f64 payloads — export -> import is
+    /// bit-exact).
+    fn export_state(&self) -> Option<ArrayRecord> {
+        let mut names: Vec<&String> = self.state.keys().collect();
+        names.sort();
+        let mut tensors = Vec::with_capacity(names.len() * 2);
+        for name in names {
+            let st = &self.state[name];
+            tensors.push(Tensor::from_f64_values(
+                &format!("m:{name}"),
+                DType::F64,
+                vec![st.m.len()],
+                st.m.iter().copied(),
+            ));
+            tensors.push(Tensor::from_f64_values(
+                &format!("v:{name}"),
+                DType::F64,
+                vec![st.v.len()],
+                st.v.iter().copied(),
+            ));
+        }
+        ArrayRecord::from_tensors(tensors).ok()
+    }
+
+    fn import_state(&mut self, state: &ArrayRecord) -> anyhow::Result<()> {
+        self.state.clear();
+        for t in state.tensors() {
+            let (kind, name) = t
+                .name()
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("unrecognized moment tensor '{}'", t.name()))?;
+            let vals: Vec<f64> = (0..t.elems()).map(|i| t.get_f64(i)).collect();
+            let st = self
+                .state
+                .entry(name.to_string())
+                .or_insert_with(|| Moments {
+                    m: Vec::new(),
+                    v: Vec::new(),
+                });
+            match kind {
+                "m" => st.m = vals,
+                "v" => st.v = vals,
+                _ => anyhow::bail!("unrecognized moment tensor '{}'", t.name()),
+            }
+        }
+        Ok(())
+    }
 }
 
 macro_rules! fedopt_strategy {
@@ -130,6 +179,14 @@ macro_rules! fedopt_strategy {
                 Box::new(SortedBuffer::new(move |results: &[FitRes]| {
                     self.0.step(&current, results)
                 }))
+            }
+
+            fn export_state(&self) -> Option<ArrayRecord> {
+                self.0.export_state()
+            }
+
+            fn import_state(&mut self, state: &ArrayRecord) -> anyhow::Result<()> {
+                self.0.import_state(state)
             }
         }
     };

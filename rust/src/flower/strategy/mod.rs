@@ -31,7 +31,7 @@ use crate::runtime::{ComputeHandle, TensorData};
 
 /// A fit result as seen by the strategy (already success-filtered and
 /// sorted by node id).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct FitRes {
     pub node_id: u64,
     pub parameters: ArrayRecord,
@@ -39,12 +39,23 @@ pub struct FitRes {
     pub metrics: MetricRecord,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EvalRes {
     pub node_id: u64,
     pub loss: f64,
     pub num_examples: u64,
     pub metrics: MetricRecord,
+}
+
+/// An accumulator's mid-round state, exact to the bit: the results
+/// absorbed so far, in arrival order. Buffering accumulators can
+/// always produce one; streaming accumulators whose internal state is
+/// not a result list (secure aggregation's masked sums) decline with
+/// `None` and recovery falls back to the last round boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AggSnapshot {
+    Fit(Vec<FitRes>),
+    Eval(Vec<EvalRes>),
 }
 
 /// One round's incremental fit aggregation, created by
@@ -61,6 +72,19 @@ pub trait FitAgg {
 
     /// Reduce to the next global parameter record.
     fn finalize(self: Box<Self>) -> anyhow::Result<ArrayRecord>;
+
+    /// Exact mid-round state for a driver checkpoint, or `None` for
+    /// accumulators that decline snapshots (see [`AggSnapshot`]).
+    fn snapshot(&self) -> Option<AggSnapshot> {
+        None
+    }
+
+    /// Restore a fresh accumulator from a snapshot taken by the same
+    /// strategy before a crash. Must leave the accumulator bit-
+    /// identical to one that absorbed the snapshot's results live.
+    fn restore(&mut self, _snap: AggSnapshot) -> anyhow::Result<()> {
+        anyhow::bail!("accumulator does not support snapshot restore")
+    }
 }
 
 /// Canonicalizing accumulator: buffers results (cheap — each is a
@@ -105,6 +129,20 @@ where
         this.buf.sort_by_key(|r| r.node_id);
         (this.reduce)(&this.buf)
     }
+
+    fn snapshot(&self) -> Option<AggSnapshot> {
+        Some(AggSnapshot::Fit(self.buf.clone()))
+    }
+
+    fn restore(&mut self, snap: AggSnapshot) -> anyhow::Result<()> {
+        match snap {
+            AggSnapshot::Fit(buf) => {
+                self.buf = buf;
+                Ok(())
+            }
+            AggSnapshot::Eval(_) => anyhow::bail!("eval snapshot offered to a fit accumulator"),
+        }
+    }
 }
 
 pub trait Strategy: Send {
@@ -126,6 +164,30 @@ pub trait Strategy: Send {
     /// buffer mixing versions can never make them cancel.
     fn supports_async(&self) -> bool {
         true
+    }
+
+    /// Can this strategy's accumulators be snapshotted mid-round for a
+    /// durability checkpoint, and its own state exported/imported
+    /// across a crash? True for every plain reduction; secure
+    /// aggregation overrides to `false` — persisting a partial masked
+    /// sum would leak exactly the per-client updates the masks exist
+    /// to hide, so its runs recover at round granularity only.
+    fn supports_snapshot(&self) -> bool {
+        true
+    }
+
+    /// Serialize cross-round optimizer state (momentum, adaptive
+    /// moments) for a durability checkpoint. `None` means stateless —
+    /// nothing beyond the global parameters needs to survive a crash.
+    fn export_state(&self) -> Option<ArrayRecord> {
+        None
+    }
+
+    /// Restore state exported by [`Strategy::export_state`] on an
+    /// identically-configured strategy. The default accepts `None`
+    /// exports trivially (stateless strategies ignore the call).
+    fn import_state(&mut self, _state: &ArrayRecord) -> anyhow::Result<()> {
+        Ok(())
     }
 
     /// Weight applied to a result whose model version lags the current
@@ -197,6 +259,18 @@ pub trait EvalAgg {
 
     /// Reduce to the aggregated (loss, metrics).
     fn finalize(self: Box<Self>) -> (f64, MetricRecord);
+
+    /// Exact mid-round state for a driver checkpoint (see
+    /// [`FitAgg::snapshot`]).
+    fn snapshot(&self) -> Option<AggSnapshot> {
+        None
+    }
+
+    /// Restore a fresh accumulator from a snapshot (see
+    /// [`FitAgg::restore`]).
+    fn restore(&mut self, _snap: AggSnapshot) -> anyhow::Result<()> {
+        anyhow::bail!("accumulator does not support snapshot restore")
+    }
 }
 
 /// Canonicalizing evaluate accumulator: buffers the (small) `EvalRes`
@@ -236,6 +310,20 @@ where
         // Canonical reduction order, independent of arrival order.
         this.buf.sort_by_key(|r| r.node_id);
         (this.reduce)(&this.buf)
+    }
+
+    fn snapshot(&self) -> Option<AggSnapshot> {
+        Some(AggSnapshot::Eval(self.buf.clone()))
+    }
+
+    fn restore(&mut self, snap: AggSnapshot) -> anyhow::Result<()> {
+        match snap {
+            AggSnapshot::Eval(buf) => {
+                self.buf = buf;
+                Ok(())
+            }
+            AggSnapshot::Fit(_) => anyhow::bail!("fit snapshot offered to an eval accumulator"),
+        }
     }
 }
 

@@ -41,6 +41,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::flower::message::{FlowerMsg, TaskIns, TaskRes, MAX_PINNED_NODE_ID};
+use crate::flower::persist::checkpoint::{Checkpoint, InflightSnapshot, RunSnapshot};
+use crate::flower::persist::wal::WalRecord;
+use crate::flower::persist::{recovery, Durability, Persistor};
 use crate::transport::Endpoint;
 use crate::util::bytes::Bytes;
 
@@ -248,6 +251,98 @@ impl RunState {
         }
     }
 
+    /// Full state of this run in sorted, deterministic order (the
+    /// checkpoint payload).
+    fn snapshot(&self, run_id: u64) -> RunSnapshot {
+        let mut pending: Vec<(u64, Vec<TaskIns>)> = self
+            .pending
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(node, q)| (*node, q.iter().cloned().collect()))
+            .collect();
+        pending.sort_unstable_by_key(|(node, _)| *node);
+        let mut inflight: Vec<InflightSnapshot> = self
+            .inflight
+            .iter()
+            .map(|(task_id, t)| InflightSnapshot {
+                task_id: *task_id,
+                node_id: t.node_id,
+                attempt: t.attempt,
+                ins: t.ins.clone(),
+            })
+            .collect();
+        inflight.sort_unstable_by_key(|t| t.task_id);
+        let mut results: Vec<TaskRes> = self.results.values().cloned().collect();
+        results.sort_unstable_by_key(|r| r.task_id);
+        let mut failed: Vec<(u64, String)> = self
+            .failed
+            .iter()
+            .map(|(id, e)| (*id, e.clone()))
+            .collect();
+        failed.sort_unstable_by_key(|(id, _)| *id);
+        let mut done: Vec<u64> = self.done.iter().copied().collect();
+        done.sort_unstable();
+        let mut task_version: Vec<(u64, u64)> = self
+            .task_version
+            .iter()
+            .map(|(id, v)| (*id, *v))
+            .collect();
+        task_version.sort_unstable_by_key(|(id, _)| *id);
+        let mut acked: Vec<u64> = self.acked.iter().copied().collect();
+        acked.sort_unstable();
+        RunSnapshot {
+            run_id,
+            active: self.active,
+            pending,
+            inflight,
+            results,
+            failed,
+            done,
+            task_version,
+            acked,
+        }
+    }
+
+    fn from_snapshot(snap: &RunSnapshot) -> RunState {
+        let mut run = RunState::new();
+        run.active = snap.active;
+        for (node, list) in &snap.pending {
+            run.pending
+                .insert(*node, list.iter().cloned().collect::<VecDeque<_>>());
+        }
+        for t in &snap.inflight {
+            run.inflight.insert(
+                t.task_id,
+                InflightTask {
+                    node_id: t.node_id,
+                    attempt: t.attempt,
+                    ins: t.ins.clone(),
+                },
+            );
+        }
+        // A pending (undelivered) task is ALSO tracked in `inflight`
+        // on the live link (that is the redelivery basis); recovery's
+        // snapshots carry re-queued tasks in `pending` only, so
+        // reconstruct their inflight entries here.
+        for (node, list) in &snap.pending {
+            for ins in list {
+                run.inflight.entry(ins.task_id).or_insert(InflightTask {
+                    node_id: *node,
+                    attempt: ins.attempt,
+                    ins: Some(ins.clone()),
+                });
+            }
+        }
+        for res in &snap.results {
+            run.results.insert(res.task_id, res.clone());
+        }
+        run.failed.extend(snap.failed.iter().cloned());
+        run.done.extend(snap.done.iter().copied());
+        run.task_version.extend(snap.task_version.iter().copied());
+        run.acked.extend(snap.acked.iter().copied());
+        run
+    }
+
     /// Claim everything resolved among `task_ids`: ready results and
     /// failure verdicts, each in ascending task id and each handed out
     /// exactly once (claimed entries leave the maps). Shared by the
@@ -256,6 +351,7 @@ impl RunState {
     fn claim_resolved(
         &mut self,
         task_ids: impl Iterator<Item = u64>,
+        limit: usize,
     ) -> (Vec<TaskRes>, Vec<(u64, String)>) {
         let mut ready_ids: Vec<u64> = Vec::new();
         let mut failed: Vec<(u64, String)> = Vec::new();
@@ -268,9 +364,29 @@ impl RunState {
         }
         // Deterministic tie-break when several resolved at once.
         ready_ids.sort_unstable();
+        // Durable links claim ONE result per call (exactly-once across
+        // checkpoints): a checkpoint cut while a claimed-but-unfolded
+        // result sat in a driver's local batch would lose it forever —
+        // claimed results leave the link's snapshot, and only folded
+        // ones ride the driver's blob. With single claims, every
+        // unfolded result is still IN the link at any cut, so recovery
+        // replays it. Failure verdicts carry no payload and are never
+        // limited.
+        ready_ids.truncate(limit);
         let ready: Vec<TaskRes> = ready_ids
             .iter()
-            .map(|id| self.results.remove(id).unwrap())
+            .filter_map(|id| {
+                // Typed-error path instead of unwrap (wait-loop audit):
+                // ids were scanned under this same borrow, so a miss
+                // indicates a logic bug — log it, drop the id, keep
+                // the waiter alive.
+                let res = self.results.remove(id);
+                if res.is_none() {
+                    crate::telemetry::bump("superlink.claim_races", 1);
+                    log::error!("superlink: result for task {id} vanished during claim");
+                }
+                res
+            })
             .collect();
         failed.sort_unstable_by_key(|(id, _)| *id);
         for (id, _) in &failed {
@@ -282,6 +398,8 @@ impl RunState {
 
 pub struct SuperLink {
     cfg: LinkConfig,
+    /// Durability journal (`None`: the pre-existing in-memory mode).
+    persist: Option<Persistor>,
     next_node: AtomicU64,
     next_task: AtomicU64,
     /// Shared node pool — every run samples from the same fleet. The
@@ -305,12 +423,94 @@ impl SuperLink {
     }
 
     pub fn with_config(cfg: LinkConfig) -> Arc<SuperLink> {
+        Self::build(cfg, None, 1, 1, HashMap::new(), HashMap::new())
+    }
+
+    /// A link that journals per `dur` (`Durability::Off` is exactly
+    /// [`SuperLink::with_config`]). Starting fresh truncates any prior
+    /// journal in the directory.
+    pub fn with_durability(cfg: LinkConfig, dur: Durability) -> anyhow::Result<Arc<SuperLink>> {
+        let persist = match &dur {
+            Durability::Off => None,
+            Durability::Wal { dir } => Some(Persistor::create(dir, None)?),
+            Durability::Checkpointed { dir, every_results } => {
+                Some(Persistor::create(dir, Some((*every_results).max(1)))?)
+            }
+        };
+        Ok(Self::build(cfg, persist, 1, 1, HashMap::new(), HashMap::new()))
+    }
+
+    /// Rebuild a crashed link from its durability directory: load the
+    /// last checkpoint, replay the WAL tail, re-queue tasks that were
+    /// in flight at the crash to their ORIGINAL nodes, and resume
+    /// journaling past the valid WAL prefix (a torn suffix is
+    /// truncated). Node ids referenced by active runs are re-seeded
+    /// into the pool with fresh leases: survivors keep pulling under
+    /// their old ids as if the link never went away, and a node that
+    /// died with the link is reaped by its lease like any other death.
+    pub fn recover(cfg: LinkConfig, dur: Durability) -> anyhow::Result<Arc<SuperLink>> {
+        let dir = dur
+            .dir()
+            .ok_or_else(|| anyhow::anyhow!("recover requires a durability directory"))?;
+        let every = match &dur {
+            Durability::Checkpointed { every_results, .. } => Some((*every_results).max(1)),
+            _ => None,
+        };
+        let state = recovery::load(dir);
+        if state.torn {
+            log::warn!(
+                "superlink: recovered past a torn WAL tail (valid prefix {} bytes)",
+                state.wal_valid_len
+            );
+        }
+        let persist = Persistor::resume(dir, every, &state)?;
+        let now = Instant::now();
+        let mut nodes: HashMap<u64, NodeHealth> = HashMap::new();
+        let mut runs: HashMap<u64, RunState> = HashMap::new();
+        for snap in &state.runs {
+            if snap.active {
+                for (node, _) in &snap.pending {
+                    nodes.entry(*node).or_insert(NodeHealth { last_seen: now });
+                }
+                for res in &snap.results {
+                    nodes
+                        .entry(res.node_id)
+                        .or_insert(NodeHealth { last_seen: now });
+                }
+            }
+            runs.insert(snap.run_id, RunState::from_snapshot(snap));
+        }
+        log::info!(
+            "superlink: recovered {} run(s), {} node(s) re-seeded, {} WAL record(s) replayed",
+            runs.len(),
+            nodes.len(),
+            state.replayed
+        );
+        Ok(Self::build(
+            cfg,
+            Some(persist),
+            state.next_node.max(1),
+            state.next_task.max(1),
+            nodes,
+            runs,
+        ))
+    }
+
+    fn build(
+        cfg: LinkConfig,
+        persist: Option<Persistor>,
+        next_node: u64,
+        next_task: u64,
+        nodes: HashMap<u64, NodeHealth>,
+        runs: HashMap<u64, RunState>,
+    ) -> Arc<SuperLink> {
         Arc::new(SuperLink {
             cfg,
-            next_node: AtomicU64::new(1),
-            next_task: AtomicU64::new(1),
-            nodes: Mutex::new(HashMap::new()),
-            runs: Mutex::new(HashMap::new()),
+            persist,
+            next_node: AtomicU64::new(next_node),
+            next_task: AtomicU64::new(next_task),
+            nodes: Mutex::new(nodes),
+            runs: Mutex::new(runs),
             retired: AtomicBool::new(false),
             notify: (Mutex::new(0), Condvar::new()),
         })
@@ -318,6 +518,15 @@ impl SuperLink {
 
     pub fn config(&self) -> &LinkConfig {
         &self.cfg
+    }
+
+    /// Append one WAL record (no-op without durability). Callers hold
+    /// the runs lock at every state-transition journal site, which
+    /// orders records exactly like the transitions they describe.
+    fn journal(&self, rec: &WalRecord) {
+        if let Some(p) = &self.persist {
+            p.append(rec);
+        }
     }
 
     fn notify_all(&self) {
@@ -382,7 +591,7 @@ impl SuperLink {
         let mut changed = !dead.is_empty();
         {
             let mut runs = self.runs.lock().unwrap();
-            for run in runs.values_mut() {
+            for (rid, run) in runs.iter_mut() {
                 for d in &dead {
                     run.pending.remove(d);
                 }
@@ -397,22 +606,48 @@ impl SuperLink {
                     .collect();
                 for tid in orphaned {
                     changed = true;
-                    let mut task = run.inflight.remove(&tid).unwrap();
+                    // Typed-error path instead of unwrap: a concurrent
+                    // resolution racing this sweep (late original vs
+                    // redelivery) must skip the task, not panic the
+                    // reaper.
+                    let Some(mut task) = run.inflight.remove(&tid) else {
+                        crate::telemetry::bump("superlink.reap_races", 1);
+                        log::warn!(
+                            "superlink: task {tid} (run {rid}) resolved while being reaped — skipped"
+                        );
+                        continue;
+                    };
                     // Reclaim any still-queued copy (absent assignee).
                     if let Some(q) = run.pending.get_mut(&task.node_id) {
                         q.retain(|t| t.task_id != tid);
                     }
-                    // Node-affine tasks (FL fit/evaluate, `ins == None`)
-                    // opt out of redelivery: a substitute executing them
-                    // would pollute the cohort, so they fail instead.
-                    let redeliverable = task.ins.is_some()
+                    // Node-affine tasks (FL fit/evaluate, which set
+                    // `redeliver = false`) opt out of redelivery: a
+                    // substitute executing them would pollute the
+                    // cohort, so they fail instead. Durable links
+                    // retain EVERY instruction for checkpoints, so the
+                    // gate is the instruction's own `redeliver` flag —
+                    // not mere retention.
+                    let redeliverable = task
+                        .ins
+                        .as_ref()
+                        .is_some_and(|i| i.redeliver)
                         && task.attempt < self.cfg.max_redeliveries
                         && !alive.is_empty();
                     if redeliverable {
-                        let mut ins = task.ins.take().expect("checked is_some");
+                        let Some(mut ins) = task.ins.take() else {
+                            unreachable!("redeliverable implies a retained instruction");
+                        };
                         ins.attempt += 1;
                         let target = alive[tid as usize % alive.len()];
                         let from = task.node_id;
+                        self.journal(&WalRecord::TaskRedelivered {
+                            run_id: *rid,
+                            task_id: tid,
+                            from,
+                            to: target,
+                            attempt: ins.attempt,
+                        });
                         run.pending.entry(target).or_default().push_back(ins.clone());
                         crate::telemetry::bump("superlink.tasks_redelivered", 1);
                         log::warn!(
@@ -432,6 +667,11 @@ impl SuperLink {
                             "node {} unavailable (lease expired or never registered; attempt {})",
                             task.node_id, task.attempt
                         );
+                        self.journal(&WalRecord::TaskFailed {
+                            run_id: *rid,
+                            task_id: tid,
+                            reason: reason.clone(),
+                        });
                         run.failed.insert(tid, reason);
                         run.done.insert(tid);
                         run.task_version.remove(&tid);
@@ -525,9 +765,22 @@ impl SuperLink {
                     let mut run_ids: Vec<u64> = runs.keys().copied().collect();
                     run_ids.sort_unstable();
                     for rid in run_ids {
-                        let run = runs.get_mut(&rid).unwrap();
+                        // Defensive lookup (audit of the wait-loop
+                        // unwraps): a run vanishing between the key
+                        // scan and this access skips, never panics.
+                        let Some(run) = runs.get_mut(&rid) else {
+                            continue;
+                        };
                         if let Some(q) = run.pending.get_mut(&node_id) {
+                            let first = tasks.len();
                             tasks.extend(q.drain(..));
+                            for t in &tasks[first..] {
+                                self.journal(&WalRecord::TaskDelivered {
+                                    run_id: rid,
+                                    task_id: t.task_id,
+                                    node_id,
+                                });
+                            }
                         }
                         // Pulling after a run finished is this node's
                         // acknowledgment that no frame of that run is
@@ -553,7 +806,16 @@ impl SuperLink {
                     match runs.get_mut(&res.run_id) {
                         Some(run) if run.active => {
                             if run.done.insert(res.task_id) {
-                                run.inflight.remove(&res.task_id);
+                                let assignee = run.inflight.remove(&res.task_id);
+                                // Purge any still-queued copy (a task
+                                // re-queued by recovery whose original
+                                // result just arrived must not be
+                                // re-executed pointlessly).
+                                if let Some(t) = &assignee {
+                                    if let Some(q) = run.pending.get_mut(&t.node_id) {
+                                        q.retain(|i| i.task_id != res.task_id);
+                                    }
+                                }
                                 // Authoritative staleness basis: stamp
                                 // the version recorded at push time (a
                                 // v1 client echoes nothing; nobody gets
@@ -561,6 +823,13 @@ impl SuperLink {
                                 // hand out).
                                 if let Some(v) = run.task_version.remove(&res.task_id) {
                                     res.model_version = v;
+                                }
+                                // Journaled AFTER version stamping, so
+                                // replay restores the authoritative
+                                // version with the result.
+                                self.journal(&WalRecord::ResultAccepted { res: res.clone() });
+                                if let Some(p) = &self.persist {
+                                    p.note_result();
                                 }
                                 run.results.insert(res.task_id, res);
                                 true
@@ -662,11 +931,11 @@ impl SuperLink {
     /// active). Run ids must be unique over a link's lifetime: finished
     /// ids stay finished.
     pub fn register_run(&self, run_id: u64) {
-        self.runs
-            .lock()
-            .unwrap()
-            .entry(run_id)
-            .or_insert_with(RunState::new);
+        let mut runs = self.runs.lock().unwrap();
+        if let std::collections::hash_map::Entry::Vacant(e) = runs.entry(run_id) {
+            e.insert(RunState::new());
+            self.journal(&WalRecord::RunRegistered { run_id });
+        }
     }
 
     /// Is this run still accepting/serving tasks? (Unknown runs count as
@@ -690,21 +959,34 @@ impl SuperLink {
         ins.task_id = task_id;
         let run_id = ins.run_id;
         let mut runs = self.runs.lock().unwrap();
-        let run = runs.entry(run_id).or_insert_with(RunState::new);
+        if !runs.contains_key(&run_id) {
+            runs.insert(run_id, RunState::new());
+            self.journal(&WalRecord::RunRegistered { run_id });
+        }
+        let Some(run) = runs.get_mut(&run_id) else {
+            unreachable!("run inserted above");
+        };
         if !run.active {
             drop(runs);
             crate::telemetry::bump("superlink.stale_tasks_refused", 1);
             log::warn!("superlink: refused task push to finished run {run_id}");
             return task_id;
         }
+        if self.persist.is_some() {
+            self.journal(&WalRecord::TaskQueued {
+                node_id,
+                ins: ins.clone(),
+            });
+        }
         run.inflight.insert(
             task_id,
             InflightTask {
                 node_id,
                 attempt: ins.attempt,
-                // Retain the instruction only when redelivery may need
-                // it — the node-affine path stores just the assignment.
-                ins: ins.redeliver.then(|| ins.clone()),
+                // Retain the instruction when redelivery may need it —
+                // or when the link is durable: checkpoints snapshot full
+                // instructions so recovery can re-queue them verbatim.
+                ins: (ins.redeliver || self.persist.is_some()).then(|| ins.clone()),
             },
         );
         run.task_version.insert(task_id, ins.model_version);
@@ -726,8 +1008,19 @@ impl SuperLink {
     ) -> (Vec<TaskRes>, Vec<(u64, String)>) {
         let mut runs = self.runs.lock().unwrap();
         match runs.get_mut(&run_id) {
-            Some(run) => run.claim_resolved(task_ids.iter().copied()),
+            Some(run) => run.claim_resolved(task_ids.iter().copied(), self.claim_limit()),
             None => (Vec::new(), Vec::new()),
+        }
+    }
+
+    /// How many ready results one claim may remove from the link: 1 on
+    /// durable links (see [`RunState::claim_resolved`]), unbounded
+    /// otherwise.
+    fn claim_limit(&self) -> usize {
+        if self.persist.is_some() {
+            1
+        } else {
+            usize::MAX
         }
     }
 
@@ -800,7 +1093,9 @@ impl SuperLink {
             let (ready, newly_failed) = {
                 let mut runs = self.runs.lock().unwrap();
                 match runs.get_mut(&run_id) {
-                    Some(run) => run.claim_resolved(remaining.iter().copied()),
+                    Some(run) => {
+                        run.claim_resolved(remaining.iter().copied(), self.claim_limit())
+                    }
                     None => (Vec::new(), Vec::new()),
                 }
             };
@@ -808,6 +1103,9 @@ impl SuperLink {
                 remaining.remove(&id);
                 wait.failed.push((id, reason));
             }
+            // A limited claim may have left ready results behind:
+            // re-poll immediately instead of sleeping on the condvar.
+            let maybe_more = ready.len() >= self.claim_limit();
             // Hand over outside the lock: `f` may aggregate a full model.
             for res in ready {
                 remaining.remove(&res.task_id);
@@ -819,6 +1117,9 @@ impl SuperLink {
             }
             if remaining.is_empty() {
                 break;
+            }
+            if maybe_more {
+                continue;
             }
             let now = Instant::now();
             let mut wake = deadline;
@@ -851,6 +1152,10 @@ impl SuperLink {
             let abandoned: HashSet<u64> = wait.missing.iter().copied().collect();
             let mut runs = self.runs.lock().unwrap();
             if let Some(run) = runs.get_mut(&run_id) {
+                self.journal(&WalRecord::TasksAbandoned {
+                    run_id,
+                    task_ids: wait.missing.clone(),
+                });
                 for id in &wait.missing {
                     run.done.insert(*id);
                     run.inflight.remove(id);
@@ -923,6 +1228,7 @@ impl SuperLink {
             let mut runs = self.runs.lock().unwrap();
             let run = runs.entry(run_id).or_insert_with(RunState::new);
             run.active = false;
+            self.journal(&WalRecord::RunFinished { run_id });
             let dropped: usize = run.pending.values().map(|q| q.len()).sum();
             if dropped > 0 {
                 crate::telemetry::bump("superlink.finish_dropped_tasks", dropped as i64);
@@ -1006,6 +1312,101 @@ impl SuperLink {
             }
             self.wait_notified(deadline);
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Durability surface (consumed by the Grid hooks / drivers)
+    // ------------------------------------------------------------------
+
+    /// Is this link journaling AND checkpointing? Drivers persist their
+    /// own round state only when the link can store it.
+    pub fn is_durable(&self) -> bool {
+        self.persist.as_ref().is_some_and(|p| p.wants_checkpoints())
+    }
+
+    /// Have enough results been journaled since the last checkpoint
+    /// that a new one is due? (Always `false` without checkpointing.)
+    pub fn checkpoint_due(&self) -> bool {
+        self.persist.as_ref().is_some_and(|p| p.checkpoint_due())
+    }
+
+    /// Store a driver's opaque round-state blob and cut a full link
+    /// checkpoint with it — the checkpoint file carries both, so the
+    /// pair lands on disk atomically (one consistent cut).
+    pub fn store_driver_checkpoint(&self, run_id: u64, blob: Vec<u8>) {
+        let Some(p) = &self.persist else { return };
+        if !p.wants_checkpoints() {
+            return;
+        }
+        p.set_driver(run_id, blob);
+        self.write_checkpoint();
+    }
+
+    /// The driver blob last stored (or recovered) for `run_id`.
+    pub fn driver_checkpoint(&self, run_id: u64) -> Option<Vec<u8>> {
+        self.persist.as_ref().and_then(|p| p.driver(run_id))
+    }
+
+    /// Journal an async-driver fold (a result merged into the running
+    /// aggregate). Count-only on replay, so no run lock is required.
+    pub fn journal_async_fold(&self, run_id: u64, task_id: u64) {
+        self.journal(&WalRecord::Folded { run_id, task_id });
+    }
+
+    /// Journal an async-driver commit of global model `version`.
+    pub fn journal_async_commit(&self, run_id: u64, version: u64) {
+        self.journal(&WalRecord::Committed { run_id, version });
+    }
+
+    /// Tasks of `run_id` that are still OPEN — queued, delivered, or
+    /// resolved-but-unclaimed: everything a resumed driver must still
+    /// account for. Failed, claimed, and abandoned tasks are excluded.
+    /// Sorted by task id; each entry is `(task_id, node_id,
+    /// model_version)`.
+    pub fn open_tasks(&self, run_id: u64) -> Vec<(u64, u64, u64)> {
+        let runs = self.runs.lock().unwrap();
+        let Some(run) = runs.get(&run_id) else {
+            return Vec::new();
+        };
+        let mut out: Vec<(u64, u64, u64)> = Vec::new();
+        let mut seen: HashSet<u64> = HashSet::new();
+        for (tid, t) in &run.inflight {
+            if seen.insert(*tid) {
+                let v = run.task_version.get(tid).copied().unwrap_or(0);
+                out.push((*tid, t.node_id, v));
+            }
+        }
+        for (tid, res) in &run.results {
+            if seen.insert(*tid) {
+                out.push((*tid, res.node_id, res.model_version));
+            }
+        }
+        out.sort_unstable_by_key(|&(tid, _, _)| tid);
+        out
+    }
+
+    /// Cut a full checkpoint of the link's state: the snapshot (and the
+    /// WAL offset naming exactly the state it holds) is built under the
+    /// runs lock; file IO happens OUTSIDE the lock.
+    pub fn write_checkpoint(&self) {
+        let Some(p) = &self.persist else { return };
+        if !p.wants_checkpoints() {
+            return;
+        }
+        let ckpt = {
+            let runs = self.runs.lock().unwrap();
+            let mut snaps: Vec<RunSnapshot> =
+                runs.iter().map(|(rid, run)| run.snapshot(*rid)).collect();
+            snaps.sort_unstable_by_key(|s| s.run_id);
+            Checkpoint {
+                wal_offset: p.wal_offset(),
+                next_node: self.next_node.load(Ordering::Relaxed),
+                next_task: self.next_task.load(Ordering::Relaxed),
+                runs: snaps,
+                drivers: p.drivers_vec(),
+            }
+        };
+        p.write_checkpoint(&ckpt);
     }
 }
 

@@ -83,6 +83,24 @@ pub fn snapshot() -> Vec<(String, i64)> {
         .collect()
 }
 
+/// Log every non-zero counter at INFO, one line per counter, under the
+/// given heading. No-op unless INFO logging is enabled (set
+/// `FLARELINK_LOG=info`), so tests and benches stay quiet by default.
+/// Used at Federation teardown to surface the durability counters
+/// (`wal.appends`, `wal.bytes`, `checkpoint.count`,
+/// `recovery.replayed_records`, ...) without a metrics stack.
+pub fn dump_counters(heading: &str) {
+    if !log::log_enabled!(log::Level::Info) {
+        return;
+    }
+    log::info!("{heading}: counter snapshot");
+    for (name, value) in snapshot() {
+        if value != 0 {
+            log::info!("{heading}:   {name} = {value}");
+        }
+    }
+}
+
 /// Reset all counters to zero (bench harness runs).
 pub fn reset_counters() {
     for (_, v) in COUNTERS.lock().unwrap().iter() {

@@ -167,6 +167,62 @@ fn check_async_staleness0_equals_sync(mk: &dyn Fn() -> Box<dyn Strategy>, label:
     );
 }
 
+/// Check 4 (durability): recovered == uninterrupted at the strategy
+/// layer. Three results fold, the "driver dies", and a FRESH strategy
+/// instance — fed the crashed one's exported cross-round state and the
+/// accumulator's snapshot — folds the rest. Every round must finalize
+/// bit-identical to the uninterrupted path, including LATER rounds
+/// (stateful strategies must carry momentum/moments across the crash).
+fn check_recovered_equals_uninterrupted(mk: &dyn Fn() -> Box<dyn Strategy>, label: &str) {
+    assert!(
+        mk().supports_snapshot(),
+        "{label}: matrix strategies advertise snapshot support"
+    );
+    let mut clean = mk();
+    let mut crashed = mk();
+    let mut params_clean = ArrayRecord::from_flat(&[0.25f32; 6]);
+    let mut params_crashed = params_clean.clone();
+    for round in 1..=3u64 {
+        let results = mk_results(6, 6, round * 419);
+
+        let mut agg = clean.begin_fit(round, &params_clean);
+        for r in &results {
+            agg.accumulate(r.clone()).unwrap();
+        }
+        params_clean = agg.finalize().unwrap();
+
+        // Crash after three folds; snapshot is what the checkpoint held.
+        let snap = {
+            let mut agg = crashed.begin_fit(round, &params_crashed);
+            for r in &results[..3] {
+                agg.accumulate(r.clone()).unwrap();
+            }
+            agg.snapshot()
+                .unwrap_or_else(|| panic!("{label}: snapshot-supporting strategy returned None"))
+        };
+        let mut restored = mk();
+        if let Some(state) = crashed.export_state() {
+            restored.import_state(&state).unwrap();
+        }
+        let mut agg = restored.begin_fit(round, &params_crashed);
+        agg.restore(snap).unwrap();
+        assert_eq!(agg.count(), 3, "{label}: restore must carry the folded count");
+        for r in &results[3..] {
+            agg.accumulate(r.clone()).unwrap();
+        }
+        params_crashed = agg.finalize().unwrap();
+        // The recovered instance IS the strategy from here on.
+        crashed = restored;
+
+        assert_eq!(
+            bits(&params_clean),
+            bits(&params_crashed),
+            "{label}: round {round} recovered from a mid-round snapshot diverged \
+             from the uninterrupted accumulator"
+        );
+    }
+}
+
 macro_rules! conformance_matrix {
     ($($name:ident => $mk:expr;)*) => {$(
         mod $name {
@@ -196,7 +252,13 @@ macro_rules! conformance_matrix {
                 let s = mk();
                 assert!(s.supports_partial(), "plain reductions aggregate partial cohorts");
                 assert!(s.supports_async(), "plain reductions aggregate asynchronously");
+                assert!(s.supports_snapshot(), "plain reductions checkpoint mid-round");
                 assert_eq!(s.staleness_weight(0), 1.0, "fresh results must weigh exactly 1");
+            }
+
+            #[test]
+            fn recovered_equals_uninterrupted() {
+                check_recovered_equals_uninterrupted(&mk, stringify!($name));
             }
         }
     )*};
@@ -316,6 +378,27 @@ mod secagg {
         let s = SecAggFedAvg::new(7);
         assert!(!s.supports_partial(), "masks only cancel over the full cohort");
         assert!(!s.supports_async(), "masks are bound to one model version");
+        assert!(
+            !s.supports_snapshot(),
+            "partially-cancelled masked sums must never reach disk"
+        );
+    }
+
+    /// The typed refusal row: a snapshot-declining accumulator returns
+    /// `None` from `snapshot()` and a named error from `restore()` —
+    /// never a panic, never a silent half-checkpoint.
+    #[test]
+    fn snapshot_refusal_is_typed() {
+        use flarelink::flower::strategy::AggSnapshot;
+        let mut s = SecAggFedAvg::new(7);
+        let init = ArrayRecord::from_flat(&[0.0f32; 4]);
+        let mut agg = s.begin_fit(1, &init);
+        assert!(agg.snapshot().is_none(), "secagg accumulators decline snapshots");
+        let err = agg.restore(AggSnapshot::Fit(Vec::new())).unwrap_err();
+        assert!(
+            err.to_string().contains("does not support snapshot restore"),
+            "refusal must name the capability: {err}"
+        );
     }
 
     #[test]
