@@ -37,6 +37,7 @@ use crate::flower::clientapp::{ClientApp, Router};
 use crate::flower::grid::Grid;
 use crate::flower::message::Message;
 use crate::flower::serverapp::{History, ServerApp};
+use crate::flower::shard::ShardedGrid;
 use crate::flower::superlink::{CompletionPolicy, RoundWait, SuperLink};
 use crate::flower::supernode::{NativeConnector, SuperNode, SuperNodeConfig};
 use crate::proto::address;
@@ -142,6 +143,10 @@ impl Grid for BridgedGrid {
         Grid::wait_activity(self.link().as_ref(), timeout)
     }
 
+    fn wait_activity_run(&self, run_id: u64, timeout: Duration) {
+        Grid::wait_activity_run(self.link().as_ref(), run_id, timeout)
+    }
+
     fn for_each_reply(
         &self,
         run_id: u64,
@@ -180,6 +185,26 @@ impl Grid for BridgedGrid {
     fn open_tasks(&self, run_id: u64) -> Vec<(u64, u64, u64)> {
         SuperLink::open_tasks(self.link().as_ref(), run_id)
     }
+}
+
+/// Wire the LGC to a [`ShardedGrid`]: Flower frames arriving over FLARE
+/// route by node id to the owning shard
+/// ([`ShardedGrid::handle_frame_shared`]) — the bridged counterpart of
+/// [`BridgedGrid::attach`] for hierarchical topologies (job keys
+/// `shards` / `shard_of`). The driver runs against the returned grid
+/// exactly like a native sharded run.
+pub fn attach_sharded(ctx: &JobCtx, grid: Arc<ShardedGrid>) -> Arc<ShardedGrid> {
+    let routed = grid.clone();
+    ctx.messenger.set_handler(Arc::new(move |env| {
+        if env.topic != FLOWER_TOPIC {
+            anyhow::bail!("unexpected topic {}", env.topic);
+        }
+        crate::telemetry::bump("bridge.frames_relayed", 1);
+        crate::telemetry::bump("bridge.frame_bytes", env.payload.len() as i64);
+        let frame = std::mem::take(&mut env.payload);
+        Ok(routed.handle_frame_shared(Bytes::from_vec(frame)))
+    }));
+    grid
 }
 
 /// Builds the client-side (message [`Router`] or classic ClientApp) and
@@ -263,6 +288,86 @@ impl FlowerBridgeApp {
         self.history_sink = Some(sink);
         self
     }
+
+    /// Server side of a sharded bridged job (`shards` > 1): build the
+    /// [`ShardedGrid`], wire it as the LGC target, drive the run
+    /// through the Grid surface, then retire and drain every shard.
+    fn run_server_sharded(
+        &self,
+        ctx: &JobCtx,
+        link_cfg: crate::flower::superlink::LinkConfig,
+        shards: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ctx.config.get("concurrent_runs").as_u64().unwrap_or(1) <= 1,
+            "job {}: concurrent_runs is not supported with shards — \
+             submit per-run sharded jobs instead",
+            ctx.job_id
+        );
+        let mut overrides = std::collections::HashMap::new();
+        if let Some(map) = ctx.config.get("shard_of").as_obj() {
+            for (key, val) in map {
+                let (Ok(node), Some(shard)) = (key.parse::<u64>(), val.as_u64()) else {
+                    anyhow::bail!(
+                        "job {}: shard_of entries must map a node id to a shard index",
+                        ctx.job_id
+                    );
+                };
+                overrides.insert(node, shard as usize);
+            }
+        }
+        let durability = match ctx.config.get("durability_dir").as_str() {
+            Some(dir) => crate::flower::persist::Durability::Checkpointed {
+                dir: std::path::PathBuf::from(dir),
+                every_results: ctx.config.get("checkpoint_every").as_u64().unwrap_or(1),
+            },
+            None => crate::flower::persist::Durability::Off,
+        };
+        let grid = attach_sharded(
+            ctx,
+            ShardedGrid::with_topology(shards, link_cfg, durability, overrides)?,
+        );
+        let async_cfg = match ctx.config.get("async_buffer_size").as_u64() {
+            Some(buffer) if buffer > 0 => Some(crate::flower::asyncfed::AsyncConfig {
+                buffer_size: buffer as usize,
+                max_staleness: ctx
+                    .config
+                    .get("max_staleness")
+                    .as_u64()
+                    .unwrap_or(crate::flower::asyncfed::AsyncConfig::default().max_staleness),
+            }),
+            _ => None,
+        };
+        let result: anyhow::Result<()> = if let Some(custom) = self.builder.drive(ctx, grid.as_ref())
+        {
+            custom
+        } else {
+            self.builder.build_server(ctx).and_then(|mut server_app| {
+                let tracker = if self.builder.track() {
+                    Some(&ctx.tracker)
+                } else {
+                    None
+                };
+                let history = match async_cfg {
+                    Some(acfg) => server_app.run_async(&grid, tracker, 1, acfg),
+                    None => server_app.run(&grid, tracker, 1),
+                };
+                history.map(|h| {
+                    if let Some(sink) = &self.history_sink {
+                        sink(&ctx.job_id, &h);
+                    }
+                })
+            })
+        };
+        grid.retire();
+        if !grid.wait_all_drained(SHUTDOWN_DRAIN_TIMEOUT) {
+            log::warn!(
+                "job {}: supernode(s) never acknowledged shutdown on a shard",
+                ctx.job_id
+            );
+        }
+        result
+    }
 }
 
 impl AppFactory for FlowerBridgeApp {
@@ -334,6 +439,14 @@ impl AppFactory for FlowerBridgeApp {
                 .map(|n| n as u32)
                 .unwrap_or(defaults.max_redeliveries),
         };
+        // Sharded topology rides the job config: `shards` > 1 routes the
+        // LGC through a hierarchical ShardedGrid (consistent-hash
+        // node→shard assignment; `shard_of` pins nodes explicitly) —
+        // the bridged counterpart of the native sharded run.
+        let shards = ctx.config.get("shards").as_u64().unwrap_or(1).max(1) as usize;
+        if shards > 1 {
+            return self.run_server_sharded(&ctx, link_cfg, shards);
+        }
         // Durability rides the job config too: `durability_dir` turns on
         // WAL + checkpoints (cadence `checkpoint_every` results, default
         // 1) so the bridged SuperLink survives a crash exactly like the
@@ -626,6 +739,38 @@ mod tests {
             async_h.params_bits_equal(&sync_h),
             "bridged async (buffer == cohort, staleness 0) must equal bridged sync"
         );
+    }
+
+    /// Sharded bridged execution (`shards` job key): the LGC routes
+    /// frames through a hierarchical ShardedGrid, and the result is
+    /// bit-identical to the flat bridged job — the fan-in tree is
+    /// invisible above the Grid trait.
+    #[test]
+    fn bridged_sharded_equals_flat_bridged_bitexact() {
+        let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+        let c2 = captured.clone();
+        let app = FlowerBridgeApp::new(Arc::new(TestBuilder))
+            .with_policy(RetryPolicy::fast())
+            .with_history_sink(Arc::new(move |_, h| {
+                *c2.lock().unwrap() = Some(h.clone());
+            }));
+        let fed = FederationBuilder::new("bridge-sharded")
+            .sites(2)
+            .retry_policy(RetryPolicy::fast())
+            .build(Arc::new(app))
+            .unwrap();
+        let spec = JobSpec::new("sh", "flower_bridge").with_config(Json::obj(vec![
+            ("rounds", Json::num(2)),
+            ("shards", Json::num(2)),
+        ]));
+        fed.scp.submit(spec).unwrap();
+        let status = fed.scp.wait("sh", Duration::from_secs(60)).unwrap();
+        assert_eq!(status, JobStatus::Finished, "err={:?}", fed.scp.job_error("sh"));
+        fed.shutdown();
+        let sharded = captured.lock().unwrap().take().unwrap();
+        let flat = bridged_history(0.0, 2);
+        assert_eq!(sharded, flat);
+        assert!(sharded.params_bits_equal(&flat));
     }
 
     /// Shared-SuperLink multi-run (§2/§3.1): one job, N concurrent

@@ -265,7 +265,9 @@ impl Federation {
         self.scp.shutdown();
         // Observability teardown: surface the process-wide counters
         // (WAL appends/bytes, checkpoints, recovery replays, routing
-        // stats) once per federation, when INFO logging is on.
+        // stats) once per federation, when INFO logging is on. Sharded
+        // runs also print the per-shard `name[shard-k]` breakdown,
+        // indented beneath each authoritative unlabelled total.
         if !self
             .dumped
             .swap(true, std::sync::atomic::Ordering::SeqCst)

@@ -415,6 +415,16 @@ impl ServerApp {
         mut history: History,
         mut state: AsyncState,
     ) -> anyhow::Result<History> {
+        // Mirror the synchronous driver's sharding gate: the async
+        // buffer is one aggregator that must see every contribution.
+        anyhow::ensure!(
+            grid.shard_count() == 1 || self.strategy.supports_sharding(),
+            "strategy {} cannot aggregate across {} shards (e.g. secure aggregation \
+             masks only cancel when one aggregator sees the full cohort) — \
+             run it on a single link",
+            self.strategy.name(),
+            grid.shard_count()
+        );
         let cfg = self.config.clone();
         let nodes = grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
         anyhow::ensure!(
@@ -605,7 +615,7 @@ impl ServerApp {
                         state.version()
                     );
                 }
-                grid.wait_activity(Duration::from_millis(50));
+                grid.wait_activity_run(run_id, Duration::from_millis(50));
             }
             params = agg.finalize()?;
             let rec = state.commit();

@@ -103,6 +103,24 @@ pub trait Grid: Send + Sync {
     /// dies, a run finishes) or `timeout` passes.
     fn wait_activity(&self, timeout: Duration);
 
+    /// Like [`Grid::wait_activity`], but scoped to one run where the
+    /// grid supports it: the driver sleeps on that run's notify seat and
+    /// is not woken by other runs' traffic. The default falls back to
+    /// the any-change wait, so the contract ("wakes at least when this
+    /// run changes") always holds.
+    fn wait_activity_run(&self, _run_id: u64, timeout: Duration) {
+        self.wait_activity(timeout);
+    }
+
+    /// How many interior aggregation shards serve this grid (1 = a flat
+    /// single link). Strategies that cannot merge partial aggregates —
+    /// see `supports_sharding` on
+    /// [`crate::flower::strategy::Strategy`] — are refused by drivers
+    /// when this exceeds 1.
+    fn shard_count(&self) -> usize {
+        1
+    }
+
     /// Stream replies for `ids` to `f` AS THEY ARRIVE (arrival order);
     /// the [`CompletionPolicy`] decides when the wait may stop and the
     /// outcome is reported as data. Only a callback error aborts.
@@ -195,6 +213,10 @@ impl Grid for SuperLink {
         SuperLink::wait_activity(self, timeout);
     }
 
+    fn wait_activity_run(&self, run_id: u64, timeout: Duration) {
+        SuperLink::wait_activity_run(self, run_id, timeout);
+    }
+
     fn for_each_reply(
         &self,
         run_id: u64,
@@ -278,6 +300,14 @@ impl<G: Grid + ?Sized> Grid for Arc<G> {
 
     fn wait_activity(&self, timeout: Duration) {
         (**self).wait_activity(timeout)
+    }
+
+    fn wait_activity_run(&self, run_id: u64, timeout: Duration) {
+        (**self).wait_activity_run(run_id, timeout)
+    }
+
+    fn shard_count(&self) -> usize {
+        (**self).shard_count()
     }
 
     fn for_each_reply(

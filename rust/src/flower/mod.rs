@@ -14,6 +14,7 @@ pub mod persist;
 pub mod records;
 pub mod secagg;
 pub mod run;
+pub mod shard;
 pub mod serverapp;
 pub mod strategy;
 pub mod superlink;
@@ -40,5 +41,6 @@ pub use run::{
 };
 pub use secagg::{SecAggFedAvg, SecAggMod};
 pub use serverapp::{History, Participation, RoundRecord, ServerApp, ServerConfig};
+pub use shard::ShardedGrid;
 pub use superlink::{CompletionPolicy, LinkConfig, ResultTimeout, RoundWait, SuperLink};
 pub use supernode::{FlowerConnector, NativeConnector, SuperNode, SuperNodeConfig};

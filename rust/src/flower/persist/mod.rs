@@ -82,9 +82,11 @@ impl Durability {
 /// The link's handle on its durability directory: the open WAL, the
 /// checkpoint cadence counter, and the drivers' latest resume blobs.
 ///
-/// Lock order: callers (the SuperLink) always hold the runs lock
-/// before touching the WAL mutex — the WAL is a leaf lock, which also
-/// serializes appends against checkpoint offset capture.
+/// Lock order: callers (the SuperLink) take the run-map read lock,
+/// then at most one run's state mutex, then the WAL mutex — the WAL is
+/// a leaf lock, which also serializes appends against checkpoint
+/// offset capture. (Checkpointing locks ALL run mutexes in ascending
+/// run-id order before the WAL, compatible with the same order.)
 pub struct Persistor {
     dir: PathBuf,
     wal: Mutex<Wal>,

@@ -277,7 +277,9 @@ impl FlowerConnector for SwitchConnector {
 /// `UNKNOWN_NODE_ERR`) and resumes pulling from whatever link is
 /// plugged in.
 pub struct SwitchedFleet {
-    switch: Arc<LinkSwitch>,
+    /// Every switch this fleet's nodes dial — one for a flat link, one
+    /// per shard for a sharded topology ([`SwitchedFleet::start_sharded`]).
+    switches: Vec<Arc<LinkSwitch>>,
     handles: Vec<std::thread::JoinHandle<anyhow::Result<u64>>>,
 }
 
@@ -291,14 +293,49 @@ impl SwitchedFleet {
         max_downtime: Duration,
     ) -> anyhow::Result<SwitchedFleet> {
         let switch = LinkSwitch::new(link);
+        let handles = Self::spawn_nodes(client_apps, max_downtime, |_| switch.clone())?;
+        Ok(SwitchedFleet {
+            switches: vec![switch],
+            handles,
+        })
+    }
+
+    /// The sharded topology: one SuperNode per client app (ids pinned
+    /// to client order), each dialing the switch of the shard its
+    /// pinned id hashes to on `grid` — so killing one shard takes down
+    /// exactly that shard's nodes while the rest of the fleet keeps
+    /// serving, and a [`ShardedGrid::recover_shard`] brings them back.
+    ///
+    /// [`ShardedGrid::recover_shard`]: crate::flower::shard::ShardedGrid::recover_shard
+    pub fn start_sharded(
+        grid: &Arc<crate::flower::shard::ShardedGrid>,
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        max_downtime: Duration,
+    ) -> anyhow::Result<SwitchedFleet> {
+        let grid = grid.clone();
+        let switches: Vec<Arc<LinkSwitch>> = (0..Grid::shard_count(&*grid))
+            .map(|k| grid.shard_switch(k).clone())
+            .collect();
+        let handles = Self::spawn_nodes(client_apps, max_downtime, |node_id| {
+            grid.shard_switch(grid.shard_for_node(node_id)).clone()
+        })?;
+        Ok(SwitchedFleet { switches, handles })
+    }
+
+    fn spawn_nodes(
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        max_downtime: Duration,
+        mut switch_for: impl FnMut(u64) -> Arc<LinkSwitch>,
+    ) -> anyhow::Result<Vec<std::thread::JoinHandle<anyhow::Result<u64>>>> {
         let mut handles = Vec::new();
         for (i, app) in client_apps.into_iter().enumerate() {
+            let node_id = i as u64 + 1;
             let app = Arc::new(Router::from_client(app)) as Arc<dyn MessageApp>;
             let mut node = SuperNode::with_app(
-                Box::new(SwitchConnector::new(switch.clone(), max_downtime)),
+                Box::new(SwitchConnector::new(switch_for(node_id), max_downtime)),
                 app,
                 SuperNodeConfig {
-                    requested_node_id: i as u64 + 1,
+                    requested_node_id: node_id,
                     connect_deadline: max_downtime,
                     ..Default::default()
                 },
@@ -309,17 +346,19 @@ impl SwitchedFleet {
                     .spawn(move || -> anyhow::Result<u64> { node.run() })?,
             );
         }
-        Ok(SwitchedFleet { switch, handles })
+        Ok(handles)
     }
 
     pub fn switch(&self) -> &Arc<LinkSwitch> {
-        &self.switch
+        &self.switches[0]
     }
 
-    /// Retire the CURRENT link (if any) and join every SuperNode.
+    /// Retire every CURRENT link (if any) and join every SuperNode.
     pub fn shutdown(self) {
-        if let Some(link) = self.switch.current() {
-            link.retire();
+        for switch in &self.switches {
+            if let Some(link) = switch.current() {
+                link.retire();
+            }
         }
         for h in self.handles {
             match h.join() {

@@ -186,6 +186,15 @@ impl Strategy for SecAggFedAvg {
         false
     }
 
+    /// Sharding story mirrors the partial one: per-shard intermediate
+    /// aggregators each see only a SUBSET of the cohort, so every shard
+    /// partial is a residue-masked sum — wrong to merge and a privacy
+    /// leak to export. Drivers refuse a sharded grid for this strategy
+    /// (the typed refusal mirroring [`Strategy::supports_partial`]).
+    fn supports_sharding(&self) -> bool {
+        false
+    }
+
     fn configure_fit(&mut self, round: u64) -> ConfigRecord {
         ConfigRecord::from_pairs(vec![
             (

@@ -362,6 +362,17 @@ impl ServerApp {
         mut history: History,
         mut resume_fit: Option<FitCkpt>,
     ) -> anyhow::Result<History> {
+        // Sharded grids merge per-shard partial aggregates at a root;
+        // a strategy that cannot merge partials (secagg) must be
+        // refused up front, not finalize mask residue.
+        anyhow::ensure!(
+            grid.shard_count() == 1 || self.strategy.supports_sharding(),
+            "strategy {} cannot aggregate across {} shards (e.g. secure aggregation \
+             masks only cancel when one aggregator sees the full cohort) — \
+             run it on a single link",
+            self.strategy.name(),
+            grid.shard_count()
+        );
         let cfg = self.config.clone();
         grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
         // Mid-round durability requires the strategy to snapshot its

@@ -1,0 +1,868 @@
+//! **ShardedGrid**: a hierarchical SuperLink — N interior link shards
+//! with consistent-hash node→shard assignment behind one [`Grid`], so
+//! drivers (`ServerApp`, the async FedBuff loop, analytics queries) run
+//! unchanged while fleet traffic fans in over N independent lock
+//! domains instead of one.
+//!
+//! ```text
+//!                    driver (ServerApp / asyncfed)
+//!                               │ Grid
+//!                        ┌──────┴──────┐
+//!                        │ ShardedGrid │   root accumulator:
+//!                        │ coordinator │   merge shard partials
+//!                        └┬────┬────┬──┘   in shard-id order
+//!                    ┌────┘    │    └────┐
+//!                 shard 0   shard 1   shard 2     interior SuperLinks,
+//!                 FitAgg    FitAgg    FitAgg      one per task-id band
+//!                 ▲  ▲      ▲  ▲      ▲  ▲
+//!                nodes s.t. SplitMix64(node) % N == shard
+//! ```
+//!
+//! # Topology
+//!
+//! Each shard is a full [`SuperLink`] (wrapped in a
+//! [`LinkSwitch`] so chaos tests can kill and recover it) serving the
+//! nodes whose id hashes to it: `SplitMix64(node_id) % N`, optionally
+//! pinned per node via `with_topology` overrides. The hash depends only
+//! on the node id, so the assignment is stable across restarts,
+//! processes, and transports — a SuperNode always lands on the same
+//! shard. Node ids must therefore be PINNED (`CreateNode { requested >
+//! 0 }`); the router refuses server-assigned registration, which would
+//! hash a node by an id it does not know yet.
+//!
+//! Task ids stay globally unique because each shard allocates from a
+//! private band: shard `k` hands out ids in `[k·2⁴⁸ + 1, (k+1)·2⁴⁸]`
+//! ([`SuperLink::with_role`]). Routing a task id back to its shard is a
+//! single division, and concatenating per-shard claims in shard-id
+//! order yields globally ascending ids — the [`Grid::pull_messages`]
+//! contract — for free.
+//!
+//! # Hierarchical aggregation, exactly
+//!
+//! During a result wait each shard's arrivals fold into an intermediate
+//! [`SortedBuffer`] tier. When the completion policy is satisfied the
+//! coordinator exports every tier's partial via
+//! [`FitAgg::snapshot`], merges them into a root accumulator in
+//! shard-id order (validating that the partials partition the fleet),
+//! and replays the buffered replies to the driver shard-major. The
+//! driving strategy's own accumulator canonicalizes by node id at
+//! finalize (PR 2's `SortedBuffer` invariant) and the synchronous
+//! driver sorts its metric bases the same way, so the result is
+//! **bit-identical** to a single flat link — the replay order cannot
+//! leak into the model or the history. Strategies that cannot merge
+//! partials (secure aggregation: masks cancel only over one full
+//! cohort) advertise `supports_sharding() == false` and drivers refuse
+//! to run them when [`Grid::shard_count`] exceeds 1.
+//!
+//! Durability composes per shard: `with_durability` gives shard `k` its
+//! own WAL/checkpoint directory (`<dir>/shard-k`), and
+//! [`ShardedGrid::recover_shard`] rebuilds one crashed shard in place
+//! while the others keep serving. The grid itself reports
+//! `durable() == false` to drivers — driver round checkpoints assume a
+//! single-link layout — so shard WALs protect the fleet state, not
+//! mid-round driver state.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::flower::grid::Grid;
+use crate::flower::message::{FlowerMsg, Message, MessageType, TaskRes};
+use crate::flower::persist::Durability;
+use crate::flower::records::ArrayRecord;
+use crate::flower::run::LinkSwitch;
+use crate::flower::strategy::{AggSnapshot, FitAgg, FitRes, SortedBuffer};
+use crate::flower::superlink::{CompletionPolicy, LinkConfig, Notify, RoundWait, SuperLink};
+use crate::util::bytes::Bytes;
+use crate::util::rng::SplitMix64;
+
+/// Width of each shard's private task-id band. Node ids are capped at
+/// `MAX_PINNED_NODE_ID` (2⁴⁸ − 1), so the same width gives every shard
+/// more ids than any run will allocate while keeping
+/// [`shard_of_task`] a single division.
+const TASK_STRIDE: u64 = 1 << 48;
+
+/// Which shard's band a task id was allocated from.
+fn shard_of_task(task_id: u64) -> usize {
+    (task_id.saturating_sub(1) / TASK_STRIDE) as usize
+}
+
+/// First task id of shard `k`'s band.
+fn band_start(k: usize) -> u64 {
+    k as u64 * TASK_STRIDE + 1
+}
+
+/// Scope a grid-level durability config to one shard: each shard
+/// journals into its own subdirectory, so per-shard recovery replays
+/// only that shard's history.
+fn shard_durability(dur: &Durability, k: usize) -> Durability {
+    match dur {
+        Durability::Off => Durability::Off,
+        Durability::Wal { dir } => Durability::Wal {
+            dir: dir.join(format!("shard-{k}")),
+        },
+        Durability::Checkpointed { dir, every_results } => Durability::Checkpointed {
+            dir: dir.join(format!("shard-{k}")),
+            every_results: *every_results,
+        },
+    }
+}
+
+/// One shard's intermediate aggregation tier for a result wait:
+/// error-free train replies fold into a streaming accumulator (the
+/// partial the root merges), and EVERY reply is buffered for the
+/// shard-major replay to the driver — errors, eval and query replies
+/// included, so driver-side failure policy is untouched by sharding.
+struct ShardTier {
+    agg: SortedBuffer<fn(&[FitRes]) -> anyhow::Result<ArrayRecord>>,
+    trained: usize,
+    replies: Vec<TaskRes>,
+}
+
+/// Reduction slot of the interior tiers and the root accumulator: they
+/// only ever export/merge partials via snapshots — the driving
+/// strategy performs the one real finalize — so reaching this is a bug.
+fn partial_only(_: &[FitRes]) -> anyhow::Result<ArrayRecord> {
+    anyhow::bail!(
+        "shard-tier accumulators only export partial snapshots; \
+         the driving strategy finalizes the merged result set"
+    )
+}
+
+impl ShardTier {
+    fn new() -> ShardTier {
+        ShardTier {
+            agg: SortedBuffer::new(partial_only),
+            trained: 0,
+            replies: Vec::new(),
+        }
+    }
+
+    fn absorb(&mut self, res: TaskRes) -> anyhow::Result<()> {
+        if res.error.is_empty() && res.message_type == MessageType::Train {
+            self.agg.accumulate(FitRes {
+                node_id: res.node_id,
+                parameters: res.parameters.clone(),
+                num_examples: res.num_examples,
+                metrics: res.metrics.clone(),
+            })?;
+            self.trained += 1;
+        }
+        self.replies.push(res);
+        Ok(())
+    }
+}
+
+/// N interior SuperLink shards behind one [`Grid`] (see the module
+/// docs for the topology and exactness guarantees).
+pub struct ShardedGrid {
+    cfg: LinkConfig,
+    durability: Durability,
+    shards: Vec<Arc<LinkSwitch>>,
+    /// Explicit node→shard pins (partition-aware placement, tests).
+    /// Nodes absent here use the consistent hash.
+    overrides: HashMap<u64, usize>,
+    /// The coordinator's single notify seat, subscribed to every shard:
+    /// one condvar hears the whole tree.
+    seat: Arc<Notify>,
+    /// How long routing waits for a downed shard to come back (a
+    /// [`ShardedGrid::recover_shard`] in progress) before failing the
+    /// frame or dispatch, in ms.
+    grace_ms: AtomicU64,
+}
+
+impl ShardedGrid {
+    /// A non-durable sharded grid with consistent-hash assignment.
+    pub fn new(shards: usize, cfg: LinkConfig) -> Arc<ShardedGrid> {
+        Self::with_topology(shards, cfg, Durability::Off, HashMap::new())
+            .expect("non-durable sharded grid construction is infallible")
+    }
+
+    /// A sharded grid whose shard `k` journals into `<dir>/shard-k`.
+    pub fn with_durability(
+        shards: usize,
+        cfg: LinkConfig,
+        dur: Durability,
+    ) -> anyhow::Result<Arc<ShardedGrid>> {
+        Self::with_topology(shards, cfg, dur, HashMap::new())
+    }
+
+    /// Full constructor: shard count, link config, durability, and
+    /// explicit node→shard `overrides` (nodes absent there hash).
+    pub fn with_topology(
+        shards: usize,
+        cfg: LinkConfig,
+        durability: Durability,
+        overrides: HashMap<u64, usize>,
+    ) -> anyhow::Result<Arc<ShardedGrid>> {
+        anyhow::ensure!(shards >= 1, "a sharded grid needs at least one shard");
+        let seat = Arc::new(Notify::new());
+        let mut switches = Vec::with_capacity(shards);
+        for k in 0..shards {
+            let label = format!("shard-{k}");
+            let link = match shard_durability(&durability, k) {
+                Durability::Off => SuperLink::with_role(cfg, &label, band_start(k)),
+                dur => SuperLink::with_durability_role(cfg, dur, &label, band_start(k))?,
+            };
+            link.subscribe(seat.clone());
+            switches.push(LinkSwitch::new(link));
+        }
+        Ok(Arc::new(ShardedGrid {
+            cfg,
+            durability,
+            shards: switches,
+            overrides,
+            seat,
+            grace_ms: AtomicU64::new(5_000),
+        }))
+    }
+
+    /// Tune the downed-shard routing grace (default 5s). Chaos tests
+    /// shorten it; deployments match it to their recovery budget.
+    pub fn set_grace(&self, grace: Duration) {
+        self.grace_ms
+            .store(grace.as_millis() as u64, Ordering::Relaxed);
+    }
+
+    fn grace(&self) -> Duration {
+        Duration::from_millis(self.grace_ms.load(Ordering::Relaxed))
+    }
+
+    /// The shard serving `node_id`: its override pin, else the
+    /// consistent hash `SplitMix64(node_id) % N` — a pure function of
+    /// the node id, identical across every process that knows N.
+    pub fn shard_for_node(&self, node_id: u64) -> usize {
+        if let Some(&k) = self.overrides.get(&node_id) {
+            return k.min(self.shards.len() - 1);
+        }
+        let mut rng = SplitMix64::new(node_id);
+        (rng.next_u64() % self.shards.len() as u64) as usize
+    }
+
+    /// Shard `k`'s switch — what a [`crate::flower::run::SwitchConnector`]
+    /// dials so a SuperNode follows its shard across kill/recover.
+    pub fn shard_switch(&self, k: usize) -> &Arc<LinkSwitch> {
+        &self.shards[k]
+    }
+
+    /// Shard `k`'s live link, if it is currently up.
+    pub fn shard_link(&self, k: usize) -> Option<Arc<SuperLink>> {
+        self.shards[k].current()
+    }
+
+    /// Kill shard `k` (chaos injection): its link is detached and
+    /// returned; routing to it fails after the grace until
+    /// [`ShardedGrid::restart_shard`] or [`ShardedGrid::recover_shard`].
+    pub fn kill_shard(&self, k: usize) -> Option<Arc<SuperLink>> {
+        let dead = self.shards[k].kill_link();
+        self.seat.signal();
+        dead
+    }
+
+    /// Install `link` as shard `k` (subscribing it to the coordinator
+    /// seat) and wake every waiter parked on the shard being down.
+    pub fn restart_shard(&self, k: usize, link: Arc<SuperLink>) {
+        link.subscribe(self.seat.clone());
+        self.shards[k].restart_link(link);
+        self.seat.signal();
+    }
+
+    /// Rebuild a crashed shard from its own WAL/checkpoint directory
+    /// and swap it in — the sharded analogue of [`SuperLink::recover`].
+    /// The other shards keep serving throughout.
+    pub fn recover_shard(&self, k: usize) -> anyhow::Result<Arc<SuperLink>> {
+        let dur = shard_durability(&self.durability, k);
+        anyhow::ensure!(
+            !matches!(dur, Durability::Off),
+            "recover_shard needs a durable sharded grid (shard WALs off)"
+        );
+        let link = SuperLink::recover_role(self.cfg, dur, &format!("shard-{k}"), band_start(k))?;
+        self.restart_shard(k, link.clone());
+        Ok(link)
+    }
+
+    /// Retire every live shard: connected SuperNodes see inactive
+    /// pulls and disconnect cleanly.
+    pub fn retire(&self) {
+        for sw in &self.shards {
+            if let Some(link) = sw.current() {
+                link.retire();
+            }
+        }
+    }
+
+    /// Wait for every live shard's node pool to drain (after
+    /// [`ShardedGrid::retire`]); `false` if the budget ran out first.
+    pub fn wait_all_drained(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        self.shards.iter().all(|sw| match sw.current() {
+            Some(link) => {
+                link.wait_all_drained(deadline.saturating_duration_since(Instant::now()))
+            }
+            None => true,
+        })
+    }
+
+    /// Shard `k`'s link, waiting out a kill→recover window up to the
+    /// routing grace.
+    fn wait_shard_up(&self, k: usize) -> Option<Arc<SuperLink>> {
+        let deadline = Instant::now() + self.grace();
+        loop {
+            if let Some(link) = self.shards[k].current() {
+                return Some(link);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            self.seat.wait_until(deadline);
+        }
+    }
+
+    /// Handle one client frame: decode once, route the decoded message
+    /// to its node's shard ([`SuperLink::handle_msg`]), encode the
+    /// reply once. Deterministic given shard state, exactly like the
+    /// single-link transport surface.
+    pub fn handle_frame(&self, frame: &[u8]) -> Vec<u8> {
+        self.handle_frame_shared(Bytes::copy_from_slice(frame))
+    }
+
+    /// [`ShardedGrid::handle_frame`] with shared ownership: tensor
+    /// payloads in the routed message borrow `frame`'s allocation.
+    pub fn handle_frame_shared(&self, frame: Bytes) -> Vec<u8> {
+        let msg = match FlowerMsg::decode_shared(frame) {
+            Ok(m) => m,
+            Err(e) => {
+                return FlowerMsg::Error {
+                    message: format!("bad frame: {e}"),
+                }
+                .encode()
+            }
+        };
+        self.route_msg(msg).encode()
+    }
+
+    fn route_msg(&self, msg: FlowerMsg) -> FlowerMsg {
+        let node = match &msg {
+            FlowerMsg::CreateNode { requested: 0 } => {
+                return FlowerMsg::Error {
+                    message: "sharded link requires pinned node ids \
+                              (CreateNode { requested > 0 }): a server-assigned id \
+                              cannot hash to a stable shard"
+                        .to_string(),
+                };
+            }
+            FlowerMsg::CreateNode { requested } => *requested,
+            FlowerMsg::PullTaskIns { node_id } => *node_id,
+            FlowerMsg::PushTaskRes { res } => res.node_id,
+            FlowerMsg::DeleteNode { node_id } => *node_id,
+            other => {
+                return FlowerMsg::Error {
+                    message: format!("unexpected client frame: {other:?}"),
+                };
+            }
+        };
+        let k = self.shard_for_node(node);
+        match self.wait_shard_up(k) {
+            Some(link) => link.handle_msg(msg),
+            None => FlowerMsg::Error {
+                message: format!("shard {k} unavailable"),
+            },
+        }
+    }
+}
+
+impl Grid for ShardedGrid {
+    fn open_run(&self, run_id: u64) {
+        for sw in &self.shards {
+            if let Some(link) = sw.current() {
+                link.register_run(run_id);
+            }
+        }
+    }
+
+    fn run_active(&self, run_id: u64) -> bool {
+        self.shards
+            .iter()
+            .filter_map(|sw| sw.current())
+            .any(|link| link.run_active(run_id))
+    }
+
+    fn close_run(&self, run_id: u64) {
+        for sw in &self.shards {
+            if let Some(link) = sw.current() {
+                link.finish(run_id);
+            }
+        }
+    }
+
+    fn node_ids(&self) -> Vec<u64> {
+        let mut all: Vec<u64> = self
+            .shards
+            .iter()
+            .filter_map(|sw| sw.current())
+            .flat_map(|link| link.nodes())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+
+    fn wait_for_nodes(&self, n: usize, timeout: Duration) -> anyhow::Result<Vec<u64>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.reap();
+            let ids = self.node_ids();
+            if ids.len() >= n {
+                return Ok(ids);
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "timed out waiting for nodes: only {} of {n} joined the sharded grid",
+                ids.len()
+            );
+            self.seat.wait_until(deadline);
+        }
+    }
+
+    fn reap(&self) {
+        for sw in &self.shards {
+            if let Some(link) = sw.current() {
+                link.reap_expired();
+            }
+        }
+    }
+
+    fn push_message(&self, msg: Message) -> u64 {
+        let node = msg.metadata.dst_node_id;
+        let k = self.shard_for_node(node);
+        match self.wait_shard_up(k) {
+            Some(link) => link.push_task(node, msg.into_ins()),
+            None => {
+                // Id 0 is never allocated by any shard; callers see the
+                // dispatch fail when they pull/wait on it.
+                crate::telemetry::bump("shard.pushes_while_down", 1);
+                log::warn!(
+                    "shard {k} stayed down past the {}ms grace — dropping dispatch to node {node}",
+                    self.grace().as_millis()
+                );
+                0
+            }
+        }
+    }
+
+    fn pull_messages(&self, run_id: u64, ids: &[u64]) -> (Vec<Message>, Vec<(u64, String)>) {
+        let n = self.shards.len();
+        let mut by_shard: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut failed: Vec<(u64, String)> = Vec::new();
+        for &id in ids {
+            if id == 0 {
+                // A dispatch dropped on a downed shard: settle it as
+                // failed so pull-loop drivers don't wait on it forever.
+                if !failed.iter().any(|(fid, _)| *fid == 0) {
+                    failed.push((0, "never dispatched: shard unavailable".to_string()));
+                }
+                continue;
+            }
+            by_shard[shard_of_task(id).min(n - 1)].push(id);
+        }
+        let mut out = Vec::new();
+        // Shard-major concatenation of per-shard ascending claims is
+        // globally ascending: each shard owns a disjoint id band.
+        for (k, ids_k) in by_shard.iter().enumerate() {
+            if ids_k.is_empty() {
+                continue;
+            }
+            let Some(link) = self.shards[k].current() else {
+                continue;
+            };
+            let (ready, f) = link.poll_results(run_id, ids_k);
+            out.extend(ready.into_iter().map(Message::from_res));
+            failed.extend(f);
+        }
+        (out, failed)
+    }
+
+    fn wait_activity(&self, timeout: Duration) {
+        self.seat.wait_until(Instant::now() + timeout);
+    }
+
+    fn wait_activity_run(&self, _run_id: u64, timeout: Duration) {
+        // The coordinator seat hears every shard's run events; per-run
+        // narrowing happens inside each shard.
+        self.seat.wait_until(Instant::now() + timeout);
+    }
+
+    fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Hierarchical result wait: stream each shard's arrivals into its
+    /// intermediate tier, merge tier partials into the root accumulator
+    /// in shard-id order once the policy is satisfied, then replay the
+    /// buffered replies to the driver shard-major (deterministic; the
+    /// driver's own canonicalization makes the final model independent
+    /// of this order — see the module docs).
+    fn for_each_reply(
+        &self,
+        run_id: u64,
+        ids: &[u64],
+        timeout: Duration,
+        policy: CompletionPolicy,
+        f: &mut dyn FnMut(Message) -> anyhow::Result<()>,
+    ) -> anyhow::Result<RoundWait> {
+        let n = self.shards.len();
+        let deadline = Instant::now() + timeout;
+        let mut wait = RoundWait::default();
+        let mut remaining: Vec<HashSet<u64>> = vec![HashSet::new(); n];
+        let mut left = 0usize;
+        for &id in ids {
+            if id == 0 {
+                if !wait.failed.iter().any(|(fid, _)| *fid == 0) {
+                    wait.failed
+                        .push((0, "never dispatched: shard unavailable".to_string()));
+                }
+                continue;
+            }
+            if remaining[shard_of_task(id).min(n - 1)].insert(id) {
+                left += 1;
+            }
+        }
+        let mut tiers: Vec<ShardTier> = (0..n).map(|_| ShardTier::new()).collect();
+        let mut quorum_at: Option<Instant> = None;
+        // Same quorum basis as the single link: distinct nodes with a
+        // successful result.
+        let mut quorum_nodes: HashSet<u64> = HashSet::new();
+        let requires_all = policy.min_results == 0;
+        while left > 0 {
+            self.reap();
+            let mut progressed = false;
+            for (k, shard_remaining) in remaining.iter_mut().enumerate() {
+                if shard_remaining.is_empty() {
+                    continue;
+                }
+                let Some(link) = self.shards[k].current() else {
+                    continue;
+                };
+                // Drain the shard: durable shards hand out one result
+                // per claim, so re-poll until nothing is ready.
+                loop {
+                    let ids_k: Vec<u64> = shard_remaining.iter().copied().collect();
+                    let (ready, newly_failed) = link.poll_results(run_id, &ids_k);
+                    for (id, reason) in newly_failed {
+                        if shard_remaining.remove(&id) {
+                            left -= 1;
+                            wait.failed.push((id, reason));
+                            progressed = true;
+                        }
+                    }
+                    if ready.is_empty() {
+                        break;
+                    }
+                    for res in ready {
+                        if shard_remaining.remove(&res.task_id) {
+                            left -= 1;
+                            progressed = true;
+                            if res.error.is_empty() {
+                                quorum_nodes.insert(res.node_id);
+                            }
+                            tiers[k].absorb(res)?;
+                        }
+                    }
+                }
+            }
+            if left == 0 {
+                break;
+            }
+            if progressed {
+                continue;
+            }
+            let now = Instant::now();
+            let mut wake = deadline;
+            if !requires_all && quorum_nodes.len() >= policy.min_results {
+                let at = *quorum_at.get_or_insert(now) + policy.straggler_grace;
+                if now >= at {
+                    break;
+                }
+                wake = wake.min(at);
+            } else if requires_all && !wait.failed.is_empty() {
+                // Completion is impossible — don't burn the deadline.
+                break;
+            }
+            if now >= deadline {
+                wait.timed_out = true;
+                break;
+            }
+            self.seat.wait_until(wake);
+        }
+        // Root merge, shard-id order: fold each tier's exported partial
+        // into the root accumulator and check the tree invariants —
+        // every contribution folded on the shard its node hashes to,
+        // and nothing lost or duplicated on the way up.
+        let mut root: SortedBuffer<fn(&[FitRes]) -> anyhow::Result<ArrayRecord>> =
+            SortedBuffer::new(partial_only);
+        let mut trained = 0usize;
+        for (k, tier) in tiers.iter().enumerate() {
+            trained += tier.trained;
+            let Some(AggSnapshot::Fit(partial)) = tier.agg.snapshot() else {
+                anyhow::bail!("shard {k} tier accumulator declined a partial snapshot");
+            };
+            for fr in partial {
+                let home = self.shard_for_node(fr.node_id);
+                anyhow::ensure!(
+                    home == k,
+                    "node {} result folded on shard {k} but hashes to shard {home} — \
+                     the consistent-hash assignment must partition the fleet",
+                    fr.node_id
+                );
+                root.accumulate(fr)?;
+            }
+        }
+        anyhow::ensure!(
+            root.count() == trained,
+            "root accumulator merged {} partial results but the shard tiers folded {trained}",
+            root.count()
+        );
+        crate::telemetry::bump("shard.root_merged_results", root.count() as i64);
+        // Shard-major replay: hand every buffered reply to the driver.
+        for tier in tiers {
+            for res in tier.replies {
+                wait.completed.push(res.task_id);
+                f(Message::from_res(res))?;
+            }
+        }
+        wait.missing = remaining
+            .iter()
+            .flat_map(|s| s.iter().copied())
+            .collect();
+        wait.missing.sort_unstable();
+        // Settle abandoned stragglers on the shard that owns them, so
+        // late full-model results don't pile up unclaimed until finish.
+        for (k, shard_remaining) in remaining.iter().enumerate() {
+            if shard_remaining.is_empty() {
+                continue;
+            }
+            if let Some(link) = self.shards[k].current() {
+                let mut ids_k: Vec<u64> = shard_remaining.iter().copied().collect();
+                ids_k.sort_unstable();
+                link.abandon_tasks(run_id, &ids_k);
+            }
+        }
+        Ok(wait)
+    }
+
+    fn open_tasks(&self, run_id: u64) -> Vec<(u64, u64, u64)> {
+        let mut all: Vec<(u64, u64, u64)> = self
+            .shards
+            .iter()
+            .filter_map(|sw| sw.current())
+            .flat_map(|link| link.open_tasks(run_id))
+            .collect();
+        all.sort_unstable();
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::message::{ConfigRecord, TaskIns};
+    use crate::flower::records::RecordDict;
+
+    fn join(grid: &ShardedGrid, node_id: u64) -> u64 {
+        match FlowerMsg::decode(
+            &grid.handle_frame(&FlowerMsg::CreateNode { requested: node_id }.encode()),
+        )
+        .unwrap()
+        {
+            FlowerMsg::NodeCreated { node_id } => node_id,
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn pull(grid: &ShardedGrid, node_id: u64) -> Vec<TaskIns> {
+        match FlowerMsg::decode(&grid.handle_frame(&FlowerMsg::PullTaskIns { node_id }.encode()))
+            .unwrap()
+        {
+            FlowerMsg::TaskInsList { tasks, .. } => tasks,
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn answer(grid: &ShardedGrid, node_id: u64, flat: &[f32], examples: u64) {
+        let ins = pull(grid, node_id).into_iter().next().unwrap();
+        let reply = Message::from_ins(ins, node_id)
+            .reply(RecordDict::from_arrays(ArrayRecord::from_flat(flat)))
+            .with_examples(examples);
+        grid.handle_frame(
+            &FlowerMsg::PushTaskRes {
+                res: reply.into_res(),
+            }
+            .encode(),
+        );
+    }
+
+    #[test]
+    fn consistent_hash_is_stable_and_respects_overrides() {
+        let grid = ShardedGrid::new(4, LinkConfig::default());
+        let mut hit = [false; 4];
+        for node in 1..=200u64 {
+            let k = grid.shard_for_node(node);
+            assert!(k < 4);
+            assert_eq!(k, grid.shard_for_node(node), "assignment must be stable");
+            hit[k] = true;
+        }
+        assert!(hit.iter().all(|h| *h), "200 nodes should cover 4 shards");
+        let mut overrides = HashMap::new();
+        overrides.insert(9u64, 2usize);
+        let pinned =
+            ShardedGrid::with_topology(4, LinkConfig::default(), Durability::Off, overrides)
+                .unwrap();
+        assert_eq!(pinned.shard_for_node(9), 2);
+    }
+
+    #[test]
+    fn refuses_unpinned_node_registration() {
+        let grid = ShardedGrid::new(4, LinkConfig::default());
+        match FlowerMsg::decode(
+            &grid.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode()),
+        )
+        .unwrap()
+        {
+            FlowerMsg::Error { message } => {
+                assert!(message.contains("pinned"), "{message}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn task_ids_come_from_the_owning_shards_band() {
+        let mut overrides = HashMap::new();
+        overrides.insert(1u64, 0usize);
+        overrides.insert(2u64, 3usize);
+        let grid =
+            ShardedGrid::with_topology(4, LinkConfig::default(), Durability::Off, overrides)
+                .unwrap();
+        join(&grid, 1);
+        join(&grid, 2);
+        grid.open_run(1);
+        let a = grid.push_message(Message::query(1, ConfigRecord::new()).for_round(1, 1));
+        let b = grid.push_message(Message::query(2, ConfigRecord::new()).for_round(1, 1));
+        assert_eq!(shard_of_task(a), 0);
+        assert_eq!(shard_of_task(b), 3);
+        assert!(b > a, "higher shard band => higher task id");
+        grid.close_run(1);
+    }
+
+    #[test]
+    fn single_shard_grid_roundtrip_matches_the_grid_contract() {
+        let grid = ShardedGrid::new(1, LinkConfig::default());
+        assert_eq!(join(&grid, 1), 1);
+        grid.open_run(7);
+        assert!(grid.run_active(7));
+        let ids = vec![grid.push_message(
+            Message::train(1, ArrayRecord::from_flat(&[1.0]), ConfigRecord::new()).for_round(7, 1),
+        )];
+        answer(&grid, 1, &[2.0], 5);
+        let (replies, failed) = grid.pull_messages(7, &ids);
+        assert!(failed.is_empty());
+        assert_eq!(replies.len(), 1);
+        assert_eq!(replies[0].metadata.src_node_id, 1);
+        assert_eq!(replies[0].metadata.num_examples, 5);
+        assert_eq!(replies[0].content.arrays.to_flat(), vec![2.0]);
+        grid.close_run(7);
+        assert!(!grid.run_active(7));
+    }
+
+    #[test]
+    fn for_each_reply_merges_partials_across_shards() {
+        let mut overrides = HashMap::new();
+        overrides.insert(1u64, 0usize);
+        overrides.insert(2u64, 1usize);
+        let grid =
+            ShardedGrid::with_topology(2, LinkConfig::default(), Durability::Off, overrides)
+                .unwrap();
+        join(&grid, 1);
+        join(&grid, 2);
+        grid.open_run(1);
+        let ids: Vec<u64> = [1u64, 2]
+            .iter()
+            .map(|&node| {
+                grid.push_message(
+                    Message::train(node, ArrayRecord::from_flat(&[0.0]), ConfigRecord::new())
+                        .for_round(1, 1),
+                )
+            })
+            .collect();
+        answer(&grid, 1, &[1.0], 1);
+        answer(&grid, 2, &[2.0], 2);
+        let mut seen = Vec::new();
+        let wait = grid
+            .for_each_reply(
+                1,
+                &ids,
+                Duration::from_secs(2),
+                CompletionPolicy::all(),
+                &mut |m: Message| {
+                    seen.push((m.metadata.message_id, m.metadata.src_node_id));
+                    Ok(())
+                },
+            )
+            .unwrap();
+        assert!(wait.is_complete(), "{wait:?}");
+        seen.sort_unstable();
+        let mut want = vec![(ids[0], 1u64), (ids[1], 2u64)];
+        want.sort_unstable();
+        assert_eq!(seen, want);
+        grid.close_run(1);
+    }
+
+    #[test]
+    fn killed_shard_fails_routing_until_restart() {
+        let mut overrides = HashMap::new();
+        overrides.insert(1u64, 0usize);
+        let grid =
+            ShardedGrid::with_topology(1, LinkConfig::default(), Durability::Off, overrides)
+                .unwrap();
+        grid.set_grace(Duration::from_millis(10));
+        join(&grid, 1);
+        let link = grid.kill_shard(0).unwrap();
+        match FlowerMsg::decode(
+            &grid.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode()),
+        )
+        .unwrap()
+        {
+            FlowerMsg::Error { message } => assert!(message.contains("unavailable"), "{message}"),
+            other => panic!("{other:?}"),
+        }
+        grid.restart_shard(0, link);
+        match FlowerMsg::decode(
+            &grid.handle_frame(&FlowerMsg::PullTaskIns { node_id: 1 }.encode()),
+        )
+        .unwrap()
+        {
+            FlowerMsg::TaskInsList { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn node_union_and_reap_span_all_shards() {
+        let mut overrides = HashMap::new();
+        overrides.insert(1u64, 0usize);
+        overrides.insert(2u64, 1usize);
+        overrides.insert(3u64, 1usize);
+        let grid =
+            ShardedGrid::with_topology(2, LinkConfig::default(), Durability::Off, overrides)
+                .unwrap();
+        join(&grid, 1);
+        join(&grid, 2);
+        join(&grid, 3);
+        assert_eq!(grid.node_ids(), vec![1, 2, 3]);
+        assert_eq!(
+            grid.wait_for_nodes(3, Duration::from_millis(100)).unwrap(),
+            vec![1, 2, 3]
+        );
+    }
+}

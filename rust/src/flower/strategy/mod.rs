@@ -176,6 +176,18 @@ pub trait Strategy: Send {
         true
     }
 
+    /// Can this strategy's round be served by a sharded grid — its
+    /// results folded into per-shard partial accumulators and merged at
+    /// a root (see [`crate::flower::shard::ShardedGrid`])? True for
+    /// every plain reduction, whose canonicalizing accumulators make
+    /// the merge bit-identical to a flat link; secure aggregation
+    /// overrides to `false` — its pairwise masks only cancel when one
+    /// aggregator sees the FULL cohort, so a partial per-shard sum is
+    /// both wrong and a privacy leak.
+    fn supports_sharding(&self) -> bool {
+        true
+    }
+
     /// Serialize cross-round optimizer state (momentum, adaptive
     /// moments) for a durability checkpoint. `None` means stateless —
     /// nothing beyond the global parameters needs to survive a crash.

@@ -37,7 +37,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::flower::message::{FlowerMsg, TaskIns, TaskRes, MAX_PINNED_NODE_ID};
@@ -184,9 +184,78 @@ impl std::fmt::Display for ResultTimeout {
 
 impl std::error::Error for ResultTimeout {}
 
-/// Per-node liveness record (shared pool).
-struct NodeHealth {
-    last_seen: Instant,
+/// Per-node liveness slot (shared pool). The lease timestamp lives in
+/// an atomic (milliseconds since the link's epoch), so renewing it on
+/// every frame — the single hottest write in the system — is a plain
+/// `store` under the pool's READ lock and never serializes the fleet.
+struct NodeSlot {
+    last_seen_ms: AtomicU64,
+}
+
+impl NodeSlot {
+    fn new(now_ms: u64) -> NodeSlot {
+        NodeSlot {
+            last_seen_ms: AtomicU64::new(now_ms),
+        }
+    }
+}
+
+/// One notify seat: a seq-guarded condvar waiters park on. The link
+/// keeps one link-level seat (node-pool events, `wait_activity`), one
+/// seat PER RUN (results, failures, drain acks — a result arriving in
+/// run A no longer wakes run B's waiters), and any number of external
+/// observer seats (a [`crate::flower::shard::ShardedGrid`] subscribes
+/// one so its coordinator hears every shard without polling them all).
+pub(crate) struct Notify {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notify {
+    pub(crate) fn new() -> Notify {
+        Notify {
+            seq: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn signal(&self) {
+        *self.seq.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    /// Block on this seat until roughly `deadline` (waits are capped at
+    /// 50ms, keeping every waiter robust against missed wakeups and
+    /// giving lease reaping a bounded cadence).
+    pub(crate) fn wait_until(&self, deadline: Instant) {
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        let guard = self.seq.lock().unwrap();
+        let _ = self
+            .cv
+            .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
+            .unwrap();
+    }
+}
+
+/// One run's coordination slot: its state behind its OWN mutex plus its
+/// own notify seat. The run map itself is read-mostly (`RwLock`; write
+/// lock only on first registration), so hot-path frame handling for run
+/// A and run B proceed on disjoint locks.
+struct RunHandle {
+    state: Mutex<RunState>,
+    notify: Notify,
+}
+
+impl RunHandle {
+    fn new(state: RunState) -> Arc<RunHandle> {
+        Arc::new(RunHandle {
+            state: Mutex::new(state),
+            notify: Notify::new(),
+        })
+    }
 }
 
 /// A task that has not resolved yet. The instruction itself is retained
@@ -352,6 +421,7 @@ impl RunState {
         &mut self,
         task_ids: impl Iterator<Item = u64>,
         limit: usize,
+        metrics: &crate::telemetry::Counters,
     ) -> (Vec<TaskRes>, Vec<(u64, String)>) {
         let mut ready_ids: Vec<u64> = Vec::new();
         let mut failed: Vec<(u64, String)> = Vec::new();
@@ -382,7 +452,7 @@ impl RunState {
                 // the waiter alive.
                 let res = self.results.remove(id);
                 if res.is_none() {
-                    crate::telemetry::bump("superlink.claim_races", 1);
+                    metrics.bump("superlink.claim_races", 1);
                     log::error!("superlink: result for task {id} vanished during claim");
                 }
                 res
@@ -400,21 +470,36 @@ pub struct SuperLink {
     cfg: LinkConfig,
     /// Durability journal (`None`: the pre-existing in-memory mode).
     persist: Option<Persistor>,
+    /// Telemetry scope: unlabelled for a standalone link; `shard-K`
+    /// when serving as one shard of a
+    /// [`crate::flower::shard::ShardedGrid`], so concurrent links
+    /// attribute their counters while the totals stay true.
+    metrics: crate::telemetry::Counters,
     next_node: AtomicU64,
     next_task: AtomicU64,
-    /// Shared node pool — every run samples from the same fleet. The
-    /// health record carries each node's lease.
-    nodes: Mutex<HashMap<u64, NodeHealth>>,
-    /// run_id -> run-scoped coordination state.
-    runs: Mutex<HashMap<u64, RunState>>,
+    /// Time basis for the per-node atomic lease timestamps.
+    epoch: Instant,
+    /// Shared node pool — every run samples from the same fleet. Lease
+    /// renewal (every frame!) is an atomic store under the READ lock;
+    /// the write lock is taken only on join/leave/death.
+    nodes: RwLock<HashMap<u64, Arc<NodeSlot>>>,
+    /// run_id -> run-scoped coordination slot, each behind its OWN
+    /// mutex and notify seat. Entries are never removed (finished runs
+    /// keep their tombstone), so the map write lock is taken only on
+    /// first registration.
+    runs: RwLock<HashMap<u64, Arc<RunHandle>>>,
     /// Link-level shutdown: set by [`SuperLink::retire`]; SuperNodes
     /// exit (and deregister) when they see it on their next pull.
     retired: AtomicBool,
-    /// Signaled on node registration/deregistration, new results, lease
-    /// expiry, and run finish — every waiter (`wait_for_nodes`,
-    /// `for_each_result`, `wait_drained`, `wait_all_drained`) blocks on
-    /// this condvar.
-    notify: (Mutex<u64>, Condvar),
+    /// Link-level notify seat: node-pool events and anything
+    /// [`SuperLink::wait_activity`] should hear. Per-run events signal
+    /// the run's own seat AND this one (so `wait_activity` keeps its
+    /// any-change contract), but run-scoped waiters park on their run's
+    /// seat only.
+    notify: Notify,
+    /// External observer seats (see [`Notify`]): signaled alongside the
+    /// link seat on every event.
+    observers: Mutex<Vec<Arc<Notify>>>,
 }
 
 impl SuperLink {
@@ -423,13 +508,41 @@ impl SuperLink {
     }
 
     pub fn with_config(cfg: LinkConfig) -> Arc<SuperLink> {
-        Self::build(cfg, None, 1, 1, HashMap::new(), HashMap::new())
+        Self::with_role(cfg, "", 1)
+    }
+
+    /// [`SuperLink::with_config`] for a link serving a specific role:
+    /// telemetry is scoped under `label` (empty = global), and task ids
+    /// are allocated from `first_task` upward — a
+    /// [`crate::flower::shard::ShardedGrid`] gives each shard a private
+    /// id band so task ids stay globally unique across shards.
+    pub fn with_role(cfg: LinkConfig, label: &str, first_task: u64) -> Arc<SuperLink> {
+        Self::build(
+            cfg,
+            None,
+            label,
+            1,
+            first_task.max(1),
+            HashMap::new(),
+            HashMap::new(),
+        )
     }
 
     /// A link that journals per `dur` (`Durability::Off` is exactly
     /// [`SuperLink::with_config`]). Starting fresh truncates any prior
     /// journal in the directory.
     pub fn with_durability(cfg: LinkConfig, dur: Durability) -> anyhow::Result<Arc<SuperLink>> {
+        Self::with_durability_role(cfg, dur, "", 1)
+    }
+
+    /// [`SuperLink::with_durability`] with an explicit role (telemetry
+    /// label + first task id): the durable-shard constructor.
+    pub fn with_durability_role(
+        cfg: LinkConfig,
+        dur: Durability,
+        label: &str,
+        first_task: u64,
+    ) -> anyhow::Result<Arc<SuperLink>> {
         let persist = match &dur {
             Durability::Off => None,
             Durability::Wal { dir } => Some(Persistor::create(dir, None)?),
@@ -437,7 +550,15 @@ impl SuperLink {
                 Some(Persistor::create(dir, Some((*every_results).max(1)))?)
             }
         };
-        Ok(Self::build(cfg, persist, 1, 1, HashMap::new(), HashMap::new()))
+        Ok(Self::build(
+            cfg,
+            persist,
+            label,
+            1,
+            first_task.max(1),
+            HashMap::new(),
+            HashMap::new(),
+        ))
     }
 
     /// Rebuild a crashed link from its durability directory: load the
@@ -449,6 +570,18 @@ impl SuperLink {
     /// their old ids as if the link never went away, and a node that
     /// died with the link is reaped by its lease like any other death.
     pub fn recover(cfg: LinkConfig, dur: Durability) -> anyhow::Result<Arc<SuperLink>> {
+        Self::recover_role(cfg, dur, "", 1)
+    }
+
+    /// [`SuperLink::recover`] with an explicit role: a recovered shard
+    /// keeps its telemetry label and its private task-id band
+    /// (`next_task` never falls below `first_task`).
+    pub fn recover_role(
+        cfg: LinkConfig,
+        dur: Durability,
+        label: &str,
+        first_task: u64,
+    ) -> anyhow::Result<Arc<SuperLink>> {
         let dir = dur
             .dir()
             .ok_or_else(|| anyhow::anyhow!("recover requires a durability directory"))?;
@@ -464,18 +597,17 @@ impl SuperLink {
             );
         }
         let persist = Persistor::resume(dir, every, &state)?;
-        let now = Instant::now();
-        let mut nodes: HashMap<u64, NodeHealth> = HashMap::new();
+        let mut nodes: HashMap<u64, Arc<NodeSlot>> = HashMap::new();
         let mut runs: HashMap<u64, RunState> = HashMap::new();
         for snap in &state.runs {
             if snap.active {
                 for (node, _) in &snap.pending {
-                    nodes.entry(*node).or_insert(NodeHealth { last_seen: now });
+                    nodes.entry(*node).or_insert_with(|| Arc::new(NodeSlot::new(0)));
                 }
                 for res in &snap.results {
                     nodes
                         .entry(res.node_id)
-                        .or_insert(NodeHealth { last_seen: now });
+                        .or_insert_with(|| Arc::new(NodeSlot::new(0)));
                 }
             }
             runs.insert(snap.run_id, RunState::from_snapshot(snap));
@@ -489,8 +621,9 @@ impl SuperLink {
         Ok(Self::build(
             cfg,
             Some(persist),
+            label,
             state.next_node.max(1),
-            state.next_task.max(1),
+            state.next_task.max(first_task.max(1)),
             nodes,
             runs,
         ))
@@ -499,20 +632,35 @@ impl SuperLink {
     fn build(
         cfg: LinkConfig,
         persist: Option<Persistor>,
+        label: &str,
         next_node: u64,
         next_task: u64,
-        nodes: HashMap<u64, NodeHealth>,
+        nodes: HashMap<u64, Arc<NodeSlot>>,
         runs: HashMap<u64, RunState>,
     ) -> Arc<SuperLink> {
+        let epoch = Instant::now();
+        // Recovered nodes are seeded with fresh leases against the new
+        // link's epoch (NodeSlot::new(0) == "seen at link start").
+        let runs = runs
+            .into_iter()
+            .map(|(rid, state)| (rid, RunHandle::new(state)))
+            .collect();
         Arc::new(SuperLink {
             cfg,
             persist,
+            metrics: if label.is_empty() {
+                crate::telemetry::Counters::global()
+            } else {
+                crate::telemetry::Counters::labelled(label)
+            },
             next_node: AtomicU64::new(next_node),
             next_task: AtomicU64::new(next_task),
-            nodes: Mutex::new(nodes),
-            runs: Mutex::new(runs),
+            epoch,
+            nodes: RwLock::new(nodes),
+            runs: RwLock::new(runs),
             retired: AtomicBool::new(false),
-            notify: (Mutex::new(0), Condvar::new()),
+            notify: Notify::new(),
+            observers: Mutex::new(Vec::new()),
         })
     }
 
@@ -520,41 +668,116 @@ impl SuperLink {
         &self.cfg
     }
 
+    /// Milliseconds since this link's epoch — the unit the per-node
+    /// atomic lease timestamps are kept in.
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Register an external notify seat: it is signaled alongside the
+    /// link seat on every event. A [`crate::flower::shard::ShardedGrid`]
+    /// subscribes one seat per shard so its coordinator sleeps on a
+    /// single condvar for the whole tree.
+    pub(crate) fn subscribe(&self, seat: Arc<Notify>) {
+        self.observers.lock().unwrap().push(seat);
+    }
+
     /// Append one WAL record (no-op without durability). Callers hold
-    /// the runs lock at every state-transition journal site, which
-    /// orders records exactly like the transitions they describe.
+    /// the affected run's state mutex at every per-run journal site
+    /// (and the run-map write lock at registration sites), which orders
+    /// records exactly like the transitions they describe.
     fn journal(&self, rec: &WalRecord) {
         if let Some(p) = &self.persist {
             p.append(rec);
         }
     }
 
-    fn notify_all(&self) {
-        let (lock, cv) = &self.notify;
-        *lock.lock().unwrap() += 1;
-        cv.notify_all();
+    /// Signal the link seat and every observer seat (NOT the per-run
+    /// seats): node joins, and the tail of every run-scoped signal.
+    fn signal_link(&self) {
+        self.notify.signal();
+        for seat in self.observers.lock().unwrap().iter() {
+            seat.signal();
+        }
     }
 
-    /// Block on the notify condvar until roughly `deadline` (capped
-    /// waits keep us robust against missed wakeups, and give lease
-    /// reaping a bounded cadence while anyone waits).
-    fn wait_notified(&self, deadline: Instant) {
-        let now = Instant::now();
-        if now >= deadline {
-            return;
+    /// Signal one run's waiters plus the link-level listeners.
+    fn signal_run(&self, handle: &RunHandle) {
+        handle.notify.signal();
+        self.signal_link();
+    }
+
+    /// Signal EVERY seat — run seats, link seat, observers. Node-pool
+    /// transitions (death, deregistration, retirement) change every
+    /// run's drain/failure picture, so all waiters must re-check; these
+    /// are rare events, so the fan-out stays off the hot path.
+    fn signal_all(&self) {
+        let handles: Vec<Arc<RunHandle>> =
+            self.runs.read().unwrap().values().cloned().collect();
+        for h in handles {
+            h.notify.signal();
         }
-        let (lock, cv) = &self.notify;
-        let guard = lock.lock().unwrap();
-        let _ = cv
-            .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
-            .unwrap();
+        self.signal_link();
+    }
+
+    /// Block on the LINK seat until roughly `deadline`.
+    fn wait_notified(&self, deadline: Instant) {
+        self.notify.wait_until(deadline);
+    }
+
+    /// Block on `run_id`'s seat until roughly `deadline` — or on the
+    /// link seat for a run that does not exist (yet): the wait is
+    /// re-resolved per call, never cached, so it can still end by
+    /// deadline.
+    fn wait_run_notified(&self, run_id: u64, deadline: Instant) {
+        match self.run_handle(run_id) {
+            Some(h) => h.notify.wait_until(deadline),
+            None => self.notify.wait_until(deadline),
+        }
+    }
+
+    /// The run's coordination slot, if registered (read lock only).
+    fn run_handle(&self, run_id: u64) -> Option<Arc<RunHandle>> {
+        self.runs.read().unwrap().get(&run_id).cloned()
+    }
+
+    /// Every run's slot, sorted by run id (the deterministic
+    /// cross-run sweep/delivery order).
+    fn run_handles_sorted(&self) -> Vec<(u64, Arc<RunHandle>)> {
+        let mut v: Vec<(u64, Arc<RunHandle>)> = self
+            .runs
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(rid, h)| (*rid, h.clone()))
+            .collect();
+        v.sort_unstable_by_key(|(rid, _)| *rid);
+        v
+    }
+
+    /// The run's slot, created (and journaled) if absent. The map write
+    /// lock is held only for the insertion; the `RunRegistered` record
+    /// is journaled under it so registration order matches the WAL.
+    fn ensure_run(&self, run_id: u64) -> Arc<RunHandle> {
+        if let Some(h) = self.run_handle(run_id) {
+            return h;
+        }
+        let mut runs = self.runs.write().unwrap();
+        runs.entry(run_id)
+            .or_insert_with(|| {
+                self.journal(&WalRecord::RunRegistered { run_id });
+                RunHandle::new(RunState::new())
+            })
+            .clone()
     }
 
     /// Renew a registered node's liveness lease (no-op for unknown or
-    /// already-dead nodes: death is not undone by a late frame).
+    /// already-dead nodes: death is not undone by a late frame). An
+    /// atomic store under the pool READ lock — the per-frame hot path
+    /// never contends with other frames.
     fn touch(&self, node_id: u64) {
-        if let Some(h) = self.nodes.lock().unwrap().get_mut(&node_id) {
-            h.last_seen = Instant::now();
+        if let Some(slot) = self.nodes.read().unwrap().get(&node_id) {
+            slot.last_seen_ms.store(self.now_ms(), Ordering::Relaxed);
         }
     }
 
@@ -569,29 +792,44 @@ impl SuperLink {
     /// promptly instead of stranding until the round timeout. Called
     /// from every driver-side wait loop; safe to call at any time.
     pub fn reap_expired(&self) {
-        let now = Instant::now();
-        let dead: Vec<u64> = {
-            let mut nodes = self.nodes.lock().unwrap();
-            let dead: Vec<u64> = nodes
+        let now_ms = self.now_ms();
+        let lease_ms = self.cfg.lease.as_millis() as u64;
+        // Cheap expiry scan under the READ lock (atomic loads only);
+        // the write lock is taken — and expiry re-verified, a frame may
+        // have renewed the lease meanwhile — only when something died.
+        let expired: Vec<u64> = {
+            let nodes = self.nodes.read().unwrap();
+            nodes
                 .iter()
-                .filter(|(_, h)| now.duration_since(h.last_seen) > self.cfg.lease)
+                .filter(|(_, s)| {
+                    now_ms.saturating_sub(s.last_seen_ms.load(Ordering::Relaxed)) > lease_ms
+                })
                 .map(|(id, _)| *id)
-                .collect();
-            for id in &dead {
-                nodes.remove(id);
-            }
-            dead
+                .collect()
         };
+        let mut dead: Vec<u64> = Vec::new();
+        if !expired.is_empty() {
+            let mut nodes = self.nodes.write().unwrap();
+            for id in expired {
+                let still_expired = nodes.get(&id).is_some_and(|s| {
+                    now_ms.saturating_sub(s.last_seen_ms.load(Ordering::Relaxed)) > lease_ms
+                });
+                if still_expired {
+                    nodes.remove(&id);
+                    dead.push(id);
+                }
+            }
+        }
         for id in &dead {
-            crate::telemetry::bump("superlink.nodes_expired", 1);
+            self.metrics.bump("superlink.nodes_expired", 1);
             log::warn!("superlink: node {id} lease expired — declared dead");
         }
         let alive = self.nodes();
         let alive_set: HashSet<u64> = alive.iter().copied().collect();
-        let mut changed = !dead.is_empty();
-        {
-            let mut runs = self.runs.lock().unwrap();
-            for (rid, run) in runs.iter_mut() {
+        for (rid, handle) in self.run_handles_sorted() {
+            let mut settled_here = false;
+            {
+                let mut run = handle.state.lock().unwrap();
                 for d in &dead {
                     run.pending.remove(d);
                 }
@@ -605,13 +843,13 @@ impl SuperLink {
                     .map(|(id, _)| *id)
                     .collect();
                 for tid in orphaned {
-                    changed = true;
+                    settled_here = true;
                     // Typed-error path instead of unwrap: a concurrent
                     // resolution racing this sweep (late original vs
                     // redelivery) must skip the task, not panic the
                     // reaper.
                     let Some(mut task) = run.inflight.remove(&tid) else {
-                        crate::telemetry::bump("superlink.reap_races", 1);
+                        self.metrics.bump("superlink.reap_races", 1);
                         log::warn!(
                             "superlink: task {tid} (run {rid}) resolved while being reaped — skipped"
                         );
@@ -642,14 +880,14 @@ impl SuperLink {
                         let target = alive[tid as usize % alive.len()];
                         let from = task.node_id;
                         self.journal(&WalRecord::TaskRedelivered {
-                            run_id: *rid,
+                            run_id: rid,
                             task_id: tid,
                             from,
                             to: target,
                             attempt: ins.attempt,
                         });
                         run.pending.entry(target).or_default().push_back(ins.clone());
-                        crate::telemetry::bump("superlink.tasks_redelivered", 1);
+                        self.metrics.bump("superlink.tasks_redelivered", 1);
                         log::warn!(
                             "superlink: task {tid} redelivered {from} -> {target} (attempt {})",
                             ins.attempt
@@ -668,20 +906,25 @@ impl SuperLink {
                             task.node_id, task.attempt
                         );
                         self.journal(&WalRecord::TaskFailed {
-                            run_id: *rid,
+                            run_id: rid,
                             task_id: tid,
                             reason: reason.clone(),
                         });
                         run.failed.insert(tid, reason);
                         run.done.insert(tid);
                         run.task_version.remove(&tid);
-                        crate::telemetry::bump("superlink.tasks_failed", 1);
+                        self.metrics.bump("superlink.tasks_failed", 1);
                     }
                 }
             }
+            if settled_here {
+                self.signal_run(&handle);
+            }
         }
-        if changed {
-            self.notify_all();
+        if !dead.is_empty() {
+            // Node deaths change every run's drain/failure picture —
+            // wake everything (rare event).
+            self.signal_all();
         }
     }
 
@@ -709,9 +952,17 @@ impl SuperLink {
                 .encode()
             }
         };
-        let reply = match msg {
+        self.handle_msg(msg).encode()
+    }
+
+    /// Decoded-message core of the transport surface: one request in,
+    /// the reply out. [`crate::flower::shard::ShardedGrid`] routes
+    /// already-decoded frames here so sharded frame handling decodes
+    /// (and encodes) exactly once per hop.
+    pub fn handle_msg(&self, msg: FlowerMsg) -> FlowerMsg {
+        match msg {
             FlowerMsg::CreateNode { requested } => {
-                let mut nodes = self.nodes.lock().unwrap();
+                let mut nodes = self.nodes.write().unwrap();
                 // Decode already rejects out-of-range pins; the clamp is
                 // defense in depth against in-process callers.
                 let id = if requested != 0
@@ -729,21 +980,16 @@ impl SuperLink {
                         }
                     }
                 };
-                nodes.insert(
-                    id,
-                    NodeHealth {
-                        last_seen: Instant::now(),
-                    },
-                );
+                nodes.insert(id, Arc::new(NodeSlot::new(self.now_ms())));
                 drop(nodes);
                 log::info!("superlink: node {id} created");
                 // Wake `wait_for_nodes` waiters.
-                self.notify_all();
+                self.signal_link();
                 FlowerMsg::NodeCreated { node_id: id }
             }
             FlowerMsg::PullTaskIns { node_id } => {
                 self.touch(node_id);
-                let known = self.nodes.lock().unwrap().contains_key(&node_id);
+                let known = self.nodes.read().unwrap().contains_key(&node_id);
                 if !known && !self.retired.load(Ordering::Acquire) {
                     // A reaped (or never-registered) node is polling a
                     // pool it is not part of: tell it so it can
@@ -754,44 +1000,35 @@ impl SuperLink {
                     // fresh.)
                     return FlowerMsg::Error {
                         message: format!("{UNKNOWN_NODE_ERR} {node_id}: re-register to rejoin"),
-                    }
-                    .encode();
+                    };
                 }
                 let mut tasks = Vec::new();
-                let mut acked = false;
-                {
-                    let mut runs = self.runs.lock().unwrap();
-                    // Deterministic delivery order across runs.
-                    let mut run_ids: Vec<u64> = runs.keys().copied().collect();
-                    run_ids.sort_unstable();
-                    for rid in run_ids {
-                        // Defensive lookup (audit of the wait-loop
-                        // unwraps): a run vanishing between the key
-                        // scan and this access skips, never panics.
-                        let Some(run) = runs.get_mut(&rid) else {
-                            continue;
-                        };
-                        if let Some(q) = run.pending.get_mut(&node_id) {
-                            let first = tasks.len();
-                            tasks.extend(q.drain(..));
-                            for t in &tasks[first..] {
-                                self.journal(&WalRecord::TaskDelivered {
-                                    run_id: rid,
-                                    task_id: t.task_id,
-                                    node_id,
-                                });
-                            }
-                        }
-                        // Pulling after a run finished is this node's
-                        // acknowledgment that no frame of that run is
-                        // still in flight to it (per-run drain).
-                        if known && !run.active && run.acked.insert(node_id) {
-                            acked = true;
+                let mut acked: Vec<Arc<RunHandle>> = Vec::new();
+                // Deterministic delivery order across runs; each run's
+                // queue is drained under ITS OWN lock, so a pull for
+                // run A never contends with run B's result traffic.
+                for (rid, handle) in self.run_handles_sorted() {
+                    let mut run = handle.state.lock().unwrap();
+                    if let Some(q) = run.pending.get_mut(&node_id) {
+                        let first = tasks.len();
+                        tasks.extend(q.drain(..));
+                        for t in &tasks[first..] {
+                            self.journal(&WalRecord::TaskDelivered {
+                                run_id: rid,
+                                task_id: t.task_id,
+                                node_id,
+                            });
                         }
                     }
+                    // Pulling after a run finished is this node's
+                    // acknowledgment that no frame of that run is
+                    // still in flight to it (per-run drain).
+                    if known && !run.active && run.acked.insert(node_id) {
+                        acked.push(handle.clone());
+                    }
                 }
-                if acked {
-                    self.notify_all();
+                for handle in acked {
+                    self.signal_run(&handle);
                 }
                 FlowerMsg::TaskInsList {
                     tasks,
@@ -801,10 +1038,11 @@ impl SuperLink {
             FlowerMsg::PushTaskRes { res } => {
                 let mut res = res;
                 self.touch(res.node_id);
-                let stored = {
-                    let mut runs = self.runs.lock().unwrap();
-                    match runs.get_mut(&res.run_id) {
-                        Some(run) if run.active => {
+                let handle = self.run_handle(res.run_id);
+                let stored = match &handle {
+                    Some(h) => {
+                        let mut run = h.state.lock().unwrap();
+                        if run.active {
                             if run.done.insert(res.task_id) {
                                 let assignee = run.inflight.remove(&res.task_id);
                                 // Purge any still-queued copy (a task
@@ -838,43 +1076,46 @@ impl SuperLink {
                                 // original racing its redelivery (or a
                                 // retried push). Exactly one result may
                                 // reach the consumer — drop this one.
-                                crate::telemetry::bump(
-                                    "superlink.duplicate_results_dropped",
-                                    1,
-                                );
+                                self.metrics.bump("superlink.duplicate_results_dropped", 1);
                                 false
                             }
-                        }
-                        _ => {
-                            // Straggler past its run's finish (or an
-                            // unknown run): nothing will ever consume it
-                            // — drop the payload instead of leaking it
-                            // in the run map.
-                            crate::telemetry::bump("superlink.stale_results_dropped", 1);
+                        } else {
+                            // Straggler past its run's finish: nothing
+                            // will ever consume it — drop the payload
+                            // instead of leaking it in the run map.
+                            self.metrics.bump("superlink.stale_results_dropped", 1);
                             false
                         }
                     }
+                    None => {
+                        // Unknown run: same verdict as a finished one.
+                        self.metrics.bump("superlink.stale_results_dropped", 1);
+                        false
+                    }
                 };
                 if stored {
-                    self.notify_all();
+                    if let Some(h) = &handle {
+                        // Wake THIS run's waiters (plus link-level
+                        // listeners) — run B's waiters stay asleep.
+                        self.signal_run(h);
+                    }
                 }
                 FlowerMsg::PushAccepted
             }
             FlowerMsg::DeleteNode { node_id } => {
-                self.nodes.lock().unwrap().remove(&node_id);
-                self.runs.lock().unwrap().values_mut().for_each(|run| {
-                    run.pending.remove(&node_id);
-                });
-                // Wake drain waiters: this is the SuperNode's
-                // acknowledgment of retirement.
-                self.notify_all();
+                self.nodes.write().unwrap().remove(&node_id);
+                for (_, handle) in self.run_handles_sorted() {
+                    handle.state.lock().unwrap().pending.remove(&node_id);
+                }
+                // Wake drain waiters everywhere: this is the
+                // SuperNode's acknowledgment of retirement.
+                self.signal_all();
                 FlowerMsg::NodeDeleted
             }
             other => FlowerMsg::Error {
                 message: format!("unexpected client frame: {other:?}"),
             },
-        };
-        reply.encode()
+        }
     }
 
     /// Serve a connected endpoint until it closes (native deployments:
@@ -905,7 +1146,7 @@ impl SuperLink {
 
     /// Registered (live) node ids, sorted (deterministic sampling basis).
     pub fn nodes(&self) -> Vec<u64> {
-        let mut v: Vec<u64> = self.nodes.lock().unwrap().keys().copied().collect();
+        let mut v: Vec<u64> = self.nodes.read().unwrap().keys().copied().collect();
         v.sort_unstable();
         v
     }
@@ -931,21 +1172,14 @@ impl SuperLink {
     /// active). Run ids must be unique over a link's lifetime: finished
     /// ids stay finished.
     pub fn register_run(&self, run_id: u64) {
-        let mut runs = self.runs.lock().unwrap();
-        if let std::collections::hash_map::Entry::Vacant(e) = runs.entry(run_id) {
-            e.insert(RunState::new());
-            self.journal(&WalRecord::RunRegistered { run_id });
-        }
+        self.ensure_run(run_id);
     }
 
     /// Is this run still accepting/serving tasks? (Unknown runs count as
     /// finished.)
     pub fn run_active(&self, run_id: u64) -> bool {
-        self.runs
-            .lock()
-            .unwrap()
-            .get(&run_id)
-            .map(|r| r.active)
+        self.run_handle(run_id)
+            .map(|h| h.state.lock().unwrap().active)
             .unwrap_or(false)
     }
 
@@ -958,17 +1192,11 @@ impl SuperLink {
         let task_id = self.next_task.fetch_add(1, Ordering::Relaxed);
         ins.task_id = task_id;
         let run_id = ins.run_id;
-        let mut runs = self.runs.lock().unwrap();
-        if !runs.contains_key(&run_id) {
-            runs.insert(run_id, RunState::new());
-            self.journal(&WalRecord::RunRegistered { run_id });
-        }
-        let Some(run) = runs.get_mut(&run_id) else {
-            unreachable!("run inserted above");
-        };
+        let handle = self.ensure_run(run_id);
+        let mut run = handle.state.lock().unwrap();
         if !run.active {
-            drop(runs);
-            crate::telemetry::bump("superlink.stale_tasks_refused", 1);
+            drop(run);
+            self.metrics.bump("superlink.stale_tasks_refused", 1);
             log::warn!("superlink: refused task push to finished run {run_id}");
             return task_id;
         }
@@ -1006,9 +1234,11 @@ impl SuperLink {
         run_id: u64,
         task_ids: &[u64],
     ) -> (Vec<TaskRes>, Vec<(u64, String)>) {
-        let mut runs = self.runs.lock().unwrap();
-        match runs.get_mut(&run_id) {
-            Some(run) => run.claim_resolved(task_ids.iter().copied(), self.claim_limit()),
+        match self.run_handle(run_id) {
+            Some(handle) => {
+                let mut run = handle.state.lock().unwrap();
+                run.claim_resolved(task_ids.iter().copied(), self.claim_limit(), &self.metrics)
+            }
             None => (Vec::new(), Vec::new()),
         }
     }
@@ -1031,6 +1261,15 @@ impl SuperLink {
     /// [`SuperLink::poll_results`] calls.
     pub fn wait_activity(&self, timeout: Duration) {
         self.wait_notified(Instant::now() + timeout);
+    }
+
+    /// Like [`SuperLink::wait_activity`], but parked on ONE run's notify
+    /// seat: a result landing in run A no longer wakes run B's driver.
+    /// Link-level events (node churn, retirement, run registration)
+    /// still wake every run seat, and an unknown `run_id` falls back to
+    /// the link seat — so no wakeup is ever missed, only narrowed.
+    pub fn wait_activity_run(&self, run_id: u64, timeout: Duration) {
+        self.wait_run_notified(run_id, Instant::now() + timeout);
     }
 
     /// Stream results for `task_ids` of one run to `f` AS THEY ARRIVE
@@ -1089,15 +1328,14 @@ impl SuperLink {
         let mut quorum_nodes: HashSet<u64> = HashSet::new();
         while !remaining.is_empty() {
             self.reap_expired();
-            // Claim ready results and failure verdicts under one lock.
-            let (ready, newly_failed) = {
-                let mut runs = self.runs.lock().unwrap();
-                match runs.get_mut(&run_id) {
-                    Some(run) => {
-                        run.claim_resolved(remaining.iter().copied(), self.claim_limit())
-                    }
-                    None => (Vec::new(), Vec::new()),
+            // Claim ready results and failure verdicts under this run's
+            // own lock — other runs' traffic never contends here.
+            let (ready, newly_failed) = match self.run_handle(run_id) {
+                Some(handle) => {
+                    let mut run = handle.state.lock().unwrap();
+                    run.claim_resolved(remaining.iter().copied(), self.claim_limit(), &self.metrics)
                 }
+                None => (Vec::new(), Vec::new()),
             };
             for (id, reason) in newly_failed {
                 remaining.remove(&id);
@@ -1138,37 +1376,46 @@ impl SuperLink {
                 wait.timed_out = true;
                 break;
             }
-            self.wait_notified(wake);
+            self.wait_run_notified(run_id, wake);
         }
         wait.missing = remaining.into_iter().collect();
         wait.missing.sort_unstable();
         if !wait.missing.is_empty() {
-            // Abandon what the wait gave up on: mark the ids resolved
-            // (late results are dropped like post-finish stragglers,
-            // never stored), and reclaim their queued/in-flight task
-            // copies. Without this, every quorum cutoff would leak one
-            // unclaimed full-model result per straggler until run
-            // finish.
-            let abandoned: HashSet<u64> = wait.missing.iter().copied().collect();
-            let mut runs = self.runs.lock().unwrap();
-            if let Some(run) = runs.get_mut(&run_id) {
-                self.journal(&WalRecord::TasksAbandoned {
-                    run_id,
-                    task_ids: wait.missing.clone(),
-                });
-                for id in &wait.missing {
-                    run.done.insert(*id);
-                    run.inflight.remove(id);
-                    run.failed.remove(id);
-                    run.results.remove(id);
-                    run.task_version.remove(id);
-                }
-                for q in run.pending.values_mut() {
-                    q.retain(|t| !abandoned.contains(&t.task_id));
-                }
-            }
+            self.abandon_tasks(run_id, &wait.missing);
         }
         Ok(wait)
+    }
+
+    /// Abandon tasks a wait gave up on: mark the ids resolved (late
+    /// results are dropped like post-finish stragglers, never stored),
+    /// and reclaim their queued/in-flight task copies. Without this,
+    /// every quorum cutoff would leak one unclaimed full-model result
+    /// per straggler until run finish. Also used by the sharded
+    /// coordinator ([`crate::flower::shard::ShardedGrid`]) to settle a
+    /// round's leftovers on each shard it abandoned them on.
+    pub(crate) fn abandon_tasks(&self, run_id: u64, missing: &[u64]) {
+        if missing.is_empty() {
+            return;
+        }
+        let abandoned: HashSet<u64> = missing.iter().copied().collect();
+        let Some(handle) = self.run_handle(run_id) else {
+            return;
+        };
+        let mut run = handle.state.lock().unwrap();
+        self.journal(&WalRecord::TasksAbandoned {
+            run_id,
+            task_ids: missing.to_vec(),
+        });
+        for id in missing {
+            run.done.insert(*id);
+            run.inflight.remove(id);
+            run.failed.remove(id);
+            run.results.remove(id);
+            run.task_version.remove(id);
+        }
+        for q in run.pending.values_mut() {
+            q.retain(|t| !abandoned.contains(&t.task_id));
+        }
     }
 
     /// Await results for all `task_ids` of one run; returned in
@@ -1224,14 +1471,15 @@ impl SuperLink {
     /// acknowledge on their next pull (see [`SuperLink::wait_drained`]).
     /// Other runs — and the SuperNode fleet — are untouched.
     pub fn finish(&self, run_id: u64) {
+        let handle = self.ensure_run(run_id);
         {
-            let mut runs = self.runs.lock().unwrap();
-            let run = runs.entry(run_id).or_insert_with(RunState::new);
+            let mut run = handle.state.lock().unwrap();
             run.active = false;
             self.journal(&WalRecord::RunFinished { run_id });
             let dropped: usize = run.pending.values().map(|q| q.len()).sum();
             if dropped > 0 {
-                crate::telemetry::bump("superlink.finish_dropped_tasks", dropped as i64);
+                self.metrics
+                    .bump("superlink.finish_dropped_tasks", dropped as i64);
                 log::warn!("superlink: run {run_id} finished with {dropped} undelivered task(s)");
             }
             run.pending.clear();
@@ -1240,14 +1488,12 @@ impl SuperLink {
             run.done.clear();
             run.task_version.clear();
             if !run.results.is_empty() {
-                crate::telemetry::bump(
-                    "superlink.finish_dropped_results",
-                    run.results.len() as i64,
-                );
+                self.metrics
+                    .bump("superlink.finish_dropped_results", run.results.len() as i64);
             }
             run.results.clear();
         }
-        self.notify_all();
+        self.signal_run(&handle);
     }
 
     /// Per-run drain: block until every live registered node has
@@ -1262,13 +1508,13 @@ impl SuperLink {
         loop {
             self.reap_expired();
             let nodes = self.nodes();
-            let drained = {
-                let runs = self.runs.lock().unwrap();
-                match runs.get(&run_id) {
-                    Some(run) => !run.active && nodes.iter().all(|n| run.acked.contains(n)),
-                    // Never-opened run: nothing in flight by definition.
-                    None => true,
+            let drained = match self.run_handle(run_id) {
+                Some(handle) => {
+                    let run = handle.state.lock().unwrap();
+                    !run.active && nodes.iter().all(|n| run.acked.contains(n))
                 }
+                // Never-opened run: nothing in flight by definition.
+                None => true,
             };
             if drained {
                 return true;
@@ -1276,7 +1522,7 @@ impl SuperLink {
             if Instant::now() >= deadline {
                 return false;
             }
-            self.wait_notified(deadline);
+            self.wait_run_notified(run_id, deadline);
         }
     }
 
@@ -1286,7 +1532,7 @@ impl SuperLink {
     /// work).
     pub fn retire(&self) {
         self.retired.store(true, Ordering::Release);
-        self.notify_all();
+        self.signal_all();
     }
 
     /// Is the link still serving (i.e. not retired)?
@@ -1304,7 +1550,7 @@ impl SuperLink {
         let deadline = Instant::now() + timeout;
         loop {
             self.reap_expired();
-            if self.nodes.lock().unwrap().is_empty() {
+            if self.nodes.read().unwrap().is_empty() {
                 return true;
             }
             if Instant::now() >= deadline {
@@ -1364,10 +1610,10 @@ impl SuperLink {
     /// Sorted by task id; each entry is `(task_id, node_id,
     /// model_version)`.
     pub fn open_tasks(&self, run_id: u64) -> Vec<(u64, u64, u64)> {
-        let runs = self.runs.lock().unwrap();
-        let Some(run) = runs.get(&run_id) else {
+        let Some(handle) = self.run_handle(run_id) else {
             return Vec::new();
         };
+        let run = handle.state.lock().unwrap();
         let mut out: Vec<(u64, u64, u64)> = Vec::new();
         let mut seen: HashSet<u64> = HashSet::new();
         for (tid, t) in &run.inflight {
@@ -1385,19 +1631,26 @@ impl SuperLink {
         out
     }
 
-    /// Cut a full checkpoint of the link's state: the snapshot (and the
-    /// WAL offset naming exactly the state it holds) is built under the
-    /// runs lock; file IO happens OUTSIDE the lock.
+    /// Cut a full checkpoint of the link's state. With per-run locks, a
+    /// consistent cut means holding EVERY run's mutex at once while the
+    /// snapshot (and the WAL offset naming exactly the state it holds)
+    /// is built — acquired in ascending run-id order, which cannot
+    /// deadlock because every other code path holds at most one run
+    /// mutex at a time (and never takes the run-map lock while holding
+    /// one). File IO happens OUTSIDE all locks.
     pub fn write_checkpoint(&self) {
         let Some(p) = &self.persist else { return };
         if !p.wants_checkpoints() {
             return;
         }
         let ckpt = {
-            let runs = self.runs.lock().unwrap();
-            let mut snaps: Vec<RunSnapshot> =
-                runs.iter().map(|(rid, run)| run.snapshot(*rid)).collect();
-            snaps.sort_unstable_by_key(|s| s.run_id);
+            let handles = self.run_handles_sorted();
+            let guards: Vec<_> = handles
+                .iter()
+                .map(|(rid, h)| (*rid, h.state.lock().unwrap()))
+                .collect();
+            let snaps: Vec<RunSnapshot> =
+                guards.iter().map(|(rid, run)| run.snapshot(*rid)).collect();
             Checkpoint {
                 wal_offset: p.wal_offset(),
                 next_node: self.next_node.load(Ordering::Relaxed),
@@ -1800,29 +2053,31 @@ mod tests {
 
     #[test]
     fn for_each_result_streams_in_arrival_order() {
-        use std::sync::atomic::AtomicUsize;
         let link = SuperLink::new();
         link.handle_frame(&FlowerMsg::CreateNode { requested: 0 }.encode());
         let t1 = link.push_task(1, ins(1));
         let t2 = link.push_task(1, ins(1));
         let t3 = link.push_task(1, ins(1));
-        // Lock-step pusher: pushes out of task order, waiting for each
-        // result to be CONSUMED before pushing the next — so consumption
-        // order deterministically equals arrival order.
-        let consumed = Arc::new(AtomicUsize::new(0));
+        // Lock-step pusher: pushes out of task order, parked on a
+        // condvar until each result is CONSUMED before pushing the next
+        // — so consumption order deterministically equals arrival order
+        // (no sleep polling).
+        let consumed = Arc::new((Mutex::new(0usize), Condvar::new()));
         let (l2, c2) = (link.clone(), consumed.clone());
         let h = std::thread::spawn(move || {
             for (i, tid) in [t3, t1, t2].into_iter().enumerate() {
                 l2.handle_frame(&FlowerMsg::PushTaskRes { res: res(tid, 1) }.encode());
-                while c2.load(Ordering::Acquire) <= i {
-                    std::thread::sleep(Duration::from_millis(1));
-                }
+                let (count, cv) = &*c2;
+                let guard = count.lock().unwrap();
+                drop(cv.wait_while(guard, |n| *n <= i).unwrap());
             }
         });
         let mut seen = Vec::new();
         link.for_each_result(1, &[t1, t2, t3], Duration::from_secs(5), |r| {
             seen.push(r.task_id);
-            consumed.fetch_add(1, Ordering::Release);
+            let (count, cv) = &*consumed;
+            *count.lock().unwrap() += 1;
+            cv.notify_all();
             Ok(())
         })
         .unwrap();

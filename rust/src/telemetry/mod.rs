@@ -73,7 +73,55 @@ pub fn bump(name: &str, delta: i64) {
     counter(name).fetch_add(delta, Ordering::Relaxed);
 }
 
-/// Snapshot of all counters (sorted by name).
+/// A per-instance counter scope: a label (e.g. `shard-2`) that
+/// attributes every bump to one component instance while STILL feeding
+/// the process-wide total of the same name atomically. Concurrent link
+/// instances — the interior shards of a
+/// [`crate::flower::shard::ShardedGrid`] — each hold their own scope, so
+/// a sharded run reports both true totals (the unlabelled counter, a
+/// single `fetch_add` target shared by every instance) and a per-shard
+/// breakdown (`name[label]` entries), aggregated and printed together by
+/// [`dump_counters`] at `Federation` teardown.
+///
+/// An empty label is the plain global scope: bumps touch only the
+/// unlabelled counter, exactly like [`bump`].
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    label: String,
+}
+
+impl Counters {
+    /// The unlabelled (process-global) scope.
+    pub fn global() -> Counters {
+        Counters {
+            label: String::new(),
+        }
+    }
+
+    /// A labelled instance scope.
+    pub fn labelled(label: impl Into<String>) -> Counters {
+        Counters {
+            label: label.into(),
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Bump `name` under this instance's label AND the process-wide
+    /// total of the same name. Both are atomic adds on leaked statics,
+    /// so concurrent instances never lose counts to each other.
+    pub fn bump(&self, name: &str, delta: i64) {
+        bump(name, delta);
+        if !self.label.is_empty() {
+            bump(&format!("{name}[{}]", self.label), delta);
+        }
+    }
+}
+
+/// Snapshot of all counters (sorted by name). Labelled instance entries
+/// (`name[label]`) sort directly after their unlabelled total.
 pub fn snapshot() -> Vec<(String, i64)> {
     COUNTERS
         .lock()
@@ -83,12 +131,28 @@ pub fn snapshot() -> Vec<(String, i64)> {
         .collect()
 }
 
+/// Per-instance totals: every labelled counter (`name[label]`) summed
+/// by base name — the cross-check that instance attribution accounts
+/// for the whole total. Sorted by base name.
+pub fn instance_totals() -> Vec<(String, i64)> {
+    let mut totals: BTreeMap<String, i64> = BTreeMap::new();
+    for (name, value) in snapshot() {
+        if let Some(base) = name.strip_suffix(']').and_then(|s| s.split_once('[')) {
+            *totals.entry(base.0.to_string()).or_insert(0) += value;
+        }
+    }
+    totals.into_iter().collect()
+}
+
 /// Log every non-zero counter at INFO, one line per counter, under the
-/// given heading. No-op unless INFO logging is enabled (set
-/// `FLARELINK_LOG=info`), so tests and benches stay quiet by default.
-/// Used at Federation teardown to surface the durability counters
-/// (`wal.appends`, `wal.bytes`, `checkpoint.count`,
-/// `recovery.replayed_records`, ...) without a metrics stack.
+/// given heading. Labelled instance entries (`name[label]`, e.g. the
+/// per-shard breakdown of a sharded link) print indented beneath their
+/// unlabelled total, which is the authoritative aggregate. No-op unless
+/// INFO logging is enabled (set `FLARELINK_LOG=info`), so tests and
+/// benches stay quiet by default. Used at `Federation` teardown to
+/// surface the durability counters (`wal.appends`, `wal.bytes`,
+/// `checkpoint.count`, `recovery.replayed_records`, ...) without a
+/// metrics stack.
 pub fn dump_counters(heading: &str) {
     if !log::log_enabled!(log::Level::Info) {
         return;
@@ -96,7 +160,11 @@ pub fn dump_counters(heading: &str) {
     log::info!("{heading}: counter snapshot");
     for (name, value) in snapshot() {
         if value != 0 {
-            log::info!("{heading}:   {name} = {value}");
+            if name.ends_with(']') && name.contains('[') {
+                log::info!("{heading}:     {name} = {value}");
+            } else {
+                log::info!("{heading}:   {name} = {value}");
+            }
         }
     }
 }
@@ -134,5 +202,34 @@ mod tests {
         bump("test.reset", 7);
         reset_counters();
         assert_eq!(counter("test.reset").load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn labelled_scope_feeds_instance_and_total() {
+        let a = Counters::labelled("inst-a");
+        let b = Counters::labelled("inst-b");
+        let total0 = counter("test.labelled").load(Ordering::Relaxed);
+        a.bump("test.labelled", 2);
+        b.bump("test.labelled", 3);
+        b.bump("test.labelled", 1);
+        // The unlabelled counter is the true total across instances.
+        assert_eq!(
+            counter("test.labelled").load(Ordering::Relaxed),
+            total0 + 6
+        );
+        let snap: BTreeMap<String, i64> = snapshot().into_iter().collect();
+        assert_eq!(snap["test.labelled[inst-a]"], 2);
+        assert_eq!(snap["test.labelled[inst-b]"], 4);
+        // Instance totals re-derive the aggregate from the breakdown.
+        let totals: BTreeMap<String, i64> = instance_totals().into_iter().collect();
+        assert_eq!(totals["test.labelled"], 6);
+    }
+
+    #[test]
+    fn global_scope_leaves_no_labelled_entries() {
+        Counters::global().bump("test.globalscope", 5);
+        assert!(snapshot()
+            .iter()
+            .all(|(n, _)| !n.starts_with("test.globalscope[")));
     }
 }

@@ -430,6 +430,136 @@ fn secagg_refuses_partial_participation() {
 }
 
 // ---------------------------------------------------------------------------
+// Sharded: kill ONE shard mid-round, recover it, stay bit-identical
+// ---------------------------------------------------------------------------
+
+mod sharded {
+    use super::*;
+    use std::collections::HashMap;
+
+    use flarelink::flower::persist::Durability;
+    use flarelink::flower::run::{run_native, SwitchedFleet};
+    use flarelink::flower::shard::ShardedGrid;
+
+    const COHORT: usize = 5;
+    const VICTIM_NODE: u64 = 5;
+    const VICTIM_SHARD: usize = 3;
+
+    fn cfg(seed: u64) -> ServerConfig {
+        ServerConfig {
+            num_rounds: 2,
+            min_nodes: COHORT,
+            fraction_evaluate: 0.0,
+            round_timeout: Duration::from_secs(30),
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// The sharded chaos row: a DURABLE 4-shard grid serves a 5-node
+    /// fleet; the shard owning node 5 is killed while that node holds
+    /// its round-1 task (a real crash: no retire, no drain), then
+    /// recovered from the shard's own WAL directory while the OTHER
+    /// shards keep serving and the driver keeps waiting. The recovered
+    /// shard re-queues the in-flight task to its original node, the
+    /// node rides out the restart behind its switch, and the run must
+    /// finalize bit-identical to an uninterrupted single-link run.
+    #[test]
+    fn killed_shard_recovers_and_the_run_stays_bit_identical() {
+        let seed = chaos_seed();
+        let init = ArrayRecord::from_flat(&[0.25f32; 6]);
+
+        // Uninterrupted single-link reference over the same fleet.
+        let plain: Vec<Arc<dyn ClientApp>> = (0..COHORT)
+            .map(|i| Arc::new(survivor_client(i)) as Arc<dyn ClientApp>)
+            .collect();
+        let mut flat_app = ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            cfg(seed),
+            init.clone(),
+        );
+        let want = run_native(&mut flat_app, plain, 1).unwrap();
+
+        // Durable 4-shard grid with an explicit partition: the victim
+        // node alone on shard 3, so the crash takes down exactly one
+        // shard holding exactly one in-flight task.
+        let dir = std::env::temp_dir().join(format!(
+            "flarelink-chaos-shard-{}-{seed}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let overrides: HashMap<u64, usize> = [(1, 0), (2, 1), (3, 2), (4, 0), (VICTIM_NODE, VICTIM_SHARD)]
+            .into_iter()
+            .collect();
+        let grid = ShardedGrid::with_topology(
+            4,
+            LinkConfig::default(),
+            Durability::Checkpointed {
+                dir: dir.clone(),
+                every_results: 1,
+            },
+            overrides,
+        )
+        .unwrap();
+
+        // Victim last (node id 5); survivors hold round 1 until the
+        // victim is stuck mid-fit so the crash is genuinely mid-round.
+        let gate = Gate::new();
+        let mut apps: Vec<Arc<dyn ClientApp>> = (0..COHORT - 1)
+            .map(|i| {
+                Arc::new(WaitClient {
+                    inner: Arc::new(survivor_client(i)),
+                    gate: gate.clone(),
+                    victims: 1,
+                }) as Arc<dyn ClientApp>
+            })
+            .collect();
+        apps.push(Arc::new(GatedClient {
+            inner: Arc::new(survivor_client(COHORT - 1)),
+            gate: gate.clone(),
+        }));
+        let fleet = SwitchedFleet::start_sharded(&grid, apps, Duration::from_secs(20)).unwrap();
+
+        let driver = {
+            let grid = grid.clone();
+            let init = init.clone();
+            std::thread::spawn(move || {
+                let mut app = ServerApp::new(
+                    Box::new(FedAvg::new(Aggregator::host())),
+                    cfg(seed),
+                    init,
+                );
+                app.run(grid.as_ref(), None, 1)
+            })
+        };
+
+        // The victim holds its task: crash its shard, recover it from
+        // the WAL, then release the victim into the recovered shard.
+        assert!(
+            gate.wait_entered(1, Duration::from_secs(20)),
+            "victim never entered fit"
+        );
+        let dead = grid.kill_shard(VICTIM_SHARD);
+        assert!(dead.is_some(), "victim shard was already down");
+        drop(dead); // the crashed link's only survivor is its WAL dir
+        grid.recover_shard(VICTIM_SHARD).unwrap();
+        assert!(grid.shard_link(VICTIM_SHARD).is_some());
+        gate.open();
+
+        let got = driver.join().expect("driver thread panicked").unwrap();
+        fleet.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        assert_eq!(got.rounds.len(), 2, "both rounds must finalize");
+        assert_eq!(got, want, "mid-round shard recovery changed the history");
+        assert!(
+            got.params_bits_equal(&want),
+            "mid-round shard recovery must be bit-invisible to the final model"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Bridged: kill ⌈N/3⌉ FLARE sites mid-round via transport/fault.rs
 // ---------------------------------------------------------------------------
 

@@ -21,16 +21,19 @@
 //! must refuse to start.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use flarelink::flower::asyncfed::AsyncConfig;
 use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
 use flarelink::flower::records::{ArrayRecord, MetricRecord};
-use flarelink::flower::run::{run_native, NativeFleet};
+use flarelink::flower::run::{run_native, NativeFleet, SwitchedFleet};
 use flarelink::flower::serverapp::{ServerApp, ServerConfig};
+use flarelink::flower::shard::ShardedGrid;
 use flarelink::flower::strategy::{
     Aggregator, FedAdagrad, FedAdam, FedAvg, FedAvgM, FedMedian, FedOptConfig, FedProx, FedYogi,
     FitRes, Krum, Strategy, TrimmedMean,
 };
+use flarelink::flower::superlink::LinkConfig;
 use flarelink::util::rng::Rng;
 
 const COHORT: usize = 5;
@@ -223,6 +226,90 @@ fn check_recovered_equals_uninterrupted(mk: &dyn Fn() -> Box<dyn Strategy>, labe
     }
 }
 
+/// Check 5 (this PR's acceptance anchor): a sharded grid — N interior
+/// SuperLink shards with per-shard intermediate aggregation merged at
+/// the root in shard-id order — is bit-identical to the flat
+/// single-link path, across the synchronous, quorum, and
+/// async(staleness 0, buffer == cohort) drivers. Node ids are pinned
+/// (1..=COHORT) so the consistent hash scatters the same fleet across
+/// shards deterministically.
+fn check_sharded_equals_single(mk: &dyn Fn() -> Box<dyn Strategy>, shards: usize, label: &str) {
+    let rounds = 2u64;
+    let init = ArrayRecord::from_flat(&[0.25f32; 6]);
+    let downtime = Duration::from_secs(30);
+
+    // Sync: strict full-cohort rounds.
+    let mut flat_app = ServerApp::new(mk(), server_cfg(rounds), init.clone());
+    let flat_sync = run_native(&mut flat_app, fleet_apps(), 1).unwrap();
+    let grid = ShardedGrid::new(shards, LinkConfig::default());
+    let fleet = SwitchedFleet::start_sharded(&grid, fleet_apps(), downtime).unwrap();
+    let mut app = ServerApp::new(mk(), server_cfg(rounds), init.clone());
+    let sharded_sync = app.run(grid.as_ref(), None, 1).unwrap();
+    fleet.shutdown();
+    assert_eq!(
+        sharded_sync, flat_sync,
+        "{label}: sharded(N={shards}) sync history diverged from the single link"
+    );
+    assert!(
+        sharded_sync.params_bits_equal(&flat_sync),
+        "{label}: sharded(N={shards}) sync parameters not bit-identical"
+    );
+
+    // Quorum: min_available < cohort with a generous straggler grace,
+    // so the quorum code path runs yet every result still arrives —
+    // the only quorum configuration with a deterministic answer.
+    let quorum_cfg = || ServerConfig {
+        min_available: 3,
+        straggler_grace: Duration::from_secs(30),
+        ..server_cfg(rounds)
+    };
+    let mut flat_app = ServerApp::new(mk(), quorum_cfg(), init.clone());
+    let flat_quorum = run_native(&mut flat_app, fleet_apps(), 1).unwrap();
+    let grid = ShardedGrid::new(shards, LinkConfig::default());
+    let fleet = SwitchedFleet::start_sharded(&grid, fleet_apps(), downtime).unwrap();
+    let mut app = ServerApp::new(mk(), quorum_cfg(), init.clone());
+    let sharded_quorum = app.run(grid.as_ref(), None, 1).unwrap();
+    fleet.shutdown();
+    assert_eq!(
+        sharded_quorum, flat_quorum,
+        "{label}: sharded(N={shards}) quorum history diverged from the single link"
+    );
+    assert!(
+        sharded_quorum.params_bits_equal(&flat_quorum),
+        "{label}: sharded(N={shards}) quorum parameters not bit-identical"
+    );
+
+    // Async with the sync-equivalent configuration (buffer == cohort,
+    // staleness 0): the buffered driver pulls shard-major, but the
+    // canonicalizing fold makes arrival order irrelevant.
+    let acfg = AsyncConfig {
+        buffer_size: COHORT,
+        max_staleness: 0,
+    };
+    let flat_fleet = NativeFleet::start(fleet_apps()).unwrap();
+    let mut flat_app = ServerApp::new(mk(), server_cfg(rounds), init.clone());
+    let flat_async = flat_app.run_async(flat_fleet.link(), None, 1, acfg).unwrap();
+    flat_fleet.shutdown();
+    let grid = ShardedGrid::new(shards, LinkConfig::default());
+    let fleet = SwitchedFleet::start_sharded(&grid, fleet_apps(), downtime).unwrap();
+    let mut app = ServerApp::new(mk(), server_cfg(rounds), init);
+    let sharded_async = app.run_async(grid.as_ref(), None, 1, acfg).unwrap();
+    fleet.shutdown();
+    assert_eq!(
+        sharded_async.commits.len(),
+        rounds as usize,
+        "{label}: sharded(N={shards}) async commit count"
+    );
+    assert_eq!(
+        sharded_async, flat_async,
+        "{label}: sharded(N={shards}) async history diverged from the single link"
+    );
+    assert!(
+        sharded_async.params_bits_equal(&flat_async),
+        "{label}: sharded(N={shards}) async parameters not bit-identical"
+    );
+}
+
 macro_rules! conformance_matrix {
     ($($name:ident => $mk:expr;)*) => {$(
         mod $name {
@@ -259,6 +346,16 @@ macro_rules! conformance_matrix {
             #[test]
             fn recovered_equals_uninterrupted() {
                 check_recovered_equals_uninterrupted(&mk, stringify!($name));
+            }
+
+            #[test]
+            fn sharded_n1_equals_single() {
+                check_sharded_equals_single(&mk, 1, stringify!($name));
+            }
+
+            #[test]
+            fn sharded_n4_equals_single() {
+                check_sharded_equals_single(&mk, 4, stringify!($name));
             }
         }
     )*};
@@ -397,6 +494,26 @@ mod secagg {
         let err = agg.restore(AggSnapshot::Fit(Vec::new())).unwrap_err();
         assert!(
             err.to_string().contains("does not support snapshot restore"),
+            "refusal must name the capability: {err}"
+        );
+    }
+
+    /// The sharding refusal row, mirroring `supports_partial`: per-shard
+    /// partials of a masked sum are garbage to merge (masks only cancel
+    /// when ONE aggregator sees the full cohort), so the driver must
+    /// refuse before any task is dispatched.
+    #[test]
+    fn sharded_driver_refuses() {
+        let grid = ShardedGrid::new(2, LinkConfig::default());
+        assert!(!SecAggFedAvg::new(7).supports_sharding());
+        let mut app = ServerApp::new(
+            Box::new(SecAggFedAvg::new(7)),
+            server_cfg(1),
+            ArrayRecord::from_flat(&[0.0f32; 4]),
+        );
+        let err = app.run(grid.as_ref(), None, 1).unwrap_err();
+        assert!(
+            err.to_string().contains("cannot aggregate across"),
             "refusal must name the capability: {err}"
         );
     }
