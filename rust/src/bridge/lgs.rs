@@ -13,11 +13,15 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::flare::reliable::{Messenger, RetryPolicy};
+use crate::transport::mux::{FrameSink, MuxConn};
 use crate::transport::{inproc, Endpoint, TransportError};
 
 pub struct LocalGrpcServer {
     client_end: Arc<dyn Endpoint>,
     stop: Arc<AtomicBool>,
+    /// Present in mux mode ([`LocalGrpcServer::start_mux`]): the
+    /// acceptor-side connection whose streams carry the node's frames.
+    conn: Option<Arc<MuxConn>>,
 }
 
 impl LocalGrpcServer {
@@ -75,16 +79,73 @@ impl LocalGrpcServer {
         LocalGrpcServer {
             client_end: Arc::new(node_side),
             stop,
+            conn: None,
+        }
+    }
+
+    /// The multiplexed LGS: the SuperNode dials the local hop through a
+    /// [`MuxConn`] (one connection, its rpc stream carrying the classic
+    /// request/response frames) instead of a bare endpoint. Each data
+    /// frame is forwarded over FLARE reliable messaging and the reply
+    /// rides back on the SAME logical stream. The FLARE hop itself is
+    /// unchanged — bridged delivery stays poll-mode; only hop 1/6 (the
+    /// in-site leg the paper implements as a local gRPC server) speaks
+    /// the mux framing.
+    pub fn start_mux(
+        messenger: Arc<Messenger>,
+        server_cell: &str,
+        policy: RetryPolicy,
+        abort: Arc<AtomicBool>,
+    ) -> LocalGrpcServer {
+        let (node_side, lgs_side) = inproc::pair("supernode", "lgs");
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server_cell = server_cell.to_string();
+        // The node's RPCs on a stream are serial (it awaits each reply),
+        // so forwarding inline on the receive pump delays only frames
+        // that could not be answered yet anyway.
+        let sink: FrameSink = Arc::new(move |stream, frame| {
+            if stop2.load(Ordering::Acquire) || abort.load(Ordering::Acquire) {
+                return;
+            }
+            crate::telemetry::bump("lgs.frames_forwarded", 1);
+            let reply = match messenger.request(
+                &server_cell,
+                super::FLOWER_TOPIC,
+                frame.as_slice().to_vec(),
+                policy,
+            ) {
+                Ok(reply) => reply.payload,
+                Err(e) => {
+                    log::error!("lgs: reliable request failed: {e}");
+                    crate::flower::message::FlowerMsg::Error {
+                        message: format!("flare bridge: {e}"),
+                    }
+                    .encode()
+                }
+            };
+            let _ = stream.send(reply);
+        });
+        let conn = MuxConn::accept(Arc::new(lgs_side), Some(sink));
+        LocalGrpcServer {
+            client_end: Arc::new(node_side),
+            stop,
+            conn: Some(conn),
         }
     }
 
     /// The endpoint the SuperNode should dial (its "server endpoint").
+    /// In mux mode this is the underlying connection the node's
+    /// [`MuxConn::initiate`] wraps.
     pub fn client_endpoint(&self) -> Arc<dyn Endpoint> {
         self.client_end.clone()
     }
 
     pub fn stop(&self) {
         self.stop.store(true, Ordering::Release);
+        if let Some(conn) = &self.conn {
+            conn.close();
+        }
         self.client_end.close();
     }
 }

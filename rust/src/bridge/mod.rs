@@ -39,8 +39,9 @@ use crate::flower::message::Message;
 use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::shard::ShardedGrid;
 use crate::flower::superlink::{CompletionPolicy, RoundWait, SuperLink};
-use crate::flower::supernode::{NativeConnector, SuperNode, SuperNodeConfig};
+use crate::flower::supernode::{MuxNodeConnector, NativeConnector, SuperNode, SuperNodeConfig};
 use crate::proto::address;
+use crate::transport::mux::MuxConn;
 use crate::util::bytes::Bytes;
 
 pub use lgs::LocalGrpcServer;
@@ -376,18 +377,31 @@ impl AppFactory for FlowerBridgeApp {
     }
 
     /// FLARE client side: start the LGS, then run an UNMODIFIED SuperNode
-    /// pointed at it.
+    /// pointed at it. With `mux: true` in the job config, hop 1/6 (the
+    /// in-site SuperNode↔LGS leg) rides a multiplexed connection — the
+    /// node's connector is swapped, its loop and every frame it sends
+    /// are byte-identical.
     fn run_client(&self, ctx: JobCtx) -> anyhow::Result<()> {
         let app = self.builder.build_router(&ctx)?;
         let server_cell = address::job_cell(address::SERVER, &ctx.job_id);
+        let use_mux = ctx.config.get("mux").as_bool().unwrap_or(false);
 
         // Hop 1 wiring: the LGS endpoint the SuperNode dials.
-        let lgs = LocalGrpcServer::start(
-            ctx.messenger.clone(),
-            &server_cell,
-            self.policy,
-            ctx.abort.clone(),
-        );
+        let lgs = if use_mux {
+            LocalGrpcServer::start_mux(
+                ctx.messenger.clone(),
+                &server_cell,
+                self.policy,
+                ctx.abort.clone(),
+            )
+        } else {
+            LocalGrpcServer::start(
+                ctx.messenger.clone(),
+                &server_cell,
+                self.policy,
+                ctx.abort.clone(),
+            )
+        };
 
         // Pin the node id to the site's index among the participants so
         // the client<->node binding matches the native path exactly.
@@ -397,11 +411,20 @@ impl AppFactory for FlowerBridgeApp {
             .position(|s| s == &ctx.site)
             .map(|i| i as u64 + 1)
             .unwrap_or(0);
-        let mut node = SuperNode::with_app(
+        let connector: Box<dyn crate::flower::supernode::FlowerConnector> = if use_mux {
+            let conn = MuxConn::initiate(lgs.client_endpoint());
+            Box::new(MuxNodeConnector::new(
+                &conn,
+                std::time::Duration::from_secs(120),
+            )?)
+        } else {
             Box::new(NativeConnector::new(
                 lgs.client_endpoint(),
                 std::time::Duration::from_secs(120),
-            )),
+            ))
+        };
+        let mut node = SuperNode::with_app(
+            connector,
             Arc::new(app),
             SuperNodeConfig {
                 requested_node_id: partition,
@@ -621,7 +644,7 @@ mod tests {
         }
     }
 
-    fn bridged_history(drop_prob: f64, rounds: u64) -> History {
+    fn bridged_history_cfg(drop_prob: f64, rounds: u64, mux: bool) -> History {
         let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
         let c2 = captured.clone();
         let app = FlowerBridgeApp::new(Arc::new(TestBuilder))
@@ -635,8 +658,10 @@ mod tests {
             .retry_policy(RetryPolicy::fast())
             .build(Arc::new(app))
             .unwrap();
-        let spec = JobSpec::new("flower-1", "flower_bridge")
-            .with_config(Json::obj(vec![("rounds", Json::num(rounds as f64))]));
+        let spec = JobSpec::new("flower-1", "flower_bridge").with_config(Json::obj(vec![
+            ("rounds", Json::num(rounds as f64)),
+            ("mux", Json::Bool(mux)),
+        ]));
         fed.scp.submit(spec).unwrap();
         let status = fed.scp.wait("flower-1", Duration::from_secs(60)).unwrap();
         assert_eq!(
@@ -648,6 +673,10 @@ mod tests {
         fed.shutdown();
         let h = captured.lock().unwrap().take().unwrap();
         h
+    }
+
+    fn bridged_history(drop_prob: f64, rounds: u64) -> History {
+        bridged_history_cfg(drop_prob, rounds, false)
     }
 
     #[test]
@@ -690,6 +719,18 @@ mod tests {
 
         assert_eq!(native, bridged);
         assert!(native.params_bits_equal(&bridged));
+    }
+
+    /// Multiplexed hop 1/6 (`mux: true`): the SuperNode↔LGS leg rides a
+    /// [`MuxConn`] instead of a bare endpoint, and the job's history is
+    /// bit-identical to the classic bridged run — the framing swap is
+    /// invisible to the protocol above it.
+    #[test]
+    fn bridged_mux_equals_classic_bridged_bitexact() {
+        let muxed = bridged_history_cfg(0.0, 2, true);
+        let classic = bridged_history(0.0, 2);
+        assert_eq!(muxed, classic);
+        assert!(muxed.params_bits_equal(&classic));
     }
 
     /// Reliable messaging keeps the job correct under 30% frame loss —

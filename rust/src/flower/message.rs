@@ -656,6 +656,12 @@ pub enum FlowerMsg {
     PullTaskIns { node_id: u64 },
     PushTaskRes { res: TaskRes },
     DeleteNode { node_id: u64 },
+    /// Enter push-mode delivery: the serving layer starts PUSHING
+    /// `TaskInsList` frames down this stream whenever tasks queue for
+    /// the node, instead of the node polling `PullTaskIns` every few
+    /// ms. Sent once per task stream; the immediate reply is the
+    /// current backlog (possibly empty).
+    Subscribe { node_id: u64 },
     // server -> client
     NodeCreated { node_id: u64 },
     /// Zero or more instructions + whether any run is still active.
@@ -696,6 +702,10 @@ impl FlowerMsg {
             }
             FlowerMsg::DeleteNode { node_id } => {
                 w.u8(3);
+                w.u64(*node_id);
+            }
+            FlowerMsg::Subscribe { node_id } => {
+                w.u8(4);
                 w.u64(*node_id);
             }
             FlowerMsg::NodeCreated { node_id } => {
@@ -760,6 +770,10 @@ impl FlowerMsg {
             }
             FlowerMsg::DeleteNode { node_id } => {
                 w.u8(3);
+                w.u64(*node_id);
+            }
+            FlowerMsg::Subscribe { node_id } => {
+                w.u8(4);
                 w.u64(*node_id);
             }
             FlowerMsg::NodeCreated { node_id } => {
@@ -835,6 +849,7 @@ impl FlowerMsg {
                 },
             },
             3 => FlowerMsg::DeleteNode { node_id: r.u64()? },
+            4 => FlowerMsg::Subscribe { node_id: r.u64()? },
             16 => FlowerMsg::NodeCreated { node_id: r.u64()? },
             17 => {
                 let active = r.u8()? != 0;
@@ -908,6 +923,7 @@ impl FlowerMsg {
                 },
             },
             3 => FlowerMsg::DeleteNode { node_id: r.u64()? },
+            4 => FlowerMsg::Subscribe { node_id: r.u64()? },
             16 => FlowerMsg::NodeCreated { node_id: r.u64()? },
             17 => {
                 let active = r.u8()? != 0;
@@ -1057,6 +1073,7 @@ mod tests {
             FlowerMsg::PullTaskIns { node_id: 7 },
             FlowerMsg::PushTaskRes { res: sample_res() },
             FlowerMsg::DeleteNode { node_id: 7 },
+            FlowerMsg::Subscribe { node_id: 7 },
             FlowerMsg::NodeCreated { node_id: 7 },
             FlowerMsg::TaskInsList {
                 tasks: vec![sample_ins()],

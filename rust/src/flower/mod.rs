@@ -14,6 +14,7 @@ pub mod persist;
 pub mod records;
 pub mod secagg;
 pub mod run;
+pub mod serve;
 pub mod shard;
 pub mod serverapp;
 pub mod strategy;
@@ -36,11 +37,14 @@ pub use mods::{ClientMod, ModStack};
 pub use persist::Durability;
 pub use records::{ArrayRecord, DType, RecordDict, StateRecord, Tensor};
 pub use run::{
-    drive_runs, run_native, run_shared, FleetOptions, LinkSwitch, NativeFleet, SwitchConnector,
-    SwitchedFleet,
+    drive_runs, run_mux, run_native, run_shared, FleetOptions, LinkSwitch, NativeFleet,
+    SwitchConnector, SwitchedFleet,
 };
 pub use secagg::{SecAggFedAvg, SecAggMod};
+pub use serve::{LinkServer, LinkServerConfig};
 pub use serverapp::{History, Participation, RoundRecord, ServerApp, ServerConfig};
-pub use shard::ShardedGrid;
+pub use shard::{MuxShardedFleet, ShardedGrid};
 pub use superlink::{CompletionPolicy, LinkConfig, ResultTimeout, RoundWait, SuperLink};
-pub use supernode::{FlowerConnector, NativeConnector, SuperNode, SuperNodeConfig};
+pub use supernode::{
+    FlowerConnector, MuxNodeConnector, NativeConnector, PushConnector, SuperNode, SuperNodeConfig,
+};

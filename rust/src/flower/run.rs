@@ -12,10 +12,14 @@ use std::time::{Duration, Instant};
 
 use crate::flower::clientapp::{ClientApp, MessageApp, Router};
 use crate::flower::grid::Grid;
+use crate::flower::serve::{LinkServer, LinkServerConfig};
 use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::superlink::{LinkConfig, SuperLink};
-use crate::flower::supernode::{FlowerConnector, NativeConnector, SuperNode, SuperNodeConfig};
+use crate::flower::supernode::{
+    FlowerConnector, MuxNodeConnector, NativeConnector, SuperNode, SuperNodeConfig,
+};
 use crate::transport::inproc;
+use crate::transport::mux::MuxConn;
 use crate::transport::Endpoint;
 
 /// Knobs for [`NativeFleet::start_with`]: the link's resilience config
@@ -44,6 +48,9 @@ impl Default for FleetOptions {
 pub struct NativeFleet {
     link: Arc<SuperLink>,
     handles: Vec<std::thread::JoinHandle<anyhow::Result<u64>>>,
+    /// Present only for mux fleets ([`NativeFleet::start_mux`]): the
+    /// serving layer that owns the worker pool and the push thread.
+    server: Option<Arc<LinkServer>>,
 }
 
 impl NativeFleet {
@@ -109,14 +116,74 @@ impl NativeFleet {
                     .spawn(move || -> anyhow::Result<u64> { node.run() })?,
             );
         }
-        Ok(NativeFleet { link, handles })
+        Ok(NativeFleet {
+            link,
+            handles,
+            server: None,
+        })
+    }
+
+    /// Spawn a PUSH-MODE fleet over the multiplexed transport: one
+    /// [`LinkServer`] (bounded worker pool + push thread) fronting the
+    /// SuperLink, one [`MuxConn`] per SuperNode carrying its rpc and
+    /// task streams, nodes running [`SuperNode::run_push`] instead of
+    /// the poll loop. Node ids are pinned to client order, so histories
+    /// are bit-identical to [`NativeFleet::start`].
+    pub fn start_mux(client_apps: Vec<Arc<dyn ClientApp>>) -> anyhow::Result<NativeFleet> {
+        Self::start_mux_with(
+            client_apps,
+            FleetOptions::default(),
+            LinkServerConfig::default(),
+        )
+    }
+
+    /// [`NativeFleet::start_mux`] with explicit fleet and serving-layer
+    /// options (worker-pool width, lease/resilience config).
+    pub fn start_mux_with(
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        opts: FleetOptions,
+        server_cfg: LinkServerConfig,
+    ) -> anyhow::Result<NativeFleet> {
+        let apps: Vec<Arc<dyn MessageApp>> = client_apps
+            .into_iter()
+            .map(|app| Arc::new(Router::from_client(app)) as Arc<dyn MessageApp>)
+            .collect();
+        let link = SuperLink::with_config(opts.link);
+        let server = LinkServer::start(link.clone(), server_cfg);
+        let mut handles = Vec::new();
+        for (i, app) in apps.into_iter().enumerate() {
+            let (client_end, server_end) = inproc::pair(&format!("supernode-{i}"), "superlink");
+            server.attach(Arc::new(server_end));
+            let conn = MuxConn::initiate(Arc::new(client_end));
+            let connector = MuxNodeConnector::new(&conn, opts.connector_timeout)?;
+            let mut node = SuperNode::with_push(
+                Arc::new(connector),
+                app,
+                SuperNodeConfig {
+                    requested_node_id: i as u64 + 1,
+                    ..Default::default()
+                },
+            );
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("supernode-{i}"))
+                    .spawn(move || -> anyhow::Result<u64> { node.run_push() })?,
+            );
+        }
+        Ok(NativeFleet {
+            link,
+            handles,
+            server: Some(server),
+        })
     }
 
     pub fn link(&self) -> &Arc<SuperLink> {
         &self.link
     }
 
-    /// Retire the link and join every SuperNode.
+    /// Retire the link and join every SuperNode (then, for mux fleets,
+    /// stop the serving layer — workers and push thread — last, so the
+    /// retiring `TaskInsList { active: false }` reaches every node).
     pub fn shutdown(self) {
         self.link.retire();
         for h in self.handles {
@@ -125,6 +192,9 @@ impl NativeFleet {
                 Ok(Err(e)) => log::warn!("supernode exited with error: {e}"),
                 Err(_) => log::warn!("supernode panicked"),
             }
+        }
+        if let Some(server) = self.server {
+            server.shutdown();
         }
     }
 }
@@ -137,6 +207,22 @@ pub fn run_native(
     run_id: u64,
 ) -> anyhow::Result<History> {
     let fleet = NativeFleet::start(client_apps)?;
+    let result = server_app.run(fleet.link(), None, run_id);
+    fleet.shutdown();
+    result
+}
+
+/// [`run_native`] over the multiplexed push-mode transport: SuperNodes
+/// reach the SuperLink through per-node [`MuxConn`]s served by a
+/// [`LinkServer`] worker pool, and tasks are PUSHED the moment they are
+/// queued instead of waiting for the next poll. Histories are
+/// bit-identical to [`run_native`] for the same apps and run id.
+pub fn run_mux(
+    server_app: &mut ServerApp,
+    client_apps: Vec<Arc<dyn ClientApp>>,
+    run_id: u64,
+) -> anyhow::Result<History> {
+    let fleet = NativeFleet::start_mux(client_apps)?;
     let result = server_app.run(fleet.link(), None, run_id);
     fleet.shutdown();
     result
@@ -549,6 +635,78 @@ mod tests {
         // Reusing a finished run id fails fast with a clear error.
         let err = mk_app(7).run(fleet.link(), None, 1).unwrap_err();
         assert!(err.to_string().contains("unique per link"), "{err}");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn mux_fleet_matches_inproc_fleet() {
+        let mk_app = || {
+            ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 3,
+                    min_nodes: 3,
+                    fraction_fit: 0.67,
+                    seed: 21,
+                    ..Default::default()
+                },
+                ArrayRecord::from_flat(&[0.25; 6]),
+            )
+        };
+        let deltas: &[(f32, u64)] = &[(0.5, 5), (1.5, 7), (2.5, 11)];
+        let inproc = run_native(&mut mk_app(), apps(deltas), 1).unwrap();
+        let mux = run_mux(&mut mk_app(), apps(deltas), 1).unwrap();
+        assert_eq!(inproc, mux);
+        assert!(inproc.params_bits_equal(&mux));
+    }
+
+    #[test]
+    fn mux_fleet_64_nodes_bit_identical_to_inproc() {
+        // The acceptance bar: a 64-node mux fleet (64 connections, 128
+        // logical streams, one worker pool) runs a full FedAvg round and
+        // lands on exactly the history the inproc fleet produces.
+        const N: usize = 64;
+        let deltas: Vec<(f32, u64)> = (0..N)
+            .map(|i| (0.25 + (i % 7) as f32 * 0.5, (i % 5) as u64 + 1))
+            .collect();
+        let mk_app = || {
+            ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 1,
+                    min_nodes: N as u64,
+                    seed: 64,
+                    ..Default::default()
+                },
+                ArrayRecord::from_flat(&[0.0; 8]),
+            )
+        };
+        let inproc = run_native(&mut mk_app(), apps(&deltas), 1).unwrap();
+        let mux = run_mux(&mut mk_app(), apps(&deltas), 1).unwrap();
+        assert_eq!(inproc, mux);
+        assert!(inproc.params_bits_equal(&mux));
+    }
+
+    #[test]
+    fn mux_fleet_serves_consecutive_runs() {
+        let fleet = NativeFleet::start_mux(apps(&[(1.0, 10), (3.0, 30)])).unwrap();
+        let mk_app = |seed: u64| {
+            ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 1,
+                    min_nodes: 2,
+                    seed,
+                    ..Default::default()
+                },
+                ArrayRecord::from_flat(&[0.0; 2]),
+            )
+        };
+        mk_app(5).run(fleet.link(), None, 1).unwrap();
+        assert!(fleet.link().wait_drained(1, Duration::from_secs(10)));
+        assert_eq!(fleet.link().nodes().len(), 2, "nodes must survive run 1");
+        let h = mk_app(6).run(fleet.link(), None, 2).unwrap();
+        assert_eq!(h.rounds.len(), 1);
         fleet.shutdown();
     }
 

@@ -1,0 +1,389 @@
+//! Multithreaded SuperLink serving front end: accepts N SuperNodes over
+//! multiplexed connections ([`crate::transport::mux`]) and drives the
+//! split-lock SuperLink hot path (per-run lock map, per-node atomic
+//! leases) from a bounded worker pool — many node conversations in
+//! flight at once, one thread pool, no thread-per-connection.
+//!
+//! Two delivery modes coexist on the same server:
+//!
+//! * **Unary** — any stream may carry classic request/response frames
+//!   (`CreateNode`, `PullTaskIns`, `PushTaskRes`, `DeleteNode`); a
+//!   worker picks the frame off the shared ingress queue, runs
+//!   [`SuperLink::handle_msg`], and replies on the same stream.
+//! * **Push** — a stream that sends [`FlowerMsg::Subscribe`] becomes
+//!   the node's task stream: the pusher thread (parked on the link's
+//!   notify seat, woken by [`SuperLink::push_task`]) sweeps pending
+//!   queues and PUSHES `TaskInsList` frames the moment tasks queue.
+//!   Dispatch latency is wire-bound, not poll-bound.
+//!
+//! The pusher sweeps with `node_initiated = false`: a push on a dead
+//! node's behalf must neither renew its liveness lease nor forge its
+//! drain acknowledgment — those stay tied to frames the node itself
+//! sends (results, heartbeat pulls).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::flower::message::FlowerMsg;
+use crate::flower::superlink::{Notify, SuperLink};
+use crate::transport::mux::{FrameSink, MuxConn, MuxStream};
+use crate::transport::{Endpoint, Listener, TransportError};
+use crate::util::bytes::Bytes;
+
+#[derive(Clone, Debug)]
+pub struct LinkServerConfig {
+    /// Worker threads decoding/handling incoming frames. Bounds the
+    /// handler concurrency regardless of how many nodes connect.
+    pub workers: usize,
+}
+
+impl Default for LinkServerConfig {
+    fn default() -> Self {
+        Self { workers: 4 }
+    }
+}
+
+/// One incoming frame, queued with the stream it arrived on (the reply
+/// goes back on the same stream).
+type Job = (Arc<MuxStream>, Bytes);
+
+struct Ingress {
+    q: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+impl Ingress {
+    fn push(&self, job: Job) {
+        self.q.lock().unwrap().push_back(job);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self, timeout: Duration) -> Option<Job> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(job) = q.pop_front() {
+                return Some(job);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+}
+
+struct Shared {
+    link: Arc<SuperLink>,
+    ingress: Ingress,
+    /// node_id -> the task stream its `Subscribe` arrived on.
+    subs: Mutex<HashMap<u64, Arc<MuxStream>>>,
+    /// Observer seat on the link: `push_task` (and every other link
+    /// event) wakes the pusher through it.
+    seat: Arc<Notify>,
+    shutdown: AtomicBool,
+    conns: Mutex<Vec<Arc<MuxConn>>>,
+}
+
+/// The serving front end. [`LinkServer::attach`] mounts one underlying
+/// connection (any [`Endpoint`]); [`LinkServer::serve_listener`] runs a
+/// whole accept loop. All connections feed the same worker pool.
+pub struct LinkServer {
+    shared: Arc<Shared>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl LinkServer {
+    pub fn start(link: Arc<SuperLink>, cfg: LinkServerConfig) -> Arc<LinkServer> {
+        let seat = Arc::new(Notify::new());
+        link.subscribe(seat.clone());
+        let shared = Arc::new(Shared {
+            link,
+            ingress: Ingress {
+                q: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+            },
+            subs: Mutex::new(HashMap::new()),
+            seat,
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let mut threads = Vec::new();
+        for i in 0..cfg.workers.max(1) {
+            let s = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("link-serve-{i}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawn link-serve worker"),
+            );
+        }
+        {
+            let s = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("link-serve-push".into())
+                    .spawn(move || pusher_loop(&s))
+                    .expect("spawn link-serve pusher"),
+            );
+        }
+        Arc::new(LinkServer {
+            shared,
+            threads: Mutex::new(threads),
+        })
+    }
+
+    pub fn link(&self) -> &Arc<SuperLink> {
+        &self.shared.link
+    }
+
+    /// Mount one underlying connection: an acceptor-side [`MuxConn`]
+    /// whose every incoming data frame lands on the shared ingress
+    /// queue. Returns the connection (callers rarely need it).
+    pub fn attach(&self, underlying: Arc<dyn Endpoint>) -> Arc<MuxConn> {
+        let s = self.shared.clone();
+        let sink: FrameSink = Arc::new(move |stream, frame| {
+            s.ingress.push((stream, frame));
+        });
+        let conn = MuxConn::accept(underlying, Some(sink));
+        self.shared.conns.lock().unwrap().push(conn.clone());
+        conn
+    }
+
+    /// Accept-loop thread over any [`Listener`]: every accepted
+    /// underlying connection is [`LinkServer::attach`]ed. Returns
+    /// immediately; the loop ends at [`LinkServer::shutdown`].
+    pub fn serve_listener(self: &Arc<Self>, listener: Arc<dyn Listener>) {
+        let me = self.clone();
+        let handle = std::thread::Builder::new()
+            .name("link-serve-accept".into())
+            .spawn(move || loop {
+                if me.shared.shutdown.load(Ordering::Acquire) {
+                    listener.close();
+                    return;
+                }
+                match listener.accept(Duration::from_millis(200)) {
+                    Ok(ep) => {
+                        me.attach(ep);
+                    }
+                    Err(TransportError::Timeout) => continue,
+                    Err(_) => return,
+                }
+            })
+            .expect("spawn link-serve accept");
+        self.threads.lock().unwrap().push(handle);
+    }
+
+    /// Stop the worker pool, pusher, and accept loops, and close every
+    /// mounted connection. Idempotent.
+    pub fn shutdown(&self) {
+        if self.shared.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // Wake everything that might be parked.
+        self.shared.seat.signal();
+        self.shared.ingress.cv.notify_all();
+        for h in self.threads.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        for conn in self.shared.conns.lock().unwrap().drain(..) {
+            conn.close();
+        }
+    }
+}
+
+impl Drop for LinkServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(s: &Arc<Shared>) {
+    loop {
+        if s.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let Some((stream, frame)) = s.ingress.pop(Duration::from_millis(100)) else {
+            continue;
+        };
+        crate::telemetry::bump("serve.requests", 1);
+        let reply = match FlowerMsg::decode_shared(frame) {
+            Ok(FlowerMsg::Subscribe { node_id }) => {
+                // This stream becomes the node's task stream. Replace
+                // any previous registration (re-subscribe after a
+                // reconnect): latest stream wins.
+                s.subs.lock().unwrap().insert(node_id, stream.clone());
+                crate::telemetry::bump("serve.subscriptions", 1);
+                // The immediate reply is the node's current backlog —
+                // node-initiated, so it renews the lease like a pull.
+                s.link.pull_tasks(node_id, true).encode()
+            }
+            Ok(msg) => s.link.handle_msg(msg).encode(),
+            Err(e) => FlowerMsg::Error {
+                message: format!("bad frame: {e}"),
+            }
+            .encode(),
+        };
+        if stream.send(reply).is_err() {
+            // Connection died mid-reply; the node will re-register.
+            crate::telemetry::bump("serve.dead_replies", 1);
+        }
+    }
+}
+
+fn pusher_loop(s: &Arc<Shared>) {
+    loop {
+        if s.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // Parked on the link's observer seat: push_task / retire /
+        // node churn all signal it (waits are internally capped, so a
+        // missed wakeup costs at most ~50ms).
+        s.seat.wait_until(Instant::now() + Duration::from_millis(50));
+        if s.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let snapshot: Vec<(u64, Arc<MuxStream>)> = s
+            .subs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, st)| (*id, st.clone()))
+            .collect();
+        for (node_id, stream) in snapshot {
+            // NOT node-initiated: no lease renewal, no drain-ack forgery
+            // on the node's behalf.
+            let msg = s.link.pull_tasks(node_id, false);
+            let drop_sub = match &msg {
+                FlowerMsg::TaskInsList { tasks, active } => {
+                    if tasks.is_empty() && *active {
+                        // Nothing to deliver and the fleet is live:
+                        // stay silent, keep the subscription.
+                        continue;
+                    }
+                    crate::telemetry::bump("serve.pushes", 1);
+                    crate::telemetry::bump("serve.tasks_pushed", tasks.len() as i64);
+                    // After `active: false` the node deregisters and
+                    // exits — the subscription is spent.
+                    !*active
+                }
+                // Unknown node (lease reaped): forward the error so the
+                // node re-registers and re-subscribes; this
+                // subscription is dead.
+                FlowerMsg::Error { .. } => true,
+                _ => true,
+            };
+            let sent_ok = stream.send(msg.encode()).is_ok();
+            if drop_sub || !sent_ok {
+                s.subs.lock().unwrap().remove(&node_id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::clientapp::ArithmeticClient;
+    use crate::flower::message::{ConfigRecord, MessageType, TaskIns};
+    use crate::flower::records::ArrayRecord;
+    use crate::flower::supernode::{MuxNodeConnector, SuperNode, SuperNodeConfig};
+    use crate::transport::inproc;
+    use crate::transport::mux::MuxConn;
+
+    fn fit_ins(run_id: u64, params: &[f32]) -> TaskIns {
+        TaskIns {
+            task_id: 0,
+            run_id,
+            round: 1,
+            message_type: MessageType::Train,
+            attempt: 0,
+            redeliver: false,
+            model_version: 0,
+            parameters: ArrayRecord::from_flat(params),
+            config: ConfigRecord::new(),
+        }
+    }
+
+    fn push_node(
+        server: &Arc<LinkServer>,
+        pin: u64,
+        delta: f32,
+    ) -> std::thread::JoinHandle<anyhow::Result<u64>> {
+        let (client_end, server_end) = inproc::pair("node", "link");
+        server.attach(Arc::new(server_end));
+        let conn = MuxConn::initiate(Arc::new(client_end));
+        let connector = MuxNodeConnector::new(&conn, Duration::from_secs(5)).unwrap();
+        let mut node = SuperNode::with_push(
+            Arc::new(connector),
+            Arc::new(crate::flower::clientapp::Router::from_client(Arc::new(
+                ArithmeticClient { delta, n: 4 },
+            ))),
+            SuperNodeConfig {
+                requested_node_id: pin,
+                ..Default::default()
+            },
+        );
+        std::thread::spawn(move || node.run_push())
+    }
+
+    #[test]
+    fn push_mode_round_trip_over_mux() {
+        let link = SuperLink::new();
+        let server = LinkServer::start(link.clone(), LinkServerConfig::default());
+        let h = push_node(&server, 1, 1.0);
+        link.wait_for_nodes(1, Duration::from_secs(5)).unwrap();
+        // Task pushed AFTER subscription: delivered by the pusher.
+        let tid = link.push_task(1, fit_ins(1, &[1.0, 2.0]));
+        let res = link.await_results(1, &[tid], Duration::from_secs(5)).unwrap();
+        assert_eq!(res[0].parameters.to_flat(), vec![2.0, 3.0]);
+        link.retire();
+        assert_eq!(h.join().unwrap().unwrap(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn subscribe_delivers_backlog_queued_before_it() {
+        // Tasks pushed BEFORE the node subscribes arrive via the
+        // Subscribe reply (the backlog sweep), not only via later
+        // pushes.
+        let link = SuperLink::new();
+        // Queue for the pinned id before the node even connects: the
+        // link accepts tasks for not-yet-registered nodes.
+        let tid = link.push_task(1, fit_ins(1, &[0.0]));
+        let server = LinkServer::start(link.clone(), LinkServerConfig::default());
+        let h = push_node(&server, 1, 2.0);
+        let res = link.await_results(1, &[tid], Duration::from_secs(5)).unwrap();
+        assert_eq!(res[0].parameters.to_flat(), vec![2.0]);
+        link.retire();
+        h.join().unwrap().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn many_nodes_one_worker_pool() {
+        // 8 nodes over 8 mux connections into a 2-worker pool: every
+        // node serves its task and the fleet drains cleanly.
+        let link = SuperLink::new();
+        let server = LinkServer::start(link.clone(), LinkServerConfig { workers: 2 });
+        let handles: Vec<_> = (1..=8).map(|i| push_node(&server, i, i as f32)).collect();
+        link.wait_for_nodes(8, Duration::from_secs(5)).unwrap();
+        let tids: Vec<u64> = (1..=8u64)
+            .map(|i| link.push_task(i, fit_ins(1, &[0.0])))
+            .collect();
+        let res = link.await_results(1, &tids, Duration::from_secs(10)).unwrap();
+        let mut got: Vec<f32> = res.iter().map(|r| r.parameters.to_flat()[0]).collect();
+        got.sort_by(f32::total_cmp);
+        assert_eq!(got, (1..=8).map(|i| i as f32).collect::<Vec<_>>());
+        link.retire();
+        for h in handles {
+            assert_eq!(h.join().unwrap().unwrap(), 1);
+        }
+        server.shutdown();
+    }
+}

@@ -67,13 +67,18 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::flower::clientapp::{ClientApp, MessageApp, Router};
 use crate::flower::grid::Grid;
 use crate::flower::message::{FlowerMsg, Message, MessageType, TaskRes};
 use crate::flower::persist::Durability;
 use crate::flower::records::ArrayRecord;
 use crate::flower::run::LinkSwitch;
+use crate::flower::serve::{LinkServer, LinkServerConfig};
 use crate::flower::strategy::{AggSnapshot, FitAgg, FitRes, SortedBuffer};
 use crate::flower::superlink::{CompletionPolicy, LinkConfig, Notify, RoundWait, SuperLink};
+use crate::flower::supernode::{MuxNodeConnector, SuperNode, SuperNodeConfig};
+use crate::transport::inproc;
+use crate::transport::mux::MuxConn;
 use crate::util::bytes::Bytes;
 use crate::util::rng::SplitMix64;
 
@@ -368,6 +373,79 @@ impl ShardedGrid {
             None => FlowerMsg::Error {
                 message: format!("shard {k} unavailable"),
             },
+        }
+    }
+}
+
+/// A push-mode SuperNode fleet over a [`ShardedGrid`]: one
+/// [`LinkServer`] (worker pool + push thread) fronting each shard's
+/// link, and one multiplexed connection per SuperNode into its home
+/// shard's server — the consistent hash decides which server a node
+/// dials, exactly as it decides which shard serves its frames on the
+/// poll path. Chaos tests keep using [`crate::flower::run::SwitchedFleet`]
+/// (the mux fleet pins each server to the shard's link at start time,
+/// so it does not follow a kill→recover swap).
+pub struct MuxShardedFleet {
+    servers: Vec<Arc<LinkServer>>,
+    handles: Vec<std::thread::JoinHandle<anyhow::Result<u64>>>,
+}
+
+impl MuxShardedFleet {
+    /// One SuperNode per client app (ids pinned to client order), each
+    /// running [`SuperNode::run_push`] against its home shard's server.
+    pub fn start(
+        grid: &Arc<ShardedGrid>,
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        connector_timeout: Duration,
+    ) -> anyhow::Result<MuxShardedFleet> {
+        let mut servers = Vec::with_capacity(grid.shards.len());
+        for k in 0..grid.shards.len() {
+            let link = grid
+                .shard_link(k)
+                .ok_or_else(|| anyhow::anyhow!("shard {k} is down; cannot start mux fleet"))?;
+            servers.push(LinkServer::start(link, LinkServerConfig::default()));
+        }
+        let mut handles = Vec::new();
+        for (i, app) in client_apps.into_iter().enumerate() {
+            let node_id = i as u64 + 1;
+            let k = grid.shard_for_node(node_id);
+            let (client_end, server_end) =
+                inproc::pair(&format!("supernode-{i}"), &format!("shard-{k}"));
+            servers[k].attach(Arc::new(server_end));
+            let conn = MuxConn::initiate(Arc::new(client_end));
+            let connector = MuxNodeConnector::new(&conn, connector_timeout)?;
+            let app = Arc::new(Router::from_client(app)) as Arc<dyn MessageApp>;
+            let mut node = SuperNode::with_push(
+                Arc::new(connector),
+                app,
+                SuperNodeConfig {
+                    requested_node_id: node_id,
+                    ..Default::default()
+                },
+            );
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("supernode-{i}"))
+                    .spawn(move || -> anyhow::Result<u64> { node.run_push() })?,
+            );
+        }
+        Ok(MuxShardedFleet { servers, handles })
+    }
+
+    /// Retire every shard, join the fleet, then stop the per-shard
+    /// serving layers (last, so the retiring `active: false` push
+    /// reaches every node).
+    pub fn shutdown(self, grid: &ShardedGrid) {
+        grid.retire();
+        for h in self.handles {
+            match h.join() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => log::warn!("supernode exited with error: {e}"),
+                Err(_) => log::warn!("supernode panicked"),
+            }
+        }
+        for server in self.servers {
+            server.shutdown();
         }
     }
 }
@@ -845,6 +923,43 @@ mod tests {
             FlowerMsg::TaskInsList { .. } => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn mux_sharded_fleet_matches_flat_native_fleet() {
+        use crate::flower::clientapp::ArithmeticClient;
+        use crate::flower::run::run_native;
+        use crate::flower::serverapp::{ServerApp, ServerConfig};
+        use crate::flower::strategy::{Aggregator, FedAvg};
+
+        let mk_apps = || -> Vec<Arc<dyn ClientApp>> {
+            [(1.0f32, 1u64), (2.0, 3), (3.0, 5), (4.0, 7), (5.0, 9)]
+                .iter()
+                .map(|&(delta, n)| Arc::new(ArithmeticClient { delta, n }) as Arc<dyn ClientApp>)
+                .collect()
+        };
+        let mk_app = || {
+            ServerApp::new(
+                Box::new(FedAvg::new(Aggregator::host())),
+                ServerConfig {
+                    num_rounds: 2,
+                    min_nodes: 5,
+                    seed: 11,
+                    ..Default::default()
+                },
+                ArrayRecord::from_flat(&[0.0; 4]),
+            )
+        };
+        let flat = run_native(&mut mk_app(), mk_apps(), 1).unwrap();
+        // Push-mode fleet over 3 shards: hierarchical aggregation over
+        // mux connections must land on the flat inproc history, bit for
+        // bit.
+        let grid = ShardedGrid::new(3, LinkConfig::default());
+        let fleet = MuxShardedFleet::start(&grid, mk_apps(), Duration::from_secs(30)).unwrap();
+        let sharded = mk_app().run(grid.as_ref(), None, 1).unwrap();
+        fleet.shutdown(&grid);
+        assert_eq!(flat, sharded);
+        assert!(flat.params_bits_equal(&sharded));
     }
 
     #[test]

@@ -987,54 +987,7 @@ impl SuperLink {
                 self.signal_link();
                 FlowerMsg::NodeCreated { node_id: id }
             }
-            FlowerMsg::PullTaskIns { node_id } => {
-                self.touch(node_id);
-                let known = self.nodes.read().unwrap().contains_key(&node_id);
-                if !known && !self.retired.load(Ordering::Acquire) {
-                    // A reaped (or never-registered) node is polling a
-                    // pool it is not part of: tell it so it can
-                    // re-register and rejoin — otherwise a transient
-                    // stall would shrink the fleet permanently. (Its old
-                    // tasks were already settled — failed or redelivered
-                    // — when the lease was reaped; rejoining starts
-                    // fresh.)
-                    return FlowerMsg::Error {
-                        message: format!("{UNKNOWN_NODE_ERR} {node_id}: re-register to rejoin"),
-                    };
-                }
-                let mut tasks = Vec::new();
-                let mut acked: Vec<Arc<RunHandle>> = Vec::new();
-                // Deterministic delivery order across runs; each run's
-                // queue is drained under ITS OWN lock, so a pull for
-                // run A never contends with run B's result traffic.
-                for (rid, handle) in self.run_handles_sorted() {
-                    let mut run = handle.state.lock().unwrap();
-                    if let Some(q) = run.pending.get_mut(&node_id) {
-                        let first = tasks.len();
-                        tasks.extend(q.drain(..));
-                        for t in &tasks[first..] {
-                            self.journal(&WalRecord::TaskDelivered {
-                                run_id: rid,
-                                task_id: t.task_id,
-                                node_id,
-                            });
-                        }
-                    }
-                    // Pulling after a run finished is this node's
-                    // acknowledgment that no frame of that run is
-                    // still in flight to it (per-run drain).
-                    if known && !run.active && run.acked.insert(node_id) {
-                        acked.push(handle.clone());
-                    }
-                }
-                for handle in acked {
-                    self.signal_run(&handle);
-                }
-                FlowerMsg::TaskInsList {
-                    tasks,
-                    active: !self.retired.load(Ordering::Acquire),
-                }
-            }
+            FlowerMsg::PullTaskIns { node_id } => self.pull_tasks(node_id, true),
             FlowerMsg::PushTaskRes { res } => {
                 let mut res = res;
                 self.touch(res.node_id);
@@ -1115,6 +1068,66 @@ impl SuperLink {
             other => FlowerMsg::Error {
                 message: format!("unexpected client frame: {other:?}"),
             },
+        }
+    }
+
+    /// Drain every run's pending queue for `node_id` into one
+    /// `TaskInsList`. Shared by the poll path (`PullTaskIns`) and the
+    /// push-mode serving layer (`flower::serve`).
+    ///
+    /// `node_initiated` distinguishes a genuine client pull from a
+    /// server-side push sweep: only the former renews the node's
+    /// liveness lease and acknowledges finished-run drains — a pusher
+    /// sweeping on a dead node's behalf must neither keep its lease
+    /// alive (the reaper still has to fire) nor forge its drain ack.
+    pub(crate) fn pull_tasks(&self, node_id: u64, node_initiated: bool) -> FlowerMsg {
+        if node_initiated {
+            self.touch(node_id);
+        }
+        let known = self.nodes.read().unwrap().contains_key(&node_id);
+        if !known && !self.retired.load(Ordering::Acquire) {
+            // A reaped (or never-registered) node is polling a
+            // pool it is not part of: tell it so it can
+            // re-register and rejoin — otherwise a transient
+            // stall would shrink the fleet permanently. (Its old
+            // tasks were already settled — failed or redelivered
+            // — when the lease was reaped; rejoining starts
+            // fresh.)
+            return FlowerMsg::Error {
+                message: format!("{UNKNOWN_NODE_ERR} {node_id}: re-register to rejoin"),
+            };
+        }
+        let mut tasks = Vec::new();
+        let mut acked: Vec<Arc<RunHandle>> = Vec::new();
+        // Deterministic delivery order across runs; each run's
+        // queue is drained under ITS OWN lock, so a pull for
+        // run A never contends with run B's result traffic.
+        for (rid, handle) in self.run_handles_sorted() {
+            let mut run = handle.state.lock().unwrap();
+            if let Some(q) = run.pending.get_mut(&node_id) {
+                let first = tasks.len();
+                tasks.extend(q.drain(..));
+                for t in &tasks[first..] {
+                    self.journal(&WalRecord::TaskDelivered {
+                        run_id: rid,
+                        task_id: t.task_id,
+                        node_id,
+                    });
+                }
+            }
+            // Pulling after a run finished is this node's
+            // acknowledgment that no frame of that run is
+            // still in flight to it (per-run drain).
+            if node_initiated && known && !run.active && run.acked.insert(node_id) {
+                acked.push(handle.clone());
+            }
+        }
+        for handle in acked {
+            self.signal_run(&handle);
+        }
+        FlowerMsg::TaskInsList {
+            tasks,
+            active: !self.retired.load(Ordering::Acquire),
         }
     }
 
@@ -1219,6 +1232,12 @@ impl SuperLink {
         );
         run.task_version.insert(task_id, ins.model_version);
         run.pending.entry(node_id).or_default().push_back(ins);
+        drop(run);
+        // Wake the push-mode serving layer (a `flower::serve` pusher
+        // subscribed on the link seat) so dispatch is wire-bound, not
+        // poll-bound. Poll-mode fleets never park on this seat for
+        // task arrival, so the extra signal costs them nothing.
+        self.signal_link();
         task_id
     }
 

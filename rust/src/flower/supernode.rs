@@ -23,17 +23,56 @@
 //! every received TaskIns borrow the reply frame's buffer (zero copies).
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::flower::clientapp::{ClientApp, Context, MessageApp, Router};
-use crate::flower::message::{FlowerMsg, Message, TaskRes};
-use crate::transport::Endpoint;
+use crate::flower::message::{FlowerMsg, Message, TaskIns, TaskRes};
+use crate::transport::mux::{MuxConn, MuxStream};
+use crate::transport::{Endpoint, TransportError};
 use crate::util::bytes::Bytes;
 
 /// Unary request/response channel to the SuperLink.
 pub trait FlowerConnector: Send + Sync {
     fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>>;
+
+    /// Like [`FlowerConnector::request`] but the reply arrives with
+    /// shared ownership, so `FlowerMsg::decode_shared` keeps tensor
+    /// payloads zero-copy. The default wraps the owned reply (no extra
+    /// copy); transports that already hold a shared receive buffer
+    /// (mux streams) override it to hand out the buffer view itself.
+    fn request_shared(&self, frame: Vec<u8>) -> anyhow::Result<Bytes> {
+        Ok(Bytes::from_vec(self.request(frame)?))
+    }
+}
+
+/// Push-mode extension of [`FlowerConnector`]: alongside the unary rpc
+/// channel there is a server-push stream on which the SuperLink's
+/// serving layer delivers `TaskInsList` frames the moment tasks queue —
+/// the SuperNode blocks on [`PushConnector::next_push`] instead of
+/// polling `PullTaskIns` every few milliseconds.
+pub trait PushConnector: FlowerConnector {
+    /// Announce push-mode delivery for `node_id` on the task stream.
+    /// The serving layer replies (on the same stream) with the current
+    /// backlog, then keeps pushing as tasks arrive. Re-sent after each
+    /// re-registration.
+    fn subscribe(&self, node_id: u64) -> anyhow::Result<()>;
+
+    /// Block for the next server-pushed frame (shared buffer view).
+    fn next_push(&self, timeout: Duration) -> Result<Bytes, TransportError>;
+}
+
+/// Did any link of this error chain report a torn (mid-frame) peer
+/// disconnect? Torn connections mean in-flight data was lost — the
+/// SuperNode treats that as a missed lease renewal (re-register), never
+/// as an orderly shutdown.
+fn is_torn_error(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        matches!(
+            c.downcast_ref::<TransportError>(),
+            Some(TransportError::TornFrame)
+        )
+    })
 }
 
 /// Native connector: a raw endpoint straight to the SuperLink (Fig. 5a).
@@ -53,6 +92,58 @@ impl FlowerConnector for NativeConnector {
         // Strictly alternating request/response per connection.
         self.ep.send(frame)?;
         Ok(self.ep.recv_timeout(self.timeout)?)
+    }
+}
+
+/// Mux connector: ONE multiplexed connection to the SuperLink carrying
+/// two logical streams — a strictly-alternating unary rpc stream
+/// (CreateNode / PushTaskRes / heartbeat pulls / DeleteNode) and a task
+/// stream on which the serving layer PUSHES `TaskInsList` frames.
+/// Replies come back as shared views of the mux receive buffer, so the
+/// whole pull path stays zero-copy.
+pub struct MuxNodeConnector {
+    rpc: Mutex<Arc<MuxStream>>,
+    task: Mutex<Arc<MuxStream>>,
+    timeout: Duration,
+}
+
+impl MuxNodeConnector {
+    /// Open the rpc + task streams on an established mux connection.
+    pub fn new(conn: &Arc<MuxConn>, timeout: Duration) -> anyhow::Result<Self> {
+        let rpc = conn.open_stream()?;
+        let task = conn.open_stream()?;
+        Ok(Self {
+            rpc: Mutex::new(rpc),
+            task: Mutex::new(task),
+            timeout,
+        })
+    }
+}
+
+impl FlowerConnector for MuxNodeConnector {
+    fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+        Ok(self.request_shared(frame)?.as_slice().to_vec())
+    }
+
+    fn request_shared(&self, frame: Vec<u8>) -> anyhow::Result<Bytes> {
+        // The lock enforces strict request/response alternation even if
+        // a caller shares the connector across threads.
+        let rpc = self.rpc.lock().unwrap();
+        rpc.send(frame)?;
+        Ok(rpc.recv_shared(self.timeout)?)
+    }
+}
+
+impl PushConnector for MuxNodeConnector {
+    fn subscribe(&self, node_id: u64) -> anyhow::Result<()> {
+        let task = self.task.lock().unwrap();
+        task.send(FlowerMsg::Subscribe { node_id }.encode())?;
+        Ok(())
+    }
+
+    fn next_push(&self, timeout: Duration) -> Result<Bytes, TransportError> {
+        let task = self.task.lock().unwrap();
+        task.recv_shared(timeout)
     }
 }
 
@@ -77,6 +168,14 @@ pub struct SuperNodeConfig {
     /// state (each eviction is warn-logged): size it above the expected
     /// concurrent-run count.
     pub max_run_contexts: usize,
+    /// Push mode only: how long [`SuperNode::run_push`] blocks on the
+    /// task stream before sending one unary `PullTaskIns` heartbeat.
+    /// The heartbeat renews the node's liveness lease and provides the
+    /// drain acknowledgments finished runs wait on — it is a liveness
+    /// beacon, not a delivery path (tasks arrive pushed, wire-bound).
+    /// Must sit comfortably below [`LinkConfig::lease`]
+    /// (`crate::flower::superlink::LinkConfig::lease`).
+    pub push_heartbeat: Duration,
 }
 
 impl Default for SuperNodeConfig {
@@ -86,12 +185,16 @@ impl Default for SuperNodeConfig {
             connect_deadline: Duration::from_secs(30),
             requested_node_id: 0,
             max_run_contexts: 64,
+            push_heartbeat: Duration::from_millis(25),
         }
     }
 }
 
 pub struct SuperNode {
     connector: Box<dyn FlowerConnector>,
+    /// Present when the connector speaks push mode (see
+    /// [`SuperNode::run_push`]).
+    push: Option<Arc<dyn PushConnector>>,
     app: Arc<dyn MessageApp>,
     cfg: SuperNodeConfig,
     node_id: Option<u64>,
@@ -125,6 +228,7 @@ impl SuperNode {
     ) -> Self {
         Self {
             connector,
+            push: None,
             app,
             cfg,
             node_id: None,
@@ -133,10 +237,32 @@ impl SuperNode {
         }
     }
 
+    /// Push-mode constructor: the connector's rpc channel backs the
+    /// unary calls and its task stream backs [`SuperNode::run_push`].
+    pub fn with_push(
+        connector: Arc<dyn PushConnector>,
+        app: Arc<dyn MessageApp>,
+        cfg: SuperNodeConfig,
+    ) -> Self {
+        struct Unary(Arc<dyn PushConnector>);
+        impl FlowerConnector for Unary {
+            fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+                self.0.request(frame)
+            }
+            fn request_shared(&self, frame: Vec<u8>) -> anyhow::Result<Bytes> {
+                self.0.request_shared(frame)
+            }
+        }
+        let mut node = Self::with_app(Box::new(Unary(connector.clone())), app, cfg);
+        node.push = Some(connector);
+        node
+    }
+
     fn rpc(&self, msg: &FlowerMsg) -> anyhow::Result<FlowerMsg> {
-        let reply = self.connector.request(msg.encode())?;
-        // Zero-copy decode: tensor payloads borrow the reply buffer.
-        let decoded = FlowerMsg::decode_shared(Bytes::from_vec(reply))?;
+        let reply = self.connector.request_shared(msg.encode())?;
+        // Zero-copy decode: tensor payloads borrow the reply buffer —
+        // over mux, that is the shared receive buffer itself.
+        let decoded = FlowerMsg::decode_shared(reply)?;
         if let FlowerMsg::Error { message } = &decoded {
             anyhow::bail!("superlink error: {message}");
         }
@@ -191,6 +317,19 @@ impl SuperNode {
                     node_id = self.connect()?;
                     continue;
                 }
+                Err(e) if is_torn_error(&e) => {
+                    // A torn connection lost in-flight frames — a missed
+                    // lease renewal, NOT an orderly retirement.
+                    // Re-register (which also proves the link is still
+                    // reachable) instead of exiting as if drained.
+                    crate::telemetry::bump("supernode.torn_frames", 1);
+                    log::warn!(
+                        "supernode {node_id}: connection torn mid-frame — treating as a \
+                         missed lease renewal, re-registering"
+                    );
+                    node_id = self.connect()?;
+                    continue;
+                }
                 Err(e) => return Err(e),
             };
             let (tasks, active) = match reply {
@@ -198,22 +337,120 @@ impl SuperNode {
                 other => anyhow::bail!("unexpected reply to Pull: {other:?}"),
             };
             let got_tasks = !tasks.is_empty();
-            for ins in tasks {
-                let res = self.execute(node_id, ins);
-                match self.rpc(&FlowerMsg::PushTaskRes { res })? {
-                    FlowerMsg::PushAccepted => {}
-                    other => anyhow::bail!("unexpected reply to Push: {other:?}"),
-                }
-                executed += 1;
-            }
-            if !active {
-                let _ = self.rpc(&FlowerMsg::DeleteNode { node_id });
+            if self.serve_list(node_id, tasks, active, &mut executed)? {
                 return Ok(executed);
             }
             if !got_tasks {
                 std::thread::sleep(self.cfg.poll);
             }
         }
+    }
+
+    /// Push-mode main loop: block on the connector's task stream and
+    /// execute whatever the serving layer pushes — task dispatch is
+    /// wire-bound, not poll-bound. A unary `PullTaskIns` heartbeat every
+    /// [`SuperNodeConfig::push_heartbeat`] renews the liveness lease and
+    /// acknowledges finished-run drains. Returns the number of tasks
+    /// executed, like [`SuperNode::run`].
+    pub fn run_push(&mut self) -> anyhow::Result<u64> {
+        let push = self
+            .push
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("run_push needs a PushConnector (see with_push)"))?;
+        let mut node_id = match self.node_id {
+            Some(id) => id,
+            None => self.connect()?,
+        };
+        push.subscribe(node_id)?;
+        let mut executed = 0u64;
+        loop {
+            let frame = match push.next_push(self.cfg.push_heartbeat) {
+                Ok(frame) => frame,
+                Err(TransportError::Timeout) => {
+                    // Heartbeat: lease renewal + drain acks (and a
+                    // belt-and-braces sweep for anything pushed between
+                    // subscribe races).
+                    match self.rpc(&FlowerMsg::PullTaskIns { node_id }) {
+                        Ok(FlowerMsg::TaskInsList { tasks, active }) => {
+                            if self.serve_list(node_id, tasks, active, &mut executed)? {
+                                return Ok(executed);
+                            }
+                        }
+                        Ok(other) => anyhow::bail!("unexpected reply to Pull: {other:?}"),
+                        Err(e)
+                            if e.to_string()
+                                .contains(crate::flower::superlink::UNKNOWN_NODE_ERR) =>
+                        {
+                            log::warn!(
+                                "supernode {node_id}: lease expired on the superlink — \
+                                 re-registering and re-subscribing"
+                            );
+                            node_id = self.connect()?;
+                            push.subscribe(node_id)?;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                    continue;
+                }
+                Err(TransportError::TornFrame) => {
+                    // Same lease-miss semantics as the poll loop: lost
+                    // in-flight frames, not an orderly shutdown.
+                    crate::telemetry::bump("supernode.torn_frames", 1);
+                    log::warn!(
+                        "supernode {node_id}: task stream torn mid-frame — treating as a \
+                         missed lease renewal, re-registering and re-subscribing"
+                    );
+                    node_id = self.connect()?;
+                    push.subscribe(node_id)?;
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            match FlowerMsg::decode_shared(frame)? {
+                FlowerMsg::TaskInsList { tasks, active } => {
+                    if self.serve_list(node_id, tasks, active, &mut executed)? {
+                        return Ok(executed);
+                    }
+                }
+                FlowerMsg::Error { message }
+                    if message.contains(crate::flower::superlink::UNKNOWN_NODE_ERR) =>
+                {
+                    log::warn!(
+                        "supernode {node_id}: lease expired on the superlink — \
+                         re-registering and re-subscribing"
+                    );
+                    node_id = self.connect()?;
+                    push.subscribe(node_id)?;
+                }
+                FlowerMsg::Error { message } => anyhow::bail!("superlink error: {message}"),
+                other => anyhow::bail!("unexpected pushed frame: {other:?}"),
+            }
+        }
+    }
+
+    /// Execute a delivered task batch and push the results. Returns
+    /// `true` when the link reported no run active — the node has
+    /// deregistered and the serve loop should exit.
+    fn serve_list(
+        &mut self,
+        node_id: u64,
+        tasks: Vec<TaskIns>,
+        active: bool,
+        executed: &mut u64,
+    ) -> anyhow::Result<bool> {
+        for ins in tasks {
+            let res = self.execute(node_id, ins);
+            match self.rpc(&FlowerMsg::PushTaskRes { res })? {
+                FlowerMsg::PushAccepted => {}
+                other => anyhow::bail!("unexpected reply to Push: {other:?}"),
+            }
+            *executed += 1;
+        }
+        if !active {
+            let _ = self.rpc(&FlowerMsg::DeleteNode { node_id });
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     /// Execute one instruction through the message app with the run's

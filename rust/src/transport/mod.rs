@@ -15,8 +15,10 @@
 
 pub mod fault;
 pub mod inproc;
+pub mod mux;
 pub mod tcp;
 
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 pub type Frame = Vec<u8>;
@@ -31,6 +33,12 @@ pub enum TransportError {
     Closed,
     Timeout,
     FrameTooLarge(usize),
+    /// The peer disconnected MID-FRAME: bytes of a frame were read but
+    /// the rest never arrived. Unlike [`TransportError::Closed`] (a
+    /// clean shutdown at a frame boundary) this means in-flight data
+    /// was lost — a SuperNode treats it like a missed lease renewal
+    /// (re-register, resubscribe), never like an orderly retirement.
+    TornFrame,
     Io(String),
 }
 
@@ -41,6 +49,9 @@ impl std::fmt::Display for TransportError {
             TransportError::Timeout => write!(f, "transport: receive timed out"),
             TransportError::FrameTooLarge(n) => {
                 write!(f, "transport: frame of {n} bytes exceeds MAX_FRAME")
+            }
+            TransportError::TornFrame => {
+                write!(f, "transport: peer disconnected mid-frame (partial frame lost)")
             }
             TransportError::Io(e) => write!(f, "transport: io: {e}"),
         }
@@ -71,6 +82,216 @@ pub trait Endpoint: Send + Sync {
 }
 
 pub type BoxedEndpoint = Box<dyn Endpoint>;
+
+// ---------------------------------------------------------------------------
+// Stream-open abstraction
+// ---------------------------------------------------------------------------
+
+/// Client-side stream factory: each [`Connector::open`] yields a fresh
+/// logical stream to the peer. Over [`mux`] every stream shares ONE
+/// underlying connection (the gRPC model: channels carry many RPC
+/// streams); the compat shims below adapt the legacy
+/// one-connection-per-conversation transports (inproc pairs, plain TCP
+/// dials) to the same surface so callers never care which they got.
+pub trait Connector: Send + Sync {
+    /// Open a fresh logical stream to the peer.
+    fn open(&self) -> Result<Arc<dyn Endpoint>, TransportError>;
+    /// Human-readable peer label for logs.
+    fn peer(&self) -> String;
+}
+
+/// Server-side stream acceptor: the next incoming logical stream,
+/// regardless of which underlying connection carried it.
+pub trait Listener: Send + Sync {
+    fn accept(&self, timeout: Duration) -> Result<Arc<dyn Endpoint>, TransportError>;
+    /// Stop accepting; blocked and future accepts fail with `Closed`.
+    fn close(&self);
+}
+
+/// Compat shim: a connected in-process [`Connector`]/[`Listener`] pair.
+/// Every `open` creates a fresh [`inproc::pair`] and hands the far end
+/// to the listener — the old one-endpoint-per-conversation wiring,
+/// unchanged, behind the stream-open surface.
+pub fn inproc_stream_pair(label: &str) -> (Arc<dyn Connector>, Arc<dyn Listener>) {
+    let shared = Arc::new(InprocStreamQueue {
+        q: Mutex::new(Some(std::collections::VecDeque::new())),
+        cv: Condvar::new(),
+    });
+    let connector = Arc::new(InprocConnector {
+        label: label.to_string(),
+        queue: shared.clone(),
+        opened: std::sync::atomic::AtomicU64::new(0),
+    });
+    (connector, shared)
+}
+
+struct InprocStreamQueue {
+    /// `None` once closed.
+    q: Mutex<Option<std::collections::VecDeque<Arc<dyn Endpoint>>>>,
+    cv: Condvar,
+}
+
+struct InprocConnector {
+    label: String,
+    queue: Arc<InprocStreamQueue>,
+    opened: std::sync::atomic::AtomicU64,
+}
+
+impl Connector for InprocConnector {
+    fn open(&self) -> Result<Arc<dyn Endpoint>, TransportError> {
+        let n = self
+            .opened
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (near, far) = inproc::pair(&format!("{}:s{n}", self.label), &self.label);
+        let mut q = self.queue.q.lock().unwrap();
+        match q.as_mut() {
+            Some(q) => q.push_back(Arc::new(far)),
+            None => return Err(TransportError::Closed),
+        }
+        self.queue.cv.notify_all();
+        Ok(Arc::new(near))
+    }
+
+    fn peer(&self) -> String {
+        self.label.clone()
+    }
+}
+
+impl Listener for InprocStreamQueue {
+    fn accept(&self, timeout: Duration) -> Result<Arc<dyn Endpoint>, TransportError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.q.lock().unwrap();
+        loop {
+            match q.as_mut() {
+                None => return Err(TransportError::Closed),
+                Some(inner) => {
+                    if let Some(ep) = inner.pop_front() {
+                        return Ok(ep);
+                    }
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            let (guard, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    fn close(&self) {
+        *self.q.lock().unwrap() = None;
+        self.cv.notify_all();
+    }
+}
+
+/// Compat shim: a [`Connector`] that dials a fresh TCP connection per
+/// stream (the legacy one-connection-per-conversation mode). Pair with
+/// [`TcpStreamListener`] on the serving side.
+pub struct TcpConnector {
+    pub addr: String,
+    /// How long each dial may retry before failing.
+    pub dial_deadline: Duration,
+}
+
+impl Connector for TcpConnector {
+    fn open(&self) -> Result<Arc<dyn Endpoint>, TransportError> {
+        Ok(Arc::new(tcp::connect_retry(&self.addr, self.dial_deadline)?))
+    }
+
+    fn peer(&self) -> String {
+        self.addr.clone()
+    }
+}
+
+/// Compat shim: [`Listener`] over a [`tcp::TcpTransportListener`] —
+/// each accepted connection IS one stream.
+pub struct TcpStreamListener {
+    inner: tcp::TcpTransportListener,
+    closed: std::sync::atomic::AtomicBool,
+}
+
+impl TcpStreamListener {
+    pub fn new(inner: tcp::TcpTransportListener) -> TcpStreamListener {
+        TcpStreamListener {
+            inner,
+            closed: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+}
+
+impl Listener for TcpStreamListener {
+    fn accept(&self, timeout: Duration) -> Result<Arc<dyn Endpoint>, TransportError> {
+        if self.closed.load(std::sync::atomic::Ordering::Acquire) {
+            return Err(TransportError::Closed);
+        }
+        Ok(Arc::new(self.inner.accept_timeout(timeout)?))
+    }
+
+    fn close(&self) {
+        self.closed
+            .store(true, std::sync::atomic::Ordering::Release);
+    }
+}
+
+/// Compat shim: decorate every stream a [`Connector`] opens with a
+/// [`fault::FaultEndpoint`] — stream `n` gets `seed + n`, so sweeps
+/// stay reproducible per stream.
+pub struct FaultConnector<C: Connector> {
+    inner: C,
+    cfg: fault::FaultConfig,
+    opened: std::sync::atomic::AtomicU64,
+}
+
+impl<C: Connector> FaultConnector<C> {
+    pub fn new(inner: C, cfg: fault::FaultConfig) -> FaultConnector<C> {
+        FaultConnector {
+            inner,
+            cfg,
+            opened: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+}
+
+impl<C: Connector> Connector for FaultConnector<C> {
+    fn open(&self) -> Result<Arc<dyn Endpoint>, TransportError> {
+        let n = self
+            .opened
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut cfg = self.cfg.clone();
+        cfg.seed = cfg.seed.wrapping_add(n);
+        Ok(Arc::new(fault::FaultEndpoint::new(
+            ArcEndpoint(self.inner.open()?),
+            cfg,
+        )))
+    }
+
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
+/// `Arc<dyn Endpoint>` as an [`Endpoint`] — lets generic decorators
+/// (e.g. [`fault::FaultEndpoint<E>`]) wrap dynamically-opened streams.
+pub struct ArcEndpoint(pub Arc<dyn Endpoint>);
+
+impl Endpoint for ArcEndpoint {
+    fn send(&self, frame: Frame) -> Result<(), TransportError> {
+        self.0.send(frame)
+    }
+    fn recv_timeout(&self, timeout: Duration) -> Result<Frame, TransportError> {
+        self.0.recv_timeout(timeout)
+    }
+    fn try_recv(&self) -> Result<Option<Frame>, TransportError> {
+        self.0.try_recv()
+    }
+    fn peer(&self) -> String {
+        self.0.peer()
+    }
+    fn close(&self) {
+        self.0.close()
+    }
+}
 
 #[cfg(test)]
 pub(crate) mod test_support {

@@ -1,0 +1,980 @@
+//! Multiplexed framed transport — the gRPC-alike. ONE underlying
+//! connection per peer carries many logical streams, exactly like an
+//! HTTP/2 channel carries many RPCs (see DESIGN.md §Substitutions for
+//! what this stands in for vs real gRPC/tonic).
+//!
+//! # Frame grammar
+//!
+//! Every frame moved over the underlying [`Endpoint`] is a **batch** of
+//! mux frames, each:
+//!
+//! ```text
+//! [kind: u8] [stream_id: u32 LE] [len: u32 LE] [payload: len bytes]
+//! ```
+//!
+//! Kinds: `HELLO` (0, connection handshake: magic + version, stream 0),
+//! `OPEN` (1, open a stream), `DATA` (2, payload on a stream), `CLOSE`
+//! (3, half-close a stream), `GOAWAY` (4, orderly connection shutdown).
+//!
+//! # Stream-id allocation
+//!
+//! The INITIATOR allocates odd ids starting at 1, the ACCEPTOR even ids
+//! starting at 2 (the gRPC/HTTP-2 convention) — both sides may open
+//! streams concurrently with no id collision and no coordination.
+//! Stream 0 is the connection-control stream (HELLO/GOAWAY only).
+//!
+//! # Coalescing
+//!
+//! Senders append frames to a shared queue; whoever wins the flush lock
+//! drains EVERYTHING queued into one writev-style batch per underlying
+//! send. While one thread is inside the underlying `send`, concurrent
+//! senders keep queueing — the next flush picks them all up in a single
+//! syscall-equivalent. Batches are capped at [`MAX_BATCH`] so one big
+//! tensor frame does not glue unrelated control frames into a
+//! multi-megabyte write.
+//!
+//! # Zero-copy receive
+//!
+//! The receive pump wraps each incoming batch in a shared [`Bytes`]
+//! buffer and routes every DATA payload as an O(1) [`Bytes::slice`]
+//! view — never a copy. [`MuxStream::recv_shared`] hands that view to
+//! the caller, so `FlowerMsg::decode_shared` decodes tensors straight
+//! out of the receive buffer, concurrently across streams. (The plain
+//! [`Endpoint::recv_timeout`] impl copies into a `Vec` to satisfy the
+//! legacy contract — hot paths use `recv_shared`.)
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{Connector, Endpoint, Frame, Listener, TransportError, MAX_FRAME};
+use crate::util::bytes::Bytes;
+
+/// `b"MUXF"` — first HELLO field; catches a non-mux peer instantly.
+pub const MUX_MAGIC: u32 = u32::from_le_bytes(*b"MUXF");
+/// Protocol version carried in HELLO; a mismatch fails the handshake.
+pub const MUX_VERSION: u32 = 1;
+
+const K_HELLO: u8 = 0;
+const K_OPEN: u8 = 1;
+const K_DATA: u8 = 2;
+const K_CLOSE: u8 = 3;
+const K_GOAWAY: u8 = 4;
+
+/// Mux frame header bytes: kind + stream id + payload length.
+pub const MUX_HDR: usize = 9;
+
+/// Soft cap on one coalesced batch. A single larger frame still goes
+/// out (alone); the cap only stops further frames from piling on.
+pub const MAX_BATCH: usize = 256 * 1024;
+
+/// How the serving side consumes incoming DATA frames when it runs a
+/// worker pool instead of per-stream receivers: called by the receive
+/// pump with the stream and the zero-copy payload view.
+pub type FrameSink = Arc<dyn Fn(Arc<MuxStream>, Bytes) + Send + Sync>;
+
+struct OutFrame {
+    kind: u8,
+    stream_id: u32,
+    payload: Vec<u8>,
+}
+
+/// Per-stream receive state. DATA payloads land here as shared views of
+/// the batch buffer (unless the connection runs a [`FrameSink`]).
+struct StreamState {
+    inbox: Mutex<VecDeque<Bytes>>,
+    cv: Condvar,
+    peer_closed: AtomicBool,
+    local_closed: AtomicBool,
+}
+
+impl StreamState {
+    fn new() -> Arc<StreamState> {
+        Arc::new(StreamState {
+            inbox: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            peer_closed: AtomicBool::new(false),
+            local_closed: AtomicBool::new(false),
+        })
+    }
+}
+
+/// Handshake slot: `None` until the peer's HELLO arrives (or fails).
+struct Handshake {
+    state: Mutex<Option<Result<(), String>>>,
+    cv: Condvar,
+}
+
+/// One multiplexed connection over any underlying [`Endpoint`]
+/// (inproc, tcp, fault — they compose freely). Create with
+/// [`MuxConn::initiate`] / [`MuxConn::accept`]; open streams with
+/// [`MuxConn::open_stream`]; receive peer-opened streams with
+/// [`MuxConn::accept_stream`] (or a [`FrameSink`] on serving conns).
+pub struct MuxConn {
+    underlying: Arc<dyn Endpoint>,
+    label: String,
+    /// Next stream id this side will allocate (odd = initiator,
+    /// even = acceptor); bumped by 2 per open.
+    next_stream: AtomicU32,
+    streams: Mutex<HashMap<u32, Arc<StreamState>>>,
+    accept_q: Mutex<VecDeque<(u32, Arc<StreamState>)>>,
+    accept_cv: Condvar,
+    outq: Mutex<VecDeque<OutFrame>>,
+    /// Combining-buffer flush serializer: holders drain the WHOLE queue
+    /// per underlying send, so frames queued while a send is in flight
+    /// coalesce into the next batch.
+    flush_lock: Mutex<()>,
+    sink: Option<FrameSink>,
+    dead: AtomicBool,
+    torn: AtomicBool,
+    hs: Handshake,
+    counters: crate::telemetry::Counters,
+}
+
+impl MuxConn {
+    /// Dial side: allocates ODD stream ids. Sends HELLO immediately and
+    /// validates the peer's HELLO asynchronously (HTTP/2-preface style —
+    /// streams may open before the handshake round-trips; frames are
+    /// ordered, so the peer always sees HELLO first). Use
+    /// [`MuxConn::await_handshake`] to block on version agreement.
+    pub fn initiate(underlying: Arc<dyn Endpoint>) -> Arc<MuxConn> {
+        Self::establish(underlying, true, None, MUX_VERSION)
+    }
+
+    /// Accept side: allocates EVEN stream ids. An optional [`FrameSink`]
+    /// redirects every incoming DATA frame to a shared work queue (the
+    /// serving front end) instead of per-stream inboxes.
+    pub fn accept(underlying: Arc<dyn Endpoint>, sink: Option<FrameSink>) -> Arc<MuxConn> {
+        Self::establish(underlying, false, sink, MUX_VERSION)
+    }
+
+    #[cfg(test)]
+    pub(crate) fn initiate_version(underlying: Arc<dyn Endpoint>, version: u32) -> Arc<MuxConn> {
+        Self::establish(underlying, true, None, version)
+    }
+
+    fn establish(
+        underlying: Arc<dyn Endpoint>,
+        initiator: bool,
+        sink: Option<FrameSink>,
+        version: u32,
+    ) -> Arc<MuxConn> {
+        let label = format!("mux:{}", underlying.peer());
+        let conn = Arc::new(MuxConn {
+            underlying,
+            counters: crate::telemetry::Counters::labelled(&label),
+            label,
+            next_stream: AtomicU32::new(if initiator { 1 } else { 2 }),
+            streams: Mutex::new(HashMap::new()),
+            accept_q: Mutex::new(VecDeque::new()),
+            accept_cv: Condvar::new(),
+            outq: Mutex::new(VecDeque::new()),
+            flush_lock: Mutex::new(()),
+            sink,
+            dead: AtomicBool::new(false),
+            torn: AtomicBool::new(false),
+            hs: Handshake {
+                state: Mutex::new(None),
+                cv: Condvar::new(),
+            },
+        });
+        let mut hello = Vec::with_capacity(8);
+        hello.extend_from_slice(&MUX_MAGIC.to_le_bytes());
+        hello.extend_from_slice(&version.to_le_bytes());
+        let _ = conn.send_frame(K_HELLO, 0, hello);
+        let pump = conn.clone();
+        std::thread::Builder::new()
+            .name(format!("mux-pump:{}", conn.label))
+            .spawn(move || pump.pump_loop())
+            .expect("spawn mux pump");
+        conn
+    }
+
+    /// Peer label of the underlying connection.
+    pub fn peer(&self) -> String {
+        self.label.clone()
+    }
+
+    /// Open a fresh logical stream (one OPEN control frame on the wire).
+    pub fn open_stream(self: &Arc<Self>) -> Result<Arc<MuxStream>, TransportError> {
+        if self.dead.load(Ordering::Acquire) {
+            return Err(self.dead_error());
+        }
+        let id = self.next_stream.fetch_add(2, Ordering::Relaxed);
+        let state = StreamState::new();
+        self.streams.lock().unwrap().insert(id, state.clone());
+        self.send_frame(K_OPEN, id, Vec::new())?;
+        self.counters.bump("mux.streams_opened", 1);
+        Ok(Arc::new(MuxStream {
+            conn: self.clone(),
+            id,
+            state,
+        }))
+    }
+
+    /// Next peer-opened stream (ignored on connections with a sink —
+    /// the sink delivers `(stream, frame)` pairs directly).
+    pub fn accept_stream(
+        self: &Arc<Self>,
+        timeout: Duration,
+    ) -> Result<Arc<MuxStream>, TransportError> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.accept_q.lock().unwrap();
+        loop {
+            if let Some((id, state)) = q.pop_front() {
+                return Ok(Arc::new(MuxStream {
+                    conn: self.clone(),
+                    id,
+                    state,
+                }));
+            }
+            if self.dead.load(Ordering::Acquire) {
+                return Err(self.dead_error());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            let (guard, _) = self
+                .accept_cv
+                .wait_timeout(q, (deadline - now).min(Duration::from_millis(50)))
+                .unwrap();
+            q = guard;
+        }
+    }
+
+    /// Block until the peer's HELLO arrived and versions agree.
+    pub fn await_handshake(&self, timeout: Duration) -> Result<(), TransportError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.hs.state.lock().unwrap();
+        loop {
+            match &*st {
+                Some(Ok(())) => return Ok(()),
+                Some(Err(e)) => return Err(TransportError::Io(e.clone())),
+                None => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            let (guard, _) = self.hs.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Orderly shutdown: GOAWAY to the peer, then close the underlying
+    /// connection. Every stream on both sides drains then reports
+    /// `Closed`.
+    pub fn close(&self) {
+        if self.dead.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let _ = self.flush_one(vec![OutFrame {
+            kind: K_GOAWAY,
+            stream_id: 0,
+            payload: Vec::new(),
+        }]);
+        self.underlying.close();
+        self.wake_all();
+    }
+
+    fn dead_error(&self) -> TransportError {
+        if self.torn.load(Ordering::Acquire) {
+            TransportError::TornFrame
+        } else {
+            TransportError::Closed
+        }
+    }
+
+    /// Wake every parked waiter (streams, acceptors, handshakers) so
+    /// they observe the connection's death.
+    fn wake_all(&self) {
+        for state in self.streams.lock().unwrap().values() {
+            let _ = state.inbox.lock().unwrap();
+            state.cv.notify_all();
+        }
+        let _ = self.accept_q.lock().unwrap();
+        self.accept_cv.notify_all();
+        self.hs.cv.notify_all();
+    }
+
+    fn tear(&self, why: &str) {
+        log::warn!("{}: torn — {why}", self.label);
+        self.torn.store(true, Ordering::Release);
+        self.dead.store(true, Ordering::Release);
+        {
+            let mut st = self.hs.state.lock().unwrap();
+            if st.is_none() {
+                *st = Some(Err(format!("connection torn: {why}")));
+            }
+        }
+        self.wake_all();
+    }
+
+    fn mark_closed(&self) {
+        self.dead.store(true, Ordering::Release);
+        self.wake_all();
+    }
+
+    // -- send path ---------------------------------------------------------
+
+    fn send_frame(&self, kind: u8, stream_id: u32, payload: Vec<u8>) -> Result<(), TransportError> {
+        if payload.len() > MAX_FRAME - MUX_HDR {
+            return Err(TransportError::FrameTooLarge(payload.len()));
+        }
+        if self.dead.load(Ordering::Acquire) {
+            return Err(self.dead_error());
+        }
+        self.outq.lock().unwrap().push_back(OutFrame {
+            kind,
+            stream_id,
+            payload,
+        });
+        // Combining flush: block for the lock; whoever holds it drains
+        // the whole queue, so our frame is either flushed by the current
+        // holder or by us right after.
+        let _guard = self.flush_lock.lock().unwrap();
+        loop {
+            let batch = self.take_batch();
+            if batch.is_empty() {
+                return Ok(());
+            }
+            self.flush_one(batch)?;
+        }
+    }
+
+    /// Pop queued frames up to the batch cap (always at least one).
+    fn take_batch(&self) -> Vec<OutFrame> {
+        let mut q = self.outq.lock().unwrap();
+        let mut batch = Vec::new();
+        let mut size = 0usize;
+        while let Some(f) = q.front() {
+            let fsize = MUX_HDR + f.payload.len();
+            if !batch.is_empty() && size + fsize > MAX_BATCH {
+                break;
+            }
+            size += fsize;
+            batch.push(q.pop_front().unwrap());
+        }
+        batch
+    }
+
+    fn flush_one(&self, batch: Vec<OutFrame>) -> Result<(), TransportError> {
+        let buf = encode_batch(&batch);
+        self.counters.bump("mux.batches", 1);
+        self.counters.bump("mux.frames_sent", batch.len() as i64);
+        if batch.len() > 1 {
+            self.counters.bump("mux.frames_coalesced", batch.len() as i64);
+        }
+        self.counters.bump("mux.bytes_on_wire", buf.len() as i64);
+        match self.underlying.send(buf) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                match &e {
+                    TransportError::TornFrame => self.tear("underlying send failed mid-frame"),
+                    _ => self.mark_closed(),
+                }
+                Err(e)
+            }
+        }
+    }
+
+    // -- receive path ------------------------------------------------------
+
+    fn pump_loop(self: Arc<Self>) {
+        let mut saw_hello = false;
+        loop {
+            if self.dead.load(Ordering::Acquire) {
+                return;
+            }
+            match self.underlying.recv_timeout(Duration::from_millis(100)) {
+                Ok(buf) => {
+                    if !self.on_batch(Bytes::from_vec(buf), &mut saw_hello) {
+                        return;
+                    }
+                }
+                Err(TransportError::Timeout) => continue,
+                Err(TransportError::TornFrame) => {
+                    self.tear("underlying peer disconnected mid-frame");
+                    return;
+                }
+                Err(_) => {
+                    self.mark_closed();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Parse one underlying batch and route every mux frame. Returns
+    /// `false` when the connection is finished (GOAWAY or torn).
+    fn on_batch(&self, batch: Bytes, saw_hello: &mut bool) -> bool {
+        let buf = batch.as_slice();
+        let mut pos = 0usize;
+        while pos < buf.len() {
+            if buf.len() - pos < MUX_HDR {
+                self.tear("truncated mux frame header");
+                return false;
+            }
+            let kind = buf[pos];
+            let stream_id = u32::from_le_bytes(buf[pos + 1..pos + 5].try_into().unwrap());
+            let len = u32::from_le_bytes(buf[pos + 5..pos + 9].try_into().unwrap()) as usize;
+            pos += MUX_HDR;
+            if buf.len() - pos < len {
+                self.tear("truncated mux frame payload");
+                return false;
+            }
+            if !*saw_hello && kind != K_HELLO {
+                self.tear("peer is not speaking mux (no HELLO)");
+                return false;
+            }
+            // O(1) shared view of the batch buffer — the zero-copy hop.
+            let payload = batch.slice(pos, len);
+            pos += len;
+            match kind {
+                K_HELLO => {
+                    *saw_hello = true;
+                    if !self.on_hello(payload) {
+                        return false;
+                    }
+                }
+                K_OPEN => self.on_open(stream_id),
+                K_DATA => self.on_data(stream_id, payload),
+                K_CLOSE => self.on_close(stream_id),
+                K_GOAWAY => {
+                    self.mark_closed();
+                    return false;
+                }
+                other => {
+                    self.tear(&format!("unknown mux frame kind {other}"));
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    fn on_hello(&self, payload: Bytes) -> bool {
+        let p = payload.as_slice();
+        let ok = p.len() == 8
+            && u32::from_le_bytes(p[0..4].try_into().unwrap()) == MUX_MAGIC
+            && u32::from_le_bytes(p[4..8].try_into().unwrap()) == MUX_VERSION;
+        let mut st = self.hs.state.lock().unwrap();
+        if ok {
+            *st = Some(Ok(()));
+            drop(st);
+            self.hs.cv.notify_all();
+            true
+        } else {
+            *st = Some(Err(format!(
+                "mux handshake failed: peer HELLO {:?} (want magic {MUX_MAGIC:#x} version {MUX_VERSION})",
+                p
+            )));
+            drop(st);
+            self.hs.cv.notify_all();
+            self.dead.store(true, Ordering::Release);
+            self.wake_all();
+            false
+        }
+    }
+
+    fn on_open(&self, stream_id: u32) {
+        let state = StreamState::new();
+        self.streams
+            .lock()
+            .unwrap()
+            .insert(stream_id, state.clone());
+        self.counters.bump("mux.streams_opened", 1);
+        if self.sink.is_none() {
+            self.accept_q.lock().unwrap().push_back((stream_id, state));
+            self.accept_cv.notify_all();
+        }
+    }
+
+    fn on_data(self: &Arc<Self>, stream_id: u32, payload: Bytes) {
+        let state = match self.streams.lock().unwrap().get(&stream_id) {
+            Some(s) => s.clone(),
+            None => {
+                // Stream already closed locally — late frame, drop it.
+                self.counters.bump("mux.orphan_frames", 1);
+                return;
+            }
+        };
+        self.counters.bump("mux.decode_in_place", 1);
+        if let Some(sink) = &self.sink {
+            let stream = Arc::new(MuxStream {
+                conn: self.clone(),
+                id: stream_id,
+                state,
+            });
+            sink(stream, payload);
+            return;
+        }
+        state.inbox.lock().unwrap().push_back(payload);
+        state.cv.notify_all();
+    }
+
+    fn on_close(&self, stream_id: u32) {
+        if let Some(state) = self.streams.lock().unwrap().remove(&stream_id) {
+            state.peer_closed.store(true, Ordering::Release);
+            let _ = state.inbox.lock().unwrap();
+            state.cv.notify_all();
+        }
+    }
+}
+
+fn encode_batch(batch: &[OutFrame]) -> Vec<u8> {
+    let total: usize = batch.iter().map(|f| MUX_HDR + f.payload.len()).sum();
+    let mut buf = Vec::with_capacity(total);
+    for f in batch {
+        buf.push(f.kind);
+        buf.extend_from_slice(&f.stream_id.to_le_bytes());
+        buf.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&f.payload);
+    }
+    buf
+}
+
+/// One logical stream of a [`MuxConn`]. Implements [`Endpoint`], so
+/// everything written against the endpoint contract (connectors, fault
+/// decorators, the contract test suite) runs over a mux stream
+/// unchanged. Hot paths use [`MuxStream::recv_shared`] for the
+/// zero-copy view.
+pub struct MuxStream {
+    conn: Arc<MuxConn>,
+    id: u32,
+    state: Arc<StreamState>,
+}
+
+impl MuxStream {
+    pub fn stream_id(&self) -> u32 {
+        self.id
+    }
+
+    /// The owning connection (e.g. to open sibling streams).
+    pub fn conn(&self) -> &Arc<MuxConn> {
+        &self.conn
+    }
+
+    /// Receive the next frame as a shared view of the batch buffer it
+    /// arrived in — zero bytes copied. Decoding with
+    /// `FlowerMsg::decode_shared` keeps tensors borrowing that buffer.
+    pub fn recv_shared(&self, timeout: Duration) -> Result<Bytes, TransportError> {
+        let deadline = Instant::now() + timeout;
+        let mut inbox = self.state.inbox.lock().unwrap();
+        loop {
+            if let Some(b) = inbox.pop_front() {
+                return Ok(b);
+            }
+            if self.state.peer_closed.load(Ordering::Acquire)
+                || self.state.local_closed.load(Ordering::Acquire)
+            {
+                return Err(TransportError::Closed);
+            }
+            if self.conn.dead.load(Ordering::Acquire) {
+                return Err(self.conn.dead_error());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            let (guard, _) = self
+                .state
+                .cv
+                .wait_timeout(inbox, (deadline - now).min(Duration::from_millis(50)))
+                .unwrap();
+            inbox = guard;
+        }
+    }
+
+    /// Non-blocking [`MuxStream::recv_shared`].
+    pub fn try_recv_shared(&self) -> Result<Option<Bytes>, TransportError> {
+        let mut inbox = self.state.inbox.lock().unwrap();
+        if let Some(b) = inbox.pop_front() {
+            return Ok(Some(b));
+        }
+        if self.state.peer_closed.load(Ordering::Acquire)
+            || self.state.local_closed.load(Ordering::Acquire)
+        {
+            return Err(TransportError::Closed);
+        }
+        if self.conn.dead.load(Ordering::Acquire) {
+            return Err(self.conn.dead_error());
+        }
+        Ok(None)
+    }
+}
+
+impl Endpoint for MuxStream {
+    fn send(&self, frame: Frame) -> Result<(), TransportError> {
+        if self.state.local_closed.load(Ordering::Acquire) {
+            return Err(TransportError::Closed);
+        }
+        self.conn.send_frame(K_DATA, self.id, frame)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Frame, TransportError> {
+        // Legacy owned-Vec contract: copy out of the shared batch view.
+        // Zero-copy consumers call `recv_shared` instead.
+        Ok(self.recv_shared(timeout)?.as_slice().to_vec())
+    }
+
+    fn try_recv(&self) -> Result<Option<Frame>, TransportError> {
+        Ok(self.try_recv_shared()?.map(|b| b.as_slice().to_vec()))
+    }
+
+    fn peer(&self) -> String {
+        format!("{}/s{}", self.conn.label, self.id)
+    }
+
+    fn close(&self) {
+        if self.state.local_closed.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.conn.streams.lock().unwrap().remove(&self.id);
+        let _ = self.conn.send_frame(K_CLOSE, self.id, Vec::new());
+    }
+}
+
+/// [`Connector`] over one mux connection: every `open` is a stream on
+/// the SAME underlying connection.
+pub struct MuxConnector {
+    conn: Arc<MuxConn>,
+}
+
+impl MuxConnector {
+    pub fn new(conn: Arc<MuxConn>) -> MuxConnector {
+        MuxConnector { conn }
+    }
+}
+
+impl Connector for MuxConnector {
+    fn open(&self) -> Result<Arc<dyn Endpoint>, TransportError> {
+        Ok(self.conn.open_stream()? as Arc<dyn Endpoint>)
+    }
+
+    fn peer(&self) -> String {
+        self.conn.peer()
+    }
+}
+
+/// [`Listener`] over one acceptor-side mux connection: each accept is
+/// the next peer-opened stream. (The multi-connection serving front end
+/// lives in `flower::serve` and uses a [`FrameSink`] instead.)
+pub struct MuxStreamListener {
+    conn: Arc<MuxConn>,
+}
+
+impl MuxStreamListener {
+    pub fn new(conn: Arc<MuxConn>) -> MuxStreamListener {
+        MuxStreamListener { conn }
+    }
+}
+
+impl Listener for MuxStreamListener {
+    fn accept(&self, timeout: Duration) -> Result<Arc<dyn Endpoint>, TransportError> {
+        Ok(self.conn.accept_stream(timeout)? as Arc<dyn Endpoint>)
+    }
+
+    fn close(&self) {
+        self.conn.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::fault::{FaultConfig, FaultEndpoint};
+    use crate::transport::test_support::exercise_endpoint_pair;
+    use crate::transport::{inproc, tcp};
+
+    fn mux_pair_inproc() -> (Arc<MuxConn>, Arc<MuxConn>) {
+        let (a, b) = inproc::pair("initiator", "acceptor");
+        (
+            MuxConn::initiate(Arc::new(a)),
+            MuxConn::accept(Arc::new(b), None),
+        )
+    }
+
+    #[test]
+    fn contract_over_inproc() {
+        let (ca, cb) = mux_pair_inproc();
+        let sa = ca.open_stream().unwrap();
+        let sb = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        exercise_endpoint_pair(sa.as_ref(), sb.as_ref());
+    }
+
+    #[test]
+    fn contract_over_tcp() {
+        let listener = tcp::TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || listener.accept().unwrap());
+        let client = tcp::connect(&addr).unwrap();
+        let server = h.join().unwrap();
+        let ca = MuxConn::initiate(Arc::new(client));
+        let cb = MuxConn::accept(Arc::new(server), None);
+        let sa = ca.open_stream().unwrap();
+        let sb = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        exercise_endpoint_pair(sa.as_ref(), sb.as_ref());
+    }
+
+    #[test]
+    fn contract_over_fault_composition() {
+        // Mux over a fault layer (transparent config): the decorator
+        // stack composes with no special casing anywhere.
+        let (a, b) = inproc::pair("initiator", "acceptor");
+        let fa = FaultEndpoint::new(a, FaultConfig::default());
+        let fb = FaultEndpoint::new(
+            b,
+            FaultConfig {
+                latency: Duration::from_millis(2),
+                ..Default::default()
+            },
+        );
+        let ca = MuxConn::initiate(Arc::new(fa));
+        let cb = MuxConn::accept(Arc::new(fb), None);
+        let sa = ca.open_stream().unwrap();
+        let sb = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        exercise_endpoint_pair(sa.as_ref(), sb.as_ref());
+    }
+
+    #[test]
+    fn handshake_agrees_and_version_mismatch_fails() {
+        let (ca, cb) = mux_pair_inproc();
+        ca.await_handshake(Duration::from_secs(2)).unwrap();
+        cb.await_handshake(Duration::from_secs(2)).unwrap();
+
+        let (a, b) = inproc::pair("old-client", "server");
+        let bad = MuxConn::initiate_version(Arc::new(a), MUX_VERSION + 1);
+        let srv = MuxConn::accept(Arc::new(b), None);
+        let err = srv.await_handshake(Duration::from_secs(2)).unwrap_err();
+        assert!(matches!(err, TransportError::Io(_)), "{err:?}");
+        // The initiator's streams observe the dead connection promptly.
+        let _ = bad;
+    }
+
+    #[test]
+    fn both_sides_open_streams_without_collision() {
+        let (ca, cb) = mux_pair_inproc();
+        let a1 = ca.open_stream().unwrap();
+        let b1 = cb.open_stream().unwrap();
+        assert_eq!(a1.stream_id() % 2, 1, "initiator allocates odd ids");
+        assert_eq!(b1.stream_id() % 2, 0, "acceptor allocates even ids");
+        let a_on_b = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        let b_on_a = ca.accept_stream(Duration::from_secs(2)).unwrap();
+        a1.send(vec![1]).unwrap();
+        b1.send(vec![2]).unwrap();
+        assert_eq!(a_on_b.recv_timeout(Duration::from_secs(1)).unwrap(), vec![1]);
+        assert_eq!(b_on_a.recv_timeout(Duration::from_secs(1)).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn concurrent_streams_never_cross_deliver() {
+        // Property: N streams × M frames, sent concurrently from N
+        // threads, each frame tagged (stream index, seq). Every receiver
+        // must see exactly its own frames, in order — no leakage across
+        // streams no matter how the coalescer batches them.
+        const N: usize = 8;
+        const M: u32 = 200;
+        let (ca, cb) = mux_pair_inproc();
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for t in 0..N {
+            let s = ca.open_stream().unwrap();
+            let r = cb.accept_stream(Duration::from_secs(2)).unwrap();
+            senders.push((t, s));
+            receivers.push((t, r));
+        }
+        let send_handles: Vec<_> = senders
+            .into_iter()
+            .map(|(t, s)| {
+                std::thread::spawn(move || {
+                    for seq in 0..M {
+                        let mut f = vec![t as u8];
+                        f.extend_from_slice(&seq.to_le_bytes());
+                        // Vary size so batches split at different points.
+                        f.resize(1 + 4 + (seq as usize % 97), t as u8);
+                        s.send(f).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let recv_handles: Vec<_> = receivers
+            .into_iter()
+            .map(|(t, r)| {
+                std::thread::spawn(move || {
+                    for seq in 0..M {
+                        let f = r.recv_timeout(Duration::from_secs(5)).unwrap();
+                        assert_eq!(f[0] as usize, t, "frame from stream {} on stream {t}", f[0]);
+                        let got = u32::from_le_bytes(f[1..5].try_into().unwrap());
+                        assert_eq!(got, seq, "out-of-order on stream {t}");
+                        assert!(f[5..].iter().all(|&x| x == t as u8), "payload corrupted");
+                    }
+                })
+            })
+            .collect();
+        for h in send_handles {
+            h.join().unwrap();
+        }
+        for h in recv_handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn receive_is_zero_copy_from_batch_buffer() {
+        let (ca, cb) = mux_pair_inproc();
+        let sa = ca.open_stream().unwrap();
+        let sb = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        crate::telemetry::counter("bytes.copied").store(0, std::sync::atomic::Ordering::Relaxed);
+        sa.send(vec![42u8; 4096]).unwrap();
+        let view = sb.recv_shared(Duration::from_secs(2)).unwrap();
+        assert_eq!(view.len(), 4096);
+        assert!(view.as_slice().iter().all(|&b| b == 42));
+        assert_eq!(
+            crate::telemetry::counter("bytes.copied").load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "mux receive path must not copy payload bytes"
+        );
+    }
+
+    #[test]
+    fn coalescing_batches_queued_frames() {
+        let (ca, cb) = mux_pair_inproc();
+        let sa = ca.open_stream().unwrap();
+        let sb = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        // Hold the flush lock so concurrent sends pile up in the queue,
+        // then release: the first sender to win the lock must drain them
+        // all in ONE batch.
+        let before = crate::telemetry::counter("mux.frames_coalesced")
+            .load(std::sync::atomic::Ordering::Relaxed);
+        let guard = ca.flush_lock.lock().unwrap();
+        let mut handles = Vec::new();
+        for i in 0..5u8 {
+            let s = sa.clone();
+            handles.push(std::thread::spawn(move || s.send(vec![i]).unwrap()));
+        }
+        // Wait until all five frames are queued behind the held lock.
+        let t0 = Instant::now();
+        while ca.outq.lock().unwrap().len() < 5 {
+            assert!(t0.elapsed() < Duration::from_secs(2), "senders never queued");
+            std::thread::yield_now();
+        }
+        drop(guard);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..5 {
+            got.push(sb.recv_timeout(Duration::from_secs(2)).unwrap()[0]);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        let after = crate::telemetry::counter("mux.frames_coalesced")
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            after >= before + 5,
+            "expected the 5 queued frames to coalesce into one batch ({before} -> {after})"
+        );
+    }
+
+    #[test]
+    fn batch_cap_splits_but_never_splits_one_frame() {
+        let frames: Vec<OutFrame> = (0..3)
+            .map(|i| OutFrame {
+                kind: K_DATA,
+                stream_id: 1,
+                payload: vec![i as u8; MAX_BATCH / 2],
+            })
+            .collect();
+        let buf = encode_batch(&frames);
+        assert_eq!(
+            buf.len(),
+            3 * (MUX_HDR + MAX_BATCH / 2),
+            "encode keeps every frame intact"
+        );
+    }
+
+    #[test]
+    fn torn_underlying_surfaces_torn_on_streams() {
+        use std::io::Write;
+        let listener = tcp::TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || listener.accept().unwrap());
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        let server = h.join().unwrap();
+        let conn = MuxConn::accept(Arc::new(server), None);
+        // Promise a large underlying frame, deliver a sliver, vanish.
+        raw.write_all(&1000u32.to_le_bytes()).unwrap();
+        raw.write_all(&[0u8; 8]).unwrap();
+        drop(raw);
+        let err = conn.accept_stream(Duration::from_secs(2)).unwrap_err();
+        assert!(matches!(err, TransportError::TornFrame), "{err:?}");
+    }
+
+    #[test]
+    fn goaway_closes_cleanly() {
+        let (ca, cb) = mux_pair_inproc();
+        let sa = ca.open_stream().unwrap();
+        let sb = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        sa.send(vec![5]).unwrap();
+        assert_eq!(sb.recv_timeout(Duration::from_secs(1)).unwrap(), vec![5]);
+        ca.close();
+        // Peer streams drain then report a CLEAN close (not torn).
+        let t0 = Instant::now();
+        loop {
+            match sb.recv_timeout(Duration::from_millis(50)) {
+                Err(TransportError::Closed) => break,
+                Err(TransportError::Timeout) => {
+                    assert!(t0.elapsed() < Duration::from_secs(2), "never saw close");
+                }
+                other => panic!("expected Closed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stream_close_reaches_peer() {
+        let (ca, cb) = mux_pair_inproc();
+        let sa = ca.open_stream().unwrap();
+        let sb = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        sa.send(vec![1]).unwrap();
+        sa.close();
+        // The in-flight frame still arrives, then the stream closes.
+        assert_eq!(sb.recv_timeout(Duration::from_secs(1)).unwrap(), vec![1]);
+        let t0 = Instant::now();
+        loop {
+            match sb.recv_timeout(Duration::from_millis(50)) {
+                Err(TransportError::Closed) => break,
+                Err(TransportError::Timeout) => {
+                    assert!(t0.elapsed() < Duration::from_secs(2), "never saw stream close");
+                }
+                other => panic!("expected Closed, got {other:?}"),
+            }
+        }
+        // The connection (and sibling streams) stay up.
+        let sa2 = ca.open_stream().unwrap();
+        let sb2 = cb.accept_stream(Duration::from_secs(2)).unwrap();
+        sa2.send(vec![9]).unwrap();
+        assert_eq!(sb2.recv_timeout(Duration::from_secs(1)).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn connector_listener_shims_compose() {
+        // The stream-open surface over mux...
+        let (ca, cb) = mux_pair_inproc();
+        let connector = MuxConnector::new(ca);
+        let listener = MuxStreamListener::new(cb);
+        let s = connector.open().unwrap();
+        let r = listener.accept(Duration::from_secs(2)).unwrap();
+        s.send(vec![3]).unwrap();
+        assert_eq!(r.recv_timeout(Duration::from_secs(1)).unwrap(), vec![3]);
+        // ...and over the inproc compat shim, behaving identically.
+        let (icon, ilis) = crate::transport::inproc_stream_pair("superlink");
+        let s2 = icon.open().unwrap();
+        let r2 = ilis.accept(Duration::from_secs(2)).unwrap();
+        s2.send(vec![4]).unwrap();
+        assert_eq!(r2.recv_timeout(Duration::from_secs(1)).unwrap(), vec![4]);
+    }
+}

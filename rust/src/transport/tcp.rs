@@ -3,47 +3,94 @@
 //! OS processes. A background reader thread per connection pushes decoded
 //! frames into an mpsc queue so `recv_timeout`/`try_recv` mirror the
 //! inproc endpoint exactly.
+//!
+//! Failure surface: a peer that disconnects BETWEEN frames yields
+//! [`TransportError::Closed`]; one that disconnects MID-frame (length
+//! header or payload partially read) yields
+//! [`TransportError::TornFrame`] once the queue drains — the partial
+//! frame is dropped, but its loss is visible to the caller instead of
+//! masquerading as a clean shutdown.
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{
     atomic::{AtomicBool, Ordering},
     Arc, Mutex,
 };
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::{Endpoint, Frame, TransportError, MAX_FRAME};
+
+/// Upper bound on one read chunk while assembling a frame payload. The
+/// frame buffer grows only as bytes actually arrive, so a hostile
+/// length header (up to [`MAX_FRAME`] = 1 GiB) cannot force a huge
+/// up-front allocation from 4 bytes of input.
+const READ_CHUNK: usize = 64 * 1024;
 
 pub struct TcpEndpoint {
     writer: Mutex<TcpStream>,
     rx: Mutex<Receiver<Frame>>,
     closed: Arc<AtomicBool>,
+    torn: Arc<AtomicBool>,
     label: String,
 }
 
-fn spawn_reader(mut stream: TcpStream, tx: Sender<Frame>, closed: Arc<AtomicBool>) {
+fn spawn_reader(
+    mut stream: TcpStream,
+    tx: Sender<Frame>,
+    closed: Arc<AtomicBool>,
+    torn: Arc<AtomicBool>,
+) {
     std::thread::Builder::new()
         .name("tcp-reader".into())
         .spawn(move || {
-            let mut len_buf = [0u8; 4];
             loop {
                 if closed.load(Ordering::Acquire) {
                     return;
                 }
-                if stream.read_exact(&mut len_buf).is_err() {
+                // First header byte via plain read(): EOF here is a clean
+                // close at a frame boundary. Any byte after this commits
+                // the stream to a whole frame — failure is a torn frame.
+                let mut len_buf = [0u8; 4];
+                let n = loop {
+                    match stream.read(&mut len_buf) {
+                        Ok(0) => {
+                            closed.store(true, Ordering::Release);
+                            return;
+                        }
+                        Ok(n) => break n,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            closed.store(true, Ordering::Release);
+                            return;
+                        }
+                    }
+                };
+                if n < 4 && stream.read_exact(&mut len_buf[n..]).is_err() {
+                    torn.store(true, Ordering::Release);
                     closed.store(true, Ordering::Release);
                     return;
                 }
                 let len = u32::from_le_bytes(len_buf) as usize;
                 if len > MAX_FRAME {
+                    // Protocol violation: resynchronization is impossible,
+                    // and whatever the peer meant to send is lost.
+                    torn.store(true, Ordering::Release);
                     closed.store(true, Ordering::Release);
                     return;
                 }
-                let mut frame = vec![0u8; len];
-                if stream.read_exact(&mut frame).is_err() {
-                    closed.store(true, Ordering::Release);
-                    return;
+                // Bounded-chunk assembly: the buffer grows with the data.
+                let mut frame = Vec::new();
+                while frame.len() < len {
+                    let chunk = (len - frame.len()).min(READ_CHUNK);
+                    let filled = frame.len();
+                    frame.resize(filled + chunk, 0);
+                    if stream.read_exact(&mut frame[filled..]).is_err() {
+                        torn.store(true, Ordering::Release);
+                        closed.store(true, Ordering::Release);
+                        return;
+                    }
                 }
                 if tx.send(frame).is_err() {
                     return;
@@ -59,13 +106,25 @@ impl TcpEndpoint {
         let reader = stream.try_clone()?;
         let (tx, rx) = channel();
         let closed = Arc::new(AtomicBool::new(false));
-        spawn_reader(reader, tx, closed.clone());
+        let torn = Arc::new(AtomicBool::new(false));
+        spawn_reader(reader, tx, closed.clone(), torn.clone());
         Ok(Self {
             writer: Mutex::new(stream),
             rx: Mutex::new(rx),
             closed,
+            torn,
             label,
         })
+    }
+
+    /// The error a drained receive queue reports: [`TransportError::TornFrame`]
+    /// when the reader died mid-frame, plain `Closed` otherwise.
+    fn closed_error(&self) -> TransportError {
+        if self.torn.load(Ordering::Acquire) {
+            TransportError::TornFrame
+        } else {
+            TransportError::Closed
+        }
     }
 }
 
@@ -75,7 +134,7 @@ impl Endpoint for TcpEndpoint {
             return Err(TransportError::FrameTooLarge(frame.len()));
         }
         if self.closed.load(Ordering::Acquire) {
-            return Err(TransportError::Closed);
+            return Err(self.closed_error());
         }
         let len_buf = (frame.len() as u32).to_le_bytes();
         let mut w = self.writer.lock().unwrap();
@@ -90,12 +149,12 @@ impl Endpoint for TcpEndpoint {
             Ok(f) => Ok(f),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                 if self.closed.load(Ordering::Acquire) {
-                    Err(TransportError::Closed)
+                    Err(self.closed_error())
                 } else {
                     Err(TransportError::Timeout)
                 }
             }
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(self.closed_error()),
         }
     }
 
@@ -105,12 +164,12 @@ impl Endpoint for TcpEndpoint {
             Ok(f) => Ok(Some(f)),
             Err(std::sync::mpsc::TryRecvError::Empty) => {
                 if self.closed.load(Ordering::Acquire) {
-                    Err(TransportError::Closed)
+                    Err(self.closed_error())
                 } else {
                     Ok(None)
                 }
             }
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => Err(TransportError::Closed),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Err(self.closed_error()),
         }
     }
 
@@ -129,6 +188,10 @@ impl Endpoint for TcpEndpoint {
 /// Listening side: accept framed connections.
 pub struct TcpTransportListener {
     listener: TcpListener,
+    /// Lazily-started accept pump backing [`TcpTransportListener::accept_timeout`]:
+    /// a thread parked in blocking `accept` (kernel readiness) feeding an
+    /// mpsc channel (condvar wakeups) — no polling sleep anywhere.
+    pump: Mutex<Option<Receiver<TcpEndpoint>>>,
 }
 
 impl TcpTransportListener {
@@ -136,6 +199,7 @@ impl TcpTransportListener {
     pub fn bind(addr: &str) -> Result<Self, TransportError> {
         Ok(Self {
             listener: TcpListener::bind(addr)?,
+            pump: Mutex::new(None),
         })
     }
 
@@ -148,6 +212,40 @@ impl TcpTransportListener {
         let (stream, peer) = self.listener.accept()?;
         Ok(TcpEndpoint::new(stream, peer.to_string())?)
     }
+
+    /// Accept with a deadline. The first call spawns the accept pump;
+    /// the wait itself parks on the channel's condvar — woken the
+    /// instant a connection lands, never by a timer tick.
+    pub fn accept_timeout(&self, timeout: Duration) -> Result<TcpEndpoint, TransportError> {
+        let mut pump = self.pump.lock().unwrap();
+        if pump.is_none() {
+            let listener = self.listener.try_clone()?;
+            let (tx, rx) = channel();
+            std::thread::Builder::new()
+                .name("tcp-accept".into())
+                .spawn(move || loop {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            let ep = match TcpEndpoint::new(stream, peer.to_string()) {
+                                Ok(ep) => ep,
+                                Err(_) => continue,
+                            };
+                            if tx.send(ep).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => return,
+                    }
+                })
+                .expect("spawn tcp acceptor");
+            *pump = Some(rx);
+        }
+        match pump.as_ref().unwrap().recv_timeout(timeout) {
+            Ok(ep) => Ok(ep),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
 }
 
 /// Dial a framed TCP endpoint.
@@ -157,17 +255,33 @@ pub fn connect(addr: &str) -> Result<TcpEndpoint, TransportError> {
 }
 
 /// Dial with retry — clients may start before the server socket is up
-/// (the paper's startup-kit flow has no ordering guarantee).
+/// (the paper's startup-kit flow has no ordering guarantee). Each dial
+/// waits for kernel readiness via `connect_timeout` (an unroutable peer
+/// blocks in the OS, not in a sleep loop); instant refusals back off
+/// exponentially (1 ms doubling to 16 ms) instead of a blind fixed
+/// sleep, so a listener that comes up moments later is caught fast.
 pub fn connect_retry(addr: &str, deadline: Duration) -> Result<TcpEndpoint, TransportError> {
-    let start = std::time::Instant::now();
+    let start = Instant::now();
+    let sock_addr: Option<SocketAddr> = addr.to_socket_addrs().ok().and_then(|mut a| a.next());
+    let mut backoff = Duration::from_millis(1);
     loop {
-        match connect(addr) {
+        let remaining = deadline.saturating_sub(start.elapsed());
+        let attempt = match &sock_addr {
+            Some(sa) if !remaining.is_zero() => {
+                TcpStream::connect_timeout(sa, remaining)
+                    .map_err(TransportError::from)
+                    .and_then(|s| Ok(TcpEndpoint::new(s, addr.to_string())?))
+            }
+            _ => connect(addr),
+        };
+        match attempt {
             Ok(ep) => return Ok(ep),
             Err(e) => {
-                if start.elapsed() > deadline {
+                if start.elapsed() >= deadline {
                     return Err(e);
                 }
-                std::thread::sleep(Duration::from_millis(20));
+                std::thread::sleep(backoff.min(deadline.saturating_sub(start.elapsed())));
+                backoff = (backoff * 2).min(Duration::from_millis(16));
             }
         }
     }
@@ -205,7 +319,8 @@ mod tests {
     fn close_detected_by_peer() {
         let (a, b) = tcp_pair();
         a.close();
-        // b's reader thread notices EOF; recv eventually reports Closed.
+        // b's reader thread notices EOF at a frame boundary; recv
+        // eventually reports a CLEAN close, not a torn frame.
         let t0 = std::time::Instant::now();
         loop {
             match b.recv_timeout(Duration::from_millis(50)) {
@@ -214,6 +329,78 @@ mod tests {
                     assert!(t0.elapsed() < Duration::from_secs(2), "never saw close");
                 }
                 other => panic!("unexpected: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mid_frame_disconnect_is_torn_not_closed() {
+        // Hand-roll the wire: promise a 100-byte frame, deliver 10 bytes,
+        // then vanish. The reader must surface TornFrame — a silent
+        // Closed would let a SuperNode mistake data loss for retirement.
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || listener.accept().unwrap());
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        let server = h.join().unwrap();
+        raw.write_all(&100u32.to_le_bytes()).unwrap();
+        raw.write_all(&[7u8; 10]).unwrap();
+        drop(raw);
+        let t0 = std::time::Instant::now();
+        loop {
+            match server.recv_timeout(Duration::from_millis(50)) {
+                Err(TransportError::TornFrame) => break,
+                Err(TransportError::Timeout) => {
+                    assert!(t0.elapsed() < Duration::from_secs(2), "never saw torn frame");
+                }
+                other => panic!("expected TornFrame, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn partial_length_header_is_torn() {
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || listener.accept().unwrap());
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        let server = h.join().unwrap();
+        raw.write_all(&[1u8, 2]).unwrap(); // 2 of 4 header bytes
+        drop(raw);
+        let t0 = std::time::Instant::now();
+        loop {
+            match server.recv_timeout(Duration::from_millis(50)) {
+                Err(TransportError::TornFrame) => break,
+                Err(TransportError::Timeout) => {
+                    assert!(t0.elapsed() < Duration::from_secs(2), "never saw torn frame");
+                }
+                other => panic!("expected TornFrame, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_length_header_does_not_preallocate() {
+        // A peer claiming a MAX_FRAME-sized payload and sending almost
+        // nothing must not cost a 1 GiB allocation: the chunked reader
+        // grows with real bytes only. (If this path preallocated, the
+        // test would OOM or at minimum thrash; it completes instantly.)
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || listener.accept().unwrap());
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        let server = h.join().unwrap();
+        raw.write_all(&(MAX_FRAME as u32).to_le_bytes()).unwrap();
+        raw.write_all(&[0u8; 16]).unwrap();
+        drop(raw);
+        let t0 = std::time::Instant::now();
+        loop {
+            match server.recv_timeout(Duration::from_millis(50)) {
+                Err(TransportError::TornFrame) => break,
+                Err(TransportError::Timeout) => {
+                    assert!(t0.elapsed() < Duration::from_secs(5), "never saw torn frame");
+                }
+                other => panic!("expected TornFrame, got {other:?}"),
             }
         }
     }
@@ -234,6 +421,20 @@ mod tests {
         let server = h.join().unwrap();
         client.send(vec![7]).unwrap();
         assert_eq!(server.recv_timeout(Duration::from_secs(1)).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn accept_timeout_times_out_then_accepts() {
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        assert!(matches!(
+            listener.accept_timeout(Duration::from_millis(30)),
+            Err(TransportError::Timeout)
+        ));
+        let client = connect(&addr).unwrap();
+        let server = listener.accept_timeout(Duration::from_secs(2)).unwrap();
+        client.send(vec![9]).unwrap();
+        assert_eq!(server.recv_timeout(Duration::from_secs(1)).unwrap(), vec![9]);
     }
 
     #[test]

@@ -26,8 +26,8 @@ use std::time::Duration;
 use flarelink::flower::asyncfed::AsyncConfig;
 use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
 use flarelink::flower::records::{ArrayRecord, MetricRecord};
-use flarelink::flower::run::{run_native, NativeFleet, SwitchedFleet};
-use flarelink::flower::serverapp::{ServerApp, ServerConfig};
+use flarelink::flower::run::{run_mux, run_native, NativeFleet, SwitchedFleet};
+use flarelink::flower::serverapp::{History, ServerApp, ServerConfig};
 use flarelink::flower::shard::ShardedGrid;
 use flarelink::flower::strategy::{
     Aggregator, FedAdagrad, FedAdam, FedAvg, FedAvgM, FedMedian, FedOptConfig, FedProx, FedYogi,
@@ -310,6 +310,112 @@ fn check_sharded_equals_single(mk: &dyn Fn() -> Box<dyn Strategy>, shards: usize
     );
 }
 
+/// Bridged builder for the mux row: the same arithmetic fleet as
+/// [`fleet_apps`] (delta/examples keyed by participant index), server
+/// side built from the strategy factory under test.
+struct MatrixBuilder {
+    mk: fn() -> Box<dyn Strategy>,
+    rounds: u64,
+}
+
+impl flarelink::bridge::FlowerAppBuilder for MatrixBuilder {
+    fn build_client(
+        &self,
+        ctx: &flarelink::flare::job::JobCtx,
+    ) -> anyhow::Result<Arc<dyn ClientApp>> {
+        let idx = ctx
+            .participants
+            .iter()
+            .position(|s| s == &ctx.site)
+            .unwrap_or(0);
+        Ok(Arc::new(ArithmeticClient {
+            delta: (idx + 1) as f32 * 0.5,
+            n: 10 * (idx as u64 + 1),
+        }))
+    }
+
+    fn build_server(
+        &self,
+        _ctx: &flarelink::flare::job::JobCtx,
+    ) -> anyhow::Result<ServerApp> {
+        Ok(ServerApp::new(
+            (self.mk)(),
+            server_cfg(self.rounds),
+            ArrayRecord::from_flat(&[0.25f32; 6]),
+        ))
+    }
+}
+
+/// One bridged run with the multiplexed SuperNode↔LGS hop (`mux: true`).
+fn bridged_mux_history(mk: fn() -> Box<dyn Strategy>, rounds: u64) -> History {
+    use flarelink::flare::job::JobSpec;
+    use flarelink::flare::reliable::RetryPolicy;
+    use flarelink::flare::sim::FederationBuilder;
+    use flarelink::flare::JobStatus;
+    use flarelink::util::json::Json;
+    use std::sync::Mutex;
+
+    let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+    let c2 = captured.clone();
+    let app = flarelink::bridge::FlowerBridgeApp::new(Arc::new(MatrixBuilder { mk, rounds }))
+        .with_policy(RetryPolicy::fast())
+        .with_history_sink(Arc::new(move |_, h| {
+            *c2.lock().unwrap() = Some(h.clone());
+        }));
+    let fed = FederationBuilder::new("mux-conformance")
+        .sites(COHORT)
+        .retry_policy(RetryPolicy::fast())
+        .build(Arc::new(app))
+        .unwrap();
+    let spec = JobSpec::new("mx", "flower_bridge")
+        .with_config(Json::obj(vec![("mux", Json::Bool(true))]));
+    fed.scp.submit(spec).unwrap();
+    let status = fed.scp.wait("mx", Duration::from_secs(120)).unwrap();
+    assert_eq!(
+        status,
+        JobStatus::Finished,
+        "err={:?}",
+        fed.scp.job_error("mx")
+    );
+    fed.shutdown();
+    let h = captured.lock().unwrap().take().unwrap();
+    h
+}
+
+/// Check 6 (this PR's acceptance anchor): the multiplexed transport is
+/// invisible to the math. The push-mode mux fleet ([`run_mux`]) and the
+/// bridged run with the mux local hop both produce histories
+/// bit-identical to the plain inproc fleet.
+fn check_mux_equals_inproc(mk: fn() -> Box<dyn Strategy>, label: &str) {
+    let rounds = 2u64;
+    let init = ArrayRecord::from_flat(&[0.25f32; 6]);
+    let mut app = ServerApp::new(mk(), server_cfg(rounds), init.clone());
+    let inproc = run_native(&mut app, fleet_apps(), 1).unwrap();
+
+    // Native push-mode fleet over mux connections.
+    let mut app = ServerApp::new(mk(), server_cfg(rounds), init);
+    let mux = run_mux(&mut app, fleet_apps(), 1).unwrap();
+    assert_eq!(
+        mux, inproc,
+        "{label}: mux fleet history diverged from the inproc fleet"
+    );
+    assert!(
+        mux.params_bits_equal(&inproc),
+        "{label}: mux fleet parameters not bit-identical to inproc"
+    );
+
+    // Bridged, with the mux framing on the SuperNode↔LGS leg.
+    let bridged = bridged_mux_history(mk, rounds);
+    assert_eq!(
+        bridged, inproc,
+        "{label}: bridged-mux history diverged from the inproc fleet"
+    );
+    assert!(
+        bridged.params_bits_equal(&inproc),
+        "{label}: bridged-mux parameters not bit-identical to inproc"
+    );
+}
+
 macro_rules! conformance_matrix {
     ($($name:ident => $mk:expr;)*) => {$(
         mod $name {
@@ -356,6 +462,11 @@ macro_rules! conformance_matrix {
             #[test]
             fn sharded_n4_equals_single() {
                 check_sharded_equals_single(&mk, 4, stringify!($name));
+            }
+
+            #[test]
+            fn mux_fleet_equals_inproc() {
+                check_mux_equals_inproc(mk, stringify!($name));
             }
         }
     )*};
