@@ -165,6 +165,7 @@ fn shared_link(
     rounds: u64,
     fit_cost: Duration,
     drop_prob: f64,
+    wire_codec: Option<&str>,
 ) -> anyhow::Result<ModeResult> {
     let t0_cell: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
     let per_run: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::new()));
@@ -184,10 +185,15 @@ fn shared_link(
 
     let t0 = Instant::now();
     *t0_cell.lock().unwrap() = Some(t0);
-    fed.scp.submit(JobSpec::new("shared", "flower_bridge").with_config(Json::obj(vec![
+    let mut cfg = vec![
         ("rounds", Json::num(rounds as f64)),
         ("concurrent_runs", Json::num(jobs as f64)),
-    ])))?;
+    ];
+    if let Some(codec) = wire_codec {
+        cfg.push(("wire_codec", Json::str(codec)));
+    }
+    fed.scp
+        .submit(JobSpec::new("shared", "flower_bridge").with_config(Json::obj(cfg)))?;
     let status = fed
         .scp
         .wait("shared", Duration::from_secs(120))
@@ -328,13 +334,13 @@ fn main() -> anyhow::Result<()> {
         all_ok &= r.finished == jobs;
         report("per-job links", jobs, rounds, fit_cost, &r, &mut t);
 
-        let r = shared_link(jobs, rounds, fit_cost, 0.0)?;
+        let r = shared_link(jobs, rounds, fit_cost, 0.0, None)?;
         all_ok &= r.finished == jobs;
         report("shared link", jobs, rounds, fit_cost, &r, &mut t);
 
         // Degraded fleet: same shared-link workload with 15% frame loss
         // on every site link — the resilience overhead in one row.
-        let r = shared_link(jobs, rounds, fit_cost, 0.15)?;
+        let r = shared_link(jobs, rounds, fit_cost, 0.15, None)?;
         all_ok &= r.finished == jobs;
         report("shared lossy15%", jobs, rounds, fit_cost, &r, &mut t);
     }
@@ -346,6 +352,59 @@ fn main() -> anyhow::Result<()> {
     println!("'shared lossy15%' repeats the shared-link workload over links that");
     println!("drop 15% of frames: ReliableMessage + liveness leases keep every");
     println!("run finishing — the delta vs 'shared link' is the resilience tax.");
+
+    // ---- wire compression on the degraded fleet ----
+    // The same shared-link workload at 15% frame loss, with the uplink
+    // result parameters riding each codec (`wire_codec` job-config
+    // key). Instructions stay dense — the bytes column is every Flower
+    // frame the bridge relayed, retransmissions included, so it shows
+    // what compression buys when loss makes bytes expensive.
+    let codec_jobs = 2usize;
+    println!(
+        "\n=== wire compression x 15% loss: {codec_jobs} runs, {rounds} rounds, \
+         4 sites ===\n"
+    );
+    let mut ct = Table::new(&[
+        "codec",
+        "makespan",
+        "bytes_on_wire",
+        "reduction",
+        "all_finished",
+    ]);
+    let mut identity_bytes = 0i64;
+    let mut compression_ok = true;
+    for codec in [None, Some("fp16"), Some("int8_topk")] {
+        flarelink::telemetry::reset_counters();
+        let r = shared_link(codec_jobs, rounds, fit_cost, 0.15, codec)?;
+        compression_ok &= r.finished == codec_jobs;
+        let bytes = flarelink::telemetry::snapshot()
+            .into_iter()
+            .find(|(k, _)| k == "bridge.frame_bytes")
+            .map(|(_, v)| v)
+            .unwrap_or(0);
+        if codec.is_none() {
+            identity_bytes = bytes;
+        }
+        ct.row(vec![
+            codec.unwrap_or("identity").into(),
+            fmt_dur(r.makespan),
+            bytes.to_string(),
+            if identity_bytes > 0 && bytes > 0 {
+                format!("{:.2}x", identity_bytes as f64 / bytes as f64)
+            } else {
+                "n/a".into()
+            },
+            (r.finished == codec_jobs).to_string(),
+        ]);
+    }
+    println!("{}", ct.render());
+    println!("Result frames shrink with the codec while instruction frames stay");
+    println!("dense, so end-to-end reduction is smaller than the per-record ratio");
+    println!("(see the record_codec bench for the gated per-frame numbers).");
+    anyhow::ensure!(
+        compression_ok,
+        "a degraded-fleet run under a wire codec did not finish"
+    );
 
     // ---- async vs sync on a heterogeneous fleet (one 5x slow node) ----
     let n = 4usize;

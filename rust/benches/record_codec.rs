@@ -8,9 +8,13 @@
 //! decoded tensors borrow the frame's allocation, verified both by the
 //! telemetry byte-copy counters and by pointer identity
 //! (`Bytes::shares_allocation`).
+//!
+//! The wire-compression table measures bytes-on-wire per codec for the
+//! same model and `--smoke` gates int8+top-k at ≥ 3× reduction with the
+//! zero-copy decode invariant still holding on compressed frames.
 
 use flarelink::flower::message::{FlowerMsg, TaskRes};
-use flarelink::flower::records::{ArrayRecord, Tensor};
+use flarelink::flower::records::{ArrayRecord, Tensor, WireCodec};
 use flarelink::flower::superlink::SuperLink;
 use flarelink::util::bench::{bench_for, fmt_dur, Table};
 use flarelink::util::bytes::Bytes;
@@ -50,8 +54,30 @@ fn counter(name: &str) -> i64 {
         .unwrap_or(0)
 }
 
+/// A full result frame carrying `params` — what one node's uplink puts
+/// on the wire each round.
+fn res_frame(params: ArrayRecord) -> Vec<u8> {
+    FlowerMsg::PushTaskRes {
+        res: TaskRes {
+            task_id: 1,
+            run_id: 1,
+            node_id: 1,
+            error: String::new(),
+            message_type: flarelink::flower::message::MessageType::Train,
+            parameters: params,
+            num_examples: 128,
+            loss: 0.5,
+            metrics: vec![("accuracy".to_string(), 0.9)].into(),
+            configs: flarelink::flower::records::ConfigRecord::new(),
+            model_version: 0,
+        },
+    }
+    .encode()
+}
+
 fn main() -> anyhow::Result<()> {
     flarelink::telemetry::init_logging();
+    let smoke = std::env::args().any(|a| a == "--smoke");
 
     let record = model_record(7);
     let payload_mb = record.total_bytes() as f64 / (1024.0 * 1024.0);
@@ -208,6 +234,94 @@ fn main() -> anyhow::Result<()> {
         format!("{:.2}", gibs(dec_copy.p50)),
     ]);
     println!("{}", t.render());
+
+    // ---- bytes on wire per codec (uplink compression) ----
+    // Each row compresses the SAME result record with one wire codec,
+    // frames it, and measures what actually rides the uplink. The
+    // decode column re-asserts the zero-copy invariant on the
+    // compressed frame: quantized segments dequantize on accumulate,
+    // never on decode.
+    let identity_len = res_frame(record.clone()).len();
+    let dense_flat = record.to_flat();
+    let mut t = Table::new(&[
+        "codec",
+        "wire_bytes",
+        "reduction",
+        "max_abs_err",
+        "zero_copy_decode",
+    ]);
+    let mut int8_topk_reduction = 0.0f64;
+    for codec in [
+        WireCodec::Identity,
+        WireCodec::F16,
+        WireCodec::Bf16,
+        WireCodec::Int8,
+        WireCodec::TopK,
+        WireCodec::Int8TopK,
+        WireCodec::Delta,
+    ] {
+        let compressed = record.compress(codec, Some((&record, 0)));
+        let frame = res_frame(compressed.clone());
+        let reduction = identity_len as f64 / frame.len() as f64;
+        // Worst-case per-element error vs the dense bytes (top-k rows
+        // include the dropped-coefficient mass, which dominates).
+        let max_err = if codec == WireCodec::Delta {
+            // Unresolved deltas only dequantize after resolve_delta;
+            // XOR against the base is lossless by construction.
+            0.0
+        } else {
+            compressed
+                .to_flat()
+                .iter()
+                .zip(&dense_flat)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0f64, f64::max)
+        };
+        flarelink::telemetry::reset_counters();
+        let shared = Bytes::from_vec(frame.clone());
+        let decoded = FlowerMsg::decode_shared(shared.clone())?;
+        let copied = counter("records.encode_bytes_copied")
+            + counter("records.pack_bytes")
+            + counter("bytes.copied");
+        let FlowerMsg::PushTaskRes { res } = &decoded else {
+            anyhow::bail!("wrong decode");
+        };
+        let zero_copy = copied == 0
+            && res
+                .parameters
+                .tensors()
+                .iter()
+                .all(|t| shared.shares_allocation(t.data()));
+        anyhow::ensure!(
+            zero_copy,
+            "decode of a {} frame copied payload bytes — the zero-copy \
+             invariant must survive compression",
+            codec.name()
+        );
+        if codec == WireCodec::Int8TopK {
+            int8_topk_reduction = reduction;
+        }
+        t.row(vec![
+            codec.name().into(),
+            frame.len().to_string(),
+            format!("{reduction:.2}x"),
+            format!("{max_err:.3e}"),
+            zero_copy.to_string(),
+        ]);
+    }
+    println!("bytes on wire per codec (one uplink result frame):");
+    println!("{}", t.render());
+    if smoke {
+        anyhow::ensure!(
+            int8_topk_reduction >= 3.0,
+            "int8+top-k reduced bytes-on-wire only {int8_topk_reduction:.2}x — \
+             the smoke gate demands >= 3x"
+        );
+        println!(
+            "smoke gate: int8_topk reduction {int8_topk_reduction:.2}x >= 3x, \
+             zero-copy decode held for every codec\n"
+        );
+    }
 
     // ---- fan-out cost: pushing one round's model to N clients ----
     // Records share tensor buffers, so N TaskIns clones are reference

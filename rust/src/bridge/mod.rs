@@ -36,6 +36,7 @@ use crate::flare::reliable::RetryPolicy;
 use crate::flower::clientapp::{ClientApp, Router};
 use crate::flower::grid::Grid;
 use crate::flower::message::Message;
+use crate::flower::records::WireCodec;
 use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::shard::ShardedGrid;
 use crate::flower::superlink::{CompletionPolicy, RoundWait, SuperLink};
@@ -263,6 +264,26 @@ pub trait FlowerAppBuilder: Send + Sync {
 /// by benches/examples to capture Fig. 5 curves from bridged runs).
 pub type HistorySink = Arc<dyn Fn(&str, &History) + Send + Sync>;
 
+/// Apply the `wire_codec` job-config key to a freshly built [`ServerApp`]:
+/// a bridged job negotiates result compression exactly like a native
+/// [`crate::flower::serverapp::ServerConfig::codec`] run — the driver puts
+/// the codec name in each instruction's config, SuperNodes encode their
+/// replies with it, and the frames ride the six hops opaque as always
+/// (the bridge never decodes, so compressed bytes are what FLARE relays).
+/// An unknown codec name is refused up front rather than at round 1.
+fn apply_wire_codec(ctx: &JobCtx, app: &mut ServerApp) -> anyhow::Result<()> {
+    if let Some(name) = ctx.config.get("wire_codec").as_str() {
+        app.config.codec = WireCodec::from_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "job {}: unknown wire_codec '{name}' (expected one of: identity, \
+                 fp16, bf16, int8, topk, int8_topk, delta)",
+                ctx.job_id
+            )
+        })?;
+    }
+    Ok(())
+}
+
 /// The FLARE app ("flower_bridge") that hosts a Flower project — the
 /// `nvflare job submit` payload of the paper's §5.
 pub struct FlowerBridgeApp {
@@ -344,6 +365,7 @@ impl FlowerBridgeApp {
             custom
         } else {
             self.builder.build_server(ctx).and_then(|mut server_app| {
+                apply_wire_codec(ctx, &mut server_app)?;
                 let tracker = if self.builder.track() {
                     Some(&ctx.tracker)
                 } else {
@@ -523,6 +545,7 @@ impl AppFactory for FlowerBridgeApp {
             custom.map(|()| Vec::new())
         } else if runs == 1 {
             self.builder.build_server(&ctx).and_then(|mut server_app| {
+                apply_wire_codec(&ctx, &mut server_app)?;
                 let tracker = if self.builder.track() {
                     Some(&ctx.tracker)
                 } else {
@@ -564,7 +587,11 @@ impl AppFactory for FlowerBridgeApp {
                 );
             }
             let apps: anyhow::Result<Vec<(u64, ServerApp)>> = (1..=runs)
-                .map(|run_id| Ok((run_id, self.builder.build_server_run(&ctx, run_id)?)))
+                .map(|run_id| {
+                    let mut app = self.builder.build_server_run(&ctx, run_id)?;
+                    apply_wire_codec(&ctx, &mut app)?;
+                    Ok((run_id, app))
+                })
                 .collect();
             let sink = self.history_sink.clone();
             let job_id = ctx.job_id.clone();

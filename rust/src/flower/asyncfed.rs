@@ -43,6 +43,7 @@ use crate::flare::tracking::SummaryWriter;
 use crate::flower::grid::Grid;
 use crate::flower::message::{ConfigValue, Message};
 use crate::flower::persist::checkpoint::{AsyncCkpt, DriverCkpt, DriverPhase};
+use crate::flower::records::{WireCodec, WIRE_CODEC_KEY};
 use crate::flower::serverapp::{History, ServerApp};
 use crate::flower::strategy::FitRes;
 
@@ -425,6 +426,24 @@ impl ServerApp {
             self.strategy.name(),
             grid.shard_count()
         );
+        // Mirror the synchronous driver's codec gates. Additionally,
+        // delta encoding binds each reply to the exact model version it
+        // was cut from; the driver keeps only the CURRENT parameters,
+        // so any staleness window > 0 could admit a delta whose base no
+        // longer exists.
+        anyhow::ensure!(
+            !self.config.codec.is_lossy() || self.strategy.supports_lossy_codec(),
+            "strategy {} cannot aggregate lossy '{}' wire-codec results \
+             (e.g. secure aggregation masks do not survive quantization) — \
+             use the identity or delta codec",
+            self.strategy.name(),
+            self.config.codec.name()
+        );
+        anyhow::ensure!(
+            self.config.codec != WireCodec::Delta || acfg.max_staleness == 0,
+            "delta wire codec requires max_staleness == 0: a result lagging the \
+             current version deltas against a model the driver no longer holds"
+        );
         let cfg = self.config.clone();
         let nodes = grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
         anyhow::ensure!(
@@ -487,6 +506,13 @@ impl ServerApp {
             // borrows the strategy.
             let mut fit_cfg = self.strategy.configure_fit(commit);
             fit_cfg.push(("round".to_string(), ConfigValue::I64(commit as i64)));
+            // Negotiate the uplink codec (see the sync driver).
+            if cfg.codec != WireCodec::Identity {
+                fit_cfg.push((
+                    WIRE_CODEC_KEY.to_string(),
+                    ConfigValue::Str(cfg.codec.name().to_string()),
+                ));
+            }
             let mut agg = self.strategy.begin_fit(commit, &params);
             loop {
                 grid.reap();
@@ -511,9 +537,32 @@ impl ServerApp {
                     match state.offer(res.metadata.message_id, res.metadata.model_version) {
                         Offer::Fold { staleness } => {
                             let task_id = res.metadata.message_id;
+                            // Delta replies resolve against the current
+                            // parameters; the staleness-0 gate above
+                            // guarantees any FOLDED delta was cut from
+                            // exactly this version.
+                            let arrays = match res
+                                .content
+                                .arrays
+                                .resolve_delta(&params, res.metadata.model_version)
+                            {
+                                Ok(a) => a,
+                                Err(e) => {
+                                    crate::telemetry::bump("asyncfed.client_errors", 1);
+                                    if accept_failures {
+                                        log::warn!(
+                                            "async commit {commit}: node {node} refused: {e}"
+                                        );
+                                        continue;
+                                    }
+                                    anyhow::bail!(
+                                        "async commit {commit}: node {node} refused: {e}"
+                                    );
+                                }
+                            };
                             agg.accumulate(FitRes {
                                 node_id: node,
-                                parameters: res.content.arrays,
+                                parameters: arrays,
                                 num_examples: scale_examples(
                                     res.metadata.num_examples,
                                     weights[staleness as usize],

@@ -19,7 +19,9 @@
 use std::sync::Arc;
 
 use crate::flower::message::{ConfigRecord, Message, MessageType, MetricRecord};
-use crate::flower::records::{ArrayRecord, RecordDict, StateRecord};
+use crate::flower::records::{
+    ArrayRecord, RecordDict, StateRecord, WireCodec, UNSUPPORTED_CODEC_ERR, WIRE_CODEC_KEY,
+};
 
 /// Marker carried in the error reply when a node receives a message
 /// type it has no handler for (see [`Router`]). The driver surfaces the
@@ -201,9 +203,32 @@ pub struct FitOutput {
 impl FitOutput {
     /// Package as the reply to instruction `ins` (what the Train
     /// adapter sends back: parameters + metrics + example count).
+    ///
+    /// Honors the server's negotiated uplink codec: when the fit config
+    /// carries [`WIRE_CODEC_KEY`], the reply parameters are compressed
+    /// with that codec before they touch the wire (delta encodes
+    /// against the instruction's own parameters + model version). A
+    /// codec name this node does not recognize yields a **typed
+    /// refusal reply** (marker [`UNSUPPORTED_CODEC_ERR`], mirroring
+    /// [`UNHANDLED_MESSAGE_ERR`]) — never a panic, never a silently
+    /// wrong encoding.
     pub fn into_reply(self, ins: &Message) -> Message {
+        let parameters = match ins.content.configs.get_str(WIRE_CODEC_KEY) {
+            None => self.parameters,
+            Some(name) => match WireCodec::from_name(name) {
+                Some(codec) => self.parameters.compress(
+                    codec,
+                    Some((&ins.content.arrays, ins.metadata.model_version)),
+                ),
+                None => {
+                    return ins.reply_err(format!(
+                        "{UNSUPPORTED_CODEC_ERR}: node cannot encode '{name}'"
+                    ));
+                }
+            },
+        };
         ins.reply(RecordDict {
-            arrays: self.parameters,
+            arrays: parameters,
             metrics: self.metrics,
             configs: ConfigRecord::new(),
         })

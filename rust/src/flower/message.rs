@@ -23,10 +23,12 @@
 //! structurally invalid frames return [`WireError`] — never panic, never
 //! allocate unbounded memory.
 
-use crate::flower::records::{ArrayRecord, DType, RecordDict, Tensor};
+use crate::flower::records::{ArrayRecord, DType, Encoding, RecordDict, Tensor};
 use crate::util::bytes::{Bytes, FrameReader, Reader, WireError, Writer};
 
-pub use crate::flower::records::{ConfigRecord, ConfigValue, MetricRecord};
+pub use crate::flower::records::{
+    ConfigRecord, ConfigValue, MetricRecord, WireCodec, UNSUPPORTED_CODEC_ERR, WIRE_CODEC_KEY,
+};
 #[allow(deprecated)]
 pub use crate::flower::records::{config_get_f64, config_get_i64, config_get_str};
 
@@ -174,6 +176,27 @@ pub(crate) fn write_record(w: &mut Writer, rec: &ArrayRecord) {
         );
         w.str(t.name());
         w.u8(t.dtype().wire_tag());
+        // Codec tag + per-codec parameters, alongside the dtype tag.
+        let enc = t.encoding();
+        w.u8(enc.wire_tag());
+        match enc {
+            Encoding::Dense | Encoding::F16 | Encoding::BF16 => {}
+            Encoding::Int8 { scale, zero_point } => {
+                w.f32(scale);
+                w.f32(zero_point);
+            }
+            Encoding::TopK { k } => w.u32(k),
+            Encoding::TopKInt8 {
+                k,
+                scale,
+                zero_point,
+            } => {
+                w.u32(k);
+                w.f32(scale);
+                w.f32(zero_point);
+            }
+            Encoding::DeltaXor { base_version } => w.u64(base_version),
+        }
         w.u32(t.shape().len() as u32);
         for d in t.shape() {
             assert!(
@@ -203,6 +226,28 @@ pub(crate) fn read_record(r: &mut FrameReader) -> Result<ArrayRecord, WireError>
     for _ in 0..n {
         let name = r.str()?;
         let dtype = DType::from_wire_tag(r.u8()?)?;
+        // Codec tag + per-codec parameters. An unknown tag (a newer
+        // peer's codec) surfaces as `BadTag` — callers on the result
+        // path convert it into a typed per-node refusal.
+        let enc = match r.u8()? {
+            0 => Encoding::Dense,
+            1 => Encoding::F16,
+            2 => Encoding::BF16,
+            3 => Encoding::Int8 {
+                scale: r.f32()?,
+                zero_point: r.f32()?,
+            },
+            4 => Encoding::TopK { k: r.u32()? },
+            5 => Encoding::TopKInt8 {
+                k: r.u32()?,
+                scale: r.f32()?,
+                zero_point: r.f32()?,
+            },
+            6 => Encoding::DeltaXor {
+                base_version: r.u64()?,
+            },
+            t => return Err(WireError::BadTag(t)),
+        };
         let ndim = r.u32()? as usize;
         if ndim > MAX_SHAPE_DIMS {
             return Err(WireError::TooLong {
@@ -218,18 +263,25 @@ pub(crate) fn read_record(r: &mut FrameReader) -> Result<ArrayRecord, WireError>
             shape.push(d);
         }
         let byte_len = r.u64()?;
+        // Bound BEFORE any narrowing: a wire-supplied u64 length must
+        // never truncate into a smaller platform usize or size an
+        // allocation (satellite: unchecked-length-cast audit).
         if byte_len > MAX_TENSOR_BYTES as u64 {
             return Err(WireError::TooLong {
-                len: byte_len as usize,
+                len: usize::try_from(byte_len).unwrap_or(usize::MAX),
                 limit: MAX_TENSOR_BYTES,
             });
         }
-        let want = elems.saturating_mul(dtype.size_of() as u64);
+        // Exact per-encoding length in u64 math (a hostile `k` cannot
+        // overflow), validated against the declared byte length.
+        let want = enc.encoded_byte_len(dtype, elems);
         if want != byte_len {
-            return Err(WireError::Malformed("tensor byte length != dtype * shape"));
+            return Err(WireError::Malformed(
+                "tensor byte length != encoding * shape",
+            ));
         }
         let data = r.take_shared(byte_len as usize)?;
-        let tensor = Tensor::new(name, dtype, shape, data)
+        let tensor = Tensor::new_encoded(name, dtype, shape, enc, data)
             .map_err(|_| WireError::Malformed("invalid tensor segment"))?;
         tensors.push(tensor);
     }
@@ -833,21 +885,57 @@ impl FlowerMsg {
                 requested: check_pinned_node_id(r.u64()?)?,
             },
             1 => FlowerMsg::PullTaskIns { node_id: r.u64()? },
-            2 => FlowerMsg::PushTaskRes {
-                res: TaskRes {
-                    task_id: r.u64()?,
-                    run_id: r.u64()?,
-                    node_id: r.u64()?,
-                    error: r.str()?,
-                    message_type: read_message_type(&mut r)?,
-                    parameters: read_record(&mut r)?,
-                    num_examples: r.u64()?,
-                    loss: r.f64()?,
-                    metrics: read_metrics(&mut r)?,
-                    configs: read_config(&mut r)?,
-                    model_version: r.u64()?,
-                },
-            },
+            2 => {
+                let task_id = r.u64()?;
+                let run_id = r.u64()?;
+                let node_id = r.u64()?;
+                let error = r.str()?;
+                let message_type = read_message_type(&mut r)?;
+                match read_record(&mut r) {
+                    Ok(parameters) => FlowerMsg::PushTaskRes {
+                        res: TaskRes {
+                            task_id,
+                            run_id,
+                            node_id,
+                            error,
+                            message_type,
+                            parameters,
+                            num_examples: r.u64()?,
+                            loss: r.f64()?,
+                            metrics: read_metrics(&mut r)?,
+                            configs: read_config(&mut r)?,
+                            model_version: r.u64()?,
+                        },
+                    },
+                    // An unknown codec/dtype tag from a newer peer: the
+                    // result header already named its task/run/node, so
+                    // surface a typed PER-NODE refusal the SuperLink
+                    // stores like any failed result (mirrors
+                    // `UNHANDLED_MESSAGE_ERR`) instead of erroring the
+                    // whole frame or panicking.
+                    Err(WireError::BadTag(t)) => {
+                        crate::telemetry::bump("codec.unsupported_refusals", 1);
+                        FlowerMsg::PushTaskRes {
+                            res: TaskRes {
+                                task_id,
+                                run_id,
+                                node_id,
+                                error: format!(
+                                    "{UNSUPPORTED_CODEC_ERR}: unknown wire tag {t} in result"
+                                ),
+                                message_type,
+                                parameters: ArrayRecord::new(),
+                                num_examples: 0,
+                                loss: 0.0,
+                                metrics: MetricRecord::new(),
+                                configs: ConfigRecord::new(),
+                                model_version: 0,
+                            },
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
             3 => FlowerMsg::DeleteNode { node_id: r.u64()? },
             4 => FlowerMsg::Subscribe { node_id: r.u64()? },
             16 => FlowerMsg::NodeCreated { node_id: r.u64()? },
@@ -1454,6 +1542,7 @@ mod tests {
         w.u32(1); // one tensor
         w.str("t");
         w.u8(DType::U8.wire_tag());
+        w.u8(0); // codec: dense
         w.u32(1); // ndim
         w.u32(u32::MAX); // dim
         w.u64(MAX_TENSOR_BYTES as u64 + 1);
@@ -1474,6 +1563,7 @@ mod tests {
         w.u32(1);
         w.str("t");
         w.u8(DType::F32.wire_tag());
+        w.u8(0); // codec: dense
         w.u32(1);
         w.u32(3); // 3 f32 elements -> needs 12 bytes
         w.u64(8); // but claims 8
@@ -1510,5 +1600,217 @@ mod tests {
         w.u32((MAX_TASKS_PER_LIST + 1) as u32);
         let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
         assert!(matches!(err, WireError::TooLong { .. }), "{err:?}");
+    }
+
+    // -- wire compression ---------------------------------------------------
+
+    /// One tensor per codec, compressed from the same dense source.
+    fn encoded_record() -> ArrayRecord {
+        let vals: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.37).collect();
+        let dense = Tensor::from_f32("w", vec![4, 4], &vals);
+        let base = Tensor::from_f32("w", vec![4, 4], &vec![0.125f32; 16]);
+        let mk = |name: &str, codec, base: Option<(&Tensor, u64)>| {
+            let mut t = dense.compress(codec, base);
+            t = Tensor::new_encoded(name, t.dtype(), t.shape().to_vec(), t.encoding(), {
+                t.data().clone()
+            })
+            .unwrap();
+            t
+        };
+        ArrayRecord::from_tensors(vec![
+            dense.clone(),
+            mk("w_f16", WireCodec::F16, None),
+            mk("w_bf16", WireCodec::Bf16, None),
+            mk("w_int8", WireCodec::Int8, None),
+            mk("w_topk", WireCodec::TopK, None),
+            mk("w_topk8", WireCodec::Int8TopK, None),
+            mk("w_delta", WireCodec::Delta, Some((&base, 7))),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn encoded_tensors_roundtrip_every_codec() {
+        let rec = encoded_record();
+        let res = TaskRes {
+            parameters: rec.clone(),
+            ..sample_res()
+        };
+        let frame = Bytes::from_vec(FlowerMsg::PushTaskRes { res }.encode());
+        match FlowerMsg::decode_shared(frame.clone()).unwrap() {
+            FlowerMsg::PushTaskRes { res: back } => {
+                assert!(back.parameters.bits_equal(&rec), "codec tags + params survive");
+                // Compressed payloads stay zero-copy views of the frame.
+                for t in back.parameters.tensors() {
+                    assert!(
+                        frame.shares_allocation(t.data()),
+                        "tensor '{}' was copied out of the frame",
+                        t.name()
+                    );
+                }
+                // The codec tag decoded, not just the bytes.
+                assert_eq!(
+                    back.parameters.get("w_f16").unwrap().encoding(),
+                    Encoding::F16
+                );
+                assert!(matches!(
+                    back.parameters.get("w_delta").unwrap().encoding(),
+                    Encoding::DeltaXor { base_version: 7 }
+                ));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Craft a PushTaskRes frame up to (and including) a bad codec or
+    /// dtype tag on its first tensor segment.
+    fn res_frame_with_tags(dtype_tag: u8, codec_tag: u8) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(2); // PushTaskRes
+        w.u64(11); // task_id
+        w.u64(5); // run_id
+        w.u64(44); // node_id
+        w.str(""); // error
+        w.u8(0); // message type: Train
+        w.u32(1); // one tensor
+        w.str("t");
+        w.u8(dtype_tag);
+        w.u8(codec_tag);
+        w.into_bytes()
+    }
+
+    #[test]
+    fn unknown_codec_tag_in_result_becomes_typed_per_node_refusal() {
+        // A newer peer's codec must surface per-node (mirroring the
+        // clientapp's UNHANDLED_MESSAGE_ERR), not kill the frame.
+        for frame in [res_frame_with_tags(DType::F32.wire_tag(), 99), {
+            // Unknown *dtype* tag takes the same refusal path.
+            res_frame_with_tags(250, 0)
+        }] {
+            match FlowerMsg::decode(&frame).unwrap() {
+                FlowerMsg::PushTaskRes { res } => {
+                    assert!(
+                        crate::flower::records::is_unsupported_codec(&res.error),
+                        "typed marker, got {:?}",
+                        res.error
+                    );
+                    assert_eq!(res.task_id, 11);
+                    assert_eq!(res.run_id, 5);
+                    assert_eq!(res.node_id, 44, "refusal keeps its node identity");
+                    assert!(res.parameters.is_empty());
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_codec_tag_in_instruction_is_a_frame_error() {
+        // Instructions flow link -> node: there is no per-node failure
+        // record to file, so a bad tag is a plain decode error.
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(17); // TaskInsList
+        w.u8(1); // active
+        w.u32(1); // one task
+        w.u64(1); // task_id
+        w.u64(1); // run_id
+        w.u64(1); // round
+        w.u8(0); // message type: Train
+        w.u32(0); // attempt
+        w.u8(0); // redeliver
+        w.u64(0); // model_version
+        w.u32(1); // one tensor
+        w.str("t");
+        w.u8(DType::F32.wire_tag());
+        w.u8(99); // unknown codec
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::BadTag(99)), "{err:?}");
+    }
+
+    #[test]
+    fn corrupt_codec_params_rejected_not_panicking() {
+        // top-k claiming more kept entries than the tensor has elements.
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(2);
+        w.u64(1);
+        w.u64(1);
+        w.u64(1);
+        w.str("");
+        w.u8(0);
+        w.u32(1);
+        w.str("t");
+        w.u8(DType::F32.wire_tag());
+        w.u8(4); // TopK
+        w.u32(9); // k = 9 > 4 elems
+        w.u32(1); // ndim
+        w.u32(4); // dim
+        w.u64(9 * 8); // consistent with k but not with elems
+        w.raw(&[0u8; 72]);
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+
+        // int8 declared on a non-f32 tensor.
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(2);
+        w.u64(1);
+        w.u64(1);
+        w.u64(1);
+        w.str("");
+        w.u8(0);
+        w.u32(1);
+        w.str("t");
+        w.u8(DType::I64.wire_tag());
+        w.u8(3); // Int8
+        w.f32(1.0);
+        w.f32(0.0);
+        w.u32(1);
+        w.u32(4);
+        w.u64(4); // 4 quantized bytes
+        w.raw(&[0u8; 4]);
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+
+        // Oversized declared byte length must bound-check in u64 math
+        // before any narrowing (never an attacker-sized allocation).
+        let mut w = Writer::new();
+        w.u8(FRAME_MAGIC_V2);
+        w.u8(2);
+        w.u64(1);
+        w.u64(1);
+        w.u64(1);
+        w.str("");
+        w.u8(0);
+        w.u32(1);
+        w.str("t");
+        w.u8(DType::F32.wire_tag());
+        w.u8(1); // F16
+        w.u32(1);
+        w.u32(u32::MAX);
+        w.u64(u64::MAX - 3); // would truncate on a 32-bit cast
+        let err = FlowerMsg::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::TooLong { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn v1_frames_decode_with_identity_codec_defaults() {
+        // Legacy peers predate codec tags entirely: every tensor a v1
+        // frame produces is dense/identity.
+        let res = TaskRes {
+            parameters: ArrayRecord::from_flat(&[1.0, -2.5, 3.25]),
+            ..sample_res()
+        };
+        let v1 = FlowerMsg::PushTaskRes { res }.encode_v1();
+        match FlowerMsg::decode(&v1).unwrap() {
+            FlowerMsg::PushTaskRes { res: back } => {
+                for t in back.parameters.tensors() {
+                    assert_eq!(t.encoding(), Encoding::Dense, "v1 implies identity codec");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

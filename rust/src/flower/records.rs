@@ -308,16 +308,311 @@ impl DType {
 }
 
 // ---------------------------------------------------------------------------
+// Encoding — per-tensor wire compression
+// ---------------------------------------------------------------------------
+
+/// Typed error marker for codec refusals: a peer asked for (or sent) a
+/// wire encoding this build does not understand, or a driver refused a
+/// codec its strategy cannot honour. Mirrors
+/// `clientapp::UNHANDLED_MESSAGE_ERR` — the refusal travels as a typed
+/// per-node error result, never a panic or a silent drop.
+pub const UNSUPPORTED_CODEC_ERR: &str = "unsupported codec";
+
+/// Is `error` a codec refusal (see [`UNSUPPORTED_CODEC_ERR`])?
+pub fn is_unsupported_codec(error: &str) -> bool {
+    error.starts_with(UNSUPPORTED_CODEC_ERR)
+}
+
+/// Config key carrying the negotiated wire codec name on fit
+/// instructions. The driver writes it from `ServerConfig::codec`; the
+/// client compresses its reply accordingly. Absent key = identity
+/// (dense) — v1 peers and old configs keep working unchanged.
+pub const WIRE_CODEC_KEY: &str = "wire_codec";
+
+/// Keep ratio denominator for top-k sparsification: the encoder keeps
+/// the `ceil(n / TOPK_KEEP_DENOM)` largest-magnitude elements.
+pub const TOPK_KEEP_DENOM: usize = 4;
+
+/// How one tensor's payload bytes are encoded on the wire. `Dense` is
+/// the classic packed little-endian layout; everything else is a
+/// compressed form carried per tensor via a codec tag alongside the
+/// dtype tag (wire v2). All compressed numeric forms are defined over
+/// logical `F32` tensors only; [`Encoding::DeltaXor`] is a bitwise (and
+/// therefore lossless) transform valid for any dtype.
+///
+/// Payload layouts (all little-endian):
+/// * `F16` / `BF16` — 2 bytes per element (IEEE half / bfloat16 bits).
+/// * `Int8` — 1 byte per element; `value = zero_point + scale * q`.
+/// * `TopK { k }` — `k` u32 element indices (strictly ascending),
+///   then `k` f32 values (exact bit patterns of the kept elements);
+///   absent elements decode as 0.0.
+/// * `TopKInt8` — `k` u32 indices then `k` u8 quantized values.
+/// * `DeltaXor { base_version }` — same length as dense; each byte is
+///   XORed with the base model's payload at `base_version`. Must be
+///   resolved via [`ArrayRecord::resolve_delta`] before element access.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Encoding {
+    Dense,
+    F16,
+    BF16,
+    Int8 { scale: f32, zero_point: f32 },
+    TopK { k: u32 },
+    TopKInt8 { k: u32, scale: f32, zero_point: f32 },
+    DeltaXor { base_version: u64 },
+}
+
+impl Encoding {
+    pub fn wire_tag(&self) -> u8 {
+        match self {
+            Encoding::Dense => 0,
+            Encoding::F16 => 1,
+            Encoding::BF16 => 2,
+            Encoding::Int8 { .. } => 3,
+            Encoding::TopK { .. } => 4,
+            Encoding::TopKInt8 { .. } => 5,
+            Encoding::DeltaXor { .. } => 6,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Encoding::Dense => "dense",
+            Encoding::F16 => "fp16",
+            Encoding::BF16 => "bf16",
+            Encoding::Int8 { .. } => "int8",
+            Encoding::TopK { .. } => "topk",
+            Encoding::TopKInt8 { .. } => "int8_topk",
+            Encoding::DeltaXor { .. } => "delta",
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Encoding::Dense)
+    }
+
+    /// Does decoding lose information? Quantized forms do; `Dense` and
+    /// the bitwise `DeltaXor` do not. `TopK` counts as lossy here: it
+    /// drops elements, which is only exact when the dropped elements
+    /// are exactly zero (callers that know their updates are sparse get
+    /// bit-exactness; a gate cannot know that).
+    pub fn is_lossy(&self) -> bool {
+        !matches!(self, Encoding::Dense | Encoding::DeltaXor { .. })
+    }
+
+    /// Exact encoded payload length in bytes for a tensor of `dtype`
+    /// with `elems` elements (u64 math — wire-supplied `k` never
+    /// truncates on narrow platforms).
+    pub fn encoded_byte_len(&self, dtype: DType, elems: u64) -> u64 {
+        match self {
+            Encoding::Dense | Encoding::DeltaXor { .. } => {
+                elems.saturating_mul(dtype.size_of() as u64)
+            }
+            Encoding::F16 | Encoding::BF16 => elems.saturating_mul(2),
+            Encoding::Int8 { .. } => elems,
+            Encoding::TopK { k } => (*k as u64).saturating_mul(8),
+            Encoding::TopKInt8 { k, .. } => (*k as u64).saturating_mul(5),
+        }
+    }
+
+    /// Compressed numeric encodings are defined over logical F32
+    /// tensors only (DeltaXor is bitwise and dtype-agnostic).
+    pub fn requires_f32(&self) -> bool {
+        !matches!(self, Encoding::Dense | Encoding::DeltaXor { .. })
+    }
+}
+
+/// The negotiated wire codec policy — what [`WIRE_CODEC_KEY`] carries
+/// and what [`ArrayRecord::compress`] applies per tensor. `Identity`
+/// leaves every tensor dense.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireCodec {
+    #[default]
+    Identity,
+    F16,
+    Bf16,
+    Int8,
+    TopK,
+    Int8TopK,
+    Delta,
+}
+
+impl WireCodec {
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCodec::Identity => "identity",
+            WireCodec::F16 => "fp16",
+            WireCodec::Bf16 => "bf16",
+            WireCodec::Int8 => "int8",
+            WireCodec::TopK => "topk",
+            WireCodec::Int8TopK => "int8_topk",
+            WireCodec::Delta => "delta",
+        }
+    }
+
+    /// Parse a negotiation-key value. `None` = unknown codec (e.g. from
+    /// a newer peer) — the caller must refuse with a typed
+    /// [`UNSUPPORTED_CODEC_ERR`], never guess.
+    pub fn from_name(s: &str) -> Option<WireCodec> {
+        Some(match s {
+            "identity" => WireCodec::Identity,
+            "fp16" => WireCodec::F16,
+            "bf16" => WireCodec::Bf16,
+            "int8" => WireCodec::Int8,
+            "topk" => WireCodec::TopK,
+            "int8_topk" => WireCodec::Int8TopK,
+            "delta" => WireCodec::Delta,
+            _ => return None,
+        })
+    }
+
+    /// Lossy codecs are refused by strategies whose arithmetic cannot
+    /// survive quantization (`Strategy::supports_lossy_codec`, e.g.
+    /// secure aggregation masks).
+    pub fn is_lossy(self) -> bool {
+        !matches!(self, WireCodec::Identity | WireCodec::Delta)
+    }
+}
+
+// ---- f16 / bf16 bit conversions (no external deps; round-to-nearest-even)
+
+/// f32 -> IEEE 754 binary16 bits, round-to-nearest-even. NaNs collapse
+/// to the canonical quiet NaN (payloads don't survive — documented
+/// lossy behaviour); overflow rounds to ±inf.
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs > 0x7f80_0000 {
+        return sign | 0x7e00; // NaN -> canonical qNaN
+    }
+    if abs >= 0x477f_f000 {
+        return sign | 0x7c00; // >= 65520 rounds to inf (f16 max = 65504)
+    }
+    let exp = (abs >> 23) as i32 - 127;
+    if exp < -24 {
+        return sign; // underflow to signed zero
+    }
+    if exp < -14 {
+        // Subnormal f16: implicit bit restored, round-to-nearest-even.
+        let man = (abs & 0x007f_ffff) | 0x0080_0000;
+        let shift = (13 - 14 - exp) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = man + (half - 1) + ((man >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    let exp16 = (exp + 15) as u32;
+    let man = abs & 0x007f_ffff;
+    let mut out = (exp16 << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+        out += 1; // carry may bump the exponent — correct (rounds up)
+    }
+    sign | out as u16
+}
+
+/// IEEE 754 binary16 bits -> f32 (exact).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: normalize into f32's wider exponent range.
+            let mut e: u32 = 113; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> bfloat16 bits, round-to-nearest-even. NaNs keep their sign
+/// and are forced quiet.
+pub(crate) fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fffu32 + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bfloat16 bits -> f32 (exact).
+pub(crate) fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+#[inline]
+fn u16_at(s: &[u8], i: usize) -> u16 {
+    u16::from_le_bytes([s[2 * i], s[2 * i + 1]])
+}
+
+#[inline]
+fn u32_at(s: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([s[4 * i], s[4 * i + 1], s[4 * i + 2], s[4 * i + 3]])
+}
+
+#[inline]
+fn dequant_int8(q: u8, scale: f32, zero_point: f32) -> f32 {
+    zero_point + scale * q as f32
+}
+
+/// Affine quantization range for a slice of values: `(scale,
+/// zero_point)` such that `value ≈ zero_point + scale * q`, `q ∈
+/// [0, 255]`. Constant tensors get `scale = 0` and decode exactly.
+/// Non-finite values are ignored for range selection (they clamp).
+fn int8_range(vals: impl Iterator<Item = f32>) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for v in vals {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        let zp = if lo.is_finite() { lo } else { 0.0 };
+        return (0.0, zp);
+    }
+    ((hi - lo) / 255.0, lo)
+}
+
+#[inline]
+fn quant_int8(v: f32, scale: f32, zero_point: f32) -> u8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    // NaN casts to 0, infinities saturate — Rust's float->int cast.
+    ((v - zero_point) / scale).round().clamp(0.0, 255.0) as u8
+}
+
+// ---------------------------------------------------------------------------
 // Tensor
 // ---------------------------------------------------------------------------
 
 /// A named, shaped, dtyped tensor whose payload is a little-endian
 /// packed byte view into a shared buffer. Cloning is O(1).
+///
+/// The payload may be wire-compressed (see [`Encoding`]); `shape`
+/// always describes the LOGICAL tensor, and element accessors
+/// ([`Tensor::get_f64`], [`Tensor::fold_weighted`]) decode the encoding
+/// on the fly — there is no eager dequantization buffer.
 #[derive(Clone)]
 pub struct Tensor {
     name: String,
     dtype: DType,
     shape: Vec<usize>,
+    enc: Encoding,
     data: Bytes,
 }
 
@@ -334,19 +629,65 @@ impl Tensor {
         shape: Vec<usize>,
         data: Bytes,
     ) -> anyhow::Result<Tensor> {
+        Tensor::new_encoded(name, dtype, shape, Encoding::Dense, data)
+    }
+
+    /// Wrap an existing (possibly wire-compressed) byte view. Validates
+    /// the payload length against the encoding's exact layout, the
+    /// F32-only restriction of the numeric codecs, and — for top-k
+    /// forms — that the index section is strictly ascending and in
+    /// bounds (a hostile frame must not be able to aim a fold at an
+    /// out-of-range accumulator slot or double-add an index).
+    pub fn new_encoded(
+        name: impl Into<String>,
+        dtype: DType,
+        shape: Vec<usize>,
+        enc: Encoding,
+        data: Bytes,
+    ) -> anyhow::Result<Tensor> {
         let name = name.into();
-        let want = elems_of(&shape) * dtype.size_of();
+        let elems = elems_of(&shape);
         anyhow::ensure!(
-            data.len() == want,
-            "tensor '{name}': payload {} bytes, {} {:?} needs {want}",
+            !enc.requires_f32() || dtype == DType::F32,
+            "tensor '{name}': encoding {} is only defined for f32, got {}",
+            enc.name(),
+            dtype.name()
+        );
+        let want = enc.encoded_byte_len(dtype, elems as u64);
+        anyhow::ensure!(
+            data.len() as u64 == want,
+            "tensor '{name}': payload {} bytes, {} {} {:?} needs {want}",
             data.len(),
+            enc.name(),
             dtype.name(),
             shape
         );
+        if let Encoding::TopK { k } | Encoding::TopKInt8 { k, .. } = enc {
+            let k = k as usize;
+            anyhow::ensure!(
+                k <= elems,
+                "tensor '{name}': top-k keeps {k} of {elems} elements"
+            );
+            let s = data.as_slice();
+            let mut prev: Option<u32> = None;
+            for j in 0..k {
+                let idx = u32_at(s, j);
+                anyhow::ensure!(
+                    (idx as usize) < elems,
+                    "tensor '{name}': top-k index {idx} out of {elems}"
+                );
+                anyhow::ensure!(
+                    prev.map_or(true, |p| idx > p),
+                    "tensor '{name}': top-k indices not strictly ascending"
+                );
+                prev = Some(idx);
+            }
+        }
         Ok(Tensor {
             name,
             dtype,
             shape,
+            enc,
             data,
         })
     }
@@ -362,6 +703,7 @@ impl Tensor {
             name: name.into(),
             dtype: DType::F32,
             shape,
+            enc: Encoding::Dense,
             data: Bytes::from_vec(buf),
         }
     }
@@ -377,6 +719,7 @@ impl Tensor {
             name: name.into(),
             dtype: DType::F64,
             shape,
+            enc: Encoding::Dense,
             data: Bytes::from_vec(buf),
         }
     }
@@ -392,6 +735,7 @@ impl Tensor {
             name: name.into(),
             dtype: DType::I64,
             shape,
+            enc: Encoding::Dense,
             data: Bytes::from_vec(buf),
         }
     }
@@ -403,6 +747,7 @@ impl Tensor {
             name: name.into(),
             dtype: DType::U8,
             shape,
+            enc: Encoding::Dense,
             data: Bytes::copy_from_slice(vals),
         }
     }
@@ -433,31 +778,81 @@ impl Tensor {
         &self.data
     }
 
-    /// Element `i` as f64 (lossless for F32/F64; exact for I64/U8 within
-    /// f64's 53-bit integer range).
+    /// The tensor's wire encoding (`Dense` for anything built by the
+    /// plain constructors).
+    pub fn encoding(&self) -> Encoding {
+        self.enc
+    }
+
+    /// Binary-search the top-k index section for logical element `i`;
+    /// returns the slot `j` such that `indices[j] == i`. Indices are
+    /// validated strictly ascending at construction.
+    fn topk_slot(&self, k: usize, i: usize) -> Option<usize> {
+        let s = self.data.as_slice();
+        let (mut lo, mut hi) = (0usize, k);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            let idx = u32_at(s, mid) as usize;
+            match idx.cmp(&i) {
+                std::cmp::Ordering::Equal => return Some(mid),
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+            }
+        }
+        None
+    }
+
+    /// Element `i` as f64, decoding the wire encoding on the fly
+    /// (lossless for dense F32/F64; exact for I64/U8 within f64's
+    /// 53-bit integer range; dequantized for compressed encodings;
+    /// sparsified-away elements read 0.0). Panics for unresolved
+    /// delta tensors — resolve via [`ArrayRecord::resolve_delta`]
+    /// before element access (mirrors `get_bits_u64`'s dtype panic).
     #[inline]
     pub fn get_f64(&self, i: usize) -> f64 {
         let s = self.data.as_slice();
-        match self.dtype {
-            DType::F32 => {
-                let o = i * 4;
-                f32::from_bits(u32::from_le_bytes([s[o], s[o + 1], s[o + 2], s[o + 3]])) as f64
-            }
-            DType::F64 => {
-                let o = i * 8;
-                f64::from_bits(u64::from_le_bytes([
-                    s[o],
-                    s[o + 1],
-                    s[o + 2],
-                    s[o + 3],
-                    s[o + 4],
-                    s[o + 5],
-                    s[o + 6],
-                    s[o + 7],
-                ]))
-            }
-            DType::I64 => self.get_bits_u64(i) as i64 as f64,
-            DType::U8 => s[i] as f64,
+        match self.enc {
+            Encoding::Dense => match self.dtype {
+                DType::F32 => {
+                    let o = i * 4;
+                    f32::from_bits(u32::from_le_bytes([s[o], s[o + 1], s[o + 2], s[o + 3]])) as f64
+                }
+                DType::F64 => {
+                    let o = i * 8;
+                    f64::from_bits(u64::from_le_bytes([
+                        s[o],
+                        s[o + 1],
+                        s[o + 2],
+                        s[o + 3],
+                        s[o + 4],
+                        s[o + 5],
+                        s[o + 6],
+                        s[o + 7],
+                    ]))
+                }
+                DType::I64 => self.get_bits_u64(i) as i64 as f64,
+                DType::U8 => s[i] as f64,
+            },
+            Encoding::F16 => f16_bits_to_f32(u16_at(s, i)) as f64,
+            Encoding::BF16 => bf16_bits_to_f32(u16_at(s, i)) as f64,
+            Encoding::Int8 { scale, zero_point } => dequant_int8(s[i], scale, zero_point) as f64,
+            Encoding::TopK { k } => match self.topk_slot(k as usize, i) {
+                Some(j) => f32::from_bits(u32_at(s, k as usize + j)) as f64,
+                None => 0.0,
+            },
+            Encoding::TopKInt8 {
+                k,
+                scale,
+                zero_point,
+            } => match self.topk_slot(k as usize, i) {
+                Some(j) => dequant_int8(s[4 * k as usize + j], scale, zero_point) as f64,
+                None => 0.0,
+            },
+            Encoding::DeltaXor { base_version } => panic!(
+                "tensor '{}' is delta-encoded against model v{base_version} — \
+                 resolve_delta before element access",
+                self.name
+            ),
         }
     }
 
@@ -480,29 +875,299 @@ impl Tensor {
         ])
     }
 
-    /// Contiguous iterator over an F32 tensor's elements — the hot
+    /// Contiguous iterator over a DENSE F32 tensor's elements — the hot
     /// aggregation loops use this instead of per-index [`Tensor::get_f64`]
     /// so the reduction stays a vectorizable linear scan. Panics for
-    /// other dtypes.
+    /// other dtypes and for wire-compressed payloads (compressed
+    /// tensors fold through [`Tensor::fold_weighted`] instead).
     pub fn f32_iter(&self) -> impl Iterator<Item = f32> + '_ {
         assert_eq!(self.dtype, DType::F32, "f32_iter on {:?}", self.dtype);
+        assert!(
+            self.enc.is_dense(),
+            "f32_iter on {}-encoded tensor '{}'",
+            self.enc.name(),
+            self.name
+        );
         self.data
             .as_slice()
             .chunks_exact(4)
             .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
     }
 
-    /// Decode as f32, casting non-f32 dtypes (the canonical flat view).
+    /// Fold `w * element` into `acc` in ONE pass over the encoded
+    /// payload — the quantized-aggregation hot path: fp16/bf16/int8
+    /// segments dequantize here, at accumulate time, never into an
+    /// intermediate dense buffer, and top-k forms touch only their `k`
+    /// stored entries (absent elements contribute exactly 0).
+    pub fn fold_weighted(&self, acc: &mut [f64], w: f64) {
+        assert_eq!(acc.len(), self.elems(), "fold_weighted accumulator size");
+        let s = self.data.as_slice();
+        match self.enc {
+            Encoding::Dense => match self.dtype {
+                DType::F32 => {
+                    for (o, c) in acc.iter_mut().zip(s.chunks_exact(4)) {
+                        *o += w
+                            * f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])) as f64;
+                    }
+                }
+                _ => {
+                    for (i, o) in acc.iter_mut().enumerate() {
+                        *o += w * self.get_f64(i);
+                    }
+                }
+            },
+            Encoding::F16 => {
+                for (o, c) in acc.iter_mut().zip(s.chunks_exact(2)) {
+                    *o += w * f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])) as f64;
+                }
+            }
+            Encoding::BF16 => {
+                for (o, c) in acc.iter_mut().zip(s.chunks_exact(2)) {
+                    *o += w * bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])) as f64;
+                }
+            }
+            Encoding::Int8 { scale, zero_point } => {
+                for (o, &q) in acc.iter_mut().zip(s.iter()) {
+                    *o += w * dequant_int8(q, scale, zero_point) as f64;
+                }
+            }
+            Encoding::TopK { k } => {
+                let k = k as usize;
+                for j in 0..k {
+                    let idx = u32_at(s, j) as usize;
+                    acc[idx] += w * f32::from_bits(u32_at(s, k + j)) as f64;
+                }
+            }
+            Encoding::TopKInt8 {
+                k,
+                scale,
+                zero_point,
+            } => {
+                let k = k as usize;
+                for j in 0..k {
+                    let idx = u32_at(s, j) as usize;
+                    acc[idx] += w * dequant_int8(s[4 * k + j], scale, zero_point) as f64;
+                }
+            }
+            Encoding::DeltaXor { base_version } => panic!(
+                "tensor '{}' is delta-encoded against model v{base_version} — \
+                 resolve_delta before aggregation",
+                self.name
+            ),
+        }
+    }
+
+    /// Decode as f32, casting non-f32 dtypes and decompressing wire
+    /// encodings (the canonical flat view). Top-k values keep their
+    /// exact stored bit patterns.
     pub fn to_f32_vec(&self) -> Vec<f32> {
         let n = self.elems();
         let s = self.data.as_slice();
-        match self.dtype {
-            DType::F32 => s
-                .chunks_exact(4)
-                .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+        match self.enc {
+            Encoding::Dense => match self.dtype {
+                DType::F32 => s
+                    .chunks_exact(4)
+                    .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+                    .collect(),
+                _ => (0..n).map(|i| self.get_f64(i) as f32).collect(),
+            },
+            Encoding::F16 => (0..n).map(|i| f16_bits_to_f32(u16_at(s, i))).collect(),
+            Encoding::BF16 => (0..n).map(|i| bf16_bits_to_f32(u16_at(s, i))).collect(),
+            Encoding::Int8 { scale, zero_point } => s
+                .iter()
+                .map(|&q| dequant_int8(q, scale, zero_point))
                 .collect(),
-            _ => (0..n).map(|i| self.get_f64(i) as f32).collect(),
+            Encoding::TopK { k } => {
+                let k = k as usize;
+                let mut out = vec![0.0f32; n];
+                for j in 0..k {
+                    out[u32_at(s, j) as usize] = f32::from_bits(u32_at(s, k + j));
+                }
+                out
+            }
+            Encoding::TopKInt8 {
+                k,
+                scale,
+                zero_point,
+            } => {
+                let k = k as usize;
+                let mut out = vec![0.0f32; n];
+                for j in 0..k {
+                    out[u32_at(s, j) as usize] = dequant_int8(s[4 * k + j], scale, zero_point);
+                }
+                out
+            }
+            Encoding::DeltaXor { base_version } => panic!(
+                "tensor '{}' is delta-encoded against model v{base_version} — \
+                 resolve_delta before decoding",
+                self.name
+            ),
         }
+    }
+
+    /// Decompress into a dense tensor of the same name/dtype/shape
+    /// (identity clone for dense input). Panics for unresolved delta
+    /// tensors.
+    pub fn to_dense(&self) -> Tensor {
+        if self.enc.is_dense() {
+            return self.clone();
+        }
+        Tensor::from_f32(self.name.clone(), self.shape.clone(), &self.to_f32_vec())
+    }
+
+    /// Compress a dense F32 tensor under `codec`. Non-F32, already
+    /// compressed, and empty tensors pass through unchanged (so mixed
+    /// records — e.g. secagg's masked I64 lanes — survive any policy).
+    /// `base` supplies the (dense) base model tensor and its version
+    /// for [`WireCodec::Delta`]; a missing or shape-mismatched base
+    /// falls back to dense passthrough rather than corrupting bytes.
+    pub fn compress(&self, codec: WireCodec, base: Option<(&Tensor, u64)>) -> Tensor {
+        let n = self.elems();
+        if !self.enc.is_dense() || codec == WireCodec::Identity || n == 0 {
+            return self.clone();
+        }
+        if codec == WireCodec::Delta {
+            return match base {
+                Some((bt, version))
+                    if bt.enc.is_dense()
+                        && bt.dtype == self.dtype
+                        && bt.shape == self.shape
+                        && bt.data.len() == self.data.len() =>
+                {
+                    let xored: Vec<u8> = self
+                        .data
+                        .as_slice()
+                        .iter()
+                        .zip(bt.data.as_slice())
+                        .map(|(a, b)| a ^ b)
+                        .collect();
+                    Tensor {
+                        name: self.name.clone(),
+                        dtype: self.dtype,
+                        shape: self.shape.clone(),
+                        enc: Encoding::DeltaXor {
+                            base_version: version,
+                        },
+                        data: Bytes::from_vec(xored),
+                    }
+                }
+                _ => self.clone(),
+            };
+        }
+        if self.dtype != DType::F32 {
+            return self.clone();
+        }
+        let (enc, data) = match codec {
+            WireCodec::F16 => (
+                Encoding::F16,
+                self.f32_iter()
+                    .flat_map(|v| f32_to_f16_bits(v).to_le_bytes())
+                    .collect::<Vec<u8>>(),
+            ),
+            WireCodec::Bf16 => (
+                Encoding::BF16,
+                self.f32_iter()
+                    .flat_map(|v| f32_to_bf16_bits(v).to_le_bytes())
+                    .collect::<Vec<u8>>(),
+            ),
+            WireCodec::Int8 => {
+                let (scale, zero_point) = int8_range(self.f32_iter());
+                (
+                    Encoding::Int8 { scale, zero_point },
+                    self.f32_iter()
+                        .map(|v| quant_int8(v, scale, zero_point))
+                        .collect::<Vec<u8>>(),
+                )
+            }
+            WireCodec::TopK | WireCodec::Int8TopK => {
+                let k = (n + TOPK_KEEP_DENOM - 1) / TOPK_KEEP_DENOM;
+                let mut order: Vec<(usize, f32)> = self.f32_iter().enumerate().collect();
+                // Largest magnitude first; ties break on the lower
+                // index — fully deterministic across platforms.
+                order.sort_unstable_by(|a, b| {
+                    b.1.abs()
+                        .total_cmp(&a.1.abs())
+                        .then_with(|| a.0.cmp(&b.0))
+                });
+                order.truncate(k);
+                order.sort_unstable_by_key(|(i, _)| *i);
+                let mut data = Vec::with_capacity(if codec == WireCodec::TopK {
+                    k * 8
+                } else {
+                    k * 5
+                });
+                for (i, _) in &order {
+                    data.extend_from_slice(&(*i as u32).to_le_bytes());
+                }
+                if codec == WireCodec::TopK {
+                    for (_, v) in &order {
+                        data.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                    (Encoding::TopK { k: k as u32 }, data)
+                } else {
+                    let (scale, zero_point) = int8_range(order.iter().map(|(_, v)| *v));
+                    for (_, v) in &order {
+                        data.push(quant_int8(*v, scale, zero_point));
+                    }
+                    (
+                        Encoding::TopKInt8 {
+                            k: k as u32,
+                            scale,
+                            zero_point,
+                        },
+                        data,
+                    )
+                }
+            }
+            WireCodec::Identity | WireCodec::Delta => unreachable!("handled above"),
+        };
+        crate::telemetry::bump("codec.compress_bytes_in", self.data.len() as i64);
+        crate::telemetry::bump("codec.compress_bytes_out", data.len() as i64);
+        Tensor {
+            name: self.name.clone(),
+            dtype: self.dtype,
+            shape: self.shape.clone(),
+            enc,
+            data: Bytes::from_vec(data),
+        }
+    }
+
+    /// Resolve a [`Encoding::DeltaXor`] tensor against its dense base:
+    /// XOR is its own inverse, so this reconstructs the original bytes
+    /// exactly. Errors (typed, never panics) on version or shape
+    /// mismatch. Non-delta tensors pass through unchanged.
+    pub fn resolve_delta(&self, base: &Tensor, expect_version: u64) -> anyhow::Result<Tensor> {
+        let Encoding::DeltaXor { base_version } = self.enc else {
+            return Ok(self.clone());
+        };
+        anyhow::ensure!(
+            base_version == expect_version,
+            "{UNSUPPORTED_CODEC_ERR}: tensor '{}' delta-encoded against model \
+             v{base_version}, server base is v{expect_version}",
+            self.name
+        );
+        anyhow::ensure!(
+            base.enc.is_dense()
+                && base.dtype == self.dtype
+                && base.shape == self.shape
+                && base.data.len() == self.data.len(),
+            "{UNSUPPORTED_CODEC_ERR}: tensor '{}' delta base mismatch",
+            self.name
+        );
+        let bytes: Vec<u8> = self
+            .data
+            .as_slice()
+            .iter()
+            .zip(base.data.as_slice())
+            .map(|(a, b)| a ^ b)
+            .collect();
+        Ok(Tensor {
+            name: self.name.clone(),
+            dtype: self.dtype,
+            shape: self.shape.clone(),
+            enc: Encoding::Dense,
+            data: Bytes::from_vec(bytes),
+        })
     }
 
     /// Build a tensor of `dtype` from f64 values, casting per dtype
@@ -539,9 +1204,9 @@ impl Tensor {
         self.name == other.name && self.dtype == other.dtype && self.shape == other.shape
     }
 
-    /// Byte-exact equality (name, dtype, shape, payload bits).
+    /// Byte-exact equality (name, dtype, shape, encoding, payload bits).
     pub fn bits_equal(&self, other: &Tensor) -> bool {
-        self.dims_match(other) && self.data == other.data
+        self.dims_match(other) && self.enc == other.enc && self.data == other.data
     }
 }
 
@@ -555,10 +1220,11 @@ impl std::fmt::Debug for Tensor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "Tensor({} {} {:?}, {} bytes)",
+            "Tensor({} {} {:?} {}, {} bytes)",
             self.name,
             self.dtype.name(),
             self.shape,
+            self.enc.name(),
             self.data.len()
         )
     }
@@ -654,6 +1320,76 @@ impl ArrayRecord {
                 .iter()
                 .zip(other.tensors.iter())
                 .all(|(a, b)| a.bits_equal(b))
+    }
+
+    /// Are all tensors dense (no wire compression)?
+    pub fn is_all_dense(&self) -> bool {
+        self.tensors.iter().all(|t| t.encoding().is_dense())
+    }
+
+    /// Does any tensor carry an unresolved delta encoding?
+    pub fn has_delta(&self) -> bool {
+        self.tensors
+            .iter()
+            .any(|t| matches!(t.encoding(), Encoding::DeltaXor { .. }))
+    }
+
+    /// Compress every eligible tensor under `codec` (see
+    /// [`Tensor::compress`]); `base` supplies the dense base record +
+    /// model version for [`WireCodec::Delta`], matched per tensor by
+    /// name. Identity policy returns an O(1) clone.
+    pub fn compress(&self, codec: WireCodec, base: Option<(&ArrayRecord, u64)>) -> ArrayRecord {
+        if codec == WireCodec::Identity {
+            return self.clone();
+        }
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|t| {
+                let b = base.and_then(|(rec, ver)| rec.get(t.name()).map(|bt| (bt, ver)));
+                t.compress(codec, b)
+            })
+            .collect();
+        ArrayRecord { tensors }
+    }
+
+    /// Decompress every tensor to dense (identity for dense records).
+    /// Panics on unresolved delta tensors — resolve first.
+    pub fn to_dense(&self) -> ArrayRecord {
+        ArrayRecord {
+            tensors: self.tensors.iter().map(|t| t.to_dense()).collect(),
+        }
+    }
+
+    /// Resolve any [`Encoding::DeltaXor`] tensors against `base` (the
+    /// dense model the peer encoded against), verifying each tensor's
+    /// claimed base version equals `expect_version`. Records with no
+    /// delta tensors pass through as O(1)-per-tensor clones. Typed
+    /// errors ([`UNSUPPORTED_CODEC_ERR`]) on version/shape/name
+    /// mismatch — never a panic, never silently wrong bytes.
+    pub fn resolve_delta(
+        &self,
+        base: &ArrayRecord,
+        expect_version: u64,
+    ) -> anyhow::Result<ArrayRecord> {
+        if !self.has_delta() {
+            return Ok(self.clone());
+        }
+        let mut tensors = Vec::with_capacity(self.tensors.len());
+        for t in &self.tensors {
+            if matches!(t.encoding(), Encoding::DeltaXor { .. }) {
+                let bt = base.get(t.name()).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "{UNSUPPORTED_CODEC_ERR}: delta tensor '{}' has no base tensor",
+                        t.name()
+                    )
+                })?;
+                tensors.push(t.resolve_delta(bt, expect_version)?);
+            } else {
+                tensors.push(t.clone());
+            }
+        }
+        Ok(ArrayRecord { tensors })
     }
 
     // ---------------- flat-compat shim ----------------
@@ -1022,6 +1758,237 @@ mod tests {
         assert_eq!(m[0].1, 0.25);
         let collected: MetricRecord = vec![("a".to_string(), 1.0)].into_iter().collect();
         assert_eq!(collected.get("a"), Some(1.0));
+    }
+
+    // ------------------------------------------------------------------
+    // Wire-compression codecs
+    // ------------------------------------------------------------------
+
+    fn fold_of(t: &Tensor) -> Vec<f64> {
+        let mut acc = vec![0.0f64; t.elems()];
+        t.fold_weighted(&mut acc, 1.0);
+        acc
+    }
+
+    #[test]
+    fn f16_conversions_roundtrip_representable_values() {
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.1035156e-5, // min normal
+            5.9604645e-8, // min subnormal
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+        ] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "f16 roundtrip of {v}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow rounds to inf; tiny values flush to signed zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e-9)).to_bits(), (-0.0f32).to_bits());
+        // Round-to-nearest-even on a halfway mantissa.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0 + 1.0 / 2048.0)), 1.0);
+    }
+
+    #[test]
+    fn bf16_conversions_roundtrip_representable_values() {
+        for v in [0.0f32, -0.0, 1.0, -2.5, 3.0e38, 1e-38, f32::INFINITY] {
+            let bits = f32_to_bf16_bits(v);
+            let back = bf16_bits_to_f32(bits);
+            // bf16-representable values survive exactly.
+            assert_eq!(f32_to_bf16_bits(back), bits, "bf16 restable {v}");
+        }
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        // Relative error bounded by the 8-bit mantissa.
+        let v = 1.2345678f32;
+        let back = bf16_bits_to_f32(f32_to_bf16_bits(v));
+        assert!((back - v).abs() / v.abs() < 1.0 / 128.0);
+    }
+
+    #[test]
+    fn lossy_encodings_decode_within_tolerance() {
+        let vals: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let t = Tensor::from_f32("w", vec![100], &vals);
+        for codec in [WireCodec::F16, WireCodec::Bf16, WireCodec::Int8] {
+            let c = t.compress(codec, None);
+            assert!(!c.encoding().is_dense(), "{codec:?} compresses");
+            assert!(c.byte_len() < t.byte_len(), "{codec:?} shrinks bytes");
+            let tol = match codec {
+                WireCodec::F16 => 0.02,
+                WireCodec::Bf16 => 0.16,
+                WireCodec::Int8 => 0.08, // range 36.63 / 255 / 2 ≈ 0.072
+                _ => unreachable!(),
+            };
+            for (i, v) in vals.iter().enumerate() {
+                assert!(
+                    (c.get_f64(i) - *v as f64).abs() <= tol,
+                    "{codec:?} elem {i}: {} vs {v}",
+                    c.get_f64(i)
+                );
+            }
+            // One-pass fold agrees with per-element access.
+            let folded = fold_of(&c);
+            for (i, f) in folded.iter().enumerate() {
+                assert_eq!(*f, c.get_f64(i), "{codec:?} fold vs get at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_constant_tensor_decodes_exactly() {
+        let t = Tensor::from_f32("c", vec![5], &[3.25; 5]);
+        let c = t.compress(WireCodec::Int8, None);
+        for i in 0..5 {
+            assert_eq!(c.get_f64(i), 3.25);
+        }
+    }
+
+    #[test]
+    fn topk_of_sparse_values_is_bit_exact() {
+        // 3 of 12 nonzero and k = ceil(12/4) = 3: sparsification of
+        // exact values loses nothing.
+        let mut vals = vec![0.0f32; 12];
+        vals[1] = -7.5;
+        vals[4] = f32::from_bits(0x3f80_0001); // oddball bit pattern
+        vals[11] = 0.125;
+        let t = Tensor::from_f32("g", vec![12], &vals);
+        let c = t.compress(WireCodec::TopK, None);
+        assert_eq!(c.encoding(), Encoding::TopK { k: 3 });
+        assert_eq!(c.byte_len(), 24);
+        let back = c.to_f32_vec();
+        for (a, b) in vals.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(fold_of(&c), vals.iter().map(|v| *v as f64).collect::<Vec<_>>());
+        // Int8 top-k: same support, quantized values, 5 bytes/kept.
+        let q = t.compress(WireCodec::Int8TopK, None);
+        assert_eq!(q.byte_len(), 15);
+        assert_eq!(q.get_f64(0), 0.0);
+        assert!((q.get_f64(1) + 7.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_deterministically() {
+        let t = Tensor::from_f32("g", vec![8], &[1.0, -9.0, 2.0, 2.0, 0.0, 8.0, -2.0, 0.5]);
+        let c = t.compress(WireCodec::TopK, None); // k = 2
+        let back = c.to_f32_vec();
+        assert_eq!(back, vec![0.0, -9.0, 0.0, 0.0, 0.0, 8.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn delta_xor_roundtrips_bit_exact() {
+        let base = Tensor::from_f32("w", vec![4], &[1.0, -2.0, f32::NAN, 0.25]);
+        let new = Tensor::from_f32("w", vec![4], &[1.5, -2.0, 3.0, -0.0]);
+        let d = new.compress(WireCodec::Delta, Some((&base, 7)));
+        assert_eq!(d.encoding(), Encoding::DeltaXor { base_version: 7 });
+        let resolved = d.resolve_delta(&base, 7).unwrap();
+        assert!(resolved.bits_equal(&new));
+        // Version mismatch is a typed refusal, not silent corruption.
+        let err = d.resolve_delta(&base, 8).unwrap_err().to_string();
+        assert!(is_unsupported_codec(&err), "typed: {err}");
+        // Missing base at compress time falls back to dense passthrough.
+        let solo = new.compress(WireCodec::Delta, None);
+        assert!(solo.encoding().is_dense());
+    }
+
+    #[test]
+    fn record_compress_and_resolve() {
+        let base = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("w", vec![3], &[1.0, 2.0, 3.0]),
+            Tensor::from_i64("steps", vec![2], &[5, 6]),
+        ])
+        .unwrap();
+        let new = ArrayRecord::from_tensors(vec![
+            Tensor::from_f32("w", vec![3], &[1.5, 2.0, 3.5]),
+            Tensor::from_i64("steps", vec![2], &[7, 8]),
+        ])
+        .unwrap();
+        let d = new.compress(WireCodec::Delta, Some((&base, 3)));
+        assert!(d.has_delta());
+        let resolved = d.resolve_delta(&base, 3).unwrap();
+        assert!(resolved.bits_equal(&new));
+        assert!(resolved.is_all_dense());
+        // Lossy policy skips non-f32 tensors.
+        let q = new.compress(WireCodec::Int8, None);
+        assert!(!q.get("w").unwrap().encoding().is_dense());
+        assert!(q.get("steps").unwrap().encoding().is_dense());
+        // to_dense materializes a logically-equal dense record.
+        let dense = q.to_dense();
+        assert!(dense.is_all_dense());
+        assert!(dense.dims_match(&new));
+    }
+
+    #[test]
+    fn new_encoded_validates_layouts_and_indices() {
+        // Wrong payload length for the encoding.
+        assert!(Tensor::new_encoded(
+            "x",
+            DType::F32,
+            vec![4],
+            Encoding::F16,
+            Bytes::from_vec(vec![0u8; 6])
+        )
+        .is_err());
+        assert!(Tensor::new_encoded(
+            "x",
+            DType::F32,
+            vec![4],
+            Encoding::F16,
+            Bytes::from_vec(vec![0u8; 8])
+        )
+        .is_ok());
+        // Numeric codecs are f32-only.
+        assert!(Tensor::new_encoded(
+            "x",
+            DType::I64,
+            vec![4],
+            Encoding::Int8 {
+                scale: 1.0,
+                zero_point: 0.0
+            },
+            Bytes::from_vec(vec![0u8; 4])
+        )
+        .is_err());
+        // Top-k: k must not exceed elems, indices must be strictly
+        // ascending and in bounds.
+        let enc = Encoding::TopK { k: 2 };
+        let mk = |i0: u32, i1: u32| {
+            let mut b = Vec::new();
+            b.extend_from_slice(&i0.to_le_bytes());
+            b.extend_from_slice(&i1.to_le_bytes());
+            b.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
+            b.extend_from_slice(&2.0f32.to_bits().to_le_bytes());
+            Bytes::from_vec(b)
+        };
+        assert!(Tensor::new_encoded("x", DType::F32, vec![4], enc, mk(1, 3)).is_ok());
+        assert!(Tensor::new_encoded("x", DType::F32, vec![4], enc, mk(3, 1)).is_err());
+        assert!(Tensor::new_encoded("x", DType::F32, vec![4], enc, mk(2, 2)).is_err());
+        assert!(Tensor::new_encoded("x", DType::F32, vec![4], enc, mk(1, 4)).is_err());
+        assert!(Tensor::new_encoded(
+            "x",
+            DType::F32,
+            vec![1],
+            Encoding::TopK { k: 2 },
+            mk(0, 1)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn wire_codec_names_roundtrip() {
+        for c in [
+            WireCodec::Identity,
+            WireCodec::F16,
+            WireCodec::Bf16,
+            WireCodec::Int8,
+            WireCodec::TopK,
+            WireCodec::Int8TopK,
+            WireCodec::Delta,
+        ] {
+            assert_eq!(WireCodec::from_name(c.name()), Some(c));
+        }
+        assert_eq!(WireCodec::from_name("zstd-v9"), None);
+        assert!(WireCodec::Int8.is_lossy());
+        assert!(!WireCodec::Delta.is_lossy());
     }
 
     #[test]

@@ -195,6 +195,15 @@ impl Strategy for SecAggFedAvg {
         false
     }
 
+    /// Masked updates are exact residues in a finite field: pairwise
+    /// masks only cancel when every bit survives the wire, so any lossy
+    /// codec (fp16/bf16/int8/top-k) silently destroys cancellation and
+    /// yields garbage sums. Drivers refuse lossy codecs for this
+    /// strategy with a typed error; lossless delta/identity are fine.
+    fn supports_lossy_codec(&self) -> bool {
+        false
+    }
+
     fn configure_fit(&mut self, round: u64) -> ConfigRecord {
         ConfigRecord::from_pairs(vec![
             (

@@ -20,6 +20,15 @@
 //! node's behalf must neither renew its liveness lease nor forge its
 //! drain acknowledgment — those stay tied to frames the node itself
 //! sends (results, heartbeat pulls).
+//!
+//! **Lease renewal happens at frame ARRIVAL, not at frame handling.**
+//! Every decoded node-carrying frame binds its stream to the node
+//! (`Shared::streams`); from then on the mux ingress sink renews the
+//! node's lease the moment any frame of its arrives — before the frame
+//! ever waits for a worker. Without this, a saturated worker pool could
+//! queue a healthy, actively-sending node's frames past
+//! [`LinkConfig::lease`](crate::flower::superlink::LinkConfig::lease)
+//! and reap it for the server's own queueing delay.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -78,11 +87,21 @@ impl Ingress {
     }
 }
 
+/// Upper bound on remembered stream -> node bindings. Reconnect churn
+/// retires stream identities; past the cap the map is simply cleared
+/// and re-learned lazily from the next decoded frames (costing at most
+/// one queued-frame renewal per stream, never correctness).
+const MAX_STREAM_BINDINGS: usize = 4096;
+
 struct Shared {
     link: Arc<SuperLink>,
     ingress: Ingress,
     /// node_id -> the task stream its `Subscribe` arrived on.
     subs: Mutex<HashMap<u64, Arc<MuxStream>>>,
+    /// Stream identity (`Arc::as_ptr`) -> the node whose frames it
+    /// carries, learned from each decoded node-carrying frame. Basis
+    /// for arrival-time lease renewal in the ingress sink.
+    streams: Mutex<HashMap<usize, u64>>,
     /// Observer seat on the link: `push_task` (and every other link
     /// event) wakes the pusher through it.
     seat: Arc<Notify>,
@@ -109,6 +128,7 @@ impl LinkServer {
                 cv: Condvar::new(),
             },
             subs: Mutex::new(HashMap::new()),
+            streams: Mutex::new(HashMap::new()),
             seat,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
@@ -148,7 +168,7 @@ impl LinkServer {
     pub fn attach(&self, underlying: Arc<dyn Endpoint>) -> Arc<MuxConn> {
         let s = self.shared.clone();
         let sink: FrameSink = Arc::new(move |stream, frame| {
-            s.ingress.push((stream, frame));
+            ingress_arrival(&s, stream, frame);
         });
         let conn = MuxConn::accept(underlying, Some(sink));
         self.shared.conns.lock().unwrap().push(conn.clone());
@@ -203,6 +223,32 @@ impl Drop for LinkServer {
     }
 }
 
+/// What the mux sink runs for every arriving frame (before any worker
+/// touches it): renew the sender's lease if the stream is already bound
+/// to a node, then queue the frame. The renewal is the satellite fix
+/// for push-mode lease starvation — an actively-sending node stays
+/// alive no matter how deep the ingress queue gets.
+fn ingress_arrival(s: &Arc<Shared>, stream: Arc<MuxStream>, frame: Bytes) {
+    let key = Arc::as_ptr(&stream) as usize;
+    if let Some(&node_id) = s.streams.lock().unwrap().get(&key) {
+        s.link.touch_node(node_id);
+        crate::telemetry::bump("serve.ingress_renewals", 1);
+    }
+    s.ingress.push((stream, frame));
+}
+
+/// Remember which node this stream speaks for (bounded; see
+/// [`MAX_STREAM_BINDINGS`]). Called by workers on every decoded
+/// node-carrying frame, so the binding exists from the node's FIRST
+/// frame onward.
+fn bind_stream(s: &Shared, stream: &Arc<MuxStream>, node_id: u64) {
+    let mut map = s.streams.lock().unwrap();
+    if map.len() >= MAX_STREAM_BINDINGS {
+        map.clear();
+    }
+    map.insert(Arc::as_ptr(stream) as usize, node_id);
+}
+
 fn worker_loop(s: &Arc<Shared>) {
     loop {
         if s.shutdown.load(Ordering::Acquire) {
@@ -218,12 +264,26 @@ fn worker_loop(s: &Arc<Shared>) {
                 // any previous registration (re-subscribe after a
                 // reconnect): latest stream wins.
                 s.subs.lock().unwrap().insert(node_id, stream.clone());
+                bind_stream(s, &stream, node_id);
                 crate::telemetry::bump("serve.subscriptions", 1);
                 // The immediate reply is the node's current backlog —
                 // node-initiated, so it renews the lease like a pull.
                 s.link.pull_tasks(node_id, true).encode()
             }
-            Ok(msg) => s.link.handle_msg(msg).encode(),
+            Ok(msg) => {
+                // Learn the stream -> node binding from every
+                // node-carrying frame (pulls, result pushes, drains),
+                // so subsequent arrivals on this stream renew at
+                // ingress time.
+                match &msg {
+                    FlowerMsg::PullTaskIns { node_id } | FlowerMsg::DeleteNode { node_id } => {
+                        bind_stream(s, &stream, *node_id)
+                    }
+                    FlowerMsg::PushTaskRes { res } => bind_stream(s, &stream, res.node_id),
+                    _ => {}
+                }
+                s.link.handle_msg(msg).encode()
+            }
             Err(e) => FlowerMsg::Error {
                 message: format!("bad frame: {e}"),
             }
@@ -362,6 +422,95 @@ mod tests {
         assert_eq!(res[0].parameters.to_flat(), vec![2.0]);
         link.retire();
         h.join().unwrap().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn ingress_renews_lease_before_any_worker_runs() {
+        // Satellite regression (push-mode lease starvation): a node
+        // whose frames steadily ARRIVE must never be reaped, even if no
+        // worker gets around to handling them — lease renewal is tied
+        // to arrival, not to processing. Zero workers here, so every
+        // queued frame stays queued for the whole test.
+        use crate::flower::superlink::LinkConfig;
+        let link = SuperLink::with_role(
+            LinkConfig {
+                lease: Duration::from_millis(200),
+                max_redeliveries: 0,
+            },
+            "ingresslease",
+            1,
+        );
+        link.handle_msg(FlowerMsg::CreateNode { requested: 7 });
+        let shared = Arc::new(Shared {
+            link: link.clone(),
+            ingress: Ingress {
+                q: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+            },
+            subs: Mutex::new(HashMap::new()),
+            streams: Mutex::new(HashMap::new()),
+            seat: Arc::new(Notify::new()),
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let (client_end, _server_end) = inproc::pair("node", "link");
+        let conn = MuxConn::initiate(Arc::new(client_end));
+        let stream = conn.open_stream().unwrap();
+        // What a worker records after the node's first decoded frame.
+        bind_stream(&shared, &stream, 7);
+        // Frames keep arriving — and queueing — for several lease
+        // periods, with the reaper sweeping between arrivals.
+        for _ in 0..10 {
+            std::thread::sleep(Duration::from_millis(50));
+            ingress_arrival(&shared, stream.clone(), Bytes::from_vec(vec![0]));
+            link.reap_expired();
+        }
+        assert_eq!(link.nodes(), vec![7], "arriving frames must renew the lease");
+        assert_eq!(
+            shared.ingress.q.lock().unwrap().len(),
+            10,
+            "no worker drained the queue — renewal happened at ingress"
+        );
+    }
+
+    #[test]
+    fn flooded_push_node_is_never_reaped() {
+        // Satellite regression: flood a push-mode node through a
+        // 1-worker server for longer than the lease and assert ZERO
+        // reaps — every inbound frame (Subscribe, result push,
+        // heartbeat) keeps the node alive.
+        use crate::flower::superlink::LinkConfig;
+        let link = SuperLink::with_role(
+            LinkConfig {
+                lease: Duration::from_millis(300),
+                max_redeliveries: 0,
+            },
+            "floodlease",
+            1,
+        );
+        let server = LinkServer::start(link.clone(), LinkServerConfig { workers: 1 });
+        let h = push_node(&server, 1, 1.0);
+        link.wait_for_nodes(1, Duration::from_secs(5)).unwrap();
+        let expired = crate::telemetry::counter("superlink.nodes_expired[floodlease]");
+        for wave in 0..30u64 {
+            link.reap_expired();
+            let tids: Vec<u64> = (0..5)
+                .map(|_| link.push_task(1, fit_ins(1, &[wave as f32])))
+                .collect();
+            let res = link.await_results(1, &tids, Duration::from_secs(10)).unwrap();
+            assert_eq!(res.len(), 5, "wave {wave}: every flooded task completes");
+            // Stretch the flood past several lease periods.
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        assert_eq!(
+            expired.load(Ordering::Relaxed),
+            0,
+            "zero reaps under flood"
+        );
+        assert_eq!(link.nodes(), vec![1]);
+        link.retire();
+        let _ = h.join().unwrap();
         server.shutdown();
     }
 

@@ -36,7 +36,7 @@ use crate::flower::asyncfed::AsyncCommit;
 use crate::flower::grid::Grid;
 use crate::flower::message::{ConfigValue, Message, MetricRecord};
 use crate::flower::persist::checkpoint::{DriverCkpt, DriverPhase, FitCkpt};
-use crate::flower::records::ArrayRecord;
+use crate::flower::records::{ArrayRecord, WireCodec, WIRE_CODEC_KEY};
 use crate::flower::strategy::{AggSnapshot, EvalRes, FitRes, Strategy};
 use crate::flower::superlink::{CompletionPolicy, ResultTimeout};
 use crate::util::rng::Rng;
@@ -67,6 +67,14 @@ pub struct ServerConfig {
     /// Once the quorum is met, keep waiting for stragglers at most this
     /// long before finalizing without them.
     pub straggler_grace: Duration,
+    /// Uplink wire codec negotiated to every fit instruction (the
+    /// [`WIRE_CODEC_KEY`] config key): clients compress their result
+    /// parameters with it, and the streaming accumulator dequantizes as
+    /// it folds. `Identity` (default) keeps the wire uncompressed and
+    /// bit-identical to every pre-codec run. Lossy codecs are refused
+    /// up front for strategies whose reduction cannot survive
+    /// quantization (see [`Strategy::supports_lossy_codec`]).
+    pub codec: WireCodec,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +89,7 @@ impl Default for ServerConfig {
             accept_failures: false,
             min_available: 0,
             straggler_grace: Duration::from_secs(2),
+            codec: WireCodec::Identity,
         }
     }
 }
@@ -373,6 +382,17 @@ impl ServerApp {
             self.strategy.name(),
             grid.shard_count()
         );
+        // Same up-front refusal for lossy wire codecs: a reduction
+        // whose inputs must arrive bit-exact (secagg's pairwise masks)
+        // would silently produce garbage from quantized results.
+        anyhow::ensure!(
+            !self.config.codec.is_lossy() || self.strategy.supports_lossy_codec(),
+            "strategy {} cannot aggregate lossy '{}' wire-codec results \
+             (e.g. secure aggregation masks do not survive quantization) — \
+             use the identity or delta codec",
+            self.strategy.name(),
+            self.config.codec.name()
+        );
         let cfg = self.config.clone();
         grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
         // Mid-round durability requires the strategy to snapshot its
@@ -454,6 +474,16 @@ impl ServerApp {
                     let fit_nodes = self.sample(&nodes, cfg.fraction_fit, round);
                     let mut fit_cfg = self.strategy.configure_fit(round);
                     fit_cfg.push(("round".to_string(), ConfigValue::I64(round as i64)));
+                    // Negotiate the uplink codec: clients compress
+                    // their reply parameters with it (identity rides
+                    // implicitly — zero config bytes, bit-identical to
+                    // pre-codec rounds).
+                    if cfg.codec != WireCodec::Identity {
+                        fit_cfg.push((
+                            WIRE_CODEC_KEY.to_string(),
+                            ConfigValue::Str(cfg.codec.name().to_string()),
+                        ));
+                    }
                     // Cohort + per-target node id: lets client-side mods
                     // (e.g. secure aggregation) coordinate pairwise
                     // state.
@@ -547,11 +577,32 @@ impl ServerApp {
                         );
                         return Ok(());
                     }
+                    // Delta-encoded replies resolve against THIS
+                    // round's pushed model — the very record the node
+                    // encoded against (XOR is lossless, so the resolved
+                    // tensors are bit-identical to an uncompressed
+                    // reply). A base/version mismatch is a typed
+                    // per-node refusal, honoring accept_failures.
+                    let arrays = match r
+                        .content
+                        .arrays
+                        .resolve_delta(&ckpt_params, r.metadata.model_version)
+                    {
+                        Ok(a) => a,
+                        Err(e) => {
+                            seen_nodes.remove(&node);
+                            if accept_failures {
+                                log::warn!("round {round}: node {node} refused: {e}");
+                                return Ok(());
+                            }
+                            anyhow::bail!("round {round}: node {node} refused: {e}");
+                        }
+                    };
                     let num_examples = r.metadata.num_examples;
                     fit_meta.push((node, num_examples, r.content.metrics.clone()));
                     agg.accumulate(FitRes {
                         node_id: node,
-                        parameters: r.content.arrays,
+                        parameters: arrays,
                         num_examples,
                         metrics: r.content.metrics,
                     })?;

@@ -897,6 +897,65 @@ mod tests {
     }
 
     #[test]
+    fn compressed_replies_pass_through_shard_tiers_byte_intact() {
+        use crate::flower::records::WireCodec;
+
+        // Shard tiers buffer FitRes and export partial snapshots — they
+        // must NEVER decode or densify a compressed result: the codec
+        // bytes a node sent are the bytes the driving strategy folds.
+        let mut overrides = HashMap::new();
+        overrides.insert(1u64, 0usize);
+        overrides.insert(2u64, 1usize);
+        let grid =
+            ShardedGrid::with_topology(2, LinkConfig::default(), Durability::Off, overrides)
+                .unwrap();
+        join(&grid, 1);
+        join(&grid, 2);
+        grid.open_run(1);
+        let ids: Vec<u64> = [1u64, 2]
+            .iter()
+            .map(|&node| {
+                grid.push_message(
+                    Message::train(node, ArrayRecord::from_flat(&[0.0; 8]), ConfigRecord::new())
+                        .for_round(1, 1),
+                )
+            })
+            .collect();
+        let sent: Vec<ArrayRecord> = [(1u64, WireCodec::Int8), (2, WireCodec::F16)]
+            .iter()
+            .map(|&(node, codec)| {
+                let encoded = ArrayRecord::from_flat(&[
+                    0.5, -1.25, 3.0, 0.0, 2.5, -0.75, 1.0, 4.0,
+                ])
+                .compress(codec, None);
+                assert!(!encoded.is_all_dense(), "{codec:?} must actually encode");
+                let ins = pull(&grid, node).into_iter().next().unwrap();
+                let reply = Message::from_ins(ins, node)
+                    .reply(RecordDict::from_arrays(encoded.clone()))
+                    .with_examples(1);
+                grid.handle_frame(
+                    &FlowerMsg::PushTaskRes {
+                        res: reply.into_res(),
+                    }
+                    .encode(),
+                );
+                encoded
+            })
+            .collect();
+        let (mut replies, failed) = grid.pull_messages(1, &ids);
+        assert!(failed.is_empty());
+        replies.sort_by_key(|m| m.metadata.src_node_id);
+        assert_eq!(replies.len(), 2);
+        for (reply, encoded) in replies.iter().zip(&sent) {
+            assert!(
+                reply.content.arrays.bits_equal(encoded),
+                "shard tier must relay the encoded bytes untouched"
+            );
+        }
+        grid.close_run(1);
+    }
+
+    #[test]
     fn killed_shard_fails_routing_until_restart() {
         let mut overrides = HashMap::new();
         overrides.insert(1u64, 0usize);

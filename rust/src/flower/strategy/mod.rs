@@ -188,6 +188,18 @@ pub trait Strategy: Send {
         true
     }
 
+    /// Can this strategy aggregate results that arrived under a LOSSY
+    /// wire codec (fp16/bf16/int8/top-k — see
+    /// [`crate::flower::records::WireCodec`])? True for every plain
+    /// reduction, whose accumulators dequantize on fold; secure
+    /// aggregation overrides to `false` — its pairwise masks are exact
+    /// field elements that do not survive quantization, so a lossy
+    /// codec would silently break mask cancellation. Lossless codecs
+    /// (identity, delta) are always allowed.
+    fn supports_lossy_codec(&self) -> bool {
+        true
+    }
+
     /// Serialize cross-round optimizer state (momentum, adaptive
     /// moments) for a durability checkpoint. `None` means stateless —
     /// nothing beyond the global parameters needs to survive a crash.
@@ -418,7 +430,12 @@ impl Aggregator {
 
     pub fn weighted_mean(&self, results: &[FitRes]) -> anyhow::Result<ArrayRecord> {
         let structure = check_same_structure(results)?;
-        let all_f32 = structure.tensors().iter().all(|t| t.dtype() == DType::F32);
+        // The device path stacks flat f32 payloads, so it additionally
+        // requires every result to be dense (identity-encoded) —
+        // compressed results fall back to the host fold, which
+        // dequantizes on accumulate.
+        let all_f32 = structure.tensors().iter().all(|t| t.dtype() == DType::F32)
+            && results.iter().all(|r| r.parameters.is_all_dense());
         if all_f32 {
             if let Some((handle, model)) = &self.compute {
                 let n = structure.total_elems();
@@ -471,16 +488,12 @@ pub fn host_weighted_mean(results: &[FitRes]) -> ArrayRecord {
             let rt = &r.parameters.tensors()[ti];
             assert_eq!(rt.elems(), n, "tensor '{}' length mismatch", t.name());
             let w = r.num_examples as f64 / total;
-            if rt.dtype() == DType::F32 {
-                // Hot path: linear scan over the packed payload.
-                for (o, v) in acc.iter_mut().zip(rt.f32_iter()) {
-                    *o += w * v as f64;
-                }
-            } else {
-                for (o, i) in acc.iter_mut().zip(0..n) {
-                    *o += w * rt.get_f64(i);
-                }
-            }
+            // One pass per wire encoding: dense f32 keeps the linear
+            // scan over the packed payload, quantized segments (fp16/
+            // bf16/int8) dequantize AS they fold — never through an
+            // intermediate dense copy — and top-k touches only its
+            // kept entries.
+            rt.fold_weighted(&mut acc, w);
         }
         tensors.push(Tensor::from_f64_values(
             t.name(),
@@ -505,12 +518,84 @@ pub(crate) fn fit(node_id: u64, parameters: Vec<f32>, num_examples: u64) -> FitR
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::flower::records::WireCodec;
 
     #[test]
     fn host_weighted_mean_math() {
         let results = vec![fit(1, vec![0.0, 2.0], 1), fit(2, vec![4.0, 6.0], 3)];
         let out = host_weighted_mean(&results);
         assert_eq!(out.to_flat(), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn host_weighted_mean_folds_compressed_results_in_one_pass() {
+        // The same cohort, once dense and once wire-compressed; lossless
+        // sparsification of sparse updates is bit-identical, lossy
+        // quantization lands within its stated tolerance.
+        let a: Vec<f32> = vec![0.5, 0.0, 0.0, -2.0, 0.0, 0.0, 0.0, 0.0];
+        let b: Vec<f32> = vec![0.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.25, 0.0];
+        let dense = host_weighted_mean(&[fit(1, a.clone(), 1), fit(2, b.clone(), 3)]);
+
+        let compress = |vals: &[f32], codec| FitRes {
+            parameters: ArrayRecord::from_flat(vals).compress(codec, None),
+            ..fit(0, vec![], 0)
+        };
+        // top-k keeps ceil(8/4) = 2 entries: exactly each node's support.
+        let topk = host_weighted_mean(&[
+            FitRes {
+                node_id: 1,
+                num_examples: 1,
+                ..compress(&a, WireCodec::TopK)
+            },
+            FitRes {
+                node_id: 2,
+                num_examples: 3,
+                ..compress(&b, WireCodec::TopK)
+            },
+        ]);
+        assert!(dense.bits_equal(&topk), "sparse top-k is lossless here");
+
+        for (codec, tol) in [
+            (WireCodec::F16, 1e-3),
+            (WireCodec::Bf16, 2e-2),
+            (WireCodec::Int8, 2e-2),
+        ] {
+            let lossy = host_weighted_mean(&[
+                FitRes {
+                    node_id: 1,
+                    num_examples: 1,
+                    ..compress(&a, codec)
+                },
+                FitRes {
+                    node_id: 2,
+                    num_examples: 3,
+                    ..compress(&b, codec)
+                },
+            ]);
+            for (d, l) in dense.to_flat().iter().zip(lossy.to_flat()) {
+                assert!(
+                    (d - l).abs() <= tol,
+                    "{codec:?}: {d} vs {l} exceeds tolerance {tol}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn device_path_falls_back_to_host_for_compressed_results() {
+        // A mixed cohort (one dense, one quantized) must not take the
+        // flat-stacking device path; the host fold handles it.
+        let results = vec![
+            fit(1, vec![0.0, 2.0], 1),
+            FitRes {
+                node_id: 2,
+                num_examples: 3,
+                parameters: ArrayRecord::from_flat(&[4.0, 6.0]).compress(WireCodec::F16, None),
+                metrics: MetricRecord::new(),
+            },
+        ];
+        let out = Aggregator::host().weighted_mean(&results).unwrap();
+        assert_eq!(out.to_flat(), vec![3.0, 5.0], "f16 holds 4.0/6.0 exactly");
     }
 
     #[test]

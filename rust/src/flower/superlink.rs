@@ -781,6 +781,15 @@ impl SuperLink {
         }
     }
 
+    /// [`touch`](Self::touch) for the serving layer: renew a node's
+    /// lease the moment one of its frames ARRIVES, before the frame
+    /// waits for a worker. A saturated worker pool must never let a
+    /// healthy, actively-sending push-mode node expire because its
+    /// result frames sat in the ingress queue longer than the lease.
+    pub(crate) fn touch_node(&self, node_id: u64) {
+        self.touch(node_id);
+    }
+
     /// Declare every node with an expired lease dead — remove it from
     /// the pool — then settle every task assigned to a node that is NOT
     /// in the pool (dead, or never registered): requeue it to a healthy

@@ -5,6 +5,14 @@
 
 use crate::util::bytes::{Reader, WireError, Writer};
 
+/// Maximum header entries in one envelope. Checked BEFORE the count
+/// sizes any allocation; the count itself travels as a u32 and is only
+/// ever widened (u32 -> usize), never narrowed — wire-supplied lengths
+/// must not truncate platform-dependently (see the codec-hardening
+/// audit; string/payload lengths are bounded by
+/// [`crate::util::bytes::MAX_FIELD`] inside the reader).
+pub const MAX_ENVELOPE_HEADERS: usize = 1024;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum MsgKind {
@@ -123,10 +131,10 @@ impl Envelope {
         let destination = r.str()?.to_string();
         let topic = r.str()?.to_string();
         let n_headers = r.u32()? as usize;
-        if n_headers > 1024 {
+        if n_headers > MAX_ENVELOPE_HEADERS {
             return Err(WireError::TooLong {
                 len: n_headers,
-                limit: 1024,
+                limit: MAX_ENVELOPE_HEADERS,
             });
         }
         let mut headers = Vec::with_capacity(n_headers);
@@ -231,6 +239,22 @@ mod tests {
         for cut in [0, 5, 17, buf.len() - 1] {
             assert!(Envelope::decode(&buf[..cut]).is_err(), "cut {}", cut);
         }
+    }
+
+    #[test]
+    fn oversized_header_count_rejected() {
+        // A hostile count must surface a typed error before it can size
+        // an allocation.
+        let mut w = Writer::new();
+        w.u64(1);
+        w.u64(0);
+        w.u8(MsgKind::Event as u8);
+        w.str("a");
+        w.str("b");
+        w.str("t");
+        w.u32(u32::MAX);
+        let err = Envelope::decode(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, WireError::TooLong { .. }), "{err:?}");
     }
 
     #[test]

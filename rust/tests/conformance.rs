@@ -25,7 +25,7 @@ use std::time::Duration;
 
 use flarelink::flower::asyncfed::AsyncConfig;
 use flarelink::flower::clientapp::{ArithmeticClient, ClientApp};
-use flarelink::flower::records::{ArrayRecord, MetricRecord};
+use flarelink::flower::records::{ArrayRecord, MetricRecord, WireCodec};
 use flarelink::flower::run::{run_mux, run_native, NativeFleet, SwitchedFleet};
 use flarelink::flower::serverapp::{History, ServerApp, ServerConfig};
 use flarelink::flower::shard::ShardedGrid;
@@ -416,6 +416,127 @@ fn check_mux_equals_inproc(mk: fn() -> Box<dyn Strategy>, label: &str) {
     );
 }
 
+/// Codec row A (randomized arrival): quantized results — the exact
+/// bytes a lossy wire codec delivers — stream arrival-order
+/// independent. Accumulating the SAME compressed result set in any
+/// shuffle finalizes bit-identical to the batch reduction over it:
+/// dequantize-on-accumulate must not reintroduce order sensitivity.
+fn check_quantized_stream_equals_batch(mk: &dyn Fn() -> Box<dyn Strategy>, label: &str) {
+    for codec in [WireCodec::F16, WireCodec::Bf16, WireCodec::Int8] {
+        let init = ArrayRecord::from_flat(&[0.25f32; 6]);
+        let quantized: Vec<FitRes> = mk_results(7, 6, 131)
+            .into_iter()
+            .map(|r| FitRes {
+                parameters: r.parameters.compress(codec, None),
+                ..r
+            })
+            .collect();
+        assert!(
+            quantized.iter().all(|r| !r.parameters.is_all_dense()),
+            "{label}/{codec:?}: the codec must actually encode"
+        );
+        let want = mk().aggregate_fit(1, &init, &quantized).unwrap();
+        let mut rng = Rng::new(59);
+        for _ in 0..3 {
+            let mut order: Vec<usize> = (0..quantized.len()).collect();
+            rng.shuffle(&mut order);
+            let mut s = mk();
+            let mut agg = s.begin_fit(1, &init);
+            for i in order {
+                agg.accumulate(quantized[i].clone()).unwrap();
+            }
+            let got = agg.finalize().unwrap();
+            assert_eq!(
+                bits(&got),
+                bits(&want),
+                "{label}/{codec:?}: streamed quantized results diverged from batch"
+            );
+        }
+    }
+}
+
+/// Codec row B (the tentpole's conformance anchor), end-to-end over a
+/// real fleet: the delta codec is bit-identical to uncompressed, and
+/// each lossy codec lands within its stated tolerance of the
+/// uncompressed run — with the sharded(N=4) and async(staleness 0)
+/// drivers folding the SAME encoded bytes bit-identical to the native
+/// sync run under that codec.
+fn check_codec_fleet_rows(mk: &dyn Fn() -> Box<dyn Strategy>, label: &str) {
+    let rounds = 2u64;
+    let init = ArrayRecord::from_flat(&[0.25f32; 6]);
+    let cfg_with = |codec| ServerConfig {
+        codec,
+        ..server_cfg(rounds)
+    };
+
+    let mut app = ServerApp::new(mk(), server_cfg(rounds), init.clone());
+    let base = run_native(&mut app, fleet_apps(), 1).unwrap();
+
+    // Delta vs the instruction's model is XOR-lossless: whole-history
+    // bit-identity, not just tolerance.
+    let mut app = ServerApp::new(mk(), cfg_with(WireCodec::Delta), init.clone());
+    let delta = run_native(&mut app, fleet_apps(), 1).unwrap();
+    assert_eq!(delta, base, "{label}: delta codec must be lossless");
+    assert!(
+        delta.params_bits_equal(&base),
+        "{label}: delta codec parameters not bit-identical to uncompressed"
+    );
+
+    // Stated tolerances: fp16 keeps ~3 decimal digits, bf16/int8 ~2.
+    for (codec, tol) in [
+        (WireCodec::F16, 1e-2f64),
+        (WireCodec::Bf16, 1e-1),
+        (WireCodec::Int8, 1e-1),
+    ] {
+        let mut app = ServerApp::new(mk(), cfg_with(codec), init.clone());
+        let native = run_native(&mut app, fleet_apps(), 1).unwrap();
+        for (a, b) in native
+            .parameters
+            .to_flat()
+            .iter()
+            .zip(base.parameters.to_flat())
+        {
+            assert!(
+                (*a as f64 - b as f64).abs() < tol,
+                "{label}/{codec:?}: |{a} - {b}| exceeds the stated tolerance {tol}"
+            );
+        }
+
+        // Sharded N=4: tiers relay the encoded bytes untouched, so the
+        // result is bit-identical to the native run under the SAME codec.
+        let grid = ShardedGrid::new(4, LinkConfig::default());
+        let fleet =
+            SwitchedFleet::start_sharded(&grid, fleet_apps(), Duration::from_secs(30)).unwrap();
+        let mut app = ServerApp::new(mk(), cfg_with(codec), init.clone());
+        let sharded = app.run(grid.as_ref(), None, 1).unwrap();
+        fleet.shutdown();
+        assert!(
+            sharded.params_bits_equal(&native),
+            "{label}/{codec:?}: sharded(N=4) diverged from native under the same codec"
+        );
+
+        // Async, sync-equivalent configuration: same folds, same bits.
+        let fleet = NativeFleet::start(fleet_apps()).unwrap();
+        let mut app = ServerApp::new(mk(), cfg_with(codec), init.clone());
+        let h = app
+            .run_async(
+                fleet.link(),
+                None,
+                1,
+                AsyncConfig {
+                    buffer_size: COHORT,
+                    max_staleness: 0,
+                },
+            )
+            .unwrap();
+        fleet.shutdown();
+        assert!(
+            h.params_bits_equal(&native),
+            "{label}/{codec:?}: async(staleness 0) diverged from sync under the same codec"
+        );
+    }
+}
+
 macro_rules! conformance_matrix {
     ($($name:ident => $mk:expr;)*) => {$(
         mod $name {
@@ -467,6 +588,16 @@ macro_rules! conformance_matrix {
             #[test]
             fn mux_fleet_equals_inproc() {
                 check_mux_equals_inproc(mk, stringify!($name));
+            }
+
+            #[test]
+            fn quantized_stream_equals_batch() {
+                check_quantized_stream_equals_batch(&mk, stringify!($name));
+            }
+
+            #[test]
+            fn codec_fleet_rows() {
+                check_codec_fleet_rows(&mk, stringify!($name));
             }
         }
     )*};
@@ -574,6 +705,126 @@ mod adapter_path {
     }
 }
 
+/// The async driver's delta gate: delta encoding binds each reply to
+/// the exact model version it was cut from, and the driver only holds
+/// the CURRENT parameters — so any staleness window > 0 is refused
+/// before a single task is dispatched.
+mod delta_staleness_gate {
+    use super::*;
+    use flarelink::flower::superlink::SuperLink;
+
+    #[test]
+    fn async_delta_requires_staleness_zero() {
+        let link = SuperLink::new();
+        let mut app = ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            ServerConfig {
+                codec: WireCodec::Delta,
+                ..server_cfg(1)
+            },
+            ArrayRecord::from_flat(&[0.0f32; 4]),
+        );
+        let err = app
+            .run_async(
+                &link,
+                None,
+                1,
+                AsyncConfig {
+                    buffer_size: 2,
+                    max_staleness: 3,
+                },
+            )
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("max_staleness == 0"),
+            "refusal must name the constraint: {err}"
+        );
+    }
+}
+
+/// Top-k sparsification's lossless row: when a client's update is
+/// genuinely sparse (no more nonzeros than the codec keeps), the kept
+/// values are the exact f32 bytes the client produced — so a top-k run
+/// is bit-identical to the uncompressed one, not merely close.
+mod sparse_topk {
+    use super::*;
+    use flarelink::flower::clientapp::{EvalOutput, FitOutput};
+    use flarelink::flower::records::ConfigRecord;
+    use flarelink::flower::strategy::{Aggregator, FedAvg};
+
+    /// One fixed nonzero coordinate per node — an embedding-style
+    /// sparse update, within the k = ceil(n/4) the codec keeps.
+    struct SparseClient {
+        idx: usize,
+        val: f32,
+    }
+
+    impl ClientApp for SparseClient {
+        fn fit(
+            &self,
+            parameters: &ArrayRecord,
+            _config: &ConfigRecord,
+        ) -> anyhow::Result<FitOutput> {
+            let mut flat = vec![0.0f32; parameters.total_elems()];
+            flat[self.idx] = self.val;
+            Ok(FitOutput {
+                parameters: ArrayRecord::from_flat(&flat),
+                num_examples: 10,
+                metrics: MetricRecord::new(),
+            })
+        }
+
+        fn evaluate(
+            &self,
+            _parameters: &ArrayRecord,
+            _config: &ConfigRecord,
+        ) -> anyhow::Result<EvalOutput> {
+            Ok(EvalOutput {
+                loss: 0.0,
+                num_examples: 1,
+                metrics: MetricRecord::new(),
+            })
+        }
+    }
+
+    fn sparse_apps() -> Vec<Arc<dyn ClientApp>> {
+        (0..COHORT)
+            .map(|i| {
+                Arc::new(SparseClient {
+                    idx: i,
+                    val: (i + 1) as f32 * 0.5,
+                }) as Arc<dyn ClientApp>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sparse_updates_survive_topk_bitexact() {
+        let init = ArrayRecord::from_flat(&[0.0f32; 8]);
+        let mut app = ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            server_cfg(2),
+            init.clone(),
+        );
+        let dense = run_native(&mut app, sparse_apps(), 1).unwrap();
+
+        let mut app = ServerApp::new(
+            Box::new(FedAvg::new(Aggregator::host())),
+            ServerConfig {
+                codec: WireCodec::TopK,
+                ..server_cfg(2)
+            },
+            init,
+        );
+        let topk = run_native(&mut app, sparse_apps(), 1).unwrap();
+        assert_eq!(topk, dense, "top-k over sparse updates must be lossless");
+        assert!(
+            topk.params_bits_equal(&dense),
+            "top-k kept values must be the exact bytes the clients sent"
+        );
+    }
+}
+
 /// Secure aggregation's row of the matrix: both capability gates are
 /// CLOSED, and the async driver refuses before any task is dispatched.
 mod secagg {
@@ -625,6 +876,29 @@ mod secagg {
         let err = app.run(grid.as_ref(), None, 1).unwrap_err();
         assert!(
             err.to_string().contains("cannot aggregate across"),
+            "refusal must name the capability: {err}"
+        );
+    }
+
+    /// The lossy-codec refusal row, mirroring `supports_partial`:
+    /// pairwise masks cancel bit-exact or not at all — a quantized
+    /// masked residue is garbage, so the driver refuses up front with
+    /// a typed error instead of aggregating noise.
+    #[test]
+    fn lossy_codec_refused() {
+        let link = SuperLink::new();
+        assert!(!SecAggFedAvg::new(7).supports_lossy_codec());
+        let mut app = ServerApp::new(
+            Box::new(SecAggFedAvg::new(7)),
+            ServerConfig {
+                codec: WireCodec::Int8,
+                ..server_cfg(1)
+            },
+            ArrayRecord::from_flat(&[0.0f32; 4]),
+        );
+        let err = app.run(&link, None, 1).unwrap_err();
+        assert!(
+            err.to_string().contains("cannot aggregate lossy"),
             "refusal must name the capability: {err}"
         );
     }

@@ -337,6 +337,97 @@ fn prop_flower_msg_corruption_never_panics() {
     );
 }
 
+/// Wraps the v2 generator and compresses every parameter record with a
+/// randomly chosen wire codec. Delta uses the record itself as its base
+/// (shape-matched, like the instruction model it would ride with), and
+/// non-F32 tensors pass through dense — mixed records are the point.
+struct CompressedMsgGen;
+
+impl Gen for CompressedMsgGen {
+    type Value = FlowerMsg;
+    fn generate(&self, rng: &mut Rng) -> FlowerMsg {
+        use flarelink::flower::records::WireCodec;
+        let codec = match rng.below(6) {
+            0 => WireCodec::F16,
+            1 => WireCodec::Bf16,
+            2 => WireCodec::Int8,
+            3 => WireCodec::TopK,
+            4 => WireCodec::Int8TopK,
+            _ => WireCodec::Delta,
+        };
+        let mut msg = FlowerMsgGen { flat_only: false }.generate(rng);
+        match &mut msg {
+            FlowerMsg::PushTaskRes { res } => {
+                let base = res.parameters.clone();
+                res.parameters = base.compress(codec, Some((&base, res.model_version)));
+            }
+            FlowerMsg::TaskInsList { tasks, .. } => {
+                for t in tasks.iter_mut() {
+                    let base = t.parameters.clone();
+                    t.parameters = base.compress(codec, Some((&base, t.model_version)));
+                }
+            }
+            _ => {}
+        }
+        msg
+    }
+}
+
+#[test]
+fn prop_compressed_msg_roundtrip() {
+    // Codec tags, quantization params, top-k index/value segments, and
+    // delta base versions all survive the wire byte-exact.
+    prop_check("compressed msg roundtrip", 300, CompressedMsgGen, |m| {
+        match FlowerMsg::decode(&m.encode()) {
+            Ok(back) => bits_equal(m, &back),
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn prop_compressed_msg_truncation_never_panics() {
+    prop_check(
+        "compressed msg truncation safe",
+        150,
+        CompressedMsgGen,
+        |m| {
+            let buf = m.encode();
+            for cut in 0..buf.len() {
+                if FlowerMsg::decode(&buf[..cut]).is_ok() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_compressed_frame_corruption_never_panics() {
+    // The codec-hardening sweep's fuzz row: flipping bytes of a
+    // compressed frame — codec tags, scale/zero-point params, top-k
+    // index sections, segment lengths — must yield Ok-or-Err, never a
+    // panic and never an unbounded allocation.
+    prop_check(
+        "compressed frame corruption safe",
+        100,
+        CompressedMsgGen,
+        |m| {
+            let buf = m.encode();
+            let stride = (buf.len() / 32).max(1);
+            for i in (0..buf.len()).step_by(stride) {
+                for mask in [0xA5u8, 0xFF] {
+                    let mut corrupt = buf.clone();
+                    corrupt[i] ^= mask;
+                    let _ = FlowerMsg::decode(&corrupt);
+                }
+            }
+            true
+        },
+    );
+}
+
 #[test]
 fn prop_legacy_v1_frames_decode_equivalently() {
     // Any flat-parameter message encoded by the legacy v1 codec decodes
