@@ -26,12 +26,15 @@ pub struct LocalGrpcServer {
 
 impl LocalGrpcServer {
     /// Start the LGS pump thread. `server_cell` is the FLARE server job
-    /// cell hosting the LGC (e.g. `server:<job_id>`).
+    /// cell hosting the LGC (e.g. `server:<job_id>`). `headers` ride on
+    /// every relayed frame — bridged jobs put the site credential
+    /// (principal/role/token) here so the LGC can verify provenance.
     pub fn start(
         messenger: Arc<Messenger>,
         server_cell: &str,
         policy: RetryPolicy,
         abort: Arc<AtomicBool>,
+        headers: Vec<(String, String)>,
     ) -> LocalGrpcServer {
         let (node_side, lgs_side) = inproc::pair("supernode", "lgs");
         let stop = Arc::new(AtomicBool::new(false));
@@ -51,10 +54,11 @@ impl LocalGrpcServer {
                     };
                     crate::telemetry::bump("lgs.frames_forwarded", 1);
                     // Hop 2: the reliable FLARE message (retry + query).
-                    match messenger.request(
+                    match messenger.request_with_headers(
                         &server_cell,
                         super::FLOWER_TOPIC,
                         frame,
+                        headers.clone(),
                         policy,
                     ) {
                         Ok(reply) => {
@@ -96,6 +100,7 @@ impl LocalGrpcServer {
         server_cell: &str,
         policy: RetryPolicy,
         abort: Arc<AtomicBool>,
+        headers: Vec<(String, String)>,
     ) -> LocalGrpcServer {
         let (node_side, lgs_side) = inproc::pair("supernode", "lgs");
         let stop = Arc::new(AtomicBool::new(false));
@@ -109,10 +114,11 @@ impl LocalGrpcServer {
                 return;
             }
             crate::telemetry::bump("lgs.frames_forwarded", 1);
-            let reply = match messenger.request(
+            let reply = match messenger.request_with_headers(
                 &server_cell,
                 super::FLOWER_TOPIC,
                 frame.as_slice().to_vec(),
+                headers.clone(),
                 policy,
             ) {
                 Ok(reply) => reply.payload,
@@ -184,6 +190,7 @@ mod tests {
             "server:j1",
             RetryPolicy::fast(),
             Arc::new(AtomicBool::new(false)),
+            Vec::new(),
         );
 
         // Speak the Flower protocol over the LGS endpoint, as a
@@ -230,6 +237,7 @@ mod tests {
             "server:ghost",
             policy,
             Arc::new(AtomicBool::new(false)),
+            Vec::new(),
         );
         let ep = lgs.client_endpoint();
         ep.send(FlowerMsg::CreateNode { requested: 0 }.encode()).unwrap();

@@ -57,6 +57,31 @@ pub const FLOWER_TOPIC: &str = "flower.frame";
 /// without deregistering), so the job cell never hangs on a dead client.
 pub const SHUTDOWN_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// The LGC's ingress check: when the job cell knows the project
+/// authorizer, every relayed Flower frame must carry a valid site
+/// credential (principal + startup-kit token headers, attached by the
+/// LGS). An unprovisioned or mis-tokened site gets a typed refusal —
+/// the error rides back as the reliable reply's `error` header, and the
+/// LGS surfaces it to the SuperNode as a decodable Flower `Error`
+/// frame. `None` (raw-messenger tests, custom wiring) skips the check.
+fn verify_site_frame(
+    auth: &Option<Arc<crate::flare::auth::Authorizer>>,
+    env: &crate::proto::Envelope,
+) -> anyhow::Result<()> {
+    let Some(authorizer) = auth else {
+        return Ok(());
+    };
+    let principal = env.header("principal").unwrap_or("");
+    let token = env.header("token").unwrap_or("");
+    if let Err(e) =
+        authorizer.authenticate(principal, crate::flare::provision::Role::Site, token)
+    {
+        crate::telemetry::bump("authn.rejected", 1);
+        anyhow::bail!("bridge: refusing frame from unverified site '{principal}': {e}");
+    }
+    Ok(())
+}
+
 /// Bridged execution's [`Grid`]: wraps the server job cell's SuperLink
 /// whose CLIENT traffic arrives through FLARE reliable messaging —
 /// [`BridgedGrid::attach`] wires the LGC (Fig. 4 hops 3–5), and from
@@ -79,10 +104,12 @@ impl BridgedGrid {
     pub fn attach(ctx: &JobCtx, link: Arc<SuperLink>) -> BridgedGrid {
         let slot = Arc::new(std::sync::Mutex::new(link));
         let slot2 = slot.clone();
+        let auth = ctx.authenticator.clone();
         ctx.messenger.set_handler(Arc::new(move |env| {
             if env.topic != FLOWER_TOPIC {
                 anyhow::bail!("unexpected topic {}", env.topic);
             }
+            verify_site_frame(&auth, env)?;
             crate::telemetry::bump("bridge.frames_relayed", 1);
             crate::telemetry::bump("bridge.frame_bytes", env.payload.len() as i64);
             let frame = std::mem::take(&mut env.payload);
@@ -197,10 +224,12 @@ impl Grid for BridgedGrid {
 /// exactly like a native sharded run.
 pub fn attach_sharded(ctx: &JobCtx, grid: Arc<ShardedGrid>) -> Arc<ShardedGrid> {
     let routed = grid.clone();
+    let auth = ctx.authenticator.clone();
     ctx.messenger.set_handler(Arc::new(move |env| {
         if env.topic != FLOWER_TOPIC {
             anyhow::bail!("unexpected topic {}", env.topic);
         }
+        verify_site_frame(&auth, env)?;
         crate::telemetry::bump("bridge.frames_relayed", 1);
         crate::telemetry::bump("bridge.frame_bytes", env.payload.len() as i64);
         let frame = std::mem::take(&mut env.payload);
@@ -281,6 +310,37 @@ fn apply_wire_codec(ctx: &JobCtx, app: &mut ServerApp) -> anyhow::Result<()> {
             )
         })?;
     }
+    Ok(())
+}
+
+/// Apply the `committee_size` / `committee_threshold` job-config keys:
+/// a bridged job turns on committee-validated aggregation exactly like
+/// a native [`crate::flower::serverapp::ServerConfig::committee`] run —
+/// the election is seeded by `(seed, run_id, round)`, so a bridged
+/// byz-cohort run quarantines the same nodes and finalizes the same
+/// parameters as its native twin. `committee_threshold` alone (without
+/// a size) is refused rather than silently ignored.
+fn apply_committee(ctx: &JobCtx, app: &mut ServerApp) -> anyhow::Result<()> {
+    let size = ctx.config.get("committee_size").as_u64();
+    let threshold = ctx.config.get("committee_threshold").as_f64();
+    let Some(size) = size else {
+        anyhow::ensure!(
+            threshold.is_none(),
+            "job {}: committee_threshold requires committee_size",
+            ctx.job_id
+        );
+        return Ok(());
+    };
+    anyhow::ensure!(
+        size >= 1,
+        "job {}: committee_size must be at least 1",
+        ctx.job_id
+    );
+    let defaults = crate::flower::committee::CommitteeConfig::default();
+    app.config.committee = Some(crate::flower::committee::CommitteeConfig {
+        size: size as usize,
+        threshold: threshold.unwrap_or(defaults.threshold),
+    });
     Ok(())
 }
 
@@ -366,6 +426,7 @@ impl FlowerBridgeApp {
         } else {
             self.builder.build_server(ctx).and_then(|mut server_app| {
                 apply_wire_codec(ctx, &mut server_app)?;
+                apply_committee(ctx, &mut server_app)?;
                 let tracker = if self.builder.track() {
                     Some(&ctx.tracker)
                 } else {
@@ -408,6 +469,43 @@ impl AppFactory for FlowerBridgeApp {
         let server_cell = address::job_cell(address::SERVER, &ctx.job_id);
         let use_mux = ctx.config.get("mux").as_bool().unwrap_or(false);
 
+        // Insider chaos rides the job config: a `byzantine` object maps
+        // site names to tamper profiles ("sign_flip", "inflate:<f>",
+        // "misreport:<n>", "replay_stale", "duplicate", "forge:<id>").
+        // The tamper layer sits BETWEEN the SuperNode and the LGS, so
+        // the corrupted frames traverse all six hops exactly like
+        // honest ones — this models a compromised site, not a broken
+        // bridge. The mux framing is opaque to the tamper layer, so the
+        // combination is refused up front.
+        let byz_profile = ctx
+            .config
+            .get("byzantine")
+            .as_obj()
+            .and_then(|m| m.get(&ctx.site))
+            .and_then(|v| v.as_str())
+            .map(|s| {
+                crate::transport::fault::ByzantineProfile::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "job {}: unknown byzantine profile '{s}' for site {}",
+                        ctx.job_id,
+                        ctx.site
+                    )
+                })
+            })
+            .transpose()?;
+        anyhow::ensure!(
+            byz_profile.is_none() || !use_mux,
+            "job {}: byzantine profiles are not supported with mux: true",
+            ctx.job_id
+        );
+
+        // The site credential every relayed frame presents to the LGC.
+        let headers = vec![
+            ("principal".to_string(), ctx.site.clone()),
+            ("role".to_string(), "site".to_string()),
+            ("token".to_string(), ctx.site_token.clone()),
+        ];
+
         // Hop 1 wiring: the LGS endpoint the SuperNode dials.
         let lgs = if use_mux {
             LocalGrpcServer::start_mux(
@@ -415,6 +513,7 @@ impl AppFactory for FlowerBridgeApp {
                 &server_cell,
                 self.policy,
                 ctx.abort.clone(),
+                headers,
             )
         } else {
             LocalGrpcServer::start(
@@ -422,6 +521,7 @@ impl AppFactory for FlowerBridgeApp {
                 &server_cell,
                 self.policy,
                 ctx.abort.clone(),
+                headers,
             )
         };
 
@@ -440,8 +540,17 @@ impl AppFactory for FlowerBridgeApp {
                 std::time::Duration::from_secs(120),
             )?)
         } else {
+            // A Byzantine site dials the LGS through the tamper
+            // decorator; an honest one dials it directly.
+            let endpoint: Arc<dyn crate::transport::Endpoint> = match byz_profile {
+                Some(profile) => Arc::new(crate::transport::fault::ByzantineEndpoint::new(
+                    crate::transport::ArcEndpoint(lgs.client_endpoint()),
+                    profile,
+                )),
+                None => lgs.client_endpoint(),
+            };
             Box::new(NativeConnector::new(
-                lgs.client_endpoint(),
+                endpoint,
                 std::time::Duration::from_secs(120),
             ))
         };
@@ -546,6 +655,7 @@ impl AppFactory for FlowerBridgeApp {
         } else if runs == 1 {
             self.builder.build_server(&ctx).and_then(|mut server_app| {
                 apply_wire_codec(&ctx, &mut server_app)?;
+                apply_committee(&ctx, &mut server_app)?;
                 let tracker = if self.builder.track() {
                     Some(&ctx.tracker)
                 } else {
@@ -590,6 +700,7 @@ impl AppFactory for FlowerBridgeApp {
                 .map(|run_id| {
                     let mut app = self.builder.build_server_run(&ctx, run_id)?;
                     apply_wire_codec(&ctx, &mut app)?;
+                    apply_committee(&ctx, &mut app)?;
                     Ok((run_id, app))
                 })
                 .collect();
@@ -839,6 +950,86 @@ mod tests {
         let flat = bridged_history(0.0, 2);
         assert_eq!(sharded, flat);
         assert!(sharded.params_bits_equal(&flat));
+    }
+
+    /// Satellite of the adversarial-federation work: the bridged path
+    /// refuses traffic from sites the project never provisioned. A kit
+    /// minted under the WRONG project secret produces frames whose
+    /// credential headers fail verification at the LGC — every request
+    /// comes back as a typed Flower `Error` frame (never a protocol
+    /// reply), and the `authn.rejected` counter records the rejection.
+    #[test]
+    fn bridged_path_refuses_unprovisioned_site() {
+        use crate::flare::auth::Authorizer;
+        use crate::flare::fabric::{CcpFabric, Fabric, ScpFabric};
+        use crate::flare::provision::{Provisioner, Role};
+        use crate::flare::reliable::Messenger;
+        use crate::flare::tracking::SummaryWriter;
+        use crate::flower::message::FlowerMsg;
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let scp = Arc::new(ScpFabric::new());
+        let (server_end, client_end) =
+            crate::transport::inproc::pair(address::SERVER, "site-1");
+        scp.add_site_link("site-1", Arc::new(server_end));
+        let ccp = CcpFabric::new("site-1", Arc::new(client_end));
+
+        // Server job cell guarded by the project authorizer.
+        let server_msgr =
+            Messenger::spawn(scp.clone() as Arc<dyn Fabric>, "server:j1").unwrap();
+        let ctx = JobCtx {
+            job_id: "j1".into(),
+            site: address::SERVER.into(),
+            participants: vec!["site-1".into()],
+            messenger: server_msgr.clone(),
+            config: Json::Obj(Default::default()),
+            tracker: SummaryWriter::new(server_msgr.clone(), "j1", address::SERVER),
+            compute: None,
+            site_token: String::new(),
+            authenticator: Some(Arc::new(Authorizer::new(Provisioner::new(
+                "proj",
+                b"right-secret",
+            )))),
+            abort: Arc::new(AtomicBool::new(false)),
+        };
+        let grid = BridgedGrid::attach(&ctx, crate::flower::superlink::SuperLink::new());
+
+        // The impostor site presents a kit minted under another secret.
+        let bad_kit =
+            Provisioner::new("proj", b"wrong-secret").provision("site-1", Role::Site, "");
+        let rejected_before =
+            crate::telemetry::counter("authn.rejected").load(Ordering::Relaxed);
+        let client_msgr =
+            Messenger::spawn(ccp.clone() as Arc<dyn Fabric>, "site-1:j1").unwrap();
+        let lgs = LocalGrpcServer::start(
+            client_msgr,
+            "server:j1",
+            RetryPolicy::fast(),
+            Arc::new(AtomicBool::new(false)),
+            vec![
+                ("principal".to_string(), "site-1".to_string()),
+                ("role".to_string(), "site".to_string()),
+                ("token".to_string(), bad_kit.token),
+            ],
+        );
+        let ep = lgs.client_endpoint();
+        ep.send(FlowerMsg::CreateNode { requested: 0 }.encode()).unwrap();
+        let reply = ep.recv_timeout(Duration::from_secs(5)).unwrap();
+        match FlowerMsg::decode(&reply).unwrap() {
+            FlowerMsg::Error { message } => {
+                assert!(message.contains("unverified site"), "{message}");
+            }
+            other => panic!("impostor got a protocol reply: {other:?}"),
+        }
+        assert!(
+            crate::telemetry::counter("authn.rejected").load(Ordering::Relaxed)
+                > rejected_before,
+            "refusal must be counted"
+        );
+        assert_eq!(grid.link().node_ids(), Vec::<u64>::new(), "no node registered");
+        lgs.stop();
+        scp.shutdown();
+        ccp.shutdown();
     }
 
     /// Shared-SuperLink multi-run (§2/§3.1): one job, N concurrent

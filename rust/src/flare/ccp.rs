@@ -42,6 +42,9 @@ struct ClientJob {
 
 pub struct Ccp {
     site: String,
+    /// Startup-kit token — handed to job runners so bridged apps can
+    /// present the site credential on relayed frames.
+    token: String,
     pub fabric: Arc<CcpFabric>,
     control: Arc<Messenger>,
     app_factory: Arc<dyn AppFactory>,
@@ -65,6 +68,7 @@ impl Ccp {
         let control = Messenger::spawn(fabric.clone() as Arc<dyn Fabric>, &site)?;
         let ccp = Arc::new(Ccp {
             site: site.clone(),
+            token: kit.token.clone(),
             fabric,
             control: control.clone(),
             app_factory,
@@ -166,6 +170,8 @@ impl Ccp {
             config: spec.config.clone(),
             tracker: SummaryWriter::new(messenger.clone(), &job_id, &self.site),
             compute: self.compute.clone(),
+            site_token: self.token.clone(),
+            authenticator: None,
             abort,
         };
         let me = self.clone();

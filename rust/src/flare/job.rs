@@ -129,6 +129,14 @@ pub struct JobCtx {
     /// Compute service handle for PJRT execution (None in pure-routing
     /// jobs/tests).
     pub compute: Option<crate::runtime::ComputeHandle>,
+    /// This site's startup-kit token (empty on the server-side runner):
+    /// bridged apps present it with every relayed frame so the server
+    /// job cell can refuse traffic from unprovisioned sites.
+    pub site_token: String,
+    /// Server-side only: the project authorizer used to verify site
+    /// credentials on incoming bridged frames (None on client runners
+    /// and in raw-messenger tests, which skips the check).
+    pub authenticator: Option<Arc<crate::flare::auth::Authorizer>>,
     /// Cooperative abort flag: set when the SCP aborts the job; runners
     /// should poll it at round boundaries.
     pub abort: std::sync::Arc<std::sync::atomic::AtomicBool>,

@@ -3,12 +3,16 @@
 //! certificates"). Real FLARE issues X.509 certs; offline we issue
 //! HMAC-SHA256 identity tokens over (project, site, role) signed with the
 //! project root secret — same trust model (only the provisioner can mint,
-//! the server can verify), zero external PKI.
+//! the server can verify), zero external PKI. The same root secret also
+//! derives the per-node *wire keys* that [`crate::flower::authn`] uses to
+//! MAC every v2 frame, so transport authentication is rooted in
+//! provisioning exactly like FLARE's cert chain.
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
+use crate::util::hash::{hex, unhex, HmacSha256};
 
-type HmacSha256 = Hmac<Sha256>;
+/// Domain-separation label for per-node wire keys (distinct from identity
+/// tokens so a leaked token never doubles as a signing key).
+const NODE_KEY_LABEL: &[u8] = b"flarelink-node-key";
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Role {
@@ -65,13 +69,13 @@ impl Provisioner {
     }
 
     fn sign(&self, name: &str, role: Role) -> String {
-        let mut mac = HmacSha256::new_from_slice(&self.secret).expect("hmac key");
+        let mut mac = HmacSha256::new(&self.secret);
         mac.update(self.project.as_bytes());
         mac.update(b"\x00");
         mac.update(name.as_bytes());
         mac.update(b"\x00");
         mac.update(role.as_str().as_bytes());
-        hex(&mac.finalize().into_bytes())
+        hex(&mac.finalize())
     }
 
     /// Mint a startup kit for one participant.
@@ -85,42 +89,39 @@ impl Provisioner {
         }
     }
 
-    /// Verify a presented token (constant-time via the hmac crate).
+    /// Verify a presented token (fixed-shape compare, no early exit).
     pub fn verify(&self, name: &str, role: Role, token: &str) -> bool {
-        let mut mac = HmacSha256::new_from_slice(&self.secret).expect("hmac key");
-        mac.update(self.project.as_bytes());
-        mac.update(b"\x00");
-        mac.update(name.as_bytes());
-        mac.update(b"\x00");
-        mac.update(role.as_str().as_bytes());
-        match unhex(token) {
-            Some(bytes) => mac.verify_slice(&bytes).is_ok(),
-            None => false,
+        let expected = self.sign(name, role);
+        match (unhex(token), unhex(&expected)) {
+            (Some(a), Some(b)) => crate::util::hash::macs_equal(&a, &b),
+            _ => false,
         }
     }
+
+    /// Derive the wire-authentication key for one node id. Only the
+    /// provisioner (and the SuperLink it hands the derivation secret to)
+    /// can mint these; each node receives exactly its own key in its
+    /// startup kit, so a client can sign as itself but never as a peer.
+    pub fn node_key(&self, node_id: u64) -> [u8; 32] {
+        derive_node_key(&self.secret, &self.project, node_id)
+    }
 }
 
-fn hex(bytes: &[u8]) -> String {
-    let mut s = String::with_capacity(bytes.len() * 2);
-    for b in bytes {
-        s.push_str(&format!("{:02x}", b));
-    }
-    s
-}
-
-fn unhex(s: &str) -> Option<Vec<u8>> {
-    if s.len() % 2 != 0 {
-        return None;
-    }
-    (0..s.len())
-        .step_by(2)
-        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).ok())
-        .collect()
+/// Shared node-key derivation: HMAC(secret, label ‖ 0 ‖ project ‖ 0 ‖ id).
+pub fn derive_node_key(secret: &[u8], project: &str, node_id: u64) -> [u8; 32] {
+    let mut mac = HmacSha256::new(secret);
+    mac.update(NODE_KEY_LABEL);
+    mac.update(b"\x00");
+    mac.update(project.as_bytes());
+    mac.update(b"\x00");
+    mac.update(&node_id.to_le_bytes());
+    mac.finalize()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::hash::{hex, unhex};
 
     #[test]
     fn minted_kit_verifies() {
@@ -155,6 +156,20 @@ mod tests {
         let c = p.provision("site-1", Role::Admin, "").token;
         assert_ne!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn node_keys_differ_per_node_and_secret() {
+        let p = Provisioner::new("proj", b"s");
+        assert_ne!(p.node_key(1), p.node_key(2));
+        assert_eq!(p.node_key(7), derive_node_key(b"s", "proj", 7));
+        assert_ne!(
+            derive_node_key(b"s", "proj", 1),
+            derive_node_key(b"other", "proj", 1)
+        );
+        // Domain separation: a node key is never a valid identity token.
+        let kit = p.provision("site-1", Role::Site, "");
+        assert_ne!(kit.token, hex(&p.node_key(1)));
     }
 
     #[test]

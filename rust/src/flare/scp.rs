@@ -473,6 +473,8 @@ impl Scp {
             config,
             tracker: SummaryWriter::new(messenger.clone(), &job_id, address::SERVER),
             compute: self.compute.clone(),
+            site_token: String::new(),
+            authenticator: Some(self.authorizer.clone()),
             abort: abort.clone(),
         };
         let result = self.app_factory.run_server(ctx);

@@ -8,8 +8,6 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use sha2::{Digest, Sha256};
-
 use crate::flare::reliable::{Messenger, ReliableError, RetryPolicy};
 use crate::proto::Envelope;
 use crate::util::bytes::{Reader, Writer};
@@ -56,7 +54,7 @@ pub fn send_streamed(
     let stream_id = crate::flare::fabric::next_msg_id();
     let total = payload.len();
     let n_chunks = total.div_ceil(chunk_size).max(1);
-    let digest = Sha256::digest(payload);
+    let digest = crate::util::hash::sha256(payload);
 
     for i in 0..n_chunks {
         let start = i * chunk_size;
@@ -133,7 +131,7 @@ impl StreamCollector {
             for c in p.chunks {
                 payload.extend_from_slice(&c.unwrap());
             }
-            let got = Sha256::digest(&payload);
+            let got = crate::util::hash::sha256(&payload);
             if got.as_slice() != digest.as_slice() {
                 return Ok(b"checksum-mismatch".to_vec());
             }

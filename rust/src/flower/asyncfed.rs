@@ -40,6 +40,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::{Duration, Instant};
 
 use crate::flare::tracking::SummaryWriter;
+use crate::flower::committee;
 use crate::flower::grid::Grid;
 use crate::flower::message::{ConfigValue, Message};
 use crate::flower::persist::checkpoint::{AsyncCkpt, DriverCkpt, DriverPhase};
@@ -444,6 +445,16 @@ impl ServerApp {
             "delta wire codec requires max_staleness == 0: a result lagging the \
              current version deltas against a model the driver no longer holds"
         );
+        // Mirror the synchronous driver's committee gate: quarantining
+        // excludes an arrived contribution from the fold, which only a
+        // byzantine-tolerant strategy can absorb.
+        anyhow::ensure!(
+            self.config.committee.is_none() || self.strategy.supports_byzantine(),
+            "strategy {} cannot aggregate a committee-filtered cohort (e.g. secure \
+             aggregation masks only cancel when every contribution folds) — \
+             disable committee validation",
+            self.strategy.name()
+        );
         let cfg = self.config.clone();
         let nodes = grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
         anyhow::ensure!(
@@ -514,6 +525,11 @@ impl ServerApp {
                 ));
             }
             let mut agg = self.strategy.begin_fit(commit, &params);
+            // With committee validation on, the window's results defer
+            // here instead of folding eagerly: the committee needs the
+            // FULL buffer to elect members and score outliers, so
+            // survivors fold only once the window closes.
+            let mut pending: Vec<FitRes> = Vec::new();
             loop {
                 grid.reap();
                 // Fold claimed results until the window fills.
@@ -560,7 +576,7 @@ impl ServerApp {
                                     );
                                 }
                             };
-                            agg.accumulate(FitRes {
+                            let fit_res = FitRes {
                                 node_id: node,
                                 parameters: arrays,
                                 num_examples: scale_examples(
@@ -568,7 +584,12 @@ impl ServerApp {
                                     weights[staleness as usize],
                                 ),
                                 metrics: res.content.metrics,
-                            })?;
+                            };
+                            if cfg.committee.is_some() {
+                                pending.push(fit_res);
+                            } else {
+                                agg.accumulate(fit_res)?;
+                            }
                             if durable {
                                 grid.journal_fold(run_id, task_id);
                             }
@@ -665,6 +686,25 @@ impl ServerApp {
                     );
                 }
                 grid.wait_activity_run(run_id, Duration::from_millis(50));
+            }
+            // Window closed: committee-validate the buffered results
+            // and fold the survivors in node-id order (the accumulator
+            // canonicalizes anyway — the sort keeps folding order
+            // deterministic for non-canonicalizing accumulators too).
+            if let Some(cc) = &cfg.committee {
+                let verdicts = committee::validate(cc, cfg.seed, run_id, commit, &pending);
+                let quarantined = committee::quarantined_nodes(&verdicts);
+                pending.sort_by_key(|r| r.node_id);
+                for fit_res in pending.drain(..) {
+                    if quarantined.contains(&fit_res.node_id) {
+                        continue;
+                    }
+                    agg.accumulate(fit_res)?;
+                }
+                anyhow::ensure!(
+                    agg.count() > 0,
+                    "async commit {commit}: committee quarantined every buffered update"
+                );
             }
             params = agg.finalize()?;
             let rec = state.commit();

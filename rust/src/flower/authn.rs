@@ -1,0 +1,542 @@
+//! Wire authentication for the v2 Flower frame protocol: every frame
+//! between a SuperNode and the SuperLink is wrapped in an authentication
+//! envelope — a per-node HMAC-SHA256 (hand-rolled, vendored-dep-free
+//! like the CRC in `persist/wal.rs`) over the frame plus an
+//! anti-replay counter. Keys are derived from the provisioning root
+//! secret ([`crate::flare::provision::derive_node_key`]): each node
+//! receives exactly its own key in its startup kit, so a client can
+//! sign as itself but never as a peer, and the SuperLink (holding the
+//! derivation secret) can verify any node.
+//!
+//! Envelope layout (fixed [`AUTH_HEADER`]-byte prefix, then the
+//! untouched inner v2 frame):
+//!
+//! ```text
+//! [magic 0xA7][dir u8][node_id u64 LE][counter u64 LE][mac 32B][inner frame]
+//! ```
+//!
+//! The MAC covers `dir ‖ node_id ‖ counter ‖ inner`, so a frame can be
+//! neither tampered with, re-attributed to another node, redirected
+//! (client→server vs server→client), nor replayed under a reused
+//! counter. Replay protection is an IPsec-style sliding window
+//! ([`ReplayWindow`]): out-of-order delivery inside the window (mux
+//! worker pools, dual rpc/push streams) is tolerated, duplicates and
+//! ancient counters are dropped with a typed error.
+//!
+//! **Threat model.** This authenticates *frames*, not *content*: a
+//! provisioned-but-malicious node still signs whatever lies it likes
+//! (poisoned tensors, misreported `num_examples`) — that axis belongs
+//! to [`crate::flower::committee`]. Rejection replies are necessarily
+//! unsigned (the link may not even be able to attribute the frame), so
+//! an attacker able to inject frames can forge *errors* — a denial of
+//! service it could achieve by dropping frames anyway, never an
+//! impersonation. The HMAC here models real mTLS/Ed25519 channel
+//! authentication; see DESIGN.md §Substitutions.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::flare::provision::derive_node_key;
+use crate::util::bytes::Bytes;
+use crate::util::hash::{macs_equal, HmacSha256};
+
+/// First byte of an authenticated frame (distinct from the v2 frame
+/// magic `0xF2` and every v1 legacy tag).
+pub const AUTH_MAGIC: u8 = 0xA7;
+/// Fixed envelope prefix: magic + dir + node_id + counter + MAC.
+pub const AUTH_HEADER: usize = 1 + 1 + 8 + 8 + 32;
+/// Direction byte: SuperNode → SuperLink.
+pub const DIR_TO_LINK: u8 = 0;
+/// Direction byte: SuperLink → SuperNode.
+pub const DIR_FROM_LINK: u8 = 1;
+
+/// Marker carried by every wire-level authentication rejection. Clients
+/// classify on it: an `Error` frame containing this is a FATAL typed
+/// refusal — never a lease miss, never a torn frame, never a reason to
+/// re-register and retry.
+pub const AUTHN_ERR: &str = "authn rejected";
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AuthnError {
+    /// The frame carries no authentication envelope at all.
+    Missing,
+    /// Too short to hold the fixed envelope prefix.
+    Truncated,
+    /// Envelope direction byte is wrong for this receiver.
+    WrongDirection { got: u8 },
+    /// Envelope names a different node than this verifier serves.
+    WrongNode { got: u64, expected: u64 },
+    /// MAC did not verify under the named node's key: forged, tampered,
+    /// or signed with the wrong (e.g. a peer's) key.
+    BadMac { node_id: u64 },
+    /// Counter already seen (or aged out of the window): a replay.
+    Replay { node_id: u64, counter: u64 },
+}
+
+impl std::fmt::Display for AuthnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AuthnError::Missing => write!(f, "frame lacks an authentication envelope"),
+            AuthnError::Truncated => write!(f, "authentication envelope truncated"),
+            AuthnError::WrongDirection { got } => {
+                write!(f, "wrong envelope direction {got}")
+            }
+            AuthnError::WrongNode { got, expected } => {
+                write!(f, "envelope for node {got}, expected node {expected}")
+            }
+            AuthnError::BadMac { node_id } => {
+                write!(f, "bad frame MAC for node {node_id} (forged or tampered)")
+            }
+            AuthnError::Replay { node_id, counter } => {
+                write!(f, "replayed counter {counter} for node {node_id}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AuthnError {}
+
+fn mac_over(key: &[u8; 32], dir: u8, node_id: u64, counter: u64, inner: &[u8]) -> [u8; 32] {
+    let mut m = HmacSha256::new(key);
+    m.update(&[dir]);
+    m.update(&node_id.to_le_bytes());
+    m.update(&counter.to_le_bytes());
+    m.update(inner);
+    m.finalize()
+}
+
+/// Wrap `inner` in an authentication envelope.
+pub fn seal(key: &[u8; 32], dir: u8, node_id: u64, counter: u64, inner: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(AUTH_HEADER + inner.len());
+    out.push(AUTH_MAGIC);
+    out.push(dir);
+    out.extend_from_slice(&node_id.to_le_bytes());
+    out.extend_from_slice(&counter.to_le_bytes());
+    out.extend_from_slice(&mac_over(key, dir, node_id, counter, inner));
+    out.extend_from_slice(inner);
+    out
+}
+
+struct Envelope {
+    dir: u8,
+    node_id: u64,
+    counter: u64,
+}
+
+fn parse(frame: &[u8]) -> Result<Envelope, AuthnError> {
+    if frame.first() != Some(&AUTH_MAGIC) {
+        return Err(AuthnError::Missing);
+    }
+    if frame.len() < AUTH_HEADER {
+        return Err(AuthnError::Truncated);
+    }
+    Ok(Envelope {
+        dir: frame[1],
+        node_id: u64::from_le_bytes(frame[2..10].try_into().unwrap()),
+        counter: u64::from_le_bytes(frame[10..18].try_into().unwrap()),
+    })
+}
+
+fn verify(key: &[u8; 32], env: &Envelope, frame: &[u8]) -> bool {
+    let expected = mac_over(key, env.dir, env.node_id, env.counter, &frame[AUTH_HEADER..]);
+    macs_equal(&frame[18..AUTH_HEADER], &expected)
+}
+
+/// Sliding anti-replay window (IPsec-style): accepts each counter at
+/// most once, tolerates out-of-order delivery up to [`WINDOW_BITS`]
+/// behind the highest counter seen, rejects anything older. Counter 0
+/// is never valid (senders start at 1).
+pub struct ReplayWindow {
+    highest: u64,
+    /// Bit `age` (= `highest - counter`) set ⇔ that counter was seen.
+    seen: [u64; WINDOW_WORDS],
+}
+
+const WINDOW_WORDS: usize = 16;
+/// Window span in counters: generous enough for the dual-stream client
+/// (unary replies and task pushes share one direction counter but are
+/// consumed at different times).
+pub const WINDOW_BITS: u64 = (WINDOW_WORDS as u64) * 64;
+
+impl Default for ReplayWindow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplayWindow {
+    pub fn new() -> ReplayWindow {
+        ReplayWindow {
+            highest: 0,
+            seen: [0; WINDOW_WORDS],
+        }
+    }
+
+    fn test(&self, age: u64) -> bool {
+        self.seen[(age / 64) as usize] & (1u64 << (age % 64)) != 0
+    }
+
+    fn set(&mut self, age: u64) {
+        self.seen[(age / 64) as usize] |= 1u64 << (age % 64);
+    }
+
+    /// Age every recorded bit by `s` (the window just advanced by `s`).
+    fn shift(&mut self, s: u64) {
+        if s >= WINDOW_BITS {
+            self.seen = [0; WINDOW_WORDS];
+            return;
+        }
+        let words = (s / 64) as usize;
+        let bits = (s % 64) as u32;
+        for i in (0..WINDOW_WORDS).rev() {
+            let src = i as isize - words as isize;
+            let mut v = if src >= 0 {
+                self.seen[src as usize] << bits
+            } else {
+                0
+            };
+            if bits > 0 && src >= 1 {
+                v |= self.seen[(src - 1) as usize] >> (64 - bits);
+            }
+            self.seen[i] = v;
+        }
+    }
+
+    /// Accept `counter` exactly once; false on replay / too-old / zero.
+    pub fn accept(&mut self, counter: u64) -> bool {
+        if counter == 0 {
+            return false;
+        }
+        if counter > self.highest {
+            self.shift(counter - self.highest);
+            self.highest = counter;
+            self.set(0);
+            return true;
+        }
+        let age = self.highest - counter;
+        if age >= WINDOW_BITS || self.test(age) {
+            return false;
+        }
+        self.set(age);
+        true
+    }
+}
+
+/// Server-side verifier/signer: holds the key-derivation secret, so it
+/// can authenticate ANY node's frames and sign replies back. One per
+/// SuperLink (see `SuperLink::set_authenticator`).
+pub struct FrameAuthenticator {
+    project: String,
+    secret: Vec<u8>,
+    keys: Mutex<HashMap<u64, [u8; 32]>>,
+    /// Per-node inbound replay windows (client → link direction).
+    windows: Mutex<HashMap<u64, ReplayWindow>>,
+    /// Per-node outbound counters (link → client direction) — shared by
+    /// unary replies and task-stream pushes.
+    send: Mutex<HashMap<u64, u64>>,
+}
+
+impl FrameAuthenticator {
+    pub fn new(project: &str, secret: &[u8]) -> Arc<FrameAuthenticator> {
+        Arc::new(FrameAuthenticator {
+            project: project.to_string(),
+            secret: secret.to_vec(),
+            keys: Mutex::new(HashMap::new()),
+            windows: Mutex::new(HashMap::new()),
+            send: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The wire key for `node_id` (derived on first use, then cached).
+    pub fn node_key(&self, node_id: u64) -> [u8; 32] {
+        let mut keys = self.keys.lock().unwrap();
+        *keys
+            .entry(node_id)
+            .or_insert_with(|| derive_node_key(&self.secret, &self.project, node_id))
+    }
+
+    /// Verify one client frame: envelope shape, direction, MAC, replay
+    /// window — in that order (only authentic frames may advance the
+    /// window). Returns the AUTHENTICATED node id and the offset of the
+    /// inner frame. Failures bump `authn.rejected` / `replay.dropped`.
+    pub fn open_request(&self, frame: &[u8]) -> Result<(u64, usize), AuthnError> {
+        let env = match parse(frame) {
+            Ok(env) => env,
+            Err(e) => {
+                crate::telemetry::bump("authn.rejected", 1);
+                return Err(e);
+            }
+        };
+        if env.dir != DIR_TO_LINK {
+            crate::telemetry::bump("authn.rejected", 1);
+            return Err(AuthnError::WrongDirection { got: env.dir });
+        }
+        if !verify(&self.node_key(env.node_id), &env, frame) {
+            crate::telemetry::bump("authn.rejected", 1);
+            return Err(AuthnError::BadMac {
+                node_id: env.node_id,
+            });
+        }
+        let accepted = self
+            .windows
+            .lock()
+            .unwrap()
+            .entry(env.node_id)
+            .or_default()
+            .accept(env.counter);
+        if !accepted {
+            crate::telemetry::bump("replay.dropped", 1);
+            return Err(AuthnError::Replay {
+                node_id: env.node_id,
+                counter: env.counter,
+            });
+        }
+        Ok((env.node_id, AUTH_HEADER))
+    }
+
+    /// Sign one link → client frame for `node_id`.
+    pub fn seal_reply(&self, node_id: u64, inner: &[u8]) -> Vec<u8> {
+        let counter = {
+            let mut send = self.send.lock().unwrap();
+            let c = send.entry(node_id).or_insert(0);
+            *c += 1;
+            *c
+        };
+        seal(&self.node_key(node_id), DIR_FROM_LINK, node_id, counter, inner)
+    }
+}
+
+/// Client-side signer/verifier: holds exactly ONE node's key (from its
+/// startup kit) — it can prove its own identity and verify link
+/// replies, but cannot mint a peer's MAC.
+pub struct NodeSigner {
+    node_id: u64,
+    key: [u8; 32],
+    send: AtomicU64,
+    window: Mutex<ReplayWindow>,
+}
+
+impl NodeSigner {
+    pub fn new(node_id: u64, key: [u8; 32]) -> Arc<NodeSigner> {
+        Arc::new(NodeSigner {
+            node_id,
+            key,
+            send: AtomicU64::new(0),
+            window: Mutex::new(ReplayWindow::new()),
+        })
+    }
+
+    /// Convenience: derive the node's key the way the provisioner does
+    /// (simulator-side; a real deployment ships only the derived key).
+    pub fn for_project(project: &str, secret: &[u8], node_id: u64) -> Arc<NodeSigner> {
+        NodeSigner::new(node_id, derive_node_key(secret, project, node_id))
+    }
+
+    pub fn node_id(&self) -> u64 {
+        self.node_id
+    }
+
+    /// Sign one outbound client frame.
+    pub fn seal(&self, inner: &[u8]) -> Vec<u8> {
+        let counter = self.send.fetch_add(1, Ordering::Relaxed) + 1;
+        seal(&self.key, DIR_TO_LINK, self.node_id, counter, inner)
+    }
+
+    /// Verify one link → client frame and unwrap the inner frame
+    /// (zero-copy slice of the envelope buffer). Failures bump the same
+    /// telemetry counters as the server side.
+    pub fn open_reply(&self, frame: Bytes) -> Result<Bytes, AuthnError> {
+        let env = match parse(frame.as_slice()) {
+            Ok(env) => env,
+            Err(e) => {
+                crate::telemetry::bump("authn.rejected", 1);
+                return Err(e);
+            }
+        };
+        if env.dir != DIR_FROM_LINK {
+            crate::telemetry::bump("authn.rejected", 1);
+            return Err(AuthnError::WrongDirection { got: env.dir });
+        }
+        if env.node_id != self.node_id {
+            crate::telemetry::bump("authn.rejected", 1);
+            return Err(AuthnError::WrongNode {
+                got: env.node_id,
+                expected: self.node_id,
+            });
+        }
+        if !verify(&self.key, &env, frame.as_slice()) {
+            crate::telemetry::bump("authn.rejected", 1);
+            return Err(AuthnError::BadMac {
+                node_id: env.node_id,
+            });
+        }
+        if !self.window.lock().unwrap().accept(env.counter) {
+            crate::telemetry::bump("replay.dropped", 1);
+            return Err(AuthnError::Replay {
+                node_id: env.node_id,
+                counter: env.counter,
+            });
+        }
+        Ok(frame.slice(AUTH_HEADER, frame.len() - AUTH_HEADER))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(b: u8) -> [u8; 32] {
+        [b; 32]
+    }
+
+    #[test]
+    fn seal_open_roundtrip() {
+        let auth = FrameAuthenticator::new("proj", b"secret");
+        let signer = NodeSigner::for_project("proj", b"secret", 7);
+        let sealed = signer.seal(b"hello");
+        let (node, off) = auth.open_request(&sealed).unwrap();
+        assert_eq!(node, 7);
+        assert_eq!(&sealed[off..], b"hello");
+        // And the reply direction.
+        let reply = auth.seal_reply(7, b"world");
+        let inner = signer.open_reply(Bytes::from_vec(reply)).unwrap();
+        assert_eq!(inner.as_slice(), b"world");
+    }
+
+    #[test]
+    fn tampered_payload_rejected() {
+        let auth = FrameAuthenticator::new("proj", b"secret");
+        let signer = NodeSigner::for_project("proj", b"secret", 1);
+        let mut sealed = signer.seal(b"payload");
+        let last = sealed.len() - 1;
+        sealed[last] ^= 0xFF;
+        assert!(matches!(
+            auth.open_request(&sealed),
+            Err(AuthnError::BadMac { node_id: 1 })
+        ));
+    }
+
+    #[test]
+    fn cross_node_attribution_rejected() {
+        // Node 2 signs a frame but stamps node 1's id on the envelope:
+        // the MAC (keyed per node AND covering the id) fails.
+        let auth = FrameAuthenticator::new("proj", b"secret");
+        let k2 = derive_node_key(b"secret", "proj", 2);
+        let forged = seal(&k2, DIR_TO_LINK, 1, 1, b"imposter");
+        assert!(matches!(
+            auth.open_request(&forged),
+            Err(AuthnError::BadMac { node_id: 1 })
+        ));
+    }
+
+    #[test]
+    fn replayed_frame_rejected_exactly_once_accepted() {
+        let auth = FrameAuthenticator::new("proj", b"secret");
+        let signer = NodeSigner::for_project("proj", b"secret", 3);
+        let sealed = signer.seal(b"x");
+        assert!(auth.open_request(&sealed).is_ok());
+        let before = crate::telemetry::counter("replay.dropped")
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(matches!(
+            auth.open_request(&sealed),
+            Err(AuthnError::Replay { node_id: 3, .. })
+        ));
+        let after = crate::telemetry::counter("replay.dropped")
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(after, before + 1);
+    }
+
+    #[test]
+    fn wrong_direction_and_missing_envelope_rejected() {
+        let auth = FrameAuthenticator::new("proj", b"secret");
+        let signer = NodeSigner::for_project("proj", b"secret", 1);
+        // A reply frame played back at the server.
+        let reply = auth.seal_reply(1, b"r");
+        assert!(matches!(
+            auth.open_request(&reply),
+            Err(AuthnError::WrongDirection { got: DIR_FROM_LINK })
+        ));
+        // A bare v2 frame at an authenticated server.
+        assert!(matches!(
+            auth.open_request(&[0xF2, 0, 0]),
+            Err(AuthnError::Missing)
+        ));
+        // Truncated envelope.
+        assert!(matches!(
+            auth.open_request(&[AUTH_MAGIC, 0, 1]),
+            Err(AuthnError::Truncated)
+        ));
+        // A request frame played back at the client.
+        let req = signer.seal(b"q");
+        assert!(matches!(
+            signer.open_reply(Bytes::from_vec(req)),
+            Err(AuthnError::WrongDirection { got: DIR_TO_LINK })
+        ));
+    }
+
+    #[test]
+    fn client_rejects_reply_for_other_node() {
+        let auth = FrameAuthenticator::new("proj", b"secret");
+        let signer = NodeSigner::for_project("proj", b"secret", 1);
+        let reply_for_2 = auth.seal_reply(2, b"r");
+        assert!(matches!(
+            signer.open_reply(Bytes::from_vec(reply_for_2)),
+            Err(AuthnError::WrongNode {
+                got: 2,
+                expected: 1
+            })
+        ));
+    }
+
+    #[test]
+    fn replay_window_slides_and_tolerates_reordering() {
+        let mut w = ReplayWindow::new();
+        assert!(!w.accept(0), "counter 0 never valid");
+        assert!(w.accept(5));
+        assert!(w.accept(3), "out-of-order inside the window accepted");
+        assert!(!w.accept(3), "second sight is a replay");
+        assert!(!w.accept(5));
+        assert!(w.accept(4));
+        // Advance far: everything at or below the horizon is too old.
+        assert!(w.accept(5 + WINDOW_BITS + 10));
+        assert!(!w.accept(5), "aged out of the window");
+        assert!(!w.accept(10), "aged out of the window");
+        // Still inside the fresh window.
+        assert!(w.accept(5 + WINDOW_BITS + 9));
+    }
+
+    #[test]
+    fn replay_window_dense_sweep() {
+        // Every counter 1..=3000 in order, each accepted exactly once.
+        let mut w = ReplayWindow::new();
+        for c in 1..=3000u64 {
+            assert!(w.accept(c), "counter {c}");
+            assert!(!w.accept(c), "counter {c} replay");
+        }
+    }
+
+    #[test]
+    fn window_shift_across_word_boundaries() {
+        let mut w = ReplayWindow::new();
+        for &c in &[1u64, 64, 65, 128, 130, 1000] {
+            assert!(w.accept(c), "counter {c}");
+        }
+        for &c in &[1u64, 64, 65, 128, 130, 1000] {
+            assert!(!w.accept(c), "counter {c} must replay");
+        }
+        // 1000 - 1023 = below horizon only once we pass WINDOW_BITS.
+        assert!(w.accept(999));
+        assert!(!w.accept(999));
+    }
+
+    #[test]
+    fn macs_differ_per_direction_node_and_counter() {
+        let k = key(9);
+        let base = mac_over(&k, 0, 1, 1, b"p");
+        assert_ne!(base, mac_over(&k, 1, 1, 1, b"p"));
+        assert_ne!(base, mac_over(&k, 0, 2, 1, b"p"));
+        assert_ne!(base, mac_over(&k, 0, 1, 2, b"p"));
+        assert_ne!(base, mac_over(&k, 0, 1, 1, b"q"));
+    }
+}

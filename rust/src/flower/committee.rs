@@ -1,0 +1,414 @@
+//! Committee-validated robust aggregation: a deterministic, seeded
+//! validator committee cross-scores every incoming fit update BEFORE
+//! the strategy's streaming accumulator folds it, quarantining
+//! outliers with typed per-node verdicts.
+//!
+//! Frame authentication ([`crate::flower::authn`]) proves **who sent a
+//! frame**; it says nothing about whether an *authorized* node is
+//! lying about its gradients or its example counts. The committee is
+//! the content-level complement: each round a subset of the completed
+//! cohort is elected (seeded by `(seed, run_id, round)`, so the
+//! election is identical across native, bridged, and sharded
+//! transports), the coordinate-wise median of the committee's own
+//! updates becomes the round's reference, and every update — committee
+//! members included — is scored by L2 distance to that reference. An
+//! update further than [`CommitteeConfig::threshold`] times the median
+//! committee distance is quarantined and excluded from aggregation;
+//! so is one whose reported `num_examples` dwarfs the committee median
+//! (weight inflation) or whose record structure disagrees with the
+//! cohort majority.
+//!
+//! Everything here is a pure function of the sorted result set, so
+//! byz-cohort runs validated by the committee finalize bit-identical
+//! across transports — the same reproducibility contract the rest of
+//! the driver keeps.
+
+use std::collections::HashSet;
+
+use crate::flower::strategy::FitRes;
+use crate::util::rng::Rng;
+
+/// Scores within `threshold × baseline + EPS` survive: the absolute
+/// epsilon keeps a committee of bit-identical honest updates (baseline
+/// exactly 0.0) from quarantining itself over float dust.
+const EPS: f64 = 1e-9;
+
+/// Knobs of per-round committee validation. Enabled by setting
+/// [`crate::flower::serverapp::ServerConfig::committee`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommitteeConfig {
+    /// Committee members elected per round (clamped to the completed
+    /// cohort size).
+    pub size: usize,
+    /// Quarantine an update whose distance to the committee reference
+    /// exceeds this multiple of the median committee distance. Also
+    /// bounds `num_examples` against the committee median.
+    pub threshold: f64,
+}
+
+impl Default for CommitteeConfig {
+    fn default() -> Self {
+        Self {
+            size: 5,
+            threshold: 5.0,
+        }
+    }
+}
+
+/// One node's validation outcome for a round, recorded in
+/// [`crate::flower::serverapp::RoundRecord::verdicts`]. Quarantined
+/// nodes carry a typed `reason`; cleared nodes an empty one.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Verdict {
+    pub node_id: u64,
+    /// Excluded from this round's aggregation?
+    pub quarantined: bool,
+    /// Why (empty when cleared).
+    pub reason: String,
+    /// L2 distance to the committee's coordinate-wise-median reference
+    /// (infinite for structure mismatches, which cannot be scored).
+    pub score: f64,
+}
+
+impl Verdict {
+    fn clear(node_id: u64, score: f64) -> Verdict {
+        Verdict {
+            node_id,
+            quarantined: false,
+            reason: String::new(),
+            score,
+        }
+    }
+}
+
+/// Node ids quarantined by a verdict set.
+pub fn quarantined_nodes(verdicts: &[Verdict]) -> HashSet<u64> {
+    verdicts
+        .iter()
+        .filter(|v| v.quarantined)
+        .map(|v| v.node_id)
+        .collect()
+}
+
+/// Elect `cfg.size` committee members from `candidates` (must be
+/// sorted node ids), seeded by `(seed, run_id, round)`. A pure
+/// function of its arguments: every transport that sees the same
+/// completed cohort elects the same committee. Returned sorted.
+pub fn elect(cfg: &CommitteeConfig, seed: u64, run_id: u64, round: u64, candidates: &[u64]) -> Vec<u64> {
+    let k = cfg.size.min(candidates.len());
+    let mut rng =
+        Rng::new(seed ^ run_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)).split(round ^ 0xC0D3_C0DE);
+    let mut picked: Vec<u64> = rng
+        .sample_indices(candidates.len(), k)
+        .into_iter()
+        .map(|i| candidates[i])
+        .collect();
+    picked.sort_unstable();
+    picked
+}
+
+fn median_of(sorted: &mut Vec<f64>) -> f64 {
+    sorted.sort_by(f64::total_cmp);
+    let k = sorted.len();
+    if k == 0 {
+        return 0.0;
+    }
+    if k % 2 == 1 {
+        sorted[k / 2]
+    } else {
+        (sorted[k / 2 - 1] + sorted[k / 2]) / 2.0
+    }
+}
+
+/// Flattened f64 view of a result's parameters, tensor-major.
+fn flatten(res: &FitRes) -> Vec<f64> {
+    let mut out = Vec::with_capacity(res.parameters.total_elems());
+    for t in res.parameters.tensors() {
+        for i in 0..t.elems() {
+            out.push(t.get_f64(i));
+        }
+    }
+    out
+}
+
+/// Validate one round's completed fit results: elect the committee,
+/// build its coordinate-wise-median reference, and score every update
+/// against it. Returns one [`Verdict`] per result, sorted by node id —
+/// a pure function of `(cfg, seed, run_id, round, results)`, so the
+/// verdict set is identical in any arrival order and on any transport.
+/// Quarantines bump the `committee.quarantined` telemetry counter.
+pub fn validate(
+    cfg: &CommitteeConfig,
+    seed: u64,
+    run_id: u64,
+    round: u64,
+    results: &[FitRes],
+) -> Vec<Verdict> {
+    // Canonical order: everything downstream is a function of the
+    // node-id-sorted set.
+    let mut order: Vec<&FitRes> = results.iter().collect();
+    order.sort_by_key(|r| r.node_id);
+
+    // Structure majority: updates whose record structure disagrees
+    // with the largest structure group cannot be scored coordinate-
+    // wise and are quarantined outright. Groups are represented by
+    // their first (lowest-node-id) member, so ties break toward the
+    // group containing the smallest node id — deterministic.
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new(); // (rep idx, member idxs)
+    for (i, r) in order.iter().enumerate() {
+        match groups
+            .iter_mut()
+            .find(|(rep, _)| order[*rep].parameters.dims_match(&r.parameters))
+        {
+            Some((_, members)) => members.push(i),
+            None => groups.push((i, vec![i])),
+        }
+    }
+    let majority = groups
+        .iter()
+        .max_by(|a, b| a.1.len().cmp(&b.1.len()).then(b.0.cmp(&a.0)))
+        .map(|(_, members)| members.clone())
+        .unwrap_or_default();
+    let majority_set: HashSet<usize> = majority.iter().copied().collect();
+
+    // Elect the committee from the structure-majority cohort.
+    let candidates: Vec<u64> = majority.iter().map(|&i| order[i].node_id).collect();
+    let committee = elect(cfg, seed, run_id, round, &candidates);
+    let committee_set: HashSet<u64> = committee.iter().copied().collect();
+    let members: Vec<&FitRes> = order
+        .iter()
+        .filter(|r| committee_set.contains(&r.node_id))
+        .copied()
+        .collect();
+
+    // Coordinate-wise median of the committee's updates: the round's
+    // reference point. Robust as long as the committee is majority-
+    // honest (the Byzantine-tolerance assumption every robust
+    // aggregation rule already makes).
+    let flats: Vec<Vec<f64>> = members.iter().map(|r| flatten(r)).collect();
+    let dim = flats.first().map(|f| f.len()).unwrap_or(0);
+    let mut reference = Vec::with_capacity(dim);
+    let mut col = Vec::with_capacity(flats.len());
+    for d in 0..dim {
+        col.clear();
+        col.extend(flats.iter().map(|f| f[d]));
+        reference.push(median_of(&mut col.clone()));
+    }
+
+    let distance = |flat: &[f64]| -> f64 {
+        flat.iter()
+            .zip(&reference)
+            .map(|(x, r)| (x - r) * (x - r))
+            .sum::<f64>()
+            .sqrt()
+    };
+
+    // Baselines: median committee distance to the reference, and
+    // median committee example count.
+    let mut committee_dists: Vec<f64> = flats.iter().map(|f| distance(f)).collect();
+    let baseline = median_of(&mut committee_dists);
+    let mut committee_examples: Vec<f64> =
+        members.iter().map(|r| r.num_examples as f64).collect();
+    let examples_baseline = median_of(&mut committee_examples);
+
+    let dist_cut = cfg.threshold * baseline + EPS;
+    let examples_cut = cfg.threshold * examples_baseline + EPS;
+    let mut verdicts = Vec::with_capacity(order.len());
+    for (i, r) in order.iter().enumerate() {
+        if !majority_set.contains(&i) {
+            verdicts.push(Verdict {
+                node_id: r.node_id,
+                quarantined: true,
+                reason: "record structure differs from the cohort majority".to_string(),
+                score: f64::INFINITY,
+            });
+            continue;
+        }
+        let score = distance(&flatten(r));
+        if score > dist_cut {
+            verdicts.push(Verdict {
+                node_id: r.node_id,
+                quarantined: true,
+                reason: format!(
+                    "update distance {score:.3e} exceeds {}x the committee baseline {baseline:.3e}",
+                    cfg.threshold
+                ),
+                score,
+            });
+        } else if examples_baseline > 0.0 && (r.num_examples as f64) > examples_cut {
+            verdicts.push(Verdict {
+                node_id: r.node_id,
+                quarantined: true,
+                reason: format!(
+                    "reported {} examples exceeds {}x the committee median {examples_baseline}",
+                    r.num_examples, cfg.threshold
+                ),
+                score,
+            });
+        } else {
+            verdicts.push(Verdict::clear(r.node_id, score));
+        }
+    }
+    let quarantined = verdicts.iter().filter(|v| v.quarantined).count();
+    if quarantined > 0 {
+        crate::telemetry::bump("committee.quarantined", quarantined as i64);
+        for v in verdicts.iter().filter(|v| v.quarantined) {
+            log::warn!(
+                "round {round}: committee quarantined node {} ({})",
+                v.node_id,
+                v.reason
+            );
+        }
+    }
+    verdicts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flower::message::MetricRecord;
+    use crate::flower::records::ArrayRecord;
+
+    fn fit(node_id: u64, vals: &[f32], n: u64) -> FitRes {
+        FitRes {
+            node_id,
+            parameters: ArrayRecord::from_flat(vals),
+            num_examples: n,
+            metrics: MetricRecord::new(),
+        }
+    }
+
+    /// A tightly-clustered honest cohort (the chaos-matrix shape).
+    fn honest(n: usize) -> Vec<FitRes> {
+        (0..n)
+            .map(|i| {
+                let v = 1.0 + 0.001 * i as f32;
+                fit(i as u64 + 1, &[v, v, v, v], 10 * (i as u64 + 1))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn election_is_deterministic_and_sorted() {
+        let cfg = CommitteeConfig::default();
+        let ids: Vec<u64> = (1..=9).collect();
+        let a = elect(&cfg, 17, 1, 3, &ids);
+        let b = elect(&cfg, 17, 1, 3, &ids);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted: {a:?}");
+        assert!(a.iter().all(|id| ids.contains(id)));
+        let c = elect(&cfg, 17, 1, 4, &ids);
+        assert_ne!(a, c, "different rounds elect differently");
+        let d = elect(&cfg, 18, 1, 3, &ids);
+        assert_ne!(a, d, "different seeds elect differently");
+    }
+
+    #[test]
+    fn election_clamps_to_cohort() {
+        let cfg = CommitteeConfig {
+            size: 5,
+            ..Default::default()
+        };
+        let ids: Vec<u64> = vec![3, 7];
+        assert_eq!(elect(&cfg, 1, 1, 1, &ids), vec![3, 7]);
+    }
+
+    #[test]
+    fn honest_cohort_fully_clears() {
+        let cfg = CommitteeConfig::default();
+        let vs = validate(&cfg, 17, 1, 1, &honest(7));
+        assert_eq!(vs.len(), 7);
+        assert!(vs.iter().all(|v| !v.quarantined), "{vs:?}");
+        assert!(vs.iter().all(|v| v.reason.is_empty()));
+    }
+
+    #[test]
+    fn inflated_update_is_quarantined() {
+        let cfg = CommitteeConfig::default();
+        let mut results = honest(8);
+        results[7] = fit(8, &[1000.0, 1000.0, 1000.0, 1000.0], 80);
+        let vs = validate(&cfg, 17, 1, 1, &results);
+        let v8 = vs.iter().find(|v| v.node_id == 8).unwrap();
+        assert!(v8.quarantined, "{v8:?}");
+        assert!(v8.reason.contains("update distance"), "{}", v8.reason);
+        assert!(vs.iter().filter(|v| v.quarantined).count() == 1, "{vs:?}");
+    }
+
+    #[test]
+    fn replayed_stale_update_is_quarantined() {
+        // A replayer pushing the round's INITIAL parameters (all zero)
+        // sits far from the clustered honest updates.
+        let cfg = CommitteeConfig::default();
+        let mut results = honest(8);
+        results[7] = fit(8, &[0.0, 0.0, 0.0, 0.0], 80);
+        let vs = validate(&cfg, 17, 1, 1, &results);
+        let v8 = vs.iter().find(|v| v.node_id == 8).unwrap();
+        assert!(v8.quarantined, "{v8:?}");
+        assert_eq!(vs.iter().filter(|v| v.quarantined).count(), 1, "{vs:?}");
+    }
+
+    #[test]
+    fn misreported_examples_are_quarantined() {
+        let cfg = CommitteeConfig::default();
+        let mut results = honest(8);
+        // Honest-looking parameters, absurd weight claim.
+        results[7] = fit(8, &[1.004, 1.004, 1.004, 1.004], 1_000_000);
+        let vs = validate(&cfg, 17, 1, 1, &results);
+        let v8 = vs.iter().find(|v| v.node_id == 8).unwrap();
+        assert!(v8.quarantined, "{v8:?}");
+        assert!(v8.reason.contains("examples"), "{}", v8.reason);
+    }
+
+    #[test]
+    fn structure_mismatch_is_quarantined() {
+        let cfg = CommitteeConfig::default();
+        let mut results = honest(8);
+        results[7] = fit(8, &[1.0, 1.0], 80); // wrong shape
+        let vs = validate(&cfg, 17, 1, 1, &results);
+        let v8 = vs.iter().find(|v| v.node_id == 8).unwrap();
+        assert!(v8.quarantined);
+        assert!(v8.reason.contains("structure"), "{}", v8.reason);
+        assert!(v8.score.is_infinite());
+    }
+
+    #[test]
+    fn verdicts_are_arrival_order_independent() {
+        let cfg = CommitteeConfig::default();
+        let mut results = honest(9);
+        results[7] = fit(8, &[500.0, 500.0, 500.0, 500.0], 80);
+        let forward = validate(&cfg, 17, 1, 2, &results);
+        results.reverse();
+        let reversed = validate(&cfg, 17, 1, 2, &results);
+        assert_eq!(forward, reversed);
+        assert!(
+            forward.windows(2).all(|w| w[0].node_id < w[1].node_id),
+            "verdicts sorted by node id"
+        );
+    }
+
+    #[test]
+    fn identical_committee_does_not_quarantine_itself() {
+        // baseline == 0.0 exactly; the absolute epsilon keeps the
+        // cohort clear.
+        let cfg = CommitteeConfig::default();
+        let results: Vec<FitRes> = (1..=6).map(|i| fit(i, &[2.0, 2.0], 10)).collect();
+        let vs = validate(&cfg, 5, 2, 1, &results);
+        assert!(vs.iter().all(|v| !v.quarantined), "{vs:?}");
+    }
+
+    #[test]
+    fn quarantined_nodes_helper_collects_ids() {
+        let vs = vec![
+            Verdict::clear(1, 0.0),
+            Verdict {
+                node_id: 8,
+                quarantined: true,
+                reason: "x".into(),
+                score: 9.0,
+            },
+        ];
+        let q = quarantined_nodes(&vs);
+        assert!(q.contains(&8) && !q.contains(&1));
+    }
+}

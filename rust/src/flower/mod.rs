@@ -5,7 +5,9 @@
 
 pub mod analytics;
 pub mod asyncfed;
+pub mod authn;
 pub mod clientapp;
+pub mod committee;
 pub mod dp;
 pub mod grid;
 pub mod message;
@@ -23,6 +25,8 @@ pub mod supernode;
 
 pub use analytics::{run_query, AnalyticsConfig, AnalyticsReport, HistogramQueryApp};
 pub use asyncfed::{AsyncCommit, AsyncConfig, AsyncState};
+pub use authn::{FrameAuthenticator, NodeSigner, AUTHN_ERR};
+pub use committee::{CommitteeConfig, Verdict};
 pub use clientapp::{
     is_unhandled, ClientApp, Context, EvalOutput, FitOutput, MessageApp, MessageHandler, Router,
     UNHANDLED_MESSAGE_ERR,

@@ -18,6 +18,7 @@ use std::path::Path;
 
 use super::wal::{crc32, read_task_ins, read_task_res, write_task_ins, write_task_res};
 use crate::flower::asyncfed::AsyncCommit;
+use crate::flower::committee::Verdict;
 use crate::flower::message::{read_metrics, read_record, write_metrics, write_record};
 use crate::flower::message::{TaskIns, TaskRes};
 use crate::flower::records::{ArrayRecord, MetricRecord};
@@ -394,6 +395,14 @@ fn write_history(w: &mut Writer, h: &History) {
         w.u64(rec.participation.sampled as u64);
         w.u64(rec.participation.completed as u64);
         w.u64(rec.participation.dropped as u64);
+        w.u64(rec.participation.quarantined as u64);
+        w.u32(rec.verdicts.len() as u32);
+        for v in &rec.verdicts {
+            w.u64(v.node_id);
+            w.u8(v.quarantined as u8);
+            w.str(&v.reason);
+            w.f64(v.score);
+        }
     }
     w.u32(h.commits.len() as u32);
     for c in &h.commits {
@@ -424,7 +433,18 @@ fn read_history(r: &mut FrameReader) -> Result<History, WireError> {
             sampled: r.u64()? as usize,
             completed: r.u64()? as usize,
             dropped: r.u64()? as usize,
+            quarantined: r.u64()? as usize,
         };
+        let m = r.u32()? as usize;
+        let mut verdicts = Vec::with_capacity(m.min(1 << 16));
+        for _ in 0..m {
+            verdicts.push(Verdict {
+                node_id: r.u64()?,
+                quarantined: r.u8()? != 0,
+                reason: r.str()?,
+                score: r.f64()?,
+            });
+        }
         rounds.push(RoundRecord {
             round,
             fit_metrics,
@@ -432,6 +452,7 @@ fn read_history(r: &mut FrameReader) -> Result<History, WireError> {
             eval_metrics,
             per_client_eval,
             participation,
+            verdicts,
         });
     }
     let n = r.u32()? as usize;
@@ -650,8 +671,15 @@ mod tests {
                 participation: Participation {
                     sampled: 3,
                     completed: 2,
-                    dropped: 1,
+                    dropped: 0,
+                    quarantined: 1,
                 },
+                verdicts: vec![Verdict {
+                    node_id: 2,
+                    quarantined: true,
+                    reason: "update distance outlier".into(),
+                    score: 12.5,
+                }],
             }],
             commits: vec![AsyncCommit {
                 version: 1,

@@ -18,6 +18,7 @@ use crate::flower::superlink::{LinkConfig, SuperLink};
 use crate::flower::supernode::{
     FlowerConnector, MuxNodeConnector, NativeConnector, SuperNode, SuperNodeConfig,
 };
+use crate::transport::fault::{observe_stale_params, tamper_frames, ByzantineProfile};
 use crate::transport::inproc;
 use crate::transport::mux::MuxConn;
 use crate::transport::Endpoint;
@@ -38,6 +39,35 @@ impl Default for FleetOptions {
             link: LinkConfig::default(),
             connector_timeout: Duration::from_secs(60),
         }
+    }
+}
+
+/// Frame-authentication identity for an authenticated fleet: the link
+/// verifies every inbound frame against per-node keys derived from
+/// `(project, secret)` before decoding it, and every SuperNode seals
+/// its frames with its own derived key. The MAC wrap lives entirely
+/// below the protocol, so authenticated histories are bit-identical to
+/// unauthenticated ones.
+#[derive(Clone, Debug)]
+pub struct FleetAuthn {
+    pub project: String,
+    pub secret: Vec<u8>,
+}
+
+impl FleetAuthn {
+    pub fn new(project: &str, secret: &[u8]) -> FleetAuthn {
+        FleetAuthn {
+            project: project.to_string(),
+            secret: secret.to_vec(),
+        }
+    }
+
+    fn authenticator(&self) -> Arc<crate::flower::authn::FrameAuthenticator> {
+        crate::flower::authn::FrameAuthenticator::new(&self.project, &self.secret)
+    }
+
+    fn signer(&self, node_id: u64) -> Arc<crate::flower::authn::NodeSigner> {
+        crate::flower::authn::NodeSigner::for_project(&self.project, &self.secret, node_id)
     }
 }
 
@@ -94,16 +124,54 @@ impl NativeFleet {
         opts: FleetOptions,
         wrap: impl Fn(usize, inproc::InprocEndpoint) -> Arc<dyn Endpoint>,
     ) -> anyhow::Result<NativeFleet> {
+        Self::start_message_apps_authn(apps, opts, None, wrap)
+    }
+
+    /// [`NativeFleet::start`] with frame authentication on: the link
+    /// verifies-before-decode with the project authenticator, every
+    /// SuperNode seals with its provisioned per-node key. Note the
+    /// `wrap` decorator sits OUTSIDE the signer (on the wire side), so
+    /// an injected tamper layer models an *outsider* whose corrupted
+    /// frames authentication must reject — an insider (tamper before
+    /// signing) needs a connector-level wrap instead.
+    pub fn start_authenticated_with(
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        opts: FleetOptions,
+        authn: &FleetAuthn,
+        wrap: impl Fn(usize, inproc::InprocEndpoint) -> Arc<dyn Endpoint>,
+    ) -> anyhow::Result<NativeFleet> {
+        let apps = client_apps
+            .into_iter()
+            .map(|app| Arc::new(Router::from_client(app)) as Arc<dyn MessageApp>)
+            .collect();
+        Self::start_message_apps_authn(apps, opts, Some(authn), wrap)
+    }
+
+    fn start_message_apps_authn(
+        apps: Vec<Arc<dyn MessageApp>>,
+        opts: FleetOptions,
+        authn: Option<&FleetAuthn>,
+        wrap: impl Fn(usize, inproc::InprocEndpoint) -> Arc<dyn Endpoint>,
+    ) -> anyhow::Result<NativeFleet> {
         let link = SuperLink::with_config(opts.link);
+        if let Some(a) = authn {
+            link.set_authenticator(a.authenticator());
+        }
         let mut handles = Vec::new();
         for (i, app) in apps.into_iter().enumerate() {
             let (client_end, server_end) = inproc::pair(&format!("supernode-{i}"), "superlink");
             link.serve_endpoint(Arc::new(server_end));
-            let mut node = SuperNode::with_app(
-                Box::new(NativeConnector::new(
-                    wrap(i, client_end),
+            let ep = wrap(i, client_end);
+            let connector = match authn {
+                Some(a) => NativeConnector::with_signer(
+                    ep,
                     opts.connector_timeout,
-                )),
+                    a.signer(i as u64 + 1),
+                ),
+                None => NativeConnector::new(ep, opts.connector_timeout),
+            };
+            let mut node = SuperNode::with_app(
+                Box::new(connector),
                 app,
                 SuperNodeConfig {
                     requested_node_id: i as u64 + 1,
@@ -144,18 +212,49 @@ impl NativeFleet {
         opts: FleetOptions,
         server_cfg: LinkServerConfig,
     ) -> anyhow::Result<NativeFleet> {
+        Self::start_mux_authn(client_apps, opts, server_cfg, None)
+    }
+
+    /// [`NativeFleet::start_mux`] with frame authentication on: sealed
+    /// unary rpcs, verified replies AND verified server-pushed task
+    /// frames — push-mode's whole surface is covered.
+    pub fn start_mux_authenticated(
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        opts: FleetOptions,
+        server_cfg: LinkServerConfig,
+        authn: &FleetAuthn,
+    ) -> anyhow::Result<NativeFleet> {
+        Self::start_mux_authn(client_apps, opts, server_cfg, Some(authn))
+    }
+
+    fn start_mux_authn(
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        opts: FleetOptions,
+        server_cfg: LinkServerConfig,
+        authn: Option<&FleetAuthn>,
+    ) -> anyhow::Result<NativeFleet> {
         let apps: Vec<Arc<dyn MessageApp>> = client_apps
             .into_iter()
             .map(|app| Arc::new(Router::from_client(app)) as Arc<dyn MessageApp>)
             .collect();
         let link = SuperLink::with_config(opts.link);
+        if let Some(a) = authn {
+            link.set_authenticator(a.authenticator());
+        }
         let server = LinkServer::start(link.clone(), server_cfg);
         let mut handles = Vec::new();
         for (i, app) in apps.into_iter().enumerate() {
             let (client_end, server_end) = inproc::pair(&format!("supernode-{i}"), "superlink");
             server.attach(Arc::new(server_end));
             let conn = MuxConn::initiate(Arc::new(client_end));
-            let connector = MuxNodeConnector::new(&conn, opts.connector_timeout)?;
+            let connector = match authn {
+                Some(a) => MuxNodeConnector::with_signer(
+                    &conn,
+                    opts.connector_timeout,
+                    a.signer(i as u64 + 1),
+                )?,
+                None => MuxNodeConnector::new(&conn, opts.connector_timeout)?,
+            };
             let mut node = SuperNode::with_push(
                 Arc::new(connector),
                 app,
@@ -356,6 +455,45 @@ impl FlowerConnector for SwitchConnector {
     }
 }
 
+/// [`FlowerConnector`] decorator giving one node a [`ByzantineProfile`]
+/// on fleets that dial links in-process (the switched/sharded fleets,
+/// where there is no [`Endpoint`] for
+/// [`crate::transport::fault::ByzantineEndpoint`] to wrap). Outbound
+/// frames are tampered by the exact same
+/// [`crate::transport::fault::tamper_frames`] corruption; replies are
+/// watched for the first train instruction
+/// ([`ByzantineProfile::ReplayStale`] ammo).
+pub struct ByzantineConnector<C: FlowerConnector> {
+    inner: C,
+    profile: ByzantineProfile,
+    stale: Mutex<Option<crate::flower::records::ArrayRecord>>,
+}
+
+impl<C: FlowerConnector> ByzantineConnector<C> {
+    pub fn new(inner: C, profile: ByzantineProfile) -> Self {
+        Self {
+            inner,
+            profile,
+            stale: Mutex::new(None),
+        }
+    }
+}
+
+impl<C: FlowerConnector> FlowerConnector for ByzantineConnector<C> {
+    fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+        let stale = self.stale.lock().unwrap().clone();
+        let mut reply = None;
+        for f in tamper_frames(&self.profile, stale.as_ref(), &frame) {
+            reply = Some(self.inner.request(f)?);
+        }
+        let reply = reply.expect("tamper_frames always yields at least one frame");
+        if matches!(self.profile, ByzantineProfile::ReplayStale) {
+            observe_stale_params(&reply, &mut self.stale.lock().unwrap());
+        }
+        Ok(reply)
+    }
+}
+
 /// A SuperNode fleet wired to a [`LinkSwitch`] instead of a fixed link:
 /// the crash-recovery counterpart of [`NativeFleet`]. Kill and restart
 /// the link mid-run via [`SwitchedFleet::switch`]; the fleet keeps its
@@ -379,7 +517,10 @@ impl SwitchedFleet {
         max_downtime: Duration,
     ) -> anyhow::Result<SwitchedFleet> {
         let switch = LinkSwitch::new(link);
-        let handles = Self::spawn_nodes(client_apps, max_downtime, |_| switch.clone())?;
+        let handles =
+            Self::spawn_nodes(client_apps, max_downtime, |_| switch.clone(), |_, c| {
+                Box::new(c)
+            })?;
         Ok(SwitchedFleet {
             switches: vec![switch],
             handles,
@@ -398,13 +539,29 @@ impl SwitchedFleet {
         client_apps: Vec<Arc<dyn ClientApp>>,
         max_downtime: Duration,
     ) -> anyhow::Result<SwitchedFleet> {
+        Self::start_sharded_with(grid, client_apps, max_downtime, |_, c| Box::new(c))
+    }
+
+    /// [`SwitchedFleet::start_sharded`] with a per-node connector
+    /// decorator: `wrap(node_id, connector)` may stack a
+    /// [`ByzantineConnector`] (or any other [`FlowerConnector`]
+    /// middleware) on chosen nodes for adversarial chaos testing.
+    pub fn start_sharded_with(
+        grid: &Arc<crate::flower::shard::ShardedGrid>,
+        client_apps: Vec<Arc<dyn ClientApp>>,
+        max_downtime: Duration,
+        wrap: impl Fn(u64, SwitchConnector) -> Box<dyn FlowerConnector>,
+    ) -> anyhow::Result<SwitchedFleet> {
         let grid = grid.clone();
         let switches: Vec<Arc<LinkSwitch>> = (0..Grid::shard_count(&*grid))
             .map(|k| grid.shard_switch(k).clone())
             .collect();
-        let handles = Self::spawn_nodes(client_apps, max_downtime, |node_id| {
-            grid.shard_switch(grid.shard_for_node(node_id)).clone()
-        })?;
+        let handles = Self::spawn_nodes(
+            client_apps,
+            max_downtime,
+            |node_id| grid.shard_switch(grid.shard_for_node(node_id)).clone(),
+            wrap,
+        )?;
         Ok(SwitchedFleet { switches, handles })
     }
 
@@ -412,13 +569,17 @@ impl SwitchedFleet {
         client_apps: Vec<Arc<dyn ClientApp>>,
         max_downtime: Duration,
         mut switch_for: impl FnMut(u64) -> Arc<LinkSwitch>,
+        wrap: impl Fn(u64, SwitchConnector) -> Box<dyn FlowerConnector>,
     ) -> anyhow::Result<Vec<std::thread::JoinHandle<anyhow::Result<u64>>>> {
         let mut handles = Vec::new();
         for (i, app) in client_apps.into_iter().enumerate() {
             let node_id = i as u64 + 1;
             let app = Arc::new(Router::from_client(app)) as Arc<dyn MessageApp>;
             let mut node = SuperNode::with_app(
-                Box::new(SwitchConnector::new(switch_for(node_id), max_downtime)),
+                wrap(
+                    node_id,
+                    SwitchConnector::new(switch_for(node_id), max_downtime),
+                ),
                 app,
                 SuperNodeConfig {
                     requested_node_id: node_id,
@@ -674,7 +835,7 @@ mod tests {
                 Box::new(FedAvg::new(Aggregator::host())),
                 ServerConfig {
                     num_rounds: 1,
-                    min_nodes: N as u64,
+                    min_nodes: N,
                     seed: 64,
                     ..Default::default()
                 },

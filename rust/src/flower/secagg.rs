@@ -204,6 +204,17 @@ impl Strategy for SecAggFedAvg {
         false
     }
 
+    /// Committee validation drops quarantined updates from the fold,
+    /// but masked sums only cancel when EVERY arrived contribution
+    /// folds — excluding one client leaves its pairwise masks dangling
+    /// and corrupts the aggregate. (Inspecting plaintext updates for
+    /// outliers is also exactly what masking exists to prevent.)
+    /// Drivers refuse committee validation for this strategy with a
+    /// typed error.
+    fn supports_byzantine(&self) -> bool {
+        false
+    }
+
     fn configure_fit(&mut self, round: u64) -> ConfigRecord {
         ConfigRecord::from_pairs(vec![
             (

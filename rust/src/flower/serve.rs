@@ -250,6 +250,7 @@ fn bind_stream(s: &Shared, stream: &Arc<MuxStream>, node_id: u64) {
 }
 
 fn worker_loop(s: &Arc<Shared>) {
+    use crate::flower::authn::AUTHN_ERR;
     loop {
         if s.shutdown.load(Ordering::Acquire) {
             return;
@@ -258,41 +259,87 @@ fn worker_loop(s: &Arc<Shared>) {
             continue;
         };
         crate::telemetry::bump("serve.requests", 1);
-        let reply = match FlowerMsg::decode_shared(frame) {
-            Ok(FlowerMsg::Subscribe { node_id }) => {
-                // This stream becomes the node's task stream. Replace
-                // any previous registration (re-subscribe after a
-                // reconnect): latest stream wins.
-                s.subs.lock().unwrap().insert(node_id, stream.clone());
-                bind_stream(s, &stream, node_id);
-                crate::telemetry::bump("serve.subscriptions", 1);
-                // The immediate reply is the node's current backlog —
-                // node-initiated, so it renews the lease like a pull.
-                s.link.pull_tasks(node_id, true).encode()
-            }
-            Ok(msg) => {
-                // Learn the stream -> node binding from every
-                // node-carrying frame (pulls, result pushes, drains),
-                // so subsequent arrivals on this stream renew at
-                // ingress time.
-                match &msg {
-                    FlowerMsg::PullTaskIns { node_id } | FlowerMsg::DeleteNode { node_id } => {
-                        bind_stream(s, &stream, *node_id)
-                    }
-                    FlowerMsg::PushTaskRes { res } => bind_stream(s, &stream, res.node_id),
-                    _ => {}
+        let reply = match s.link.authenticator() {
+            None => handle_decoded(s, &stream, frame, None),
+            // Authenticated serving: verify the envelope BEFORE decode.
+            // A forged or replayed frame gets a typed AUTHN_ERR reply —
+            // distinct from a torn frame, so a malicious peer cannot
+            // masquerade as a lease-renewal miss and trigger the
+            // reconnect/redelivery loop.
+            Some(auth) => match auth.open_request(frame.as_slice()) {
+                Ok((node_id, off)) => {
+                    // The envelope PROVED which node this stream speaks
+                    // for — bind on that, never on claimed ids.
+                    bind_stream(s, &stream, node_id);
+                    let inner = frame.slice(off, frame.len() - off);
+                    auth.seal_reply(node_id, &handle_decoded(s, &stream, inner, Some(node_id)))
                 }
-                s.link.handle_msg(msg).encode()
-            }
-            Err(e) => FlowerMsg::Error {
-                message: format!("bad frame: {e}"),
-            }
-            .encode(),
+                Err(e) => FlowerMsg::Error {
+                    message: format!("{AUTHN_ERR}: {e}"),
+                }
+                .encode(),
+            },
         };
         if stream.send(reply).is_err() {
             // Connection died mid-reply; the node will re-register.
             crate::telemetry::bump("serve.dead_replies", 1);
         }
+    }
+}
+
+/// Decode + dispatch one (already authenticated, if authn is on) frame.
+fn handle_decoded(
+    s: &Arc<Shared>,
+    stream: &Arc<MuxStream>,
+    frame: Bytes,
+    authed: Option<u64>,
+) -> Vec<u8> {
+    use crate::flower::authn::AUTHN_ERR;
+    match FlowerMsg::decode_shared(frame) {
+        Ok(FlowerMsg::Subscribe { node_id }) => {
+            if let Some(a) = authed {
+                if node_id != a {
+                    crate::telemetry::bump("authn.rejected", 1);
+                    return FlowerMsg::Error {
+                        message: format!(
+                            "{AUTHN_ERR}: subscription for node {node_id} signed by node {a}"
+                        ),
+                    }
+                    .encode();
+                }
+            }
+            // This stream becomes the node's task stream. Replace
+            // any previous registration (re-subscribe after a
+            // reconnect): latest stream wins.
+            s.subs.lock().unwrap().insert(node_id, stream.clone());
+            bind_stream(s, stream, node_id);
+            crate::telemetry::bump("serve.subscriptions", 1);
+            // The immediate reply is the node's current backlog —
+            // node-initiated, so it renews the lease like a pull.
+            s.link.pull_tasks(node_id, true).encode()
+        }
+        Ok(msg) => {
+            // Learn the stream -> node binding from every
+            // node-carrying frame (pulls, result pushes, drains),
+            // so subsequent arrivals on this stream renew at
+            // ingress time. With authn on, the binding was already
+            // made from the PROVEN envelope id — claimed ids are
+            // not a renewal basis.
+            if authed.is_none() {
+                match &msg {
+                    FlowerMsg::PullTaskIns { node_id } | FlowerMsg::DeleteNode { node_id } => {
+                        bind_stream(s, stream, *node_id)
+                    }
+                    FlowerMsg::PushTaskRes { res } => bind_stream(s, stream, res.node_id),
+                    _ => {}
+                }
+            }
+            s.link.handle_msg_authed(msg, authed).encode()
+        }
+        Err(e) => FlowerMsg::Error {
+            message: format!("bad frame: {e}"),
+        }
+        .encode(),
     }
 }
 
@@ -315,6 +362,7 @@ fn pusher_loop(s: &Arc<Shared>) {
             .iter()
             .map(|(id, st)| (*id, st.clone()))
             .collect();
+        let authn = s.link.authenticator();
         for (node_id, stream) in snapshot {
             // NOT node-initiated: no lease renewal, no drain-ack forgery
             // on the node's behalf.
@@ -338,7 +386,14 @@ fn pusher_loop(s: &Arc<Shared>) {
                 FlowerMsg::Error { .. } => true,
                 _ => true,
             };
-            let sent_ok = stream.send(msg.encode()).is_ok();
+            // Pushed frames are signed like unary replies (same
+            // link→node counter stream), so the node can tell a real
+            // task push from an injected one.
+            let frame = match &authn {
+                Some(auth) => auth.seal_reply(node_id, &msg.encode()),
+                None => msg.encode(),
+            };
+            let sent_ok = stream.send(frame).is_ok();
             if drop_sub || !sent_ok {
                 s.subs.lock().unwrap().remove(&node_id);
             }

@@ -33,6 +33,7 @@ use std::time::Duration;
 
 use crate::flare::tracking::SummaryWriter;
 use crate::flower::asyncfed::AsyncCommit;
+use crate::flower::committee::{self, CommitteeConfig, Verdict};
 use crate::flower::grid::Grid;
 use crate::flower::message::{ConfigValue, Message, MetricRecord};
 use crate::flower::persist::checkpoint::{DriverCkpt, DriverPhase, FitCkpt};
@@ -75,6 +76,14 @@ pub struct ServerConfig {
     /// up front for strategies whose reduction cannot survive
     /// quantization (see [`Strategy::supports_lossy_codec`]).
     pub codec: WireCodec,
+    /// Per-round committee validation (`None` = off): completed fit
+    /// updates are cross-scored by a deterministic seeded validator
+    /// committee and outliers quarantined BEFORE aggregation (see
+    /// [`crate::flower::committee`]). Quarantine is a content-level
+    /// exclusion, so strategies that must see every contribution
+    /// (secure aggregation) are refused up front
+    /// ([`Strategy::supports_byzantine`]).
+    pub committee: Option<CommitteeConfig>,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +99,7 @@ impl Default for ServerConfig {
             min_available: 0,
             straggler_grace: Duration::from_secs(2),
             codec: WireCodec::Identity,
+            committee: None,
         }
     }
 }
@@ -107,6 +117,9 @@ pub struct Participation {
     /// Sampled nodes that never contributed (dead, failed, or cut off
     /// as stragglers after the quorum).
     pub dropped: usize,
+    /// Nodes whose results ARRIVED but were excluded from aggregation
+    /// by committee validation (0 when the committee is off).
+    pub quarantined: usize,
 }
 
 /// One round's record in the history.
@@ -122,6 +135,9 @@ pub struct RoundRecord {
     pub per_client_eval: Vec<(u64, f64, MetricRecord)>,
     /// Fit-cohort participation for this round.
     pub participation: Participation,
+    /// Committee validation verdicts for the completed fit cohort,
+    /// sorted by node id (empty when committee validation is off).
+    pub verdicts: Vec<Verdict>,
 }
 
 /// The training curves of Fig. 5. `PartialEq` compares final parameters
@@ -393,6 +409,16 @@ impl ServerApp {
             self.strategy.name(),
             self.config.codec.name()
         );
+        // Committee validation EXCLUDES quarantined updates from the
+        // fold — a content-level partial cohort. Strategies that must
+        // see every contribution are refused up front.
+        anyhow::ensure!(
+            self.config.committee.is_none() || self.strategy.supports_byzantine(),
+            "strategy {} cannot aggregate a committee-filtered cohort (e.g. secure \
+             aggregation masks only cancel when every contribution folds) — \
+             disable committee validation",
+            self.strategy.name()
+        );
         let cfg = self.config.clone();
         grid.wait_for_nodes(cfg.min_nodes, cfg.round_timeout)?;
         // Mid-round durability requires the strategy to snapshot its
@@ -555,6 +581,10 @@ impl ServerApp {
             let ckpt_params = params.clone();
             let ckpt_history = history.clone();
             let all_task_ids = task_ids.clone();
+            // Committee-gated rounds defer every fold until the full
+            // completed cohort is scored at phase end.
+            let committee_cfg = cfg.committee;
+            let mut pending: Vec<FitRes> = Vec::new();
             let wait = grid.for_each_reply(
                 run_id,
                 &wait_ids,
@@ -599,13 +629,21 @@ impl ServerApp {
                         }
                     };
                     let num_examples = r.metadata.num_examples;
-                    fit_meta.push((node, num_examples, r.content.metrics.clone()));
-                    agg.accumulate(FitRes {
+                    let res = FitRes {
                         node_id: node,
                         parameters: arrays,
                         num_examples,
                         metrics: r.content.metrics,
-                    })?;
+                    };
+                    if committee_cfg.is_some() {
+                        // Buffer for phase-end validation; fit_meta is
+                        // deferred too, so quarantined updates shape
+                        // neither the model nor the metrics.
+                        pending.push(res);
+                        return Ok(());
+                    }
+                    fit_meta.push((node, num_examples, res.metrics.clone()));
+                    agg.accumulate(res)?;
                     // Mid-fit checkpoint: the accumulator's fold state
                     // rides in the driver blob, cut atomically with the
                     // link's own snapshot (one consistent pair).
@@ -639,6 +677,27 @@ impl ServerApp {
                 }
                 .into());
             }
+            // ---- committee validation (content-level gate) ----
+            // The committee scores the COMPLETED cohort — a pure
+            // function of the node-id-sorted result set, so the
+            // verdicts (and the surviving fold) are identical on any
+            // transport and in any arrival order.
+            let mut verdicts: Vec<Verdict> = Vec::new();
+            let mut quarantined_count = 0usize;
+            if let Some(cc) = &committee_cfg {
+                verdicts = committee::validate(cc, cfg.seed, run_id, round, &pending);
+                let quarantined = committee::quarantined_nodes(&verdicts);
+                quarantined_count = quarantined.len();
+                // Fold survivors in canonical node-id order.
+                pending.sort_by_key(|r| r.node_id);
+                for res in pending.drain(..) {
+                    if quarantined.contains(&res.node_id) {
+                        continue;
+                    }
+                    fit_meta.push((res.node_id, res.num_examples, res.metrics.clone()));
+                    agg.accumulate(res)?;
+                }
+            }
             anyhow::ensure!(
                 agg.count() > 0,
                 "round {round}: no successful fit results"
@@ -656,19 +715,22 @@ impl ServerApp {
             // redelivered substitute (whose duplicate contribution is
             // skipped above) must not pass as a clean round.
             if quorum == 0 && !accept_failures {
+                // Quarantined results ARRIVED — exclusion by verdict is
+                // not a missing contribution.
                 anyhow::ensure!(
-                    fit_meta.len() == task_ids.len(),
+                    fit_meta.len() + quarantined_count == task_ids.len(),
                     "round {round}: only {} of {} sampled nodes contributed distinct \
                      results (a dead node's task was redelivered) — strict mode \
                      requires the full cohort",
-                    fit_meta.len(),
+                    fit_meta.len() + quarantined_count,
                     task_ids.len()
                 );
             }
             let participation = Participation {
                 sampled,
                 completed: fit_meta.len(),
-                dropped: sampled.saturating_sub(fit_meta.len()),
+                dropped: sampled.saturating_sub(fit_meta.len() + quarantined_count),
+                quarantined: quarantined_count,
             };
             // Gate on quorum: in strict mode a shortfall is either an
             // error above or an accept_failures-tolerated client error,
@@ -830,6 +892,7 @@ impl ServerApp {
                 eval_metrics,
                 per_client_eval,
                 participation,
+                verdicts,
             });
         }
         history.parameters = params;
@@ -886,6 +949,7 @@ mod tests {
                 eval_metrics: vec![("accuracy".to_string(), 0.8)].into(),
                 per_client_eval: vec![],
                 participation: Participation::default(),
+                verdicts: vec![],
             }],
             commits: vec![],
             parameters: ArrayRecord::from_flat(&[1.0]),

@@ -200,6 +200,19 @@ pub trait Strategy: Send {
         true
     }
 
+    /// Can this strategy aggregate a cohort that committee validation
+    /// has filtered (see [`crate::flower::committee`]) — i.e. tolerate
+    /// some arrived results being excluded from the fold by a
+    /// quarantine verdict? True for every plain reduction (the robust
+    /// strategies exist precisely for this); secure aggregation
+    /// overrides to `false` — its pairwise masks only cancel when
+    /// EVERY arrived contribution folds, so dropping a quarantined
+    /// update would corrupt the sum, and the plaintext inspection the
+    /// committee needs contradicts masking anyway.
+    fn supports_byzantine(&self) -> bool {
+        true
+    }
+
     /// Serialize cross-round optimizer state (momentum, adaptive
     /// moments) for a durability checkpoint. `None` means stateless —
     /// nothing beyond the global parameters needs to survive a crash.

@@ -45,6 +45,13 @@ impl Strategy for FedMedian {
         "fedmedian"
     }
 
+    /// Explicit (the default is already `true`): coordinate-wise median
+    /// is the canonical committee-filtered reduction — robust to any
+    /// minority of surviving outliers.
+    fn supports_byzantine(&self) -> bool {
+        true
+    }
+
     fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
         Box::new(SortedBuffer::new(|results: &[FitRes]| {
             check_same_structure(results)?;
@@ -70,6 +77,12 @@ pub struct TrimmedMean {
 impl Strategy for TrimmedMean {
     fn name(&self) -> &'static str {
         "trimmed_mean"
+    }
+
+    /// Explicit (the default is already `true`): trimming tolerates a
+    /// committee-filtered cohort as long as `n > 2*trim` survivors fold.
+    fn supports_byzantine(&self) -> bool {
+        true
     }
 
     fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {
@@ -103,6 +116,13 @@ pub struct Krum {
 impl Strategy for Krum {
     fn name(&self) -> &'static str {
         "krum"
+    }
+
+    /// Explicit (the default is already `true`): Krum assumes up to `f`
+    /// Byzantine inputs by design; a committee-filtered cohort only
+    /// lowers the effective `f` it has to absorb.
+    fn supports_byzantine(&self) -> bool {
+        true
     }
 
     fn begin_fit(&mut self, _round: u64, _current: &ArrayRecord) -> Box<dyn FitAgg + '_> {

@@ -500,6 +500,11 @@ pub struct SuperLink {
     /// External observer seats (see [`Notify`]): signaled alongside the
     /// link seat on every event.
     observers: Mutex<Vec<Arc<Notify>>>,
+    /// Wire authentication (None: the pre-existing open mode). When
+    /// set, every frame must arrive in a valid
+    /// [`crate::flower::authn`] envelope; the authenticated node id is
+    /// enforced against (and stamped onto) everything the frame claims.
+    authn: RwLock<Option<Arc<crate::flower::authn::FrameAuthenticator>>>,
 }
 
 impl SuperLink {
@@ -661,11 +666,23 @@ impl SuperLink {
             retired: AtomicBool::new(false),
             notify: Notify::new(),
             observers: Mutex::new(Vec::new()),
+            authn: RwLock::new(None),
         })
     }
 
     pub fn config(&self) -> &LinkConfig {
         &self.cfg
+    }
+
+    /// Require wire authentication on this link: every frame must carry
+    /// a valid [`crate::flower::authn`] envelope from here on.
+    pub fn set_authenticator(&self, auth: Arc<crate::flower::authn::FrameAuthenticator>) {
+        *self.authn.write().unwrap() = Some(auth);
+    }
+
+    /// The link's frame authenticator, if wire authentication is on.
+    pub fn authenticator(&self) -> Option<Arc<crate::flower::authn::FrameAuthenticator>> {
+        self.authn.read().unwrap().clone()
     }
 
     /// Milliseconds since this link's epoch — the unit the per-node
@@ -951,7 +968,33 @@ impl SuperLink {
 
     /// Handle one client frame with shared ownership: tensor payloads in
     /// decoded messages borrow `frame`'s allocation (zero copies).
+    ///
+    /// With an authenticator set, the envelope is verified BEFORE any
+    /// decode: forged, tampered, and replayed frames are answered with
+    /// a typed (necessarily unsigned) [`AUTHN_ERR`]-marked error and
+    /// never reach the protocol state machine.
     pub fn handle_frame_shared(&self, frame: Bytes) -> Vec<u8> {
+        use crate::flower::authn::AUTHN_ERR;
+        let (frame, authed) = match self.authenticator() {
+            None => (frame, None),
+            Some(auth) => match auth.open_request(frame.as_slice()) {
+                Ok((node_id, off)) => {
+                    let inner = frame.slice(off, frame.len() - off);
+                    let reply = self.handle_inner_frame(inner, Some(node_id));
+                    return auth.seal_reply(node_id, &reply);
+                }
+                Err(e) => {
+                    return FlowerMsg::Error {
+                        message: format!("{AUTHN_ERR}: {e}"),
+                    }
+                    .encode()
+                }
+            },
+        };
+        self.handle_inner_frame(frame, authed)
+    }
+
+    fn handle_inner_frame(&self, frame: Bytes, authed: Option<u64>) -> Vec<u8> {
         let msg = match FlowerMsg::decode_shared(frame) {
             Ok(m) => m,
             Err(e) => {
@@ -961,7 +1004,7 @@ impl SuperLink {
                 .encode()
             }
         };
-        self.handle_msg(msg).encode()
+        self.handle_msg_authed(msg, authed).encode()
     }
 
     /// Decoded-message core of the transport surface: one request in,
@@ -969,6 +1012,61 @@ impl SuperLink {
     /// already-decoded frames here so sharded frame handling decodes
     /// (and encodes) exactly once per hop.
     pub fn handle_msg(&self, msg: FlowerMsg) -> FlowerMsg {
+        self.handle_msg_authed(msg, None)
+    }
+
+    /// [`SuperLink::handle_msg`] with a wire-authenticated node
+    /// identity. When `authed` is set, every node id the frame CLAIMS
+    /// is checked against the id the envelope PROVED — extending the
+    /// PR-4 server-stamped-version pattern to identity: results are
+    /// stamped with the authenticated node id, so a client can neither
+    /// impersonate a peer nor misreport another node's work.
+    pub fn handle_msg_authed(&self, msg: FlowerMsg, authed: Option<u64>) -> FlowerMsg {
+        use crate::flower::authn::AUTHN_ERR;
+        if let Some(a) = authed {
+            if let FlowerMsg::CreateNode { requested } = &msg {
+                if *requested == 0 {
+                    self.metrics.bump("authn.rejected", 1);
+                    return FlowerMsg::Error {
+                        message: format!(
+                            "{AUTHN_ERR}: authenticated registration requires the \
+                             provisioned node id (auto-assignment would not match \
+                             the node's key)"
+                        ),
+                    };
+                }
+                if *requested != a {
+                    self.metrics.bump("authn.rejected", 1);
+                    return FlowerMsg::Error {
+                        message: format!(
+                            "{AUTHN_ERR}: registration for node {requested} signed by node {a}"
+                        ),
+                    };
+                }
+                if self.nodes.read().unwrap().contains_key(&a) {
+                    // Authenticated re-registration (torn connection,
+                    // not yet reaped): the MAC proves it IS this node —
+                    // refresh the lease instead of falling back to a
+                    // fresh auto id its key could never match.
+                    self.touch(a);
+                    return FlowerMsg::NodeCreated { node_id: a };
+                }
+            }
+            let claimed = match &msg {
+                FlowerMsg::PullTaskIns { node_id }
+                | FlowerMsg::DeleteNode { node_id }
+                | FlowerMsg::Subscribe { node_id } => Some(*node_id),
+                _ => None,
+            };
+            if let Some(c) = claimed {
+                if c != a {
+                    self.metrics.bump("authn.rejected", 1);
+                    return FlowerMsg::Error {
+                        message: format!("{AUTHN_ERR}: frame for node {c} signed by node {a}"),
+                    };
+                }
+            }
+        }
         match msg {
             FlowerMsg::CreateNode { requested } => {
                 let mut nodes = self.nodes.write().unwrap();
@@ -999,6 +1097,20 @@ impl SuperLink {
             FlowerMsg::PullTaskIns { node_id } => self.pull_tasks(node_id, true),
             FlowerMsg::PushTaskRes { res } => {
                 let mut res = res;
+                // Authoritative identity basis (sibling of the version
+                // stamping below): the result carries the node id the
+                // ENVELOPE proved, not whatever the client typed in.
+                if let Some(a) = authed {
+                    if res.node_id != a {
+                        self.metrics.bump("authn.results_restamped", 1);
+                        log::warn!(
+                            "superlink: node {a} pushed a result claiming node {} — \
+                             restamped to the authenticated id",
+                            res.node_id
+                        );
+                        res.node_id = a;
+                    }
+                }
                 self.touch(res.node_id);
                 let handle = self.run_handle(res.run_id);
                 let stored = match &handle {

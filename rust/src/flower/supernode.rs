@@ -26,6 +26,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::flower::authn::{AuthnError, NodeSigner};
 use crate::flower::clientapp::{ClientApp, Context, MessageApp, Router};
 use crate::flower::message::{FlowerMsg, Message, TaskIns, TaskRes};
 use crate::transport::mux::{MuxConn, MuxStream};
@@ -75,23 +76,71 @@ fn is_torn_error(e: &anyhow::Error) -> bool {
     })
 }
 
+/// Unwrap a (possibly signed) link reply on a signing connector.
+/// Rejection replies are necessarily unsigned (the link may not even be
+/// able to attribute the offending frame), so a bare typed `Error`
+/// frame passes through for the caller to surface; any OTHER unsigned
+/// or unverifiable frame is refused with the typed
+/// [`TransportError::AuthRejected`] — never mistaken for a torn frame.
+fn unwrap_signed_reply(signer: &NodeSigner, reply: Bytes) -> anyhow::Result<Bytes> {
+    match signer.open_reply(reply.clone()) {
+        Ok(inner) => Ok(inner),
+        Err(AuthnError::Missing)
+            if matches!(
+                FlowerMsg::decode_shared(reply.clone()),
+                Ok(FlowerMsg::Error { .. })
+            ) =>
+        {
+            Ok(reply)
+        }
+        Err(e) => Err(TransportError::AuthRejected(e.to_string()).into()),
+    }
+}
+
 /// Native connector: a raw endpoint straight to the SuperLink (Fig. 5a).
 pub struct NativeConnector {
     ep: Arc<dyn Endpoint>,
     timeout: Duration,
+    signer: Option<Arc<NodeSigner>>,
 }
 
 impl NativeConnector {
     pub fn new(ep: Arc<dyn Endpoint>, timeout: Duration) -> Self {
-        Self { ep, timeout }
+        Self {
+            ep,
+            timeout,
+            signer: None,
+        }
+    }
+
+    /// Authenticated native connector: every request is sealed with the
+    /// node's provisioned key, every reply verified.
+    pub fn with_signer(ep: Arc<dyn Endpoint>, timeout: Duration, signer: Arc<NodeSigner>) -> Self {
+        Self {
+            ep,
+            timeout,
+            signer: Some(signer),
+        }
     }
 }
 
 impl FlowerConnector for NativeConnector {
     fn request(&self, frame: Vec<u8>) -> anyhow::Result<Vec<u8>> {
+        Ok(self.request_shared(frame)?.as_slice().to_vec())
+    }
+
+    fn request_shared(&self, frame: Vec<u8>) -> anyhow::Result<Bytes> {
+        let frame = match &self.signer {
+            Some(s) => s.seal(&frame),
+            None => frame,
+        };
         // Strictly alternating request/response per connection.
         self.ep.send(frame)?;
-        Ok(self.ep.recv_timeout(self.timeout)?)
+        let reply = Bytes::from_vec(self.ep.recv_timeout(self.timeout)?);
+        match &self.signer {
+            Some(s) => unwrap_signed_reply(s, reply),
+            None => Ok(reply),
+        }
     }
 }
 
@@ -105,17 +154,38 @@ pub struct MuxNodeConnector {
     rpc: Mutex<Arc<MuxStream>>,
     task: Mutex<Arc<MuxStream>>,
     timeout: Duration,
+    signer: Option<Arc<NodeSigner>>,
 }
 
 impl MuxNodeConnector {
     /// Open the rpc + task streams on an established mux connection.
     pub fn new(conn: &Arc<MuxConn>, timeout: Duration) -> anyhow::Result<Self> {
+        Self::build(conn, timeout, None)
+    }
+
+    /// Authenticated mux connector: unary requests and the Subscribe
+    /// announcement are sealed with the node's key; unary replies AND
+    /// server-pushed task frames are verified before use.
+    pub fn with_signer(
+        conn: &Arc<MuxConn>,
+        timeout: Duration,
+        signer: Arc<NodeSigner>,
+    ) -> anyhow::Result<Self> {
+        Self::build(conn, timeout, Some(signer))
+    }
+
+    fn build(
+        conn: &Arc<MuxConn>,
+        timeout: Duration,
+        signer: Option<Arc<NodeSigner>>,
+    ) -> anyhow::Result<Self> {
         let rpc = conn.open_stream()?;
         let task = conn.open_stream()?;
         Ok(Self {
             rpc: Mutex::new(rpc),
             task: Mutex::new(task),
             timeout,
+            signer,
         })
     }
 }
@@ -126,24 +196,59 @@ impl FlowerConnector for MuxNodeConnector {
     }
 
     fn request_shared(&self, frame: Vec<u8>) -> anyhow::Result<Bytes> {
+        let frame = match &self.signer {
+            Some(s) => s.seal(&frame),
+            None => frame,
+        };
         // The lock enforces strict request/response alternation even if
         // a caller shares the connector across threads.
-        let rpc = self.rpc.lock().unwrap();
-        rpc.send(frame)?;
-        Ok(rpc.recv_shared(self.timeout)?)
+        let reply = {
+            let rpc = self.rpc.lock().unwrap();
+            rpc.send(frame)?;
+            rpc.recv_shared(self.timeout)?
+        };
+        match &self.signer {
+            Some(s) => unwrap_signed_reply(s, reply),
+            None => Ok(reply),
+        }
     }
 }
 
 impl PushConnector for MuxNodeConnector {
     fn subscribe(&self, node_id: u64) -> anyhow::Result<()> {
+        let frame = FlowerMsg::Subscribe { node_id }.encode();
+        let frame = match &self.signer {
+            Some(s) => s.seal(&frame),
+            None => frame,
+        };
         let task = self.task.lock().unwrap();
-        task.send(FlowerMsg::Subscribe { node_id }.encode())?;
+        task.send(frame)?;
         Ok(())
     }
 
     fn next_push(&self, timeout: Duration) -> Result<Bytes, TransportError> {
-        let task = self.task.lock().unwrap();
-        task.recv_shared(timeout)
+        let frame = {
+            let task = self.task.lock().unwrap();
+            task.recv_shared(timeout)?
+        };
+        match &self.signer {
+            Some(s) => match s.open_reply(frame.clone()) {
+                Ok(inner) => Ok(inner),
+                // A typed rejection (e.g. of the Subscribe itself) is
+                // necessarily unsigned: hand it up for the serve loop
+                // to surface instead of reclassifying it.
+                Err(AuthnError::Missing)
+                    if matches!(
+                        FlowerMsg::decode_shared(frame.clone()),
+                        Ok(FlowerMsg::Error { .. })
+                    ) =>
+                {
+                    Ok(frame)
+                }
+                Err(e) => Err(TransportError::AuthRejected(e.to_string())),
+            },
+            None => Ok(frame),
+        }
     }
 }
 
@@ -403,6 +508,17 @@ impl SuperNode {
                     node_id = self.connect()?;
                     push.subscribe(node_id)?;
                     continue;
+                }
+                Err(TransportError::AuthRejected(why)) => {
+                    // Typed authentication failure — NOT lost in-flight
+                    // data. Re-registering would just replay the same
+                    // refusal forever, so fail fast instead of letting a
+                    // malicious peer masquerade as a lease miss.
+                    crate::telemetry::bump("supernode.auth_rejections", 1);
+                    anyhow::bail!(
+                        "supernode {node_id}: task stream frame failed authentication \
+                         (fatal, not a lease miss): {why}"
+                    );
                 }
                 Err(e) => return Err(e.into()),
             };

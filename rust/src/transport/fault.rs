@@ -19,6 +19,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::{Endpoint, Frame, TransportError};
+use crate::flower::message::{FlowerMsg, MessageType};
+use crate::flower::records::ArrayRecord;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -193,6 +195,198 @@ impl<E: Endpoint> Endpoint for FaultEndpoint<E> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Byzantine (malicious-node) injection
+// ---------------------------------------------------------------------------
+
+/// Per-node attack behaviour for adversarial chaos tests. Unlike the
+/// stochastic [`FaultConfig`] (crashes, drops, latency — nodes that
+/// FAIL), a Byzantine profile models a node that LIES: it keeps the
+/// protocol perfectly alive while corrupting the *content* of its
+/// training results below the app layer. Tampering happens on the wire
+/// (decode → mutate → re-encode), so neither ClientApp nor driver code
+/// can see it coming — exactly the position of a compromised client
+/// binary.
+///
+/// Only successful `Train` results are tampered; instructions,
+/// registration, evaluate replies, and undecodable frames (e.g. sealed
+/// by a signer stacked OUTSIDE this decorator) pass through untouched.
+#[derive(Clone, Debug)]
+pub enum ByzantineProfile {
+    /// Negate every coordinate of the trained update (gradient-ascent
+    /// poisoning).
+    SignFlip,
+    /// Scale every coordinate by `factor` (magnitude poisoning).
+    Inflate { factor: f64 },
+    /// Lie about the local dataset size to grab aggregation weight.
+    Misreport { num_examples: u64 },
+    /// Substitute the parameters of the FIRST train instruction this
+    /// node ever received into every train result — a free-rider
+    /// replaying stale state instead of training.
+    ReplayStale,
+    /// Send every train result twice (duplicate-delivery attack; the
+    /// link's task dedup must absorb it).
+    Duplicate,
+    /// Re-stamp train results with `victim`'s node id (result forgery;
+    /// frame authentication must catch it).
+    Forge { victim: u64 },
+}
+
+impl ByzantineProfile {
+    /// Parse a job-config profile string — the bridged path's spelling
+    /// of this enum: `sign_flip`, `inflate:<factor>`, `misreport:<n>`,
+    /// `replay_stale`, `duplicate`, `forge:<victim>`. `None` for
+    /// anything else (callers refuse the job up front).
+    pub fn parse(s: &str) -> Option<ByzantineProfile> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match (head, arg) {
+            ("sign_flip", None) => Some(ByzantineProfile::SignFlip),
+            ("inflate", Some(a)) => {
+                a.parse().ok().map(|factor| ByzantineProfile::Inflate { factor })
+            }
+            ("misreport", Some(a)) => a
+                .parse()
+                .ok()
+                .map(|num_examples| ByzantineProfile::Misreport { num_examples }),
+            ("replay_stale", None) => Some(ByzantineProfile::ReplayStale),
+            ("duplicate", None) => Some(ByzantineProfile::Duplicate),
+            ("forge", Some(a)) => a.parse().ok().map(|victim| ByzantineProfile::Forge { victim }),
+            _ => None,
+        }
+    }
+}
+
+/// Apply `profile` to one outbound client→link frame. Returns the
+/// frames to actually put on the wire: one (possibly mutated) frame
+/// normally, two for [`ByzantineProfile::Duplicate`], and the original
+/// untouched whenever it is not a successful train result. `stale` is
+/// the cached first-instruction parameters for
+/// [`ByzantineProfile::ReplayStale`] (no-op until one is cached).
+///
+/// Pure on its inputs, so endpoint decorators and envelope-level
+/// simulator hooks share the exact same corruption.
+pub fn tamper_frames(
+    profile: &ByzantineProfile,
+    stale: Option<&ArrayRecord>,
+    frame: &[u8],
+) -> Vec<Frame> {
+    let Ok(FlowerMsg::PushTaskRes { mut res }) = FlowerMsg::decode(frame) else {
+        return vec![frame.to_vec()];
+    };
+    if !matches!(res.message_type, MessageType::Train) || !res.error.is_empty() {
+        return vec![frame.to_vec()];
+    }
+    match profile {
+        ByzantineProfile::SignFlip => {
+            res.parameters = res.parameters.map_f64(|_, _, v| -v);
+        }
+        ByzantineProfile::Inflate { factor } => {
+            let k = *factor;
+            res.parameters = res.parameters.map_f64(|_, _, v| v * k);
+        }
+        ByzantineProfile::Misreport { num_examples } => {
+            res.num_examples = *num_examples;
+        }
+        ByzantineProfile::ReplayStale => {
+            let Some(s) = stale else {
+                return vec![frame.to_vec()];
+            };
+            res.parameters = s.clone();
+        }
+        ByzantineProfile::Duplicate => {
+            crate::telemetry::bump("byzantine.tampered", 1);
+            let f = FlowerMsg::PushTaskRes { res }.encode();
+            return vec![f.clone(), f];
+        }
+        ByzantineProfile::Forge { victim } => {
+            res.node_id = *victim;
+        }
+    }
+    crate::telemetry::bump("byzantine.tampered", 1);
+    vec![FlowerMsg::PushTaskRes { res }.encode()]
+}
+
+/// Cache the parameters of the first train instruction seen in a
+/// link→client frame into `slot` (for [`ByzantineProfile::ReplayStale`]).
+/// No-op once the slot is filled or for any other frame.
+pub fn observe_stale_params(frame: &[u8], slot: &mut Option<ArrayRecord>) {
+    if slot.is_some() {
+        return;
+    }
+    if let Ok(FlowerMsg::TaskInsList { tasks, .. }) = FlowerMsg::decode(frame) {
+        if let Some(t) = tasks
+            .iter()
+            .find(|t| matches!(t.message_type, MessageType::Train))
+        {
+            *slot = Some(t.parameters.clone());
+        }
+    }
+}
+
+/// Endpoint decorator giving one node a [`ByzantineProfile`]: outbound
+/// train results are tampered on the wire, everything else flows
+/// unchanged. Stack it INSIDE any frame signer — a signed-then-tampered
+/// frame would (correctly) be rejected by authentication, which models
+/// an *outsider*; this decorator models the *insider*, whose corrupted
+/// result is signed with its own legitimate key.
+pub struct ByzantineEndpoint<E: Endpoint> {
+    inner: E,
+    profile: ByzantineProfile,
+    /// First train-instruction parameters seen (ReplayStale ammo).
+    stale: Mutex<Option<ArrayRecord>>,
+}
+
+impl<E: Endpoint> ByzantineEndpoint<E> {
+    pub fn new(inner: E, profile: ByzantineProfile) -> Self {
+        Self {
+            inner,
+            profile,
+            stale: Mutex::new(None),
+        }
+    }
+
+    fn observe(&self, frame: &[u8]) {
+        if matches!(self.profile, ByzantineProfile::ReplayStale) {
+            observe_stale_params(frame, &mut self.stale.lock().unwrap());
+        }
+    }
+}
+
+impl<E: Endpoint> Endpoint for ByzantineEndpoint<E> {
+    fn send(&self, frame: Frame) -> Result<(), TransportError> {
+        let stale = self.stale.lock().unwrap().clone();
+        for f in tamper_frames(&self.profile, stale.as_ref(), &frame) {
+            self.inner.send(f)?;
+        }
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Frame, TransportError> {
+        let f = self.inner.recv_timeout(timeout)?;
+        self.observe(&f);
+        Ok(f)
+    }
+
+    fn try_recv(&self) -> Result<Option<Frame>, TransportError> {
+        let f = self.inner.try_recv()?;
+        if let Some(f) = &f {
+            self.observe(f);
+        }
+        Ok(f)
+    }
+
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+
+    fn close(&self) {
+        self.inner.close();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +506,176 @@ mod tests {
         assert_eq!(b.recv_timeout(Duration::from_secs(1)).unwrap(), vec![3]);
         b.send(vec![4]).unwrap();
         assert_eq!(fa.recv_timeout(Duration::from_secs(1)).unwrap(), vec![4]);
+    }
+
+    use crate::flower::message::{TaskIns, TaskRes};
+    use crate::flower::records::{ConfigRecord, MetricRecord};
+
+    fn train_res(node_id: u64, vals: &[f32], n: u64) -> Frame {
+        FlowerMsg::PushTaskRes {
+            res: TaskRes {
+                task_id: 7,
+                run_id: 1,
+                node_id,
+                error: String::new(),
+                message_type: MessageType::Train,
+                parameters: ArrayRecord::from_flat(vals),
+                num_examples: n,
+                loss: 0.0,
+                metrics: MetricRecord::new(),
+                configs: ConfigRecord::new(),
+                model_version: 0,
+            },
+        }
+        .encode()
+    }
+
+    fn decode_res(frame: &[u8]) -> TaskRes {
+        match FlowerMsg::decode(frame).unwrap() {
+            FlowerMsg::PushTaskRes { res } => res,
+            other => panic!("not a result: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sign_flip_negates_train_update() {
+        let (a, b) = inproc::pair("a", "b");
+        let byz = ByzantineEndpoint::new(a, ByzantineProfile::SignFlip);
+        byz.send(train_res(1, &[1.0, -2.0], 5)).unwrap();
+        let res = decode_res(&b.recv_timeout(Duration::from_secs(1)).unwrap());
+        assert_eq!(res.parameters.to_flat(), vec![-1.0, 2.0]);
+        assert_eq!(res.node_id, 1);
+        assert_eq!(res.num_examples, 5);
+    }
+
+    #[test]
+    fn inflate_scales_and_misreport_lies() {
+        let (a, b) = inproc::pair("a", "b");
+        let byz = ByzantineEndpoint::new(a, ByzantineProfile::Inflate { factor: 1000.0 });
+        byz.send(train_res(2, &[1.5], 5)).unwrap();
+        let res = decode_res(&b.recv_timeout(Duration::from_secs(1)).unwrap());
+        assert_eq!(res.parameters.to_flat(), vec![1500.0]);
+
+        let (a, b) = inproc::pair("a", "b");
+        let byz = ByzantineEndpoint::new(
+            a,
+            ByzantineProfile::Misreport {
+                num_examples: 1_000_000,
+            },
+        );
+        byz.send(train_res(2, &[1.5], 5)).unwrap();
+        let res = decode_res(&b.recv_timeout(Duration::from_secs(1)).unwrap());
+        assert_eq!(res.num_examples, 1_000_000);
+        assert_eq!(res.parameters.to_flat(), vec![1.5]); // values untouched
+    }
+
+    #[test]
+    fn replay_substitutes_first_seen_instruction_params() {
+        let (a, b) = inproc::pair("a", "b");
+        let byz = ByzantineEndpoint::new(a, ByzantineProfile::ReplayStale);
+        // Before any instruction arrives there is nothing to replay.
+        byz.send(train_res(1, &[5.0], 1)).unwrap();
+        let res = decode_res(&b.recv_timeout(Duration::from_secs(1)).unwrap());
+        assert_eq!(res.parameters.to_flat(), vec![5.0]);
+        // Deliver a train instruction carrying the "stale" model.
+        b.send(
+            FlowerMsg::TaskInsList {
+                tasks: vec![TaskIns {
+                    task_id: 1,
+                    run_id: 1,
+                    round: 1,
+                    message_type: MessageType::Train,
+                    attempt: 0,
+                    redeliver: false,
+                    model_version: 0,
+                    parameters: ArrayRecord::from_flat(&[9.0]),
+                    config: ConfigRecord::new(),
+                }],
+                active: true,
+            }
+            .encode(),
+        )
+        .unwrap();
+        byz.recv_timeout(Duration::from_secs(1)).unwrap();
+        // Every train result from now on replays those parameters.
+        byz.send(train_res(1, &[5.0], 1)).unwrap();
+        let res = decode_res(&b.recv_timeout(Duration::from_secs(1)).unwrap());
+        assert_eq!(res.parameters.to_flat(), vec![9.0]);
+    }
+
+    #[test]
+    fn duplicate_sends_the_result_twice() {
+        let (a, b) = inproc::pair("a", "b");
+        let byz = ByzantineEndpoint::new(a, ByzantineProfile::Duplicate);
+        byz.send(train_res(1, &[2.0], 1)).unwrap();
+        let f1 = b.recv_timeout(Duration::from_secs(1)).unwrap();
+        let f2 = b.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(f1, f2);
+        assert_eq!(decode_res(&f1).parameters.to_flat(), vec![2.0]);
+    }
+
+    #[test]
+    fn forge_restamps_the_victims_node_id() {
+        let (a, b) = inproc::pair("a", "b");
+        let byz = ByzantineEndpoint::new(a, ByzantineProfile::Forge { victim: 3 });
+        byz.send(train_res(1, &[2.0], 1)).unwrap();
+        let res = decode_res(&b.recv_timeout(Duration::from_secs(1)).unwrap());
+        assert_eq!(res.node_id, 3);
+    }
+
+    #[test]
+    fn non_train_frames_pass_through_bitwise() {
+        let (a, b) = inproc::pair("a", "b");
+        let byz = ByzantineEndpoint::new(a, ByzantineProfile::SignFlip);
+        // Evaluate results, registration frames, and undecodable bytes
+        // (e.g. MAC-sealed frames) must all survive untouched.
+        let mut eval = train_res(1, &[1.0], 1);
+        eval = match FlowerMsg::decode(&eval).unwrap() {
+            FlowerMsg::PushTaskRes { mut res } => {
+                res.message_type = MessageType::Evaluate;
+                FlowerMsg::PushTaskRes { res }.encode()
+            }
+            _ => unreachable!(),
+        };
+        for frame in [
+            eval,
+            FlowerMsg::CreateNode { requested: 4 }.encode(),
+            vec![0xFF, 1, 2, 3],
+        ] {
+            byz.send(frame.clone()).unwrap();
+            assert_eq!(b.recv_timeout(Duration::from_secs(1)).unwrap(), frame);
+        }
+    }
+
+    #[test]
+    fn byzantine_profile_parse_roundtrip() {
+        assert!(matches!(
+            ByzantineProfile::parse("sign_flip"),
+            Some(ByzantineProfile::SignFlip)
+        ));
+        assert!(matches!(
+            ByzantineProfile::parse("inflate:1000"),
+            Some(ByzantineProfile::Inflate { factor }) if factor == 1000.0
+        ));
+        assert!(matches!(
+            ByzantineProfile::parse("misreport:999"),
+            Some(ByzantineProfile::Misreport { num_examples: 999 })
+        ));
+        assert!(matches!(
+            ByzantineProfile::parse("replay_stale"),
+            Some(ByzantineProfile::ReplayStale)
+        ));
+        assert!(matches!(
+            ByzantineProfile::parse("duplicate"),
+            Some(ByzantineProfile::Duplicate)
+        ));
+        assert!(matches!(
+            ByzantineProfile::parse("forge:3"),
+            Some(ByzantineProfile::Forge { victim: 3 })
+        ));
+        for bad in ["", "inflate", "inflate:abc", "sign_flip:2", "nonsense"] {
+            assert!(ByzantineProfile::parse(bad).is_none(), "{bad}");
+        }
     }
 
     #[test]

@@ -39,6 +39,13 @@ pub enum TransportError {
     /// was lost — a SuperNode treats it like a missed lease renewal
     /// (re-register, resubscribe), never like an orderly retirement.
     TornFrame,
+    /// The frame failed wire authentication (forged MAC, replayed
+    /// counter, missing envelope). Unlike [`TransportError::TornFrame`]
+    /// this is a TYPED refusal, not lost in-flight data: a SuperNode
+    /// must treat it as fatal — never as a missed lease renewal — so a
+    /// malicious peer cannot trigger the endless reconnect/redelivery
+    /// loop by injecting garbage.
+    AuthRejected(String),
     Io(String),
 }
 
@@ -52,6 +59,9 @@ impl std::fmt::Display for TransportError {
             }
             TransportError::TornFrame => {
                 write!(f, "transport: peer disconnected mid-frame (partial frame lost)")
+            }
+            TransportError::AuthRejected(why) => {
+                write!(f, "transport: frame failed authentication: {why}")
             }
             TransportError::Io(e) => write!(f, "transport: io: {e}"),
         }

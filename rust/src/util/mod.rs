@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod bytes;
 pub mod check;
+pub mod hash;
 pub mod json;
 pub mod rng;
 

@@ -700,3 +700,484 @@ mod bridged {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// Byzantine: 2 of 9 nodes LIE (rather than die) and the committee must
+// recover the honest history bit-exact — native, bridged, and sharded
+// ---------------------------------------------------------------------------
+
+mod byzantine {
+    use super::*;
+    use flarelink::bridge::{FlowerAppBuilder, FlowerBridgeApp};
+    use flarelink::flare::job::JobCtx;
+    use flarelink::flare::sim::FederationBuilder;
+    use flarelink::flare::{JobSpec, JobStatus, RetryPolicy};
+    use flarelink::flower::authn::{FrameAuthenticator, NodeSigner};
+    use flarelink::flower::committee::CommitteeConfig;
+    use flarelink::flower::message::FlowerMsg;
+    use flarelink::flower::run::{
+        run_native, ByzantineConnector, FleetAuthn, SwitchedFleet,
+    };
+    use flarelink::flower::serve::LinkServerConfig;
+    use flarelink::flower::serverapp::History;
+    use flarelink::flower::shard::ShardedGrid;
+    use flarelink::flower::supernode::FlowerConnector;
+    use flarelink::flower::superlink::SuperLink;
+    use flarelink::transport::fault::{ByzantineEndpoint, ByzantineProfile};
+    use flarelink::transport::Endpoint;
+    use flarelink::util::bytes::Bytes;
+    use flarelink::util::json::Json;
+
+    /// 9-node cohort; nodes 8 and 9 are Byzantine — node 8 inflates its
+    /// update tensors 1000x, node 9 replays the round's pushed (stale)
+    /// model as its "update". Injection is wire-level (below the app):
+    /// every ClientApp in the fleet stays byte-identical to the honest
+    /// fleet, exactly as a compromised transport would look.
+    const BYZ_N: usize = 9;
+    const HONEST: usize = 7;
+    const ROUNDS: u64 = 3;
+
+    /// `CHAOS_SEED`'s sibling knob for the adversarial rows: printed on
+    /// every run (the CI `adversarial` job uses `--nocapture`), so any
+    /// failure reproduces with `BYZANTINE_SEED=<n> cargo test --test
+    /// chaos byzantine`.
+    fn byzantine_seed() -> u64 {
+        let seed = std::env::var("BYZANTINE_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xBADF00D);
+        println!("byzantine seed: {seed} (rerun with BYZANTINE_SEED={seed} to reproduce)");
+        seed
+    }
+
+    fn committee() -> Option<CommitteeConfig> {
+        Some(CommitteeConfig {
+            size: 5,
+            threshold: 5.0,
+        })
+    }
+
+    /// Honest updates are TIGHTLY clustered (deltas 1.000..1.008): the
+    /// committee's outlier threshold is relative to the committee's own
+    /// median distance, so a spread-out honest cohort would hide a
+    /// replayed stale model (delta 0 sits inside a 1..7 spread). With a
+    /// tight cluster both liars are unambiguous outliers from round 1,
+    /// which is what makes the bit-identical-to-honest claim testable.
+    fn honest_client(i: usize) -> ArithmeticClient {
+        ArithmeticClient {
+            delta: 1.0 + 0.001 * i as f32,
+            n: 10 * (i as u64 + 1),
+        }
+    }
+
+    fn byz_profile(node_id: u64) -> Option<ByzantineProfile> {
+        match node_id {
+            8 => Some(ByzantineProfile::Inflate { factor: 1000.0 }),
+            9 => Some(ByzantineProfile::ReplayStale),
+            _ => None,
+        }
+    }
+
+    fn init() -> ArrayRecord {
+        ArrayRecord::from_flat(&[0.25f32; 6])
+    }
+
+    fn cfg(seed: u64, cohort: usize, committee: Option<CommitteeConfig>) -> ServerConfig {
+        ServerConfig {
+            num_rounds: ROUNDS,
+            min_nodes: cohort,
+            fraction_evaluate: 0.0,
+            round_timeout: Duration::from_secs(30),
+            seed,
+            committee,
+            ..Default::default()
+        }
+    }
+
+    fn apps(n: usize) -> Vec<Arc<dyn ClientApp>> {
+        (0..n)
+            .map(|i| Arc::new(honest_client(i)) as Arc<dyn ClientApp>)
+            .collect()
+    }
+
+    /// Native byz-9 run: endpoint-level tampering on nodes 8 and 9 (the
+    /// fleet is unauthenticated, so the wire attacker CAN rewrite
+    /// frames — the authenticated rows below close exactly that door).
+    fn native_byz(
+        strategy: Box<dyn Strategy>,
+        seed: u64,
+        committee: Option<CommitteeConfig>,
+    ) -> History {
+        let fleet = NativeFleet::start_with(
+            apps(BYZ_N),
+            FleetOptions::default(),
+            |i, ep| -> Arc<dyn Endpoint> {
+                match byz_profile(i as u64 + 1) {
+                    Some(p) => Arc::new(ByzantineEndpoint::new(ep, p)),
+                    None => Arc::new(ep),
+                }
+            },
+        )
+        .unwrap();
+        let mut app = ServerApp::new(strategy, cfg(seed, BYZ_N, committee), init());
+        let history = app.run(fleet.link(), None, 1).unwrap();
+        fleet.shutdown();
+        history
+    }
+
+    /// The honest reference: the same 7 honest clients, no liars, same
+    /// committee config (which must quarantine nobody there).
+    fn honest_reference(
+        strategy: Box<dyn Strategy>,
+        seed: u64,
+        committee: Option<CommitteeConfig>,
+    ) -> History {
+        let mut app = ServerApp::new(strategy, cfg(seed, HONEST, committee), init());
+        run_native(&mut app, apps(HONEST), 1).unwrap()
+    }
+
+    /// The headline acceptance row: with 2 of 9 nodes poisoning their
+    /// updates, every committee-gated robust strategy produces final
+    /// parameters AND per-round weighted fit metrics bit-identical to
+    /// the honest-7 run, with both liars quarantined by typed verdict
+    /// every round. (Full History equality is checked across transports
+    /// below; against honest-7 the participation/verdict rows differ by
+    /// construction — the 9-node run SEES the liars, it just refuses to
+    /// fold them.)
+    #[test]
+    fn robust_strategies_with_committee_match_honest_cohort_bit_exact() {
+        let seed = byzantine_seed();
+        let factories: Vec<(&str, Box<dyn Fn() -> Box<dyn Strategy>>)> = vec![
+            ("krum", Box::new(|| Box::new(Krum { f: 2 }))),
+            ("fedmedian", Box::new(|| Box::new(FedMedian))),
+            (
+                "trimmed_mean",
+                Box::new(|| Box::new(TrimmedMean { trim: 2 })),
+            ),
+        ];
+        for (label, mk) in factories {
+            let quarantined_before = counter("committee.quarantined");
+            let byz = native_byz(mk(), seed, committee());
+            let want = honest_reference(mk(), seed, committee());
+
+            assert!(
+                byz.params_bits_equal(&want),
+                "{label}: byzantine cohort poisoned the committee-gated model"
+            );
+            assert_eq!(byz.rounds.len(), ROUNDS as usize, "{label}");
+            for (b, h) in byz.rounds.iter().zip(want.rounds.iter()) {
+                assert_eq!(
+                    b.fit_metrics, h.fit_metrics,
+                    "{label} round {}: poisoned metrics leaked into the weighted mean",
+                    b.round
+                );
+                let p = b.participation;
+                assert_eq!(
+                    (p.sampled, p.completed, p.dropped, p.quarantined),
+                    (BYZ_N, HONEST, 0, 2),
+                    "{label} round {}: participation accounting",
+                    b.round
+                );
+                let quarantined: Vec<u64> = b
+                    .verdicts
+                    .iter()
+                    .filter(|v| v.quarantined)
+                    .map(|v| v.node_id)
+                    .collect();
+                assert_eq!(
+                    quarantined,
+                    vec![8, 9],
+                    "{label} round {}: exactly the liars must be quarantined",
+                    b.round
+                );
+                assert!(
+                    b.verdicts
+                        .iter()
+                        .filter(|v| v.quarantined)
+                        .all(|v| !v.reason.is_empty()),
+                    "{label} round {}: quarantine verdicts must carry a typed reason",
+                    b.round
+                );
+                assert!(
+                    h.verdicts.iter().all(|v| !v.quarantined),
+                    "{label} round {}: the honest cohort must not self-quarantine",
+                    b.round
+                );
+            }
+            assert!(
+                counter("committee.quarantined")
+                    >= quarantined_before + 2 * ROUNDS as i64,
+                "{label}: quarantines must be counted in telemetry"
+            );
+        }
+    }
+
+    /// The contrast row: the plain weighted mean with no committee is
+    /// measurably poisoned by the same two liars — and turning the
+    /// committee ON restores FedAvg to the honest-7 result bit-exact
+    /// (the gate protects even non-robust reductions).
+    #[test]
+    fn fedavg_is_poisoned_without_committee_and_restored_with_it() {
+        let seed = byzantine_seed();
+        let poisoned = native_byz(Box::new(FedAvg::new(Aggregator::host())), seed, None);
+        let honest = honest_reference(Box::new(FedAvg::new(Aggregator::host())), seed, None);
+        assert!(
+            !poisoned.params_bits_equal(&honest),
+            "an unguarded mean must be moved by a 1000x inflater"
+        );
+        let worst = poisoned
+            .parameters
+            .to_flat()
+            .iter()
+            .fold(0f32, |m, v| m.max(v.abs()));
+        let honest_worst = honest
+            .parameters
+            .to_flat()
+            .iter()
+            .fold(0f32, |m, v| m.max(v.abs()));
+        assert!(
+            worst > 10.0 * honest_worst,
+            "poisoning must be measurable, not a rounding artifact: \
+             |poisoned|={worst} vs |honest|={honest_worst}"
+        );
+
+        let guarded = native_byz(
+            Box::new(FedAvg::new(Aggregator::host())),
+            seed,
+            committee(),
+        );
+        assert!(
+            guarded.params_bits_equal(&honest),
+            "committee-gated FedAvg must fold exactly the honest survivors"
+        );
+    }
+
+    struct ByzBuilder {
+        seed: u64,
+    }
+
+    impl FlowerAppBuilder for ByzBuilder {
+        fn build_client(&self, ctx: &JobCtx) -> anyhow::Result<Arc<dyn ClientApp>> {
+            let idx = ctx
+                .participants
+                .iter()
+                .position(|s| s == &ctx.site)
+                .unwrap_or(0);
+            Ok(Arc::new(honest_client(idx)))
+        }
+
+        /// Committee left OFF here on purpose: the job-config keys
+        /// (`committee_size`/`committee_threshold`) must switch it on,
+        /// exercising the bridge's config plumbing end to end.
+        fn build_server(&self, _ctx: &JobCtx) -> anyhow::Result<ServerApp> {
+            Ok(ServerApp::new(
+                Box::new(FedMedian),
+                cfg(self.seed, BYZ_N, None),
+                init(),
+            ))
+        }
+    }
+
+    /// Bridged byz-9 run: attack profiles ride the job config (the
+    /// `byzantine` key maps sites to profiles), so the FLARE runner —
+    /// not the test — wraps the tampering around each site's LGS leg.
+    fn bridged_byz(seed: u64) -> History {
+        let captured: Arc<Mutex<Option<History>>> = Arc::new(Mutex::new(None));
+        let c2 = captured.clone();
+        let app = FlowerBridgeApp::new(Arc::new(ByzBuilder { seed }))
+            .with_policy(RetryPolicy::fast())
+            .with_history_sink(Arc::new(move |_, h| {
+                *c2.lock().unwrap() = Some(h.clone());
+            }));
+        let fed = FederationBuilder::new("byz-bridge")
+            .sites(BYZ_N)
+            .retry_policy(RetryPolicy::fast())
+            .build(Arc::new(app))
+            .unwrap();
+        let spec = JobSpec::new("byz", "flower_bridge").with_config(Json::obj(vec![
+            ("committee_size", Json::num(5.0)),
+            ("committee_threshold", Json::num(5.0)),
+            (
+                "byzantine",
+                Json::obj(vec![
+                    ("site-8", Json::str("inflate:1000")),
+                    ("site-9", Json::str("replay_stale")),
+                ]),
+            ),
+        ]));
+        fed.scp.submit(spec).unwrap();
+        let status = fed.scp.wait("byz", Duration::from_secs(120)).unwrap();
+        assert_eq!(
+            status,
+            JobStatus::Finished,
+            "err={:?}",
+            fed.scp.job_error("byz")
+        );
+        fed.shutdown();
+        captured.lock().unwrap().take().expect("history sink")
+    }
+
+    /// Sharded byz-9 run over 4 shards: tampering sits at the connector
+    /// layer, below each node's link switch.
+    fn sharded_byz(seed: u64) -> History {
+        let grid = ShardedGrid::new(4, LinkConfig::default());
+        let fleet = SwitchedFleet::start_sharded_with(
+            &grid,
+            apps(BYZ_N),
+            Duration::from_secs(20),
+            |node_id, conn| -> Box<dyn FlowerConnector> {
+                match byz_profile(node_id) {
+                    Some(p) => Box::new(ByzantineConnector::new(conn, p)),
+                    None => Box::new(conn),
+                }
+            },
+        )
+        .unwrap();
+        let mut app = ServerApp::new(Box::new(FedMedian), cfg(seed, BYZ_N, committee()), init());
+        let history = app.run(grid.as_ref(), None, 1).unwrap();
+        fleet.shutdown();
+        history
+    }
+
+    /// The transport-invariance acceptance row: the SAME adversarial
+    /// scenario (2 of 9 lying, committee on) produces the FULL History —
+    /// parameters, metrics, participation, and every verdict's score —
+    /// bit-identical across the native fleet, the FLARE bridge, and a
+    /// 4-shard grid. Committee election and scoring are pure functions
+    /// of (seed, run, round, node-id-sorted results), so no topology
+    /// may perturb them.
+    #[test]
+    fn byzantine_runs_identical_across_native_bridged_and_sharded() {
+        let seed = byzantine_seed();
+        let native = native_byz(Box::new(FedMedian), seed, committee());
+        let honest = honest_reference(Box::new(FedMedian), seed, committee());
+        assert!(
+            native.params_bits_equal(&honest),
+            "committee-gated FedMedian must match the honest cohort"
+        );
+
+        let sharded = sharded_byz(seed);
+        assert_eq!(
+            sharded, native,
+            "sharded N=4 byzantine run diverged from native (full History)"
+        );
+        assert!(sharded.params_bits_equal(&native));
+
+        let bridged = bridged_byz(seed);
+        assert_eq!(
+            bridged, native,
+            "bridged byzantine run diverged from native (full History)"
+        );
+        assert!(bridged.params_bits_equal(&native));
+    }
+
+    /// Wire authentication rows. Signing every frame must be invisible
+    /// to the math (plain == authenticated == authenticated-mux, full
+    /// History), because authn protects PROVENANCE, not content — the
+    /// committee rows above are what handle authorized liars.
+    #[test]
+    fn authenticated_fleets_are_bit_identical_to_plain() {
+        let seed = byzantine_seed();
+        let mk = || Box::new(FedAvg::new(Aggregator::host()));
+        let mut app = ServerApp::new(mk(), cfg(seed, HONEST, None), init());
+        let plain = run_native(&mut app, apps(HONEST), 1).unwrap();
+
+        let authn = FleetAuthn::new("chaos", b"chaos-fleet-secret");
+        let fleet = NativeFleet::start_authenticated_with(
+            apps(HONEST),
+            FleetOptions::default(),
+            &authn,
+            |_, ep| Arc::new(ep),
+        )
+        .unwrap();
+        let mut app = ServerApp::new(mk(), cfg(seed, HONEST, None), init());
+        let signed = app.run(fleet.link(), None, 1).unwrap();
+        fleet.shutdown();
+        assert_eq!(signed, plain, "frame signing changed the history");
+        assert!(signed.params_bits_equal(&plain));
+
+        let fleet = NativeFleet::start_mux_authenticated(
+            apps(HONEST),
+            FleetOptions::default(),
+            LinkServerConfig::default(),
+            &authn,
+        )
+        .unwrap();
+        let mut app = ServerApp::new(mk(), cfg(seed, HONEST, None), init());
+        let mux_signed = app.run(fleet.link(), None, 1).unwrap();
+        fleet.shutdown();
+        assert_eq!(
+            mux_signed, plain,
+            "authenticated mux fleet diverged from the plain fleet"
+        );
+        assert!(mux_signed.params_bits_equal(&plain));
+    }
+
+    /// The rejection rows: on an authenticated link every forged,
+    /// replayed, or impersonating frame is answered with a TYPED error
+    /// (never a hang, never a protocol-state change) and counted in
+    /// telemetry.
+    #[test]
+    fn forged_and_replayed_frames_rejected_with_typed_errors() {
+        let link = SuperLink::new();
+        link.set_authenticator(FrameAuthenticator::new("chaos", b"chaos-fleet-secret"));
+        let signer = NodeSigner::for_project("chaos", b"chaos-fleet-secret", 1);
+
+        // A provisioned node registers normally; the reply comes back
+        // sealed under the same per-node key.
+        let sealed_create = signer.seal(&FlowerMsg::CreateNode { requested: 1 }.encode());
+        let reply = link.handle_frame(&sealed_create);
+        let inner = signer.open_reply(Bytes::from_vec(reply)).unwrap();
+        assert_eq!(
+            FlowerMsg::decode(inner.as_slice()).unwrap(),
+            FlowerMsg::NodeCreated { node_id: 1 }
+        );
+
+        // Outsider forgery: right envelope shape, wrong key.
+        let rejected_before = counter("authn.rejected");
+        let outsider = NodeSigner::for_project("chaos", b"not-the-secret", 2);
+        let reply = link.handle_frame(&outsider.seal(&FlowerMsg::CreateNode { requested: 2 }.encode()));
+        match FlowerMsg::decode(&reply).unwrap() {
+            FlowerMsg::Error { message } => {
+                assert!(message.contains("authn rejected"), "{message}")
+            }
+            other => panic!("forged frame must get a typed error, got {other:?}"),
+        }
+        assert!(
+            counter("authn.rejected") > rejected_before,
+            "forgery must be counted"
+        );
+        assert_eq!(
+            link.nodes(),
+            vec![1],
+            "a forged registration must not admit a node"
+        );
+
+        // Replay: a byte-identical resend of the valid registration.
+        let dropped_before = counter("replay.dropped");
+        let reply = link.handle_frame(&sealed_create);
+        match FlowerMsg::decode(&reply).unwrap() {
+            FlowerMsg::Error { message } => {
+                assert!(message.contains("replayed"), "{message}")
+            }
+            other => panic!("replayed frame must get a typed error, got {other:?}"),
+        }
+        assert_eq!(
+            counter("replay.dropped"),
+            dropped_before + 1,
+            "replay must be counted"
+        );
+
+        // Impersonation: node 1's VALID key cannot claim node 2's work —
+        // the envelope's proven id wins (reply is sealed: the link still
+        // talks to node 1, it just refuses the claim).
+        let reply = link.handle_frame(&signer.seal(&FlowerMsg::PullTaskIns { node_id: 2 }.encode()));
+        let inner = signer.open_reply(Bytes::from_vec(reply)).unwrap();
+        match FlowerMsg::decode(inner.as_slice()).unwrap() {
+            FlowerMsg::Error { message } => {
+                assert!(message.contains("signed by node 1"), "{message}")
+            }
+            other => panic!("impersonation must get a typed error, got {other:?}"),
+        }
+    }
+}

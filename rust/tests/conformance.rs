@@ -567,6 +567,11 @@ macro_rules! conformance_matrix {
                 assert!(s.supports_partial(), "plain reductions aggregate partial cohorts");
                 assert!(s.supports_async(), "plain reductions aggregate asynchronously");
                 assert!(s.supports_snapshot(), "plain reductions checkpoint mid-round");
+                assert!(
+                    s.supports_byzantine(),
+                    "plain reductions tolerate a committee-filtered cohort \
+                     (quarantine only removes contributions)"
+                );
                 assert_eq!(s.staleness_weight(0), 1.0, "fresh results must weigh exactly 1");
             }
 
@@ -840,6 +845,33 @@ mod secagg {
         assert!(
             !s.supports_snapshot(),
             "partially-cancelled masked sums must never reach disk"
+        );
+        assert!(
+            !s.supports_byzantine(),
+            "a masked sum can neither drop a quarantined share nor be outlier-scored"
+        );
+    }
+
+    /// The committee refusal row, mirroring `supports_partial`: masked
+    /// sums only cancel when EVERY contribution folds, and the
+    /// plaintext inspection committee scoring needs contradicts masking
+    /// anyway — so the driver refuses up front with a typed error.
+    #[test]
+    fn committee_refused() {
+        use flarelink::flower::committee::CommitteeConfig;
+        let link = SuperLink::new();
+        let mut app = ServerApp::new(
+            Box::new(SecAggFedAvg::new(7)),
+            ServerConfig {
+                committee: Some(CommitteeConfig::default()),
+                ..server_cfg(1)
+            },
+            ArrayRecord::from_flat(&[0.0f32; 4]),
+        );
+        let err = app.run(&link, None, 1).unwrap_err();
+        assert!(
+            err.to_string().contains("committee-filtered cohort"),
+            "refusal must name the capability: {err}"
         );
     }
 

@@ -658,6 +658,7 @@ fn prop_history_csv_has_one_line_per_round() {
                     eval_metrics: MetricRecord::new(),
                     per_client_eval: vec![],
                     participation: Default::default(),
+                    verdicts: vec![],
                 })
                 .collect(),
             commits: vec![],
